@@ -1,0 +1,62 @@
+//! Accuracy/size trade-off sweep through the public API (Fig. 6 flavor,
+//! plus *measured* accuracy at each level via real quantized inference).
+//!
+//! ```text
+//! cargo run --release --example accuracy_sweep [-- <eval_samples>]
+//! ```
+
+use qpart::prelude::*;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    let n_eval: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let Ok(bundle) = Bundle::load("artifacts") else {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        return Ok(());
+    };
+    let bundle = Rc::new(bundle);
+    let entry = bundle.model("mlp6")?.clone();
+    let arch = bundle.arch("mlp6")?.clone();
+    let calib = bundle.calibration("mlp6")?;
+    let patterns = offline_quantize(&arch, &calib, OfflineConfig::default())?;
+
+    let (x, y) = bundle.dataset(&entry.dataset)?;
+    let x = HostTensor::from(x);
+    let n = n_eval.min(x.batch());
+    let xs = x.slice_rows(0, n);
+    let ys = &y[..n];
+    let mut ex = Executor::new(Rc::clone(&bundle))?;
+    let base = ex.eval_accuracy(&xs, ys, |e, c| Ok(e.run_full("mlp6", c)?))?;
+    println!("full-precision accuracy over {n} samples: {:.2}%", base * 100.0);
+
+    println!(
+        "\n{:>10} {:>14} {:>10} {:>12} {:>12} {:>12}",
+        "budget", "payload(bits)", "vs f32", "predicted", "measured", "within?"
+    );
+    let l = arch.num_layers();
+    for (k, &level) in patterns.levels.iter().enumerate() {
+        let pat = patterns
+            .get(qpart::core::quant::PatternKey { level_idx: k, partition: l })
+            .unwrap()
+            .clone();
+        let payload = pat.payload_bits(&arch);
+        let f32_payload = pat.payload_bits_f32(&arch);
+        let acc = ex.eval_accuracy(&xs, ys, |e, c| {
+            Ok(e.run_split("mlp6", &pat, c)?.logits)
+        })?;
+        let measured = base - acc;
+        println!(
+            "{:>9.2}% {:>14} {:>9.1}% {:>11.3}% {:>11.3}% {:>12}",
+            level * 100.0,
+            payload,
+            100.0 * payload as f64 / f32_payload as f64,
+            pat.predicted_degradation * 100.0,
+            measured * 100.0,
+            if measured <= level + 0.01 { "yes" } else { "OVER" }
+        );
+    }
+    println!(
+        "\npaper shape (Fig. 6): payload decays ~exponentially as the accuracy budget loosens."
+    );
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! End-to-end serving driver (the repo's headline validation run; see
+//! EXPERIMENTS.md §End-to-End).
+//!
+//! ```text
+//! cargo run --release --example edge_fleet [-- <n_requests_per_class>]
+//! ```
+//!
+//! Starts the **real coordinator** (TCP, PJRT, Algorithm 1 at startup) in
+//! this process, then drives it with a heterogeneous simulated edge fleet
+//! (phone / camera / watch — the paper's §I device diversity) over the
+//! two-phase wire protocol. Every request really ships a bit-packed
+//! quantized segment, really runs the Pallas-kernel executables on the
+//! "device", and really finishes on the server. Reports per-class
+//! latency, throughput, accuracy, partition choices, and the modeled
+//! Eq. 17 costs; finishes with the discrete-event fleet simulation for
+//! the long-horizon dynamics.
+
+use qpart::coordinator::client::paper_request;
+use qpart::prelude::*;
+use qpart::sim::perf::Summary;
+use std::rc::Rc;
+
+struct ClassSpec {
+    name: &'static str,
+    clock_hz: f64,
+    capacity_bps: f64,
+    accuracy_budget: f64,
+    /// Eq. 17 weights (ω, τ, η); None = paper defaults. A large η makes
+    /// server billing dominant, pushing the optimizer toward on-device
+    /// execution (large p) — the other end of the workload balance.
+    weights: Option<(f64, f64, f64)>,
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_per_class: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    if Bundle::load("artifacts").is_err() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        return Ok(());
+    }
+
+    // ---- start the real coordinator
+    let handle = serve(qpart::coordinator::ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        queue_capacity: 256,
+        session_capacity: 4096,
+        artifacts_dir: "artifacts".into(),
+    })
+    .map_err(|e| anyhow::anyhow!(e))?;
+    let addr = handle.addr.to_string();
+    println!("coordinator up on {addr} (Algorithm 1 tables built at startup)");
+
+    let bundle = Rc::new(Bundle::load("artifacts")?);
+    let (x, y) = bundle.dataset("digits")?;
+    let x = HostTensor::from(x);
+
+    let classes = [
+        ClassSpec {
+            name: "phone  ",
+            clock_hz: 2e9,
+            capacity_bps: 200e6,
+            accuracy_budget: 0.005,
+            weights: None,
+        },
+        ClassSpec {
+            name: "camera ",
+            clock_hz: 400e6,
+            capacity_bps: 50e6,
+            accuracy_budget: 0.01,
+            weights: None,
+        },
+        ClassSpec {
+            name: "watch  ",
+            clock_hz: 100e6,
+            capacity_bps: 5e6,
+            accuracy_budget: 0.05,
+            weights: None,
+        },
+        // billing-sensitive gateway: η ≫ 1 → prefers on-device compute
+        ClassSpec {
+            name: "gateway",
+            clock_hz: 1e9,
+            capacity_bps: 200e6,
+            accuracy_budget: 0.02,
+            weights: Some((1.0, 1.0, 1e6)),
+        },
+    ];
+
+    println!("\n=== live two-phase serving: {n_per_class} requests/class ===");
+    let mut total_reqs = 0usize;
+    let mut total_correct = 0usize;
+    let t_all = std::time::Instant::now();
+    for class in &classes {
+        let mut client = DeviceClient::connect(&addr, Rc::clone(&bundle))?;
+        let mut req = paper_request("mlp6", class.accuracy_budget);
+        req.clock_hz = class.clock_hz;
+        req.channel_capacity_bps = class.capacity_bps;
+        req.weights = class.weights;
+
+        let mut latencies = Vec::new();
+        let mut correct = 0usize;
+        let mut partitions = vec![0usize; 8];
+        let t_class = std::time::Instant::now();
+        for i in 0..n_per_class {
+            let idx = (total_reqs + i) % x.batch();
+            let input = x.slice_rows_padded(idx, idx + 1, 1);
+            let t0 = std::time::Instant::now();
+            let (pred, _logits, partition) = client.infer(req.clone(), input)?;
+            latencies.push(t0.elapsed().as_secs_f64());
+            partitions[partition.min(7)] += 1;
+            if pred == y[idx] {
+                correct += 1;
+            }
+        }
+        let lat = Summary::of(&latencies);
+        println!(
+            "{} budget {:>5.2}% | {:>5.1} req/s | lat p50 {:>6.2} ms p99 {:>6.2} ms | \
+             acc {:>5.1}% | partitions {:?}",
+            class.name,
+            class.accuracy_budget * 100.0,
+            n_per_class as f64 / t_class.elapsed().as_secs_f64(),
+            lat.p50 * 1e3,
+            lat.p99 * 1e3,
+            100.0 * correct as f64 / n_per_class as f64,
+            &partitions[..7],
+        );
+        total_reqs += n_per_class;
+        total_correct += correct;
+    }
+    println!(
+        "TOTAL: {} requests in {:.2}s → {:.1} req/s end-to-end, accuracy {:.1}%",
+        total_reqs,
+        t_all.elapsed().as_secs_f64(),
+        total_reqs as f64 / t_all.elapsed().as_secs_f64(),
+        100.0 * total_correct as f64 / total_reqs as f64
+    );
+    let snap = handle.snapshot();
+    println!(
+        "coordinator metrics: {} requests, {} errors, {} sessions, handle mean {:.0} µs",
+        snap.requests_total, snap.errors_total, snap.sessions_opened, snap.handle_mean_us
+    );
+
+    // ---- long-horizon dynamics via the discrete-event simulator
+    println!("\n=== discrete-event fleet simulation (modeled costs, 60 s, 32 devices) ===");
+    let arch = bundle.arch("mlp6")?.clone();
+    let calib = bundle.calibration("mlp6")?;
+    let patterns = offline_quantize(&arch, &calib, OfflineConfig::default())?;
+    let cfg = FleetConfig {
+        workload: WorkloadConfig {
+            arrival_rate: 50.0,
+            n_devices: 32,
+            duration_s: 60.0,
+            seed: 7,
+        },
+        ..Default::default()
+    };
+    let report = run_fleet(&arch, &patterns, &DeviceClass::default_fleet(), &cfg)?;
+    let lat = report.perf.latency();
+    println!(
+        "{} requests | modeled latency p50 {:.2} ms p99 {:.2} ms | energy mean {:.3} mJ | \
+         payload mean {:.0} KiB | server cost {:.4} | rejected {}",
+        report.perf.records.len(),
+        lat.p50 * 1e3,
+        lat.p99 * 1e3,
+        report.perf.energy().mean * 1e3,
+        report.perf.payload().mean / 8.0 / 1024.0,
+        report.server_cost,
+        report.rejected
+    );
+    println!("partition histogram: {:?}", report.perf.partition_histogram(arch.num_layers()));
+
+    handle.shutdown();
+    Ok(())
+}

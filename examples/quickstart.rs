@@ -1,0 +1,115 @@
+//! Quickstart: the whole QPART decision + serving pipeline in one file.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. Load the artifact bundle (weights + calibration + HLO executables).
+//! 2. Run paper **Algorithm 1** (offline): build the pattern table.
+//! 3. Run paper **Algorithm 2** (online) for one edge request.
+//! 4. Execute the decided split inference on PJRT: quantized device
+//!    segment (Pallas-kernel executables) → simulated uplink → f32 server
+//!    segment; compare against full-precision inference.
+
+use qpart::prelude::*;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    let Ok(bundle) = Bundle::load("artifacts") else {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        return Ok(());
+    };
+    let bundle = Rc::new(bundle);
+    let arch = bundle.arch("mlp6")?.clone();
+    println!(
+        "model mlp6: {} layers, {} params, input {:?}",
+        arch.num_layers(),
+        arch.total_params(),
+        arch.input_shape
+    );
+
+    // ---- Algorithm 1 (offline): calibration → pattern table
+    let calib = bundle.calibration("mlp6")?;
+    let t0 = std::time::Instant::now();
+    let patterns = offline_quantize(&arch, &calib, OfflineConfig::default())?;
+    println!(
+        "Algorithm 1: {} levels × {} partitions solved in {:?}",
+        patterns.levels.len(),
+        patterns.num_partitions(),
+        t0.elapsed()
+    );
+
+    // ---- Algorithm 2 (online): one request (paper Table II device)
+    let request = RequestParams {
+        cost: CostModel::paper_default(),
+        accuracy_budget: 0.01, // ≤1% degradation please
+    };
+    let t0 = std::time::Instant::now();
+    let decision = serve_request(&arch, &patterns, &request)?;
+    println!(
+        "Algorithm 2 ({:?}): partition p={}, weight bits {:?}, activation bits {}, \
+         predicted degradation {:.3}%",
+        t0.elapsed(),
+        decision.pattern.partition,
+        decision.pattern.weight_bits,
+        decision.pattern.activation_bits,
+        decision.pattern.predicted_degradation * 100.0
+    );
+    println!(
+        "  objective {:.5}  (time {:.2} ms, device energy {:.3} mJ, server cost {:.2e})",
+        decision.cost.objective,
+        decision.cost.total_time_s() * 1e3,
+        decision.cost.total_energy_j() * 1e3,
+        decision.cost.server_cost
+    );
+    println!(
+        "  payload {} bits vs f32 {} bits → {:.1}% reduction",
+        decision.pattern.payload_bits(&arch),
+        decision.pattern.payload_bits_f32(&arch),
+        100.0
+            * (1.0
+                - decision.pattern.payload_bits(&arch) as f64
+                    / decision.pattern.payload_bits_f32(&arch) as f64)
+    );
+
+    // ---- execute the split on PJRT
+    let mut ex = Executor::new(Rc::clone(&bundle))?;
+    let (x, y) = bundle.dataset("digits")?;
+    let x = HostTensor::from(x);
+    let input = x.slice_rows_padded(0, 1, 1);
+    let outcome = ex.run_split("mlp6", &decision.pattern, input.clone())?;
+    let full = ex.run_full_reference(&arch, input)?;
+    let argmax = |v: &[f32]| {
+        v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0 as i32
+    };
+    println!(
+        "\nsplit inference: prediction {} (full-precision {}, label {})",
+        argmax(&outcome.logits.data),
+        argmax(&full.data),
+        y[0]
+    );
+    println!(
+        "wire: {} weight bits down, {} activation bits up",
+        outcome.weight_bits, outcome.activation_bits
+    );
+    Ok(())
+}
+
+/// Small helper so the example stays one file.
+trait FullRef {
+    fn run_full_reference(
+        &mut self,
+        arch: &ModelSpec,
+        x: HostTensor,
+    ) -> qpart::runtime::Result<HostTensor>;
+}
+impl FullRef for Executor {
+    fn run_full_reference(
+        &mut self,
+        arch: &ModelSpec,
+        x: HostTensor,
+    ) -> qpart::runtime::Result<HostTensor> {
+        let w = self.weights("mlp6")?;
+        self.run_server_segment(arch, &w, x, 0)
+    }
+}

@@ -1,0 +1,104 @@
+//! Minimal wire-protocol walkthrough: start the coordinator, act as one
+//! edge device, and print every step of the two-phase exchange.
+//!
+//! ```text
+//! cargo run --release --example serve_loopback
+//! ```
+
+use qpart::coordinator::client::paper_request;
+use qpart::prelude::*;
+use qpart::proto::messages::{Request, Response};
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    if Bundle::load("artifacts").is_err() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let handle = serve(qpart::coordinator::ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        queue_capacity: 16,
+        session_capacity: 64,
+        artifacts_dir: "artifacts".into(),
+    })
+    .map_err(|e| anyhow::anyhow!(e))?;
+    println!("[server] listening on {}", handle.addr);
+
+    let bundle = Rc::new(Bundle::load("artifacts")?);
+    let mut client = DeviceClient::connect(&handle.addr.to_string(), Rc::clone(&bundle))?;
+
+    // 0) ping + model discovery
+    println!("[device] → ping");
+    println!("[device] ← pong: {}", client.ping()?);
+    if let Response::Models(models) = client.call(&Request::ListModels)? {
+        for m in &models {
+            println!(
+                "[device] ← model {} ({} layers, {} params, {:.1}% test acc)",
+                m.name,
+                m.layers,
+                m.params,
+                m.test_accuracy * 100.0
+            );
+        }
+    }
+
+    // 1) phase 1: infer request → quantized segment
+    let (x, y) = bundle.dataset("digits")?;
+    let x = HostTensor::from(x);
+    let input = x.slice_rows_padded(0, 1, 1);
+    let req = paper_request("mlp6", 0.01);
+    println!(
+        "\n[device] → infer: model={} a≤{:.1}% r={:.0} Mbps f={:.0} MHz",
+        req.model,
+        req.accuracy_budget * 100.0,
+        req.channel_capacity_bps / 1e6,
+        req.clock_hz / 1e6
+    );
+    let reply = match client.call(&Request::Infer(req.clone()))? {
+        Response::Segment(r) => r,
+        other => anyhow::bail!("unexpected: {other:?}"),
+    };
+    println!(
+        "[device] ← segment: session={} p={} bits={:?} b_x={} predicted degradation {:.3}%",
+        reply.session,
+        reply.pattern.partition,
+        reply.pattern.weight_bits,
+        reply.pattern.activation_bits,
+        reply.pattern.predicted_degradation * 100.0
+    );
+    let wire_bytes: usize = reply
+        .segment
+        .layers
+        .iter()
+        .map(|l| l.w_packed.len() + l.b_packed.len())
+        .sum();
+    println!(
+        "[device]   downlink: {} layers, {} KiB bit-packed (f32 would be {} KiB)",
+        reply.segment.layers.len(),
+        wire_bytes / 1024,
+        reply
+            .segment
+            .layers
+            .iter()
+            .map(|l| l.w_dims.iter().product::<usize>() + l.b_len)
+            .sum::<usize>()
+            * 4
+            / 1024
+    );
+
+    // 2) device-side inference + phase 2 (handled inside DeviceClient::infer;
+    //    here we re-do the whole flow at once for the printout)
+    let (pred, logits, partition) = client.infer(req, input)?;
+    println!("\n[device] → activation (quantized boundary at p={partition})");
+    println!(
+        "[device] ← result: prediction={pred} (label={}) logits[pred]={:.2}",
+        y[0], logits[pred as usize]
+    );
+
+    // 3) server stats
+    if let Response::Stats(stats) = client.call(&Request::Stats)? {
+        println!("\n[server] stats: {}", stats.to_string_pretty());
+    }
+    handle.shutdown();
+    Ok(())
+}

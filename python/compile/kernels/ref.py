@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here;
+`python/tests/test_kernels.py` sweeps shapes/dtypes with hypothesis and
+asserts allclose between kernel and oracle. The oracles are also what the
+L2 model uses when `use_pallas=False` (debugging path).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def dequant(codes, qmin, step):
+    """Uniform asymmetric dequantization: w = qmin + codes * step."""
+    return qmin + codes * step
+
+
+def qlinear_ref(x, codes, qmin, step, bias, relu: bool):
+    """Reference for the fused dequantize->matmul->bias->ReLU kernel.
+
+    x:     [B, D] float32
+    codes: [D, G] float32 (integer-valued quantization grid indices)
+    qmin:  [1, 1] float32 (grid minimum mu)
+    step:  [1, 1] float32 (grid step delta)
+    bias:  [1, G] float32
+    """
+    w = dequant(codes, qmin[0, 0], step[0, 0])
+    y = x @ w + bias
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def linear_ref(x, w, bias, relu: bool):
+    """Full-precision linear layer."""
+    y = x @ w + bias
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def im2col(x, k: int, stride: int):
+    """Extract conv patches: x [B, C, H, W] -> [B*H'*W', C*k*k] ('SAME' pad).
+
+    Column order is (C, kh, kw), matching a weight layout of
+    [C_in, k, k, C_out] flattened to [C_in*k*k, C_out].
+    """
+    b, c, h, w = x.shape
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(k, k),
+        window_strides=(stride, stride),
+        padding="SAME",
+    )  # [B, C*k*k, H', W']
+    _, ckk, hp, wp = patches.shape
+    cols = patches.transpose(0, 2, 3, 1).reshape(b * hp * wp, ckk)
+    return cols, (b, hp, wp)
+
+
+def qconv_ref(x, codes, qmin, step, bias, relu: bool, k: int, stride: int):
+    """Reference quantized conv: im2col + qlinear.
+
+    x:     [B, C_in, H, W]
+    codes: [C_in*k*k, C_out] float32 grid indices
+    bias:  [1, C_out]
+    returns [B, C_out, H', W'].
+    """
+    cols, (b, hp, wp) = im2col(x, k, stride)
+    y = qlinear_ref(cols, codes, qmin, step, bias, relu)  # [B*H'*W', C_out]
+    c_out = y.shape[1]
+    return y.reshape(b, hp, wp, c_out).transpose(0, 3, 1, 2)
+
+
+def conv_ref(x, w, bias, relu: bool, stride: int):
+    """Full-precision conv via lax.conv. w: [C_in, k, k, C_out]."""
+    c_in, k, _, c_out = w.shape
+    wt = w.transpose(3, 0, 1, 2)  # OIHW
+    y = lax.conv_general_dilated(
+        x,
+        wt,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    y = y + bias.reshape(1, c_out, 1, 1)
+    return jnp.maximum(y, 0.0) if relu else y

@@ -1,0 +1,207 @@
+"""L2: model definitions (forward passes) that call the L1 kernels.
+
+The three runnable models mirror the Rust descriptors in
+`qpart_core::model::zoo` exactly (layer dims, strides, ReLU placement):
+
+* ``mlp6``       — the paper's Fig. 4 six-FC MNIST classifier,
+* ``edgecnn``    — the Table IV CNN (32x32x3, 10/100 classes),
+* ``tinyresnet`` — runnable ImageNet stand-in (residual adds included at
+  execution; they carry no parameters/MACs under the paper's Eq. 2
+  accounting, matching the Rust descriptor).
+
+Every layer has a *quantized* forward (Pallas `qlinear`/`qconv` on integer
+codes) and a full-precision forward. The AOT pass lowers each per-layer
+function to its own HLO so the Rust runtime can execute any partition.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import qconv, qlinear, ref
+
+
+# ---------------------------------------------------------------------------
+# layer / model specs (kept in lock-step with rust/qpart-core/src/model/zoo.rs)
+# ---------------------------------------------------------------------------
+
+def _lin(name, d_in, d_out, relu):
+    return dict(name=name, kind="linear", d_in=d_in, d_out=d_out, relu=relu)
+
+
+def _conv(name, c_in, c_out, k, stride, in_side):
+    out_side = -(-in_side // stride)  # ceil
+    return dict(name=name, kind="conv2d", c_in=c_in, c_out=c_out, k=k,
+                stride=stride, in_side=in_side, out_side=out_side, relu=True)
+
+
+def mlp6_spec():
+    dims = [784, 512, 256, 128, 64, 32, 10]
+    return dict(
+        name="mlp6",
+        num_classes=10,
+        input_shape=(784,),
+        layers=[_lin(f"fc{i+1}", dims[i], dims[i + 1], relu=i < 5) for i in range(6)],
+        residual={},  # no skip connections
+        partition_points=list(range(7)),  # 0..=6
+    )
+
+
+def edgecnn_spec(num_classes=10):
+    return dict(
+        name=f"edgecnn{num_classes}",
+        num_classes=num_classes,
+        input_shape=(3, 32, 32),
+        layers=[
+            _conv("conv1", 3, 16, 3, 1, 32),
+            _conv("conv2", 16, 32, 3, 2, 32),
+            _conv("conv3", 32, 64, 3, 2, 16),
+            _lin("fc1", 64 * 8 * 8, 256, relu=True),
+            _lin("fc2", 256, num_classes, relu=False),
+        ],
+        residual={},
+        partition_points=list(range(6)),  # 0..=5
+    )
+
+
+def tinyresnet_spec(num_classes=10):
+    return dict(
+        name="tinyresnet",
+        num_classes=num_classes,
+        input_shape=(3, 32, 32),
+        layers=[
+            _conv("stem", 3, 16, 3, 1, 32),
+            _conv("b1c1", 16, 16, 3, 1, 32),
+            _conv("b1c2", 16, 16, 3, 1, 32),
+            _conv("b2c1", 16, 32, 3, 2, 32),
+            _conv("b2c2", 32, 32, 3, 1, 16),
+            _conv("b3c1", 32, 64, 3, 2, 16),
+            _conv("b3c2", 64, 64, 3, 1, 8),
+            _lin("fc", 64 * 8 * 8, num_classes, relu=False),
+        ],
+        # residual adds: output of layer i (1-based) += output of layer j.
+        # stem/b1c1/b1c2 are all 16x32x32 -> skip 1->3;
+        # b2c1(4)/b2c2(5) are 32x16x16 -> skip 4->5;
+        # b3c1(6)/b3c2(7) are 64x8x8 -> skip 6->7.
+        residual={3: 1, 5: 4, 7: 6},
+        # Partitions are restricted to residual-block boundaries so a skip
+        # never crosses the device/server split (the boundary activation is
+        # the only tensor shipped uplink). Mirrored in the Rust descriptor.
+        partition_points=[0, 1, 3, 5, 7, 8],
+    )
+
+
+SPECS = {
+    "mlp6": mlp6_spec,
+    "edgecnn10": lambda: edgecnn_spec(10),
+    "edgecnn100": lambda: edgecnn_spec(100),
+    "tinyresnet": lambda: tinyresnet_spec(10),
+}
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def init_params(spec, seed=0):
+    """He-init parameter list: [{'w': ..., 'b': ...}, ...].
+
+    linear: w [D, G]; conv: w [C_in, k, k, C_out] (im2col layout).
+    """
+    rng = np.random.default_rng(seed)
+    params = []
+    for layer in spec["layers"]:
+        if layer["kind"] == "linear":
+            fan_in = layer["d_in"]
+            w = rng.normal(0, np.sqrt(2.0 / fan_in), size=(layer["d_in"], layer["d_out"]))
+            b = np.zeros(layer["d_out"])
+        else:
+            fan_in = layer["c_in"] * layer["k"] ** 2
+            w = rng.normal(0, np.sqrt(2.0 / fan_in),
+                           size=(layer["c_in"], layer["k"], layer["k"], layer["c_out"]))
+            b = np.zeros(layer["c_out"])
+        params.append(dict(w=jnp.asarray(w, jnp.float32), b=jnp.asarray(b, jnp.float32)))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def layer_forward(layer, p, x, use_pallas=False):
+    """Full-precision forward of one layer. x is [B, ...] activation."""
+    relu = layer["relu"]
+    if layer["kind"] == "linear":
+        if x.ndim > 2:
+            x = x.reshape(x.shape[0], -1)
+        if use_pallas:
+            # f32 path through the same kernel: codes = w, qmin = 0, step = 1
+            zero = jnp.zeros((1, 1), jnp.float32)
+            one = jnp.ones((1, 1), jnp.float32)
+            return qlinear(x, p["w"], zero, one, p["b"][None, :], relu=relu)
+        return ref.linear_ref(x, p["w"], p["b"][None, :], relu)
+    # conv
+    return ref.conv_ref(x, p["w"], p["b"][None, :], relu, layer["stride"])
+
+
+def layer_forward_quant(layer, codes, qmin, step, bias, x):
+    """Quantized forward of one layer via the Pallas kernel.
+
+    codes: flattened grid indices as f32 ([D,G] linear / [C*k*k, C_out] conv).
+    """
+    relu = layer["relu"]
+    if layer["kind"] == "linear":
+        if x.ndim > 2:
+            x = x.reshape(x.shape[0], -1)
+        return qlinear(x, codes, qmin, step, bias, relu=relu)
+    return qconv(x, codes, qmin, step, bias, relu, layer["k"], layer["stride"])
+
+
+def forward(spec, params, x, upto=None, use_pallas=False):
+    """Forward through layers [0, upto); returns the activation (logits when
+    upto is None). Residual adds applied per spec['residual']."""
+    upto = len(spec["layers"]) if upto is None else upto
+    acts = {0: x}
+    h = x
+    for i, (layer, p) in enumerate(zip(spec["layers"], params), start=1):
+        if i > upto:
+            break
+        h = layer_forward(layer, p, h, use_pallas=use_pallas)
+        src = spec["residual"].get(i)
+        if src is not None:
+            h = h + acts[src]
+        acts[i] = h
+    return h
+
+
+def forward_from(spec, params, h, start):
+    """Forward from layer `start`+1 to the end given the boundary activation
+    `h` at `start` (the server-side segment). `start` must be one of the
+    spec's ``partition_points`` so every residual source the segment needs
+    (src >= start) is available."""
+    assert start in spec["partition_points"], (
+        f"partition {start} not allowed for {spec['name']} "
+        f"(valid: {spec['partition_points']})"
+    )
+    acts = {start: h}
+    for i in range(start + 1, len(spec["layers"]) + 1):
+        layer, p = spec["layers"][i - 1], params[i - 1]
+        h = layer_forward(layer, p, h)
+        src = spec["residual"].get(i)
+        if src is not None:
+            assert src >= start, f"residual {i}<-{src} crosses partition {start}"
+            h = h + acts[src]
+        acts[i] = h
+    return h
+
+
+def accuracy(spec, params, x, y, batch=256):
+    """Top-1 accuracy."""
+    n = x.shape[0]
+    correct = 0
+    for i in range(0, n, batch):
+        logits = forward(spec, params, jnp.asarray(x[i:i + batch]))
+        correct += int((jnp.argmax(logits, axis=1) == jnp.asarray(y[i:i + batch])).sum())
+    return correct / n

@@ -1,0 +1,67 @@
+"""The `.qt` tensor file format (Python writer/reader).
+
+This is the build-time half of the interchange with the Rust runtime
+(`qpart_core::tensor`). See DESIGN.md §7; layout:
+
+    magic   4 bytes  b"QTEN"
+    version u32      1
+    dtype   u32      0 = f32, 1 = i32
+    ndim    u32
+    dims    ndim x u64
+    data    prod(dims) x 4 bytes, little-endian, C-order
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"QTEN"
+VERSION = 1
+_DTYPES = {0: np.float32, 1: np.int32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def save(path, array) -> None:
+    """Write `array` (float32 or int32) as a .qt file."""
+    arr = np.ascontiguousarray(array)
+    if arr.dtype not in _CODES:
+        if np.issubdtype(arr.dtype, np.floating):
+            arr = arr.astype(np.float32)
+        elif np.issubdtype(arr.dtype, np.integer):
+            arr = arr.astype(np.int32)
+        else:
+            raise TypeError(f"unsupported dtype {arr.dtype}")
+    code = _CODES[arr.dtype]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, code))
+        f.write(struct.pack("<I", arr.ndim))
+        for d in arr.shape:
+            f.write(struct.pack("<Q", d))
+        f.write(arr.tobytes(order="C"))
+
+
+def load(path) -> np.ndarray:
+    """Read a .qt file back into a numpy array."""
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad magic {magic!r}")
+        version, code = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        if code not in _DTYPES:
+            raise ValueError(f"{path}: unknown dtype code {code}")
+        (ndim,) = struct.unpack("<I", f.read(4))
+        if ndim > 8:
+            raise ValueError(f"{path}: ndim {ndim} too large")
+        dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim)) if ndim else ()
+        n = int(np.prod(dims)) if ndim else 1
+        raw = f.read(4 * n)
+        if len(raw) != 4 * n:
+            raise ValueError(f"{path}: truncated data")
+        if f.read(1):
+            raise ValueError(f"{path}: trailing bytes")
+    return np.frombuffer(raw, dtype=_DTYPES[code]).reshape(dims).copy()

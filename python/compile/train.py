@@ -1,0 +1,115 @@
+"""Build-time training of the runnable models on the synthetic datasets.
+
+Plain-jax Adam + softmax cross-entropy; small models and easy synthetic
+tasks converge in a couple of epochs on CPU. Training happens exactly once
+(`make artifacts`) and never on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+def cross_entropy(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def _loss_fn(params, spec, x, y):
+    logits = M.forward(spec, params, x)
+    return cross_entropy(logits, y)
+
+
+def adam_init(params):
+    zeros = lambda p: jax.tree_util.tree_map(jnp.zeros_like, p)
+    return dict(m=zeros(params), v=zeros(params), t=0)
+
+
+@functools.partial(jax.jit, static_argnames=("spec_name",))
+def _train_step(params, opt, x, y, lr, spec_name):
+    spec = M.SPECS[spec_name]()
+    loss, grads = jax.value_and_grad(_loss_fn)(params, spec, x, y)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = opt["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v,
+    )
+    return params, dict(m=m, v=v, t=t), loss
+
+
+def train(spec, x_train, y_train, epochs=4, batch=128, lr=1e-3, seed=0, log=None):
+    """Train `spec` on (x_train, y_train); returns (params, loss_history)."""
+    params = M.init_params(spec, seed=seed)
+    opt = adam_init(params)
+    n = x_train.shape[0]
+    rng = np.random.default_rng(seed)
+    history = []
+    xs = jnp.asarray(x_train)
+    ys = jnp.asarray(y_train)
+    for epoch in range(epochs):
+        order = rng.permutation(n)
+        epoch_loss, steps = 0.0, 0
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            params, opt, loss = _train_step(
+                params, opt, xs[idx], ys[idx], lr, spec["name"]
+            )
+            epoch_loss += float(loss)
+            steps += 1
+        history.append(epoch_loss / max(steps, 1))
+        if log:
+            log(f"  epoch {epoch + 1}/{epochs}: loss {history[-1]:.4f}")
+    return params, history
+
+
+def train_autoencoder(h_samples, bottleneck, epochs=60, lr=1e-3, seed=0):
+    """Train a 1-layer linear autoencoder on activation samples `h_samples`
+    [N, D] -> enc [D, bottleneck], dec [bottleneck, D] (+ biases).
+
+    This is the DeepCOD-style baseline's compressor: it trades extra
+    device/server compute for a smaller uplink payload."""
+    rng = np.random.default_rng(seed)
+    d = h_samples.shape[1]
+    params = dict(
+        we=jnp.asarray(rng.normal(0, np.sqrt(1.0 / d), size=(d, bottleneck)), jnp.float32),
+        be=jnp.zeros((bottleneck,), jnp.float32),
+        wd=jnp.asarray(rng.normal(0, np.sqrt(1.0 / bottleneck), size=(bottleneck, d)), jnp.float32),
+        bd=jnp.zeros((d,), jnp.float32),
+    )
+
+    def loss_fn(p, h):
+        z = h @ p["we"] + p["be"]
+        rec = z @ p["wd"] + p["bd"]
+        return jnp.mean((rec - h) ** 2)
+
+    @jax.jit
+    def step(p, opt, h):
+        loss, g = jax.value_and_grad(loss_fn)(p, h)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        t = opt["t"] + 1
+        m = jax.tree_util.tree_map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, opt["m"], g)
+        v = jax.tree_util.tree_map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_, opt["v"], g)
+        p = jax.tree_util.tree_map(
+            lambda p_, m_, v_: p_ - lr * (m_ / (1 - b1**t)) / (jnp.sqrt(v_ / (1 - b2**t)) + eps),
+            p, m, v,
+        )
+        return p, dict(m=m, v=v, t=t), loss
+
+    opt = adam_init(params)
+    h = jnp.asarray(h_samples)
+    losses = []
+    for _ in range(epochs):
+        params, opt, loss = step(params, opt, h)
+        losses.append(float(loss))
+    return params, losses

@@ -1,0 +1,33 @@
+"""Shared fixtures: a small trained mlp6 reused across test modules."""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile import data as D  # noqa: E402
+from compile import model as M  # noqa: E402
+from compile import train as T  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def tiny_mlp6():
+    """A quickly trained mlp6 (~90% on its synthetic task) shared by tests."""
+    spec = M.mlp6_spec()
+    x, y = D.make("digits", 1200, seed=0)
+    params, history = T.train(spec, x, y, epochs=3, seed=0)
+    x_te, y_te = D.make("digits", 400, seed=1)
+    acc = M.accuracy(spec, params, x_te, y_te)
+    return dict(spec=spec, params=params, history=history,
+                x_te=x_te, y_te=y_te, acc=acc)
+
+
+@pytest.fixture(scope="session")
+def tiny_cnn():
+    """A quickly trained edgecnn10."""
+    spec = M.edgecnn_spec(10)
+    x, y = D.make("cifar10_syn", 600, seed=0)
+    params, history = T.train(spec, x, y, epochs=2, seed=0)
+    return dict(spec=spec, params=params, history=history)

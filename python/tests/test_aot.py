@@ -1,0 +1,92 @@
+"""End-to-end AOT build test (fast mode, mlp6 only) + manifest schema."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, qt
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(out, fast=True, only={"mlp6"}, log=lambda *_: None)
+    return out, manifest
+
+
+def test_manifest_written(built):
+    out, manifest = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk["version"] == 1
+    assert on_disk["models"][0]["name"] == "mlp6"
+    assert manifest["models"][0]["test_accuracy"] > 0.1
+
+
+def test_arch_schema_matches_rust(built):
+    _, manifest = built
+    arch = manifest["archs"][0]
+    assert arch["name"] == "mlp6"
+    assert arch["num_classes"] == 10
+    assert len(arch["layers"]) == 6
+    assert arch["partition_points"] == list(range(7))
+    for layer in arch["layers"]:
+        assert layer["kind"] == "linear"
+        assert {"name", "relu", "d_in", "d_out"} <= set(layer)
+
+
+def test_all_referenced_files_exist(built):
+    out, manifest = built
+    for e in manifest["executables"]:
+        assert os.path.exists(os.path.join(out, e["hlo"])), e["hlo"]
+    for m in manifest["models"]:
+        assert os.path.exists(os.path.join(out, m["calibration"]))
+        for i in range(1, 7):
+            assert os.path.exists(os.path.join(out, m["weights_dir"], f"l{i}_w.qt"))
+    for d in manifest["datasets"]:
+        assert os.path.exists(os.path.join(out, d["x"]))
+        assert os.path.exists(os.path.join(out, d["y"]))
+
+
+def test_executable_inventory(built):
+    _, manifest = built
+    kinds = {}
+    for e in manifest["executables"]:
+        kinds.setdefault(e["kind"], 0)
+        kinds[e["kind"]] += 1
+    # 6 layers × 2 batches for each layer kind; 1 full; 5 AE boundaries × 2 batches
+    assert kinds["qlayer"] == 12
+    assert kinds["f32layer"] == 12
+    assert kinds["full"] == 1
+    assert kinds["ae_enc"] == 10
+    assert kinds["ae_dec"] == 10
+
+
+def test_weights_roundtrip_consistent(built):
+    out, manifest = built
+    m = manifest["models"][0]
+    w1 = qt.load(os.path.join(out, m["weights_dir"], "l1_w.qt"))
+    assert w1.shape == (784, 512)
+    assert np.isfinite(w1).all()
+    y = qt.load(os.path.join(out, manifest["datasets"][0]["y"]))
+    assert y.dtype == np.int32
+
+
+def test_calibration_schema(built):
+    out, manifest = built
+    with open(os.path.join(out, manifest["models"][0]["calibration"])) as f:
+        cal = json.load(f)
+    assert cal["levels"] == list(aot.C.DEFAULT_LEVELS)
+    assert len(cal["weight"]) == 6
+    assert len(cal["activation"]) == 7
+    assert cal["adversarial_energy"] > 0
+
+
+def test_hlo_files_look_like_hlo(built):
+    out, manifest = built
+    path = os.path.join(out, manifest["executables"][0]["hlo"])
+    text = open(path).read()
+    assert "HloModule" in text
+    assert "ENTRY" in text

@@ -1,0 +1,74 @@
+"""Calibration tests: the noise model's empirical basis."""
+
+import numpy as np
+import pytest
+
+from compile import calibrate as C
+from compile import model as M
+
+
+def test_quantize_array_roundtrip_error():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(100,)).astype(np.float32)
+    for bits in (2, 4, 8):
+        deq, codes, qmin, step = C.quantize_array(a, bits)
+        assert codes.min() >= 0 and codes.max() <= 2**bits - 1
+        assert np.abs(deq - a).max() <= step / 2 + 1e-6
+
+
+def test_quantize_array_constant():
+    deq, _, _, step = C.quantize_array(np.full((8,), 2.5, np.float32), 4)
+    assert step > 0
+    np.testing.assert_allclose(deq, 2.5, atol=1e-4)
+
+
+def test_noise_energy_scaling(tiny_mlp6):
+    """The Eq. 18 model: quantizing at b+2 bits cuts output-noise energy by
+    roughly 4^2 (the whole premise of s·4^{-b})."""
+    spec, params = tiny_mlp6["spec"], tiny_mlp6["params"]
+    x = tiny_mlp6["x_te"][:128]
+    base = C._logits(spec, params, x)
+    e = {}
+    for bits in (4, 8):
+        q = C._quantize_layer_params(params, 1, bits)
+        e[bits] = C._out_energy(base, C._logits(spec, q, x))
+    ratio = e[4] / max(e[8], 1e-12)
+    assert 30 < ratio < 2000, f"expected ≈256, got {ratio}"
+
+
+def test_measure_s_positive(tiny_mlp6):
+    spec, params = tiny_mlp6["spec"], tiny_mlp6["params"]
+    x = tiny_mlp6["x_te"][:96]
+    s1 = C.measure_s_weight(spec, params, x, 1)
+    s_act = C.measure_s_activation(spec, params, x, 3)
+    assert s1 > 0 and s_act > 0
+
+
+def test_rho_monotone_in_level(tiny_mlp6):
+    spec, params = tiny_mlp6["spec"], tiny_mlp6["params"]
+    x, y = tiny_mlp6["x_te"][:192], tiny_mlp6["y_te"][:192]
+    levels = [0.01, 0.03, 0.08]
+    rhos, base_acc = C.measure_rho(spec, params, x, y, 2, levels, "weight",
+                                   iters=6, draws=1, seed=0)
+    assert base_acc > 0.5
+    assert all(r > 0 for r in rhos)
+    assert rhos[0] <= rhos[1] <= rhos[2], rhos
+
+
+def test_adversarial_energy_positive(tiny_mlp6):
+    adv = C.adversarial_energy(tiny_mlp6["spec"], tiny_mlp6["params"],
+                               tiny_mlp6["x_te"][:64])
+    assert adv > 0
+
+
+def test_full_calibration_schema(tiny_mlp6):
+    spec, params = tiny_mlp6["spec"], tiny_mlp6["params"]
+    x, y = tiny_mlp6["x_te"][:128], tiny_mlp6["y_te"][:128]
+    cal = C.calibrate(spec, params, x, y, levels=[0.01, 0.05], seed=0)
+    assert cal["model"] == "mlp6"
+    assert len(cal["weight"]) == 6
+    assert len(cal["activation"]) == 7
+    for entry in cal["weight"] + cal["activation"]:
+        assert entry["s"] > 0
+        assert len(entry["rho"]) == 2
+        assert all(r > 0 for r in entry["rho"])

@@ -1,0 +1,69 @@
+"""Tests for the synthetic dataset generators."""
+
+import numpy as np
+
+from compile import data as D
+
+
+def test_digits_shapes_and_ranges():
+    x, y = D.synth_digits(64, seed=0)
+    assert x.shape == (64, 784) and x.dtype == np.float32
+    assert y.shape == (64,) and y.dtype == np.int32
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert set(np.unique(y)) <= set(range(10))
+
+
+def test_images_shapes_and_ranges():
+    x, y = D.synth_images(32, classes=100, seed=0)
+    assert x.shape == (32, 3, 32, 32) and x.dtype == np.float32
+    assert y.min() >= 0 and y.max() < 100
+
+
+def test_deterministic():
+    a = D.synth_digits(16, seed=5)
+    b = D.synth_digits(16, seed=5)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_seeds_differ():
+    a, _ = D.synth_digits(16, seed=1)
+    b, _ = D.synth_digits(16, seed=2)
+    assert not np.array_equal(a, b)
+
+
+def test_splits_share_prototypes():
+    """Train/test splits must be the same classification task."""
+    xa, ya = D.synth_digits(800, seed=1, proto_seed=9)
+    xb, yb = D.synth_digits(800, seed=2, proto_seed=9)
+    # class means should correlate strongly across splits
+    for c in range(3):
+        ma = xa[ya == c].mean(axis=0)
+        mb = xb[yb == c].mean(axis=0)
+        corr = np.corrcoef(ma, mb)[0, 1]
+        assert corr > 0.6, f"class {c} corr {corr}"
+    # ... and a different proto_seed must be a different task
+    xc, yc = D.synth_digits(800, seed=1, proto_seed=10)
+    m9 = xa[ya == 0].mean(axis=0)
+    m10 = xc[yc == 0].mean(axis=0)
+    assert np.corrcoef(m9, m10)[0, 1] < 0.6
+
+
+def test_classes_are_distinct():
+    x, y = D.synth_digits(400, seed=0)
+    m0 = x[y == 0].mean(axis=0)
+    m1 = x[y == 1].mean(axis=0)
+    assert np.linalg.norm(m0 - m1) > 0.5
+
+
+def test_make_registry():
+    for name in D.DATASETS:
+        x, y = D.make(name, 8, seed=0)
+        assert x.shape[0] == 8
+        assert y.max() < D.DATASETS[name]["classes"]
+
+
+def test_datasets_differ_by_name():
+    a, _ = D.make("svhn_syn", 8, seed=0)
+    b, _ = D.make("cifar10_syn", 8, seed=0)
+    assert not np.array_equal(a, b)

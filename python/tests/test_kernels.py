@@ -1,0 +1,118 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes (including ones that force multi-block grids and
+the accumulation path) and value ranges; assert_allclose against ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qconv, qlinear, ref
+from compile.kernels.qlinear import _block, vmem_footprint_bytes
+
+
+def _mk(rng, b, d, g, bits):
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    codes = rng.integers(0, 2**bits, size=(d, g)).astype(np.float32)
+    qmin = np.array([[rng.normal() * 0.1 - 0.3]], dtype=np.float32)
+    step = np.array([[abs(rng.normal()) * 0.01 + 1e-4]], dtype=np.float32)
+    bias = rng.normal(size=(1, g)).astype(np.float32)
+    return x, codes, qmin, step, bias
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 7, 32]),
+    d=st.sampled_from([8, 60, 256, 784]),
+    g=st.sampled_from([4, 10, 130, 512]),
+    bits=st.integers(min_value=1, max_value=12),
+    relu=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_qlinear_matches_ref(b, d, g, bits, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, codes, qmin, step, bias = _mk(rng, b, d, g, bits)
+    got = qlinear(x, codes, qmin, step, bias, relu=relu)
+    want = ref.qlinear_ref(x, codes, qmin, step, bias, relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 8]),
+    c_in=st.sampled_from([1, 3, 8]),
+    c_out=st.sampled_from([4, 16]),
+    side=st.sampled_from([8, 16]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_qconv_matches_ref(b, c_in, c_out, side, stride, seed):
+    rng = np.random.default_rng(seed)
+    k = 3
+    x = rng.normal(size=(b, c_in, side, side)).astype(np.float32)
+    codes = rng.integers(0, 255, size=(c_in * k * k, c_out)).astype(np.float32)
+    qmin = np.array([[-0.4]], dtype=np.float32)
+    step = np.array([[0.003]], dtype=np.float32)
+    bias = rng.normal(size=(1, c_out)).astype(np.float32)
+    got = qconv(x, codes, qmin, step, bias, True, k, stride)
+    want = ref.qconv_ref(x, codes, qmin, step, bias, True, k, stride)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_qconv_matches_lax_conv():
+    """im2col + matmul formulation == direct lax.conv (dequantized)."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(2, 3, 16, 16)).astype(np.float32)
+    codes = rng.integers(0, 63, size=(27, 8)).astype(np.float32)
+    qmin = np.array([[-0.2]], dtype=np.float32)
+    step = np.array([[0.006]], dtype=np.float32)
+    bias = rng.normal(size=(1, 8)).astype(np.float32)
+    w = (qmin[0, 0] + codes * step[0, 0]).reshape(3, 3, 3, 8)
+    got = qconv(x, codes, qmin, step, bias, True, 3, 2)
+    want = ref.conv_ref(x, jnp.asarray(w), bias, True, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_dequant_identity_trick():
+    """codes=w, qmin=0, step=1 turns the kernel into a plain linear layer."""
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(4, 32)).astype(np.float32)
+    w = rng.normal(size=(32, 16)).astype(np.float32)
+    bias = rng.normal(size=(1, 16)).astype(np.float32)
+    zero = np.zeros((1, 1), np.float32)
+    one = np.ones((1, 1), np.float32)
+    got = qlinear(x, w, zero, one, bias, relu=False)
+    np.testing.assert_allclose(np.asarray(got), x @ w + bias, rtol=2e-4, atol=2e-4)
+
+
+def test_block_divisor_helper():
+    assert _block(784, 256) == 196
+    assert _block(512, 256) == 256
+    assert _block(10, 256) == 10
+    assert _block(1, 128) == 1
+    for dim in [7, 12, 100, 784, 4096]:
+        b = _block(dim, 256)
+        assert dim % b == 0 and b <= max(1, min(dim, 256))
+
+
+def test_vmem_footprint_within_budget():
+    """DESIGN.md §8: per-step VMEM residency must fit a 16 MiB core by a
+    wide margin for every layer shape in the zoo."""
+    for (b, d, g) in [(1, 784, 512), (32, 4096, 256), (32768, 27, 16),
+                      (32, 512, 256), (8192, 576, 64)]:
+        fp = vmem_footprint_bytes(b, d, g)
+        assert fp["total"] < 2 * 1024 * 1024, (b, d, g, fp)
+
+
+def test_relu_clamps():
+    rng = np.random.default_rng(7)
+    x, codes, qmin, step, bias = _mk(rng, 4, 16, 8, 8)
+    bias = bias - 10.0  # force negatives
+    out = np.asarray(qlinear(x, codes, qmin, step, bias, relu=True))
+    assert (out >= 0).all()

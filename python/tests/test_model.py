@@ -1,0 +1,106 @@
+"""Model forward-pass structure tests (shapes, partitions, residuals)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+def _rand_input(spec, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, *spec["input_shape"])).astype(np.float32)
+
+
+@pytest.mark.parametrize("name", list(M.SPECS))
+def test_forward_shapes(name):
+    spec = M.SPECS[name]()
+    params = M.init_params(spec, seed=0)
+    x = _rand_input(spec, 2)
+    logits = M.forward(spec, params, jnp.asarray(x))
+    assert logits.shape == (2, spec["num_classes"])
+
+
+@pytest.mark.parametrize("name", list(M.SPECS))
+def test_split_inference_exact(name):
+    """forward == forward(upto=p) ∘ forward_from(p) at every valid p —
+    the invariant that makes QPART's partitioning lossless."""
+    spec = M.SPECS[name]()
+    params = M.init_params(spec, seed=1)
+    x = jnp.asarray(_rand_input(spec, 2, seed=1))
+    want = np.asarray(M.forward(spec, params, x))
+    for p in spec["partition_points"]:
+        if p == 0:
+            got = np.asarray(M.forward_from(spec, params, x, 0))
+        elif p == len(spec["layers"]):
+            got = np.asarray(M.forward(spec, params, x, upto=p))
+        else:
+            h = M.forward(spec, params, x, upto=p)
+            got = np.asarray(M.forward_from(spec, params, h, p))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{name} p={p}")
+
+
+def test_invalid_partition_asserts():
+    spec = M.tinyresnet_spec()
+    params = M.init_params(spec, seed=0)
+    x = jnp.asarray(_rand_input(spec, 1))
+    h = M.forward(spec, params, x, upto=2)  # 2 is inside block 1
+    with pytest.raises(AssertionError, match="not allowed"):
+        M.forward_from(spec, params, h, 2)
+
+
+def test_residual_changes_output():
+    """tinyresnet's skip adds must actually affect the output."""
+    spec = M.tinyresnet_spec()
+    params = M.init_params(spec, seed=2)
+    x = jnp.asarray(_rand_input(spec, 1, seed=2))
+    with_skip = np.asarray(M.forward(spec, params, x))
+    spec_noskip = dict(spec, residual={})
+    without = np.asarray(M.forward(spec_noskip, params, x))
+    assert not np.allclose(with_skip, without)
+
+
+def test_pallas_path_matches_ref_path():
+    spec = M.mlp6_spec()
+    params = M.init_params(spec, seed=3)
+    x = jnp.asarray(_rand_input(spec, 4, seed=3))
+    a = np.asarray(M.forward(spec, params, x, use_pallas=True))
+    b = np.asarray(M.forward(spec, params, x, use_pallas=False))
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_specs_match_rust_zoo_param_counts():
+    """Mirror of qpart-core's zoo tests: parameter counts must agree."""
+    spec = M.mlp6_spec()
+    total = 0
+    for layer in spec["layers"]:
+        total += layer["d_in"] * layer["d_out"] + layer["d_out"]
+    expect = sum(i * o + o for i, o in
+                 [(784, 512), (512, 256), (256, 128), (128, 64), (64, 32), (32, 10)])
+    assert total == expect
+
+    cnn = M.edgecnn_spec(10)
+    conv3 = cnn["layers"][2]
+    assert conv3["out_side"] == 8
+    assert cnn["layers"][3]["d_in"] == 64 * 8 * 8
+
+
+def test_quantized_layer_forward():
+    spec = M.mlp6_spec()
+    params = M.init_params(spec, seed=4)
+    layer = spec["layers"][0]
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(2, 784)).astype(np.float32))
+    w = np.asarray(params[0]["w"])
+    mn, mx = float(w.min()), float(w.max())
+    step = (mx - mn) / 255
+    codes = np.clip(np.round((w - mn) / step), 0, 255).astype(np.float32)
+    out = M.layer_forward_quant(
+        layer, jnp.asarray(codes),
+        jnp.asarray([[mn]], dtype=jnp.float32), jnp.asarray([[step]], dtype=jnp.float32),
+        params[0]["b"][None, :], x)
+    ref_out = M.layer_forward(layer, params[0], x)
+    # 8-bit weights: outputs close but not identical
+    err = float(jnp.max(jnp.abs(out - ref_out)))
+    assert 0 < err < 0.5

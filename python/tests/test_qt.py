@@ -1,0 +1,69 @@
+"""Tests for the .qt tensor interchange format (python side)."""
+
+import numpy as np
+import pytest
+
+from compile import qt
+
+
+def test_roundtrip_f32(tmp_path):
+    a = np.random.default_rng(0).normal(size=(3, 5, 2)).astype(np.float32)
+    p = tmp_path / "a.qt"
+    qt.save(p, a)
+    b = qt.load(p)
+    assert b.dtype == np.float32
+    np.testing.assert_array_equal(a, b)
+
+
+def test_roundtrip_i32(tmp_path):
+    a = np.array([[1, -2], [3, 2_000_000_000]], dtype=np.int32)
+    p = tmp_path / "a.qt"
+    qt.save(p, a)
+    b = qt.load(p)
+    assert b.dtype == np.int32
+    np.testing.assert_array_equal(a, b)
+
+
+def test_dtype_coercion(tmp_path):
+    qt.save(tmp_path / "f.qt", np.ones((2,), dtype=np.float64))
+    assert qt.load(tmp_path / "f.qt").dtype == np.float32
+    qt.save(tmp_path / "i.qt", np.ones((2,), dtype=np.int64))
+    assert qt.load(tmp_path / "i.qt").dtype == np.int32
+
+
+def test_single_and_empty(tmp_path):
+    # note: np.ascontiguousarray promotes 0-d to 1-d, so scalars save as (1,)
+    qt.save(tmp_path / "s.qt", np.float32(3.5).reshape(()))
+    loaded = qt.load(tmp_path / "s.qt")
+    assert loaded.shape == (1,) and loaded[0] == np.float32(3.5)
+    qt.save(tmp_path / "e.qt", np.zeros((0, 4), dtype=np.float32))
+    assert qt.load(tmp_path / "e.qt").shape == (0, 4)
+
+
+def test_rejects_bad_magic(tmp_path):
+    p = tmp_path / "bad.qt"
+    p.write_bytes(b"NOPExxxxxxxxxxxxxxx")
+    with pytest.raises(ValueError, match="magic"):
+        qt.load(p)
+
+
+def test_rejects_truncated(tmp_path):
+    p = tmp_path / "t.qt"
+    qt.save(p, np.zeros((10,), dtype=np.float32))
+    raw = p.read_bytes()
+    p.write_bytes(raw[:-4])
+    with pytest.raises(ValueError, match="truncated"):
+        qt.load(p)
+
+
+def test_rejects_trailing(tmp_path):
+    p = tmp_path / "t.qt"
+    qt.save(p, np.zeros((4,), dtype=np.float32))
+    p.write_bytes(p.read_bytes() + b"\0")
+    with pytest.raises(ValueError, match="trailing"):
+        qt.load(p)
+
+
+def test_rejects_unsupported_dtype(tmp_path):
+    with pytest.raises(TypeError):
+        qt.save(tmp_path / "c.qt", np.zeros((2,), dtype=np.complex64))

@@ -1,0 +1,41 @@
+"""Training-loop tests (uses the session-scoped tiny models)."""
+
+import numpy as np
+
+from compile import data as D
+from compile import model as M
+from compile import train as T
+
+
+def test_loss_decreases(tiny_mlp6):
+    h = tiny_mlp6["history"]
+    assert h[-1] < h[0] * 0.5, f"loss did not drop: {h}"
+
+
+def test_accuracy_beats_chance(tiny_mlp6):
+    assert tiny_mlp6["acc"] > 0.6, tiny_mlp6["acc"]
+
+
+def test_cnn_loss_decreases(tiny_cnn):
+    h = tiny_cnn["history"]
+    assert h[-1] < h[0], h
+
+
+def test_training_deterministic():
+    spec = M.mlp6_spec()
+    x, y = D.make("digits", 256, seed=0)
+    p1, h1 = T.train(spec, x, y, epochs=1, seed=9)
+    p2, h2 = T.train(spec, x, y, epochs=1, seed=9)
+    assert h1 == h2
+    np.testing.assert_array_equal(np.asarray(p1[0]["w"]), np.asarray(p2[0]["w"]))
+
+
+def test_autoencoder_reconstructs():
+    rng = np.random.default_rng(0)
+    # low-rank data: a rank-8 subspace the bottleneck-8 AE can capture
+    basis = rng.normal(size=(8, 64)).astype(np.float32)
+    coef = rng.normal(size=(400, 8)).astype(np.float32)
+    h = coef @ basis
+    params, losses = T.train_autoencoder(h, bottleneck=8, epochs=400, lr=1e-2, seed=0)
+    # rank-8 data through a bottleneck-8 linear AE: large relative reduction
+    assert losses[-1] < 0.2 * losses[0], (losses[0], losses[-1])

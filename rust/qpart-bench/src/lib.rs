@@ -1,0 +1,221 @@
+//! Tiny micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Two halves:
+//! * [`time_it`] / [`BenchStats`] — warmup + timed iterations with
+//!   mean/p50/p99, for the `perf_*` benches.
+//! * [`Table`] — aligned table printing for the paper-figure/table
+//!   benches, so each bench binary prints the same rows/series the paper
+//!   reports (and optionally CSV via `QPART_BENCH_CSV=1`).
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` for benchmark bodies.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Timing statistics over benchmark iterations.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub total: Duration,
+}
+
+impl BenchStats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Throughput given `units` of work per iteration.
+    pub fn per_second(&self, units: f64) -> f64 {
+        units / (self.mean_ns / 1e9)
+    }
+}
+
+/// Benchmark `f`: `warmup` untimed runs, then timed runs until both
+/// `min_iters` iterations and `min_time` have elapsed (whichever is later,
+/// capped at `max_iters`).
+pub fn time_it<F: FnMut()>(warmup: usize, min_iters: usize, min_time: Duration, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let max_iters = min_iters.max(1) * 1000;
+    let mut samples_ns: Vec<f64> = Vec::with_capacity(min_iters);
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+        let done_iters = samples_ns.len() >= min_iters;
+        let done_time = start.elapsed() >= min_time;
+        if (done_iters && done_time) || samples_ns.len() >= max_iters {
+            break;
+        }
+    }
+    let total = start.elapsed();
+    let mut sorted = samples_ns.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| sorted[((sorted.len() as f64 - 1.0) * p).round() as usize];
+    BenchStats {
+        iters: samples_ns.len(),
+        mean_ns: samples_ns.iter().sum::<f64>() / samples_ns.len() as f64,
+        p50_ns: q(0.50),
+        p99_ns: q(0.99),
+        min_ns: sorted[0],
+        total,
+    }
+}
+
+/// Quick preset: 3 warmups, ≥30 iters, ≥200 ms.
+pub fn quick<F: FnMut()>(f: F) -> BenchStats {
+    time_it(3, 30, Duration::from_millis(200), f)
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Aligned-table printer for figure/table benches.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Print aligned; also CSV when `QPART_BENCH_CSV=1`.
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.headers));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+        if std::env::var("QPART_BENCH_CSV").as_deref() == Ok("1") {
+            println!("csv,{}", self.headers.join(","));
+            for row in &self.rows {
+                println!("csv,{}", row.join(","));
+            }
+        }
+    }
+}
+
+/// Format helpers used across bench binaries.
+pub fn fmt_bits(bits: u64) -> String {
+    let bytes = bits as f64 / 8.0;
+    if bytes < 1024.0 {
+        format!("{bytes:.0} B")
+    } else if bytes < 1024.0 * 1024.0 {
+        format!("{:.1} KiB", bytes / 1024.0)
+    } else {
+        format!("{:.2} MiB", bytes / (1024.0 * 1024.0))
+    }
+}
+
+pub fn fmt_si(x: f64) -> String {
+    let ax = x.abs();
+    if ax == 0.0 {
+        "0".into()
+    } else if ax < 1e-6 {
+        format!("{:.2} n", x * 1e9)
+    } else if ax < 1e-3 {
+        format!("{:.2} µ", x * 1e6)
+    } else if ax < 1.0 {
+        format!("{:.2} m", x * 1e3)
+    } else if ax < 1e3 {
+        format!("{x:.3}")
+    } else if ax < 1e6 {
+        format!("{:.2} k", x / 1e3)
+    } else if ax < 1e9 {
+        format!("{:.2} M", x / 1e6)
+    } else {
+        format!("{:.2} G", x / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_counts() {
+        let mut n = 0u64;
+        let stats = time_it(2, 10, Duration::from_millis(1), || {
+            n += 1;
+            black_box(n);
+        });
+        assert!(stats.iters >= 10);
+        assert!(n as usize >= stats.iters + 2);
+        assert!(stats.mean_ns > 0.0);
+        assert!(stats.p99_ns >= stats.p50_ns);
+        assert!(stats.min_ns <= stats.p50_ns);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(2_500.0).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_bits(8 * 2048).contains("KiB"));
+        assert!(fmt_si(2.5e-6).contains('µ'));
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // should not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

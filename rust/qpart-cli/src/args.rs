@@ -1,0 +1,112 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeated
+//! `--set k=v`, and positional arguments.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` ends flag parsing
+                    args.positional.extend(iter);
+                    break;
+                }
+                let (key, val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let val = match val {
+                    Some(v) => v,
+                    None => {
+                        // consume the next token unless it is another flag
+                        match iter.peek() {
+                            Some(n) if !n.starts_with("--") => iter.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                args.flags.entry(key).or_default().push(val);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags.get(key).map(|v| v.iter().map(String::as_str).collect()).unwrap_or_default()
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{key}: expected a number, got '{s}'")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{key}: expected an integer, got '{s}'")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["serve", "--listen", "0.0.0.0:9", "--verbose", "--k=v"]);
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.get("listen"), Some("0.0.0.0:9"));
+        assert_eq!(a.get("k"), Some("v"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn repeated_and_numbers() {
+        let a = parse(&["--set", "a=1", "--set", "b=2", "--rate", "2.5", "--n", "7"]);
+        assert_eq!(a.get_all("set"), vec!["a=1", "b=2"]);
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 7);
+        assert_eq!(a.get_usize("missing", 3).unwrap(), 3);
+        assert!(a.get_f64("set", 0.0).is_err());
+    }
+
+    #[test]
+    fn double_dash_ends_flags() {
+        let a = parse(&["--x", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+}

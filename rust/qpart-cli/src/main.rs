@@ -1,0 +1,239 @@
+//! `qpart` — launcher for the QPART serving stack.
+//!
+//! ```text
+//! qpart serve    [--config cfg.json] [--set k=v ...] [--listen addr] [--artifacts dir]
+//! qpart request  --model mlp6 [--accuracy 0.01] [--n 16] [--addr host:port]
+//!                [--capacity-bps 2e8] [--clock-hz 2e8] [--artifacts dir]
+//! qpart sim      [--model mlp6] [--rate 20] [--devices 16] [--duration 10] [--seed 1]
+//! qpart offline  [--model mlp6] [--artifacts dir]
+//! qpart models   [--artifacts dir]
+//! ```
+//!
+//! `serve` starts the coordinator; `request` plays an edge device over the
+//! two-phase protocol (real PJRT execution on both sides); `sim` runs the
+//! discrete-event fleet simulation; `offline` prints the Algorithm-1
+//! pattern table; `models` lists the bundle.
+
+mod args;
+
+use args::Args;
+use qpart::prelude::*;
+use qpart::coordinator::client::{paper_request, random_input};
+use std::rc::Rc;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(raw) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(raw: Vec<String>) -> Result<(), String> {
+    let args = Args::parse(raw)?;
+    match args.positional.first().map(String::as_str) {
+        Some("serve") => cmd_serve(&args),
+        Some("request") => cmd_request(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("offline") => cmd_offline(&args),
+        Some("models") => cmd_models(&args),
+        Some(other) => Err(format!("unknown command '{other}'\n{USAGE}")),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage: qpart <serve|request|sim|offline|models> [flags]\n\
+  serve    --listen 127.0.0.1:7878 --artifacts artifacts [--config f] [--set k=v]\n\
+  request  --model mlp6 --accuracy 0.01 --n 16 --addr 127.0.0.1:7878\n\
+  sim      --model mlp6 --rate 20 --devices 16 --duration 10\n\
+  offline  --model mlp6\n\
+  models";
+
+fn load_config(args: &Args) -> Result<Config, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(path).map_err(|e| e.to_string())?,
+        None => Config::defaults(),
+    };
+    for kv in args.get_all("set") {
+        cfg.set_override(kv).map_err(|e| e.to_string())?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let serving = cfg.serving().map_err(|e| e.to_string())?;
+    let server_cfg = qpart::coordinator::ServerConfig {
+        listen: args.get_or("listen", &serving.listen).to_string(),
+        queue_capacity: serving.queue_capacity,
+        session_capacity: 4096,
+        artifacts_dir: args.get_or("artifacts", &serving.artifacts_dir).to_string(),
+    };
+    println!("loading bundle from '{}' ...", server_cfg.artifacts_dir);
+    let handle = serve(server_cfg)?;
+    println!("qpart coordinator listening on {}", handle.addr);
+    println!("(ctrl-c to stop)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_request(args: &Args) -> Result<(), String> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let model = args.get_or("model", "mlp6").to_string();
+    let n = args.get_usize("n", 8)?;
+    let accuracy = args.get_f64("accuracy", 0.01)?;
+    let bundle = Rc::new(Bundle::load(artifacts).map_err(|e| e.to_string())?);
+    let mut client =
+        DeviceClient::connect(addr, Rc::clone(&bundle)).map_err(|e| e.to_string())?;
+
+    let entry = bundle.model(&model).map_err(|e| e.to_string())?;
+    let (x, y) = bundle.dataset(&entry.dataset).map_err(|e| e.to_string())?;
+    let x = HostTensor::from(x);
+    let arch = bundle.arch(&entry.arch).map_err(|e| e.to_string())?;
+
+    let mut req = paper_request(&model, accuracy);
+    req.channel_capacity_bps = args.get_f64("capacity-bps", req.channel_capacity_bps)?;
+    req.clock_hz = args.get_f64("clock-hz", req.clock_hz)?;
+
+    // --simulate: one-shot mode (server plays the device too)
+    let simulate = args.has("simulate");
+    let mut correct = 0usize;
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let idx = i % x.batch();
+        let input = x.slice_rows_padded(idx, idx + 1, 1);
+        let (pred, partition) = if simulate {
+            match client.simulate(req.clone(), &input).map_err(|e| e.to_string())? {
+                qpart::proto::messages::Response::Result(r) => {
+                    let p = r
+                        .costs
+                        .as_ref()
+                        .and_then(|c| c.get("partition"))
+                        .and_then(|v| v.as_i64())
+                        .unwrap_or(-1);
+                    (r.prediction, p as usize)
+                }
+                other => return Err(format!("unexpected response {other:?}")),
+            }
+        } else {
+            let (pred, _logits, partition) =
+                client.infer(req.clone(), input).map_err(|e| e.to_string())?;
+            (pred, partition)
+        };
+        if pred == y[idx] {
+            correct += 1;
+        }
+        println!("request {i}: partition={partition} pred={pred} label={}", y[idx]);
+    }
+    let dt = t0.elapsed();
+    println!(
+        "\n{n} requests in {:.2}s ({:.1} req/s), accuracy {}/{} = {:.1}%",
+        dt.as_secs_f64(),
+        n as f64 / dt.as_secs_f64(),
+        correct,
+        n,
+        100.0 * correct as f64 / n as f64
+    );
+    // sanity: the arch accepts a random input of its declared shape
+    let probe = random_input(arch, 7);
+    debug_assert_eq!(probe.row_elems() as u64, arch.activation_elems(0));
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<(), String> {
+    let model_name = args.get_or("model", "mlp6");
+    let arch = builtin(model_name).map_err(|e| e.to_string())?;
+    let levels = [0.0025, 0.005, 0.01, 0.02, 0.05];
+    // use the bundle calibration when available, else synthetic
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let calib = Bundle::load(artifacts)
+        .and_then(|b| b.calibration(model_name))
+        .unwrap_or_else(|_| CalibrationTable::synthetic(&arch, &levels, 1));
+    let patterns =
+        offline_quantize(&arch, &calib, OfflineConfig::default()).map_err(|e| e.to_string())?;
+    let cfg = FleetConfig {
+        workload: WorkloadConfig {
+            arrival_rate: args.get_f64("rate", 20.0)?,
+            n_devices: args.get_usize("devices", 16)?,
+            duration_s: args.get_f64("duration", 10.0)?,
+            seed: args.get_usize("seed", 1)? as u64,
+        },
+        ..Default::default()
+    };
+    let report = run_fleet(&arch, &patterns, &DeviceClass::default_fleet(), &cfg)
+        .map_err(|e| e.to_string())?;
+    println!("{}", report.perf.to_json().to_string_pretty());
+    println!(
+        "rejected: {}, server cost: {:.4}, partitions: {:?}",
+        report.rejected,
+        report.server_cost,
+        report.perf.partition_histogram(arch.num_layers())
+    );
+    Ok(())
+}
+
+fn cmd_offline(args: &Args) -> Result<(), String> {
+    let model_name = args.get_or("model", "mlp6");
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let (arch, calib) = match Bundle::load(artifacts) {
+        Ok(b) => {
+            let m = b.model(model_name).map_err(|e| e.to_string())?;
+            let arch = b.arch(&m.arch).map_err(|e| e.to_string())?.clone();
+            let calib = b.calibration(model_name).map_err(|e| e.to_string())?;
+            (arch, calib)
+        }
+        Err(_) => {
+            let arch = builtin(model_name).map_err(|e| e.to_string())?;
+            let calib =
+                CalibrationTable::synthetic(&arch, &[0.0025, 0.005, 0.01, 0.02, 0.05], 1);
+            println!("(no artifacts bundle — using synthetic calibration)");
+            (arch, calib)
+        }
+    };
+    let set =
+        offline_quantize(&arch, &calib, OfflineConfig::default()).map_err(|e| e.to_string())?;
+    println!("offline pattern table for {model_name} (Algorithm 1):");
+    for (k, row) in set.patterns.iter().enumerate() {
+        println!("  accuracy level a={}", set.levels[k]);
+        for pat in row {
+            println!(
+                "    p={:<2} bits={:?} b_x={} payload={} bits (f32: {}) predicted degradation {:.5}",
+                pat.partition,
+                pat.weight_bits,
+                pat.activation_bits,
+                pat.payload_bits(&arch),
+                pat.payload_bits_f32(&arch),
+                pat.predicted_degradation,
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_models(args: &Args) -> Result<(), String> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let bundle = Bundle::load(artifacts).map_err(|e| e.to_string())?;
+    println!("{:<20} {:<12} {:<14} {:>8} {:>12} {:>9}", "model", "arch", "dataset", "layers", "params", "test acc");
+    for m in &bundle.models {
+        let arch = bundle.arch(&m.arch).map_err(|e| e.to_string())?;
+        println!(
+            "{:<20} {:<12} {:<14} {:>8} {:>12} {:>8.2}%",
+            m.name,
+            m.arch,
+            m.dataset,
+            arch.num_layers(),
+            arch.total_params(),
+            m.test_accuracy * 100.0
+        );
+    }
+    Ok(())
+}

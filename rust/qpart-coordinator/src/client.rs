@@ -1,0 +1,164 @@
+//! The device side of the protocol, for examples / CLI / tests.
+//!
+//! `DeviceClient` plays a faithful edge device: it requests a segment,
+//! **executes the received quantized layers locally** through its own PJRT
+//! engine (the same Pallas-kernel executables a real deployment would ship
+//! in the device image), quantizes + bit-packs the boundary activation,
+//! uploads it, and receives the prediction.
+
+use crate::service::boundary_dims;
+use qpart_core::model::ModelSpec;
+use qpart_core::quant::{pack_bits, quantize, QuantPattern};
+use qpart_proto::frame::{read_frame, write_frame};
+use qpart_proto::messages::{
+    ActivationUpload, InferReply, InferRequest, Request, Response, SimulateRequest,
+};
+use qpart_runtime::executor::{QuantizedLayer, QuantizedSegment};
+use qpart_runtime::{Bundle, Error, Executor, HostTensor, Result};
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::rc::Rc;
+
+/// Blocking protocol client + local (device-side) executor.
+pub struct DeviceClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    /// Device-side runtime (needs the bundle for the HLO executables — in
+    /// a real deployment these ship in the device image).
+    executor: Executor,
+    bundle: Rc<Bundle>,
+}
+
+impl DeviceClient {
+    pub fn connect(addr: &str, bundle: Rc<Bundle>) -> Result<DeviceClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?; // request/response over loopback: no Nagle
+        let writer = stream.try_clone()?;
+        Ok(DeviceClient {
+            reader: BufReader::new(stream),
+            writer,
+            executor: Executor::new(Rc::clone(&bundle))?,
+            bundle,
+        })
+    }
+
+    /// Send one request and read one response.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        write_frame(&mut self.writer, &req.to_line())
+            .map_err(|e| Error::Xla(format!("write: {e}")))?;
+        let line = read_frame(&mut self.reader).map_err(|e| Error::Xla(format!("read: {e}")))?;
+        Response::from_line(&line).map_err(Error::Core)
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        Ok(matches!(self.call(&Request::Ping)?, Response::Pong))
+    }
+
+    /// Full two-phase inference for input `x` (batch 1).
+    /// Returns (prediction, logits, reply-pattern-partition).
+    pub fn infer(
+        &mut self,
+        req: InferRequest,
+        x: HostTensor,
+    ) -> Result<(i32, Vec<f64>, usize)> {
+        let model = req.model.clone();
+        let reply = match self.call(&Request::Infer(req))? {
+            Response::Segment(r) => r,
+            Response::Error(e) => {
+                return Err(Error::Xla(format!("server error {}: {}", e.code, e.message)))
+            }
+            other => return Err(Error::Xla(format!("unexpected response {other:?}"))),
+        };
+        let m = self.bundle.model(&model)?;
+        let arch = self.bundle.arch(&m.arch)?.clone();
+        // rebuild the quantized segment from the wire blobs
+        let seg = segment_from_reply(&reply)?;
+        // device-side inference through the Pallas-kernel executables
+        let boundary = self.executor.run_device_segment(&arch, &seg, x)?;
+        // quantize + pack the uplink activation
+        let bits = reply.pattern.activation_bits;
+        let q = quantize(&boundary.data, bits).map_err(Error::Core)?;
+        let packed = pack_bits(&q.codes, bits).map_err(Error::Core)?;
+        let upload = ActivationUpload {
+            session: reply.session,
+            bits,
+            qmin: q.params.min,
+            step: q.params.step(),
+            dims: boundary_dims(&arch, reply.pattern.partition, 1),
+            packed,
+        };
+        match self.call(&Request::Activation(upload))? {
+            Response::Result(r) => Ok((r.prediction, r.logits, reply.pattern.partition)),
+            Response::Error(e) => {
+                Err(Error::Xla(format!("server error {}: {}", e.code, e.message)))
+            }
+            other => Err(Error::Xla(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// One-shot simulate call (server plays both roles).
+    pub fn simulate(&mut self, req: InferRequest, x: &HostTensor) -> Result<Response> {
+        self.call(&Request::Simulate(SimulateRequest {
+            req,
+            input: x.data.clone(),
+            input_dims: x.dims.clone(),
+        }))
+    }
+}
+
+/// Reconstruct a [`QuantizedSegment`] from the wire reply (device side).
+pub fn segment_from_reply(reply: &InferReply) -> Result<QuantizedSegment> {
+    use qpart_core::quant::{unpack_bits, QuantParams, Quantized};
+    let mut layers = Vec::with_capacity(reply.segment.layers.len());
+    for blob in &reply.segment.layers {
+        let n: usize = blob.w_dims.iter().product();
+        let w_codes = unpack_bits(&blob.w_packed, n, blob.bits).map_err(Error::Core)?;
+        let b_codes = unpack_bits(&blob.b_packed, blob.b_len, blob.bits).map_err(Error::Core)?;
+        let levels = ((1u32 << blob.bits) - 1) as f32;
+        let w_params =
+            QuantParams::from_range(blob.bits, blob.w_qmin, blob.w_qmin + blob.w_step * levels)
+                .map_err(Error::Core)?;
+        let b_params =
+            QuantParams::from_range(blob.bits, blob.b_qmin, blob.b_qmin + blob.b_step * levels)
+                .map_err(Error::Core)?;
+        layers.push(QuantizedLayer {
+            layer: blob.layer,
+            weights: Quantized { params: w_params, codes: w_codes },
+            bias: Quantized { params: b_params, codes: b_codes },
+            w_dims: blob.w_dims.clone(),
+        });
+    }
+    let pattern = QuantPattern {
+        partition: reply.pattern.partition,
+        weight_bits: reply.pattern.weight_bits.clone(),
+        activation_bits: reply.pattern.activation_bits,
+        accuracy_level: reply.pattern.accuracy_level,
+        predicted_degradation: reply.pattern.predicted_degradation,
+    };
+    Ok(QuantizedSegment { model: reply.model.clone(), pattern, layers })
+}
+
+/// Convenience: the paper's Table II device profile as an [`InferRequest`].
+pub fn paper_request(model: &str, accuracy_budget: f64) -> InferRequest {
+    InferRequest {
+        model: model.to_string(),
+        accuracy_budget,
+        channel_capacity_bps: 200e6,
+        tx_power_w: 1.0,
+        clock_hz: 200e6,
+        cycles_per_mac: 5.0,
+        kappa: 3e-27,
+        memory_bits: 256 * 1024 * 1024 * 8,
+        weights: None,
+    }
+}
+
+/// Helper for tests: a ModelSpec-consistent random input (batch 1).
+pub fn random_input(arch: &ModelSpec, seed: u64) -> HostTensor {
+    let mut rng = qpart_core::rng::Rng::new(seed);
+    let mut dims = vec![1usize];
+    dims.extend_from_slice(&arch.input_shape);
+    let n: usize = dims.iter().product();
+    let data: Vec<f32> = (0..n).map(|_| rng.range_f64(0.0, 1.0) as f32).collect();
+    HostTensor { dims, data }
+}

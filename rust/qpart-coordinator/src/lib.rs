@@ -1,0 +1,31 @@
+//! # qpart-coordinator
+//!
+//! The Layer-3 serving stack — the QPART server an edge fleet talks to:
+//!
+//! * [`service`] — the request brain: per-model offline pattern tables
+//!   (Algorithm 1 at startup), per-request decisions (Algorithm 2),
+//!   segment quantization + bit-packing, session state for the two-phase
+//!   protocol, PJRT execution of the server-side segment.
+//! * [`server`] — TCP front-end: JSON-lines framing, a bounded job queue
+//!   with admission control (overload sheds with an `overloaded` error),
+//!   and a dedicated inference thread (PJRT is single-device; requests
+//!   serialize there by design).
+//! * [`client`] — the device side for examples/CLI: sends requests,
+//!   executes the received quantized segment locally through its own PJRT
+//!   engine, uploads the quantized boundary activation.
+//! * [`metrics`] — counters + histograms surfaced via the `stats` request.
+//! * [`session`] — session table with capacity-bounded GC.
+//!
+//! Python never appears anywhere on these paths.
+
+pub mod client;
+pub mod metrics;
+pub mod server;
+pub mod service;
+pub mod session;
+
+pub use client::DeviceClient;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{serve, ServerConfig, ServerHandle};
+pub use service::Service;
+pub use session::{Session, SessionTable};

@@ -1,0 +1,179 @@
+//! Metrics registry: thread-safe counters and fixed-bucket latency
+//! histograms, surfaced through the wire protocol's `stats` request.
+
+use qpart_core::json::Value;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency buckets in microseconds (upper bounds).
+const BUCKETS_US: [u64; 12] =
+    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 1_000_000];
+
+/// A fixed-bucket histogram.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; 12],
+    overflow: AtomicU64,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn observe_us(&self, us: u64) {
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        for (i, &ub) in BUCKETS_US.iter().enumerate() {
+            if us <= ub {
+                self.buckets[i].fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        self.overflow.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let target = (n as f64 * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return BUCKETS_US[i] as f64;
+            }
+        }
+        f64::INFINITY
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("count", self.count().into()),
+            ("mean_us", self.mean_us().into()),
+            ("p50_us", self.quantile_us(0.5).into()),
+            ("p99_us", self.quantile_us(0.99).into()),
+        ])
+    }
+}
+
+/// All coordinator metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_total: AtomicU64,
+    pub errors_total: AtomicU64,
+    pub shed_total: AtomicU64,
+    pub sessions_opened: AtomicU64,
+    pub sessions_expired: AtomicU64,
+    pub bytes_out: AtomicU64,
+    pub bytes_in: AtomicU64,
+    /// End-to-end request handling (decision + quantize + execute).
+    pub handle_latency: Histogram,
+    /// Algorithm 2 decision time.
+    pub decide_latency: Histogram,
+    /// Segment quantization + packing time.
+    pub quantize_latency: Histogram,
+    /// PJRT execution time.
+    pub execute_latency: Histogram,
+}
+
+/// A point-in-time copy (plain numbers) for assertions and reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests_total: u64,
+    pub errors_total: u64,
+    pub shed_total: u64,
+    pub sessions_opened: u64,
+    pub handle_count: u64,
+    pub handle_mean_us: f64,
+}
+
+impl Metrics {
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests_total: self.requests_total.load(Ordering::Relaxed),
+            errors_total: self.errors_total.load(Ordering::Relaxed),
+            shed_total: self.shed_total.load(Ordering::Relaxed),
+            sessions_opened: self.sessions_opened.load(Ordering::Relaxed),
+            handle_count: self.handle_latency.count(),
+            handle_mean_us: self.handle_latency.mean_us(),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("requests_total", self.requests_total.load(Ordering::Relaxed).into()),
+            ("errors_total", self.errors_total.load(Ordering::Relaxed).into()),
+            ("shed_total", self.shed_total.load(Ordering::Relaxed).into()),
+            ("sessions_opened", self.sessions_opened.load(Ordering::Relaxed).into()),
+            ("sessions_expired", self.sessions_expired.load(Ordering::Relaxed).into()),
+            ("bytes_out", self.bytes_out.load(Ordering::Relaxed).into()),
+            ("bytes_in", self.bytes_in.load(Ordering::Relaxed).into()),
+            ("handle", self.handle_latency.to_json()),
+            ("decide", self.decide_latency.to_json()),
+            ("quantize", self.quantize_latency.to_json()),
+            ("execute", self.execute_latency.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::default();
+        for us in [10u64, 60, 300, 300, 700, 2_000_000] {
+            h.observe_us(us);
+        }
+        assert_eq!(h.count(), 6);
+        assert!((h.mean_us() - (10. + 60. + 300. + 300. + 700. + 2e6) / 6.0).abs() < 1e-6);
+        // p50 lands in the 250 or 500 bucket
+        let p50 = h.quantile_us(0.5);
+        assert!(p50 <= 500.0, "{p50}");
+        assert!(h.quantile_us(0.999).is_infinite(), "overflow bucket");
+    }
+
+    #[test]
+    fn snapshot_counts() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests_total);
+        Metrics::inc(&m.requests_total);
+        Metrics::inc(&m.errors_total);
+        m.handle_latency.observe_us(100);
+        let s = m.snapshot();
+        assert_eq!(s.requests_total, 2);
+        assert_eq!(s.errors_total, 1);
+        assert_eq!(s.handle_count, 1);
+    }
+
+    #[test]
+    fn json_has_all_sections() {
+        let m = Metrics::default();
+        let v = m.to_json();
+        for key in ["requests_total", "handle", "decide", "quantize", "execute"] {
+            assert!(v.get(key).is_some(), "{key}");
+        }
+    }
+}

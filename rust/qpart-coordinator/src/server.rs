@@ -1,0 +1,236 @@
+//! TCP front-end: JSON-lines over TCP, bounded job queue, dedicated
+//! inference thread.
+//!
+//! Topology: N connection threads (one per accepted socket) parse frames
+//! and submit `(Request, reply_tx)` jobs into a **bounded** channel — the
+//! admission-control point: when the queue is full the request is shed
+//! immediately with an `overloaded` error instead of growing latency
+//! unboundedly. A single inference thread owns the PJRT executor (the
+//! CPU client is one device; serializing there is the honest model) and
+//! answers jobs in arrival order.
+
+use crate::metrics::{Metrics, MetricsSnapshot};
+use crate::service::Service;
+use qpart_proto::frame::{read_frame, write_frame, FrameError};
+use qpart_proto::messages::{ErrorReply, Request, Response};
+use qpart_runtime::Bundle;
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Listen address, e.g. `127.0.0.1:7878` (port 0 = ephemeral).
+    pub listen: String,
+    /// Bounded job-queue depth (admission control).
+    pub queue_capacity: usize,
+    /// Session-table capacity.
+    pub session_capacity: usize,
+    /// Artifact bundle directory.
+    pub artifacts_dir: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            queue_capacity: 256,
+            session_capacity: 4096,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+type Job = (Request, SyncSender<Response>);
+
+/// Handle to a running server (for tests/examples).
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    pub metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    infer_thread: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Signal shutdown and join the threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the acceptor so it re-checks the stop flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.infer_thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+}
+
+/// Start the server; returns once the listener is bound and the service
+/// (bundle + Algorithm 1 tables + PJRT) is initialized.
+pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
+    let listener = TcpListener::bind(&cfg.listen).map_err(|e| format!("bind {}: {e}", cfg.listen))?;
+    let addr = listener.local_addr().map_err(|e| e.to_string())?;
+    let metrics = Arc::new(Metrics::default());
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let (job_tx, job_rx): (SyncSender<Job>, Receiver<Job>) = sync_channel(cfg.queue_capacity);
+
+    // Inference thread: owns the (non-Send) service. Bundle + Algorithm 1
+    // initialization happens inside; readiness is reported via a channel.
+    let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(1);
+    let infer_metrics = Arc::clone(&metrics);
+    let infer_stop = Arc::clone(&stop);
+    let artifacts_dir = cfg.artifacts_dir.clone();
+    let session_capacity = cfg.session_capacity;
+    let infer_thread = std::thread::Builder::new()
+        .name("qpart-infer".into())
+        .spawn(move || {
+            let service = Bundle::load(&artifacts_dir)
+                .map_err(|e| e.to_string())
+                .and_then(|b| {
+                    Service::new(Rc::new(b), infer_metrics, session_capacity)
+                        .map_err(|e| e.to_string())
+                });
+            let mut service = match service {
+                Ok(s) => {
+                    let _ = ready_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while !infer_stop.load(Ordering::SeqCst) {
+                match job_rx.recv_timeout(std::time::Duration::from_millis(100)) {
+                    Ok((req, reply_tx)) => {
+                        let resp = service.handle(req);
+                        let _ = reply_tx.send(resp);
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        })
+        .map_err(|e| e.to_string())?;
+
+    match ready_rx.recv() {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => return Err(format!("service init failed: {e}")),
+        Err(_) => return Err("service thread died during init".into()),
+    }
+
+    // Acceptor thread: one connection thread per client.
+    let accept_stop = Arc::clone(&stop);
+    let accept_metrics = Arc::clone(&metrics);
+    let accept_thread = std::thread::Builder::new()
+        .name("qpart-accept".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if accept_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let stream = match stream {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                // request/response protocol: Nagle + delayed-ACK adds
+                // ~40-200 ms per round trip without this
+                let _ = stream.set_nodelay(true);
+                let job_tx = job_tx.clone();
+                let metrics = Arc::clone(&accept_metrics);
+                let conn_stop = Arc::clone(&accept_stop);
+                let _ = std::thread::Builder::new()
+                    .name("qpart-conn".into())
+                    .spawn(move || connection_loop(stream, job_tx, metrics, conn_stop));
+            }
+        })
+        .map_err(|e| e.to_string())?;
+
+    Ok(ServerHandle {
+        addr,
+        metrics,
+        stop,
+        accept_thread: Some(accept_thread),
+        infer_thread: Some(infer_thread),
+    })
+}
+
+fn connection_loop(
+    stream: TcpStream,
+    job_tx: SyncSender<Job>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let line = match read_frame(&mut reader) {
+            Ok(l) => l,
+            Err(FrameError::Closed) => break,
+            Err(e) => {
+                let resp = Response::Error(ErrorReply {
+                    code: "bad_frame".into(),
+                    message: e.to_string(),
+                });
+                let _ = write_frame(&mut writer, &resp.to_line());
+                break;
+            }
+        };
+        let req = match Request::from_line(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                Metrics::inc(&metrics.errors_total);
+                let resp = Response::Error(ErrorReply {
+                    code: "bad_request".into(),
+                    message: e.to_string(),
+                });
+                if write_frame(&mut writer, &resp.to_line()).is_err() {
+                    break;
+                }
+                continue;
+            }
+        };
+        let (reply_tx, reply_rx) = sync_channel::<Response>(1);
+        let resp = match job_tx.try_send((req, reply_tx)) {
+            Ok(()) => match reply_rx.recv() {
+                Ok(r) => r,
+                Err(_) => Response::Error(ErrorReply {
+                    code: "internal".into(),
+                    message: "inference thread gone".into(),
+                }),
+            },
+            Err(TrySendError::Full(_)) => {
+                Metrics::inc(&metrics.shed_total);
+                Response::Error(ErrorReply {
+                    code: "overloaded".into(),
+                    message: "admission control: job queue full".into(),
+                })
+            }
+            Err(TrySendError::Disconnected(_)) => Response::Error(ErrorReply {
+                code: "shutdown".into(),
+                message: "server stopping".into(),
+            }),
+        };
+        if write_frame(&mut writer, &resp.to_line()).is_err() {
+            break;
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! The coordinator's request brain.
+//!
+//! At startup: load the bundle, run paper **Algorithm 1** per model (the
+//! calibration tables are already in the artifacts, so this is just the
+//! closed-form solves — microseconds per pattern) and cache the pattern
+//! sets. Per request: run **Algorithm 2** under the request's live
+//! channel/compute parameters, quantize + bit-pack the chosen segment,
+//! open a session, and execute the server-side segment when the boundary
+//! activation comes back.
+
+use crate::metrics::Metrics;
+use crate::session::SessionTable;
+use qpart_core::channel::Channel;
+use qpart_core::cost::{CostModel, DeviceProfile, ServerProfile, TradeoffWeights};
+use qpart_core::model::{LayerKind, ModelSpec};
+use qpart_core::optimizer::{
+    offline_quantize, serve_request, OfflineConfig, RequestParams,
+};
+use qpart_core::quant::{pack_bits, unpack_bits, PatternSet, QuantParams, Quantized};
+use qpart_proto::messages::{
+    ActivationUpload, ErrorReply, InferReply, InferRequest, LayerBlob, ModelInfo, PatternInfo,
+    Request, Response, ResultReply, SegmentBlob, SimulateRequest,
+};
+use qpart_runtime::{Bundle, Executor, HostTensor};
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The single-threaded service (owns the PJRT executor).
+pub struct Service {
+    pub bundle: Rc<Bundle>,
+    executor: Executor,
+    /// Offline pattern tables per model instance (Algorithm 1 output).
+    patterns: Vec<(String, PatternSet)>,
+    sessions: SessionTable,
+    pub metrics: Arc<Metrics>,
+    server_profile: ServerProfile,
+    default_weights: TradeoffWeights,
+    /// Packed segments per (model, level_idx, partition) — quantize+pack
+    /// happens once per pattern, not per request (§Perf iteration 3).
+    packed_cache: HashMap<(String, usize, usize), Rc<Vec<LayerBlob>>>,
+}
+
+impl Service {
+    /// Load the bundle and run Algorithm 1 for every model.
+    pub fn new(
+        bundle: Rc<Bundle>,
+        metrics: Arc<Metrics>,
+        session_capacity: usize,
+    ) -> qpart_runtime::Result<Service> {
+        let executor = Executor::new(Rc::clone(&bundle))?;
+        let mut patterns = Vec::new();
+        for m in &bundle.models {
+            let arch = bundle.arch(&m.arch)?;
+            let calib = bundle.calibration(&m.name)?;
+            let set = offline_quantize(arch, &calib, OfflineConfig::default())
+                .map_err(qpart_runtime::Error::Core)?;
+            patterns.push((m.name.clone(), set));
+        }
+        Ok(Service {
+            bundle,
+            executor,
+            patterns,
+            sessions: SessionTable::new(session_capacity),
+            metrics,
+            server_profile: ServerProfile::paper_default(),
+            default_weights: TradeoffWeights::paper_default(),
+            packed_cache: HashMap::new(),
+        })
+    }
+
+    fn pattern_set(&self, model: &str) -> Option<&PatternSet> {
+        self.patterns.iter().find(|(n, _)| n == model).map(|(_, s)| s)
+    }
+
+    fn arch_for_model(&self, model: &str) -> qpart_runtime::Result<&ModelSpec> {
+        let m = self.bundle.model(model)?;
+        self.bundle.arch(&m.arch)
+    }
+
+    /// Handle one protocol request.
+    pub fn handle(&mut self, req: Request) -> Response {
+        Metrics::inc(&self.metrics.requests_total);
+        let t0 = Instant::now();
+        let resp = match req {
+            Request::Ping => Response::Pong,
+            Request::ListModels => self.list_models(),
+            Request::Stats => Response::Stats(self.stats_json()),
+            Request::Infer(r) => self.handle_infer(&r),
+            Request::Activation(a) => self.handle_activation(&a),
+            Request::Simulate(s) => self.handle_simulate(&s),
+        };
+        self.metrics.handle_latency.observe_us(t0.elapsed().as_micros() as u64);
+        if matches!(resp, Response::Error(_)) {
+            Metrics::inc(&self.metrics.errors_total);
+        }
+        resp
+    }
+
+    fn stats_json(&self) -> qpart_core::json::Value {
+        let mut v = self.metrics.to_json();
+        v.set("open_sessions", self.sessions.len().into());
+        v.set("models", self.patterns.len().into());
+        v
+    }
+
+    fn list_models(&self) -> Response {
+        let models = self
+            .bundle
+            .models
+            .iter()
+            .filter_map(|m| {
+                let arch = self.bundle.arch(&m.arch).ok()?;
+                Some(ModelInfo {
+                    name: m.name.clone(),
+                    arch: m.arch.clone(),
+                    dataset: m.dataset.clone(),
+                    layers: arch.num_layers(),
+                    params: arch.total_params(),
+                    test_accuracy: m.test_accuracy,
+                })
+            })
+            .collect();
+        Response::Models(models)
+    }
+
+    fn err(code: &str, message: impl std::fmt::Display) -> Response {
+        Response::Error(ErrorReply { code: code.into(), message: message.to_string() })
+    }
+
+    fn cost_model_for(&self, r: &InferRequest) -> CostModel {
+        CostModel {
+            device: DeviceProfile {
+                clock_hz: r.clock_hz,
+                cycles_per_mac: r.cycles_per_mac,
+                kappa: r.kappa,
+                memory_bits: r.memory_bits,
+            },
+            server: self.server_profile,
+            channel: Channel::fixed(r.channel_capacity_bps, r.tx_power_w),
+            weights: r
+                .weights
+                .map(|(omega, tau, eta)| TradeoffWeights { omega, tau, eta })
+                .unwrap_or(self.default_weights),
+        }
+    }
+
+    /// Phase 1: decide, quantize, pack, open a session.
+    fn handle_infer(&mut self, r: &InferRequest) -> Response {
+        let arch = match self.arch_for_model(&r.model) {
+            Ok(a) => a.clone(),
+            Err(e) => return Self::err("unknown_model", e),
+        };
+        let set = match self.pattern_set(&r.model) {
+            Some(s) => s,
+            None => return Self::err("unknown_model", &r.model),
+        };
+        let t_dec = Instant::now();
+        let params = RequestParams {
+            cost: self.cost_model_for(r),
+            accuracy_budget: r.accuracy_budget,
+        };
+        let decision = match serve_request(&arch, set, &params) {
+            Ok(d) => d,
+            Err(e) => return Self::err("infeasible", e),
+        };
+        self.metrics.decide_latency.observe_us(t_dec.elapsed().as_micros() as u64);
+
+        let t_q = Instant::now();
+        let cache_key = (r.model.clone(), decision.level_idx, decision.pattern.partition);
+        let layers = match self.packed_cache.get(&cache_key) {
+            Some(l) => Rc::clone(l),
+            None => {
+                let seg = match self.executor.quantize_segment(&r.model, &decision.pattern) {
+                    Ok(s) => s,
+                    Err(e) => return Self::err("internal", e),
+                };
+                let mut layers = Vec::with_capacity(seg.layers.len());
+                for ql in &seg.layers {
+                    let w_packed = match pack_bits(&ql.weights.codes, ql.weights.params.bits) {
+                        Ok(p) => p,
+                        Err(e) => return Self::err("internal", e),
+                    };
+                    let b_packed = match pack_bits(&ql.bias.codes, ql.bias.params.bits) {
+                        Ok(p) => p,
+                        Err(e) => return Self::err("internal", e),
+                    };
+                    layers.push(LayerBlob {
+                        layer: ql.layer,
+                        bits: ql.weights.params.bits,
+                        w_dims: ql.w_dims.clone(),
+                        w_qmin: ql.weights.params.min,
+                        w_step: ql.weights.params.step(),
+                        w_packed,
+                        b_qmin: ql.bias.params.min,
+                        b_step: ql.bias.params.step(),
+                        b_len: ql.bias.codes.len(),
+                        b_packed,
+                    });
+                }
+                let layers = Rc::new(layers);
+                self.packed_cache.insert(cache_key, Rc::clone(&layers));
+                layers
+            }
+        };
+        let wire: u64 = layers
+            .iter()
+            .map(|l| (l.w_packed.len() + l.b_packed.len()) as u64)
+            .sum();
+        Metrics::add(&self.metrics.bytes_out, wire);
+        self.metrics.quantize_latency.observe_us(t_q.elapsed().as_micros() as u64);
+
+        let boundary_dims = boundary_dims(&arch, decision.pattern.partition, 1);
+        let session =
+            self.sessions.open(&r.model, decision.pattern.clone(), boundary_dims);
+        Metrics::inc(&self.metrics.sessions_opened);
+        Response::Segment(InferReply {
+            session,
+            model: r.model.clone(),
+            pattern: PatternInfo {
+                partition: decision.pattern.partition,
+                weight_bits: decision.pattern.weight_bits.clone(),
+                activation_bits: decision.pattern.activation_bits,
+                accuracy_level: decision.pattern.accuracy_level,
+                predicted_degradation: decision.pattern.predicted_degradation,
+                objective: decision.cost.objective,
+            },
+            segment: SegmentBlob { layers: layers.as_ref().clone() },
+        })
+    }
+
+    /// Phase 2: reconstruct the uploaded activation, finish on the server.
+    fn handle_activation(&mut self, a: &ActivationUpload) -> Response {
+        let session = match self.sessions.take(a.session) {
+            Some(s) => s,
+            None => return Self::err("unknown_session", a.session),
+        };
+        if a.dims != session.boundary_dims {
+            return Self::err(
+                "bad_activation",
+                format!("expected dims {:?}, got {:?}", session.boundary_dims, a.dims),
+            );
+        }
+        let n: usize = a.dims.iter().product();
+        Metrics::add(&self.metrics.bytes_in, a.packed.len() as u64);
+        let codes = match unpack_bits(&a.packed, n, a.bits) {
+            Ok(c) => c,
+            Err(e) => return Self::err("bad_activation", e),
+        };
+        let params = match QuantParams::from_range(
+            a.bits,
+            a.qmin,
+            a.qmin + a.step * ((1u32 << a.bits) - 1) as f32,
+        ) {
+            Ok(p) => p,
+            Err(e) => return Self::err("bad_activation", e),
+        };
+        let values = Quantized { params, codes }.dequantize();
+        let h = match HostTensor::new(a.dims.clone(), values) {
+            Ok(h) => h,
+            Err(e) => return Self::err("bad_activation", e),
+        };
+        let t_x = Instant::now();
+        let logits = match self.executor.run_server_segment_cached(
+            &session.model,
+            h,
+            session.pattern.partition,
+        ) {
+            Ok(l) => l,
+            Err(e) => return Self::err("internal", e),
+        };
+        self.metrics.execute_latency.observe_us(t_x.elapsed().as_micros() as u64);
+        Response::Result(result_reply(a.session, &logits, None, t_x.elapsed().as_micros() as u64))
+    }
+
+    /// One-shot: the server simulates the device too (load generation).
+    fn handle_simulate(&mut self, s: &SimulateRequest) -> Response {
+        let arch = match self.arch_for_model(&s.req.model) {
+            Ok(a) => a.clone(),
+            Err(e) => return Self::err("unknown_model", e),
+        };
+        let set = match self.pattern_set(&s.req.model) {
+            Some(set) => set,
+            None => return Self::err("unknown_model", &s.req.model),
+        };
+        let t_dec = Instant::now();
+        let cost_model = self.cost_model_for(&s.req);
+        let params =
+            RequestParams { cost: cost_model, accuracy_budget: s.req.accuracy_budget };
+        let decision = match serve_request(&arch, set, &params) {
+            Ok(d) => d,
+            Err(e) => return Self::err("infeasible", e),
+        };
+        self.metrics.decide_latency.observe_us(t_dec.elapsed().as_micros() as u64);
+        let x = match HostTensor::new(s.input_dims.clone(), s.input.clone()) {
+            Ok(x) => x,
+            Err(e) => return Self::err("bad_input", e),
+        };
+        let t_x = Instant::now();
+        let outcome = match self.executor.run_split(&s.req.model, &decision.pattern, x) {
+            Ok(o) => o,
+            Err(e) => return Self::err("internal", e),
+        };
+        self.metrics.execute_latency.observe_us(t_x.elapsed().as_micros() as u64);
+        // simulated (paper-model) costs at the decided partition
+        let payload = outcome.weight_bits + outcome.activation_bits;
+        let breakdown = cost_model.evaluate(&arch, decision.pattern.partition, payload);
+        let mut costs = breakdown.to_json();
+        costs.set("payload_bits", payload.into());
+        costs.set("partition", decision.pattern.partition.into());
+        costs.set(
+            "predicted_degradation",
+            decision.pattern.predicted_degradation.into(),
+        );
+        Response::Result(result_reply(
+            0,
+            &outcome.logits,
+            Some(costs),
+            t_x.elapsed().as_micros() as u64,
+        ))
+    }
+}
+
+/// Boundary-activation dims at partition `p`.
+pub fn boundary_dims(arch: &ModelSpec, p: usize, batch: usize) -> Vec<usize> {
+    if p == 0 {
+        let mut v = vec![batch];
+        v.extend_from_slice(&arch.input_shape);
+        return v;
+    }
+    match arch.layers[p - 1].kind {
+        LayerKind::Linear { d_out, .. } => vec![batch, d_out],
+        LayerKind::Conv2d { c_out, out_side, .. } => vec![batch, c_out, out_side, out_side],
+    }
+}
+
+fn result_reply(
+    session: u64,
+    logits: &HostTensor,
+    costs: Option<qpart_core::json::Value>,
+    server_us: u64,
+) -> ResultReply {
+    let classes = logits.row_elems();
+    let row = &logits.data[..classes];
+    let prediction = row
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap_or(-1);
+    ResultReply {
+        session,
+        prediction,
+        logits: row.iter().map(|&x| x as f64).collect(),
+        costs,
+        server_us,
+    }
+}

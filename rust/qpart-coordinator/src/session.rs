@@ -1,0 +1,123 @@
+//! Session table for the two-phase protocol.
+//!
+//! Phase 1 (`infer`) opens a session remembering the chosen pattern and
+//! the boundary-activation shape; phase 2 (`activation`) consumes it.
+//! The table is capacity-bounded: oldest sessions are evicted first
+//! (devices that never came back must not leak memory).
+
+use qpart_core::quant::QuantPattern;
+use std::time::Instant;
+
+/// One open session.
+#[derive(Debug, Clone)]
+pub struct Session {
+    pub id: u64,
+    pub model: String,
+    pub pattern: QuantPattern,
+    /// Expected boundary-activation dims (batch 1).
+    pub boundary_dims: Vec<usize>,
+    pub opened: Instant,
+}
+
+/// Bounded FIFO-evicting session table.
+#[derive(Debug)]
+pub struct SessionTable {
+    capacity: usize,
+    next_id: u64,
+    /// Insertion-ordered (oldest first) — eviction pops the front.
+    sessions: Vec<Session>,
+    /// How many sessions were evicted before being consumed.
+    pub evicted: u64,
+}
+
+impl SessionTable {
+    pub fn new(capacity: usize) -> SessionTable {
+        assert!(capacity > 0);
+        SessionTable { capacity, next_id: 1, sessions: Vec::new(), evicted: 0 }
+    }
+
+    /// Open a session; may evict the oldest.
+    pub fn open(
+        &mut self,
+        model: &str,
+        pattern: QuantPattern,
+        boundary_dims: Vec<usize>,
+    ) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        if self.sessions.len() >= self.capacity {
+            self.sessions.remove(0);
+            self.evicted += 1;
+        }
+        self.sessions.push(Session {
+            id,
+            model: model.to_string(),
+            pattern,
+            boundary_dims,
+            opened: Instant::now(),
+        });
+        id
+    }
+
+    /// Consume (remove + return) a session.
+    pub fn take(&mut self, id: u64) -> Option<Session> {
+        let idx = self.sessions.iter().position(|s| s.id == id)?;
+        Some(self.sessions.remove(idx))
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pat(p: usize) -> QuantPattern {
+        QuantPattern {
+            partition: p,
+            weight_bits: vec![8; p],
+            activation_bits: 8,
+            accuracy_level: 0.01,
+            predicted_degradation: 0.0,
+        }
+    }
+
+    #[test]
+    fn open_take_roundtrip() {
+        let mut t = SessionTable::new(4);
+        let id = t.open("mlp6", pat(2), vec![1, 256]);
+        assert_eq!(t.len(), 1);
+        let s = t.take(id).unwrap();
+        assert_eq!(s.model, "mlp6");
+        assert_eq!(s.boundary_dims, vec![1, 256]);
+        assert!(t.take(id).is_none(), "consumed");
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn ids_unique_and_monotone() {
+        let mut t = SessionTable::new(8);
+        let a = t.open("m", pat(0), vec![1, 784]);
+        let b = t.open("m", pat(0), vec![1, 784]);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn capacity_evicts_oldest() {
+        let mut t = SessionTable::new(2);
+        let a = t.open("m", pat(0), vec![1]);
+        let b = t.open("m", pat(0), vec![1]);
+        let c = t.open("m", pat(0), vec![1]);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.evicted, 1);
+        assert!(t.take(a).is_none(), "oldest evicted");
+        assert!(t.take(b).is_some());
+        assert!(t.take(c).is_some());
+    }
+}

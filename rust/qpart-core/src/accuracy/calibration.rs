@@ -1,0 +1,296 @@
+//! Calibration tables: per-layer noise scales `s_l` and robustness
+//! parameters `ρ_l(a)` for a set of accuracy-degradation levels.
+//!
+//! Produced offline by `python/compile/calibrate.py` (paper Algorithm 1
+//! lines 7–10: inject noise, bisect the threshold where degradation hits
+//! `a`, fit `s_l` from measured quantization-noise energies) and consumed
+//! by the Rust closed-form solver.
+
+use super::{noise_energy, psi};
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::model::ModelSpec;
+use crate::quant::QuantPattern;
+
+/// Per-source calibration: noise scale `s` (level-independent) and
+/// robustness `ρ(a_k)` per accuracy level `k`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SourceCalib {
+    /// `s` of Eq. 18/19: `‖σ‖² = s · 4^{−b}`.
+    pub s: f64,
+    /// `ρ(a_k)` of Eq. 22, one per level, same order as the table's levels.
+    pub rho: Vec<f64>,
+}
+
+/// Calibration for one model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationTable {
+    pub model: String,
+    /// Accuracy-degradation levels `a_1 < a_2 < …` (fractions).
+    pub levels: Vec<f64>,
+    /// Weight calibration per layer `l ∈ 1..=L` (index `l-1`).
+    pub weight: Vec<SourceCalib>,
+    /// Activation calibration per boundary `l ∈ 0..=L` (index `l`).
+    pub activation: Vec<SourceCalib>,
+}
+
+impl CalibrationTable {
+    /// Number of learnable layers covered.
+    pub fn num_layers(&self) -> usize {
+        self.weight.len()
+    }
+
+    /// `s_l^w` for layer `l ∈ 1..=L`.
+    pub fn s_w(&self, l: usize) -> f64 {
+        self.weight[l - 1].s
+    }
+
+    /// `ρ_l^w(a_k)` for layer `l ∈ 1..=L`, level index `k`.
+    pub fn rho_w(&self, l: usize, k: usize) -> f64 {
+        self.weight[l - 1].rho[k]
+    }
+
+    /// `s^x` for the activation at boundary `l ∈ 0..=L`.
+    pub fn s_x(&self, l: usize) -> f64 {
+        self.activation[l].s
+    }
+
+    /// `ρ^x(a_k)` at boundary `l ∈ 0..=L`.
+    pub fn rho_x(&self, l: usize, k: usize) -> f64 {
+        self.activation[l].rho[k]
+    }
+
+    /// ψ contribution of quantizing layer `l`'s weights at `bits` (Eq. 20).
+    pub fn psi_w(&self, l: usize, bits: f64, k: usize) -> f64 {
+        psi(self.s_w(l), bits, self.rho_w(l, k))
+    }
+
+    /// ψ contribution of the boundary activation (Eq. 21).
+    pub fn psi_x(&self, l: usize, bits: f64, k: usize) -> f64 {
+        psi(self.s_x(l), bits, self.rho_x(l, k))
+    }
+
+    /// Total ψ of a pattern (constraint LHS of Eq. 23, with Δ = 1):
+    /// `ψ_x(p) + Σ_{l=1..p} ψ_l^w`.
+    pub fn pattern_psi(&self, pattern: &QuantPattern, k: usize) -> f64 {
+        let mut total = self.psi_x(pattern.partition, pattern.activation_bits as f64, k);
+        for (i, &b) in pattern.weight_bits.iter().enumerate() {
+            total += self.psi_w(i + 1, b as f64, k);
+        }
+        total
+    }
+
+    /// Predicted accuracy degradation of a pattern at level `k`:
+    /// `a_k · Σψ` (ψ is calibrated so that Σψ = 1 ⟺ degradation = a_k).
+    pub fn predicted_degradation(&self, pattern: &QuantPattern, k: usize) -> f64 {
+        self.levels[k] * self.pattern_psi(pattern, k)
+    }
+
+    /// Total output-noise energy of a pattern (for diagnostics).
+    pub fn pattern_noise_energy(&self, pattern: &QuantPattern) -> f64 {
+        let mut total = noise_energy(self.s_x(pattern.partition), pattern.activation_bits as f64);
+        for (i, &b) in pattern.weight_bits.iter().enumerate() {
+            total += noise_energy(self.s_w(i + 1), b as f64);
+        }
+        total
+    }
+
+    /// Structural check against a model descriptor.
+    pub fn validate(&self, model: &ModelSpec) -> Result<()> {
+        let l = model.num_layers();
+        if self.weight.len() != l {
+            return Err(Error::InvalidArg(format!(
+                "calibration has {} weight entries, model '{}' has {l} layers",
+                self.weight.len(),
+                model.name
+            )));
+        }
+        if self.activation.len() != l + 1 {
+            return Err(Error::InvalidArg(format!(
+                "calibration has {} activation entries, expected {}",
+                self.activation.len(),
+                l + 1
+            )));
+        }
+        let nk = self.levels.len();
+        if nk == 0 {
+            return Err(Error::InvalidArg("calibration has no levels".into()));
+        }
+        if self.levels.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(Error::InvalidArg("levels must be strictly ascending".into()));
+        }
+        for (i, c) in self.weight.iter().chain(self.activation.iter()).enumerate() {
+            if c.rho.len() != nk {
+                return Err(Error::InvalidArg(format!("entry {i}: rho count != level count")));
+            }
+            if c.s <= 0.0 || !c.s.is_finite() {
+                return Err(Error::InvalidArg(format!("entry {i}: s must be positive")));
+            }
+            if c.rho.iter().any(|&r| r <= 0.0 || !r.is_finite()) {
+                return Err(Error::InvalidArg(format!("entry {i}: rho must be positive")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Deterministic plausible calibration for descriptor-only experiments
+    /// (ResNet Table IV payload columns, cost-figure simulations) and tests.
+    ///
+    /// Heuristics encoded (matching what real calibrations show):
+    /// * `s_l` grows with the layer's parameter count (more quantized values
+    ///   → more injected energy) and shrinks with depth (noise injected
+    ///   close to the output passes through fewer contractive layers — but
+    ///   the final logits are touchy, so the last layer bumps up again);
+    /// * `ρ(a)` scales linearly with `a` (twice the tolerated degradation ≈
+    ///   twice the tolerable noise energy, the linearity the paper's metric
+    ///   assumes).
+    pub fn synthetic(model: &ModelSpec, levels: &[f64], seed: u64) -> CalibrationTable {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(seed ^ 0x5EED_CA11_B0B0);
+        let l = model.num_layers();
+        let mut weight = Vec::with_capacity(l);
+        for i in 1..=l {
+            let z = model.weight_params(i) as f64;
+            let depth_factor = 1.0 / (1.0 + 0.35 * (i as f64 - 1.0));
+            let last_bump = if i == l { 2.0 } else { 1.0 };
+            let jitter = 0.8 + 0.4 * rng.uniform();
+            // per-parameter unit-range quantization noise ≈ range²/12 · z,
+            // attenuated by the network gain to the output
+            let s = z * (1.0 / 12.0) * depth_factor * last_bump * jitter;
+            let rho = levels.iter().map(|&a| a * 120.0 * (0.9 + 0.2 * rng.uniform())).collect();
+            weight.push(SourceCalib { s, rho });
+        }
+        let mut activation = Vec::with_capacity(l + 1);
+        for i in 0..=l {
+            let z = model.activation_elems(i) as f64;
+            let depth_factor = 1.0 / (1.0 + 0.25 * i as f64);
+            let jitter = 0.8 + 0.4 * rng.uniform();
+            let s = z * (1.0 / 12.0) * depth_factor * jitter;
+            let rho = levels.iter().map(|&a| a * 120.0 * (0.9 + 0.2 * rng.uniform())).collect();
+            activation.push(SourceCalib { s, rho });
+        }
+        CalibrationTable { model: model.name.clone(), levels: levels.to_vec(), weight, activation }
+    }
+
+    // ----- JSON (calibration.json) -----
+
+    pub fn to_json(&self) -> Value {
+        let src = |c: &SourceCalib| {
+            Value::obj([("s", c.s.into()), ("rho", Value::num_arr(&c.rho))])
+        };
+        Value::obj([
+            ("model", self.model.as_str().into()),
+            ("levels", Value::num_arr(&self.levels)),
+            ("weight", Value::Arr(self.weight.iter().map(src).collect())),
+            ("activation", Value::Arr(self.activation.iter().map(src).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<CalibrationTable> {
+        let src = |x: &Value| -> Result<SourceCalib> {
+            Ok(SourceCalib { s: x.req_f64("s")?, rho: x.req_f64_arr("rho")? })
+        };
+        Ok(CalibrationTable {
+            model: v.req_str("model")?.to_string(),
+            levels: v.req_f64_arr("levels")?,
+            weight: v.req_arr("weight")?.iter().map(src).collect::<Result<_>>()?,
+            activation: v.req_arr("activation")?.iter().map(src).collect::<Result<_>>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mlp6;
+
+    const LEVELS: [f64; 5] = [0.0025, 0.005, 0.01, 0.02, 0.05];
+
+    #[test]
+    fn synthetic_validates() {
+        let m = mlp6();
+        let c = CalibrationTable::synthetic(&m, &LEVELS, 1);
+        c.validate(&m).unwrap();
+        assert_eq!(c.num_layers(), 6);
+    }
+
+    #[test]
+    fn synthetic_deterministic() {
+        let m = mlp6();
+        assert_eq!(
+            CalibrationTable::synthetic(&m, &LEVELS, 7),
+            CalibrationTable::synthetic(&m, &LEVELS, 7)
+        );
+        assert_ne!(
+            CalibrationTable::synthetic(&m, &LEVELS, 7),
+            CalibrationTable::synthetic(&m, &LEVELS, 8)
+        );
+    }
+
+    #[test]
+    fn rho_increases_with_level() {
+        let m = mlp6();
+        let c = CalibrationTable::synthetic(&m, &LEVELS, 2);
+        for l in 1..=6 {
+            for k in 1..LEVELS.len() {
+                assert!(c.rho_w(l, k) > c.rho_w(l, k - 1), "rho must grow with tolerance");
+            }
+        }
+    }
+
+    #[test]
+    fn pattern_psi_additive() {
+        let m = mlp6();
+        let c = CalibrationTable::synthetic(&m, &LEVELS, 3);
+        let p2 = QuantPattern {
+            partition: 2,
+            weight_bits: vec![8, 8],
+            activation_bits: 8,
+            accuracy_level: 0.01,
+            predicted_degradation: 0.0,
+        };
+        let manual = c.psi_w(1, 8.0, 2) + c.psi_w(2, 8.0, 2) + c.psi_x(2, 8.0, 2);
+        assert!((c.pattern_psi(&p2, 2) - manual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_bits_less_psi() {
+        let m = mlp6();
+        let c = CalibrationTable::synthetic(&m, &LEVELS, 4);
+        let mk = |b: u8| QuantPattern {
+            partition: 3,
+            weight_bits: vec![b; 3],
+            activation_bits: b,
+            accuracy_level: 0.01,
+            predicted_degradation: 0.0,
+        };
+        assert!(c.pattern_psi(&mk(4), 2) > c.pattern_psi(&mk(8), 2));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = mlp6();
+        let c = CalibrationTable::synthetic(&m, &LEVELS, 5);
+        let v = c.to_json();
+        let text = v.to_string_pretty();
+        let back = CalibrationTable::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        // f64 → shortest-round-trip text → f64 is exact
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn validate_rejects_malformed() {
+        let m = mlp6();
+        let mut c = CalibrationTable::synthetic(&m, &LEVELS, 6);
+        c.weight.pop();
+        assert!(c.validate(&m).is_err());
+
+        let mut c2 = CalibrationTable::synthetic(&m, &LEVELS, 6);
+        c2.levels = vec![0.01, 0.01];
+        assert!(c2.validate(&m).is_err());
+
+        let mut c3 = CalibrationTable::synthetic(&m, &LEVELS, 6);
+        c3.weight[0].s = -1.0;
+        assert!(c3.validate(&m).is_err());
+    }
+}

@@ -1,0 +1,74 @@
+//! Quantization-noise / accuracy-degradation model (paper Eq. 18–22, after
+//! Zhou et al., *Adaptive Quantization for Deep Neural Network*, AAAI'18).
+//!
+//! The model: quantizing layer `l`'s weights at `b_l` bits injects noise of
+//! energy `‖σ_l^w‖² = s_l · 4^{-b_l}` into the network output (Eq. 18);
+//! likewise `s_x · 4^{-b_x}` for the boundary activation (Eq. 19). Each
+//! layer has a *robustness* `ρ_l(a)` — the output-noise energy at which the
+//! model's accuracy degrades by exactly `a` (Eq. 22, measured offline by
+//! noise injection). The degradation measure is `ψ_l = ‖σ_l‖² / ρ_l(a)`
+//! (Eq. 20–21); ψ is additive across layers, so the accuracy constraint of
+//! the joint problem (Eq. 23) is `Σ ψ ≤ 1` — at most the noise budget that
+//! produces degradation `a`.
+//!
+//! `s_l` and `ρ_l(a)` come from the build-time Python calibration pass
+//! (`python/compile/calibrate.py` → `artifacts/calibration.json`); for
+//! descriptor-only experiments [`CalibrationTable::synthetic`] generates a
+//! deterministic plausible table.
+
+mod calibration;
+
+pub use calibration::CalibrationTable;
+
+/// Noise energy injected by quantizing at `bits` with scale `s` (Eq. 18–19):
+/// `‖σ‖² = s · e^{−ln4·b} = s · 4^{−b}`.
+pub fn noise_energy(s: f64, bits: f64) -> f64 {
+    s * (-std::f64::consts::LN_2 * 2.0 * bits).exp()
+}
+
+/// Degradation measure ψ (Eq. 20–21): `ψ = ‖σ‖² / ρ`.
+pub fn psi(s: f64, bits: f64, rho: f64) -> f64 {
+    noise_energy(s, bits) / rho
+}
+
+/// Bits required for a single source to stay within a ψ budget:
+/// smallest `b` with `s·4^{−b}/ρ ≤ budget`.
+pub fn bits_for_psi_budget(s: f64, rho: f64, budget: f64) -> f64 {
+    if budget <= 0.0 || rho <= 0.0 || s <= 0.0 {
+        return f64::INFINITY;
+    }
+    // s·4^{-b} = budget·ρ  ⇒  b = log4(s / (budget·ρ))
+    (s / (budget * rho)).ln() / (std::f64::consts::LN_2 * 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn noise_energy_quarters_per_bit() {
+        // Eq. 18: one extra bit → 4× less noise energy.
+        let e8 = noise_energy(3.0, 8.0);
+        let e9 = noise_energy(3.0, 9.0);
+        assert_close(e8 / e9, 4.0, 1e-9, 1e-12);
+    }
+
+    #[test]
+    fn psi_linear_in_inverse_rho() {
+        assert_close(psi(2.0, 4.0, 0.5), 2.0 * psi(2.0, 4.0, 1.0), 1e-15, 1e-12);
+    }
+
+    #[test]
+    fn bits_budget_inverts_psi() {
+        let (s, rho, budget) = (7.3, 0.21, 0.05);
+        let b = bits_for_psi_budget(s, rho, budget);
+        assert_close(psi(s, b, rho), budget, 1e-12, 1e-9);
+    }
+
+    #[test]
+    fn degenerate_budgets() {
+        assert!(bits_for_psi_budget(1.0, 1.0, 0.0).is_infinite());
+        assert!(bits_for_psi_budget(0.0, 1.0, 0.1).is_infinite());
+    }
+}

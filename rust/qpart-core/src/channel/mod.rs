@@ -1,0 +1,141 @@
+//! Wireless channel model (paper §III-D, Eq. 11–16).
+//!
+//! Channel gain `g = α·h` (Eq. 11) with large-scale fading `α` (path loss +
+//! shadowing) and small-scale fading `h ~ Exp(1)` (frequency-dependent,
+//! unit mean). Received SNR `β = π·g/σ` (Eq. 12); Shannon capacity
+//! `r = B·log2(1 + β)` (Eq. 13). Transmission latency and energy for a
+//! payload of `Z` bits are `T = Z/r` (Eq. 15) and `E = π·Z/r` (Eq. 16).
+//!
+//! The paper's Table II evaluation fixes `r = 200 Mbps`; [`Channel::fixed`]
+//! reproduces that, while [`FadingChannel`] draws a fresh `h` per coherence
+//! period for the dynamic experiments.
+
+use crate::rng::Rng;
+
+/// A (momentarily constant) wireless link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Channel {
+    /// Capacity `r` in bits/second.
+    pub capacity_bps: f64,
+    /// Device transmit power `π` in watts.
+    pub tx_power_w: f64,
+}
+
+impl Channel {
+    /// Fixed-capacity channel (Table II: 200 Mbps, π = 1 W).
+    pub fn fixed(capacity_bps: f64, tx_power_w: f64) -> Channel {
+        Channel { capacity_bps, tx_power_w }
+    }
+
+    /// Channel from the physical model: bandwidth `B`, gain `g`, noise `σ`,
+    /// transmit power `π` (Eq. 12–13).
+    pub fn from_snr(bandwidth_hz: f64, gain: f64, noise_power_w: f64, tx_power_w: f64) -> Channel {
+        let snr = tx_power_w * gain / noise_power_w;
+        Channel { capacity_bps: bandwidth_hz * (1.0 + snr).log2(), tx_power_w }
+    }
+
+    /// Transmission latency for `bits` (Eq. 15).
+    pub fn tx_latency_s(&self, bits: u64) -> f64 {
+        bits as f64 / self.capacity_bps
+    }
+
+    /// Transmission energy for `bits` (Eq. 16): `π · Z / r`.
+    pub fn tx_energy_j(&self, bits: u64) -> f64 {
+        self.tx_power_w * self.tx_latency_s(bits)
+    }
+}
+
+/// A fading link: large-scale gain `α` fixed, small-scale `h ~ Exp(1)`
+/// redrawn each coherence period (Eq. 11).
+#[derive(Debug, Clone)]
+pub struct FadingChannel {
+    pub bandwidth_hz: f64,
+    /// Large-scale fading component α.
+    pub alpha: f64,
+    /// Noise power σ (watts).
+    pub noise_power_w: f64,
+    pub tx_power_w: f64,
+    rng: Rng,
+}
+
+impl FadingChannel {
+    pub fn new(
+        bandwidth_hz: f64,
+        alpha: f64,
+        noise_power_w: f64,
+        tx_power_w: f64,
+        seed: u64,
+    ) -> FadingChannel {
+        FadingChannel { bandwidth_hz, alpha, noise_power_w, tx_power_w, rng: Rng::new(seed) }
+    }
+
+    /// Draw the channel for the next coherence period.
+    pub fn sample(&mut self) -> Channel {
+        let h = self.rng.exponential(1.0); // unit-mean small-scale fading
+        Channel::from_snr(self.bandwidth_hz, self.alpha * h, self.noise_power_w, self.tx_power_w)
+    }
+
+    /// Mean capacity over `n` samples (Monte-Carlo; used by planning when a
+    /// request reports only long-term statistics).
+    pub fn mean_capacity_bps(&mut self, n: usize) -> f64 {
+        let total: f64 = (0..n).map(|_| self.sample().capacity_bps).sum();
+        total / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn fixed_latency_energy_eq15_eq16() {
+        // Table II: 200 Mbps, 1 W. 1 Mbit → 5 ms, 5 mJ.
+        let ch = Channel::fixed(200e6, 1.0);
+        assert_close(ch.tx_latency_s(1_000_000), 0.005, 1e-12, 1e-12);
+        assert_close(ch.tx_energy_j(1_000_000), 0.005, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn shannon_capacity_eq13() {
+        // B=1 MHz, SNR = 3 → r = B·log2(4) = 2 Mbps
+        let ch = Channel::from_snr(1e6, 3.0, 1.0, 1.0);
+        assert_close(ch.capacity_bps, 2e6, 1e-6, 1e-12);
+    }
+
+    #[test]
+    fn capacity_monotone_in_snr() {
+        let lo = Channel::from_snr(1e6, 1.0, 1.0, 1.0);
+        let hi = Channel::from_snr(1e6, 10.0, 1.0, 1.0);
+        assert!(hi.capacity_bps > lo.capacity_bps);
+    }
+
+    #[test]
+    fn fading_unit_mean_gain() {
+        let mut f = FadingChannel::new(1e6, 2.0, 1.0, 1.0, 42);
+        let n = 40_000;
+        let mean_h: f64 =
+            (0..n).map(|_| f.rng.exponential(1.0)).sum::<f64>() / n as f64;
+        assert!((mean_h - 1.0).abs() < 0.02, "mean_h={mean_h}");
+    }
+
+    #[test]
+    fn fading_samples_vary_deterministically() {
+        let mut a = FadingChannel::new(1e6, 1.0, 1.0, 1.0, 7);
+        let mut b = FadingChannel::new(1e6, 1.0, 1.0, 1.0, 7);
+        let sa: Vec<f64> = (0..5).map(|_| a.sample().capacity_bps).collect();
+        let sb: Vec<f64> = (0..5).map(|_| b.sample().capacity_bps).collect();
+        assert_eq!(sa, sb);
+        assert!(sa.windows(2).any(|w| w[0] != w[1]), "fading should vary");
+    }
+
+    #[test]
+    fn mean_capacity_below_awgn_capacity() {
+        // Jensen: E[log2(1+SNR·h)] ≤ log2(1+SNR·E[h])
+        let mut f = FadingChannel::new(1e6, 5.0, 1.0, 1.0, 9);
+        let mean = f.mean_capacity_bps(20_000);
+        let awgn = Channel::from_snr(1e6, 5.0, 1.0, 1.0).capacity_bps;
+        assert!(mean < awgn, "mean={mean} awgn={awgn}");
+        assert!(mean > 0.5 * awgn);
+    }
+}

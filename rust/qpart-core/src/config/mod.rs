@@ -1,0 +1,274 @@
+//! Layered configuration system.
+//!
+//! QPART binaries read JSON config files (there is no TOML crate offline;
+//! JSON keeps one parser for config + manifests + wire). Configuration is
+//! resolved in layers, later layers overriding earlier ones key-by-key:
+//!
+//! 1. built-in defaults ([`Config::default_value`]),
+//! 2. a config file (`--config path.json`),
+//! 3. `--set dotted.path=value` CLI overrides.
+//!
+//! [`Config`] then exposes typed views (`system()`, `serving()`) consumed
+//! by the coordinator and the simulator.
+
+use crate::channel::Channel;
+use crate::cost::{CostModel, DeviceProfile, ServerProfile, TradeoffWeights};
+use crate::error::{Error, Result};
+use crate::json::{parse, Value};
+use crate::optimizer::BitBounds;
+
+/// Merged configuration tree.
+#[derive(Debug, Clone)]
+pub struct Config {
+    root: Value,
+}
+
+/// System-level (paper Table II) parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SystemConfig {
+    pub device: DeviceProfile,
+    pub server: ServerProfile,
+    pub weights: TradeoffWeights,
+    pub channel: Channel,
+    pub bounds: BitBounds,
+}
+
+impl SystemConfig {
+    pub fn cost_model(&self) -> CostModel {
+        CostModel {
+            device: self.device,
+            server: self.server,
+            channel: self.channel,
+            weights: self.weights,
+        }
+    }
+}
+
+/// Serving-stack parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    /// TCP listen address, e.g. "127.0.0.1:7878".
+    pub listen: String,
+    /// Worker threads handling requests.
+    pub workers: usize,
+    /// Maximum queued requests before admission control sheds load.
+    pub queue_capacity: usize,
+    /// Artifact bundle directory.
+    pub artifacts_dir: String,
+    /// Default accuracy levels when no calibration file provides them.
+    pub accuracy_levels: Vec<f64>,
+}
+
+impl Config {
+    /// Built-in defaults (paper Table II + sensible serving values).
+    pub fn default_value() -> Value {
+        Value::obj([
+            (
+                "system",
+                Value::obj([
+                    ("device", DeviceProfile::paper_default().to_json()),
+                    ("server", ServerProfile::paper_default().to_json()),
+                    ("weights", TradeoffWeights::paper_default().to_json()),
+                    (
+                        "channel",
+                        Value::obj([
+                            ("capacity_bps", 200e6.into()),
+                            ("tx_power_w", 1.0.into()),
+                        ]),
+                    ),
+                    ("min_bits", 2u64.into()),
+                    ("max_bits", 16u64.into()),
+                ]),
+            ),
+            (
+                "serving",
+                Value::obj([
+                    ("listen", "127.0.0.1:7878".into()),
+                    ("workers", 4u64.into()),
+                    ("queue_capacity", 1024u64.into()),
+                    ("artifacts_dir", "artifacts".into()),
+                    (
+                        "accuracy_levels",
+                        Value::num_arr(&[0.0025, 0.005, 0.01, 0.02, 0.05]),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    /// Start from defaults only.
+    pub fn defaults() -> Config {
+        Config { root: Self::default_value() }
+    }
+
+    /// Defaults + a JSON file layer.
+    pub fn from_file(path: &str) -> Result<Config> {
+        let mut cfg = Config::defaults();
+        let text = std::fs::read_to_string(path)?;
+        let layer = parse(&text)?;
+        cfg.merge(&layer);
+        Ok(cfg)
+    }
+
+    /// Defaults + an in-memory layer (tests).
+    pub fn from_value(layer: &Value) -> Config {
+        let mut cfg = Config::defaults();
+        cfg.merge(layer);
+        cfg
+    }
+
+    /// Deep-merge `layer` over the current tree: objects merge recursively,
+    /// everything else replaces.
+    pub fn merge(&mut self, layer: &Value) {
+        fn merge_into(dst: &mut Value, src: &Value) {
+            match (dst, src) {
+                (Value::Obj(d), Value::Obj(s)) => {
+                    for (k, sv) in s {
+                        if let Some(slot) = d.iter_mut().find(|(dk, _)| dk == k) {
+                            merge_into(&mut slot.1, sv);
+                        } else {
+                            d.push((k.clone(), sv.clone()));
+                        }
+                    }
+                }
+                (d, s) => *d = s.clone(),
+            }
+        }
+        merge_into(&mut self.root, layer);
+    }
+
+    /// Apply a `dotted.path=value` override (value parsed as JSON, falling
+    /// back to a bare string).
+    pub fn set_override(&mut self, spec: &str) -> Result<()> {
+        let (path, raw) = spec
+            .split_once('=')
+            .ok_or_else(|| Error::InvalidArg(format!("override '{spec}' must be path=value")))?;
+        let val = parse(raw).unwrap_or_else(|_| Value::Str(raw.to_string()));
+        let mut layer = val;
+        for seg in path.split('.').rev() {
+            if seg.is_empty() {
+                return Err(Error::InvalidArg(format!("empty path segment in '{spec}'")));
+            }
+            layer = Value::Obj(vec![(seg.to_string(), layer)]);
+        }
+        self.merge(&layer);
+        Ok(())
+    }
+
+    /// Raw tree access.
+    pub fn root(&self) -> &Value {
+        &self.root
+    }
+
+    /// Dotted-path lookup.
+    pub fn lookup(&self, path: &str) -> Option<&Value> {
+        let mut cur = &self.root;
+        for seg in path.split('.') {
+            cur = cur.get(seg)?;
+        }
+        Some(cur)
+    }
+
+    /// Typed system view.
+    pub fn system(&self) -> Result<SystemConfig> {
+        let sys = self.root.req("system")?;
+        let device = DeviceProfile::from_json(sys.req("device")?)?;
+        let server = ServerProfile::from_json(sys.req("server")?)?;
+        let weights = TradeoffWeights::from_json(sys.req("weights")?)?;
+        let ch = sys.req("channel")?;
+        let channel = Channel::fixed(
+            ch.opt_f64("capacity_bps", 200e6),
+            ch.opt_f64("tx_power_w", 1.0),
+        );
+        let min_bits = sys.opt_f64("min_bits", 2.0) as u8;
+        let max_bits = sys.opt_f64("max_bits", 16.0) as u8;
+        if min_bits == 0 || max_bits > 24 || min_bits > max_bits {
+            return Err(Error::InvalidArg(format!(
+                "invalid bit bounds [{min_bits}, {max_bits}]"
+            )));
+        }
+        Ok(SystemConfig {
+            device,
+            server,
+            weights,
+            channel,
+            bounds: BitBounds { min_bits, max_bits },
+        })
+    }
+
+    /// Typed serving view.
+    pub fn serving(&self) -> Result<ServingConfig> {
+        let srv = self.root.req("serving")?;
+        Ok(ServingConfig {
+            listen: srv.opt_str("listen", "127.0.0.1:7878").to_string(),
+            workers: srv.opt_f64("workers", 4.0) as usize,
+            queue_capacity: srv.opt_f64("queue_capacity", 1024.0) as usize,
+            artifacts_dir: srv.opt_str("artifacts_dir", "artifacts").to_string(),
+            accuracy_levels: srv
+                .req_f64_arr("accuracy_levels")
+                .unwrap_or_else(|_| vec![0.0025, 0.005, 0.01, 0.02, 0.05]),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_parse_to_paper_table2() {
+        let cfg = Config::defaults();
+        let sys = cfg.system().unwrap();
+        assert_eq!(sys.device, DeviceProfile::paper_default());
+        assert_eq!(sys.server, ServerProfile::paper_default());
+        assert_eq!(sys.channel.capacity_bps, 200e6);
+        assert_eq!(sys.bounds, BitBounds::default());
+        let srv = cfg.serving().unwrap();
+        assert_eq!(srv.accuracy_levels.len(), 5);
+    }
+
+    #[test]
+    fn file_layer_overrides() {
+        let layer = parse(r#"{"system": {"device": {"clock_hz": 1e9}}}"#).unwrap();
+        let cfg = Config::from_value(&layer);
+        let sys = cfg.system().unwrap();
+        assert_eq!(sys.device.clock_hz, 1e9);
+        // untouched keys keep defaults
+        assert_eq!(sys.device.cycles_per_mac, 5.0);
+        assert_eq!(sys.server.clock_hz, 3e9);
+    }
+
+    #[test]
+    fn dotted_overrides() {
+        let mut cfg = Config::defaults();
+        cfg.set_override("system.channel.capacity_bps=1e6").unwrap();
+        cfg.set_override("serving.listen=0.0.0.0:9000").unwrap();
+        cfg.set_override("serving.workers=8").unwrap();
+        assert_eq!(cfg.system().unwrap().channel.capacity_bps, 1e6);
+        let srv = cfg.serving().unwrap();
+        assert_eq!(srv.listen, "0.0.0.0:9000");
+        assert_eq!(srv.workers, 8);
+    }
+
+    #[test]
+    fn bad_overrides_rejected() {
+        let mut cfg = Config::defaults();
+        assert!(cfg.set_override("no_equals_sign").is_err());
+        assert!(cfg.set_override("a..b=1").is_err());
+    }
+
+    #[test]
+    fn bad_bounds_rejected() {
+        let mut cfg = Config::defaults();
+        cfg.set_override("system.min_bits=20").unwrap();
+        cfg.set_override("system.max_bits=4").unwrap();
+        assert!(cfg.system().is_err());
+    }
+
+    #[test]
+    fn lookup_paths() {
+        let cfg = Config::defaults();
+        assert!(cfg.lookup("system.device.kappa").is_some());
+        assert!(cfg.lookup("system.nope").is_none());
+    }
+}

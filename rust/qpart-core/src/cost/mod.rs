@@ -1,0 +1,352 @@
+//! Cost model: device/server compute time and energy, server monetary cost,
+//! the Eq. 17 objective and its Eq. 23 per-MAC/per-bit coefficients.
+//!
+//! * `T_local = O1·γ_local/f_local` (Eq. 5)
+//! * `E_local = κ·f_local²·O1·γ_local` (Eq. 6)
+//! * `T_server = O2·γ_server/f_server` (Eq. 7)
+//! * `C = O2·γ_server·ζ/f_server` (Eq. 8)
+//! * `J = ω(T_local+T_tran+T_server) + τ(E_local+E_tran) + η·C` (Eq. 17)
+//! * `ξ, δ, ε` coefficients (Eq. 24–26) so that
+//!   `J = ξ·O1 + δ·O2 + ε·Z` — linear in MACs and payload bits.
+
+use crate::channel::Channel;
+use crate::json::Value;
+use crate::model::ModelSpec;
+use crate::error::Result;
+
+/// Edge-device execution profile (paper Table II symbols).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    /// Clock rate `f_local` in Hz.
+    pub clock_hz: f64,
+    /// Average clock cycles per MAC, `γ_local`.
+    pub cycles_per_mac: f64,
+    /// Energy-efficiency parameter `κ` (J/cycle/Hz² — energy per cycle is
+    /// `κ·f²`).
+    pub kappa: f64,
+    /// Device memory capacity in bits (constraint on the shipped segment).
+    pub memory_bits: u64,
+}
+
+impl DeviceProfile {
+    /// Paper Table II mobile device: 200 MHz, γ=5, κ=3e-27.
+    pub fn paper_default() -> DeviceProfile {
+        DeviceProfile {
+            clock_hz: 200e6,
+            cycles_per_mac: 5.0,
+            kappa: 3e-27,
+            memory_bits: 256 * 1024 * 1024 * 8, // 256 MiB
+        }
+    }
+
+    /// Local inference time for `macs` (Eq. 5).
+    pub fn compute_time_s(&self, macs: u64) -> f64 {
+        macs as f64 * self.cycles_per_mac / self.clock_hz
+    }
+
+    /// Local inference energy for `macs` (Eq. 6): `κ·f²·O·γ`.
+    pub fn compute_energy_j(&self, macs: u64) -> f64 {
+        self.kappa * self.clock_hz * self.clock_hz * macs as f64 * self.cycles_per_mac
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("clock_hz", self.clock_hz.into()),
+            ("cycles_per_mac", self.cycles_per_mac.into()),
+            ("kappa", self.kappa.into()),
+            ("memory_bits", self.memory_bits.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<DeviceProfile> {
+        let d = DeviceProfile::paper_default();
+        Ok(DeviceProfile {
+            clock_hz: v.opt_f64("clock_hz", d.clock_hz),
+            cycles_per_mac: v.opt_f64("cycles_per_mac", d.cycles_per_mac),
+            kappa: v.opt_f64("kappa", d.kappa),
+            memory_bits: v.opt_f64("memory_bits", d.memory_bits as f64) as u64,
+        })
+    }
+}
+
+/// Server execution profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServerProfile {
+    /// Clock rate `f_server` in Hz.
+    pub clock_hz: f64,
+    /// Average clock cycles per MAC, `γ_server`.
+    pub cycles_per_mac: f64,
+    /// Price of server compute, `ζ` (cost units per second, Eq. 8).
+    pub price_per_s: f64,
+    /// Server energy-efficiency `η_m` (appears in Eq. 25; the Eq. 17
+    /// objective excludes server energy — kept for the δ coefficient).
+    pub eta_m: f64,
+}
+
+impl ServerProfile {
+    /// Paper Table II server: 3 GHz, γ=1.25 ("5/4"), η_m=3.75e-27.
+    pub fn paper_default() -> ServerProfile {
+        ServerProfile { clock_hz: 3e9, cycles_per_mac: 1.25, price_per_s: 0.01, eta_m: 3.75e-27 }
+    }
+
+    /// Server inference time for `macs` (Eq. 7).
+    pub fn compute_time_s(&self, macs: u64) -> f64 {
+        macs as f64 * self.cycles_per_mac / self.clock_hz
+    }
+
+    /// Monetary cost of running `macs` (Eq. 8).
+    pub fn compute_cost(&self, macs: u64) -> f64 {
+        self.compute_time_s(macs) * self.price_per_s
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("clock_hz", self.clock_hz.into()),
+            ("cycles_per_mac", self.cycles_per_mac.into()),
+            ("price_per_s", self.price_per_s.into()),
+            ("eta_m", self.eta_m.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ServerProfile> {
+        let d = ServerProfile::paper_default();
+        Ok(ServerProfile {
+            clock_hz: v.opt_f64("clock_hz", d.clock_hz),
+            cycles_per_mac: v.opt_f64("cycles_per_mac", d.cycles_per_mac),
+            price_per_s: v.opt_f64("price_per_s", d.price_per_s),
+            eta_m: v.opt_f64("eta_m", d.eta_m),
+        })
+    }
+}
+
+/// Significance weights of Eq. 17 (`ω` time, `τ` energy, `η` cost).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TradeoffWeights {
+    pub omega: f64,
+    pub tau: f64,
+    pub eta: f64,
+}
+
+impl TradeoffWeights {
+    /// Paper Table II: ω = τ = 1 (η unspecified; 1 keeps cost visible).
+    pub fn paper_default() -> TradeoffWeights {
+        TradeoffWeights { omega: 1.0, tau: 1.0, eta: 1.0 }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("omega", self.omega.into()),
+            ("tau", self.tau.into()),
+            ("eta", self.eta.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<TradeoffWeights> {
+        let d = TradeoffWeights::paper_default();
+        Ok(TradeoffWeights {
+            omega: v.opt_f64("omega", d.omega),
+            tau: v.opt_f64("tau", d.tau),
+            eta: v.opt_f64("eta", d.eta),
+        })
+    }
+}
+
+/// Full cost context for one request: device, server, channel, weights.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    pub device: DeviceProfile,
+    pub server: ServerProfile,
+    pub channel: Channel,
+    pub weights: TradeoffWeights,
+}
+
+/// Per-component breakdown of one evaluation of Eq. 17.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostBreakdown {
+    pub t_local_s: f64,
+    pub t_server_s: f64,
+    pub t_tran_s: f64,
+    pub e_local_j: f64,
+    pub e_tran_j: f64,
+    pub server_cost: f64,
+    /// The Eq. 17 objective value.
+    pub objective: f64,
+}
+
+impl CostBreakdown {
+    /// End-to-end latency (the time part of the objective).
+    pub fn total_time_s(&self) -> f64 {
+        self.t_local_s + self.t_server_s + self.t_tran_s
+    }
+
+    /// Device energy.
+    pub fn total_energy_j(&self) -> f64 {
+        self.e_local_j + self.e_tran_j
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("t_local_s", self.t_local_s.into()),
+            ("t_server_s", self.t_server_s.into()),
+            ("t_tran_s", self.t_tran_s.into()),
+            ("e_local_j", self.e_local_j.into()),
+            ("e_tran_j", self.e_tran_j.into()),
+            ("server_cost", self.server_cost.into()),
+            ("objective", self.objective.into()),
+        ])
+    }
+}
+
+impl CostModel {
+    /// Paper Table II configuration end to end.
+    pub fn paper_default() -> CostModel {
+        CostModel {
+            device: DeviceProfile::paper_default(),
+            server: ServerProfile::paper_default(),
+            channel: Channel::fixed(200e6, 1.0),
+            weights: TradeoffWeights::paper_default(),
+        }
+    }
+
+    /// Per-device-MAC coefficient ξ (Eq. 24):
+    /// `ξ = ω·γ_l/f_l + τ·γ_l·κ·f_l²`.
+    pub fn xi(&self) -> f64 {
+        let d = &self.device;
+        self.weights.omega * d.cycles_per_mac / d.clock_hz
+            + self.weights.tau * d.cycles_per_mac * d.kappa * d.clock_hz * d.clock_hz
+    }
+
+    /// Per-server-MAC coefficient δ (Eq. 25):
+    /// `δ = (ω + η·ζ)·γ_s/f_s` (server energy excluded from Eq. 17).
+    pub fn delta(&self) -> f64 {
+        let s = &self.server;
+        (self.weights.omega + self.weights.eta * s.price_per_s) * s.cycles_per_mac / s.clock_hz
+    }
+
+    /// Per-payload-bit coefficient ε (Eq. 26): `ε = (ω + π·τ)/r`.
+    pub fn epsilon(&self) -> f64 {
+        (self.weights.omega + self.channel.tx_power_w * self.weights.tau)
+            / self.channel.capacity_bps
+    }
+
+    /// Evaluate Eq. 17 for a partition `p` and payload of `payload_bits`.
+    pub fn evaluate(&self, model: &ModelSpec, p: usize, payload_bits: u64) -> CostBreakdown {
+        let o1 = model.device_macs(p);
+        let o2 = model.server_macs(p);
+        let t_local_s = self.device.compute_time_s(o1);
+        let t_server_s = self.server.compute_time_s(o2);
+        let t_tran_s = self.channel.tx_latency_s(payload_bits);
+        let e_local_j = self.device.compute_energy_j(o1);
+        let e_tran_j = self.channel.tx_energy_j(payload_bits);
+        let server_cost = self.server.compute_cost(o2);
+        let objective = self.weights.omega * (t_local_s + t_server_s + t_tran_s)
+            + self.weights.tau * (e_local_j + e_tran_j)
+            + self.weights.eta * server_cost;
+        CostBreakdown { t_local_s, t_server_s, t_tran_s, e_local_j, e_tran_j, server_cost, objective }
+    }
+
+    /// Whether a segment of `segment_bits` fits the device memory.
+    pub fn fits_memory(&self, segment_bits: u64) -> bool {
+        segment_bits <= self.device.memory_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mlp6;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn eq5_eq6_local() {
+        let d = DeviceProfile::paper_default();
+        // 1e6 MACs at γ=5, 200 MHz → 25 ms
+        assert_close(d.compute_time_s(1_000_000), 0.025, 1e-12, 1e-12);
+        // E = κ f² O γ = 3e-27 · 4e16 · 1e6 · 5 = 6e-4 J
+        assert_close(d.compute_energy_j(1_000_000), 6e-4, 1e-12, 1e-9);
+    }
+
+    #[test]
+    fn eq7_eq8_server() {
+        let s = ServerProfile::paper_default();
+        // 3e9 Hz, γ=1.25: 3e9 MACs → 1.25 s; cost = 1.25·ζ
+        assert_close(s.compute_time_s(3_000_000_000), 1.25, 1e-12, 1e-12);
+        assert_close(s.compute_cost(3_000_000_000), 1.25 * 0.01, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn objective_linear_decomposition_eq23() {
+        // J must equal ξ·O1 + δ·O2 + ε·Z exactly (that is Eq. 23's point).
+        let cm = CostModel::paper_default();
+        let m = mlp6();
+        for p in 0..=m.num_layers() {
+            let z = m.payload_bits(p, &vec![8u8; p], 8);
+            let b = cm.evaluate(&m, p, z);
+            let linear = cm.xi() * m.device_macs(p) as f64
+                + cm.delta() * m.server_macs(p) as f64
+                + cm.epsilon() * z as f64;
+            assert_close(b.objective, linear, 1e-15, 1e-9);
+        }
+    }
+
+    #[test]
+    fn weights_steer_objective() {
+        let m = mlp6();
+        let mut latency_first = CostModel::paper_default();
+        latency_first.weights = TradeoffWeights { omega: 10.0, tau: 0.0, eta: 0.0 };
+        let mut energy_first = CostModel::paper_default();
+        energy_first.weights = TradeoffWeights { omega: 0.0, tau: 10.0, eta: 0.0 };
+        let z = m.payload_bits(3, &[8, 8, 8], 8);
+        let bl = latency_first.evaluate(&m, 3, z);
+        let be = energy_first.evaluate(&m, 3, z);
+        assert_close(bl.objective, 10.0 * bl.total_time_s(), 1e-15, 1e-12);
+        assert_close(be.objective, 10.0 * be.total_energy_j(), 1e-15, 1e-12);
+    }
+
+    #[test]
+    fn breakdown_components_nonnegative() {
+        let cm = CostModel::paper_default();
+        let m = mlp6();
+        let b = cm.evaluate(&m, 2, m.payload_bits(2, &[6, 6], 6));
+        for v in [b.t_local_s, b.t_server_s, b.t_tran_s, b.e_local_j, b.e_tran_j, b.server_cost] {
+            assert!(v >= 0.0);
+        }
+        assert!(b.objective > 0.0);
+    }
+
+    #[test]
+    fn server_cost_decreases_with_p() {
+        // Fig. 5's third panel: more local work → less server cost.
+        let cm = CostModel::paper_default();
+        let m = mlp6();
+        let mut prev = f64::INFINITY;
+        for p in 0..=m.num_layers() {
+            let b = cm.evaluate(&m, p, 0);
+            assert!(b.server_cost <= prev);
+            prev = b.server_cost;
+        }
+    }
+
+    #[test]
+    fn profiles_json_roundtrip() {
+        let d = DeviceProfile::paper_default();
+        assert_eq!(DeviceProfile::from_json(&d.to_json()).unwrap(), d);
+        let s = ServerProfile::paper_default();
+        assert_eq!(ServerProfile::from_json(&s.to_json()).unwrap(), s);
+        let w = TradeoffWeights::paper_default();
+        assert_eq!(TradeoffWeights::from_json(&w.to_json()).unwrap(), w);
+        // defaults fill missing fields
+        let partial = crate::json::parse(r#"{"clock_hz": 1e9}"#).unwrap();
+        let dp = DeviceProfile::from_json(&partial).unwrap();
+        assert_eq!(dp.clock_hz, 1e9);
+        assert_eq!(dp.cycles_per_mac, d.cycles_per_mac);
+    }
+
+    #[test]
+    fn memory_constraint() {
+        let mut cm = CostModel::paper_default();
+        cm.device.memory_bits = 1000;
+        assert!(cm.fits_memory(1000));
+        assert!(!cm.fits_memory(1001));
+    }
+}

@@ -1,0 +1,48 @@
+//! Crate-wide error type.
+
+/// Errors produced by qpart-core.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// JSON syntax or structure error, with byte offset where available.
+    #[error("json error at offset {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// A JSON document was valid but missing a required field / wrong type.
+    #[error("schema error at {path}: {msg}")]
+    Schema { path: String, msg: String },
+
+    /// Tensor-file (.qt) format violation.
+    #[error("tensor format error: {0}")]
+    TensorFormat(String),
+
+    /// Shape mismatch in tensor or model operations.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Invalid argument to a public API.
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    /// Optimization problem is infeasible for the given constraints
+    /// (e.g. accuracy budget unreachable even at the maximum bit-width).
+    #[error("infeasible: {0}")]
+    Infeasible(String),
+
+    /// Referenced model / layer / pattern does not exist.
+    #[error("not found: {0}")]
+    NotFound(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Convenience alias used across qpart crates.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper for schema errors.
+    pub fn schema(path: impl Into<String>, msg: impl Into<String>) -> Self {
+        Error::Schema { path: path.into(), msg: msg.into() }
+    }
+}

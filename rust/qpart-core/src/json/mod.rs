@@ -1,0 +1,289 @@
+//! Minimal, dependency-free JSON: value type, recursive-descent parser,
+//! serializer, and typed accessors.
+//!
+//! This build runs fully offline (no serde), so QPART carries its own JSON
+//! implementation. It is used for the artifact manifest, the calibration
+//! table, the layered config system, and the TCP wire protocol.
+//!
+//! Design notes:
+//! * Numbers are kept as `f64` (adequate for every QPART document; integers
+//!   up to 2^53 round-trip exactly).
+//! * Object key order is preserved (`Vec<(String, Value)>`) so serialized
+//!   documents are deterministic and diffable.
+//! * The parser enforces a recursion-depth limit so malformed/hostile input
+//!   cannot overflow the stack.
+
+mod parse;
+mod ser;
+
+pub use parse::parse;
+
+use crate::error::{Error, Result};
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    /// Insertion-ordered object.
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Serialize compactly (no whitespace).
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        ser::write_value(self, &mut out, None, 0);
+        out
+    }
+
+    /// Serialize with 2-space indentation.
+    pub fn to_string_pretty(&self) -> String {
+        let mut out = String::new();
+        ser::write_value(self, &mut out, Some(2), 0);
+        out
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Integer view of a number; `None` if non-integral or out of i64 range.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Num(n) if n.fract() == 0.0 && n.abs() <= 9.007_199_254_740_992e15 => {
+                Some(*n as i64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Obj(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Array element lookup.
+    pub fn at(&self, idx: usize) -> Option<&Value> {
+        match self {
+            Value::Arr(v) => v.get(idx),
+            _ => None,
+        }
+    }
+
+    // ----- required-field accessors (schema errors with a path) -----
+
+    /// Required object field.
+    pub fn req(&self, key: &str) -> Result<&Value> {
+        self.get(key)
+            .ok_or_else(|| Error::schema(key, "missing required field"))
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<&str> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| Error::schema(key, "expected string"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| Error::schema(key, "expected number"))
+    }
+
+    pub fn req_u64(&self, key: &str) -> Result<u64> {
+        let v = self
+            .req(key)?
+            .as_i64()
+            .ok_or_else(|| Error::schema(key, "expected integer"))?;
+        u64::try_from(v).map_err(|_| Error::schema(key, "expected non-negative integer"))
+    }
+
+    pub fn req_usize(&self, key: &str) -> Result<usize> {
+        Ok(self.req_u64(key)? as usize)
+    }
+
+    pub fn req_arr(&self, key: &str) -> Result<&[Value]> {
+        self.req(key)?
+            .as_arr()
+            .ok_or_else(|| Error::schema(key, "expected array"))
+    }
+
+    pub fn req_obj(&self, key: &str) -> Result<&[(String, Value)]> {
+        self.req(key)?
+            .as_obj()
+            .ok_or_else(|| Error::schema(key, "expected object"))
+    }
+
+    /// Required array of numbers.
+    pub fn req_f64_arr(&self, key: &str) -> Result<Vec<f64>> {
+        self.req_arr(key)?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .ok_or_else(|| Error::schema(key, "expected array of numbers"))
+            })
+            .collect()
+    }
+
+    /// Optional field with default.
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn opt_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn opt_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    // ----- builders -----
+
+    /// Builder for objects: `Value::obj([("a", 1.0.into()), ...])`.
+    pub fn obj<I>(fields: I) -> Value
+    where
+        I: IntoIterator<Item = (&'static str, Value)>,
+    {
+        Value::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Builder for arrays from an iterator of values.
+    pub fn arr<I>(items: I) -> Value
+    where
+        I: IntoIterator<Item = Value>,
+    {
+        Value::Arr(items.into_iter().collect())
+    }
+
+    /// Array of numbers from an f64 slice.
+    pub fn num_arr(xs: &[f64]) -> Value {
+        Value::Arr(xs.iter().map(|&x| Value::Num(x)).collect())
+    }
+
+    /// In-place object field insertion (replaces existing key).
+    pub fn set(&mut self, key: &str, val: Value) {
+        if let Value::Obj(fields) = self {
+            if let Some(slot) = fields.iter_mut().find(|(k, _)| k == key) {
+                slot.1 = val;
+            } else {
+                fields.push((key.to_string(), val));
+            }
+        }
+    }
+}
+
+impl From<f64> for Value {
+    fn from(x: f64) -> Self {
+        Value::Num(x)
+    }
+}
+impl From<usize> for Value {
+    fn from(x: usize) -> Self {
+        Value::Num(x as f64)
+    }
+}
+impl From<u64> for Value {
+    fn from(x: u64) -> Self {
+        Value::Num(x as f64)
+    }
+}
+impl From<i64> for Value {
+    fn from(x: i64) -> Self {
+        Value::Num(x as f64)
+    }
+}
+impl From<u32> for Value {
+    fn from(x: u32) -> Self {
+        Value::Num(x as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(x: bool) -> Self {
+        Value::Bool(x)
+    }
+}
+impl From<&str> for Value {
+    fn from(x: &str) -> Self {
+        Value::Str(x.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(x: String) -> Self {
+        Value::Str(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"a": 1, "b": [true, null, "x"], "c": {"d": 2.5}}"#).unwrap();
+        assert_eq!(v.req_f64("a").unwrap(), 1.0);
+        assert_eq!(v.get("b").unwrap().at(0).unwrap().as_bool(), Some(true));
+        assert!(v.get("b").unwrap().at(1).unwrap().is_null());
+        assert_eq!(v.get("c").unwrap().req_f64("d").unwrap(), 2.5);
+        assert!(v.req("zz").is_err());
+        assert!(v.req_str("a").is_err());
+    }
+
+    #[test]
+    fn set_replaces_and_appends() {
+        let mut v = Value::obj([("a", 1.0.into())]);
+        v.set("a", 2.0.into());
+        v.set("b", "x".into());
+        assert_eq!(v.req_f64("a").unwrap(), 2.0);
+        assert_eq!(v.req_str("b").unwrap(), "x");
+    }
+
+    #[test]
+    fn i64_boundaries() {
+        assert_eq!(Value::Num(3.0).as_i64(), Some(3));
+        assert_eq!(Value::Num(3.5).as_i64(), None);
+        assert_eq!(Value::Num(-7.0).as_i64(), Some(-7));
+    }
+}

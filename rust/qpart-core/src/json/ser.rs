@@ -1,0 +1,138 @@
+//! JSON serializer: compact or pretty, deterministic (preserves object
+//! insertion order), shortest-round-trip float formatting.
+
+use super::Value;
+
+/// Append `v` to `out`. `indent = Some(n)` pretty-prints with `n` spaces.
+pub(super) fn write_value(v: &Value, out: &mut String, indent: Option<usize>, level: usize) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Num(n) => write_num(*n, out),
+        Value::Str(s) => write_str(s, out),
+        Value::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, level + 1);
+                write_value(item, out, indent, level + 1);
+            }
+            newline_indent(out, indent, level);
+            out.push(']');
+        }
+        Value::Obj(fields) => {
+            if fields.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, val)) in fields.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, level + 1);
+                write_str(k, out);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(val, out, indent, level + 1);
+            }
+            newline_indent(out, indent, level);
+            out.push('}');
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, level: usize) {
+    if let Some(n) = indent {
+        out.push('\n');
+        for _ in 0..n * level {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_num(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        // JSON has no NaN/Inf; emit null like most tolerant encoders.
+        out.push_str("null");
+        return;
+    }
+    if n == n.trunc() && n.abs() < 1e15 {
+        // Integral values print without a fractional part.
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        // `{}` on f64 is Rust's shortest round-trip formatting.
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{parse, Value};
+
+    #[test]
+    fn roundtrip_compact() {
+        let src = r#"{"a":[1,2.5,-3],"b":{"c":"x\ny","d":[true,false,null]},"e":1e300}"#;
+        let v = parse(src).unwrap();
+        let out = v.to_string_compact();
+        assert_eq!(parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn integral_floats_compact() {
+        assert_eq!(Value::Num(3.0).to_string_compact(), "3");
+        assert_eq!(Value::Num(-0.5).to_string_compact(), "-0.5");
+    }
+
+    #[test]
+    fn pretty_parses_back() {
+        let v = Value::obj([
+            ("x", Value::num_arr(&[1.0, 2.0])),
+            ("y", Value::obj([("z", Value::Null)])),
+        ]);
+        let pretty = v.to_string_pretty();
+        assert!(pretty.contains('\n'));
+        assert_eq!(parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        let v = Value::Str("\u{0001}tab\there".into());
+        let s = v.to_string_compact();
+        assert!(s.contains("\\u0001"));
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn nonfinite_to_null() {
+        assert_eq!(Value::Num(f64::NAN).to_string_compact(), "null");
+        assert_eq!(Value::Num(f64::INFINITY).to_string_compact(), "null");
+    }
+}

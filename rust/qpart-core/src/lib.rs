@@ -1,0 +1,40 @@
+//! # qpart-core
+//!
+//! Core algorithms and models of the QPART inference-serving system
+//! (Li et al., *QPART: Adaptive Model Quantization and Dynamic Workload
+//! Balancing for Accuracy-aware Edge Inference*, CS.DC 2025).
+//!
+//! This crate is pure Rust (no PJRT, no network) and holds:
+//!
+//! * [`quant`] — the uniform asymmetric quantizer (paper Eq. 9–10),
+//!   arbitrary-bit-width bit-packing for the simulated wire, and quantization
+//!   patterns `(b, p)`.
+//! * [`accuracy`] — the quantization-noise / accuracy-degradation model
+//!   (Eq. 18–22) and calibration tables produced by the build-time Python
+//!   calibration pass.
+//! * [`model`] — layer/model descriptors with MAC and size accounting
+//!   (Eq. 1–4, 14) and the built-in model zoo.
+//! * [`cost`] — device/server/transmission cost models (Eq. 5–8, 24–26) and
+//!   the Eq. 17 objective.
+//! * [`channel`] — the wireless channel model (Eq. 11–16).
+//! * [`optimizer`] — the closed-form bit-width solver (Eq. 27/40), the
+//!   offline pattern-generation algorithm (paper Algorithm 1) and the online
+//!   serving algorithm (paper Algorithm 2).
+//! * [`json`], [`config`], [`rng`], [`tensor`], [`testing`] — first-party
+//!   substrates (this build is fully offline; serde/proptest/rand are not
+//!   available, so the repo carries its own).
+
+pub mod accuracy;
+pub mod channel;
+pub mod config;
+pub mod cost;
+pub mod error;
+pub mod json;
+pub mod model;
+pub mod optimizer;
+pub mod quant;
+pub mod rng;
+pub mod tensor;
+pub mod testing;
+
+pub use error::{Error, Result};

@@ -1,0 +1,13 @@
+//! Model descriptors: layers, MAC counts (paper Eq. 1–2), segment costs
+//! (Eq. 3–4), parameter/activation sizes, and communication payload (Eq. 14).
+//!
+//! A [`ModelSpec`] is the static description the optimizer works on; the
+//! actual weights live in the artifact bundle and are only needed on the
+//! serving path. Descriptors therefore also cover models we do not execute
+//! (ResNet18/34 for Table IV's payload columns).
+
+mod spec;
+mod zoo;
+
+pub use spec::{LayerKind, LayerSpec, ModelSpec};
+pub use zoo::{builtin, builtin_names, edgecnn, mlp6, resnet_descriptor, tinyresnet};

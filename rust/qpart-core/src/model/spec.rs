@@ -1,0 +1,439 @@
+//! Layer and model specifications.
+//!
+//! Conventions (fixed across the whole repo, see DESIGN.md §1):
+//! * layers are indexed `1..=L` in paper notation; Rust slices use `0..L`
+//!   with `layer l` at index `l-1`;
+//! * a partition point `p ∈ 0..=L` means the **device executes layers
+//!   `1..=p`** and the server executes `p+1..=L`; `p = 0` sends the raw
+//!   (quantized) input straight to the server;
+//! * `z_w(l)` counts weight+bias parameters of layer `l`, `z_x(l)` counts
+//!   elements of layer `l`'s output activation; `z_x(0)` is the model input.
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+/// The kinds of learnable layers QPART partitions and quantizes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// Fully connected: `X[1,D] · W[D,G] + b[G]` (paper Eq. 1, o = D·G).
+    Linear { d_in: usize, d_out: usize },
+    /// Standard convolution (paper Eq. 2, o = C_in·C_out·F1·F2·U·V where
+    /// U×V is the *output* spatial size under the layer's stride/padding).
+    Conv2d {
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        /// input spatial side (square feature maps)
+        in_side: usize,
+        /// output spatial side
+        out_side: usize,
+    },
+}
+
+/// One learnable layer plus its activation bookkeeping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSpec {
+    /// Human-readable name, e.g. `fc1`, `conv2`.
+    pub name: String,
+    pub kind: LayerKind,
+    /// Whether a ReLU follows (affects runtime execution, not costs).
+    pub relu: bool,
+}
+
+impl LayerSpec {
+    /// Multiply-accumulate operations (paper Eq. 1–2).
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Linear { d_in, d_out } => (d_in as u64) * (d_out as u64),
+            LayerKind::Conv2d { c_in, c_out, k, out_side, .. } => {
+                (c_in as u64) * (c_out as u64) * (k as u64) * (k as u64)
+                    * (out_side as u64) * (out_side as u64)
+            }
+        }
+    }
+
+    /// Weight + bias parameter count `z_w`.
+    pub fn weight_params(&self) -> u64 {
+        match self.kind {
+            LayerKind::Linear { d_in, d_out } => (d_in as u64) * (d_out as u64) + d_out as u64,
+            LayerKind::Conv2d { c_in, c_out, k, .. } => {
+                (c_in as u64) * (c_out as u64) * (k as u64) * (k as u64) + c_out as u64
+            }
+        }
+    }
+
+    /// Output activation element count `z_x`.
+    pub fn activation_elems(&self) -> u64 {
+        match self.kind {
+            LayerKind::Linear { d_out, .. } => d_out as u64,
+            LayerKind::Conv2d { c_out, out_side, .. } => {
+                (c_out as u64) * (out_side as u64) * (out_side as u64)
+            }
+        }
+    }
+
+    /// Input activation element count.
+    pub fn input_elems(&self) -> u64 {
+        match self.kind {
+            LayerKind::Linear { d_in, .. } => d_in as u64,
+            LayerKind::Conv2d { c_in, in_side, .. } => {
+                (c_in as u64) * (in_side as u64) * (in_side as u64)
+            }
+        }
+    }
+}
+
+/// A full model: ordered learnable layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+    pub num_classes: usize,
+    /// Partition points QPART may choose (`⊆ 0..=L`). Architectures with
+    /// residual blocks restrict these to block boundaries so a skip never
+    /// crosses the device/server split.
+    pub partition_points: Vec<usize>,
+    /// Model input shape without the batch dim (e.g. `[784]` or `[3,32,32]`).
+    pub input_shape: Vec<usize>,
+    /// Residual adds: `(layer, source)` — output of `layer` += output of
+    /// `source` (1-based layer indices; `source = 0` is the model input).
+    /// No parameters/MACs under Eq. 2, but the runtime must feed the skip.
+    pub residual: Vec<(usize, usize)>,
+}
+
+impl ModelSpec {
+    pub fn new(name: impl Into<String>, layers: Vec<LayerSpec>, num_classes: usize) -> Result<Self> {
+        let l = layers.len();
+        let input_shape = layers
+            .first()
+            .map(|layer| match layer.kind {
+                LayerKind::Linear { d_in, .. } => vec![d_in],
+                LayerKind::Conv2d { c_in, in_side, .. } => vec![c_in, in_side, in_side],
+            })
+            .unwrap_or_default();
+        let spec = ModelSpec {
+            name: name.into(),
+            layers,
+            num_classes,
+            partition_points: (0..=l).collect(),
+            input_shape,
+            residual: Vec::new(),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Builder: restrict the allowed partition points.
+    pub fn with_partitions(mut self, points: Vec<usize>) -> Self {
+        self.partition_points = points;
+        self
+    }
+
+    /// Builder: declare residual adds.
+    pub fn with_residual(mut self, residual: Vec<(usize, usize)>) -> Self {
+        self.residual = residual;
+        self
+    }
+
+    /// The residual source feeding `layer`'s output, if any.
+    pub fn residual_source(&self, layer: usize) -> Option<usize> {
+        self.residual.iter().find(|(l, _)| *l == layer).map(|(_, s)| *s)
+    }
+
+    /// Check inter-layer shape consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            return Err(Error::InvalidArg(format!("model '{}' has no layers", self.name)));
+        }
+        for w in self.layers.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            if a.activation_elems() != b.input_elems() {
+                return Err(Error::Shape(format!(
+                    "model '{}': layer '{}' outputs {} elems but layer '{}' expects {}",
+                    self.name,
+                    a.name,
+                    a.activation_elems(),
+                    b.name,
+                    b.input_elems()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of learnable layers `L`.
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// MACs of layer `l ∈ 1..=L` (paper `o(l)`).
+    pub fn macs(&self, l: usize) -> u64 {
+        self.layers[l - 1].macs()
+    }
+
+    /// Device-side MACs for partition `p` (Eq. 3 under our convention):
+    /// `O1(p) = Σ_{l=1..p} o(l)`.
+    pub fn device_macs(&self, p: usize) -> u64 {
+        self.layers[..p].iter().map(LayerSpec::macs).sum()
+    }
+
+    /// Server-side MACs for partition `p` (Eq. 4): `O2(p) = Σ_{l=p+1..L} o(l)`.
+    pub fn server_macs(&self, p: usize) -> u64 {
+        self.layers[p..].iter().map(LayerSpec::macs).sum()
+    }
+
+    /// Total MACs.
+    pub fn total_macs(&self) -> u64 {
+        self.device_macs(self.num_layers())
+    }
+
+    /// `z_w(l)`, parameters of layer `l ∈ 1..=L`.
+    pub fn weight_params(&self, l: usize) -> u64 {
+        self.layers[l - 1].weight_params()
+    }
+
+    /// Total parameter count.
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(LayerSpec::weight_params).sum()
+    }
+
+    /// `z_x(l)` for `l ∈ 0..=L`; `z_x(0)` is the model input size.
+    pub fn activation_elems(&self, l: usize) -> u64 {
+        if l == 0 {
+            self.layers[0].input_elems()
+        } else {
+            self.layers[l - 1].activation_elems()
+        }
+    }
+
+    /// Full-precision (f32) size of the first segment's weights in bits.
+    pub fn segment_weight_bits_f32(&self, p: usize) -> u64 {
+        32 * self.layers[..p].iter().map(LayerSpec::weight_params).sum::<u64>()
+    }
+
+    /// Communication payload in bits (paper Eq. 14) for partition `p` and
+    /// per-layer weight bit-widths `bits[0..p]` plus activation bit-width
+    /// `b_x` for the boundary activation `z_x(p)`.
+    ///
+    /// Downlink: quantized weights of layers `1..=p`. Uplink: quantized
+    /// activation of layer `p` (the raw input when `p = 0`).
+    pub fn payload_bits(&self, p: usize, bits: &[u8], b_x: u8) -> u64 {
+        assert!(bits.len() >= p, "need {} bit-widths, got {}", p, bits.len());
+        let w: u64 = (0..p)
+            .map(|i| (bits[i] as u64) * self.layers[i].weight_params())
+            .sum();
+        w + (b_x as u64) * self.activation_elems(p)
+    }
+
+    // ----- manifest (de)serialization -----
+
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("name", self.name.as_str().into()),
+            ("num_classes", self.num_classes.into()),
+            (
+                "partition_points",
+                Value::Arr(self.partition_points.iter().map(|&p| p.into()).collect()),
+            ),
+            (
+                "input_shape",
+                Value::Arr(self.input_shape.iter().map(|&d| d.into()).collect()),
+            ),
+            (
+                "residual",
+                Value::Obj(
+                    self.residual
+                        .iter()
+                        .map(|&(l, s)| (l.to_string(), Value::from(s)))
+                        .collect(),
+                ),
+            ),
+            (
+                "layers",
+                Value::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            let mut o = Value::obj([
+                                ("name", l.name.as_str().into()),
+                                ("relu", l.relu.into()),
+                            ]);
+                            match l.kind {
+                                LayerKind::Linear { d_in, d_out } => {
+                                    o.set("kind", "linear".into());
+                                    o.set("d_in", d_in.into());
+                                    o.set("d_out", d_out.into());
+                                }
+                                LayerKind::Conv2d { c_in, c_out, k, stride, in_side, out_side } => {
+                                    o.set("kind", "conv2d".into());
+                                    o.set("c_in", c_in.into());
+                                    o.set("c_out", c_out.into());
+                                    o.set("k", k.into());
+                                    o.set("stride", stride.into());
+                                    o.set("in_side", in_side.into());
+                                    o.set("out_side", out_side.into());
+                                }
+                            }
+                            o
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ModelSpec> {
+        let name = v.req_str("name")?.to_string();
+        let num_classes = v.req_usize("num_classes")?;
+        let mut layers = Vec::new();
+        for lv in v.req_arr("layers")? {
+            let lname = lv.req_str("name")?.to_string();
+            let relu = lv.opt_bool("relu", false);
+            let kind = match lv.req_str("kind")? {
+                "linear" => LayerKind::Linear {
+                    d_in: lv.req_usize("d_in")?,
+                    d_out: lv.req_usize("d_out")?,
+                },
+                "conv2d" => LayerKind::Conv2d {
+                    c_in: lv.req_usize("c_in")?,
+                    c_out: lv.req_usize("c_out")?,
+                    k: lv.req_usize("k")?,
+                    stride: lv.req_usize("stride")?,
+                    in_side: lv.req_usize("in_side")?,
+                    out_side: lv.req_usize("out_side")?,
+                },
+                other => {
+                    return Err(Error::schema("layers.kind", format!("unknown kind '{other}'")))
+                }
+            };
+            layers.push(LayerSpec { name: lname, kind, relu });
+        }
+        let mut spec = ModelSpec::new(name, layers, num_classes)?;
+        if let Some(pp) = v.get("partition_points").and_then(Value::as_arr) {
+            let points = pp
+                .iter()
+                .map(|x| {
+                    x.as_i64()
+                        .and_then(|i| usize::try_from(i).ok())
+                        .ok_or_else(|| Error::schema("partition_points", "expected indices"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            for &p in &points {
+                if p > spec.layers.len() {
+                    return Err(Error::schema("partition_points", format!("point {p} > L")));
+                }
+            }
+            spec.partition_points = points;
+        }
+        if let Some(shape) = v.get("input_shape").and_then(Value::as_arr) {
+            spec.input_shape = shape
+                .iter()
+                .map(|x| {
+                    x.as_i64()
+                        .and_then(|i| usize::try_from(i).ok())
+                        .ok_or_else(|| Error::schema("input_shape", "expected dims"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(res) = v.get("residual").and_then(Value::as_obj) {
+            let mut residual = Vec::new();
+            for (k, sv) in res {
+                let layer: usize = k
+                    .parse()
+                    .map_err(|_| Error::schema("residual", "keys must be layer indices"))?;
+                let src = sv
+                    .as_i64()
+                    .and_then(|i| usize::try_from(i).ok())
+                    .ok_or_else(|| Error::schema("residual", "expected source index"))?;
+                residual.push((layer, src));
+            }
+            residual.sort_unstable();
+            spec.residual = residual;
+        }
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lin(name: &str, d_in: usize, d_out: usize) -> LayerSpec {
+        LayerSpec { name: name.into(), kind: LayerKind::Linear { d_in, d_out }, relu: true }
+    }
+
+    fn toy() -> ModelSpec {
+        ModelSpec::new("toy", vec![lin("fc1", 4, 8), lin("fc2", 8, 2)], 2).unwrap()
+    }
+
+    #[test]
+    fn mac_counts_match_eq1_eq2() {
+        let m = toy();
+        assert_eq!(m.macs(1), 32);
+        assert_eq!(m.macs(2), 16);
+        let conv = LayerSpec {
+            name: "c".into(),
+            kind: LayerKind::Conv2d { c_in: 3, c_out: 8, k: 3, stride: 1, in_side: 8, out_side: 8 },
+            relu: true,
+        };
+        // Eq. 2: C_in × C_out × F1 × F2 × U × V
+        assert_eq!(conv.macs(), 3 * 8 * 3 * 3 * 8 * 8);
+        assert_eq!(conv.weight_params(), 3 * 8 * 3 * 3 + 8);
+        assert_eq!(conv.activation_elems(), 8 * 8 * 8);
+    }
+
+    #[test]
+    fn segment_costs_partition_sum() {
+        let m = toy();
+        // Eq. 3/4: O1 + O2 == total at every p
+        for p in 0..=m.num_layers() {
+            assert_eq!(m.device_macs(p) + m.server_macs(p), m.total_macs());
+        }
+        assert_eq!(m.device_macs(0), 0);
+        assert_eq!(m.server_macs(m.num_layers()), 0);
+    }
+
+    #[test]
+    fn payload_eq14() {
+        let m = toy();
+        // p=1, b=[8], b_x=6: 8*(4*8+8) + 6*8
+        assert_eq!(m.payload_bits(1, &[8], 6), 8 * 40 + 6 * 8);
+        // p=0: raw input quantized at b_x bits
+        assert_eq!(m.payload_bits(0, &[], 32), 32 * 4);
+    }
+
+    #[test]
+    fn shape_mismatch_detected() {
+        let bad = ModelSpec::new("bad", vec![lin("a", 4, 8), lin("b", 9, 2)], 2);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = toy();
+        let v = m.to_json();
+        let m2 = ModelSpec::from_json(&v).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn json_roundtrip_conv() {
+        let m = ModelSpec::new(
+            "c",
+            vec![
+                LayerSpec {
+                    name: "conv1".into(),
+                    kind: LayerKind::Conv2d {
+                        c_in: 3, c_out: 4, k: 3, stride: 2, in_side: 8, out_side: 4,
+                    },
+                    relu: true,
+                },
+                lin("fc", 64, 2),
+            ],
+            2,
+        )
+        .unwrap();
+        assert_eq!(ModelSpec::from_json(&m.to_json()).unwrap(), m);
+    }
+}

@@ -1,0 +1,16 @@
+//! The joint quantization + partitioning optimizer (paper §IV).
+//!
+//! * [`solver`] — the closed-form layer-wise bit-width solution (Eq. 27/40
+//!   via KKT water-filling) with bound handling and integer rounding.
+//! * [`offline`] — paper **Algorithm 1**: enumerate partition points ×
+//!   accuracy levels, solve bit-widths, emit the pattern set `{(b_a^p, p)}`.
+//! * [`online`] — paper **Algorithm 2**: per-request selection of the
+//!   accuracy level and the objective-minimizing partition point.
+
+mod offline;
+mod online;
+mod solver;
+
+pub use offline::{offline_quantize, OfflineConfig};
+pub use online::{serve_request, Decision, RequestParams};
+pub use solver::{solve_bits, solve_pattern, BitBounds, SolveItem, Solution};

@@ -1,0 +1,163 @@
+//! Paper **Algorithm 1** — Offline Model Quantization.
+//!
+//! Enumerate accuracy levels `a ∈ {a_1..a_5}` × partition points
+//! `p ∈ 0..=L` and solve the bit-width vector for each, producing the
+//! pattern set `{(b_a^p, p)}_θ` the online algorithm searches at request
+//! time.
+//!
+//! The expensive parts of the paper's Algorithm 1 (adversarial-noise
+//! estimation, noise-injection thresholds — lines 7–9) happen once in the
+//! build-time Python calibration pass; this function consumes the resulting
+//! [`CalibrationTable`], so the per-pattern work is just the closed-form
+//! solve — microseconds, re-runnable at server startup.
+
+use super::solver::{solve_pattern, BitBounds};
+use crate::accuracy::CalibrationTable;
+use crate::error::Result;
+use crate::model::ModelSpec;
+use crate::quant::{PatternSet, QuantPattern};
+
+/// Configuration for the offline pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OfflineConfig {
+    pub bounds: BitBounds,
+    /// If a (level, partition) solve is infeasible at `bounds.max_bits`,
+    /// fall back to an un-quantized (32-bit) pattern instead of erroring —
+    /// keeps the table total, matching the paper's "no optimization"
+    /// degenerate case.
+    pub fallback_f32: bool,
+}
+
+impl Default for OfflineConfig {
+    fn default() -> Self {
+        OfflineConfig { bounds: BitBounds::default(), fallback_f32: true }
+    }
+}
+
+/// Run Algorithm 1: build the full pattern set for `model`.
+pub fn offline_quantize(
+    model: &ModelSpec,
+    calib: &CalibrationTable,
+    cfg: OfflineConfig,
+) -> Result<PatternSet> {
+    calib.validate(model)?;
+    let num_levels = calib.levels.len();
+    let mut patterns = Vec::with_capacity(num_levels);
+    for k in 0..num_levels {
+        let mut row = Vec::with_capacity(model.partition_points.len());
+        for &p in &model.partition_points {
+            match solve_pattern(model, calib, k, p, cfg.bounds) {
+                Ok(pat) => row.push(pat),
+                Err(crate::Error::Infeasible(_)) if cfg.fallback_f32 => {
+                    row.push(QuantPattern {
+                        partition: p,
+                        weight_bits: vec![32; p],
+                        activation_bits: 32,
+                        accuracy_level: calib.levels[k],
+                        predicted_degradation: 0.0,
+                    });
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        patterns.push(row);
+    }
+    Ok(PatternSet { model: model.name.clone(), levels: calib.levels.clone(), patterns })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{edgecnn, mlp6};
+
+    const LEVELS: [f64; 5] = [0.0025, 0.005, 0.01, 0.02, 0.05];
+
+    #[test]
+    fn full_table_generated() {
+        let m = mlp6();
+        let c = CalibrationTable::synthetic(&m, &LEVELS, 21);
+        let set = offline_quantize(&m, &c, OfflineConfig::default()).unwrap();
+        assert_eq!(set.levels, LEVELS);
+        assert_eq!(set.patterns.len(), 5);
+        for row in &set.patterns {
+            assert_eq!(row.len(), m.num_layers() + 1);
+            for (p, pat) in row.iter().enumerate() {
+                assert_eq!(pat.partition, p);
+                pat.validate(&m).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn restricted_partitions_respected() {
+        let m = crate::model::tinyresnet(10);
+        let c = CalibrationTable::synthetic(&m, &LEVELS, 27);
+        let set = offline_quantize(&m, &c, OfflineConfig::default()).unwrap();
+        for row in &set.patterns {
+            let ps: Vec<usize> = row.iter().map(|p| p.partition).collect();
+            assert_eq!(ps, m.partition_points, "only block-boundary partitions");
+        }
+    }
+
+    #[test]
+    fn degradation_within_level_everywhere() {
+        let m = mlp6();
+        let c = CalibrationTable::synthetic(&m, &LEVELS, 22);
+        let set = offline_quantize(&m, &c, OfflineConfig::default()).unwrap();
+        for (k, row) in set.patterns.iter().enumerate() {
+            for pat in row {
+                assert!(
+                    pat.predicted_degradation <= LEVELS[k] * (1.0 + 1e-9),
+                    "k={k} p={}: {}",
+                    pat.partition,
+                    pat.predicted_degradation
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn payload_shrinks_with_tolerance_per_partition() {
+        // Fig. 6 shape holds at every partition point of the table.
+        let m = mlp6();
+        let c = CalibrationTable::synthetic(&m, &LEVELS, 23);
+        let set = offline_quantize(&m, &c, OfflineConfig::default()).unwrap();
+        for p in 0..=m.num_layers() {
+            for k in 1..LEVELS.len() {
+                let tight = set.patterns[k - 1][p].payload_bits(&m);
+                let loose = set.patterns[k][p].payload_bits(&m);
+                assert!(loose <= tight, "p={p} k={k}: {loose} > {tight}");
+            }
+        }
+    }
+
+    #[test]
+    fn works_for_conv_models() {
+        let m = edgecnn(10);
+        let c = CalibrationTable::synthetic(&m, &LEVELS, 24);
+        let set = offline_quantize(&m, &c, OfflineConfig::default()).unwrap();
+        assert_eq!(set.patterns[0].len(), m.num_layers() + 1);
+    }
+
+    #[test]
+    fn mismatched_calibration_rejected() {
+        let m = mlp6();
+        let other = edgecnn(10);
+        let c = CalibrationTable::synthetic(&other, &LEVELS, 25);
+        assert!(offline_quantize(&m, &c, OfflineConfig::default()).is_err());
+    }
+
+    #[test]
+    fn infeasible_falls_back_to_f32() {
+        let m = mlp6();
+        let mut c = CalibrationTable::synthetic(&m, &LEVELS, 26);
+        // make layer 1 absurdly touchy at the tightest level
+        c.weight[0].s = 1e30;
+        let set = offline_quantize(&m, &c, OfflineConfig::default()).unwrap();
+        let pat = &set.patterns[0][m.num_layers()];
+        assert_eq!(pat.weight_bits, vec![32; m.num_layers()]);
+
+        let strict = OfflineConfig { fallback_f32: false, ..Default::default() };
+        assert!(offline_quantize(&m, &c, strict).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Paper **Algorithm 2** — Online Inference Serving.
+//!
+//! Per request: (1) pick the largest offline accuracy level not exceeding
+//! the request's budget `a`; (2) evaluate the Eq. 17 objective for every
+//! partition point under the request's *live* device/channel parameters;
+//! (3) return the minimizing `(b, p)` pattern. The device memory capacity
+//! acts as a feasibility filter (§III constraint).
+
+use crate::cost::{CostBreakdown, CostModel};
+use crate::error::{Error, Result};
+use crate::model::ModelSpec;
+use crate::quant::{PatternSet, QuantPattern};
+
+/// The per-request parameters Algorithm 2 needs (the tuple of paper
+/// Algorithm 2's Require line: device profile, channel, weights arrive in
+/// [`CostModel`]; `a` is the accuracy-degradation budget).
+#[derive(Debug, Clone, Copy)]
+pub struct RequestParams {
+    pub cost: CostModel,
+    /// Maximum acceptable accuracy degradation (fraction).
+    pub accuracy_budget: f64,
+}
+
+/// The serving decision for one request.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    /// Chosen pattern (owned copy — callers ship it to the device).
+    pub pattern: QuantPattern,
+    /// Index of the accuracy level used.
+    pub level_idx: usize,
+    /// Objective breakdown at the chosen partition.
+    pub cost: CostBreakdown,
+    /// Objective value per candidate partition (diagnostics / Fig. 7).
+    pub objective_by_partition: Vec<f64>,
+}
+
+/// Run Algorithm 2 against an offline pattern set.
+pub fn serve_request(
+    model: &ModelSpec,
+    patterns: &PatternSet,
+    req: &RequestParams,
+) -> Result<Decision> {
+    if patterns.model != model.name {
+        return Err(Error::InvalidArg(format!(
+            "pattern set is for '{}', model is '{}'",
+            patterns.model, model.name
+        )));
+    }
+    // line 1: a* = max level ≤ a
+    let level_idx = patterns.select_level(req.accuracy_budget)?;
+    let row = &patterns.patterns[level_idx];
+    if row.is_empty() {
+        return Err(Error::NotFound("pattern set has no partitions".into()));
+    }
+
+    // lines 2–5: evaluate the objective at every allowed partition point
+    let mut objective_by_partition = Vec::with_capacity(row.len());
+    let mut best: Option<(usize, CostBreakdown)> = None;
+    for (idx, pat) in row.iter().enumerate() {
+        let payload = pat.payload_bits(model);
+        let breakdown = req.cost.evaluate(model, pat.partition, payload);
+        objective_by_partition.push(breakdown.objective);
+        // memory constraint: the quantized segment must fit the device
+        let segment_bits: u64 = pat
+            .weight_bits
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (b as u64) * model.weight_params(i + 1))
+            .sum();
+        if !req.cost.fits_memory(segment_bits) {
+            continue;
+        }
+        match &best {
+            Some((_, cur)) if cur.objective <= breakdown.objective => {}
+            _ => best = Some((idx, breakdown)),
+        }
+    }
+    let (best_idx, cost) = best.ok_or_else(|| {
+        Error::Infeasible("no partition fits the device memory capacity".into())
+    })?;
+    Ok(Decision { pattern: row[best_idx].clone(), level_idx, cost, objective_by_partition })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accuracy::CalibrationTable;
+    use crate::channel::Channel;
+    use crate::model::mlp6;
+    use crate::optimizer::{offline_quantize, OfflineConfig};
+
+    const LEVELS: [f64; 5] = [0.0025, 0.005, 0.01, 0.02, 0.05];
+
+    fn setup() -> (crate::model::ModelSpec, PatternSet) {
+        let m = mlp6();
+        let c = CalibrationTable::synthetic(&m, &LEVELS, 31);
+        let set = offline_quantize(&m, &c, OfflineConfig::default()).unwrap();
+        (m, set)
+    }
+
+    fn req(a: f64) -> RequestParams {
+        RequestParams { cost: CostModel::paper_default(), accuracy_budget: a }
+    }
+
+    #[test]
+    fn decision_minimizes_objective() {
+        let (m, set) = setup();
+        let d = serve_request(&m, &set, &req(0.01)).unwrap();
+        let min = d
+            .objective_by_partition
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        assert!((d.cost.objective - min).abs() <= 1e-12 * min.abs().max(1.0));
+        assert_eq!(d.objective_by_partition.len(), m.num_layers() + 1);
+    }
+
+    #[test]
+    fn level_selection_respects_budget() {
+        let (m, set) = setup();
+        let d = serve_request(&m, &set, &req(0.012)).unwrap();
+        assert_eq!(d.level_idx, 2); // 0.01 is the largest ≤ 0.012
+        assert!(d.pattern.accuracy_level <= 0.012);
+        assert!(serve_request(&m, &set, &req(0.0001)).is_err());
+    }
+
+    #[test]
+    fn slow_channel_pushes_partition_to_server_side() {
+        // With a very slow channel, shipping weights is expensive; the raw
+        // input (small) should win → partition 0.
+        let (m, set) = setup();
+        let mut r = req(0.05);
+        r.cost.channel = Channel::fixed(10e3, 1.0); // 10 kbps
+        let d = serve_request(&m, &set, &r).unwrap();
+        assert_eq!(d.pattern.partition, 0, "slow link should avoid weight shipping");
+    }
+
+    #[test]
+    fn pricey_server_pushes_work_to_device() {
+        let (m, set) = setup();
+        let mut cheap = req(0.05);
+        cheap.cost.server.price_per_s = 0.0;
+        let d_cheap = serve_request(&m, &set, &cheap).unwrap();
+
+        let mut pricey = req(0.05);
+        pricey.cost.server.price_per_s = 1e4;
+        pricey.cost.weights.eta = 1.0;
+        let d_pricey = serve_request(&m, &set, &pricey).unwrap();
+        assert!(
+            d_pricey.pattern.partition >= d_cheap.pattern.partition,
+            "expensive server must not decrease local work ({} vs {})",
+            d_pricey.pattern.partition,
+            d_cheap.pattern.partition
+        );
+    }
+
+    #[test]
+    fn memory_constraint_filters_partitions() {
+        let (m, set) = setup();
+        let mut r = req(0.05);
+        r.cost.device.memory_bits = 1; // nothing fits except p=0 (empty segment)
+        let d = serve_request(&m, &set, &r).unwrap();
+        assert_eq!(d.pattern.partition, 0);
+    }
+
+    #[test]
+    fn wrong_model_rejected() {
+        let (_, set) = setup();
+        let other = crate::model::edgecnn(10);
+        assert!(serve_request(&other, &set, &req(0.01)).is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Arbitrary-bit-width bit-packing.
+//!
+//! The paper charges the channel `b` bits per quantized parameter (Eq. 14).
+//! A real deployment has to actually put `b`-bit codes on the wire, so the
+//! coordinator bit-packs code streams LSB-first into a byte buffer. This is
+//! on the serving hot path (every response ships a packed segment) and is
+//! benchmarked by `perf_quant`.
+
+use crate::error::{Error, Result};
+
+/// Bytes needed to pack `n` codes at `bits` bits each.
+pub fn packed_len_bytes(n: usize, bits: u8) -> usize {
+    ((n as u64 * bits as u64).div_ceil(8)) as usize
+}
+
+/// Pack `codes` (each `< 2^bits`) at `bits` bits per code, LSB-first.
+pub fn pack_bits(codes: &[u32], bits: u8) -> Result<Vec<u8>> {
+    if !(1..=24).contains(&bits) {
+        return Err(Error::InvalidArg(format!("pack_bits: bits must be 1..=24, got {bits}")));
+    }
+    let limit = 1u64 << bits;
+    let mut out = vec![0u8; packed_len_bytes(codes.len(), bits)];
+    let mut acc: u64 = 0; // bit accumulator, LSB-first
+    let mut acc_bits: u32 = 0;
+    let mut pos = 0usize;
+    for &c in codes {
+        if (c as u64) >= limit {
+            return Err(Error::InvalidArg(format!("code {c} does not fit in {bits} bits")));
+        }
+        acc |= (c as u64) << acc_bits;
+        acc_bits += bits as u32;
+        while acc_bits >= 8 {
+            out[pos] = (acc & 0xFF) as u8;
+            pos += 1;
+            acc >>= 8;
+            acc_bits -= 8;
+        }
+    }
+    if acc_bits > 0 {
+        out[pos] = (acc & 0xFF) as u8;
+    }
+    Ok(out)
+}
+
+/// Unpack `n` codes at `bits` bits per code from `buf`.
+pub fn unpack_bits(buf: &[u8], n: usize, bits: u8) -> Result<Vec<u32>> {
+    if !(1..=24).contains(&bits) {
+        return Err(Error::InvalidArg(format!("unpack_bits: bits must be 1..=24, got {bits}")));
+    }
+    let need = packed_len_bytes(n, bits);
+    if buf.len() < need {
+        return Err(Error::InvalidArg(format!(
+            "unpack_bits: buffer has {} bytes, need {need}",
+            buf.len()
+        )));
+    }
+    let mask = (1u64 << bits) - 1;
+    let mut out = Vec::with_capacity(n);
+    let mut acc: u64 = 0;
+    let mut acc_bits: u32 = 0;
+    let mut pos = 0usize;
+    for _ in 0..n {
+        while acc_bits < bits as u32 {
+            acc |= (buf[pos] as u64) << acc_bits;
+            pos += 1;
+            acc_bits += 8;
+        }
+        out.push((acc & mask) as u32);
+        acc >>= bits;
+        acc_bits -= bits as u32;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        for bits in 1u8..=24 {
+            let limit = 1u64 << bits;
+            let codes: Vec<u32> =
+                (0..200u64).map(|i| ((i * 2_654_435_761) % limit) as u32).collect();
+            let packed = pack_bits(&codes, bits).unwrap();
+            assert_eq!(packed.len(), packed_len_bytes(codes.len(), bits));
+            let back = unpack_bits(&packed, codes.len(), bits).unwrap();
+            assert_eq!(back, codes, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn exact_sizes() {
+        assert_eq!(packed_len_bytes(8, 1), 1);
+        assert_eq!(packed_len_bytes(9, 1), 2);
+        assert_eq!(packed_len_bytes(3, 5), 2); // 15 bits → 2 bytes
+        assert_eq!(packed_len_bytes(0, 7), 0);
+    }
+
+    #[test]
+    fn rejects_oversized_codes() {
+        assert!(pack_bits(&[8], 3).is_err());
+        assert!(pack_bits(&[7], 3).is_ok());
+    }
+
+    #[test]
+    fn rejects_short_buffer() {
+        let packed = pack_bits(&[1, 2, 3], 8).unwrap();
+        assert!(unpack_bits(&packed[..2], 3, 8).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_widths() {
+        assert!(pack_bits(&[0], 0).is_err());
+        assert!(pack_bits(&[0], 25).is_err());
+        assert!(unpack_bits(&[0], 1, 0).is_err());
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        let packed = pack_bits(&[], 5).unwrap();
+        assert!(packed.is_empty());
+        assert_eq!(unpack_bits(&packed, 0, 5).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn prop_pack_unpack_identity() {
+        check("pack∘unpack = id", 80, |rng| {
+            let bits = rng.range_usize(1, 25) as u8;
+            let n = rng.range_usize(0, 500);
+            let limit = 1u64 << bits;
+            let codes: Vec<u32> = (0..n).map(|_| rng.below(limit) as u32).collect();
+            let packed = pack_bits(&codes, bits).unwrap();
+            let back = unpack_bits(&packed, n, bits).unwrap();
+            assert_eq!(back, codes);
+        });
+    }
+
+    #[test]
+    fn prop_payload_matches_eq14_accounting() {
+        // The packed byte length is exactly ceil(n·b/8): the wire carries
+        // what Eq. 14 charges for (up to sub-byte padding).
+        check("packed length", 40, |rng| {
+            let bits = rng.range_usize(1, 17) as u8;
+            let n = rng.range_usize(0, 300);
+            let codes: Vec<u32> = (0..n).map(|_| rng.below(1u64 << bits) as u32).collect();
+            let packed = pack_bits(&codes, bits).unwrap();
+            assert_eq!(packed.len() as u64, (n as u64 * bits as u64).div_ceil(8));
+        });
+    }
+}

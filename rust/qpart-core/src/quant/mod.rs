@@ -1,0 +1,12 @@
+//! Quantization: the uniform asymmetric quantizer (paper Eq. 9–10),
+//! arbitrary-bit-width bit-packing for the simulated wire (the payload the
+//! channel model charges for, Eq. 14), and quantization patterns `(b, p)`
+//! (the unit Algorithm 1 produces and Algorithm 2 selects).
+
+mod bitpack;
+mod pattern;
+mod quantizer;
+
+pub use bitpack::{pack_bits, unpack_bits, packed_len_bytes};
+pub use pattern::{PatternKey, PatternSet, QuantPattern};
+pub use quantizer::{QuantParams, Quantized, dequantize, quantize, quantize_with};

@@ -1,0 +1,257 @@
+//! Quantization patterns — the `(b_a^p, p)` tuples of paper Algorithm 1.
+//!
+//! A [`QuantPattern`] fixes the partition point and the per-layer bit-widths
+//! of the device segment (plus the boundary-activation bit-width).
+//! A [`PatternSet`] is the offline-computed table `{(b_a^p, p)}_θ`, indexed
+//! by accuracy level and partition point, that the online algorithm
+//! (Algorithm 2) searches at request time.
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::model::ModelSpec;
+
+/// One quantization + partitioning decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantPattern {
+    /// Partition point `p ∈ 0..=L`: device runs layers `1..=p`.
+    pub partition: usize,
+    /// Weight bit-widths for layers `1..=p` (`bits.len() == partition`).
+    pub weight_bits: Vec<u8>,
+    /// Bit-width of the boundary activation `z_x(p)` sent uplink.
+    pub activation_bits: u8,
+    /// The accuracy-degradation level this pattern was solved for
+    /// (fraction, e.g. 0.01 = 1%).
+    pub accuracy_level: f64,
+    /// Predicted degradation from the noise model (≤ accuracy_level when
+    /// the solve is feasible).
+    pub predicted_degradation: f64,
+}
+
+impl QuantPattern {
+    /// Communication payload in bits under Eq. 14 for `model`.
+    pub fn payload_bits(&self, model: &ModelSpec) -> u64 {
+        model.payload_bits(self.partition, &self.weight_bits, self.activation_bits)
+    }
+
+    /// Payload of the *unquantized* scheme at the same partition (f32
+    /// weights + f32 boundary activation) — the "No Optimization" baseline.
+    pub fn payload_bits_f32(&self, model: &ModelSpec) -> u64 {
+        let bits32 = vec![32u8; self.partition];
+        model.payload_bits(self.partition, &bits32, 32)
+    }
+
+    /// Structural validity against a model.
+    pub fn validate(&self, model: &ModelSpec) -> Result<()> {
+        if self.partition > model.num_layers() {
+            return Err(Error::InvalidArg(format!(
+                "partition {} > L={}",
+                self.partition,
+                model.num_layers()
+            )));
+        }
+        if self.weight_bits.len() != self.partition {
+            return Err(Error::InvalidArg(format!(
+                "pattern has {} bit-widths for partition {}",
+                self.weight_bits.len(),
+                self.partition
+            )));
+        }
+        for (i, &b) in self.weight_bits.iter().enumerate() {
+            if !(1..=32).contains(&b) {
+                return Err(Error::InvalidArg(format!("layer {} bits {b} out of range", i + 1)));
+            }
+        }
+        if !(1..=32).contains(&self.activation_bits) {
+            return Err(Error::InvalidArg(format!(
+                "activation bits {} out of range",
+                self.activation_bits
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("partition", self.partition.into()),
+            (
+                "weight_bits",
+                Value::Arr(self.weight_bits.iter().map(|&b| (b as u64).into()).collect()),
+            ),
+            ("activation_bits", (self.activation_bits as u64).into()),
+            ("accuracy_level", self.accuracy_level.into()),
+            ("predicted_degradation", self.predicted_degradation.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<QuantPattern> {
+        let weight_bits = v
+            .req_arr("weight_bits")?
+            .iter()
+            .map(|b| {
+                b.as_i64()
+                    .and_then(|x| u8::try_from(x).ok())
+                    .ok_or_else(|| Error::schema("weight_bits", "expected small integer"))
+            })
+            .collect::<Result<Vec<u8>>>()?;
+        Ok(QuantPattern {
+            partition: v.req_usize("partition")?,
+            weight_bits,
+            activation_bits: v.req_u64("activation_bits")? as u8,
+            accuracy_level: v.req_f64("accuracy_level")?,
+            predicted_degradation: v.opt_f64("predicted_degradation", 0.0),
+        })
+    }
+}
+
+/// Key for a pattern: (accuracy-level index, partition point).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PatternKey {
+    pub level_idx: usize,
+    pub partition: usize,
+}
+
+/// The offline table `{(b_a^p, p)}_θ` for one model.
+#[derive(Debug, Clone)]
+pub struct PatternSet {
+    pub model: String,
+    /// Accuracy-degradation levels, ascending (e.g. [0.0025, 0.005, 0.01, 0.02, 0.05]).
+    pub levels: Vec<f64>,
+    /// `patterns[level_idx][p]` for `p ∈ 0..=L`.
+    pub patterns: Vec<Vec<QuantPattern>>,
+}
+
+impl PatternSet {
+    /// All partition points available (0..=L).
+    pub fn num_partitions(&self) -> usize {
+        self.patterns.first().map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Paper Algorithm 2 line 1: largest level not exceeding the request's
+    /// accuracy budget `a`; errors if even the tightest level exceeds `a`.
+    pub fn select_level(&self, a: f64) -> Result<usize> {
+        let mut best: Option<usize> = None;
+        for (i, &lvl) in self.levels.iter().enumerate() {
+            if lvl <= a + 1e-12 {
+                best = Some(i);
+            }
+        }
+        best.ok_or_else(|| {
+            Error::Infeasible(format!(
+                "accuracy budget {a} tighter than tightest offline level {}",
+                self.levels.first().copied().unwrap_or(f64::NAN)
+            ))
+        })
+    }
+
+    /// Look up the pattern at (level, partition). Partitions may be sparse
+    /// (restricted architectures), so this searches by partition value.
+    pub fn get(&self, key: PatternKey) -> Option<&QuantPattern> {
+        self.patterns
+            .get(key.level_idx)?
+            .iter()
+            .find(|p| p.partition == key.partition)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("model", self.model.as_str().into()),
+            ("levels", Value::num_arr(&self.levels)),
+            (
+                "patterns",
+                Value::Arr(
+                    self.patterns
+                        .iter()
+                        .map(|row| Value::Arr(row.iter().map(QuantPattern::to_json).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<PatternSet> {
+        let model = v.req_str("model")?.to_string();
+        let levels = v.req_f64_arr("levels")?;
+        let mut patterns = Vec::new();
+        for row in v.req_arr("patterns")? {
+            let row = row
+                .as_arr()
+                .ok_or_else(|| Error::schema("patterns", "expected array of arrays"))?;
+            patterns.push(row.iter().map(QuantPattern::from_json).collect::<Result<Vec<_>>>()?);
+        }
+        if patterns.len() != levels.len() {
+            return Err(Error::schema("patterns", "row count != level count"));
+        }
+        Ok(PatternSet { model, levels, patterns })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mlp6;
+
+    fn pat(p: usize, bits: u8) -> QuantPattern {
+        QuantPattern {
+            partition: p,
+            weight_bits: vec![bits; p],
+            activation_bits: bits,
+            accuracy_level: 0.01,
+            predicted_degradation: 0.008,
+        }
+    }
+
+    #[test]
+    fn payload_reduction_vs_f32() {
+        let m = mlp6();
+        let q = pat(3, 8);
+        let ratio = q.payload_bits(&m) as f64 / q.payload_bits_f32(&m) as f64;
+        assert!((ratio - 0.25).abs() < 1e-9, "8/32 bits → exactly 25%: {ratio}");
+    }
+
+    #[test]
+    fn validate_catches_mismatches() {
+        let m = mlp6();
+        assert!(pat(3, 8).validate(&m).is_ok());
+        assert!(pat(7, 8).validate(&m).is_err()); // p > L
+        let mut bad = pat(3, 8);
+        bad.weight_bits.pop();
+        assert!(bad.validate(&m).is_err());
+        let mut bad2 = pat(2, 8);
+        bad2.weight_bits[0] = 0;
+        assert!(bad2.validate(&m).is_err());
+    }
+
+    #[test]
+    fn select_level_picks_max_not_exceeding() {
+        let set = PatternSet {
+            model: "m".into(),
+            levels: vec![0.0025, 0.005, 0.01, 0.02, 0.05],
+            patterns: vec![vec![]; 5],
+        };
+        assert_eq!(set.select_level(0.01).unwrap(), 2);
+        assert_eq!(set.select_level(0.012).unwrap(), 2);
+        assert_eq!(set.select_level(0.05).unwrap(), 4);
+        assert_eq!(set.select_level(1.0).unwrap(), 4);
+        assert!(set.select_level(0.001).is_err());
+    }
+
+    #[test]
+    fn pattern_json_roundtrip() {
+        let p = pat(4, 6);
+        assert_eq!(QuantPattern::from_json(&p.to_json()).unwrap(), p);
+    }
+
+    #[test]
+    fn pattern_set_json_roundtrip() {
+        let set = PatternSet {
+            model: "mlp6".into(),
+            levels: vec![0.01, 0.05],
+            patterns: vec![vec![pat(0, 8), pat(1, 8)], vec![pat(0, 4), pat(1, 4)]],
+        };
+        let v = set.to_json();
+        let back = PatternSet::from_json(&v).unwrap();
+        assert_eq!(back.model, set.model);
+        assert_eq!(back.levels, set.levels);
+        assert_eq!(back.patterns, set.patterns);
+    }
+}

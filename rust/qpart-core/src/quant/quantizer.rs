@@ -1,0 +1,232 @@
+//! Uniform asymmetric quantizer (paper Eq. 9–10).
+//!
+//! For a real value `c` and bit-width `b`, the quantization set is the
+//! uniform grid of `2^b` points on `[μ, φ]` (Eq. 9); `Q(c)` maps `c` to the
+//! nearest grid point (Eq. 10). We store grid *indices* (codes); the wire
+//! carries codes bit-packed at `b` bits each plus the `(μ, φ, b)` header,
+//! and the device reconstructs `ĉ = μ + code·Δ` with `Δ = (φ−μ)/(2^b−1)`.
+
+use crate::error::{Error, Result};
+
+/// Quantizer parameters: bit-width and range.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    /// Bit-width `b ∈ 1..=24` (codes fit u32; the paper uses 2..16).
+    pub bits: u8,
+    /// Grid minimum μ.
+    pub min: f32,
+    /// Grid maximum φ.
+    pub max: f32,
+}
+
+impl QuantParams {
+    /// Derive parameters from data range. A degenerate range (all values
+    /// equal) widens to a tiny symmetric interval so Δ > 0.
+    pub fn from_range(bits: u8, min: f32, max: f32) -> Result<QuantParams> {
+        if !(1..=24).contains(&bits) {
+            return Err(Error::InvalidArg(format!("bits must be in 1..=24, got {bits}")));
+        }
+        if !min.is_finite() || !max.is_finite() || min > max {
+            return Err(Error::InvalidArg(format!("invalid range [{min}, {max}]")));
+        }
+        let (min, max) = if min == max {
+            (min - 1e-6, max + 1e-6)
+        } else {
+            (min, max)
+        };
+        Ok(QuantParams { bits, min, max })
+    }
+
+    /// Grid step `Δ = (φ−μ)/(2^b−1)`.
+    pub fn step(&self) -> f32 {
+        (self.max - self.min) / ((1u32 << self.bits) - 1) as f32
+    }
+
+    /// Number of grid levels `2^b`.
+    pub fn levels(&self) -> u32 {
+        1u32 << self.bits
+    }
+}
+
+/// A quantized buffer: codes + parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Quantized {
+    pub params: QuantParams,
+    /// Grid indices in `0..levels()`.
+    pub codes: Vec<u32>,
+}
+
+impl Quantized {
+    /// Reconstruct the real values.
+    pub fn dequantize(&self) -> Vec<f32> {
+        dequantize(&self.codes, self.params)
+    }
+
+    /// Payload size in bits when bit-packed for the wire (codes only;
+    /// the (μ, φ, b) header is constant per layer and negligible).
+    pub fn payload_bits(&self) -> u64 {
+        self.codes.len() as u64 * self.params.bits as u64
+    }
+}
+
+/// Quantize `data` at `bits`, deriving the range from the data (the paper's
+/// post-training setting: μ/φ are the observed min/max of the layer).
+pub fn quantize(data: &[f32], bits: u8) -> Result<Quantized> {
+    // Branch-free range scan (the per-element `is_finite` check halved
+    // throughput; see perf_quant). ±inf surfaces in mn/mx; NaN — which
+    // IEEE min/max would silently skip — is caught by the checksum.
+    let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+    let mut checksum = 0.0f32;
+    for &x in data {
+        mn = mn.min(x);
+        mx = mx.max(x);
+        checksum += x * 0.0; // 0·x is NaN iff x is NaN or ±inf
+    }
+    if !checksum.eq(&0.0) || (!data.is_empty() && (!mn.is_finite() || !mx.is_finite())) {
+        return Err(Error::InvalidArg("non-finite value in quantize input".into()));
+    }
+    if data.is_empty() {
+        mn = 0.0;
+        mx = 0.0;
+    }
+    let params = QuantParams::from_range(bits, mn, mx)?;
+    Ok(quantize_with(data, params))
+}
+
+/// Quantize with explicit parameters (Eq. 10: nearest grid point, clamped).
+///
+/// Hot path (per-request, O(params)) — see `perf_quant`. The inner loop is
+/// written for the vectorizer: `(x−μ)·inv + 0.5` truncated by the
+/// saturating float→int cast (negatives clamp to 0), then a min against
+/// the top code. `round()` (half-away-from-even tie logic) measured ~2×
+/// slower; ties land on grid midpoints where either neighbor is an equally
+/// valid Eq. 10 argmin.
+pub fn quantize_with(data: &[f32], params: QuantParams) -> Quantized {
+    let step = params.step();
+    let inv = 1.0 / step;
+    let min = params.min;
+    let max_code = params.levels() - 1;
+    let mut codes = Vec::with_capacity(data.len());
+    codes.extend(data.iter().map(|&x| {
+        // saturating cast: NaN→0, negative→0, huge→u32::MAX
+        let q = ((x - min) * inv + 0.5) as u32;
+        q.min(max_code)
+    }));
+    Quantized { params, codes }
+}
+
+/// Reconstruct values from codes.
+pub fn dequantize(codes: &[u32], params: QuantParams) -> Vec<f32> {
+    let step = params.step();
+    codes.iter().map(|&c| params.min + c as f32 * step).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, vec_f32};
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let data: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        for bits in [2u8, 4, 8, 12] {
+            let q = quantize(&data, bits).unwrap();
+            let d = q.dequantize();
+            let half = q.params.step() / 2.0;
+            for (a, b) in data.iter().zip(&d) {
+                assert!(
+                    (a - b).abs() <= half * 1.0001,
+                    "bits={bits} a={a} b={b} half={half}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn range_endpoints_exact() {
+        let data = [-2.0f32, 0.1, 2.0];
+        let q = quantize(&data, 8).unwrap();
+        let d = q.dequantize();
+        assert!((d[0] + 2.0).abs() < 1e-6);
+        assert!((d[2] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn one_bit_two_levels() {
+        let data = [0.0f32, 0.2, 0.8, 1.0];
+        let q = quantize(&data, 1).unwrap();
+        assert_eq!(q.codes, vec![0, 0, 1, 1]);
+        assert_eq!(q.params.levels(), 2);
+    }
+
+    #[test]
+    fn constant_input_survives() {
+        let data = [3.5f32; 16];
+        let q = quantize(&data, 4).unwrap();
+        let d = q.dequantize();
+        for x in d {
+            assert!((x - 3.5).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let q = quantize(&[], 8).unwrap();
+        assert!(q.codes.is_empty());
+        assert_eq!(q.payload_bits(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(quantize(&[f32::NAN], 8).is_err());
+        assert!(quantize(&[1.0], 0).is_err());
+        assert!(quantize(&[1.0], 25).is_err());
+        assert!(QuantParams::from_range(8, 2.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn noise_energy_scales_as_4_pow_minus_b() {
+        // ||σ||² = s · 4^{-b} (paper Eq. 18): uniform quantization noise has
+        // variance Δ²/12 with Δ ∝ 2^{-b}, so energy halves 4× per extra bit.
+        let data: Vec<f32> = (0..20_000).map(|i| ((i as f32) * 0.7133).sin()).collect();
+        let energy = |bits: u8| {
+            let q = quantize(&data, bits).unwrap();
+            let d = q.dequantize();
+            data.iter().zip(&d).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+        };
+        let (e6, e8) = (energy(6), energy(8));
+        let ratio = e6 / e8;
+        // expect ≈ 4^2 = 16 (tolerate grid effects)
+        assert!((10.0..24.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn prop_roundtrip_error_bound() {
+        check("quantize error ≤ half step", 60, |rng| {
+            let len = rng.range_usize(1, 300);
+            let lo = rng.range_f64(-50.0, 0.0) as f32;
+            let hi = lo + rng.range_f64(0.001, 100.0) as f32;
+            let data = vec_f32(rng, len, lo, hi);
+            let bits = rng.range_usize(1, 17) as u8;
+            let q = quantize(&data, bits).unwrap();
+            let d = q.dequantize();
+            let half = q.params.step() / 2.0 + 1e-5;
+            for (a, b) in data.iter().zip(&d) {
+                assert!((a - b).abs() <= half, "a={a} b={b} half={half}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_codes_in_range() {
+        check("codes within levels", 40, |rng| {
+            let len = rng.range_usize(1, 100);
+            let data = vec_f32(rng, len, -10.0, 10.0);
+            let bits = rng.range_usize(1, 13) as u8;
+            let q = quantize(&data, bits).unwrap();
+            for &c in &q.codes {
+                assert!(c < q.params.levels());
+            }
+        });
+    }
+}

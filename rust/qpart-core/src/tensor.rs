@@ -1,0 +1,331 @@
+//! Dense tensors + the `.qt` on-disk tensor format.
+//!
+//! `.qt` is the interchange format between the build-time Python pipeline
+//! (weights, calibration batches, test sets) and the Rust runtime. It is a
+//! deliberately trivial little-endian container so both sides stay tiny:
+//!
+//! ```text
+//! magic   4 bytes   "QTEN"
+//! version u32       1
+//! dtype   u32       0 = f32, 1 = i32
+//! ndim    u32
+//! dims    ndim × u64
+//! data    prod(dims) × sizeof(dtype), little-endian, C-order
+//! ```
+
+use crate::error::{Error, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"QTEN";
+const VERSION: u32 = 1;
+
+/// Element type tags in the `.qt` header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    I32 = 1,
+}
+
+/// A dense, C-order, f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    dims: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Construct from dims + data; checks the element count.
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "dims {:?} imply {} elements, got {}",
+                dims,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { dims, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(dims: Vec<usize>) -> Tensor {
+        let n = dims.iter().product();
+        Tensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D element access (row-major).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.dims.len(), 2);
+        self.data[i * self.dims[1] + j]
+    }
+
+    /// Reinterpret with new dims (same element count).
+    pub fn reshape(mut self, dims: Vec<usize>) -> Result<Tensor> {
+        let n: usize = dims.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {} elements to {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        self.dims = dims;
+        Ok(self)
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.dims.len(), 2);
+        let w = self.dims[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Squared L2 norm (used by the quantization-noise model).
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Min/max of the data (quantizer range). Empty tensors return (0, 0).
+    pub fn min_max(&self) -> (f32, f32) {
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &x in &self.data {
+            mn = mn.min(x);
+            mx = mx.max(x);
+        }
+        if self.data.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (mn, mx)
+        }
+    }
+
+    /// Write in `.qt` format.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut buf = Vec::with_capacity(16 + 8 * self.dims.len() + 4 * self.data.len());
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&(DType::F32 as u32).to_le_bytes());
+        buf.extend_from_slice(&(self.dims.len() as u32).to_le_bytes());
+        for &d in &self.dims {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for &x in &self.data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// Load a `.qt` file; requires dtype f32.
+    pub fn load(path: impl AsRef<Path>) -> Result<Tensor> {
+        let (dtype, dims, raw) = load_raw(path.as_ref())?;
+        if dtype != DType::F32 {
+            return Err(Error::TensorFormat(format!(
+                "{}: expected f32, found {:?}",
+                path.as_ref().display(),
+                dtype
+            )));
+        }
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Tensor::new(dims, data)
+    }
+}
+
+/// Load an i32 `.qt` file (class labels).
+pub fn load_i32(path: impl AsRef<Path>) -> Result<(Vec<usize>, Vec<i32>)> {
+    let (dtype, dims, raw) = load_raw(path.as_ref())?;
+    if dtype != DType::I32 {
+        return Err(Error::TensorFormat(format!(
+            "{}: expected i32, found {:?}",
+            path.as_ref().display(),
+            dtype
+        )));
+    }
+    let data: Vec<i32> = raw
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(Error::TensorFormat("element count mismatch".into()));
+    }
+    Ok((dims, data))
+}
+
+/// Save an i32 `.qt` file.
+pub fn save_i32(path: impl AsRef<Path>, dims: &[usize], data: &[i32]) -> Result<()> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(Error::Shape("element count mismatch".into()));
+    }
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(DType::I32 as u32).to_le_bytes());
+    buf.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+    for &d in dims {
+        buf.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    for &x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, buf)?;
+    Ok(())
+}
+
+fn load_raw(path: &Path) -> Result<(DType, Vec<usize>, Vec<u8>)> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| Error::TensorFormat(format!("{}: {e}", path.display())))?;
+    let mut header = [0u8; 16];
+    f.read_exact(&mut header)
+        .map_err(|_| Error::TensorFormat(format!("{}: truncated header", path.display())))?;
+    if &header[0..4] != MAGIC {
+        return Err(Error::TensorFormat(format!("{}: bad magic", path.display())));
+    }
+    let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::TensorFormat(format!(
+            "{}: unsupported version {version}",
+            path.display()
+        )));
+    }
+    let dtype = match u32::from_le_bytes(header[8..12].try_into().unwrap()) {
+        0 => DType::F32,
+        1 => DType::I32,
+        d => return Err(Error::TensorFormat(format!("{}: unknown dtype {d}", path.display()))),
+    };
+    let ndim = u32::from_le_bytes(header[12..16].try_into().unwrap()) as usize;
+    if ndim > 8 {
+        return Err(Error::TensorFormat(format!("{}: ndim {ndim} too large", path.display())));
+    }
+    let mut dimbuf = vec![0u8; 8 * ndim];
+    f.read_exact(&mut dimbuf)
+        .map_err(|_| Error::TensorFormat(format!("{}: truncated dims", path.display())))?;
+    let dims: Vec<usize> = dimbuf
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+        .collect();
+    let n: usize = dims.iter().product();
+    if n > (1 << 31) {
+        return Err(Error::TensorFormat(format!("{}: tensor too large", path.display())));
+    }
+    let mut raw = vec![0u8; 4 * n];
+    f.read_exact(&mut raw)
+        .map_err(|_| Error::TensorFormat(format!("{}: truncated data", path.display())))?;
+    let mut extra = [0u8; 1];
+    if f.read(&mut extra)? != 0 {
+        return Err(Error::TensorFormat(format!("{}: trailing bytes", path.display())));
+    }
+    Ok((dtype, dims, raw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("qpart-tensor-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 1e-7, -1e7]).unwrap();
+        let p = tmpfile("rt.qt");
+        t.save(&p).unwrap();
+        let u = Tensor::load(&p).unwrap();
+        assert_eq!(t, u);
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let p = tmpfile("rt_i32.qt");
+        save_i32(&p, &[4], &[1, -2, 3, 2_000_000_000]).unwrap();
+        let (dims, data) = load_i32(&p).unwrap();
+        assert_eq!(dims, vec![4]);
+        assert_eq!(data, vec![1, -2, 3, 2_000_000_000]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::new(vec![2, 2], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn corrupted_files_rejected() {
+        let p = tmpfile("bad.qt");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(Tensor::load(&p).is_err());
+
+        // truncated data
+        let t = Tensor::zeros(vec![10]);
+        let good = tmpfile("good.qt");
+        t.save(&good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        let trunc = tmpfile("trunc.qt");
+        std::fs::write(&trunc, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(Tensor::load(&trunc).is_err());
+
+        // trailing garbage
+        let mut extra = bytes.clone();
+        extra.push(0);
+        let trail = tmpfile("trail.qt");
+        std::fs::write(&trail, &extra).unwrap();
+        assert!(Tensor::load(&trail).is_err());
+    }
+
+    #[test]
+    fn wrong_dtype_rejected() {
+        let p = tmpfile("i32_as_f32.qt");
+        save_i32(&p, &[2], &[1, 2]).unwrap();
+        assert!(Tensor::load(&p).is_err());
+    }
+
+    #[test]
+    fn min_max_and_norm() {
+        let t = Tensor::new(vec![3], vec![-1.0, 0.5, 2.0]).unwrap();
+        assert_eq!(t.min_max(), (-1.0, 2.0));
+        assert!((t.sq_norm() - (1.0 + 0.25 + 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reshape_and_row() {
+        let t = Tensor::new(vec![6], (0..6).map(|i| i as f32).collect()).unwrap();
+        let t = t.reshape(vec![2, 3]).unwrap();
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(t.at2(0, 2), 2.0);
+        assert!(t.clone().reshape(vec![4, 2]).is_err());
+    }
+}

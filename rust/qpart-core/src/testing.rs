@@ -1,0 +1,115 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `n` deterministic random cases; on failure
+//! it reports the failing case index and seed so the case can be replayed
+//! exactly. Generators are plain closures over [`Rng`], composed by hand —
+//! adequate for the invariants QPART tests (round-trips, monotonicity,
+//! conservation laws).
+//!
+//! ```
+//! use qpart_core::testing::check;
+//! check("addition commutes", 100, |rng| {
+//!     let (a, b) = (rng.uniform(), rng.uniform());
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Base seed for all property runs; change `QPART_PROP_SEED` env var to
+/// explore a different stream without recompiling.
+fn base_seed() -> u64 {
+    std::env::var("QPART_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE_F00D_0001)
+}
+
+/// Number of cases multiplier (set `QPART_PROP_CASES` to scale up locally).
+fn case_multiplier() -> usize {
+    std::env::var("QPART_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Run `prop` for `n` cases with independent deterministic RNG streams.
+/// Panics (with the case seed) on the first failing case.
+pub fn check<F>(name: &str, n: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng),
+{
+    let seed = base_seed();
+    let total = n * case_multiplier();
+    for case in 0..total {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{total} (case_seed={case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by its reported seed.
+pub fn replay<F>(case_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng),
+{
+    let mut rng = Rng::new(case_seed);
+    prop(&mut rng);
+}
+
+/// Generate a random `Vec<f32>` with values in [lo, hi).
+pub fn vec_f32(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..len)
+        .map(|_| rng.range_f64(lo as f64, hi as f64) as f32)
+        .collect()
+}
+
+/// Assert two floats are within `tol` (absolute) or `rel` (relative).
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64, rel: f64) {
+    let diff = (a - b).abs();
+    let scale = a.abs().max(b.abs());
+    assert!(
+        diff <= tol + rel * scale,
+        "not close: a={a} b={b} diff={diff} (tol={tol}, rel={rel})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("counts", 50, |_| count += 1);
+        assert_eq!(count, 50 * case_multiplier());
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        check("fails", 10, |rng| {
+            assert!(rng.uniform() < 0.5, "too big");
+        });
+    }
+
+    #[test]
+    fn assert_close_accepts_and_rejects() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9, 0.0);
+        let r = std::panic::catch_unwind(|| assert_close(1.0, 2.0, 1e-9, 1e-9));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! JSON-lines framing with a hard frame-size cap.
+
+use std::io::{BufRead, Write};
+
+/// Maximum accepted frame size (16 MiB — a full quantized mlp6 segment is
+/// well under 1 MiB; the cap only guards against malformed/hostile peers).
+pub const MAX_FRAME_BYTES: usize = 16 * 1024 * 1024;
+
+/// Framing errors.
+#[derive(Debug, thiserror::Error)]
+pub enum FrameError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("frame exceeds {MAX_FRAME_BYTES} bytes")]
+    TooLarge,
+    #[error("connection closed")]
+    Closed,
+    #[error("frame is not valid utf-8")]
+    Utf8,
+}
+
+/// Read one newline-terminated frame (without the newline).
+pub fn read_frame<R: BufRead>(r: &mut R) -> Result<String, FrameError> {
+    let mut buf = Vec::new();
+    let mut take = std::io::Read::take(&mut *r, MAX_FRAME_BYTES as u64 + 1);
+    let n = take.read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Err(FrameError::Closed);
+    }
+    if buf.len() > MAX_FRAME_BYTES {
+        return Err(FrameError::TooLarge);
+    }
+    if buf.last() == Some(&b'\n') {
+        buf.pop();
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf).map_err(|_| FrameError::Utf8)
+}
+
+/// Write one frame + newline and flush.
+pub fn write_frame<W: Write>(w: &mut W, frame: &str) -> Result<(), FrameError> {
+    debug_assert!(!frame.contains('\n'), "frames must be single-line");
+    w.write_all(frame.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn roundtrip_multiple_frames() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, r#"{"a":1}"#).unwrap();
+        write_frame(&mut buf, r#"{"b":2}"#).unwrap();
+        let mut r = BufReader::new(&buf[..]);
+        assert_eq!(read_frame(&mut r).unwrap(), r#"{"a":1}"#);
+        assert_eq!(read_frame(&mut r).unwrap(), r#"{"b":2}"#);
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn crlf_tolerated() {
+        let mut r = BufReader::new(&b"hello\r\n"[..]);
+        assert_eq!(read_frame(&mut r).unwrap(), "hello");
+    }
+
+    #[test]
+    fn oversized_rejected() {
+        let big = vec![b'x'; MAX_FRAME_BYTES + 10];
+        let mut r = BufReader::new(&big[..]);
+        assert!(matches!(read_frame(&mut r), Err(FrameError::TooLarge)));
+    }
+
+    #[test]
+    fn invalid_utf8_rejected() {
+        let mut r = BufReader::new(&b"\xff\xfe\n"[..]);
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Utf8)));
+    }
+}

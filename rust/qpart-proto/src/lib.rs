@@ -1,0 +1,18 @@
+//! # qpart-proto
+//!
+//! Wire protocol between edge devices and the QPART coordinator:
+//! newline-delimited JSON over TCP (JSON-lines). Every message is one line;
+//! binary payloads (bit-packed quantized segments) are base64-encoded.
+//!
+//! The request carries exactly the tuple of paper Algorithm 2's Require
+//! line: model id, accuracy budget `a`, channel capacity `r`, transmit
+//! power `π`, and the device compute profile `(γ_local, f_local, κ)`.
+
+pub mod base64;
+pub mod frame;
+pub mod messages;
+
+pub use frame::{read_frame, write_frame, FrameError, MAX_FRAME_BYTES};
+pub use messages::{
+    ErrorReply, InferReply, InferRequest, LayerBlob, PatternInfo, Request, Response, SegmentBlob,
+};

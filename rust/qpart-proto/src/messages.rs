@@ -1,0 +1,608 @@
+//! Protocol messages (manual JSON mapping, tagged by a `"type"` field).
+//!
+//! Serving flow (two-phase, mirroring Fig. 1/2 of the paper):
+//!
+//! 1. device → `infer` (model, accuracy budget, channel + compute profile)
+//! 2. server → `segment` (the quantized, bit-packed model segment + the
+//!    chosen pattern) — the downlink the paper's Eq. 14 charges for
+//! 3. device runs layers `1..=p` locally, → `activation` (quantized,
+//!    bit-packed boundary activation) — the uplink
+//! 4. server finishes layers `p+1..=L`, → `result` (prediction + logits)
+//!
+//! `simulate` collapses 1–4 into one message for load generation: the
+//! server plays both roles and reports the cost breakdown.
+
+use crate::base64;
+use qpart_core::json::{parse, Value};
+use qpart_core::{Error, Result};
+
+/// Requests a client can send.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Ping,
+    ListModels,
+    Stats,
+    Infer(InferRequest),
+    Activation(ActivationUpload),
+    Simulate(SimulateRequest),
+}
+
+/// Paper Algorithm 2's Require-tuple.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferRequest {
+    pub model: String,
+    /// Max acceptable accuracy degradation `a` (fraction).
+    pub accuracy_budget: f64,
+    /// Reported channel capacity `r` (bit/s).
+    pub channel_capacity_bps: f64,
+    /// Transmit power `π` (W).
+    pub tx_power_w: f64,
+    /// `f_local` (Hz).
+    pub clock_hz: f64,
+    /// `γ_local` (cycles/MAC).
+    pub cycles_per_mac: f64,
+    /// `κ` energy-efficiency parameter.
+    pub kappa: f64,
+    /// Device memory capacity (bits).
+    pub memory_bits: u64,
+    /// Objective weights ω/τ/η (None → server defaults).
+    pub weights: Option<(f64, f64, f64)>,
+}
+
+/// Quantized boundary activation upload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActivationUpload {
+    pub session: u64,
+    pub bits: u8,
+    pub qmin: f32,
+    pub step: f32,
+    pub dims: Vec<usize>,
+    /// Bit-packed codes.
+    pub packed: Vec<u8>,
+}
+
+/// One-shot request: the server simulates the device side too.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimulateRequest {
+    pub req: InferRequest,
+    /// Raw f32 input (little-endian bytes).
+    pub input: Vec<f32>,
+    pub input_dims: Vec<usize>,
+}
+
+/// Responses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Pong,
+    Models(Vec<ModelInfo>),
+    Stats(Value),
+    Segment(InferReply),
+    Result(ResultReply),
+    Error(ErrorReply),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub name: String,
+    pub arch: String,
+    pub dataset: String,
+    pub layers: usize,
+    pub params: u64,
+    pub test_accuracy: f64,
+}
+
+/// The chosen pattern, reported back to the device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PatternInfo {
+    pub partition: usize,
+    pub weight_bits: Vec<u8>,
+    pub activation_bits: u8,
+    pub accuracy_level: f64,
+    pub predicted_degradation: f64,
+    pub objective: f64,
+}
+
+/// One quantized layer on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerBlob {
+    pub layer: usize,
+    pub bits: u8,
+    pub w_dims: Vec<usize>,
+    pub w_qmin: f32,
+    pub w_step: f32,
+    pub w_packed: Vec<u8>,
+    pub b_qmin: f32,
+    pub b_step: f32,
+    pub b_len: usize,
+    pub b_packed: Vec<u8>,
+}
+
+/// The shipped model segment.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SegmentBlob {
+    pub layers: Vec<LayerBlob>,
+}
+
+/// Phase-1 reply: session + pattern + segment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferReply {
+    pub session: u64,
+    pub model: String,
+    pub pattern: PatternInfo,
+    pub segment: SegmentBlob,
+}
+
+/// Phase-2 (or simulate) reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultReply {
+    pub session: u64,
+    pub prediction: i32,
+    pub logits: Vec<f64>,
+    /// Cost breakdown (simulate only): the Eq. 17 terms.
+    pub costs: Option<Value>,
+    /// Server-side wall-clock microseconds spent on this request.
+    pub server_us: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorReply {
+    pub code: String,
+    pub message: String,
+}
+
+// ---------------------------------------------------------------------------
+// f32 <-> bytes helpers
+// ---------------------------------------------------------------------------
+
+/// Encode f32s as base64(LE bytes).
+pub fn f32s_to_b64(xs: &[f32]) -> String {
+    let mut bytes = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    base64::encode(&bytes)
+}
+
+/// Decode base64(LE bytes) to f32s.
+pub fn b64_to_f32s(s: &str) -> Result<Vec<f32>> {
+    let bytes = base64::decode(s).map_err(|e| Error::InvalidArg(format!("base64: {e}")))?;
+    if bytes.len() % 4 != 0 {
+        return Err(Error::InvalidArg("f32 payload not a multiple of 4 bytes".into()));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn usize_arr(v: &Value, key: &str) -> Result<Vec<usize>> {
+    v.req_arr(key)?
+        .iter()
+        .map(|x| {
+            x.as_i64()
+                .and_then(|i| usize::try_from(i).ok())
+                .ok_or_else(|| Error::schema(key, "expected index array"))
+        })
+        .collect()
+}
+
+fn dims_json(dims: &[usize]) -> Value {
+    Value::Arr(dims.iter().map(|&d| d.into()).collect())
+}
+
+fn bytes_field(v: &Value, key: &str) -> Result<Vec<u8>> {
+    base64::decode(v.req_str(key)?).map_err(|e| Error::schema(key, format!("base64: {e}")))
+}
+
+// ---------------------------------------------------------------------------
+// Request (de)serialization
+// ---------------------------------------------------------------------------
+
+impl Request {
+    pub fn to_json(&self) -> Value {
+        match self {
+            Request::Ping => Value::obj([("type", "ping".into())]),
+            Request::ListModels => Value::obj([("type", "list_models".into())]),
+            Request::Stats => Value::obj([("type", "stats".into())]),
+            Request::Infer(r) => {
+                let mut v = r.to_json();
+                v.set("type", "infer".into());
+                v
+            }
+            Request::Activation(a) => Value::obj([
+                ("type", "activation".into()),
+                ("session", a.session.into()),
+                ("bits", (a.bits as u64).into()),
+                ("qmin", (a.qmin as f64).into()),
+                ("step", (a.step as f64).into()),
+                ("dims", dims_json(&a.dims)),
+                ("packed", base64::encode(&a.packed).into()),
+            ]),
+            Request::Simulate(s) => {
+                let mut v = s.req.to_json();
+                v.set("type", "simulate".into());
+                v.set("input", f32s_to_b64(&s.input).into());
+                v.set("input_dims", dims_json(&s.input_dims));
+                v
+            }
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Request> {
+        match v.req_str("type")? {
+            "ping" => Ok(Request::Ping),
+            "list_models" => Ok(Request::ListModels),
+            "stats" => Ok(Request::Stats),
+            "infer" => Ok(Request::Infer(InferRequest::from_json(v)?)),
+            "activation" => Ok(Request::Activation(ActivationUpload {
+                session: v.req_u64("session")?,
+                bits: v.req_u64("bits")? as u8,
+                qmin: v.req_f64("qmin")? as f32,
+                step: v.req_f64("step")? as f32,
+                dims: usize_arr(v, "dims")?,
+                packed: bytes_field(v, "packed")?,
+            })),
+            "simulate" => Ok(Request::Simulate(SimulateRequest {
+                req: InferRequest::from_json(v)?,
+                input: b64_to_f32s(v.req_str("input")?)?,
+                input_dims: usize_arr(v, "input_dims")?,
+            })),
+            other => Err(Error::schema("type", format!("unknown request '{other}'"))),
+        }
+    }
+
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn from_line(line: &str) -> Result<Request> {
+        Request::from_json(&parse(line)?)
+    }
+}
+
+impl InferRequest {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj([
+            ("model", self.model.as_str().into()),
+            ("accuracy_budget", self.accuracy_budget.into()),
+            ("channel_capacity_bps", self.channel_capacity_bps.into()),
+            ("tx_power_w", self.tx_power_w.into()),
+            ("clock_hz", self.clock_hz.into()),
+            ("cycles_per_mac", self.cycles_per_mac.into()),
+            ("kappa", self.kappa.into()),
+            ("memory_bits", self.memory_bits.into()),
+        ]);
+        if let Some((o, t, e)) = self.weights {
+            v.set("weights", Value::num_arr(&[o, t, e]));
+        }
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<InferRequest> {
+        let weights = match v.get("weights") {
+            Some(w) => {
+                let arr = w
+                    .as_arr()
+                    .ok_or_else(|| Error::schema("weights", "expected [omega, tau, eta]"))?;
+                if arr.len() != 3 {
+                    return Err(Error::schema("weights", "expected 3 numbers"));
+                }
+                Some((
+                    arr[0].as_f64().ok_or_else(|| Error::schema("weights", "numbers"))?,
+                    arr[1].as_f64().ok_or_else(|| Error::schema("weights", "numbers"))?,
+                    arr[2].as_f64().ok_or_else(|| Error::schema("weights", "numbers"))?,
+                ))
+            }
+            None => None,
+        };
+        Ok(InferRequest {
+            model: v.req_str("model")?.to_string(),
+            accuracy_budget: v.req_f64("accuracy_budget")?,
+            channel_capacity_bps: v.req_f64("channel_capacity_bps")?,
+            tx_power_w: v.opt_f64("tx_power_w", 1.0),
+            clock_hz: v.opt_f64("clock_hz", 200e6),
+            cycles_per_mac: v.opt_f64("cycles_per_mac", 5.0),
+            kappa: v.opt_f64("kappa", 3e-27),
+            memory_bits: v.opt_f64("memory_bits", 2.147_483_648e9) as u64,
+            weights,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Response (de)serialization
+// ---------------------------------------------------------------------------
+
+impl Response {
+    pub fn to_json(&self) -> Value {
+        match self {
+            Response::Pong => Value::obj([("type", "pong".into())]),
+            Response::Models(models) => Value::obj([
+                ("type", "models".into()),
+                (
+                    "models",
+                    Value::Arr(
+                        models
+                            .iter()
+                            .map(|m| {
+                                Value::obj([
+                                    ("name", m.name.as_str().into()),
+                                    ("arch", m.arch.as_str().into()),
+                                    ("dataset", m.dataset.as_str().into()),
+                                    ("layers", m.layers.into()),
+                                    ("params", m.params.into()),
+                                    ("test_accuracy", m.test_accuracy.into()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Response::Stats(v) => {
+                let mut o = Value::obj([("type", "stats".into())]);
+                o.set("stats", v.clone());
+                o
+            }
+            Response::Segment(r) => {
+                let layers: Vec<Value> = r
+                    .segment
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        Value::obj([
+                            ("layer", l.layer.into()),
+                            ("bits", (l.bits as u64).into()),
+                            ("w_dims", dims_json(&l.w_dims)),
+                            ("w_qmin", (l.w_qmin as f64).into()),
+                            ("w_step", (l.w_step as f64).into()),
+                            ("w_packed", base64::encode(&l.w_packed).into()),
+                            ("b_qmin", (l.b_qmin as f64).into()),
+                            ("b_step", (l.b_step as f64).into()),
+                            ("b_len", l.b_len.into()),
+                            ("b_packed", base64::encode(&l.b_packed).into()),
+                        ])
+                    })
+                    .collect();
+                Value::obj([
+                    ("type", "segment".into()),
+                    ("session", r.session.into()),
+                    ("model", r.model.as_str().into()),
+                    ("pattern", r.pattern.to_json()),
+                    ("layers", Value::Arr(layers)),
+                ])
+            }
+            Response::Result(r) => {
+                let mut v = Value::obj([
+                    ("type", "result".into()),
+                    ("session", r.session.into()),
+                    ("prediction", (r.prediction as i64).into()),
+                    ("logits", Value::num_arr(&r.logits)),
+                    ("server_us", r.server_us.into()),
+                ]);
+                if let Some(c) = &r.costs {
+                    v.set("costs", c.clone());
+                }
+                v
+            }
+            Response::Error(e) => Value::obj([
+                ("type", "error".into()),
+                ("code", e.code.as_str().into()),
+                ("message", e.message.as_str().into()),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Response> {
+        match v.req_str("type")? {
+            "pong" => Ok(Response::Pong),
+            "models" => {
+                let mut models = Vec::new();
+                for m in v.req_arr("models")? {
+                    models.push(ModelInfo {
+                        name: m.req_str("name")?.to_string(),
+                        arch: m.req_str("arch")?.to_string(),
+                        dataset: m.req_str("dataset")?.to_string(),
+                        layers: m.req_usize("layers")?,
+                        params: m.req_u64("params")?,
+                        test_accuracy: m.opt_f64("test_accuracy", f64::NAN),
+                    });
+                }
+                Ok(Response::Models(models))
+            }
+            "stats" => Ok(Response::Stats(v.req("stats")?.clone())),
+            "segment" => {
+                let mut layers = Vec::new();
+                for l in v.req_arr("layers")? {
+                    layers.push(LayerBlob {
+                        layer: l.req_usize("layer")?,
+                        bits: l.req_u64("bits")? as u8,
+                        w_dims: usize_arr(l, "w_dims")?,
+                        w_qmin: l.req_f64("w_qmin")? as f32,
+                        w_step: l.req_f64("w_step")? as f32,
+                        w_packed: bytes_field(l, "w_packed")?,
+                        b_qmin: l.req_f64("b_qmin")? as f32,
+                        b_step: l.req_f64("b_step")? as f32,
+                        b_len: l.req_usize("b_len")?,
+                        b_packed: bytes_field(l, "b_packed")?,
+                    });
+                }
+                Ok(Response::Segment(InferReply {
+                    session: v.req_u64("session")?,
+                    model: v.req_str("model")?.to_string(),
+                    pattern: PatternInfo::from_json(v.req("pattern")?)?,
+                    segment: SegmentBlob { layers },
+                }))
+            }
+            "result" => Ok(Response::Result(ResultReply {
+                session: v.req_u64("session")?,
+                prediction: v.req_f64("prediction")? as i32,
+                logits: v.req_f64_arr("logits")?,
+                costs: v.get("costs").cloned(),
+                server_us: v.opt_f64("server_us", 0.0) as u64,
+            })),
+            "error" => Ok(Response::Error(ErrorReply {
+                code: v.req_str("code")?.to_string(),
+                message: v.req_str("message")?.to_string(),
+            })),
+            other => Err(Error::schema("type", format!("unknown response '{other}'"))),
+        }
+    }
+
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn from_line(line: &str) -> Result<Response> {
+        Response::from_json(&parse(line)?)
+    }
+}
+
+impl PatternInfo {
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("partition", self.partition.into()),
+            (
+                "weight_bits",
+                Value::Arr(self.weight_bits.iter().map(|&b| (b as u64).into()).collect()),
+            ),
+            ("activation_bits", (self.activation_bits as u64).into()),
+            ("accuracy_level", self.accuracy_level.into()),
+            ("predicted_degradation", self.predicted_degradation.into()),
+            ("objective", self.objective.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<PatternInfo> {
+        Ok(PatternInfo {
+            partition: v.req_usize("partition")?,
+            weight_bits: v
+                .req_arr("weight_bits")?
+                .iter()
+                .map(|b| {
+                    b.as_i64()
+                        .and_then(|x| u8::try_from(x).ok())
+                        .ok_or_else(|| Error::schema("weight_bits", "expected bytes"))
+                })
+                .collect::<Result<_>>()?,
+            activation_bits: v.req_u64("activation_bits")? as u8,
+            accuracy_level: v.req_f64("accuracy_level")?,
+            predicted_degradation: v.opt_f64("predicted_degradation", 0.0),
+            objective: v.opt_f64("objective", f64::NAN),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn infer_req() -> InferRequest {
+        InferRequest {
+            model: "mlp6".into(),
+            accuracy_budget: 0.01,
+            channel_capacity_bps: 200e6,
+            tx_power_w: 1.0,
+            clock_hz: 200e6,
+            cycles_per_mac: 5.0,
+            kappa: 3e-27,
+            memory_bits: 1 << 31,
+            weights: Some((1.0, 1.0, 1.0)),
+        }
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        for req in [
+            Request::Ping,
+            Request::ListModels,
+            Request::Stats,
+            Request::Infer(infer_req()),
+            Request::Activation(ActivationUpload {
+                session: 42,
+                bits: 6,
+                qmin: -1.5,
+                step: 0.01,
+                dims: vec![1, 128],
+                packed: vec![1, 2, 3, 255],
+            }),
+            Request::Simulate(SimulateRequest {
+                req: infer_req(),
+                input: vec![0.5, -0.25, 1e-3],
+                input_dims: vec![1, 3],
+            }),
+        ] {
+            let line = req.to_line();
+            assert!(!line.contains('\n'));
+            let back = Request::from_line(&line).unwrap();
+            assert_eq!(back, req, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let seg = Response::Segment(InferReply {
+            session: 7,
+            model: "mlp6".into(),
+            pattern: PatternInfo {
+                partition: 3,
+                weight_bits: vec![4, 5, 6],
+                activation_bits: 7,
+                accuracy_level: 0.01,
+                predicted_degradation: 0.009,
+                objective: 0.123,
+            },
+            segment: SegmentBlob {
+                layers: vec![LayerBlob {
+                    layer: 1,
+                    bits: 4,
+                    w_dims: vec![784, 512],
+                    w_qmin: -0.3,
+                    w_step: 0.004,
+                    w_packed: vec![0xDE, 0xAD],
+                    b_qmin: -0.1,
+                    b_step: 0.002,
+                    b_len: 512,
+                    b_packed: vec![0xBE, 0xEF],
+                }],
+            },
+        });
+        for resp in [
+            Response::Pong,
+            seg,
+            Response::Result(ResultReply {
+                session: 7,
+                prediction: 3,
+                logits: vec![0.1, 0.9],
+                costs: Some(Value::obj([("objective", 1.5.into())])),
+                server_us: 1234,
+            }),
+            Response::Error(ErrorReply { code: "infeasible".into(), message: "x".into() }),
+            Response::Models(vec![ModelInfo {
+                name: "mlp6".into(),
+                arch: "mlp6".into(),
+                dataset: "digits".into(),
+                layers: 6,
+                params: 567434,
+                test_accuracy: 0.97,
+            }]),
+        ] {
+            let line = resp.to_line();
+            let back = Response::from_line(&line).unwrap();
+            assert_eq!(back, resp, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn f32_b64_roundtrip() {
+        let xs = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE];
+        assert_eq!(b64_to_f32s(&f32s_to_b64(&xs)).unwrap(), xs);
+        assert!(b64_to_f32s("AAA").is_err()); // 2 bytes
+    }
+
+    #[test]
+    fn unknown_types_rejected() {
+        assert!(Request::from_line(r#"{"type":"warp"}"#).is_err());
+        assert!(Response::from_line(r#"{"type":"warp"}"#).is_err());
+        assert!(Request::from_line("not json").is_err());
+    }
+}

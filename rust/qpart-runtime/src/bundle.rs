@@ -1,0 +1,336 @@
+//! The artifact bundle: manifest parsing + lazy artifact loading.
+//!
+//! Layout (produced by `python/compile/aot.py`, see DESIGN.md §7):
+//!
+//! ```text
+//! artifacts/
+//!   manifest.json
+//!   calibration/<model>.json
+//!   weights/<model>/l{i}_{w,b}.qt
+//!   ae/<model>/p{b}_{we,be,wd,bd}.qt
+//!   hlo/<arch>/{q,f32}_l{i}_b{B}.hlo.txt, full_b32.hlo.txt, ae_*_p{b}_b{B}.hlo.txt
+//!   data/<dataset>_test_{x,y}.qt
+//! ```
+
+use crate::error::{Error, Result};
+use qpart_core::accuracy::CalibrationTable;
+use qpart_core::json::{parse, Value};
+use qpart_core::model::ModelSpec;
+use qpart_core::tensor::{load_i32, Tensor};
+use std::path::{Path, PathBuf};
+
+/// One model instance (arch + trained weights + calibration + dataset).
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub arch: String,
+    pub dataset: String,
+    pub weights_dir: String,
+    pub calibration: String,
+    /// Full-precision test accuracy measured at build time.
+    pub test_accuracy: f64,
+    /// Autoencoder-baseline boundaries, if trained for this model.
+    pub ae_boundaries: Vec<AeBoundary>,
+    pub ae_dir: Option<String>,
+}
+
+/// One trained autoencoder (baseline) at a partition boundary.
+#[derive(Debug, Clone, Copy)]
+pub struct AeBoundary {
+    pub boundary: usize,
+    pub bottleneck: usize,
+}
+
+/// One lowered executable in the bundle.
+#[derive(Debug, Clone)]
+pub struct ExecEntry {
+    pub name: String,
+    pub hlo: String,
+    pub arch: String,
+    /// `qlayer`, `f32layer`, `full`, `ae_enc`, `ae_dec`.
+    pub kind: String,
+    /// 1-based layer for `qlayer`/`f32layer`.
+    pub layer: Option<usize>,
+    /// Boundary for `ae_enc`/`ae_dec`.
+    pub boundary: Option<usize>,
+    pub batch: usize,
+    pub has_skip: bool,
+}
+
+/// One held-out evaluation dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetEntry {
+    pub name: String,
+    pub x: String,
+    pub y: String,
+    pub n: usize,
+    pub classes: usize,
+}
+
+/// Trained weights of one model (w/b per layer, natural shapes).
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    /// `(w, b)` per layer; conv `w` is `[C_in, k, k, C_out]`.
+    pub layers: Vec<(Tensor, Tensor)>,
+}
+
+impl ModelWeights {
+    /// Flattened (matmul-layout) weight view for layer `l` (1-based):
+    /// linear `[D, G]` kept as-is, conv reshaped `[C_in·k·k, C_out]`
+    /// (same memory order, so this is just a dims change).
+    pub fn flat_w(&self, l: usize) -> Result<Tensor> {
+        let (w, _) = &self.layers[l - 1];
+        let dims = w.dims();
+        match dims.len() {
+            2 => Ok(w.clone()),
+            4 => {
+                let rows = dims[0] * dims[1] * dims[2];
+                Ok(w.clone().reshape(vec![rows, dims[3]]).map_err(Error::Core)?)
+            }
+            other => Err(Error::Shape(format!("layer {l}: unexpected weight rank {other}"))),
+        }
+    }
+
+    pub fn bias(&self, l: usize) -> &Tensor {
+        &self.layers[l - 1].1
+    }
+}
+
+/// The whole artifact bundle.
+#[derive(Debug)]
+pub struct Bundle {
+    pub root: PathBuf,
+    pub archs: Vec<ModelSpec>,
+    pub models: Vec<ModelEntry>,
+    pub executables: Vec<ExecEntry>,
+    pub datasets: Vec<DatasetEntry>,
+    /// Accuracy-degradation levels the calibration tables cover.
+    pub levels: Vec<f64>,
+}
+
+impl Bundle {
+    /// Load and validate `root/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Bundle> {
+        let root = root.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(root.join("manifest.json")).map_err(|e| {
+            Error::NotInBundle(format!("{}: {e} (run `make artifacts`)", root.display()))
+        })?;
+        let v = parse(&text).map_err(Error::Core)?;
+
+        let mut archs = Vec::new();
+        for a in v.req_arr("archs").map_err(Error::Core)? {
+            archs.push(ModelSpec::from_json(a).map_err(Error::Core)?);
+        }
+
+        let mut models = Vec::new();
+        for m in v.req_arr("models").map_err(Error::Core)? {
+            let (ae_boundaries, ae_dir) = match m.get("ae") {
+                Some(ae) if !ae.is_null() => {
+                    let mut bs = Vec::new();
+                    for b in ae.req_arr("boundaries").map_err(Error::Core)? {
+                        bs.push(AeBoundary {
+                            boundary: b.req_usize("boundary").map_err(Error::Core)?,
+                            bottleneck: b.req_usize("bottleneck").map_err(Error::Core)?,
+                        });
+                    }
+                    (bs, Some(ae.req_str("dir").map_err(Error::Core)?.to_string()))
+                }
+                _ => (Vec::new(), None),
+            };
+            models.push(ModelEntry {
+                name: m.req_str("name").map_err(Error::Core)?.to_string(),
+                arch: m.req_str("arch").map_err(Error::Core)?.to_string(),
+                dataset: m.req_str("dataset").map_err(Error::Core)?.to_string(),
+                weights_dir: m.req_str("weights_dir").map_err(Error::Core)?.to_string(),
+                calibration: m.req_str("calibration").map_err(Error::Core)?.to_string(),
+                test_accuracy: m.opt_f64("test_accuracy", f64::NAN),
+                ae_boundaries,
+                ae_dir,
+            });
+        }
+
+        let mut executables = Vec::new();
+        for e in v.req_arr("executables").map_err(Error::Core)? {
+            executables.push(ExecEntry {
+                name: e.req_str("name").map_err(Error::Core)?.to_string(),
+                hlo: e.req_str("hlo").map_err(Error::Core)?.to_string(),
+                arch: e.req_str("arch").map_err(Error::Core)?.to_string(),
+                kind: e.req_str("kind").map_err(Error::Core)?.to_string(),
+                layer: e.get("layer").and_then(Value::as_i64).map(|x| x as usize),
+                boundary: e.get("boundary").and_then(Value::as_i64).map(|x| x as usize),
+                batch: e.req_usize("batch").map_err(Error::Core)?,
+                has_skip: e.opt_bool("has_skip", false),
+            });
+        }
+
+        let mut datasets = Vec::new();
+        for d in v.req_arr("datasets").map_err(Error::Core)? {
+            datasets.push(DatasetEntry {
+                name: d.req_str("name").map_err(Error::Core)?.to_string(),
+                x: d.req_str("x").map_err(Error::Core)?.to_string(),
+                y: d.req_str("y").map_err(Error::Core)?.to_string(),
+                n: d.req_usize("n").map_err(Error::Core)?,
+                classes: d.req_usize("classes").map_err(Error::Core)?,
+            });
+        }
+
+        let levels = v.req_f64_arr("levels").map_err(Error::Core)?;
+        let bundle = Bundle { root, archs, models, executables, datasets, levels };
+        bundle.validate()?;
+        Ok(bundle)
+    }
+
+    /// Cross-checks: every model's arch exists; every model's calibration
+    /// file and weight files exist on disk; each arch has its executables.
+    pub fn validate(&self) -> Result<()> {
+        for m in &self.models {
+            let arch = self.arch(&m.arch)?;
+            for l in 1..=arch.num_layers() {
+                let p = self.root.join(&m.weights_dir).join(format!("l{l}_w.qt"));
+                if !p.exists() {
+                    return Err(Error::NotInBundle(format!("{}", p.display())));
+                }
+            }
+            if !self.root.join(&m.calibration).exists() {
+                return Err(Error::NotInBundle(m.calibration.clone()));
+            }
+            if self.datasets.iter().all(|d| d.name != m.dataset) {
+                return Err(Error::NotInBundle(format!("dataset {}", m.dataset)));
+            }
+        }
+        for e in &self.executables {
+            if !self.root.join(&e.hlo).exists() {
+                return Err(Error::NotInBundle(e.hlo.clone()));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ModelSpec> {
+        self.archs
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::NotInBundle(format!("arch {name}")))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| Error::NotInBundle(format!("model {name}")))
+    }
+
+    pub fn dataset_entry(&self, name: &str) -> Result<&DatasetEntry> {
+        self.datasets
+            .iter()
+            .find(|d| d.name == name)
+            .ok_or_else(|| Error::NotInBundle(format!("dataset {name}")))
+    }
+
+    /// Find a layer/full/AE executable.
+    pub fn find_exec(
+        &self,
+        arch: &str,
+        kind: &str,
+        layer_or_boundary: Option<usize>,
+        batch: usize,
+    ) -> Result<&ExecEntry> {
+        self.executables
+            .iter()
+            .find(|e| {
+                e.arch == arch
+                    && e.kind == kind
+                    && e.batch == batch
+                    && match kind {
+                        "qlayer" | "f32layer" => e.layer == layer_or_boundary,
+                        "ae_enc" | "ae_dec" => e.boundary == layer_or_boundary,
+                        _ => true,
+                    }
+            })
+            .ok_or_else(|| {
+                Error::MissingExec(format!("{arch}/{kind}/{layer_or_boundary:?}/b{batch}"))
+            })
+    }
+
+    /// Load a model's calibration table.
+    pub fn calibration(&self, model: &str) -> Result<CalibrationTable> {
+        let m = self.model(model)?;
+        let text = std::fs::read_to_string(self.root.join(&m.calibration))?;
+        let v = parse(&text).map_err(Error::Core)?;
+        let mut table = CalibrationTable::from_json(&v).map_err(Error::Core)?;
+        // calibration.json is keyed by arch name; re-key to the instance
+        table.model = self.arch(&m.arch)?.name.clone();
+        Ok(table)
+    }
+
+    /// Load a model's trained weights.
+    pub fn weights(&self, model: &str) -> Result<ModelWeights> {
+        let m = self.model(model)?;
+        let arch = self.arch(&m.arch)?;
+        let dir = self.root.join(&m.weights_dir);
+        let mut layers = Vec::with_capacity(arch.num_layers());
+        for l in 1..=arch.num_layers() {
+            let w = Tensor::load(dir.join(format!("l{l}_w.qt"))).map_err(Error::Core)?;
+            let b = Tensor::load(dir.join(format!("l{l}_b.qt"))).map_err(Error::Core)?;
+            layers.push((w, b));
+        }
+        Ok(ModelWeights { layers })
+    }
+
+    /// Load autoencoder params at `boundary`: (we, be, wd, bd).
+    pub fn ae_params(&self, model: &str, boundary: usize) -> Result<[Tensor; 4]> {
+        let m = self.model(model)?;
+        let dir = m
+            .ae_dir
+            .as_ref()
+            .ok_or_else(|| Error::NotInBundle(format!("model {model} has no AE baseline")))?;
+        let dir = self.root.join(dir);
+        let load = |k: &str| Tensor::load(dir.join(format!("p{boundary}_{k}.qt")));
+        Ok([
+            load("we").map_err(Error::Core)?,
+            load("be").map_err(Error::Core)?,
+            load("wd").map_err(Error::Core)?,
+            load("bd").map_err(Error::Core)?,
+        ])
+    }
+
+    /// Load a held-out dataset: (x, labels).
+    pub fn dataset(&self, name: &str) -> Result<(Tensor, Vec<i32>)> {
+        let d = self.dataset_entry(name)?;
+        let x = Tensor::load(self.root.join(&d.x)).map_err(Error::Core)?;
+        let (dims, y) = load_i32(self.root.join(&d.y)).map_err(Error::Core)?;
+        if dims.iter().product::<usize>() != x.dims()[0] {
+            return Err(Error::Shape(format!(
+                "dataset {name}: {} labels for {} samples",
+                dims.iter().product::<usize>(),
+                x.dims()[0]
+            )));
+        }
+        Ok((x, y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Bundle tests that need real artifacts live in rust/qpart/tests/.
+    use super::*;
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Bundle::load("/nonexistent/path").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn flat_w_reshapes_conv() {
+        let w = Tensor::zeros(vec![3, 3, 3, 8]);
+        let b = Tensor::zeros(vec![8]);
+        let mw = ModelWeights { layers: vec![(w, b)] };
+        let flat = mw.flat_w(1).unwrap();
+        assert_eq!(flat.dims(), &[27, 8]);
+        let w2 = Tensor::zeros(vec![16, 4]);
+        let mw2 = ModelWeights { layers: vec![(w2, Tensor::zeros(vec![4]))] };
+        assert_eq!(mw2.flat_w(1).unwrap().dims(), &[16, 4]);
+    }
+}

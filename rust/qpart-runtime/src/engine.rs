@@ -1,0 +1,201 @@
+//! PJRT engine: compile HLO-text artifacts, execute with f32 tensors.
+//!
+//! Follows the reference wiring (`/opt/xla-example/load_hlo`): HLO *text* is
+//! the interchange format (jax ≥ 0.5 emits 64-bit-id protos that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids), every
+//! executable returns a 1-tuple (`return_tuple=True` at lowering), and the
+//! client is the single-device CPU PJRT plugin.
+
+use crate::error::{Error, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// A host-side f32 tensor (dims + row-major data) — the runtime's lingua
+/// franca between `qpart_core::tensor::Tensor`, literals, and wire buffers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "dims {:?} imply {n} elements, got {}",
+                dims,
+                data.len()
+            )));
+        }
+        Ok(HostTensor { dims, data })
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> HostTensor {
+        let n = dims.iter().product();
+        HostTensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn scalar2(v: f32) -> HostTensor {
+        HostTensor { dims: vec![1, 1], data: vec![v] }
+    }
+
+    /// Leading-dim length (batch size).
+    pub fn batch(&self) -> usize {
+        self.dims.first().copied().unwrap_or(0)
+    }
+
+    /// Elements per batch row.
+    pub fn row_elems(&self) -> usize {
+        self.dims[1..].iter().product()
+    }
+
+    /// Rows `lo..hi` (shares the non-batch dims).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> HostTensor {
+        let re = self.row_elems();
+        let mut dims = self.dims.clone();
+        dims[0] = hi - lo;
+        HostTensor { dims, data: self.data[lo * re..hi * re].to_vec() }
+    }
+
+    /// Rows `lo..hi`, zero-padded up to `rows` (for fixed-batch executables).
+    pub fn slice_rows_padded(&self, lo: usize, hi: usize, rows: usize) -> HostTensor {
+        let re = self.row_elems();
+        let mut dims = self.dims.clone();
+        dims[0] = rows;
+        let mut data = vec![0.0f32; rows * re];
+        data[..(hi - lo) * re].copy_from_slice(&self.data[lo * re..hi * re]);
+        HostTensor { dims, data }
+    }
+
+    /// Convert to an XLA literal (copies once; cache the result when the
+    /// tensor is reused across calls — see `PreparedSegment`).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.dims,
+            bytes,
+        )?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        HostTensor::new(dims, data)
+    }
+}
+
+impl From<qpart_core::tensor::Tensor> for HostTensor {
+    fn from(t: qpart_core::tensor::Tensor) -> Self {
+        HostTensor { dims: t.dims().to_vec(), data: t.into_data() }
+    }
+}
+
+/// A compiled executable (1-tuple output convention).
+pub struct Exec {
+    exe: xla::PjRtLoadedExecutable,
+    /// Identifier for diagnostics (artifact name or path).
+    pub name: String,
+}
+
+impl Exec {
+    /// Execute with host tensors; returns the single output tensor.
+    pub fn run(&self, inputs: &[&HostTensor]) -> Result<HostTensor> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.run_literals(&refs)
+    }
+
+    /// Execute with pre-built literals (hot path: cached weight/code
+    /// literals skip the per-call host->literal copy).
+    pub fn run_literals(&self, inputs: &[&xla::Literal]) -> Result<HostTensor> {
+        let result = self.exe.execute::<&xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        HostTensor::from_literal(&out)
+    }
+}
+
+/// PJRT CPU client + executable cache.
+///
+/// Not `Send`/`Sync` (wraps raw PJRT pointers); the coordinator owns one
+/// engine on a dedicated inference thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Exec>>>,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu()?, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile an HLO text file (no caching).
+    pub fn compile_file(&self, path: &Path, name: &str) -> Result<Exec> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Shape(format!("non-utf8 path {path:?}")))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Exec { exe, name: name.to_string() })
+    }
+
+    /// Compile with caching keyed by `name`.
+    pub fn load(&self, path: &Path, name: &str) -> Result<Rc<Exec>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let exec = Rc::new(self.compile_file(path, name)?);
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exec));
+        Ok(exec)
+    }
+
+    /// Number of cached executables (diagnostics).
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Drop all cached executables.
+    pub fn clear_cache(&self) {
+        self.cache.borrow_mut().clear();
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let t = HostTensor::zeros(vec![4, 2]);
+        assert_eq!(t.batch(), 4);
+        assert_eq!(t.row_elems(), 2);
+    }
+
+    #[test]
+    fn slice_rows_basic_and_padded() {
+        let t = HostTensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let s = t.slice_rows(1, 3);
+        assert_eq!(s.dims, vec![2, 2]);
+        assert_eq!(s.data, vec![3., 4., 5., 6.]);
+        let p = t.slice_rows_padded(2, 3, 4);
+        assert_eq!(p.dims, vec![4, 2]);
+        assert_eq!(p.data, vec![5., 6., 0., 0., 0., 0., 0., 0.]);
+    }
+
+    // PJRT-backed tests live in rust/qpart/tests/ (they need artifacts).
+}

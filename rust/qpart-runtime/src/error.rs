@@ -1,0 +1,36 @@
+//! Runtime error type.
+
+/// Errors from artifact loading / PJRT execution.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Propagated qpart-core error (JSON schema, tensor format, ...).
+    #[error(transparent)]
+    Core(#[from] qpart_core::Error),
+
+    /// XLA / PJRT failure (compile or execute).
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Requested executable is not in the bundle.
+    #[error("no executable: {0}")]
+    MissingExec(String),
+
+    /// Model / dataset / arch not present in the manifest.
+    #[error("not in bundle: {0}")]
+    NotInBundle(String),
+
+    /// Shape mismatch between artifacts and runtime inputs.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,741 @@
+//! Split-inference executor: the serving data path.
+//!
+//! Given a model instance and a quantization pattern `(b, p)` chosen by the
+//! optimizer, this module
+//!
+//! 1. quantizes the device segment's weights layer-wise (paper Eq. 9–10) —
+//!    the codes are what the simulated downlink ships (bit-packed by the
+//!    coordinator),
+//! 2. runs layers `1..=p` through the **Pallas-kernel executables**
+//!    (`q_l{i}`) exactly as the edge device would (dequantize fused into the
+//!    matmul),
+//! 3. quantizes the boundary activation at `b_x` (the simulated uplink),
+//! 4. finishes layers `p+1..=L` in full precision on the server
+//!    (`f32_l{i}`), and returns the logits.
+//!
+//! It also implements the comparison baselines (paper §V): full-precision
+//! (“No Optimization”), DeepCOD-style autoencoder offloading, and 2-step
+//! structured pruning — plus batched top-1 accuracy evaluation used by the
+//! Table III/IV benches.
+
+use crate::bundle::{Bundle, ModelWeights};
+use crate::engine::{Engine, HostTensor};
+use crate::error::{Error, Result};
+use qpart_core::model::ModelSpec;
+use qpart_core::quant::{quantize, QuantPattern, Quantized};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Eval-batch size (matches the `_b32` executables in the bundle).
+pub const EVAL_BATCH: usize = 32;
+
+/// One quantized layer ready for the wire / the q-kernel.
+#[derive(Debug, Clone)]
+pub struct QuantizedLayer {
+    /// 1-based layer index.
+    pub layer: usize,
+    /// Quantized flat weights (codes + grid).
+    pub weights: Quantized,
+    /// Quantized bias (own grid, same bit-width).
+    pub bias: Quantized,
+    /// Flat weight dims (`[D, G]` / `[C_in·k·k, C_out]`).
+    pub w_dims: Vec<usize>,
+}
+
+/// A fully quantized device segment (what the downlink ships).
+#[derive(Debug, Clone)]
+pub struct QuantizedSegment {
+    pub model: String,
+    pub pattern: QuantPattern,
+    pub layers: Vec<QuantizedLayer>,
+}
+
+impl QuantizedSegment {
+    /// Exact wire payload in bits: weight+bias codes at their bit-widths
+    /// (grid headers are constant-size and ignored, as in paper Eq. 14).
+    pub fn weight_payload_bits(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.weights.payload_bits() + l.bias.payload_bits())
+            .sum()
+    }
+}
+
+/// Result of one split inference.
+#[derive(Debug, Clone)]
+pub struct SplitOutcome {
+    pub logits: HostTensor,
+    /// Downlink payload (quantized weights) in bits.
+    pub weight_bits: u64,
+    /// Uplink payload (quantized boundary activation) in bits.
+    pub activation_bits: u64,
+}
+
+/// A quantized segment converted to executable inputs (codes as f32
+/// tensors, dequantized bias) — built once per pattern, reused across
+/// requests (§Perf: per-request re-quantization was the split-path
+/// bottleneck).
+pub struct PreparedSegment {
+    pub pattern: QuantPattern,
+    pub weight_payload_bits: u64,
+    layers: Vec<PreparedLayer>,
+}
+
+struct PreparedLayer {
+    layer: usize,
+    /// Pre-built XLA literals (codes are the big one — up to MBs); built
+    /// once per pattern so per-request execution skips the host->literal
+    /// copies (§Perf iteration 5).
+    codes: xla::Literal,
+    qmin: xla::Literal,
+    step: xla::Literal,
+    bias: xla::Literal,
+}
+
+impl std::fmt::Debug for PreparedLayer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PreparedLayer").field("layer", &self.layer).finish()
+    }
+}
+
+impl PreparedSegment {
+    /// Convert a quantized segment into executable-ready literals.
+    pub fn from_segment(seg: &QuantizedSegment) -> Result<PreparedSegment> {
+        let mut layers = Vec::with_capacity(seg.layers.len());
+        for ql in &seg.layers {
+            let codes = HostTensor::new(
+                ql.w_dims.clone(),
+                ql.weights.codes.iter().map(|&c| c as f32).collect(),
+            )?;
+            let bias_deq = ql.bias.dequantize();
+            let bias = HostTensor::new(vec![1, bias_deq.len()], bias_deq)?;
+            layers.push(PreparedLayer {
+                layer: ql.layer,
+                codes: codes.to_literal()?,
+                qmin: HostTensor::scalar2(ql.weights.params.min).to_literal()?,
+                step: HostTensor::scalar2(ql.weights.params.step()).to_literal()?,
+                bias: bias.to_literal()?,
+            });
+        }
+        Ok(PreparedSegment {
+            pattern: seg.pattern.clone(),
+            weight_payload_bits: seg.weight_payload_bits(),
+            layers,
+        })
+    }
+}
+
+/// The executor: engine + bundle + weight and prepared-segment caches.
+pub struct Executor {
+    pub engine: Engine,
+    pub bundle: Rc<Bundle>,
+    weights_cache: HashMap<String, Rc<ModelWeights>>,
+    /// Prepared segments keyed by (model, pattern fingerprint).
+    prepared_cache: HashMap<(String, String), Rc<PreparedSegment>>,
+    /// Per-model executable-ready f32 weight literals (w, bias[1,G]) —
+    /// avoids the per-request 2+ MB copy in the server segment (§Perf).
+    host_weights_cache: HashMap<String, Rc<Vec<(xla::Literal, xla::Literal)>>>,
+}
+
+fn pattern_fingerprint(p: &QuantPattern) -> String {
+    format!("{}:{:?}:{}", p.partition, p.weight_bits, p.activation_bits)
+}
+
+impl Executor {
+    pub fn new(bundle: Rc<Bundle>) -> Result<Executor> {
+        Ok(Executor {
+            engine: Engine::cpu()?,
+            bundle,
+            weights_cache: HashMap::new(),
+            prepared_cache: HashMap::new(),
+            host_weights_cache: HashMap::new(),
+        })
+    }
+
+    /// Quantize + prepare a segment, cached per (model, pattern).
+    pub fn prepared_segment(
+        &mut self,
+        model: &str,
+        pattern: &QuantPattern,
+    ) -> Result<Rc<PreparedSegment>> {
+        let key = (model.to_string(), pattern_fingerprint(pattern));
+        if let Some(p) = self.prepared_cache.get(&key) {
+            return Ok(Rc::clone(p));
+        }
+        let seg = self.quantize_segment(model, pattern)?;
+        let prep = Rc::new(PreparedSegment::from_segment(&seg)?);
+        self.prepared_cache.insert(key, Rc::clone(&prep));
+        Ok(prep)
+    }
+
+    /// Number of cached prepared segments (diagnostics).
+    pub fn prepared_cached(&self) -> usize {
+        self.prepared_cache.len()
+    }
+
+    /// Cached weight loading.
+    pub fn weights(&mut self, model: &str) -> Result<Rc<ModelWeights>> {
+        if let Some(w) = self.weights_cache.get(model) {
+            return Ok(Rc::clone(w));
+        }
+        let w = Rc::new(self.bundle.weights(model)?);
+        self.weights_cache.insert(model.to_string(), Rc::clone(&w));
+        Ok(w)
+    }
+
+    /// Executable-ready f32 weight literals, cached per model.
+    pub fn host_weights(&mut self, model: &str) -> Result<Rc<Vec<(xla::Literal, xla::Literal)>>> {
+        if let Some(w) = self.host_weights_cache.get(model) {
+            return Ok(Rc::clone(w));
+        }
+        let weights = self.weights(model)?;
+        let mut v = Vec::with_capacity(weights.layers.len());
+        for (w, b) in &weights.layers {
+            v.push((
+                HostTensor::new(w.dims().to_vec(), w.data().to_vec())?.to_literal()?,
+                HostTensor::new(vec![1, b.len()], b.data().to_vec())?.to_literal()?,
+            ));
+        }
+        let v = Rc::new(v);
+        self.host_weights_cache.insert(model.to_string(), Rc::clone(&v));
+        Ok(v)
+    }
+
+    fn arch_of(&self, model: &str) -> Result<ModelSpec> {
+        let m = self.bundle.model(model)?;
+        Ok(self.bundle.arch(&m.arch)?.clone())
+    }
+
+    // ------------------------------------------------------------------
+    // quantization (downlink preparation)
+    // ------------------------------------------------------------------
+
+    /// Quantize the device segment per `pattern` (the response payload).
+    pub fn quantize_segment(
+        &mut self,
+        model: &str,
+        pattern: &QuantPattern,
+    ) -> Result<QuantizedSegment> {
+        let weights = self.weights(model)?;
+        let mut layers = Vec::with_capacity(pattern.partition);
+        for l in 1..=pattern.partition {
+            let bits = pattern.weight_bits[l - 1];
+            let flat = weights.flat_w(l)?;
+            let wq = quantize(flat.data(), bits).map_err(Error::Core)?;
+            let bq = quantize(weights.bias(l).data(), bits).map_err(Error::Core)?;
+            layers.push(QuantizedLayer {
+                layer: l,
+                weights: wq,
+                bias: bq,
+                w_dims: flat.dims().to_vec(),
+            });
+        }
+        Ok(QuantizedSegment { model: model.to_string(), pattern: pattern.clone(), layers })
+    }
+
+    // ------------------------------------------------------------------
+    // segment execution
+    // ------------------------------------------------------------------
+
+    /// Run the device segment (quantized, Pallas-kernel executables) on
+    /// activation `x` (batch must be 1 or [`EVAL_BATCH`]). Returns the
+    /// boundary activation *before* uplink quantization.
+    pub fn run_device_segment(
+        &mut self,
+        arch: &ModelSpec,
+        seg: &QuantizedSegment,
+        x: HostTensor,
+    ) -> Result<HostTensor> {
+        let batch = x.batch();
+        let mut acts: HashMap<usize, HostTensor> = HashMap::new();
+        let mut h = x;
+        acts.insert(0, h.clone());
+        for ql in &seg.layers {
+            let l = ql.layer;
+            let entry = self.bundle.find_exec(&arch.name, "qlayer", Some(l), batch)?;
+            let exec = self.engine.load(&self.bundle.root.join(&entry.hlo), &entry.name)?;
+            let codes = HostTensor::new(
+                ql.w_dims.clone(),
+                ql.weights.codes.iter().map(|&c| c as f32).collect(),
+            )?;
+            let qmin = HostTensor::scalar2(ql.weights.params.min);
+            let step = HostTensor::scalar2(ql.weights.params.step());
+            let bias_deq = ql.bias.dequantize();
+            let bias = HostTensor::new(vec![1, bias_deq.len()], bias_deq)?;
+            h = reshape_for_layer(arch, l, h)?;
+            let out = if entry.has_skip {
+                let src = arch.residual_source(l).ok_or_else(|| {
+                    Error::Shape(format!("exec {} expects a skip input", entry.name))
+                })?;
+                let skip = acts
+                    .get(&src)
+                    .ok_or_else(|| Error::Shape(format!("skip source {src} unavailable")))?;
+                exec.run(&[&h, skip, &codes, &qmin, &step, &bias])?
+            } else {
+                exec.run(&[&h, &codes, &qmin, &step, &bias])?
+            };
+            h = out;
+            acts.insert(l, h.clone());
+        }
+        Ok(h)
+    }
+
+    /// Run the server segment (full precision) from boundary `start`,
+    /// optionally with overridden weights (pruning baseline).
+    pub fn run_server_segment(
+        &mut self,
+        arch: &ModelSpec,
+        weights: &ModelWeights,
+        mut h: HostTensor,
+        start: usize,
+    ) -> Result<HostTensor> {
+        let batch = h.batch();
+        let mut acts: HashMap<usize, HostTensor> = HashMap::new();
+        acts.insert(start, h.clone());
+        for l in (start + 1)..=arch.num_layers() {
+            let entry = self.bundle.find_exec(&arch.name, "f32layer", Some(l), batch)?;
+            let exec = self.engine.load(&self.bundle.root.join(&entry.hlo), &entry.name)?;
+            let (w, b) = &weights.layers[l - 1];
+            let wt = HostTensor::new(w.dims().to_vec(), w.data().to_vec())?;
+            let bias = HostTensor::new(vec![1, b.len()], b.data().to_vec())?;
+            h = reshape_for_layer(arch, l, h)?;
+            let out = if entry.has_skip {
+                let src = arch.residual_source(l).ok_or_else(|| {
+                    Error::Shape(format!("exec {} expects a skip input", entry.name))
+                })?;
+                let skip = acts
+                    .get(&src)
+                    .ok_or_else(|| Error::Shape(format!("skip source {src} unavailable")))?;
+                exec.run(&[&h, skip, &wt, &bias])?
+            } else {
+                exec.run(&[&h, &wt, &bias])?
+            };
+            h = out;
+            acts.insert(l, h.clone());
+        }
+        Ok(h)
+    }
+
+    /// Uplink simulation: quantize+dequantize the boundary activation.
+    /// Returns (reconstructed activation, payload bits).
+    pub fn uplink(&self, h: &HostTensor, bits: u8) -> Result<(HostTensor, u64)> {
+        let q = quantize(&h.data, bits).map_err(Error::Core)?;
+        let payload = q.payload_bits();
+        Ok((HostTensor::new(h.dims.clone(), q.dequantize())?, payload))
+    }
+
+    /// Run the device segment from a prepared (cached) segment.
+    pub fn run_device_segment_prepared(
+        &mut self,
+        arch: &ModelSpec,
+        prep: &PreparedSegment,
+        x: HostTensor,
+    ) -> Result<HostTensor> {
+        let batch = x.batch();
+        let mut acts: HashMap<usize, HostTensor> = HashMap::new();
+        let mut h = x;
+        acts.insert(0, h.clone());
+        for pl in &prep.layers {
+            let l = pl.layer;
+            let entry = self.bundle.find_exec(&arch.name, "qlayer", Some(l), batch)?;
+            let exec = self.engine.load(&self.bundle.root.join(&entry.hlo), &entry.name)?;
+            h = reshape_for_layer(arch, l, h)?;
+            let h_lit = h.to_literal()?;
+            let out = if entry.has_skip {
+                let src = arch.residual_source(l).ok_or_else(|| {
+                    Error::Shape(format!("exec {} expects a skip input", entry.name))
+                })?;
+                let skip = acts
+                    .get(&src)
+                    .ok_or_else(|| Error::Shape(format!("skip source {src} unavailable")))?
+                    .to_literal()?;
+                exec.run_literals(&[&h_lit, &skip, &pl.codes, &pl.qmin, &pl.step, &pl.bias])?
+            } else {
+                exec.run_literals(&[&h_lit, &pl.codes, &pl.qmin, &pl.step, &pl.bias])?
+            };
+            h = out;
+            acts.insert(l, h.clone());
+        }
+        Ok(h)
+    }
+
+    /// Server segment using the per-model host-weight cache (the serving
+    /// hot path; `run_server_segment` remains for overridden weights).
+    pub fn run_server_segment_cached(
+        &mut self,
+        model: &str,
+        mut h: HostTensor,
+        start: usize,
+    ) -> Result<HostTensor> {
+        let arch = self.arch_of(model)?;
+        let hw = self.host_weights(model)?;
+        let batch = h.batch();
+        let mut acts: HashMap<usize, HostTensor> = HashMap::new();
+        acts.insert(start, h.clone());
+        for l in (start + 1)..=arch.num_layers() {
+            let entry = self.bundle.find_exec(&arch.name, "f32layer", Some(l), batch)?;
+            let exec = self.engine.load(&self.bundle.root.join(&entry.hlo), &entry.name)?;
+            let (wt, bias) = &hw[l - 1];
+            h = reshape_for_layer(&arch, l, h)?;
+            let h_lit = h.to_literal()?;
+            let out = if entry.has_skip {
+                let src = arch.residual_source(l).ok_or_else(|| {
+                    Error::Shape(format!("exec {} expects a skip input", entry.name))
+                })?;
+                let skip = acts
+                    .get(&src)
+                    .ok_or_else(|| Error::Shape(format!("skip source {src} unavailable")))?
+                    .to_literal()?;
+                exec.run_literals(&[&h_lit, &skip, wt, bias])?
+            } else {
+                exec.run_literals(&[&h_lit, wt, bias])?
+            };
+            h = out;
+            acts.insert(l, h.clone());
+        }
+        Ok(h)
+    }
+
+    /// The full QPART split-inference path (prepared-segment cached).
+    pub fn run_split(
+        &mut self,
+        model: &str,
+        pattern: &QuantPattern,
+        x: HostTensor,
+    ) -> Result<SplitOutcome> {
+        let arch = self.arch_of(model)?;
+        let prep = self.prepared_segment(model, pattern)?;
+        let boundary = self.run_device_segment_prepared(&arch, &prep, x)?;
+        let (boundary, act_bits) = self.uplink(&boundary, pattern.activation_bits)?;
+        let logits = self.run_server_segment_cached(model, boundary, pattern.partition)?;
+        Ok(SplitOutcome {
+            logits,
+            weight_bits: prep.weight_payload_bits,
+            activation_bits: act_bits,
+        })
+    }
+
+    /// Full-precision single-shot inference via the `full_*` executable.
+    pub fn run_full(&mut self, model: &str, x: HostTensor) -> Result<HostTensor> {
+        let arch = self.arch_of(model)?;
+        let weights = self.weights(model)?;
+        let entry = self.bundle.find_exec(&arch.name, "full", None, x.batch())?;
+        let exec = self.engine.load(&self.bundle.root.join(&entry.hlo), &entry.name)?;
+        let mut inputs: Vec<HostTensor> = vec![x];
+        for l in 1..=arch.num_layers() {
+            let (w, b) = &weights.layers[l - 1];
+            inputs.push(HostTensor::new(w.dims().to_vec(), w.data().to_vec())?);
+            inputs.push(HostTensor::new(vec![1, b.len()], b.data().to_vec())?);
+        }
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        exec.run(&refs)
+    }
+
+    /// “No Optimization” baseline: f32 layers on device and server (same
+    /// numerics as [`run_full`]); payload = f32 weights + f32 activation.
+    pub fn run_split_f32(&mut self, model: &str, p: usize, x: HostTensor) -> Result<SplitOutcome> {
+        let arch = self.arch_of(model)?;
+        let weights = self.weights(model)?;
+        // run 0..p then p..L through the f32 path (device == server numerics)
+        let batch = x.batch() as u64;
+        let mid = self.run_server_segment_upto(&arch, &weights, x, 0, p)?;
+        let logits = self.run_server_segment(&arch, &weights, mid, p)?;
+        Ok(SplitOutcome {
+            logits,
+            // f32 weights (incl. bias, counted by weight_params)
+            weight_bits: arch.segment_weight_bits_f32(p),
+            activation_bits: 32 * batch * arch.activation_elems(p),
+        })
+    }
+
+    /// Pruning baseline: zero the lowest-norm output neurons of device-side
+    /// layers (`ratio` of them), rescale nothing, run f32 split. Returns the
+    /// outcome with the payload reduced by the kept fraction.
+    pub fn run_split_pruned(
+        &mut self,
+        model: &str,
+        p: usize,
+        ratio: f64,
+        x: HostTensor,
+    ) -> Result<SplitOutcome> {
+        let arch = self.arch_of(model)?;
+        let weights = self.weights(model)?;
+        let pruned = prune_weights(&arch, &weights, p, ratio).map_err(Error::Core)?;
+        let x_batch = x.batch() as u64;
+        let mid = self.run_server_segment_upto(&arch, &pruned, x, 0, p)?;
+        let logits = self.run_server_segment(&arch, &pruned, mid, p)?;
+        let kept = 1.0 - ratio;
+        let weight_bits = (arch.segment_weight_bits_f32(p) as f64 * kept) as u64;
+        Ok(SplitOutcome {
+            logits,
+            weight_bits,
+            activation_bits: 32 * x_batch * arch.activation_elems(p),
+        })
+    }
+
+    /// Autoencoder (DeepCOD-style) baseline: f32 device segment, encode the
+    /// boundary activation (uplink ships the bottleneck code), decode on
+    /// the server, continue. Only valid at boundaries the bundle trained.
+    pub fn run_split_ae(&mut self, model: &str, p: usize, x: HostTensor) -> Result<SplitOutcome> {
+        let arch = self.arch_of(model)?;
+        let weights = self.weights(model)?;
+        let ab = *self
+            .bundle
+            .model(model)?
+            .ae_boundaries
+            .iter()
+            .find(|b| b.boundary == p)
+            .ok_or_else(|| Error::NotInBundle(format!("AE at boundary {p} of {model}")))?;
+        let [we, be, wd, bd] = self.bundle.ae_params(model, p)?;
+        let batch = x.batch();
+        let h = self.run_server_segment_upto(&arch, &weights, x, 0, p)?;
+        // flatten for the linear AE
+        let h = HostTensor::new(vec![batch, h.row_elems()], h.data.clone())?;
+        let enc_e = self.bundle.find_exec(&arch.name, "ae_enc", Some(p), batch)?;
+        let enc = self.engine.load(&self.bundle.root.join(&enc_e.hlo), &enc_e.name)?;
+        let we_t = HostTensor::new(we.dims().to_vec(), we.data().to_vec())?;
+        let be_t = HostTensor::new(vec![1, be.len()], be.data().to_vec())?;
+        let z = enc.run(&[&h, &we_t, &be_t])?;
+        let dec_e = self.bundle.find_exec(&arch.name, "ae_dec", Some(p), batch)?;
+        let dec = self.engine.load(&self.bundle.root.join(&dec_e.hlo), &dec_e.name)?;
+        let wd_t = HostTensor::new(wd.dims().to_vec(), wd.data().to_vec())?;
+        let bd_t = HostTensor::new(vec![1, bd.len()], bd.data().to_vec())?;
+        let rec = dec.run(&[&z, &wd_t, &bd_t])?;
+        // reshape back to the layer's natural activation shape
+        let shape = activation_shape(&arch, p, batch);
+        let rec = HostTensor::new(shape, rec.data)?;
+        let logits = self.run_server_segment(&arch, &weights, rec, p)?;
+        // payload: f32 weights of the segment + f32 encoder (shipped to the
+        // device) + f32 bottleneck code uplink (per sample)
+        let enc_params = (we.len() + be.len()) as u64;
+        Ok(SplitOutcome {
+            logits,
+            weight_bits: arch.segment_weight_bits_f32(p) + 32 * enc_params,
+            activation_bits: 32 * batch as u64 * ab.bottleneck as u64,
+        })
+    }
+
+    /// Run f32 layers `start+1..=end` (helper for baselines).
+    fn run_server_segment_upto(
+        &mut self,
+        arch: &ModelSpec,
+        weights: &ModelWeights,
+        mut h: HostTensor,
+        start: usize,
+        end: usize,
+    ) -> Result<HostTensor> {
+        let batch = h.batch();
+        let mut acts: HashMap<usize, HostTensor> = HashMap::new();
+        acts.insert(start, h.clone());
+        for l in (start + 1)..=end {
+            let entry = self.bundle.find_exec(&arch.name, "f32layer", Some(l), batch)?;
+            let exec = self.engine.load(&self.bundle.root.join(&entry.hlo), &entry.name)?;
+            let (w, b) = &weights.layers[l - 1];
+            let wt = HostTensor::new(w.dims().to_vec(), w.data().to_vec())?;
+            let bias = HostTensor::new(vec![1, b.len()], b.data().to_vec())?;
+            h = reshape_for_layer(arch, l, h)?;
+            let out = if entry.has_skip {
+                let src = arch.residual_source(l).unwrap_or(start);
+                let skip = acts.get(&src).unwrap_or(&h);
+                exec.run(&[&h, skip, &wt, &bias])?
+            } else {
+                exec.run(&[&h, &wt, &bias])?
+            };
+            h = out;
+            acts.insert(l, h.clone());
+        }
+        Ok(h)
+    }
+
+    // ------------------------------------------------------------------
+    // accuracy evaluation (Table III / Table IV)
+    // ------------------------------------------------------------------
+
+    /// Top-1 accuracy of `run` over a dataset, in EVAL_BATCH chunks with
+    /// zero-padding on the tail.
+    pub fn eval_accuracy<F>(&mut self, x: &HostTensor, y: &[i32], mut run: F) -> Result<f64>
+    where
+        F: FnMut(&mut Self, HostTensor) -> Result<HostTensor>,
+    {
+        let n = x.batch();
+        if n == 0 || n != y.len() {
+            return Err(Error::Shape(format!("{} samples vs {} labels", n, y.len())));
+        }
+        let mut correct = 0usize;
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + EVAL_BATCH).min(n);
+            let chunk = x.slice_rows_padded(lo, hi, EVAL_BATCH);
+            let logits = run(self, chunk)?;
+            let classes = logits.row_elems();
+            for (i, &label) in y[lo..hi].iter().enumerate() {
+                let row = &logits.data[i * classes..(i + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j as i32)
+                    .unwrap();
+                if pred == label {
+                    correct += 1;
+                }
+            }
+            lo = hi;
+        }
+        Ok(correct as f64 / n as f64)
+    }
+}
+
+/// Reshape `h` to what layer `l` expects (flatten conv → linear boundary).
+fn reshape_for_layer(arch: &ModelSpec, l: usize, h: HostTensor) -> Result<HostTensor> {
+    use qpart_core::model::LayerKind;
+    let batch = h.batch();
+    match arch.layers[l - 1].kind {
+        LayerKind::Linear { d_in, .. } => {
+            if h.row_elems() != d_in {
+                return Err(Error::Shape(format!(
+                    "layer {l} expects {d_in} inputs, activation has {}",
+                    h.row_elems()
+                )));
+            }
+            HostTensor::new(vec![batch, d_in], h.data)
+        }
+        LayerKind::Conv2d { c_in, in_side, .. } => {
+            if h.row_elems() != c_in * in_side * in_side {
+                return Err(Error::Shape(format!(
+                    "layer {l} expects {}x{}x{} input, activation has {}",
+                    c_in,
+                    in_side,
+                    in_side,
+                    h.row_elems()
+                )));
+            }
+            HostTensor::new(vec![batch, c_in, in_side, in_side], h.data)
+        }
+    }
+}
+
+/// Activation shape at boundary `l` with the given batch.
+fn activation_shape(arch: &ModelSpec, l: usize, batch: usize) -> Vec<usize> {
+    use qpart_core::model::LayerKind;
+    if l == 0 {
+        let mut v = vec![batch];
+        v.extend_from_slice(&arch.input_shape);
+        return v;
+    }
+    match arch.layers[l - 1].kind {
+        LayerKind::Linear { d_out, .. } => vec![batch, d_out],
+        LayerKind::Conv2d { c_out, out_side, .. } => vec![batch, c_out, out_side, out_side],
+    }
+}
+
+/// Structured pruning of device-side layers 1..=p: zero the `ratio`
+/// lowest-L2 output neurons of each layer (and the corresponding input
+/// rows of the next layer). Functionally equivalent to removing them; the
+/// payload accounting charges only the kept fraction.
+pub fn prune_weights(
+    arch: &ModelSpec,
+    weights: &ModelWeights,
+    p: usize,
+    ratio: f64,
+) -> qpart_core::Result<ModelWeights> {
+    use qpart_core::model::LayerKind;
+    if !(0.0..1.0).contains(&ratio) {
+        return Err(qpart_core::Error::InvalidArg(format!("prune ratio {ratio}")));
+    }
+    let mut out = weights.clone();
+    for l in 1..=p {
+        let (w, b) = &mut out.layers[l - 1];
+        let (rows, cols) = match arch.layers[l - 1].kind {
+            LayerKind::Linear { d_in, d_out } => (d_in, d_out),
+            LayerKind::Conv2d { c_in, c_out, k, .. } => (c_in * k * k, c_out),
+        };
+        // column norms
+        let mut norms: Vec<(usize, f64)> = (0..cols)
+            .map(|c| {
+                let s: f64 = (0..rows)
+                    .map(|r| {
+                        let v = w.data()[r * cols + c] as f64;
+                        v * v
+                    })
+                    .sum();
+                (c, s)
+            })
+            .collect();
+        norms.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let n_prune = ((cols as f64) * ratio).floor() as usize;
+        let pruned: Vec<usize> = norms[..n_prune].iter().map(|&(c, _)| c).collect();
+        let data = w.data_mut();
+        for &c in &pruned {
+            for r in 0..rows {
+                data[r * cols + c] = 0.0;
+            }
+            b.data_mut()[c] = 0.0;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use qpart_core::model::mlp6;
+    use qpart_core::tensor::Tensor;
+
+    fn toy_weights(arch: &ModelSpec) -> ModelWeights {
+        let layers = (1..=arch.num_layers())
+            .map(|l| {
+                use qpart_core::model::LayerKind;
+                let (w_dims, g) = match arch.layers[l - 1].kind {
+                    LayerKind::Linear { d_in, d_out } => (vec![d_in, d_out], d_out),
+                    LayerKind::Conv2d { c_in, c_out, k, .. } => {
+                        (vec![c_in, k, k, c_out], c_out)
+                    }
+                };
+                let n: usize = w_dims.iter().product();
+                let data: Vec<f32> = (0..n).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+                (Tensor::new(w_dims, data).unwrap(), Tensor::zeros(vec![g]))
+            })
+            .collect();
+        ModelWeights { layers }
+    }
+
+    #[test]
+    fn prune_zeroes_expected_fraction() {
+        let arch = mlp6();
+        let w = toy_weights(&arch);
+        let pruned = prune_weights(&arch, &w, 2, 0.5).unwrap();
+        for l in 1..=2usize {
+            let cols = match arch.layers[l - 1].kind {
+                qpart_core::model::LayerKind::Linear { d_out, .. } => d_out,
+                _ => unreachable!(),
+            };
+            let w_t = pruned.flat_w(l).unwrap();
+            let zero_cols = (0..cols)
+                .filter(|&c| {
+                    (0..w_t.dims()[0]).all(|r| w_t.data()[r * cols + c] == 0.0)
+                })
+                .count();
+            assert_eq!(zero_cols, cols / 2, "layer {l}");
+        }
+        // untouched layers unchanged
+        assert_eq!(pruned.layers[3].0, w.layers[3].0);
+    }
+
+    #[test]
+    fn prune_rejects_bad_ratio() {
+        let arch = mlp6();
+        let w = toy_weights(&arch);
+        assert!(prune_weights(&arch, &w, 1, 1.0).is_err());
+        assert!(prune_weights(&arch, &w, 1, -0.1).is_err());
+    }
+
+    #[test]
+    fn activation_shapes() {
+        let arch = mlp6();
+        assert_eq!(activation_shape(&arch, 0, 4), vec![4, 784]);
+        assert_eq!(activation_shape(&arch, 3, 2), vec![2, 128]);
+    }
+
+    // PJRT-backed executor tests live in rust/qpart/tests/ (need artifacts).
+}

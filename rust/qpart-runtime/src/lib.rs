@@ -1,0 +1,28 @@
+//! # qpart-runtime
+//!
+//! The Layer-3 ↔ Layer-2 bridge: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text + weights + calibration + datasets)
+//! and executes them on the PJRT CPU client via the `xla` crate.
+//!
+//! * [`engine`] — PJRT client wrapper: compile HLO text files, execute with
+//!   f32 literals, executable cache.
+//! * [`bundle`] — the artifact bundle: manifest parsing, lazy loading of
+//!   weights / calibration tables / datasets.
+//! * [`executor`] — split inference: quantize-per-pattern, run the device
+//!   segment through the Pallas-kernel executables, quantize the boundary
+//!   activation (the simulated uplink), finish on the server segment;
+//!   plus full-precision, autoencoder-baseline, and pruning-baseline paths
+//!   and batched accuracy evaluation.
+//!
+//! Python never runs here — the HLO was lowered once at build time; this
+//! crate is pure Rust + PJRT and sits on the serving hot path.
+
+pub mod bundle;
+pub mod engine;
+pub mod error;
+pub mod executor;
+
+pub use bundle::{Bundle, DatasetEntry, ExecEntry, ModelEntry, ModelWeights};
+pub use engine::{Engine, Exec, HostTensor};
+pub use error::{Error, Result};
+pub use executor::{Executor, PreparedSegment, SplitOutcome};

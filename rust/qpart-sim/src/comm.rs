@@ -1,0 +1,120 @@
+//! Communication module: wireless links between devices and the server.
+//!
+//! Wraps `qpart_core::channel` (Eq. 11–16) with transfer-time bookkeeping:
+//! each link is half-duplex and serializes its transfers, and optionally
+//! re-samples small-scale fading per coherence period.
+
+use qpart_core::channel::{Channel, FadingChannel};
+
+/// A device↔server link in the simulation.
+#[derive(Debug, Clone)]
+pub struct LinkSim {
+    mode: LinkMode,
+    /// Next time the link is free.
+    pub busy_until: f64,
+    /// Cumulative radio energy on the device side (Eq. 16).
+    pub energy_j: f64,
+    /// Cumulative bits moved.
+    pub bits_moved: u64,
+    /// Coherence period for fading links (s).
+    pub coherence_s: f64,
+    current: Channel,
+    next_resample: f64,
+}
+
+#[derive(Debug, Clone)]
+enum LinkMode {
+    Fixed,
+    Fading(FadingChannel),
+}
+
+impl LinkSim {
+    /// Fixed-capacity link (Table II default).
+    pub fn fixed(ch: Channel) -> LinkSim {
+        LinkSim {
+            mode: LinkMode::Fixed,
+            busy_until: 0.0,
+            energy_j: 0.0,
+            bits_moved: 0,
+            coherence_s: f64::INFINITY,
+            current: ch,
+            next_resample: f64::INFINITY,
+        }
+    }
+
+    /// Fading link re-sampled every `coherence_s`.
+    pub fn fading(mut f: FadingChannel, coherence_s: f64) -> LinkSim {
+        let current = f.sample();
+        LinkSim {
+            mode: LinkMode::Fading(f),
+            busy_until: 0.0,
+            energy_j: 0.0,
+            bits_moved: 0,
+            coherence_s,
+            current,
+            next_resample: coherence_s,
+        }
+    }
+
+    /// The channel as observed at `now` (what a device would report in its
+    /// inference request).
+    pub fn observe(&mut self, now: f64) -> Channel {
+        if now >= self.next_resample {
+            if let LinkMode::Fading(f) = &mut self.mode {
+                self.current = f.sample();
+            }
+            // advance in whole coherence periods
+            let periods = ((now - self.next_resample) / self.coherence_s).floor() + 1.0;
+            self.next_resample += periods * self.coherence_s;
+        }
+        self.current
+    }
+
+    /// Transfer `bits` starting at `now`; returns the finish time and
+    /// accounts device radio energy.
+    pub fn transfer(&mut self, now: f64, bits: u64) -> f64 {
+        let ch = self.observe(now);
+        let start = now.max(self.busy_until);
+        let dt = ch.tx_latency_s(bits);
+        self.busy_until = start + dt;
+        self.energy_j += ch.tx_energy_j(bits);
+        self.bits_moved += bits;
+        self.busy_until
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_link_serializes() {
+        let mut l = LinkSim::fixed(Channel::fixed(200e6, 1.0));
+        let t1 = l.transfer(0.0, 200_000_000); // 1 s
+        assert!((t1 - 1.0).abs() < 1e-12);
+        let t2 = l.transfer(0.5, 100_000_000); // queued behind
+        assert!((t2 - 1.5).abs() < 1e-12);
+        assert_eq!(l.bits_moved, 300_000_000);
+        assert!((l.energy_j - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fading_resamples_on_coherence() {
+        let f = FadingChannel::new(1e6, 1.0, 1e-3, 1.0, 11);
+        let mut l = LinkSim::fading(f, 1.0);
+        let c0 = l.observe(0.0).capacity_bps;
+        let c0b = l.observe(0.5).capacity_bps;
+        assert_eq!(c0, c0b, "within coherence period: unchanged");
+        let c1 = l.observe(1.5).capacity_bps;
+        assert_ne!(c0, c1, "after coherence period: re-sampled");
+    }
+
+    #[test]
+    fn observe_is_stable_between_periods() {
+        let f = FadingChannel::new(1e6, 1.0, 1e-3, 1.0, 13);
+        let mut l = LinkSim::fading(f, 2.0);
+        let a = l.observe(10.0).capacity_bps;
+        let b = l.observe(10.9).capacity_bps;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,117 @@
+//! Executing module: simulated edge devices and the shared server.
+//!
+//! Device compute time/energy follow paper Eq. 5–6, server time/cost
+//! Eq. 7–8 — all delegated to `qpart_core::cost`, which keeps the
+//! simulator and the optimizer on exactly the same model (a mismatch
+//! there would make the online algorithm's choices look artificially
+//! good or bad).
+
+use qpart_core::cost::{DeviceProfile, ServerProfile};
+
+/// A simulated edge device: profile + availability time.
+#[derive(Debug, Clone)]
+pub struct DeviceSim {
+    pub id: usize,
+    pub profile: DeviceProfile,
+    /// Simulation time (s) when the device is next free.
+    pub busy_until: f64,
+    /// Cumulative energy drawn from the battery (J).
+    pub energy_j: f64,
+}
+
+impl DeviceSim {
+    pub fn new(id: usize, profile: DeviceProfile) -> DeviceSim {
+        DeviceSim { id, profile, busy_until: 0.0, energy_j: 0.0 }
+    }
+
+    /// Run `macs` locally starting at `now`; returns the finish time.
+    pub fn compute(&mut self, now: f64, macs: u64) -> f64 {
+        let start = now.max(self.busy_until);
+        let dt = self.profile.compute_time_s(macs);
+        self.busy_until = start + dt;
+        self.energy_j += self.profile.compute_energy_j(macs);
+        self.busy_until
+    }
+}
+
+/// The shared server: a single FIFO compute resource (the paper's MEC
+/// server; multi-server extensions hang off `ServerSim::with_slots`).
+#[derive(Debug, Clone)]
+pub struct ServerSim {
+    pub profile: ServerProfile,
+    /// Next-free time per execution slot.
+    slots: Vec<f64>,
+    /// Cumulative billed cost (Eq. 8).
+    pub billed_cost: f64,
+}
+
+impl ServerSim {
+    pub fn new(profile: ServerProfile) -> ServerSim {
+        ServerSim { profile, slots: vec![0.0], billed_cost: 0.0 }
+    }
+
+    /// Multiple parallel execution slots.
+    pub fn with_slots(profile: ServerProfile, n: usize) -> ServerSim {
+        assert!(n > 0);
+        ServerSim { profile, slots: vec![0.0; n], billed_cost: 0.0 }
+    }
+
+    /// Schedule `macs` at the earliest-free slot from `now`; returns finish.
+    pub fn compute(&mut self, now: f64, macs: u64) -> f64 {
+        let (idx, _) = self
+            .slots
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let start = now.max(self.slots[idx]);
+        let dt = self.profile.compute_time_s(macs);
+        self.slots[idx] = start + dt;
+        self.billed_cost += self.profile.compute_cost(macs);
+        self.slots[idx]
+    }
+
+    /// Current queueing delay if work arrived at `now`.
+    pub fn queue_delay(&self, now: f64) -> f64 {
+        let earliest = self.slots.iter().cloned().fold(f64::INFINITY, f64::min);
+        (earliest - now).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_serializes_work() {
+        let mut d = DeviceSim::new(0, DeviceProfile::paper_default());
+        let t1 = d.compute(0.0, 1_000_000); // 25 ms
+        assert!((t1 - 0.025).abs() < 1e-12);
+        // second job queued behind the first
+        let t2 = d.compute(0.0, 1_000_000);
+        assert!((t2 - 0.050).abs() < 1e-12);
+        // energy accumulates (Eq. 6: 6e-4 J per 1e6 MACs at defaults)
+        assert!((d.energy_j - 1.2e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn server_picks_earliest_slot() {
+        let mut s = ServerSim::with_slots(ServerProfile::paper_default(), 2);
+        let a = s.compute(0.0, 3_000_000_000); // 1.25 s on slot 0
+        let b = s.compute(0.0, 3_000_000_000); // slot 1, parallel
+        assert!((a - 1.25).abs() < 1e-9);
+        assert!((b - 1.25).abs() < 1e-9);
+        let c = s.compute(0.0, 3_000_000_000); // queues
+        assert!((c - 2.5).abs() < 1e-9);
+        assert!(s.billed_cost > 0.0);
+    }
+
+    #[test]
+    fn queue_delay_reporting() {
+        let mut s = ServerSim::new(ServerProfile::paper_default());
+        assert_eq!(s.queue_delay(0.0), 0.0);
+        s.compute(0.0, 3_000_000_000);
+        assert!((s.queue_delay(0.0) - 1.25).abs() < 1e-9);
+        assert_eq!(s.queue_delay(10.0), 0.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! # qpart-sim
+//!
+//! The paper's §V simulation platform, as a library:
+//!
+//! * [`device`] — the *executing module*: simulated edge devices and the
+//!   server, with Table II compute/energy profiles.
+//! * [`comm`] — the *communication module*: wireless links with optional
+//!   fading, transfer-time/energy accounting.
+//! * [`perf`] — the *performance module*: metric collection (histograms,
+//!   percentiles, per-request records).
+//! * [`workload`] — request generators: Poisson arrivals over a
+//!   heterogeneous device fleet.
+//! * [`schemes`] — analytic cost models of the four compared offloading
+//!   schemes (QPART, no-optimization, 2-step pruning, DeepCOD-style
+//!   autoencoder) used by the Fig. 5/7/8/9/10 benches.
+//! * [`fleet`] — the discrete-event fleet simulation driving Fig. 5-style
+//!   dynamics and the `qpart sim` subcommand.
+
+pub mod comm;
+pub mod device;
+pub mod fleet;
+pub mod perf;
+pub mod schemes;
+pub mod workload;
+
+pub use fleet::{FleetConfig, FleetReport, run_fleet};
+pub use perf::{PerfCollector, RequestRecord, Summary};
+pub use schemes::{scheme_cost, Scheme, SchemeCost};
+pub use workload::{DeviceClass, WorkloadConfig, WorkloadGen};

@@ -1,0 +1,203 @@
+//! Performance module: per-request records and summary statistics.
+
+use qpart_core::json::Value;
+
+/// Everything measured for one served request.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub device: usize,
+    pub model: String,
+    pub arrival_s: f64,
+    pub done_s: f64,
+    /// Decision + queueing on the server before the downlink starts.
+    pub plan_s: f64,
+    pub downlink_s: f64,
+    pub device_compute_s: f64,
+    pub uplink_s: f64,
+    pub server_compute_s: f64,
+    pub device_energy_j: f64,
+    pub payload_bits: u64,
+    pub partition: usize,
+    pub objective: f64,
+}
+
+impl RequestRecord {
+    pub fn latency_s(&self) -> f64 {
+        self.done_s - self.arrival_s
+    }
+}
+
+/// Summary stats over a metric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute from unsorted samples. Empty input → all NaN, n = 0.
+    pub fn of(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary {
+                n: 0,
+                mean: f64::NAN,
+                p50: f64::NAN,
+                p95: f64::NAN,
+                p99: f64::NAN,
+                min: f64::NAN,
+                max: f64::NAN,
+            };
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| {
+            let idx = ((s.len() as f64 - 1.0) * p).round() as usize;
+            s[idx]
+        };
+        Summary {
+            n: s.len(),
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+            p50: q(0.50),
+            p95: q(0.95),
+            p99: q(0.99),
+            min: s[0],
+            max: s[s.len() - 1],
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("n", self.n.into()),
+            ("mean", self.mean.into()),
+            ("p50", self.p50.into()),
+            ("p95", self.p95.into()),
+            ("p99", self.p99.into()),
+            ("min", self.min.into()),
+            ("max", self.max.into()),
+        ])
+    }
+}
+
+/// Collects records and derives summaries.
+#[derive(Debug, Default)]
+pub struct PerfCollector {
+    pub records: Vec<RequestRecord>,
+}
+
+impl PerfCollector {
+    pub fn new() -> PerfCollector {
+        PerfCollector { records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: RequestRecord) {
+        self.records.push(r);
+    }
+
+    pub fn latency(&self) -> Summary {
+        Summary::of(&self.records.iter().map(RequestRecord::latency_s).collect::<Vec<_>>())
+    }
+
+    pub fn energy(&self) -> Summary {
+        Summary::of(&self.records.iter().map(|r| r.device_energy_j).collect::<Vec<_>>())
+    }
+
+    pub fn payload(&self) -> Summary {
+        Summary::of(&self.records.iter().map(|r| r.payload_bits as f64).collect::<Vec<_>>())
+    }
+
+    pub fn objective(&self) -> Summary {
+        Summary::of(&self.records.iter().map(|r| r.objective).collect::<Vec<_>>())
+    }
+
+    /// Served requests per simulated second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let t_end = self.records.iter().map(|r| r.done_s).fold(0.0, f64::max);
+        let t_start = self.records.iter().map(|r| r.arrival_s).fold(f64::INFINITY, f64::min);
+        self.records.len() as f64 / (t_end - t_start).max(1e-9)
+    }
+
+    /// Histogram of chosen partition points (index = p).
+    pub fn partition_histogram(&self, max_p: usize) -> Vec<usize> {
+        let mut h = vec![0usize; max_p + 1];
+        for r in &self.records {
+            if r.partition < h.len() {
+                h[r.partition] += 1;
+            }
+        }
+        h
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("requests", self.records.len().into()),
+            ("latency_s", self.latency().to_json()),
+            ("device_energy_j", self.energy().to_json()),
+            ("payload_bits", self.payload().to_json()),
+            ("objective", self.objective().to_json()),
+            ("throughput_rps", self.throughput_rps().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: f64, done: f64, p: usize) -> RequestRecord {
+        RequestRecord {
+            device: 0,
+            model: "m".into(),
+            arrival_s: arrival,
+            done_s: done,
+            plan_s: 0.0,
+            downlink_s: 0.0,
+            device_compute_s: 0.0,
+            uplink_s: 0.0,
+            server_compute_s: 0.0,
+            device_energy_j: 0.1,
+            payload_bits: 100,
+            partition: p,
+            objective: 1.0,
+        }
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&samples);
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        // nearest-rank with round-half-up: (99·0.5).round() = 50 → sample 51
+        assert_eq!(s.p50, 51.0);
+        assert_eq!(s.p95, 95.0);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.mean.is_nan());
+    }
+
+    #[test]
+    fn collector_aggregates() {
+        let mut c = PerfCollector::new();
+        c.push(rec(0.0, 1.0, 2));
+        c.push(rec(0.5, 2.0, 2));
+        c.push(rec(1.0, 2.5, 4));
+        assert_eq!(c.latency().n, 3);
+        assert!((c.throughput_rps() - 3.0 / 2.5).abs() < 1e-12);
+        assert_eq!(c.partition_histogram(6), vec![0, 0, 2, 0, 1, 0, 0]);
+    }
+}

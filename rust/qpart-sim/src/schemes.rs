@@ -1,0 +1,236 @@
+//! Analytic cost models of the four compared offloading schemes
+//! (paper §V, Fig. 5/7/8/9/10).
+//!
+//! Each scheme, at a given partition point `p`, determines (a) the
+//! communication payload `Z` and (b) the device/server MAC counts; the
+//! Eq. 17 objective then follows from `qpart_core::cost`. Accuracy of the
+//! schemes is *measured* (qpart-runtime baselines, Table III) — this module
+//! is the analytic time/energy/cost side.
+
+use qpart_core::cost::{CostBreakdown, CostModel};
+use qpart_core::model::ModelSpec;
+use qpart_core::quant::{PatternSet, QuantPattern};
+use qpart_core::{Error, Result};
+
+/// The compared offloading schemes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scheme {
+    /// The paper's system: layer-wise quantization via the offline table.
+    Qpart,
+    /// Ship the f32 segment + f32 activation (paper's "No Optimization").
+    NoOpt,
+    /// 2-step structured pruning of the device segment (Shi et al.-style):
+    /// prune `ratio` of each device layer's neurons.
+    Pruning { ratio: f64 },
+    /// DeepCOD-style autoencoder on the boundary activation:
+    /// bottleneck = activation / `compress` (f32 model segment).
+    Autoencoder { compress: f64 },
+}
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Qpart => "QPART",
+            Scheme::NoOpt => "No Optimization",
+            Scheme::Pruning { .. } => "Model Pruning",
+            Scheme::Autoencoder { .. } => "Auto-Encoder",
+        }
+    }
+}
+
+/// Cost evaluation of one scheme at one partition point.
+#[derive(Debug, Clone)]
+pub struct SchemeCost {
+    pub scheme: &'static str,
+    pub partition: usize,
+    /// Communication payload (bits): downlink weights + uplink activation.
+    pub payload_bits: u64,
+    pub device_macs: u64,
+    pub server_macs: u64,
+    pub breakdown: CostBreakdown,
+}
+
+/// Evaluate `scheme` at partition `p` under `cost`.
+///
+/// For QPART, `patterns` supplies the offline bit-width table and
+/// `level_idx` the accuracy level (the other schemes ignore both).
+pub fn scheme_cost(
+    scheme: Scheme,
+    model: &ModelSpec,
+    cost: &CostModel,
+    p: usize,
+    patterns: Option<&PatternSet>,
+    level_idx: usize,
+) -> Result<SchemeCost> {
+    if p > model.num_layers() {
+        return Err(Error::InvalidArg(format!("partition {p} > L")));
+    }
+    let (payload_bits, device_macs, server_macs) = match scheme {
+        Scheme::Qpart => {
+            let set = patterns
+                .ok_or_else(|| Error::InvalidArg("QPART needs a pattern set".into()))?;
+            let pat = set
+                .get(qpart_core::quant::PatternKey { level_idx, partition: p })
+                .ok_or_else(|| Error::NotFound(format!("pattern (k={level_idx}, p={p})")))?;
+            (pat.payload_bits(model), model.device_macs(p), model.server_macs(p))
+        }
+        Scheme::NoOpt => {
+            let pat32 = QuantPattern {
+                partition: p,
+                weight_bits: vec![32; p],
+                activation_bits: 32,
+                accuracy_level: 0.0,
+                predicted_degradation: 0.0,
+            };
+            (pat32.payload_bits(model), model.device_macs(p), model.server_macs(p))
+        }
+        Scheme::Pruning { ratio } => {
+            if !(0.0..1.0).contains(&ratio) {
+                return Err(Error::InvalidArg(format!("prune ratio {ratio}")));
+            }
+            let kept = 1.0 - ratio;
+            // pruned device layers: fewer weights to ship & fewer MACs;
+            // the boundary activation shrinks too (pruned neurons emit 0).
+            let w_bits = (model.segment_weight_bits_f32(p) as f64 * kept) as u64;
+            let a_bits = (32.0 * model.activation_elems(p) as f64 * kept) as u64;
+            let d_macs = (model.device_macs(p) as f64 * kept) as u64;
+            (w_bits + a_bits, d_macs, model.server_macs(p))
+        }
+        Scheme::Autoencoder { compress } => {
+            if compress < 1.0 {
+                return Err(Error::InvalidArg(format!("AE compress {compress}")));
+            }
+            let act = model.activation_elems(p) as f64;
+            let bottleneck = (act / compress).ceil().max(1.0);
+            // encoder (device) and decoder (server) are 1-layer linear maps
+            let enc_macs = (act * bottleneck) as u64;
+            let dec_macs = enc_macs;
+            let enc_params = (act * bottleneck + bottleneck) as u64;
+            let w_bits = model.segment_weight_bits_f32(p) + 32 * enc_params;
+            let a_bits = 32 * bottleneck as u64;
+            (
+                w_bits + a_bits,
+                model.device_macs(p) + enc_macs,
+                model.server_macs(p) + dec_macs,
+            )
+        }
+    };
+    // Evaluate Eq. 17 with explicit MAC overrides (AE/pruning change MACs).
+    let t_local = cost.device.compute_time_s(device_macs);
+    let t_server = cost.server.compute_time_s(server_macs);
+    let t_tran = cost.channel.tx_latency_s(payload_bits);
+    let e_local = cost.device.compute_energy_j(device_macs);
+    let e_tran = cost.channel.tx_energy_j(payload_bits);
+    let server_cost = cost.server.compute_cost(server_macs);
+    let objective = cost.weights.omega * (t_local + t_server + t_tran)
+        + cost.weights.tau * (e_local + e_tran)
+        + cost.weights.eta * server_cost;
+    Ok(SchemeCost {
+        scheme: scheme.name(),
+        partition: p,
+        payload_bits,
+        device_macs,
+        server_macs,
+        breakdown: CostBreakdown {
+            t_local_s: t_local,
+            t_server_s: t_server,
+            t_tran_s: t_tran,
+            e_local_j: e_local,
+            e_tran_j: e_tran,
+            server_cost,
+            objective,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use qpart_core::accuracy::CalibrationTable;
+    use qpart_core::model::mlp6;
+    use qpart_core::optimizer::{offline_quantize, OfflineConfig};
+
+    const LEVELS: [f64; 5] = [0.0025, 0.005, 0.01, 0.02, 0.05];
+
+    fn setup() -> (ModelSpec, PatternSet, CostModel) {
+        let m = mlp6();
+        let c = CalibrationTable::synthetic(&m, &LEVELS, 41);
+        let set = offline_quantize(&m, &c, OfflineConfig::default()).unwrap();
+        (m, set, CostModel::paper_default())
+    }
+
+    #[test]
+    fn qpart_beats_noopt_everywhere() {
+        // Fig. 7's headline shape: QPART's objective ≤ NoOpt at every p.
+        let (m, set, cost) = setup();
+        for p in 0..=m.num_layers() {
+            let q = scheme_cost(Scheme::Qpart, &m, &cost, p, Some(&set), 2).unwrap();
+            let n = scheme_cost(Scheme::NoOpt, &m, &cost, p, None, 0).unwrap();
+            assert!(
+                q.breakdown.objective <= n.breakdown.objective,
+                "p={p}: qpart {} vs noopt {}",
+                q.breakdown.objective,
+                n.breakdown.objective
+            );
+            assert!(q.payload_bits <= n.payload_bits);
+        }
+    }
+
+    #[test]
+    fn ae_pays_compute_overhead() {
+        // Fig. 8/9's shape: AE adds enc/dec MACs on both sides.
+        let (m, _, cost) = setup();
+        let ae = scheme_cost(Scheme::Autoencoder { compress: 8.0 }, &m, &cost, 3, None, 0)
+            .unwrap();
+        let no = scheme_cost(Scheme::NoOpt, &m, &cost, 3, None, 0).unwrap();
+        assert!(ae.device_macs > no.device_macs);
+        assert!(ae.server_macs > no.server_macs);
+        // ...but compresses the uplink activation
+        assert!(ae.payload_bits > no.payload_bits - 32 * m.activation_elems(3));
+    }
+
+    #[test]
+    fn pruning_scales_by_kept_fraction() {
+        let (m, _, cost) = setup();
+        let pr = scheme_cost(Scheme::Pruning { ratio: 0.5 }, &m, &cost, 4, None, 0).unwrap();
+        let no = scheme_cost(Scheme::NoOpt, &m, &cost, 4, None, 0).unwrap();
+        let ratio = pr.payload_bits as f64 / no.payload_bits as f64;
+        assert!((0.45..0.55).contains(&ratio), "payload ratio {ratio}");
+        assert!(pr.device_macs < no.device_macs);
+    }
+
+    #[test]
+    fn server_cost_monotone_decreasing_in_p() {
+        // Fig. 5 third panel, for every scheme.
+        let (m, set, cost) = setup();
+        for scheme in [
+            Scheme::Qpart,
+            Scheme::NoOpt,
+            Scheme::Pruning { ratio: 0.3 },
+            Scheme::Autoencoder { compress: 8.0 },
+        ] {
+            let mut prev = f64::INFINITY;
+            for p in 0..=m.num_layers() {
+                let c = scheme_cost(scheme, &m, &cost, p, Some(&set), 2).unwrap();
+                // AE adds a p-dependent decoder; allow tiny non-monotonicity
+                assert!(
+                    c.breakdown.server_cost <= prev * 1.05,
+                    "{}: p={p}",
+                    scheme.name()
+                );
+                prev = c.breakdown.server_cost;
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        let (m, set, cost) = setup();
+        assert!(scheme_cost(Scheme::Qpart, &m, &cost, 99, Some(&set), 0).is_err());
+        assert!(scheme_cost(Scheme::Qpart, &m, &cost, 1, None, 0).is_err());
+        assert!(scheme_cost(Scheme::Pruning { ratio: 1.5 }, &m, &cost, 1, None, 0).is_err());
+        assert!(
+            scheme_cost(Scheme::Autoencoder { compress: 0.5 }, &m, &cost, 1, None, 0).is_err()
+        );
+    }
+}

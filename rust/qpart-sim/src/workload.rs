@@ -1,0 +1,195 @@
+//! Workload generator: Poisson request arrivals over a heterogeneous
+//! device fleet (the edge population of paper §I: phones, watches,
+//! cameras, AR glasses — differing clock rates, energy efficiency, memory).
+
+use qpart_core::cost::DeviceProfile;
+use qpart_core::rng::Rng;
+
+/// A class of edge devices with a characteristic profile.
+#[derive(Debug, Clone)]
+pub struct DeviceClass {
+    pub name: &'static str,
+    pub profile: DeviceProfile,
+    /// Relative population weight.
+    pub weight: f64,
+    /// Accuracy budgets this class requests (sampled uniformly).
+    pub accuracy_budgets: Vec<f64>,
+}
+
+impl DeviceClass {
+    /// A representative heterogeneous fleet (see paper §I motivations).
+    pub fn default_fleet() -> Vec<DeviceClass> {
+        let base = DeviceProfile::paper_default();
+        vec![
+            DeviceClass {
+                name: "phone",
+                profile: DeviceProfile { clock_hz: 2e9, kappa: 1e-27, ..base },
+                weight: 0.4,
+                accuracy_budgets: vec![0.005, 0.01],
+            },
+            DeviceClass {
+                name: "camera",
+                profile: DeviceProfile { clock_hz: 400e6, ..base },
+                weight: 0.3,
+                accuracy_budgets: vec![0.01, 0.02],
+            },
+            DeviceClass {
+                name: "watch",
+                profile: DeviceProfile {
+                    clock_hz: 100e6,
+                    kappa: 5e-27,
+                    memory_bits: 32 * 1024 * 1024 * 8,
+                    ..base
+                },
+                weight: 0.2,
+                accuracy_budgets: vec![0.02, 0.05],
+            },
+            DeviceClass {
+                name: "sensor",
+                profile: DeviceProfile {
+                    clock_hz: 50e6,
+                    kappa: 8e-27,
+                    memory_bits: 8 * 1024 * 1024 * 8,
+                    ..base
+                },
+                weight: 0.1,
+                accuracy_budgets: vec![0.05],
+            },
+        ]
+    }
+}
+
+/// Workload configuration.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Mean request arrival rate (requests/s, fleet-wide Poisson).
+    pub arrival_rate: f64,
+    /// Number of devices.
+    pub n_devices: usize,
+    /// Simulation horizon (s).
+    pub duration_s: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig { arrival_rate: 20.0, n_devices: 16, duration_s: 10.0, seed: 1 }
+    }
+}
+
+/// One generated request event.
+#[derive(Debug, Clone)]
+pub struct RequestEvent {
+    pub arrival_s: f64,
+    pub device: usize,
+    pub accuracy_budget: f64,
+}
+
+/// Generates the fleet and the arrival sequence.
+pub struct WorkloadGen {
+    pub devices: Vec<(DeviceProfile, &'static str)>,
+    pub device_budgets: Vec<Vec<f64>>,
+    rng: Rng,
+    cfg: WorkloadConfig,
+}
+
+impl WorkloadGen {
+    pub fn new(cfg: WorkloadConfig, classes: &[DeviceClass]) -> WorkloadGen {
+        assert!(!classes.is_empty());
+        let mut rng = Rng::new(cfg.seed);
+        let total_w: f64 = classes.iter().map(|c| c.weight).sum();
+        let mut devices = Vec::with_capacity(cfg.n_devices);
+        let mut device_budgets = Vec::with_capacity(cfg.n_devices);
+        for _ in 0..cfg.n_devices {
+            let mut pick = rng.uniform() * total_w;
+            let mut chosen = &classes[0];
+            for c in classes {
+                if pick < c.weight {
+                    chosen = c;
+                    break;
+                }
+                pick -= c.weight;
+            }
+            devices.push((chosen.profile, chosen.name));
+            device_budgets.push(chosen.accuracy_budgets.clone());
+        }
+        WorkloadGen { devices, device_budgets, rng, cfg }
+    }
+
+    /// Generate the full arrival sequence (sorted by time).
+    pub fn events(&mut self) -> Vec<RequestEvent> {
+        let mut events = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += self.rng.exponential(1.0 / self.cfg.arrival_rate);
+            if t >= self.cfg.duration_s {
+                break;
+            }
+            let device = self.rng.range_usize(0, self.devices.len());
+            let budgets = &self.device_budgets[device];
+            let accuracy_budget = *self.rng.choose(budgets);
+            events.push(RequestEvent { arrival_s: t, device, accuracy_budget });
+        }
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_respects_population() {
+        let cfg = WorkloadConfig { n_devices: 400, seed: 3, ..Default::default() };
+        let gen = WorkloadGen::new(cfg, &DeviceClass::default_fleet());
+        let phones = gen.devices.iter().filter(|(_, n)| *n == "phone").count();
+        // 40% ± sampling noise
+        assert!((100..220).contains(&phones), "phones={phones}");
+    }
+
+    #[test]
+    fn poisson_rate_approximate() {
+        let cfg = WorkloadConfig {
+            arrival_rate: 50.0,
+            duration_s: 20.0,
+            n_devices: 4,
+            seed: 5,
+        };
+        let mut gen = WorkloadGen::new(cfg, &DeviceClass::default_fleet());
+        let events = gen.events();
+        let expected = 50.0 * 20.0;
+        assert!(
+            (expected * 0.85..expected * 1.15).contains(&(events.len() as f64)),
+            "events={}",
+            events.len()
+        );
+        // sorted arrivals
+        assert!(events.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = WorkloadConfig::default();
+        let a: Vec<f64> = WorkloadGen::new(cfg.clone(), &DeviceClass::default_fleet())
+            .events()
+            .iter()
+            .map(|e| e.arrival_s)
+            .collect();
+        let b: Vec<f64> = WorkloadGen::new(cfg, &DeviceClass::default_fleet())
+            .events()
+            .iter()
+            .map(|e| e.arrival_s)
+            .collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn budgets_match_class() {
+        let cfg = WorkloadConfig { n_devices: 50, seed: 7, ..Default::default() };
+        let mut gen = WorkloadGen::new(cfg, &DeviceClass::default_fleet());
+        let budgets = gen.device_budgets.clone();
+        for e in gen.events() {
+            assert!(budgets[e.device].contains(&e.accuracy_budget));
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! **Ablation** — the value of the closed-form *layer-wise* bit-width
+//! solution (DESIGN.md §6, design-choice ablations).
+//!
+//! Compares, under the same Σψ ≤ 1 accuracy budget:
+//! 1. QPART's water-filling solution (Eq. 27),
+//! 2. the best *uniform* bit-width (the same b everywhere — what a system
+//!    without layer-wise optimization would ship),
+//! 3. the effect of the integer round-up rule,
+//! 4. tighter/looser bit bounds.
+
+mod common;
+
+use common::*;
+use qpart::core::accuracy::psi;
+use qpart::core::optimizer::{solve_pattern, BitBounds};
+use qpart_bench::{fmt_bits, Table};
+
+fn main() {
+    let setup = mlp6_setup();
+    banner("ablation — layer-wise vs uniform bit-widths (mlp6)", setup.calibrated);
+    let arch = &setup.arch;
+    let calib = &setup.calib;
+    let l = arch.num_layers();
+
+    let mut table = Table::new(
+        "payload to satisfy the same noise budget (full partition p=L)",
+        &["level", "water-filling", "uniform-b", "uniform bits", "overhead"],
+    );
+    for (k, &level) in calib.levels.iter().enumerate() {
+        let pat = solve_pattern(arch, calib, k, l, BitBounds::default()).unwrap();
+        let wf_bits = pat.payload_bits(arch);
+
+        // smallest uniform b whose Σψ ≤ 1
+        let mut uniform_b = None;
+        for b in 2u8..=16 {
+            let mut total = psi(calib.s_x(l), b as f64, calib.rho_x(l, k));
+            for i in 1..=l {
+                total += psi(calib.s_w(i), b as f64, calib.rho_w(i, k));
+            }
+            if total <= 1.0 {
+                uniform_b = Some(b);
+                break;
+            }
+        }
+        let (uni_bits, uni_b_str) = match uniform_b {
+            Some(b) => {
+                let z: u64 = (1..=l).map(|i| arch.weight_params(i)).sum::<u64>()
+                    + arch.activation_elems(l);
+                (z * b as u64, b.to_string())
+            }
+            None => (u64::MAX, "infeasible".into()),
+        };
+        table.row(vec![
+            format!("{:.2}%", level * 100.0),
+            fmt_bits(wf_bits),
+            if uni_bits == u64::MAX { "-".into() } else { fmt_bits(uni_bits) },
+            uni_b_str,
+            if uni_bits == u64::MAX {
+                "-".into()
+            } else {
+                format!("+{:.1}%", 100.0 * (uni_bits as f64 / wf_bits as f64 - 1.0))
+            },
+        ]);
+    }
+    table.print();
+
+    // integer rounding: ceil keeps the constraint, round-to-nearest can break it
+    let mut violations = 0usize;
+    let mut total = 0usize;
+    for k in 0..calib.levels.len() {
+        for p in 1..=l {
+            let pat = solve_pattern(arch, calib, k, p, BitBounds::default()).unwrap();
+            // nearest-rounded variant
+            let mut psi_nearest = psi(
+                calib.s_x(p),
+                pat.activation_bits as f64, // already integer; approximate
+                calib.rho_x(p, k),
+            );
+            for i in 1..=p {
+                // subtract a half-bit to emulate round-to-nearest on average
+                let b = (pat.weight_bits[i - 1] as f64 - 0.5).max(2.0);
+                psi_nearest += psi(calib.s_w(i), b, calib.rho_w(i, k));
+            }
+            total += 1;
+            if psi_nearest > 1.0 {
+                violations += 1;
+            }
+        }
+    }
+    println!(
+        "\nround-to-nearest (instead of round-up) would violate the accuracy budget in \
+         {violations}/{total} (level, partition) cells — round-up never does."
+    );
+
+    // bounds sensitivity
+    let mut t2 = Table::new(
+        "bit-bound sensitivity (level a=1%, p=L)",
+        &["bounds", "bits", "payload"],
+    );
+    for (lo, hi) in [(1u8, 24u8), (2, 16), (4, 8)] {
+        match solve_pattern(arch, calib, LEVEL_1PCT, l, BitBounds { min_bits: lo, max_bits: hi }) {
+            Ok(pat) => t2.row(vec![
+                format!("[{lo},{hi}]"),
+                format!("{:?}", pat.weight_bits),
+                fmt_bits(pat.payload_bits(arch)),
+            ]),
+            Err(e) => t2.row(vec![format!("[{lo},{hi}]"), format!("{e}"), "-".into()]),
+        }
+    }
+    t2.print();
+}

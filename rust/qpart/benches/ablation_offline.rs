@@ -1,0 +1,75 @@
+//! **Ablation** — losslessness of the offline/online split.
+//!
+//! The paper precomputes bit-widths offline (Algorithm 1) and only selects
+//! `(level, partition)` online (Algorithm 2). That is optimal *only*
+//! because the closed-form bit-widths are independent of the per-bit price
+//! ε (the channel): this bench verifies it empirically by re-solving the
+//! bit-widths **online** under wildly different channels and comparing
+//! against the offline table — the patterns must coincide, and the online
+//! objective cannot improve.
+
+mod common;
+
+use common::*;
+use qpart::core::optimizer::{solve_pattern, BitBounds};
+use qpart::core::quant::PatternKey;
+use qpart::prelude::*;
+use qpart_bench::Table;
+
+fn main() {
+    let setup = mlp6_setup();
+    banner("ablation — offline table vs online re-solving (mlp6)", setup.calibrated);
+    let arch = &setup.arch;
+    let calib = &setup.calib;
+
+    let channels = [("10 kbps", 1e4), ("1 Mbps", 1e6), ("200 Mbps", 2e8), ("10 Gbps", 1e10)];
+    let mut table = Table::new(
+        "chosen pattern per channel (a = 1%)",
+        &["channel", "p*", "bits (offline)", "re-solved == offline?", "objective"],
+    );
+    let mut all_match = true;
+    for (name, bps) in channels {
+        let mut cost = CostModel::paper_default();
+        cost.channel = Channel::fixed(bps, 1.0);
+        let d = serve_request(
+            arch,
+            &setup.patterns,
+            &RequestParams { cost, accuracy_budget: 0.01 },
+        )
+        .unwrap();
+        // re-solve the bit-widths fresh at this partition — ε plays no role
+        let fresh = solve_pattern(arch, calib, LEVEL_1PCT, d.pattern.partition, BitBounds::default())
+            .unwrap();
+        let same = fresh.weight_bits == d.pattern.weight_bits
+            && fresh.activation_bits == d.pattern.activation_bits;
+        all_match &= same;
+        table.row(vec![
+            name.into(),
+            d.pattern.partition.to_string(),
+            format!("{:?}/{}", d.pattern.weight_bits, d.pattern.activation_bits),
+            if same { "yes".into() } else { "NO".into() },
+            format!("{:.6}", d.cost.objective),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nbit-widths are ε-independent (paper's offline precomputation is lossless): {}",
+        if all_match { "CONFIRMED" } else { "VIOLATED" }
+    );
+
+    // also show that the online partition choice *does* move with the channel
+    let mut t2 = Table::new("partition choice vs channel (a = 5%)", &["channel", "p*"]);
+    for (name, bps) in channels {
+        let mut cost = CostModel::paper_default();
+        cost.channel = Channel::fixed(bps, 1.0);
+        let d = serve_request(
+            arch,
+            &setup.patterns,
+            &RequestParams { cost, accuracy_budget: 0.05 },
+        )
+        .unwrap();
+        t2.row(vec![name.into(), d.pattern.partition.to_string()]);
+    }
+    t2.print();
+    let _ = PatternKey { level_idx: 0, partition: 0 };
+}

@@ -1,0 +1,72 @@
+//! Shared setup for the paper-figure/table benches.
+//!
+//! Every bench works against the real artifact bundle when present
+//! (`make artifacts`), and falls back to the synthetic calibration tables
+//! for the descriptor-only figures so `cargo bench` never hard-fails.
+
+#![allow(dead_code)]
+
+use qpart::prelude::*;
+use std::rc::Rc;
+
+pub const LEVELS: [f64; 5] = [0.0025, 0.005, 0.01, 0.02, 0.05];
+
+/// Locate the artifacts directory relative to the workspace.
+pub fn artifacts_dir() -> Option<&'static str> {
+    for dir in ["artifacts", "../artifacts", "../../artifacts"] {
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            return Some(dir);
+        }
+    }
+    None
+}
+
+pub fn load_bundle() -> Option<Rc<Bundle>> {
+    artifacts_dir().and_then(|d| Bundle::load(d).ok()).map(Rc::new)
+}
+
+/// The mlp6 arch + calibration (+ pattern set), bundle-backed when possible.
+pub struct Mlp6Setup {
+    pub arch: ModelSpec,
+    pub calib: CalibrationTable,
+    pub patterns: PatternSet,
+    pub bundle: Option<Rc<Bundle>>,
+    /// true when the calibration came from the real noise-injection pass
+    pub calibrated: bool,
+}
+
+pub fn mlp6_setup() -> Mlp6Setup {
+    let bundle = load_bundle();
+    let arch = qpart::core::model::mlp6();
+    let (calib, calibrated) = match &bundle {
+        Some(b) => match b.calibration("mlp6") {
+            Ok(c) => (c, true),
+            Err(_) => (CalibrationTable::synthetic(&arch, &LEVELS, 1), false),
+        },
+        None => (CalibrationTable::synthetic(&arch, &LEVELS, 1), false),
+    };
+    let patterns = offline_quantize(&arch, &calib, OfflineConfig::default()).unwrap();
+    Mlp6Setup { arch, calib, patterns, bundle, calibrated }
+}
+
+/// Index of the 1% accuracy level.
+pub const LEVEL_1PCT: usize = 2;
+
+/// The four compared schemes with the parameters used across the figures.
+pub fn schemes() -> Vec<Scheme> {
+    vec![
+        Scheme::Qpart,
+        Scheme::NoOpt,
+        Scheme::Pruning { ratio: 0.05 },
+        Scheme::Autoencoder { compress: 4.0 },
+    ]
+}
+
+pub fn banner(name: &str, calibrated: bool) {
+    println!("\n### {name} ###");
+    if calibrated {
+        println!("(using build-time noise-injection calibration from artifacts/)");
+    } else {
+        println!("(artifacts/ missing — using synthetic calibration; run `make artifacts`)");
+    }
+}

@@ -1,0 +1,66 @@
+//! **Fig. 3** — Layer-wise Parameter Size Reduction.
+//!
+//! Paper: quantizing mlp6 layer-wise at the 1 % accuracy level shrinks
+//! every layer's parameters by 62–84 % (avg 77 %) with degradation < 1 %.
+//! This bench regenerates the per-layer bars: f32 size, quantized size,
+//! reduction ratio.
+
+mod common;
+
+use common::*;
+use qpart_bench::{fmt_bits, Table};
+
+fn main() {
+    let setup = mlp6_setup();
+    banner("Fig. 3 — layer-wise parameter size reduction (mlp6, a = 1%)", setup.calibrated);
+    let arch = &setup.arch;
+    let l = arch.num_layers();
+    let pat = setup
+        .patterns
+        .get(qpart::core::quant::PatternKey { level_idx: LEVEL_1PCT, partition: l })
+        .expect("full-partition pattern");
+
+    let mut table = Table::new(
+        "per-layer parameter payload",
+        &["layer", "params", "bits", "f32 size", "quantized", "reduction"],
+    );
+    let mut total_f32 = 0u64;
+    let mut total_q = 0u64;
+    let mut reductions = Vec::new();
+    for i in 1..=l {
+        let z = arch.weight_params(i);
+        let bits = pat.weight_bits[i - 1] as u64;
+        let f32_bits = 32 * z;
+        let q_bits = bits * z;
+        let red = 1.0 - q_bits as f64 / f32_bits as f64;
+        reductions.push(red);
+        total_f32 += f32_bits;
+        total_q += q_bits;
+        table.row(vec![
+            arch.layers[i - 1].name.clone(),
+            z.to_string(),
+            bits.to_string(),
+            fmt_bits(f32_bits),
+            fmt_bits(q_bits),
+            format!("{:.1}%", red * 100.0),
+        ]);
+    }
+    table.row(vec![
+        "TOTAL".into(),
+        arch.total_params().to_string(),
+        "-".into(),
+        fmt_bits(total_f32),
+        fmt_bits(total_q),
+        format!("{:.1}%", (1.0 - total_q as f64 / total_f32 as f64) * 100.0),
+    ]);
+    table.print();
+    let avg = reductions.iter().sum::<f64>() / reductions.len() as f64;
+    println!(
+        "\npaper: per-layer reductions 62–84 %, average 77 %  |  measured avg: {:.1} % \
+         (min {:.1} %, max {:.1} %), predicted degradation {:.3} % (budget 1 %)",
+        avg * 100.0,
+        reductions.iter().cloned().fold(f64::INFINITY, f64::min) * 100.0,
+        reductions.iter().cloned().fold(0.0, f64::max) * 100.0,
+        pat.predicted_degradation * 100.0,
+    );
+}

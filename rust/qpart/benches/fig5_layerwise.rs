@@ -1,0 +1,64 @@
+//! **Fig. 5** — Layer-wise Performance Comparison.
+//!
+//! Paper: as the partition point moves toward the output layer, time and
+//! device energy rise (more weights over the wire) while server cost falls
+//! (less server compute); QPART sits far below the unoptimized service at
+//! every partition point. Three panels: total time, device energy, server
+//! cost — each QPART vs No-Optimization over p = 0..L.
+
+mod common;
+
+use common::*;
+use qpart::prelude::*;
+use qpart_bench::{fmt_si, Table};
+
+fn main() {
+    let setup = mlp6_setup();
+    banner("Fig. 5 — layer-wise time / energy / server-cost (mlp6)", setup.calibrated);
+    let cost = CostModel::paper_default();
+    let arch = &setup.arch;
+
+    let mut t = Table::new(
+        "panel 1: total time (s) vs partition point",
+        &["p", "QPART", "No Optimization", "speedup"],
+    );
+    let mut e = Table::new(
+        "panel 2: device energy (J) vs partition point",
+        &["p", "QPART", "No Optimization", "saving"],
+    );
+    let mut c = Table::new(
+        "panel 3: server cost vs partition point",
+        &["p", "QPART", "No Optimization"],
+    );
+    for p in 0..=arch.num_layers() {
+        let q = scheme_cost(Scheme::Qpart, arch, &cost, p, Some(&setup.patterns), LEVEL_1PCT)
+            .unwrap();
+        let n = scheme_cost(Scheme::NoOpt, arch, &cost, p, None, 0).unwrap();
+        let (qt, nt) = (q.breakdown.total_time_s(), n.breakdown.total_time_s());
+        t.row(vec![
+            p.to_string(),
+            format!("{qt:.5}"),
+            format!("{nt:.5}"),
+            format!("{:.1}x", nt / qt),
+        ]);
+        let (qe, ne) = (q.breakdown.total_energy_j(), n.breakdown.total_energy_j());
+        e.row(vec![
+            p.to_string(),
+            fmt_si(qe),
+            fmt_si(ne),
+            format!("{:.1}x", ne / qe),
+        ]);
+        c.row(vec![
+            p.to_string(),
+            fmt_si(q.breakdown.server_cost),
+            fmt_si(n.breakdown.server_cost),
+        ]);
+    }
+    t.print();
+    e.print();
+    c.print();
+    println!(
+        "\npaper shapes: time+energy increase with p, server cost decreases with p, \
+         QPART ≪ No-Optimization at every p."
+    );
+}

@@ -1,0 +1,46 @@
+//! **Fig. 6** — Optimized Model Size vs Accuracy.
+//!
+//! Paper: the optimized total parameter size decays (roughly
+//! exponentially) as the allowed accuracy degradation grows.
+
+mod common;
+
+use common::*;
+use qpart_bench::{fmt_bits, Table};
+
+fn main() {
+    let setup = mlp6_setup();
+    banner("Fig. 6 — optimized model size vs accuracy degradation (mlp6)", setup.calibrated);
+    let arch = &setup.arch;
+    let l = arch.num_layers();
+    let f32_bits = arch.segment_weight_bits_f32(l);
+
+    let mut table = Table::new(
+        "payload at the full partition (weights, all layers quantized)",
+        &["allowed degradation", "payload", "vs f32", "mean bits/param"],
+    );
+    let mut sizes = Vec::new();
+    for (k, &level) in setup.patterns.levels.iter().enumerate() {
+        let pat = setup
+            .patterns
+            .get(qpart::core::quant::PatternKey { level_idx: k, partition: l })
+            .unwrap();
+        let w_bits: u64 = (1..=l)
+            .map(|i| (pat.weight_bits[i - 1] as u64) * arch.weight_params(i))
+            .sum();
+        sizes.push(w_bits as f64);
+        table.row(vec![
+            format!("{:.2}%", level * 100.0),
+            fmt_bits(w_bits),
+            format!("{:.1}%", 100.0 * w_bits as f64 / f32_bits as f64),
+            format!("{:.2}", w_bits as f64 / arch.total_params() as f64),
+        ]);
+    }
+    table.print();
+    // decay check: each looser level must not grow the payload
+    let monotone = sizes.windows(2).all(|w| w[1] <= w[0] * (1.0 + 1e-9));
+    println!(
+        "\npaper shape: size decays ~exponentially with allowed degradation. \
+         monotone-decreasing: {monotone}"
+    );
+}

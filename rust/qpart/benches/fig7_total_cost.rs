@@ -1,0 +1,50 @@
+//! **Fig. 7** — Layer-wise Total Cost Comparison (4 schemes).
+//!
+//! Paper: QPART achieves the lowest Eq. 17 objective at every partition
+//! point; the autoencoder scheme is the most expensive (extra encode/
+//! decode compute); pruning sits between.
+
+mod common;
+
+use common::*;
+use qpart::prelude::*;
+use qpart_bench::Table;
+
+fn main() {
+    let setup = mlp6_setup();
+    banner("Fig. 7 — layer-wise total objective, 4 schemes (mlp6)", setup.calibrated);
+    let cost = CostModel::paper_default();
+    let arch = &setup.arch;
+    let list = schemes();
+
+    let mut table = Table::new(
+        "Eq. 17 objective vs partition point",
+        &["p", "QPART", "No Optimization", "Model Pruning", "Auto-Encoder"],
+    );
+    let mut qpart_wins = 0usize;
+    for p in 0..=arch.num_layers() {
+        let vals: Vec<f64> = list
+            .iter()
+            .map(|&s| {
+                scheme_cost(s, arch, &cost, p, Some(&setup.patterns), LEVEL_1PCT)
+                    .unwrap()
+                    .breakdown
+                    .objective
+            })
+            .collect();
+        if vals[0] <= vals.iter().cloned().fold(f64::INFINITY, f64::min) + 1e-15 {
+            qpart_wins += 1;
+        }
+        table.row(
+            std::iter::once(p.to_string())
+                .chain(vals.iter().map(|v| format!("{v:.5}")))
+                .collect(),
+        );
+    }
+    table.print();
+    println!(
+        "\npaper shape: QPART lowest everywhere — holds at {}/{} partition points.",
+        qpart_wins,
+        arch.num_layers() + 1
+    );
+}

@@ -1,0 +1,49 @@
+//! **Fig. 9** — Layer-wise Time Consumption Comparison (4 schemes).
+//!
+//! Paper: QPART has the lowest end-to-end time at every partition point;
+//! the autoencoder's extra encode/decode layers make it slowest.
+
+mod common;
+
+use common::*;
+use qpart::prelude::*;
+use qpart_bench::Table;
+
+fn main() {
+    let setup = mlp6_setup();
+    banner("Fig. 9 — layer-wise total time, 4 schemes (mlp6)", setup.calibrated);
+    let cost = CostModel::paper_default();
+    let arch = &setup.arch;
+    let list = schemes();
+
+    let mut table = Table::new(
+        "total time (s) vs partition point",
+        &["p", "QPART", "No Optimization", "Model Pruning", "Auto-Encoder"],
+    );
+    let mut qpart_fastest = 0usize;
+    for p in 0..=arch.num_layers() {
+        let vals: Vec<f64> = list
+            .iter()
+            .map(|&s| {
+                scheme_cost(s, arch, &cost, p, Some(&setup.patterns), LEVEL_1PCT)
+                    .unwrap()
+                    .breakdown
+                    .total_time_s()
+            })
+            .collect();
+        if vals[0] <= vals.iter().cloned().fold(f64::INFINITY, f64::min) + 1e-15 {
+            qpart_fastest += 1;
+        }
+        table.row(
+            std::iter::once(p.to_string())
+                .chain(vals.iter().map(|v| format!("{v:.5}")))
+                .collect(),
+        );
+    }
+    table.print();
+    println!(
+        "\npaper shape: QPART fastest everywhere — holds at {}/{} points.",
+        qpart_fastest,
+        arch.num_layers() + 1
+    );
+}

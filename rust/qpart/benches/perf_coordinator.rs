@@ -1,0 +1,112 @@
+//! **§Perf** — coordinator-side costs: Algorithm 2 decisions, offline
+//! Algorithm 1 regeneration, session table ops, protocol encode/decode.
+//!
+//! Target (DESIGN.md §8): the decision path must be negligible next to
+//! PJRT execution (µs, not ms).
+
+mod common;
+
+use common::*;
+use qpart::prelude::*;
+use qpart_bench::{black_box, fmt_ns, quick, Table};
+
+fn main() {
+    let setup = mlp6_setup();
+    banner("perf — coordinator decision/bookkeeping paths", setup.calibrated);
+    let arch = &setup.arch;
+    let req = RequestParams { cost: CostModel::paper_default(), accuracy_budget: 0.01 };
+
+    let mut table = Table::new("coordinator ops", &["op", "mean", "p99", "ops/s"]);
+
+    let s = quick(|| {
+        black_box(serve_request(arch, &setup.patterns, &req).unwrap());
+    });
+    table.row(vec![
+        "Algorithm 2 decision".into(),
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p99_ns),
+        format!("{:.0}", s.per_second(1.0)),
+    ]);
+
+    let s = quick(|| {
+        black_box(offline_quantize(arch, &setup.calib, OfflineConfig::default()).unwrap());
+    });
+    table.row(vec![
+        "Algorithm 1 (full table)".into(),
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p99_ns),
+        format!("{:.0}", s.per_second(1.0)),
+    ]);
+
+    // session table open/take at depth 1024
+    let pat = setup
+        .patterns
+        .get(qpart::core::quant::PatternKey { level_idx: LEVEL_1PCT, partition: 3 })
+        .unwrap()
+        .clone();
+    let mut sessions = qpart::coordinator::SessionTable::new(4096);
+    for _ in 0..1024 {
+        sessions.open("mlp6", pat.clone(), vec![1, 128]);
+    }
+    let s = quick(|| {
+        let id = sessions.open("mlp6", pat.clone(), vec![1, 128]);
+        black_box(sessions.take(id));
+    });
+    table.row(vec![
+        "session open+take @1k".into(),
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p99_ns),
+        format!("{:.0}", s.per_second(1.0)),
+    ]);
+
+    // protocol encode/decode of a phase-1 reply with a real-sized segment
+    use qpart::proto::messages::{
+        InferReply, LayerBlob, PatternInfo, Response, SegmentBlob,
+    };
+    let blob = LayerBlob {
+        layer: 1,
+        bits: 4,
+        w_dims: vec![784, 512],
+        w_qmin: -0.4,
+        w_step: 0.004,
+        w_packed: vec![0xA5; 784 * 512 / 2],
+        b_qmin: -0.1,
+        b_step: 0.001,
+        b_len: 512,
+        b_packed: vec![0x5A; 512 / 2],
+    };
+    let reply = Response::Segment(InferReply {
+        session: 1,
+        model: "mlp6".into(),
+        pattern: PatternInfo {
+            partition: 1,
+            weight_bits: vec![4],
+            activation_bits: 8,
+            accuracy_level: 0.01,
+            predicted_degradation: 0.005,
+            objective: 0.1,
+        },
+        segment: SegmentBlob { layers: vec![blob] },
+    });
+    let s = quick(|| {
+        black_box(reply.to_line());
+    });
+    let line = reply.to_line();
+    table.row(vec![
+        format!("encode segment reply ({} KiB)", line.len() / 1024),
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p99_ns),
+        format!("{:.0}", s.per_second(1.0)),
+    ]);
+    let s = quick(|| {
+        black_box(Response::from_line(black_box(&line)).unwrap());
+    });
+    table.row(vec![
+        "decode segment reply".into(),
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p99_ns),
+        format!("{:.0}", s.per_second(1.0)),
+    ]);
+
+    table.print();
+}

@@ -1,0 +1,95 @@
+//! **§Perf** — quantize + bit-pack hot loop.
+//!
+//! This is the per-request O(params) work on the serving path: quantizing
+//! the device segment's weights to the pattern's bit-widths and packing
+//! the codes for the wire. Target (DESIGN.md §8): ≥200 MB/s/core.
+
+mod common;
+
+use common::*;
+use qpart::core::quant::{pack_bits, quantize, unpack_bits};
+use qpart_bench::{black_box, fmt_ns, quick, Table};
+
+fn main() {
+    let setup = mlp6_setup();
+    banner("perf — quantize / pack / unpack / dequantize", setup.calibrated);
+    // layer-1 of mlp6: 784×512 weights (the biggest single buffer)
+    let n = 784 * 512;
+    let data: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.61803).sin()).collect();
+    let mbytes = (n * 4) as f64 / 1e6;
+
+    let mut table = Table::new(
+        "hot-loop throughput (784×512 f32 weights)",
+        &["op", "bits", "mean", "p99", "MB/s (f32 in)"],
+    );
+    for bits in [4u8, 8, 12] {
+        let s = quick(|| {
+            black_box(quantize(black_box(&data), bits).unwrap());
+        });
+        table.row(vec![
+            "quantize".into(),
+            bits.to_string(),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p99_ns),
+            format!("{:.0}", s.per_second(mbytes)),
+        ]);
+
+        let q = quantize(&data, bits).unwrap();
+        let s = quick(|| {
+            black_box(pack_bits(black_box(&q.codes), bits).unwrap());
+        });
+        table.row(vec![
+            "pack".into(),
+            bits.to_string(),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p99_ns),
+            format!("{:.0}", s.per_second(mbytes)),
+        ]);
+
+        let packed = pack_bits(&q.codes, bits).unwrap();
+        let s = quick(|| {
+            black_box(unpack_bits(black_box(&packed), n, bits).unwrap());
+        });
+        table.row(vec![
+            "unpack".into(),
+            bits.to_string(),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p99_ns),
+            format!("{:.0}", s.per_second(mbytes)),
+        ]);
+
+        let s = quick(|| {
+            black_box(q.dequantize());
+        });
+        table.row(vec![
+            "dequantize".into(),
+            bits.to_string(),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p99_ns),
+            format!("{:.0}", s.per_second(mbytes)),
+        ]);
+    }
+    table.print();
+
+    // whole-segment quantization through the executor (bundle-backed)
+    if let Some(bundle) = setup.bundle.clone() {
+        use qpart::prelude::*;
+        use std::rc::Rc;
+        let mut ex = Executor::new(Rc::clone(&bundle)).unwrap();
+        let pat = setup
+            .patterns
+            .get(qpart::core::quant::PatternKey { level_idx: LEVEL_1PCT, partition: 6 })
+            .unwrap()
+            .clone();
+        let s = quick(|| {
+            black_box(ex.quantize_segment("mlp6", &pat).unwrap());
+        });
+        let total_mb = setup.arch.total_params() as f64 * 4.0 / 1e6;
+        println!(
+            "\nfull-segment quantize (mlp6, p=6, {:.1} MB of weights): mean {} → {:.0} MB/s",
+            total_mb,
+            fmt_ns(s.mean_ns),
+            s.per_second(total_mb),
+        );
+    }
+}

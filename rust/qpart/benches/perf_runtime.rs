@@ -1,0 +1,89 @@
+//! **§Perf** — PJRT runtime dispatch and split-inference latency.
+//!
+//! Measures: single-layer executable dispatch (b1), the full quantized
+//! device segment, the server segment, a whole b1 split inference, and
+//! b32 full-model throughput. Requires `make artifacts`.
+
+mod common;
+
+use common::*;
+use qpart::prelude::*;
+use qpart_bench::{black_box, fmt_ns, quick, Table};
+use std::rc::Rc;
+
+fn main() {
+    let Some(bundle) = load_bundle() else {
+        eprintln!("perf_runtime requires artifacts/ — run `make artifacts`");
+        return;
+    };
+    banner("perf — PJRT dispatch + split inference (mlp6)", true);
+    let arch = bundle.arch("mlp6").unwrap().clone();
+    let calib = bundle.calibration("mlp6").unwrap();
+    let patterns = offline_quantize(&arch, &calib, OfflineConfig::default()).unwrap();
+    let mut ex = Executor::new(Rc::clone(&bundle)).unwrap();
+    let (x, _) = bundle.dataset("digits").unwrap();
+    let x = HostTensor::from(x);
+    let x1 = x.slice_rows_padded(0, 1, 1);
+    let x32 = x.slice_rows_padded(0, 32, 32);
+
+    let pat = patterns
+        .get(qpart::core::quant::PatternKey { level_idx: LEVEL_1PCT, partition: 3 })
+        .unwrap()
+        .clone();
+    let seg = ex.quantize_segment("mlp6", &pat).unwrap();
+    let weights = ex.weights("mlp6").unwrap();
+
+    let mut table = Table::new("latency (batch 1 unless noted)", &["path", "mean", "p99"]);
+
+    // warm the executable cache first (compile once)
+    let _ = ex.run_split("mlp6", &pat, x1.clone()).unwrap();
+    let _ = ex.run_full("mlp6", x32.clone()).unwrap();
+
+    let prep = ex.prepared_segment("mlp6", &pat).unwrap();
+    let s = quick(|| {
+        black_box(ex.run_device_segment_prepared(&arch, &prep, x1.clone()).unwrap());
+    });
+    table.row(vec![
+        "device segment (prepared, p=3)".into(),
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p99_ns),
+    ]);
+
+    let s = quick(|| {
+        black_box(ex.run_device_segment(&arch, &seg, x1.clone()).unwrap());
+    });
+    table.row(vec![
+        "device segment (wire blobs, p=3)".into(),
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p99_ns),
+    ]);
+
+    let boundary = ex.run_device_segment(&arch, &seg, x1.clone()).unwrap();
+    let s = quick(|| {
+        black_box(
+            ex.run_server_segment(&arch, &weights, boundary.clone(), 3).unwrap(),
+        );
+    });
+    table.row(vec!["server segment (f32, p=3)".into(), fmt_ns(s.mean_ns), fmt_ns(s.p99_ns)]);
+
+    let s = quick(|| {
+        black_box(ex.run_split("mlp6", &pat, x1.clone()).unwrap());
+    });
+    table.row(vec!["whole split (quantize+run)".into(), fmt_ns(s.mean_ns), fmt_ns(s.p99_ns)]);
+    let split_mean = s.mean_ns;
+
+    let s = quick(|| {
+        black_box(ex.run_full("mlp6", x32.clone()).unwrap());
+    });
+    table.row(vec!["full model (b32)".into(), fmt_ns(s.mean_ns), fmt_ns(s.p99_ns)]);
+    println!(
+        "b32 full-model throughput: {:.0} samples/s",
+        32.0 / (s.mean_ns / 1e9)
+    );
+    table.print();
+    println!(
+        "\nsingle-request split latency {:.2} ms → {:.0} req/s on one PJRT device",
+        split_mean / 1e6,
+        1e9 / split_mean
+    );
+}

@@ -1,0 +1,50 @@
+//! # qpart — facade crate
+//!
+//! One import for the whole QPART stack (Li et al., CS.DC 2025):
+//!
+//! ```no_run
+//! use qpart::prelude::*;
+//!
+//! let bundle = std::rc::Rc::new(Bundle::load("artifacts").unwrap());
+//! let arch = bundle.arch("mlp6").unwrap();
+//! let calib = bundle.calibration("mlp6").unwrap();
+//! let patterns = offline_quantize(arch, &calib, OfflineConfig::default()).unwrap();
+//! let req = RequestParams {
+//!     cost: CostModel::paper_default(),
+//!     accuracy_budget: 0.01,
+//! };
+//! let decision = serve_request(arch, &patterns, &req).unwrap();
+//! println!("partition {} bits {:?}", decision.pattern.partition, decision.pattern.weight_bits);
+//! ```
+//!
+//! Layer map (see DESIGN.md):
+//! * [`core`] — quantizer, noise/accuracy model, cost/channel models,
+//!   closed-form optimizer (Algorithms 1 & 2).
+//! * [`runtime`] — PJRT engine + artifact bundle + split-inference executor.
+//! * [`sim`] — the paper-§V simulation platform and scheme cost models.
+//! * [`coordinator`] — TCP serving stack (service/server/client/metrics).
+//! * [`proto`] — wire protocol.
+
+pub use qpart_coordinator as coordinator;
+pub use qpart_core as core;
+pub use qpart_proto as proto;
+pub use qpart_runtime as runtime;
+pub use qpart_sim as sim;
+
+/// Most-used items in one import.
+pub mod prelude {
+    pub use qpart_coordinator::{serve, DeviceClient, Metrics, ServerConfig, Service};
+    pub use qpart_core::accuracy::CalibrationTable;
+    pub use qpart_core::channel::Channel;
+    pub use qpart_core::config::Config;
+    pub use qpart_core::cost::{CostModel, DeviceProfile, ServerProfile, TradeoffWeights};
+    pub use qpart_core::model::{builtin, ModelSpec};
+    pub use qpart_core::optimizer::{
+        offline_quantize, serve_request, BitBounds, Decision, OfflineConfig, RequestParams,
+    };
+    pub use qpart_core::quant::{PatternSet, QuantPattern};
+    pub use qpart_runtime::{Bundle, Executor, HostTensor};
+    pub use qpart_sim::{
+        run_fleet, scheme_cost, DeviceClass, FleetConfig, Scheme, WorkloadConfig,
+    };
+}

@@ -1,0 +1,184 @@
+//! Cross-module consistency tests (no artifacts required): the optimizer,
+//! the scheme cost models, the fleet simulator and the config system must
+//! all agree on the same math — a mismatch would silently bias the
+//! reproduction.
+
+use qpart::core::json::{parse, Value};
+use qpart::core::quant::PatternKey;
+use qpart::core::rng::Rng;
+use qpart::core::testing::check;
+use qpart::prelude::*;
+
+const LEVELS: [f64; 5] = [0.0025, 0.005, 0.01, 0.02, 0.05];
+
+fn setup() -> (ModelSpec, PatternSet) {
+    let arch = qpart::core::model::mlp6();
+    let calib = CalibrationTable::synthetic(&arch, &LEVELS, 99);
+    let patterns = offline_quantize(&arch, &calib, OfflineConfig::default()).unwrap();
+    (arch, patterns)
+}
+
+#[test]
+fn algorithm2_agrees_with_scheme_cost() {
+    // The objective Algorithm 2 reports per partition must equal the
+    // Fig. 5/7 scheme cost model's QPART objective at that partition.
+    let (arch, patterns) = setup();
+    let cost = CostModel::paper_default();
+    let decision = serve_request(
+        &arch,
+        &patterns,
+        &RequestParams { cost, accuracy_budget: 0.01 },
+    )
+    .unwrap();
+    for (idx, &p) in arch.partition_points.iter().enumerate() {
+        let sc = scheme_cost(Scheme::Qpart, &arch, &cost, p, Some(&patterns), 2).unwrap();
+        let from_decision = decision.objective_by_partition[idx];
+        assert!(
+            (sc.breakdown.objective - from_decision).abs()
+                <= 1e-12 * from_decision.abs().max(1.0),
+            "p={p}: {} vs {}",
+            sc.breakdown.objective,
+            from_decision
+        );
+    }
+}
+
+#[test]
+fn fleet_objective_matches_algorithm2() {
+    // Each fleet-sim record's objective is the Algorithm 2 objective for
+    // the observed channel; re-deriving it must reproduce the record.
+    let (arch, patterns) = setup();
+    let cfg = FleetConfig::default();
+    let report = run_fleet(&arch, &patterns, &DeviceClass::default_fleet(), &cfg).unwrap();
+    assert!(!report.perf.records.is_empty());
+    for r in report.perf.records.iter().take(20) {
+        assert!(r.objective.is_finite() && r.objective > 0.0);
+        assert!(arch.partition_points.contains(&r.partition));
+    }
+}
+
+#[test]
+fn config_cost_model_matches_paper_default() {
+    let cfg = Config::defaults();
+    let sys = cfg.system().unwrap();
+    let from_cfg = sys.cost_model();
+    let paper = CostModel::paper_default();
+    assert_eq!(from_cfg.device, paper.device);
+    assert_eq!(from_cfg.server, paper.server);
+    assert_eq!(from_cfg.channel, paper.channel);
+    // identical coefficients => identical objectives
+    assert!((from_cfg.xi() - paper.xi()).abs() < 1e-18);
+    assert!((from_cfg.delta() - paper.delta()).abs() < 1e-18);
+    assert!((from_cfg.epsilon() - paper.epsilon()).abs() < 1e-18);
+}
+
+#[test]
+fn pattern_table_payload_never_above_f32() {
+    let (arch, patterns) = setup();
+    for row in &patterns.patterns {
+        for pat in row {
+            assert!(pat.payload_bits(&arch) <= pat.payload_bits_f32(&arch));
+        }
+    }
+}
+
+#[test]
+fn decision_invariant_under_irrelevant_levels() {
+    // Asking for 1.0% vs 1.9% budget must select the same offline level
+    // (a=1%) and thus the same pattern.
+    let (arch, patterns) = setup();
+    let cost = CostModel::paper_default();
+    let d1 = serve_request(&arch, &patterns, &RequestParams { cost, accuracy_budget: 0.01 })
+        .unwrap();
+    let d2 = serve_request(&arch, &patterns, &RequestParams { cost, accuracy_budget: 0.019 })
+        .unwrap();
+    assert_eq!(d1.level_idx, d2.level_idx);
+    assert_eq!(d1.pattern, d2.pattern);
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn random_value(rng: &mut Rng, depth: usize) -> Value {
+        let pick = if depth > 3 { rng.below(4) } else { rng.below(6) };
+        match pick {
+            0 => Value::Null,
+            1 => Value::Bool(rng.uniform() < 0.5),
+            2 => {
+                // mix of integral / fractional / large
+                match rng.below(3) {
+                    0 => Value::Num(rng.below(1_000_000) as f64),
+                    1 => Value::Num(rng.range_f64(-1e6, 1e6)),
+                    _ => Value::Num(rng.range_f64(-1.0, 1.0) * 1e-9),
+                }
+            }
+            3 => {
+                let n = rng.range_usize(0, 12);
+                let s: String = (0..n)
+                    .map(|_| {
+                        let chars = ['a', 'é', '"', '\\', '\n', '\t', '😀', ' ', '0', '}'];
+                        *rng.choose(&chars)
+                    })
+                    .collect();
+                Value::Str(s)
+            }
+            4 => {
+                let n = rng.range_usize(0, 5);
+                Value::Arr((0..n).map(|_| random_value(rng, depth + 1)).collect())
+            }
+            _ => {
+                let n = rng.range_usize(0, 5);
+                Value::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), random_value(rng, depth + 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    check("json parse∘serialize = id", 150, |rng| {
+        let v = random_value(rng, 0);
+        let compact = v.to_string_compact();
+        assert_eq!(parse(&compact).unwrap(), v, "compact: {compact}");
+        let pretty = v.to_string_pretty();
+        assert_eq!(parse(&pretty).unwrap(), v, "pretty");
+    });
+}
+
+#[test]
+fn prop_decision_objective_is_minimum() {
+    check("Alg2 picks the argmin over feasible partitions", 40, |rng| {
+        let arch = qpart::core::model::mlp6();
+        let calib = CalibrationTable::synthetic(&arch, &LEVELS, rng.next_u64());
+        let patterns = offline_quantize(&arch, &calib, OfflineConfig::default()).unwrap();
+        let mut cost = CostModel::paper_default();
+        cost.channel = Channel::fixed(rng.range_f64(1e5, 1e9), rng.range_f64(0.1, 2.0));
+        cost.device.clock_hz = rng.range_f64(5e7, 5e9);
+        cost.server.price_per_s = rng.range_f64(0.0, 0.1);
+        let budget = *rng.choose(&[0.0025, 0.005, 0.01, 0.02, 0.05, 0.2]);
+        let d = serve_request(&arch, &patterns, &RequestParams { cost, accuracy_budget: budget })
+            .unwrap();
+        let min = d
+            .objective_by_partition
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        assert!(d.cost.objective <= min * (1.0 + 1e-12) + 1e-18);
+    });
+}
+
+#[test]
+fn prop_solver_payload_monotone_in_budget() {
+    check("looser budget never increases payload", 30, |rng| {
+        let arch = qpart::core::model::edgecnn(10);
+        let calib = CalibrationTable::synthetic(&arch, &LEVELS, rng.next_u64());
+        let patterns = offline_quantize(&arch, &calib, OfflineConfig::default()).unwrap();
+        let p = rng.range_usize(0, arch.num_layers() + 1);
+        let mut prev = u64::MAX;
+        for k in 0..LEVELS.len() {
+            let pat = patterns.get(PatternKey { level_idx: k, partition: p }).unwrap();
+            let z = pat.payload_bits(&arch);
+            assert!(z <= prev, "k={k} p={p}");
+            prev = z;
+        }
+    });
+}

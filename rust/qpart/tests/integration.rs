@@ -1,0 +1,349 @@
+//! Integration tests over the real artifact bundle (requires
+//! `make artifacts`). Exercises: bundle loading, PJRT execution, split
+//! inference vs full inference, the accuracy-degradation contract, the
+//! baselines, and the TCP serving stack end to end.
+
+use qpart::coordinator::client::paper_request;
+use qpart::prelude::*;
+use std::rc::Rc;
+
+fn artifacts_dir() -> Option<&'static str> {
+    for dir in ["artifacts", "../artifacts", "../../artifacts"] {
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            return Some(dir);
+        }
+    }
+    None
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+fn load_bundle() -> Rc<Bundle> {
+    Rc::new(Bundle::load(artifacts_dir().unwrap()).expect("bundle loads"))
+}
+
+#[test]
+fn bundle_loads_and_is_complete() {
+    require_artifacts!();
+    let b = load_bundle();
+    assert!(b.models.iter().any(|m| m.name == "mlp6"));
+    assert_eq!(b.levels.len(), 5);
+    for m in &b.models {
+        let arch = b.arch(&m.arch).unwrap();
+        let w = b.weights(&m.name).unwrap();
+        assert_eq!(w.layers.len(), arch.num_layers());
+        let c = b.calibration(&m.name).unwrap();
+        c.validate(arch).unwrap();
+    }
+}
+
+#[test]
+fn full_inference_matches_manifest_accuracy() {
+    require_artifacts!();
+    let b = load_bundle();
+    let entry = b.model("mlp6").unwrap().clone();
+    let (x, y) = b.dataset(&entry.dataset).unwrap();
+    let x = HostTensor::from(x);
+    let mut ex = Executor::new(Rc::clone(&b)).unwrap();
+    let acc = ex
+        .eval_accuracy(&x, &y, |ex, chunk| ex.run_full("mlp6", chunk))
+        .unwrap();
+    assert!(
+        (acc - entry.test_accuracy).abs() < 0.01,
+        "runtime accuracy {acc} vs build-time {}",
+        entry.test_accuracy
+    );
+}
+
+#[test]
+fn split_at_high_bits_matches_full() {
+    require_artifacts!();
+    let b = load_bundle();
+    let arch = b.arch("mlp6").unwrap().clone();
+    let mut ex = Executor::new(Rc::clone(&b)).unwrap();
+    let (x, _) = b.dataset("digits").unwrap();
+    let x = HostTensor::from(x);
+    let input = x.slice_rows_padded(0, 1, 1);
+    let full = ex.run_full_f32_reference(&arch, "mlp6", input.clone());
+    for p in [0usize, 2, 4, 6] {
+        let pattern = QuantPattern {
+            partition: p,
+            weight_bits: vec![16; p],
+            activation_bits: 16,
+            accuracy_level: 1.0,
+            predicted_degradation: 0.0,
+        };
+        let outcome = ex.run_split("mlp6", &pattern, input.clone()).unwrap();
+        let diff: f32 = full
+            .data
+            .iter()
+            .zip(&outcome.logits.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(diff < 0.35, "p={p}: 16-bit split deviates by {diff} in logits");
+        // same argmax
+        let argmax = |v: &[f32]| {
+            v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+        };
+        assert_eq!(argmax(&full.data), argmax(&outcome.logits.data), "p={p}");
+    }
+}
+
+// Give Executor a reference helper for the test above.
+trait RefRun {
+    fn run_full_f32_reference(
+        &mut self,
+        arch: &ModelSpec,
+        model: &str,
+        x: HostTensor,
+    ) -> HostTensor;
+}
+impl RefRun for Executor {
+    fn run_full_f32_reference(
+        &mut self,
+        arch: &ModelSpec,
+        model: &str,
+        x: HostTensor,
+    ) -> HostTensor {
+        let weights = self.weights(model).unwrap();
+        self.run_server_segment(arch, &weights, x, 0).unwrap()
+    }
+}
+
+#[test]
+fn split_accuracy_respects_degradation_budget() {
+    require_artifacts!();
+    let b = load_bundle();
+    let arch = b.arch("mlp6").unwrap().clone();
+    let calib = b.calibration("mlp6").unwrap();
+    let patterns = offline_quantize(&arch, &calib, OfflineConfig::default()).unwrap();
+    let entry = b.model("mlp6").unwrap().clone();
+    let (x, y) = b.dataset(&entry.dataset).unwrap();
+    let x = HostTensor::from(x);
+    let mut ex = Executor::new(Rc::clone(&b)).unwrap();
+
+    // level index 2 = 1% budget; check a few partitions
+    let k = 2usize;
+    let budget = patterns.levels[k];
+    for &p in &[0usize, 3, 6] {
+        let pat = patterns
+            .get(qpart::core::quant::PatternKey { level_idx: k, partition: p })
+            .unwrap()
+            .clone();
+        let acc = ex
+            .eval_accuracy(&x, &y, |ex, chunk| {
+                Ok(ex.run_split("mlp6", &pat, chunk)?.logits)
+            })
+            .unwrap();
+        let degradation = entry.test_accuracy - acc;
+        // the noise model is calibrated, not exact: allow 3× headroom + eval noise
+        assert!(
+            degradation <= budget * 3.0 + 0.01,
+            "p={p}: degradation {degradation:.4} exceeds 3×budget {budget}"
+        );
+    }
+}
+
+#[test]
+fn segment_payload_matches_pattern_accounting() {
+    require_artifacts!();
+    let b = load_bundle();
+    let arch = b.arch("mlp6").unwrap().clone();
+    let calib = b.calibration("mlp6").unwrap();
+    let patterns = offline_quantize(&arch, &calib, OfflineConfig::default()).unwrap();
+    let mut ex = Executor::new(Rc::clone(&b)).unwrap();
+    let pat = patterns
+        .get(qpart::core::quant::PatternKey { level_idx: 2, partition: 4 })
+        .unwrap()
+        .clone();
+    let seg = ex.quantize_segment("mlp6", &pat).unwrap();
+    // Eq. 14 weight part: Σ b_l · z_w(l) (z_w includes bias)
+    let expected: u64 = (1..=4)
+        .map(|l| (pat.weight_bits[l - 1] as u64) * arch.weight_params(l))
+        .sum();
+    assert_eq!(seg.weight_payload_bits(), expected);
+}
+
+#[test]
+fn baselines_run_and_rank_accuracy() {
+    require_artifacts!();
+    let b = load_bundle();
+    let entry = b.model("mlp6").unwrap().clone();
+    let (x, y) = b.dataset(&entry.dataset).unwrap();
+    let x = HostTensor::from(x);
+    // subset for speed
+    let n = 320.min(x.batch());
+    let xs = x.slice_rows(0, n);
+    let ys = &y[..n];
+    let mut ex = Executor::new(Rc::clone(&b)).unwrap();
+
+    let p = 3usize;
+    let acc_noopt = ex
+        .eval_accuracy(&xs, ys, |ex, c| Ok(ex.run_split_f32("mlp6", p, c)?.logits))
+        .unwrap();
+    let acc_prune = ex
+        .eval_accuracy(&xs, ys, |ex, c| {
+            Ok(ex.run_split_pruned("mlp6", p, 0.3, c)?.logits)
+        })
+        .unwrap();
+    let acc_ae = ex
+        .eval_accuracy(&xs, ys, |ex, c| Ok(ex.run_split_ae("mlp6", p, c)?.logits))
+        .unwrap();
+    // No-opt is exact → top accuracy; pruning/AE lose something
+    assert!(acc_noopt >= acc_prune - 1e-9, "noopt {acc_noopt} vs prune {acc_prune}");
+    assert!(acc_noopt >= acc_ae - 0.02, "noopt {acc_noopt} vs ae {acc_ae}");
+    assert!(acc_prune > 0.3 && acc_ae > 0.3, "baselines should still work");
+}
+
+#[test]
+fn conv_model_split_runs() {
+    require_artifacts!();
+    let b = load_bundle();
+    let entry = b.model("tinyresnet").unwrap().clone();
+    let arch = b.arch(&entry.arch).unwrap().clone();
+    let (x, _) = b.dataset(&entry.dataset).unwrap();
+    let x = HostTensor::from(x);
+    let input = x.slice_rows_padded(0, 1, 1);
+    let mut ex = Executor::new(Rc::clone(&b)).unwrap();
+    for &p in &arch.partition_points.clone() {
+        let pattern = QuantPattern {
+            partition: p,
+            weight_bits: vec![12; p],
+            activation_bits: 12,
+            accuracy_level: 1.0,
+            predicted_degradation: 0.0,
+        };
+        let out = ex.run_split("tinyresnet", &pattern, input.clone()).unwrap();
+        assert_eq!(out.logits.dims, vec![1, 10], "p={p}");
+        assert!(out.logits.data.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn server_two_phase_roundtrip() {
+    require_artifacts!();
+    let dir = artifacts_dir().unwrap();
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        queue_capacity: 64,
+        session_capacity: 128,
+        artifacts_dir: dir.into(),
+    })
+    .expect("server starts");
+    let addr = handle.addr.to_string();
+
+    let b = load_bundle();
+    let mut client = DeviceClient::connect(&addr, Rc::clone(&b)).unwrap();
+    assert!(client.ping().unwrap());
+
+    let entry = b.model("mlp6").unwrap().clone();
+    let (x, y) = b.dataset(&entry.dataset).unwrap();
+    let x = HostTensor::from(x);
+
+    let mut correct = 0;
+    let n = 12;
+    for i in 0..n {
+        let input = x.slice_rows_padded(i, i + 1, 1);
+        let (pred, logits, partition) =
+            client.infer(paper_request("mlp6", 0.01), input).unwrap();
+        assert_eq!(logits.len(), 10);
+        assert!(partition <= 6);
+        if pred == y[i] {
+            correct += 1;
+        }
+    }
+    // ~97% model, 12 samples: at least 9 correct
+    assert!(correct >= 9, "two-phase accuracy too low: {correct}/{n}");
+
+    let snap = handle.snapshot();
+    assert!(snap.requests_total >= (2 * n + 1) as u64);
+    assert_eq!(snap.errors_total, 0);
+    assert_eq!(snap.sessions_opened, n as u64);
+    handle.shutdown();
+}
+
+#[test]
+fn server_rejects_garbage_and_unknown_sessions() {
+    require_artifacts!();
+    let dir = artifacts_dir().unwrap();
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        queue_capacity: 8,
+        session_capacity: 8,
+        artifacts_dir: dir.into(),
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    use qpart::proto::frame::{read_frame, write_frame};
+    use std::io::BufReader;
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // not JSON
+    write_frame(&mut writer, "this is not json").unwrap();
+    let resp = qpart::proto::messages::Response::from_line(&read_frame(&mut reader).unwrap())
+        .unwrap();
+    match resp {
+        qpart::proto::messages::Response::Error(e) => assert_eq!(e.code, "bad_request"),
+        other => panic!("expected error, got {other:?}"),
+    }
+
+    // unknown session
+    let act = qpart::proto::messages::Request::Activation(
+        qpart::proto::messages::ActivationUpload {
+            session: 999_999,
+            bits: 8,
+            qmin: 0.0,
+            step: 0.1,
+            dims: vec![1, 10],
+            packed: vec![0; 10],
+        },
+    );
+    write_frame(&mut writer, &act.to_line()).unwrap();
+    let resp = qpart::proto::messages::Response::from_line(&read_frame(&mut reader).unwrap())
+        .unwrap();
+    match resp {
+        qpart::proto::messages::Response::Error(e) => assert_eq!(e.code, "unknown_session"),
+        other => panic!("expected error, got {other:?}"),
+    }
+
+    // unknown model
+    let inf = qpart::proto::messages::Request::Infer(paper_request("nope", 0.01));
+    write_frame(&mut writer, &inf.to_line()).unwrap();
+    let resp = qpart::proto::messages::Response::from_line(&read_frame(&mut reader).unwrap())
+        .unwrap();
+    match resp {
+        qpart::proto::messages::Response::Error(e) => assert_eq!(e.code, "unknown_model"),
+        other => panic!("expected error, got {other:?}"),
+    }
+
+    handle.shutdown();
+}
+
+#[test]
+fn corrupted_bundle_rejected() {
+    require_artifacts!();
+    // copy manifest into a temp dir with a missing file reference
+    let dir = std::env::temp_dir().join("qpart-corrupt-bundle");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = std::fs::read_to_string(
+        std::path::Path::new(artifacts_dir().unwrap()).join("manifest.json"),
+    )
+    .unwrap();
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    // referenced files don't exist in the temp dir
+    assert!(Bundle::load(&dir).is_err());
+}
