@@ -8,7 +8,7 @@
 use qpart::prelude::*;
 use std::rc::Rc;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n_eval: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
     let Ok(bundle) = Bundle::load("artifacts") else {
         eprintln!("artifacts/ missing — run `make artifacts` first");

@@ -31,7 +31,7 @@ struct ClassSpec {
     weights: Option<(f64, f64, f64)>,
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n_per_class: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -44,13 +44,13 @@ fn main() -> anyhow::Result<()> {
     // ---- start the real coordinator
     let handle = serve(qpart::coordinator::ServerConfig {
         listen: "127.0.0.1:0".into(),
+        workers: 4,
         queue_capacity: 256,
         session_capacity: 4096,
         artifacts_dir: "artifacts".into(),
-    })
-    .map_err(|e| anyhow::anyhow!(e))?;
+    })?;
     let addr = handle.addr.to_string();
-    println!("coordinator up on {addr} (Algorithm 1 tables built at startup)");
+    println!("coordinator up on {addr} (Algorithm 1 tables built at startup, 4 workers)");
 
     let bundle = Rc::new(Bundle::load("artifacts")?);
     let (x, y) = bundle.dataset("digits")?;

@@ -14,7 +14,7 @@
 use qpart::prelude::*;
 use std::rc::Rc;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let Ok(bundle) = Bundle::load("artifacts") else {
         eprintln!("artifacts/ missing — run `make artifacts` first");
         return Ok(());

@@ -10,18 +10,18 @@ use qpart::prelude::*;
 use qpart::proto::messages::{Request, Response};
 use std::rc::Rc;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     if Bundle::load("artifacts").is_err() {
         eprintln!("artifacts/ missing — run `make artifacts` first");
         return Ok(());
     }
     let handle = serve(qpart::coordinator::ServerConfig {
         listen: "127.0.0.1:0".into(),
+        workers: 2,
         queue_capacity: 16,
         session_capacity: 64,
         artifacts_dir: "artifacts".into(),
-    })
-    .map_err(|e| anyhow::anyhow!(e))?;
+    })?;
     println!("[server] listening on {}", handle.addr);
 
     let bundle = Rc::new(Bundle::load("artifacts")?);
@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
     );
     let reply = match client.call(&Request::Infer(req.clone()))? {
         Response::Segment(r) => r,
-        other => anyhow::bail!("unexpected: {other:?}"),
+        other => return Err(format!("unexpected: {other:?}").into()),
     };
     println!(
         "[device] ← segment: session={} p={} bits={:?} b_x={} predicted degradation {:.3}%",

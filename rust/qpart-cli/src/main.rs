@@ -51,6 +51,14 @@ fn run(raw: Vec<String>) -> Result<(), String> {
 
 const USAGE: &str = "usage: qpart <serve|request|sim|offline|models> [flags]\n\
   serve    --listen 127.0.0.1:7878 --artifacts artifacts [--config f] [--set k=v]\n\
+           [--workers N]   executor-pool size: N inference threads, each owning\n\
+                           its own PJRT executor (default: serving.workers = 4;\n\
+                           mirrors the simulator's server_slots)\n\
+           [--queue N]     admission control: bounded job-queue depth; requests\n\
+                           beyond it are shed with an 'overloaded' error\n\
+                           (default: serving.queue_capacity = 1024)\n\
+           [--sessions N]  two-phase session-table capacity, sharded across\n\
+                           workers; oldest evicted first (default: 4096)\n\
   request  --model mlp6 --accuracy 0.01 --n 16 --addr 127.0.0.1:7878\n\
   sim      --model mlp6 --rate 20 --devices 16 --duration 10\n\
   offline  --model mlp6\n\
@@ -72,11 +80,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let serving = cfg.serving().map_err(|e| e.to_string())?;
     let server_cfg = qpart::coordinator::ServerConfig {
         listen: args.get_or("listen", &serving.listen).to_string(),
-        queue_capacity: serving.queue_capacity,
-        session_capacity: 4096,
+        workers: args.get_usize("workers", serving.workers)?,
+        queue_capacity: args.get_usize("queue", serving.queue_capacity)?,
+        session_capacity: args.get_usize("sessions", 4096)?,
         artifacts_dir: args.get_or("artifacts", &serving.artifacts_dir).to_string(),
     };
-    println!("loading bundle from '{}' ...", server_cfg.artifacts_dir);
+    println!(
+        "loading bundle from '{}' ({} workers, queue {}) ...",
+        server_cfg.artifacts_dir, server_cfg.workers, server_cfg.queue_capacity
+    );
     let handle = serve(server_cfg)?;
     println!("qpart coordinator listening on {}", handle.addr);
     println!("(ctrl-c to stop)");

@@ -8,13 +8,18 @@
 //!   protocol, PJRT execution of the server-side segment.
 //! * [`server`] — TCP front-end: JSON-lines framing, a bounded job queue
 //!   with admission control (overload sheds with an `overloaded` error),
-//!   and a dedicated inference thread (PJRT is single-device; requests
-//!   serialize there by design).
+//!   and a configurable **executor pool**: `workers` inference threads,
+//!   each owning its own PJRT executor and Algorithm 1 tables (PJRT
+//!   clients are single-device and not `Send`), draining one shared
+//!   queue. The knob mirrors the simulator's `FleetConfig::server_slots`.
 //! * [`client`] — the device side for examples/CLI: sends requests,
 //!   executes the received quantized segment locally through its own PJRT
 //!   engine, uploads the quantized boundary activation.
-//! * [`metrics`] — counters + histograms surfaced via the `stats` request.
-//! * [`session`] — session table with capacity-bounded GC.
+//! * [`metrics`] — per-worker counters + histograms, aggregated by a
+//!   [`MetricsHub`] and surfaced via the `stats` request.
+//! * [`session`] — sharded, capacity-bounded session table shared by all
+//!   workers (phase 1 and phase 2 of a session may be handled by
+//!   different workers).
 //!
 //! Python never appears anywhere on these paths.
 
@@ -25,7 +30,7 @@ pub mod service;
 pub mod session;
 
 pub use client::DeviceClient;
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsHub, MetricsSnapshot};
 pub use server::{serve, ServerConfig, ServerHandle};
 pub use service::Service;
-pub use session::{Session, SessionTable};
+pub use session::{Session, SessionTable, SharedSessionTable};

@@ -1,8 +1,16 @@
 //! Metrics registry: thread-safe counters and fixed-bucket latency
 //! histograms, surfaced through the wire protocol's `stats` request.
+//!
+//! Pool topology: every inference worker owns its own [`Metrics`] (no
+//! cross-worker cache-line bouncing on the hot path) and the connection
+//! front-end owns one more (shed / bad-frame counters). A [`MetricsHub`]
+//! holds them all and aggregates into a single [`MetricsSnapshot`] /
+//! stats-JSON document on demand, so observers see one logical server
+//! regardless of how many workers are running.
 
 use qpart_core::json::Value;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Log-spaced latency buckets in microseconds (upper bounds).
 const BUCKETS_US: [u64; 12] =
@@ -35,23 +43,77 @@ impl Histogram {
     }
 
     pub fn mean_us(&self) -> f64 {
-        let n = self.count();
-        if n == 0 {
-            return f64::NAN;
-        }
-        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        self.summary().mean_us()
     }
 
     /// Approximate quantile from bucket boundaries.
     pub fn quantile_us(&self, q: f64) -> f64 {
-        let n = self.count();
-        if n == 0 {
+        self.summary().quantile_us(q)
+    }
+
+    /// Point-in-time plain-number copy (mergeable across workers).
+    pub fn summary(&self) -> HistogramSummary {
+        let mut buckets = [0u64; 12];
+        for (dst, src) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistogramSummary {
+            buckets,
+            overflow: self.overflow.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        self.summary().to_json()
+    }
+}
+
+/// Plain-number histogram snapshot; the additive unit the hub merges.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HistogramSummary {
+    buckets: [u64; 12],
+    overflow: u64,
+    sum_us: u64,
+    count: u64,
+}
+
+impl HistogramSummary {
+    /// Add another worker's observations into this summary.
+    pub fn merge(&mut self, other: &HistogramSummary) {
+        for (dst, src) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *dst += src;
+        }
+        self.overflow += other.overflow;
+        self.sum_us += other.sum_us;
+        self.count += other.count;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
             return f64::NAN;
         }
-        let target = (n as f64 * q).ceil() as u64;
+        self.sum_us as f64 / self.count as f64
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = (self.count as f64 * q).ceil() as u64;
         let mut seen = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
             if seen >= target {
                 return BUCKETS_US[i] as f64;
             }
@@ -61,7 +123,7 @@ impl Histogram {
 
     pub fn to_json(&self) -> Value {
         Value::obj([
-            ("count", self.count().into()),
+            ("count", self.count.into()),
             ("mean_us", self.mean_us().into()),
             ("p50_us", self.quantile_us(0.5).into()),
             ("p99_us", self.quantile_us(0.99).into()),
@@ -69,7 +131,7 @@ impl Histogram {
     }
 }
 
-/// All coordinator metrics.
+/// All metrics of one worker (or of the connection front-end).
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests_total: AtomicU64,
@@ -90,6 +152,8 @@ pub struct Metrics {
 }
 
 /// A point-in-time copy (plain numbers) for assertions and reports.
+/// For a pooled server this is the **aggregate over all workers** plus the
+/// connection front-end — one logical snapshot, per the serving contract.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MetricsSnapshot {
     pub requests_total: u64,
@@ -137,6 +201,151 @@ impl Metrics {
     }
 }
 
+/// Additive plain-number copy of one [`Metrics`]' counters — the unit the
+/// hub sums across workers (named fields, so counters can't be shuffled
+/// under each other's keys).
+#[derive(Debug, Clone, Copy, Default)]
+struct CounterTotals {
+    requests_total: u64,
+    errors_total: u64,
+    shed_total: u64,
+    sessions_opened: u64,
+    sessions_expired: u64,
+    bytes_out: u64,
+    bytes_in: u64,
+}
+
+impl CounterTotals {
+    fn of(m: &Metrics) -> CounterTotals {
+        CounterTotals {
+            requests_total: m.requests_total.load(Ordering::Relaxed),
+            errors_total: m.errors_total.load(Ordering::Relaxed),
+            shed_total: m.shed_total.load(Ordering::Relaxed),
+            sessions_opened: m.sessions_opened.load(Ordering::Relaxed),
+            sessions_expired: m.sessions_expired.load(Ordering::Relaxed),
+            bytes_out: m.bytes_out.load(Ordering::Relaxed),
+            bytes_in: m.bytes_in.load(Ordering::Relaxed),
+        }
+    }
+
+    fn add(&mut self, other: &CounterTotals) {
+        self.requests_total += other.requests_total;
+        self.errors_total += other.errors_total;
+        self.shed_total += other.shed_total;
+        self.sessions_opened += other.sessions_opened;
+        self.sessions_expired += other.sessions_expired;
+        self.bytes_out += other.bytes_out;
+        self.bytes_in += other.bytes_in;
+    }
+}
+
+/// Result of one aggregation walk over the hub (see [`MetricsHub::snapshot`]
+/// and [`MetricsHub::to_json`]).
+struct Aggregate {
+    totals: CounterTotals,
+    handle: HistogramSummary,
+    decide: HistogramSummary,
+    quantize: HistogramSummary,
+    execute: HistogramSummary,
+    per_worker: Vec<Value>,
+}
+
+/// Registry for the executor pool: one [`Metrics`] per worker plus one for
+/// the connection front-end, aggregated on demand.
+#[derive(Debug, Default)]
+pub struct MetricsHub {
+    front: Arc<Metrics>,
+    workers: Mutex<Vec<Arc<Metrics>>>,
+}
+
+impl MetricsHub {
+    pub fn new() -> MetricsHub {
+        MetricsHub::default()
+    }
+
+    /// The connection front-end's metrics (shed / bad-frame counters).
+    pub fn front(&self) -> Arc<Metrics> {
+        Arc::clone(&self.front)
+    }
+
+    /// Allocate and register a fresh per-worker [`Metrics`].
+    pub fn register_worker(&self) -> Arc<Metrics> {
+        let m = Arc::new(Metrics::default());
+        self.workers.lock().unwrap().push(Arc::clone(&m));
+        m
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.lock().unwrap().len()
+    }
+
+    /// Per-worker snapshots (diagnostics; ordering = registration order).
+    pub fn worker_snapshots(&self) -> Vec<MetricsSnapshot> {
+        self.workers.lock().unwrap().iter().map(|m| m.snapshot()).collect()
+    }
+
+    /// Single lock-and-merge walk over the front-end and every worker —
+    /// the one place the aggregate view is computed, shared by
+    /// [`MetricsHub::snapshot`] and [`MetricsHub::to_json`]. Returns the
+    /// per-worker stats documents too when `with_worker_json` is set (one
+    /// walk, one lock).
+    fn aggregate(&self, with_worker_json: bool) -> Aggregate {
+        let workers = self.workers.lock().unwrap();
+        let mut agg = Aggregate {
+            totals: CounterTotals::of(&self.front),
+            handle: self.front.handle_latency.summary(),
+            decide: self.front.decide_latency.summary(),
+            quantize: self.front.quantize_latency.summary(),
+            execute: self.front.execute_latency.summary(),
+            per_worker: Vec::with_capacity(if with_worker_json { workers.len() } else { 0 }),
+        };
+        for m in workers.iter() {
+            agg.totals.add(&CounterTotals::of(m));
+            agg.handle.merge(&m.handle_latency.summary());
+            agg.decide.merge(&m.decide_latency.summary());
+            agg.quantize.merge(&m.quantize_latency.summary());
+            agg.execute.merge(&m.execute_latency.summary());
+            if with_worker_json {
+                agg.per_worker.push(m.to_json());
+            }
+        }
+        agg
+    }
+
+    /// One aggregated snapshot over the front-end and every worker.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let agg = self.aggregate(false);
+        MetricsSnapshot {
+            requests_total: agg.totals.requests_total,
+            errors_total: agg.totals.errors_total,
+            shed_total: agg.totals.shed_total,
+            sessions_opened: agg.totals.sessions_opened,
+            handle_count: agg.handle.count(),
+            handle_mean_us: agg.handle.mean_us(),
+        }
+    }
+
+    /// Aggregated stats document: one logical server view plus a
+    /// `workers` array with each worker's own counters.
+    pub fn to_json(&self) -> Value {
+        let agg = self.aggregate(true);
+        Value::obj([
+            ("requests_total", agg.totals.requests_total.into()),
+            ("errors_total", agg.totals.errors_total.into()),
+            ("shed_total", agg.totals.shed_total.into()),
+            ("sessions_opened", agg.totals.sessions_opened.into()),
+            ("sessions_expired", agg.totals.sessions_expired.into()),
+            ("bytes_out", agg.totals.bytes_out.into()),
+            ("bytes_in", agg.totals.bytes_in.into()),
+            ("handle", agg.handle.to_json()),
+            ("decide", agg.decide.to_json()),
+            ("quantize", agg.quantize.to_json()),
+            ("execute", agg.execute.to_json()),
+            ("workers", Value::Arr(agg.per_worker)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,5 +384,54 @@ mod tests {
         for key in ["requests_total", "handle", "decide", "quantize", "execute"] {
             assert!(v.get(key).is_some(), "{key}");
         }
+    }
+
+    #[test]
+    fn summary_merge_is_additive() {
+        let a = Histogram::default();
+        let b = Histogram::default();
+        for us in [10u64, 300, 700] {
+            a.observe_us(us);
+        }
+        for us in [60u64, 2_000_000] {
+            b.observe_us(us);
+        }
+        let mut merged = a.summary();
+        merged.merge(&b.summary());
+        assert_eq!(merged.count(), 5);
+        assert_eq!(merged.sum_us(), 10 + 300 + 700 + 60 + 2_000_000);
+        assert!(merged.quantile_us(0.999).is_infinite(), "overflow carried over");
+    }
+
+    #[test]
+    fn hub_aggregates_to_one_snapshot() {
+        let hub = MetricsHub::new();
+        let w1 = hub.register_worker();
+        let w2 = hub.register_worker();
+        let front = hub.front();
+        Metrics::inc(&w1.requests_total);
+        Metrics::inc(&w2.requests_total);
+        Metrics::inc(&w2.requests_total);
+        Metrics::inc(&front.shed_total);
+        w1.handle_latency.observe_us(100);
+        w2.handle_latency.observe_us(300);
+        let snap = hub.snapshot();
+        assert_eq!(snap.requests_total, 3);
+        assert_eq!(snap.shed_total, 1);
+        assert_eq!(snap.handle_count, 2);
+        assert!((snap.handle_mean_us - 200.0).abs() < 1e-9);
+        assert_eq!(hub.worker_snapshots().len(), 2);
+        assert_eq!(hub.num_workers(), 2);
+    }
+
+    #[test]
+    fn hub_json_has_aggregate_and_workers() {
+        let hub = MetricsHub::new();
+        let w = hub.register_worker();
+        Metrics::inc(&w.requests_total);
+        let v = hub.to_json();
+        assert_eq!(v.req_f64("requests_total").unwrap(), 1.0);
+        assert_eq!(v.req_arr("workers").unwrap().len(), 1);
+        assert!(v.get("handle").is_some());
     }
 }

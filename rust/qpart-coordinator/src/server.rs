@@ -1,16 +1,24 @@
-//! TCP front-end: JSON-lines over TCP, bounded job queue, dedicated
-//! inference thread.
+//! TCP front-end: JSON-lines over TCP, bounded job queue, and a
+//! configurable **executor pool** of inference workers.
 //!
 //! Topology: N connection threads (one per accepted socket) parse frames
 //! and submit `(Request, reply_tx)` jobs into a **bounded** channel — the
 //! admission-control point: when the queue is full the request is shed
 //! immediately with an `overloaded` error instead of growing latency
-//! unboundedly. A single inference thread owns the PJRT executor (the
-//! CPU client is one device; serializing there is the honest model) and
-//! answers jobs in arrival order.
+//! unboundedly. `workers` inference threads each own a full [`Service`]
+//! (bundle + Algorithm 1 tables + PJRT executor — PJRT clients are
+//! single-device and not `Send`, so per-worker ownership is the honest
+//! parallelism model) and pull jobs from the shared queue. Sessions live
+//! in one sharded [`SharedSessionTable`] so the two protocol phases may be
+//! handled by different workers; per-worker metrics are aggregated by a
+//! [`MetricsHub`] into one logical [`MetricsSnapshot`].
+//!
+//! `workers` mirrors the simulator's `FleetConfig::server_slots` knob
+//! (qpart-sim), so modeled and live serving share one parallelism model.
 
-use crate::metrics::{Metrics, MetricsSnapshot};
+use crate::metrics::{Metrics, MetricsHub, MetricsSnapshot};
 use crate::service::Service;
+use crate::session::SharedSessionTable;
 use qpart_proto::frame::{read_frame, write_frame, FrameError};
 use qpart_proto::messages::{ErrorReply, Request, Response};
 use qpart_runtime::Bundle;
@@ -19,17 +27,40 @@ use std::net::{TcpListener, TcpStream};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 /// Server configuration.
+///
+/// Knobs and what they control:
+///
+/// * `listen` — TCP listen address; port `0` binds an ephemeral port
+///   (the bound address is reported in [`ServerHandle::addr`]).
+/// * `workers` — size of the executor pool: how many inference threads
+///   (each owning its own PJRT executor + Algorithm 1 tables) drain the
+///   job queue concurrently. `1` reproduces the classic single-inference-
+///   thread coordinator; the default (`4`) mirrors the simulator's
+///   `FleetConfig::server_slots` default so modeled and live serving agree.
+/// * `queue_capacity` — **admission control**: the bounded depth of the
+///   shared job queue. When all workers are busy and the queue is full,
+///   new requests are shed immediately with an `overloaded` error rather
+///   than queuing unboundedly (tail latency stays bounded under overload;
+///   sheds are counted in `shed_total`).
+/// * `session_capacity` — total capacity of the sharded session table for
+///   the two-phase protocol. Oldest sessions are evicted first when a
+///   shard fills (devices that never upload their activation must not
+///   leak memory).
+/// * `artifacts_dir` — artifact bundle directory (`make artifacts`).
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Listen address, e.g. `127.0.0.1:7878` (port 0 = ephemeral).
     pub listen: String,
+    /// Executor-pool size (inference worker threads, each owning a PJRT
+    /// executor). Values < 1 are treated as 1.
+    pub workers: usize,
     /// Bounded job-queue depth (admission control).
     pub queue_capacity: usize,
-    /// Session-table capacity.
+    /// Session-table capacity (total across shards).
     pub session_capacity: usize,
     /// Artifact bundle directory.
     pub artifacts_dir: String,
@@ -39,7 +70,10 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             listen: "127.0.0.1:0".into(),
-            queue_capacity: 256,
+            // mirrors FleetConfig::default().server_slots (qpart-sim)
+            workers: 4,
+            // mirrors the config system's serving.queue_capacity default
+            queue_capacity: 1024,
             session_capacity: 4096,
             artifacts_dir: "artifacts".into(),
         }
@@ -51,10 +85,13 @@ type Job = (Request, SyncSender<Response>);
 /// Handle to a running server (for tests/examples).
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
-    pub metrics: Arc<Metrics>,
+    /// Aggregated + per-worker metrics.
+    pub hub: Arc<MetricsHub>,
+    /// The shared session table (observability in tests/examples).
+    pub sessions: Arc<SharedSessionTable>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
-    infer_thread: Option<JoinHandle<()>>,
+    worker_threads: Vec<JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -66,74 +103,107 @@ impl ServerHandle {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        if let Some(t) = self.infer_thread.take() {
+        for t in self.worker_threads.drain(..) {
             let _ = t.join();
         }
     }
 
+    /// One aggregated snapshot across the front-end and all workers.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        self.hub.snapshot()
+    }
+
+    /// Per-worker snapshots (diagnostics / load-balance checks).
+    pub fn worker_snapshots(&self) -> Vec<MetricsSnapshot> {
+        self.hub.worker_snapshots()
     }
 }
 
-/// Start the server; returns once the listener is bound and the service
-/// (bundle + Algorithm 1 tables + PJRT) is initialized.
+/// Start the server; returns once the listener is bound and **every**
+/// worker's service (bundle + Algorithm 1 tables + PJRT) is initialized.
 pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
     let listener = TcpListener::bind(&cfg.listen).map_err(|e| format!("bind {}: {e}", cfg.listen))?;
     let addr = listener.local_addr().map_err(|e| e.to_string())?;
-    let metrics = Arc::new(Metrics::default());
+    let workers = cfg.workers.max(1);
+    let hub = Arc::new(MetricsHub::new());
+    let sessions = Arc::new(SharedSessionTable::new(cfg.session_capacity, workers));
     let stop = Arc::new(AtomicBool::new(false));
 
     let (job_tx, job_rx): (SyncSender<Job>, Receiver<Job>) = sync_channel(cfg.queue_capacity);
+    // Work-stealing hand-off: workers take turns locking the receiver;
+    // whoever holds the lock waits for the next job, releases, handles it
+    // while the next worker waits. Handling happens outside the lock, so
+    // up to `workers` jobs are in flight concurrently.
+    let job_rx = Arc::new(Mutex::new(job_rx));
 
-    // Inference thread: owns the (non-Send) service. Bundle + Algorithm 1
-    // initialization happens inside; readiness is reported via a channel.
-    let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(1);
-    let infer_metrics = Arc::clone(&metrics);
-    let infer_stop = Arc::clone(&stop);
-    let artifacts_dir = cfg.artifacts_dir.clone();
-    let session_capacity = cfg.session_capacity;
-    let infer_thread = std::thread::Builder::new()
-        .name("qpart-infer".into())
-        .spawn(move || {
-            let service = Bundle::load(&artifacts_dir)
-                .map_err(|e| e.to_string())
-                .and_then(|b| {
-                    Service::new(Rc::new(b), infer_metrics, session_capacity)
-                        .map_err(|e| e.to_string())
-                });
-            let mut service = match service {
-                Ok(s) => {
-                    let _ = ready_tx.send(Ok(()));
-                    s
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            while !infer_stop.load(Ordering::SeqCst) {
-                match job_rx.recv_timeout(std::time::Duration::from_millis(100)) {
-                    Ok((req, reply_tx)) => {
-                        let resp = service.handle(req);
-                        let _ = reply_tx.send(resp);
+    // Inference workers: each owns a (non-Send) service. Bundle +
+    // Algorithm 1 initialization happens inside; readiness is reported
+    // via a channel so `serve` fails fast if any worker cannot start.
+    let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(workers);
+    let mut worker_threads = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let worker_hub = Arc::clone(&hub);
+        let worker_sessions = Arc::clone(&sessions);
+        let worker_stop = Arc::clone(&stop);
+        let worker_rx = Arc::clone(&job_rx);
+        let ready_tx = ready_tx.clone();
+        let artifacts_dir = cfg.artifacts_dir.clone();
+        let t = std::thread::Builder::new()
+            .name(format!("qpart-worker-{w}"))
+            .spawn(move || {
+                let service = Bundle::load(&artifacts_dir)
+                    .map_err(|e| e.to_string())
+                    .and_then(|b| {
+                        Service::new(Rc::new(b), worker_hub, worker_sessions)
+                            .map_err(|e| e.to_string())
+                    });
+                let mut service = match service {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
                     }
-                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
-                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("worker {w}: {e}")));
+                        return;
+                    }
+                };
+                // Drop our readiness sender now: if another worker panics
+                // during init (sending nothing), serve()'s readiness loop
+                // must observe disconnection instead of hanging on workers
+                // that hold their clones for the whole job loop.
+                drop(ready_tx);
+                while !worker_stop.load(Ordering::SeqCst) {
+                    // hold the receiver lock only while waiting for a job
+                    let next = {
+                        let rx = worker_rx.lock().unwrap();
+                        rx.recv_timeout(std::time::Duration::from_millis(100))
+                    };
+                    match next {
+                        Ok((req, reply_tx)) => {
+                            let resp = service.handle(req);
+                            let _ = reply_tx.send(resp);
+                        }
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
                 }
-            }
-        })
-        .map_err(|e| e.to_string())?;
+            })
+            .map_err(|e| e.to_string())?;
+        worker_threads.push(t);
+    }
+    drop(ready_tx);
 
-    match ready_rx.recv() {
-        Ok(Ok(())) => {}
-        Ok(Err(e)) => return Err(format!("service init failed: {e}")),
-        Err(_) => return Err("service thread died during init".into()),
+    for _ in 0..workers {
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(format!("service init failed: {e}")),
+            Err(_) => return Err("a worker thread died during init".into()),
+        }
     }
 
     // Acceptor thread: one connection thread per client.
     let accept_stop = Arc::clone(&stop);
-    let accept_metrics = Arc::clone(&metrics);
+    let accept_metrics = hub.front();
     let accept_thread = std::thread::Builder::new()
         .name("qpart-accept".into())
         .spawn(move || {
@@ -160,10 +230,11 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
 
     Ok(ServerHandle {
         addr,
-        metrics,
+        hub,
+        sessions,
         stop,
         accept_thread: Some(accept_thread),
-        infer_thread: Some(infer_thread),
+        worker_threads,
     })
 }
 
@@ -186,6 +257,7 @@ fn connection_loop(
             Ok(l) => l,
             Err(FrameError::Closed) => break,
             Err(e) => {
+                Metrics::inc(&metrics.errors_total);
                 let resp = Response::Error(ErrorReply {
                     code: "bad_frame".into(),
                     message: e.to_string(),
@@ -214,7 +286,7 @@ fn connection_loop(
                 Ok(r) => r,
                 Err(_) => Response::Error(ErrorReply {
                     code: "internal".into(),
-                    message: "inference thread gone".into(),
+                    message: "inference worker gone".into(),
                 }),
             },
             Err(TrySendError::Full(_)) => {

@@ -8,8 +8,8 @@
 //! open a session, and execute the server-side segment when the boundary
 //! activation comes back.
 
-use crate::metrics::Metrics;
-use crate::session::SessionTable;
+use crate::metrics::{Metrics, MetricsHub};
+use crate::session::SharedSessionTable;
 use qpart_core::channel::Channel;
 use qpart_core::cost::{CostModel, DeviceProfile, ServerProfile, TradeoffWeights};
 use qpart_core::model::{LayerKind, ModelSpec};
@@ -27,14 +27,21 @@ use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// The single-threaded service (owns the PJRT executor).
+/// One executor-pool worker's service (owns the non-`Send` PJRT executor;
+/// shares the session table and — via the hub — the metrics view).
 pub struct Service {
     pub bundle: Rc<Bundle>,
     executor: Executor,
     /// Offline pattern tables per model instance (Algorithm 1 output).
     patterns: Vec<(String, PatternSet)>,
-    sessions: SessionTable,
+    /// Shared, sharded session table — sessions opened by any worker are
+    /// visible to every worker (phase 2 may land on a different one).
+    sessions: Arc<SharedSessionTable>,
+    /// This worker's own counters/histograms (registered in `hub`).
     pub metrics: Arc<Metrics>,
+    /// The hub aggregating every worker, so the `stats` request reports
+    /// the whole server, not one worker.
+    hub: Arc<MetricsHub>,
     server_profile: ServerProfile,
     default_weights: TradeoffWeights,
     /// Packed segments per (model, level_idx, partition) — quantize+pack
@@ -43,12 +50,14 @@ pub struct Service {
 }
 
 impl Service {
-    /// Load the bundle and run Algorithm 1 for every model.
+    /// Load the bundle and run Algorithm 1 for every model. Registers this
+    /// worker's [`Metrics`] in `hub` (one `Service` = one pool worker).
     pub fn new(
         bundle: Rc<Bundle>,
-        metrics: Arc<Metrics>,
-        session_capacity: usize,
+        hub: Arc<MetricsHub>,
+        sessions: Arc<SharedSessionTable>,
     ) -> qpart_runtime::Result<Service> {
+        let metrics = hub.register_worker();
         let executor = Executor::new(Rc::clone(&bundle))?;
         let mut patterns = Vec::new();
         for m in &bundle.models {
@@ -62,8 +71,9 @@ impl Service {
             bundle,
             executor,
             patterns,
-            sessions: SessionTable::new(session_capacity),
+            sessions,
             metrics,
+            hub,
             server_profile: ServerProfile::paper_default(),
             default_weights: TradeoffWeights::paper_default(),
             packed_cache: HashMap::new(),
@@ -99,8 +109,12 @@ impl Service {
     }
 
     fn stats_json(&self) -> qpart_core::json::Value {
-        let mut v = self.metrics.to_json();
+        let mut v = self.hub.to_json();
         v.set("open_sessions", self.sessions.len().into());
+        v.set("session_shards", self.sessions.num_shards().into());
+        // capacity-pressure evictions live in the shared table, not in any
+        // single worker's counters — report the table's own count
+        v.set("sessions_expired", self.sessions.evicted().into());
         v.set("models", self.patterns.len().into());
         v
     }

@@ -1,11 +1,21 @@
-//! Session table for the two-phase protocol.
+//! Session tables for the two-phase protocol.
 //!
 //! Phase 1 (`infer`) opens a session remembering the chosen pattern and
 //! the boundary-activation shape; phase 2 (`activation`) consumes it.
-//! The table is capacity-bounded: oldest sessions are evicted first
+//! Tables are capacity-bounded: oldest sessions are evicted first
 //! (devices that never came back must not leak memory).
+//!
+//! Two layers:
+//! * [`SessionTable`] — the single-threaded building block (one FIFO).
+//! * [`SharedSessionTable`] — what the executor pool actually uses: the id
+//!   space is global (one atomic counter) and sessions are spread over
+//!   `N` mutex-protected shards keyed by `id % N`, so a session opened by
+//!   one worker is visible to whichever worker receives the phase-2
+//!   upload, while workers on different shards never contend.
 
 use qpart_core::quant::QuantPattern;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// One open session.
@@ -19,7 +29,7 @@ pub struct Session {
     pub opened: Instant,
 }
 
-/// Bounded FIFO-evicting session table.
+/// Bounded FIFO-evicting session table (single shard).
 #[derive(Debug)]
 pub struct SessionTable {
     capacity: usize,
@@ -36,7 +46,7 @@ impl SessionTable {
         SessionTable { capacity, next_id: 1, sessions: Vec::new(), evicted: 0 }
     }
 
-    /// Open a session; may evict the oldest.
+    /// Open a session with a locally assigned id; may evict the oldest.
     pub fn open(
         &mut self,
         model: &str,
@@ -45,6 +55,19 @@ impl SessionTable {
     ) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
+        self.open_with_id(id, model, pattern, boundary_dims);
+        id
+    }
+
+    /// Open a session under an externally assigned id (the sharded table
+    /// owns the id space); may evict the oldest in this table.
+    pub fn open_with_id(
+        &mut self,
+        id: u64,
+        model: &str,
+        pattern: QuantPattern,
+        boundary_dims: Vec<usize>,
+    ) {
         if self.sessions.len() >= self.capacity {
             self.sessions.remove(0);
             self.evicted += 1;
@@ -56,13 +79,17 @@ impl SessionTable {
             boundary_dims,
             opened: Instant::now(),
         });
-        id
     }
 
     /// Consume (remove + return) a session.
     pub fn take(&mut self, id: u64) -> Option<Session> {
         let idx = self.sessions.iter().position(|s| s.id == id)?;
         Some(self.sessions.remove(idx))
+    }
+
+    /// Non-consuming lookup.
+    pub fn contains(&self, id: u64) -> bool {
+        self.sessions.iter().any(|s| s.id == id)
     }
 
     pub fn len(&self) -> usize {
@@ -74,9 +101,84 @@ impl SessionTable {
     }
 }
 
+/// Thread-safe sharded session table shared by the executor pool.
+///
+/// Ids are allocated from one atomic counter (monotone, unique across the
+/// whole server); the owning shard is `id % shards`, so any worker can
+/// resolve any session with exactly one shard lock. Total capacity is
+/// split evenly across shards (rounded up), preserving the FIFO-eviction
+/// bound per shard.
+#[derive(Debug)]
+pub struct SharedSessionTable {
+    shards: Vec<Mutex<SessionTable>>,
+    next_id: AtomicU64,
+}
+
+impl SharedSessionTable {
+    /// `capacity` sessions total, spread over `shards` shards. Both are
+    /// clamped to ≥ 1 (these arrive from user-facing config; a zero must
+    /// degrade to the minimum, not panic the server). The shard count is
+    /// additionally capped at `capacity` and the remainder distributed,
+    /// so the per-shard capacities sum to exactly `capacity` — the
+    /// operator's memory bound is never exceeded by rounding.
+    pub fn new(capacity: usize, shards: usize) -> SharedSessionTable {
+        let capacity = capacity.max(1);
+        let shards = shards.max(1).min(capacity);
+        let base = capacity / shards;
+        let remainder = capacity % shards;
+        SharedSessionTable {
+            shards: (0..shards)
+                .map(|i| Mutex::new(SessionTable::new(base + usize::from(i < remainder))))
+                .collect(),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    fn shard(&self, id: u64) -> &Mutex<SessionTable> {
+        &self.shards[(id % self.shards.len() as u64) as usize]
+    }
+
+    /// Open a session; returns the globally unique id.
+    pub fn open(&self, model: &str, pattern: QuantPattern, boundary_dims: Vec<usize>) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.shard(id).lock().unwrap().open_with_id(id, model, pattern, boundary_dims);
+        id
+    }
+
+    /// Consume (remove + return) a session from its shard.
+    pub fn take(&self, id: u64) -> Option<Session> {
+        self.shard(id).lock().unwrap().take(id)
+    }
+
+    /// Non-consuming lookup.
+    pub fn contains(&self, id: u64) -> bool {
+        self.shard(id).lock().unwrap().contains(id)
+    }
+
+    /// Open sessions across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total sessions evicted (capacity pressure) across all shards.
+    pub fn evicted(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().evicted).sum()
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
+    use std::sync::Arc;
 
     fn pat(p: usize) -> QuantPattern {
         QuantPattern {
@@ -119,5 +221,123 @@ mod tests {
         assert!(t.take(a).is_none(), "oldest evicted");
         assert!(t.take(b).is_some());
         assert!(t.take(c).is_some());
+    }
+
+    #[test]
+    fn sharded_open_take_roundtrip() {
+        let t = SharedSessionTable::new(64, 4);
+        assert_eq!(t.num_shards(), 4);
+        let id = t.open("mlp6", pat(2), vec![1, 256]);
+        assert!(t.contains(id));
+        assert_eq!(t.len(), 1);
+        let s = t.take(id).unwrap();
+        assert_eq!(s.id, id);
+        assert_eq!(s.boundary_dims, vec![1, 256]);
+        assert!(t.take(id).is_none(), "consumed");
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn sharded_zero_config_degrades_to_minimum() {
+        // user-facing knobs (--sessions 0, workers 0) must not panic the
+        // server: both clamp to 1.
+        let t = SharedSessionTable::new(0, 0);
+        assert_eq!(t.num_shards(), 1);
+        let a = t.open("m", pat(0), vec![1]);
+        let b = t.open("m", pat(0), vec![1]);
+        assert_eq!(t.len(), 1, "capacity clamps to 1");
+        assert!(t.take(a).is_none(), "evicted");
+        assert!(t.take(b).is_some());
+    }
+
+    #[test]
+    fn sharded_ids_unique_across_shards() {
+        let t = SharedSessionTable::new(1024, 7);
+        let mut seen = HashSet::new();
+        for _ in 0..500 {
+            let id = t.open("m", pat(0), vec![1]);
+            assert!(seen.insert(id), "duplicate id {id}");
+        }
+        assert_eq!(t.len(), 500);
+    }
+
+    #[test]
+    fn sharded_capacity_evicts_oldest_per_shard() {
+        // 1 shard makes the global FIFO order observable.
+        let t = SharedSessionTable::new(2, 1);
+        let a = t.open("m", pat(0), vec![1]);
+        let b = t.open("m", pat(0), vec![1]);
+        let c = t.open("m", pat(0), vec![1]);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.evicted(), 1);
+        assert!(t.take(a).is_none(), "oldest evicted first");
+        assert!(t.take(b).is_some());
+        assert!(t.take(c).is_some());
+
+        // multi-shard: capacity bounds the total exactly; eviction follows
+        // insertion order within each shard.
+        let t = SharedSessionTable::new(8, 4);
+        let ids: Vec<u64> = (0..40).map(|_| t.open("m", pat(0), vec![1])).collect();
+        assert_eq!(t.len(), 8, "per-shard capacities sum to the configured total");
+        assert_eq!(t.evicted() as usize + t.len(), ids.len());
+        // the newest session in every shard must have survived
+        for id in ids.iter().rev().take(4) {
+            assert!(t.contains(*id), "newest sessions evicted");
+        }
+    }
+
+    #[test]
+    fn sharded_capacity_is_exact_under_uneven_division() {
+        // 65 sessions over 64 shards must NOT round up to 128 resident
+        let t = SharedSessionTable::new(65, 64);
+        assert_eq!(t.num_shards(), 64);
+        for _ in 0..1000 {
+            t.open("m", pat(0), vec![1]);
+        }
+        assert_eq!(t.len(), 65, "configured bound is exact");
+        // more shards than capacity: shard count is capped, not inflated
+        let t = SharedSessionTable::new(2, 64);
+        assert_eq!(t.num_shards(), 2);
+        for _ in 0..10 {
+            t.open("m", pat(0), vec![1]);
+        }
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn sharded_concurrent_open_lookup_evict() {
+        let t = Arc::new(SharedSessionTable::new(256, 8));
+        let threads = 8;
+        let per_thread = 200;
+        let mut handles = Vec::new();
+        for k in 0..threads {
+            let t = Arc::clone(&t);
+            handles.push(std::thread::spawn(move || {
+                let mut ids = Vec::with_capacity(per_thread);
+                for i in 0..per_thread {
+                    let id = t.open("m", pat(i % 3), vec![1, 16]);
+                    ids.push(id);
+                    // every other open, consume one of our own sessions
+                    // (it may have been evicted under pressure — both
+                    // outcomes are legal, but no panic and no cross-talk)
+                    if i % 2 == k % 2 {
+                        if let Some(s) = t.take(ids[i / 2]) {
+                            assert_eq!(s.id, ids[i / 2]);
+                        }
+                    }
+                }
+                ids
+            }));
+        }
+        let mut all_ids = HashSet::new();
+        for h in handles {
+            for id in h.join().unwrap() {
+                assert!(all_ids.insert(id), "duplicate id across threads: {id}");
+            }
+        }
+        assert_eq!(all_ids.len(), threads * per_thread);
+        // conservation: everything opened was either taken, evicted, or is
+        // still resident.
+        assert!(t.len() <= 256, "capacity respected: {}", t.len());
     }
 }

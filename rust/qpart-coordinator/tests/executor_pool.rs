@@ -1,0 +1,289 @@
+//! Executor-pool integration tests — no PJRT required.
+//!
+//! These tests build a **synthetic artifact bundle** (a small MLP with
+//! real weight/calibration/dataset files but zero HLO executables) in a
+//! temp directory. The coordinator's phase-1 path — Algorithm 2 decision,
+//! segment quantization, bit-packing, session open — is pure Rust, so a
+//! real multi-worker server can be driven end-to-end over TCP in any
+//! offline environment. Only phase-2 execution (PJRT) needs `make
+//! artifacts`, and is covered by `rust/qpart/tests/integration.rs`.
+
+use qpart_coordinator::client::paper_request;
+use qpart_coordinator::{serve, ServerConfig};
+use qpart_core::accuracy::CalibrationTable;
+use qpart_core::json::Value;
+use qpart_core::model::{LayerKind, LayerSpec, ModelSpec};
+use qpart_core::tensor::{save_i32, Tensor};
+use qpart_proto::frame::{read_frame, write_frame};
+use qpart_proto::messages::{ActivationUpload, Request, Response};
+use std::collections::HashSet;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::path::PathBuf;
+
+const LEVELS: [f64; 5] = [0.0025, 0.005, 0.01, 0.02, 0.05];
+
+fn lin(name: &str, d_in: usize, d_out: usize, relu: bool) -> LayerSpec {
+    LayerSpec { name: name.into(), kind: LayerKind::Linear { d_in, d_out }, relu }
+}
+
+fn tiny_arch() -> ModelSpec {
+    ModelSpec::new(
+        "tinymlp",
+        vec![lin("fc1", 256, 512, true), lin("fc2", 512, 256, true), lin("fc3", 256, 10, false)],
+        10,
+    )
+    .unwrap()
+}
+
+/// Write a loadable bundle: manifest + weights + calibration + dataset,
+/// with an empty executables list (nothing here needs PJRT).
+fn write_synthetic_bundle(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qpart-pool-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    for sub in ["weights/tinymlp", "calibration", "data"] {
+        std::fs::create_dir_all(dir.join(sub)).unwrap();
+    }
+    let arch = tiny_arch();
+
+    let mut rng = qpart_core::rng::Rng::new(7);
+    for (i, layer) in arch.layers.iter().enumerate() {
+        let (d_in, d_out) = match layer.kind {
+            LayerKind::Linear { d_in, d_out } => (d_in, d_out),
+            _ => unreachable!("tinymlp is linear-only"),
+        };
+        let w = Tensor::new(
+            vec![d_in, d_out],
+            (0..d_in * d_out).map(|_| rng.range_f64(-0.5, 0.5) as f32).collect(),
+        )
+        .unwrap();
+        let b = Tensor::new(
+            vec![d_out],
+            (0..d_out).map(|_| rng.range_f64(-0.1, 0.1) as f32).collect(),
+        )
+        .unwrap();
+        w.save(dir.join(format!("weights/tinymlp/l{}_w.qt", i + 1))).unwrap();
+        b.save(dir.join(format!("weights/tinymlp/l{}_b.qt", i + 1))).unwrap();
+    }
+
+    let calib = CalibrationTable::synthetic(&arch, &LEVELS, 1);
+    std::fs::write(dir.join("calibration/tinymlp.json"), calib.to_json().to_string_pretty())
+        .unwrap();
+
+    Tensor::zeros(vec![4, 256]).save(dir.join("data/synth_test_x.qt")).unwrap();
+    save_i32(dir.join("data/synth_test_y.qt"), &[4], &[0, 1, 2, 3]).unwrap();
+
+    let manifest = Value::obj([
+        ("archs", Value::Arr(vec![arch.to_json()])),
+        (
+            "models",
+            Value::Arr(vec![Value::obj([
+                ("name", "tinymlp".into()),
+                ("arch", "tinymlp".into()),
+                ("dataset", "synth".into()),
+                ("weights_dir", "weights/tinymlp".into()),
+                ("calibration", "calibration/tinymlp.json".into()),
+                ("test_accuracy", 0.9.into()),
+            ])]),
+        ),
+        ("executables", Value::Arr(vec![])),
+        (
+            "datasets",
+            Value::Arr(vec![Value::obj([
+                ("name", "synth".into()),
+                ("x", "data/synth_test_x.qt".into()),
+                ("y", "data/synth_test_y.qt".into()),
+                ("n", 4usize.into()),
+                ("classes", 10usize.into()),
+            ])]),
+        ),
+        ("levels", Value::num_arr(&LEVELS)),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string_pretty()).unwrap();
+    dir
+}
+
+/// Minimal blocking protocol connection (no PJRT-backed DeviceClient).
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    fn connect(addr: &str) -> Conn {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        Conn { writer: stream.try_clone().unwrap(), reader: BufReader::new(stream) }
+    }
+
+    fn call(&mut self, req: &Request) -> Response {
+        write_frame(&mut self.writer, &req.to_line()).unwrap();
+        Response::from_line(&read_frame(&mut self.reader).unwrap()).unwrap()
+    }
+}
+
+#[test]
+fn pool_spreads_concurrent_load_over_distinct_workers() {
+    let dir = write_synthetic_bundle("load");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 4,
+        queue_capacity: 128,
+        session_capacity: 1024,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+    })
+    .expect("pool server starts on the synthetic bundle");
+    let addr = handle.addr.to_string();
+
+    let clients = 8usize;
+    let per_client = 8usize;
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut conn = Conn::connect(&addr);
+            let mut sessions = Vec::new();
+            for i in 0..per_client {
+                let mut req = paper_request("tinymlp", 0.02);
+                // distinct live channels → the full Algorithm 2 +
+                // quantize + pack path runs under varied decisions
+                req.channel_capacity_bps = 1e6 * (1 + c * 7 + i) as f64;
+                match conn.call(&Request::Infer(req)) {
+                    Response::Segment(r) => {
+                        assert_eq!(r.pattern.weight_bits.len(), r.pattern.partition);
+                        sessions.push(r.session);
+                    }
+                    other => panic!("client {c} request {i}: unexpected {other:?}"),
+                }
+            }
+            sessions
+        }));
+    }
+    let mut all_sessions = HashSet::new();
+    for j in joins {
+        for s in j.join().unwrap() {
+            assert!(all_sessions.insert(s), "duplicate session id {s}");
+        }
+    }
+    let total = (clients * per_client) as u64;
+    assert_eq!(all_sessions.len() as u64, total);
+
+    // per-worker metrics aggregate into ONE logical snapshot...
+    let snap = handle.snapshot();
+    assert_eq!(snap.requests_total, total);
+    assert_eq!(snap.errors_total, 0);
+    assert_eq!(snap.sessions_opened, total);
+    assert_eq!(snap.handle_count, total);
+
+    // ...and the concurrent load really was serviced by >1 executor
+    let per_worker = handle.worker_snapshots();
+    assert_eq!(per_worker.len(), 4);
+    let counts: Vec<u64> = per_worker.iter().map(|w| w.handle_count).collect();
+    assert_eq!(counts.iter().sum::<u64>(), total, "per-worker counts must sum to the total");
+    let active = counts.iter().filter(|&&c| c > 0).count();
+    assert!(active >= 2, "all requests landed on one worker: {counts:?}");
+
+    // the wire-level stats view is the aggregate, with per-worker detail
+    let mut conn = Conn::connect(&addr);
+    match conn.call(&Request::Stats) {
+        Response::Stats(v) => {
+            // the stats request itself is counted before it reports
+            assert_eq!(v.req_f64("requests_total").unwrap() as u64, total + 1);
+            assert_eq!(v.req_arr("workers").unwrap().len(), 4);
+            assert_eq!(v.req_f64("open_sessions").unwrap() as u64, total);
+            assert_eq!(v.req_f64("session_shards").unwrap() as u64, 4);
+        }
+        other => panic!("unexpected stats response {other:?}"),
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sessions_opened_by_one_worker_are_visible_to_all() {
+    let dir = write_synthetic_bundle("sessions");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        queue_capacity: 32,
+        session_capacity: 64,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    let mut opener = Conn::connect(&addr);
+    let mut uploader = Conn::connect(&addr);
+    for i in 0..8 {
+        let reply = match opener.call(&Request::Infer(paper_request("tinymlp", 0.05))) {
+            Response::Segment(r) => r,
+            other => panic!("request {i}: unexpected {other:?}"),
+        };
+        // Deliberately wrong dims: whichever worker handles phase 2, it
+        // must FIND the session (bad_activation), never unknown_session —
+        // that is the sharded-table-shared-across-workers contract.
+        let upload = ActivationUpload {
+            session: reply.session,
+            bits: 8,
+            qmin: 0.0,
+            step: 0.01,
+            dims: vec![9, 9],
+            packed: vec![0u8; 81],
+        };
+        match uploader.call(&Request::Activation(upload)) {
+            Response::Error(e) => {
+                assert_eq!(e.code, "bad_activation", "request {i}: {}", e.message)
+            }
+            other => panic!("request {i}: unexpected {other:?}"),
+        }
+    }
+
+    // a session id that never existed resolves the same way on any worker
+    let upload = ActivationUpload {
+        session: 9_999_999,
+        bits: 8,
+        qmin: 0.0,
+        step: 0.01,
+        dims: vec![1, 1],
+        packed: vec![0u8; 1],
+    };
+    match uploader.call(&Request::Activation(upload)) {
+        Response::Error(e) => assert_eq!(e.code, "unknown_session"),
+        other => panic!("unexpected {other:?}"),
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn single_worker_pool_still_serves() {
+    // workers = 1 reproduces the classic dedicated-inference-thread
+    // topology; the protocol surface must be identical.
+    let dir = write_synthetic_bundle("single");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_capacity: 8,
+        session_capacity: 16,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+    })
+    .unwrap();
+    let mut conn = Conn::connect(&handle.addr.to_string());
+    assert!(matches!(conn.call(&Request::Ping), Response::Pong));
+    match conn.call(&Request::ListModels) {
+        Response::Models(ms) => {
+            assert_eq!(ms.len(), 1);
+            assert_eq!(ms[0].name, "tinymlp");
+            assert_eq!(ms[0].layers, 3);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))) {
+        Response::Segment(r) => assert!(r.session > 0),
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(handle.worker_snapshots().len(), 1);
+    assert_eq!(handle.snapshot().errors_total, 0);
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,40 +1,35 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — this build
+//! is fully offline, so `thiserror` is not available).
+
+use std::fmt;
 
 /// Errors produced by qpart-core.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// JSON syntax or structure error, with byte offset where available.
-    #[error("json error at offset {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
     /// A JSON document was valid but missing a required field / wrong type.
-    #[error("schema error at {path}: {msg}")]
     Schema { path: String, msg: String },
 
     /// Tensor-file (.qt) format violation.
-    #[error("tensor format error: {0}")]
     TensorFormat(String),
 
     /// Shape mismatch in tensor or model operations.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// Invalid argument to a public API.
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
 
     /// Optimization problem is infeasible for the given constraints
     /// (e.g. accuracy budget unreachable even at the maximum bit-width).
-    #[error("infeasible: {0}")]
     Infeasible(String),
 
     /// Referenced model / layer / pattern does not exist.
-    #[error("not found: {0}")]
     NotFound(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
 /// Convenience alias used across qpart crates.
@@ -44,5 +39,35 @@ impl Error {
     /// Helper for schema errors.
     pub fn schema(path: impl Into<String>, msg: impl Into<String>) -> Self {
         Error::Schema { path: path.into(), msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Json { offset, msg } => write!(f, "json error at offset {offset}: {msg}"),
+            Error::Schema { path, msg } => write!(f, "schema error at {path}: {msg}"),
+            Error::TensorFormat(m) => write!(f, "tensor format error: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::Infeasible(m) => write!(f, "infeasible: {m}"),
+            Error::NotFound(m) => write!(f, "not found: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }

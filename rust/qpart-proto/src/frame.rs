@@ -7,16 +7,38 @@ use std::io::{BufRead, Write};
 pub const MAX_FRAME_BYTES: usize = 16 * 1024 * 1024;
 
 /// Framing errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FrameError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("frame exceeds {MAX_FRAME_BYTES} bytes")]
+    Io(std::io::Error),
     TooLarge,
-    #[error("connection closed")]
     Closed,
-    #[error("frame is not valid utf-8")]
     Utf8,
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "io: {e}"),
+            FrameError::TooLarge => write!(f, "frame exceeds {MAX_FRAME_BYTES} bytes"),
+            FrameError::Closed => write!(f, "connection closed"),
+            FrameError::Utf8 => write!(f, "frame is not valid utf-8"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e)
+    }
 }
 
 /// Read one newline-terminated frame (without the newline).

@@ -1,12 +1,114 @@
-//! # qpart-proto
+//! # qpart-proto — the QPART wire protocol
 //!
 //! Wire protocol between edge devices and the QPART coordinator:
-//! newline-delimited JSON over TCP (JSON-lines). Every message is one line;
-//! binary payloads (bit-packed quantized segments) are base64-encoded.
+//! **newline-delimited JSON over TCP** (JSON-lines). This crate is the
+//! protocol's single source of truth; `cargo doc -p qpart-proto` renders
+//! this page as the protocol specification.
 //!
-//! The request carries exactly the tuple of paper Algorithm 2's Require
-//! line: model id, accuracy budget `a`, channel capacity `r`, transmit
-//! power `π`, and the device compute profile `(γ_local, f_local, κ)`.
+//! ## Frame layout
+//!
+//! One message = one line:
+//!
+//! ```text
+//! <UTF-8 JSON document, no embedded '\n'> '\n'
+//! ```
+//!
+//! * Frames are read with [`read_frame`] / written with [`write_frame`].
+//! * A trailing `'\r'` before the `'\n'` is tolerated and stripped.
+//! * Frames larger than [`MAX_FRAME_BYTES`] (16 MiB) are rejected with
+//!   `FrameError::TooLarge` — a full quantized mlp6 segment is well under
+//!   1 MiB; the cap only guards against malformed or hostile peers.
+//! * Non-UTF-8 frames are rejected (`FrameError::Utf8`).
+//!
+//! Every document is a JSON object whose `"type"` field tags the variant.
+//! Unknown types are answered with an `error` response, not a dropped
+//! connection.
+//!
+//! ## Binary payloads
+//!
+//! Bit-packed tensors (quantized weight/activation codes, see
+//! `qpart_core::quant::pack_bits`) travel as **base64** strings (standard
+//! alphabet, padded — [`base64::encode`]). A quantized tensor on the wire
+//! is the triple of its grid header and packed codes:
+//!
+//! * `bits` — bit-width `b` (codes are `b`-bit grid indices, LSB-first
+//!   packed into bytes),
+//! * `qmin`, `step` — the uniform grid `value = qmin + code·step`,
+//! * the base64 of the packed bytes (`ceil(n·b/8)` bytes for `n` codes).
+//!
+//! Raw f32 tensors (the `simulate` input) are base64 of their
+//! little-endian bytes ([`messages::f32s_to_b64`]).
+//!
+//! ## Requests ([`messages::Request`])
+//!
+//! | `"type"`      | fields | meaning |
+//! |---------------|--------|---------|
+//! | `ping`        | — | liveness probe; answered with `pong` |
+//! | `list_models` | — | enumerate served models; answered with `models` |
+//! | `stats`       | — | metrics snapshot; answered with `stats` |
+//! | `infer`       | [`messages::InferRequest`] fields | **phase 1**: open a session, answered with `segment` |
+//! | `activation`  | `session`, `bits`, `qmin`, `step`, `dims`, `packed` | **phase 2**: upload the quantized boundary activation, answered with `result` |
+//! | `simulate`    | `infer` fields + `input`, `input_dims` | one-shot: the server simulates the device too; answered with `result` |
+//!
+//! The `infer` request carries exactly the tuple of paper Algorithm 2's
+//! Require line: model id, accuracy budget `a` (`accuracy_budget`),
+//! channel capacity `r` (`channel_capacity_bps`), transmit power `π`
+//! (`tx_power_w`), and the device compute profile: `f_local` (`clock_hz`),
+//! `γ_local` (`cycles_per_mac`), `κ` (`kappa`), plus the device memory
+//! capacity in bits (`memory_bits`) and optional objective weights
+//! `[ω, τ, η]` (`weights`).
+//!
+//! Example (`infer`):
+//!
+//! ```json
+//! {"type":"infer","model":"mlp6","accuracy_budget":0.01,
+//!  "channel_capacity_bps":2e8,"tx_power_w":1.0,"clock_hz":2e8,
+//!  "cycles_per_mac":5.0,"kappa":3e-27,"memory_bits":2147483648}
+//! ```
+//!
+//! ## Responses ([`messages::Response`])
+//!
+//! | `"type"`  | fields | meaning |
+//! |-----------|--------|---------|
+//! | `pong`    | — | answer to `ping` |
+//! | `models`  | `models`: array of `{name, arch, dataset, layers, params, test_accuracy}` | answer to `list_models` |
+//! | `stats`   | `stats`: metrics document (aggregated over the executor pool, with a per-worker `workers` array) | answer to `stats` |
+//! | `segment` | `session`, `model`, `pattern`, `layers` | **phase-1 answer**: the quantized, bit-packed model segment |
+//! | `result`  | `session`, `prediction`, `logits`, `server_us`, optional `costs` | **phase-2 / simulate answer** |
+//! | `error`   | `code`, `message` | any failure |
+//!
+//! In a `segment` response, `pattern` reports the chosen quantization
+//! pattern (`partition`, per-layer `weight_bits`, `activation_bits`, the
+//! offline `accuracy_level`, `predicted_degradation`, and the Eq. 17
+//! `objective`), and `layers` is an array of [`messages::LayerBlob`]s —
+//! per device-side layer: `layer` (1-based index), `bits`, `w_dims`,
+//! weight grid (`w_qmin`, `w_step`) + base64 `w_packed`, and bias grid
+//! (`b_qmin`, `b_step`, `b_len`) + base64 `b_packed`.
+//!
+//! Error `code`s the coordinator emits: `bad_frame`, `bad_request`,
+//! `unknown_model`, `unknown_session`, `bad_activation`, `bad_input`,
+//! `infeasible` (accuracy budget unreachable), `overloaded` (admission
+//! control shed), `internal`, `shutdown`.
+//!
+//! ## Two-phase serving flow
+//!
+//! Mirroring Fig. 1/2 of the paper:
+//!
+//! 1. device → `infer` (model, accuracy budget, channel + compute profile)
+//! 2. server → `segment` (the quantized, bit-packed model segment + the
+//!    chosen pattern) — the downlink the paper's Eq. 14 charges for
+//! 3. device runs layers `1..=p` locally, → `activation` (quantized,
+//!    bit-packed boundary activation) — the uplink
+//! 4. server finishes layers `p+1..=L`, → `result` (prediction + logits)
+//!
+//! `simulate` collapses 1–4 into one exchange for load generation: the
+//! server plays both roles and reports the Eq. 17 cost breakdown in
+//! `costs`.
+//!
+//! Sessions are server-side state keyed by the `session` id returned in
+//! `segment`; they are consumed by the first `activation` referencing
+//! them and evicted oldest-first under capacity pressure (an evicted
+//! session answers `unknown_session`).
 
 pub mod base64;
 pub mod frame;

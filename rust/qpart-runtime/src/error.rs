@@ -1,33 +1,69 @@
-//! Runtime error type.
+//! Runtime error type (hand-rolled `Display`/`Error` impls — this build is
+//! fully offline, so `thiserror` is not available).
+
+use std::fmt;
 
 /// Errors from artifact loading / PJRT execution.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Propagated qpart-core error (JSON schema, tensor format, ...).
-    #[error(transparent)]
-    Core(#[from] qpart_core::Error),
+    Core(qpart_core::Error),
 
     /// XLA / PJRT failure (compile or execute).
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// Requested executable is not in the bundle.
-    #[error("no executable: {0}")]
     MissingExec(String),
 
     /// Model / dataset / arch not present in the manifest.
-    #[error("not in bundle: {0}")]
     NotInBundle(String),
 
     /// Shape mismatch between artifacts and runtime inputs.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            // transparent: a propagated core error keeps its own message
+            Error::Core(e) => write!(f, "{e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::MissingExec(m) => write!(f, "no executable: {m}"),
+            Error::NotInBundle(m) => write!(f, "not in bundle: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            // transparent wrapper: forward to the core error's own cause
+            // (mirrors thiserror's #[error(transparent)] semantics)
+            Error::Core(e) => std::error::Error::source(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<qpart_core::Error> for Error {
+    fn from(e: qpart_core::Error) -> Self {
+        Error::Core(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
 
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {

@@ -145,6 +145,22 @@ fn prop_json_roundtrip_random_documents() {
 }
 
 #[test]
+fn server_workers_mirror_sim_server_slots() {
+    // The live coordinator's executor pool and the simulator's parallel
+    // server slots are the same knob; their defaults (and the layered
+    // config system's default) must agree, or modeled and measured
+    // serving would silently diverge.
+    let fleet = FleetConfig::default();
+    let server = ServerConfig::default();
+    assert_eq!(server.workers, fleet.server_slots);
+    let cfg = Config::defaults();
+    let serving = cfg.serving().unwrap();
+    assert_eq!(serving.workers, server.workers);
+    // admission control must shed at the same depth from both entry points
+    assert_eq!(serving.queue_capacity, server.queue_capacity);
+}
+
+#[test]
 fn prop_decision_objective_is_minimum() {
     check("Alg2 picks the argmin over feasible partitions", 40, |rng| {
         let arch = qpart::core::model::mlp6();

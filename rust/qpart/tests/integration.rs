@@ -235,6 +235,7 @@ fn server_two_phase_roundtrip() {
     let dir = artifacts_dir().unwrap();
     let handle = serve(ServerConfig {
         listen: "127.0.0.1:0".into(),
+        workers: 2,
         queue_capacity: 64,
         session_capacity: 128,
         artifacts_dir: dir.into(),
@@ -278,6 +279,7 @@ fn server_rejects_garbage_and_unknown_sessions() {
     let dir = artifacts_dir().unwrap();
     let handle = serve(ServerConfig {
         listen: "127.0.0.1:0".into(),
+        workers: 2,
         queue_capacity: 8,
         session_capacity: 8,
         artifacts_dir: dir.into(),

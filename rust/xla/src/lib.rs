@@ -1,0 +1,236 @@
+//! Offline stub of the `xla` crate (xla_extension / PJRT bindings).
+//!
+//! This workspace builds in a fully offline environment where the real
+//! `xla` crate (and the multi-GB `xla_extension` C++ distribution it links)
+//! is not available. `qpart-runtime` programs against the small API surface
+//! below; this crate provides that surface so the whole workspace compiles
+//! and every non-PJRT path (bundle loading, quantization, the coordinator's
+//! phase-1 serving path, the simulator) runs for real.
+//!
+//! Semantics:
+//! * [`Literal`] is fully functional — a host-side typed buffer with shape,
+//!   byte-exact with what the real bindings would hold.
+//! * [`PjRtClient::cpu`] succeeds (so engines can be constructed eagerly),
+//!   but [`PjRtClient::compile`] / [`PjRtLoadedExecutable::execute`] return
+//!   [`Error`] with a clear "PJRT backend unavailable" message. Callers that
+//!   gate on the artifact bundle (which only exists after `make artifacts`
+//!   on a machine with the JAX/XLA toolchain) never reach these paths.
+//!
+//! To swap in the real bindings, point the workspace `xla` entry at the
+//! real crate via `[patch]` (the API below is a strict subset of it).
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (message-only in the stub).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!("{what}: PJRT backend unavailable in this offline build (xla stub)"))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types QPART artifacts use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+impl ElementType {
+    fn size_bytes(&self) -> usize {
+        match self {
+            ElementType::F32 => 4,
+        }
+    }
+}
+
+/// Array shape of a literal (dims as `i64`, matching the real bindings).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Sealed helper: element types [`Literal::to_vec`] can decode.
+pub trait NativeType: Sized {
+    fn ty() -> ElementType;
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    fn ty() -> ElementType {
+        ElementType::F32
+    }
+
+    fn read_le(bytes: &[u8]) -> f32 {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+/// A host-side typed buffer with shape — fully functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    /// Build a literal from a shape and raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if n * ty.size_bytes() != data.len() {
+            return Err(Error(format!(
+                "literal shape {dims:?} implies {} bytes, got {}",
+                n * ty.size_bytes(),
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.iter().map(|&d| d as i64).collect(), data: data.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Decode the buffer as a vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::ty() != self.ty {
+            return Err(Error(format!("literal is {:?}, requested {:?}", self.ty, T::ty())));
+        }
+        let sz = self.ty.size_bytes();
+        Ok(self.data.chunks_exact(sz).map(T::read_le).collect())
+    }
+
+    /// Unwrap a 1-tuple result (QPART lowers every executable with
+    /// `return_tuple=True`). The stub's executables never produce tuples,
+    /// so this is the identity.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+}
+
+/// A device buffer holding one executable output.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A compiled executable. Never constructible in the stub (compile errors
+/// first), so `execute` existing is purely for type-checking callers.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _name: String,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execute"))
+    }
+}
+
+/// The PJRT client. Construction succeeds; compilation does not.
+#[derive(Debug)]
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "cpu (offline xla stub)" })
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compile"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+}
+
+/// Parsed HLO module. The stub validates the file exists and keeps the
+/// text (useful in error messages / debugging).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("read hlo text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation wrapping a parsed HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _hlo_len: usize,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _hlo_len: proto.text.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1, 3], &bytes).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[1, 3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+    }
+
+    #[test]
+    fn literal_rejects_size_mismatch() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &[0u8; 8])
+            .is_err());
+    }
+
+    #[test]
+    fn client_constructs_but_does_not_compile() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("unavailable"), "{err}");
+    }
+}
