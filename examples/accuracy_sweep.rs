@@ -6,7 +6,7 @@
 //! ```
 
 use qpart::prelude::*;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n_eval: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
@@ -14,7 +14,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         eprintln!("artifacts/ missing — run `make artifacts` first");
         return Ok(());
     };
-    let bundle = Rc::new(bundle);
+    let bundle = Arc::new(bundle);
     let entry = bundle.model("mlp6")?.clone();
     let arch = bundle.arch("mlp6")?.clone();
     let calib = bundle.calibration("mlp6")?;
@@ -25,7 +25,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n = n_eval.min(x.batch());
     let xs = x.slice_rows(0, n);
     let ys = &y[..n];
-    let mut ex = Executor::new(Rc::clone(&bundle))?;
+    let mut ex = Executor::new(Arc::clone(&bundle))?;
     let base = ex.eval_accuracy(&xs, ys, |e, c| Ok(e.run_full("mlp6", c)?))?;
     println!("full-precision accuracy over {n} samples: {:.2}%", base * 100.0);
 

@@ -18,7 +18,7 @@
 use qpart::coordinator::client::paper_request;
 use qpart::prelude::*;
 use qpart::sim::perf::Summary;
-use std::rc::Rc;
+use std::sync::Arc;
 
 struct ClassSpec {
     name: &'static str,
@@ -48,11 +48,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         queue_capacity: 256,
         session_capacity: 4096,
         artifacts_dir: "artifacts".into(),
+        ..Default::default()
     })?;
     let addr = handle.addr.to_string();
     println!("coordinator up on {addr} (Algorithm 1 tables built at startup, 4 workers)");
 
-    let bundle = Rc::new(Bundle::load("artifacts")?);
+    let bundle = Arc::new(Bundle::load("artifacts")?);
     let (x, y) = bundle.dataset("digits")?;
     let x = HostTensor::from(x);
 
@@ -93,7 +94,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut total_correct = 0usize;
     let t_all = std::time::Instant::now();
     for class in &classes {
-        let mut client = DeviceClient::connect(&addr, Rc::clone(&bundle))?;
+        let mut client = DeviceClient::connect(&addr, Arc::clone(&bundle))?;
         let mut req = paper_request("mlp6", class.accuracy_budget);
         req.clock_hz = class.clock_hz;
         req.channel_capacity_bps = class.capacity_bps;

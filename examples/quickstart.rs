@@ -12,14 +12,14 @@
 //!    segment; compare against full-precision inference.
 
 use qpart::prelude::*;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let Ok(bundle) = Bundle::load("artifacts") else {
         eprintln!("artifacts/ missing — run `make artifacts` first");
         return Ok(());
     };
-    let bundle = Rc::new(bundle);
+    let bundle = Arc::new(bundle);
     let arch = bundle.arch("mlp6")?.clone();
     println!(
         "model mlp6: {} layers, {} params, input {:?}",
@@ -73,7 +73,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
 
     // ---- execute the split on PJRT
-    let mut ex = Executor::new(Rc::clone(&bundle))?;
+    let mut ex = Executor::new(Arc::clone(&bundle))?;
     let (x, y) = bundle.dataset("digits")?;
     let x = HostTensor::from(x);
     let input = x.slice_rows_padded(0, 1, 1);

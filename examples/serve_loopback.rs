@@ -8,7 +8,7 @@
 use qpart::coordinator::client::paper_request;
 use qpart::prelude::*;
 use qpart::proto::messages::{Request, Response};
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     if Bundle::load("artifacts").is_err() {
@@ -21,11 +21,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         queue_capacity: 16,
         session_capacity: 64,
         artifacts_dir: "artifacts".into(),
+        ..Default::default()
     })?;
     println!("[server] listening on {}", handle.addr);
 
-    let bundle = Rc::new(Bundle::load("artifacts")?);
-    let mut client = DeviceClient::connect(&handle.addr.to_string(), Rc::clone(&bundle))?;
+    let bundle = Arc::new(Bundle::load("artifacts")?);
+    let mut client = DeviceClient::connect(&handle.addr.to_string(), Arc::clone(&bundle))?;
 
     // 0) ping + model discovery
     println!("[device] → ping");

@@ -1,25 +1,37 @@
 //! `qpart` — launcher for the QPART serving stack.
 //!
 //! ```text
-//! qpart serve    [--config cfg.json] [--set k=v ...] [--listen addr] [--artifacts dir]
-//! qpart request  --model mlp6 [--accuracy 0.01] [--n 16] [--addr host:port]
-//!                [--capacity-bps 2e8] [--clock-hz 2e8] [--artifacts dir]
-//! qpart sim      [--model mlp6] [--rate 20] [--devices 16] [--duration 10] [--seed 1]
-//! qpart offline  [--model mlp6] [--artifacts dir]
-//! qpart models   [--artifacts dir]
+//! qpart serve       [--config cfg.json] [--set k=v ...] [--listen addr] [--artifacts dir]
+//!                   [--workers N] [--queue N] [--sessions N] [--session-ttl SECS]
+//!                   [--batch-window MS] [--batch-max N] [--cache-bytes N]
+//!                   [--binary-frames true|false]
+//! qpart request     --model mlp6 [--accuracy 0.01] [--n 16] [--addr host:port]
+//!                   [--capacity-bps 2e8] [--clock-hz 2e8] [--artifacts dir] [--binary]
+//! qpart bench-serve [--clients 8] [--requests 32] [--workers 4] [--keys 3]
+//!                   [--batch-window 2] [--cache-bytes N] [--binary-frames true|false]
+//!                   [--artifacts dir]
+//! qpart sim         [--model mlp6] [--rate 20] [--devices 16] [--duration 10] [--seed 1]
+//! qpart offline     [--model mlp6] [--artifacts dir]
+//! qpart models      [--artifacts dir]
 //! ```
 //!
 //! `serve` starts the coordinator; `request` plays an edge device over the
-//! two-phase protocol (real PJRT execution on both sides); `sim` runs the
-//! discrete-event fleet simulation; `offline` prints the Algorithm-1
-//! pattern table; `models` lists the bundle.
+//! two-phase protocol (real PJRT execution on both sides); `bench-serve`
+//! load-tests the serving dataplane (in-process server, multi-client
+//! phase-1 driver, no PJRT needed — uses a synthetic bundle unless
+//! `--artifacts` is given); `sim` runs the discrete-event fleet
+//! simulation; `offline` prints the Algorithm-1 pattern table; `models`
+//! lists the bundle.
 
 mod args;
 
 use args::Args;
-use qpart::prelude::*;
 use qpart::coordinator::client::{paper_request, random_input};
-use std::rc::Rc;
+use qpart::coordinator::testing::BlockingConn;
+use qpart::prelude::*;
+use qpart::proto::messages::{HelloRequest, Request, Response};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -38,6 +50,7 @@ fn run(raw: Vec<String>) -> Result<(), String> {
     match args.positional.first().map(String::as_str) {
         Some("serve") => cmd_serve(&args),
         Some("request") => cmd_request(&args),
+        Some("bench-serve") => cmd_bench_serve(&args),
         Some("sim") => cmd_sim(&args),
         Some("offline") => cmd_offline(&args),
         Some("models") => cmd_models(&args),
@@ -49,17 +62,31 @@ fn run(raw: Vec<String>) -> Result<(), String> {
     }
 }
 
-const USAGE: &str = "usage: qpart <serve|request|sim|offline|models> [flags]\n\
+const USAGE: &str = "usage: qpart <serve|request|bench-serve|sim|offline|models> [flags]\n\
   serve    --listen 127.0.0.1:7878 --artifacts artifacts [--config f] [--set k=v]\n\
-           [--workers N]   executor-pool size: N inference threads, each owning\n\
-                           its own PJRT executor (default: serving.workers = 4;\n\
-                           mirrors the simulator's server_slots)\n\
-           [--queue N]     admission control: bounded job-queue depth; requests\n\
-                           beyond it are shed with an 'overloaded' error\n\
-                           (default: serving.queue_capacity = 1024)\n\
-           [--sessions N]  two-phase session-table capacity, sharded across\n\
-                           workers; oldest evicted first (default: 4096)\n\
-  request  --model mlp6 --accuracy 0.01 --n 16 --addr 127.0.0.1:7878\n\
+           [--workers N]        executor-pool size: N inference threads, each owning\n\
+                                its own PJRT executor (default: serving.workers = 4;\n\
+                                mirrors the simulator's server_slots)\n\
+           [--queue N]          admission control: bounded job-queue depth; requests\n\
+                                beyond it are shed with an 'overloaded' error\n\
+                                (default: serving.queue_capacity = 1024)\n\
+           [--sessions N]       two-phase session-table capacity, sharded across\n\
+                                workers; oldest evicted first (default: 4096)\n\
+           [--session-ttl S]    expire sessions older than S seconds (0 = never;\n\
+                                default: serving.session_ttl_secs = 600)\n\
+           [--batch-window MS]  coalescing window: hold the first dequeued request\n\
+                                up to MS milliseconds so concurrent same-pattern\n\
+                                requests share one encode (default 0 = drain-only)\n\
+           [--batch-max N]      max requests per drained batch (default 32)\n\
+           [--cache-bytes N]    encoded-reply cache budget in bytes (LRU beyond it;\n\
+                                default 64 MiB)\n\
+           [--binary-frames B]  allow binary segment-frame negotiation (default true)\n\
+  request  --model mlp6 --accuracy 0.01 --n 16 --addr 127.0.0.1:7878 [--binary]\n\
+  bench-serve  load-test the dataplane (synthetic bundle unless --artifacts):\n\
+           [--clients N] [--requests N-per-client] [--workers N] [--keys K]\n\
+           [--batch-window MS] [--cache-bytes N] [--binary-frames B]\n\
+           reports req/s, p50/p99 latency, shed rate, encodes vs requests,\n\
+           cache hit rate, and a binary-vs-JSON byte-identity check\n\
   sim      --model mlp6 --rate 20 --devices 16 --duration 10\n\
   offline  --model mlp6\n\
   models";
@@ -75,19 +102,39 @@ fn load_config(args: &Args) -> Result<Config, String> {
     Ok(cfg)
 }
 
+fn bool_flag(args: &Args, key: &str, default: bool) -> Result<bool, String> {
+    match args.get(key) {
+        None => Ok(default),
+        Some(s) => s.parse::<bool>().map_err(|_| format!("--{key}: expected true|false, got '{s}'")),
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
     let serving = cfg.serving().map_err(|e| e.to_string())?;
+    let batch_window_ms = args.get_f64("batch-window", serving.batch_window_us as f64 / 1000.0)?;
     let server_cfg = qpart::coordinator::ServerConfig {
         listen: args.get_or("listen", &serving.listen).to_string(),
         workers: args.get_usize("workers", serving.workers)?,
         queue_capacity: args.get_usize("queue", serving.queue_capacity)?,
         session_capacity: args.get_usize("sessions", 4096)?,
+        session_ttl: Duration::from_secs(
+            args.get_usize("session-ttl", serving.session_ttl_secs as usize)? as u64,
+        ),
+        batch_window: Duration::from_micros((batch_window_ms * 1000.0).max(0.0) as u64),
+        batch_max: args.get_usize("batch-max", 32)?,
+        cache_bytes: args.get_usize("cache-bytes", serving.cache_bytes)?,
+        binary_frames: bool_flag(args, "binary-frames", serving.binary_frames)?,
         artifacts_dir: args.get_or("artifacts", &serving.artifacts_dir).to_string(),
     };
     println!(
-        "loading bundle from '{}' ({} workers, queue {}) ...",
-        server_cfg.artifacts_dir, server_cfg.workers, server_cfg.queue_capacity
+        "loading bundle from '{}' ({} workers, queue {}, batch window {:?}, cache {} MiB, binary frames {}) ...",
+        server_cfg.artifacts_dir,
+        server_cfg.workers,
+        server_cfg.queue_capacity,
+        server_cfg.batch_window,
+        server_cfg.cache_bytes >> 20,
+        server_cfg.binary_frames,
     );
     let handle = serve(server_cfg)?;
     println!("qpart coordinator listening on {}", handle.addr);
@@ -103,9 +150,13 @@ fn cmd_request(args: &Args) -> Result<(), String> {
     let model = args.get_or("model", "mlp6").to_string();
     let n = args.get_usize("n", 8)?;
     let accuracy = args.get_f64("accuracy", 0.01)?;
-    let bundle = Rc::new(Bundle::load(artifacts).map_err(|e| e.to_string())?);
+    let bundle = Arc::new(Bundle::load(artifacts).map_err(|e| e.to_string())?);
     let mut client =
-        DeviceClient::connect(addr, Rc::clone(&bundle)).map_err(|e| e.to_string())?;
+        DeviceClient::connect(addr, Arc::clone(&bundle)).map_err(|e| e.to_string())?;
+    if bool_flag(args, "binary", false)? {
+        let granted = client.negotiate_binary().map_err(|e| e.to_string())?;
+        println!("binary frames: {}", if granted { "granted" } else { "refused (JSON fallback)" });
+    }
 
     let entry = bundle.model(&model).map_err(|e| e.to_string())?;
     let (x, y) = bundle.dataset(&entry.dataset).map_err(|e| e.to_string())?;
@@ -158,6 +209,186 @@ fn cmd_request(args: &Args) -> Result<(), String> {
     // sanity: the arch accepts a random input of its declared shape
     let probe = random_input(arch, 7);
     debug_assert_eq!(probe.row_elems() as u64, arch.activation_elems(0));
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// bench-serve: the serving-dataplane load harness
+// ---------------------------------------------------------------------------
+
+fn quantile_us(sorted: &[u64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)] as f64
+}
+
+fn cmd_bench_serve(args: &Args) -> Result<(), String> {
+    // bundle: real artifacts if given, else a synthetic temp bundle —
+    // resolved out here so the temp dir is removed on EVERY exit path
+    let (artifacts_dir, synth_dir) = match args.get("artifacts") {
+        Some(d) => (d.to_string(), None),
+        None => {
+            let d = qpart::coordinator::testing::synthetic_bundle("bench-serve");
+            (d.to_string_lossy().into_owned(), Some(d))
+        }
+    };
+    let model =
+        args.get_or("model", if synth_dir.is_some() { "tinymlp" } else { "mlp6" }).to_string();
+    let result = run_bench_serve(args, artifacts_dir, &model);
+    if let Some(d) = synth_dir {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    result
+}
+
+fn run_bench_serve(args: &Args, artifacts_dir: String, model: &str) -> Result<(), String> {
+    let workers = args.get_usize("workers", 4)?;
+    let clients = args.get_usize("clients", 8)?.max(1);
+    let per_client = args.get_usize("requests", 32)?.max(1);
+    let keys = args.get_usize("keys", 3)?.max(1);
+    let window_ms = args.get_f64("batch-window", 2.0)?;
+    let cache_bytes = args.get_usize("cache-bytes", 64 << 20)?;
+    let binary = bool_flag(args, "binary-frames", true)?;
+
+    let handle = serve(qpart::coordinator::ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers,
+        queue_capacity: args.get_usize("queue", 1024)?,
+        batch_window: Duration::from_micros((window_ms * 1000.0).max(0.0) as u64),
+        cache_bytes,
+        binary_frames: binary,
+        artifacts_dir,
+        ..Default::default()
+    })?;
+    let addr = handle.addr.to_string();
+    println!(
+        "bench-serve: model={model} workers={workers} clients={clients} \
+         requests/client={per_client} keys={keys} batch-window={window_ms}ms"
+    );
+
+    let mut prev = handle.snapshot();
+    for pass in 1..=2 {
+        let barrier = Arc::new(Barrier::new(clients));
+        let t0 = Instant::now();
+        let mut joins = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let addr = addr.clone();
+            let model = model.to_string();
+            let barrier = Arc::clone(&barrier);
+            joins.push(std::thread::spawn(
+                move || -> Result<(Vec<u64>, u64, u64), String> {
+                    let mut conn = BlockingConn::connect(&addr)?;
+                    barrier.wait();
+                    let mut lat = Vec::with_capacity(per_client);
+                    let mut shed = 0u64;
+                    let mut errors = 0u64;
+                    for i in 0..per_client {
+                        let mut req = paper_request(&model, 0.02);
+                        // K overlapping channel classes → K coalescing keys
+                        // shared across all clients
+                        req.channel_capacity_bps = 50e6 * (1 + (c + i) % keys) as f64;
+                        let t = Instant::now();
+                        match conn.call(&Request::Infer(req))? {
+                            Response::Segment(_) => {
+                                lat.push(t.elapsed().as_micros() as u64)
+                            }
+                            Response::Error(e) if e.code == "overloaded" => shed += 1,
+                            Response::Error(e) => {
+                                errors += 1;
+                                eprintln!("client {c}: {}: {}", e.code, e.message);
+                            }
+                            other => return Err(format!("unexpected response {other:?}")),
+                        }
+                    }
+                    Ok((lat, shed, errors))
+                },
+            ));
+        }
+        let mut lats: Vec<u64> = Vec::new();
+        let mut shed = 0u64;
+        let mut errors = 0u64;
+        for j in joins {
+            let (l, s, e) = j.join().map_err(|_| "bench client panicked".to_string())??;
+            lats.extend(l);
+            shed += s;
+            errors += e;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        lats.sort_unstable();
+        let attempts = (clients * per_client) as u64;
+        let snap = handle.snapshot();
+        let d_hits = snap.cache_hits - prev.cache_hits;
+        let d_misses = snap.cache_misses - prev.cache_misses;
+        let d_encodes = snap.encodes_total - prev.encodes_total;
+        let d_coalesced = snap.coalesced_total - prev.coalesced_total;
+        let lookups = d_hits + d_misses;
+        let hit_rate = if lookups > 0 { 100.0 * d_hits as f64 / lookups as f64 } else { 0.0 };
+        // per-pass queue-wait mean from the cumulative histogram sums
+        // (a NaN mean encodes an empty histogram — treat as zero sum)
+        let wait_sum = |count: u64, mean: f64| if count == 0 { 0.0 } else { mean * count as f64 };
+        let d_wait_count = snap.queue_wait_count - prev.queue_wait_count;
+        let d_wait_mean = if d_wait_count == 0 {
+            0.0
+        } else {
+            (wait_sum(snap.queue_wait_count, snap.queue_wait_mean_us)
+                - wait_sum(prev.queue_wait_count, prev.queue_wait_mean_us))
+                / d_wait_count as f64
+        };
+        println!(
+            "pass {pass}: {} ok / {attempts} ({shed} shed = {:.1}%, {errors} errors), \
+             {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms",
+            lats.len(),
+            100.0 * shed as f64 / attempts as f64,
+            lats.len() as f64 / wall,
+            quantile_us(&lats, 0.50) / 1000.0,
+            quantile_us(&lats, 0.99) / 1000.0,
+        );
+        println!(
+            "        encodes {d_encodes} / {attempts} infer requests, \
+             coalesced {d_coalesced}, cache hits {d_hits}/{lookups} ({hit_rate:.1}%), \
+             queue wait mean {d_wait_mean:.0} µs"
+        );
+        if errors > 0 {
+            return Err(format!("{errors} requests failed"));
+        }
+        prev = snap;
+    }
+
+    // byte-identity check: a binary-frame session against a JSON control
+    if binary {
+        let mut json_conn = BlockingConn::connect(&addr)?;
+        let mut bin_conn = BlockingConn::connect(&addr)?;
+        match bin_conn.call(&Request::Hello(HelloRequest { binary_frames: true }))? {
+            Response::Hello(h) if h.binary_frames => {}
+            other => return Err(format!("binary negotiation failed: {other:?}")),
+        }
+        let req = paper_request(model, 0.02);
+        let a = match json_conn.call(&Request::Infer(req.clone()))? {
+            Response::Segment(r) => r,
+            other => return Err(format!("unexpected response {other:?}")),
+        };
+        let b = match bin_conn.call(&Request::Infer(req))? {
+            Response::Segment(r) => r,
+            other => return Err(format!("unexpected response {other:?}")),
+        };
+        if a.segment != b.segment || a.pattern != b.pattern {
+            return Err("binary-frame segment differs from JSON control".into());
+        }
+        println!("binary-frame check: segment payloads byte-identical across framings: OK");
+    }
+
+    let final_snap = handle.snapshot();
+    println!(
+        "totals: requests {}, encodes {}, coalesced {}, cache hits {}, cache misses {}",
+        final_snap.requests_total,
+        final_snap.encodes_total,
+        final_snap.coalesced_total,
+        final_snap.cache_hits,
+        final_snap.cache_misses,
+    );
+    handle.shutdown();
     Ok(())
 }
 

@@ -4,20 +4,22 @@
 //! **executes the received quantized layers locally** through its own PJRT
 //! engine (the same Pallas-kernel executables a real deployment would ship
 //! in the device image), quantizes + bit-packs the boundary activation,
-//! uploads it, and receives the prediction.
+//! uploads it, and receives the prediction. It can negotiate binary
+//! segment frames ([`DeviceClient::negotiate_binary`]) — the read path
+//! accepts either framing transparently.
 
 use crate::service::boundary_dims;
 use qpart_core::model::ModelSpec;
 use qpart_core::quant::{pack_bits, quantize, QuantPattern};
-use qpart_proto::frame::{read_frame, write_frame};
+use qpart_proto::frame::{read_any_frame, write_frame};
 use qpart_proto::messages::{
-    ActivationUpload, InferReply, InferRequest, Request, Response, SimulateRequest,
+    ActivationUpload, HelloRequest, InferReply, InferRequest, Request, Response, SimulateRequest,
 };
 use qpart_runtime::executor::{QuantizedLayer, QuantizedSegment};
 use qpart_runtime::{Bundle, Error, Executor, HostTensor, Result};
 use std::io::BufReader;
 use std::net::TcpStream;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Blocking protocol client + local (device-side) executor.
 pub struct DeviceClient {
@@ -26,32 +28,53 @@ pub struct DeviceClient {
     /// Device-side runtime (needs the bundle for the HLO executables — in
     /// a real deployment these ship in the device image).
     executor: Executor,
-    bundle: Rc<Bundle>,
+    bundle: Arc<Bundle>,
+    /// Whether the server granted binary segment frames for this session.
+    binary_frames: bool,
 }
 
 impl DeviceClient {
-    pub fn connect(addr: &str, bundle: Rc<Bundle>) -> Result<DeviceClient> {
+    pub fn connect(addr: &str, bundle: Arc<Bundle>) -> Result<DeviceClient> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?; // request/response over loopback: no Nagle
         let writer = stream.try_clone()?;
         Ok(DeviceClient {
             reader: BufReader::new(stream),
             writer,
-            executor: Executor::new(Rc::clone(&bundle))?,
+            executor: Executor::new(Arc::clone(&bundle))?,
             bundle,
+            binary_frames: false,
         })
     }
 
-    /// Send one request and read one response.
+    /// Send one request and read one response (either framing).
     pub fn call(&mut self, req: &Request) -> Result<Response> {
         write_frame(&mut self.writer, &req.to_line())
             .map_err(|e| Error::Xla(format!("write: {e}")))?;
-        let line = read_frame(&mut self.reader).map_err(|e| Error::Xla(format!("read: {e}")))?;
-        Response::from_line(&line).map_err(Error::Core)
+        let frame =
+            read_any_frame(&mut self.reader).map_err(|e| Error::Xla(format!("read: {e}")))?;
+        Response::from_frame(&frame).map_err(Error::Core)
     }
 
     pub fn ping(&mut self) -> Result<bool> {
         Ok(matches!(self.call(&Request::Ping)?, Response::Pong))
+    }
+
+    /// Ask the server for binary segment frames; returns what was granted
+    /// (false when the server has `--binary-frames false`).
+    pub fn negotiate_binary(&mut self) -> Result<bool> {
+        match self.call(&Request::Hello(HelloRequest { binary_frames: true }))? {
+            Response::Hello(h) => {
+                self.binary_frames = h.binary_frames;
+                Ok(h.binary_frames)
+            }
+            other => Err(Error::Xla(format!("unexpected hello response {other:?}"))),
+        }
+    }
+
+    /// Whether this session negotiated binary segment frames.
+    pub fn binary_frames(&self) -> bool {
+        self.binary_frames
     }
 
     /// Full two-phase inference for input `x` (batch 1).

@@ -4,33 +4,51 @@
 //!
 //! * [`service`] — the request brain: per-model offline pattern tables
 //!   (Algorithm 1 at startup), per-request decisions (Algorithm 2),
-//!   segment quantization + bit-packing, session state for the two-phase
-//!   protocol, PJRT execution of the server-side segment.
-//! * [`server`] — TCP front-end: JSON-lines framing, a bounded job queue
-//!   with admission control (overload sheds with an `overloaded` error),
-//!   and a configurable **executor pool**: `workers` inference threads,
-//!   each owning its own PJRT executor and Algorithm 1 tables (PJRT
-//!   clients are single-device and not `Send`), draining one shared
-//!   queue. The knob mirrors the simulator's `FleetConfig::server_slots`.
+//!   segment quantization + bit-packing through the encoded-reply cache,
+//!   batch handling (group-by-key, encode once, fan out), session state
+//!   for the two-phase protocol, PJRT execution of the server-side
+//!   segment.
+//! * [`sched`] — the **serving dataplane** between the accept loop and
+//!   the executor pool: batch draining with an optional coalescing
+//!   window, the `(model, accuracy level, partition)`-keyed
+//!   [`EncodedReplyCache`] (LRU + byte budget), and the [`sched::WireReply`]
+//!   hand-off that lets connection threads stamp pre-encoded segment
+//!   bodies into either framing.
+//! * [`server`] — TCP front-end: JSON-lines framing plus negotiated
+//!   binary segment frames, a bounded job queue with admission control
+//!   (overload sheds with an `overloaded` error), a configurable
+//!   **executor pool** (`workers` inference threads over one shared
+//!   `Arc<Bundle>`; PJRT clients are single-device and not `Send`)
+//!   draining one shared queue in batches, and a session-GC thread. The
+//!   knob mirrors the simulator's `FleetConfig::server_slots`.
 //! * [`client`] — the device side for examples/CLI: sends requests,
-//!   executes the received quantized segment locally through its own PJRT
-//!   engine, uploads the quantized boundary activation.
-//! * [`metrics`] — per-worker counters + histograms, aggregated by a
-//!   [`MetricsHub`] and surfaced via the `stats` request.
-//! * [`session`] — sharded, capacity-bounded session table shared by all
-//!   workers (phase 1 and phase 2 of a session may be handled by
-//!   different workers).
+//!   optionally negotiates binary frames, executes the received quantized
+//!   segment locally through its own PJRT engine, uploads the quantized
+//!   boundary activation.
+//! * [`metrics`] — per-worker counters + histograms (including
+//!   `queue_wait` and the batching/encode counters), aggregated by a
+//!   [`MetricsHub`] — together with the encoded-reply cache's
+//!   hit/miss/bytes-saved counters — and surfaced via the `stats`
+//!   request.
+//! * [`session`] — sharded, capacity- and TTL-bounded session table
+//!   shared by all workers (phase 1 and phase 2 of a session may be
+//!   handled by different workers).
+//! * [`testing`] — synthetic PJRT-free artifact bundles for tests and the
+//!   `bench-serve` load harness.
 //!
 //! Python never appears anywhere on these paths.
 
 pub mod client;
 pub mod metrics;
+pub mod sched;
 pub mod server;
 pub mod service;
 pub mod session;
+pub mod testing;
 
 pub use client::DeviceClient;
 pub use metrics::{Metrics, MetricsHub, MetricsSnapshot};
+pub use sched::{BatchPolicy, EncodedReplyCache, Job, WireReply};
 pub use server::{serve, ServerConfig, ServerHandle};
 pub use service::Service;
 pub use session::{Session, SessionTable, SharedSessionTable};

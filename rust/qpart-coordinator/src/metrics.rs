@@ -4,10 +4,19 @@
 //! Pool topology: every inference worker owns its own [`Metrics`] (no
 //! cross-worker cache-line bouncing on the hot path) and the connection
 //! front-end owns one more (shed / bad-frame counters). A [`MetricsHub`]
-//! holds them all and aggregates into a single [`MetricsSnapshot`] /
-//! stats-JSON document on demand, so observers see one logical server
-//! regardless of how many workers are running.
+//! holds them all — plus the server-wide encoded-reply cache — and
+//! aggregates into a single [`MetricsSnapshot`] / stats-JSON document on
+//! demand, so observers see one logical server regardless of how many
+//! workers are running.
+//!
+//! Dataplane metrics: `queue_wait` measures enqueue→dequeue time per
+//! request (the latency cost of batching), `batches_total` /
+//! `coalesced_total` / `encodes_total` make coalescing observable
+//! (encodes < requests ⇔ the dataplane is amortizing work), and the
+//! `segment_cache` section carries the cache's hit/miss/bytes-saved
+//! counters.
 
+use crate::sched::EncodedReplyCache;
 use qpart_core::json::Value;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -141,6 +150,14 @@ pub struct Metrics {
     pub sessions_expired: AtomicU64,
     pub bytes_out: AtomicU64,
     pub bytes_in: AtomicU64,
+    /// Batches this worker drained (≥ 1 job each).
+    pub batches_total: AtomicU64,
+    /// Requests answered from a batch group beyond the group's first —
+    /// the requests whose encode was amortized away.
+    pub coalesced_total: AtomicU64,
+    /// Segment encodes actually performed (quantize + pack + serialize).
+    /// Coalescing + caching make this < infer requests under shared keys.
+    pub encodes_total: AtomicU64,
     /// End-to-end request handling (decision + quantize + execute).
     pub handle_latency: Histogram,
     /// Algorithm 2 decision time.
@@ -149,19 +166,30 @@ pub struct Metrics {
     pub quantize_latency: Histogram,
     /// PJRT execution time.
     pub execute_latency: Histogram,
+    /// Enqueue → dequeue time per request (batching's latency cost).
+    pub queue_wait: Histogram,
 }
 
 /// A point-in-time copy (plain numbers) for assertions and reports.
 /// For a pooled server this is the **aggregate over all workers** plus the
 /// connection front-end — one logical snapshot, per the serving contract.
+/// `cache_*` fields come from the server-wide encoded-reply cache and are
+/// zero in per-worker snapshots (the cache is shared, not per-worker).
 #[derive(Debug, Clone, PartialEq)]
 pub struct MetricsSnapshot {
     pub requests_total: u64,
     pub errors_total: u64,
     pub shed_total: u64,
     pub sessions_opened: u64,
+    pub batches_total: u64,
+    pub coalesced_total: u64,
+    pub encodes_total: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
     pub handle_count: u64,
     pub handle_mean_us: f64,
+    pub queue_wait_count: u64,
+    pub queue_wait_mean_us: f64,
 }
 
 impl Metrics {
@@ -179,8 +207,15 @@ impl Metrics {
             errors_total: self.errors_total.load(Ordering::Relaxed),
             shed_total: self.shed_total.load(Ordering::Relaxed),
             sessions_opened: self.sessions_opened.load(Ordering::Relaxed),
+            batches_total: self.batches_total.load(Ordering::Relaxed),
+            coalesced_total: self.coalesced_total.load(Ordering::Relaxed),
+            encodes_total: self.encodes_total.load(Ordering::Relaxed),
+            cache_hits: 0,
+            cache_misses: 0,
             handle_count: self.handle_latency.count(),
             handle_mean_us: self.handle_latency.mean_us(),
+            queue_wait_count: self.queue_wait.count(),
+            queue_wait_mean_us: self.queue_wait.mean_us(),
         }
     }
 
@@ -193,10 +228,14 @@ impl Metrics {
             ("sessions_expired", self.sessions_expired.load(Ordering::Relaxed).into()),
             ("bytes_out", self.bytes_out.load(Ordering::Relaxed).into()),
             ("bytes_in", self.bytes_in.load(Ordering::Relaxed).into()),
+            ("batches_total", self.batches_total.load(Ordering::Relaxed).into()),
+            ("coalesced_total", self.coalesced_total.load(Ordering::Relaxed).into()),
+            ("encodes_total", self.encodes_total.load(Ordering::Relaxed).into()),
             ("handle", self.handle_latency.to_json()),
             ("decide", self.decide_latency.to_json()),
             ("quantize", self.quantize_latency.to_json()),
             ("execute", self.execute_latency.to_json()),
+            ("queue_wait", self.queue_wait.to_json()),
         ])
     }
 }
@@ -213,6 +252,9 @@ struct CounterTotals {
     sessions_expired: u64,
     bytes_out: u64,
     bytes_in: u64,
+    batches_total: u64,
+    coalesced_total: u64,
+    encodes_total: u64,
 }
 
 impl CounterTotals {
@@ -225,6 +267,9 @@ impl CounterTotals {
             sessions_expired: m.sessions_expired.load(Ordering::Relaxed),
             bytes_out: m.bytes_out.load(Ordering::Relaxed),
             bytes_in: m.bytes_in.load(Ordering::Relaxed),
+            batches_total: m.batches_total.load(Ordering::Relaxed),
+            coalesced_total: m.coalesced_total.load(Ordering::Relaxed),
+            encodes_total: m.encodes_total.load(Ordering::Relaxed),
         }
     }
 
@@ -236,6 +281,9 @@ impl CounterTotals {
         self.sessions_expired += other.sessions_expired;
         self.bytes_out += other.bytes_out;
         self.bytes_in += other.bytes_in;
+        self.batches_total += other.batches_total;
+        self.coalesced_total += other.coalesced_total;
+        self.encodes_total += other.encodes_total;
     }
 }
 
@@ -247,15 +295,19 @@ struct Aggregate {
     decide: HistogramSummary,
     quantize: HistogramSummary,
     execute: HistogramSummary,
+    queue_wait: HistogramSummary,
     per_worker: Vec<Value>,
 }
 
 /// Registry for the executor pool: one [`Metrics`] per worker plus one for
-/// the connection front-end, aggregated on demand.
+/// the connection front-end, aggregated on demand. The server-wide
+/// [`EncodedReplyCache`] registers here too, so the `stats` document and
+/// snapshot carry its counters alongside the workers'.
 #[derive(Debug, Default)]
 pub struct MetricsHub {
     front: Arc<Metrics>,
     workers: Mutex<Vec<Arc<Metrics>>>,
+    segment_cache: Mutex<Option<Arc<EncodedReplyCache>>>,
 }
 
 impl MetricsHub {
@@ -273,6 +325,17 @@ impl MetricsHub {
         let m = Arc::new(Metrics::default());
         self.workers.lock().unwrap().push(Arc::clone(&m));
         m
+    }
+
+    /// Register the server-wide encoded-reply cache so its counters are
+    /// surfaced in snapshots and the stats document.
+    pub fn register_segment_cache(&self, cache: Arc<EncodedReplyCache>) {
+        *self.segment_cache.lock().unwrap() = Some(cache);
+    }
+
+    /// The registered encoded-reply cache, if any.
+    pub fn segment_cache(&self) -> Option<Arc<EncodedReplyCache>> {
+        self.segment_cache.lock().unwrap().clone()
     }
 
     pub fn num_workers(&self) -> usize {
@@ -297,6 +360,7 @@ impl MetricsHub {
             decide: self.front.decide_latency.summary(),
             quantize: self.front.quantize_latency.summary(),
             execute: self.front.execute_latency.summary(),
+            queue_wait: self.front.queue_wait.summary(),
             per_worker: Vec::with_capacity(if with_worker_json { workers.len() } else { 0 }),
         };
         for m in workers.iter() {
@@ -305,6 +369,7 @@ impl MetricsHub {
             agg.decide.merge(&m.decide_latency.summary());
             agg.quantize.merge(&m.quantize_latency.summary());
             agg.execute.merge(&m.execute_latency.summary());
+            agg.queue_wait.merge(&m.queue_wait.summary());
             if with_worker_json {
                 agg.per_worker.push(m.to_json());
             }
@@ -315,21 +380,33 @@ impl MetricsHub {
     /// One aggregated snapshot over the front-end and every worker.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let agg = self.aggregate(false);
+        let (cache_hits, cache_misses) = match self.segment_cache() {
+            Some(c) => (c.hits(), c.misses()),
+            None => (0, 0),
+        };
         MetricsSnapshot {
             requests_total: agg.totals.requests_total,
             errors_total: agg.totals.errors_total,
             shed_total: agg.totals.shed_total,
             sessions_opened: agg.totals.sessions_opened,
+            batches_total: agg.totals.batches_total,
+            coalesced_total: agg.totals.coalesced_total,
+            encodes_total: agg.totals.encodes_total,
+            cache_hits,
+            cache_misses,
             handle_count: agg.handle.count(),
             handle_mean_us: agg.handle.mean_us(),
+            queue_wait_count: agg.queue_wait.count(),
+            queue_wait_mean_us: agg.queue_wait.mean_us(),
         }
     }
 
     /// Aggregated stats document: one logical server view plus a
-    /// `workers` array with each worker's own counters.
+    /// `workers` array with each worker's own counters and the
+    /// encoded-reply cache's `segment_cache` section.
     pub fn to_json(&self) -> Value {
         let agg = self.aggregate(true);
-        Value::obj([
+        let mut v = Value::obj([
             ("requests_total", agg.totals.requests_total.into()),
             ("errors_total", agg.totals.errors_total.into()),
             ("shed_total", agg.totals.shed_total.into()),
@@ -337,12 +414,20 @@ impl MetricsHub {
             ("sessions_expired", agg.totals.sessions_expired.into()),
             ("bytes_out", agg.totals.bytes_out.into()),
             ("bytes_in", agg.totals.bytes_in.into()),
+            ("batches_total", agg.totals.batches_total.into()),
+            ("coalesced_total", agg.totals.coalesced_total.into()),
+            ("encodes_total", agg.totals.encodes_total.into()),
             ("handle", agg.handle.to_json()),
             ("decide", agg.decide.to_json()),
             ("quantize", agg.quantize.to_json()),
             ("execute", agg.execute.to_json()),
+            ("queue_wait", agg.queue_wait.to_json()),
             ("workers", Value::Arr(agg.per_worker)),
-        ])
+        ]);
+        if let Some(cache) = self.segment_cache() {
+            v.set("segment_cache", cache.to_json());
+        }
+        v
     }
 }
 
@@ -371,17 +456,23 @@ mod tests {
         Metrics::inc(&m.requests_total);
         Metrics::inc(&m.errors_total);
         m.handle_latency.observe_us(100);
+        m.queue_wait.observe_us(40);
         let s = m.snapshot();
         assert_eq!(s.requests_total, 2);
         assert_eq!(s.errors_total, 1);
         assert_eq!(s.handle_count, 1);
+        assert_eq!(s.queue_wait_count, 1);
+        assert!((s.queue_wait_mean_us - 40.0).abs() < 1e-9);
     }
 
     #[test]
     fn json_has_all_sections() {
         let m = Metrics::default();
         let v = m.to_json();
-        for key in ["requests_total", "handle", "decide", "quantize", "execute"] {
+        for key in
+            ["requests_total", "handle", "decide", "quantize", "execute", "queue_wait",
+             "batches_total", "coalesced_total", "encodes_total"]
+        {
             assert!(v.get(key).is_some(), "{key}");
         }
     }
@@ -413,13 +504,23 @@ mod tests {
         Metrics::inc(&w2.requests_total);
         Metrics::inc(&w2.requests_total);
         Metrics::inc(&front.shed_total);
+        Metrics::inc(&w1.batches_total);
+        Metrics::add(&w1.coalesced_total, 2);
+        Metrics::inc(&w2.encodes_total);
         w1.handle_latency.observe_us(100);
         w2.handle_latency.observe_us(300);
+        w1.queue_wait.observe_us(10);
+        w2.queue_wait.observe_us(30);
         let snap = hub.snapshot();
         assert_eq!(snap.requests_total, 3);
         assert_eq!(snap.shed_total, 1);
+        assert_eq!(snap.batches_total, 1);
+        assert_eq!(snap.coalesced_total, 2);
+        assert_eq!(snap.encodes_total, 1);
         assert_eq!(snap.handle_count, 2);
         assert!((snap.handle_mean_us - 200.0).abs() < 1e-9);
+        assert_eq!(snap.queue_wait_count, 2);
+        assert!((snap.queue_wait_mean_us - 20.0).abs() < 1e-9);
         assert_eq!(hub.worker_snapshots().len(), 2);
         assert_eq!(hub.num_workers(), 2);
     }
@@ -433,5 +534,20 @@ mod tests {
         assert_eq!(v.req_f64("requests_total").unwrap(), 1.0);
         assert_eq!(v.req_arr("workers").unwrap().len(), 1);
         assert!(v.get("handle").is_some());
+        assert!(v.get("queue_wait").is_some());
+        assert!(v.get("segment_cache").is_none(), "absent until registered");
+    }
+
+    #[test]
+    fn hub_surfaces_registered_cache() {
+        let hub = MetricsHub::new();
+        let cache = Arc::new(EncodedReplyCache::new(1 << 20));
+        hub.register_segment_cache(Arc::clone(&cache));
+        let _ = cache.get(&("m".into(), 0, 1)); // one miss
+        let snap = hub.snapshot();
+        assert_eq!(snap.cache_misses, 1);
+        assert_eq!(snap.cache_hits, 0);
+        let v = hub.to_json();
+        assert_eq!(v.req("segment_cache").unwrap().req_f64("misses").unwrap(), 1.0);
     }
 }

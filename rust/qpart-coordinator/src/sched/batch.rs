@@ -1,0 +1,301 @@
+//! Batch draining and pre-encoded replies.
+//!
+//! Workers no longer pop one request per dequeue: [`drain_batch`] pulls
+//! everything already queued (and, with a non-zero coalescing window,
+//! waits briefly for stragglers) so the service can group `infer`
+//! requests by `(model, accuracy level, partition)` and encode each group
+//! **once**. The window trades a bounded latency add for fewer encodes —
+//! `queue_wait` in the stats document makes that cost measurable.
+//!
+//! Replies travel back to connection threads as [`WireReply`]: either a
+//! plain [`Response`], or a [`SegmentReply`] carrying the shared
+//! [`EncodedSegmentBody`] plus the per-request session id and objective —
+//! the connection thread stamps those into the negotiated framing (JSON
+//! line or binary frame) without re-encoding the payload.
+
+use qpart_proto::messages::{EncodedSegmentBody, Request, Response};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One queued request plus its reply path and enqueue timestamp.
+#[derive(Debug)]
+pub struct Job {
+    pub req: Request,
+    pub reply_tx: SyncSender<WireReply>,
+    /// When the connection thread enqueued the job (→ `queue_wait`).
+    pub enqueued: Instant,
+}
+
+impl Job {
+    pub fn new(req: Request, reply_tx: SyncSender<WireReply>) -> Job {
+        Job { req, reply_tx, enqueued: Instant::now() }
+    }
+}
+
+/// A reply on its way back to a connection thread.
+#[derive(Debug)]
+pub enum WireReply {
+    /// An ordinary response — serialized by the connection per its framing.
+    Msg(Response),
+    /// A segment reply sharing a pre-encoded body with its batch group.
+    Segment(SegmentReply),
+}
+
+/// Per-connection stamp over a shared encoded segment body.
+#[derive(Debug)]
+pub struct SegmentReply {
+    pub session: u64,
+    /// This request's Eq. 17 objective (the only per-request pattern field).
+    pub objective: f64,
+    pub body: Arc<EncodedSegmentBody>,
+}
+
+impl WireReply {
+    /// Decode into a full [`Response`] (in-process callers and tests; the
+    /// wire path stamps strings instead — see the connection loop).
+    pub fn into_response(self) -> Response {
+        match self {
+            WireReply::Msg(r) => r,
+            WireReply::Segment(s) => Response::Segment(s.body.to_reply(s.session, s.objective)),
+        }
+    }
+}
+
+/// How a worker drains the shared queue.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// After the first job arrives, wait up to this long for more jobs to
+    /// coalesce with it. Zero = drain only what is already queued.
+    pub window: Duration,
+    /// Batch size cap (values < 1 behave as 1).
+    pub max_batch: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { window: Duration::ZERO, max_batch: 32 }
+    }
+}
+
+/// Result of one drain attempt.
+#[derive(Debug)]
+pub enum DrainOutcome {
+    /// One or more jobs, coalesced per the policy.
+    Batch(Vec<Job>),
+    /// Nothing arrived within `idle_timeout` (caller re-checks stop flags).
+    TimedOut,
+    /// The queue's senders are gone; the worker should exit.
+    Disconnected,
+}
+
+/// Greedily take everything already queued, up to `max_batch` total.
+fn top_up(rx: &Receiver<Job>, batch: &mut Vec<Job>, max_batch: usize) {
+    while batch.len() < max_batch {
+        match rx.try_recv() {
+            Ok(j) => batch.push(j),
+            Err(_) => break,
+        }
+    }
+}
+
+/// Drain the next batch: block up to `idle_timeout` for the first job,
+/// greedily take whatever is already queued, then — if the batch is not
+/// full and the policy has a window — wait out the coalescing window for
+/// stragglers, up to `max_batch` jobs.
+///
+/// The receiver lock is held only for the actual dequeues. During the
+/// window the lock is re-taken in ≤ 1 ms slices, so an idle worker can
+/// interleave and pick up (different-key) work instead of the whole pool
+/// serializing behind one worker's wait — the window costs latency on the
+/// coalesced requests, never pool-wide dequeue throughput.
+pub fn drain_batch(
+    rx: &Mutex<Receiver<Job>>,
+    policy: &BatchPolicy,
+    idle_timeout: Duration,
+) -> DrainOutcome {
+    let max_batch = policy.max_batch.max(1);
+    // phase 1: wait for the first job and sweep the backlog, one lock hold
+    let mut batch = {
+        let guard = rx.lock().unwrap();
+        let first = match guard.recv_timeout(idle_timeout) {
+            Ok(j) => j,
+            Err(RecvTimeoutError::Timeout) => return DrainOutcome::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => return DrainOutcome::Disconnected,
+        };
+        let mut batch = vec![first];
+        top_up(&guard, &mut batch, max_batch);
+        batch
+    };
+    // phase 2: coalescing window — short lock slices, interleavable.
+    // Only infer requests can coalesce, so a batch without any skips the
+    // window entirely: ping/stats/activation jobs (the device is blocked
+    // on its prediction!) must not pay latency for zero batching benefit.
+    if !batch.iter().any(|j| matches!(j.req, Request::Infer(_))) {
+        return DrainOutcome::Batch(batch);
+    }
+    let deadline = Instant::now() + policy.window;
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let slice = (deadline - now).min(Duration::from_millis(1));
+        let got = {
+            let guard = rx.lock().unwrap();
+            let got = guard.recv_timeout(slice);
+            if got.is_ok() {
+                top_up(&guard, &mut batch, max_batch.saturating_sub(1));
+            }
+            got
+        };
+        match got {
+            Ok(j) => batch.push(j),
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    DrainOutcome::Batch(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use qpart_proto::messages::InferRequest;
+    use std::sync::mpsc::sync_channel;
+
+    fn job() -> (Job, Receiver<WireReply>) {
+        let (tx, rx) = sync_channel(1);
+        (Job::new(Request::Ping, tx), rx)
+    }
+
+    /// An infer job (the only request kind that opts a batch into the
+    /// coalescing window).
+    fn infer_job() -> (Job, Receiver<WireReply>) {
+        let (tx, rx) = sync_channel(1);
+        let req = InferRequest {
+            model: "tinymlp".into(),
+            accuracy_budget: 0.02,
+            channel_capacity_bps: 200e6,
+            tx_power_w: 1.0,
+            clock_hz: 200e6,
+            cycles_per_mac: 5.0,
+            kappa: 3e-27,
+            memory_bits: 1 << 31,
+            weights: None,
+        };
+        (Job::new(Request::Infer(req), tx), rx)
+    }
+
+    #[test]
+    fn drains_everything_already_queued() {
+        let (tx, rx) = sync_channel::<Job>(16);
+        let rx = Mutex::new(rx);
+        let mut reply_rxs = Vec::new();
+        for _ in 0..5 {
+            let (j, r) = job();
+            tx.send(j).unwrap();
+            reply_rxs.push(r);
+        }
+        let policy = BatchPolicy { window: Duration::ZERO, max_batch: 32 };
+        match drain_batch(&rx, &policy, Duration::from_millis(100)) {
+            DrainOutcome::Batch(b) => assert_eq!(b.len(), 5),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn max_batch_caps_the_drain() {
+        let (tx, rx) = sync_channel::<Job>(16);
+        let rx = Mutex::new(rx);
+        let mut reply_rxs = Vec::new();
+        for _ in 0..5 {
+            let (j, r) = job();
+            tx.send(j).unwrap();
+            reply_rxs.push(r);
+        }
+        let policy = BatchPolicy { window: Duration::ZERO, max_batch: 3 };
+        match drain_batch(&rx, &policy, Duration::from_millis(100)) {
+            DrainOutcome::Batch(b) => assert_eq!(b.len(), 3),
+            other => panic!("unexpected {other:?}"),
+        }
+        match drain_batch(&rx, &policy, Duration::from_millis(100)) {
+            DrainOutcome::Batch(b) => assert_eq!(b.len(), 2, "remainder drained next"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn window_waits_for_stragglers_without_monopolizing_the_lock() {
+        let (tx, rx) = sync_channel::<Job>(16);
+        let rx = std::sync::Arc::new(Mutex::new(rx));
+        let (j, _r0) = infer_job();
+        tx.send(j).unwrap();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            let (j, r) = infer_job();
+            tx.send(j).unwrap();
+            r
+        });
+        // a competing thread must be able to take the lock mid-window
+        let contender = {
+            let rx = std::sync::Arc::clone(&rx);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(5));
+                let locked_at = Instant::now();
+                drop(rx.lock().unwrap());
+                locked_at.elapsed()
+            })
+        };
+        let policy = BatchPolicy { window: Duration::from_millis(500), max_batch: 2 };
+        match drain_batch(&rx, &policy, Duration::from_millis(100)) {
+            DrainOutcome::Batch(b) => {
+                assert_eq!(b.len(), 2, "straggler coalesced within the window")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let lock_wait = contender.join().unwrap();
+        assert!(
+            lock_wait < Duration::from_millis(100),
+            "window wait must not hold the receiver lock: contender waited {lock_wait:?}"
+        );
+        drop(sender.join().unwrap());
+    }
+
+    #[test]
+    fn non_infer_batches_skip_the_window() {
+        // an activation/ping-only batch must not pay the coalescing
+        // window: the device is blocked waiting and nothing can coalesce
+        let (tx, rx) = sync_channel::<Job>(16);
+        let rx = Mutex::new(rx);
+        let (j, _r) = job();
+        tx.send(j).unwrap();
+        let policy = BatchPolicy { window: Duration::from_millis(500), max_batch: 8 };
+        let t0 = Instant::now();
+        match drain_batch(&rx, &policy, Duration::from_millis(100)) {
+            DrainOutcome::Batch(b) => assert_eq!(b.len(), 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(200),
+            "non-infer batch waited out the window: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn timeout_and_disconnect_are_distinguished() {
+        let (tx, rx) = sync_channel::<Job>(4);
+        let rx = Mutex::new(rx);
+        let policy = BatchPolicy::default();
+        assert!(matches!(
+            drain_batch(&rx, &policy, Duration::from_millis(10)),
+            DrainOutcome::TimedOut
+        ));
+        drop(tx);
+        assert!(matches!(
+            drain_batch(&rx, &policy, Duration::from_millis(10)),
+            DrainOutcome::Disconnected
+        ));
+    }
+}

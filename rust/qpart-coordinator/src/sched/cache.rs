@@ -1,0 +1,261 @@
+//! The encoded-reply cache: fully serialized segment replies per
+//! `(model, accuracy level, partition)`.
+//!
+//! A segment reply is the coordinator's most expensive artifact: quantize
+//! + bit-pack every device-side layer, then serialize megabytes of
+//! payload (base64 + JSON, or the binary frame body). All of that is a
+//! pure function of the coalescing key — only the session id and the
+//! request's objective value differ between devices — so the cache stores
+//! one [`EncodedSegmentBody`] per key and replies become a string splice.
+//!
+//! Eviction is LRU under a **byte budget** (encoded replies are large and
+//! few; counting entries would let a handful of big models blow the
+//! memory bound). The most recently inserted entry is never evicted, so a
+//! budget smaller than one reply still serves (with zero reuse across
+//! keys). Hit / miss / bytes-saved / eviction counters are surfaced
+//! through `MetricsHub` into the `stats` document's `segment_cache`
+//! section.
+
+use qpart_core::json::Value;
+use qpart_proto::messages::EncodedSegmentBody;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cache key: (model, accuracy-level index, partition point).
+pub type SegmentKey = (String, usize, usize);
+
+struct Inner {
+    map: HashMap<SegmentKey, Arc<EncodedSegmentBody>>,
+    /// LRU order, front = least recently used. Linear touch is fine: the
+    /// working set is patterns × models (tens), not requests.
+    order: Vec<SegmentKey>,
+    bytes: usize,
+}
+
+/// Shared, thread-safe encoded-reply cache (one per server).
+pub struct EncodedReplyCache {
+    budget_bytes: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Serialized-body bytes served from cache instead of re-encoded,
+    /// measured as the JSON-form body length per hit. For binary-framed
+    /// sessions (which skip the JSON body entirely) this is an upper
+    /// bound — see [`EncodedSegmentBody::encoded_len`].
+    bytes_saved: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl std::fmt::Debug for EncodedReplyCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EncodedReplyCache")
+            .field("budget_bytes", &self.budget_bytes)
+            .field("entries", &self.len())
+            .finish()
+    }
+}
+
+impl EncodedReplyCache {
+    /// A cache bounded to ~`budget_bytes` of resident encoded replies.
+    pub fn new(budget_bytes: usize) -> EncodedReplyCache {
+        EncodedReplyCache {
+            budget_bytes,
+            inner: Mutex::new(Inner { map: HashMap::new(), order: Vec::new(), bytes: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            bytes_saved: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a key, counting the hit/miss and touching LRU recency.
+    pub fn get(&self, key: &SegmentKey) -> Option<Arc<EncodedSegmentBody>> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.map.get(key).cloned() {
+            Some(body) => {
+                if let Some(pos) = inner.order.iter().position(|k| k == key) {
+                    let k = inner.order.remove(pos);
+                    inner.order.push(k);
+                }
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.bytes_saved.fetch_add(body.encoded_len(), Ordering::Relaxed);
+                Some(body)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace — two workers may race to encode the same key)
+    /// and evict least-recently-used entries past the byte budget. The
+    /// entry just inserted is never evicted.
+    pub fn insert(&self, key: SegmentKey, body: Arc<EncodedSegmentBody>) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(old) = inner.map.remove(&key) {
+            inner.bytes = inner.bytes.saturating_sub(old.cost_bytes());
+            if let Some(pos) = inner.order.iter().position(|k| k == &key) {
+                inner.order.remove(pos);
+            }
+        }
+        inner.bytes += body.cost_bytes();
+        inner.map.insert(key.clone(), body);
+        inner.order.push(key);
+        while inner.bytes > self.budget_bytes && inner.order.len() > 1 {
+            let victim = inner.order.remove(0);
+            if let Some(evicted) = inner.map.remove(&victim) {
+                inner.bytes = inner.bytes.saturating_sub(evicted.cost_bytes());
+            }
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_saved(&self) -> u64 {
+        self.bytes_saved.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Resident entries.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes (cost accounting, see `EncodedSegmentBody::cost_bytes`).
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Hit rate over lookups so far (NaN before the first lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits() as f64;
+        let m = self.misses() as f64;
+        h / (h + m)
+    }
+
+    /// The `segment_cache` section of the stats document.
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("entries", self.len().into()),
+            ("bytes", self.bytes().into()),
+            ("budget_bytes", self.budget_bytes.into()),
+            ("hits", self.hits().into()),
+            ("misses", self.misses().into()),
+            ("bytes_saved", self.bytes_saved().into()),
+            ("evictions", self.evictions().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use qpart_proto::messages::{LayerBlob, PatternInfo, SegmentBlob};
+
+    fn body(payload_bytes: usize) -> Arc<EncodedSegmentBody> {
+        let segment = SegmentBlob {
+            layers: vec![LayerBlob {
+                layer: 1,
+                bits: 8,
+                w_dims: vec![1, payload_bytes.max(1)],
+                w_qmin: 0.0,
+                w_step: 0.1,
+                w_packed: vec![0xAB; payload_bytes],
+                b_qmin: 0.0,
+                b_step: 0.1,
+                b_len: 1,
+                b_packed: vec![0xCD],
+            }],
+        };
+        let pattern = PatternInfo {
+            partition: 1,
+            weight_bits: vec![8],
+            activation_bits: 8,
+            accuracy_level: 0.01,
+            predicted_degradation: 0.0,
+            objective: f64::NAN,
+        };
+        Arc::new(EncodedSegmentBody::new("m", pattern, segment))
+    }
+
+    fn key(i: usize) -> SegmentKey {
+        ("m".to_string(), 0, i)
+    }
+
+    #[test]
+    fn hit_miss_and_bytes_saved_counters() {
+        let c = EncodedReplyCache::new(1 << 20);
+        assert!(c.get(&key(1)).is_none());
+        assert_eq!(c.misses(), 1);
+        let b = body(100);
+        c.insert(key(1), Arc::clone(&b));
+        let got = c.get(&key(1)).unwrap();
+        assert!(Arc::ptr_eq(&got, &b), "cache returns the shared body");
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.bytes_saved(), b.encoded_len());
+        assert!(c.hit_rate() > 0.49 && c.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_first() {
+        let one = body(1000).cost_bytes();
+        // room for two entries, not three
+        let c = EncodedReplyCache::new(2 * one + one / 2);
+        c.insert(key(1), body(1000));
+        c.insert(key(2), body(1000));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 0);
+        // touch key 1 so key 2 becomes the LRU victim
+        assert!(c.get(&key(1)).is_some());
+        c.insert(key(3), body(1000));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 1);
+        assert!(c.get(&key(2)).is_none(), "LRU entry evicted");
+        assert!(c.get(&key(1)).is_some(), "recently used entry kept");
+        assert!(c.get(&key(3)).is_some(), "newest entry kept");
+        assert!(c.bytes() <= c.budget_bytes());
+    }
+
+    #[test]
+    fn tiny_budget_keeps_only_the_newest() {
+        // budget smaller than a single reply: the newest entry must still
+        // be resident (serving always works), everything else evicts
+        let c = EncodedReplyCache::new(1);
+        for i in 0..5 {
+            c.insert(key(i), body(500));
+        }
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.evictions(), 4);
+        assert!(c.get(&key(4)).is_some());
+    }
+
+    #[test]
+    fn replacing_a_key_does_not_leak_bytes() {
+        let c = EncodedReplyCache::new(1 << 20);
+        c.insert(key(1), body(1000));
+        let after_first = c.bytes();
+        c.insert(key(1), body(1000));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), after_first, "replacement is not additive");
+    }
+}

@@ -1,0 +1,33 @@
+//! The serving dataplane: batch-aware scheduling between the accept loop
+//! and the executor pool.
+//!
+//! QPART's reply to an `infer` request is a pure function of
+//! `(model, accuracy level, partition)` — everything per-request
+//! (channel, clocks, budget) is consumed by the Algorithm 2 *decision*,
+//! after which identical decisions produce identical multi-megabyte
+//! segment payloads. Under fleet load the same few patterns dominate, so
+//! re-quantizing and re-serializing per connection is almost pure waste.
+//! This module removes that waste in two layers:
+//!
+//! * [`batch`] — workers drain the shared queue into **batches**
+//!   ([`drain_batch`]), the service groups the batch's infer requests by
+//!   coalescing key, and one plan/encode fans out to every waiting
+//!   connection as a shared [`WireReply`]. An optional coalescing window
+//!   (`--batch-window`) holds the first request briefly so concurrent
+//!   same-key requests land in one group; `queue_wait` metrics expose the
+//!   latency this buys throughput with.
+//! * [`cache`] — the [`EncodedReplyCache`] keeps fully serialized reply
+//!   bodies (`qpart_proto::messages::EncodedSegmentBody`) across batches,
+//!   LRU-evicted under a byte budget (`--cache-bytes`), so steady-state
+//!   serving re-encodes only on pattern churn.
+//!
+//! Connection threads stamp the shared body with the per-request session
+//! id and objective in whichever framing the session negotiated (JSON
+//! lines or binary frames) — the payload bytes are encoded exactly once
+//! per key, regardless of fan-out or framing.
+
+pub mod batch;
+pub mod cache;
+
+pub use batch::{drain_batch, BatchPolicy, DrainOutcome, Job, SegmentReply, WireReply};
+pub use cache::{EncodedReplyCache, SegmentKey};

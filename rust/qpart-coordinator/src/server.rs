@@ -1,15 +1,22 @@
-//! TCP front-end: JSON-lines over TCP, bounded job queue, and a
-//! configurable **executor pool** of inference workers.
+//! TCP front-end: JSON-lines (+ negotiated binary frames) over TCP, a
+//! bounded job queue, and a configurable **executor pool** of inference
+//! workers fed by the batch-aware serving dataplane ([`crate::sched`]).
 //!
 //! Topology: N connection threads (one per accepted socket) parse frames
-//! and submit `(Request, reply_tx)` jobs into a **bounded** channel — the
-//! admission-control point: when the queue is full the request is shed
-//! immediately with an `overloaded` error instead of growing latency
-//! unboundedly. `workers` inference threads each own a full [`Service`]
-//! (bundle + Algorithm 1 tables + PJRT executor — PJRT clients are
-//! single-device and not `Send`, so per-worker ownership is the honest
-//! parallelism model) and pull jobs from the shared queue. Sessions live
-//! in one sharded [`SharedSessionTable`] so the two protocol phases may be
+//! and submit [`Job`]s into a **bounded** channel — the admission-control
+//! point: when the queue is full the request is shed immediately with an
+//! `overloaded` error instead of growing latency unboundedly. `workers`
+//! inference threads each own a full [`Service`] (Algorithm 1 tables +
+//! PJRT executor — PJRT clients are single-device and not `Send`, so
+//! per-worker ownership is the honest parallelism model) and **drain the
+//! queue in batches** ([`crate::sched::drain_batch`]): same-(model,
+//! accuracy level, partition) `infer` requests in a batch are planned and
+//! encoded once, and the shared [`qpart_proto::EncodedSegmentBody`] fans
+//! out to every waiting connection. One `Arc<Bundle>` backs the whole
+//! pool (a single resident copy of the weights), one
+//! [`EncodedReplyCache`] keeps encoded replies across batches, and a GC
+//! thread expires sessions whose device never uploaded. Sessions live in
+//! one sharded [`SharedSessionTable`] so the two protocol phases may be
 //! handled by different workers; per-worker metrics are aggregated by a
 //! [`MetricsHub`] into one logical [`MetricsSnapshot`].
 //!
@@ -17,18 +24,19 @@
 //! (qpart-sim), so modeled and live serving share one parallelism model.
 
 use crate::metrics::{Metrics, MetricsHub, MetricsSnapshot};
+use crate::sched::{drain_batch, BatchPolicy, DrainOutcome, EncodedReplyCache, Job, WireReply};
 use crate::service::Service;
 use crate::session::SharedSessionTable;
-use qpart_proto::frame::{read_frame, write_frame, FrameError};
-use qpart_proto::messages::{ErrorReply, Request, Response};
+use qpart_proto::frame::{read_frame, write_binary_frame, write_frame, FrameError};
+use qpart_proto::messages::{ErrorReply, HelloReply, Request, Response};
 use qpart_runtime::Bundle;
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
-use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// Server configuration.
 ///
@@ -50,7 +58,21 @@ use std::thread::JoinHandle;
 ///   the two-phase protocol. Oldest sessions are evicted first when a
 ///   shard fills (devices that never upload their activation must not
 ///   leak memory).
-/// * `artifacts_dir` — artifact bundle directory (`make artifacts`).
+/// * `session_ttl` — age bound on open sessions: a GC thread sweeps
+///   sessions older than this (counted in `sessions_expired`). Zero
+///   disables the sweep (capacity eviction still applies).
+/// * `batch_window` — the coalescing window: after a worker dequeues its
+///   first job it waits up to this long for more, so concurrent
+///   same-pattern requests share one encode. Zero (the default) still
+///   coalesces whatever is already queued, adding no latency.
+/// * `batch_max` — cap on jobs per drained batch.
+/// * `cache_bytes` — byte budget of the encoded-reply cache (LRU beyond
+///   it). The most recent entry always stays resident.
+/// * `binary_frames` — allow connections to negotiate length-prefixed
+///   binary segment frames via `hello` (JSON-lines stays the default and
+///   the fallback for peers that never negotiate).
+/// * `artifacts_dir` — artifact bundle directory (`make artifacts`);
+///   loaded **once** and shared across the pool via `Arc`.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Listen address, e.g. `127.0.0.1:7878` (port 0 = ephemeral).
@@ -62,6 +84,16 @@ pub struct ServerConfig {
     pub queue_capacity: usize,
     /// Session-table capacity (total across shards).
     pub session_capacity: usize,
+    /// Session age bound for the GC sweep (zero = no TTL sweep).
+    pub session_ttl: Duration,
+    /// Coalescing window per drained batch (zero = opportunistic only).
+    pub batch_window: Duration,
+    /// Max jobs per drained batch (values < 1 behave as 1).
+    pub batch_max: usize,
+    /// Encoded-reply cache byte budget.
+    pub cache_bytes: usize,
+    /// Allow binary-frame negotiation.
+    pub binary_frames: bool,
     /// Artifact bundle directory.
     pub artifacts_dir: String,
 }
@@ -75,12 +107,15 @@ impl Default for ServerConfig {
             // mirrors the config system's serving.queue_capacity default
             queue_capacity: 1024,
             session_capacity: 4096,
+            session_ttl: Duration::from_secs(600),
+            batch_window: Duration::ZERO,
+            batch_max: 32,
+            cache_bytes: 64 << 20,
+            binary_frames: true,
             artifacts_dir: "artifacts".into(),
         }
     }
 }
-
-type Job = (Request, SyncSender<Response>);
 
 /// Handle to a running server (for tests/examples).
 pub struct ServerHandle {
@@ -89,8 +124,11 @@ pub struct ServerHandle {
     pub hub: Arc<MetricsHub>,
     /// The shared session table (observability in tests/examples).
     pub sessions: Arc<SharedSessionTable>,
+    /// The shared encoded-reply cache (observability in tests/examples).
+    pub cache: Arc<EncodedReplyCache>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    gc_thread: Option<JoinHandle<()>>,
     worker_threads: Vec<JoinHandle<()>>,
 }
 
@@ -101,6 +139,9 @@ impl ServerHandle {
         // poke the acceptor so it re-checks the stop flag
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.gc_thread.take() {
             let _ = t.join();
         }
         for t in self.worker_threads.drain(..) {
@@ -119,44 +160,51 @@ impl ServerHandle {
     }
 }
 
-/// Start the server; returns once the listener is bound and **every**
-/// worker's service (bundle + Algorithm 1 tables + PJRT) is initialized.
+/// Start the server; returns once the listener is bound, the bundle is
+/// loaded (once, shared), and **every** worker's service (Algorithm 1
+/// tables + PJRT) is initialized.
 pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
     let listener = TcpListener::bind(&cfg.listen).map_err(|e| format!("bind {}: {e}", cfg.listen))?;
     let addr = listener.local_addr().map_err(|e| e.to_string())?;
     let workers = cfg.workers.max(1);
     let hub = Arc::new(MetricsHub::new());
     let sessions = Arc::new(SharedSessionTable::new(cfg.session_capacity, workers));
+    let cache = Arc::new(EncodedReplyCache::new(cfg.cache_bytes));
     let stop = Arc::new(AtomicBool::new(false));
 
-    let (job_tx, job_rx): (SyncSender<Job>, Receiver<Job>) = sync_channel(cfg.queue_capacity);
-    // Work-stealing hand-off: workers take turns locking the receiver;
-    // whoever holds the lock waits for the next job, releases, handles it
-    // while the next worker waits. Handling happens outside the lock, so
-    // up to `workers` jobs are in flight concurrently.
-    let job_rx = Arc::new(Mutex::new(job_rx));
+    // one resident bundle for the whole pool (weights are immutable)
+    let bundle =
+        Arc::new(Bundle::load(&cfg.artifacts_dir).map_err(|e| format!("bundle: {e}"))?);
 
-    // Inference workers: each owns a (non-Send) service. Bundle +
-    // Algorithm 1 initialization happens inside; readiness is reported
-    // via a channel so `serve` fails fast if any worker cannot start.
+    let (job_tx, job_rx): (SyncSender<Job>, Receiver<Job>) = sync_channel(cfg.queue_capacity);
+    // Work-stealing hand-off: workers take turns locking the receiver to
+    // drain the next *batch* (everything queued, plus up to
+    // `batch_window` of stragglers in short interleavable lock slices —
+    // see `drain_batch`). Handling happens outside the lock, so up to
+    // `workers` batches are in flight concurrently.
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let policy = BatchPolicy { window: cfg.batch_window, max_batch: cfg.batch_max };
+
+    // Inference workers: each owns a (non-Send) service over the shared
+    // bundle. Algorithm 1 initialization happens inside; readiness is
+    // reported via a channel so `serve` fails fast if any worker cannot
+    // start.
     let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(workers);
     let mut worker_threads = Vec::with_capacity(workers);
     for w in 0..workers {
         let worker_hub = Arc::clone(&hub);
         let worker_sessions = Arc::clone(&sessions);
+        let worker_cache = Arc::clone(&cache);
+        let worker_bundle = Arc::clone(&bundle);
         let worker_stop = Arc::clone(&stop);
         let worker_rx = Arc::clone(&job_rx);
         let ready_tx = ready_tx.clone();
-        let artifacts_dir = cfg.artifacts_dir.clone();
         let t = std::thread::Builder::new()
             .name(format!("qpart-worker-{w}"))
             .spawn(move || {
-                let service = Bundle::load(&artifacts_dir)
-                    .map_err(|e| e.to_string())
-                    .and_then(|b| {
-                        Service::new(Rc::new(b), worker_hub, worker_sessions)
-                            .map_err(|e| e.to_string())
-                    });
+                let service =
+                    Service::new(worker_bundle, worker_hub, worker_sessions, worker_cache)
+                        .map_err(|e| e.to_string());
                 let mut service = match service {
                     Ok(s) => {
                         let _ = ready_tx.send(Ok(()));
@@ -173,18 +221,12 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
                 // that hold their clones for the whole job loop.
                 drop(ready_tx);
                 while !worker_stop.load(Ordering::SeqCst) {
-                    // hold the receiver lock only while waiting for a job
-                    let next = {
-                        let rx = worker_rx.lock().unwrap();
-                        rx.recv_timeout(std::time::Duration::from_millis(100))
-                    };
-                    match next {
-                        Ok((req, reply_tx)) => {
-                            let resp = service.handle(req);
-                            let _ = reply_tx.send(resp);
-                        }
-                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
-                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                    // drain_batch locks the receiver only per dequeue, so
+                    // a long coalescing window never serializes the pool
+                    match drain_batch(&worker_rx, &policy, Duration::from_millis(100)) {
+                        DrainOutcome::Batch(batch) => service.handle_batch(batch),
+                        DrainOutcome::TimedOut => continue,
+                        DrainOutcome::Disconnected => break,
                     }
                 }
             })
@@ -201,9 +243,39 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         }
     }
 
+    // Session GC: expire sessions whose device never uploaded.
+    let gc_thread = if cfg.session_ttl > Duration::ZERO {
+        let gc_sessions = Arc::clone(&sessions);
+        let gc_stop = Arc::clone(&stop);
+        let ttl = cfg.session_ttl;
+        let interval = (ttl / 4).clamp(Duration::from_millis(10), Duration::from_secs(1));
+        Some(
+            std::thread::Builder::new()
+                .name("qpart-session-gc".into())
+                .spawn(move || {
+                    // sleep in short ticks so shutdown joins promptly even
+                    // with a long sweep interval
+                    let tick = Duration::from_millis(10).min(interval);
+                    let mut slept = Duration::ZERO;
+                    while !gc_stop.load(Ordering::SeqCst) {
+                        std::thread::sleep(tick);
+                        slept += tick;
+                        if slept >= interval {
+                            slept = Duration::ZERO;
+                            gc_sessions.sweep_expired(ttl);
+                        }
+                    }
+                })
+                .map_err(|e| e.to_string())?,
+        )
+    } else {
+        None
+    };
+
     // Acceptor thread: one connection thread per client.
     let accept_stop = Arc::clone(&stop);
     let accept_metrics = hub.front();
+    let binary_allowed = cfg.binary_frames;
     let accept_thread = std::thread::Builder::new()
         .name("qpart-accept".into())
         .spawn(move || {
@@ -221,9 +293,9 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
                 let job_tx = job_tx.clone();
                 let metrics = Arc::clone(&accept_metrics);
                 let conn_stop = Arc::clone(&accept_stop);
-                let _ = std::thread::Builder::new()
-                    .name("qpart-conn".into())
-                    .spawn(move || connection_loop(stream, job_tx, metrics, conn_stop));
+                let _ = std::thread::Builder::new().name("qpart-conn".into()).spawn(move || {
+                    connection_loop(stream, job_tx, metrics, conn_stop, binary_allowed)
+                });
             }
         })
         .map_err(|e| e.to_string())?;
@@ -232,10 +304,36 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         addr,
         hub,
         sessions,
+        cache,
         stop,
         accept_thread: Some(accept_thread),
+        gc_thread,
         worker_threads,
     })
+}
+
+/// Serialize one reply in the connection's negotiated framing. Segment
+/// replies are a splice of the shared encoded body — the payload was
+/// serialized once for the whole batch group / cache lifetime.
+fn write_reply(
+    writer: &mut TcpStream,
+    reply: WireReply,
+    binary: bool,
+) -> Result<(), FrameError> {
+    match reply {
+        WireReply::Msg(resp) => write_frame(writer, &resp.to_line()),
+        WireReply::Segment(s) => {
+            if binary {
+                write_binary_frame(
+                    writer,
+                    &s.body.binary_header(s.session, s.objective),
+                    s.body.blob(),
+                )
+            } else {
+                write_frame(writer, &s.body.json_line(s.session, s.objective))
+            }
+        }
+    }
 }
 
 fn connection_loop(
@@ -243,12 +341,15 @@ fn connection_loop(
     job_tx: SyncSender<Job>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
+    binary_allowed: bool,
 ) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
     let mut reader = BufReader::new(stream);
+    // negotiated per session via `hello`; requests stay JSON either way
+    let mut binary = false;
     loop {
         if stop.load(Ordering::SeqCst) {
             break;
@@ -280,28 +381,40 @@ fn connection_loop(
                 continue;
             }
         };
-        let (reply_tx, reply_rx) = sync_channel::<Response>(1);
-        let resp = match job_tx.try_send((req, reply_tx)) {
+        // framing negotiation is connection state — answered here, never
+        // queued (the hello reply itself is always a JSON frame); counted
+        // in the front-end's metrics so protocol traffic still adds up
+        if let Request::Hello(h) = &req {
+            Metrics::inc(&metrics.requests_total);
+            binary = h.binary_frames && binary_allowed;
+            let resp = Response::Hello(HelloReply { binary_frames: binary });
+            if write_frame(&mut writer, &resp.to_line()).is_err() {
+                break;
+            }
+            continue;
+        }
+        let (reply_tx, reply_rx) = sync_channel::<WireReply>(1);
+        let reply = match job_tx.try_send(Job::new(req, reply_tx)) {
             Ok(()) => match reply_rx.recv() {
                 Ok(r) => r,
-                Err(_) => Response::Error(ErrorReply {
+                Err(_) => WireReply::Msg(Response::Error(ErrorReply {
                     code: "internal".into(),
                     message: "inference worker gone".into(),
-                }),
+                })),
             },
             Err(TrySendError::Full(_)) => {
                 Metrics::inc(&metrics.shed_total);
-                Response::Error(ErrorReply {
+                WireReply::Msg(Response::Error(ErrorReply {
                     code: "overloaded".into(),
                     message: "admission control: job queue full".into(),
-                })
+                }))
             }
-            Err(TrySendError::Disconnected(_)) => Response::Error(ErrorReply {
+            Err(TrySendError::Disconnected(_)) => WireReply::Msg(Response::Error(ErrorReply {
                 code: "shutdown".into(),
                 message: "server stopping".into(),
-            }),
+            })),
         };
-        if write_frame(&mut writer, &resp.to_line()).is_err() {
+        if write_reply(&mut writer, reply, binary).is_err() {
             break;
         }
     }

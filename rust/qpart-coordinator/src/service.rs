@@ -1,36 +1,44 @@
 //! The coordinator's request brain.
 //!
-//! At startup: load the bundle, run paper **Algorithm 1** per model (the
-//! calibration tables are already in the artifacts, so this is just the
-//! closed-form solves — microseconds per pattern) and cache the pattern
-//! sets. Per request: run **Algorithm 2** under the request's live
-//! channel/compute parameters, quantize + bit-pack the chosen segment,
-//! open a session, and execute the server-side segment when the boundary
-//! activation comes back.
+//! At startup: take the shared bundle (one `Arc<Bundle>` across the whole
+//! pool), run paper **Algorithm 1** per model (the calibration tables are
+//! already in the artifacts, so this is just the closed-form solves —
+//! microseconds per pattern) and cache the pattern sets. Per request: run
+//! **Algorithm 2** under the request's live channel/compute parameters,
+//! fetch or build the encoded segment reply for the decided
+//! `(model, accuracy level, partition)` key, open a session, and execute
+//! the server-side segment when the boundary activation comes back.
+//!
+//! The batch path ([`Service::handle_batch`]) is what pool workers drive:
+//! a drained batch's `infer` requests are planned individually (decisions
+//! depend on per-request channel/compute state) and then **grouped by
+//! coalescing key** — one encode per group fans out to every waiting
+//! connection via a shared [`EncodedSegmentBody`].
 
 use crate::metrics::{Metrics, MetricsHub};
+use crate::sched::{EncodedReplyCache, Job, SegmentKey, SegmentReply, WireReply};
 use crate::session::SharedSessionTable;
 use qpart_core::channel::Channel;
 use qpart_core::cost::{CostModel, DeviceProfile, ServerProfile, TradeoffWeights};
 use qpart_core::model::{LayerKind, ModelSpec};
 use qpart_core::optimizer::{
-    offline_quantize, serve_request, OfflineConfig, RequestParams,
+    offline_quantize, serve_request, Decision, OfflineConfig, RequestParams,
 };
-use qpart_core::quant::{pack_bits, unpack_bits, PatternSet, QuantParams, Quantized};
+use qpart_core::quant::{pack_bits, unpack_bits, PatternSet, QuantParams, QuantPattern, Quantized};
 use qpart_proto::messages::{
-    ActivationUpload, ErrorReply, InferReply, InferRequest, LayerBlob, ModelInfo, PatternInfo,
-    Request, Response, ResultReply, SegmentBlob, SimulateRequest,
+    ActivationUpload, EncodedSegmentBody, ErrorReply, HelloReply, InferRequest, LayerBlob,
+    ModelInfo, PatternInfo, Request, Response, ResultReply, SegmentBlob, SimulateRequest,
 };
 use qpart_runtime::{Bundle, Executor, HostTensor};
-use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
 use std::time::Instant;
 
 /// One executor-pool worker's service (owns the non-`Send` PJRT executor;
-/// shares the session table and — via the hub — the metrics view).
+/// shares the bundle, the session table, the encoded-reply cache, and —
+/// via the hub — the metrics view).
 pub struct Service {
-    pub bundle: Rc<Bundle>,
+    pub bundle: Arc<Bundle>,
     executor: Executor,
     /// Offline pattern tables per model instance (Algorithm 1 output).
     patterns: Vec<(String, PatternSet)>,
@@ -44,21 +52,25 @@ pub struct Service {
     hub: Arc<MetricsHub>,
     server_profile: ServerProfile,
     default_weights: TradeoffWeights,
-    /// Packed segments per (model, level_idx, partition) — quantize+pack
-    /// happens once per pattern, not per request (§Perf iteration 3).
-    packed_cache: HashMap<(String, usize, usize), Rc<Vec<LayerBlob>>>,
+    /// Server-wide encoded replies per (model, level_idx, partition) —
+    /// quantize + pack + serialize happens once per key across the whole
+    /// pool, not per request or per worker.
+    reply_cache: Arc<EncodedReplyCache>,
 }
 
 impl Service {
-    /// Load the bundle and run Algorithm 1 for every model. Registers this
-    /// worker's [`Metrics`] in `hub` (one `Service` = one pool worker).
+    /// Build the worker's service over the shared bundle and run
+    /// Algorithm 1 for every model. Registers this worker's [`Metrics`]
+    /// (and, idempotently, the shared reply cache) in `hub`.
     pub fn new(
-        bundle: Rc<Bundle>,
+        bundle: Arc<Bundle>,
         hub: Arc<MetricsHub>,
         sessions: Arc<SharedSessionTable>,
+        reply_cache: Arc<EncodedReplyCache>,
     ) -> qpart_runtime::Result<Service> {
         let metrics = hub.register_worker();
-        let executor = Executor::new(Rc::clone(&bundle))?;
+        hub.register_segment_cache(Arc::clone(&reply_cache));
+        let executor = Executor::new(Arc::clone(&bundle))?;
         let mut patterns = Vec::new();
         for m in &bundle.models {
             let arch = bundle.arch(&m.arch)?;
@@ -76,7 +88,7 @@ impl Service {
             hub,
             server_profile: ServerProfile::paper_default(),
             default_weights: TradeoffWeights::paper_default(),
-            packed_cache: HashMap::new(),
+            reply_cache,
         })
     }
 
@@ -97,6 +109,9 @@ impl Service {
             Request::Ping => Response::Pong,
             Request::ListModels => self.list_models(),
             Request::Stats => Response::Stats(self.stats_json()),
+            // framing is a connection-level concern; a hello that reaches
+            // the pool (direct in-process callers) grants nothing
+            Request::Hello(_) => Response::Hello(HelloReply { binary_frames: false }),
             Request::Infer(r) => self.handle_infer(&r),
             Request::Activation(a) => self.handle_activation(&a),
             Request::Simulate(s) => self.handle_simulate(&s),
@@ -108,13 +123,127 @@ impl Service {
         resp
     }
 
+    /// Handle one drained batch: non-`infer` requests are answered
+    /// individually; `infer` requests are planned, grouped by
+    /// `(model, accuracy level, partition)`, and each group is encoded
+    /// once and fanned out to every waiting connection.
+    pub fn handle_batch(&mut self, jobs: Vec<Job>) {
+        if jobs.is_empty() {
+            return;
+        }
+        Metrics::inc(&self.metrics.batches_total);
+        let dequeued = Instant::now();
+        let mut infers: Vec<(InferRequest, SyncSender<WireReply>)> = Vec::new();
+        for job in jobs {
+            let wait = dequeued.saturating_duration_since(job.enqueued);
+            self.metrics.queue_wait.observe_us(wait.as_micros() as u64);
+            match job.req {
+                Request::Infer(r) => infers.push((r, job.reply_tx)),
+                req => {
+                    let resp = self.handle(req);
+                    let _ = job.reply_tx.send(WireReply::Msg(resp));
+                }
+            }
+        }
+        self.handle_infer_batch(infers);
+    }
+
+    /// Plan + group + encode-once + fan out (the coalescing core).
+    fn handle_infer_batch(&mut self, jobs: Vec<(InferRequest, SyncSender<WireReply>)>) {
+        // one waiting connection within a group
+        struct Pending {
+            tx: SyncSender<WireReply>,
+            objective: f64,
+        }
+        // all same-key requests of this batch: one encode, many replies
+        struct Group {
+            key: SegmentKey,
+            pattern: QuantPattern,
+            arch: ModelSpec,
+            pendings: Vec<Pending>,
+        }
+        // plan every request; identical decisions coalesce into one group
+        let mut groups: Vec<Group> = Vec::new();
+        for (r, tx) in jobs {
+            Metrics::inc(&self.metrics.requests_total);
+            let t_req = Instant::now();
+            match self.plan_infer(&r) {
+                Ok((arch, decision)) => {
+                    let key: SegmentKey =
+                        (r.model.clone(), decision.level_idx, decision.pattern.partition);
+                    let pending = Pending { tx, objective: decision.cost.objective };
+                    match groups.iter().position(|g| g.key == key) {
+                        Some(i) => groups[i].pendings.push(pending),
+                        None => groups.push(Group {
+                            key,
+                            pattern: decision.pattern,
+                            arch,
+                            pendings: vec![pending],
+                        }),
+                    }
+                }
+                Err(resp) => {
+                    Metrics::inc(&self.metrics.errors_total);
+                    self.metrics
+                        .handle_latency
+                        .observe_us(t_req.elapsed().as_micros() as u64);
+                    let _ = tx.send(WireReply::Msg(resp));
+                }
+            }
+        }
+        for g in groups {
+            // per-group clock: a request's recorded handle time covers its
+            // own group's encode + fan-out, not other groups in the batch
+            let t_group = Instant::now();
+            if g.pendings.len() > 1 {
+                Metrics::add(&self.metrics.coalesced_total, (g.pendings.len() - 1) as u64);
+            }
+            match self.encoded_for(&g.key, &g.pattern) {
+                Ok(body) => {
+                    // one handling-time measurement per group (the encode
+                    // dominates): recording elapsed per pending would make
+                    // a request's latency reflect its fan-out position
+                    let group_us = t_group.elapsed().as_micros() as u64;
+                    let boundary = boundary_dims(&g.arch, g.pattern.partition, 1);
+                    for p in g.pendings {
+                        let session =
+                            self.sessions.open(&g.key.0, g.pattern.clone(), boundary.clone());
+                        Metrics::inc(&self.metrics.sessions_opened);
+                        Metrics::add(&self.metrics.bytes_out, body.wire_bytes());
+                        let _ = p.tx.send(WireReply::Segment(SegmentReply {
+                            session,
+                            objective: p.objective,
+                            body: Arc::clone(&body),
+                        }));
+                        self.metrics.handle_latency.observe_us(group_us);
+                    }
+                }
+                Err(resp) => {
+                    let group_us = t_group.elapsed().as_micros() as u64;
+                    for p in g.pendings {
+                        Metrics::inc(&self.metrics.errors_total);
+                        self.metrics.handle_latency.observe_us(group_us);
+                        let _ = p.tx.send(WireReply::Msg(resp.clone()));
+                    }
+                }
+            }
+        }
+    }
+
     fn stats_json(&self) -> qpart_core::json::Value {
         let mut v = self.hub.to_json();
         v.set("open_sessions", self.sessions.len().into());
         v.set("session_shards", self.sessions.num_shards().into());
-        // capacity-pressure evictions live in the shared table, not in any
-        // single worker's counters — report the table's own count
-        v.set("sessions_expired", self.sessions.evicted().into());
+        v.set(
+            "session_shard_occupancy",
+            qpart_core::json::Value::Arr(
+                self.sessions.shard_occupancy().into_iter().map(|n| n.into()).collect(),
+            ),
+        );
+        // age (TTL) and capacity pressure are separate failure modes —
+        // both live in the shared table, not in any worker's counters
+        v.set("sessions_expired", self.sessions.expired().into());
+        v.set("sessions_evicted", self.sessions.evicted().into());
         v.set("models", self.patterns.len().into());
         v
     }
@@ -160,15 +289,17 @@ impl Service {
         }
     }
 
-    /// Phase 1: decide, quantize, pack, open a session.
-    fn handle_infer(&mut self, r: &InferRequest) -> Response {
+    /// Algorithm 2 under the request's live parameters. On success, the
+    /// decided pattern determines the coalescing key; only the objective
+    /// value remains per-request.
+    fn plan_infer(&self, r: &InferRequest) -> Result<(ModelSpec, Decision), Response> {
         let arch = match self.arch_for_model(&r.model) {
             Ok(a) => a.clone(),
-            Err(e) => return Self::err("unknown_model", e),
+            Err(e) => return Err(Self::err("unknown_model", e)),
         };
         let set = match self.pattern_set(&r.model) {
             Some(s) => s,
-            None => return Self::err("unknown_model", &r.model),
+            None => return Err(Self::err("unknown_model", &r.model)),
         };
         let t_dec = Instant::now();
         let params = RequestParams {
@@ -177,71 +308,85 @@ impl Service {
         };
         let decision = match serve_request(&arch, set, &params) {
             Ok(d) => d,
-            Err(e) => return Self::err("infeasible", e),
+            Err(e) => return Err(Self::err("infeasible", e)),
         };
         self.metrics.decide_latency.observe_us(t_dec.elapsed().as_micros() as u64);
+        Ok((arch, decision))
+    }
 
+    /// Fetch the encoded reply body for `key`, or quantize + pack +
+    /// serialize it once and publish it to the shared cache.
+    fn encoded_for(
+        &mut self,
+        key: &SegmentKey,
+        pattern: &QuantPattern,
+    ) -> Result<Arc<EncodedSegmentBody>, Response> {
+        if let Some(body) = self.reply_cache.get(key) {
+            return Ok(body);
+        }
         let t_q = Instant::now();
-        let cache_key = (r.model.clone(), decision.level_idx, decision.pattern.partition);
-        let layers = match self.packed_cache.get(&cache_key) {
-            Some(l) => Rc::clone(l),
-            None => {
-                let seg = match self.executor.quantize_segment(&r.model, &decision.pattern) {
-                    Ok(s) => s,
-                    Err(e) => return Self::err("internal", e),
-                };
-                let mut layers = Vec::with_capacity(seg.layers.len());
-                for ql in &seg.layers {
-                    let w_packed = match pack_bits(&ql.weights.codes, ql.weights.params.bits) {
-                        Ok(p) => p,
-                        Err(e) => return Self::err("internal", e),
-                    };
-                    let b_packed = match pack_bits(&ql.bias.codes, ql.bias.params.bits) {
-                        Ok(p) => p,
-                        Err(e) => return Self::err("internal", e),
-                    };
-                    layers.push(LayerBlob {
-                        layer: ql.layer,
-                        bits: ql.weights.params.bits,
-                        w_dims: ql.w_dims.clone(),
-                        w_qmin: ql.weights.params.min,
-                        w_step: ql.weights.params.step(),
-                        w_packed,
-                        b_qmin: ql.bias.params.min,
-                        b_step: ql.bias.params.step(),
-                        b_len: ql.bias.codes.len(),
-                        b_packed,
-                    });
-                }
-                let layers = Rc::new(layers);
-                self.packed_cache.insert(cache_key, Rc::clone(&layers));
-                layers
-            }
+        let seg = match self.executor.quantize_segment(&key.0, pattern) {
+            Ok(s) => s,
+            Err(e) => return Err(Self::err("internal", e)),
         };
-        let wire: u64 = layers
-            .iter()
-            .map(|l| (l.w_packed.len() + l.b_packed.len()) as u64)
-            .sum();
-        Metrics::add(&self.metrics.bytes_out, wire);
+        let mut layers = Vec::with_capacity(seg.layers.len());
+        for ql in &seg.layers {
+            let w_packed = match pack_bits(&ql.weights.codes, ql.weights.params.bits) {
+                Ok(p) => p,
+                Err(e) => return Err(Self::err("internal", e)),
+            };
+            let b_packed = match pack_bits(&ql.bias.codes, ql.bias.params.bits) {
+                Ok(p) => p,
+                Err(e) => return Err(Self::err("internal", e)),
+            };
+            layers.push(LayerBlob {
+                layer: ql.layer,
+                bits: ql.weights.params.bits,
+                w_dims: ql.w_dims.clone(),
+                w_qmin: ql.weights.params.min,
+                w_step: ql.weights.params.step(),
+                w_packed,
+                b_qmin: ql.bias.params.min,
+                b_step: ql.bias.params.step(),
+                b_len: ql.bias.codes.len(),
+                b_packed,
+            });
+        }
+        let pattern_info = PatternInfo {
+            partition: pattern.partition,
+            weight_bits: pattern.weight_bits.clone(),
+            activation_bits: pattern.activation_bits,
+            accuracy_level: pattern.accuracy_level,
+            predicted_degradation: pattern.predicted_degradation,
+            // stamped per request at send time
+            objective: f64::NAN,
+        };
+        let body =
+            Arc::new(EncodedSegmentBody::new(&key.0, pattern_info, SegmentBlob { layers }));
+        self.reply_cache.insert(key.clone(), Arc::clone(&body));
+        Metrics::inc(&self.metrics.encodes_total);
         self.metrics.quantize_latency.observe_us(t_q.elapsed().as_micros() as u64);
+        Ok(body)
+    }
 
-        let boundary_dims = boundary_dims(&arch, decision.pattern.partition, 1);
-        let session =
-            self.sessions.open(&r.model, decision.pattern.clone(), boundary_dims);
+    /// Phase 1, single-request path (in-process callers; pool workers go
+    /// through [`Service::handle_batch`]): decide, fetch/encode, open a
+    /// session.
+    fn handle_infer(&mut self, r: &InferRequest) -> Response {
+        let (arch, decision) = match self.plan_infer(r) {
+            Ok(x) => x,
+            Err(resp) => return resp,
+        };
+        let key: SegmentKey = (r.model.clone(), decision.level_idx, decision.pattern.partition);
+        let body = match self.encoded_for(&key, &decision.pattern) {
+            Ok(b) => b,
+            Err(resp) => return resp,
+        };
+        let boundary = boundary_dims(&arch, decision.pattern.partition, 1);
+        let session = self.sessions.open(&r.model, decision.pattern.clone(), boundary);
         Metrics::inc(&self.metrics.sessions_opened);
-        Response::Segment(InferReply {
-            session,
-            model: r.model.clone(),
-            pattern: PatternInfo {
-                partition: decision.pattern.partition,
-                weight_bits: decision.pattern.weight_bits.clone(),
-                activation_bits: decision.pattern.activation_bits,
-                accuracy_level: decision.pattern.accuracy_level,
-                predicted_degradation: decision.pattern.predicted_degradation,
-                objective: decision.cost.objective,
-            },
-            segment: SegmentBlob { layers: layers.as_ref().clone() },
-        })
+        Metrics::add(&self.metrics.bytes_out, body.wire_bytes());
+        Response::Segment(body.to_reply(session, decision.cost.objective))
     }
 
     /// Phase 2: reconstruct the uploaded activation, finish on the server.

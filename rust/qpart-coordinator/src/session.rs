@@ -2,8 +2,11 @@
 //!
 //! Phase 1 (`infer`) opens a session remembering the chosen pattern and
 //! the boundary-activation shape; phase 2 (`activation`) consumes it.
-//! Tables are capacity-bounded: oldest sessions are evicted first
-//! (devices that never came back must not leak memory).
+//! Tables are bounded two ways: **capacity** (oldest evicted first when a
+//! shard fills) and **age** (a TTL sweep expires sessions whose device
+//! never uploaded — see [`SharedSessionTable::sweep_expired`], driven by
+//! the server's GC thread). Either way, devices that never came back
+//! must not leak memory.
 //!
 //! Two layers:
 //! * [`SessionTable`] — the single-threaded building block (one FIFO).
@@ -16,7 +19,7 @@
 use qpart_core::quant::QuantPattern;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One open session.
 #[derive(Debug, Clone)]
@@ -36,14 +39,16 @@ pub struct SessionTable {
     next_id: u64,
     /// Insertion-ordered (oldest first) — eviction pops the front.
     sessions: Vec<Session>,
-    /// How many sessions were evicted before being consumed.
+    /// How many sessions were evicted under capacity pressure.
     pub evicted: u64,
+    /// How many sessions were expired by the TTL sweep.
+    pub expired: u64,
 }
 
 impl SessionTable {
     pub fn new(capacity: usize) -> SessionTable {
         assert!(capacity > 0);
-        SessionTable { capacity, next_id: 1, sessions: Vec::new(), evicted: 0 }
+        SessionTable { capacity, next_id: 1, sessions: Vec::new(), evicted: 0, expired: 0 }
     }
 
     /// Open a session with a locally assigned id; may evict the oldest.
@@ -90,6 +95,19 @@ impl SessionTable {
     /// Non-consuming lookup.
     pub fn contains(&self, id: u64) -> bool {
         self.sessions.iter().any(|s| s.id == id)
+    }
+
+    /// Expire sessions opened at or before `now - ttl`; returns how many.
+    /// Insertion order is open order, so expired sessions are a prefix.
+    pub fn sweep_expired(&mut self, ttl: Duration, now: Instant) -> usize {
+        let keep_from = self
+            .sessions
+            .iter()
+            .position(|s| now.saturating_duration_since(s.opened) < ttl)
+            .unwrap_or(self.sessions.len());
+        self.sessions.drain(..keep_from);
+        self.expired += keep_from as u64;
+        keep_from
     }
 
     pub fn len(&self) -> usize {
@@ -167,6 +185,23 @@ impl SharedSessionTable {
     /// Total sessions evicted (capacity pressure) across all shards.
     pub fn evicted(&self) -> u64 {
         self.shards.iter().map(|s| s.lock().unwrap().evicted).sum()
+    }
+
+    /// Total sessions expired by TTL sweeps across all shards.
+    pub fn expired(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().expired).sum()
+    }
+
+    /// Expire sessions older than `ttl` in every shard; returns how many.
+    /// One shard is locked at a time, so sweeps never stall the pool.
+    pub fn sweep_expired(&self, ttl: Duration) -> usize {
+        let now = Instant::now();
+        self.shards.iter().map(|s| s.lock().unwrap().sweep_expired(ttl, now)).sum()
+    }
+
+    /// Open sessions per shard (stats: load-balance observability).
+    pub fn shard_occupancy(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).collect()
     }
 
     pub fn num_shards(&self) -> usize {
@@ -302,6 +337,45 @@ mod tests {
             t.open("m", pat(0), vec![1]);
         }
         assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn ttl_sweep_expires_only_old_sessions() {
+        let mut t = SessionTable::new(8);
+        let a = t.open("m", pat(0), vec![1]);
+        let b = t.open("m", pat(0), vec![1]);
+        // ttl = 0: everything already open is expired
+        let n = t.sweep_expired(Duration::ZERO, Instant::now());
+        assert_eq!(n, 2);
+        assert_eq!(t.expired, 2);
+        assert!(t.is_empty());
+        assert!(t.take(a).is_none());
+        assert!(t.take(b).is_none());
+        // a generous ttl expires nothing
+        let c = t.open("m", pat(0), vec![1]);
+        assert_eq!(t.sweep_expired(Duration::from_secs(3600), Instant::now()), 0);
+        assert_eq!(t.expired, 2);
+        assert!(t.take(c).is_some());
+    }
+
+    #[test]
+    fn sharded_ttl_sweep_and_occupancy() {
+        let t = SharedSessionTable::new(64, 4);
+        for _ in 0..10 {
+            t.open("m", pat(0), vec![1]);
+        }
+        let occ = t.shard_occupancy();
+        assert_eq!(occ.len(), 4);
+        assert_eq!(occ.iter().sum::<usize>(), 10);
+        assert_eq!(t.sweep_expired(Duration::from_secs(3600)), 0, "fresh sessions stay");
+        assert_eq!(t.len(), 10);
+        let swept = t.sweep_expired(Duration::ZERO);
+        assert_eq!(swept, 10);
+        assert_eq!(t.expired(), 10);
+        assert!(t.is_empty());
+        assert_eq!(t.shard_occupancy().iter().sum::<usize>(), 0);
+        // expiry (TTL) and eviction (capacity) are separate counters
+        assert_eq!(t.evicted(), 0);
     }
 
     #[test]

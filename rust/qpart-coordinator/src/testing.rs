@@ -1,0 +1,132 @@
+//! PJRT-free synthetic artifact bundles and a minimal protocol client,
+//! for tests and the `bench-serve` load harness.
+//!
+//! [`synthetic_bundle`] writes a loadable bundle (manifest + weights +
+//! calibration + dataset, **zero HLO executables**) into a temp
+//! directory. The coordinator's phase-1 path — Algorithm 2 decision,
+//! segment quantization, bit-packing, encoded-reply caching, session
+//! open — is pure Rust, so a real multi-worker server can be driven end
+//! to end over TCP in any offline environment. Only phase-2 execution
+//! (PJRT) needs `make artifacts`.
+//!
+//! Helpers panic on I/O errors: they run in tests and the bench harness,
+//! where a broken temp dir should abort loudly, not propagate.
+
+use qpart_core::accuracy::CalibrationTable;
+use qpart_core::json::Value;
+use qpart_core::model::{LayerKind, LayerSpec, ModelSpec};
+use qpart_core::tensor::{save_i32, Tensor};
+use qpart_proto::frame::{read_any_frame, write_frame};
+use qpart_proto::messages::{Request, Response};
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::path::PathBuf;
+
+/// Minimal blocking protocol connection (phase-1 only — no PJRT-backed
+/// `DeviceClient` needed): JSON requests out, either framing in. Shared
+/// by the coordinator's integration tests and `qpart bench-serve`.
+pub struct BlockingConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl BlockingConn {
+    pub fn connect(addr: &str) -> Result<BlockingConn, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+        stream.set_nodelay(true).map_err(|e| e.to_string())?;
+        let writer = stream.try_clone().map_err(|e| e.to_string())?;
+        Ok(BlockingConn { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request and read one response (JSON or binary frame).
+    pub fn call(&mut self, req: &Request) -> Result<Response, String> {
+        write_frame(&mut self.writer, &req.to_line()).map_err(|e| e.to_string())?;
+        let frame = read_any_frame(&mut self.reader).map_err(|e| e.to_string())?;
+        Response::from_frame(&frame).map_err(|e| e.to_string())
+    }
+}
+
+/// Accuracy-degradation levels the synthetic calibration covers.
+pub const LEVELS: [f64; 5] = [0.0025, 0.005, 0.01, 0.02, 0.05];
+
+fn lin(name: &str, d_in: usize, d_out: usize, relu: bool) -> LayerSpec {
+    LayerSpec { name: name.into(), kind: LayerKind::Linear { d_in, d_out }, relu }
+}
+
+/// The synthetic bundle's model: a 3-layer MLP named `tinymlp`.
+pub fn tiny_arch() -> ModelSpec {
+    ModelSpec::new(
+        "tinymlp",
+        vec![lin("fc1", 256, 512, true), lin("fc2", 512, 256, true), lin("fc3", 256, 10, false)],
+        10,
+    )
+    .unwrap()
+}
+
+/// Write a loadable synthetic bundle into a fresh per-process temp
+/// directory (`qpart-synth-<pid>-<tag>`) and return its path. The caller
+/// owns cleanup (`std::fs::remove_dir_all`).
+pub fn synthetic_bundle(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qpart-synth-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    for sub in ["weights/tinymlp", "calibration", "data"] {
+        std::fs::create_dir_all(dir.join(sub)).unwrap();
+    }
+    let arch = tiny_arch();
+
+    let mut rng = qpart_core::rng::Rng::new(7);
+    for (i, layer) in arch.layers.iter().enumerate() {
+        let (d_in, d_out) = match layer.kind {
+            LayerKind::Linear { d_in, d_out } => (d_in, d_out),
+            _ => unreachable!("tinymlp is linear-only"),
+        };
+        let w = Tensor::new(
+            vec![d_in, d_out],
+            (0..d_in * d_out).map(|_| rng.range_f64(-0.5, 0.5) as f32).collect(),
+        )
+        .unwrap();
+        let b = Tensor::new(
+            vec![d_out],
+            (0..d_out).map(|_| rng.range_f64(-0.1, 0.1) as f32).collect(),
+        )
+        .unwrap();
+        w.save(dir.join(format!("weights/tinymlp/l{}_w.qt", i + 1))).unwrap();
+        b.save(dir.join(format!("weights/tinymlp/l{}_b.qt", i + 1))).unwrap();
+    }
+
+    let calib = CalibrationTable::synthetic(&arch, &LEVELS, 1);
+    std::fs::write(dir.join("calibration/tinymlp.json"), calib.to_json().to_string_pretty())
+        .unwrap();
+
+    Tensor::zeros(vec![4, 256]).save(dir.join("data/synth_test_x.qt")).unwrap();
+    save_i32(dir.join("data/synth_test_y.qt"), &[4], &[0, 1, 2, 3]).unwrap();
+
+    let manifest = Value::obj([
+        ("archs", Value::Arr(vec![arch.to_json()])),
+        (
+            "models",
+            Value::Arr(vec![Value::obj([
+                ("name", "tinymlp".into()),
+                ("arch", "tinymlp".into()),
+                ("dataset", "synth".into()),
+                ("weights_dir", "weights/tinymlp".into()),
+                ("calibration", "calibration/tinymlp.json".into()),
+                ("test_accuracy", 0.9.into()),
+            ])]),
+        ),
+        ("executables", Value::Arr(vec![])),
+        (
+            "datasets",
+            Value::Arr(vec![Value::obj([
+                ("name", "synth".into()),
+                ("x", "data/synth_test_x.qt".into()),
+                ("y", "data/synth_test_y.qt".into()),
+                ("n", 4usize.into()),
+                ("classes", 10usize.into()),
+            ])]),
+        ),
+        ("levels", Value::num_arr(&LEVELS)),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string_pretty()).unwrap();
+    dir
+}

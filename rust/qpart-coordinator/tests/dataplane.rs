@@ -1,0 +1,320 @@
+//! Serving-dataplane tests — no PJRT required (synthetic bundle).
+//!
+//! Covers the batch-aware dataplane end to end: coalescing (one encode
+//! fans out to a whole same-key group), the encoded-reply cache (hits on
+//! re-request, LRU eviction under a tight byte budget), binary-frame
+//! negotiation + byte-identical payloads vs. a JSON-frame control, and
+//! the session TTL sweep.
+
+use qpart_coordinator::client::paper_request;
+use qpart_coordinator::sched::{EncodedReplyCache, Job, WireReply};
+use qpart_coordinator::testing::{synthetic_bundle, BlockingConn};
+use qpart_coordinator::{serve, MetricsHub, ServerConfig, Service, SharedSessionTable};
+use qpart_proto::messages::{HelloRequest, Request, Response};
+use qpart_runtime::Bundle;
+use std::collections::HashSet;
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+/// The coalescing contract, deterministically: a batch of same-key infer
+/// requests produces exactly one encode, and every reply shares the same
+/// encoded body.
+#[test]
+fn batch_of_same_key_requests_encodes_once_and_fans_out() {
+    let dir = synthetic_bundle("dp-batch");
+    let bundle = Arc::new(Bundle::load(&dir).unwrap());
+    let hub = Arc::new(MetricsHub::new());
+    let sessions = Arc::new(SharedSessionTable::new(64, 2));
+    let cache = Arc::new(EncodedReplyCache::new(64 << 20));
+    let mut svc =
+        Service::new(bundle, Arc::clone(&hub), sessions, Arc::clone(&cache)).unwrap();
+
+    let n = 4;
+    let mut reply_rxs = Vec::new();
+    let mut jobs = Vec::new();
+    for _ in 0..n {
+        let (tx, rx) = sync_channel(1);
+        jobs.push(Job::new(Request::Infer(paper_request("tinymlp", 0.02)), tx));
+        reply_rxs.push(rx);
+    }
+    svc.handle_batch(jobs);
+
+    let mut bodies = Vec::new();
+    let mut sessions_seen = HashSet::new();
+    for rx in reply_rxs {
+        match rx.recv().unwrap() {
+            WireReply::Segment(s) => {
+                assert!(sessions_seen.insert(s.session), "sessions must be distinct");
+                bodies.push(s.body);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    for b in &bodies[1..] {
+        assert!(Arc::ptr_eq(&bodies[0], b), "whole group shares ONE encoded body");
+    }
+
+    let snap = hub.snapshot();
+    assert_eq!(snap.requests_total, n as u64);
+    assert_eq!(snap.encodes_total, 1, "one encode for the whole group");
+    assert_eq!(snap.coalesced_total, (n - 1) as u64);
+    assert_eq!(snap.sessions_opened, n as u64);
+    assert_eq!(snap.batches_total, 1);
+    assert_eq!(snap.queue_wait_count, n as u64);
+    assert_eq!(cache.misses(), 1, "one lookup per group");
+
+    // a later batch for the same key is a pure cache hit — still 1 encode
+    let (tx, rx) = sync_channel(1);
+    svc.handle_batch(vec![Job::new(Request::Infer(paper_request("tinymlp", 0.02)), tx)]);
+    match rx.recv().unwrap() {
+        WireReply::Segment(s) => {
+            assert!(Arc::ptr_eq(&bodies[0], &s.body), "served from cache")
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(hub.snapshot().encodes_total, 1);
+    assert_eq!(cache.hits(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Server-level coalescing: concurrent same-key requests over TCP produce
+/// fewer encodes than requests, and a second pass is >50% cache hits.
+#[test]
+fn concurrent_same_key_requests_amortize_encodes_over_tcp() {
+    let dir = synthetic_bundle("dp-concurrent");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        queue_capacity: 64,
+        session_capacity: 256,
+        batch_window: Duration::from_millis(5),
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    let clients = 8usize;
+    let run_pass = || {
+        let barrier = Arc::new(Barrier::new(clients));
+        let joins: Vec<_> = (0..clients)
+            .map(|_| {
+                let addr = addr.clone();
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    let mut conn = BlockingConn::connect(&addr).unwrap();
+                    barrier.wait();
+                    match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+                        Response::Segment(r) => r.session,
+                        other => panic!("unexpected {other:?}"),
+                    }
+                })
+            })
+            .collect();
+        let mut ids = HashSet::new();
+        for j in joins {
+            assert!(ids.insert(j.join().unwrap()), "duplicate session");
+        }
+    };
+
+    run_pass();
+    let pass1 = handle.snapshot();
+    assert_eq!(pass1.requests_total, clients as u64);
+    assert!(pass1.encodes_total >= 1);
+    assert!(
+        pass1.encodes_total < clients as u64,
+        "coalescing/caching must amortize encodes: {} encodes for {clients} requests",
+        pass1.encodes_total
+    );
+    // every request was either the group leader, coalesced, or a hit
+    assert!(
+        pass1.encodes_total + pass1.coalesced_total + pass1.cache_hits >= clients as u64,
+        "{pass1:?}"
+    );
+
+    run_pass();
+    let pass2 = handle.snapshot();
+    assert_eq!(pass2.encodes_total, pass1.encodes_total, "second pass re-encodes nothing");
+    assert!(pass2.cache_hits > pass1.cache_hits, "second pass hits the cache");
+    // cache hit rate over both passes clears 50%: ≥ the whole second pass
+    // minus coalesced requests, over ~1-2 misses total
+    let lookups = pass2.cache_hits + pass2.cache_misses;
+    assert!(
+        (pass2.cache_hits as f64) / (lookups as f64) > 0.5,
+        "hit rate {}/{lookups}",
+        pass2.cache_hits
+    );
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Binary-frame negotiation + byte-identical payloads vs. JSON control.
+#[test]
+fn binary_frames_roundtrip_byte_identical_to_json_control() {
+    let dir = synthetic_bundle("dp-binary");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    let mut json_conn = BlockingConn::connect(&addr).unwrap();
+    let mut bin_conn = BlockingConn::connect(&addr).unwrap();
+    match bin_conn.call(&Request::Hello(HelloRequest { binary_frames: true })).unwrap() {
+        Response::Hello(h) => assert!(h.binary_frames, "server must grant binary frames"),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    let req = paper_request("tinymlp", 0.02);
+    let r_json = match json_conn.call(&Request::Infer(req.clone())).unwrap() {
+        Response::Segment(r) => r,
+        other => panic!("unexpected {other:?}"),
+    };
+    let r_bin = match bin_conn.call(&Request::Infer(req.clone())).unwrap() {
+        Response::Segment(r) => r,
+        other => panic!("unexpected {other:?}"),
+    };
+    // identical requests → identical pattern and byte-identical payloads;
+    // only the session ids differ
+    assert_ne!(r_json.session, r_bin.session);
+    assert_eq!(r_json.model, r_bin.model);
+    assert_eq!(r_json.pattern, r_bin.pattern);
+    assert_eq!(r_json.segment, r_bin.segment, "payloads byte-identical across framings");
+    for (a, b) in r_json.segment.layers.iter().zip(&r_bin.segment.layers) {
+        assert_eq!(a.w_packed, b.w_packed);
+        assert_eq!(a.b_packed, b.b_packed);
+    }
+
+    // non-segment responses stay JSON even on the binary connection
+    assert!(matches!(bin_conn.call(&Request::Ping).unwrap(), Response::Pong));
+
+    // a hello(false) switches the session back to JSON framing
+    match bin_conn.call(&Request::Hello(HelloRequest { binary_frames: false })).unwrap() {
+        Response::Hello(h) => assert!(!h.binary_frames),
+        other => panic!("unexpected {other:?}"),
+    }
+    match bin_conn.call(&Request::Infer(req)).unwrap() {
+        Response::Segment(r) => assert_eq!(r.segment, r_json.segment),
+        other => panic!("unexpected {other:?}"),
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A server with binary frames disabled refuses the negotiation.
+#[test]
+fn binary_frames_can_be_disabled_server_side() {
+    let dir = synthetic_bundle("dp-nobinary");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        binary_frames: false,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let mut conn = BlockingConn::connect(&handle.addr.to_string()).unwrap();
+    match conn.call(&Request::Hello(HelloRequest { binary_frames: true })).unwrap() {
+        Response::Hello(h) => assert!(!h.binary_frames, "negotiation refused"),
+        other => panic!("unexpected {other:?}"),
+    }
+    // segment replies still arrive (as JSON frames)
+    match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+        Response::Segment(r) => assert!(r.session > 0),
+        other => panic!("unexpected {other:?}"),
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Encoded-reply cache eviction under a byte budget too small for two
+/// replies: distinct keys displace each other, the resident set stays at
+/// one entry, and re-requesting an evicted key re-encodes.
+#[test]
+fn cache_evicts_under_tight_byte_budget() {
+    let dir = synthetic_bundle("dp-evict");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        cache_bytes: 1, // smaller than any reply: only the newest survives
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let mut conn = BlockingConn::connect(&handle.addr.to_string()).unwrap();
+
+    // distinct accuracy budgets → distinct level_idx → distinct cache keys
+    let budgets = [0.01, 0.02, 0.05];
+    for &b in &budgets {
+        match conn.call(&Request::Infer(paper_request("tinymlp", b))).unwrap() {
+            Response::Segment(_) => {}
+            other => panic!("budget {b}: unexpected {other:?}"),
+        }
+    }
+    assert_eq!(handle.cache.len(), 1, "budget of 1 byte keeps only the newest entry");
+    assert_eq!(handle.cache.evictions(), budgets.len() as u64 - 1);
+    assert_eq!(handle.snapshot().encodes_total, budgets.len() as u64);
+
+    // the resident (newest) key hits; an evicted key must re-encode
+    let hits_before = handle.cache.hits();
+    match conn.call(&Request::Infer(paper_request("tinymlp", 0.05))).unwrap() {
+        Response::Segment(_) => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(handle.cache.hits(), hits_before + 1, "newest entry still resident");
+    match conn.call(&Request::Infer(paper_request("tinymlp", 0.01))).unwrap() {
+        Response::Segment(_) => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(
+        handle.snapshot().encodes_total,
+        budgets.len() as u64 + 1,
+        "evicted key re-encodes"
+    );
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The session-GC thread makes `sessions_expired` real: sessions whose
+/// device never uploads are swept once they outlive the TTL.
+#[test]
+fn session_ttl_sweep_expires_abandoned_sessions() {
+    let dir = synthetic_bundle("dp-ttl");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        session_ttl: Duration::from_millis(100),
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let mut conn = BlockingConn::connect(&handle.addr.to_string()).unwrap();
+    let n = 4u64;
+    for _ in 0..n {
+        match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+            Response::Segment(_) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert_eq!(handle.sessions.len() as u64, n);
+    // ttl 100ms, sweep every 25ms: after 600ms everything is expired
+    std::thread::sleep(Duration::from_millis(600));
+    assert_eq!(handle.sessions.len(), 0, "abandoned sessions swept");
+    assert_eq!(handle.sessions.expired(), n);
+    assert_eq!(handle.sessions.evicted(), 0, "TTL expiry is not capacity eviction");
+
+    // the stats document reports the sweep
+    match conn.call(&Request::Stats).unwrap() {
+        Response::Stats(v) => {
+            assert_eq!(v.req_f64("sessions_expired").unwrap() as u64, n);
+            assert_eq!(v.req_f64("open_sessions").unwrap() as u64, 0);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,136 +1,31 @@
 //! Executor-pool integration tests — no PJRT required.
 //!
-//! These tests build a **synthetic artifact bundle** (a small MLP with
-//! real weight/calibration/dataset files but zero HLO executables) in a
-//! temp directory. The coordinator's phase-1 path — Algorithm 2 decision,
-//! segment quantization, bit-packing, session open — is pure Rust, so a
-//! real multi-worker server can be driven end-to-end over TCP in any
-//! offline environment. Only phase-2 execution (PJRT) needs `make
+//! These tests drive a real multi-worker server over TCP against the
+//! synthetic artifact bundle from `qpart_coordinator::testing` (weights +
+//! calibration + dataset, zero HLO executables). The coordinator's
+//! phase-1 path — Algorithm 2 decision, segment quantization,
+//! bit-packing, session open — is pure Rust, so everything here runs in
+//! any offline environment. Only phase-2 execution (PJRT) needs `make
 //! artifacts`, and is covered by `rust/qpart/tests/integration.rs`.
+//! Dataplane-specific behavior (coalescing, the encoded-reply cache,
+//! binary frames, TTL GC) is covered by `tests/dataplane.rs`.
 
 use qpart_coordinator::client::paper_request;
+use qpart_coordinator::testing::{synthetic_bundle, BlockingConn};
 use qpart_coordinator::{serve, ServerConfig};
-use qpart_core::accuracy::CalibrationTable;
-use qpart_core::json::Value;
-use qpart_core::model::{LayerKind, LayerSpec, ModelSpec};
-use qpart_core::tensor::{save_i32, Tensor};
-use qpart_proto::frame::{read_frame, write_frame};
 use qpart_proto::messages::{ActivationUpload, Request, Response};
 use std::collections::HashSet;
-use std::io::BufReader;
-use std::net::TcpStream;
-use std::path::PathBuf;
-
-const LEVELS: [f64; 5] = [0.0025, 0.005, 0.01, 0.02, 0.05];
-
-fn lin(name: &str, d_in: usize, d_out: usize, relu: bool) -> LayerSpec {
-    LayerSpec { name: name.into(), kind: LayerKind::Linear { d_in, d_out }, relu }
-}
-
-fn tiny_arch() -> ModelSpec {
-    ModelSpec::new(
-        "tinymlp",
-        vec![lin("fc1", 256, 512, true), lin("fc2", 512, 256, true), lin("fc3", 256, 10, false)],
-        10,
-    )
-    .unwrap()
-}
-
-/// Write a loadable bundle: manifest + weights + calibration + dataset,
-/// with an empty executables list (nothing here needs PJRT).
-fn write_synthetic_bundle(tag: &str) -> PathBuf {
-    let dir = std::env::temp_dir().join(format!("qpart-pool-{}-{tag}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&dir);
-    for sub in ["weights/tinymlp", "calibration", "data"] {
-        std::fs::create_dir_all(dir.join(sub)).unwrap();
-    }
-    let arch = tiny_arch();
-
-    let mut rng = qpart_core::rng::Rng::new(7);
-    for (i, layer) in arch.layers.iter().enumerate() {
-        let (d_in, d_out) = match layer.kind {
-            LayerKind::Linear { d_in, d_out } => (d_in, d_out),
-            _ => unreachable!("tinymlp is linear-only"),
-        };
-        let w = Tensor::new(
-            vec![d_in, d_out],
-            (0..d_in * d_out).map(|_| rng.range_f64(-0.5, 0.5) as f32).collect(),
-        )
-        .unwrap();
-        let b = Tensor::new(
-            vec![d_out],
-            (0..d_out).map(|_| rng.range_f64(-0.1, 0.1) as f32).collect(),
-        )
-        .unwrap();
-        w.save(dir.join(format!("weights/tinymlp/l{}_w.qt", i + 1))).unwrap();
-        b.save(dir.join(format!("weights/tinymlp/l{}_b.qt", i + 1))).unwrap();
-    }
-
-    let calib = CalibrationTable::synthetic(&arch, &LEVELS, 1);
-    std::fs::write(dir.join("calibration/tinymlp.json"), calib.to_json().to_string_pretty())
-        .unwrap();
-
-    Tensor::zeros(vec![4, 256]).save(dir.join("data/synth_test_x.qt")).unwrap();
-    save_i32(dir.join("data/synth_test_y.qt"), &[4], &[0, 1, 2, 3]).unwrap();
-
-    let manifest = Value::obj([
-        ("archs", Value::Arr(vec![arch.to_json()])),
-        (
-            "models",
-            Value::Arr(vec![Value::obj([
-                ("name", "tinymlp".into()),
-                ("arch", "tinymlp".into()),
-                ("dataset", "synth".into()),
-                ("weights_dir", "weights/tinymlp".into()),
-                ("calibration", "calibration/tinymlp.json".into()),
-                ("test_accuracy", 0.9.into()),
-            ])]),
-        ),
-        ("executables", Value::Arr(vec![])),
-        (
-            "datasets",
-            Value::Arr(vec![Value::obj([
-                ("name", "synth".into()),
-                ("x", "data/synth_test_x.qt".into()),
-                ("y", "data/synth_test_y.qt".into()),
-                ("n", 4usize.into()),
-                ("classes", 10usize.into()),
-            ])]),
-        ),
-        ("levels", Value::num_arr(&LEVELS)),
-    ]);
-    std::fs::write(dir.join("manifest.json"), manifest.to_string_pretty()).unwrap();
-    dir
-}
-
-/// Minimal blocking protocol connection (no PJRT-backed DeviceClient).
-struct Conn {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-impl Conn {
-    fn connect(addr: &str) -> Conn {
-        let stream = TcpStream::connect(addr).unwrap();
-        stream.set_nodelay(true).unwrap();
-        Conn { writer: stream.try_clone().unwrap(), reader: BufReader::new(stream) }
-    }
-
-    fn call(&mut self, req: &Request) -> Response {
-        write_frame(&mut self.writer, &req.to_line()).unwrap();
-        Response::from_line(&read_frame(&mut self.reader).unwrap()).unwrap()
-    }
-}
 
 #[test]
 fn pool_spreads_concurrent_load_over_distinct_workers() {
-    let dir = write_synthetic_bundle("load");
+    let dir = synthetic_bundle("pool-load");
     let handle = serve(ServerConfig {
         listen: "127.0.0.1:0".into(),
         workers: 4,
         queue_capacity: 128,
         session_capacity: 1024,
         artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
     })
     .expect("pool server starts on the synthetic bundle");
     let addr = handle.addr.to_string();
@@ -141,14 +36,14 @@ fn pool_spreads_concurrent_load_over_distinct_workers() {
     for c in 0..clients {
         let addr = addr.clone();
         joins.push(std::thread::spawn(move || {
-            let mut conn = Conn::connect(&addr);
+            let mut conn = BlockingConn::connect(&addr).unwrap();
             let mut sessions = Vec::new();
             for i in 0..per_client {
                 let mut req = paper_request("tinymlp", 0.02);
                 // distinct live channels → the full Algorithm 2 +
                 // quantize + pack path runs under varied decisions
                 req.channel_capacity_bps = 1e6 * (1 + c * 7 + i) as f64;
-                match conn.call(&Request::Infer(req)) {
+                match conn.call(&Request::Infer(req)).unwrap() {
                     Response::Segment(r) => {
                         assert_eq!(r.pattern.weight_bits.len(), r.pattern.partition);
                         sessions.push(r.session);
@@ -174,6 +69,8 @@ fn pool_spreads_concurrent_load_over_distinct_workers() {
     assert_eq!(snap.errors_total, 0);
     assert_eq!(snap.sessions_opened, total);
     assert_eq!(snap.handle_count, total);
+    // every request's queue wait was recorded
+    assert_eq!(snap.queue_wait_count, total);
 
     // ...and the concurrent load really was serviced by >1 executor
     let per_worker = handle.worker_snapshots();
@@ -184,14 +81,22 @@ fn pool_spreads_concurrent_load_over_distinct_workers() {
     assert!(active >= 2, "all requests landed on one worker: {counts:?}");
 
     // the wire-level stats view is the aggregate, with per-worker detail
-    let mut conn = Conn::connect(&addr);
-    match conn.call(&Request::Stats) {
+    let mut conn = BlockingConn::connect(&addr).unwrap();
+    match conn.call(&Request::Stats).unwrap() {
         Response::Stats(v) => {
             // the stats request itself is counted before it reports
             assert_eq!(v.req_f64("requests_total").unwrap() as u64, total + 1);
             assert_eq!(v.req_arr("workers").unwrap().len(), 4);
             assert_eq!(v.req_f64("open_sessions").unwrap() as u64, total);
             assert_eq!(v.req_f64("session_shards").unwrap() as u64, 4);
+            // dataplane observability: shard occupancy + cache section
+            let occ = v.req_arr("session_shard_occupancy").unwrap();
+            assert_eq!(occ.len(), 4);
+            let occ_sum: u64 =
+                occ.iter().map(|o| o.as_f64().unwrap() as u64).sum();
+            assert_eq!(occ_sum, total);
+            assert!(v.get("segment_cache").is_some());
+            assert!(v.get("queue_wait").is_some());
         }
         other => panic!("unexpected stats response {other:?}"),
     }
@@ -201,21 +106,22 @@ fn pool_spreads_concurrent_load_over_distinct_workers() {
 
 #[test]
 fn sessions_opened_by_one_worker_are_visible_to_all() {
-    let dir = write_synthetic_bundle("sessions");
+    let dir = synthetic_bundle("pool-sessions");
     let handle = serve(ServerConfig {
         listen: "127.0.0.1:0".into(),
         workers: 2,
         queue_capacity: 32,
         session_capacity: 64,
         artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
     })
     .unwrap();
     let addr = handle.addr.to_string();
 
-    let mut opener = Conn::connect(&addr);
-    let mut uploader = Conn::connect(&addr);
+    let mut opener = BlockingConn::connect(&addr).unwrap();
+    let mut uploader = BlockingConn::connect(&addr).unwrap();
     for i in 0..8 {
-        let reply = match opener.call(&Request::Infer(paper_request("tinymlp", 0.05))) {
+        let reply = match opener.call(&Request::Infer(paper_request("tinymlp", 0.05))).unwrap() {
             Response::Segment(r) => r,
             other => panic!("request {i}: unexpected {other:?}"),
         };
@@ -230,7 +136,7 @@ fn sessions_opened_by_one_worker_are_visible_to_all() {
             dims: vec![9, 9],
             packed: vec![0u8; 81],
         };
-        match uploader.call(&Request::Activation(upload)) {
+        match uploader.call(&Request::Activation(upload)).unwrap() {
             Response::Error(e) => {
                 assert_eq!(e.code, "bad_activation", "request {i}: {}", e.message)
             }
@@ -247,7 +153,7 @@ fn sessions_opened_by_one_worker_are_visible_to_all() {
         dims: vec![1, 1],
         packed: vec![0u8; 1],
     };
-    match uploader.call(&Request::Activation(upload)) {
+    match uploader.call(&Request::Activation(upload)).unwrap() {
         Response::Error(e) => assert_eq!(e.code, "unknown_session"),
         other => panic!("unexpected {other:?}"),
     }
@@ -259,18 +165,19 @@ fn sessions_opened_by_one_worker_are_visible_to_all() {
 fn single_worker_pool_still_serves() {
     // workers = 1 reproduces the classic dedicated-inference-thread
     // topology; the protocol surface must be identical.
-    let dir = write_synthetic_bundle("single");
+    let dir = synthetic_bundle("pool-single");
     let handle = serve(ServerConfig {
         listen: "127.0.0.1:0".into(),
         workers: 1,
         queue_capacity: 8,
         session_capacity: 16,
         artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
     })
     .unwrap();
-    let mut conn = Conn::connect(&handle.addr.to_string());
-    assert!(matches!(conn.call(&Request::Ping), Response::Pong));
-    match conn.call(&Request::ListModels) {
+    let mut conn = BlockingConn::connect(&handle.addr.to_string()).unwrap();
+    assert!(matches!(conn.call(&Request::Ping).unwrap(), Response::Pong));
+    match conn.call(&Request::ListModels).unwrap() {
         Response::Models(ms) => {
             assert_eq!(ms.len(), 1);
             assert_eq!(ms[0].name, "tinymlp");
@@ -278,7 +185,7 @@ fn single_worker_pool_still_serves() {
         }
         other => panic!("unexpected {other:?}"),
     }
-    match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))) {
+    match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
         Response::Segment(r) => assert!(r.session > 0),
         other => panic!("unexpected {other:?}"),
     }

@@ -53,6 +53,14 @@ pub struct ServingConfig {
     pub workers: usize,
     /// Maximum queued requests before admission control sheds load.
     pub queue_capacity: usize,
+    /// Session TTL in seconds for the GC sweep (0 = no age-based expiry).
+    pub session_ttl_secs: u64,
+    /// Batch coalescing window in microseconds (0 = drain-only).
+    pub batch_window_us: u64,
+    /// Encoded-reply cache byte budget.
+    pub cache_bytes: usize,
+    /// Allow binary-frame negotiation on the wire.
+    pub binary_frames: bool,
     /// Artifact bundle directory.
     pub artifacts_dir: String,
     /// Default accuracy levels when no calibration file provides them.
@@ -86,6 +94,10 @@ impl Config {
                     ("listen", "127.0.0.1:7878".into()),
                     ("workers", 4u64.into()),
                     ("queue_capacity", 1024u64.into()),
+                    ("session_ttl_secs", 600u64.into()),
+                    ("batch_window_us", 0u64.into()),
+                    ("cache_bytes", (64u64 << 20).into()),
+                    ("binary_frames", true.into()),
                     ("artifacts_dir", "artifacts".into()),
                     (
                         "accuracy_levels",
@@ -203,6 +215,10 @@ impl Config {
             listen: srv.opt_str("listen", "127.0.0.1:7878").to_string(),
             workers: srv.opt_f64("workers", 4.0) as usize,
             queue_capacity: srv.opt_f64("queue_capacity", 1024.0) as usize,
+            session_ttl_secs: srv.opt_f64("session_ttl_secs", 600.0) as u64,
+            batch_window_us: srv.opt_f64("batch_window_us", 0.0) as u64,
+            cache_bytes: srv.opt_f64("cache_bytes", (64u64 << 20) as f64) as usize,
+            binary_frames: srv.opt_bool("binary_frames", true),
             artifacts_dir: srv.opt_str("artifacts_dir", "artifacts").to_string(),
             accuracy_levels: srv
                 .req_f64_arr("accuracy_levels")
@@ -248,6 +264,26 @@ mod tests {
         let srv = cfg.serving().unwrap();
         assert_eq!(srv.listen, "0.0.0.0:9000");
         assert_eq!(srv.workers, 8);
+    }
+
+    #[test]
+    fn serving_dataplane_knobs_default_and_override() {
+        let cfg = Config::defaults();
+        let srv = cfg.serving().unwrap();
+        assert_eq!(srv.session_ttl_secs, 600);
+        assert_eq!(srv.batch_window_us, 0);
+        assert_eq!(srv.cache_bytes, 64 << 20);
+        assert!(srv.binary_frames);
+        let mut cfg = Config::defaults();
+        cfg.set_override("serving.batch_window_us=2500").unwrap();
+        cfg.set_override("serving.cache_bytes=1048576").unwrap();
+        cfg.set_override("serving.binary_frames=false").unwrap();
+        cfg.set_override("serving.session_ttl_secs=30").unwrap();
+        let srv = cfg.serving().unwrap();
+        assert_eq!(srv.batch_window_us, 2500);
+        assert_eq!(srv.cache_bytes, 1 << 20);
+        assert!(!srv.binary_frames);
+        assert_eq!(srv.session_ttl_secs, 30);
     }
 
     #[test]

@@ -1,10 +1,57 @@
-//! JSON-lines framing with a hard frame-size cap.
+//! Framing: JSON lines plus length-prefixed binary frames, with a hard
+//! frame-size cap.
+//!
+//! Two frame kinds share one TCP stream:
+//!
+//! * **JSON frame** — one UTF-8 JSON document terminated by `'\n'`
+//!   ([`read_frame`] / [`write_frame`]). This is the default and the
+//!   compatibility fallback; every peer must speak it.
+//! * **Binary frame** — a length-prefixed envelope for large payloads
+//!   (quantized segment replies), negotiated per session via the `hello`
+//!   request. Layout (all integers little-endian):
+//!
+//!   ```text
+//!   0xB1                        magic byte (invalid as UTF-8 lead byte,
+//!                               so it can never open a JSON frame)
+//!   u32  total_len              length of everything that follows
+//!   u32  header_len             length of the JSON header
+//!   header_len bytes            UTF-8 JSON header (small: ids + metadata
+//!                               with [offset, length] blob references)
+//!   total_len - 4 - header_len  raw blob bytes (bit-packed payloads,
+//!                               shipped without base64 or JSON escaping)
+//!   ```
+//!
+//! [`read_any_frame`] peeks one byte to dispatch: `0xB1` → binary,
+//! anything else → JSON line. Both kinds enforce [`MAX_FRAME_BYTES`].
 
-use std::io::{BufRead, Write};
+use std::io::{BufRead, Read, Write};
 
 /// Maximum accepted frame size (16 MiB — a full quantized mlp6 segment is
 /// well under 1 MiB; the cap only guards against malformed/hostile peers).
 pub const MAX_FRAME_BYTES: usize = 16 * 1024 * 1024;
+
+/// First byte of a binary frame. `0xB1` is a UTF-8 continuation byte, so
+/// it can never start a JSON-lines frame — the two framings are
+/// self-distinguishing on the wire.
+pub const BINARY_MAGIC: u8 = 0xB1;
+
+/// One frame read off the wire (either framing).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// A JSON-lines frame (the line, newline stripped).
+    Json(String),
+    /// A binary frame: JSON header + raw blob.
+    Binary(BinaryFrame),
+}
+
+/// Payload of a binary frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BinaryFrame {
+    /// Small UTF-8 JSON header (ids + metadata with blob offsets).
+    pub header: String,
+    /// Raw payload bytes the header's offsets point into.
+    pub blob: Vec<u8>,
+}
 
 /// Framing errors.
 #[derive(Debug)]
@@ -13,6 +60,8 @@ pub enum FrameError {
     TooLarge,
     Closed,
     Utf8,
+    /// Malformed binary frame (bad lengths / truncated envelope).
+    BadBinary(String),
 }
 
 impl std::fmt::Display for FrameError {
@@ -22,6 +71,7 @@ impl std::fmt::Display for FrameError {
             FrameError::TooLarge => write!(f, "frame exceeds {MAX_FRAME_BYTES} bytes"),
             FrameError::Closed => write!(f, "connection closed"),
             FrameError::Utf8 => write!(f, "frame is not valid utf-8"),
+            FrameError::BadBinary(m) => write!(f, "bad binary frame: {m}"),
         }
     }
 }
@@ -44,7 +94,7 @@ impl From<std::io::Error> for FrameError {
 /// Read one newline-terminated frame (without the newline).
 pub fn read_frame<R: BufRead>(r: &mut R) -> Result<String, FrameError> {
     let mut buf = Vec::new();
-    let mut take = std::io::Read::take(&mut *r, MAX_FRAME_BYTES as u64 + 1);
+    let mut take = Read::take(&mut *r, MAX_FRAME_BYTES as u64 + 1);
     let n = take.read_until(b'\n', &mut buf)?;
     if n == 0 {
         return Err(FrameError::Closed);
@@ -68,6 +118,60 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &str) -> Result<(), FrameError> {
     w.write_all(b"\n")?;
     w.flush()?;
     Ok(())
+}
+
+/// Write one binary frame (magic + lengths + header + blob) and flush.
+pub fn write_binary_frame<W: Write>(w: &mut W, header: &str, blob: &[u8]) -> Result<(), FrameError> {
+    let total = 4 + header.len() + blob.len();
+    if total > MAX_FRAME_BYTES {
+        return Err(FrameError::TooLarge);
+    }
+    w.write_all(&[BINARY_MAGIC])?;
+    w.write_all(&(total as u32).to_le_bytes())?;
+    w.write_all(&(header.len() as u32).to_le_bytes())?;
+    w.write_all(header.as_bytes())?;
+    w.write_all(blob)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the next frame of either kind, dispatching on the first byte.
+pub fn read_any_frame<R: BufRead>(r: &mut R) -> Result<Frame, FrameError> {
+    let first = {
+        let buf = r.fill_buf()?;
+        if buf.is_empty() {
+            return Err(FrameError::Closed);
+        }
+        buf[0]
+    };
+    if first != BINARY_MAGIC {
+        return Ok(Frame::Json(read_frame(r)?));
+    }
+    let mut magic = [0u8; 1];
+    r.read_exact(&mut magic)?;
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let total = u32::from_le_bytes(len4) as usize;
+    if total > MAX_FRAME_BYTES {
+        return Err(FrameError::TooLarge);
+    }
+    if total < 4 {
+        return Err(FrameError::BadBinary(format!("total length {total} < 4")));
+    }
+    let mut payload = vec![0u8; total];
+    r.read_exact(&mut payload)?;
+    let header_len =
+        u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+    if header_len > total - 4 {
+        return Err(FrameError::BadBinary(format!(
+            "header length {header_len} exceeds frame payload {}",
+            total - 4
+        )));
+    }
+    let blob = payload.split_off(4 + header_len);
+    let header =
+        String::from_utf8(payload[4..].to_vec()).map_err(|_| FrameError::Utf8)?;
+    Ok(Frame::Binary(BinaryFrame { header, blob }))
 }
 
 #[cfg(test)]
@@ -103,5 +207,64 @@ mod tests {
     fn invalid_utf8_rejected() {
         let mut r = BufReader::new(&b"\xff\xfe\n"[..]);
         assert!(matches!(read_frame(&mut r), Err(FrameError::Utf8)));
+    }
+
+    #[test]
+    fn binary_roundtrip_and_interleaving() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, r#"{"a":1}"#).unwrap();
+        write_binary_frame(&mut buf, r#"{"kind":"seg"}"#, &[1, 2, 3, 0xB1, 255]).unwrap();
+        write_frame(&mut buf, r#"{"b":2}"#).unwrap();
+        write_binary_frame(&mut buf, "{}", &[]).unwrap();
+        let mut r = BufReader::new(&buf[..]);
+        assert_eq!(read_any_frame(&mut r).unwrap(), Frame::Json(r#"{"a":1}"#.into()));
+        assert_eq!(
+            read_any_frame(&mut r).unwrap(),
+            Frame::Binary(BinaryFrame {
+                header: r#"{"kind":"seg"}"#.into(),
+                blob: vec![1, 2, 3, 0xB1, 255],
+            })
+        );
+        assert_eq!(read_any_frame(&mut r).unwrap(), Frame::Json(r#"{"b":2}"#.into()));
+        assert_eq!(
+            read_any_frame(&mut r).unwrap(),
+            Frame::Binary(BinaryFrame { header: "{}".into(), blob: Vec::new() })
+        );
+        assert!(matches!(read_any_frame(&mut r), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn binary_oversized_rejected() {
+        // a forged length header larger than the cap
+        let mut buf = vec![BINARY_MAGIC];
+        buf.extend_from_slice(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 64]);
+        let mut r = BufReader::new(&buf[..]);
+        assert!(matches!(read_any_frame(&mut r), Err(FrameError::TooLarge)));
+        // writing an oversized frame is refused up front
+        let blob = vec![0u8; MAX_FRAME_BYTES];
+        assert!(matches!(
+            write_binary_frame(&mut Vec::new(), "{}", &blob),
+            Err(FrameError::TooLarge)
+        ));
+    }
+
+    #[test]
+    fn binary_bad_lengths_rejected() {
+        // header_len pointing past the payload
+        let header = b"{}";
+        let total = (4 + header.len()) as u32;
+        let mut buf = vec![BINARY_MAGIC];
+        buf.extend_from_slice(&total.to_le_bytes());
+        buf.extend_from_slice(&(100u32).to_le_bytes());
+        buf.extend_from_slice(header);
+        let mut r = BufReader::new(&buf[..]);
+        assert!(matches!(read_any_frame(&mut r), Err(FrameError::BadBinary(_))));
+        // total_len too small to hold the header-length field
+        let mut buf = vec![BINARY_MAGIC];
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8, 0]);
+        let mut r = BufReader::new(&buf[..]);
+        assert!(matches!(read_any_frame(&mut r), Err(FrameError::BadBinary(_))));
     }
 }

@@ -1,19 +1,24 @@
 //! # qpart-proto — the QPART wire protocol
 //!
 //! Wire protocol between edge devices and the QPART coordinator:
-//! **newline-delimited JSON over TCP** (JSON-lines). This crate is the
-//! protocol's single source of truth; `cargo doc -p qpart-proto` renders
-//! this page as the protocol specification.
+//! **newline-delimited JSON over TCP** (JSON-lines), plus an optional
+//! **length-prefixed binary frame** for large segment payloads. This crate
+//! is the protocol's single source of truth; `cargo doc -p qpart-proto`
+//! renders this page as the protocol specification.
 //!
 //! ## Frame layout
 //!
-//! One message = one line:
+//! Two frame kinds share one TCP stream and are self-distinguishing on
+//! their first byte.
+//!
+//! **JSON frame** (the default; every peer must speak it):
 //!
 //! ```text
 //! <UTF-8 JSON document, no embedded '\n'> '\n'
 //! ```
 //!
-//! * Frames are read with [`read_frame`] / written with [`write_frame`].
+//! * Read with [`read_frame`] (or [`read_any_frame`]) / written with
+//!   [`write_frame`].
 //! * A trailing `'\r'` before the `'\n'` is tolerated and stripped.
 //! * Frames larger than [`MAX_FRAME_BYTES`] (16 MiB) are rejected with
 //!   `FrameError::TooLarge` — a full quantized mlp6 segment is well under
@@ -24,7 +29,45 @@
 //! Unknown types are answered with an `error` response, not a dropped
 //! connection.
 //!
-//! ## Binary payloads
+//! **Binary frame** (negotiated; carries `segment` replies only):
+//!
+//! ```text
+//! 0xB1                         magic byte ([`frame::BINARY_MAGIC`]; a
+//!                              UTF-8 continuation byte, so it can never
+//!                              open a JSON frame)
+//! u32 LE  total_len            length of everything that follows
+//! u32 LE  header_len           length of the JSON header
+//! header_len bytes             UTF-8 JSON header: the `segment` document
+//!                              with blob offsets instead of base64
+//! total_len - 4 - header_len   raw blob: each layer's bit-packed weight
+//!                              bytes then bias bytes, in layer order
+//! ```
+//!
+//! In the binary header each layer replaces `w_packed`/`b_packed`
+//! (base64) with `w_off`/`w_nbytes` and `b_off`/`b_nbytes` — byte ranges
+//! into the blob. The multi-megabyte payload thus ships without base64
+//! expansion (−25% bytes) or JSON string escaping/parsing on either side.
+//! Read with [`read_any_frame`], written with
+//! [`frame::write_binary_frame`]; decode via
+//! [`messages::Response::from_frame`] /
+//! [`messages::InferReply::from_binary`]. The same [`MAX_FRAME_BYTES`]
+//! cap applies to the whole envelope.
+//!
+//! ### Negotiation rules
+//!
+//! * Connections start in JSON-lines mode; **requests are always JSON**.
+//! * A device that wants binary segment frames sends
+//!   `{"type":"hello","binary_frames":true}`. The server answers
+//!   `{"type":"hello","binary_frames":<granted>}` (always as a JSON
+//!   frame) — `true` only if the request asked for it **and** the server
+//!   allows it (`--binary-frames`, `ServerConfig::binary_frames`).
+//! * After a granted hello, **`segment` replies** on that connection use
+//!   binary frames; every other response stays JSON-lines. A later
+//!   `hello` with `binary_frames:false` switches back.
+//! * Peers that never send `hello` get pure JSON-lines — the
+//!   compatibility fallback.
+//!
+//! ## Binary payloads (JSON form)
 //!
 //! Bit-packed tensors (quantized weight/activation codes, see
 //! `qpart_core::quant::pack_bits`) travel as **base64** strings (standard
@@ -46,6 +89,7 @@
 //! | `ping`        | — | liveness probe; answered with `pong` |
 //! | `list_models` | — | enumerate served models; answered with `models` |
 //! | `stats`       | — | metrics snapshot; answered with `stats` |
+//! | `hello`       | `binary_frames` | negotiate framing; answered with `hello` |
 //! | `infer`       | [`messages::InferRequest`] fields | **phase 1**: open a session, answered with `segment` |
 //! | `activation`  | `session`, `bits`, `qmin`, `step`, `dims`, `packed` | **phase 2**: upload the quantized boundary activation, answered with `result` |
 //! | `simulate`    | `infer` fields + `input`, `input_dims` | one-shot: the server simulates the device too; answered with `result` |
@@ -72,8 +116,9 @@
 //! |-----------|--------|---------|
 //! | `pong`    | — | answer to `ping` |
 //! | `models`  | `models`: array of `{name, arch, dataset, layers, params, test_accuracy}` | answer to `list_models` |
-//! | `stats`   | `stats`: metrics document (aggregated over the executor pool, with a per-worker `workers` array) | answer to `stats` |
-//! | `segment` | `session`, `model`, `pattern`, `layers` | **phase-1 answer**: the quantized, bit-packed model segment |
+//! | `stats`   | `stats`: metrics document (aggregated over the executor pool, with a per-worker `workers` array, queue-wait and batching counters, and the encoded-reply `segment_cache` section) | answer to `stats` |
+//! | `hello`   | `binary_frames` | answer to `hello`: the granted framing |
+//! | `segment` | `session`, `model`, `pattern`, `layers` | **phase-1 answer**: the quantized, bit-packed model segment (JSON or binary frame per negotiation) |
 //! | `result`  | `session`, `prediction`, `logits`, `server_us`, optional `costs` | **phase-2 / simulate answer** |
 //! | `error`   | `code`, `message` | any failure |
 //!
@@ -83,7 +128,15 @@
 //! `objective`), and `layers` is an array of [`messages::LayerBlob`]s —
 //! per device-side layer: `layer` (1-based index), `bits`, `w_dims`,
 //! weight grid (`w_qmin`, `w_step`) + base64 `w_packed`, and bias grid
-//! (`b_qmin`, `b_step`, `b_len`) + base64 `b_packed`.
+//! (`b_qmin`, `b_step`, `b_len`) + base64 `b_packed`. In the **binary**
+//! framing the same document is the frame header with
+//! `w_off`/`w_nbytes`/`b_off`/`b_nbytes` blob ranges replacing the base64
+//! fields.
+//!
+//! Because coalesced and cached replies share one serialized body
+//! ([`messages::EncodedSegmentBody`]), only `session` and
+//! `pattern.objective` vary between devices that were answered from the
+//! same `(model, accuracy level, partition)` encode.
 //!
 //! Error `code`s the coordinator emits: `bad_frame`, `bad_request`,
 //! `unknown_model`, `unknown_session`, `bad_activation`, `bad_input`,
@@ -107,14 +160,18 @@
 //!
 //! Sessions are server-side state keyed by the `session` id returned in
 //! `segment`; they are consumed by the first `activation` referencing
-//! them and evicted oldest-first under capacity pressure (an evicted
-//! session answers `unknown_session`).
+//! them, evicted oldest-first under capacity pressure, and expired by the
+//! TTL sweep if the device never uploads (both answer `unknown_session`).
 
 pub mod base64;
 pub mod frame;
 pub mod messages;
 
-pub use frame::{read_frame, write_frame, FrameError, MAX_FRAME_BYTES};
+pub use frame::{
+    read_any_frame, read_frame, write_binary_frame, write_frame, BinaryFrame, Frame, FrameError,
+    MAX_FRAME_BYTES,
+};
 pub use messages::{
-    ErrorReply, InferReply, InferRequest, LayerBlob, PatternInfo, Request, Response, SegmentBlob,
+    EncodedSegmentBody, ErrorReply, HelloReply, HelloRequest, InferReply, InferRequest, LayerBlob,
+    PatternInfo, Request, Response, SegmentBlob,
 };

@@ -11,8 +11,18 @@
 //!
 //! `simulate` collapses 1–4 into one message for load generation: the
 //! server plays both roles and reports the cost breakdown.
+//!
+//! `hello` negotiates per-session framing: a device that speaks binary
+//! frames asks for them once, and the server answers with what it will
+//! actually use for segment replies on this connection.
+//!
+//! [`EncodedSegmentBody`] is the serving hot path's unit of reuse: the
+//! session-independent part of a segment reply, serialized **once** (JSON
+//! body, binary header, and raw blob) and then stamped per connection
+//! with the session id and the request's objective value.
 
 use crate::base64;
+use crate::frame::{BinaryFrame, Frame};
 use qpart_core::json::{parse, Value};
 use qpart_core::{Error, Result};
 
@@ -22,9 +32,17 @@ pub enum Request {
     Ping,
     ListModels,
     Stats,
+    Hello(HelloRequest),
     Infer(InferRequest),
     Activation(ActivationUpload),
     Simulate(SimulateRequest),
+}
+
+/// Framing negotiation (handled by the connection front-end, never queued).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HelloRequest {
+    /// Device asks for length-prefixed binary segment frames.
+    pub binary_frames: bool,
 }
 
 /// Paper Algorithm 2's Require-tuple.
@@ -76,9 +94,17 @@ pub enum Response {
     Pong,
     Models(Vec<ModelInfo>),
     Stats(Value),
+    Hello(HelloReply),
     Segment(InferReply),
     Result(ResultReply),
     Error(ErrorReply),
+}
+
+/// Answer to `hello`: the framing the server will use on this connection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HelloReply {
+    /// Segment replies on this connection will use binary frames.
+    pub binary_frames: bool,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -204,6 +230,10 @@ impl Request {
             Request::Ping => Value::obj([("type", "ping".into())]),
             Request::ListModels => Value::obj([("type", "list_models".into())]),
             Request::Stats => Value::obj([("type", "stats".into())]),
+            Request::Hello(h) => Value::obj([
+                ("type", "hello".into()),
+                ("binary_frames", h.binary_frames.into()),
+            ]),
             Request::Infer(r) => {
                 let mut v = r.to_json();
                 v.set("type", "infer".into());
@@ -233,6 +263,9 @@ impl Request {
             "ping" => Ok(Request::Ping),
             "list_models" => Ok(Request::ListModels),
             "stats" => Ok(Request::Stats),
+            "hello" => Ok(Request::Hello(HelloRequest {
+                binary_frames: v.opt_bool("binary_frames", false),
+            })),
             "infer" => Ok(Request::Infer(InferRequest::from_json(v)?)),
             "activation" => Ok(Request::Activation(ActivationUpload {
                 session: v.req_u64("session")?,
@@ -310,6 +343,240 @@ impl InferRequest {
 }
 
 // ---------------------------------------------------------------------------
+// Segment layer (de)serialization — shared by the JSON line, the binary
+// frame, and the encoded-reply cache
+// ---------------------------------------------------------------------------
+
+/// One layer in the JSON (base64) form.
+fn layer_json(l: &LayerBlob) -> Value {
+    Value::obj([
+        ("layer", l.layer.into()),
+        ("bits", (l.bits as u64).into()),
+        ("w_dims", dims_json(&l.w_dims)),
+        ("w_qmin", (l.w_qmin as f64).into()),
+        ("w_step", (l.w_step as f64).into()),
+        ("w_packed", base64::encode(&l.w_packed).into()),
+        ("b_qmin", (l.b_qmin as f64).into()),
+        ("b_step", (l.b_step as f64).into()),
+        ("b_len", l.b_len.into()),
+        ("b_packed", base64::encode(&l.b_packed).into()),
+    ])
+}
+
+/// The `layers` array in the JSON (base64) form.
+fn layers_json(layers: &[LayerBlob]) -> Value {
+    Value::Arr(layers.iter().map(layer_json).collect())
+}
+
+/// The `layers` array in the binary form (blob offsets instead of base64)
+/// plus the blob itself: each layer's packed weights then packed bias,
+/// appended in order.
+fn layers_binary(layers: &[LayerBlob]) -> (Value, Vec<u8>) {
+    let total: usize = layers.iter().map(|l| l.w_packed.len() + l.b_packed.len()).sum();
+    let mut blob = Vec::with_capacity(total);
+    let metas = layers
+        .iter()
+        .map(|l| {
+            let w_off = blob.len();
+            blob.extend_from_slice(&l.w_packed);
+            let b_off = blob.len();
+            blob.extend_from_slice(&l.b_packed);
+            Value::obj([
+                ("layer", l.layer.into()),
+                ("bits", (l.bits as u64).into()),
+                ("w_dims", dims_json(&l.w_dims)),
+                ("w_qmin", (l.w_qmin as f64).into()),
+                ("w_step", (l.w_step as f64).into()),
+                ("w_off", w_off.into()),
+                ("w_nbytes", l.w_packed.len().into()),
+                ("b_qmin", (l.b_qmin as f64).into()),
+                ("b_step", (l.b_step as f64).into()),
+                ("b_len", l.b_len.into()),
+                ("b_off", b_off.into()),
+                ("b_nbytes", l.b_packed.len().into()),
+            ])
+        })
+        .collect();
+    (Value::Arr(metas), blob)
+}
+
+/// Slice `blob[off .. off + len]` with bound checks.
+fn blob_slice<'a>(blob: &'a [u8], off: usize, len: usize, key: &str) -> Result<&'a [u8]> {
+    off.checked_add(len)
+        .and_then(|end| blob.get(off..end))
+        .ok_or_else(|| Error::schema(key, format!("blob range {off}+{len} out of bounds")))
+}
+
+impl InferReply {
+    /// Encode as a binary frame: (JSON header, raw blob).
+    pub fn to_binary(&self) -> (String, Vec<u8>) {
+        let (metas, blob) = layers_binary(&self.segment.layers);
+        let mut v = Value::obj([
+            ("type", "segment".into()),
+            ("session", self.session.into()),
+            ("model", self.model.as_str().into()),
+            ("pattern", self.pattern.to_json()),
+        ]);
+        v.set("layers", metas);
+        (v.to_string_compact(), blob)
+    }
+
+    /// Decode a binary frame (header + blob) back into a reply.
+    pub fn from_binary(header: &str, blob: &[u8]) -> Result<InferReply> {
+        let v = parse(header)?;
+        if v.req_str("type")? != "segment" {
+            return Err(Error::schema("type", "binary frame is not a segment"));
+        }
+        let mut layers = Vec::new();
+        for l in v.req_arr("layers")? {
+            let w_off = l.req_usize("w_off")?;
+            let w_nbytes = l.req_usize("w_nbytes")?;
+            let b_off = l.req_usize("b_off")?;
+            let b_nbytes = l.req_usize("b_nbytes")?;
+            layers.push(LayerBlob {
+                layer: l.req_usize("layer")?,
+                bits: l.req_u64("bits")? as u8,
+                w_dims: usize_arr(l, "w_dims")?,
+                w_qmin: l.req_f64("w_qmin")? as f32,
+                w_step: l.req_f64("w_step")? as f32,
+                w_packed: blob_slice(blob, w_off, w_nbytes, "w_off")?.to_vec(),
+                b_qmin: l.req_f64("b_qmin")? as f32,
+                b_step: l.req_f64("b_step")? as f32,
+                b_len: l.req_usize("b_len")?,
+                b_packed: blob_slice(blob, b_off, b_nbytes, "b_off")?.to_vec(),
+            });
+        }
+        Ok(InferReply {
+            session: v.req_u64("session")?,
+            model: v.req_str("model")?.to_string(),
+            pattern: PatternInfo::from_json(v.req("pattern")?)?,
+            segment: SegmentBlob { layers },
+        })
+    }
+}
+
+/// The session-independent part of a segment reply, fully serialized once.
+///
+/// Coalesced requests and the coordinator's encoded-reply cache share one
+/// of these per `(model, accuracy level, partition)`; stamping a reply for
+/// a specific connection is a cheap string splice of the session id and
+/// the request's Eq. 17 objective value — no re-quantization, no
+/// re-base64, no re-escaping of the multi-megabyte payload.
+#[derive(Debug)]
+pub struct EncodedSegmentBody {
+    model: String,
+    /// Pattern with a placeholder objective (the objective is per-request).
+    pattern: PatternInfo,
+    /// Decoded form, for in-process callers that need the actual blobs.
+    segment: SegmentBlob,
+    /// `model` as a JSON string literal (quoted + escaped).
+    model_json: String,
+    /// The `layers` array, JSON/base64 form, serialized compactly.
+    layers_json: String,
+    /// The `layers` array, binary-header form (blob offsets).
+    bin_layers_json: String,
+    /// Raw packed payload bytes the binary header points into.
+    blob: Vec<u8>,
+}
+
+impl EncodedSegmentBody {
+    /// Serialize `segment` once in both wire forms. `pattern.objective` is
+    /// ignored — replies stamp the per-request objective at send time.
+    pub fn new(model: &str, pattern: PatternInfo, segment: SegmentBlob) -> EncodedSegmentBody {
+        let layers = layers_json(&segment.layers).to_string_compact();
+        let (bin_metas, blob) = layers_binary(&segment.layers);
+        EncodedSegmentBody {
+            model_json: Value::Str(model.to_string()).to_string_compact(),
+            model: model.to_string(),
+            pattern: PatternInfo { objective: f64::NAN, ..pattern },
+            segment,
+            layers_json: layers,
+            bin_layers_json: bin_metas.to_string_compact(),
+            blob,
+        }
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// The pattern (objective is NaN — it is stamped per request).
+    pub fn pattern(&self) -> &PatternInfo {
+        &self.pattern
+    }
+
+    /// The decoded segment (for in-process callers).
+    pub fn segment(&self) -> &SegmentBlob {
+        &self.segment
+    }
+
+    /// Raw blob for [`crate::frame::write_binary_frame`].
+    pub fn blob(&self) -> &[u8] {
+        &self.blob
+    }
+
+    /// Packed wire payload size in bytes (weights + biases).
+    pub fn wire_bytes(&self) -> u64 {
+        self.blob.len() as u64
+    }
+
+    /// Bytes of encoding work a cache hit skips, measured as the
+    /// serialized JSON body length. Binary-framed replies reuse the (raw,
+    /// ~25% smaller) blob instead, so as a "bytes saved" measure this is
+    /// an upper bound on those sessions.
+    pub fn encoded_len(&self) -> u64 {
+        self.layers_json.len() as u64
+    }
+
+    /// Approximate resident size (all cached serializations + the blobs),
+    /// the unit the encoded-reply cache's byte budget counts.
+    pub fn cost_bytes(&self) -> usize {
+        // blob appears twice: once raw, once as the decoded segment's
+        // packed vectors; 128 covers struct overhead and small strings
+        self.layers_json.len() + self.bin_layers_json.len() + 2 * self.blob.len() + 128
+    }
+
+    fn pattern_json(&self, objective: f64) -> String {
+        let mut p = self.pattern.clone();
+        p.objective = objective;
+        p.to_json().to_string_compact()
+    }
+
+    /// The complete JSON-lines reply for one session (byte-identical to
+    /// `Response::Segment(..).to_line()`).
+    pub fn json_line(&self, session: u64, objective: f64) -> String {
+        format!(
+            "{{\"type\":\"segment\",\"session\":{session},\"model\":{},\"pattern\":{},\"layers\":{}}}",
+            self.model_json,
+            self.pattern_json(objective),
+            self.layers_json,
+        )
+    }
+
+    /// The binary-frame header for one session (pair with [`Self::blob`]).
+    pub fn binary_header(&self, session: u64, objective: f64) -> String {
+        format!(
+            "{{\"type\":\"segment\",\"session\":{session},\"model\":{},\"pattern\":{},\"layers\":{}}}",
+            self.model_json,
+            self.pattern_json(objective),
+            self.bin_layers_json,
+        )
+    }
+
+    /// Rebuild the full reply for one session (in-process compat path).
+    pub fn to_reply(&self, session: u64, objective: f64) -> InferReply {
+        let mut pattern = self.pattern.clone();
+        pattern.objective = objective;
+        InferReply {
+            session,
+            model: self.model.clone(),
+            pattern,
+            segment: self.segment.clone(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Response (de)serialization
 // ---------------------------------------------------------------------------
 
@@ -343,34 +610,17 @@ impl Response {
                 o.set("stats", v.clone());
                 o
             }
-            Response::Segment(r) => {
-                let layers: Vec<Value> = r
-                    .segment
-                    .layers
-                    .iter()
-                    .map(|l| {
-                        Value::obj([
-                            ("layer", l.layer.into()),
-                            ("bits", (l.bits as u64).into()),
-                            ("w_dims", dims_json(&l.w_dims)),
-                            ("w_qmin", (l.w_qmin as f64).into()),
-                            ("w_step", (l.w_step as f64).into()),
-                            ("w_packed", base64::encode(&l.w_packed).into()),
-                            ("b_qmin", (l.b_qmin as f64).into()),
-                            ("b_step", (l.b_step as f64).into()),
-                            ("b_len", l.b_len.into()),
-                            ("b_packed", base64::encode(&l.b_packed).into()),
-                        ])
-                    })
-                    .collect();
-                Value::obj([
-                    ("type", "segment".into()),
-                    ("session", r.session.into()),
-                    ("model", r.model.as_str().into()),
-                    ("pattern", r.pattern.to_json()),
-                    ("layers", Value::Arr(layers)),
-                ])
-            }
+            Response::Hello(h) => Value::obj([
+                ("type", "hello".into()),
+                ("binary_frames", h.binary_frames.into()),
+            ]),
+            Response::Segment(r) => Value::obj([
+                ("type", "segment".into()),
+                ("session", r.session.into()),
+                ("model", r.model.as_str().into()),
+                ("pattern", r.pattern.to_json()),
+                ("layers", layers_json(&r.segment.layers)),
+            ]),
             Response::Result(r) => {
                 let mut v = Value::obj([
                     ("type", "result".into()),
@@ -410,6 +660,9 @@ impl Response {
                 Ok(Response::Models(models))
             }
             "stats" => Ok(Response::Stats(v.req("stats")?.clone())),
+            "hello" => Ok(Response::Hello(HelloReply {
+                binary_frames: v.opt_bool("binary_frames", false),
+            })),
             "segment" => {
                 let mut layers = Vec::new();
                 for l in v.req_arr("layers")? {
@@ -455,6 +708,16 @@ impl Response {
     pub fn from_line(line: &str) -> Result<Response> {
         Response::from_json(&parse(line)?)
     }
+
+    /// Decode a frame of either kind (binary frames carry segment replies).
+    pub fn from_frame(frame: &Frame) -> Result<Response> {
+        match frame {
+            Frame::Json(line) => Response::from_line(line),
+            Frame::Binary(BinaryFrame { header, blob }) => {
+                Ok(Response::Segment(InferReply::from_binary(header, blob)?))
+            }
+        }
+    }
 }
 
 impl PatternInfo {
@@ -495,6 +758,9 @@ impl PatternInfo {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::frame::{read_any_frame, write_binary_frame, write_frame, Frame};
+    use qpart_core::rng::Rng;
+    use std::io::BufReader;
 
     fn infer_req() -> InferRequest {
         InferRequest {
@@ -510,37 +776,8 @@ mod tests {
         }
     }
 
-    #[test]
-    fn request_roundtrips() {
-        for req in [
-            Request::Ping,
-            Request::ListModels,
-            Request::Stats,
-            Request::Infer(infer_req()),
-            Request::Activation(ActivationUpload {
-                session: 42,
-                bits: 6,
-                qmin: -1.5,
-                step: 0.01,
-                dims: vec![1, 128],
-                packed: vec![1, 2, 3, 255],
-            }),
-            Request::Simulate(SimulateRequest {
-                req: infer_req(),
-                input: vec![0.5, -0.25, 1e-3],
-                input_dims: vec![1, 3],
-            }),
-        ] {
-            let line = req.to_line();
-            assert!(!line.contains('\n'));
-            let back = Request::from_line(&line).unwrap();
-            assert_eq!(back, req, "line: {line}");
-        }
-    }
-
-    #[test]
-    fn response_roundtrips() {
-        let seg = Response::Segment(InferReply {
+    fn sample_reply() -> InferReply {
+        InferReply {
             session: 7,
             model: "mlp6".into(),
             pattern: PatternInfo {
@@ -565,10 +802,83 @@ mod tests {
                     b_packed: vec![0xBE, 0xEF],
                 }],
             },
-        });
+        }
+    }
+
+    /// A pseudo-random reply with `n_layers` layers of varying sizes.
+    fn random_reply(rng: &mut Rng, n_layers: usize) -> InferReply {
+        let layers = (1..=n_layers)
+            .map(|l| {
+                let rows = rng.range_usize(1, 64);
+                let cols = rng.range_usize(1, 64);
+                let w_packed: Vec<u8> =
+                    (0..rng.range_usize(0, 512)).map(|_| rng.below(256) as u8).collect();
+                let b_packed: Vec<u8> =
+                    (0..rng.range_usize(0, 64)).map(|_| rng.below(256) as u8).collect();
+                LayerBlob {
+                    layer: l,
+                    bits: rng.range_usize(2, 16) as u8,
+                    w_dims: vec![rows, cols],
+                    w_qmin: rng.range_f64(-2.0, 0.0) as f32,
+                    w_step: rng.range_f64(1e-4, 1e-2) as f32,
+                    w_packed,
+                    b_qmin: rng.range_f64(-1.0, 0.0) as f32,
+                    b_step: rng.range_f64(1e-4, 1e-2) as f32,
+                    b_len: cols,
+                    b_packed,
+                }
+            })
+            .collect();
+        InferReply {
+            session: rng.below(1 << 40),
+            model: format!("model-{}", rng.below(100)),
+            pattern: PatternInfo {
+                partition: n_layers,
+                weight_bits: (0..n_layers).map(|_| rng.range_usize(2, 16) as u8).collect(),
+                activation_bits: rng.range_usize(2, 16) as u8,
+                accuracy_level: rng.range_f64(0.001, 0.05),
+                predicted_degradation: rng.range_f64(0.0, 0.05),
+                objective: rng.range_f64(0.0, 10.0),
+            },
+            segment: SegmentBlob { layers },
+        }
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        for req in [
+            Request::Ping,
+            Request::ListModels,
+            Request::Stats,
+            Request::Hello(HelloRequest { binary_frames: true }),
+            Request::Infer(infer_req()),
+            Request::Activation(ActivationUpload {
+                session: 42,
+                bits: 6,
+                qmin: -1.5,
+                step: 0.01,
+                dims: vec![1, 128],
+                packed: vec![1, 2, 3, 255],
+            }),
+            Request::Simulate(SimulateRequest {
+                req: infer_req(),
+                input: vec![0.5, -0.25, 1e-3],
+                input_dims: vec![1, 3],
+            }),
+        ] {
+            let line = req.to_line();
+            assert!(!line.contains('\n'));
+            let back = Request::from_line(&line).unwrap();
+            assert_eq!(back, req, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
         for resp in [
             Response::Pong,
-            seg,
+            Response::Hello(HelloReply { binary_frames: false }),
+            Response::Segment(sample_reply()),
             Response::Result(ResultReply {
                 session: 7,
                 prediction: 3,
@@ -604,5 +914,112 @@ mod tests {
         assert!(Request::from_line(r#"{"type":"warp"}"#).is_err());
         assert!(Response::from_line(r#"{"type":"warp"}"#).is_err());
         assert!(Request::from_line("not json").is_err());
+    }
+
+    #[test]
+    fn binary_segment_roundtrip_property() {
+        // property test: random segments survive the binary encoding
+        // exactly, through the frame layer, across many shapes and sizes
+        let mut rng = Rng::new(0xB15E6);
+        for trial in 0..50 {
+            let reply = random_reply(&mut rng, 1 + trial % 5);
+            let (header, blob) = reply.to_binary();
+            let back = InferReply::from_binary(&header, &blob).unwrap();
+            assert_eq!(back, reply, "trial {trial}");
+
+            // through write_binary_frame / read_any_frame
+            let mut wire = Vec::new();
+            write_binary_frame(&mut wire, &header, &blob).unwrap();
+            let mut r = BufReader::new(&wire[..]);
+            match Response::from_frame(&read_any_frame(&mut r).unwrap()).unwrap() {
+                Response::Segment(s) => assert_eq!(s, reply, "trial {trial}"),
+                other => panic!("trial {trial}: unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn binary_rejects_out_of_range_offsets() {
+        let reply = sample_reply();
+        let (header, blob) = reply.to_binary();
+        // truncating the blob must fail cleanly, not panic
+        assert!(InferReply::from_binary(&header, &blob[..1]).is_err());
+        assert!(InferReply::from_binary(&header, &[]).is_err());
+    }
+
+    #[test]
+    fn encoded_body_json_line_matches_full_serialization() {
+        let reply = sample_reply();
+        let body = EncodedSegmentBody::new(
+            &reply.model,
+            reply.pattern.clone(),
+            reply.segment.clone(),
+        );
+        // byte-identical to the one-shot serialization path
+        let line = body.json_line(reply.session, reply.pattern.objective);
+        assert_eq!(line, Response::Segment(reply.clone()).to_line());
+        // and a fresh session/objective stamps without re-encoding
+        let line9 = body.json_line(9, 0.5);
+        match Response::from_line(&line9).unwrap() {
+            Response::Segment(s) => {
+                assert_eq!(s.session, 9);
+                assert_eq!(s.pattern.objective, 0.5);
+                assert_eq!(s.segment, reply.segment);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(body.wire_bytes(), 4, "2 weight + 2 bias bytes");
+    }
+
+    #[test]
+    fn encoded_body_binary_header_matches_to_binary() {
+        let reply = sample_reply();
+        let body = EncodedSegmentBody::new(
+            &reply.model,
+            reply.pattern.clone(),
+            reply.segment.clone(),
+        );
+        let header = body.binary_header(reply.session, reply.pattern.objective);
+        let (direct_header, direct_blob) = reply.to_binary();
+        assert_eq!(header, direct_header);
+        assert_eq!(body.blob(), &direct_blob[..]);
+        let back = InferReply::from_binary(&header, body.blob()).unwrap();
+        assert_eq!(back, reply);
+    }
+
+    #[test]
+    fn binary_and_json_framings_agree_on_payload_bytes() {
+        // the acceptance contract: the same reply shipped over both
+        // framings decodes to byte-identical packed payloads
+        let mut rng = Rng::new(42);
+        let reply = random_reply(&mut rng, 3);
+        let (header, blob) = reply.to_binary();
+        let via_binary = InferReply::from_binary(&header, &blob).unwrap();
+        let via_json = match Response::from_line(&Response::Segment(reply.clone()).to_line())
+            .unwrap()
+        {
+            Response::Segment(s) => s,
+            other => panic!("unexpected {other:?}"),
+        };
+        for (a, b) in via_binary.segment.layers.iter().zip(&via_json.segment.layers) {
+            assert_eq!(a.w_packed, b.w_packed);
+            assert_eq!(a.b_packed, b.b_packed);
+        }
+        assert_eq!(via_binary.segment, via_json.segment);
+    }
+
+    #[test]
+    fn hello_request_over_json_frame() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Request::Hello(HelloRequest { binary_frames: true }).to_line())
+            .unwrap();
+        let mut r = BufReader::new(&wire[..]);
+        match read_any_frame(&mut r).unwrap() {
+            Frame::Json(line) => match Request::from_line(&line).unwrap() {
+                Request::Hello(h) => assert!(h.binary_frames),
+                other => panic!("unexpected {other:?}"),
+            },
+            other => panic!("unexpected {other:?}"),
+        }
     }
 }

@@ -25,6 +25,7 @@ use qpart_core::model::ModelSpec;
 use qpart_core::quant::{quantize, QuantPattern, Quantized};
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 
 /// Eval-batch size (matches the `_b32` executables in the bundle).
 pub const EVAL_BATCH: usize = 32;
@@ -126,9 +127,14 @@ impl PreparedSegment {
 }
 
 /// The executor: engine + bundle + weight and prepared-segment caches.
+///
+/// The bundle is shared via `Arc` — it is immutable after load, so an
+/// executor pool keeps **one** resident copy of the weights instead of
+/// one per worker. The executor itself stays `!Send` (PJRT clients are
+/// single-device); only the bundle crosses threads.
 pub struct Executor {
     pub engine: Engine,
-    pub bundle: Rc<Bundle>,
+    pub bundle: Arc<Bundle>,
     weights_cache: HashMap<String, Rc<ModelWeights>>,
     /// Prepared segments keyed by (model, pattern fingerprint).
     prepared_cache: HashMap<(String, String), Rc<PreparedSegment>>,
@@ -142,7 +148,7 @@ fn pattern_fingerprint(p: &QuantPattern) -> String {
 }
 
 impl Executor {
-    pub fn new(bundle: Rc<Bundle>) -> Result<Executor> {
+    pub fn new(bundle: Arc<Bundle>) -> Result<Executor> {
         Ok(Executor {
             engine: Engine::cpu()?,
             bundle,

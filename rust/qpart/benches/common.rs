@@ -7,7 +7,7 @@
 #![allow(dead_code)]
 
 use qpart::prelude::*;
-use std::rc::Rc;
+use std::sync::Arc;
 
 pub const LEVELS: [f64; 5] = [0.0025, 0.005, 0.01, 0.02, 0.05];
 
@@ -21,8 +21,8 @@ pub fn artifacts_dir() -> Option<&'static str> {
     None
 }
 
-pub fn load_bundle() -> Option<Rc<Bundle>> {
-    artifacts_dir().and_then(|d| Bundle::load(d).ok()).map(Rc::new)
+pub fn load_bundle() -> Option<Arc<Bundle>> {
+    artifacts_dir().and_then(|d| Bundle::load(d).ok()).map(Arc::new)
 }
 
 /// The mlp6 arch + calibration (+ pattern set), bundle-backed when possible.
@@ -30,7 +30,7 @@ pub struct Mlp6Setup {
     pub arch: ModelSpec,
     pub calib: CalibrationTable,
     pub patterns: PatternSet,
-    pub bundle: Option<Rc<Bundle>>,
+    pub bundle: Option<Arc<Bundle>>,
     /// true when the calibration came from the real noise-injection pass
     pub calibrated: bool,
 }

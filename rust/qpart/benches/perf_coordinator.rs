@@ -108,5 +108,32 @@ fn main() {
         format!("{:.0}", s.per_second(1.0)),
     ]);
 
+    // the dataplane's cached-reply splice vs. the full encode above: the
+    // body is serialized once, each per-session reply is a string stamp
+    use qpart::proto::messages::EncodedSegmentBody;
+    let (inner_pattern, inner_segment) = match &reply {
+        Response::Segment(r) => (r.pattern.clone(), r.segment.clone()),
+        _ => unreachable!(),
+    };
+    let body = EncodedSegmentBody::new("mlp6", inner_pattern, inner_segment);
+    let s = quick(|| {
+        black_box(body.json_line(black_box(7), black_box(0.1)));
+    });
+    table.row(vec![
+        "stamp cached reply (JSON)".into(),
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p99_ns),
+        format!("{:.0}", s.per_second(1.0)),
+    ]);
+    let s = quick(|| {
+        black_box(body.binary_header(black_box(7), black_box(0.1)));
+    });
+    table.row(vec![
+        "stamp cached reply (binary header)".into(),
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p99_ns),
+        format!("{:.0}", s.per_second(1.0)),
+    ]);
+
     table.print();
 }

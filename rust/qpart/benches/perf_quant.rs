@@ -74,8 +74,8 @@ fn main() {
     // whole-segment quantization through the executor (bundle-backed)
     if let Some(bundle) = setup.bundle.clone() {
         use qpart::prelude::*;
-        use std::rc::Rc;
-        let mut ex = Executor::new(Rc::clone(&bundle)).unwrap();
+        use std::sync::Arc;
+        let mut ex = Executor::new(Arc::clone(&bundle)).unwrap();
         let pat = setup
             .patterns
             .get(qpart::core::quant::PatternKey { level_idx: LEVEL_1PCT, partition: 6 })

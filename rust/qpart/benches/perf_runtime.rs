@@ -9,7 +9,7 @@ mod common;
 use common::*;
 use qpart::prelude::*;
 use qpart_bench::{black_box, fmt_ns, quick, Table};
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() {
     let Some(bundle) = load_bundle() else {
@@ -20,7 +20,7 @@ fn main() {
     let arch = bundle.arch("mlp6").unwrap().clone();
     let calib = bundle.calibration("mlp6").unwrap();
     let patterns = offline_quantize(&arch, &calib, OfflineConfig::default()).unwrap();
-    let mut ex = Executor::new(Rc::clone(&bundle)).unwrap();
+    let mut ex = Executor::new(Arc::clone(&bundle)).unwrap();
     let (x, _) = bundle.dataset("digits").unwrap();
     let x = HostTensor::from(x);
     let x1 = x.slice_rows_padded(0, 1, 1);

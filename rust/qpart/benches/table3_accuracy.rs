@@ -13,7 +13,7 @@ mod common;
 use common::*;
 use qpart::prelude::*;
 use qpart_bench::Table;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() {
     let Some(bundle) = load_bundle() else {
@@ -35,7 +35,7 @@ fn main() {
         .min(x.batch());
     let xs = x.slice_rows(0, n);
     let ys = &y[..n];
-    let mut ex = Executor::new(Rc::clone(&bundle)).unwrap();
+    let mut ex = Executor::new(Arc::clone(&bundle)).unwrap();
 
     // pruning ratio: largest in the ladder whose degradation at the deepest
     // partition stays within ~1.5% of baseline (the paper balances pruning

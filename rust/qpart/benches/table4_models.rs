@@ -14,7 +14,7 @@ mod common;
 use common::*;
 use qpart::prelude::*;
 use qpart_bench::Table;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn mb(bits: u64) -> f64 {
     bits as f64 / 8.0 / 1e6
@@ -33,7 +33,7 @@ fn main() {
     );
 
     if let Some(bundle) = &bundle {
-        let mut ex = Executor::new(Rc::clone(bundle)).unwrap();
+        let mut ex = Executor::new(Arc::clone(bundle)).unwrap();
         for entry in bundle.models.clone() {
             let arch = bundle.arch(&entry.arch).unwrap().clone();
             let calib = bundle.calibration(&entry.name).unwrap();

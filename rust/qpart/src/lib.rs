@@ -5,7 +5,7 @@
 //! ```no_run
 //! use qpart::prelude::*;
 //!
-//! let bundle = std::rc::Rc::new(Bundle::load("artifacts").unwrap());
+//! let bundle = std::sync::Arc::new(Bundle::load("artifacts").unwrap());
 //! let arch = bundle.arch("mlp6").unwrap();
 //! let calib = bundle.calibration("mlp6").unwrap();
 //! let patterns = offline_quantize(arch, &calib, OfflineConfig::default()).unwrap();
@@ -22,8 +22,9 @@
 //!   closed-form optimizer (Algorithms 1 & 2).
 //! * [`runtime`] — PJRT engine + artifact bundle + split-inference executor.
 //! * [`sim`] — the paper-§V simulation platform and scheme cost models.
-//! * [`coordinator`] — TCP serving stack (service/server/client/metrics).
-//! * [`proto`] — wire protocol.
+//! * [`coordinator`] — TCP serving stack (service/server/client/metrics)
+//!   with the batch-aware serving dataplane (`coordinator::sched`).
+//! * [`proto`] — wire protocol (JSON lines + binary segment frames).
 
 pub use qpart_coordinator as coordinator;
 pub use qpart_core as core;

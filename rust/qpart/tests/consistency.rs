@@ -158,6 +158,12 @@ fn server_workers_mirror_sim_server_slots() {
     assert_eq!(serving.workers, server.workers);
     // admission control must shed at the same depth from both entry points
     assert_eq!(serving.queue_capacity, server.queue_capacity);
+    // dataplane knobs: the layered config and ServerConfig must agree on
+    // defaults, or `--set serving.x=y` and the struct would diverge
+    assert_eq!(serving.session_ttl_secs, server.session_ttl.as_secs());
+    assert_eq!(serving.batch_window_us, server.batch_window.as_micros() as u64);
+    assert_eq!(serving.cache_bytes, server.cache_bytes);
+    assert_eq!(serving.binary_frames, server.binary_frames);
 }
 
 #[test]

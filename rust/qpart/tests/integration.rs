@@ -5,7 +5,7 @@
 
 use qpart::coordinator::client::paper_request;
 use qpart::prelude::*;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn artifacts_dir() -> Option<&'static str> {
     for dir in ["artifacts", "../artifacts", "../../artifacts"] {
@@ -28,8 +28,8 @@ macro_rules! require_artifacts {
     };
 }
 
-fn load_bundle() -> Rc<Bundle> {
-    Rc::new(Bundle::load(artifacts_dir().unwrap()).expect("bundle loads"))
+fn load_bundle() -> Arc<Bundle> {
+    Arc::new(Bundle::load(artifacts_dir().unwrap()).expect("bundle loads"))
 }
 
 #[test]
@@ -54,7 +54,7 @@ fn full_inference_matches_manifest_accuracy() {
     let entry = b.model("mlp6").unwrap().clone();
     let (x, y) = b.dataset(&entry.dataset).unwrap();
     let x = HostTensor::from(x);
-    let mut ex = Executor::new(Rc::clone(&b)).unwrap();
+    let mut ex = Executor::new(Arc::clone(&b)).unwrap();
     let acc = ex
         .eval_accuracy(&x, &y, |ex, chunk| ex.run_full("mlp6", chunk))
         .unwrap();
@@ -70,7 +70,7 @@ fn split_at_high_bits_matches_full() {
     require_artifacts!();
     let b = load_bundle();
     let arch = b.arch("mlp6").unwrap().clone();
-    let mut ex = Executor::new(Rc::clone(&b)).unwrap();
+    let mut ex = Executor::new(Arc::clone(&b)).unwrap();
     let (x, _) = b.dataset("digits").unwrap();
     let x = HostTensor::from(x);
     let input = x.slice_rows_padded(0, 1, 1);
@@ -130,7 +130,7 @@ fn split_accuracy_respects_degradation_budget() {
     let entry = b.model("mlp6").unwrap().clone();
     let (x, y) = b.dataset(&entry.dataset).unwrap();
     let x = HostTensor::from(x);
-    let mut ex = Executor::new(Rc::clone(&b)).unwrap();
+    let mut ex = Executor::new(Arc::clone(&b)).unwrap();
 
     // level index 2 = 1% budget; check a few partitions
     let k = 2usize;
@@ -161,7 +161,7 @@ fn segment_payload_matches_pattern_accounting() {
     let arch = b.arch("mlp6").unwrap().clone();
     let calib = b.calibration("mlp6").unwrap();
     let patterns = offline_quantize(&arch, &calib, OfflineConfig::default()).unwrap();
-    let mut ex = Executor::new(Rc::clone(&b)).unwrap();
+    let mut ex = Executor::new(Arc::clone(&b)).unwrap();
     let pat = patterns
         .get(qpart::core::quant::PatternKey { level_idx: 2, partition: 4 })
         .unwrap()
@@ -185,7 +185,7 @@ fn baselines_run_and_rank_accuracy() {
     let n = 320.min(x.batch());
     let xs = x.slice_rows(0, n);
     let ys = &y[..n];
-    let mut ex = Executor::new(Rc::clone(&b)).unwrap();
+    let mut ex = Executor::new(Arc::clone(&b)).unwrap();
 
     let p = 3usize;
     let acc_noopt = ex
@@ -214,7 +214,7 @@ fn conv_model_split_runs() {
     let (x, _) = b.dataset(&entry.dataset).unwrap();
     let x = HostTensor::from(x);
     let input = x.slice_rows_padded(0, 1, 1);
-    let mut ex = Executor::new(Rc::clone(&b)).unwrap();
+    let mut ex = Executor::new(Arc::clone(&b)).unwrap();
     for &p in &arch.partition_points.clone() {
         let pattern = QuantPattern {
             partition: p,
@@ -239,12 +239,13 @@ fn server_two_phase_roundtrip() {
         queue_capacity: 64,
         session_capacity: 128,
         artifacts_dir: dir.into(),
+        ..ServerConfig::default()
     })
     .expect("server starts");
     let addr = handle.addr.to_string();
 
     let b = load_bundle();
-    let mut client = DeviceClient::connect(&addr, Rc::clone(&b)).unwrap();
+    let mut client = DeviceClient::connect(&addr, Arc::clone(&b)).unwrap();
     assert!(client.ping().unwrap());
 
     let entry = b.model("mlp6").unwrap().clone();
@@ -283,6 +284,7 @@ fn server_rejects_garbage_and_unknown_sessions() {
         queue_capacity: 8,
         session_capacity: 8,
         artifacts_dir: dir.into(),
+        ..ServerConfig::default()
     })
     .unwrap();
     let addr = handle.addr.to_string();
