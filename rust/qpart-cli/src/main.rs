@@ -4,11 +4,12 @@
 //! qpart serve       [--config cfg.json] [--set k=v ...] [--listen addr] [--artifacts dir]
 //!                   [--workers N] [--queue N] [--sessions N] [--session-ttl SECS]
 //!                   [--batch-window MS] [--batch-max N] [--cache-bytes N]
-//!                   [--binary-frames true|false]
+//!                   [--binary-frames true|false] [--warm-cache] [--host-fallback]
 //! qpart request     --model mlp6 [--accuracy 0.01] [--n 16] [--addr host:port]
 //!                   [--capacity-bps 2e8] [--clock-hz 2e8] [--artifacts dir] [--binary]
 //! qpart bench-serve [--clients 8] [--requests 32] [--workers 4] [--keys 3]
 //!                   [--batch-window 2] [--cache-bytes N] [--binary-frames true|false]
+//!                   [--phase2 B] [--warm-cache] [--sweep workers=1,2,4,8] [--csv]
 //!                   [--artifacts dir]
 //! qpart sim         [--model mlp6] [--rate 20] [--devices 16] [--duration 10] [--seed 1]
 //! qpart offline     [--model mlp6] [--artifacts dir]
@@ -17,19 +18,21 @@
 //!
 //! `serve` starts the coordinator; `request` plays an edge device over the
 //! two-phase protocol (real PJRT execution on both sides); `bench-serve`
-//! load-tests the serving dataplane (in-process server, multi-client
-//! phase-1 driver, no PJRT needed — uses a synthetic bundle unless
-//! `--artifacts` is given); `sim` runs the discrete-event fleet
-//! simulation; `offline` prints the Algorithm-1 pattern table; `models`
-//! lists the bundle.
+//! load-tests the serving dataplane AND the batched phase-2 execution
+//! plane (in-process server, multi-client two-phase driver, no PJRT
+//! needed — synthetic bundle + host reference kernels unless
+//! `--artifacts` is given), with `--sweep workers=...` producing scaling
+//! curves and `--csv` the same CSV rows the qpart-bench harness emits;
+//! `sim` runs the discrete-event fleet simulation; `offline` prints the
+//! Algorithm-1 pattern table; `models` lists the bundle.
 
 mod args;
 
 use args::Args;
 use qpart::coordinator::client::{paper_request, random_input};
-use qpart::coordinator::testing::BlockingConn;
+use qpart::coordinator::testing::{synthetic_upload, BlockingConn};
 use qpart::prelude::*;
-use qpart::proto::messages::{HelloRequest, Request, Response};
+use qpart::proto::messages::{ActivationUpload, HelloRequest, Request, Response};
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
@@ -80,13 +83,23 @@ const USAGE: &str = "usage: qpart <serve|request|bench-serve|sim|offline|models>
            [--batch-max N]      max requests per drained batch (default 32)\n\
            [--cache-bytes N]    encoded-reply cache budget in bytes (LRU beyond it;\n\
                                 default 64 MiB)\n\
-           [--binary-frames B]  allow binary segment-frame negotiation (default true)\n\
+           [--binary-frames B]  allow binary-frame negotiation, symmetric: segment\n\
+                                replies down, activation uploads up (default true)\n\
+           [--warm-cache B]     pre-encode likely reply keys + pre-build phase-2\n\
+                                plans at startup (default false)\n\
+           [--host-fallback B]  phase 2 on pure-Rust reference kernels, no PJRT\n\
+                                (linear archs only; default false)\n\
   request  --model mlp6 --accuracy 0.01 --n 16 --addr 127.0.0.1:7878 [--binary]\n\
-  bench-serve  load-test the dataplane (synthetic bundle unless --artifacts):\n\
+  bench-serve  load-test the dataplane + batched phase-2 execution plane\n\
+           (synthetic bundle + host kernels unless --artifacts):\n\
            [--clients N] [--requests N-per-client] [--workers N] [--keys K]\n\
            [--batch-window MS] [--cache-bytes N] [--binary-frames B]\n\
+           [--phase2 B] [--warm-cache B] [--host-fallback B]\n\
+           [--sweep workers=1,2,4,8]  run once per value, print a scaling table\n\
+           [--csv]                    emit the table as CSV rows (qpart-bench format)\n\
            reports req/s, p50/p99 latency, shed rate, encodes vs requests,\n\
-           cache hit rate, and a binary-vs-JSON byte-identity check\n\
+           cache hit rate, phase-2 batch occupancy, uplink bytes saved, and\n\
+           binary-vs-JSON byte-identity checks in both directions\n\
   sim      --model mlp6 --rate 20 --devices 16 --duration 10\n\
   offline  --model mlp6\n\
   models";
@@ -125,16 +138,19 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         batch_max: args.get_usize("batch-max", 32)?,
         cache_bytes: args.get_usize("cache-bytes", serving.cache_bytes)?,
         binary_frames: bool_flag(args, "binary-frames", serving.binary_frames)?,
+        warm_cache: bool_flag(args, "warm-cache", serving.warm_cache)?,
+        host_fallback: bool_flag(args, "host-fallback", false)?,
         artifacts_dir: args.get_or("artifacts", &serving.artifacts_dir).to_string(),
     };
     println!(
-        "loading bundle from '{}' ({} workers, queue {}, batch window {:?}, cache {} MiB, binary frames {}) ...",
+        "loading bundle from '{}' ({} workers, queue {}, batch window {:?}, cache {} MiB, binary frames {}, warm cache {}) ...",
         server_cfg.artifacts_dir,
         server_cfg.workers,
         server_cfg.queue_capacity,
         server_cfg.batch_window,
         server_cfg.cache_bytes >> 20,
         server_cfg.binary_frames,
+        server_cfg.warm_cache,
     );
     let handle = serve(server_cfg)?;
     println!("qpart coordinator listening on {}", handle.addr);
@@ -224,6 +240,68 @@ fn quantile_us(sorted: &[u64], q: f64) -> f64 {
     sorted[idx.min(sorted.len() - 1)] as f64
 }
 
+/// One bench-serve run's result row (feeds the sweep table / CSV).
+struct BenchSummary {
+    workers: usize,
+    attempts: usize,
+    shed: u64,
+    req_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    encodes: u64,
+    coalesced: u64,
+    hit_rate_pct: f64,
+    phase2_execs: u64,
+    phase2_rows: u64,
+    uplink_saved_bytes: u64,
+}
+
+impl BenchSummary {
+    fn table_headers() -> [&'static str; 11] {
+        [
+            "workers",
+            "req/s",
+            "p50 ms",
+            "p99 ms",
+            "shed %",
+            "encodes",
+            "coalesced",
+            "hit %",
+            "p2 execs",
+            "p2 rows",
+            "uplink saved B",
+        ]
+    }
+
+    fn table_row(&self) -> Vec<String> {
+        vec![
+            self.workers.to_string(),
+            format!("{:.0}", self.req_per_s),
+            format!("{:.2}", self.p50_ms),
+            format!("{:.2}", self.p99_ms),
+            format!("{:.1}", 100.0 * self.shed as f64 / self.attempts.max(1) as f64),
+            self.encodes.to_string(),
+            self.coalesced.to_string(),
+            format!("{:.1}", self.hit_rate_pct),
+            self.phase2_execs.to_string(),
+            self.phase2_rows.to_string(),
+            self.uplink_saved_bytes.to_string(),
+        ]
+    }
+}
+
+/// Bytes of a JSON-framed activation request (line + newline).
+fn upload_json_bytes(a: &ActivationUpload) -> usize {
+    Request::Activation(a.clone()).to_line().len() + 1
+}
+
+/// Bytes of the same upload as a binary request frame (envelope + header
+/// + raw blob).
+fn upload_binary_bytes(a: &ActivationUpload) -> usize {
+    let (header, blob) = a.to_binary();
+    1 + 4 + 4 + header.len() + blob.len()
+}
+
 fn cmd_bench_serve(args: &Args) -> Result<(), String> {
     // bundle: real artifacts if given, else a synthetic temp bundle —
     // resolved out here so the temp dir is removed on EVERY exit path
@@ -234,23 +312,91 @@ fn cmd_bench_serve(args: &Args) -> Result<(), String> {
             (d.to_string_lossy().into_owned(), Some(d))
         }
     };
-    let model =
-        args.get_or("model", if synth_dir.is_some() { "tinymlp" } else { "mlp6" }).to_string();
-    let result = run_bench_serve(args, artifacts_dir, &model);
+    let synthetic = synth_dir.is_some();
+    let model = args.get_or("model", if synthetic { "tinymlp" } else { "mlp6" }).to_string();
+    let result = bench_serve_runs(args, &artifacts_dir, &model, synthetic);
     if let Some(d) = synth_dir {
         let _ = std::fs::remove_dir_all(d);
     }
     result
 }
 
-fn run_bench_serve(args: &Args, artifacts_dir: String, model: &str) -> Result<(), String> {
-    let workers = args.get_usize("workers", 4)?;
+/// Parse `--sweep workers=1,2,4,8` into the workers values to run.
+fn parse_sweep(spec: &str) -> Result<Vec<usize>, String> {
+    let (key, vals) = spec
+        .split_once('=')
+        .ok_or_else(|| format!("--sweep: expected key=v1,v2,..., got '{spec}'"))?;
+    if key != "workers" {
+        return Err(format!("--sweep: only 'workers' is sweepable, got '{key}'"));
+    }
+    vals.split(',')
+        .map(|v| {
+            v.trim()
+                .parse::<usize>()
+                .map_err(|_| format!("--sweep: bad workers value '{v}'"))
+        })
+        .collect()
+}
+
+/// Single-run or sweep mode, plus the sweep table / CSV output.
+fn bench_serve_runs(
+    args: &Args,
+    artifacts_dir: &str,
+    model: &str,
+    synthetic: bool,
+) -> Result<(), String> {
+    // phase-2 load and host-kernel execution default on for the synthetic
+    // bundle (no PJRT anywhere); with real artifacts both are opt-in
+    let phase2 = bool_flag(args, "phase2", synthetic)?;
+    let host_fallback = bool_flag(args, "host-fallback", synthetic)?;
+    let sweep = match args.get("sweep") {
+        Some(spec) => Some(parse_sweep(spec)?),
+        None => None,
+    };
+    if bool_flag(args, "csv", false)? {
+        // same switch qpart-bench's Table honors, so sweep CSV output
+        // matches the figure benches'
+        std::env::set_var("QPART_BENCH_CSV", "1");
+    }
+    let workers_list = match &sweep {
+        Some(v) => v.clone(),
+        None => vec![args.get_usize("workers", 4)?],
+    };
+    let mut table = qpart_bench::Table::new(
+        format!("bench-serve {} (model {model})", if sweep.is_some() { "sweep" } else { "run" }),
+        &BenchSummary::table_headers(),
+    );
+    for workers in workers_list {
+        let summary =
+            run_bench_serve(args, artifacts_dir, model, workers, phase2, host_fallback)?;
+        table.row(summary.table_row());
+    }
+    table.print();
+    Ok(())
+}
+
+#[allow(clippy::too_many_lines)]
+fn run_bench_serve(
+    args: &Args,
+    artifacts_dir: &str,
+    model: &str,
+    workers: usize,
+    phase2: bool,
+    host_fallback: bool,
+) -> Result<BenchSummary, String> {
     let clients = args.get_usize("clients", 8)?.max(1);
     let per_client = args.get_usize("requests", 32)?.max(1);
     let keys = args.get_usize("keys", 3)?.max(1);
     let window_ms = args.get_f64("batch-window", 2.0)?;
     let cache_bytes = args.get_usize("cache-bytes", 64 << 20)?;
     let binary = bool_flag(args, "binary-frames", true)?;
+    let warm = bool_flag(args, "warm-cache", false)?;
+
+    // the device-side arch spec (for boundary dims of phase-2 uploads)
+    let bundle = Bundle::load(artifacts_dir).map_err(|e| e.to_string())?;
+    let entry = bundle.model(model).map_err(|e| e.to_string())?;
+    let arch = bundle.arch(&entry.arch).map_err(|e| e.to_string())?.clone();
+    drop(bundle);
 
     let handle = serve(qpart::coordinator::ServerConfig {
         listen: "127.0.0.1:0".into(),
@@ -259,16 +405,21 @@ fn run_bench_serve(args: &Args, artifacts_dir: String, model: &str) -> Result<()
         batch_window: Duration::from_micros((window_ms * 1000.0).max(0.0) as u64),
         cache_bytes,
         binary_frames: binary,
-        artifacts_dir,
+        warm_cache: warm,
+        host_fallback,
+        artifacts_dir: artifacts_dir.to_string(),
         ..Default::default()
     })?;
     let addr = handle.addr.to_string();
     println!(
         "bench-serve: model={model} workers={workers} clients={clients} \
-         requests/client={per_client} keys={keys} batch-window={window_ms}ms"
+         requests/client={per_client} keys={keys} batch-window={window_ms}ms \
+         phase2={phase2} binary={binary}"
     );
 
     let mut prev = handle.snapshot();
+    let mut summary = None;
+    let mut uplink_saved_total = 0u64;
     for pass in 1..=2 {
         let barrier = Arc::new(Barrier::new(clients));
         let t0 = Instant::now();
@@ -276,53 +427,106 @@ fn run_bench_serve(args: &Args, artifacts_dir: String, model: &str) -> Result<()
         for c in 0..clients {
             let addr = addr.clone();
             let model = model.to_string();
+            let arch = arch.clone();
             let barrier = Arc::clone(&barrier);
             joins.push(std::thread::spawn(
-                move || -> Result<(Vec<u64>, u64, u64), String> {
+                move || -> Result<(Vec<u64>, u64, u64, u64), String> {
                     let mut conn = BlockingConn::connect(&addr)?;
+                    // odd clients negotiate the binary uplink (when the
+                    // server allows), evens stay JSON — both paths load
+                    let mut bin_session = false;
+                    if binary && c % 2 == 1 {
+                        match conn
+                            .call(&Request::Hello(HelloRequest { binary_frames: true }))?
+                        {
+                            Response::Hello(h) => bin_session = h.binary_frames,
+                            other => return Err(format!("hello: unexpected {other:?}")),
+                        }
+                    }
                     barrier.wait();
                     let mut lat = Vec::with_capacity(per_client);
                     let mut shed = 0u64;
                     let mut errors = 0u64;
+                    let mut saved = 0u64;
                     for i in 0..per_client {
                         let mut req = paper_request(&model, 0.02);
                         // K overlapping channel classes → K coalescing keys
                         // shared across all clients
                         req.channel_capacity_bps = 50e6 * (1 + (c + i) % keys) as f64;
                         let t = Instant::now();
-                        match conn.call(&Request::Infer(req))? {
-                            Response::Segment(_) => {
-                                lat.push(t.elapsed().as_micros() as u64)
+                        let reply = match conn.call(&Request::Infer(req))? {
+                            Response::Segment(r) => r,
+                            Response::Error(e) if e.code == "overloaded" => {
+                                shed += 1;
+                                continue;
                             }
-                            Response::Error(e) if e.code == "overloaded" => shed += 1,
                             Response::Error(e) => {
                                 errors += 1;
                                 eprintln!("client {c}: {}: {}", e.code, e.message);
+                                continue;
                             }
                             other => return Err(format!("unexpected response {other:?}")),
+                        };
+                        if phase2 {
+                            let upload =
+                                synthetic_upload(&reply, &arch, (c * 10_000 + i) as u64);
+                            if bin_session {
+                                saved += (upload_json_bytes(&upload)
+                                    .saturating_sub(upload_binary_bytes(&upload)))
+                                    as u64;
+                            }
+                            let resp = if bin_session {
+                                conn.call_binary_upload(&upload)?
+                            } else {
+                                conn.call(&Request::Activation(upload))?
+                            };
+                            match resp {
+                                Response::Result(_) => {}
+                                // failed uploads record no latency sample
+                                // (matching the infer shed/error paths)
+                                Response::Error(e) if e.code == "overloaded" => {
+                                    shed += 1;
+                                    continue;
+                                }
+                                Response::Error(e) => {
+                                    errors += 1;
+                                    eprintln!("client {c} upload: {}: {}", e.code, e.message);
+                                    continue;
+                                }
+                                other => {
+                                    return Err(format!("unexpected response {other:?}"))
+                                }
+                            }
                         }
+                        lat.push(t.elapsed().as_micros() as u64);
                     }
-                    Ok((lat, shed, errors))
+                    Ok((lat, shed, errors, saved))
                 },
             ));
         }
         let mut lats: Vec<u64> = Vec::new();
         let mut shed = 0u64;
         let mut errors = 0u64;
+        let mut pass_saved = 0u64;
         for j in joins {
-            let (l, s, e) = j.join().map_err(|_| "bench client panicked".to_string())??;
+            let (l, s, e, saved) =
+                j.join().map_err(|_| "bench client panicked".to_string())??;
             lats.extend(l);
             shed += s;
             errors += e;
+            pass_saved += saved;
         }
+        uplink_saved_total += pass_saved;
         let wall = t0.elapsed().as_secs_f64();
         lats.sort_unstable();
-        let attempts = (clients * per_client) as u64;
+        let attempts = clients * per_client;
         let snap = handle.snapshot();
         let d_hits = snap.cache_hits - prev.cache_hits;
         let d_misses = snap.cache_misses - prev.cache_misses;
         let d_encodes = snap.encodes_total - prev.encodes_total;
         let d_coalesced = snap.coalesced_total - prev.coalesced_total;
+        let d_execs = snap.phase2_execs_total - prev.phase2_execs_total;
+        let d_rows = snap.phase2_rows_total - prev.phase2_rows_total;
         let lookups = d_hits + d_misses;
         let hit_rate = if lookups > 0 { 100.0 * d_hits as f64 / lookups as f64 } else { 0.0 };
         // per-pass queue-wait mean from the cumulative histogram sums
@@ -350,13 +554,38 @@ fn run_bench_serve(args: &Args, artifacts_dir: String, model: &str) -> Result<()
              coalesced {d_coalesced}, cache hits {d_hits}/{lookups} ({hit_rate:.1}%), \
              queue wait mean {d_wait_mean:.0} µs"
         );
+        if phase2 {
+            let occupancy =
+                if d_execs > 0 { d_rows as f64 / d_execs as f64 } else { f64::NAN };
+            println!(
+                "        phase2: {d_rows} uploads in {d_execs} server-segment runs \
+                 (occupancy {occupancy:.2})"
+            );
+        }
         if errors > 0 {
             return Err(format!("{errors} requests failed"));
         }
+        summary = Some(BenchSummary {
+            workers,
+            attempts,
+            shed,
+            req_per_s: lats.len() as f64 / wall,
+            p50_ms: quantile_us(&lats, 0.50) / 1000.0,
+            p99_ms: quantile_us(&lats, 0.99) / 1000.0,
+            encodes: d_encodes,
+            coalesced: d_coalesced,
+            hit_rate_pct: hit_rate,
+            phase2_execs: d_execs,
+            phase2_rows: d_rows,
+            // per-pass, like every other field in the row (the cumulative
+            // total is printed in the totals line instead)
+            uplink_saved_bytes: pass_saved,
+        });
         prev = snap;
     }
 
-    // byte-identity check: a binary-frame session against a JSON control
+    // byte-identity check: a binary-frame session against a JSON control,
+    // in BOTH directions (segment downlink, activation uplink)
     if binary {
         let mut json_conn = BlockingConn::connect(&addr)?;
         let mut bin_conn = BlockingConn::connect(&addr)?;
@@ -377,19 +606,62 @@ fn run_bench_serve(args: &Args, artifacts_dir: String, model: &str) -> Result<()
             return Err("binary-frame segment differs from JSON control".into());
         }
         println!("binary-frame check: segment payloads byte-identical across framings: OK");
+
+        // uplink: the same upload must decode identically from both
+        // framings, and (with phase 2 on) produce the same prediction
+        let upload = synthetic_upload(&b, &arch, 424_242);
+        let (header, blob) = upload.to_binary();
+        let via_bin =
+            ActivationUpload::from_binary(&header, &blob).map_err(|e| e.to_string())?;
+        let via_json = match Request::from_line(&Request::Activation(upload.clone()).to_line())
+            .map_err(|e| e.to_string())?
+        {
+            Request::Activation(u) => u,
+            other => return Err(format!("unexpected request {other:?}")),
+        };
+        if via_bin != upload || via_json != upload || via_bin.packed != via_json.packed {
+            return Err("binary activation frame differs from JSON path".into());
+        }
+        println!(
+            "binary-frame check: activation payloads byte-identical across framings: OK \
+             ({} B binary vs {} B JSON per upload)",
+            upload_binary_bytes(&upload),
+            upload_json_bytes(&upload),
+        );
+        if phase2 {
+            let ra = match bin_conn.call_binary_upload(&upload)? {
+                Response::Result(r) => r,
+                other => return Err(format!("unexpected response {other:?}")),
+            };
+            // same seed → same payload; the session comes from `a` itself
+            let json_upload = synthetic_upload(&a, &arch, 424_242);
+            let rb = match json_conn.call(&Request::Activation(json_upload))? {
+                Response::Result(r) => r,
+                other => return Err(format!("unexpected response {other:?}")),
+            };
+            if ra.prediction != rb.prediction || ra.logits != rb.logits {
+                return Err("phase-2 results differ across framings".into());
+            }
+            println!("binary-frame check: phase-2 results identical across framings: OK");
+        }
     }
 
     let final_snap = handle.snapshot();
     println!(
-        "totals: requests {}, encodes {}, coalesced {}, cache hits {}, cache misses {}",
+        "totals: requests {}, encodes {}, coalesced {}, cache hits {}, cache misses {}, \
+         phase2 execs {}, phase2 rows {}, warmed {}, uplink bytes saved {}",
         final_snap.requests_total,
         final_snap.encodes_total,
         final_snap.coalesced_total,
         final_snap.cache_hits,
         final_snap.cache_misses,
+        final_snap.phase2_execs_total,
+        final_snap.phase2_rows_total,
+        final_snap.warmed_total,
+        uplink_saved_total,
     );
     handle.shutdown();
-    Ok(())
+    Ok(summary.expect("two passes always ran"))
 }
 
 fn cmd_sim(args: &Args) -> Result<(), String> {

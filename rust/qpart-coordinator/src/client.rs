@@ -5,13 +5,15 @@
 //! engine (the same Pallas-kernel executables a real deployment would ship
 //! in the device image), quantizes + bit-packs the boundary activation,
 //! uploads it, and receives the prediction. It can negotiate binary
-//! segment frames ([`DeviceClient::negotiate_binary`]) — the read path
-//! accepts either framing transparently.
+//! frames ([`DeviceClient::negotiate_binary`]) — the read path accepts
+//! either framing transparently, and a granted negotiation is symmetric:
+//! segment replies arrive as binary frames and activation uploads are
+//! sent as binary request frames (no base64 on the uplink).
 
 use crate::service::boundary_dims;
 use qpart_core::model::ModelSpec;
 use qpart_core::quant::{pack_bits, quantize, QuantPattern};
-use qpart_proto::frame::{read_any_frame, write_frame};
+use qpart_proto::frame::{read_any_frame, write_binary_frame, write_frame};
 use qpart_proto::messages::{
     ActivationUpload, HelloRequest, InferReply, InferRequest, Request, Response, SimulateRequest,
 };
@@ -47,10 +49,19 @@ impl DeviceClient {
         })
     }
 
-    /// Send one request and read one response (either framing).
+    /// Send one request and read one response (either framing). After a
+    /// granted [`DeviceClient::negotiate_binary`], activation uploads go
+    /// out as binary request frames; everything else stays JSON.
     pub fn call(&mut self, req: &Request) -> Result<Response> {
-        write_frame(&mut self.writer, &req.to_line())
-            .map_err(|e| Error::Xla(format!("write: {e}")))?;
+        match req {
+            Request::Activation(a) if self.binary_frames => {
+                let (header, blob) = a.to_binary();
+                write_binary_frame(&mut self.writer, &header, &blob)
+                    .map_err(|e| Error::Xla(format!("write: {e}")))?;
+            }
+            _ => write_frame(&mut self.writer, &req.to_line())
+                .map_err(|e| Error::Xla(format!("write: {e}")))?,
+        }
         let frame =
             read_any_frame(&mut self.reader).map_err(|e| Error::Xla(format!("read: {e}")))?;
         Response::from_frame(&frame).map_err(Error::Core)

@@ -6,8 +6,13 @@
 //!   (Algorithm 1 at startup), per-request decisions (Algorithm 2),
 //!   segment quantization + bit-packing through the encoded-reply cache,
 //!   batch handling (group-by-key, encode once, fan out), session state
-//!   for the two-phase protocol, PJRT execution of the server-side
-//!   segment.
+//!   for the two-phase protocol, and the **batch-aware execution plane**
+//!   for phase 2: decoded activation uploads group by
+//!   `(model, partition)` and row-stack into server-segment executions
+//!   of up to `EVAL_BATCH` rows, over the pool-wide
+//!   `qpart_runtime::CompileCache` (each segment compiled once per
+//!   server, not once per worker), with optional startup warming
+//!   (`--warm-cache`).
 //! * [`sched`] — the **serving dataplane** between the accept loop and
 //!   the executor pool: batch draining with an optional coalescing
 //!   window, the `(model, accuracy level, partition)`-keyed
@@ -50,5 +55,5 @@ pub use client::DeviceClient;
 pub use metrics::{Metrics, MetricsHub, MetricsSnapshot};
 pub use sched::{BatchPolicy, EncodedReplyCache, Job, WireReply};
 pub use server::{serve, ServerConfig, ServerHandle};
-pub use service::Service;
+pub use service::{Service, ServiceOptions};
 pub use session::{Session, SessionTable, SharedSessionTable};

@@ -15,9 +15,18 @@
 //! (encodes < requests ⇔ the dataplane is amortizing work), and the
 //! `segment_cache` section carries the cache's hit/miss/bytes-saved
 //! counters.
+//!
+//! Execution-plane metrics: `phase2_execs_total` counts server-segment
+//! executions and `phase2_rows_total` the activation rows they carried —
+//! their ratio is the **batch occupancy** (rows per execution; N
+//! coalesced same-key uploads should run as ⌈N/EVAL_BATCH⌉ executions,
+//! not N). `warmed_total` counts `--warm-cache` startup warms, and the
+//! `compile_cache` section carries the pool-wide compile cache's
+//! once-per-key counters.
 
 use crate::sched::EncodedReplyCache;
 use qpart_core::json::Value;
+use qpart_runtime::CompileCache;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -158,6 +167,14 @@ pub struct Metrics {
     /// Segment encodes actually performed (quantize + pack + serialize).
     /// Coalescing + caching make this < infer requests under shared keys.
     pub encodes_total: AtomicU64,
+    /// Phase-2 server-segment executions (each carries up to EVAL_BATCH
+    /// coalesced activation rows).
+    pub phase2_execs_total: AtomicU64,
+    /// Activation rows executed by phase-2 runs. `rows / execs` is the
+    /// batch occupancy the coalescing window buys.
+    pub phase2_rows_total: AtomicU64,
+    /// Reply keys warmed at startup (`--warm-cache`).
+    pub warmed_total: AtomicU64,
     /// End-to-end request handling (decision + quantize + execute).
     pub handle_latency: Histogram,
     /// Algorithm 2 decision time.
@@ -184,12 +201,25 @@ pub struct MetricsSnapshot {
     pub batches_total: u64,
     pub coalesced_total: u64,
     pub encodes_total: u64,
+    pub phase2_execs_total: u64,
+    pub phase2_rows_total: u64,
+    pub warmed_total: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Pool-wide compile-cache builds (0 in per-worker snapshots; the
+    /// cache is shared, not per-worker).
+    pub compilations_total: u64,
     pub handle_count: u64,
     pub handle_mean_us: f64,
     pub queue_wait_count: u64,
     pub queue_wait_mean_us: f64,
+}
+
+impl MetricsSnapshot {
+    /// Mean activation rows per phase-2 execution (NaN before the first).
+    pub fn batch_occupancy_mean(&self) -> f64 {
+        self.phase2_rows_total as f64 / self.phase2_execs_total as f64
+    }
 }
 
 impl Metrics {
@@ -210,8 +240,12 @@ impl Metrics {
             batches_total: self.batches_total.load(Ordering::Relaxed),
             coalesced_total: self.coalesced_total.load(Ordering::Relaxed),
             encodes_total: self.encodes_total.load(Ordering::Relaxed),
+            phase2_execs_total: self.phase2_execs_total.load(Ordering::Relaxed),
+            phase2_rows_total: self.phase2_rows_total.load(Ordering::Relaxed),
+            warmed_total: self.warmed_total.load(Ordering::Relaxed),
             cache_hits: 0,
             cache_misses: 0,
+            compilations_total: 0,
             handle_count: self.handle_latency.count(),
             handle_mean_us: self.handle_latency.mean_us(),
             queue_wait_count: self.queue_wait.count(),
@@ -231,6 +265,12 @@ impl Metrics {
             ("batches_total", self.batches_total.load(Ordering::Relaxed).into()),
             ("coalesced_total", self.coalesced_total.load(Ordering::Relaxed).into()),
             ("encodes_total", self.encodes_total.load(Ordering::Relaxed).into()),
+            (
+                "phase2_execs_total",
+                self.phase2_execs_total.load(Ordering::Relaxed).into(),
+            ),
+            ("phase2_rows_total", self.phase2_rows_total.load(Ordering::Relaxed).into()),
+            ("warmed_total", self.warmed_total.load(Ordering::Relaxed).into()),
             ("handle", self.handle_latency.to_json()),
             ("decide", self.decide_latency.to_json()),
             ("quantize", self.quantize_latency.to_json()),
@@ -255,6 +295,9 @@ struct CounterTotals {
     batches_total: u64,
     coalesced_total: u64,
     encodes_total: u64,
+    phase2_execs_total: u64,
+    phase2_rows_total: u64,
+    warmed_total: u64,
 }
 
 impl CounterTotals {
@@ -270,6 +313,9 @@ impl CounterTotals {
             batches_total: m.batches_total.load(Ordering::Relaxed),
             coalesced_total: m.coalesced_total.load(Ordering::Relaxed),
             encodes_total: m.encodes_total.load(Ordering::Relaxed),
+            phase2_execs_total: m.phase2_execs_total.load(Ordering::Relaxed),
+            phase2_rows_total: m.phase2_rows_total.load(Ordering::Relaxed),
+            warmed_total: m.warmed_total.load(Ordering::Relaxed),
         }
     }
 
@@ -284,6 +330,9 @@ impl CounterTotals {
         self.batches_total += other.batches_total;
         self.coalesced_total += other.coalesced_total;
         self.encodes_total += other.encodes_total;
+        self.phase2_execs_total += other.phase2_execs_total;
+        self.phase2_rows_total += other.phase2_rows_total;
+        self.warmed_total += other.warmed_total;
     }
 }
 
@@ -308,6 +357,7 @@ pub struct MetricsHub {
     front: Arc<Metrics>,
     workers: Mutex<Vec<Arc<Metrics>>>,
     segment_cache: Mutex<Option<Arc<EncodedReplyCache>>>,
+    compile_cache: Mutex<Option<Arc<CompileCache>>>,
 }
 
 impl MetricsHub {
@@ -336,6 +386,17 @@ impl MetricsHub {
     /// The registered encoded-reply cache, if any.
     pub fn segment_cache(&self) -> Option<Arc<EncodedReplyCache>> {
         self.segment_cache.lock().unwrap().clone()
+    }
+
+    /// Register the pool-wide compile cache so its once-per-key counters
+    /// are surfaced in snapshots and the stats document.
+    pub fn register_compile_cache(&self, cache: Arc<CompileCache>) {
+        *self.compile_cache.lock().unwrap() = Some(cache);
+    }
+
+    /// The registered compile cache, if any.
+    pub fn compile_cache(&self) -> Option<Arc<CompileCache>> {
+        self.compile_cache.lock().unwrap().clone()
     }
 
     pub fn num_workers(&self) -> usize {
@@ -384,6 +445,8 @@ impl MetricsHub {
             Some(c) => (c.hits(), c.misses()),
             None => (0, 0),
         };
+        let compilations_total =
+            self.compile_cache().map(|c| c.compilations()).unwrap_or(0);
         MetricsSnapshot {
             requests_total: agg.totals.requests_total,
             errors_total: agg.totals.errors_total,
@@ -392,8 +455,12 @@ impl MetricsHub {
             batches_total: agg.totals.batches_total,
             coalesced_total: agg.totals.coalesced_total,
             encodes_total: agg.totals.encodes_total,
+            phase2_execs_total: agg.totals.phase2_execs_total,
+            phase2_rows_total: agg.totals.phase2_rows_total,
+            warmed_total: agg.totals.warmed_total,
             cache_hits,
             cache_misses,
+            compilations_total,
             handle_count: agg.handle.count(),
             handle_mean_us: agg.handle.mean_us(),
             queue_wait_count: agg.queue_wait.count(),
@@ -417,6 +484,14 @@ impl MetricsHub {
             ("batches_total", agg.totals.batches_total.into()),
             ("coalesced_total", agg.totals.coalesced_total.into()),
             ("encodes_total", agg.totals.encodes_total.into()),
+            ("phase2_execs_total", agg.totals.phase2_execs_total.into()),
+            ("phase2_rows_total", agg.totals.phase2_rows_total.into()),
+            (
+                "batch_occupancy_mean",
+                (agg.totals.phase2_rows_total as f64 / agg.totals.phase2_execs_total as f64)
+                    .into(),
+            ),
+            ("warmed_total", agg.totals.warmed_total.into()),
             ("handle", agg.handle.to_json()),
             ("decide", agg.decide.to_json()),
             ("quantize", agg.quantize.to_json()),
@@ -426,6 +501,9 @@ impl MetricsHub {
         ]);
         if let Some(cache) = self.segment_cache() {
             v.set("segment_cache", cache.to_json());
+        }
+        if let Some(cache) = self.compile_cache() {
+            v.set("compile_cache", cache.to_json());
         }
         v
     }
@@ -471,10 +549,44 @@ mod tests {
         let v = m.to_json();
         for key in
             ["requests_total", "handle", "decide", "quantize", "execute", "queue_wait",
-             "batches_total", "coalesced_total", "encodes_total"]
+             "batches_total", "coalesced_total", "encodes_total", "phase2_execs_total",
+             "phase2_rows_total", "warmed_total"]
         {
             assert!(v.get(key).is_some(), "{key}");
         }
+    }
+
+    #[test]
+    fn phase2_counters_aggregate_and_expose_occupancy() {
+        let hub = MetricsHub::new();
+        let w1 = hub.register_worker();
+        let w2 = hub.register_worker();
+        Metrics::inc(&w1.phase2_execs_total);
+        Metrics::add(&w1.phase2_rows_total, 32);
+        Metrics::inc(&w2.phase2_execs_total);
+        Metrics::add(&w2.phase2_rows_total, 8);
+        Metrics::inc(&w2.warmed_total);
+        let snap = hub.snapshot();
+        assert_eq!(snap.phase2_execs_total, 2);
+        assert_eq!(snap.phase2_rows_total, 40);
+        assert_eq!(snap.warmed_total, 1);
+        assert!((snap.batch_occupancy_mean() - 20.0).abs() < 1e-9);
+        let v = hub.to_json();
+        assert_eq!(v.req_f64("phase2_rows_total").unwrap() as u64, 40);
+        assert_eq!(v.req_f64("batch_occupancy_mean").unwrap(), 20.0);
+    }
+
+    #[test]
+    fn hub_surfaces_registered_compile_cache() {
+        let hub = MetricsHub::new();
+        assert!(hub.to_json().get("compile_cache").is_none(), "absent until registered");
+        assert_eq!(hub.snapshot().compilations_total, 0);
+        let cache = Arc::new(CompileCache::new());
+        hub.register_compile_cache(Arc::clone(&cache));
+        let v = hub.to_json();
+        let section = v.req("compile_cache").unwrap();
+        assert_eq!(section.req_f64("compilations").unwrap(), 0.0);
+        assert_eq!(section.req_f64("max_compiles_per_key").unwrap(), 0.0);
     }
 
     #[test]

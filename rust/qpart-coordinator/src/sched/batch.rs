@@ -89,6 +89,12 @@ pub enum DrainOutcome {
     Disconnected,
 }
 
+/// Whether a request can amortize work by coalescing with same-key peers
+/// in a batch (and is therefore worth holding the window open for).
+fn coalescible(req: &Request) -> bool {
+    matches!(req, Request::Infer(_) | Request::Activation(_))
+}
+
 /// Greedily take everything already queued, up to `max_batch` total.
 fn top_up(rx: &Receiver<Job>, batch: &mut Vec<Job>, max_batch: usize) {
     while batch.len() < max_batch {
@@ -128,10 +134,13 @@ pub fn drain_batch(
         batch
     };
     // phase 2: coalescing window — short lock slices, interleavable.
-    // Only infer requests can coalesce, so a batch without any skips the
-    // window entirely: ping/stats/activation jobs (the device is blocked
-    // on its prediction!) must not pay latency for zero batching benefit.
-    if !batch.iter().any(|j| matches!(j.req, Request::Infer(_))) {
+    // Only coalescible requests benefit from waiting: `infer` requests
+    // share one encode per (model, level, partition) group, and
+    // `activation` uploads row-stack into one server-segment execution
+    // per (model, partition) group. A batch with neither (ping/stats)
+    // skips the window entirely — it must not pay latency for zero
+    // batching benefit.
+    if !batch.iter().any(|j| coalescible(&j.req)) {
         return DrainOutcome::Batch(batch);
     }
     let deadline = Instant::now() + policy.window;
@@ -169,8 +178,8 @@ mod tests {
         (Job::new(Request::Ping, tx), rx)
     }
 
-    /// An infer job (the only request kind that opts a batch into the
-    /// coalescing window).
+    /// An infer job (coalescible: same-key requests share one encode, so
+    /// it opts a batch into the coalescing window).
     fn infer_job() -> (Job, Receiver<WireReply>) {
         let (tx, rx) = sync_channel(1);
         let req = InferRequest {
@@ -262,10 +271,49 @@ mod tests {
         drop(sender.join().unwrap());
     }
 
+    /// An activation job (coalescible: uploads row-stack into batched
+    /// phase-2 executions, so they opt into the window like infers).
+    fn activation_job() -> (Job, Receiver<WireReply>) {
+        let (tx, rx) = sync_channel(1);
+        let req = qpart_proto::messages::ActivationUpload {
+            session: 1,
+            bits: 8,
+            qmin: 0.0,
+            step: 0.01,
+            dims: vec![1, 4],
+            packed: vec![0u8; 4],
+        };
+        (Job::new(Request::Activation(req), tx), rx)
+    }
+
+    #[test]
+    fn activation_batches_wait_out_the_window_for_stragglers() {
+        // concurrent uploads must be able to coalesce into one batched
+        // server-segment execution: an activation opens the window
+        let (tx, rx) = sync_channel::<Job>(16);
+        let (j, _r0) = activation_job();
+        tx.send(j).unwrap();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            let (j, r) = activation_job();
+            tx.send(j).unwrap();
+            r
+        });
+        let rx = Mutex::new(rx);
+        let policy = BatchPolicy { window: Duration::from_millis(500), max_batch: 2 };
+        match drain_batch(&rx, &policy, Duration::from_millis(100)) {
+            DrainOutcome::Batch(b) => {
+                assert_eq!(b.len(), 2, "straggling upload coalesced within the window")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        drop(sender.join().unwrap());
+    }
+
     #[test]
     fn non_infer_batches_skip_the_window() {
-        // an activation/ping-only batch must not pay the coalescing
-        // window: the device is blocked waiting and nothing can coalesce
+        // a ping/stats-only batch must not pay the coalescing window:
+        // nothing in it can amortize work by waiting
         let (tx, rx) = sync_channel::<Job>(16);
         let rx = Mutex::new(rx);
         let (j, _r) = job();

@@ -12,10 +12,13 @@
 //! * [`batch`] — workers drain the shared queue into **batches**
 //!   ([`drain_batch`]), the service groups the batch's infer requests by
 //!   coalescing key, and one plan/encode fans out to every waiting
-//!   connection as a shared [`WireReply`]. An optional coalescing window
-//!   (`--batch-window`) holds the first request briefly so concurrent
-//!   same-key requests land in one group; `queue_wait` metrics expose the
-//!   latency this buys throughput with.
+//!   connection as a shared [`WireReply`]. The same drain feeds the
+//!   phase-2 half of the plane: `activation` uploads group by
+//!   `(model, partition)` and row-stack into batched server-segment
+//!   executions of up to `EVAL_BATCH` rows each. An optional coalescing
+//!   window (`--batch-window`) holds the first request briefly so
+//!   concurrent same-key requests land in one group; `queue_wait`
+//!   metrics expose the latency this buys throughput with.
 //! * [`cache`] — the [`EncodedReplyCache`] keeps fully serialized reply
 //!   bodies (`qpart_proto::messages::EncodedSegmentBody`) across batches,
 //!   LRU-evicted under a byte budget (`--cache-bytes`), so steady-state

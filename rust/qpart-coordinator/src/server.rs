@@ -25,11 +25,11 @@
 
 use crate::metrics::{Metrics, MetricsHub, MetricsSnapshot};
 use crate::sched::{drain_batch, BatchPolicy, DrainOutcome, EncodedReplyCache, Job, WireReply};
-use crate::service::Service;
+use crate::service::{Service, ServiceOptions};
 use crate::session::SharedSessionTable;
-use qpart_proto::frame::{read_frame, write_binary_frame, write_frame, FrameError};
+use qpart_proto::frame::{read_any_frame, write_binary_frame, write_frame, Frame, FrameError};
 use qpart_proto::messages::{ErrorReply, HelloReply, Request, Response};
-use qpart_runtime::Bundle;
+use qpart_runtime::{Bundle, CompileCache};
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -49,6 +49,10 @@ use std::time::Duration;
 ///   job queue concurrently. `1` reproduces the classic single-inference-
 ///   thread coordinator; the default (`4`) mirrors the simulator's
 ///   `FleetConfig::server_slots` default so modeled and live serving agree.
+///   Caution for `real-xla` builds: the pool shares compiled executables
+///   through the compile cache; if the swapped-in bindings' handles are
+///   not thread-safe for concurrent execution, run `workers = 1` (see the
+///   README's "Real XLA" notes — the offline stub and PJRT CPU are safe).
 /// * `queue_capacity` — **admission control**: the bounded depth of the
 ///   shared job queue. When all workers are busy and the queue is full,
 ///   new requests are shed immediately with an `overloaded` error rather
@@ -69,8 +73,18 @@ use std::time::Duration;
 /// * `cache_bytes` — byte budget of the encoded-reply cache (LRU beyond
 ///   it). The most recent entry always stays resident.
 /// * `binary_frames` — allow connections to negotiate length-prefixed
-///   binary segment frames via `hello` (JSON-lines stays the default and
-///   the fallback for peers that never negotiate).
+///   binary frames via `hello` (JSON-lines stays the default and the
+///   fallback for peers that never negotiate). The grant is symmetric:
+///   segment replies go out as binary frames and activation uploads may
+///   come in as binary request frames.
+/// * `warm_cache` — pre-warm the shared caches at startup: one worker
+///   encodes the most-likely `(model, level, partition)` reply keys
+///   (Algorithm 1 enumerates them; Algorithm 2 under the paper-default
+///   profile picks per level) and pre-builds their phase-2 plans, so the
+///   first requests hit warm caches (`warmed_total` in stats).
+/// * `host_fallback` — run phase 2 on the pure-Rust reference kernels
+///   (linear architectures only). For tests and `bench-serve`; a PJRT
+///   deployment leaves this off.
 /// * `artifacts_dir` — artifact bundle directory (`make artifacts`);
 ///   loaded **once** and shared across the pool via `Arc`.
 #[derive(Debug, Clone)]
@@ -92,8 +106,16 @@ pub struct ServerConfig {
     pub batch_max: usize,
     /// Encoded-reply cache byte budget.
     pub cache_bytes: usize,
-    /// Allow binary-frame negotiation.
+    /// Allow binary-frame negotiation (symmetric: segment replies
+    /// downlink AND activation uploads uplink).
     pub binary_frames: bool,
+    /// Pre-warm the encoded-reply and compile caches at startup: one
+    /// worker encodes the most-likely reply keys and pre-builds their
+    /// phase-2 plans before the server accepts traffic.
+    pub warm_cache: bool,
+    /// Execute phase 2 with the pure-Rust host reference kernels instead
+    /// of PJRT (tests / bench-serve; linear architectures only).
+    pub host_fallback: bool,
     /// Artifact bundle directory.
     pub artifacts_dir: String,
 }
@@ -112,6 +134,8 @@ impl Default for ServerConfig {
             batch_max: 32,
             cache_bytes: 64 << 20,
             binary_frames: true,
+            warm_cache: false,
+            host_fallback: false,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -126,6 +150,8 @@ pub struct ServerHandle {
     pub sessions: Arc<SharedSessionTable>,
     /// The shared encoded-reply cache (observability in tests/examples).
     pub cache: Arc<EncodedReplyCache>,
+    /// The pool-wide compile cache (observability in tests/examples).
+    pub compile_cache: Arc<CompileCache>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
     gc_thread: Option<JoinHandle<()>>,
@@ -170,6 +196,9 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
     let hub = Arc::new(MetricsHub::new());
     let sessions = Arc::new(SharedSessionTable::new(cfg.session_capacity, workers));
     let cache = Arc::new(EncodedReplyCache::new(cfg.cache_bytes));
+    // one compile cache for the whole pool: executables / prepared
+    // segments / phase-2 plans build once per server, not once per worker
+    let compile_cache = Arc::new(CompileCache::new());
     let stop = Arc::new(AtomicBool::new(false));
 
     // one resident bundle for the whole pool (weights are immutable)
@@ -195,18 +224,33 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         let worker_hub = Arc::clone(&hub);
         let worker_sessions = Arc::clone(&sessions);
         let worker_cache = Arc::clone(&cache);
+        let worker_compile = Arc::clone(&compile_cache);
         let worker_bundle = Arc::clone(&bundle);
         let worker_stop = Arc::clone(&stop);
         let worker_rx = Arc::clone(&job_rx);
         let ready_tx = ready_tx.clone();
+        // one worker warms the shared caches; its peers see the results
+        let warm = cfg.warm_cache && w == 0;
+        let host_fallback = cfg.host_fallback;
         let t = std::thread::Builder::new()
             .name(format!("qpart-worker-{w}"))
             .spawn(move || {
-                let service =
-                    Service::new(worker_bundle, worker_hub, worker_sessions, worker_cache)
-                        .map_err(|e| e.to_string());
+                let opts = ServiceOptions { compile_cache: worker_compile, host_fallback };
+                let service = Service::with_options(
+                    worker_bundle,
+                    worker_hub,
+                    worker_sessions,
+                    worker_cache,
+                    opts,
+                )
+                .map_err(|e| e.to_string());
                 let mut service = match service {
-                    Ok(s) => {
+                    Ok(mut s) => {
+                        if warm {
+                            // warm before reporting ready: serve() returns
+                            // with the caches populated, deterministically
+                            s.warm_cache();
+                        }
                         let _ = ready_tx.send(Ok(()));
                         s
                     }
@@ -305,6 +349,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         hub,
         sessions,
         cache,
+        compile_cache,
         stop,
         accept_thread: Some(accept_thread),
         gc_thread,
@@ -348,14 +393,15 @@ fn connection_loop(
         Err(_) => return,
     };
     let mut reader = BufReader::new(stream);
-    // negotiated per session via `hello`; requests stay JSON either way
+    // negotiated per session via `hello`; symmetric: grants binary
+    // segment replies downlink AND binary activation uploads uplink
     let mut binary = false;
     loop {
         if stop.load(Ordering::SeqCst) {
             break;
         }
-        let line = match read_frame(&mut reader) {
-            Ok(l) => l,
+        let frame = match read_any_frame(&mut reader) {
+            Ok(f) => f,
             Err(FrameError::Closed) => break,
             Err(e) => {
                 Metrics::inc(&metrics.errors_total);
@@ -367,7 +413,20 @@ fn connection_loop(
                 break;
             }
         };
-        let req = match Request::from_line(&line) {
+        // a binary request frame is only valid after a granted hello —
+        // the server must not silently accept what it did not grant
+        if matches!(frame, Frame::Binary(_)) && !binary {
+            Metrics::inc(&metrics.errors_total);
+            let resp = Response::Error(ErrorReply {
+                code: "bad_frame".into(),
+                message: "binary frame before negotiation (send hello first)".into(),
+            });
+            if write_frame(&mut writer, &resp.to_line()).is_err() {
+                break;
+            }
+            continue;
+        }
+        let req = match Request::from_frame(&frame) {
             Ok(r) => r,
             Err(e) => {
                 Metrics::inc(&metrics.errors_total);

@@ -13,11 +13,18 @@
 //! a drained batch's `infer` requests are planned individually (decisions
 //! depend on per-request channel/compute state) and then **grouped by
 //! coalescing key** — one encode per group fans out to every waiting
-//! connection via a shared [`EncodedSegmentBody`].
+//! connection via a shared [`EncodedSegmentBody`]. The batch's
+//! `activation` uploads take the mirrored phase-2 path: decoded uploads
+//! group by `(model, partition)` and row-stack into batched
+//! server-segment executions of up to `EVAL_BATCH` rows
+//! ([`Service::handle_batch`] → `handle_activation_batch`), so N
+//! concurrent same-key uploads cost ⌈N/EVAL_BATCH⌉ executions, not N.
+//! The single-request path funnels through the same executor entry, so
+//! batched and sequential phase 2 are numerically identical.
 
 use crate::metrics::{Metrics, MetricsHub};
 use crate::sched::{EncodedReplyCache, Job, SegmentKey, SegmentReply, WireReply};
-use crate::session::SharedSessionTable;
+use crate::session::{Session, SharedSessionTable};
 use qpart_core::channel::Channel;
 use qpart_core::cost::{CostModel, DeviceProfile, ServerProfile, TradeoffWeights};
 use qpart_core::model::{LayerKind, ModelSpec};
@@ -29,14 +36,32 @@ use qpart_proto::messages::{
     ActivationUpload, EncodedSegmentBody, ErrorReply, HelloReply, InferRequest, LayerBlob,
     ModelInfo, PatternInfo, Request, Response, ResultReply, SegmentBlob, SimulateRequest,
 };
-use qpart_runtime::{Bundle, Executor, HostTensor};
+use qpart_runtime::{Bundle, CompileCache, Executor, HostTensor, EVAL_BATCH};
 use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
 use std::time::Instant;
 
+/// Options wiring a worker's service into the pool-shared execution
+/// plane.
+#[derive(Clone)]
+pub struct ServiceOptions {
+    /// Pool-wide compile cache (executables, prepared segments, phase-2
+    /// plans — each built once per server, not once per worker).
+    pub compile_cache: Arc<CompileCache>,
+    /// Execute phase 2 with the pure-Rust host reference kernels instead
+    /// of PJRT (tests / bench-serve; linear architectures only).
+    pub host_fallback: bool,
+}
+
+impl Default for ServiceOptions {
+    fn default() -> Self {
+        ServiceOptions { compile_cache: Arc::new(CompileCache::new()), host_fallback: false }
+    }
+}
+
 /// One executor-pool worker's service (owns the non-`Send` PJRT executor;
-/// shares the bundle, the session table, the encoded-reply cache, and —
-/// via the hub — the metrics view).
+/// shares the bundle, the session table, the encoded-reply cache, the
+/// compile cache, and — via the hub — the metrics view).
 pub struct Service {
     pub bundle: Arc<Bundle>,
     executor: Executor,
@@ -61,16 +86,32 @@ pub struct Service {
 impl Service {
     /// Build the worker's service over the shared bundle and run
     /// Algorithm 1 for every model. Registers this worker's [`Metrics`]
-    /// (and, idempotently, the shared reply cache) in `hub`.
+    /// (and, idempotently, the shared reply cache) in `hub`. Standalone
+    /// services get a private compile cache; pool workers share one via
+    /// [`Service::with_options`].
     pub fn new(
         bundle: Arc<Bundle>,
         hub: Arc<MetricsHub>,
         sessions: Arc<SharedSessionTable>,
         reply_cache: Arc<EncodedReplyCache>,
     ) -> qpart_runtime::Result<Service> {
+        Service::with_options(bundle, hub, sessions, reply_cache, ServiceOptions::default())
+    }
+
+    /// [`Service::new`] with explicit execution-plane options (the
+    /// executor-pool entry point).
+    pub fn with_options(
+        bundle: Arc<Bundle>,
+        hub: Arc<MetricsHub>,
+        sessions: Arc<SharedSessionTable>,
+        reply_cache: Arc<EncodedReplyCache>,
+        opts: ServiceOptions,
+    ) -> qpart_runtime::Result<Service> {
         let metrics = hub.register_worker();
         hub.register_segment_cache(Arc::clone(&reply_cache));
-        let executor = Executor::new(Arc::clone(&bundle))?;
+        hub.register_compile_cache(Arc::clone(&opts.compile_cache));
+        let mut executor = Executor::with_cache(Arc::clone(&bundle), opts.compile_cache)?;
+        executor.set_host_fallback(opts.host_fallback);
         let mut patterns = Vec::new();
         for m in &bundle.models {
             let arch = bundle.arch(&m.arch)?;
@@ -123,10 +164,12 @@ impl Service {
         resp
     }
 
-    /// Handle one drained batch: non-`infer` requests are answered
-    /// individually; `infer` requests are planned, grouped by
+    /// Handle one drained batch: `infer` requests are planned, grouped by
     /// `(model, accuracy level, partition)`, and each group is encoded
-    /// once and fanned out to every waiting connection.
+    /// once and fanned out to every waiting connection; `activation`
+    /// uploads are decoded, grouped by `(model, partition)`, and
+    /// row-stacked into batched server-segment executions; everything
+    /// else is answered individually.
     pub fn handle_batch(&mut self, jobs: Vec<Job>) {
         if jobs.is_empty() {
             return;
@@ -134,11 +177,13 @@ impl Service {
         Metrics::inc(&self.metrics.batches_total);
         let dequeued = Instant::now();
         let mut infers: Vec<(InferRequest, SyncSender<WireReply>)> = Vec::new();
+        let mut uploads: Vec<(ActivationUpload, SyncSender<WireReply>)> = Vec::new();
         for job in jobs {
             let wait = dequeued.saturating_duration_since(job.enqueued);
             self.metrics.queue_wait.observe_us(wait.as_micros() as u64);
             match job.req {
                 Request::Infer(r) => infers.push((r, job.reply_tx)),
+                Request::Activation(a) => uploads.push((a, job.reply_tx)),
                 req => {
                     let resp = self.handle(req);
                     let _ = job.reply_tx.send(WireReply::Msg(resp));
@@ -146,6 +191,7 @@ impl Service {
             }
         }
         self.handle_infer_batch(infers);
+        self.handle_activation_batch(uploads);
     }
 
     /// Plan + group + encode-once + fan out (the coalescing core).
@@ -389,48 +435,202 @@ impl Service {
         Response::Segment(body.to_reply(session, decision.cost.objective))
     }
 
-    /// Phase 2: reconstruct the uploaded activation, finish on the server.
-    fn handle_activation(&mut self, a: &ActivationUpload) -> Response {
+    /// Decode + validate one upload against its session: consume the
+    /// session, check dims, unpack + dequantize the boundary activation.
+    fn decode_activation(
+        &mut self,
+        a: &ActivationUpload,
+    ) -> Result<(Session, HostTensor), Response> {
         let session = match self.sessions.take(a.session) {
             Some(s) => s,
-            None => return Self::err("unknown_session", a.session),
+            None => return Err(Self::err("unknown_session", a.session)),
         };
         if a.dims != session.boundary_dims {
-            return Self::err(
+            return Err(Self::err(
                 "bad_activation",
                 format!("expected dims {:?}, got {:?}", session.boundary_dims, a.dims),
-            );
+            ));
         }
         let n: usize = a.dims.iter().product();
         Metrics::add(&self.metrics.bytes_in, a.packed.len() as u64);
         let codes = match unpack_bits(&a.packed, n, a.bits) {
             Ok(c) => c,
-            Err(e) => return Self::err("bad_activation", e),
+            Err(e) => return Err(Self::err("bad_activation", e)),
         };
-        let params = match QuantParams::from_range(
-            a.bits,
-            a.qmin,
-            a.qmin + a.step * ((1u32 << a.bits) - 1) as f32,
-        ) {
+        // u64 shift: a 32-bit upload must not overflow the level count
+        let levels = ((1u64 << a.bits.min(32)) - 1) as f32;
+        let params = match QuantParams::from_range(a.bits, a.qmin, a.qmin + a.step * levels) {
             Ok(p) => p,
-            Err(e) => return Self::err("bad_activation", e),
+            Err(e) => return Err(Self::err("bad_activation", e)),
         };
         let values = Quantized { params, codes }.dequantize();
-        let h = match HostTensor::new(a.dims.clone(), values) {
-            Ok(h) => h,
-            Err(e) => return Self::err("bad_activation", e),
+        match HostTensor::new(a.dims.clone(), values) {
+            Ok(h) => Ok((session, h)),
+            Err(e) => Err(Self::err("bad_activation", e)),
+        }
+    }
+
+    /// Execute the server segment for one `(model, partition)` group of
+    /// decoded rows, in chunks of up to [`EVAL_BATCH`] rows per
+    /// execution. Returns one response per row, in input order.
+    fn run_phase2(
+        &mut self,
+        model: &str,
+        partition: usize,
+        rows: Vec<(u64, HostTensor)>,
+    ) -> Vec<(u64, Response)> {
+        let mut out = Vec::with_capacity(rows.len());
+        let mut iter = rows.into_iter().peekable();
+        while iter.peek().is_some() {
+            let chunk: Vec<(u64, HostTensor)> = iter.by_ref().take(EVAL_BATCH).collect();
+            let sessions: Vec<u64> = chunk.iter().map(|(s, _)| *s).collect();
+            let tensors: Vec<HostTensor> = chunk.into_iter().map(|(_, h)| h).collect();
+            let t_x = Instant::now();
+            let result = self.executor.run_server_segment_rows(model, &tensors, partition);
+            let us = t_x.elapsed().as_micros() as u64;
+            self.metrics.execute_latency.observe_us(us);
+            Metrics::inc(&self.metrics.phase2_execs_total);
+            Metrics::add(&self.metrics.phase2_rows_total, sessions.len() as u64);
+            match result {
+                Ok(per_row) => {
+                    for (sid, logits) in sessions.iter().zip(per_row) {
+                        out.push((*sid, Response::Result(result_reply(*sid, &logits, None, us))));
+                    }
+                }
+                Err(e) => {
+                    let resp = Self::err("internal", e);
+                    for sid in sessions {
+                        out.push((sid, resp.clone()));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Phase 2, single-request path: reconstruct the uploaded activation
+    /// and finish on the server. Funnels through the same batched
+    /// executor entry as `handle_activation_batch` (with one row), so
+    /// sequential and coalesced phase 2 are numerically identical.
+    fn handle_activation(&mut self, a: &ActivationUpload) -> Response {
+        let (session, h) = match self.decode_activation(a) {
+            Ok(x) => x,
+            Err(resp) => return resp,
         };
-        let t_x = Instant::now();
-        let logits = match self.executor.run_server_segment_cached(
-            &session.model,
-            h,
-            session.pattern.partition,
-        ) {
-            Ok(l) => l,
-            Err(e) => return Self::err("internal", e),
-        };
-        self.metrics.execute_latency.observe_us(t_x.elapsed().as_micros() as u64);
-        Response::Result(result_reply(a.session, &logits, None, t_x.elapsed().as_micros() as u64))
+        let mut replies =
+            self.run_phase2(&session.model, session.pattern.partition, vec![(a.session, h)]);
+        match replies.pop() {
+            Some((_, resp)) => resp,
+            None => Self::err("internal", "phase-2 execution returned nothing"),
+        }
+    }
+
+    /// Phase 2, batch path: decode every upload, group by
+    /// `(model, partition)`, and row-stack each group into
+    /// ⌈rows/EVAL_BATCH⌉ server-segment executions — the uplink mirror of
+    /// `handle_infer_batch`'s encode-once coalescing.
+    fn handle_activation_batch(&mut self, uploads: Vec<(ActivationUpload, SyncSender<WireReply>)>) {
+        struct Pending {
+            session: u64,
+            tensor: HostTensor,
+            tx: SyncSender<WireReply>,
+        }
+        struct Group {
+            model: String,
+            partition: usize,
+            pendings: Vec<Pending>,
+        }
+        let mut groups: Vec<Group> = Vec::new();
+        for (a, tx) in uploads {
+            Metrics::inc(&self.metrics.requests_total);
+            let t_req = Instant::now();
+            match self.decode_activation(&a) {
+                Ok((session, tensor)) => {
+                    let pending = Pending { session: a.session, tensor, tx };
+                    let partition = session.pattern.partition;
+                    match groups
+                        .iter()
+                        .position(|g| g.model == session.model && g.partition == partition)
+                    {
+                        Some(i) => groups[i].pendings.push(pending),
+                        None => groups.push(Group {
+                            model: session.model,
+                            partition,
+                            pendings: vec![pending],
+                        }),
+                    }
+                }
+                Err(resp) => {
+                    Metrics::inc(&self.metrics.errors_total);
+                    self.metrics
+                        .handle_latency
+                        .observe_us(t_req.elapsed().as_micros() as u64);
+                    let _ = tx.send(WireReply::Msg(resp));
+                }
+            }
+        }
+        for g in groups {
+            // per-group clock, mirroring the infer batch path: a request's
+            // recorded handle time covers its own group's executions
+            let t_group = Instant::now();
+            let mut txs = Vec::with_capacity(g.pendings.len());
+            let mut rows = Vec::with_capacity(g.pendings.len());
+            for p in g.pendings {
+                txs.push(p.tx);
+                rows.push((p.session, p.tensor));
+            }
+            let replies = self.run_phase2(&g.model, g.partition, rows);
+            let group_us = t_group.elapsed().as_micros() as u64;
+            for (tx, (_, resp)) in txs.iter().zip(replies) {
+                if matches!(resp, Response::Error(_)) {
+                    Metrics::inc(&self.metrics.errors_total);
+                }
+                self.metrics.handle_latency.observe_us(group_us);
+                let _ = tx.send(WireReply::Msg(resp));
+            }
+        }
+    }
+
+    /// Pre-warm the execution plane (`--warm-cache`): for every model ×
+    /// offline accuracy level, encode the reply Algorithm 2 would pick
+    /// under the paper-default device/channel profile and pre-build its
+    /// phase-2 plan. Algorithm 1 already enumerated the candidates; this
+    /// just front-loads the per-key work the first requests would pay.
+    /// Returns the number of keys warmed.
+    pub fn warm_cache(&mut self) -> usize {
+        let mut targets: Vec<(String, usize, QuantPattern)> = Vec::new();
+        for (model, set) in &self.patterns {
+            let arch = match self.bundle.model(model).and_then(|m| self.bundle.arch(&m.arch)) {
+                Ok(a) => a.clone(),
+                Err(_) => continue,
+            };
+            for &level in &set.levels {
+                let params = RequestParams {
+                    cost: CostModel::paper_default(),
+                    accuracy_budget: level,
+                };
+                if let Ok(d) = serve_request(&arch, set, &params) {
+                    targets.push((model.clone(), d.level_idx, d.pattern));
+                }
+            }
+        }
+        let mut warmed = 0usize;
+        for (model, level_idx, pattern) in targets {
+            let key: SegmentKey = (model.clone(), level_idx, pattern.partition);
+            if self.encoded_for(&key, &pattern).is_ok() {
+                // plan build is what matters offline; executable compiles
+                // are best-effort (absent without `make artifacts`)
+                let _ = self.executor.warm_server_segment(&model, pattern.partition);
+                Metrics::inc(&self.metrics.warmed_total);
+                warmed += 1;
+            }
+        }
+        warmed
+    }
+
+    /// The pool-wide compile cache this worker shares (observability).
+    pub fn compile_cache(&self) -> Arc<CompileCache> {
+        self.executor.compile_cache()
     }
 
     /// One-shot: the server simulates the device too (load generation).

@@ -5,26 +5,31 @@
 //! calibration + dataset, **zero HLO executables**) into a temp
 //! directory. The coordinator's phase-1 path — Algorithm 2 decision,
 //! segment quantization, bit-packing, encoded-reply caching, session
-//! open — is pure Rust, so a real multi-worker server can be driven end
-//! to end over TCP in any offline environment. Only phase-2 execution
-//! (PJRT) needs `make artifacts`.
+//! open — is pure Rust, and with `ServerConfig::host_fallback` phase-2
+//! execution runs on the host reference kernels, so a real multi-worker
+//! server can be driven through **both protocol phases** over TCP in any
+//! offline environment ([`synthetic_upload`] builds the phase-2 driver's
+//! uploads). Only PJRT-backed execution needs `make artifacts`.
 //!
 //! Helpers panic on I/O errors: they run in tests and the bench harness,
 //! where a broken temp dir should abort loudly, not propagate.
 
+use crate::service::boundary_dims;
 use qpart_core::accuracy::CalibrationTable;
 use qpart_core::json::Value;
 use qpart_core::model::{LayerKind, LayerSpec, ModelSpec};
+use qpart_core::quant::{pack_bits, quantize};
 use qpart_core::tensor::{save_i32, Tensor};
-use qpart_proto::frame::{read_any_frame, write_frame};
-use qpart_proto::messages::{Request, Response};
+use qpart_proto::frame::{read_any_frame, write_binary_frame, write_frame};
+use qpart_proto::messages::{ActivationUpload, InferReply, Request, Response};
 use std::io::BufReader;
 use std::net::TcpStream;
 use std::path::PathBuf;
 
-/// Minimal blocking protocol connection (phase-1 only — no PJRT-backed
-/// `DeviceClient` needed): JSON requests out, either framing in. Shared
-/// by the coordinator's integration tests and `qpart bench-serve`.
+/// Minimal blocking protocol connection (no PJRT-backed `DeviceClient`
+/// needed): JSON requests out — or binary activation frames on demand —
+/// either framing in. Shared by the coordinator's integration tests and
+/// `qpart bench-serve`.
 pub struct BlockingConn {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -43,6 +48,37 @@ impl BlockingConn {
         write_frame(&mut self.writer, &req.to_line()).map_err(|e| e.to_string())?;
         let frame = read_any_frame(&mut self.reader).map_err(|e| e.to_string())?;
         Response::from_frame(&frame).map_err(|e| e.to_string())
+    }
+
+    /// Send one activation upload as a **binary request frame** (only
+    /// valid after a granted `hello`) and read the response.
+    pub fn call_binary_upload(&mut self, a: &ActivationUpload) -> Result<Response, String> {
+        let (header, blob) = a.to_binary();
+        write_binary_frame(&mut self.writer, &header, &blob).map_err(|e| e.to_string())?;
+        let frame = read_any_frame(&mut self.reader).map_err(|e| e.to_string())?;
+        Response::from_frame(&frame).map_err(|e| e.to_string())
+    }
+}
+
+/// Build a valid phase-2 upload for `reply`: a deterministic synthetic
+/// boundary activation of the session's expected dims, quantized at the
+/// pattern's activation bit-width and bit-packed — the phase-2 driver
+/// for tests and `bench-serve` (no device-side PJRT required).
+pub fn synthetic_upload(reply: &InferReply, arch: &ModelSpec, seed: u64) -> ActivationUpload {
+    let dims = boundary_dims(arch, reply.pattern.partition, 1);
+    let n: usize = dims.iter().product();
+    let mut rng = qpart_core::rng::Rng::new(seed.wrapping_add(0x5EED));
+    let values: Vec<f32> = (0..n).map(|_| rng.range_f64(0.0, 1.0) as f32).collect();
+    let bits = reply.pattern.activation_bits.min(16);
+    let q = quantize(&values, bits).expect("synthetic activation quantizes");
+    let packed = pack_bits(&q.codes, bits).expect("synthetic activation packs");
+    ActivationUpload {
+        session: reply.session,
+        bits,
+        qmin: q.params.min,
+        step: q.params.step(),
+        dims,
+        packed,
     }
 }
 

@@ -1,0 +1,337 @@
+//! Batch-aware execution-plane tests — no PJRT required (synthetic
+//! bundle + host reference kernels).
+//!
+//! Covers the phase-2 half of the dataplane end to end: coalesced
+//! same-key activation uploads executing as ⌈N/EVAL_BATCH⌉ batched
+//! server-segment runs (read back through the batch-occupancy metrics),
+//! batched-vs-sequential numerical equivalence, the binary uplink frame
+//! over TCP (negotiated, refused when not negotiated, byte-identical to
+//! the JSON path), the pool-shared compile cache's once-per-key
+//! contract, and `--warm-cache` startup warming.
+
+use qpart_coordinator::client::paper_request;
+use qpart_coordinator::sched::{EncodedReplyCache, Job, WireReply};
+use qpart_coordinator::testing::{synthetic_bundle, synthetic_upload, tiny_arch, BlockingConn};
+use qpart_coordinator::{
+    serve, MetricsHub, ServerConfig, Service, ServiceOptions, SharedSessionTable,
+};
+use qpart_proto::messages::{HelloRequest, InferReply, Request, Response};
+use qpart_runtime::{Bundle, CompileCache, EVAL_BATCH};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+/// A service over the synthetic bundle with host-kernel phase 2.
+fn host_service(dir: &std::path::Path, hub: &Arc<MetricsHub>) -> Service {
+    let bundle = Arc::new(Bundle::load(dir).unwrap());
+    let sessions = Arc::new(SharedSessionTable::new(256, 2));
+    let cache = Arc::new(EncodedReplyCache::new(64 << 20));
+    Service::with_options(
+        bundle,
+        Arc::clone(hub),
+        sessions,
+        cache,
+        ServiceOptions { compile_cache: Arc::new(CompileCache::new()), host_fallback: true },
+    )
+    .unwrap()
+}
+
+/// Open one phase-1 session (same key for a fixed budget).
+fn open_session(svc: &mut Service, budget: f64) -> InferReply {
+    match svc.handle(Request::Infer(paper_request("tinymlp", budget))) {
+        Response::Segment(r) => r,
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+/// The coalescing contract for phase 2, deterministically: one batch of
+/// N same-key uploads executes as ⌈N/EVAL_BATCH⌉ server-segment runs —
+/// not N — and every device still gets its own correct result.
+#[test]
+fn batched_uploads_execute_in_eval_batch_chunks() {
+    let dir = synthetic_bundle("ep-batch");
+    let hub = Arc::new(MetricsHub::new());
+    let mut svc = host_service(&dir, &hub);
+    let arch = tiny_arch();
+
+    let n = EVAL_BATCH + 8; // 40 rows → 2 executions (32 + 8)
+    let replies: Vec<InferReply> = (0..n).map(|_| open_session(&mut svc, 0.02)).collect();
+
+    let mut jobs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for (i, r) in replies.iter().enumerate() {
+        let (tx, rx) = sync_channel(1);
+        jobs.push(Job::new(Request::Activation(synthetic_upload(r, &arch, i as u64)), tx));
+        rxs.push((r.session, rx));
+    }
+    let before = hub.snapshot();
+    svc.handle_batch(jobs);
+
+    for (sid, rx) in rxs {
+        match rx.recv().unwrap() {
+            WireReply::Msg(Response::Result(res)) => {
+                assert_eq!(res.session, sid);
+                assert_eq!(res.logits.len(), 10, "tinymlp has 10 classes");
+            }
+            other => panic!("session {sid}: unexpected {other:?}"),
+        }
+    }
+
+    let snap = hub.snapshot();
+    assert_eq!(snap.phase2_rows_total - before.phase2_rows_total, n as u64);
+    assert_eq!(
+        snap.phase2_execs_total - before.phase2_execs_total,
+        ((n + EVAL_BATCH - 1) / EVAL_BATCH) as u64,
+        "N same-key uploads must run as ceil(N/EVAL_BATCH) executions"
+    );
+    assert_eq!(snap.errors_total, 0);
+    assert!(snap.batch_occupancy_mean() > 1.0, "occupancy must reflect stacking");
+
+    // the shared compile cache built each key at most once
+    let cc = svc.compile_cache();
+    assert!(cc.compilations() >= 1, "the phase-2 plan was built");
+    assert_eq!(cc.max_compiles_per_key(), 1, "{:?}", cc.compile_counts());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Batched and sequential phase 2 must be numerically identical: the
+/// same activation rows produce bit-identical logits whether they run
+/// one-at-a-time or stacked into a padded batch.
+#[test]
+fn batched_and_sequential_phase2_agree() {
+    let dir = synthetic_bundle("ep-equiv");
+    let hub_a = Arc::new(MetricsHub::new());
+    let hub_b = Arc::new(MetricsHub::new());
+    let mut batched = host_service(&dir, &hub_a);
+    let mut sequential = host_service(&dir, &hub_b);
+    let arch = tiny_arch();
+
+    let n = 7usize;
+    // same seeds → identical activation tensors on both services
+    let replies_a: Vec<InferReply> = (0..n).map(|_| open_session(&mut batched, 0.02)).collect();
+    let replies_b: Vec<InferReply> =
+        (0..n).map(|_| open_session(&mut sequential, 0.02)).collect();
+
+    // batched: all uploads in one handle_batch
+    let mut jobs = Vec::new();
+    let mut rxs = Vec::new();
+    for (i, r) in replies_a.iter().enumerate() {
+        let (tx, rx) = sync_channel(1);
+        jobs.push(Job::new(Request::Activation(synthetic_upload(r, &arch, i as u64)), tx));
+        rxs.push(rx);
+    }
+    batched.handle_batch(jobs);
+    let batched_logits: Vec<Vec<f64>> = rxs
+        .into_iter()
+        .map(|rx| match rx.recv().unwrap() {
+            WireReply::Msg(Response::Result(res)) => res.logits,
+            other => panic!("unexpected {other:?}"),
+        })
+        .collect();
+
+    // sequential: one handle() per upload
+    for (i, r) in replies_b.iter().enumerate() {
+        let resp =
+            sequential.handle(Request::Activation(synthetic_upload(r, &arch, i as u64)));
+        match resp {
+            Response::Result(res) => {
+                assert_eq!(
+                    res.logits, batched_logits[i],
+                    "row {i}: batched and sequential phase 2 must agree exactly"
+                );
+            }
+            other => panic!("row {i}: unexpected {other:?}"),
+        }
+    }
+    assert_eq!(hub_a.snapshot().phase2_execs_total, 1, "7 rows stack into one run");
+    assert_eq!(hub_b.snapshot().phase2_execs_total, n as u64);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Binary uplink over TCP: a granted hello lets the device ship its
+/// activation as a binary request frame; the result matches the JSON
+/// control, and an un-negotiated binary frame is refused.
+#[test]
+fn binary_uplink_negotiated_and_byte_identical_to_json() {
+    let dir = synthetic_bundle("ep-binuplink");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        host_fallback: true,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+    let arch = tiny_arch();
+
+    // binary session
+    let mut bin_conn = BlockingConn::connect(&addr).unwrap();
+    match bin_conn.call(&Request::Hello(HelloRequest { binary_frames: true })).unwrap() {
+        Response::Hello(h) => assert!(h.binary_frames),
+        other => panic!("unexpected {other:?}"),
+    }
+    let bin_reply = match bin_conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap()
+    {
+        Response::Segment(r) => r,
+        other => panic!("unexpected {other:?}"),
+    };
+    let bin_upload = synthetic_upload(&bin_reply, &arch, 7);
+    let bin_result = match bin_conn.call_binary_upload(&bin_upload).unwrap() {
+        Response::Result(r) => r,
+        other => panic!("unexpected {other:?}"),
+    };
+
+    // JSON control: identical activation values, different session
+    let mut json_conn = BlockingConn::connect(&addr).unwrap();
+    let json_reply =
+        match json_conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+            Response::Segment(r) => r,
+            other => panic!("unexpected {other:?}"),
+        };
+    assert_eq!(json_reply.pattern, bin_reply.pattern, "same key → same pattern");
+    let json_upload = synthetic_upload(&json_reply, &arch, 7);
+    assert_eq!(
+        json_upload.packed, bin_upload.packed,
+        "same seed → byte-identical packed payload on both framings"
+    );
+    let json_result = match json_conn.call(&Request::Activation(json_upload)).unwrap() {
+        Response::Result(r) => r,
+        other => panic!("unexpected {other:?}"),
+    };
+    assert_eq!(json_result.prediction, bin_result.prediction);
+    assert_eq!(json_result.logits, bin_result.logits, "framings agree bit-for-bit");
+
+    // a binary request frame before hello is refused, connection survives
+    let mut cold_conn = BlockingConn::connect(&addr).unwrap();
+    let cold_reply =
+        match cold_conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+            Response::Segment(r) => r,
+            other => panic!("unexpected {other:?}"),
+        };
+    let cold_upload = synthetic_upload(&cold_reply, &arch, 1);
+    match cold_conn.call_binary_upload(&cold_upload).unwrap() {
+        Response::Error(e) => assert_eq!(e.code, "bad_frame", "{}", e.message),
+        other => panic!("unexpected {other:?}"),
+    }
+    // ...and the same upload over JSON still works afterwards
+    match cold_conn.call(&Request::Activation(cold_upload)).unwrap() {
+        Response::Result(_) => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Pool-level contract over TCP: concurrent same-key uploads across a
+/// multi-worker server coalesce into fewer executions than rows, and the
+/// shared compile cache never builds a key twice across workers.
+#[test]
+fn pool_coalesces_uploads_and_compiles_once_across_workers() {
+    let dir = synthetic_bundle("ep-pool");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 4,
+        batch_window: Duration::from_millis(25),
+        host_fallback: true,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+    let arch = tiny_arch();
+
+    let clients = 12usize;
+    let barrier = Arc::new(Barrier::new(clients));
+    let joins: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            let arch = arch.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut conn = BlockingConn::connect(&addr).unwrap();
+                let reply =
+                    match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+                        Response::Segment(r) => r,
+                        other => panic!("client {c}: unexpected {other:?}"),
+                    };
+                let upload = synthetic_upload(&reply, &arch, c as u64);
+                barrier.wait(); // uploads land together → coalescible
+                match conn.call(&Request::Activation(upload)).unwrap() {
+                    Response::Result(r) => r.prediction,
+                    other => panic!("client {c}: unexpected {other:?}"),
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        let _ = j.join().unwrap();
+    }
+
+    let snap = handle.snapshot();
+    assert_eq!(snap.phase2_rows_total, clients as u64, "every upload executed");
+    assert!(snap.phase2_execs_total >= 1);
+    assert!(
+        snap.phase2_execs_total <= clients as u64,
+        "executions never exceed rows: {snap:?}"
+    );
+    assert_eq!(snap.errors_total, 0);
+
+    // once-per-key across ALL workers — the shared-compile-cache contract
+    assert_eq!(
+        handle.compile_cache.max_compiles_per_key(),
+        1,
+        "{:?}",
+        handle.compile_cache.compile_counts()
+    );
+    assert_eq!(snap.compilations_total, handle.compile_cache.compilations());
+
+    // the stats document surfaces the new plane
+    let mut conn = BlockingConn::connect(&addr).unwrap();
+    match conn.call(&Request::Stats).unwrap() {
+        Response::Stats(v) => {
+            assert_eq!(v.req_f64("phase2_rows_total").unwrap() as u64, clients as u64);
+            assert!(v.get("batch_occupancy_mean").is_some());
+            let cc = v.req("compile_cache").unwrap();
+            assert_eq!(cc.req_f64("max_compiles_per_key").unwrap() as u64, 1);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--warm-cache`: the server comes up with the likely reply keys
+/// encoded and phase-2 plans built; the first real request is a cache
+/// hit, not an encode.
+#[test]
+fn warm_cache_preloads_replies_and_plans() {
+    let dir = synthetic_bundle("ep-warm");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        warm_cache: true,
+        host_fallback: true,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+
+    let warm = handle.snapshot();
+    assert!(warm.warmed_total >= 1, "{warm:?}");
+    assert!(handle.cache.len() >= 1, "encoded replies resident before traffic");
+    assert!(handle.compile_cache.plan_len() >= 1, "phase-2 plans resident");
+    let encodes_after_warm = warm.encodes_total;
+
+    // a first client request for a warmed key re-encodes nothing
+    let mut conn = BlockingConn::connect(&handle.addr.to_string()).unwrap();
+    match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+        Response::Segment(r) => assert!(r.session > 0),
+        other => panic!("unexpected {other:?}"),
+    }
+    let snap = handle.snapshot();
+    assert_eq!(snap.encodes_total, encodes_after_warm, "warmed key served from cache");
+    assert!(snap.cache_hits > warm.cache_hits);
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

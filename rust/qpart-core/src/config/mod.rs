@@ -61,6 +61,10 @@ pub struct ServingConfig {
     pub cache_bytes: usize,
     /// Allow binary-frame negotiation on the wire.
     pub binary_frames: bool,
+    /// Pre-warm the encoded-reply and compile caches at startup
+    /// (`--warm-cache`): encode the most-likely reply keys and pre-build
+    /// their phase-2 plans before serving the first request.
+    pub warm_cache: bool,
     /// Artifact bundle directory.
     pub artifacts_dir: String,
     /// Default accuracy levels when no calibration file provides them.
@@ -98,6 +102,7 @@ impl Config {
                     ("batch_window_us", 0u64.into()),
                     ("cache_bytes", (64u64 << 20).into()),
                     ("binary_frames", true.into()),
+                    ("warm_cache", false.into()),
                     ("artifacts_dir", "artifacts".into()),
                     (
                         "accuracy_levels",
@@ -219,6 +224,7 @@ impl Config {
             batch_window_us: srv.opt_f64("batch_window_us", 0.0) as u64,
             cache_bytes: srv.opt_f64("cache_bytes", (64u64 << 20) as f64) as usize,
             binary_frames: srv.opt_bool("binary_frames", true),
+            warm_cache: srv.opt_bool("warm_cache", false),
             artifacts_dir: srv.opt_str("artifacts_dir", "artifacts").to_string(),
             accuracy_levels: srv
                 .req_f64_arr("accuracy_levels")
@@ -274,16 +280,19 @@ mod tests {
         assert_eq!(srv.batch_window_us, 0);
         assert_eq!(srv.cache_bytes, 64 << 20);
         assert!(srv.binary_frames);
+        assert!(!srv.warm_cache, "warming is opt-in");
         let mut cfg = Config::defaults();
         cfg.set_override("serving.batch_window_us=2500").unwrap();
         cfg.set_override("serving.cache_bytes=1048576").unwrap();
         cfg.set_override("serving.binary_frames=false").unwrap();
         cfg.set_override("serving.session_ttl_secs=30").unwrap();
+        cfg.set_override("serving.warm_cache=true").unwrap();
         let srv = cfg.serving().unwrap();
         assert_eq!(srv.batch_window_us, 2500);
         assert_eq!(srv.cache_bytes, 1 << 20);
         assert!(!srv.binary_frames);
         assert_eq!(srv.session_ttl_secs, 30);
+        assert!(srv.warm_cache);
     }
 
     #[test]

@@ -62,7 +62,16 @@ pub fn offline_quantize(
         }
         patterns.push(row);
     }
-    Ok(PatternSet { model: model.name.clone(), levels: calib.levels.clone(), patterns })
+    let mut set = PatternSet {
+        model: model.name.clone(),
+        levels: calib.levels.clone(),
+        patterns,
+        segment_bits: Vec::new(),
+    };
+    // the memory-feasibility numbers are a pure function of the table —
+    // fill them here so Algorithm 2 never re-sums per request
+    set.precompute_segment_bits(model);
+    Ok(set)
 }
 
 #[cfg(test)]

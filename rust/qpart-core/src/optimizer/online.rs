@@ -60,13 +60,13 @@ pub fn serve_request(
         let payload = pat.payload_bits(model);
         let breakdown = req.cost.evaluate(model, pat.partition, payload);
         objective_by_partition.push(breakdown.objective);
-        // memory constraint: the quantized segment must fit the device
-        let segment_bits: u64 = pat
-            .weight_bits
-            .iter()
-            .enumerate()
-            .map(|(i, &b)| (b as u64) * model.weight_params(i + 1))
-            .sum();
+        // memory constraint: the quantized segment must fit the device.
+        // The segment size is a pure function of the pattern, so the
+        // offline pass precomputed it; only sets deserialized without a
+        // model (empty table) fall back to summing here.
+        let segment_bits = patterns
+            .segment_bits_at(level_idx, idx)
+            .unwrap_or_else(|| pat.segment_bits(model));
         if !req.cost.fits_memory(segment_bits) {
             continue;
         }
@@ -161,6 +161,26 @@ mod tests {
         r.cost.device.memory_bits = 1; // nothing fits except p=0 (empty segment)
         let d = serve_request(&m, &set, &r).unwrap();
         assert_eq!(d.pattern.partition, 0);
+    }
+
+    #[test]
+    fn precomputed_and_fallback_memory_filters_agree() {
+        // Algorithm 1 fills the segment-bits table; a set deserialized
+        // without a model (empty table) must decide identically via the
+        // per-pattern fallback.
+        let (m, set) = setup();
+        assert_eq!(set.segment_bits.len(), set.levels.len(), "offline pass fills the table");
+        let mut stripped = set.clone();
+        stripped.segment_bits = Vec::new();
+        for budget in [0.0025, 0.01, 0.05] {
+            let mut r = req(budget);
+            // a capacity that rules out the deepest partitions
+            r.cost.device.memory_bits = 2_000_000;
+            let a = serve_request(&m, &set, &r).unwrap();
+            let b = serve_request(&m, &stripped, &r).unwrap();
+            assert_eq!(a.pattern, b.pattern, "budget {budget}");
+            assert_eq!(a.level_idx, b.level_idx);
+        }
     }
 
     #[test]

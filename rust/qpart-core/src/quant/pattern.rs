@@ -33,6 +33,20 @@ impl QuantPattern {
         model.payload_bits(self.partition, &self.weight_bits, self.activation_bits)
     }
 
+    /// Device-segment memory footprint in bits: `Σ_{l ≤ p} b_l · z_w(l)`
+    /// (weights + bias at each layer's bit-width) — the quantity the
+    /// §III memory-feasibility constraint compares against device
+    /// capacity. A pure function of the pattern, so [`PatternSet`]
+    /// precomputes it offline (Algorithm 1) instead of re-summing on
+    /// every request.
+    pub fn segment_bits(&self, model: &ModelSpec) -> u64 {
+        self.weight_bits
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (b as u64) * model.weight_params(i + 1))
+            .sum()
+    }
+
     /// Payload of the *unquantized* scheme at the same partition (f32
     /// weights + f32 boundary activation) — the "No Optimization" baseline.
     pub fn payload_bits_f32(&self, model: &ModelSpec) -> u64 {
@@ -118,9 +132,29 @@ pub struct PatternSet {
     pub levels: Vec<f64>,
     /// `patterns[level_idx][p]` for `p ∈ 0..=L`.
     pub patterns: Vec<Vec<QuantPattern>>,
+    /// Precomputed [`QuantPattern::segment_bits`] parallel to `patterns`,
+    /// filled by `offline_quantize` (or [`PatternSet::precompute_segment_bits`]).
+    /// Empty for sets deserialized without a model in hand — Algorithm 2
+    /// falls back to computing per pattern then.
+    pub segment_bits: Vec<Vec<u64>>,
 }
 
 impl PatternSet {
+    /// Fill the `segment_bits` table from `model` (idempotent; Algorithm 1
+    /// calls this once at offline time).
+    pub fn precompute_segment_bits(&mut self, model: &ModelSpec) {
+        self.segment_bits = self
+            .patterns
+            .iter()
+            .map(|row| row.iter().map(|p| p.segment_bits(model)).collect())
+            .collect();
+    }
+
+    /// Precomputed segment bits for `patterns[level_idx][pattern_idx]`,
+    /// if the offline table was filled.
+    pub fn segment_bits_at(&self, level_idx: usize, pattern_idx: usize) -> Option<u64> {
+        self.segment_bits.get(level_idx)?.get(pattern_idx).copied()
+    }
     /// All partition points available (0..=L).
     pub fn num_partitions(&self) -> usize {
         self.patterns.first().map(|v| v.len()).unwrap_or(0)
@@ -181,7 +215,9 @@ impl PatternSet {
         if patterns.len() != levels.len() {
             return Err(Error::schema("patterns", "row count != level count"));
         }
-        Ok(PatternSet { model, levels, patterns })
+        // segment_bits needs the ModelSpec; deserialized sets recompute on
+        // demand (or via precompute_segment_bits once a model is in hand)
+        Ok(PatternSet { model, levels, patterns, segment_bits: Vec::new() })
     }
 }
 
@@ -227,6 +263,7 @@ mod tests {
             model: "m".into(),
             levels: vec![0.0025, 0.005, 0.01, 0.02, 0.05],
             patterns: vec![vec![]; 5],
+            segment_bits: Vec::new(),
         };
         assert_eq!(set.select_level(0.01).unwrap(), 2);
         assert_eq!(set.select_level(0.012).unwrap(), 2);
@@ -243,15 +280,45 @@ mod tests {
 
     #[test]
     fn pattern_set_json_roundtrip() {
-        let set = PatternSet {
+        let mut set = PatternSet {
             model: "mlp6".into(),
             levels: vec![0.01, 0.05],
             patterns: vec![vec![pat(0, 8), pat(1, 8)], vec![pat(0, 4), pat(1, 4)]],
+            segment_bits: Vec::new(),
         };
+        set.precompute_segment_bits(&mlp6());
         let v = set.to_json();
         let back = PatternSet::from_json(&v).unwrap();
         assert_eq!(back.model, set.model);
         assert_eq!(back.levels, set.levels);
         assert_eq!(back.patterns, set.patterns);
+        // deserialized sets carry no precomputed table until a model is
+        // supplied; precomputing reproduces the original values
+        assert!(back.segment_bits.is_empty());
+        let mut back = back;
+        back.precompute_segment_bits(&mlp6());
+        assert_eq!(back.segment_bits, set.segment_bits);
+    }
+
+    #[test]
+    fn precomputed_segment_bits_match_per_pattern_compute() {
+        let m = mlp6();
+        let mut set = PatternSet {
+            model: "mlp6".into(),
+            levels: vec![0.01],
+            patterns: vec![vec![pat(0, 8), pat(2, 4), pat(3, 6)]],
+            segment_bits: Vec::new(),
+        };
+        set.precompute_segment_bits(&m);
+        assert_eq!(set.segment_bits.len(), 1);
+        for (i, p) in set.patterns[0].iter().enumerate() {
+            assert_eq!(set.segment_bits_at(0, i), Some(p.segment_bits(&m)), "pattern {i}");
+        }
+        // p=0 ships no weights; deeper partitions cost strictly more
+        assert_eq!(set.segment_bits_at(0, 0), Some(0));
+        assert!(set.segment_bits_at(0, 2) > set.segment_bits_at(0, 1));
+        // out-of-range lookups are None, not a panic
+        assert_eq!(set.segment_bits_at(0, 99), None);
+        assert_eq!(set.segment_bits_at(9, 0), None);
     }
 }

@@ -7,8 +7,9 @@
 //!   ([`read_frame`] / [`write_frame`]). This is the default and the
 //!   compatibility fallback; every peer must speak it.
 //! * **Binary frame** — a length-prefixed envelope for large payloads
-//!   (quantized segment replies), negotiated per session via the `hello`
-//!   request. Layout (all integers little-endian):
+//!   (quantized segment replies downlink, activation uploads uplink),
+//!   negotiated per session via the `hello` request. Layout (all
+//!   integers little-endian):
 //!
 //!   ```text
 //!   0xB1                        magic byte (invalid as UTF-8 lead byte,

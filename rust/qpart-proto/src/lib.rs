@@ -29,7 +29,8 @@
 //! Unknown types are answered with an `error` response, not a dropped
 //! connection.
 //!
-//! **Binary frame** (negotiated; carries `segment` replies only):
+//! **Binary frame** (negotiated; symmetric — carries `segment` replies
+//! downlink and `activation` requests uplink):
 //!
 //! ```text
 //! 0xB1                         magic byte ([`frame::BINARY_MAGIC`]; a
@@ -37,33 +38,48 @@
 //!                              open a JSON frame)
 //! u32 LE  total_len            length of everything that follows
 //! u32 LE  header_len           length of the JSON header
-//! header_len bytes             UTF-8 JSON header: the `segment` document
-//!                              with blob offsets instead of base64
-//! total_len - 4 - header_len   raw blob: each layer's bit-packed weight
-//!                              bytes then bias bytes, in layer order
+//! header_len bytes             UTF-8 JSON header: the `segment` or
+//!                              `activation` document with blob offsets
+//!                              instead of base64 (`type` dispatches)
+//! total_len - 4 - header_len   raw blob the header's offsets point into
 //! ```
 //!
-//! In the binary header each layer replaces `w_packed`/`b_packed`
-//! (base64) with `w_off`/`w_nbytes` and `b_off`/`b_nbytes` — byte ranges
-//! into the blob. The multi-megabyte payload thus ships without base64
-//! expansion (−25% bytes) or JSON string escaping/parsing on either side.
-//! Read with [`read_any_frame`], written with
+//! In a binary **`segment`** header each layer replaces
+//! `w_packed`/`b_packed` (base64) with `w_off`/`w_nbytes` and
+//! `b_off`/`b_nbytes` — byte ranges into the blob, which holds each
+//! layer's bit-packed weight bytes then bias bytes in layer order. In a
+//! binary **`activation`** header (the request-frame layout) the `packed`
+//! field is replaced by `packed_off`/`packed_nbytes` and the blob is the
+//! bit-packed boundary-activation codes; all other fields (`session`,
+//! `bits`, `qmin`, `step`, `dims`) are unchanged from the JSON form.
+//! Either direction thus ships its multi-kilobyte-to-megabyte payload
+//! without base64 expansion (−25% bytes) or JSON string escaping/parsing
+//! on either side. Read with [`read_any_frame`], written with
 //! [`frame::write_binary_frame`]; decode via
 //! [`messages::Response::from_frame`] /
-//! [`messages::InferReply::from_binary`]. The same [`MAX_FRAME_BYTES`]
-//! cap applies to the whole envelope.
+//! [`messages::InferReply::from_binary`] downlink and
+//! [`messages::Request::from_frame`] /
+//! [`messages::ActivationUpload::from_binary`] uplink. The same
+//! [`MAX_FRAME_BYTES`] cap applies to the whole envelope.
 //!
 //! ### Negotiation rules
 //!
-//! * Connections start in JSON-lines mode; **requests are always JSON**.
-//! * A device that wants binary segment frames sends
+//! * Connections start in JSON-lines mode; requests before a granted
+//!   `hello` are always JSON.
+//! * A device that wants binary frames sends
 //!   `{"type":"hello","binary_frames":true}`. The server answers
 //!   `{"type":"hello","binary_frames":<granted>}` (always as a JSON
 //!   frame) — `true` only if the request asked for it **and** the server
 //!   allows it (`--binary-frames`, `ServerConfig::binary_frames`).
-//! * After a granted hello, **`segment` replies** on that connection use
-//!   binary frames; every other response stays JSON-lines. A later
-//!   `hello` with `binary_frames:false` switches back.
+//! * A granted hello is **symmetric**: `segment` replies on that
+//!   connection use binary frames, and the device **may** send its
+//!   `activation` uploads as binary request frames (JSON uploads remain
+//!   valid — the framings are self-distinguishing per frame). Every
+//!   other message stays JSON-lines. A later `hello` with
+//!   `binary_frames:false` switches both directions back.
+//! * A binary request frame on a connection that never negotiated is
+//!   answered with a `bad_frame` error (the server must not silently
+//!   accept what it did not grant).
 //! * Peers that never send `hello` get pure JSON-lines — the
 //!   compatibility fallback.
 //!
@@ -91,7 +107,7 @@
 //! | `stats`       | — | metrics snapshot; answered with `stats` |
 //! | `hello`       | `binary_frames` | negotiate framing; answered with `hello` |
 //! | `infer`       | [`messages::InferRequest`] fields | **phase 1**: open a session, answered with `segment` |
-//! | `activation`  | `session`, `bits`, `qmin`, `step`, `dims`, `packed` | **phase 2**: upload the quantized boundary activation, answered with `result` |
+//! | `activation`  | `session`, `bits`, `qmin`, `step`, `dims`, `packed` | **phase 2**: upload the quantized boundary activation (JSON, or a binary request frame after a granted `hello`), answered with `result` |
 //! | `simulate`    | `infer` fields + `input`, `input_dims` | one-shot: the server simulates the device too; answered with `result` |
 //!
 //! The `infer` request carries exactly the tuple of paper Algorithm 2's
@@ -172,6 +188,6 @@ pub use frame::{
     MAX_FRAME_BYTES,
 };
 pub use messages::{
-    EncodedSegmentBody, ErrorReply, HelloReply, HelloRequest, InferReply, InferRequest, LayerBlob,
-    PatternInfo, Request, Response, SegmentBlob,
+    ActivationUpload, EncodedSegmentBody, ErrorReply, HelloReply, HelloRequest, InferReply,
+    InferRequest, LayerBlob, PatternInfo, Request, Response, SegmentBlob,
 };

@@ -79,6 +79,43 @@ pub struct ActivationUpload {
     pub packed: Vec<u8>,
 }
 
+impl ActivationUpload {
+    /// Encode as a binary request frame: (JSON header, raw packed blob).
+    /// The uplink sibling of `InferReply::to_binary` — the packed codes
+    /// ship without base64 expansion or JSON escaping.
+    pub fn to_binary(&self) -> (String, Vec<u8>) {
+        let v = Value::obj([
+            ("type", "activation".into()),
+            ("session", self.session.into()),
+            ("bits", (self.bits as u64).into()),
+            ("qmin", (self.qmin as f64).into()),
+            ("step", (self.step as f64).into()),
+            ("dims", dims_json(&self.dims)),
+            ("packed_off", 0usize.into()),
+            ("packed_nbytes", self.packed.len().into()),
+        ]);
+        (v.to_string_compact(), self.packed.clone())
+    }
+
+    /// Decode a binary request frame (header + blob) back into an upload.
+    pub fn from_binary(header: &str, blob: &[u8]) -> Result<ActivationUpload> {
+        let v = parse(header)?;
+        if v.req_str("type")? != "activation" {
+            return Err(Error::schema("type", "binary frame is not an activation"));
+        }
+        let off = v.req_usize("packed_off")?;
+        let nbytes = v.req_usize("packed_nbytes")?;
+        Ok(ActivationUpload {
+            session: v.req_u64("session")?,
+            bits: v.req_u64("bits")? as u8,
+            qmin: v.req_f64("qmin")? as f32,
+            step: v.req_f64("step")? as f32,
+            dims: usize_arr(&v, "dims")?,
+            packed: blob_slice(blob, off, nbytes, "packed_off")?.to_vec(),
+        })
+    }
+}
+
 /// One-shot request: the server simulates the device side too.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimulateRequest {
@@ -290,6 +327,18 @@ impl Request {
 
     pub fn from_line(line: &str) -> Result<Request> {
         Request::from_json(&parse(line)?)
+    }
+
+    /// Decode a request frame of either kind. Binary request frames carry
+    /// `activation` uploads (the only large client payload); the header's
+    /// `type` field dispatches, mirroring `Response::from_frame`.
+    pub fn from_frame(frame: &Frame) -> Result<Request> {
+        match frame {
+            Frame::Json(line) => Request::from_line(line),
+            Frame::Binary(BinaryFrame { header, blob }) => {
+                Ok(Request::Activation(ActivationUpload::from_binary(header, blob)?))
+            }
+        }
     }
 }
 
@@ -1006,6 +1055,85 @@ mod tests {
             assert_eq!(a.b_packed, b.b_packed);
         }
         assert_eq!(via_binary.segment, via_json.segment);
+    }
+
+    /// A pseudo-random activation upload (varying dims and payload).
+    fn random_upload(rng: &mut Rng) -> ActivationUpload {
+        let cols = rng.range_usize(1, 512);
+        ActivationUpload {
+            session: rng.below(1 << 40),
+            bits: rng.range_usize(2, 16) as u8,
+            qmin: rng.range_f64(-2.0, 0.0) as f32,
+            step: rng.range_f64(1e-4, 1e-2) as f32,
+            dims: vec![1, cols],
+            packed: (0..rng.range_usize(0, 1024)).map(|_| rng.below(256) as u8).collect(),
+        }
+    }
+
+    #[test]
+    fn binary_activation_roundtrip_property() {
+        // the uplink sibling of the segment-frame property test: random
+        // uploads survive the binary encoding exactly, through the frame
+        // layer, and byte-identical to the JSON path
+        let mut rng = Rng::new(0xACC);
+        for trial in 0..50 {
+            let a = random_upload(&mut rng);
+            let (header, blob) = a.to_binary();
+            let back = ActivationUpload::from_binary(&header, &blob).unwrap();
+            assert_eq!(back, a, "trial {trial}");
+
+            // through write_binary_frame / read_any_frame / from_frame
+            let mut wire = Vec::new();
+            write_binary_frame(&mut wire, &header, &blob).unwrap();
+            let mut r = BufReader::new(&wire[..]);
+            match Request::from_frame(&read_any_frame(&mut r).unwrap()).unwrap() {
+                Request::Activation(b) => assert_eq!(b, a, "trial {trial}"),
+                other => panic!("trial {trial}: unexpected {other:?}"),
+            }
+
+            // byte identity vs the JSON path: same packed payload bytes
+            match Request::from_line(&Request::Activation(a.clone()).to_line()).unwrap() {
+                Request::Activation(j) => {
+                    assert_eq!(j.packed, a.packed, "trial {trial}");
+                    assert_eq!(j, a, "trial {trial}");
+                }
+                other => panic!("trial {trial}: unexpected {other:?}"),
+            }
+
+            // the binary envelope beats base64-in-JSON once payloads are
+            // non-trivial: raw bytes vs 4/3 expansion + field name
+            let json_bytes = Request::Activation(a.clone()).to_line().len() + 1;
+            let bin_bytes = 1 + 4 + 4 + header.len() + blob.len();
+            if a.packed.len() > 256 {
+                assert!(bin_bytes < json_bytes, "trial {trial}: {bin_bytes} vs {json_bytes}");
+            }
+        }
+    }
+
+    #[test]
+    fn binary_activation_rejects_bad_frames() {
+        let a = ActivationUpload {
+            session: 1,
+            bits: 8,
+            qmin: 0.0,
+            step: 0.1,
+            dims: vec![1, 4],
+            packed: vec![1, 2, 3, 4],
+        };
+        let (header, blob) = a.to_binary();
+        // truncated blob fails cleanly
+        assert!(ActivationUpload::from_binary(&header, &blob[..2]).is_err());
+        // a segment header is not an activation
+        let (seg_header, seg_blob) = sample_reply().to_binary();
+        assert!(ActivationUpload::from_binary(&seg_header, &seg_blob).is_err());
+        // ...and Request::from_frame refuses it too
+        let frame = Frame::Binary(BinaryFrame { header: seg_header, blob: seg_blob });
+        assert!(Request::from_frame(&frame).is_err());
+        // json frames still dispatch through from_frame
+        match Request::from_frame(&Frame::Json(Request::Ping.to_line())).unwrap() {
+            Request::Ping => {}
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

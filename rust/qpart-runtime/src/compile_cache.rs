@@ -1,0 +1,349 @@
+//! Pool-wide compile cache: compiled executables, prepared device
+//! segments, and phase-2 server-segment plans, shared across every
+//! executor in a worker pool.
+//!
+//! Before this cache existed each pool worker owned private
+//! `HashMap` caches inside its [`crate::Executor`], so a pool of `N`
+//! workers compiled every executable `N` times, loaded every model's
+//! weights from disk `N` times, and held `N` copies of the prepared
+//! literals. The cache lifts all of that state into one mutex-guarded
+//! registry keyed by `(model, partition, fingerprint)` (plus the artifact
+//! name for raw executables), so each artifact is compiled/prepared
+//! **once per server**, not once per worker.
+//!
+//! Concurrency contract: every `get_or_build` entry point holds its map's
+//! mutex across the build closure. Compiles are rare (startup + pattern
+//! churn) and the serialized section is exactly the work being
+//! deduplicated, so this coarse locking is what guarantees the
+//! **at-most-one compilation per key** property the stats report
+//! ([`CompileCache::max_compiles_per_key`]).
+//!
+//! Error results are *not* cached: a failed build leaves the key absent so
+//! a later attempt (e.g. after `make artifacts`) can succeed.
+
+use crate::bundle::ModelWeights;
+use crate::engine::Exec;
+use crate::error::Result;
+use qpart_core::json::Value;
+use qpart_core::model::ModelSpec;
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cache key for segment-level state: `(model, partition, fingerprint)`.
+/// Prepared device segments use the pattern's bit fingerprint; phase-2
+/// server plans use the constant `"f32/server"` fingerprint (the server
+/// side always runs full precision).
+pub type CompileKey = (String, usize, String);
+
+/// Fingerprint used by phase-2 server-segment plans.
+pub const SERVER_FINGERPRINT: &str = "f32/server";
+
+/// Pre-built f32 weight literals for one model (weight + bias per layer).
+///
+/// Wrapped so the pool can share literals across worker threads.
+pub struct WeightLiterals {
+    /// `(w, bias[1, G])` per layer, executable-input ready.
+    pub layers: Vec<(xla::Literal, xla::Literal)>,
+}
+
+// SAFETY: literals are immutable host-side buffers after construction;
+// nothing mutates them through shared references. The offline `xla` stub
+// is a plain `Vec<u8>` wrapper; the real bindings hold host literals that
+// are likewise only read after creation.
+unsafe impl Send for WeightLiterals {}
+unsafe impl Sync for WeightLiterals {}
+
+impl std::fmt::Debug for WeightLiterals {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WeightLiterals").field("layers", &self.layers.len()).finish()
+    }
+}
+
+/// Everything phase-2 execution needs for one `(model, partition)`:
+/// the arch, the shared weights, and (on the PJRT path) the pre-built
+/// weight literals. Assembled once per key across the whole pool.
+#[derive(Debug)]
+pub struct ServerSegmentPlan {
+    /// The model's architecture spec.
+    pub arch: ModelSpec,
+    /// Partition point `p`: the plan executes layers `p+1..=L`.
+    pub start: usize,
+    /// Shared trained weights (host-fallback execution reads these).
+    pub weights: Arc<ModelWeights>,
+    /// Pre-built f32 literals (PJRT path; `None` under host fallback).
+    pub literals: Option<Arc<WeightLiterals>>,
+}
+
+/// The pool-wide compile cache. One per server, shared via `Arc` by every
+/// worker's [`crate::Executor`].
+#[derive(Default)]
+pub struct CompileCache {
+    /// Compiled executables by artifact name (`q_l3_b32`, ...).
+    execs: Mutex<HashMap<String, Arc<Exec>>>,
+    /// Prepared device segments by `(model, partition, bit fingerprint)`.
+    prepared: Mutex<HashMap<CompileKey, Arc<PreparedSegmentEntry>>>,
+    /// Phase-2 plans by `(model, partition, "f32/server")`.
+    plans: Mutex<HashMap<CompileKey, Arc<ServerSegmentPlan>>>,
+    /// Trained weights by model (one resident copy per server).
+    weights: Mutex<HashMap<String, Arc<ModelWeights>>>,
+    /// f32 weight literals by model.
+    literals: Mutex<HashMap<String, Arc<WeightLiterals>>>,
+    /// Per-key build counts — the once-per-key assertion the stats report.
+    counts: Mutex<HashMap<CompileKey, u64>>,
+    exec_compiles: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Alias so the cache does not depend on `executor`'s internals directly
+/// (the concrete type is [`crate::executor::PreparedSegment`]).
+pub type PreparedSegmentEntry = crate::executor::PreparedSegment;
+
+impl std::fmt::Debug for CompileCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompileCache")
+            .field("executables", &self.exec_len())
+            .field("prepared_segments", &self.prepared_len())
+            .field("server_plans", &self.plan_len())
+            .field("compilations", &self.compilations())
+            .finish()
+    }
+}
+
+fn get_or_build<K, V, F>(
+    map: &Mutex<HashMap<K, Arc<V>>>,
+    hits: &AtomicU64,
+    misses: &AtomicU64,
+    key: &K,
+    build: F,
+) -> Result<(Arc<V>, bool)>
+where
+    K: Eq + Hash + Clone,
+    F: FnOnce() -> Result<V>,
+{
+    let mut m = map.lock().unwrap();
+    if let Some(v) = m.get(key) {
+        hits.fetch_add(1, Ordering::Relaxed);
+        return Ok((Arc::clone(v), false));
+    }
+    misses.fetch_add(1, Ordering::Relaxed);
+    // build under the lock: this serialization IS the at-most-once
+    // guarantee (see the module docs)
+    let v = Arc::new(build()?);
+    m.insert(key.clone(), Arc::clone(&v));
+    Ok((v, true))
+}
+
+impl CompileCache {
+    pub fn new() -> CompileCache {
+        CompileCache::default()
+    }
+
+    /// Fetch a compiled executable by artifact name, compiling at most
+    /// once across the pool.
+    pub fn exec(&self, name: &str, build: impl FnOnce() -> Result<Exec>) -> Result<Arc<Exec>> {
+        let name = name.to_string();
+        let (v, built) = get_or_build(&self.execs, &self.hits, &self.misses, &name, build)?;
+        if built {
+            self.exec_compiles.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(v)
+    }
+
+    /// Fetch a prepared device segment, building at most once per key.
+    pub fn prepared(
+        &self,
+        key: &CompileKey,
+        build: impl FnOnce() -> Result<PreparedSegmentEntry>,
+    ) -> Result<Arc<PreparedSegmentEntry>> {
+        let (v, built) = get_or_build(&self.prepared, &self.hits, &self.misses, key, build)?;
+        if built {
+            self.note_compiled(key);
+        }
+        Ok(v)
+    }
+
+    /// Fetch a phase-2 server-segment plan, building at most once per key.
+    pub fn plan(
+        &self,
+        key: &CompileKey,
+        build: impl FnOnce() -> Result<ServerSegmentPlan>,
+    ) -> Result<Arc<ServerSegmentPlan>> {
+        let (v, built) = get_or_build(&self.plans, &self.hits, &self.misses, key, build)?;
+        if built {
+            self.note_compiled(key);
+        }
+        Ok(v)
+    }
+
+    /// Fetch a model's trained weights (one resident copy per server).
+    pub fn weights(
+        &self,
+        model: &str,
+        build: impl FnOnce() -> Result<ModelWeights>,
+    ) -> Result<Arc<ModelWeights>> {
+        let model = model.to_string();
+        let (v, _) = get_or_build(&self.weights, &self.hits, &self.misses, &model, build)?;
+        Ok(v)
+    }
+
+    /// Fetch a model's f32 weight literals.
+    pub fn weight_literals(
+        &self,
+        model: &str,
+        build: impl FnOnce() -> Result<WeightLiterals>,
+    ) -> Result<Arc<WeightLiterals>> {
+        let model = model.to_string();
+        let (v, _) = get_or_build(&self.literals, &self.hits, &self.misses, &model, build)?;
+        Ok(v)
+    }
+
+    fn note_compiled(&self, key: &CompileKey) {
+        *self.counts.lock().unwrap().entry(key.clone()).or_insert(0) += 1;
+    }
+
+    /// Cache lookups that found an entry.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache lookups that had to build.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Executables compiled (each artifact name at most once).
+    pub fn exec_compiles(&self) -> u64 {
+        self.exec_compiles.load(Ordering::Relaxed)
+    }
+
+    /// Segment-level builds performed, summed over keys (prepared device
+    /// segments + server plans).
+    pub fn compilations(&self) -> u64 {
+        self.counts.lock().unwrap().values().sum()
+    }
+
+    /// Per-key build counts (the acceptance check: every value is ≤ 1).
+    pub fn compile_counts(&self) -> HashMap<CompileKey, u64> {
+        self.counts.lock().unwrap().clone()
+    }
+
+    /// The worst per-key build count — 1 (or 0) when the once-per-key
+    /// contract holds.
+    pub fn max_compiles_per_key(&self) -> u64 {
+        self.counts.lock().unwrap().values().copied().max().unwrap_or(0)
+    }
+
+    /// Resident compiled executables.
+    pub fn exec_len(&self) -> usize {
+        self.execs.lock().unwrap().len()
+    }
+
+    /// Resident prepared device segments.
+    pub fn prepared_len(&self) -> usize {
+        self.prepared.lock().unwrap().len()
+    }
+
+    /// Resident phase-2 plans.
+    pub fn plan_len(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    /// The `compile_cache` section of the coordinator's stats document.
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("executables", self.exec_len().into()),
+            ("exec_compiles", self.exec_compiles().into()),
+            ("prepared_segments", self.prepared_len().into()),
+            ("server_plans", self.plan_len().into()),
+            ("compilations", self.compilations().into()),
+            ("max_compiles_per_key", self.max_compiles_per_key().into()),
+            ("hits", self.hits().into()),
+            ("misses", self.misses().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+    use qpart_core::model::mlp6;
+
+    fn empty_weights() -> ModelWeights {
+        ModelWeights { layers: Vec::new() }
+    }
+
+    #[test]
+    fn weights_build_once_and_share() {
+        let cache = CompileCache::new();
+        let a = cache.weights("m", || Ok(empty_weights())).unwrap();
+        let b = cache.weights("m", || panic!("second lookup must not rebuild")).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "shared entry");
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn plans_count_at_most_once_per_key() {
+        let cache = CompileCache::new();
+        let key: CompileKey = ("m".into(), 2, SERVER_FINGERPRINT.into());
+        let build = || {
+            Ok(ServerSegmentPlan {
+                arch: mlp6(),
+                start: 2,
+                weights: Arc::new(empty_weights()),
+                literals: None,
+            })
+        };
+        let a = cache.plan(&key, build).unwrap();
+        let b = cache.plan(&key, || panic!("must hit")).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let key2: CompileKey = ("m".into(), 3, SERVER_FINGERPRINT.into());
+        let _ = cache
+            .plan(&key2, || {
+                Ok(ServerSegmentPlan {
+                    arch: mlp6(),
+                    start: 3,
+                    weights: Arc::new(empty_weights()),
+                    literals: None,
+                })
+            })
+            .unwrap();
+        assert_eq!(cache.compilations(), 2, "one build per distinct key");
+        assert_eq!(cache.max_compiles_per_key(), 1);
+        assert_eq!(cache.compile_counts().len(), 2);
+    }
+
+    #[test]
+    fn failed_builds_are_not_cached() {
+        let cache = CompileCache::new();
+        let err = cache.weights("m", || Err(Error::Xla("boom".into())));
+        assert!(err.is_err());
+        // the key stays absent; a later build succeeds
+        let ok = cache.weights("m", || Ok(empty_weights()));
+        assert!(ok.is_ok());
+        assert_eq!(cache.misses(), 2, "both lookups missed");
+        assert_eq!(cache.hits(), 0);
+    }
+
+    #[test]
+    fn stats_json_has_all_fields() {
+        let cache = CompileCache::new();
+        let v = cache.to_json();
+        for key in [
+            "executables",
+            "exec_compiles",
+            "prepared_segments",
+            "server_plans",
+            "compilations",
+            "max_compiles_per_key",
+            "hits",
+            "misses",
+        ] {
+            assert!(v.get(key).is_some(), "{key}");
+        }
+    }
+}

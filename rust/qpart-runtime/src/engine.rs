@@ -60,6 +60,32 @@ impl HostTensor {
         HostTensor { dims, data: self.data[lo * re..hi * re].to_vec() }
     }
 
+    /// Stack tensors along the batch dim (all must share the non-batch
+    /// dims). The building block of batched phase-2 execution: coalesced
+    /// activation rows stack into one executable input.
+    pub fn stack(rows: &[HostTensor]) -> Result<HostTensor> {
+        let first = rows
+            .first()
+            .ok_or_else(|| Error::Shape("cannot stack zero tensors".into()))?;
+        if first.dims.is_empty() {
+            return Err(Error::Shape("cannot stack rank-0 tensors".into()));
+        }
+        let total: usize = rows.iter().map(HostTensor::batch).sum();
+        let mut dims = first.dims.clone();
+        dims[0] = total;
+        let mut data = Vec::with_capacity(total * first.row_elems());
+        for r in rows {
+            if r.dims[1..] != first.dims[1..] {
+                return Err(Error::Shape(format!(
+                    "stack: row dims {:?} vs {:?}",
+                    r.dims, first.dims
+                )));
+            }
+            data.extend_from_slice(&r.data);
+        }
+        HostTensor::new(dims, data)
+    }
+
     /// Rows `lo..hi`, zero-padded up to `rows` (for fixed-batch executables).
     pub fn slice_rows_padded(&self, lo: usize, hi: usize, rows: usize) -> HostTensor {
         let re = self.row_elems();
@@ -103,6 +129,15 @@ pub struct Exec {
     /// Identifier for diagnostics (artifact name or path).
     pub name: String,
 }
+
+// SAFETY: an `Exec` is immutable after compilation and PJRT CPU
+// executables are internally synchronized for concurrent `Execute` calls;
+// the pool-wide compile cache shares them read-only across workers. The
+// offline `xla` stub is a plain struct. Builds against real bindings
+// whose handles are not thread-safe must keep `workers = 1` or disable
+// the shared cache (see the README's real-xla notes).
+unsafe impl Send for Exec {}
+unsafe impl Sync for Exec {}
 
 impl Exec {
     /// Execute with host tensors; returns the single output tensor.
@@ -195,6 +230,22 @@ mod tests {
         let p = t.slice_rows_padded(2, 3, 4);
         assert_eq!(p.dims, vec![4, 2]);
         assert_eq!(p.data, vec![5., 6., 0., 0., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn stack_concatenates_rows_and_checks_shapes() {
+        let a = HostTensor::new(vec![1, 2], vec![1., 2.]).unwrap();
+        let b = HostTensor::new(vec![2, 2], vec![3., 4., 5., 6.]).unwrap();
+        let s = HostTensor::stack(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(s.dims, vec![3, 2]);
+        assert_eq!(s.data, vec![1., 2., 3., 4., 5., 6.]);
+        // stack → slice round-trips each row
+        assert_eq!(s.slice_rows(0, 1), a);
+        assert_eq!(s.slice_rows(1, 3), b);
+        // shape mismatches and empty stacks are rejected
+        let c = HostTensor::new(vec![1, 3], vec![0.; 3]).unwrap();
+        assert!(HostTensor::stack(&[a, c]).is_err());
+        assert!(HostTensor::stack(&[]).is_err());
     }
 
     // PJRT-backed tests live in rust/qpart/tests/ (they need artifacts).

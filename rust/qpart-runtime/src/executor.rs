@@ -18,13 +18,16 @@
 //! structured pruning — plus batched top-1 accuracy evaluation used by the
 //! Table III/IV benches.
 
-use crate::bundle::{Bundle, ModelWeights};
-use crate::engine::{Engine, HostTensor};
+use crate::bundle::{Bundle, ExecEntry, ModelWeights};
+use crate::compile_cache::{
+    CompileCache, CompileKey, ServerSegmentPlan, WeightLiterals, SERVER_FINGERPRINT,
+};
+use crate::engine::{Engine, Exec, HostTensor};
 use crate::error::{Error, Result};
+use crate::host;
 use qpart_core::model::ModelSpec;
 use qpart_core::quant::{quantize, QuantPattern, Quantized};
 use std::collections::HashMap;
-use std::rc::Rc;
 use std::sync::Arc;
 
 /// Eval-batch size (matches the `_b32` executables in the bundle).
@@ -73,7 +76,8 @@ pub struct SplitOutcome {
 }
 
 /// A quantized segment converted to executable inputs (codes as f32
-/// tensors, dequantized bias) — built once per pattern, reused across
+/// tensors, dequantized bias) — built once per pattern **per server** (the
+/// pool-wide [`CompileCache`] shares it across workers), reused across
 /// requests (§Perf: per-request re-quantization was the split-path
 /// bottleneck).
 pub struct PreparedSegment {
@@ -81,6 +85,13 @@ pub struct PreparedSegment {
     pub weight_payload_bits: u64,
     layers: Vec<PreparedLayer>,
 }
+
+// SAFETY: a prepared segment is immutable after construction; its
+// literals are host-side buffers that are only read. Shared read-only
+// across pool workers via the compile cache (see `engine::Exec` for the
+// matching executable-handle rationale).
+unsafe impl Send for PreparedSegment {}
+unsafe impl Sync for PreparedSegment {}
 
 struct PreparedLayer {
     layer: usize,
@@ -126,21 +137,25 @@ impl PreparedSegment {
     }
 }
 
-/// The executor: engine + bundle + weight and prepared-segment caches.
+/// The executor: engine + bundle + a handle on the pool-wide
+/// [`CompileCache`].
 ///
 /// The bundle is shared via `Arc` — it is immutable after load, so an
 /// executor pool keeps **one** resident copy of the weights instead of
-/// one per worker. The executor itself stays `!Send` (PJRT clients are
-/// single-device); only the bundle crosses threads.
+/// one per worker. Compiled executables, prepared segments, weight
+/// literals, and phase-2 server plans likewise live in the shared
+/// compile cache: each is built once per server, whichever worker gets
+/// there first. The executor itself stays `!Send` (PJRT clients are
+/// single-device); only the bundle and the cache cross threads.
 pub struct Executor {
     pub engine: Engine,
     pub bundle: Arc<Bundle>,
-    weights_cache: HashMap<String, Rc<ModelWeights>>,
-    /// Prepared segments keyed by (model, pattern fingerprint).
-    prepared_cache: HashMap<(String, String), Rc<PreparedSegment>>,
-    /// Per-model executable-ready f32 weight literals (w, bias[1,G]) —
-    /// avoids the per-request 2+ MB copy in the server segment (§Perf).
-    host_weights_cache: HashMap<String, Rc<Vec<(xla::Literal, xla::Literal)>>>,
+    /// Pool-wide compile cache ([`Executor::new`] makes a private one;
+    /// pools inject a shared one via [`Executor::with_cache`]).
+    cache: Arc<CompileCache>,
+    /// Execute server segments with the pure-Rust reference kernels
+    /// instead of PJRT (tests / bench-serve; linear archs only).
+    host_fallback: bool,
 }
 
 fn pattern_fingerprint(p: &QuantPattern) -> String {
@@ -149,62 +164,78 @@ fn pattern_fingerprint(p: &QuantPattern) -> String {
 
 impl Executor {
     pub fn new(bundle: Arc<Bundle>) -> Result<Executor> {
-        Ok(Executor {
-            engine: Engine::cpu()?,
-            bundle,
-            weights_cache: HashMap::new(),
-            prepared_cache: HashMap::new(),
-            host_weights_cache: HashMap::new(),
-        })
+        Executor::with_cache(bundle, Arc::new(CompileCache::new()))
     }
 
-    /// Quantize + prepare a segment, cached per (model, pattern).
+    /// Build an executor over a shared compile cache (the executor-pool
+    /// entry point: every worker passes the same `Arc`).
+    pub fn with_cache(bundle: Arc<Bundle>, cache: Arc<CompileCache>) -> Result<Executor> {
+        Ok(Executor { engine: Engine::cpu()?, bundle, cache, host_fallback: false })
+    }
+
+    /// The compile cache this executor shares.
+    pub fn compile_cache(&self) -> Arc<CompileCache> {
+        Arc::clone(&self.cache)
+    }
+
+    /// Toggle host-reference phase-2 execution (see [`crate::host`]).
+    /// Explicit opt-in only: PJRT-less builds fail loudly otherwise.
+    pub fn set_host_fallback(&mut self, on: bool) {
+        self.host_fallback = on;
+    }
+
+    /// Whether phase-2 runs on the host reference kernels.
+    pub fn host_fallback(&self) -> bool {
+        self.host_fallback
+    }
+
+    /// Fetch a compiled executable from the pool-wide cache, compiling it
+    /// on this worker's engine on first use anywhere in the pool.
+    fn load_exec(&self, entry: &ExecEntry) -> Result<Arc<Exec>> {
+        let path = self.bundle.root.join(&entry.hlo);
+        self.cache.exec(&entry.name, || self.engine.compile_file(&path, &entry.name))
+    }
+
+    /// Quantize + prepare a segment, cached pool-wide per
+    /// `(model, partition, pattern fingerprint)`.
     pub fn prepared_segment(
         &mut self,
         model: &str,
         pattern: &QuantPattern,
-    ) -> Result<Rc<PreparedSegment>> {
-        let key = (model.to_string(), pattern_fingerprint(pattern));
-        if let Some(p) = self.prepared_cache.get(&key) {
-            return Ok(Rc::clone(p));
-        }
-        let seg = self.quantize_segment(model, pattern)?;
-        let prep = Rc::new(PreparedSegment::from_segment(&seg)?);
-        self.prepared_cache.insert(key, Rc::clone(&prep));
-        Ok(prep)
+    ) -> Result<Arc<PreparedSegment>> {
+        let key: CompileKey =
+            (model.to_string(), pattern.partition, pattern_fingerprint(pattern));
+        let cache = Arc::clone(&self.cache);
+        cache.prepared(&key, || {
+            let seg = self.quantize_segment(model, pattern)?;
+            PreparedSegment::from_segment(&seg)
+        })
     }
 
-    /// Number of cached prepared segments (diagnostics).
+    /// Number of cached prepared segments (diagnostics; pool-wide).
     pub fn prepared_cached(&self) -> usize {
-        self.prepared_cache.len()
+        self.cache.prepared_len()
     }
 
-    /// Cached weight loading.
-    pub fn weights(&mut self, model: &str) -> Result<Rc<ModelWeights>> {
-        if let Some(w) = self.weights_cache.get(model) {
-            return Ok(Rc::clone(w));
-        }
-        let w = Rc::new(self.bundle.weights(model)?);
-        self.weights_cache.insert(model.to_string(), Rc::clone(&w));
-        Ok(w)
+    /// Cached weight loading (one resident copy per server).
+    pub fn weights(&mut self, model: &str) -> Result<Arc<ModelWeights>> {
+        let bundle = Arc::clone(&self.bundle);
+        self.cache.weights(model, || bundle.weights(model))
     }
 
-    /// Executable-ready f32 weight literals, cached per model.
-    pub fn host_weights(&mut self, model: &str) -> Result<Rc<Vec<(xla::Literal, xla::Literal)>>> {
-        if let Some(w) = self.host_weights_cache.get(model) {
-            return Ok(Rc::clone(w));
-        }
+    /// Executable-ready f32 weight literals, cached pool-wide per model.
+    pub fn host_weights(&mut self, model: &str) -> Result<Arc<WeightLiterals>> {
         let weights = self.weights(model)?;
-        let mut v = Vec::with_capacity(weights.layers.len());
-        for (w, b) in &weights.layers {
-            v.push((
-                HostTensor::new(w.dims().to_vec(), w.data().to_vec())?.to_literal()?,
-                HostTensor::new(vec![1, b.len()], b.data().to_vec())?.to_literal()?,
-            ));
-        }
-        let v = Rc::new(v);
-        self.host_weights_cache.insert(model.to_string(), Rc::clone(&v));
-        Ok(v)
+        self.cache.weight_literals(model, || {
+            let mut v = Vec::with_capacity(weights.layers.len());
+            for (w, b) in &weights.layers {
+                v.push((
+                    HostTensor::new(w.dims().to_vec(), w.data().to_vec())?.to_literal()?,
+                    HostTensor::new(vec![1, b.len()], b.data().to_vec())?.to_literal()?,
+                ));
+            }
+            Ok(WeightLiterals { layers: v })
+        })
     }
 
     fn arch_of(&self, model: &str) -> Result<ModelSpec> {
@@ -259,7 +290,7 @@ impl Executor {
         for ql in &seg.layers {
             let l = ql.layer;
             let entry = self.bundle.find_exec(&arch.name, "qlayer", Some(l), batch)?;
-            let exec = self.engine.load(&self.bundle.root.join(&entry.hlo), &entry.name)?;
+            let exec = self.load_exec(entry)?;
             let codes = HostTensor::new(
                 ql.w_dims.clone(),
                 ql.weights.codes.iter().map(|&c| c as f32).collect(),
@@ -300,7 +331,7 @@ impl Executor {
         acts.insert(start, h.clone());
         for l in (start + 1)..=arch.num_layers() {
             let entry = self.bundle.find_exec(&arch.name, "f32layer", Some(l), batch)?;
-            let exec = self.engine.load(&self.bundle.root.join(&entry.hlo), &entry.name)?;
+            let exec = self.load_exec(entry)?;
             let (w, b) = &weights.layers[l - 1];
             let wt = HostTensor::new(w.dims().to_vec(), w.data().to_vec())?;
             let bias = HostTensor::new(vec![1, b.len()], b.data().to_vec())?;
@@ -344,7 +375,7 @@ impl Executor {
         for pl in &prep.layers {
             let l = pl.layer;
             let entry = self.bundle.find_exec(&arch.name, "qlayer", Some(l), batch)?;
-            let exec = self.engine.load(&self.bundle.root.join(&entry.hlo), &entry.name)?;
+            let exec = self.load_exec(entry)?;
             h = reshape_for_layer(arch, l, h)?;
             let h_lit = h.to_literal()?;
             let out = if entry.has_skip {
@@ -365,27 +396,66 @@ impl Executor {
         Ok(h)
     }
 
-    /// Server segment using the per-model host-weight cache (the serving
-    /// hot path; `run_server_segment` remains for overridden weights).
-    pub fn run_server_segment_cached(
-        &mut self,
-        model: &str,
-        mut h: HostTensor,
-        start: usize,
-    ) -> Result<HostTensor> {
-        let arch = self.arch_of(model)?;
-        let hw = self.host_weights(model)?;
+    /// Assemble (or fetch) the pool-shared phase-2 plan for
+    /// `(model, start)` — the compile-once unit of server-segment
+    /// execution. The execution path (PJRT vs host kernels) is part of
+    /// the fingerprint: executors sharing one cache with different
+    /// `host_fallback` settings must not serve each other's plans.
+    fn server_plan(&mut self, model: &str, start: usize) -> Result<Arc<ServerSegmentPlan>> {
+        let host_fallback = self.host_fallback;
+        let fingerprint = if host_fallback {
+            format!("{SERVER_FINGERPRINT}/host")
+        } else {
+            SERVER_FINGERPRINT.to_string()
+        };
+        let key: CompileKey = (model.to_string(), start, fingerprint);
+        let cache = Arc::clone(&self.cache);
+        cache.plan(&key, || {
+            let arch = self.arch_of(model)?;
+            let weights = self.weights(model)?;
+            let literals =
+                if host_fallback { None } else { Some(self.host_weights(model)?) };
+            Ok(ServerSegmentPlan { arch, start, weights, literals })
+        })
+    }
+
+    /// Pre-build the phase-2 plan for `(model, partition)` and, on the
+    /// PJRT path, pre-compile its layer executables at batch 1 and
+    /// [`EVAL_BATCH`] (the `--warm-cache` startup hook).
+    pub fn warm_server_segment(&mut self, model: &str, partition: usize) -> Result<()> {
+        let plan = self.server_plan(model, partition)?;
+        if plan.literals.is_some() {
+            for l in (partition + 1)..=plan.arch.num_layers() {
+                for batch in [1, EVAL_BATCH] {
+                    let entry =
+                        self.bundle.find_exec(&plan.arch.name, "f32layer", Some(l), batch)?;
+                    self.load_exec(entry)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a phase-2 plan on one activation tensor (any batch the
+    /// bundle has executables for; host fallback takes any batch).
+    fn run_plan(&self, plan: &ServerSegmentPlan, h: HostTensor) -> Result<HostTensor> {
+        let end = plan.arch.num_layers();
+        let lits = match &plan.literals {
+            None => return host::run_layers(&plan.arch, &plan.weights, h, plan.start, end),
+            Some(l) => l,
+        };
         let batch = h.batch();
+        let mut h = h;
         let mut acts: HashMap<usize, HostTensor> = HashMap::new();
-        acts.insert(start, h.clone());
-        for l in (start + 1)..=arch.num_layers() {
-            let entry = self.bundle.find_exec(&arch.name, "f32layer", Some(l), batch)?;
-            let exec = self.engine.load(&self.bundle.root.join(&entry.hlo), &entry.name)?;
-            let (wt, bias) = &hw[l - 1];
-            h = reshape_for_layer(&arch, l, h)?;
+        acts.insert(plan.start, h.clone());
+        for l in (plan.start + 1)..=end {
+            let entry = self.bundle.find_exec(&plan.arch.name, "f32layer", Some(l), batch)?;
+            let exec = self.load_exec(entry)?;
+            let (wt, bias) = &lits.layers[l - 1];
+            h = reshape_for_layer(&plan.arch, l, h)?;
             let h_lit = h.to_literal()?;
             let out = if entry.has_skip {
-                let src = arch.residual_source(l).ok_or_else(|| {
+                let src = plan.arch.residual_source(l).ok_or_else(|| {
                     Error::Shape(format!("exec {} expects a skip input", entry.name))
                 })?;
                 let skip = acts
@@ -400,6 +470,61 @@ impl Executor {
             acts.insert(l, h.clone());
         }
         Ok(h)
+    }
+
+    /// Server segment over the pool-shared plan (the serving hot path;
+    /// `run_server_segment` remains for overridden weights).
+    pub fn run_server_segment_cached(
+        &mut self,
+        model: &str,
+        h: HostTensor,
+        start: usize,
+    ) -> Result<HostTensor> {
+        let plan = self.server_plan(model, start)?;
+        self.run_plan(&plan, h)
+    }
+
+    /// **One** batched server-segment execution over up to [`EVAL_BATCH`]
+    /// boundary rows of the same `(model, partition)` — the phase-2 half
+    /// of the coalescing dataplane. Rows (each batch-1) are stacked, a
+    /// multi-row stack is zero-padded to [`EVAL_BATCH`] for the `_b32`
+    /// executables, and the logits are split back per row. Callers chunk
+    /// larger groups into `⌈N / EVAL_BATCH⌉` calls.
+    pub fn run_server_segment_rows(
+        &mut self,
+        model: &str,
+        rows: &[HostTensor],
+        start: usize,
+    ) -> Result<Vec<HostTensor>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        if rows.len() > EVAL_BATCH {
+            return Err(Error::Shape(format!(
+                "{} rows exceed EVAL_BATCH {EVAL_BATCH}; chunk before calling",
+                rows.len()
+            )));
+        }
+        if let Some(bad) = rows.iter().find(|r| r.batch() != 1) {
+            return Err(Error::Shape(format!(
+                "phase-2 rows must be batch-1, got {:?}",
+                bad.dims
+            )));
+        }
+        let n = rows.len();
+        let stacked = HostTensor::stack(rows)?;
+        let run_batch = if n == 1 { 1 } else { EVAL_BATCH };
+        let padded =
+            if n == run_batch { stacked } else { stacked.slice_rows_padded(0, n, run_batch) };
+        let plan = self.server_plan(model, start)?;
+        let logits = self.run_plan(&plan, padded)?;
+        if logits.batch() < n {
+            return Err(Error::Shape(format!(
+                "plan returned {} logits rows for {n} inputs",
+                logits.batch()
+            )));
+        }
+        Ok((0..n).map(|i| logits.slice_rows(i, i + 1)).collect())
     }
 
     /// The full QPART split-inference path (prepared-segment cached).
@@ -426,7 +551,7 @@ impl Executor {
         let arch = self.arch_of(model)?;
         let weights = self.weights(model)?;
         let entry = self.bundle.find_exec(&arch.name, "full", None, x.batch())?;
-        let exec = self.engine.load(&self.bundle.root.join(&entry.hlo), &entry.name)?;
+        let exec = self.load_exec(entry)?;
         let mut inputs: Vec<HostTensor> = vec![x];
         for l in 1..=arch.num_layers() {
             let (w, b) = &weights.layers[l - 1];
@@ -498,12 +623,12 @@ impl Executor {
         // flatten for the linear AE
         let h = HostTensor::new(vec![batch, h.row_elems()], h.data.clone())?;
         let enc_e = self.bundle.find_exec(&arch.name, "ae_enc", Some(p), batch)?;
-        let enc = self.engine.load(&self.bundle.root.join(&enc_e.hlo), &enc_e.name)?;
+        let enc = self.load_exec(enc_e)?;
         let we_t = HostTensor::new(we.dims().to_vec(), we.data().to_vec())?;
         let be_t = HostTensor::new(vec![1, be.len()], be.data().to_vec())?;
         let z = enc.run(&[&h, &we_t, &be_t])?;
         let dec_e = self.bundle.find_exec(&arch.name, "ae_dec", Some(p), batch)?;
-        let dec = self.engine.load(&self.bundle.root.join(&dec_e.hlo), &dec_e.name)?;
+        let dec = self.load_exec(dec_e)?;
         let wd_t = HostTensor::new(wd.dims().to_vec(), wd.data().to_vec())?;
         let bd_t = HostTensor::new(vec![1, bd.len()], bd.data().to_vec())?;
         let rec = dec.run(&[&z, &wd_t, &bd_t])?;
@@ -535,7 +660,7 @@ impl Executor {
         acts.insert(start, h.clone());
         for l in (start + 1)..=end {
             let entry = self.bundle.find_exec(&arch.name, "f32layer", Some(l), batch)?;
-            let exec = self.engine.load(&self.bundle.root.join(&entry.hlo), &entry.name)?;
+            let exec = self.load_exec(entry)?;
             let (w, b) = &weights.layers[l - 1];
             let wt = HostTensor::new(w.dims().to_vec(), w.data().to_vec())?;
             let bias = HostTensor::new(vec![1, b.len()], b.data().to_vec())?;

@@ -1,0 +1,220 @@
+//! Host reference kernels: a pure-Rust f32 forward pass for server
+//! segments.
+//!
+//! The offline build ships an `xla` stub whose PJRT client cannot
+//! compile, so phase-2 execution historically needed `make artifacts` on
+//! a machine with the JAX/XLA toolchain. These kernels implement the same
+//! math as the lowered `f32layer` executables (`x·W + b`, optional ReLU,
+//! optional residual add — see `python/compile/aot.py::lower_f32layer`)
+//! for **linear** layers, so the coordinator's batched phase-2 path,
+//! its tests, and `qpart bench-serve` can run end to end with no PJRT.
+//!
+//! Scope: linear architectures only (the synthetic `tinymlp` bundle and
+//! the mlp models). Convolution layers report a clear error directing to
+//! the PJRT artifacts. Enabled explicitly via
+//! [`crate::Executor::set_host_fallback`] — never silently, so a
+//! production build can't mask a missing PJRT backend.
+//!
+//! Determinism: each output row accumulates independently in input order,
+//! so a row's result is bit-identical whether it runs alone or stacked in
+//! a padded batch — the property the batched-vs-sequential equivalence
+//! tests assert.
+
+use crate::bundle::ModelWeights;
+use crate::engine::HostTensor;
+use crate::error::{Error, Result};
+use qpart_core::model::{LayerKind, ModelSpec};
+use std::collections::HashMap;
+
+/// Run f32 layers `start+1..=end` of `arch` on `h` (any batch size).
+pub fn run_layers(
+    arch: &ModelSpec,
+    weights: &ModelWeights,
+    h: HostTensor,
+    start: usize,
+    end: usize,
+) -> Result<HostTensor> {
+    let mut h = h;
+    let mut acts: HashMap<usize, HostTensor> = HashMap::new();
+    acts.insert(start, h.clone());
+    for l in (start + 1)..=end {
+        let layer = &arch.layers[l - 1];
+        let (d_in, d_out) = match layer.kind {
+            LayerKind::Linear { d_in, d_out } => (d_in, d_out),
+            LayerKind::Conv2d { .. } => {
+                return Err(Error::Shape(format!(
+                    "host reference kernels support linear layers only \
+                     (layer {l} of {} is conv2d); run `make artifacts` and \
+                     use the PJRT executables for conv architectures",
+                    arch.name
+                )))
+            }
+        };
+        if h.row_elems() != d_in {
+            return Err(Error::Shape(format!(
+                "layer {l} expects {d_in} inputs, activation has {}",
+                h.row_elems()
+            )));
+        }
+        let batch = h.batch();
+        let w = weights.flat_w(l)?;
+        let wd = w.data();
+        let bd = weights.bias(l).data();
+        if w.dims() != &[d_in, d_out] || bd.len() != d_out {
+            return Err(Error::Shape(format!(
+                "layer {l}: weights {:?} / bias {} do not match spec {d_in}x{d_out}",
+                w.dims(),
+                bd.len()
+            )));
+        }
+        let mut out = vec![0.0f32; batch * d_out];
+        for (xrow, orow) in h.data.chunks_exact(d_in).zip(out.chunks_exact_mut(d_out)) {
+            orow.copy_from_slice(bd);
+            for (i, &xi) in xrow.iter().enumerate() {
+                if xi != 0.0 {
+                    let wrow = &wd[i * d_out..(i + 1) * d_out];
+                    for (o, &wj) in orow.iter_mut().zip(wrow) {
+                        *o += xi * wj;
+                    }
+                }
+            }
+            if layer.relu {
+                for o in orow.iter_mut() {
+                    if *o < 0.0 {
+                        *o = 0.0;
+                    }
+                }
+            }
+        }
+        // residual add AFTER the activation, matching the lowered
+        // `qlinear(...) + skip` ordering
+        if let Some(src) = arch.residual_source(l) {
+            let skip = acts
+                .get(&src)
+                .ok_or_else(|| Error::Shape(format!("skip source {src} unavailable")))?;
+            if skip.data.len() != out.len() {
+                return Err(Error::Shape(format!(
+                    "layer {l}: skip has {} elements, output has {}",
+                    skip.data.len(),
+                    out.len()
+                )));
+            }
+            for (o, &s) in out.iter_mut().zip(&skip.data) {
+                *o += s;
+            }
+        }
+        h = HostTensor::new(vec![batch, d_out], out)?;
+        acts.insert(l, h.clone());
+    }
+    Ok(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use qpart_core::model::LayerSpec;
+    use qpart_core::tensor::Tensor;
+
+    fn lin(name: &str, d_in: usize, d_out: usize, relu: bool) -> LayerSpec {
+        LayerSpec { name: name.into(), kind: LayerKind::Linear { d_in, d_out }, relu }
+    }
+
+    fn toy() -> (ModelSpec, ModelWeights) {
+        let arch =
+            ModelSpec::new("toy", vec![lin("fc1", 2, 2, true), lin("fc2", 2, 1, false)], 1)
+                .unwrap();
+        let weights = ModelWeights {
+            layers: vec![
+                (
+                    Tensor::new(vec![2, 2], vec![1.0, -1.0, 2.0, 1.0]).unwrap(),
+                    Tensor::new(vec![2], vec![0.5, -0.5]).unwrap(),
+                ),
+                (
+                    Tensor::new(vec![2, 1], vec![1.0, -2.0]).unwrap(),
+                    Tensor::new(vec![1], vec![0.25]).unwrap(),
+                ),
+            ],
+        };
+        (arch, weights)
+    }
+
+    #[test]
+    fn forward_matches_hand_computation() {
+        let (arch, w) = toy();
+        // x = [1, 2]: fc1 pre-act = [1*1+2*2+0.5, 1*(-1)+2*1-0.5] = [5.5, 0.5]
+        // relu → [5.5, 0.5]; fc2 = 5.5*1 + 0.5*(-2) + 0.25 = 4.75
+        let x = HostTensor::new(vec![1, 2], vec![1.0, 2.0]).unwrap();
+        let y = run_layers(&arch, &w, x, 0, 2).unwrap();
+        assert_eq!(y.dims, vec![1, 1]);
+        assert!((y.data[0] - 4.75).abs() < 1e-6, "{}", y.data[0]);
+    }
+
+    #[test]
+    fn relu_clamps_negative_preactivations() {
+        let (arch, w) = toy();
+        // x = [-1, 0]: fc1 pre-act = [-1+0.5, 1-0.5] = [-0.5, 0.5] → relu [0, 0.5]
+        // fc2 = 0*1 + 0.5*(-2) + 0.25 = -0.75 (no relu on the last layer)
+        let x = HostTensor::new(vec![1, 2], vec![-1.0, 0.0]).unwrap();
+        let y = run_layers(&arch, &w, x, 0, 2).unwrap();
+        assert!((y.data[0] + 0.75).abs() < 1e-6, "{}", y.data[0]);
+    }
+
+    #[test]
+    fn batched_rows_equal_single_rows() {
+        let (arch, w) = toy();
+        let rows = [vec![1.0f32, 2.0], vec![-1.0, 0.5], vec![0.0, 0.0], vec![3.0, -4.0]];
+        let stacked = HostTensor::new(
+            vec![rows.len(), 2],
+            rows.iter().flatten().copied().collect(),
+        )
+        .unwrap();
+        let batched = run_layers(&arch, &w, stacked, 0, 2).unwrap();
+        for (i, r) in rows.iter().enumerate() {
+            let single = run_layers(
+                &arch,
+                &w,
+                HostTensor::new(vec![1, 2], r.clone()).unwrap(),
+                0,
+                2,
+            )
+            .unwrap();
+            assert_eq!(single.data[0], batched.data[i], "row {i} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn partial_segment_starts_mid_model() {
+        let (arch, w) = toy();
+        // start = 1: run only fc2 on a boundary activation
+        let h = HostTensor::new(vec![1, 2], vec![2.0, 1.0]).unwrap();
+        let y = run_layers(&arch, &w, h, 1, 2).unwrap();
+        assert!((y.data[0] - (2.0 - 2.0 + 0.25)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conv_layers_are_rejected_clearly() {
+        let arch = ModelSpec::new(
+            "convy",
+            vec![LayerSpec {
+                name: "c1".into(),
+                kind: LayerKind::Conv2d {
+                    c_in: 1,
+                    c_out: 2,
+                    k: 3,
+                    stride: 1,
+                    in_side: 8,
+                    out_side: 8,
+                },
+                relu: true,
+            }],
+            2,
+        )
+        .unwrap();
+        let w = ModelWeights {
+            layers: vec![(Tensor::zeros(vec![1, 3, 3, 2]), Tensor::zeros(vec![2]))],
+        };
+        let x = HostTensor::zeros(vec![1, 1, 8, 8]);
+        let err = run_layers(&arch, &w, x, 0, 1).unwrap_err();
+        assert!(err.to_string().contains("linear layers only"), "{err}");
+    }
+}

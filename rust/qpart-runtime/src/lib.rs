@@ -10,19 +10,34 @@
 //!   weights / calibration tables / datasets.
 //! * [`executor`] — split inference: quantize-per-pattern, run the device
 //!   segment through the Pallas-kernel executables, quantize the boundary
-//!   activation (the simulated uplink), finish on the server segment;
-//!   plus full-precision, autoencoder-baseline, and pruning-baseline paths
-//!   and batched accuracy evaluation.
+//!   activation (the simulated uplink), finish on the server segment
+//!   (single-row or batched over up to [`executor::EVAL_BATCH`] coalesced
+//!   rows); plus full-precision, autoencoder-baseline, and
+//!   pruning-baseline paths and batched accuracy evaluation.
+//! * [`compile_cache`] — the pool-wide compile cache: compiled
+//!   executables, prepared device segments, weight literals, and phase-2
+//!   server plans keyed by `(model, partition, fingerprint)`, built once
+//!   per server instead of once per pool worker.
+//! * [`host`] — pure-Rust reference kernels for f32 linear server
+//!   segments, the explicit opt-in phase-2 path when no PJRT backend is
+//!   available (tests, `bench-serve`).
 //!
 //! Python never runs here — the HLO was lowered once at build time; this
 //! crate is pure Rust + PJRT and sits on the serving hot path.
+//!
+//! The `real-xla` cargo feature marks builds against the real `xla`
+//! bindings instead of the vendored offline stub (swapped in via the
+//! workspace manifest — see the repo README's "Real XLA" section).
 
 pub mod bundle;
+pub mod compile_cache;
 pub mod engine;
 pub mod error;
 pub mod executor;
+pub mod host;
 
 pub use bundle::{Bundle, DatasetEntry, ExecEntry, ModelEntry, ModelWeights};
+pub use compile_cache::{CompileCache, CompileKey, ServerSegmentPlan, WeightLiterals};
 pub use engine::{Engine, Exec, HostTensor};
 pub use error::{Error, Result};
-pub use executor::{Executor, PreparedSegment, SplitOutcome};
+pub use executor::{Executor, PreparedSegment, SplitOutcome, EVAL_BATCH};
