@@ -98,8 +98,9 @@ const USAGE: &str = "usage: qpart <serve|request|bench-serve|sim|offline|models>
            [--sweep workers=1,2,4,8]  run once per value, print a scaling table\n\
            [--csv]                    emit the table as CSV rows (qpart-bench format)\n\
            reports req/s, p50/p99 latency, shed rate, encodes vs requests,\n\
-           cache hit rate, phase-2 batch occupancy, uplink bytes saved, and\n\
-           binary-vs-JSON byte-identity checks in both directions\n\
+           cache + decision-cache hit rates, per-stage means (plan / encode+pack\n\
+           / phase-2 exec), phase-2 batch occupancy + ladder-padded rows, uplink\n\
+           bytes saved, and binary-vs-JSON byte-identity checks in both directions\n\
   sim      --model mlp6 --rate 20 --devices 16 --duration 10\n\
   offline  --model mlp6\n\
   models";
@@ -253,11 +254,19 @@ struct BenchSummary {
     hit_rate_pct: f64,
     phase2_execs: u64,
     phase2_rows: u64,
+    /// Zero rows the batch ladder padded onto phase-2 executions this
+    /// pass (0 ⇔ every chunk hit a ladder rung exactly).
+    phase2_padded: u64,
+    /// Per-stage mean cost this pass: Algorithm-2 planning, segment
+    /// encode (quantize+pack+serialize), phase-2 execution.
+    plan_us: f64,
+    encode_us: f64,
+    exec_us: f64,
     uplink_saved_bytes: u64,
 }
 
 impl BenchSummary {
-    fn table_headers() -> [&'static str; 11] {
+    fn table_headers() -> [&'static str; 15] {
         [
             "workers",
             "req/s",
@@ -267,8 +276,12 @@ impl BenchSummary {
             "encodes",
             "coalesced",
             "hit %",
+            "plan µs",
+            "enc µs",
+            "exec µs",
             "p2 execs",
             "p2 rows",
+            "p2 padded",
             "uplink saved B",
         ]
     }
@@ -283,10 +296,27 @@ impl BenchSummary {
             self.encodes.to_string(),
             self.coalesced.to_string(),
             format!("{:.1}", self.hit_rate_pct),
+            format!("{:.0}", self.plan_us),
+            format!("{:.0}", self.encode_us),
+            format!("{:.0}", self.exec_us),
             self.phase2_execs.to_string(),
             self.phase2_rows.to_string(),
+            self.phase2_padded.to_string(),
             self.uplink_saved_bytes.to_string(),
         ]
+    }
+}
+
+/// Per-pass mean of a latency histogram given its cumulative
+/// `(count, mean)` before and after the pass (a NaN mean encodes an
+/// empty histogram — treated as zero sum).
+fn delta_mean_us(prev_count: u64, prev_mean: f64, count: u64, mean: f64) -> f64 {
+    let sum = |c: u64, m: f64| if c == 0 { 0.0 } else { m * c as f64 };
+    let dc = count.saturating_sub(prev_count);
+    if dc == 0 {
+        0.0
+    } else {
+        (sum(count, mean) - sum(prev_count, prev_mean)) / dc as f64
     }
 }
 
@@ -527,19 +557,34 @@ fn run_bench_serve(
         let d_coalesced = snap.coalesced_total - prev.coalesced_total;
         let d_execs = snap.phase2_execs_total - prev.phase2_execs_total;
         let d_rows = snap.phase2_rows_total - prev.phase2_rows_total;
+        let d_padded = snap.phase2_padded_rows_total - prev.phase2_padded_rows_total;
         let lookups = d_hits + d_misses;
         let hit_rate = if lookups > 0 { 100.0 * d_hits as f64 / lookups as f64 } else { 0.0 };
-        // per-pass queue-wait mean from the cumulative histogram sums
-        // (a NaN mean encodes an empty histogram — treat as zero sum)
-        let wait_sum = |count: u64, mean: f64| if count == 0 { 0.0 } else { mean * count as f64 };
-        let d_wait_count = snap.queue_wait_count - prev.queue_wait_count;
-        let d_wait_mean = if d_wait_count == 0 {
-            0.0
-        } else {
-            (wait_sum(snap.queue_wait_count, snap.queue_wait_mean_us)
-                - wait_sum(prev.queue_wait_count, prev.queue_wait_mean_us))
-                / d_wait_count as f64
-        };
+        // per-pass stage means from the cumulative histogram sums
+        let d_wait_mean = delta_mean_us(
+            prev.queue_wait_count,
+            prev.queue_wait_mean_us,
+            snap.queue_wait_count,
+            snap.queue_wait_mean_us,
+        );
+        let d_plan_mean = delta_mean_us(
+            prev.decide_count,
+            prev.decide_mean_us,
+            snap.decide_count,
+            snap.decide_mean_us,
+        );
+        let d_encode_mean = delta_mean_us(
+            prev.quantize_count,
+            prev.quantize_mean_us,
+            snap.quantize_count,
+            snap.quantize_mean_us,
+        );
+        let d_exec_mean = delta_mean_us(
+            prev.execute_count,
+            prev.execute_mean_us,
+            snap.execute_count,
+            snap.execute_mean_us,
+        );
         println!(
             "pass {pass}: {} ok / {attempts} ({shed} shed = {:.1}%, {errors} errors), \
              {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms",
@@ -554,12 +599,21 @@ fn run_bench_serve(
              coalesced {d_coalesced}, cache hits {d_hits}/{lookups} ({hit_rate:.1}%), \
              queue wait mean {d_wait_mean:.0} µs"
         );
+        println!(
+            "        stages: plan {d_plan_mean:.0} µs, encode+pack {d_encode_mean:.0} µs, \
+             phase2 exec {d_exec_mean:.0} µs (per-stage means this pass)"
+        );
         if phase2 {
             let occupancy =
                 if d_execs > 0 { d_rows as f64 / d_execs as f64 } else { f64::NAN };
+            let waste = if d_rows + d_padded > 0 {
+                100.0 * d_padded as f64 / (d_rows + d_padded) as f64
+            } else {
+                0.0
+            };
             println!(
                 "        phase2: {d_rows} uploads in {d_execs} server-segment runs \
-                 (occupancy {occupancy:.2})"
+                 (occupancy {occupancy:.2}, ladder padded {d_padded} rows = {waste:.1}% waste)"
             );
         }
         if errors > 0 {
@@ -577,6 +631,10 @@ fn run_bench_serve(
             hit_rate_pct: hit_rate,
             phase2_execs: d_execs,
             phase2_rows: d_rows,
+            phase2_padded: d_padded,
+            plan_us: d_plan_mean,
+            encode_us: d_encode_mean,
+            exec_us: d_exec_mean,
             // per-pass, like every other field in the row (the cumulative
             // total is printed in the totals line instead)
             uplink_saved_bytes: pass_saved,
@@ -649,14 +707,18 @@ fn run_bench_serve(
     let final_snap = handle.snapshot();
     println!(
         "totals: requests {}, encodes {}, coalesced {}, cache hits {}, cache misses {}, \
-         phase2 execs {}, phase2 rows {}, warmed {}, uplink bytes saved {}",
+         decision hits {}, decision misses {}, phase2 execs {}, phase2 rows {}, \
+         phase2 padded rows {}, warmed {}, uplink bytes saved {}",
         final_snap.requests_total,
         final_snap.encodes_total,
         final_snap.coalesced_total,
         final_snap.cache_hits,
         final_snap.cache_misses,
+        final_snap.decision_hits,
+        final_snap.decision_misses,
         final_snap.phase2_execs_total,
         final_snap.phase2_rows_total,
+        final_snap.phase2_padded_rows_total,
         final_snap.warmed_total,
         uplink_saved_total,
     );

@@ -1,0 +1,332 @@
+//! The Algorithm-2 decision cache: memoized serving decisions per
+//! `(model, accuracy level, bucketed device/channel profile)`.
+//!
+//! Algorithm 2 is cheap (µs) but runs on **every** request, and a fleet's
+//! request stream is dominated by a handful of device classes whose
+//! profiles repeat exactly (simulators, SDK defaults, per-class configs).
+//! For those, the decision — and the objective value shipped with it — is
+//! a pure function of the request's cost-model parameters and the
+//! selected accuracy level, so the coordinator memoizes it server-wide:
+//! repeat profiles skip planning entirely and the worker goes straight to
+//! the encoded-reply cache.
+//!
+//! **Bucketing.** Continuous profile fields (clocks, channel capacity,
+//! tradeoff weights, …) are keyed by a log-scale bucket of ≈0.5% relative
+//! width; `memory_bits` is keyed exactly (it gates the
+//! feasibility filter). Requests whose profiles land in the same bucket
+//! share one decision: for byte-identical profiles (the common case —
+//! device classes, not continuous noise) the cached decision is exactly
+//! what a fresh `serve_request` would return (tested); profiles that
+//! merely *bucket* together get the representative's decision, trading
+//! ≤0.5% of parameter fidelity for a planning skip. Callers who cannot
+//! accept that trade should bypass the cache.
+//!
+//! Capacity: FIFO-bounded ([`DecisionCache::with_capacity`]) — the
+//! working set is device classes × levels (tens), the bound only guards
+//! against adversarial profile churn. Counters surface in the stats
+//! document's `decision_cache` section.
+//!
+//! Only **successful** decisions are memoized, deliberately: infeasible
+//! requests are error paths (answered `infeasible` on the wire), a
+//! re-plan there costs µs, and never caching failures means a transient
+//! mis-profile can't poison the cache for its whole bucket.
+
+use qpart_core::cost::CostModel;
+use qpart_core::json::Value;
+use qpart_core::optimizer::Decision;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Log-scale bucket of one nonnegative continuous profile field: ≈0.54%
+/// relative resolution (2^(1/128) per step). Exact zero, negatives, and
+/// non-finite values get their own sentinel buckets so they never alias a
+/// real magnitude.
+fn qbucket(x: f64) -> i64 {
+    if !x.is_finite() {
+        return i64::MAX;
+    }
+    if x == 0.0 {
+        return i64::MIN;
+    }
+    let mag = (x.abs().log2() * 128.0).round() as i64;
+    if x < 0.0 {
+        // negative magnitudes fold into their own half-range
+        i64::MIN / 2 + mag
+    } else {
+        mag
+    }
+}
+
+/// The bucketed device/channel/tradeoff profile — the part of a
+/// [`DecisionKey`] derived from the request's live parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ProfileBucket {
+    device: [i64; 3],
+    memory_bits: u64,
+    server: [i64; 4],
+    channel: [i64; 2],
+    weights: [i64; 3],
+}
+
+impl ProfileBucket {
+    /// Bucket every continuous field of `cost` (see the module docs).
+    pub fn of(cost: &CostModel) -> ProfileBucket {
+        ProfileBucket {
+            device: [
+                qbucket(cost.device.clock_hz),
+                qbucket(cost.device.cycles_per_mac),
+                qbucket(cost.device.kappa),
+            ],
+            memory_bits: cost.device.memory_bits,
+            server: [
+                qbucket(cost.server.clock_hz),
+                qbucket(cost.server.cycles_per_mac),
+                qbucket(cost.server.price_per_s),
+                qbucket(cost.server.eta_m),
+            ],
+            channel: [qbucket(cost.channel.capacity_bps), qbucket(cost.channel.tx_power_w)],
+            weights: [
+                qbucket(cost.weights.omega),
+                qbucket(cost.weights.tau),
+                qbucket(cost.weights.eta),
+            ],
+        }
+    }
+}
+
+/// Cache key: `(model, accuracy-level index, bucketed profile)`. The
+/// level index (not the raw budget) is the key's accuracy component —
+/// Algorithm 2 consumes the budget only through `select_level`, so two
+/// budgets mapping to the same level share a decision by construction.
+pub type DecisionKey = (String, usize, ProfileBucket);
+
+/// Server-wide memoization of Algorithm-2 decisions. Shared across all
+/// pool workers via `Arc`; one entry per `(model, level, profile bucket)`.
+pub struct DecisionCache {
+    capacity: usize,
+    /// Read-mostly by design (steady-state lookups are hits), so reads
+    /// take a shared lock — the plan path never serializes the pool on
+    /// cache hits.
+    inner: RwLock<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+struct Inner {
+    map: HashMap<DecisionKey, Arc<Decision>>,
+    /// Insertion order for FIFO eviction (the working set is small and
+    /// stable; recency tracking would buy nothing).
+    order: VecDeque<DecisionKey>,
+}
+
+impl std::fmt::Debug for DecisionCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DecisionCache")
+            .field("entries", &self.len())
+            .field("capacity", &self.capacity)
+            .finish()
+    }
+}
+
+impl Default for DecisionCache {
+    fn default() -> Self {
+        DecisionCache::new()
+    }
+}
+
+impl DecisionCache {
+    /// Default capacity: far above any realistic device-class × level
+    /// working set, small enough to bound adversarial churn.
+    pub fn new() -> DecisionCache {
+        DecisionCache::with_capacity(4096)
+    }
+
+    pub fn with_capacity(capacity: usize) -> DecisionCache {
+        DecisionCache {
+            capacity: capacity.max(1),
+            inner: RwLock::new(Inner { map: HashMap::new(), order: VecDeque::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a memoized decision, counting the hit/miss. Lookups take
+    /// the shared (read) lock: concurrent workers never contend unless
+    /// one is inserting.
+    pub fn get(&self, key: &DecisionKey) -> Option<Arc<Decision>> {
+        let inner = self.inner.read().unwrap();
+        match inner.map.get(key) {
+            Some(d) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(d))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Publish a freshly planned decision (idempotent across racing
+    /// workers — last write wins, the decisions are equal).
+    pub fn insert(&self, key: DecisionKey, decision: Arc<Decision>) {
+        let mut inner = self.inner.write().unwrap();
+        if inner.map.insert(key.clone(), decision).is_none() {
+            inner.order.push_back(key);
+        }
+        while inner.map.len() > self.capacity {
+            match inner.order.pop_front() {
+                Some(victim) => {
+                    inner.map.remove(&victim);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Resident entries.
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hit rate over lookups so far (NaN before the first lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits() as f64;
+        let m = self.misses() as f64;
+        h / (h + m)
+    }
+
+    /// The `decision_cache` section of the stats document.
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("entries", self.len().into()),
+            ("capacity", self.capacity.into()),
+            ("hits", self.hits().into()),
+            ("misses", self.misses().into()),
+            ("evictions", self.evictions().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use qpart_core::accuracy::CalibrationTable;
+    use qpart_core::model::mlp6;
+    use qpart_core::optimizer::{
+        offline_quantize, serve_request_fast, OfflineConfig, RequestParams,
+    };
+
+    fn decision() -> Arc<Decision> {
+        let m = mlp6();
+        let calib = CalibrationTable::synthetic(&m, &[0.01], 3);
+        let set = offline_quantize(&m, &calib, OfflineConfig::default()).unwrap();
+        let req = RequestParams { cost: CostModel::paper_default(), accuracy_budget: 0.01 };
+        Arc::new(serve_request_fast(&m, &set, &req).unwrap())
+    }
+
+    fn key(model: &str, cost: &CostModel) -> DecisionKey {
+        (model.to_string(), 0, ProfileBucket::of(cost))
+    }
+
+    #[test]
+    fn identical_profiles_hit_and_share_the_decision() {
+        let cache = DecisionCache::new();
+        let cost = CostModel::paper_default();
+        assert!(cache.get(&key("m", &cost)).is_none());
+        assert_eq!(cache.misses(), 1);
+        let d = decision();
+        cache.insert(key("m", &cost), Arc::clone(&d));
+        let got = cache.get(&key("m", &cost)).unwrap();
+        assert!(Arc::ptr_eq(&got, &d), "byte-identical profile → shared decision");
+        assert_eq!(cache.hits(), 1);
+        assert!(cache.hit_rate() > 0.49 && cache.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn profile_changes_miss() {
+        let cache = DecisionCache::new();
+        let base = CostModel::paper_default();
+        cache.insert(key("m", &base), decision());
+        // a 2× channel is a different bucket, a different level index is a
+        // different key, a different model is a different key
+        let mut fast = base;
+        fast.channel.capacity_bps *= 2.0;
+        assert!(cache.get(&key("m", &fast)).is_none());
+        assert!(cache.get(&("m".to_string(), 1, ProfileBucket::of(&base))).is_none());
+        assert!(cache.get(&key("other", &base)).is_none());
+        // memory is exact: one bit of difference misses
+        let mut mem = base;
+        mem.device.memory_bits = base.device.memory_bits.wrapping_sub(1);
+        assert!(cache.get(&key("m", &mem)).is_none());
+    }
+
+    #[test]
+    fn near_identical_profiles_bucket_together() {
+        // 0.1% jitter is inside the ≈0.5% bucket width — the fleet's
+        // "same device class, noisy telemetry" case shares the entry
+        let base = CostModel::paper_default();
+        let mut jitter = base;
+        jitter.channel.capacity_bps *= 1.001;
+        jitter.device.clock_hz *= 0.9995;
+        assert_eq!(ProfileBucket::of(&base), ProfileBucket::of(&jitter));
+    }
+
+    #[test]
+    fn qbucket_sentinels_do_not_alias() {
+        assert_ne!(qbucket(0.0), qbucket(1e-300));
+        assert_ne!(qbucket(f64::NAN), qbucket(1e300));
+        assert_ne!(qbucket(-1.0), qbucket(1.0));
+        assert_eq!(qbucket(1.0), qbucket(1.001));
+        assert_ne!(qbucket(1.0), qbucket(1.02));
+    }
+
+    #[test]
+    fn capacity_evicts_fifo() {
+        let cache = DecisionCache::with_capacity(2);
+        let d = decision();
+        for i in 0..4u64 {
+            let mut cost = CostModel::paper_default();
+            cost.device.memory_bits = i; // distinct exact keys
+            cache.insert(key("m", &cost), Arc::clone(&d));
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 2);
+        let mut oldest = CostModel::paper_default();
+        oldest.device.memory_bits = 0;
+        assert!(cache.get(&key("m", &oldest)).is_none(), "oldest evicted first");
+        let mut newest = CostModel::paper_default();
+        newest.device.memory_bits = 3;
+        assert!(cache.get(&key("m", &newest)).is_some());
+    }
+
+    #[test]
+    fn stats_json_has_all_fields() {
+        let cache = DecisionCache::new();
+        let v = cache.to_json();
+        for k in ["entries", "capacity", "hits", "misses", "evictions"] {
+            assert!(v.get(k).is_some(), "{k}");
+        }
+    }
+}

@@ -13,6 +13,10 @@
 //!   `qpart_runtime::CompileCache` (each segment compiled once per
 //!   server, not once per worker), with optional startup warming
 //!   (`--warm-cache`).
+//! * [`decision`] — the server-wide **Algorithm-2 decision cache**:
+//!   memoized `(model, accuracy level, bucketed device/channel profile)`
+//!   → decision, so repeat profiles skip planning entirely (surfaced in
+//!   the stats document's `decision_cache` section).
 //! * [`sched`] — the **serving dataplane** between the accept loop and
 //!   the executor pool: batch draining with an optional coalescing
 //!   window, the `(model, accuracy level, partition)`-keyed
@@ -44,6 +48,7 @@
 //! Python never appears anywhere on these paths.
 
 pub mod client;
+pub mod decision;
 pub mod metrics;
 pub mod sched;
 pub mod server;
@@ -52,6 +57,7 @@ pub mod session;
 pub mod testing;
 
 pub use client::DeviceClient;
+pub use decision::{DecisionCache, DecisionKey, ProfileBucket};
 pub use metrics::{Metrics, MetricsHub, MetricsSnapshot};
 pub use sched::{BatchPolicy, EncodedReplyCache, Job, WireReply};
 pub use server::{serve, ServerConfig, ServerHandle};

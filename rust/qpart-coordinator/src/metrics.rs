@@ -20,10 +20,15 @@
 //! executions and `phase2_rows_total` the activation rows they carried —
 //! their ratio is the **batch occupancy** (rows per execution; N
 //! coalesced same-key uploads should run as ⌈N/EVAL_BATCH⌉ executions,
-//! not N). `warmed_total` counts `--warm-cache` startup warms, and the
+//! not N). `phase2_padded_rows_total` counts the zero rows the batch
+//! ladder padded onto those executions (0 when every chunk hit a ladder
+//! rung exactly — the waste the `[1, 8, 32]` ladder exists to cut).
+//! `warmed_total` counts `--warm-cache` startup warms, the
 //! `compile_cache` section carries the pool-wide compile cache's
-//! once-per-key counters.
+//! once-per-key counters, and the `decision_cache` section the
+//! Algorithm-2 memoization counters.
 
+use crate::decision::DecisionCache;
 use crate::sched::EncodedReplyCache;
 use qpart_core::json::Value;
 use qpart_runtime::CompileCache;
@@ -173,6 +178,9 @@ pub struct Metrics {
     /// Activation rows executed by phase-2 runs. `rows / execs` is the
     /// batch occupancy the coalescing window buys.
     pub phase2_rows_total: AtomicU64,
+    /// Zero rows padded onto phase-2 executions to reach the chosen
+    /// batch-ladder rung (a single-row upload at rung 1 pads nothing).
+    pub phase2_padded_rows_total: AtomicU64,
     /// Reply keys warmed at startup (`--warm-cache`).
     pub warmed_total: AtomicU64,
     /// End-to-end request handling (decision + quantize + execute).
@@ -203,14 +211,28 @@ pub struct MetricsSnapshot {
     pub encodes_total: u64,
     pub phase2_execs_total: u64,
     pub phase2_rows_total: u64,
+    pub phase2_padded_rows_total: u64,
     pub warmed_total: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Algorithm-2 decision-cache counters (0 in per-worker snapshots;
+    /// the cache is shared, not per-worker).
+    pub decision_hits: u64,
+    pub decision_misses: u64,
     /// Pool-wide compile-cache builds (0 in per-worker snapshots; the
     /// cache is shared, not per-worker).
     pub compilations_total: u64,
     pub handle_count: u64,
     pub handle_mean_us: f64,
+    /// Per-stage means (µs): Algorithm-2 planning, segment encode
+    /// (quantize+pack+serialize), phase-2 execution — the bench-serve
+    /// stage breakdown reads these.
+    pub decide_count: u64,
+    pub decide_mean_us: f64,
+    pub quantize_count: u64,
+    pub quantize_mean_us: f64,
+    pub execute_count: u64,
+    pub execute_mean_us: f64,
     pub queue_wait_count: u64,
     pub queue_wait_mean_us: f64,
 }
@@ -219,6 +241,13 @@ impl MetricsSnapshot {
     /// Mean activation rows per phase-2 execution (NaN before the first).
     pub fn batch_occupancy_mean(&self) -> f64 {
         self.phase2_rows_total as f64 / self.phase2_execs_total as f64
+    }
+
+    /// Fraction of executed phase-2 rows that were ladder padding
+    /// (NaN before the first execution). 0.0 ⇔ every chunk hit a rung.
+    pub fn padding_waste(&self) -> f64 {
+        self.phase2_padded_rows_total as f64
+            / (self.phase2_rows_total + self.phase2_padded_rows_total) as f64
     }
 }
 
@@ -242,12 +271,21 @@ impl Metrics {
             encodes_total: self.encodes_total.load(Ordering::Relaxed),
             phase2_execs_total: self.phase2_execs_total.load(Ordering::Relaxed),
             phase2_rows_total: self.phase2_rows_total.load(Ordering::Relaxed),
+            phase2_padded_rows_total: self.phase2_padded_rows_total.load(Ordering::Relaxed),
             warmed_total: self.warmed_total.load(Ordering::Relaxed),
             cache_hits: 0,
             cache_misses: 0,
+            decision_hits: 0,
+            decision_misses: 0,
             compilations_total: 0,
             handle_count: self.handle_latency.count(),
             handle_mean_us: self.handle_latency.mean_us(),
+            decide_count: self.decide_latency.count(),
+            decide_mean_us: self.decide_latency.mean_us(),
+            quantize_count: self.quantize_latency.count(),
+            quantize_mean_us: self.quantize_latency.mean_us(),
+            execute_count: self.execute_latency.count(),
+            execute_mean_us: self.execute_latency.mean_us(),
             queue_wait_count: self.queue_wait.count(),
             queue_wait_mean_us: self.queue_wait.mean_us(),
         }
@@ -270,6 +308,10 @@ impl Metrics {
                 self.phase2_execs_total.load(Ordering::Relaxed).into(),
             ),
             ("phase2_rows_total", self.phase2_rows_total.load(Ordering::Relaxed).into()),
+            (
+                "phase2_padded_rows_total",
+                self.phase2_padded_rows_total.load(Ordering::Relaxed).into(),
+            ),
             ("warmed_total", self.warmed_total.load(Ordering::Relaxed).into()),
             ("handle", self.handle_latency.to_json()),
             ("decide", self.decide_latency.to_json()),
@@ -297,6 +339,7 @@ struct CounterTotals {
     encodes_total: u64,
     phase2_execs_total: u64,
     phase2_rows_total: u64,
+    phase2_padded_rows_total: u64,
     warmed_total: u64,
 }
 
@@ -315,6 +358,7 @@ impl CounterTotals {
             encodes_total: m.encodes_total.load(Ordering::Relaxed),
             phase2_execs_total: m.phase2_execs_total.load(Ordering::Relaxed),
             phase2_rows_total: m.phase2_rows_total.load(Ordering::Relaxed),
+            phase2_padded_rows_total: m.phase2_padded_rows_total.load(Ordering::Relaxed),
             warmed_total: m.warmed_total.load(Ordering::Relaxed),
         }
     }
@@ -332,6 +376,7 @@ impl CounterTotals {
         self.encodes_total += other.encodes_total;
         self.phase2_execs_total += other.phase2_execs_total;
         self.phase2_rows_total += other.phase2_rows_total;
+        self.phase2_padded_rows_total += other.phase2_padded_rows_total;
         self.warmed_total += other.warmed_total;
     }
 }
@@ -358,6 +403,7 @@ pub struct MetricsHub {
     workers: Mutex<Vec<Arc<Metrics>>>,
     segment_cache: Mutex<Option<Arc<EncodedReplyCache>>>,
     compile_cache: Mutex<Option<Arc<CompileCache>>>,
+    decision_cache: Mutex<Option<Arc<DecisionCache>>>,
 }
 
 impl MetricsHub {
@@ -397,6 +443,18 @@ impl MetricsHub {
     /// The registered compile cache, if any.
     pub fn compile_cache(&self) -> Option<Arc<CompileCache>> {
         self.compile_cache.lock().unwrap().clone()
+    }
+
+    /// Register the server-wide Algorithm-2 decision cache so its
+    /// hit/miss/entry counters surface in snapshots and the stats
+    /// document's `decision_cache` section.
+    pub fn register_decision_cache(&self, cache: Arc<DecisionCache>) {
+        *self.decision_cache.lock().unwrap() = Some(cache);
+    }
+
+    /// The registered decision cache, if any.
+    pub fn decision_cache(&self) -> Option<Arc<DecisionCache>> {
+        self.decision_cache.lock().unwrap().clone()
     }
 
     pub fn num_workers(&self) -> usize {
@@ -445,6 +503,10 @@ impl MetricsHub {
             Some(c) => (c.hits(), c.misses()),
             None => (0, 0),
         };
+        let (decision_hits, decision_misses) = match self.decision_cache() {
+            Some(c) => (c.hits(), c.misses()),
+            None => (0, 0),
+        };
         let compilations_total =
             self.compile_cache().map(|c| c.compilations()).unwrap_or(0);
         MetricsSnapshot {
@@ -457,12 +519,21 @@ impl MetricsHub {
             encodes_total: agg.totals.encodes_total,
             phase2_execs_total: agg.totals.phase2_execs_total,
             phase2_rows_total: agg.totals.phase2_rows_total,
+            phase2_padded_rows_total: agg.totals.phase2_padded_rows_total,
             warmed_total: agg.totals.warmed_total,
             cache_hits,
             cache_misses,
+            decision_hits,
+            decision_misses,
             compilations_total,
             handle_count: agg.handle.count(),
             handle_mean_us: agg.handle.mean_us(),
+            decide_count: agg.decide.count(),
+            decide_mean_us: agg.decide.mean_us(),
+            quantize_count: agg.quantize.count(),
+            quantize_mean_us: agg.quantize.mean_us(),
+            execute_count: agg.execute.count(),
+            execute_mean_us: agg.execute.mean_us(),
             queue_wait_count: agg.queue_wait.count(),
             queue_wait_mean_us: agg.queue_wait.mean_us(),
         }
@@ -486,6 +557,7 @@ impl MetricsHub {
             ("encodes_total", agg.totals.encodes_total.into()),
             ("phase2_execs_total", agg.totals.phase2_execs_total.into()),
             ("phase2_rows_total", agg.totals.phase2_rows_total.into()),
+            ("phase2_padded_rows_total", agg.totals.phase2_padded_rows_total.into()),
             (
                 "batch_occupancy_mean",
                 (agg.totals.phase2_rows_total as f64 / agg.totals.phase2_execs_total as f64)
@@ -504,6 +576,9 @@ impl MetricsHub {
         }
         if let Some(cache) = self.compile_cache() {
             v.set("compile_cache", cache.to_json());
+        }
+        if let Some(cache) = self.decision_cache() {
+            v.set("decision_cache", cache.to_json());
         }
         v
     }
@@ -574,6 +649,58 @@ mod tests {
         let v = hub.to_json();
         assert_eq!(v.req_f64("phase2_rows_total").unwrap() as u64, 40);
         assert_eq!(v.req_f64("batch_occupancy_mean").unwrap(), 20.0);
+    }
+
+    #[test]
+    fn padded_rows_aggregate_and_expose_waste() {
+        let hub = MetricsHub::new();
+        let w1 = hub.register_worker();
+        let w2 = hub.register_worker();
+        Metrics::inc(&w1.phase2_execs_total);
+        Metrics::add(&w1.phase2_rows_total, 7);
+        Metrics::add(&w1.phase2_padded_rows_total, 1); // 7 rows @ rung 8
+        Metrics::inc(&w2.phase2_execs_total);
+        Metrics::add(&w2.phase2_rows_total, 1); // 1 row @ rung 1, no pad
+        let snap = hub.snapshot();
+        assert_eq!(snap.phase2_padded_rows_total, 1);
+        assert!((snap.padding_waste() - 1.0 / 9.0).abs() < 1e-12);
+        let v = hub.to_json();
+        assert_eq!(v.req_f64("phase2_padded_rows_total").unwrap() as u64, 1);
+    }
+
+    #[test]
+    fn snapshot_carries_stage_means() {
+        let hub = MetricsHub::new();
+        let w = hub.register_worker();
+        w.decide_latency.observe_us(10);
+        w.decide_latency.observe_us(30);
+        w.quantize_latency.observe_us(500);
+        w.execute_latency.observe_us(2000);
+        let snap = hub.snapshot();
+        assert_eq!(snap.decide_count, 2);
+        assert!((snap.decide_mean_us - 20.0).abs() < 1e-9);
+        assert_eq!(snap.quantize_count, 1);
+        assert!((snap.quantize_mean_us - 500.0).abs() < 1e-9);
+        assert_eq!(snap.execute_count, 1);
+        assert!((snap.execute_mean_us - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hub_surfaces_registered_decision_cache() {
+        let hub = MetricsHub::new();
+        assert!(hub.to_json().get("decision_cache").is_none(), "absent until registered");
+        assert_eq!(hub.snapshot().decision_hits, 0);
+        use crate::decision::ProfileBucket;
+        use qpart_core::cost::CostModel;
+        let cache = Arc::new(DecisionCache::new());
+        hub.register_decision_cache(Arc::clone(&cache));
+        let key = ("m".to_string(), 0, ProfileBucket::of(&CostModel::paper_default()));
+        let _ = cache.get(&key); // one miss
+        let snap = hub.snapshot();
+        assert_eq!(snap.decision_misses, 1);
+        assert_eq!(snap.decision_hits, 0);
+        let v = hub.to_json();
+        assert_eq!(v.req("decision_cache").unwrap().req_f64("misses").unwrap(), 1.0);
     }
 
     #[test]

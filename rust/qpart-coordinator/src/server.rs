@@ -23,6 +23,7 @@
 //! `workers` mirrors the simulator's `FleetConfig::server_slots` knob
 //! (qpart-sim), so modeled and live serving share one parallelism model.
 
+use crate::decision::DecisionCache;
 use crate::metrics::{Metrics, MetricsHub, MetricsSnapshot};
 use crate::sched::{drain_batch, BatchPolicy, DrainOutcome, EncodedReplyCache, Job, WireReply};
 use crate::service::{Service, ServiceOptions};
@@ -152,6 +153,9 @@ pub struct ServerHandle {
     pub cache: Arc<EncodedReplyCache>,
     /// The pool-wide compile cache (observability in tests/examples).
     pub compile_cache: Arc<CompileCache>,
+    /// The server-wide Algorithm-2 decision cache (observability in
+    /// tests/examples).
+    pub decision_cache: Arc<DecisionCache>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
     gc_thread: Option<JoinHandle<()>>,
@@ -199,6 +203,9 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
     // one compile cache for the whole pool: executables / prepared
     // segments / phase-2 plans build once per server, not once per worker
     let compile_cache = Arc::new(CompileCache::new());
+    // one Algorithm-2 decision cache for the whole pool: repeat
+    // (model, level, profile) requests skip planning on every worker
+    let decision_cache = Arc::new(DecisionCache::new());
     let stop = Arc::new(AtomicBool::new(false));
 
     // one resident bundle for the whole pool (weights are immutable)
@@ -225,6 +232,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         let worker_sessions = Arc::clone(&sessions);
         let worker_cache = Arc::clone(&cache);
         let worker_compile = Arc::clone(&compile_cache);
+        let worker_decisions = Arc::clone(&decision_cache);
         let worker_bundle = Arc::clone(&bundle);
         let worker_stop = Arc::clone(&stop);
         let worker_rx = Arc::clone(&job_rx);
@@ -235,7 +243,11 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         let t = std::thread::Builder::new()
             .name(format!("qpart-worker-{w}"))
             .spawn(move || {
-                let opts = ServiceOptions { compile_cache: worker_compile, host_fallback };
+                let opts = ServiceOptions {
+                    compile_cache: worker_compile,
+                    decision_cache: worker_decisions,
+                    host_fallback,
+                };
                 let service = Service::with_options(
                     worker_bundle,
                     worker_hub,
@@ -350,6 +362,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         sessions,
         cache,
         compile_cache,
+        decision_cache,
         stop,
         accept_thread: Some(accept_thread),
         gc_thread,

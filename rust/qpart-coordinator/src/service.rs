@@ -22,6 +22,7 @@
 //! The single-request path funnels through the same executor entry, so
 //! batched and sequential phase 2 are numerically identical.
 
+use crate::decision::{DecisionCache, DecisionKey, ProfileBucket};
 use crate::metrics::{Metrics, MetricsHub};
 use crate::sched::{EncodedReplyCache, Job, SegmentKey, SegmentReply, WireReply};
 use crate::session::{Session, SharedSessionTable};
@@ -29,9 +30,9 @@ use qpart_core::channel::Channel;
 use qpart_core::cost::{CostModel, DeviceProfile, ServerProfile, TradeoffWeights};
 use qpart_core::model::{LayerKind, ModelSpec};
 use qpart_core::optimizer::{
-    offline_quantize, serve_request, Decision, OfflineConfig, RequestParams,
+    offline_quantize, serve_request_fast, Decision, OfflineConfig, RequestParams,
 };
-use qpart_core::quant::{pack_bits, unpack_bits, PatternSet, QuantParams, QuantPattern, Quantized};
+use qpart_core::quant::{unpack_bits, PatternSet, QuantParams, QuantPattern, Quantized};
 use qpart_proto::messages::{
     ActivationUpload, EncodedSegmentBody, ErrorReply, HelloReply, InferRequest, LayerBlob,
     ModelInfo, PatternInfo, Request, Response, ResultReply, SegmentBlob, SimulateRequest,
@@ -48,6 +49,9 @@ pub struct ServiceOptions {
     /// Pool-wide compile cache (executables, prepared segments, phase-2
     /// plans — each built once per server, not once per worker).
     pub compile_cache: Arc<CompileCache>,
+    /// Server-wide Algorithm-2 decision cache: repeat
+    /// (model, level, profile-bucket) requests skip planning entirely.
+    pub decision_cache: Arc<DecisionCache>,
     /// Execute phase 2 with the pure-Rust host reference kernels instead
     /// of PJRT (tests / bench-serve; linear architectures only).
     pub host_fallback: bool,
@@ -55,7 +59,11 @@ pub struct ServiceOptions {
 
 impl Default for ServiceOptions {
     fn default() -> Self {
-        ServiceOptions { compile_cache: Arc::new(CompileCache::new()), host_fallback: false }
+        ServiceOptions {
+            compile_cache: Arc::new(CompileCache::new()),
+            decision_cache: Arc::new(DecisionCache::new()),
+            host_fallback: false,
+        }
     }
 }
 
@@ -81,6 +89,9 @@ pub struct Service {
     /// quantize + pack + serialize happens once per key across the whole
     /// pool, not per request or per worker.
     reply_cache: Arc<EncodedReplyCache>,
+    /// Server-wide Algorithm-2 memoization per
+    /// (model, level, bucketed profile) — repeat profiles skip planning.
+    decision_cache: Arc<DecisionCache>,
 }
 
 impl Service {
@@ -110,6 +121,7 @@ impl Service {
         let metrics = hub.register_worker();
         hub.register_segment_cache(Arc::clone(&reply_cache));
         hub.register_compile_cache(Arc::clone(&opts.compile_cache));
+        hub.register_decision_cache(Arc::clone(&opts.decision_cache));
         let mut executor = Executor::with_cache(Arc::clone(&bundle), opts.compile_cache)?;
         executor.set_host_fallback(opts.host_fallback);
         let mut patterns = Vec::new();
@@ -130,6 +142,7 @@ impl Service {
             server_profile: ServerProfile::paper_default(),
             default_weights: TradeoffWeights::paper_default(),
             reply_cache,
+            decision_cache: opts.decision_cache,
         })
     }
 
@@ -222,7 +235,7 @@ impl Service {
                         Some(i) => groups[i].pendings.push(pending),
                         None => groups.push(Group {
                             key,
-                            pattern: decision.pattern,
+                            pattern: decision.pattern.clone(),
                             arch,
                             pendings: vec![pending],
                         }),
@@ -335,10 +348,13 @@ impl Service {
         }
     }
 
-    /// Algorithm 2 under the request's live parameters. On success, the
-    /// decided pattern determines the coalescing key; only the objective
-    /// value remains per-request.
-    fn plan_infer(&self, r: &InferRequest) -> Result<(ModelSpec, Decision), Response> {
+    /// Algorithm 2 under the request's live parameters, memoized in the
+    /// server-wide [`DecisionCache`]: a repeat
+    /// (model, level, profile-bucket) skips planning entirely. On
+    /// success, the decided pattern determines the coalescing key; only
+    /// the objective value remains per-request (and it is part of the
+    /// memoized decision — a pure function of the same key).
+    fn plan_infer(&self, r: &InferRequest) -> Result<(ModelSpec, Arc<Decision>), Response> {
         let arch = match self.arch_for_model(&r.model) {
             Ok(a) => a.clone(),
             Err(e) => return Err(Self::err("unknown_model", e)),
@@ -352,16 +368,34 @@ impl Service {
             cost: self.cost_model_for(r),
             accuracy_budget: r.accuracy_budget,
         };
-        let decision = match serve_request(&arch, set, &params) {
-            Ok(d) => d,
+        // the budget enters Algorithm 2 only through level selection, so
+        // the cache keys on the selected level, not the raw budget (on a
+        // miss serve_request_fast repeats this O(levels) scan — same
+        // single implementation, a handful of float compares)
+        let level_idx = match set.select_level(r.accuracy_budget) {
+            Ok(i) => i,
             Err(e) => return Err(Self::err("infeasible", e)),
         };
+        let key: DecisionKey = (r.model.clone(), level_idx, ProfileBucket::of(&params.cost));
+        if let Some(d) = self.decision_cache.get(&key) {
+            self.metrics.decide_latency.observe_us(t_dec.elapsed().as_micros() as u64);
+            return Ok((arch, d));
+        }
+        let decision = match serve_request_fast(&arch, set, &params) {
+            Ok(d) => Arc::new(d),
+            Err(e) => return Err(Self::err("infeasible", e)),
+        };
+        self.decision_cache.insert(key, Arc::clone(&decision));
         self.metrics.decide_latency.observe_us(t_dec.elapsed().as_micros() as u64);
         Ok((arch, decision))
     }
 
     /// Fetch the encoded reply body for `key`, or quantize + pack +
-    /// serialize it once and publish it to the shared cache.
+    /// serialize it once and publish it to the shared cache. The encode
+    /// goes through the **fused** quantize→pack kernel
+    /// (`Executor::quantize_segment_packed`): each layer's weights stream
+    /// `&[f32]` → packed wire bytes in one pass, with no intermediate
+    /// per-layer code vectors (bit-identical to the composed path).
     fn encoded_for(
         &mut self,
         key: &SegmentKey,
@@ -371,31 +405,23 @@ impl Service {
             return Ok(body);
         }
         let t_q = Instant::now();
-        let seg = match self.executor.quantize_segment(&key.0, pattern) {
+        let seg = match self.executor.quantize_segment_packed(&key.0, pattern) {
             Ok(s) => s,
             Err(e) => return Err(Self::err("internal", e)),
         };
         let mut layers = Vec::with_capacity(seg.layers.len());
-        for ql in &seg.layers {
-            let w_packed = match pack_bits(&ql.weights.codes, ql.weights.params.bits) {
-                Ok(p) => p,
-                Err(e) => return Err(Self::err("internal", e)),
-            };
-            let b_packed = match pack_bits(&ql.bias.codes, ql.bias.params.bits) {
-                Ok(p) => p,
-                Err(e) => return Err(Self::err("internal", e)),
-            };
+        for pl in seg.layers {
             layers.push(LayerBlob {
-                layer: ql.layer,
-                bits: ql.weights.params.bits,
-                w_dims: ql.w_dims.clone(),
-                w_qmin: ql.weights.params.min,
-                w_step: ql.weights.params.step(),
-                w_packed,
-                b_qmin: ql.bias.params.min,
-                b_step: ql.bias.params.step(),
-                b_len: ql.bias.codes.len(),
-                b_packed,
+                layer: pl.layer,
+                bits: pl.weights.params.bits,
+                w_dims: pl.w_dims,
+                w_qmin: pl.weights.params.min,
+                w_step: pl.weights.params.step(),
+                w_packed: pl.weights.packed,
+                b_qmin: pl.bias.params.min,
+                b_step: pl.bias.params.step(),
+                b_len: pl.bias.len,
+                b_packed: pl.bias.packed,
             });
         }
         let pattern_info = PatternInfo {
@@ -472,7 +498,11 @@ impl Service {
 
     /// Execute the server segment for one `(model, partition)` group of
     /// decoded rows, in chunks of up to [`EVAL_BATCH`] rows per
-    /// execution. Returns one response per row, in input order.
+    /// execution. Each chunk runs at the tightest batch-ladder rung the
+    /// runtime can execute (a lone upload runs at batch 1, not padded to
+    /// 32); the rows the rung padded are tracked in
+    /// `phase2_padded_rows_total`. Returns one response per row, in
+    /// input order.
     fn run_phase2(
         &mut self,
         model: &str,
@@ -492,8 +522,12 @@ impl Service {
             Metrics::inc(&self.metrics.phase2_execs_total);
             Metrics::add(&self.metrics.phase2_rows_total, sessions.len() as u64);
             match result {
-                Ok(per_row) => {
-                    for (sid, logits) in sessions.iter().zip(per_row) {
+                Ok(outcome) => {
+                    Metrics::add(
+                        &self.metrics.phase2_padded_rows_total,
+                        outcome.padded_rows as u64,
+                    );
+                    for (sid, logits) in sessions.iter().zip(outcome.logits) {
                         out.push((*sid, Response::Result(result_reply(*sid, &logits, None, us))));
                     }
                 }
@@ -609,7 +643,7 @@ impl Service {
                     cost: CostModel::paper_default(),
                     accuracy_budget: level,
                 };
-                if let Ok(d) = serve_request(&arch, set, &params) {
+                if let Ok(d) = serve_request_fast(&arch, set, &params) {
                     targets.push((model.clone(), d.level_idx, d.pattern));
                 }
             }
@@ -647,7 +681,7 @@ impl Service {
         let cost_model = self.cost_model_for(&s.req);
         let params =
             RequestParams { cost: cost_model, accuracy_budget: s.req.accuracy_budget };
-        let decision = match serve_request(&arch, set, &params) {
+        let decision = match serve_request_fast(&arch, set, &params) {
             Ok(d) => d,
             Err(e) => return Self::err("infeasible", e),
         };

@@ -4,10 +4,13 @@
 //! Covers the phase-2 half of the dataplane end to end: coalesced
 //! same-key activation uploads executing as ⌈N/EVAL_BATCH⌉ batched
 //! server-segment runs (read back through the batch-occupancy metrics),
-//! batched-vs-sequential numerical equivalence, the binary uplink frame
-//! over TCP (negotiated, refused when not negotiated, byte-identical to
-//! the JSON path), the pool-shared compile cache's once-per-key
-//! contract, and `--warm-cache` startup warming.
+//! the eval-batch ladder (chunks pad to the tightest `[1, 8, 32]` rung,
+//! with the padded rows metered), batched-vs-sequential numerical
+//! equivalence at the ladder's boundary row counts, the Algorithm-2
+//! decision cache's identity contract, the binary uplink frame over TCP
+//! (negotiated, refused when not negotiated, byte-identical to the JSON
+//! path), the pool-shared compile cache's once-per-key contract, and
+//! `--warm-cache` startup warming.
 
 use qpart_coordinator::client::paper_request;
 use qpart_coordinator::sched::{EncodedReplyCache, Job, WireReply};
@@ -15,8 +18,11 @@ use qpart_coordinator::testing::{synthetic_bundle, synthetic_upload, tiny_arch, 
 use qpart_coordinator::{
     serve, MetricsHub, ServerConfig, Service, ServiceOptions, SharedSessionTable,
 };
+use qpart_core::channel::Channel;
+use qpart_core::cost::{CostModel, DeviceProfile, ServerProfile, TradeoffWeights};
+use qpart_core::optimizer::{offline_quantize, serve_request, OfflineConfig, RequestParams};
 use qpart_proto::messages::{HelloRequest, InferReply, Request, Response};
-use qpart_runtime::{Bundle, CompileCache, EVAL_BATCH};
+use qpart_runtime::{Bundle, EVAL_BATCH};
 use std::sync::mpsc::sync_channel;
 use std::sync::{Arc, Barrier};
 use std::time::Duration;
@@ -31,7 +37,7 @@ fn host_service(dir: &std::path::Path, hub: &Arc<MetricsHub>) -> Service {
         Arc::clone(hub),
         sessions,
         cache,
-        ServiceOptions { compile_cache: Arc::new(CompileCache::new()), host_fallback: true },
+        ServiceOptions { host_fallback: true, ..ServiceOptions::default() },
     )
     .unwrap()
 }
@@ -91,6 +97,142 @@ fn batched_uploads_execute_in_eval_batch_chunks() {
     let cc = svc.compile_cache();
     assert!(cc.compilations() >= 1, "the phase-2 plan was built");
     assert_eq!(cc.max_compiles_per_key(), 1, "{:?}", cc.compile_counts());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The eval-batch ladder contract at every boundary row count: a chunk
+/// of N rows executes at the tightest `[1, 8, 32]` rung (availability is
+/// moot under host kernels), the padded-rows metric records exactly the
+/// rung's slack — 0 for a single-row upload — and batched results stay
+/// bit-identical to sequential ones.
+#[test]
+fn ladder_pads_to_tightest_rung_at_boundary_counts() {
+    // (rows, expected executions, expected padded rows):
+    // 1→rung 1 (no padding!), 7→rung 8 (+1), 8→rung 8, 9→rung 32 (+23),
+    // 32→rung 32, 33→32+1, 40→32+8 (chunking is per-EVAL_BATCH)
+    let cases: [(usize, u64, u64); 7] =
+        [(1, 1, 0), (7, 1, 1), (8, 1, 0), (9, 1, 23), (32, 1, 0), (33, 2, 0), (40, 2, 0)];
+    for &(n, execs, padded) in &cases {
+        let dir = synthetic_bundle(&format!("ep-ladder-{n}"));
+        let hub_batched = Arc::new(MetricsHub::new());
+        let hub_seq = Arc::new(MetricsHub::new());
+        let mut batched = host_service(&dir, &hub_batched);
+        let mut sequential = host_service(&dir, &hub_seq);
+        let arch = tiny_arch();
+
+        let replies_a: Vec<InferReply> =
+            (0..n).map(|_| open_session(&mut batched, 0.02)).collect();
+        let replies_b: Vec<InferReply> =
+            (0..n).map(|_| open_session(&mut sequential, 0.02)).collect();
+
+        let mut jobs = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for (i, r) in replies_a.iter().enumerate() {
+            let (tx, rx) = sync_channel(1);
+            jobs.push(Job::new(Request::Activation(synthetic_upload(r, &arch, i as u64)), tx));
+            rxs.push(rx);
+        }
+        batched.handle_batch(jobs);
+        let batched_logits: Vec<Vec<f64>> = rxs
+            .into_iter()
+            .map(|rx| match rx.recv().unwrap() {
+                WireReply::Msg(Response::Result(res)) => res.logits,
+                other => panic!("n={n}: unexpected {other:?}"),
+            })
+            .collect();
+
+        // ladder equivalence: same rows, one at a time, same logits
+        for (i, r) in replies_b.iter().enumerate() {
+            match sequential.handle(Request::Activation(synthetic_upload(r, &arch, i as u64))) {
+                Response::Result(res) => assert_eq!(
+                    res.logits, batched_logits[i],
+                    "n={n} row {i}: ladder-batched and sequential phase 2 must agree exactly"
+                ),
+                other => panic!("n={n} row {i}: unexpected {other:?}"),
+            }
+        }
+
+        let snap = hub_batched.snapshot();
+        assert_eq!(snap.phase2_rows_total, n as u64, "n={n}");
+        assert_eq!(snap.phase2_execs_total, execs, "n={n}");
+        assert_eq!(snap.phase2_padded_rows_total, padded, "n={n}");
+        if n == 1 {
+            assert_eq!(snap.phase2_padded_rows_total, 0, "single row runs at rung 1, unpadded");
+        }
+        // sequential rows each run at rung 1: never any padding
+        let seq = hub_seq.snapshot();
+        assert_eq!(seq.phase2_execs_total, n as u64, "n={n}");
+        assert_eq!(seq.phase2_padded_rows_total, 0, "n={n}: batch-1 rows pad nothing");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// The decision cache's identity contract: a repeat profile is a cache
+/// hit, and the memoized decision (pattern AND objective) is exactly
+/// what a fresh Algorithm-2 run over the same inputs produces.
+#[test]
+fn decision_cache_hits_return_identical_decisions() {
+    let dir = synthetic_bundle("ep-decision");
+    let hub = Arc::new(MetricsHub::new());
+    let mut svc = host_service(&dir, &hub);
+
+    let first = open_session(&mut svc, 0.02);
+    let before = hub.snapshot();
+    assert!(before.decision_misses >= 1, "first profile plans");
+    let second = open_session(&mut svc, 0.02);
+    let after = hub.snapshot();
+    assert_eq!(after.decision_hits, before.decision_hits + 1, "repeat profile hits");
+    assert_eq!(second.pattern, first.pattern, "hit serves the same decision");
+
+    // fresh Algorithm 2 over exactly the inputs the service used: the
+    // bundle's calibration through Algorithm 1, the request's device /
+    // channel profile, the server-side paper defaults
+    let bundle = Bundle::load(&dir).unwrap();
+    let arch = bundle.arch("tinymlp").unwrap().clone();
+    let calib = bundle.calibration("tinymlp").unwrap();
+    let set = offline_quantize(&arch, &calib, OfflineConfig::default()).unwrap();
+    let r = paper_request("tinymlp", 0.02);
+    let cost = CostModel {
+        device: DeviceProfile {
+            clock_hz: r.clock_hz,
+            cycles_per_mac: r.cycles_per_mac,
+            kappa: r.kappa,
+            memory_bits: r.memory_bits,
+        },
+        server: ServerProfile::paper_default(),
+        channel: Channel::fixed(r.channel_capacity_bps, r.tx_power_w),
+        weights: TradeoffWeights::paper_default(),
+    };
+    let fresh =
+        serve_request(&arch, &set, &RequestParams { cost, accuracy_budget: 0.02 }).unwrap();
+    assert_eq!(second.pattern.partition, fresh.pattern.partition);
+    assert_eq!(second.pattern.weight_bits, fresh.pattern.weight_bits);
+    assert_eq!(second.pattern.activation_bits, fresh.pattern.activation_bits);
+    assert_eq!(second.pattern.accuracy_level, fresh.pattern.accuracy_level);
+    assert_eq!(
+        second.pattern.objective, fresh.cost.objective,
+        "cached objective is bit-identical to a fresh serve_request"
+    );
+
+    // a different device class is a different bucket → plans again
+    let mut other = paper_request("tinymlp", 0.02);
+    other.channel_capacity_bps *= 4.0;
+    match svc.handle(Request::Infer(other)) {
+        Response::Segment(_) => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    let end = hub.snapshot();
+    assert_eq!(end.decision_misses, after.decision_misses + 1, "new profile misses");
+
+    // the stats document surfaces the decision_cache section
+    match svc.handle(Request::Stats) {
+        Response::Stats(v) => {
+            let dc = v.req("decision_cache").unwrap();
+            assert!(dc.req_f64("hits").unwrap() >= 1.0);
+            assert!(dc.req_f64("entries").unwrap() >= 2.0);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -12,5 +12,5 @@ mod online;
 mod solver;
 
 pub use offline::{offline_quantize, OfflineConfig};
-pub use online::{serve_request, Decision, RequestParams};
+pub use online::{serve_request, serve_request_fast, Decision, RequestParams};
 pub use solver::{solve_bits, solve_pattern, BitBounds, SolveItem, Solution};

@@ -67,10 +67,13 @@ pub fn offline_quantize(
         levels: calib.levels.clone(),
         patterns,
         segment_bits: Vec::new(),
+        payload_bits: Vec::new(),
     };
-    // the memory-feasibility numbers are a pure function of the table —
-    // fill them here so Algorithm 2 never re-sums per request
+    // the memory-feasibility and Eq. 14 payload numbers are pure
+    // functions of the table — fill them here so Algorithm 2 never
+    // re-sums per request
     set.precompute_segment_bits(model);
+    set.precompute_payload_bits(model);
     Ok(set)
 }
 

@@ -31,14 +31,39 @@ pub struct Decision {
     /// Objective breakdown at the chosen partition.
     pub cost: CostBreakdown,
     /// Objective value per candidate partition (diagnostics / Fig. 7).
+    /// Empty when the decision came from [`serve_request_fast`] — the
+    /// serving path never reads it, so it skips the per-request
+    /// allocation.
     pub objective_by_partition: Vec<f64>,
 }
 
-/// Run Algorithm 2 against an offline pattern set.
+/// Run Algorithm 2 against an offline pattern set, keeping the full
+/// per-partition objective vector (diagnostics / the Fig. 7 benches).
 pub fn serve_request(
     model: &ModelSpec,
     patterns: &PatternSet,
     req: &RequestParams,
+) -> Result<Decision> {
+    serve_request_impl(model, patterns, req, true)
+}
+
+/// [`serve_request`] without diagnostics: identical level selection,
+/// memory filtering, and argmin (same pattern, level, and cost breakdown
+/// — property-tested), but `objective_by_partition` stays empty, so the
+/// hot serving path allocates nothing it never reads.
+pub fn serve_request_fast(
+    model: &ModelSpec,
+    patterns: &PatternSet,
+    req: &RequestParams,
+) -> Result<Decision> {
+    serve_request_impl(model, patterns, req, false)
+}
+
+fn serve_request_impl(
+    model: &ModelSpec,
+    patterns: &PatternSet,
+    req: &RequestParams,
+    diagnostics: bool,
 ) -> Result<Decision> {
     if patterns.model != model.name {
         return Err(Error::InvalidArg(format!(
@@ -54,12 +79,20 @@ pub fn serve_request(
     }
 
     // lines 2–5: evaluate the objective at every allowed partition point
-    let mut objective_by_partition = Vec::with_capacity(row.len());
+    let mut objective_by_partition = Vec::with_capacity(if diagnostics { row.len() } else { 0 });
     let mut best: Option<(usize, CostBreakdown)> = None;
     for (idx, pat) in row.iter().enumerate() {
-        let payload = pat.payload_bits(model);
+        // Eq. 14 payload is a pure function of the pattern; the offline
+        // pass precomputed it (like the segment bits below) so the
+        // per-request cost is one table read, not an O(layers) sum. Sets
+        // deserialized without a model fall back to summing.
+        let payload = patterns
+            .payload_bits_at(level_idx, idx)
+            .unwrap_or_else(|| pat.payload_bits(model));
         let breakdown = req.cost.evaluate(model, pat.partition, payload);
-        objective_by_partition.push(breakdown.objective);
+        if diagnostics {
+            objective_by_partition.push(breakdown.objective);
+        }
         // memory constraint: the quantized segment must fit the device.
         // The segment size is a pure function of the pattern, so the
         // offline pass precomputed it; only sets deserialized without a
@@ -181,6 +214,52 @@ mod tests {
             assert_eq!(a.pattern, b.pattern, "budget {budget}");
             assert_eq!(a.level_idx, b.level_idx);
         }
+    }
+
+    #[test]
+    fn precomputed_and_fallback_payload_tables_agree() {
+        // Mirror of the memory-filter agreement test for the Eq. 14
+        // payload table: a deserialized set (empty table) must produce
+        // identical decisions and objective values via the per-pattern
+        // fallback sum.
+        let (m, set) = setup();
+        assert_eq!(set.payload_bits.len(), set.levels.len(), "offline pass fills the table");
+        let mut stripped = set.clone();
+        stripped.payload_bits = Vec::new();
+        for budget in [0.0025, 0.01, 0.05] {
+            let r = req(budget);
+            let a = serve_request(&m, &set, &r).unwrap();
+            let b = serve_request(&m, &stripped, &r).unwrap();
+            assert_eq!(a.pattern, b.pattern, "budget {budget}");
+            assert_eq!(a.level_idx, b.level_idx);
+            assert_eq!(a.cost.objective, b.cost.objective, "budget {budget}");
+            assert_eq!(a.objective_by_partition, b.objective_by_partition);
+        }
+    }
+
+    #[test]
+    fn fast_path_matches_full_decision() {
+        // serve_request_fast must make the same decision as serve_request
+        // in every respect except the diagnostics vector.
+        let (m, set) = setup();
+        for budget in [0.0025, 0.005, 0.01, 0.02, 0.05] {
+            for memory_bits in [u64::MAX, 2_000_000, 1] {
+                let mut r = req(budget);
+                r.cost.device.memory_bits = memory_bits;
+                let full = serve_request(&m, &set, &r).unwrap();
+                let fast = serve_request_fast(&m, &set, &r).unwrap();
+                assert_eq!(fast.pattern, full.pattern, "budget {budget}");
+                assert_eq!(fast.level_idx, full.level_idx);
+                assert_eq!(fast.cost.objective, full.cost.objective);
+                assert!(
+                    fast.objective_by_partition.is_empty(),
+                    "fast path skips diagnostics"
+                );
+                assert_eq!(full.objective_by_partition.len(), set.patterns[full.level_idx].len());
+            }
+        }
+        // infeasible requests fail identically
+        assert!(serve_request_fast(&m, &set, &req(0.0001)).is_err());
     }
 
     #[test]

@@ -2,11 +2,21 @@
 //! arbitrary-bit-width bit-packing for the simulated wire (the payload the
 //! channel model charges for, Eq. 14), and quantization patterns `(b, p)`
 //! (the unit Algorithm 1 produces and Algorithm 2 selects).
+//!
+//! Hot-path entry points: the word-wise [`pack_bits`] / [`unpack_bits`]
+//! and the fused [`quantize_packed`] (no intermediate code vector). The
+//! byte-at-a-time `*_scalar` variants are the property-test oracles and
+//! the `perf_quant` baselines.
 
 mod bitpack;
 mod pattern;
 mod quantizer;
 
-pub use bitpack::{pack_bits, unpack_bits, packed_len_bytes};
+pub use bitpack::{
+    pack_bits, pack_bits_scalar, packed_len_bytes, unpack_bits, unpack_bits_scalar,
+};
 pub use pattern::{PatternKey, PatternSet, QuantPattern};
-pub use quantizer::{QuantParams, Quantized, dequantize, quantize, quantize_with};
+pub use quantizer::{
+    dequantize, quantize, quantize_packed, quantize_packed_with, quantize_with, PackedQuantized,
+    QuantParams, Quantized,
+};

@@ -137,6 +137,14 @@ pub struct PatternSet {
     /// Empty for sets deserialized without a model in hand — Algorithm 2
     /// falls back to computing per pattern then.
     pub segment_bits: Vec<Vec<u64>>,
+    /// Precomputed [`QuantPattern::payload_bits`] (Eq. 14) parallel to
+    /// `patterns`, filled by `offline_quantize` (or
+    /// [`PatternSet::precompute_payload_bits`]). Like `segment_bits`, a
+    /// pure function of the table — precomputing it offline stops
+    /// Algorithm 2 from re-summing O(layers) payload terms per partition
+    /// on every request. Empty for sets deserialized without a model;
+    /// Algorithm 2 falls back to computing per pattern then.
+    pub payload_bits: Vec<Vec<u64>>,
 }
 
 impl PatternSet {
@@ -150,10 +158,28 @@ impl PatternSet {
             .collect();
     }
 
+    /// Fill the `payload_bits` table from `model` (idempotent; Algorithm 1
+    /// calls this once at offline time).
+    pub fn precompute_payload_bits(&mut self, model: &ModelSpec) {
+        self.payload_bits = self
+            .patterns
+            .iter()
+            .map(|row| row.iter().map(|p| p.payload_bits(model)).collect())
+            .collect();
+    }
+
     /// Precomputed segment bits for `patterns[level_idx][pattern_idx]`,
     /// if the offline table was filled.
     pub fn segment_bits_at(&self, level_idx: usize, pattern_idx: usize) -> Option<u64> {
         self.segment_bits.get(level_idx)?.get(pattern_idx).copied()
+    }
+
+    /// Precomputed Eq. 14 payload bits for
+    /// `patterns[level_idx][pattern_idx]`, if the offline table was
+    /// filled (deserialized sets recompute per pattern, like
+    /// [`PatternSet::segment_bits_at`]).
+    pub fn payload_bits_at(&self, level_idx: usize, pattern_idx: usize) -> Option<u64> {
+        self.payload_bits.get(level_idx)?.get(pattern_idx).copied()
     }
     /// All partition points available (0..=L).
     pub fn num_partitions(&self) -> usize {
@@ -215,9 +241,15 @@ impl PatternSet {
         if patterns.len() != levels.len() {
             return Err(Error::schema("patterns", "row count != level count"));
         }
-        // segment_bits needs the ModelSpec; deserialized sets recompute on
-        // demand (or via precompute_segment_bits once a model is in hand)
-        Ok(PatternSet { model, levels, patterns, segment_bits: Vec::new() })
+        // the segment/payload tables need the ModelSpec; deserialized sets
+        // recompute on demand (or via precompute_* once a model is in hand)
+        Ok(PatternSet {
+            model,
+            levels,
+            patterns,
+            segment_bits: Vec::new(),
+            payload_bits: Vec::new(),
+        })
     }
 }
 
@@ -264,6 +296,7 @@ mod tests {
             levels: vec![0.0025, 0.005, 0.01, 0.02, 0.05],
             patterns: vec![vec![]; 5],
             segment_bits: Vec::new(),
+            payload_bits: Vec::new(),
         };
         assert_eq!(set.select_level(0.01).unwrap(), 2);
         assert_eq!(set.select_level(0.012).unwrap(), 2);
@@ -285,19 +318,24 @@ mod tests {
             levels: vec![0.01, 0.05],
             patterns: vec![vec![pat(0, 8), pat(1, 8)], vec![pat(0, 4), pat(1, 4)]],
             segment_bits: Vec::new(),
+            payload_bits: Vec::new(),
         };
         set.precompute_segment_bits(&mlp6());
+        set.precompute_payload_bits(&mlp6());
         let v = set.to_json();
         let back = PatternSet::from_json(&v).unwrap();
         assert_eq!(back.model, set.model);
         assert_eq!(back.levels, set.levels);
         assert_eq!(back.patterns, set.patterns);
-        // deserialized sets carry no precomputed table until a model is
+        // deserialized sets carry no precomputed tables until a model is
         // supplied; precomputing reproduces the original values
         assert!(back.segment_bits.is_empty());
+        assert!(back.payload_bits.is_empty());
         let mut back = back;
         back.precompute_segment_bits(&mlp6());
+        back.precompute_payload_bits(&mlp6());
         assert_eq!(back.segment_bits, set.segment_bits);
+        assert_eq!(back.payload_bits, set.payload_bits);
     }
 
     #[test]
@@ -308,6 +346,7 @@ mod tests {
             levels: vec![0.01],
             patterns: vec![vec![pat(0, 8), pat(2, 4), pat(3, 6)]],
             segment_bits: Vec::new(),
+            payload_bits: Vec::new(),
         };
         set.precompute_segment_bits(&m);
         assert_eq!(set.segment_bits.len(), 1);
@@ -320,5 +359,28 @@ mod tests {
         // out-of-range lookups are None, not a panic
         assert_eq!(set.segment_bits_at(0, 99), None);
         assert_eq!(set.segment_bits_at(9, 0), None);
+    }
+
+    #[test]
+    fn precomputed_payload_bits_match_per_pattern_compute() {
+        let m = mlp6();
+        let mut set = PatternSet {
+            model: "mlp6".into(),
+            levels: vec![0.01],
+            patterns: vec![vec![pat(0, 8), pat(2, 4), pat(3, 6)]],
+            segment_bits: Vec::new(),
+            payload_bits: Vec::new(),
+        };
+        assert_eq!(set.payload_bits_at(0, 0), None, "empty before precompute");
+        set.precompute_payload_bits(&m);
+        assert_eq!(set.payload_bits.len(), 1);
+        for (i, p) in set.patterns[0].iter().enumerate() {
+            assert_eq!(set.payload_bits_at(0, i), Some(p.payload_bits(&m)), "pattern {i}");
+        }
+        // p=0 still ships the (quantized) input activation — nonzero
+        assert!(set.payload_bits_at(0, 0).unwrap() > 0);
+        // out-of-range lookups are None, not a panic
+        assert_eq!(set.payload_bits_at(0, 99), None);
+        assert_eq!(set.payload_bits_at(9, 0), None);
     }
 }

@@ -5,8 +5,14 @@
 //! nearest grid point (Eq. 10). We store grid *indices* (codes); the wire
 //! carries codes bit-packed at `b` bits each plus the `(μ, φ, b)` header,
 //! and the device reconstructs `ĉ = μ + code·Δ` with `Δ = (φ−μ)/(2^b−1)`.
+//!
+//! The serving hot path never needs the intermediate code vector — it
+//! quantizes a layer only to bit-pack it for the wire — so
+//! [`quantize_packed`] fuses Eq. 10 with the packer: `&[f32]` → packed
+//! bytes in one pass, bit-identical to `quantize_with` ∘ `pack_bits`.
 
 use crate::error::{Error, Result};
+use crate::quant::bitpack::{packed_len_bytes, WordPacker};
 
 /// Quantizer parameters: bit-width and range.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -69,12 +75,11 @@ impl Quantized {
     }
 }
 
-/// Quantize `data` at `bits`, deriving the range from the data (the paper's
-/// post-training setting: μ/φ are the observed min/max of the layer).
-pub fn quantize(data: &[f32], bits: u8) -> Result<Quantized> {
-    // Branch-free range scan (the per-element `is_finite` check halved
-    // throughput; see perf_quant). ±inf surfaces in mn/mx; NaN — which
-    // IEEE min/max would silently skip — is caught by the checksum.
+/// Branch-free range scan shared by [`quantize`] and [`quantize_packed`]
+/// (the per-element `is_finite` check halved throughput; see perf_quant).
+/// ±inf surfaces in mn/mx; NaN — which IEEE min/max would silently skip
+/// — is caught by the checksum. Empty input scans to `(0, 0)`.
+fn scan_range(data: &[f32]) -> Result<(f32, f32)> {
     let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
     let mut checksum = 0.0f32;
     for &x in data {
@@ -86,9 +91,15 @@ pub fn quantize(data: &[f32], bits: u8) -> Result<Quantized> {
         return Err(Error::InvalidArg("non-finite value in quantize input".into()));
     }
     if data.is_empty() {
-        mn = 0.0;
-        mx = 0.0;
+        return Ok((0.0, 0.0));
     }
+    Ok((mn, mx))
+}
+
+/// Quantize `data` at `bits`, deriving the range from the data (the paper's
+/// post-training setting: μ/φ are the observed min/max of the layer).
+pub fn quantize(data: &[f32], bits: u8) -> Result<Quantized> {
+    let (mn, mx) = scan_range(data)?;
     let params = QuantParams::from_range(bits, mn, mx)?;
     Ok(quantize_with(data, params))
 }
@@ -119,6 +130,64 @@ pub fn quantize_with(data: &[f32], params: QuantParams) -> Quantized {
 pub fn dequantize(codes: &[u32], params: QuantParams) -> Vec<f32> {
     let step = params.step();
     codes.iter().map(|&c| params.min + c as f32 * step).collect()
+}
+
+/// A quantized buffer already bit-packed for the wire: what the fused
+/// [`quantize_packed`] kernel produces. Carries everything a reply header
+/// needs (`(μ, Δ, b)` + code count) without ever materializing the code
+/// vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedQuantized {
+    pub params: QuantParams,
+    /// Number of packed codes (needed to unpack: the byte length alone is
+    /// ambiguous for sub-byte widths).
+    pub len: usize,
+    /// LSB-first bit-packed codes, `packed_len_bytes(len, bits)` bytes.
+    pub packed: Vec<u8>,
+}
+
+impl PackedQuantized {
+    /// Payload size in bits when on the wire (codes only, as in
+    /// [`Quantized::payload_bits`]).
+    pub fn payload_bits(&self) -> u64 {
+        self.len as u64 * self.params.bits as u64
+    }
+}
+
+/// Fused quantize→pack with data-derived range (the fused analogue of
+/// [`quantize`]): one pass over `data` computes each Eq. 10 code and
+/// streams it straight into the bit-packer's word accumulator. No
+/// intermediate `Vec<u32>` — the allocation and the second sweep the
+/// compose-then-pack path pays per layer.
+///
+/// Bit-identical to `pack_bits(&quantize(data, bits)?.codes, bits)?`
+/// (property-tested); `bits` is capped at 24 by the packer.
+pub fn quantize_packed(data: &[f32], bits: u8) -> Result<PackedQuantized> {
+    let (mn, mx) = scan_range(data)?;
+    let params = QuantParams::from_range(bits, mn, mx)?;
+    Ok(quantize_packed_with(data, params))
+}
+
+/// Fused quantize→pack with explicit parameters (the fused analogue of
+/// [`quantize_with`] ∘ [`crate::quant::pack_bits`]). Codes fit `bits` by
+/// construction (the Eq. 10 clamp), so no validation scan is needed; the
+/// emit loop is the same `WordPacker` accumulator `pack_bits` uses, fed
+/// by the quantizer instead of a code slice.
+pub fn quantize_packed_with(data: &[f32], params: QuantParams) -> PackedQuantized {
+    let step = params.step();
+    let inv = 1.0 / step;
+    let min = params.min;
+    let max_code = params.levels() - 1;
+    let bits = params.bits as u32;
+    let mut packed = vec![0u8; packed_len_bytes(data.len(), params.bits)];
+    let mut packer = WordPacker::new(&mut packed);
+    for &x in data {
+        // Eq. 10 via saturating cast: NaN→0, negative→0, huge→u32::MAX
+        let q = (((x - min) * inv + 0.5) as u32).min(max_code);
+        packer.push(q, bits);
+    }
+    packer.finish();
+    PackedQuantized { params, len: data.len(), packed }
 }
 
 #[cfg(test)]
@@ -215,6 +284,51 @@ mod tests {
                 assert!((a - b).abs() <= half, "a={a} b={b} half={half}");
             }
         });
+    }
+
+    #[test]
+    fn prop_fused_quantize_packed_matches_compose() {
+        use crate::quant::pack_bits;
+        // the fused kernel must be a drop-in for quantize(_with) ∘ pack_bits:
+        // same params, same byte stream, for every width 1..=24
+        check("quantize_packed ≡ quantize∘pack", 80, |rng| {
+            let len = rng.range_usize(0, 400);
+            let lo = rng.range_f64(-50.0, 0.0) as f32;
+            let hi = lo + rng.range_f64(0.001, 100.0) as f32;
+            let data = vec_f32(rng, len, lo, hi);
+            let bits = rng.range_usize(1, 25) as u8;
+            let q = quantize(&data, bits).unwrap();
+            let composed = pack_bits(&q.codes, bits).unwrap();
+            let fused = quantize_packed(&data, bits).unwrap();
+            assert_eq!(fused.params, q.params, "bits={bits} len={len}");
+            assert_eq!(fused.len, q.codes.len());
+            assert_eq!(fused.packed, composed, "bits={bits} len={len}");
+            assert_eq!(fused.payload_bits(), q.payload_bits());
+            // and explicit-params fusion agrees too
+            let fused_with = quantize_packed_with(&data, q.params);
+            assert_eq!(fused_with.packed, composed);
+        });
+    }
+
+    #[test]
+    fn fused_all_widths_dense() {
+        use crate::quant::pack_bits;
+        let data: Vec<f32> = (0..321).map(|i| ((i as f32) * 0.7133).sin() * 2.5).collect();
+        for bits in 1u8..=24 {
+            let q = quantize(&data, bits).unwrap();
+            let fused = quantize_packed(&data, bits).unwrap();
+            assert_eq!(fused.packed, pack_bits(&q.codes, bits).unwrap(), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn fused_rejects_bad_inputs_like_quantize() {
+        assert!(quantize_packed(&[f32::NAN], 8).is_err());
+        assert!(quantize_packed(&[1.0], 0).is_err());
+        assert!(quantize_packed(&[1.0], 25).is_err());
+        let empty = quantize_packed(&[], 8).unwrap();
+        assert!(empty.packed.is_empty());
+        assert_eq!(empty.payload_bits(), 0);
     }
 
     #[test]

@@ -74,6 +74,11 @@ pub struct ServerSegmentPlan {
     pub weights: Arc<ModelWeights>,
     /// Pre-built f32 literals (PJRT path; `None` under host fallback).
     pub literals: Option<Arc<WeightLiterals>>,
+    /// Batch-ladder rungs this plan can execute, ascending: every rung
+    /// under host fallback, only the rungs whose `f32layer` executables
+    /// the bundle lowered on the PJRT path. Computed once at plan build,
+    /// so the per-execution rung pick is a table read, not a bundle scan.
+    pub rungs: Vec<usize>,
 }
 
 /// The pool-wide compile cache. One per server, shared via `Arc` by every
@@ -296,6 +301,7 @@ mod tests {
                 start: 2,
                 weights: Arc::new(empty_weights()),
                 literals: None,
+                rungs: crate::executor::BATCH_LADDER.to_vec(),
             })
         };
         let a = cache.plan(&key, build).unwrap();
@@ -309,6 +315,7 @@ mod tests {
                     start: 3,
                     weights: Arc::new(empty_weights()),
                     literals: None,
+                    rungs: crate::executor::BATCH_LADDER.to_vec(),
                 })
             })
             .unwrap();

@@ -26,12 +26,32 @@ use crate::engine::{Engine, Exec, HostTensor};
 use crate::error::{Error, Result};
 use crate::host;
 use qpart_core::model::ModelSpec;
-use qpart_core::quant::{quantize, QuantPattern, Quantized};
+use qpart_core::quant::{quantize, quantize_packed, PackedQuantized, QuantPattern, Quantized};
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// Eval-batch size (matches the `_b32` executables in the bundle).
+/// Eval-batch size (matches the `_b32` executables in the bundle; the top
+/// rung of [`BATCH_LADDER`]). Accuracy evaluation and phase-2 chunking
+/// work in units of this.
 pub const EVAL_BATCH: usize = 32;
+
+/// The eval-batch shape ladder, ascending. Phase-2 execution pads a chunk
+/// of N rows up to the **tightest rung ≥ N** instead of always padding to
+/// [`EVAL_BATCH`] — a 1-row upload runs a `_b1` executable instead of
+/// carrying 31 zero rows. The last rung equals `EVAL_BATCH`, so any chunk
+/// the service produces (≤ `EVAL_BATCH` rows) fits some rung.
+pub const BATCH_LADDER: [usize; 3] = [1, 8, 32];
+
+/// Tightest [`BATCH_LADDER`] rung that holds `n` rows (callers keep
+/// `n <= EVAL_BATCH`; larger `n` returns the top rung).
+pub fn ladder_fit(n: usize) -> usize {
+    for &b in &BATCH_LADDER {
+        if b >= n {
+            return b;
+        }
+    }
+    EVAL_BATCH
+}
 
 /// One quantized layer ready for the wire / the q-kernel.
 #[derive(Debug, Clone)]
@@ -63,6 +83,56 @@ impl QuantizedSegment {
             .map(|l| l.weights.payload_bits() + l.bias.payload_bits())
             .sum()
     }
+}
+
+/// One quantized layer already **bit-packed** for the wire — what the
+/// fused downlink path produces ([`Executor::quantize_segment_packed`]).
+/// Unlike [`QuantizedLayer`] there is no intermediate code vector: the
+/// fused `quantize_packed` kernel streams Eq. 10 codes straight into the
+/// packed bytes.
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    /// 1-based layer index.
+    pub layer: usize,
+    /// Packed flat weights (params + packed bytes).
+    pub weights: PackedQuantized,
+    /// Packed bias (own grid, same bit-width).
+    pub bias: PackedQuantized,
+    /// Flat weight dims (`[D, G]` / `[C_in·k·k, C_out]`).
+    pub w_dims: Vec<usize>,
+}
+
+/// A fully quantized-and-packed device segment: the bytes the downlink
+/// ships, produced in one pass per layer (no `Vec<u32>` of codes).
+#[derive(Debug, Clone)]
+pub struct PackedSegment {
+    pub model: String,
+    pub pattern: QuantPattern,
+    pub layers: Vec<PackedLayer>,
+}
+
+impl PackedSegment {
+    /// Exact wire payload in bits (mirror of
+    /// [`QuantizedSegment::weight_payload_bits`]).
+    pub fn weight_payload_bits(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.weights.payload_bits() + l.bias.payload_bits())
+            .sum()
+    }
+}
+
+/// Result of one batched phase-2 execution over coalesced rows
+/// ([`Executor::run_server_segment_rows`]): the per-row logits plus how
+/// the batch ladder shaped the run (occupancy metrics read these).
+#[derive(Debug, Clone)]
+pub struct RowBatchOutcome {
+    /// One logits tensor per input row, in input order.
+    pub logits: Vec<HostTensor>,
+    /// The [`BATCH_LADDER`] rung the chunk executed at.
+    pub run_batch: usize,
+    /// Zero rows padded onto the stack to reach `run_batch`.
+    pub padded_rows: usize,
 }
 
 /// Result of one split inference.
@@ -270,6 +340,35 @@ impl Executor {
         Ok(QuantizedSegment { model: model.to_string(), pattern: pattern.clone(), layers })
     }
 
+    /// Fused quantize→pack of the device segment: each layer's weights
+    /// and bias go `&[f32]` → packed wire bytes in a single pass
+    /// (`qpart_core::quant::quantize_packed`), skipping the per-layer
+    /// `Vec<u32>` code allocations [`Executor::quantize_segment`] pays.
+    /// The serving encode path (`Service::encoded_for`) uses this; the
+    /// output bytes are bit-identical to packing `quantize_segment`'s
+    /// codes (the fused kernel is property-tested against the composition).
+    pub fn quantize_segment_packed(
+        &mut self,
+        model: &str,
+        pattern: &QuantPattern,
+    ) -> Result<PackedSegment> {
+        let weights = self.weights(model)?;
+        let mut layers = Vec::with_capacity(pattern.partition);
+        for l in 1..=pattern.partition {
+            let bits = pattern.weight_bits[l - 1];
+            let flat = weights.flat_w(l)?;
+            let wq = quantize_packed(flat.data(), bits).map_err(Error::Core)?;
+            let bq = quantize_packed(weights.bias(l).data(), bits).map_err(Error::Core)?;
+            layers.push(PackedLayer {
+                layer: l,
+                weights: wq,
+                bias: bq,
+                w_dims: flat.dims().to_vec(),
+            });
+        }
+        Ok(PackedSegment { model: model.to_string(), pattern: pattern.clone(), layers })
+    }
+
     // ------------------------------------------------------------------
     // segment execution
     // ------------------------------------------------------------------
@@ -415,18 +514,39 @@ impl Executor {
             let weights = self.weights(model)?;
             let literals =
                 if host_fallback { None } else { Some(self.host_weights(model)?) };
-            Ok(ServerSegmentPlan { arch, start, weights, literals })
+            // rung availability is a pure function of the bundle, so the
+            // per-execution ladder pick reads this instead of re-scanning
+            // the executable manifest on every phase-2 chunk
+            let rungs = if literals.is_none() {
+                BATCH_LADDER.to_vec()
+            } else {
+                BATCH_LADDER
+                    .iter()
+                    .copied()
+                    .filter(|&b| {
+                        ((start + 1)..=arch.num_layers()).all(|l| {
+                            self.bundle.find_exec(&arch.name, "f32layer", Some(l), b).is_ok()
+                        })
+                    })
+                    .collect()
+            };
+            Ok(ServerSegmentPlan { arch, start, weights, literals, rungs })
         })
     }
 
     /// Pre-build the phase-2 plan for `(model, partition)` and, on the
-    /// PJRT path, pre-compile its layer executables at batch 1 and
-    /// [`EVAL_BATCH`] (the `--warm-cache` startup hook).
+    /// PJRT path, pre-compile its layer executables at every
+    /// [`BATCH_LADDER`] rung the bundle lowered (the `--warm-cache`
+    /// startup hook). Rungs absent from the bundle (e.g. no `_b8`
+    /// artifacts) are skipped, not errors — execution falls back up the
+    /// ladder the same way.
     pub fn warm_server_segment(&mut self, model: &str, partition: usize) -> Result<()> {
         let plan = self.server_plan(model, partition)?;
         if plan.literals.is_some() {
             for l in (partition + 1)..=plan.arch.num_layers() {
-                for batch in [1, EVAL_BATCH] {
+                // the plan's rung list already reflects what the bundle
+                // lowered, so every lookup here resolves
+                for &batch in &plan.rungs {
                     let entry =
                         self.bundle.find_exec(&plan.arch.name, "f32layer", Some(l), batch)?;
                     self.load_exec(entry)?;
@@ -434,6 +554,15 @@ impl Executor {
             }
         }
         Ok(())
+    }
+
+    /// Tightest rung of the plan's precomputed ladder that holds `n`
+    /// rows, falling back to [`EVAL_BATCH`] (the shape every bundle
+    /// lowers) when no listed rung fits. Host-fallback plans list every
+    /// rung, so the fit is always exact there.
+    fn ladder_batch(plan: &ServerSegmentPlan, n: usize) -> usize {
+        let fit = ladder_fit(n);
+        plan.rungs.iter().copied().find(|&b| b >= fit).unwrap_or(EVAL_BATCH)
     }
 
     /// Execute a phase-2 plan on one activation tensor (any batch the
@@ -486,18 +615,21 @@ impl Executor {
 
     /// **One** batched server-segment execution over up to [`EVAL_BATCH`]
     /// boundary rows of the same `(model, partition)` — the phase-2 half
-    /// of the coalescing dataplane. Rows (each batch-1) are stacked, a
-    /// multi-row stack is zero-padded to [`EVAL_BATCH`] for the `_b32`
-    /// executables, and the logits are split back per row. Callers chunk
-    /// larger groups into `⌈N / EVAL_BATCH⌉` calls.
+    /// of the coalescing dataplane. Rows (each batch-1) are stacked,
+    /// zero-padded up to the **tightest [`BATCH_LADDER`] rung** the plan
+    /// can execute (a 1-row chunk runs a `_b1` executable; 2–8 rows a
+    /// `_b8` when the bundle lowered one), and the logits are split back
+    /// per row. Callers chunk larger groups into `⌈N / EVAL_BATCH⌉`
+    /// calls; the outcome reports the rung used and the rows padded so
+    /// occupancy metrics can account for the waste.
     pub fn run_server_segment_rows(
         &mut self,
         model: &str,
         rows: &[HostTensor],
         start: usize,
-    ) -> Result<Vec<HostTensor>> {
+    ) -> Result<RowBatchOutcome> {
         if rows.is_empty() {
-            return Ok(Vec::new());
+            return Ok(RowBatchOutcome { logits: Vec::new(), run_batch: 0, padded_rows: 0 });
         }
         if rows.len() > EVAL_BATCH {
             return Err(Error::Shape(format!(
@@ -513,10 +645,10 @@ impl Executor {
         }
         let n = rows.len();
         let stacked = HostTensor::stack(rows)?;
-        let run_batch = if n == 1 { 1 } else { EVAL_BATCH };
+        let plan = self.server_plan(model, start)?;
+        let run_batch = Self::ladder_batch(&plan, n);
         let padded =
             if n == run_batch { stacked } else { stacked.slice_rows_padded(0, n, run_batch) };
-        let plan = self.server_plan(model, start)?;
         let logits = self.run_plan(&plan, padded)?;
         if logits.batch() < n {
             return Err(Error::Shape(format!(
@@ -524,7 +656,11 @@ impl Executor {
                 logits.batch()
             )));
         }
-        Ok((0..n).map(|i| logits.slice_rows(i, i + 1)).collect())
+        Ok(RowBatchOutcome {
+            logits: (0..n).map(|i| logits.slice_rows(i, i + 1)).collect(),
+            run_batch,
+            padded_rows: run_batch - n,
+        })
     }
 
     /// The full QPART split-inference path (prepared-segment cached).
@@ -866,6 +1002,22 @@ mod tests {
         let arch = mlp6();
         assert_eq!(activation_shape(&arch, 0, 4), vec![4, 784]);
         assert_eq!(activation_shape(&arch, 3, 2), vec![2, 128]);
+    }
+
+    #[test]
+    fn ladder_fit_picks_tightest_rung() {
+        assert_eq!(ladder_fit(1), 1);
+        assert_eq!(ladder_fit(2), 8);
+        assert_eq!(ladder_fit(7), 8);
+        assert_eq!(ladder_fit(8), 8);
+        assert_eq!(ladder_fit(9), 32);
+        assert_eq!(ladder_fit(32), 32);
+        // over-the-top requests clamp to the EVAL_BATCH rung (callers
+        // chunk to ≤ EVAL_BATCH before execution)
+        assert_eq!(ladder_fit(40), EVAL_BATCH);
+        // structural invariants the service relies on
+        assert_eq!(*BATCH_LADDER.last().unwrap(), EVAL_BATCH);
+        assert!(BATCH_LADDER.windows(2).all(|w| w[0] < w[1]), "ascending");
     }
 
     // PJRT-backed executor tests live in rust/qpart/tests/ (need artifacts).

@@ -12,8 +12,9 @@
 //!   segment through the Pallas-kernel executables, quantize the boundary
 //!   activation (the simulated uplink), finish on the server segment
 //!   (single-row or batched over up to [`executor::EVAL_BATCH`] coalesced
-//!   rows); plus full-precision, autoencoder-baseline, and
-//!   pruning-baseline paths and batched accuracy evaluation.
+//!   rows, padded to the tightest [`executor::BATCH_LADDER`] rung); plus
+//!   full-precision, autoencoder-baseline, and pruning-baseline paths
+//!   and batched accuracy evaluation.
 //! * [`compile_cache`] — the pool-wide compile cache: compiled
 //!   executables, prepared device segments, weight literals, and phase-2
 //!   server plans keyed by `(model, partition, fingerprint)`, built once
@@ -40,4 +41,7 @@ pub use bundle::{Bundle, DatasetEntry, ExecEntry, ModelEntry, ModelWeights};
 pub use compile_cache::{CompileCache, CompileKey, ServerSegmentPlan, WeightLiterals};
 pub use engine::{Engine, Exec, HostTensor};
 pub use error::{Error, Result};
-pub use executor::{Executor, PreparedSegment, SplitOutcome, EVAL_BATCH};
+pub use executor::{
+    ladder_fit, Executor, PackedLayer, PackedSegment, PreparedSegment, RowBatchOutcome,
+    SplitOutcome, BATCH_LADDER, EVAL_BATCH,
+};

@@ -28,6 +28,36 @@ fn main() {
         format!("{:.0}", s.per_second(1.0)),
     ]);
 
+    // the serving path's variant: no per-request diagnostics vector
+    let s = quick(|| {
+        black_box(serve_request_fast(arch, &setup.patterns, &req).unwrap());
+    });
+    table.row(vec![
+        "Algorithm 2 decision (fast)".into(),
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p99_ns),
+        format!("{:.0}", s.per_second(1.0)),
+    ]);
+
+    // a decision-cache hit: what repeat profiles pay instead of planning
+    {
+        use qpart::coordinator::{DecisionCache, ProfileBucket};
+        use std::sync::Arc;
+        let cache = DecisionCache::new();
+        let d = Arc::new(serve_request_fast(arch, &setup.patterns, &req).unwrap());
+        let key = ("mlp6".to_string(), d.level_idx, ProfileBucket::of(&req.cost));
+        cache.insert(key.clone(), d);
+        let s = quick(|| {
+            black_box(cache.get(black_box(&key)).unwrap());
+        });
+        table.row(vec![
+            "decision cache hit".into(),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p99_ns),
+            format!("{:.0}", s.per_second(1.0)),
+        ]);
+    }
+
     let s = quick(|| {
         black_box(offline_quantize(arch, &setup.calib, OfflineConfig::default()).unwrap());
     });

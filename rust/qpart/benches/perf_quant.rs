@@ -3,11 +3,20 @@
 //! This is the per-request O(params) work on the serving path: quantizing
 //! the device segment's weights to the pattern's bit-widths and packing
 //! the codes for the wire. Target (DESIGN.md §8): ≥200 MB/s/core.
+//!
+//! Since the hot-path overhaul, pack/unpack run word-wise (u64 chunks)
+//! and the encode path uses the fused quantize→pack kernel; this bench
+//! reports each against the retained byte-at-a-time scalar reference
+//! (`pack_bits_scalar` / `unpack_bits_scalar`) so the speedup is measured
+//! on the same machine, same buffers. Acceptance: word-wise pack/unpack
+//! ≥2× the scalar baseline.
 
 mod common;
 
 use common::*;
-use qpart::core::quant::{pack_bits, quantize, unpack_bits};
+use qpart::core::quant::{
+    pack_bits, pack_bits_scalar, quantize, quantize_packed, unpack_bits, unpack_bits_scalar,
+};
 use qpart_bench::{black_box, fmt_ns, quick, Table};
 
 fn main() {
@@ -20,42 +29,83 @@ fn main() {
 
     let mut table = Table::new(
         "hot-loop throughput (784×512 f32 weights)",
-        &["op", "bits", "mean", "p99", "MB/s (f32 in)"],
+        &["op", "bits", "mean", "p99", "MB/s (f32 in)", "× scalar"],
     );
+    let no_ratio = || "-".to_string();
     for bits in [4u8, 8, 12] {
         let s = quick(|| {
             black_box(quantize(black_box(&data), bits).unwrap());
         });
+        let quantize_mean = s.mean_ns;
         table.row(vec![
             "quantize".into(),
             bits.to_string(),
             fmt_ns(s.mean_ns),
             fmt_ns(s.p99_ns),
             format!("{:.0}", s.per_second(mbytes)),
+            no_ratio(),
         ]);
 
         let q = quantize(&data, bits).unwrap();
+        let scalar_pack = quick(|| {
+            black_box(pack_bits_scalar(black_box(&q.codes), bits).unwrap());
+        });
+        table.row(vec![
+            "pack (scalar ref)".into(),
+            bits.to_string(),
+            fmt_ns(scalar_pack.mean_ns),
+            fmt_ns(scalar_pack.p99_ns),
+            format!("{:.0}", scalar_pack.per_second(mbytes)),
+            "1.0".into(),
+        ]);
         let s = quick(|| {
             black_box(pack_bits(black_box(&q.codes), bits).unwrap());
         });
         table.row(vec![
-            "pack".into(),
+            "pack (word-wise)".into(),
             bits.to_string(),
             fmt_ns(s.mean_ns),
             fmt_ns(s.p99_ns),
             format!("{:.0}", s.per_second(mbytes)),
+            format!("{:.2}", scalar_pack.mean_ns / s.mean_ns),
         ]);
 
         let packed = pack_bits(&q.codes, bits).unwrap();
+        let scalar_unpack = quick(|| {
+            black_box(unpack_bits_scalar(black_box(&packed), n, bits).unwrap());
+        });
+        table.row(vec![
+            "unpack (scalar ref)".into(),
+            bits.to_string(),
+            fmt_ns(scalar_unpack.mean_ns),
+            fmt_ns(scalar_unpack.p99_ns),
+            format!("{:.0}", scalar_unpack.per_second(mbytes)),
+            "1.0".into(),
+        ]);
         let s = quick(|| {
             black_box(unpack_bits(black_box(&packed), n, bits).unwrap());
         });
         table.row(vec![
-            "unpack".into(),
+            "unpack (word-wise)".into(),
             bits.to_string(),
             fmt_ns(s.mean_ns),
             fmt_ns(s.p99_ns),
             format!("{:.0}", s.per_second(mbytes)),
+            format!("{:.2}", scalar_unpack.mean_ns / s.mean_ns),
+        ]);
+
+        // fused quantize→pack vs quantize-then-pack (the encode path);
+        // the "× scalar" column compares against quantize + scalar pack
+        let s = quick(|| {
+            black_box(quantize_packed(black_box(&data), bits).unwrap());
+        });
+        table.row(vec![
+            "quantize+pack (fused)".into(),
+            bits.to_string(),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p99_ns),
+            format!("{:.0}", s.per_second(mbytes)),
+            format!("{:.2}", (quantize_mean + scalar_pack.mean_ns) / s.mean_ns),
         ]);
 
         let s = quick(|| {
@@ -67,11 +117,13 @@ fn main() {
             fmt_ns(s.mean_ns),
             fmt_ns(s.p99_ns),
             format!("{:.0}", s.per_second(mbytes)),
+            no_ratio(),
         ]);
     }
     table.print();
 
-    // whole-segment quantization through the executor (bundle-backed)
+    // whole-segment quantization through the executor (bundle-backed):
+    // the composed path and the fused packed path the coordinator serves
     if let Some(bundle) = setup.bundle.clone() {
         use qpart::prelude::*;
         use std::sync::Arc;
@@ -81,13 +133,21 @@ fn main() {
             .get(qpart::core::quant::PatternKey { level_idx: LEVEL_1PCT, partition: 6 })
             .unwrap()
             .clone();
+        let total_mb = setup.arch.total_params() as f64 * 4.0 / 1e6;
         let s = quick(|| {
             black_box(ex.quantize_segment("mlp6", &pat).unwrap());
         });
-        let total_mb = setup.arch.total_params() as f64 * 4.0 / 1e6;
         println!(
             "\nfull-segment quantize (mlp6, p=6, {:.1} MB of weights): mean {} → {:.0} MB/s",
             total_mb,
+            fmt_ns(s.mean_ns),
+            s.per_second(total_mb),
+        );
+        let s = quick(|| {
+            black_box(ex.quantize_segment_packed("mlp6", &pat).unwrap());
+        });
+        println!(
+            "full-segment fused quantize+pack (same weights): mean {} → {:.0} MB/s",
             fmt_ns(s.mean_ns),
             s.per_second(total_mb),
         );

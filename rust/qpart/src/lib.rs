@@ -41,7 +41,8 @@ pub mod prelude {
     pub use qpart_core::cost::{CostModel, DeviceProfile, ServerProfile, TradeoffWeights};
     pub use qpart_core::model::{builtin, ModelSpec};
     pub use qpart_core::optimizer::{
-        offline_quantize, serve_request, BitBounds, Decision, OfflineConfig, RequestParams,
+        offline_quantize, serve_request, serve_request_fast, BitBounds, Decision,
+        OfflineConfig, RequestParams,
     };
     pub use qpart_core::quant::{PatternSet, QuantPattern};
     pub use qpart_runtime::{Bundle, Executor, HostTensor};
