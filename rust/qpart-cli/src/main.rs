@@ -5,11 +5,14 @@
 //!                   [--workers N] [--queue N] [--sessions N] [--session-ttl SECS]
 //!                   [--batch-window MS] [--batch-max N] [--cache-bytes N]
 //!                   [--binary-frames true|false] [--warm-cache] [--host-fallback]
+//!                   [--frontend reactor|threaded] [--max-conns N]
+//!                   [--conn-idle-secs S] [--metrics-listen addr]
 //! qpart request     --model mlp6 [--accuracy 0.01] [--n 16] [--addr host:port]
 //!                   [--capacity-bps 2e8] [--clock-hz 2e8] [--artifacts dir] [--binary]
 //! qpart bench-serve [--clients 8] [--requests 32] [--workers 4] [--keys 3]
 //!                   [--batch-window 2] [--cache-bytes N] [--binary-frames true|false]
 //!                   [--phase2 B] [--warm-cache] [--sweep workers=1,2,4,8] [--csv]
+//!                   [--frontend reactor|threaded] [--min-peak-conns N]
 //!                   [--artifacts dir]
 //! qpart sim         [--model mlp6] [--rate 20] [--devices 16] [--duration 10] [--seed 1]
 //! qpart offline     [--model mlp6] [--artifacts dir]
@@ -89,18 +92,35 @@ const USAGE: &str = "usage: qpart <serve|request|bench-serve|sim|offline|models>
                                 plans at startup (default false)\n\
            [--host-fallback B]  phase 2 on pure-Rust reference kernels, no PJRT\n\
                                 (linear archs only; default false)\n\
+           [--frontend F]       connection handling: 'reactor' (default; one\n\
+                                poll-based event loop carries every accepted\n\
+                                device) or 'threaded' (thread-per-connection\n\
+                                baseline)\n\
+           [--max-conns N]      accept gate: refuse protocol connections beyond\n\
+                                N with a max_conns error (default 4096)\n\
+           [--conn-idle-secs S] close connections idle (nothing in flight, no\n\
+                                bytes moved) for S seconds — defuses slow-loris\n\
+                                and half-open peers (0 = never; default 600,\n\
+                                matching the session TTL)\n\
+           [--metrics-listen A] serve a plaintext Prometheus-style scrape of the\n\
+                                stats document on a second listener (default off)\n\
   request  --model mlp6 --accuracy 0.01 --n 16 --addr 127.0.0.1:7878 [--binary]\n\
-  bench-serve  load-test the dataplane + batched phase-2 execution plane\n\
-           (synthetic bundle + host kernels unless --artifacts):\n\
+  bench-serve  load-test the front-end + dataplane + batched phase-2 execution\n\
+           plane (synthetic bundle + host kernels unless --artifacts):\n\
            [--clients N] [--requests N-per-client] [--workers N] [--keys K]\n\
            [--batch-window MS] [--cache-bytes N] [--binary-frames B]\n\
            [--phase2 B] [--warm-cache B] [--host-fallback B]\n\
+           [--frontend F]             reactor (default) or threaded\n\
+           [--min-peak-conns N]       fail unless peak open connections >= N\n\
+                                      (the CI fleet-soak assertion)\n\
            [--sweep workers=1,2,4,8]  run once per value, print a scaling table\n\
            [--csv]                    emit the table as CSV rows (qpart-bench format)\n\
-           reports req/s, p50/p99 latency, shed rate, encodes vs requests,\n\
+           reports peak open connections + accept-to-first-byte latency (front-end\n\
+           scaling), req/s, p50/p99 latency, shed rate, encodes vs requests,\n\
            cache + decision-cache hit rates, per-stage means (plan / encode+pack\n\
            / phase-2 exec), phase-2 batch occupancy + ladder-padded rows, uplink\n\
-           bytes saved, and binary-vs-JSON byte-identity checks in both directions\n\
+           bytes saved, binary-vs-JSON byte-identity checks in both directions,\n\
+           and reactor-vs-threaded reply byte-identity\n\
   sim      --model mlp6 --rate 20 --devices 16 --duration 10\n\
   offline  --model mlp6\n\
   models";
@@ -123,10 +143,23 @@ fn bool_flag(args: &Args, key: &str, default: bool) -> Result<bool, String> {
     }
 }
 
+/// Parse `--frontend reactor|threaded`.
+fn frontend_flag(args: &Args, default: Frontend) -> Result<Frontend, String> {
+    match args.get("frontend") {
+        None => Ok(default),
+        Some("reactor") => Ok(Frontend::Reactor),
+        Some("threaded") => Ok(Frontend::Threaded),
+        Some(other) => Err(format!("--frontend: expected reactor|threaded, got '{other}'")),
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
     let serving = cfg.serving().map_err(|e| e.to_string())?;
     let batch_window_ms = args.get_f64("batch-window", serving.batch_window_us as f64 / 1000.0)?;
+    let metrics_listen = args
+        .get_or("metrics-listen", &serving.metrics_listen)
+        .to_string();
     let server_cfg = qpart::coordinator::ServerConfig {
         listen: args.get_or("listen", &serving.listen).to_string(),
         workers: args.get_usize("workers", serving.workers)?,
@@ -139,12 +172,18 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         batch_max: args.get_usize("batch-max", 32)?,
         cache_bytes: args.get_usize("cache-bytes", serving.cache_bytes)?,
         binary_frames: bool_flag(args, "binary-frames", serving.binary_frames)?,
+        frontend: frontend_flag(args, Frontend::Reactor)?,
+        max_conns: args.get_usize("max-conns", serving.max_conns)?,
+        conn_idle: Duration::from_secs(
+            args.get_usize("conn-idle-secs", serving.conn_idle_secs as usize)? as u64,
+        ),
+        metrics_listen: if metrics_listen.is_empty() { None } else { Some(metrics_listen) },
         warm_cache: bool_flag(args, "warm-cache", serving.warm_cache)?,
         host_fallback: bool_flag(args, "host-fallback", false)?,
         artifacts_dir: args.get_or("artifacts", &serving.artifacts_dir).to_string(),
     };
     println!(
-        "loading bundle from '{}' ({} workers, queue {}, batch window {:?}, cache {} MiB, binary frames {}, warm cache {}) ...",
+        "loading bundle from '{}' ({} workers, queue {}, batch window {:?}, cache {} MiB, binary frames {}, warm cache {}, frontend {:?}, max conns {}, conn idle {:?}) ...",
         server_cfg.artifacts_dir,
         server_cfg.workers,
         server_cfg.queue_capacity,
@@ -152,9 +191,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         server_cfg.cache_bytes >> 20,
         server_cfg.binary_frames,
         server_cfg.warm_cache,
+        server_cfg.frontend,
+        server_cfg.max_conns,
+        server_cfg.conn_idle,
     );
     let handle = serve(server_cfg)?;
     println!("qpart coordinator listening on {}", handle.addr);
+    if let Some(m) = handle.metrics_addr {
+        println!("metrics scrape endpoint on http://{m}/metrics");
+    }
     println!("(ctrl-c to stop)");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -246,6 +291,12 @@ struct BenchSummary {
     workers: usize,
     attempts: usize,
     shed: u64,
+    /// High-water mark of concurrently open connections — the front-end
+    /// scaling figure (decoupled from `workers` by the reactor).
+    peak_conns: u64,
+    /// Mean connect→first-reply-byte time (accept + dispatch round trip
+    /// with no inference work), in milliseconds.
+    first_byte_ms: f64,
     req_per_s: f64,
     p50_ms: f64,
     p99_ms: f64,
@@ -266,9 +317,11 @@ struct BenchSummary {
 }
 
 impl BenchSummary {
-    fn table_headers() -> [&'static str; 15] {
+    fn table_headers() -> [&'static str; 17] {
         [
             "workers",
+            "peak conns",
+            "1st byte ms",
             "req/s",
             "p50 ms",
             "p99 ms",
@@ -289,6 +342,8 @@ impl BenchSummary {
     fn table_row(&self) -> Vec<String> {
         vec![
             self.workers.to_string(),
+            self.peak_conns.to_string(),
+            format!("{:.2}", self.first_byte_ms),
             format!("{:.0}", self.req_per_s),
             format!("{:.2}", self.p50_ms),
             format!("{:.2}", self.p99_ms),
@@ -392,20 +447,28 @@ fn bench_serve_runs(
         Some(v) => v.clone(),
         None => vec![args.get_usize("workers", 4)?],
     };
+    let frontend = frontend_flag(args, Frontend::Reactor)?;
     let mut table = qpart_bench::Table::new(
         format!("bench-serve {} (model {model})", if sweep.is_some() { "sweep" } else { "run" }),
         &BenchSummary::table_headers(),
     );
     for workers in workers_list {
-        let summary =
-            run_bench_serve(args, artifacts_dir, model, workers, phase2, host_fallback)?;
+        let summary = run_bench_serve(
+            args,
+            artifacts_dir,
+            model,
+            workers,
+            phase2,
+            host_fallback,
+            frontend,
+        )?;
         table.row(summary.table_row());
     }
     table.print();
     Ok(())
 }
 
-#[allow(clippy::too_many_lines)]
+#[allow(clippy::too_many_lines, clippy::too_many_arguments)]
 fn run_bench_serve(
     args: &Args,
     artifacts_dir: &str,
@@ -413,6 +476,7 @@ fn run_bench_serve(
     workers: usize,
     phase2: bool,
     host_fallback: bool,
+    frontend: Frontend,
 ) -> Result<BenchSummary, String> {
     let clients = args.get_usize("clients", 8)?.max(1);
     let per_client = args.get_usize("requests", 32)?.max(1);
@@ -435,6 +499,8 @@ fn run_bench_serve(
         batch_window: Duration::from_micros((window_ms * 1000.0).max(0.0) as u64),
         cache_bytes,
         binary_frames: binary,
+        frontend,
+        max_conns: args.get_usize("max-conns", 4096)?,
         warm_cache: warm,
         host_fallback,
         artifacts_dir: artifacts_dir.to_string(),
@@ -444,7 +510,7 @@ fn run_bench_serve(
     println!(
         "bench-serve: model={model} workers={workers} clients={clients} \
          requests/client={per_client} keys={keys} batch-window={window_ms}ms \
-         phase2={phase2} binary={binary}"
+         phase2={phase2} binary={binary} frontend={frontend:?}"
     );
 
     let mut prev = handle.snapshot();
@@ -460,8 +526,19 @@ fn run_bench_serve(
             let arch = arch.clone();
             let barrier = Arc::clone(&barrier);
             joins.push(std::thread::spawn(
-                move || -> Result<(Vec<u64>, u64, u64, u64), String> {
+                move || -> Result<(Vec<u64>, u64, u64, u64, u64), String> {
+                    // accept-to-first-byte: connect + one ping round trip
+                    // (front-end accept + dispatch, no inference work) —
+                    // the latency figure that shows whether the reactor
+                    // keeps up as accepted connections pile past the
+                    // worker count
+                    let t_accept = Instant::now();
                     let mut conn = BlockingConn::connect(&addr)?;
+                    match conn.call(&Request::Ping)? {
+                        Response::Pong => {}
+                        other => return Err(format!("ping: unexpected {other:?}")),
+                    }
+                    let first_byte_us = t_accept.elapsed().as_micros() as u64;
                     // odd clients negotiate the binary uplink (when the
                     // server allows), evens stay JSON — both paths load
                     let mut bin_session = false;
@@ -530,21 +607,23 @@ fn run_bench_serve(
                         }
                         lat.push(t.elapsed().as_micros() as u64);
                     }
-                    Ok((lat, shed, errors, saved))
+                    Ok((lat, shed, errors, saved, first_byte_us))
                 },
             ));
         }
         let mut lats: Vec<u64> = Vec::new();
+        let mut first_bytes: Vec<u64> = Vec::new();
         let mut shed = 0u64;
         let mut errors = 0u64;
         let mut pass_saved = 0u64;
         for j in joins {
-            let (l, s, e, saved) =
+            let (l, s, e, saved, fb) =
                 j.join().map_err(|_| "bench client panicked".to_string())??;
             lats.extend(l);
             shed += s;
             errors += e;
             pass_saved += saved;
+            first_bytes.push(fb);
         }
         uplink_saved_total += pass_saved;
         let wall = t0.elapsed().as_secs_f64();
@@ -585,6 +664,12 @@ fn run_bench_serve(
             snap.execute_count,
             snap.execute_mean_us,
         );
+        first_bytes.sort_unstable();
+        let fb_mean_ms = if first_bytes.is_empty() {
+            f64::NAN
+        } else {
+            first_bytes.iter().sum::<u64>() as f64 / first_bytes.len() as f64 / 1000.0
+        };
         println!(
             "pass {pass}: {} ok / {attempts} ({shed} shed = {:.1}%, {errors} errors), \
              {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms",
@@ -593,6 +678,13 @@ fn run_bench_serve(
             lats.len() as f64 / wall,
             quantile_us(&lats, 0.50) / 1000.0,
             quantile_us(&lats, 0.99) / 1000.0,
+        );
+        println!(
+            "        front-end: conns open peak {}, accept→first-byte mean {fb_mean_ms:.2} ms \
+             (p99 {:.2} ms) over {} connects",
+            snap.conns_open_peak,
+            quantile_us(&first_bytes, 0.99) / 1000.0,
+            first_bytes.len(),
         );
         println!(
             "        encodes {d_encodes} / {attempts} infer requests, \
@@ -623,6 +715,8 @@ fn run_bench_serve(
             workers,
             attempts,
             shed,
+            peak_conns: snap.conns_open_peak,
+            first_byte_ms: fb_mean_ms,
             req_per_s: lats.len() as f64 / wall,
             p50_ms: quantile_us(&lats, 0.50) / 1000.0,
             p99_ms: quantile_us(&lats, 0.99) / 1000.0,
@@ -704,7 +798,81 @@ fn run_bench_serve(
         }
     }
 
+    // the evented front-end must be a pure transport change: replies off
+    // the reactor are byte-identical to the thread-per-connection
+    // baseline, in both framings
+    if frontend == Frontend::Reactor {
+        let control = serve(qpart::coordinator::ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            workers: 1,
+            frontend: Frontend::Threaded,
+            binary_frames: binary,
+            host_fallback,
+            artifacts_dir: artifacts_dir.to_string(),
+            ..Default::default()
+        })?;
+        let control_addr = control.addr.to_string();
+        let req = paper_request(model, 0.02);
+        let mut live = BlockingConn::connect(&addr)?;
+        let mut base = BlockingConn::connect(&control_addr)?;
+        let a = match live.call(&Request::Infer(req.clone()))? {
+            Response::Segment(r) => r,
+            other => return Err(format!("unexpected response {other:?}")),
+        };
+        let b = match base.call(&Request::Infer(req.clone()))? {
+            Response::Segment(r) => r,
+            other => return Err(format!("unexpected response {other:?}")),
+        };
+        if a.segment != b.segment || a.pattern != b.pattern {
+            return Err("reactor reply differs from thread-per-connection baseline (JSON)".into());
+        }
+        if binary {
+            for conn in [&mut live, &mut base] {
+                match conn.call(&Request::Hello(HelloRequest { binary_frames: true }))? {
+                    Response::Hello(h) if h.binary_frames => {}
+                    other => return Err(format!("baseline negotiation failed: {other:?}")),
+                }
+            }
+            let a = match live.call(&Request::Infer(req.clone()))? {
+                Response::Segment(r) => r,
+                other => return Err(format!("unexpected response {other:?}")),
+            };
+            let b = match base.call(&Request::Infer(req))? {
+                Response::Segment(r) => r,
+                other => return Err(format!("unexpected response {other:?}")),
+            };
+            if a.segment != b.segment || a.pattern != b.pattern {
+                return Err(
+                    "reactor reply differs from thread-per-connection baseline (binary)".into(),
+                );
+            }
+        }
+        control.shutdown();
+        println!(
+            "frontend check: reactor replies byte-identical to thread-per-connection \
+             baseline (both framings): OK"
+        );
+    }
+
     let final_snap = handle.snapshot();
+    // fleet-soak gate: accepted connections must scale past the worker
+    // count (CI asserts clients ≫ workers landed concurrently)
+    let min_peak = args.get_usize("min-peak-conns", 0)?;
+    if min_peak > 0 && final_snap.conns_open_peak < min_peak as u64 {
+        return Err(format!(
+            "front-end scaling: peak open connections {} < required {} (workers {})",
+            final_snap.conns_open_peak, min_peak, workers
+        ));
+    }
+    println!(
+        "front-end: conns accepted {}, open peak {}, rejected {}, timed out {}, \
+         outbox bytes peak {}",
+        final_snap.conns_accepted_total,
+        final_snap.conns_open_peak,
+        final_snap.conns_rejected_total,
+        final_snap.conns_timed_out,
+        final_snap.outbox_bytes_peak,
+    );
     println!(
         "totals: requests {}, encodes {}, coalesced {}, cache hits {}, cache misses {}, \
          decision hits {}, decision misses {}, phase2 execs {}, phase2 rows {}, \

@@ -23,13 +23,23 @@
 //!   [`EncodedReplyCache`] (LRU + byte budget), and the [`sched::WireReply`]
 //!   hand-off that lets connection threads stamp pre-encoded segment
 //!   bodies into either framing.
-//! * [`server`] — TCP front-end: JSON-lines framing plus negotiated
+//! * [`net`] — the **evented front-end**: a `poll(2)`-based connection
+//!   reactor (nonblocking listener, per-connection state machines with
+//!   explicit read buffers / outboxes / negotiation state, idle and
+//!   slow-client timeouts, a `max_conns` accept gate) that decouples
+//!   accepted-device count from OS threads. Replies route back through
+//!   the [`sched::ReplyRouter`] completion queue; a plaintext
+//!   metrics-scrape listener rides the same loop as a second socket.
+//! * [`server`] — server assembly: JSON-lines framing plus negotiated
 //!   binary segment frames, a bounded job queue with admission control
 //!   (overload sheds with an `overloaded` error), a configurable
 //!   **executor pool** (`workers` inference threads over one shared
 //!   `Arc<Bundle>`; PJRT clients are single-device and not `Send`)
 //!   draining one shared queue in batches, and a session-GC thread. The
-//!   knob mirrors the simulator's `FleetConfig::server_slots`.
+//!   front-end is the reactor by default ([`server::Frontend`]), with
+//!   the classic thread-per-connection loop kept as a byte-identical
+//!   baseline. The `workers` knob mirrors the simulator's
+//!   `FleetConfig::server_slots`.
 //! * [`client`] — the device side for examples/CLI: sends requests,
 //!   optionally negotiates binary frames, executes the received quantized
 //!   segment locally through its own PJRT engine, uploads the quantized
@@ -50,6 +60,8 @@
 pub mod client;
 pub mod decision;
 pub mod metrics;
+#[cfg(unix)]
+pub mod net;
 pub mod sched;
 pub mod server;
 pub mod service;
@@ -59,7 +71,7 @@ pub mod testing;
 pub use client::DeviceClient;
 pub use decision::{DecisionCache, DecisionKey, ProfileBucket};
 pub use metrics::{Metrics, MetricsHub, MetricsSnapshot};
-pub use sched::{BatchPolicy, EncodedReplyCache, Job, WireReply};
-pub use server::{serve, ServerConfig, ServerHandle};
+pub use sched::{BatchPolicy, EncodedReplyCache, Job, ReplyRouter, ReplySink, WireReply};
+pub use server::{serve, Frontend, ServerConfig, ServerHandle};
 pub use service::{Service, ServiceOptions};
 pub use session::{Session, SessionTable, SharedSessionTable};

@@ -160,6 +160,24 @@ pub struct Metrics {
     pub requests_total: AtomicU64,
     pub errors_total: AtomicU64,
     pub shed_total: AtomicU64,
+    /// Live protocol connections (front-end gauge; the reactor makes
+    /// this independent of any thread count).
+    pub conns_open: AtomicU64,
+    /// High-water mark of `conns_open` — the front-end scaling figure
+    /// `bench-serve` and the CI fleet-soak read.
+    pub conns_open_peak: AtomicU64,
+    /// Protocol connections accepted over the server's lifetime.
+    pub conns_accepted_total: AtomicU64,
+    /// Connections refused at the `--max-conns` accept gate.
+    pub conns_rejected_total: AtomicU64,
+    /// Connections closed by the idle/slow-client timeout
+    /// (`--conn-idle-secs`): slow-loris and half-open peers.
+    pub conns_timed_out: AtomicU64,
+    /// Bytes currently queued across connection outboxes (gauge) — the
+    /// reactor's write-backpressure depth.
+    pub outbox_bytes: AtomicU64,
+    /// High-water mark of `outbox_bytes`.
+    pub outbox_bytes_peak: AtomicU64,
     pub sessions_opened: AtomicU64,
     pub sessions_expired: AtomicU64,
     pub bytes_out: AtomicU64,
@@ -205,6 +223,13 @@ pub struct MetricsSnapshot {
     pub requests_total: u64,
     pub errors_total: u64,
     pub shed_total: u64,
+    pub conns_open: u64,
+    pub conns_open_peak: u64,
+    pub conns_accepted_total: u64,
+    pub conns_rejected_total: u64,
+    pub conns_timed_out: u64,
+    pub outbox_bytes: u64,
+    pub outbox_bytes_peak: u64,
     pub sessions_opened: u64,
     pub batches_total: u64,
     pub coalesced_total: u64,
@@ -260,11 +285,38 @@ impl Metrics {
         counter.fetch_add(v, Ordering::Relaxed);
     }
 
+    /// Set a gauge to an absolute value.
+    pub fn set(gauge: &AtomicU64, v: u64) {
+        gauge.store(v, Ordering::Relaxed);
+    }
+
+    /// Increment a gauge, returning the new value (for peak tracking).
+    pub fn gauge_inc(gauge: &AtomicU64) -> u64 {
+        gauge.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Decrement a gauge (callers pair this with a prior `gauge_inc`).
+    pub fn gauge_dec(gauge: &AtomicU64) {
+        gauge.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Raise a high-water mark to at least `v`.
+    pub fn observe_peak(peak: &AtomicU64, v: u64) {
+        peak.fetch_max(v, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests_total: self.requests_total.load(Ordering::Relaxed),
             errors_total: self.errors_total.load(Ordering::Relaxed),
             shed_total: self.shed_total.load(Ordering::Relaxed),
+            conns_open: self.conns_open.load(Ordering::Relaxed),
+            conns_open_peak: self.conns_open_peak.load(Ordering::Relaxed),
+            conns_accepted_total: self.conns_accepted_total.load(Ordering::Relaxed),
+            conns_rejected_total: self.conns_rejected_total.load(Ordering::Relaxed),
+            conns_timed_out: self.conns_timed_out.load(Ordering::Relaxed),
+            outbox_bytes: self.outbox_bytes.load(Ordering::Relaxed),
+            outbox_bytes_peak: self.outbox_bytes_peak.load(Ordering::Relaxed),
             sessions_opened: self.sessions_opened.load(Ordering::Relaxed),
             batches_total: self.batches_total.load(Ordering::Relaxed),
             coalesced_total: self.coalesced_total.load(Ordering::Relaxed),
@@ -296,6 +348,22 @@ impl Metrics {
             ("requests_total", self.requests_total.load(Ordering::Relaxed).into()),
             ("errors_total", self.errors_total.load(Ordering::Relaxed).into()),
             ("shed_total", self.shed_total.load(Ordering::Relaxed).into()),
+            ("conns_open", self.conns_open.load(Ordering::Relaxed).into()),
+            ("conns_open_peak", self.conns_open_peak.load(Ordering::Relaxed).into()),
+            (
+                "conns_accepted_total",
+                self.conns_accepted_total.load(Ordering::Relaxed).into(),
+            ),
+            (
+                "conns_rejected_total",
+                self.conns_rejected_total.load(Ordering::Relaxed).into(),
+            ),
+            ("conns_timed_out", self.conns_timed_out.load(Ordering::Relaxed).into()),
+            ("outbox_bytes", self.outbox_bytes.load(Ordering::Relaxed).into()),
+            (
+                "outbox_bytes_peak",
+                self.outbox_bytes_peak.load(Ordering::Relaxed).into(),
+            ),
             ("sessions_opened", self.sessions_opened.load(Ordering::Relaxed).into()),
             ("sessions_expired", self.sessions_expired.load(Ordering::Relaxed).into()),
             ("bytes_out", self.bytes_out.load(Ordering::Relaxed).into()),
@@ -330,6 +398,13 @@ struct CounterTotals {
     requests_total: u64,
     errors_total: u64,
     shed_total: u64,
+    conns_open: u64,
+    conns_open_peak: u64,
+    conns_accepted_total: u64,
+    conns_rejected_total: u64,
+    conns_timed_out: u64,
+    outbox_bytes: u64,
+    outbox_bytes_peak: u64,
     sessions_opened: u64,
     sessions_expired: u64,
     bytes_out: u64,
@@ -349,6 +424,13 @@ impl CounterTotals {
             requests_total: m.requests_total.load(Ordering::Relaxed),
             errors_total: m.errors_total.load(Ordering::Relaxed),
             shed_total: m.shed_total.load(Ordering::Relaxed),
+            conns_open: m.conns_open.load(Ordering::Relaxed),
+            conns_open_peak: m.conns_open_peak.load(Ordering::Relaxed),
+            conns_accepted_total: m.conns_accepted_total.load(Ordering::Relaxed),
+            conns_rejected_total: m.conns_rejected_total.load(Ordering::Relaxed),
+            conns_timed_out: m.conns_timed_out.load(Ordering::Relaxed),
+            outbox_bytes: m.outbox_bytes.load(Ordering::Relaxed),
+            outbox_bytes_peak: m.outbox_bytes_peak.load(Ordering::Relaxed),
             sessions_opened: m.sessions_opened.load(Ordering::Relaxed),
             sessions_expired: m.sessions_expired.load(Ordering::Relaxed),
             bytes_out: m.bytes_out.load(Ordering::Relaxed),
@@ -367,6 +449,15 @@ impl CounterTotals {
         self.requests_total += other.requests_total;
         self.errors_total += other.errors_total;
         self.shed_total += other.shed_total;
+        // connection counters live on the front-end's Metrics only, so
+        // summing is the identity for workers
+        self.conns_open += other.conns_open;
+        self.conns_open_peak += other.conns_open_peak;
+        self.conns_accepted_total += other.conns_accepted_total;
+        self.conns_rejected_total += other.conns_rejected_total;
+        self.conns_timed_out += other.conns_timed_out;
+        self.outbox_bytes += other.outbox_bytes;
+        self.outbox_bytes_peak += other.outbox_bytes_peak;
         self.sessions_opened += other.sessions_opened;
         self.sessions_expired += other.sessions_expired;
         self.bytes_out += other.bytes_out;
@@ -513,6 +604,13 @@ impl MetricsHub {
             requests_total: agg.totals.requests_total,
             errors_total: agg.totals.errors_total,
             shed_total: agg.totals.shed_total,
+            conns_open: agg.totals.conns_open,
+            conns_open_peak: agg.totals.conns_open_peak,
+            conns_accepted_total: agg.totals.conns_accepted_total,
+            conns_rejected_total: agg.totals.conns_rejected_total,
+            conns_timed_out: agg.totals.conns_timed_out,
+            outbox_bytes: agg.totals.outbox_bytes,
+            outbox_bytes_peak: agg.totals.outbox_bytes_peak,
             sessions_opened: agg.totals.sessions_opened,
             batches_total: agg.totals.batches_total,
             coalesced_total: agg.totals.coalesced_total,
@@ -548,6 +646,13 @@ impl MetricsHub {
             ("requests_total", agg.totals.requests_total.into()),
             ("errors_total", agg.totals.errors_total.into()),
             ("shed_total", agg.totals.shed_total.into()),
+            ("conns_open", agg.totals.conns_open.into()),
+            ("conns_open_peak", agg.totals.conns_open_peak.into()),
+            ("conns_accepted_total", agg.totals.conns_accepted_total.into()),
+            ("conns_rejected_total", agg.totals.conns_rejected_total.into()),
+            ("conns_timed_out", agg.totals.conns_timed_out.into()),
+            ("outbox_bytes", agg.totals.outbox_bytes.into()),
+            ("outbox_bytes_peak", agg.totals.outbox_bytes_peak.into()),
             ("sessions_opened", agg.totals.sessions_opened.into()),
             ("sessions_expired", agg.totals.sessions_expired.into()),
             ("bytes_out", agg.totals.bytes_out.into()),
@@ -581,6 +686,74 @@ impl MetricsHub {
             v.set("decision_cache", cache.to_json());
         }
         v
+    }
+
+    /// The plaintext scrape document for the `--metrics-listen` endpoint:
+    /// one `qpart_<name> <value>` line per metric, Prometheus exposition
+    /// style. Non-finite derived values (means before the first sample)
+    /// are omitted rather than printed as `NaN`.
+    pub fn render_prometheus(&self) -> String {
+        fn put(out: &mut String, name: &str, v: f64) {
+            use std::fmt::Write as _;
+            if v.is_finite() {
+                let _ = writeln!(out, "qpart_{name} {v}");
+            }
+        }
+        fn put_hist(out: &mut String, name: &str, count: u64, mean_us: f64) {
+            put(out, &format!("{name}_us_count"), count as f64);
+            let sum = if count == 0 { 0.0 } else { mean_us * count as f64 };
+            put(out, &format!("{name}_us_sum"), sum);
+        }
+        let s = self.snapshot();
+        let mut out = String::with_capacity(1536);
+        put(&mut out, "requests_total", s.requests_total as f64);
+        put(&mut out, "errors_total", s.errors_total as f64);
+        put(&mut out, "shed_total", s.shed_total as f64);
+        put(&mut out, "conns_open", s.conns_open as f64);
+        put(&mut out, "conns_open_peak", s.conns_open_peak as f64);
+        put(&mut out, "conns_accepted_total", s.conns_accepted_total as f64);
+        put(&mut out, "conns_rejected_total", s.conns_rejected_total as f64);
+        put(&mut out, "conns_timed_out", s.conns_timed_out as f64);
+        put(&mut out, "outbox_bytes", s.outbox_bytes as f64);
+        put(&mut out, "outbox_bytes_peak", s.outbox_bytes_peak as f64);
+        put(&mut out, "sessions_opened", s.sessions_opened as f64);
+        put(&mut out, "batches_total", s.batches_total as f64);
+        put(&mut out, "coalesced_total", s.coalesced_total as f64);
+        put(&mut out, "encodes_total", s.encodes_total as f64);
+        put(&mut out, "phase2_execs_total", s.phase2_execs_total as f64);
+        put(&mut out, "phase2_rows_total", s.phase2_rows_total as f64);
+        put(&mut out, "phase2_padded_rows_total", s.phase2_padded_rows_total as f64);
+        put(&mut out, "batch_occupancy_mean", s.batch_occupancy_mean());
+        put(&mut out, "padding_waste", s.padding_waste());
+        put(&mut out, "warmed_total", s.warmed_total as f64);
+        put(&mut out, "segment_cache_hits", s.cache_hits as f64);
+        put(&mut out, "segment_cache_misses", s.cache_misses as f64);
+        put(&mut out, "decision_cache_hits", s.decision_hits as f64);
+        put(&mut out, "decision_cache_misses", s.decision_misses as f64);
+        put(&mut out, "compilations_total", s.compilations_total as f64);
+        put_hist(&mut out, "handle_latency", s.handle_count, s.handle_mean_us);
+        put_hist(&mut out, "decide_latency", s.decide_count, s.decide_mean_us);
+        put_hist(&mut out, "quantize_latency", s.quantize_count, s.quantize_mean_us);
+        put_hist(&mut out, "execute_latency", s.execute_count, s.execute_mean_us);
+        put_hist(&mut out, "queue_wait", s.queue_wait_count, s.queue_wait_mean_us);
+        out
+    }
+
+    /// [`MetricsHub::render_prometheus`] plus the session gauge, framed
+    /// as a minimal HTTP/1.0 response — the single source of truth for
+    /// the `--metrics-listen` scrape, shared by the reactor and the
+    /// thread-per-connection fallback so their output cannot diverge.
+    pub fn scrape_http_response(&self, open_sessions: usize) -> Vec<u8> {
+        let mut body = self.render_prometheus();
+        body.push_str(&format!("qpart_open_sessions {open_sessions}\n"));
+        let mut out = Vec::with_capacity(body.len() + 128);
+        out.extend_from_slice(
+            b"HTTP/1.0 200 OK\r\nContent-Type: text/plain; charset=utf-8\r\nConnection: close\r\nContent-Length: ",
+        );
+        out.extend_from_slice(body.len().to_string().as_bytes());
+        out.extend_from_slice(b"\r\n\r\n");
+        out.extend_from_slice(body.as_bytes());
+        out
     }
 }
 
@@ -714,6 +887,62 @@ mod tests {
         let section = v.req("compile_cache").unwrap();
         assert_eq!(section.req_f64("compilations").unwrap(), 0.0);
         assert_eq!(section.req_f64("max_compiles_per_key").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn conn_gauges_and_peaks_track_the_front_end() {
+        let hub = MetricsHub::new();
+        let front = hub.front();
+        for _ in 0..3 {
+            Metrics::inc(&front.conns_accepted_total);
+            let open = Metrics::gauge_inc(&front.conns_open);
+            Metrics::observe_peak(&front.conns_open_peak, open);
+        }
+        Metrics::gauge_dec(&front.conns_open);
+        Metrics::inc(&front.conns_timed_out);
+        Metrics::inc(&front.conns_rejected_total);
+        Metrics::set(&front.outbox_bytes, 512);
+        Metrics::observe_peak(&front.outbox_bytes_peak, 512);
+        Metrics::set(&front.outbox_bytes, 0);
+        let snap = hub.snapshot();
+        assert_eq!(snap.conns_accepted_total, 3);
+        assert_eq!(snap.conns_open, 2);
+        assert_eq!(snap.conns_open_peak, 3, "peak survives the close");
+        assert_eq!(snap.conns_timed_out, 1);
+        assert_eq!(snap.conns_rejected_total, 1);
+        assert_eq!(snap.outbox_bytes, 0);
+        assert_eq!(snap.outbox_bytes_peak, 512);
+        let v = hub.to_json();
+        assert_eq!(v.req_f64("conns_open").unwrap() as u64, 2);
+        assert_eq!(v.req_f64("conns_open_peak").unwrap() as u64, 3);
+        assert_eq!(v.req_f64("conns_timed_out").unwrap() as u64, 1);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_scrapable() {
+        let hub = MetricsHub::new();
+        let w = hub.register_worker();
+        Metrics::inc(&w.requests_total);
+        w.handle_latency.observe_us(250);
+        let front = hub.front();
+        Metrics::inc(&front.conns_accepted_total);
+        let body = hub.render_prometheus();
+        assert!(body.contains("qpart_requests_total 1\n"), "{body}");
+        assert!(body.contains("qpart_conns_accepted_total 1\n"), "{body}");
+        assert!(body.contains("qpart_handle_latency_us_count 1\n"), "{body}");
+        assert!(body.contains("qpart_handle_latency_us_sum 250\n"), "{body}");
+        // empty histograms render zero sums; NaN-valued derived metrics
+        // (no phase-2 runs yet) are omitted entirely
+        assert!(body.contains("qpart_queue_wait_us_sum 0\n"), "{body}");
+        assert!(!body.contains("NaN"), "{body}");
+        for line in body.lines() {
+            let mut parts = line.split(' ');
+            let name = parts.next().unwrap();
+            assert!(name.starts_with("qpart_"), "{line}");
+            let value = parts.next().expect("value present");
+            assert!(value.parse::<f64>().is_ok(), "{line}");
+            assert!(parts.next().is_none(), "{line}");
+        }
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! Per-connection state for the reactor: what used to live on a
+//! connection thread's stack (read buffer, partial frame, negotiated
+//! framing, the reply in flight) is an explicit [`Conn`] struct the
+//! reactor owns in a slab.
+//!
+//! A `Conn` is a plain state machine over a nonblocking socket:
+//!
+//! * **inbound** — [`Conn::fill`] appends whatever the socket has into
+//!   `rbuf`; [`Conn::next_frame`] splits complete frames off the front
+//!   (`qpart_proto::frame::split_frame`, the incremental twin of the
+//!   blocking reader, so framing is byte-identical to the threaded
+//!   front-end).
+//! * **outbound** — replies are serialized into the [`Outbox`] (a chunk
+//!   queue with a byte count) and flushed as far as the socket allows;
+//!   leftovers wait for `POLLOUT`. The outbox **is** the backpressure
+//!   signal: a connection with a deep outbox or an in-flight job is not
+//!   polled for reads, so a fast producer/slow consumer peer stalls at
+//!   the TCP layer instead of growing server memory.
+//! * **lifecycle** — `last_activity` advances on every byte moved in
+//!   either direction; the reactor idle-times-out connections with no
+//!   activity and nothing in flight (slow-loris / half-open peers).
+//!   `closing` marks "flush the outbox, then close" (fatal frame errors,
+//!   metrics scrapes).
+
+use qpart_proto::frame::{split_frame, Frame, FrameError};
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// Bytes read from a socket per `read(2)` call.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Per-`fill` ceiling: a firehose peer must not starve the other
+/// connections of a level-triggered reactor tick (leftover bytes simply
+/// re-report readable on the next poll).
+const MAX_FILL_BYTES: usize = 256 * 1024;
+
+/// Flavor of an accepted connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnKind {
+    /// A QPART protocol peer: JSON lines + negotiated binary frames.
+    Proto,
+    /// A plaintext metrics scrape: the response is queued at accept,
+    /// inbound bytes are discarded, the connection closes once flushed.
+    Metrics,
+}
+
+/// Queued outbound bytes with a running total (the backpressure signal
+/// and the `outbox_bytes` gauge source).
+#[derive(Debug, Default)]
+pub struct Outbox {
+    chunks: VecDeque<Vec<u8>>,
+    /// Bytes of the front chunk already written.
+    head: usize,
+    bytes: usize,
+}
+
+impl Outbox {
+    pub fn push(&mut self, chunk: Vec<u8>) {
+        if chunk.is_empty() {
+            return;
+        }
+        self.bytes += chunk.len();
+        self.chunks.push_back(chunk);
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+
+    /// Write as much as the socket accepts; returns bytes written this
+    /// call. `WouldBlock` stops quietly (wait for `POLLOUT`); real I/O
+    /// errors propagate so the caller closes the connection.
+    fn write_to(&mut self, w: &mut TcpStream) -> io::Result<usize> {
+        let mut written = 0usize;
+        while let Some(front) = self.chunks.front() {
+            match w.write(&front[self.head..]) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => {
+                    written += n;
+                    self.bytes -= n;
+                    self.head += n;
+                    if self.head == front.len() {
+                        self.chunks.pop_front();
+                        self.head = 0;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(written)
+    }
+}
+
+/// One accepted connection owned by the reactor.
+#[derive(Debug)]
+pub struct Conn {
+    pub stream: TcpStream,
+    pub kind: ConnKind,
+    /// Unparsed inbound bytes (partial frames live here, not on a
+    /// thread stack).
+    rbuf: Vec<u8>,
+    pub outbox: Outbox,
+    /// Negotiated binary framing (`hello`), symmetric as ever.
+    pub binary: bool,
+    /// Jobs submitted to the pool whose replies have not routed back.
+    /// The protocol is request→reply per connection, so this is 0 or 1:
+    /// pipelined bytes wait in `rbuf` (and then in the kernel buffer)
+    /// until the pending reply is on the wire — exactly the pacing a
+    /// connection thread imposed by blocking on the reply channel.
+    pub in_flight: usize,
+    pub last_activity: Instant,
+    /// Flush the outbox, then close (fatal framing error, scrape done).
+    pub closing: bool,
+    /// The peer sent EOF. Requests already buffered in `rbuf` are still
+    /// served (a BufReader-backed connection thread does the same — it
+    /// drains its buffer before noticing the close); the connection
+    /// closes once nothing is buffered, in flight, or unflushed.
+    pub peer_eof: bool,
+    /// Any inbound byte was ever seen. Metrics scrapes close only after
+    /// the response is flushed AND this is set (or the peer is gone):
+    /// closing while the scraper's request is still in flight would
+    /// leave it unread in the receive queue, and the resulting RST can
+    /// destroy the response on non-loopback paths.
+    pub saw_input: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, kind: ConnKind) -> Conn {
+        Conn {
+            stream,
+            kind,
+            rbuf: Vec::new(),
+            outbox: Outbox::default(),
+            binary: false,
+            in_flight: 0,
+            last_activity: Instant::now(),
+            closing: false,
+            peer_eof: false,
+            saw_input: false,
+        }
+    }
+
+    /// Pull everything currently readable (bounded per call) into
+    /// `rbuf`. An orderly EOF sets `peer_eof` — bytes read before it
+    /// stay buffered and will still be parsed. `Err` = broken peer.
+    pub fn fill(&mut self) -> io::Result<()> {
+        let mut chunk = [0u8; READ_CHUNK];
+        let mut pulled = 0usize;
+        while pulled < MAX_FILL_BYTES {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.peer_eof = true;
+                    return Ok(());
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                    self.last_activity = Instant::now();
+                    self.saw_input = true;
+                    pulled += n;
+                    if n < chunk.len() {
+                        break; // socket drained
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// Split the next complete frame off `rbuf`, if one is buffered.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, FrameError> {
+        match split_frame(&self.rbuf)? {
+            Some((frame, consumed)) => {
+                self.rbuf.drain(..consumed);
+                Ok(Some(frame))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Whether `rbuf` holds bytes that might form further frames.
+    pub fn has_buffered_input(&self) -> bool {
+        !self.rbuf.is_empty()
+    }
+
+    /// Throw away buffered input (metrics scrapes: the request bytes are
+    /// irrelevant and must not accumulate).
+    pub fn discard_input(&mut self) {
+        self.rbuf.clear();
+    }
+
+    /// Flush the outbox as far as the socket allows.
+    pub fn flush(&mut self) -> io::Result<()> {
+        let n = self.outbox.write_to(&mut self.stream)?;
+        if n > 0 {
+            self.last_activity = Instant::now();
+        }
+        Ok(())
+    }
+
+    pub fn wants_write(&self) -> bool {
+        !self.outbox.is_empty()
+    }
+
+    /// Read interest: an idle protocol conn that is not drowning in
+    /// unflushed replies. Metrics conns stay readable even while closing
+    /// so a scraper's request bytes are drained before the close (unread
+    /// bytes at close would RST the response off the wire).
+    pub fn wants_read(&self, outbox_pause_bytes: usize) -> bool {
+        if self.peer_eof {
+            return false;
+        }
+        if self.kind == ConnKind::Metrics {
+            return true;
+        }
+        if self.closing {
+            return false;
+        }
+        self.in_flight == 0 && self.outbox.bytes() < outbox_pause_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outbox_tracks_bytes_across_chunks() {
+        let mut o = Outbox::default();
+        assert!(o.is_empty());
+        o.push(vec![1, 2, 3]);
+        o.push(Vec::new()); // ignored
+        o.push(vec![4; 5]);
+        assert_eq!(o.bytes(), 8);
+        assert!(!o.is_empty());
+    }
+
+    #[test]
+    fn outbox_flushes_through_a_socket() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        server_side.set_nonblocking(true).unwrap();
+        let mut conn = Conn::new(server_side, ConnKind::Proto);
+        conn.outbox.push(b"hello ".to_vec());
+        conn.outbox.push(b"world\n".to_vec());
+        conn.flush().unwrap();
+        assert!(conn.outbox.is_empty());
+        assert!(!conn.wants_write());
+        let mut got = vec![0u8; 12];
+        let mut r = client;
+        r.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"hello world\n");
+    }
+
+    #[test]
+    fn fill_and_split_reassemble_partial_frames() {
+        use std::io::Write;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut client = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        server_side.set_nonblocking(true).unwrap();
+        let mut conn = Conn::new(server_side, ConnKind::Proto);
+        // half a frame: readable, but no frame yet
+        client.write_all(b"{\"type\":\"pi").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        conn.fill().unwrap();
+        assert!(!conn.peer_eof);
+        assert!(conn.next_frame().unwrap().is_none());
+        assert!(conn.has_buffered_input());
+        // the rest, plus a second pipelined frame
+        client.write_all(b"ng\"}\n{\"type\":\"stats\"}\n").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        conn.fill().unwrap();
+        assert_eq!(conn.next_frame().unwrap(), Some(Frame::Json("{\"type\":\"ping\"}".into())));
+        assert_eq!(conn.next_frame().unwrap(), Some(Frame::Json("{\"type\":\"stats\"}".into())));
+        assert_eq!(conn.next_frame().unwrap(), None);
+        // orderly EOF is a flag, not a hard stop: buffered bytes survive
+        drop(client);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        conn.fill().unwrap();
+        assert!(conn.peer_eof);
+        assert!(!conn.wants_read(1 << 20), "no reads after EOF");
+    }
+
+    #[test]
+    fn read_interest_respects_inflight_and_backpressure() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let _client = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let mut conn = Conn::new(server_side, ConnKind::Proto);
+        assert!(conn.wants_read(1024));
+        conn.in_flight = 1;
+        assert!(!conn.wants_read(1024), "request in flight: pipelined bytes can wait");
+        conn.in_flight = 0;
+        conn.outbox.push(vec![0u8; 2048]);
+        assert!(!conn.wants_read(1024), "deep outbox: stop reading, let TCP push back");
+        conn.closing = true;
+        assert!(!conn.wants_read(1 << 30));
+    }
+}

@@ -1,0 +1,37 @@
+//! The evented front-end: a `poll(2)`-based connection reactor that
+//! decouples **accepted devices** from **OS threads**.
+//!
+//! The thread-per-connection front-end capped concurrent devices at
+//! whatever the OS would give us in threads — each idle or slow device
+//! pinned a stack. Here one reactor thread owns every accepted socket as
+//! an explicit state machine, and the executor pool (`--workers`) stays
+//! the only knob that sizes compute. Connection count and worker count
+//! are fully decoupled: `bench-serve --clients 128 --workers 2` holds
+//! 128 live devices over 2 inference threads plus one reactor.
+//!
+//! Layers, bottom up:
+//!
+//! * [`sys`] — `poll(2)` over raw fds and a UDP-socket-pair [`sys::Waker`]
+//!   (std + one libc symbol; no new dependencies).
+//! * [`conn`] — the per-connection state machine: read buffer →
+//!   incremental frame splitter, outbox with backpressure, negotiation
+//!   state, idle accounting. Two flavors ([`conn::ConnKind`]): protocol
+//!   peers and metrics scrapes.
+//! * [`reactor`] — the event loop: accept gate (`--max-conns`),
+//!   idle/slow-client timeouts (`--conn-idle-secs`), job submission into
+//!   the existing `sched` queue, and reply routing back through the
+//!   [`crate::sched::ReplyRouter`] completion queue.
+//!
+//! **The wire protocol is untouched.** Framing, negotiation, admission
+//! control, coalescing, and every reply byte are identical to the
+//! threaded front-end (`ServerConfig::frontend` keeps the thread-based
+//! loop available as a baseline, and `bench-serve` checks byte-identity
+//! between the two).
+
+pub mod conn;
+pub mod reactor;
+pub mod sys;
+
+pub use conn::{Conn, ConnKind};
+pub use reactor::{Reactor, ReactorParams};
+pub use sys::Waker;

@@ -1,0 +1,544 @@
+//! The connection reactor: one thread, `poll(2)` readiness, every
+//! accepted socket a [`Conn`] state machine in a slab.
+//!
+//! This replaces the thread-per-connection accept loop: accepted-device
+//! count is no longer capped by OS threads — one reactor thread carries
+//! thousands of connections while the executor pool stays exactly as
+//! wide as `--workers`. The division of labor:
+//!
+//! * **reactor thread** — accepts (gated by `max_conns`), reads
+//!   nonblocking sockets into per-connection buffers, splits frames,
+//!   answers connection-level traffic itself (`hello` negotiation,
+//!   framing errors, shed replies), and submits everything else to the
+//!   shared job queue as [`Job::routed`] jobs tagged with the
+//!   connection's token.
+//! * **executor pool** — unchanged: drains the queue in batches,
+//!   coalesces, executes, and replies through the [`ReplyRouter`]
+//!   completion queue instead of a per-thread channel. A push wakes the
+//!   reactor ([`Waker`]), which serializes the reply in the connection's
+//!   negotiated framing into its outbox and flushes as writability
+//!   allows.
+//!
+//! Tokens are `(slot index, generation)` pairs: a connection that dies
+//! while its job is in flight bumps the slot generation, so the late
+//! reply routes to nobody instead of to whoever reused the slot.
+//!
+//! Timeouts: a connection with nothing in flight and no byte moved for
+//! `idle_timeout` is closed (`conns_timed_out`) — this is what defuses
+//! slow-loris / half-open peers, which previously pinned a thread each.
+//! Backpressure: replies queue in the connection's outbox; a connection
+//! whose outbox is deep (or with a request in flight) is not polled for
+//! reads, so TCP pushes back on the peer instead of the server buffering
+//! unboundedly.
+//!
+//! A second listener socket (`--metrics-listen`) rides the same reactor
+//! as a trivial second [`ConnKind`]: accepted scrape connections get a
+//! plaintext metrics document queued at accept and close once flushed.
+
+use crate::metrics::{Metrics, MetricsHub};
+use crate::net::conn::{Conn, ConnKind};
+use crate::net::sys::{poll_fds, PollFd, Waker, POLLIN, POLLOUT};
+use crate::sched::{Job, ReplyRouter, WireReply};
+use crate::session::SharedSessionTable;
+use qpart_proto::frame::{write_binary_frame, write_frame, Frame};
+use qpart_proto::messages::{ErrorReply, HelloReply, Request, Response};
+use std::io::{self, Write};
+use std::net::TcpListener;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Poll tick: the upper bound on how late the reactor notices a stop
+/// request or an idle deadline when no fd event arrives first (replies
+/// and traffic wake it immediately).
+const TICK_MS: i32 = 25;
+
+/// Outbox depth beyond which a connection stops being polled for reads
+/// (resumes once the peer drains below it).
+const OUTBOX_PAUSE_BYTES: usize = 1 << 20;
+
+/// Concurrent metrics-scrape connections allowed. Scrapes are transient
+/// and have their own small bound so they neither consume the protocol
+/// `max_conns` budget nor let slow scrapers grow without limit.
+const METRICS_CONN_CAP: usize = 64;
+
+/// Idle bound for metrics-scrape connections (independent of
+/// `--conn-idle-secs`, which is sized for silently-computing devices):
+/// a scraper that never sends its request or never drains the response
+/// is reaped on this much shorter clock.
+const SCRAPE_IDLE: Duration = Duration::from_secs(10);
+
+/// Everything a [`Reactor`] needs from the server assembly.
+pub struct ReactorParams {
+    /// The protocol listener (the reactor makes it nonblocking).
+    pub listener: TcpListener,
+    /// Optional metrics-scrape listener riding the same poll loop.
+    pub metrics_listener: Option<TcpListener>,
+    /// Accept gate: protocol connections beyond this are refused with a
+    /// `max_conns` error line (`conns_rejected_total`).
+    pub max_conns: usize,
+    /// Close connections with nothing in flight and no bytes moved for
+    /// this long (zero disables; `conns_timed_out`).
+    pub idle_timeout: Duration,
+    /// Whether `hello` may grant binary framing.
+    pub binary_allowed: bool,
+    /// The executor pool's job queue.
+    pub job_tx: SyncSender<Job>,
+    /// Metrics hub (front-end counters + the scrape document).
+    pub hub: Arc<MetricsHub>,
+    /// Session table (scrape document's `open_sessions`).
+    pub sessions: Arc<SharedSessionTable>,
+    /// Cooperative shutdown flag, checked every tick.
+    pub stop: Arc<AtomicBool>,
+}
+
+struct Slot {
+    gen: u32,
+    conn: Option<Conn>,
+}
+
+/// The poll-based front-end. Construct with [`Reactor::new`], then call
+/// [`Reactor::run`] on a dedicated thread.
+pub struct Reactor {
+    listener: TcpListener,
+    metrics_listener: Option<TcpListener>,
+    max_conns: usize,
+    idle_timeout: Duration,
+    binary_allowed: bool,
+    job_tx: SyncSender<Job>,
+    router: Arc<ReplyRouter>,
+    waker: Arc<Waker>,
+    front: Arc<Metrics>,
+    hub: Arc<MetricsHub>,
+    sessions: Arc<SharedSessionTable>,
+    stop: Arc<AtomicBool>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    /// Live protocol connections (the `max_conns` gate's denominator —
+    /// scrape connections have their own bound and don't count here).
+    proto_open: usize,
+    /// Live metrics-scrape connections (bounded by [`METRICS_CONN_CAP`]).
+    metrics_open: usize,
+}
+
+impl Reactor {
+    pub fn new(params: ReactorParams) -> io::Result<Reactor> {
+        let waker = Arc::new(Waker::new()?);
+        let wake = Arc::clone(&waker);
+        let router = Arc::new(ReplyRouter::new(Box::new(move || wake.wake())));
+        let front = params.hub.front();
+        Ok(Reactor {
+            listener: params.listener,
+            metrics_listener: params.metrics_listener,
+            max_conns: params.max_conns.max(1),
+            idle_timeout: params.idle_timeout,
+            binary_allowed: params.binary_allowed,
+            job_tx: params.job_tx,
+            router,
+            waker,
+            front,
+            hub: params.hub,
+            sessions: params.sessions,
+            stop: params.stop,
+            slots: Vec::new(),
+            free: Vec::new(),
+            proto_open: 0,
+            metrics_open: 0,
+        })
+    }
+
+    /// The event loop. Returns when the stop flag is set; every
+    /// connection is dropped (workers drain what is already queued and
+    /// their late replies route to nobody).
+    pub fn run(mut self) {
+        if self.listener.set_nonblocking(true).is_err() {
+            return;
+        }
+        if let Some(l) = &self.metrics_listener {
+            if l.set_nonblocking(true).is_err() {
+                self.metrics_listener = None;
+            }
+        }
+        let mut fds: Vec<PollFd> = Vec::new();
+        let mut conn_fds: Vec<(usize, u32, RawFd)> = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) {
+            // interest set: waker, listeners, then one entry per live conn
+            fds.clear();
+            conn_fds.clear();
+            fds.push(PollFd::new(self.waker.fd(), POLLIN));
+            fds.push(PollFd::new(self.listener.as_raw_fd(), POLLIN));
+            if let Some(l) = &self.metrics_listener {
+                fds.push(PollFd::new(l.as_raw_fd(), POLLIN));
+            }
+            let base = fds.len();
+            let mut outbox_bytes = 0u64;
+            for (slot, s) in self.slots.iter().enumerate() {
+                if let Some(c) = &s.conn {
+                    outbox_bytes += c.outbox.bytes() as u64;
+                    let mut events = 0i16;
+                    if c.wants_read(OUTBOX_PAUSE_BYTES) {
+                        events |= POLLIN;
+                    }
+                    if c.wants_write() {
+                        events |= POLLOUT;
+                    }
+                    fds.push(PollFd::new(c.stream.as_raw_fd(), events));
+                    conn_fds.push((slot, s.gen, c.stream.as_raw_fd()));
+                }
+            }
+            Metrics::set(&self.front.outbox_bytes, outbox_bytes);
+            Metrics::observe_peak(&self.front.outbox_bytes_peak, outbox_bytes);
+            if poll_fds(&mut fds, TICK_MS).is_err() {
+                // should be unreachable (we own every fd); don't spin
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            // completions first: routed replies free connections to read
+            // their next pipelined request in this same tick
+            self.waker.drain();
+            for (token, reply) in self.router.drain() {
+                self.route(token, reply);
+            }
+            if fds[1].ready() {
+                self.accept_proto();
+            }
+            if self.metrics_listener.is_some() && fds[2].ready() {
+                self.accept_metrics();
+            }
+            for (&(slot, gen, fd), pfd) in conn_fds.iter().zip(&fds[base..]) {
+                if !pfd.ready() {
+                    continue;
+                }
+                // The slot may have been closed — and even reused by an
+                // accept — while routing completions above, and the
+                // kernel hands a fresh socket the lowest free fd number,
+                // so the fd alone can collide with the dead conn's.
+                // The generation (bumped on every release) is the
+                // authoritative identity; stale readiness is dropped.
+                let live = match self.slots.get(slot) {
+                    Some(s) => {
+                        s.gen == gen
+                            && s.conn.as_ref().map(|c| c.stream.as_raw_fd()) == Some(fd)
+                    }
+                    None => false,
+                };
+                if !live {
+                    continue;
+                }
+                if pfd.broken() {
+                    if let Some(conn) = self.slots[slot].conn.take() {
+                        self.release(slot, conn, false);
+                    }
+                    continue;
+                }
+                self.drive(slot, pfd.readable());
+            }
+            self.sweep_idle();
+        }
+    }
+
+    /// Route one worker completion to its connection's outbox (dropped
+    /// if the connection died in the meantime — generation mismatch).
+    fn route(&mut self, token: u64, reply: WireReply) {
+        let slot = (token >> 32) as usize;
+        let gen = token as u32;
+        let stale = match self.slots.get(slot) {
+            Some(s) => s.gen != gen || s.conn.is_none(),
+            None => true,
+        };
+        if stale {
+            return;
+        }
+        {
+            let conn = self.slots[slot].conn.as_mut().expect("checked live above");
+            conn.in_flight = conn.in_flight.saturating_sub(1);
+            conn.last_activity = Instant::now();
+            let bytes = reply_bytes(reply, conn.binary);
+            conn.outbox.push(bytes);
+        }
+        // flush now, and parse any next request already buffered
+        self.drive(slot, false);
+    }
+
+    fn accept_proto(&mut self) {
+        loop {
+            let stream = match self.listener.accept() {
+                Ok((s, _)) => s,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            };
+            // request/response protocol: Nagle + delayed-ACK adds
+            // ~40-200 ms per round trip without this
+            let _ = stream.set_nodelay(true);
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            if self.proto_open >= self.max_conns {
+                // refuse loudly (best effort on a fresh socket — its send
+                // buffer is empty) instead of letting the device hang in
+                // the backlog
+                Metrics::inc(&self.front.conns_rejected_total);
+                let mut refusal = Vec::new();
+                let _ = write_frame(
+                    &mut refusal,
+                    &err_resp("max_conns", "connection limit reached").to_line(),
+                );
+                let mut stream = stream;
+                let _ = stream.write_all(&refusal);
+                continue;
+            }
+            Metrics::inc(&self.front.conns_accepted_total);
+            let open = Metrics::gauge_inc(&self.front.conns_open);
+            Metrics::observe_peak(&self.front.conns_open_peak, open);
+            self.insert(Conn::new(stream, ConnKind::Proto));
+        }
+    }
+
+    fn accept_metrics(&mut self) {
+        // drain the listener first, then register: the listener borrow
+        // must not overlap the slab mutations
+        let mut accepted = Vec::new();
+        if let Some(listener) = &self.metrics_listener {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => accepted.push(stream),
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+        for stream in accepted {
+            if stream.set_nonblocking(true).is_err() || self.metrics_open >= METRICS_CONN_CAP {
+                continue;
+            }
+            // the response is queued at accept; the conn closes once it
+            // is flushed AND the scraper's request bytes arrived (see
+            // `step` — closing with the request unread would RST)
+            let mut conn = Conn::new(stream, ConnKind::Metrics);
+            conn.outbox.push(self.scrape_response());
+            let slot = self.insert(conn);
+            // deliver immediately; most scrapers are one shot
+            self.drive(slot, true);
+        }
+    }
+
+    fn insert(&mut self, conn: Conn) -> usize {
+        match conn.kind {
+            ConnKind::Proto => self.proto_open += 1,
+            ConnKind::Metrics => self.metrics_open += 1,
+        }
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(Slot { gen: 0, conn: None });
+                self.slots.len() - 1
+            }
+        };
+        self.slots[slot].conn = Some(conn);
+        slot
+    }
+
+    /// Run one connection's state machine: optionally read, parse +
+    /// dispatch while idle, flush. Closes the connection on EOF, I/O
+    /// error, or a drained `closing` outbox.
+    fn drive(&mut self, slot: usize, readable: bool) {
+        let Some(mut conn) = self.slots.get_mut(slot).and_then(|s| s.conn.take()) else {
+            return;
+        };
+        let token = ((slot as u64) << 32) | self.slots[slot].gen as u64;
+        if self.step(&mut conn, token, readable) {
+            self.slots[slot].conn = Some(conn);
+        } else {
+            self.release(slot, conn, false);
+        }
+    }
+
+    /// The state-machine body; `true` keeps the connection.
+    fn step(&mut self, conn: &mut Conn, token: u64, readable: bool) -> bool {
+        if readable && conn.fill().is_err() {
+            return false;
+        }
+        if conn.kind == ConnKind::Metrics {
+            // scrape input is irrelevant; never let it accumulate
+            conn.discard_input();
+        }
+        while conn.kind == ConnKind::Proto && !conn.closing && conn.in_flight == 0 {
+            match conn.next_frame() {
+                Ok(Some(frame)) => self.dispatch(conn, token, frame),
+                Ok(None) => break,
+                Err(e) => {
+                    // mirror the threaded front-end: answer bad_frame,
+                    // then close once the reply is out
+                    Metrics::inc(&self.front.errors_total);
+                    conn.outbox.push(response_bytes(&err_resp("bad_frame", &e.to_string())));
+                    conn.closing = true;
+                }
+            }
+        }
+        if conn.flush().is_err() {
+            return false;
+        }
+        if conn.kind == ConnKind::Metrics {
+            // a scrape closes once the response is flushed AND the
+            // request has arrived (or the peer is gone) — closing with
+            // the request still in flight would leave it unread and the
+            // resulting RST could destroy the response on real networks
+            return !(conn.outbox.is_empty() && (conn.saw_input || conn.peer_eof));
+        }
+        if conn.closing && conn.outbox.is_empty() {
+            return false;
+        }
+        // peer EOF closes only once everything it sent was served: no
+        // reply in flight, no unflushed bytes, and no complete frame
+        // left (the loop above consumed them) — a BufReader-backed
+        // connection thread drains its buffer the same way before it
+        // notices the close
+        if conn.peer_eof && conn.in_flight == 0 && conn.outbox.is_empty() {
+            return false;
+        }
+        true
+    }
+
+    /// Handle one parsed frame: connection-level traffic (negotiation,
+    /// framing errors) is answered right here; everything else becomes a
+    /// routed job for the executor pool.
+    fn dispatch(&mut self, conn: &mut Conn, token: u64, frame: Frame) {
+        // a binary request frame is only valid after a granted hello —
+        // the server must not silently accept what it did not grant
+        if matches!(frame, Frame::Binary(_)) && !conn.binary {
+            Metrics::inc(&self.front.errors_total);
+            conn.outbox.push(response_bytes(&err_resp(
+                "bad_frame",
+                "binary frame before negotiation (send hello first)",
+            )));
+            return;
+        }
+        let req = match Request::from_frame(&frame) {
+            Ok(r) => r,
+            Err(e) => {
+                Metrics::inc(&self.front.errors_total);
+                conn.outbox.push(response_bytes(&err_resp("bad_request", &e.to_string())));
+                return;
+            }
+        };
+        // framing negotiation is connection state — answered here, never
+        // queued (the hello reply itself is always a JSON frame)
+        if let Request::Hello(h) = &req {
+            Metrics::inc(&self.front.requests_total);
+            conn.binary = h.binary_frames && self.binary_allowed;
+            conn.outbox
+                .push(response_bytes(&Response::Hello(HelloReply { binary_frames: conn.binary })));
+            return;
+        }
+        match self.job_tx.try_send(Job::routed(req, token, Arc::clone(&self.router))) {
+            Ok(()) => conn.in_flight += 1,
+            Err(TrySendError::Full(_)) => {
+                Metrics::inc(&self.front.shed_total);
+                conn.outbox.push(response_bytes(&err_resp(
+                    "overloaded",
+                    "admission control: job queue full",
+                )));
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                conn.outbox.push(response_bytes(&err_resp("shutdown", "server stopping")));
+                conn.closing = true;
+            }
+        }
+    }
+
+    /// Close connections with nothing in flight and no traffic for
+    /// their idle bound: `idle_timeout` for protocol peers (slow-loris,
+    /// half-open devices; zero disables), the fixed [`SCRAPE_IDLE`] for
+    /// metrics scrapes that never send or never drain.
+    fn sweep_idle(&mut self) {
+        let now = Instant::now();
+        let expired: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, s)| {
+                let c = s.conn.as_ref()?;
+                if c.in_flight != 0 {
+                    return None;
+                }
+                let limit = match c.kind {
+                    ConnKind::Metrics => SCRAPE_IDLE,
+                    ConnKind::Proto => {
+                        if self.idle_timeout.is_zero() {
+                            return None;
+                        }
+                        self.idle_timeout
+                    }
+                };
+                (now.duration_since(c.last_activity) >= limit).then_some(slot)
+            })
+            .collect();
+        for slot in expired {
+            if let Some(conn) = self.slots[slot].conn.take() {
+                self.release(slot, conn, true);
+            }
+        }
+    }
+
+    /// Bookkeeping for a closed connection: bump the slot generation so
+    /// in-flight replies go nowhere, recycle the slot, drop the socket.
+    fn release(&mut self, slot: usize, conn: Conn, timed_out: bool) {
+        match conn.kind {
+            ConnKind::Proto => {
+                self.proto_open -= 1;
+                Metrics::gauge_dec(&self.front.conns_open);
+                if timed_out {
+                    Metrics::inc(&self.front.conns_timed_out);
+                }
+            }
+            ConnKind::Metrics => self.metrics_open -= 1,
+        }
+        self.slots[slot].gen = self.slots[slot].gen.wrapping_add(1);
+        self.free.push(slot);
+        drop(conn);
+    }
+
+    /// The metrics scrape document (shared with the threaded fallback —
+    /// one source of truth for the exposition format).
+    fn scrape_response(&self) -> Vec<u8> {
+        self.hub.scrape_http_response(self.sessions.len())
+    }
+}
+
+fn err_resp(code: &str, message: &str) -> Response {
+    Response::Error(ErrorReply { code: code.into(), message: message.into() })
+}
+
+/// Serialize a response in JSON-lines framing (connection-level replies
+/// are always JSON, exactly like the threaded front-end's).
+fn response_bytes(resp: &Response) -> Vec<u8> {
+    let mut buf = Vec::new();
+    let _ = write_frame(&mut buf, &resp.to_line());
+    buf
+}
+
+/// Serialize one worker reply in the connection's negotiated framing —
+/// the nonblocking twin of the threaded front-end's `write_reply`, and
+/// byte-identical to it: segment replies splice the shared encoded body.
+pub fn reply_bytes(reply: WireReply, binary: bool) -> Vec<u8> {
+    let mut buf = Vec::new();
+    let _ = match reply {
+        WireReply::Msg(resp) => write_frame(&mut buf, &resp.to_line()),
+        WireReply::Segment(s) => {
+            if binary {
+                write_binary_frame(
+                    &mut buf,
+                    &s.body.binary_header(s.session, s.objective),
+                    s.body.blob(),
+                )
+            } else {
+                write_frame(&mut buf, &s.body.json_line(s.session, s.objective))
+            }
+        }
+    };
+    buf
+}

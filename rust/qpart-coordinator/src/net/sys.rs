@@ -1,0 +1,171 @@
+//! Thin readiness primitives for the reactor: a `poll(2)` wrapper over
+//! raw fds and a self-wake channel, both built on std + one libc symbol
+//! (no mio/libc crates — the workspace stays dependency-free).
+//!
+//! `poll(2)` is the portable-unix readiness syscall: level-triggered, no
+//! registration state in the kernel, one array of `(fd, interest)` per
+//! call. At coordinator scale (thousands of connections, one reactor
+//! thread) the O(n) fd scan per wakeup is noise next to inference work,
+//! and level-triggering keeps the state machine simple — a connection
+//! with buffered input or a non-empty outbox is simply polled again next
+//! tick.
+//!
+//! The [`Waker`] exists because worker threads finish jobs while the
+//! reactor is parked inside `poll`: pushing a completion must interrupt
+//! the park. It is a connected nonblocking UDP socket pair on loopback —
+//! `wake()` sends a one-byte datagram to the receive socket whose fd the
+//! reactor polls for readability. A full socket buffer just means wakes
+//! are already pending, so dropped datagrams are harmless by
+//! construction.
+
+use std::io;
+use std::net::UdpSocket;
+use std::os::raw::c_int;
+use std::os::unix::io::{AsRawFd, RawFd};
+
+/// `nfds_t`: `unsigned long` on Linux, `unsigned int` on the BSDs and
+/// macOS — the extern signature must match the target's ABI type, not
+/// just something register-compatible.
+#[cfg(target_os = "linux")]
+type Nfds = std::os::raw::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type Nfds = std::os::raw::c_uint;
+
+/// One entry of the `poll(2)` fd array (`struct pollfd`).
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    pub fd: RawFd,
+    pub events: i16,
+    pub revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: RawFd, events: i16) -> PollFd {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    /// Any readiness at all (including error/hang-up, which the kernel
+    /// reports regardless of the requested interest set).
+    pub fn ready(&self) -> bool {
+        self.revents != 0
+    }
+
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLHUP | POLLERR) != 0
+    }
+
+    pub fn writable(&self) -> bool {
+        self.revents & POLLOUT != 0
+    }
+
+    /// The fd is dead or was never valid: close, don't retry.
+    pub fn broken(&self) -> bool {
+        self.revents & (POLLERR | POLLNVAL) != 0
+    }
+}
+
+// Identical values on Linux and the BSDs/macOS.
+pub const POLLIN: i16 = 0x001;
+pub const POLLOUT: i16 = 0x004;
+pub const POLLERR: i16 = 0x008;
+pub const POLLHUP: i16 = 0x010;
+pub const POLLNVAL: i16 = 0x020;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: Nfds, timeout: c_int) -> c_int;
+}
+
+/// Block until at least one fd is ready or `timeout_ms` elapses
+/// (`0` = return immediately, negative = wait forever). Returns how many
+/// entries have non-zero `revents`. `EINTR` retries internally.
+pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    loop {
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as Nfds, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+/// Cross-thread wakeup for a reactor parked in [`poll_fds`].
+#[derive(Debug)]
+pub struct Waker {
+    tx: UdpSocket,
+    rx: UdpSocket,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        let rx = UdpSocket::bind("127.0.0.1:0")?;
+        rx.set_nonblocking(true)?;
+        let tx = UdpSocket::bind("127.0.0.1:0")?;
+        tx.set_nonblocking(true)?;
+        tx.connect(rx.local_addr()?)?;
+        Ok(Waker { tx, rx })
+    }
+
+    /// Nudge the reactor (safe from any thread; never blocks). A send
+    /// that fails because the buffer is full means wakes are already
+    /// pending — exactly the state we wanted.
+    pub fn wake(&self) {
+        let _ = self.tx.send(&[1u8]);
+    }
+
+    /// Swallow every pending wake datagram (reactor thread, after poll).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 16];
+        while self.rx.recv(&mut buf).is_ok() {}
+    }
+
+    /// The fd the reactor registers with `POLLIN` interest.
+    pub fn fd(&self) -> RawFd {
+        self.rx.as_raw_fd()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poll_times_out_with_nothing_ready() {
+        let waker = Waker::new().unwrap();
+        let mut fds = [PollFd::new(waker.fd(), POLLIN)];
+        let n = poll_fds(&mut fds, 10).unwrap();
+        assert_eq!(n, 0);
+        assert!(!fds[0].ready());
+    }
+
+    #[test]
+    fn wake_makes_the_fd_readable_until_drained() {
+        let waker = Waker::new().unwrap();
+        waker.wake();
+        waker.wake(); // coalescing duplicates is fine
+        let mut fds = [PollFd::new(waker.fd(), POLLIN)];
+        let n = poll_fds(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].readable());
+        waker.drain();
+        let mut fds = [PollFd::new(waker.fd(), POLLIN)];
+        assert_eq!(poll_fds(&mut fds, 10).unwrap(), 0, "drained waker is quiet");
+    }
+
+    #[test]
+    fn poll_reports_readable_tcp_data() {
+        use std::io::Write;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut client = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let mut fds = [PollFd::new(server_side.as_raw_fd(), POLLIN)];
+        assert_eq!(poll_fds(&mut fds, 10).unwrap(), 0, "no bytes yet");
+        client.write_all(b"x").unwrap();
+        let mut fds = [PollFd::new(server_side.as_raw_fd(), POLLIN)];
+        assert_eq!(poll_fds(&mut fds, 1000).unwrap(), 1);
+        assert!(fds[0].readable());
+    }
+}

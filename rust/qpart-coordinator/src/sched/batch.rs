@@ -22,14 +22,90 @@ use std::time::{Duration, Instant};
 #[derive(Debug)]
 pub struct Job {
     pub req: Request,
-    pub reply_tx: SyncSender<WireReply>,
-    /// When the connection thread enqueued the job (→ `queue_wait`).
+    pub reply: ReplySink,
+    /// When the front-end enqueued the job (→ `queue_wait`).
     pub enqueued: Instant,
 }
 
 impl Job {
+    /// A job replying over a dedicated channel (thread-per-connection
+    /// front-end, in-process callers, tests).
     pub fn new(req: Request, reply_tx: SyncSender<WireReply>) -> Job {
-        Job { req, reply_tx, enqueued: Instant::now() }
+        Job { req, reply: ReplySink::Channel(reply_tx), enqueued: Instant::now() }
+    }
+
+    /// A job replying through a [`ReplyRouter`] completion queue (the
+    /// evented front-end: `token` names the connection the reactor
+    /// routes the reply back to).
+    pub fn routed(req: Request, token: u64, router: Arc<ReplyRouter>) -> Job {
+        Job { req, reply: ReplySink::Routed { token, router }, enqueued: Instant::now() }
+    }
+}
+
+/// Where a worker sends a finished [`WireReply`].
+///
+/// The executor pool is agnostic to the front-end's I/O model: a
+/// thread-per-connection front-end blocks on a per-request channel, while
+/// the poll-based reactor cannot block anywhere — its replies go onto a
+/// shared completion queue ([`ReplyRouter`]) tagged with the connection
+/// token, and the router's wake hook nudges the reactor out of `poll`.
+#[derive(Clone, Debug)]
+pub enum ReplySink {
+    /// Dedicated per-request channel; the receiver blocks until the
+    /// reply arrives (connection threads, in-process callers, tests).
+    Channel(SyncSender<WireReply>),
+    /// Completion-queue routing for the evented front-end.
+    Routed { token: u64, router: Arc<ReplyRouter> },
+}
+
+impl ReplySink {
+    /// Deliver the reply. Delivery is best-effort in both flavors: a
+    /// hung-up channel or a since-closed connection drops the reply,
+    /// exactly like a connection thread whose peer vanished.
+    pub fn send(&self, reply: WireReply) {
+        match self {
+            ReplySink::Channel(tx) => {
+                let _ = tx.send(reply);
+            }
+            ReplySink::Routed { token, router } => router.push(*token, reply),
+        }
+    }
+}
+
+/// The completion queue between the executor pool and an evented
+/// front-end: workers [`push`](ReplyRouter::push) finished replies tagged
+/// with their connection token; the reactor [`drain`](ReplyRouter::drain)s
+/// them from its event loop and stamps each into the owning connection's
+/// outbox. `wake` is called after every push so a reactor parked in
+/// `poll(2)` learns about completions immediately (it must be cheap,
+/// non-blocking, and safe from any worker thread).
+pub struct ReplyRouter {
+    queue: Mutex<Vec<(u64, WireReply)>>,
+    wake: Box<dyn Fn() + Send + Sync>,
+}
+
+impl std::fmt::Debug for ReplyRouter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let depth = self.queue.lock().map(|q| q.len()).unwrap_or(0);
+        f.debug_struct("ReplyRouter").field("queued", &depth).finish()
+    }
+}
+
+impl ReplyRouter {
+    pub fn new(wake: Box<dyn Fn() + Send + Sync>) -> ReplyRouter {
+        ReplyRouter { queue: Mutex::new(Vec::new()), wake }
+    }
+
+    /// Queue one finished reply for connection `token` and wake the
+    /// reactor.
+    pub fn push(&self, token: u64, reply: WireReply) {
+        self.queue.lock().unwrap().push((token, reply));
+        (self.wake)();
+    }
+
+    /// Take every queued completion (reactor thread).
+    pub fn drain(&self) -> Vec<(u64, WireReply)> {
+        std::mem::take(&mut *self.queue.lock().unwrap())
     }
 }
 
@@ -329,6 +405,25 @@ mod tests {
             "non-infer batch waited out the window: {:?}",
             t0.elapsed()
         );
+    }
+
+    #[test]
+    fn reply_router_queues_wakes_and_drains() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let wakes = Arc::new(AtomicUsize::new(0));
+        let w = Arc::clone(&wakes);
+        let router = Arc::new(ReplyRouter::new(Box::new(move || {
+            w.fetch_add(1, Ordering::SeqCst);
+        })));
+        let sink = ReplySink::Routed { token: 42, router: Arc::clone(&router) };
+        sink.send(WireReply::Msg(Response::Pong));
+        router.push(7, WireReply::Msg(Response::Pong));
+        assert_eq!(wakes.load(Ordering::SeqCst), 2, "every push wakes the reactor");
+        let drained = router.drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].0, 42);
+        assert_eq!(drained[1].0, 7);
+        assert!(router.drain().is_empty(), "drain takes everything");
     }
 
     #[test]

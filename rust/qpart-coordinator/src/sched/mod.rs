@@ -32,5 +32,7 @@
 pub mod batch;
 pub mod cache;
 
-pub use batch::{drain_batch, BatchPolicy, DrainOutcome, Job, SegmentReply, WireReply};
+pub use batch::{
+    drain_batch, BatchPolicy, DrainOutcome, Job, ReplyRouter, ReplySink, SegmentReply, WireReply,
+};
 pub use cache::{EncodedReplyCache, SegmentKey};

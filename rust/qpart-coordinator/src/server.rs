@@ -2,24 +2,31 @@
 //! bounded job queue, and a configurable **executor pool** of inference
 //! workers fed by the batch-aware serving dataplane ([`crate::sched`]).
 //!
-//! Topology: N connection threads (one per accepted socket) parse frames
-//! and submit [`Job`]s into a **bounded** channel — the admission-control
-//! point: when the queue is full the request is shed immediately with an
-//! `overloaded` error instead of growing latency unboundedly. `workers`
-//! inference threads each own a full [`Service`] (Algorithm 1 tables +
-//! PJRT executor — PJRT clients are single-device and not `Send`, so
-//! per-worker ownership is the honest parallelism model) and **drain the
-//! queue in batches** ([`crate::sched::drain_batch`]): same-(model,
-//! accuracy level, partition) `infer` requests in a batch are planned and
-//! encoded once, and the shared [`qpart_proto::EncodedSegmentBody`] fans
-//! out to every waiting connection. One `Arc<Bundle>` backs the whole
-//! pool (a single resident copy of the weights), one
-//! [`EncodedReplyCache`] keeps encoded replies across batches, and a GC
-//! thread expires sessions whose device never uploaded. Sessions live in
-//! one sharded [`SharedSessionTable`] so the two protocol phases may be
-//! handled by different workers; per-worker metrics are aggregated by a
+//! Topology: the front-end (by default the poll-based **reactor**,
+//! [`crate::net`]) parses frames and submits [`Job`]s into a **bounded**
+//! channel — the admission-control point: when the queue is full the
+//! request is shed immediately with an `overloaded` error instead of
+//! growing latency unboundedly. `workers` inference threads each own a
+//! full [`Service`] (Algorithm 1 tables + PJRT executor — PJRT clients
+//! are single-device and not `Send`, so per-worker ownership is the
+//! honest parallelism model) and **drain the queue in batches**
+//! ([`crate::sched::drain_batch`]): same-(model, accuracy level,
+//! partition) `infer` requests in a batch are planned and encoded once,
+//! and the shared [`qpart_proto::EncodedSegmentBody`] fans out to every
+//! waiting connection. One `Arc<Bundle>` backs the whole pool (a single
+//! resident copy of the weights), one [`EncodedReplyCache`] keeps
+//! encoded replies across batches, and a GC thread expires sessions
+//! whose device never uploaded. Sessions live in one sharded
+//! [`SharedSessionTable`] so the two protocol phases may be handled by
+//! different workers; per-worker metrics are aggregated by a
 //! [`MetricsHub`] into one logical [`MetricsSnapshot`].
 //!
+//! Front-ends ([`Frontend`]): the reactor holds every accepted device as
+//! a state machine on one thread — connection count is gated by
+//! `max_conns`, not by OS threads — while [`Frontend::Threaded`] keeps
+//! the classic thread-per-connection loop as the comparison baseline
+//! (and the non-unix fallback). Both speak the identical wire protocol;
+//! `bench-serve` checks reply byte-identity between them. Either way,
 //! `workers` mirrors the simulator's `FleetConfig::server_slots` knob
 //! (qpart-sim), so modeled and live serving share one parallelism model.
 
@@ -31,7 +38,7 @@ use crate::session::SharedSessionTable;
 use qpart_proto::frame::{read_any_frame, write_binary_frame, write_frame, Frame, FrameError};
 use qpart_proto::messages::{ErrorReply, HelloReply, Request, Response};
 use qpart_runtime::{Bundle, CompileCache};
-use std::io::BufReader;
+use std::io::{BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
@@ -78,6 +85,30 @@ use std::time::Duration;
 ///   fallback for peers that never negotiate). The grant is symmetric:
 ///   segment replies go out as binary frames and activation uploads may
 ///   come in as binary request frames.
+/// * `frontend` — how connections are carried: [`Frontend::Reactor`]
+///   (default) multiplexes every accepted socket over one poll-based
+///   event loop, so accepted-device count is bounded by `max_conns`
+///   rather than by OS threads; [`Frontend::Threaded`] is the classic
+///   thread-per-connection loop (baseline / non-unix fallback). The wire
+///   protocol is identical either way.
+/// * `max_conns` — accept gate: protocol connections beyond this are
+///   refused with a `max_conns` error line and counted in
+///   `conns_rejected_total` (they never consume server state).
+/// * `conn_idle` — idle/slow-client timeout: a connection with no
+///   request in flight and no byte moved for this long is closed
+///   (`conns_timed_out`). Defuses slow-loris and half-open peers. Zero
+///   disables. The default matches `session_ttl` (600 s): a device may
+///   legitimately go quiet for its whole device-side compute window
+///   between phase 1 and phase 2, so the connection bound must not be
+///   tighter than the session bound.
+/// * `metrics_listen` — optional second listen address serving a
+///   plaintext Prometheus-style scrape of the stats document (the
+///   pull-only wire `stats` request stays; this is for standard
+///   scrapers). Rides the reactor as a second listener socket; under
+///   [`Frontend::Threaded`] a dedicated acceptor thread answers each
+///   scrape inline. Both render through one shared helper
+///   (`MetricsHub::scrape_http_response`), so the output cannot
+///   diverge between front-ends.
 /// * `warm_cache` — pre-warm the shared caches at startup: one worker
 ///   encodes the most-likely `(model, level, partition)` reply keys
 ///   (Algorithm 1 enumerates them; Algorithm 2 under the paper-default
@@ -110,6 +141,14 @@ pub struct ServerConfig {
     /// Allow binary-frame negotiation (symmetric: segment replies
     /// downlink AND activation uploads uplink).
     pub binary_frames: bool,
+    /// Connection-handling model (reactor by default).
+    pub frontend: Frontend,
+    /// Accept gate: refuse protocol connections beyond this many.
+    pub max_conns: usize,
+    /// Idle/slow-client timeout (zero = never time out).
+    pub conn_idle: Duration,
+    /// Optional plaintext metrics-scrape listen address.
+    pub metrics_listen: Option<String>,
     /// Pre-warm the encoded-reply and compile caches at startup: one
     /// worker encodes the most-likely reply keys and pre-builds their
     /// phase-2 plans before the server accepts traffic.
@@ -135,6 +174,12 @@ impl Default for ServerConfig {
             batch_max: 32,
             cache_bytes: 64 << 20,
             binary_frames: true,
+            frontend: Frontend::Reactor,
+            max_conns: 4096,
+            // matches session_ttl: a session-holding device may be
+            // silently computing for up to the session's lifetime
+            conn_idle: Duration::from_secs(600),
+            metrics_listen: None,
             warm_cache: false,
             host_fallback: false,
             artifacts_dir: "artifacts".into(),
@@ -142,9 +187,25 @@ impl Default for ServerConfig {
     }
 }
 
+/// How the front-end carries accepted connections.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Frontend {
+    /// Poll-based connection reactor ([`crate::net`]): one event-loop
+    /// thread owns every accepted socket as an explicit state machine.
+    /// Accepted-device count scales to `max_conns`, not to OS threads.
+    /// Falls back to [`Frontend::Threaded`] on non-unix targets.
+    Reactor,
+    /// Thread-per-connection (the pre-reactor topology): simple,
+    /// blocking, and capped by OS threads — kept as the behavioral
+    /// baseline the reactor is byte-identical to.
+    Threaded,
+}
+
 /// Handle to a running server (for tests/examples).
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
+    /// Bound address of the metrics-scrape listener, when configured.
+    pub metrics_addr: Option<std::net::SocketAddr>,
     /// Aggregated + per-worker metrics.
     pub hub: Arc<MetricsHub>,
     /// The shared session table (observability in tests/examples).
@@ -158,6 +219,9 @@ pub struct ServerHandle {
     pub decision_cache: Arc<DecisionCache>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    /// Threaded-frontend scrape acceptor (None under the reactor, which
+    /// carries the scrape listener on its own thread).
+    metrics_thread: Option<JoinHandle<()>>,
     gc_thread: Option<JoinHandle<()>>,
     worker_threads: Vec<JoinHandle<()>>,
 }
@@ -166,9 +230,15 @@ impl ServerHandle {
     /// Signal shutdown and join the threads.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // poke the acceptor so it re-checks the stop flag
+        // poke the acceptors so they re-check the stop flag
         let _ = TcpStream::connect(self.addr);
+        if let Some(m) = self.metrics_addr {
+            let _ = TcpStream::connect(m);
+        }
         if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.metrics_thread.take() {
             let _ = t.join();
         }
         if let Some(t) = self.gc_thread.take() {
@@ -328,10 +398,122 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         None
     };
 
-    // Acceptor thread: one connection thread per client.
-    let accept_stop = Arc::clone(&stop);
+    // Optional plaintext metrics-scrape listener (second socket).
+    let metrics_listener = match &cfg.metrics_listen {
+        Some(addr) => Some(
+            TcpListener::bind(addr).map_err(|e| format!("bind metrics {addr}: {e}"))?,
+        ),
+        None => None,
+    };
+    let metrics_addr = match &metrics_listener {
+        Some(l) => Some(l.local_addr().map_err(|e| e.to_string())?),
+        None => None,
+    };
+
+    // Front-end thread: the poll-based reactor by default, or the
+    // thread-per-connection baseline. Identical wire behavior.
+    let (accept_thread, metrics_thread) = spawn_frontend(
+        &cfg,
+        listener,
+        metrics_listener,
+        job_tx,
+        Arc::clone(&hub),
+        Arc::clone(&sessions),
+        Arc::clone(&stop),
+    )?;
+
+    Ok(ServerHandle {
+        addr,
+        metrics_addr,
+        hub,
+        sessions,
+        cache,
+        compile_cache,
+        decision_cache,
+        stop,
+        accept_thread: Some(accept_thread),
+        metrics_thread,
+        gc_thread,
+        worker_threads,
+    })
+}
+
+/// Spawn the configured front-end; returns the front-end thread and,
+/// under the threaded fallback with a scrape listener, the scrape
+/// acceptor thread (both joined by [`ServerHandle::shutdown`]).
+type FrontendThreads = (JoinHandle<()>, Option<JoinHandle<()>>);
+
+fn spawn_frontend(
+    cfg: &ServerConfig,
+    listener: TcpListener,
+    metrics_listener: Option<TcpListener>,
+    job_tx: SyncSender<Job>,
+    hub: Arc<MetricsHub>,
+    sessions: Arc<SharedSessionTable>,
+    stop: Arc<AtomicBool>,
+) -> Result<FrontendThreads, String> {
+    #[cfg(unix)]
+    {
+        if cfg.frontend == Frontend::Reactor {
+            let reactor = crate::net::Reactor::new(crate::net::ReactorParams {
+                listener,
+                metrics_listener,
+                max_conns: cfg.max_conns,
+                idle_timeout: cfg.conn_idle,
+                binary_allowed: cfg.binary_frames,
+                job_tx,
+                hub,
+                sessions,
+                stop,
+            })
+            .map_err(|e| format!("reactor init: {e}"))?;
+            let t = std::thread::Builder::new()
+                .name("qpart-reactor".into())
+                .spawn(move || reactor.run())
+                .map_err(|e| e.to_string())?;
+            return Ok((t, None));
+        }
+    }
     let accept_metrics = hub.front();
     let binary_allowed = cfg.binary_frames;
+    let max_conns = cfg.max_conns.max(1);
+    let conn_idle = cfg.conn_idle;
+    let accept_stop = Arc::clone(&stop);
+    // threaded fallback for the scrape listener: answered inline on the
+    // acceptor thread (scrapes are rare and the document is cheap)
+    let metrics_thread = match metrics_listener {
+        Some(ml) => {
+            let scrape_hub = Arc::clone(&hub);
+            let scrape_sessions = Arc::clone(&sessions);
+            let scrape_stop = Arc::clone(&stop);
+            Some(
+                std::thread::Builder::new()
+                    .name("qpart-metrics-accept".into())
+                    .spawn(move || {
+                        for stream in ml.incoming() {
+                            if scrape_stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            let Ok(mut stream) = stream else { continue };
+                            // read the scraper's request first and drain
+                            // to EOF after replying: closing with unread
+                            // bytes would RST the response off the wire
+                            let _ = stream
+                                .set_read_timeout(Some(Duration::from_millis(500)));
+                            let mut sink = [0u8; 2048];
+                            let _ = stream.read(&mut sink);
+                            let resp =
+                                scrape_hub.scrape_http_response(scrape_sessions.len());
+                            let _ = stream.write_all(&resp);
+                            let _ = stream.shutdown(std::net::Shutdown::Write);
+                            while matches!(stream.read(&mut sink), Ok(n) if n > 0) {}
+                        }
+                    })
+                    .map_err(|e| e.to_string())?,
+            )
+        }
+        None => None,
+    };
     let accept_thread = std::thread::Builder::new()
         .name("qpart-accept".into())
         .spawn(move || {
@@ -346,28 +528,44 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
                 // request/response protocol: Nagle + delayed-ACK adds
                 // ~40-200 ms per round trip without this
                 let _ = stream.set_nodelay(true);
+                // accept gate: same behavior as the reactor's
+                if accept_metrics.conns_open.load(Ordering::Relaxed) >= max_conns as u64 {
+                    Metrics::inc(&accept_metrics.conns_rejected_total);
+                    let resp = Response::Error(ErrorReply {
+                        code: "max_conns".into(),
+                        message: "connection limit reached".into(),
+                    });
+                    let mut stream = stream;
+                    let _ = write_frame(&mut stream, &resp.to_line());
+                    continue;
+                }
+                Metrics::inc(&accept_metrics.conns_accepted_total);
+                let open = Metrics::gauge_inc(&accept_metrics.conns_open);
+                Metrics::observe_peak(&accept_metrics.conns_open_peak, open);
                 let job_tx = job_tx.clone();
                 let metrics = Arc::clone(&accept_metrics);
                 let conn_stop = Arc::clone(&accept_stop);
-                let _ = std::thread::Builder::new().name("qpart-conn".into()).spawn(move || {
-                    connection_loop(stream, job_tx, metrics, conn_stop, binary_allowed)
-                });
+                let spawned =
+                    std::thread::Builder::new().name("qpart-conn".into()).spawn(move || {
+                        connection_loop(
+                            stream,
+                            job_tx,
+                            Arc::clone(&metrics),
+                            conn_stop,
+                            binary_allowed,
+                            conn_idle,
+                        );
+                        Metrics::gauge_dec(&metrics.conns_open);
+                    });
+                if spawned.is_err() {
+                    // thread exhaustion: undo the gauge or the max_conns
+                    // gate would jam shut on phantom connections
+                    Metrics::gauge_dec(&accept_metrics.conns_open);
+                }
             }
         })
         .map_err(|e| e.to_string())?;
-
-    Ok(ServerHandle {
-        addr,
-        hub,
-        sessions,
-        cache,
-        compile_cache,
-        decision_cache,
-        stop,
-        accept_thread: Some(accept_thread),
-        gc_thread,
-        worker_threads,
-    })
+    Ok((accept_thread, metrics_thread))
 }
 
 /// Serialize one reply in the connection's negotiated framing. Segment
@@ -400,7 +598,14 @@ fn connection_loop(
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     binary_allowed: bool,
+    conn_idle: Duration,
 ) {
+    // idle/slow-client timeout via the socket read timeout: the blocking
+    // twin of the reactor's idle sweep (a request in flight never trips
+    // it — this thread is then parked on the reply channel, not reading)
+    if conn_idle > Duration::ZERO {
+        let _ = stream.set_read_timeout(Some(conn_idle));
+    }
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -416,6 +621,15 @@ fn connection_loop(
         let frame = match read_any_frame(&mut reader) {
             Ok(f) => f,
             Err(FrameError::Closed) => break,
+            Err(FrameError::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                Metrics::inc(&metrics.conns_timed_out);
+                break;
+            }
             Err(e) => {
                 Metrics::inc(&metrics.errors_total);
                 let resp = Response::Error(ErrorReply {

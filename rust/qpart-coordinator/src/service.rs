@@ -24,7 +24,7 @@
 
 use crate::decision::{DecisionCache, DecisionKey, ProfileBucket};
 use crate::metrics::{Metrics, MetricsHub};
-use crate::sched::{EncodedReplyCache, Job, SegmentKey, SegmentReply, WireReply};
+use crate::sched::{EncodedReplyCache, Job, ReplySink, SegmentKey, SegmentReply, WireReply};
 use crate::session::{Session, SharedSessionTable};
 use qpart_core::channel::Channel;
 use qpart_core::cost::{CostModel, DeviceProfile, ServerProfile, TradeoffWeights};
@@ -38,7 +38,6 @@ use qpart_proto::messages::{
     ModelInfo, PatternInfo, Request, Response, ResultReply, SegmentBlob, SimulateRequest,
 };
 use qpart_runtime::{Bundle, CompileCache, Executor, HostTensor, EVAL_BATCH};
-use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -189,17 +188,17 @@ impl Service {
         }
         Metrics::inc(&self.metrics.batches_total);
         let dequeued = Instant::now();
-        let mut infers: Vec<(InferRequest, SyncSender<WireReply>)> = Vec::new();
-        let mut uploads: Vec<(ActivationUpload, SyncSender<WireReply>)> = Vec::new();
+        let mut infers: Vec<(InferRequest, ReplySink)> = Vec::new();
+        let mut uploads: Vec<(ActivationUpload, ReplySink)> = Vec::new();
         for job in jobs {
             let wait = dequeued.saturating_duration_since(job.enqueued);
             self.metrics.queue_wait.observe_us(wait.as_micros() as u64);
             match job.req {
-                Request::Infer(r) => infers.push((r, job.reply_tx)),
-                Request::Activation(a) => uploads.push((a, job.reply_tx)),
+                Request::Infer(r) => infers.push((r, job.reply)),
+                Request::Activation(a) => uploads.push((a, job.reply)),
                 req => {
                     let resp = self.handle(req);
-                    let _ = job.reply_tx.send(WireReply::Msg(resp));
+                    job.reply.send(WireReply::Msg(resp));
                 }
             }
         }
@@ -208,10 +207,10 @@ impl Service {
     }
 
     /// Plan + group + encode-once + fan out (the coalescing core).
-    fn handle_infer_batch(&mut self, jobs: Vec<(InferRequest, SyncSender<WireReply>)>) {
+    fn handle_infer_batch(&mut self, jobs: Vec<(InferRequest, ReplySink)>) {
         // one waiting connection within a group
         struct Pending {
-            tx: SyncSender<WireReply>,
+            tx: ReplySink,
             objective: f64,
         }
         // all same-key requests of this batch: one encode, many replies
@@ -246,7 +245,7 @@ impl Service {
                     self.metrics
                         .handle_latency
                         .observe_us(t_req.elapsed().as_micros() as u64);
-                    let _ = tx.send(WireReply::Msg(resp));
+                    tx.send(WireReply::Msg(resp));
                 }
             }
         }
@@ -269,7 +268,7 @@ impl Service {
                             self.sessions.open(&g.key.0, g.pattern.clone(), boundary.clone());
                         Metrics::inc(&self.metrics.sessions_opened);
                         Metrics::add(&self.metrics.bytes_out, body.wire_bytes());
-                        let _ = p.tx.send(WireReply::Segment(SegmentReply {
+                        p.tx.send(WireReply::Segment(SegmentReply {
                             session,
                             objective: p.objective,
                             body: Arc::clone(&body),
@@ -282,7 +281,7 @@ impl Service {
                     for p in g.pendings {
                         Metrics::inc(&self.metrics.errors_total);
                         self.metrics.handle_latency.observe_us(group_us);
-                        let _ = p.tx.send(WireReply::Msg(resp.clone()));
+                        p.tx.send(WireReply::Msg(resp.clone()));
                     }
                 }
             }
@@ -563,11 +562,11 @@ impl Service {
     /// `(model, partition)`, and row-stack each group into
     /// ⌈rows/EVAL_BATCH⌉ server-segment executions — the uplink mirror of
     /// `handle_infer_batch`'s encode-once coalescing.
-    fn handle_activation_batch(&mut self, uploads: Vec<(ActivationUpload, SyncSender<WireReply>)>) {
+    fn handle_activation_batch(&mut self, uploads: Vec<(ActivationUpload, ReplySink)>) {
         struct Pending {
             session: u64,
             tensor: HostTensor,
-            tx: SyncSender<WireReply>,
+            tx: ReplySink,
         }
         struct Group {
             model: String,
@@ -599,7 +598,7 @@ impl Service {
                     self.metrics
                         .handle_latency
                         .observe_us(t_req.elapsed().as_micros() as u64);
-                    let _ = tx.send(WireReply::Msg(resp));
+                    tx.send(WireReply::Msg(resp));
                 }
             }
         }
@@ -620,7 +619,7 @@ impl Service {
                     Metrics::inc(&self.metrics.errors_total);
                 }
                 self.metrics.handle_latency.observe_us(group_us);
-                let _ = tx.send(WireReply::Msg(resp));
+                tx.send(WireReply::Msg(resp));
             }
         }
     }

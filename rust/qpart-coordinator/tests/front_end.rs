@@ -1,0 +1,325 @@
+//! Front-end integration tests: connection churn, slow-loris timeouts,
+//! the `max_conns` accept gate, the metrics scrape listener, and
+//! reactor-vs-threaded reply identity — no PJRT required (synthetic
+//! bundle, phase-1 traffic plus raw-socket abuse).
+//!
+//! The default front-end is the poll-based reactor (`Frontend::Reactor`),
+//! so every other TCP-level test in this crate soaks it too; this file
+//! covers the behaviors that are *about* the front-end itself.
+
+use qpart_coordinator::client::paper_request;
+use qpart_coordinator::testing::{synthetic_bundle, BlockingConn};
+use qpart_coordinator::{serve, Frontend, ServerConfig};
+use qpart_proto::frame::read_frame;
+use qpart_proto::messages::{HelloRequest, Request, Response};
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Poll `f` until it returns true or `deadline` elapses (the reactor
+/// notices closes/timeouts on its next tick, not synchronously).
+fn wait_until<F: Fn() -> bool>(deadline: Duration, f: F) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    f()
+}
+
+#[test]
+fn accepted_connections_scale_past_the_worker_cap() {
+    let dir = synthetic_bundle("fe-scale");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    // hold many more live connections than workers, all served
+    let clients = 48usize;
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(clients));
+    let mut joins = Vec::new();
+    for _ in 0..clients {
+        let addr = addr.clone();
+        let barrier = std::sync::Arc::clone(&barrier);
+        joins.push(std::thread::spawn(move || {
+            let mut conn = BlockingConn::connect(&addr).unwrap();
+            assert!(matches!(conn.call(&Request::Ping).unwrap(), Response::Pong));
+            // everyone connected at once — the peak is clients-wide
+            barrier.wait();
+            match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+                Response::Segment(r) => assert!(r.session > 0),
+                other => panic!("unexpected {other:?}"),
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let snap = handle.snapshot();
+    assert!(
+        snap.conns_accepted_total >= clients as u64,
+        "accepted {} < {clients}",
+        snap.conns_accepted_total
+    );
+    assert!(
+        snap.conns_open_peak >= clients as u64,
+        "peak {} — connections did not overlap",
+        snap.conns_open_peak
+    );
+    assert!(
+        snap.conns_open_peak > 2,
+        "accepted-connection count must not be capped near the worker count"
+    );
+    assert_eq!(snap.errors_total, 0);
+    // every client dropped: the front-end reaps them all
+    assert!(
+        wait_until(Duration::from_secs(5), || handle.snapshot().conns_open == 0),
+        "conns_open stuck at {}",
+        handle.snapshot().conns_open
+    );
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn many_short_lived_clients_churn_cleanly() {
+    let dir = synthetic_bundle("fe-churn");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+    let rounds = 60usize;
+    for i in 0..rounds {
+        let mut conn = BlockingConn::connect(&addr).unwrap();
+        match conn.call(&Request::Ping).unwrap() {
+            Response::Pong => {}
+            other => panic!("round {i}: unexpected {other:?}"),
+        }
+        // dropped here: connect/serve/close every round
+    }
+    let snap = handle.snapshot();
+    assert!(snap.conns_accepted_total >= rounds as u64);
+    assert_eq!(snap.requests_total, rounds as u64);
+    assert_eq!(snap.errors_total, 0);
+    assert_eq!(snap.conns_rejected_total, 0);
+    assert!(
+        wait_until(Duration::from_secs(5), || handle.snapshot().conns_open == 0),
+        "short-lived connections leaked: conns_open = {}",
+        handle.snapshot().conns_open
+    );
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn slow_loris_and_half_open_clients_are_idle_timed_out() {
+    let dir = synthetic_bundle("fe-loris");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        conn_idle: Duration::from_millis(200),
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    // a slow loris: half a frame, then silence — a connection thread
+    // would be pinned forever, the reactor must time it out
+    let mut loris = TcpStream::connect(&addr).unwrap();
+    loris.write_all(b"{\"type\":\"pi").unwrap();
+    // a half-open peer: connects and never sends a byte
+    let half_open = TcpStream::connect(&addr).unwrap();
+
+    assert!(
+        wait_until(Duration::from_secs(5), || handle.snapshot().conns_timed_out >= 2),
+        "idle sweep never fired: conns_timed_out = {}",
+        handle.snapshot().conns_timed_out
+    );
+    // the server really closed the sockets: reads drain to EOF/reset
+    loris.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut buf = [0u8; 64];
+    match loris.read(&mut buf) {
+        Ok(0) | Err(_) => {}
+        Ok(n) => panic!("loris got {n} unexpected bytes: {:?}", &buf[..n]),
+    }
+    drop(half_open);
+
+    // a live client that keeps talking is NOT timed out
+    let mut conn = BlockingConn::connect(&addr).unwrap();
+    for _ in 0..5 {
+        assert!(matches!(conn.call(&Request::Ping).unwrap(), Response::Pong));
+        std::thread::sleep(Duration::from_millis(60));
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn max_conns_gate_refuses_excess_connections() {
+    let dir = synthetic_bundle("fe-gate");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        max_conns: 2,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    // two registered connections fill the gate (the ping round trips
+    // guarantee the front-end has accepted both)
+    let mut c1 = BlockingConn::connect(&addr).unwrap();
+    let mut c2 = BlockingConn::connect(&addr).unwrap();
+    assert!(matches!(c1.call(&Request::Ping).unwrap(), Response::Pong));
+    assert!(matches!(c2.call(&Request::Ping).unwrap(), Response::Pong));
+
+    // the third is refused loudly: a max_conns error line, then EOF
+    let third = TcpStream::connect(&addr).unwrap();
+    third.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut reader = BufReader::new(third);
+    let line = read_frame(&mut reader).expect("refusal line before close");
+    match Response::from_line(&line).unwrap() {
+        Response::Error(e) => assert_eq!(e.code, "max_conns", "{}", e.message),
+        other => panic!("unexpected {other:?}"),
+    }
+    let snap = handle.snapshot();
+    assert!(snap.conns_rejected_total >= 1);
+    assert_eq!(snap.conns_open, 2, "rejected connection consumed no slot");
+
+    // capacity freed by a close is reusable
+    drop(c2);
+    assert!(
+        wait_until(Duration::from_secs(5), || handle.snapshot().conns_open < 2),
+        "closed connection never released its slot"
+    );
+    let mut c3 = BlockingConn::connect(&addr).unwrap();
+    assert!(matches!(c3.call(&Request::Ping).unwrap(), Response::Pong));
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn metrics_listener_serves_a_prometheus_scrape() {
+    let dir = synthetic_bundle("fe-scrape");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        metrics_listen: Some("127.0.0.1:0".into()),
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let metrics_addr = handle.metrics_addr.expect("metrics listener bound");
+
+    // some traffic so the counters are non-trivial
+    let mut conn = BlockingConn::connect(&handle.addr.to_string()).unwrap();
+    match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+        Response::Segment(_) => {}
+        other => panic!("unexpected {other:?}"),
+    }
+
+    let mut scrape = TcpStream::connect(metrics_addr).unwrap();
+    scrape.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    scrape.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut body = String::new();
+    let _ = scrape.read_to_string(&mut body); // server closes when flushed
+    assert!(body.starts_with("HTTP/1.0 200 OK\r\n"), "{body}");
+    assert!(body.contains("Content-Type: text/plain"), "{body}");
+    for needle in [
+        "qpart_requests_total ",
+        "qpart_conns_open ",
+        "qpart_conns_accepted_total ",
+        "qpart_open_sessions 1",
+    ] {
+        assert!(body.contains(needle), "missing {needle:?} in scrape:\n{body}");
+    }
+    assert!(!body.contains("NaN"), "{body}");
+
+    // the protocol socket still works after scrapes (separate listener)
+    assert!(matches!(conn.call(&Request::Ping).unwrap(), Response::Pong));
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pipelined_frames_on_one_connection_are_answered_in_order() {
+    let dir = synthetic_bundle("fe-pipeline");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let mut stream = TcpStream::connect(handle.addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    // two requests in one write: the front-end must answer both, in order
+    stream.write_all(b"{\"type\":\"ping\"}\n{\"type\":\"list_models\"}\n").unwrap();
+    let mut reader = BufReader::new(stream);
+    let first = Response::from_line(&read_frame(&mut reader).unwrap()).unwrap();
+    assert!(matches!(first, Response::Pong), "{first:?}");
+    match Response::from_line(&read_frame(&mut reader).unwrap()).unwrap() {
+        Response::Models(ms) => assert_eq!(ms[0].name, "tinymlp"),
+        other => panic!("unexpected {other:?}"),
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn reactor_and_threaded_frontends_serve_identical_replies() {
+    let dir = synthetic_bundle("fe-identity");
+    let mk = |frontend| {
+        serve(ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            workers: 1,
+            frontend,
+            artifacts_dir: dir.to_str().unwrap().to_string(),
+            ..ServerConfig::default()
+        })
+        .unwrap()
+    };
+    let reactor = mk(Frontend::Reactor);
+    let threaded = mk(Frontend::Threaded);
+
+    let req = paper_request("tinymlp", 0.02);
+    for negotiate in [false, true] {
+        let mut a = BlockingConn::connect(&reactor.addr.to_string()).unwrap();
+        let mut b = BlockingConn::connect(&threaded.addr.to_string()).unwrap();
+        if negotiate {
+            for conn in [&mut a, &mut b] {
+                match conn.call(&Request::Hello(HelloRequest { binary_frames: true })).unwrap() {
+                    Response::Hello(h) => assert!(h.binary_frames),
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+        }
+        let ra = match a.call(&Request::Infer(req.clone())).unwrap() {
+            Response::Segment(r) => r,
+            other => panic!("unexpected {other:?}"),
+        };
+        let rb = match b.call(&Request::Infer(req.clone())).unwrap() {
+            Response::Segment(r) => r,
+            other => panic!("unexpected {other:?}"),
+        };
+        // session ids are per-server; payload and decision must match
+        assert_eq!(ra.segment, rb.segment, "negotiate={negotiate}");
+        assert_eq!(ra.pattern, rb.pattern, "negotiate={negotiate}");
+    }
+    reactor.shutdown();
+    threaded.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -61,6 +61,14 @@ pub struct ServingConfig {
     pub cache_bytes: usize,
     /// Allow binary-frame negotiation on the wire.
     pub binary_frames: bool,
+    /// Front-end accept gate: refuse connections beyond this many.
+    pub max_conns: usize,
+    /// Idle/slow-client connection timeout in seconds (0 = never;
+    /// default matches `session_ttl_secs` — a device may legitimately
+    /// be silent for its whole device-side compute window).
+    pub conn_idle_secs: u64,
+    /// Plaintext metrics-scrape listen address ("" = disabled).
+    pub metrics_listen: String,
     /// Pre-warm the encoded-reply and compile caches at startup
     /// (`--warm-cache`): encode the most-likely reply keys and pre-build
     /// their phase-2 plans before serving the first request.
@@ -102,6 +110,9 @@ impl Config {
                     ("batch_window_us", 0u64.into()),
                     ("cache_bytes", (64u64 << 20).into()),
                     ("binary_frames", true.into()),
+                    ("max_conns", 4096u64.into()),
+                    ("conn_idle_secs", 600u64.into()),
+                    ("metrics_listen", "".into()),
                     ("warm_cache", false.into()),
                     ("artifacts_dir", "artifacts".into()),
                     (
@@ -224,6 +235,9 @@ impl Config {
             batch_window_us: srv.opt_f64("batch_window_us", 0.0) as u64,
             cache_bytes: srv.opt_f64("cache_bytes", (64u64 << 20) as f64) as usize,
             binary_frames: srv.opt_bool("binary_frames", true),
+            max_conns: srv.opt_f64("max_conns", 4096.0) as usize,
+            conn_idle_secs: srv.opt_f64("conn_idle_secs", 600.0) as u64,
+            metrics_listen: srv.opt_str("metrics_listen", "").to_string(),
             warm_cache: srv.opt_bool("warm_cache", false),
             artifacts_dir: srv.opt_str("artifacts_dir", "artifacts").to_string(),
             accuracy_levels: srv
@@ -281,18 +295,27 @@ mod tests {
         assert_eq!(srv.cache_bytes, 64 << 20);
         assert!(srv.binary_frames);
         assert!(!srv.warm_cache, "warming is opt-in");
+        assert_eq!(srv.max_conns, 4096);
+        assert_eq!(srv.conn_idle_secs, 600);
+        assert_eq!(srv.metrics_listen, "", "scrape listener is opt-in");
         let mut cfg = Config::defaults();
         cfg.set_override("serving.batch_window_us=2500").unwrap();
         cfg.set_override("serving.cache_bytes=1048576").unwrap();
         cfg.set_override("serving.binary_frames=false").unwrap();
         cfg.set_override("serving.session_ttl_secs=30").unwrap();
         cfg.set_override("serving.warm_cache=true").unwrap();
+        cfg.set_override("serving.max_conns=128").unwrap();
+        cfg.set_override("serving.conn_idle_secs=5").unwrap();
+        cfg.set_override("serving.metrics_listen=127.0.0.1:9100").unwrap();
         let srv = cfg.serving().unwrap();
         assert_eq!(srv.batch_window_us, 2500);
         assert_eq!(srv.cache_bytes, 1 << 20);
         assert!(!srv.binary_frames);
         assert_eq!(srv.session_ttl_secs, 30);
         assert!(srv.warm_cache);
+        assert_eq!(srv.max_conns, 128);
+        assert_eq!(srv.conn_idle_secs, 5);
+        assert_eq!(srv.metrics_listen, "127.0.0.1:9100");
     }
 
     #[test]

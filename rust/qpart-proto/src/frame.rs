@@ -136,6 +136,68 @@ pub fn write_binary_frame<W: Write>(w: &mut W, header: &str, blob: &[u8]) -> Res
     Ok(())
 }
 
+/// Try to split one complete frame off the front of `buf` without
+/// blocking: `Ok(Some((frame, consumed)))` when a whole frame is
+/// buffered, `Ok(None)` when more bytes are needed first.
+///
+/// This is the incremental twin of [`read_any_frame`] for evented
+/// front-ends that accumulate nonblocking reads into a per-connection
+/// buffer: the same dispatch (first byte `0xB1` → binary, else JSON
+/// line), the same [`MAX_FRAME_BYTES`] cap (a buffer that exceeds it
+/// without completing a frame is rejected, so a hostile peer cannot grow
+/// the buffer unboundedly), and byte-identical results — only the I/O
+/// model differs, never the framing.
+pub fn split_frame(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
+    let Some(&first) = buf.first() else {
+        return Ok(None);
+    };
+    if first != BINARY_MAGIC {
+        let Some(pos) = buf.iter().position(|&b| b == b'\n') else {
+            // no newline yet: a line longer than the cap never completes
+            if buf.len() > MAX_FRAME_BYTES {
+                return Err(FrameError::TooLarge);
+            }
+            return Ok(None);
+        };
+        if pos + 1 > MAX_FRAME_BYTES {
+            return Err(FrameError::TooLarge);
+        }
+        let mut line = &buf[..pos];
+        if line.last() == Some(&b'\r') {
+            line = &line[..line.len() - 1];
+        }
+        let line = std::str::from_utf8(line).map_err(|_| FrameError::Utf8)?;
+        return Ok(Some((Frame::Json(line.to_string()), pos + 1)));
+    }
+    // binary: magic + u32 total, then `total` payload bytes
+    if buf.len() < 5 {
+        return Ok(None);
+    }
+    let total = u32::from_le_bytes([buf[1], buf[2], buf[3], buf[4]]) as usize;
+    if total > MAX_FRAME_BYTES {
+        return Err(FrameError::TooLarge);
+    }
+    if total < 4 {
+        return Err(FrameError::BadBinary(format!("total length {total} < 4")));
+    }
+    if buf.len() < 5 + total {
+        return Ok(None);
+    }
+    let payload = &buf[5..5 + total];
+    let header_len =
+        u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+    if header_len > total - 4 {
+        return Err(FrameError::BadBinary(format!(
+            "header length {header_len} exceeds frame payload {}",
+            total - 4
+        )));
+    }
+    let header =
+        String::from_utf8(payload[4..4 + header_len].to_vec()).map_err(|_| FrameError::Utf8)?;
+    let blob = payload[4 + header_len..].to_vec();
+    Ok(Some((Frame::Binary(BinaryFrame { header, blob }), 5 + total)))
+}
+
 /// Read the next frame of either kind, dispatching on the first byte.
 pub fn read_any_frame<R: BufRead>(r: &mut R) -> Result<Frame, FrameError> {
     let first = {
@@ -248,6 +310,63 @@ mod tests {
             write_binary_frame(&mut Vec::new(), "{}", &blob),
             Err(FrameError::TooLarge)
         ));
+    }
+
+    #[test]
+    fn split_frame_matches_read_any_frame_byte_for_byte() {
+        // one buffer holding every frame shape, split incrementally
+        let mut buf = Vec::new();
+        write_frame(&mut buf, r#"{"a":1}"#).unwrap();
+        write_binary_frame(&mut buf, r#"{"kind":"seg"}"#, &[1, 2, 3, 0xB1, 255]).unwrap();
+        write_frame(&mut buf, r#"{"b":2}"#).unwrap();
+        write_binary_frame(&mut buf, "{}", &[]).unwrap();
+        let mut blocking = BufReader::new(&buf[..]);
+        let mut rest: &[u8] = &buf;
+        for _ in 0..4 {
+            let (frame, consumed) = split_frame(rest).unwrap().expect("frame buffered");
+            assert_eq!(frame, read_any_frame(&mut blocking).unwrap());
+            rest = &rest[consumed..];
+        }
+        assert!(rest.is_empty());
+        assert_eq!(split_frame(rest).unwrap(), None);
+    }
+
+    #[test]
+    fn split_frame_waits_for_partial_frames() {
+        let mut buf = Vec::new();
+        write_binary_frame(&mut buf, r#"{"k":1}"#, &[9, 8, 7]).unwrap();
+        // every strict prefix is "need more bytes", never an error
+        for cut in 0..buf.len() {
+            assert_eq!(split_frame(&buf[..cut]).unwrap(), None, "prefix of {cut} bytes");
+        }
+        let (frame, consumed) = split_frame(&buf).unwrap().unwrap();
+        assert_eq!(consumed, buf.len());
+        assert!(matches!(frame, Frame::Binary(_)));
+        // JSON: no newline yet means incomplete, CRLF stripped when whole
+        assert_eq!(split_frame(b"{\"x\":").unwrap(), None);
+        let (frame, consumed) = split_frame(b"hello\r\ntrailing").unwrap().unwrap();
+        assert_eq!(frame, Frame::Json("hello".into()));
+        assert_eq!(consumed, 7);
+    }
+
+    #[test]
+    fn split_frame_enforces_caps_and_validity() {
+        // an endless unterminated line is rejected once past the cap
+        let big = vec![b'x'; MAX_FRAME_BYTES + 1];
+        assert!(matches!(split_frame(&big), Err(FrameError::TooLarge)));
+        // forged binary length beyond the cap
+        let mut buf = vec![BINARY_MAGIC];
+        buf.extend_from_slice(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+        assert!(matches!(split_frame(&buf), Err(FrameError::TooLarge)));
+        // header_len pointing past the payload
+        let header = b"{}";
+        let mut buf = vec![BINARY_MAGIC];
+        buf.extend_from_slice(&((4 + header.len()) as u32).to_le_bytes());
+        buf.extend_from_slice(&100u32.to_le_bytes());
+        buf.extend_from_slice(header);
+        assert!(matches!(split_frame(&buf), Err(FrameError::BadBinary(_))));
+        // invalid UTF-8 line
+        assert!(matches!(split_frame(b"\xff\xfe\n"), Err(FrameError::Utf8)));
     }
 
     #[test]

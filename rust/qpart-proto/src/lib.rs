@@ -83,6 +83,18 @@
 //! * Peers that never send `hello` get pure JSON-lines — the
 //!   compatibility fallback.
 //!
+//! ### Transport independence
+//!
+//! Framing and negotiation are defined **per connection over its byte
+//! stream** and are independent of how the server carries connections:
+//! the coordinator's evented front-end (one poll-based reactor over
+//! nonblocking sockets, incremental parsing via [`frame::split_frame`])
+//! and its thread-per-connection baseline (blocking reads via
+//! [`read_any_frame`]) produce byte-identical frames in both directions.
+//! `split_frame` is specified to match the blocking readers exactly —
+//! same first-byte dispatch, same [`MAX_FRAME_BYTES`] cap, same error
+//! taxonomy — so no wire behavior changed with the front-end.
+//!
 //! ## Binary payloads (JSON form)
 //!
 //! Bit-packed tensors (quantized weight/activation codes, see
@@ -184,8 +196,8 @@ pub mod frame;
 pub mod messages;
 
 pub use frame::{
-    read_any_frame, read_frame, write_binary_frame, write_frame, BinaryFrame, Frame, FrameError,
-    MAX_FRAME_BYTES,
+    read_any_frame, read_frame, split_frame, write_binary_frame, write_frame, BinaryFrame, Frame,
+    FrameError, MAX_FRAME_BYTES,
 };
 pub use messages::{
     ActivationUpload, EncodedSegmentBody, ErrorReply, HelloReply, HelloRequest, InferReply,
