@@ -6,14 +6,17 @@
 //!                   [--batch-window MS] [--batch-max N] [--cache-bytes N]
 //!                   [--binary-frames true|false] [--warm-cache] [--host-fallback]
 //!                   [--frontend reactor|threaded] [--max-conns N]
-//!                   [--conn-idle-secs S] [--metrics-listen addr]
+//!                   [--conn-idle-secs S] [--fair-rate R] [--metrics-listen addr]
 //! qpart request     --model mlp6 [--accuracy 0.01] [--n 16] [--addr host:port]
 //!                   [--capacity-bps 2e8] [--clock-hz 2e8] [--artifacts dir] [--binary]
 //! qpart bench-serve [--clients 8] [--requests 32] [--workers 4] [--keys 3]
 //!                   [--batch-window 2] [--cache-bytes N] [--binary-frames true|false]
 //!                   [--phase2 B] [--warm-cache] [--sweep workers=1,2,4,8] [--csv]
 //!                   [--frontend reactor|threaded] [--min-peak-conns N]
-//!                   [--artifacts dir]
+//!                   [--fair-rate R] [--artifacts dir]
+//!                   [--scenario flashcrowd|file] [--time-scale S]
+//!                   [--chaos drop-mid-phase2,garbage-frames,slow-loris,half-open]
+//!                   [--chaos-rate P]
 //! qpart sim         [--model mlp6] [--rate 20] [--devices 16] [--duration 10] [--seed 1]
 //! qpart offline     [--model mlp6] [--artifacts dir]
 //! qpart models      [--artifacts dir]
@@ -26,6 +29,10 @@
 //! needed — synthetic bundle + host reference kernels unless
 //! `--artifacts` is given), with `--sweep workers=...` producing scaling
 //! curves and `--csv` the same CSV rows the qpart-bench harness emits;
+//! with `--scenario` it instead replays a declarative multi-phase fleet
+//! scenario (flash crowds, diurnal cycles, upload storms) through the
+//! live server, optionally alongside `--chaos` misbehaving peers, and
+//! reports per-class latency plus Jain's fairness index;
 //! `sim` runs the discrete-event fleet simulation; `offline` prints the
 //! Algorithm-1 pattern table; `models` lists the bundle.
 
@@ -36,7 +43,12 @@ use qpart::coordinator::client::{paper_request, random_input};
 use qpart::coordinator::testing::{synthetic_upload, BlockingConn};
 use qpart::prelude::*;
 use qpart::proto::messages::{ActivationUpload, HelloRequest, Request, Response};
+use qpart::sim::{Scenario, TraceEvent};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::sync::{Arc, Barrier};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -102,6 +114,10 @@ const USAGE: &str = "usage: qpart <serve|request|bench-serve|sim|offline|models>
                                 bytes moved) for S seconds — defuses slow-loris\n\
                                 and half-open peers (0 = never; default 600,\n\
                                 matching the session TTL)\n\
+           [--fair-rate R]      per-connection fair queuing: admit at most R\n\
+                                requests/s per connection (2 s burst); excess\n\
+                                gets a 'throttled' error instead of queue space\n\
+                                (0 = off; default serving.fair_rate = 0)\n\
            [--metrics-listen A] serve a plaintext Prometheus-style scrape of the\n\
                                 stats document on a second listener (default off)\n\
   request  --model mlp6 --accuracy 0.01 --n 16 --addr 127.0.0.1:7878 [--binary]\n\
@@ -113,10 +129,24 @@ const USAGE: &str = "usage: qpart <serve|request|bench-serve|sim|offline|models>
            [--frontend F]             reactor (default) or threaded\n\
            [--min-peak-conns N]       fail unless peak open connections >= N\n\
                                       (the CI fleet-soak assertion)\n\
+           [--fair-rate R]            per-connection token-bucket admission rate\n\
+                                      (0 = off); refusals are counted in the\n\
+                                      'throttled' column\n\
            [--sweep workers=1,2,4,8]  run once per value, print a scaling table\n\
            [--csv]                    emit the table as CSV rows (qpart-bench format)\n\
+           [--scenario NAME|FILE]     replay a declarative multi-phase scenario\n\
+                                      (builtin: flashcrowd, diurnal, storm; or a\n\
+                                      scenario file) instead of the uniform load;\n\
+                                      reports per-class p50/p99 + Jain fairness\n\
+           [--time-scale S]           multiply scenario arrival times by S\n\
+           [--chaos a,b,..]           inject misbehaving peers alongside the\n\
+                                      scenario: drop-mid-phase2, garbage-frames,\n\
+                                      slow-loris, half-open\n\
+           [--chaos-rate P]           per-upload probability of drop-mid-phase2\n\
+                                      (default 0.25)\n\
            reports peak open connections + accept-to-first-byte latency (front-end\n\
-           scaling), req/s, p50/p99 latency, shed rate, encodes vs requests,\n\
+           scaling), req/s, p50/p99 latency, shed rate, throttled count + Jain\n\
+           fairness index, encodes vs requests,\n\
            cache + decision-cache hit rates, per-stage means (plan / encode+pack\n\
            / phase-2 exec), phase-2 batch occupancy + ladder-padded rows, uplink\n\
            bytes saved, binary-vs-JSON byte-identity checks in both directions,\n\
@@ -177,13 +207,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         conn_idle: Duration::from_secs(
             args.get_usize("conn-idle-secs", serving.conn_idle_secs as usize)? as u64,
         ),
+        fair_rate: args.get_f64("fair-rate", serving.fair_rate)?,
         metrics_listen: if metrics_listen.is_empty() { None } else { Some(metrics_listen) },
         warm_cache: bool_flag(args, "warm-cache", serving.warm_cache)?,
         host_fallback: bool_flag(args, "host-fallback", false)?,
         artifacts_dir: args.get_or("artifacts", &serving.artifacts_dir).to_string(),
     };
     println!(
-        "loading bundle from '{}' ({} workers, queue {}, batch window {:?}, cache {} MiB, binary frames {}, warm cache {}, frontend {:?}, max conns {}, conn idle {:?}) ...",
+        "loading bundle from '{}' ({} workers, queue {}, batch window {:?}, cache {} MiB, binary frames {}, warm cache {}, frontend {:?}, max conns {}, conn idle {:?}, fair rate {}) ...",
         server_cfg.artifacts_dir,
         server_cfg.workers,
         server_cfg.queue_capacity,
@@ -194,6 +225,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         server_cfg.frontend,
         server_cfg.max_conns,
         server_cfg.conn_idle,
+        server_cfg.fair_rate,
     );
     let handle = serve(server_cfg)?;
     println!("qpart coordinator listening on {}", handle.addr);
@@ -300,6 +332,11 @@ struct BenchSummary {
     req_per_s: f64,
     p50_ms: f64,
     p99_ms: f64,
+    /// Requests refused by per-connection fair queuing (`--fair-rate`).
+    throttled: u64,
+    /// Jain's fairness index over per-client completed-request counts
+    /// (1.0 = perfectly even service across the fleet).
+    jain: f64,
     encodes: u64,
     coalesced: u64,
     hit_rate_pct: f64,
@@ -317,7 +354,7 @@ struct BenchSummary {
 }
 
 impl BenchSummary {
-    fn table_headers() -> [&'static str; 17] {
+    fn table_headers() -> [&'static str; 19] {
         [
             "workers",
             "peak conns",
@@ -326,6 +363,8 @@ impl BenchSummary {
             "p50 ms",
             "p99 ms",
             "shed %",
+            "throttled",
+            "jain",
             "encodes",
             "coalesced",
             "hit %",
@@ -348,6 +387,8 @@ impl BenchSummary {
             format!("{:.2}", self.p50_ms),
             format!("{:.2}", self.p99_ms),
             format!("{:.1}", 100.0 * self.shed as f64 / self.attempts.max(1) as f64),
+            self.throttled.to_string(),
+            format!("{:.3}", self.jain),
             self.encodes.to_string(),
             self.coalesced.to_string(),
             format!("{:.1}", self.hit_rate_pct),
@@ -430,6 +471,12 @@ fn bench_serve_runs(
     model: &str,
     synthetic: bool,
 ) -> Result<(), String> {
+    if args.get("scenario").is_some() {
+        if args.get("sweep").is_some() {
+            return Err("--sweep is not supported with --scenario".into());
+        }
+        return run_bench_scenario(args, artifacts_dir, model, synthetic);
+    }
     // phase-2 load and host-kernel execution default on for the synthetic
     // bundle (no PJRT anywhere); with real artifacts both are opt-in
     let phase2 = bool_flag(args, "phase2", synthetic)?;
@@ -501,6 +548,7 @@ fn run_bench_serve(
         binary_frames: binary,
         frontend,
         max_conns: args.get_usize("max-conns", 4096)?,
+        fair_rate: args.get_f64("fair-rate", 0.0)?,
         warm_cache: warm,
         host_fallback,
         artifacts_dir: artifacts_dir.to_string(),
@@ -526,7 +574,7 @@ fn run_bench_serve(
             let arch = arch.clone();
             let barrier = Arc::clone(&barrier);
             joins.push(std::thread::spawn(
-                move || -> Result<(Vec<u64>, u64, u64, u64, u64), String> {
+                move || -> Result<(Vec<u64>, u64, u64, u64, u64, u64), String> {
                     // accept-to-first-byte: connect + one ping round trip
                     // (front-end accept + dispatch, no inference work) —
                     // the latency figure that shows whether the reactor
@@ -553,6 +601,7 @@ fn run_bench_serve(
                     barrier.wait();
                     let mut lat = Vec::with_capacity(per_client);
                     let mut shed = 0u64;
+                    let mut throttled = 0u64;
                     let mut errors = 0u64;
                     let mut saved = 0u64;
                     for i in 0..per_client {
@@ -565,6 +614,10 @@ fn run_bench_serve(
                             Response::Segment(r) => r,
                             Response::Error(e) if e.code == "overloaded" => {
                                 shed += 1;
+                                continue;
+                            }
+                            Response::Error(e) if e.code == "throttled" => {
+                                throttled += 1;
                                 continue;
                             }
                             Response::Error(e) => {
@@ -595,6 +648,10 @@ fn run_bench_serve(
                                     shed += 1;
                                     continue;
                                 }
+                                Response::Error(e) if e.code == "throttled" => {
+                                    throttled += 1;
+                                    continue;
+                                }
                                 Response::Error(e) => {
                                     errors += 1;
                                     eprintln!("client {c} upload: {}: {}", e.code, e.message);
@@ -607,20 +664,24 @@ fn run_bench_serve(
                         }
                         lat.push(t.elapsed().as_micros() as u64);
                     }
-                    Ok((lat, shed, errors, saved, first_byte_us))
+                    Ok((lat, shed, throttled, errors, saved, first_byte_us))
                 },
             ));
         }
         let mut lats: Vec<u64> = Vec::new();
         let mut first_bytes: Vec<u64> = Vec::new();
+        let mut ok_per_client: Vec<u64> = Vec::new();
         let mut shed = 0u64;
+        let mut throttled = 0u64;
         let mut errors = 0u64;
         let mut pass_saved = 0u64;
         for j in joins {
-            let (l, s, e, saved, fb) =
+            let (l, s, t, e, saved, fb) =
                 j.join().map_err(|_| "bench client panicked".to_string())??;
+            ok_per_client.push(l.len() as u64);
             lats.extend(l);
             shed += s;
+            throttled += t;
             errors += e;
             pass_saved += saved;
             first_bytes.push(fb);
@@ -671,13 +732,14 @@ fn run_bench_serve(
             first_bytes.iter().sum::<u64>() as f64 / first_bytes.len() as f64 / 1000.0
         };
         println!(
-            "pass {pass}: {} ok / {attempts} ({shed} shed = {:.1}%, {errors} errors), \
-             {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms",
+            "pass {pass}: {} ok / {attempts} ({shed} shed = {:.1}%, {throttled} throttled, \
+             {errors} errors), {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms, jain {:.3}",
             lats.len(),
             100.0 * shed as f64 / attempts as f64,
             lats.len() as f64 / wall,
             quantile_us(&lats, 0.50) / 1000.0,
             quantile_us(&lats, 0.99) / 1000.0,
+            jain_index(&ok_per_client),
         );
         println!(
             "        front-end: conns open peak {}, accept→first-byte mean {fb_mean_ms:.2} ms \
@@ -720,6 +782,8 @@ fn run_bench_serve(
             req_per_s: lats.len() as f64 / wall,
             p50_ms: quantile_us(&lats, 0.50) / 1000.0,
             p99_ms: quantile_us(&lats, 0.99) / 1000.0,
+            throttled,
+            jain: jain_index(&ok_per_client),
             encodes: d_encodes,
             coalesced: d_coalesced,
             hit_rate_pct: hit_rate,
@@ -892,6 +956,592 @@ fn run_bench_serve(
     );
     handle.shutdown();
     Ok(summary.expect("two passes always ran"))
+}
+
+// ---------------------------------------------------------------------------
+// bench-serve --scenario: trace-driven fleet replay + chaos clients
+// ---------------------------------------------------------------------------
+
+/// Jain's fairness index over per-entity counts: `(Σx)² / (n·Σx²)` ∈ (0, 1],
+/// 1.0 = perfectly even. NaN for an empty slice, 1.0 for all-zero.
+fn jain_index(xs: &[u64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let sum: f64 = xs.iter().map(|&x| x as f64).sum();
+    let sq: f64 = xs.iter().map(|&x| x as f64 * x as f64).sum();
+    if sq == 0.0 {
+        return 1.0;
+    }
+    sum * sum / (xs.len() as f64 * sq)
+}
+
+/// Chaos-injection modes parsed from `--chaos a,b,c`.
+#[derive(Clone, Copy, Default)]
+struct ChaosFlags {
+    drop_mid_phase2: bool,
+    garbage_frames: bool,
+    slow_loris: bool,
+    half_open: bool,
+}
+
+impl ChaosFlags {
+    fn any_lingering(&self) -> bool {
+        self.slow_loris || self.half_open
+    }
+
+    fn describe(&self) -> String {
+        let mut on = Vec::new();
+        if self.drop_mid_phase2 {
+            on.push("drop-mid-phase2");
+        }
+        if self.garbage_frames {
+            on.push("garbage-frames");
+        }
+        if self.slow_loris {
+            on.push("slow-loris");
+        }
+        if self.half_open {
+            on.push("half-open");
+        }
+        if on.is_empty() { "none".to_string() } else { on.join(",") }
+    }
+}
+
+fn parse_chaos(spec: &str) -> Result<ChaosFlags, String> {
+    let mut c = ChaosFlags::default();
+    for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        match tok {
+            "drop-mid-phase2" => c.drop_mid_phase2 = true,
+            "garbage-frames" => c.garbage_frames = true,
+            "slow-loris" => c.slow_loris = true,
+            "half-open" => c.half_open = true,
+            other => {
+                return Err(format!(
+                    "--chaos: unknown mode '{other}' (expected \
+                     drop-mid-phase2, garbage-frames, slow-loris, half-open)"
+                ))
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// Spawn `n` lingering peers: each writes `probe` (a few bytes of a JSON
+/// request for slow-loris, nothing for half-open) and then holds the
+/// socket silently until the server's idle sweep closes it. Each handle
+/// yields `true` when the server hung up within `patience`.
+fn spawn_lingerers(addr: &str, n: usize, probe: &'static [u8], patience: Duration) -> Vec<JoinHandle<bool>> {
+    (0..n)
+        .map(|_| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut s = match TcpStream::connect(&addr) {
+                    Ok(s) => s,
+                    Err(_) => return false,
+                };
+                if !probe.is_empty() && s.write_all(probe).is_err() {
+                    return false;
+                }
+                let _ = s.set_read_timeout(Some(patience));
+                let mut buf = [0u8; 256];
+                loop {
+                    match s.read(&mut buf) {
+                        Ok(0) => return true, // server closed: reaped
+                        Ok(_) => continue,
+                        Err(_) => return false, // patience exhausted first
+                    }
+                }
+            })
+        })
+        .collect()
+}
+
+/// Spawn `n` garbage-frame peers. Each alternates between an oversized
+/// 0xB1 envelope (the server must answer `bad_frame` and close, without
+/// disturbing any other connection) and a truncated envelope followed by
+/// a hang-up (EOF mid-frame; nothing to route). Each handle yields the
+/// number of `bad_frame` replies it observed.
+fn spawn_garbage_framers(addr: &str, n: usize, rounds: usize) -> Vec<JoinHandle<u64>> {
+    (0..n)
+        .map(|i| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut seen = 0u64;
+                for r in 0..rounds {
+                    let mut s = match TcpStream::connect(&addr) {
+                        Ok(s) => s,
+                        Err(_) => break,
+                    };
+                    let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+                    if (i + r) % 2 == 0 {
+                        // oversized envelope: total_len far past the frame cap
+                        let mut frame = vec![0xB1u8];
+                        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+                        frame.extend_from_slice(&8u32.to_le_bytes());
+                        if s.write_all(&frame).is_err() {
+                            continue;
+                        }
+                        let mut buf = Vec::new();
+                        let mut tmp = [0u8; 512];
+                        while let Ok(k) = s.read(&mut tmp) {
+                            if k == 0 {
+                                break;
+                            }
+                            buf.extend_from_slice(&tmp[..k]);
+                        }
+                        if String::from_utf8_lossy(&buf).contains("bad_frame") {
+                            seen += 1;
+                        }
+                    } else {
+                        // truncated envelope: promise 64 bytes, send 3, hang up
+                        let mut frame = vec![0xB1u8];
+                        frame.extend_from_slice(&64u32.to_le_bytes());
+                        frame.extend_from_slice(&16u32.to_le_bytes());
+                        frame.extend_from_slice(&[1, 2, 3]);
+                        let _ = s.write_all(&frame);
+                    }
+                }
+                seen
+            })
+        })
+        .collect()
+}
+
+/// What one replayed device brought back from a scenario run.
+struct DeviceOutcome {
+    class: String,
+    lat_us: Vec<u64>,
+    events: u64,
+    shed: u64,
+    throttled: u64,
+    errors: u64,
+    drops: u64,
+}
+
+/// Per-class aggregate for the scenario report table.
+#[derive(Default)]
+struct ClassAgg {
+    devices: u64,
+    events: u64,
+    shed: u64,
+    throttled: u64,
+    lat_us: Vec<u64>,
+    ok_per_device: Vec<u64>,
+}
+
+impl ClassAgg {
+    fn absorb(&mut self, o: &DeviceOutcome) {
+        self.devices += 1;
+        self.events += o.events;
+        self.shed += o.shed;
+        self.throttled += o.throttled;
+        self.lat_us.extend_from_slice(&o.lat_us);
+        self.ok_per_device.push(o.lat_us.len() as u64);
+    }
+
+    fn table_row(&self, name: &str) -> Vec<String> {
+        let mut lat = self.lat_us.clone();
+        lat.sort_unstable();
+        vec![
+            name.to_string(),
+            self.devices.to_string(),
+            self.events.to_string(),
+            lat.len().to_string(),
+            self.shed.to_string(),
+            self.throttled.to_string(),
+            format!("{:.2}", quantile_us(&lat, 0.50) / 1000.0),
+            format!("{:.2}", quantile_us(&lat, 0.99) / 1000.0),
+            format!("{:.3}", jain_index(&self.ok_per_device)),
+        ]
+    }
+}
+
+/// Replay a declarative scenario through a live server: one thread per
+/// device honoring the trace's arrival times, with optional chaos peers
+/// attacking the front end while the fleet runs. Asserts the reactor's
+/// survival invariants at the end: zero protocol errors, every chaos
+/// connection reaped, and `conns_open` back to 0.
+#[allow(clippy::too_many_lines)]
+fn run_bench_scenario(
+    args: &Args,
+    artifacts_dir: &str,
+    model: &str,
+    synthetic: bool,
+) -> Result<(), String> {
+    let spec = args.get("scenario").expect("dispatch checked --scenario");
+    let mut scenario = if Scenario::builtin_names().contains(&spec) {
+        Scenario::builtin(spec).expect("builtin scenario exists")
+    } else {
+        let text =
+            std::fs::read_to_string(spec).map_err(|e| format!("--scenario {spec}: {e}"))?;
+        Scenario::parse(&text)?
+    };
+    if args.get("clients").is_some() {
+        scenario.devices = args.get_usize("clients", scenario.devices)?.max(1);
+    }
+    let chaos = parse_chaos(args.get_or("chaos", ""))?;
+    let time_scale = args.get_f64("time-scale", 1.0)?;
+    let chaos_rate = args.get_f64("chaos-rate", 0.25)?;
+    let phase2 = bool_flag(args, "phase2", synthetic)?;
+    let host_fallback = bool_flag(args, "host-fallback", synthetic)?;
+    let binary = bool_flag(args, "binary-frames", true)?;
+    let fair_rate = args.get_f64("fair-rate", 0.0)?;
+    let frontend = frontend_flag(args, Frontend::Reactor)?;
+    let workers = args.get_usize("workers", 4)?;
+    if bool_flag(args, "csv", false)? {
+        std::env::set_var("QPART_BENCH_CSV", "1");
+    }
+    // chaos peers only die through these timeouts, so they default short
+    let conn_idle = Duration::from_secs(args.get_usize(
+        "conn-idle-secs",
+        if chaos.any_lingering() { 2 } else { 600 },
+    )? as u64);
+    let session_ttl = Duration::from_secs(args.get_usize(
+        "session-ttl",
+        if chaos.drop_mid_phase2 { 2 } else { 600 },
+    )? as u64);
+
+    let bundle = Bundle::load(artifacts_dir).map_err(|e| e.to_string())?;
+    let entry = bundle.model(model).map_err(|e| e.to_string())?;
+    let arch = bundle.arch(&entry.arch).map_err(|e| e.to_string())?.clone();
+    drop(bundle);
+
+    let classes = DeviceClass::default_fleet();
+    let trace = scenario.generate(&classes);
+    if trace.events.is_empty() {
+        return Err(format!("scenario '{}' generated no events", scenario.name));
+    }
+    let mut per_device: Vec<Vec<TraceEvent>> = vec![Vec::new(); scenario.devices];
+    for e in &trace.events {
+        per_device[e.device].push(e.clone());
+    }
+    println!(
+        "bench-serve scenario '{}': {} phases, {} devices, {} events over {:.2}s \
+         (time-scale {time_scale}), chaos [{}], fair-rate {fair_rate}, frontend {frontend:?}",
+        scenario.name,
+        scenario.phases.len(),
+        scenario.devices,
+        trace.events.len(),
+        scenario.total_duration_s(),
+        chaos.describe(),
+    );
+
+    let handle = serve(qpart::coordinator::ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers,
+        queue_capacity: args.get_usize("queue", 1024)?,
+        session_ttl,
+        batch_window: Duration::from_micros(
+            (args.get_f64("batch-window", 2.0)? * 1000.0).max(0.0) as u64,
+        ),
+        binary_frames: binary,
+        frontend,
+        max_conns: args.get_usize("max-conns", 4096)?,
+        conn_idle,
+        fair_rate,
+        host_fallback,
+        artifacts_dir: artifacts_dir.to_string(),
+        ..Default::default()
+    })?;
+    let addr = handle.addr.to_string();
+
+    // chaos side-fleets attack while the scenario replays
+    let scaled_run = Duration::from_secs_f64(
+        (scenario.total_duration_s() * time_scale).max(0.0),
+    );
+    let patience = conn_idle + scaled_run + Duration::from_secs(20);
+    let n_loris = if chaos.slow_loris { 32 } else { 0 };
+    let n_half = if chaos.half_open { 16 } else { 0 };
+    let n_garbage = if chaos.garbage_frames { 8 } else { 0 };
+    let loris = spawn_lingerers(&addr, n_loris, b"{\"type\":\"pi", patience);
+    let half = spawn_lingerers(&addr, n_half, b"", patience);
+    let garbage = spawn_garbage_framers(&addr, n_garbage, 4);
+
+    // one replay thread per device with traffic, all released together
+    let replay_devices: Vec<usize> =
+        (0..scenario.devices).filter(|&d| !per_device[d].is_empty()).collect();
+    let barrier = Arc::new(Barrier::new(replay_devices.len()));
+    let seed = scenario.seed;
+    let mut joins = Vec::with_capacity(replay_devices.len());
+    for dev in replay_devices {
+        let events = std::mem::take(&mut per_device[dev]);
+        let addr = addr.clone();
+        let model = model.to_string();
+        let arch = arch.clone();
+        let barrier = Arc::clone(&barrier);
+        joins.push(std::thread::spawn(move || -> Result<DeviceOutcome, String> {
+            let mut out = DeviceOutcome {
+                class: events[0].class.clone(),
+                lat_us: Vec::new(),
+                events: 0,
+                shed: 0,
+                throttled: 0,
+                errors: 0,
+                drops: 0,
+            };
+            let negotiate = |conn: &mut BlockingConn| -> Result<bool, String> {
+                if !(binary && dev % 2 == 1) {
+                    return Ok(false);
+                }
+                match conn.call(&Request::Hello(HelloRequest { binary_frames: true }))? {
+                    Response::Hello(h) => Ok(h.binary_frames),
+                    other => Err(format!("device {dev} hello: unexpected {other:?}")),
+                }
+            };
+            // a device silent past --conn-idle-secs is legitimately reaped
+            // by the idle sweep; like a real device it just dials back in
+            let reconnect =
+                |conn: &mut BlockingConn, bin: &mut bool| -> Result<(), String> {
+                    *conn = BlockingConn::connect(&addr)?;
+                    *bin = negotiate(conn)?;
+                    Ok(())
+                };
+            let mut conn = BlockingConn::connect(&addr)?;
+            let mut bin_session = negotiate(&mut conn)?;
+            let mut chaos_rng =
+                qpart::core::rng::Rng::from_label(seed, &format!("chaos/{dev}"));
+            let mut seq = 0u64;
+            barrier.wait();
+            let t0 = Instant::now();
+            for ev in &events {
+                let target = Duration::from_secs_f64((ev.arrival_s * time_scale).max(0.0));
+                let elapsed = t0.elapsed();
+                if target > elapsed {
+                    std::thread::sleep(target - elapsed);
+                }
+                out.events += 1;
+                let mut req = paper_request(&model, ev.accuracy_budget);
+                // channel fading: the phase's SNR scale shrinks capacity
+                req.channel_capacity_bps *= ev.snr_scale;
+                let t = Instant::now();
+                let uploads = if phase2 { ev.phase2_uploads.max(1) } else { 0 };
+                let infer_req = Request::Infer(req.clone());
+                let mut reply = None;
+                let mut completed = true;
+                let resp = match conn.call(&infer_req) {
+                    Ok(r) => r,
+                    Err(_) => {
+                        reconnect(&mut conn, &mut bin_session)?;
+                        conn.call(&infer_req)?
+                    }
+                };
+                match resp {
+                    Response::Segment(r) => reply = Some(r),
+                    Response::Error(e) if e.code == "overloaded" => {
+                        out.shed += 1;
+                        completed = false;
+                    }
+                    Response::Error(e) if e.code == "throttled" => {
+                        out.throttled += 1;
+                        completed = false;
+                    }
+                    Response::Error(e) => {
+                        out.errors += 1;
+                        eprintln!("device {dev}: {}: {}", e.code, e.message);
+                        completed = false;
+                    }
+                    other => {
+                        return Err(format!("device {dev}: unexpected response {other:?}"))
+                    }
+                }
+                if completed {
+                    'uploads: for u in 0..uploads {
+                        // upload storms: every round consumes its session, so
+                        // re-issue the (cache-hot) infer for each extra upload
+                        if u > 0 {
+                            match conn.call(&infer_req)? {
+                                Response::Segment(r) => reply = Some(r),
+                                Response::Error(e) if e.code == "overloaded" => {
+                                    out.shed += 1;
+                                    completed = false;
+                                    break 'uploads;
+                                }
+                                Response::Error(e) if e.code == "throttled" => {
+                                    out.throttled += 1;
+                                    completed = false;
+                                    break 'uploads;
+                                }
+                                Response::Error(e) => {
+                                    out.errors += 1;
+                                    eprintln!("device {dev}: {}: {}", e.code, e.message);
+                                    completed = false;
+                                    break 'uploads;
+                                }
+                                other => {
+                                    return Err(format!(
+                                        "device {dev}: unexpected response {other:?}"
+                                    ))
+                                }
+                            }
+                        }
+                        if chaos.drop_mid_phase2 && chaos_rng.uniform() < chaos_rate {
+                            // vanish mid-phase-2: the open session must be
+                            // GC'd by the TTL sweep and any in-flight reply
+                            // dropped by the generation check — never
+                            // delivered to the replacement connection
+                            reconnect(&mut conn, &mut bin_session)?;
+                            out.drops += 1;
+                            completed = false;
+                            break 'uploads;
+                        }
+                        let r = reply.as_ref().expect("segment reply present");
+                        let upload =
+                            synthetic_upload(r, &arch, ((dev as u64) << 32) | seq);
+                        seq += 1;
+                        let resp = if bin_session {
+                            conn.call_binary_upload(&upload)?
+                        } else {
+                            conn.call(&Request::Activation(upload))?
+                        };
+                        match resp {
+                            Response::Result(_) => {}
+                            Response::Error(e) if e.code == "overloaded" => {
+                                out.shed += 1;
+                                completed = false;
+                                break 'uploads;
+                            }
+                            Response::Error(e) if e.code == "throttled" => {
+                                out.throttled += 1;
+                                completed = false;
+                                break 'uploads;
+                            }
+                            Response::Error(e) => {
+                                out.errors += 1;
+                                eprintln!("device {dev} upload: {}: {}", e.code, e.message);
+                                completed = false;
+                                break 'uploads;
+                            }
+                            other => {
+                                return Err(format!(
+                                    "device {dev}: unexpected response {other:?}"
+                                ))
+                            }
+                        }
+                    }
+                }
+                if completed {
+                    out.lat_us.push(t.elapsed().as_micros() as u64);
+                }
+            }
+            Ok(out)
+        }));
+    }
+
+    let mut outcomes = Vec::with_capacity(joins.len());
+    for j in joins {
+        outcomes.push(j.join().map_err(|_| "scenario device panicked".to_string())??);
+    }
+    let reaped_loris = loris.into_iter().filter(|h| h.join().unwrap_or(false)).count();
+    let reaped_half = half.into_iter().filter(|h| h.join().unwrap_or(false)).count();
+    let bad_frame_replies: u64 =
+        garbage.into_iter().map(|h| h.join().unwrap_or(0)).sum();
+
+    // per-class report + fleet-wide fairness
+    let mut by_class: BTreeMap<String, ClassAgg> = BTreeMap::new();
+    let mut fleet = ClassAgg::default();
+    for o in &outcomes {
+        by_class.entry(o.class.clone()).or_default().absorb(o);
+        fleet.absorb(o);
+    }
+    let mut table = qpart_bench::Table::new(
+        format!("bench-serve scenario {} (model {model})", scenario.name),
+        &["class", "devices", "events", "ok", "shed", "throttled", "p50 ms", "p99 ms", "jain"],
+    );
+    for (name, agg) in &by_class {
+        table.row(agg.table_row(name));
+    }
+    table.row(fleet.table_row("all"));
+    table.print();
+
+    let errors: u64 = outcomes.iter().map(|o| o.errors).sum();
+    let drops: u64 = outcomes.iter().map(|o| o.drops).sum();
+    let final_snap = handle.snapshot();
+    println!(
+        "front-end: conns accepted {}, open peak {}, rejected {}, timed out {}, \
+         throttled {}, sessions live {}",
+        final_snap.conns_accepted_total,
+        final_snap.conns_open_peak,
+        final_snap.conns_rejected_total,
+        final_snap.conns_timed_out,
+        final_snap.sched_throttled_total,
+        handle.sessions.len(),
+    );
+    if chaos.drop_mid_phase2 {
+        println!("chaos: dropped {drops} connections mid-phase-2");
+    }
+    if chaos.any_lingering() {
+        println!(
+            "chaos: slow-loris reaped {reaped_loris}/{n_loris}, \
+             half-open reaped {reaped_half}/{n_half}"
+        );
+    }
+    if chaos.garbage_frames {
+        println!("chaos: {bad_frame_replies} bad_frame replies to garbage frames");
+    }
+
+    // survival invariants — any failure fails the whole bench
+    if errors > 0 {
+        return Err(format!("{errors} requests failed with protocol errors"));
+    }
+    if reaped_loris < n_loris || reaped_half < n_half {
+        return Err(format!(
+            "idle sweep leak: slow-loris reaped {reaped_loris}/{n_loris}, \
+             half-open reaped {reaped_half}/{n_half}"
+        ));
+    }
+    if chaos.any_lingering() && final_snap.conns_timed_out < (n_loris + n_half) as u64 {
+        return Err(format!(
+            "conns_timed_out {} < {} lingering chaos peers",
+            final_snap.conns_timed_out,
+            n_loris + n_half
+        ));
+    }
+    // every garbage peer sends two oversized envelopes; each must be
+    // answered with bad_frame, not a dropped reactor
+    if chaos.garbage_frames && bad_frame_replies < n_garbage as u64 {
+        return Err(format!(
+            "garbage frames: only {bad_frame_replies} bad_frame replies \
+             from {n_garbage} peers"
+        ));
+    }
+    // zero-leak: every connection (devices + chaos) must be gone
+    let deadline = Instant::now() + conn_idle + Duration::from_secs(20);
+    let mut open = handle.snapshot().conns_open;
+    while open != 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(50));
+        open = handle.snapshot().conns_open;
+    }
+    if open != 0 {
+        return Err(format!("connection leak: {open} conns still open after scenario"));
+    }
+    // orphaned sessions from dropped connections must age out via the TTL
+    if chaos.drop_mid_phase2 {
+        let deadline = Instant::now() + session_ttl + Duration::from_secs(20);
+        let mut live = handle.sessions.len();
+        while live != 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(50));
+            live = handle.sessions.len();
+        }
+        if live != 0 {
+            return Err(format!("session leak: {live} sessions still open after TTL"));
+        }
+    }
+    let min_peak = args.get_usize("min-peak-conns", 0)?;
+    if min_peak > 0 && final_snap.conns_open_peak < min_peak as u64 {
+        return Err(format!(
+            "front-end scaling: peak open connections {} < required {}",
+            final_snap.conns_open_peak, min_peak
+        ));
+    }
+    println!(
+        "scenario '{}' survived: {} ok / {} events, 0 errors, conns open 0",
+        scenario.name,
+        fleet.lat_us.len(),
+        fleet.events,
+    );
+    handle.shutdown();
+    Ok(())
 }
 
 fn cmd_sim(args: &Args) -> Result<(), String> {

@@ -160,6 +160,9 @@ pub struct Metrics {
     pub requests_total: AtomicU64,
     pub errors_total: AtomicU64,
     pub shed_total: AtomicU64,
+    /// Requests refused by the per-connection fair-queue token bucket
+    /// (`--fair-rate`); the client sees a `throttled` error reply.
+    pub sched_throttled_total: AtomicU64,
     /// Live protocol connections (front-end gauge; the reactor makes
     /// this independent of any thread count).
     pub conns_open: AtomicU64,
@@ -223,6 +226,7 @@ pub struct MetricsSnapshot {
     pub requests_total: u64,
     pub errors_total: u64,
     pub shed_total: u64,
+    pub sched_throttled_total: u64,
     pub conns_open: u64,
     pub conns_open_peak: u64,
     pub conns_accepted_total: u64,
@@ -310,6 +314,7 @@ impl Metrics {
             requests_total: self.requests_total.load(Ordering::Relaxed),
             errors_total: self.errors_total.load(Ordering::Relaxed),
             shed_total: self.shed_total.load(Ordering::Relaxed),
+            sched_throttled_total: self.sched_throttled_total.load(Ordering::Relaxed),
             conns_open: self.conns_open.load(Ordering::Relaxed),
             conns_open_peak: self.conns_open_peak.load(Ordering::Relaxed),
             conns_accepted_total: self.conns_accepted_total.load(Ordering::Relaxed),
@@ -348,6 +353,10 @@ impl Metrics {
             ("requests_total", self.requests_total.load(Ordering::Relaxed).into()),
             ("errors_total", self.errors_total.load(Ordering::Relaxed).into()),
             ("shed_total", self.shed_total.load(Ordering::Relaxed).into()),
+            (
+                "sched_throttled_total",
+                self.sched_throttled_total.load(Ordering::Relaxed).into(),
+            ),
             ("conns_open", self.conns_open.load(Ordering::Relaxed).into()),
             ("conns_open_peak", self.conns_open_peak.load(Ordering::Relaxed).into()),
             (
@@ -398,6 +407,7 @@ struct CounterTotals {
     requests_total: u64,
     errors_total: u64,
     shed_total: u64,
+    sched_throttled_total: u64,
     conns_open: u64,
     conns_open_peak: u64,
     conns_accepted_total: u64,
@@ -424,6 +434,7 @@ impl CounterTotals {
             requests_total: m.requests_total.load(Ordering::Relaxed),
             errors_total: m.errors_total.load(Ordering::Relaxed),
             shed_total: m.shed_total.load(Ordering::Relaxed),
+            sched_throttled_total: m.sched_throttled_total.load(Ordering::Relaxed),
             conns_open: m.conns_open.load(Ordering::Relaxed),
             conns_open_peak: m.conns_open_peak.load(Ordering::Relaxed),
             conns_accepted_total: m.conns_accepted_total.load(Ordering::Relaxed),
@@ -449,6 +460,7 @@ impl CounterTotals {
         self.requests_total += other.requests_total;
         self.errors_total += other.errors_total;
         self.shed_total += other.shed_total;
+        self.sched_throttled_total += other.sched_throttled_total;
         // connection counters live on the front-end's Metrics only, so
         // summing is the identity for workers
         self.conns_open += other.conns_open;
@@ -604,6 +616,7 @@ impl MetricsHub {
             requests_total: agg.totals.requests_total,
             errors_total: agg.totals.errors_total,
             shed_total: agg.totals.shed_total,
+            sched_throttled_total: agg.totals.sched_throttled_total,
             conns_open: agg.totals.conns_open,
             conns_open_peak: agg.totals.conns_open_peak,
             conns_accepted_total: agg.totals.conns_accepted_total,
@@ -646,6 +659,7 @@ impl MetricsHub {
             ("requests_total", agg.totals.requests_total.into()),
             ("errors_total", agg.totals.errors_total.into()),
             ("shed_total", agg.totals.shed_total.into()),
+            ("sched_throttled_total", agg.totals.sched_throttled_total.into()),
             ("conns_open", agg.totals.conns_open.into()),
             ("conns_open_peak", agg.totals.conns_open_peak.into()),
             ("conns_accepted_total", agg.totals.conns_accepted_total.into()),
@@ -709,6 +723,7 @@ impl MetricsHub {
         put(&mut out, "requests_total", s.requests_total as f64);
         put(&mut out, "errors_total", s.errors_total as f64);
         put(&mut out, "shed_total", s.shed_total as f64);
+        put(&mut out, "sched_throttled_total", s.sched_throttled_total as f64);
         put(&mut out, "conns_open", s.conns_open as f64);
         put(&mut out, "conns_open_peak", s.conns_open_peak as f64);
         put(&mut out, "conns_accepted_total", s.conns_accepted_total as f64);
@@ -972,6 +987,7 @@ mod tests {
         Metrics::inc(&w2.requests_total);
         Metrics::inc(&w2.requests_total);
         Metrics::inc(&front.shed_total);
+        Metrics::add(&front.sched_throttled_total, 4);
         Metrics::inc(&w1.batches_total);
         Metrics::add(&w1.coalesced_total, 2);
         Metrics::inc(&w2.encodes_total);
@@ -982,6 +998,7 @@ mod tests {
         let snap = hub.snapshot();
         assert_eq!(snap.requests_total, 3);
         assert_eq!(snap.shed_total, 1);
+        assert_eq!(snap.sched_throttled_total, 4);
         assert_eq!(snap.batches_total, 1);
         assert_eq!(snap.coalesced_total, 2);
         assert_eq!(snap.encodes_total, 1);

@@ -38,7 +38,7 @@
 use crate::metrics::{Metrics, MetricsHub};
 use crate::net::conn::{Conn, ConnKind};
 use crate::net::sys::{poll_fds, PollFd, Waker, POLLIN, POLLOUT};
-use crate::sched::{Job, ReplyRouter, WireReply};
+use crate::sched::{FairQueue, Job, ReplyRouter, WireReply};
 use crate::session::SharedSessionTable;
 use qpart_proto::frame::{write_binary_frame, write_frame, Frame};
 use qpart_proto::messages::{ErrorReply, HelloReply, Request, Response};
@@ -90,6 +90,8 @@ pub struct ReactorParams {
     pub hub: Arc<MetricsHub>,
     /// Session table (scrape document's `open_sessions`).
     pub sessions: Arc<SharedSessionTable>,
+    /// Per-connection fair-queue token buckets (inert when disabled).
+    pub fair: Arc<FairQueue>,
     /// Cooperative shutdown flag, checked every tick.
     pub stop: Arc<AtomicBool>,
 }
@@ -113,6 +115,7 @@ pub struct Reactor {
     front: Arc<Metrics>,
     hub: Arc<MetricsHub>,
     sessions: Arc<SharedSessionTable>,
+    fair: Arc<FairQueue>,
     stop: Arc<AtomicBool>,
     slots: Vec<Slot>,
     free: Vec<usize>,
@@ -141,6 +144,7 @@ impl Reactor {
             front,
             hub: params.hub,
             sessions: params.sessions,
+            fair: params.fair,
             stop: params.stop,
             slots: Vec::new(),
             free: Vec::new(),
@@ -434,6 +438,17 @@ impl Reactor {
                 .push(response_bytes(&Response::Hello(HelloReply { binary_frames: conn.binary })));
             return;
         }
+        // fair queuing: refuse before the job occupies queue capacity.
+        // The token doubles as the bucket key — generation-stamped, so a
+        // recycled slot starts with a fresh bucket.
+        if self.fair.enabled() && !self.fair.try_admit(token) {
+            Metrics::inc(&self.front.sched_throttled_total);
+            conn.outbox.push(response_bytes(&err_resp(
+                "throttled",
+                "fair queuing: per-connection rate exceeded",
+            )));
+            return;
+        }
         match self.job_tx.try_send(Job::routed(req, token, Arc::clone(&self.router))) {
             Ok(()) => conn.in_flight += 1,
             Err(TrySendError::Full(_)) => {
@@ -487,6 +502,8 @@ impl Reactor {
     /// Bookkeeping for a closed connection: bump the slot generation so
     /// in-flight replies go nowhere, recycle the slot, drop the socket.
     fn release(&mut self, slot: usize, conn: Conn, timed_out: bool) {
+        // drop the fair-queue bucket keyed by the dying token
+        self.fair.forget(((slot as u64) << 32) | self.slots[slot].gen as u64);
         match conn.kind {
             ConnKind::Proto => {
                 self.proto_open -= 1;

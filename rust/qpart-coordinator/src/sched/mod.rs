@@ -23,6 +23,10 @@
 //!   bodies (`qpart_proto::messages::EncodedSegmentBody`) across batches,
 //!   LRU-evicted under a byte budget (`--cache-bytes`), so steady-state
 //!   serving re-encodes only on pattern churn.
+//! * [`fair`] — per-connection fair queuing: a token-bucket rate limiter
+//!   ([`FairQueue`], `--fair-rate`) applied before enqueue so one hot
+//!   device can't starve the rest of the fleet; refusals are surfaced as
+//!   `sched_throttled_total` and a `throttled` error reply.
 //!
 //! Connection threads stamp the shared body with the per-request session
 //! id and objective in whichever framing the session negotiated (JSON
@@ -31,8 +35,10 @@
 
 pub mod batch;
 pub mod cache;
+pub mod fair;
 
 pub use batch::{
     drain_batch, BatchPolicy, DrainOutcome, Job, ReplyRouter, ReplySink, SegmentReply, WireReply,
 };
 pub use cache::{EncodedReplyCache, SegmentKey};
+pub use fair::FairQueue;

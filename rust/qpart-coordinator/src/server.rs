@@ -32,7 +32,9 @@
 
 use crate::decision::DecisionCache;
 use crate::metrics::{Metrics, MetricsHub, MetricsSnapshot};
-use crate::sched::{drain_batch, BatchPolicy, DrainOutcome, EncodedReplyCache, Job, WireReply};
+use crate::sched::{
+    drain_batch, BatchPolicy, DrainOutcome, EncodedReplyCache, FairQueue, Job, WireReply,
+};
 use crate::service::{Service, ServiceOptions};
 use crate::session::SharedSessionTable;
 use qpart_proto::frame::{read_any_frame, write_binary_frame, write_frame, Frame, FrameError};
@@ -101,6 +103,11 @@ use std::time::Duration;
 ///   legitimately go quiet for its whole device-side compute window
 ///   between phase 1 and phase 2, so the connection bound must not be
 ///   tighter than the session bound.
+/// * `fair_rate` — per-connection fair queuing ([`FairQueue`]): sustained
+///   requests/s each connection may enqueue (with a 2-second burst
+///   allowance) before being refused with a `throttled` error
+///   (`sched_throttled_total`). Keeps one hot device from starving the
+///   rest of the fleet. Zero (the default) disables the limiter.
 /// * `metrics_listen` — optional second listen address serving a
 ///   plaintext Prometheus-style scrape of the stats document (the
 ///   pull-only wire `stats` request stays; this is for standard
@@ -147,6 +154,8 @@ pub struct ServerConfig {
     pub max_conns: usize,
     /// Idle/slow-client timeout (zero = never time out).
     pub conn_idle: Duration,
+    /// Per-connection fair-queue admission rate (requests/s; 0 = off).
+    pub fair_rate: f64,
     /// Optional plaintext metrics-scrape listen address.
     pub metrics_listen: Option<String>,
     /// Pre-warm the encoded-reply and compile caches at startup: one
@@ -179,6 +188,7 @@ impl Default for ServerConfig {
             // matches session_ttl: a session-holding device may be
             // silently computing for up to the session's lifetime
             conn_idle: Duration::from_secs(600),
+            fair_rate: 0.0,
             metrics_listen: None,
             warm_cache: false,
             host_fallback: false,
@@ -276,6 +286,8 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
     // one Algorithm-2 decision cache for the whole pool: repeat
     // (model, level, profile) requests skip planning on every worker
     let decision_cache = Arc::new(DecisionCache::new());
+    // per-connection fair-queue token buckets (inert when fair_rate == 0)
+    let fair = Arc::new(FairQueue::new(cfg.fair_rate));
     let stop = Arc::new(AtomicBool::new(false));
 
     // one resident bundle for the whole pool (weights are immutable)
@@ -419,6 +431,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         job_tx,
         Arc::clone(&hub),
         Arc::clone(&sessions),
+        fair,
         Arc::clone(&stop),
     )?;
 
@@ -443,6 +456,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
 /// acceptor thread (both joined by [`ServerHandle::shutdown`]).
 type FrontendThreads = (JoinHandle<()>, Option<JoinHandle<()>>);
 
+#[allow(clippy::too_many_arguments)]
 fn spawn_frontend(
     cfg: &ServerConfig,
     listener: TcpListener,
@@ -450,6 +464,7 @@ fn spawn_frontend(
     job_tx: SyncSender<Job>,
     hub: Arc<MetricsHub>,
     sessions: Arc<SharedSessionTable>,
+    fair: Arc<FairQueue>,
     stop: Arc<AtomicBool>,
 ) -> Result<FrontendThreads, String> {
     #[cfg(unix)]
@@ -464,6 +479,7 @@ fn spawn_frontend(
                 job_tx,
                 hub,
                 sessions,
+                fair,
                 stop,
             })
             .map_err(|e| format!("reactor init: {e}"))?;
@@ -479,6 +495,9 @@ fn spawn_frontend(
     let max_conns = cfg.max_conns.max(1);
     let conn_idle = cfg.conn_idle;
     let accept_stop = Arc::clone(&stop);
+    // fair-queue keys for the threaded front-end: a simple accept sequence
+    // (the reactor keys buckets by its generation-stamped slot token)
+    let conn_seq = Arc::new(std::sync::atomic::AtomicU64::new(0));
     // threaded fallback for the scrape listener: answered inline on the
     // acceptor thread (scrapes are rare and the document is cheap)
     let metrics_thread = match metrics_listener {
@@ -545,6 +564,8 @@ fn spawn_frontend(
                 let job_tx = job_tx.clone();
                 let metrics = Arc::clone(&accept_metrics);
                 let conn_stop = Arc::clone(&accept_stop);
+                let conn_fair = Arc::clone(&fair);
+                let fair_key = conn_seq.fetch_add(1, Ordering::Relaxed);
                 let spawned =
                     std::thread::Builder::new().name("qpart-conn".into()).spawn(move || {
                         connection_loop(
@@ -554,7 +575,10 @@ fn spawn_frontend(
                             conn_stop,
                             binary_allowed,
                             conn_idle,
+                            Arc::clone(&conn_fair),
+                            fair_key,
                         );
+                        conn_fair.forget(fair_key);
                         Metrics::gauge_dec(&metrics.conns_open);
                     });
                 if spawned.is_err() {
@@ -592,6 +616,7 @@ fn write_reply(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn connection_loop(
     stream: TcpStream,
     job_tx: SyncSender<Job>,
@@ -599,6 +624,8 @@ fn connection_loop(
     stop: Arc<AtomicBool>,
     binary_allowed: bool,
     conn_idle: Duration,
+    fair: Arc<FairQueue>,
+    fair_key: u64,
 ) {
     // idle/slow-client timeout via the socket read timeout: the blocking
     // twin of the reactor's idle sweep (a request in flight never trips
@@ -674,6 +701,18 @@ fn connection_loop(
             Metrics::inc(&metrics.requests_total);
             binary = h.binary_frames && binary_allowed;
             let resp = Response::Hello(HelloReply { binary_frames: binary });
+            if write_frame(&mut writer, &resp.to_line()).is_err() {
+                break;
+            }
+            continue;
+        }
+        // fair queuing: refuse before the job occupies queue capacity
+        if fair.enabled() && !fair.try_admit(fair_key) {
+            Metrics::inc(&metrics.sched_throttled_total);
+            let resp = Response::Error(ErrorReply {
+                code: "throttled".into(),
+                message: "fair queuing: per-connection rate exceeded".into(),
+            });
             if write_frame(&mut writer, &resp.to_line()).is_err() {
                 break;
             }

@@ -1,0 +1,246 @@
+//! Chaos-client integration tests: the reactor must survive misbehaving
+//! peers — garbage and truncated binary frames, connections dropped
+//! mid-phase-2, and slow-loris fleets — without stalling workers,
+//! misrouting replies, or leaking connections/sessions. No PJRT required
+//! (synthetic bundle, host-fallback phase 2, raw-socket abuse).
+
+use qpart_coordinator::client::paper_request;
+use qpart_coordinator::testing::{synthetic_bundle, synthetic_upload, tiny_arch, BlockingConn};
+use qpart_coordinator::{serve, ServerConfig};
+use qpart_proto::frame::{read_frame, write_frame};
+use qpart_proto::messages::{Request, Response};
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Poll `f` until it returns true or `deadline` elapses (the reactor
+/// notices closes/timeouts on its next tick, not synchronously).
+fn wait_until<F: Fn() -> bool>(deadline: Duration, f: F) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    f()
+}
+
+#[test]
+fn garbage_and_truncated_frames_get_bad_frame_without_killing_the_reactor() {
+    let dir = synthetic_bundle("chaos-garbage");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    // a well-behaved connection rides along the whole time
+    let mut live = BlockingConn::connect(&addr).unwrap();
+    assert!(matches!(live.call(&Request::Ping).unwrap(), Response::Pong));
+
+    // garbage envelope: total_len far past the frame cap — the server
+    // must answer bad_frame and close, not crash or hang
+    let garbage = TcpStream::connect(&addr).unwrap();
+    garbage.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut w = garbage.try_clone().unwrap();
+    let mut frame = vec![0xB1u8];
+    frame.extend_from_slice(&u32::MAX.to_le_bytes());
+    frame.extend_from_slice(&8u32.to_le_bytes());
+    w.write_all(&frame).unwrap();
+    let mut reader = BufReader::new(garbage);
+    let line = read_frame(&mut reader).expect("bad_frame reply before close");
+    match Response::from_line(&line).unwrap() {
+        Response::Error(e) => assert_eq!(e.code, "bad_frame", "{}", e.message),
+        other => panic!("unexpected {other:?}"),
+    }
+    let mut buf = [0u8; 16];
+    match reader.read(&mut buf) {
+        Ok(0) | Err(_) => {} // closed after the reply
+        Ok(n) => panic!("garbage peer got {n} unexpected bytes"),
+    }
+
+    // truncated envelope: promise 64 bytes, send 3, hang up — EOF mid
+    // frame must be a quiet close, never a routed reply
+    let mut trunc = TcpStream::connect(&addr).unwrap();
+    let mut frame = vec![0xB1u8];
+    frame.extend_from_slice(&64u32.to_le_bytes());
+    frame.extend_from_slice(&16u32.to_le_bytes());
+    frame.extend_from_slice(&[1, 2, 3]);
+    trunc.write_all(&frame).unwrap();
+    drop(trunc);
+
+    // a well-formed binary frame before hello: refused with bad_frame
+    // but the connection STAYS open — JSON still works on it
+    let unheralded = TcpStream::connect(&addr).unwrap();
+    unheralded.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut w = unheralded.try_clone().unwrap();
+    let mut frame = vec![0xB1u8];
+    frame.extend_from_slice(&6u32.to_le_bytes());
+    frame.extend_from_slice(&2u32.to_le_bytes());
+    frame.extend_from_slice(b"xy");
+    w.write_all(&frame).unwrap();
+    let mut reader = BufReader::new(unheralded);
+    match Response::from_line(&read_frame(&mut reader).unwrap()).unwrap() {
+        Response::Error(e) => assert_eq!(e.code, "bad_frame", "{}", e.message),
+        other => panic!("unexpected {other:?}"),
+    }
+    write_frame(&mut w, &Request::Ping.to_line()).unwrap();
+    match Response::from_line(&read_frame(&mut reader).unwrap()).unwrap() {
+        Response::Pong => {}
+        other => panic!("conn closed by pre-hello binary frame: {other:?}"),
+    }
+    drop(reader);
+    drop(w);
+
+    // the reactor kept serving throughout
+    match live.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+        Response::Segment(r) => assert!(r.session > 0),
+        other => panic!("unexpected {other:?}"),
+    }
+    drop(live);
+    assert!(
+        wait_until(Duration::from_secs(5), || handle.snapshot().conns_open == 0),
+        "chaos connections leaked: conns_open = {}",
+        handle.snapshot().conns_open
+    );
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dropping_mid_phase2_leaves_no_orphaned_session_or_misrouted_reply() {
+    let dir = synthetic_bundle("chaos-drop");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        session_ttl: Duration::from_millis(200),
+        host_fallback: true,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+    let arch = tiny_arch();
+
+    // phase 1 only, then vanish: the opened session must be expired by
+    // the TTL sweep, not linger forever
+    let mut ghost = BlockingConn::connect(&addr).unwrap();
+    match ghost.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+        Response::Segment(r) => assert!(r.session > 0),
+        other => panic!("unexpected {other:?}"),
+    }
+    drop(ghost);
+    assert_eq!(handle.sessions.len(), 1, "phase-1 session open");
+    assert!(
+        wait_until(Duration::from_secs(10), || handle.sessions.is_empty()),
+        "orphaned session survived the TTL sweep: {} live",
+        handle.sessions.len()
+    );
+
+    // drop with the phase-2 reply IN FLIGHT: send the upload, hang up
+    // immediately, and verify the reply is dropped by the generation
+    // check — never delivered to an unrelated connection
+    let raw = TcpStream::connect(&addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut w = raw.try_clone().unwrap();
+    write_frame(&mut w, &Request::Infer(paper_request("tinymlp", 0.02)).to_line()).unwrap();
+    let mut reader = BufReader::new(raw);
+    let reply = match Response::from_line(&read_frame(&mut reader).unwrap()).unwrap() {
+        Response::Segment(r) => r,
+        other => panic!("unexpected {other:?}"),
+    };
+    let upload = synthetic_upload(&reply, &arch, 99);
+    write_frame(&mut w, &Request::Activation(upload).to_line()).unwrap();
+    drop(reader);
+    drop(w); // gone before the worker can answer
+
+    // a bystander connected right after must see ONLY its own replies
+    let mut bystander = BlockingConn::connect(&addr).unwrap();
+    for _ in 0..5 {
+        match bystander.call(&Request::Ping).unwrap() {
+            Response::Pong => {}
+            other => panic!("misrouted reply delivered to bystander: {other:?}"),
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // the upload consumed its session; nothing is orphaned
+    assert!(
+        wait_until(Duration::from_secs(10), || handle.sessions.is_empty()),
+        "session leaked after mid-phase-2 drop: {} live",
+        handle.sessions.len()
+    );
+    drop(bystander);
+    assert!(
+        wait_until(Duration::from_secs(5), || handle.snapshot().conns_open == 0),
+        "conns_open stuck at {}",
+        handle.snapshot().conns_open
+    );
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn slow_loris_fleet_is_reaped_while_a_live_client_keeps_being_served() {
+    let dir = synthetic_bundle("chaos-loris");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        conn_idle: Duration::from_millis(200),
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    // a live client pings continuously — its traffic resets the idle
+    // clock, so the sweep must never catch it
+    let pinger = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut conn = BlockingConn::connect(&addr).unwrap();
+            for _ in 0..40 {
+                assert!(matches!(conn.call(&Request::Ping).unwrap(), Response::Pong));
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        })
+    };
+
+    // 32 slow lorises: half a frame each, then silence
+    let fleet: Vec<TcpStream> = (0..32)
+        .map(|_| {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(b"{\"type\":\"pi").unwrap();
+            s
+        })
+        .collect();
+
+    assert!(
+        wait_until(Duration::from_secs(15), || handle.snapshot().conns_timed_out >= 32),
+        "idle sweep reaped only {} of 32 lorises",
+        handle.snapshot().conns_timed_out
+    );
+    // the server really hung up on every one of them
+    for mut s in fleet {
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut buf = [0u8; 16];
+        match s.read(&mut buf) {
+            Ok(0) | Err(_) => {}
+            Ok(n) => panic!("loris got {n} unexpected bytes"),
+        }
+    }
+    pinger.join().unwrap();
+
+    assert!(
+        wait_until(Duration::from_secs(5), || handle.snapshot().conns_open == 0),
+        "loris fleet leaked: conns_open = {}",
+        handle.snapshot().conns_open
+    );
+    let snap = handle.snapshot();
+    assert!(snap.conns_accepted_total >= 33, "accepted {}", snap.conns_accepted_total);
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,135 @@
+//! Per-connection fair-queuing integration tests: `fair_rate` must bound
+//! a hot connection hammering the server while leaving paced peers —
+//! which own independent token buckets — completely untouched, and a
+//! throttled connection must recover once its bucket refills.
+
+use qpart_coordinator::testing::{synthetic_bundle, BlockingConn};
+use qpart_coordinator::{serve, ServerConfig};
+use qpart_proto::messages::{Request, Response};
+use std::time::{Duration, Instant};
+
+#[test]
+fn hot_connection_is_throttled_paced_connections_are_not() {
+    let dir = synthetic_bundle("fair-hot");
+    // 2 req/s sustained, 4-token burst per connection
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        fair_rate: 2.0,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    // the hot client hammers 100 requests back-to-back
+    let mut hot = BlockingConn::connect(&addr).unwrap();
+    let (mut hot_ok, mut hot_throttled) = (0u64, 0u64);
+    for _ in 0..100 {
+        match hot.call(&Request::Ping).unwrap() {
+            Response::Pong => hot_ok += 1,
+            Response::Error(e) if e.code == "throttled" => hot_throttled += 1,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert_eq!(hot_ok + hot_throttled, 100);
+    assert!(hot_ok >= 4, "the burst allowance must admit at least 4, got {hot_ok}");
+    assert!(
+        hot_throttled >= 50,
+        "a hot connection must be rate-bound: only {hot_throttled}/100 throttled"
+    );
+
+    // a paced client on its own connection owns its own bucket: at well
+    // under the sustained rate it is never refused, even while the hot
+    // client's bucket is empty
+    let mut paced = BlockingConn::connect(&addr).unwrap();
+    for i in 0..5 {
+        match paced.call(&Request::Ping).unwrap() {
+            Response::Pong => {}
+            other => panic!("paced request {i} refused: {other:?}"),
+        }
+        std::thread::sleep(Duration::from_millis(600));
+    }
+
+    // the throttled connection was never closed — once the bucket
+    // refills (2 tokens/s) the same socket is served again
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let recovered = loop {
+        match hot.call(&Request::Ping).unwrap() {
+            Response::Pong => break true,
+            Response::Error(e) if e.code == "throttled" => {
+                if Instant::now() > deadline {
+                    break false;
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    };
+    assert!(recovered, "throttled connection never recovered after refill");
+
+    let snap = handle.snapshot();
+    assert!(
+        snap.sched_throttled_total >= hot_throttled,
+        "sched_throttled_total {} < client-observed {hot_throttled}",
+        snap.sched_throttled_total
+    );
+    assert_eq!(snap.errors_total, 0, "throttling must not be counted as an error");
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn zero_fair_rate_disables_throttling_entirely() {
+    let dir = synthetic_bundle("fair-off");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let mut conn = BlockingConn::connect(&handle.addr.to_string()).unwrap();
+    for _ in 0..50 {
+        assert!(matches!(conn.call(&Request::Ping).unwrap(), Response::Pong));
+    }
+    assert_eq!(handle.snapshot().sched_throttled_total, 0);
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fresh_connections_start_with_a_fresh_bucket() {
+    let dir = synthetic_bundle("fair-fresh");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        fair_rate: 1.0,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    // exhaust one connection's burst (2 tokens at rate 1)...
+    let mut first = BlockingConn::connect(&addr).unwrap();
+    let mut refused = false;
+    for _ in 0..20 {
+        if matches!(first.call(&Request::Ping).unwrap(), Response::Error(_)) {
+            refused = true;
+            break;
+        }
+    }
+    assert!(refused, "20 instant requests never hit the 2-token burst cap");
+    drop(first);
+
+    // ...a replacement connection (possibly reusing the reactor slot) is
+    // not haunted by the dead connection's empty bucket
+    let mut second = BlockingConn::connect(&addr).unwrap();
+    match second.call(&Request::Ping).unwrap() {
+        Response::Pong => {}
+        other => panic!("fresh connection inherited an empty bucket: {other:?}"),
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

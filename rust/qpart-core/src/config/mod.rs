@@ -67,6 +67,11 @@ pub struct ServingConfig {
     /// default matches `session_ttl_secs` — a device may legitimately
     /// be silent for its whole device-side compute window).
     pub conn_idle_secs: u64,
+    /// Per-connection fair-queuing rate in requests/s (0 = disabled):
+    /// each connection may sustain this many admissions per second (with
+    /// a 2 s burst allowance); excess requests are refused with a
+    /// `throttled` error instead of occupying queue capacity.
+    pub fair_rate: f64,
     /// Plaintext metrics-scrape listen address ("" = disabled).
     pub metrics_listen: String,
     /// Pre-warm the encoded-reply and compile caches at startup
@@ -112,6 +117,7 @@ impl Config {
                     ("binary_frames", true.into()),
                     ("max_conns", 4096u64.into()),
                     ("conn_idle_secs", 600u64.into()),
+                    ("fair_rate", 0u64.into()),
                     ("metrics_listen", "".into()),
                     ("warm_cache", false.into()),
                     ("artifacts_dir", "artifacts".into()),
@@ -237,6 +243,7 @@ impl Config {
             binary_frames: srv.opt_bool("binary_frames", true),
             max_conns: srv.opt_f64("max_conns", 4096.0) as usize,
             conn_idle_secs: srv.opt_f64("conn_idle_secs", 600.0) as u64,
+            fair_rate: srv.opt_f64("fair_rate", 0.0),
             metrics_listen: srv.opt_str("metrics_listen", "").to_string(),
             warm_cache: srv.opt_bool("warm_cache", false),
             artifacts_dir: srv.opt_str("artifacts_dir", "artifacts").to_string(),
@@ -297,6 +304,7 @@ mod tests {
         assert!(!srv.warm_cache, "warming is opt-in");
         assert_eq!(srv.max_conns, 4096);
         assert_eq!(srv.conn_idle_secs, 600);
+        assert_eq!(srv.fair_rate, 0.0, "fair queuing is opt-in");
         assert_eq!(srv.metrics_listen, "", "scrape listener is opt-in");
         let mut cfg = Config::defaults();
         cfg.set_override("serving.batch_window_us=2500").unwrap();
@@ -306,6 +314,7 @@ mod tests {
         cfg.set_override("serving.warm_cache=true").unwrap();
         cfg.set_override("serving.max_conns=128").unwrap();
         cfg.set_override("serving.conn_idle_secs=5").unwrap();
+        cfg.set_override("serving.fair_rate=2.5").unwrap();
         cfg.set_override("serving.metrics_listen=127.0.0.1:9100").unwrap();
         let srv = cfg.serving().unwrap();
         assert_eq!(srv.batch_window_us, 2500);
@@ -315,6 +324,7 @@ mod tests {
         assert!(srv.warm_cache);
         assert_eq!(srv.max_conns, 128);
         assert_eq!(srv.conn_idle_secs, 5);
+        assert_eq!(srv.fair_rate, 2.5);
         assert_eq!(srv.metrics_listen, "127.0.0.1:9100");
     }
 

@@ -15,15 +15,20 @@
 //!   autoencoder) used by the Fig. 5/7/8/9/10 benches.
 //! * [`fleet`] — the discrete-event fleet simulation driving Fig. 5-style
 //!   dynamics and the `qpart sim` subcommand.
+//! * [`scenario`] — declarative multi-phase workload scenarios (flash
+//!   crowds, diurnal load, fading shifts, upload storms) replayable
+//!   deterministically and exportable as request traces.
 
 pub mod comm;
 pub mod device;
 pub mod fleet;
 pub mod perf;
+pub mod scenario;
 pub mod schemes;
 pub mod workload;
 
 pub use fleet::{FleetConfig, FleetReport, run_fleet};
 pub use perf::{PerfCollector, RequestRecord, Summary};
+pub use scenario::{Phase, RatePattern, Scenario, Trace, TraceEvent};
 pub use schemes::{scheme_cost, Scheme, SchemeCost};
 pub use workload::{DeviceClass, WorkloadConfig, WorkloadGen};

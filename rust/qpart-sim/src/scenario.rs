@@ -1,0 +1,638 @@
+//! Scenario engine: declarative multi-phase workloads over the fleet
+//! (paper §I's shifting edge population — flash crowds, diurnal load,
+//! channel fading mid-session, device-class mix changes, phase-2 upload
+//! storms).
+//!
+//! A scenario is a small line-based text format (serde-free, like the
+//! config files) composing phases over [`DeviceClass`] populations:
+//!
+//! ```text
+//! # flash crowd: calm, then a steep arrival ramp, then decay
+//! scenario flashcrowd
+//! seed 42
+//! devices 64
+//! phase calm duration 1 rate 10
+//! phase surge duration 1.5 rate ramp 10 150
+//! phase decay duration 1 rate ramp 150 20
+//! ```
+//!
+//! Phase attributes: `duration <s>`, `rate <r>` | `rate ramp <from> <to>` |
+//! `rate diurnal <mean> <amp> <period_s>`, `snr <scale>` (channel-fading
+//! shift applied to every request in the phase), `mix a=w,b=w` (device-class
+//! mix override for event targeting), `phase2 <n>` (uploads per request —
+//! an upload storm when > 1).
+//!
+//! Generation is deterministic from the seed via labeled substreams
+//! ([`Rng::from_label`]) and uses thinning for the inhomogeneous-Poisson
+//! patterns, so the same file + seed always yields the same [`Trace`]. A
+//! trace exports to text and ingests back byte-identically.
+
+use crate::workload::DeviceClass;
+use qpart_core::rng::Rng;
+
+/// Arrival-rate pattern within one phase (requests/s over phase-local time).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RatePattern {
+    /// Constant rate.
+    Constant(f64),
+    /// Linear ramp from `from` at phase start to `to` at phase end.
+    Ramp { from: f64, to: f64 },
+    /// Sinusoid: `mean + amplitude * sin(2π t / period_s)`, clamped at 0.
+    Diurnal { mean: f64, amplitude: f64, period_s: f64 },
+}
+
+impl RatePattern {
+    /// Instantaneous rate at phase-local time `u` (seconds into the phase).
+    pub fn rate_at(&self, u: f64, duration_s: f64) -> f64 {
+        match *self {
+            RatePattern::Constant(r) => r.max(0.0),
+            RatePattern::Ramp { from, to } => {
+                let frac = if duration_s > 0.0 { (u / duration_s).clamp(0.0, 1.0) } else { 0.0 };
+                (from + (to - from) * frac).max(0.0)
+            }
+            RatePattern::Diurnal { mean, amplitude, period_s } => {
+                let w = if period_s > 0.0 {
+                    (2.0 * std::f64::consts::PI * u / period_s).sin()
+                } else {
+                    0.0
+                };
+                (mean + amplitude * w).max(0.0)
+            }
+        }
+    }
+
+    /// Upper bound on the rate over the phase (the thinning envelope).
+    pub fn max_rate(&self) -> f64 {
+        match *self {
+            RatePattern::Constant(r) => r.max(0.0),
+            RatePattern::Ramp { from, to } => from.max(to).max(0.0),
+            RatePattern::Diurnal { mean, amplitude, .. } => (mean + amplitude.abs()).max(0.0),
+        }
+    }
+}
+
+/// One phase of a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    pub name: String,
+    pub duration_s: f64,
+    pub rate: RatePattern,
+    /// Channel-capacity scale applied to requests arriving in this phase
+    /// (1.0 = nominal; < 1 models fading).
+    pub snr_scale: f64,
+    /// Optional device-class mix override: events in this phase target
+    /// classes by these weights instead of the population mix.
+    pub mix: Option<Vec<(String, f64)>>,
+    /// Phase-2 activation uploads per request (≥ 1; > 1 is an upload storm).
+    pub phase2_uploads: u32,
+}
+
+impl Phase {
+    fn new(name: &str) -> Phase {
+        Phase {
+            name: name.to_string(),
+            duration_s: 1.0,
+            rate: RatePattern::Constant(10.0),
+            snr_scale: 1.0,
+            mix: None,
+            phase2_uploads: 1,
+        }
+    }
+}
+
+/// A declarative multi-phase workload scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub seed: u64,
+    /// Device population size.
+    pub devices: usize,
+    pub phases: Vec<Phase>,
+}
+
+/// One generated request in a [`Trace`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Absolute arrival time from scenario start (s).
+    pub arrival_s: f64,
+    /// Device index in `[0, devices)`.
+    pub device: usize,
+    /// Device-class name (from the population assignment).
+    pub class: String,
+    pub accuracy_budget: f64,
+    /// Channel scale of the phase the event arrived in.
+    pub snr_scale: f64,
+    /// Phase-2 uploads this request performs.
+    pub phase2_uploads: u32,
+}
+
+/// A fully materialised request trace — exportable/ingestible as text.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+fn parse_f64(tok: &str, what: &str) -> Result<f64, String> {
+    tok.parse::<f64>().map_err(|_| format!("scenario: bad {what} value {tok:?}"))
+}
+
+impl Scenario {
+    /// Parse the line-based scenario format. `#` starts a comment; blank
+    /// lines are ignored.
+    pub fn parse(text: &str) -> Result<Scenario, String> {
+        let mut sc = Scenario {
+            name: "unnamed".to_string(),
+            seed: 1,
+            devices: 16,
+            phases: Vec::new(),
+        };
+        for (ln, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                Some(i) => &raw[..i],
+                None => raw,
+            };
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            if toks.is_empty() {
+                continue;
+            }
+            let err = |msg: String| format!("scenario line {}: {}", ln + 1, msg);
+            match toks[0] {
+                "scenario" => {
+                    sc.name = toks.get(1).ok_or_else(|| err("missing name".into()))?.to_string();
+                }
+                "seed" => {
+                    let t = toks.get(1).ok_or_else(|| err("missing seed".into()))?;
+                    sc.seed = t.parse::<u64>().map_err(|_| err(format!("bad seed {t:?}")))?;
+                }
+                "devices" => {
+                    let t = toks.get(1).ok_or_else(|| err("missing devices".into()))?;
+                    sc.devices =
+                        t.parse::<usize>().map_err(|_| err(format!("bad devices {t:?}")))?;
+                    if sc.devices == 0 {
+                        return Err(err("devices must be > 0".into()));
+                    }
+                }
+                "phase" => {
+                    let name = toks.get(1).ok_or_else(|| err("missing phase name".into()))?;
+                    let mut ph = Phase::new(name);
+                    let mut i = 2;
+                    while i < toks.len() {
+                        match toks[i] {
+                            "duration" => {
+                                let t = toks
+                                    .get(i + 1)
+                                    .ok_or_else(|| err("duration needs a value".into()))?;
+                                ph.duration_s = parse_f64(t, "duration").map_err(&err)?;
+                                i += 2;
+                            }
+                            "rate" => {
+                                let t = toks
+                                    .get(i + 1)
+                                    .ok_or_else(|| err("rate needs a value".into()))?;
+                                match *t {
+                                    "ramp" => {
+                                        let a = toks.get(i + 2).ok_or_else(|| {
+                                            err("rate ramp needs <from> <to>".into())
+                                        })?;
+                                        let b = toks.get(i + 3).ok_or_else(|| {
+                                            err("rate ramp needs <from> <to>".into())
+                                        })?;
+                                        ph.rate = RatePattern::Ramp {
+                                            from: parse_f64(a, "ramp from").map_err(&err)?,
+                                            to: parse_f64(b, "ramp to").map_err(&err)?,
+                                        };
+                                        i += 4;
+                                    }
+                                    "diurnal" => {
+                                        let m = toks.get(i + 2).ok_or_else(|| {
+                                            err("rate diurnal needs <mean> <amp> <period>".into())
+                                        })?;
+                                        let a = toks.get(i + 3).ok_or_else(|| {
+                                            err("rate diurnal needs <mean> <amp> <period>".into())
+                                        })?;
+                                        let p = toks.get(i + 4).ok_or_else(|| {
+                                            err("rate diurnal needs <mean> <amp> <period>".into())
+                                        })?;
+                                        ph.rate = RatePattern::Diurnal {
+                                            mean: parse_f64(m, "diurnal mean").map_err(&err)?,
+                                            amplitude: parse_f64(a, "diurnal amp")
+                                                .map_err(&err)?,
+                                            period_s: parse_f64(p, "diurnal period")
+                                                .map_err(&err)?,
+                                        };
+                                        i += 5;
+                                    }
+                                    _ => {
+                                        ph.rate = RatePattern::Constant(
+                                            parse_f64(t, "rate").map_err(&err)?,
+                                        );
+                                        i += 2;
+                                    }
+                                }
+                            }
+                            "snr" => {
+                                let t = toks
+                                    .get(i + 1)
+                                    .ok_or_else(|| err("snr needs a value".into()))?;
+                                ph.snr_scale = parse_f64(t, "snr").map_err(&err)?;
+                                i += 2;
+                            }
+                            "phase2" => {
+                                let t = toks
+                                    .get(i + 1)
+                                    .ok_or_else(|| err("phase2 needs a count".into()))?;
+                                ph.phase2_uploads = t
+                                    .parse::<u32>()
+                                    .map_err(|_| err(format!("bad phase2 count {t:?}")))?
+                                    .max(1);
+                                i += 2;
+                            }
+                            "mix" => {
+                                let t = toks
+                                    .get(i + 1)
+                                    .ok_or_else(|| err("mix needs a=w,b=w".into()))?;
+                                let mut mix = Vec::new();
+                                for part in t.split(',') {
+                                    let (cls, w) = part
+                                        .split_once('=')
+                                        .ok_or_else(|| err(format!("bad mix entry {part:?}")))?;
+                                    mix.push((
+                                        cls.to_string(),
+                                        parse_f64(w, "mix weight").map_err(&err)?,
+                                    ));
+                                }
+                                ph.mix = Some(mix);
+                                i += 2;
+                            }
+                            other => {
+                                return Err(err(format!("unknown phase attribute {other:?}")));
+                            }
+                        }
+                    }
+                    if ph.duration_s <= 0.0 || !ph.duration_s.is_finite() {
+                        return Err(err("phase duration must be > 0".into()));
+                    }
+                    sc.phases.push(ph);
+                }
+                other => return Err(err(format!("unknown directive {other:?}"))),
+            }
+        }
+        if sc.phases.is_empty() {
+            return Err("scenario: no phases".to_string());
+        }
+        Ok(sc)
+    }
+
+    /// Canonical text form (parses back to an equal scenario).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("scenario {}\n", self.name));
+        out.push_str(&format!("seed {}\n", self.seed));
+        out.push_str(&format!("devices {}\n", self.devices));
+        for ph in &self.phases {
+            out.push_str(&format!("phase {} duration {}", ph.name, ph.duration_s));
+            match ph.rate {
+                RatePattern::Constant(r) => out.push_str(&format!(" rate {r}")),
+                RatePattern::Ramp { from, to } => out.push_str(&format!(" rate ramp {from} {to}")),
+                RatePattern::Diurnal { mean, amplitude, period_s } => {
+                    out.push_str(&format!(" rate diurnal {mean} {amplitude} {period_s}"))
+                }
+            }
+            if ph.snr_scale != 1.0 {
+                out.push_str(&format!(" snr {}", ph.snr_scale));
+            }
+            if let Some(mix) = &ph.mix {
+                let parts: Vec<String> =
+                    mix.iter().map(|(c, w)| format!("{c}={w}")).collect();
+                out.push_str(&format!(" mix {}", parts.join(",")));
+            }
+            if ph.phase2_uploads > 1 {
+                out.push_str(&format!(" phase2 {}", ph.phase2_uploads));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Names accepted by [`Scenario::builtin`].
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["flashcrowd", "diurnal", "storm"]
+    }
+
+    /// Built-in scenarios (short horizons, sized for CI soaks).
+    pub fn builtin(name: &str) -> Option<Scenario> {
+        let text = match name {
+            "flashcrowd" => {
+                "scenario flashcrowd\nseed 42\ndevices 64\n\
+                 phase calm duration 1 rate 10\n\
+                 phase surge duration 1.5 rate ramp 10 150\n\
+                 phase decay duration 1 rate ramp 150 20\n"
+            }
+            "diurnal" => {
+                "scenario diurnal\nseed 7\ndevices 32\n\
+                 phase day duration 4 rate diurnal 40 30 2\n"
+            }
+            "storm" => {
+                "scenario storm\nseed 11\ndevices 32\n\
+                 phase calm duration 1 rate 20\n\
+                 phase storm duration 1.5 rate 40 snr 0.5 phase2 4\n"
+            }
+            _ => return None,
+        };
+        Some(Scenario::parse(text).expect("builtin scenario must parse"))
+    }
+
+    /// Total scenario duration (s).
+    pub fn total_duration_s(&self) -> f64 {
+        self.phases.iter().map(|p| p.duration_s).sum()
+    }
+
+    /// Deterministically materialise the request trace for a device
+    /// population drawn from `classes`.
+    ///
+    /// Uses thinning for the inhomogeneous-Poisson phases and labeled
+    /// substreams so the class assignment, arrival, and per-request draws
+    /// do not perturb each other.
+    pub fn generate(&self, classes: &[DeviceClass]) -> Trace {
+        assert!(!classes.is_empty());
+        if self.devices == 0 {
+            return Trace::default();
+        }
+        // Population assignment (same walk as WorkloadGen, own substream).
+        let mut class_rng = Rng::from_label(self.seed, "scenario/classes");
+        let total_w: f64 = classes.iter().map(|c| c.weight).sum();
+        let mut device_class: Vec<usize> = Vec::with_capacity(self.devices);
+        for _ in 0..self.devices {
+            let mut pick = class_rng.uniform() * total_w;
+            let mut chosen = 0usize;
+            for (ci, c) in classes.iter().enumerate() {
+                if pick < c.weight {
+                    chosen = ci;
+                    break;
+                }
+                pick -= c.weight;
+            }
+            device_class.push(chosen);
+        }
+
+        let mut arrivals = Rng::from_label(self.seed, "scenario/arrivals");
+        let mut requests = Rng::from_label(self.seed, "scenario/requests");
+        let mut events = Vec::new();
+        let mut phase_start = 0.0f64;
+        for ph in &self.phases {
+            // Per-phase device weights: mix override redistributes event
+            // targeting across classes; default is uniform over devices.
+            let weights: Vec<f64> = match &ph.mix {
+                None => vec![1.0; self.devices],
+                Some(mix) => {
+                    let mut class_w = vec![0.0f64; classes.len()];
+                    for (name, w) in mix {
+                        if let Some(ci) = classes.iter().position(|c| c.name == name.as_str()) {
+                            class_w[ci] = w.max(0.0);
+                        }
+                    }
+                    let members: Vec<usize> = (0..classes.len())
+                        .map(|ci| device_class.iter().filter(|&&c| c == ci).count())
+                        .collect();
+                    let per_dev: Vec<f64> = device_class
+                        .iter()
+                        .map(|&ci| if members[ci] > 0 { class_w[ci] / members[ci] as f64 } else { 0.0 })
+                        .collect();
+                    if per_dev.iter().sum::<f64>() > 0.0 {
+                        per_dev
+                    } else {
+                        vec![1.0; self.devices]
+                    }
+                }
+            };
+            let w_total: f64 = weights.iter().sum();
+
+            let rate_max = ph.rate.max_rate();
+            if rate_max > 0.0 {
+                let mut u = 0.0f64;
+                loop {
+                    u += arrivals.exponential(1.0 / rate_max);
+                    if u >= ph.duration_s {
+                        break;
+                    }
+                    // Thinning: accept with prob rate(u)/rate_max.
+                    if arrivals.uniform() * rate_max > ph.rate.rate_at(u, ph.duration_s) {
+                        continue;
+                    }
+                    // Weighted device pick.
+                    let mut pick = requests.uniform() * w_total;
+                    let mut device = self.devices - 1;
+                    for (di, w) in weights.iter().enumerate() {
+                        if pick < *w {
+                            device = di;
+                            break;
+                        }
+                        pick -= w;
+                    }
+                    let class = &classes[device_class[device]];
+                    let accuracy_budget = *requests.choose(&class.accuracy_budgets);
+                    events.push(TraceEvent {
+                        arrival_s: phase_start + u,
+                        device,
+                        class: class.name.to_string(),
+                        accuracy_budget,
+                        snr_scale: ph.snr_scale,
+                        phase2_uploads: ph.phase2_uploads,
+                    });
+                }
+            }
+            phase_start += ph.duration_s;
+        }
+        Trace { events }
+    }
+}
+
+impl Trace {
+    /// Export as text. f64 fields use the shortest round-trip
+    /// representation, so `parse(to_text())` reproduces the trace and
+    /// re-exporting is byte-identical.
+    pub fn to_text(&self) -> String {
+        let mut out = String::from("trace v1\n");
+        for e in &self.events {
+            out.push_str(&format!(
+                "{} {} {} {} {} {}\n",
+                e.arrival_s, e.device, e.class, e.accuracy_budget, e.snr_scale, e.phase2_uploads
+            ));
+        }
+        out
+    }
+
+    /// Ingest a text trace produced by [`Trace::to_text`].
+    pub fn parse(text: &str) -> Result<Trace, String> {
+        let mut lines = text.lines();
+        match lines.next() {
+            Some("trace v1") => {}
+            other => return Err(format!("trace: bad header {other:?}")),
+        }
+        let mut events = Vec::new();
+        for (ln, raw) in lines.enumerate() {
+            let toks: Vec<&str> = raw.split_whitespace().collect();
+            if toks.is_empty() {
+                continue;
+            }
+            if toks.len() != 6 {
+                return Err(format!("trace line {}: expected 6 fields", ln + 2));
+            }
+            let err = |f: &str| format!("trace line {}: bad {f}", ln + 2);
+            events.push(TraceEvent {
+                arrival_s: toks[0].parse().map_err(|_| err("arrival"))?,
+                device: toks[1].parse().map_err(|_| err("device"))?,
+                class: toks[2].to_string(),
+                accuracy_budget: toks[3].parse().map_err(|_| err("budget"))?,
+                snr_scale: toks[4].parse().map_err(|_| err("snr"))?,
+                phase2_uploads: toks[5].parse().map_err(|_| err("phase2"))?,
+            });
+        }
+        Ok(Trace { events })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet() -> Vec<DeviceClass> {
+        DeviceClass::default_fleet()
+    }
+
+    #[test]
+    fn builtins_parse_and_generate() {
+        for name in Scenario::builtin_names() {
+            let sc = Scenario::builtin(name).unwrap();
+            assert_eq!(sc.name, *name);
+            let trace = sc.generate(&fleet());
+            assert!(!trace.events.is_empty(), "{name} generated no events");
+            // sorted arrivals within the horizon
+            assert!(trace
+                .events
+                .windows(2)
+                .all(|w| w[0].arrival_s <= w[1].arrival_s));
+            let horizon = sc.total_duration_s();
+            assert!(trace.events.iter().all(|e| e.arrival_s < horizon));
+        }
+        assert!(Scenario::builtin("nope").is_none());
+    }
+
+    #[test]
+    fn same_seed_same_trace() {
+        let sc = Scenario::builtin("flashcrowd").unwrap();
+        let a = sc.generate(&fleet()).to_text();
+        let b = sc.generate(&fleet()).to_text();
+        assert_eq!(a, b);
+        // and a different seed genuinely differs
+        let mut sc2 = sc.clone();
+        sc2.seed = 999;
+        assert_ne!(a, sc2.generate(&fleet()).to_text());
+    }
+
+    #[test]
+    fn scenario_text_round_trips() {
+        let sc = Scenario::builtin("storm").unwrap();
+        let text = sc.to_text();
+        let back = Scenario::parse(&text).unwrap();
+        assert_eq!(sc, back);
+        assert_eq!(text, back.to_text());
+    }
+
+    #[test]
+    fn trace_round_trips_byte_identically() {
+        let sc = Scenario::builtin("flashcrowd").unwrap();
+        let trace = sc.generate(&fleet());
+        let text = trace.to_text();
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(trace, back);
+        assert_eq!(text, back.to_text());
+    }
+
+    #[test]
+    fn ramp_rates_match_declaration() {
+        // One long ramp 10 → 110 over 10 s: early window ≈ rate 20,
+        // late window ≈ rate 100 (integral of the ramp over the window).
+        let sc = Scenario::parse(
+            "scenario ramp\nseed 5\ndevices 16\nphase r duration 10 rate ramp 10 110\n",
+        )
+        .unwrap();
+        let trace = sc.generate(&fleet());
+        let early =
+            trace.events.iter().filter(|e| e.arrival_s < 2.0).count() as f64;
+        let late = trace
+            .events
+            .iter()
+            .filter(|e| e.arrival_s >= 8.0)
+            .count() as f64;
+        // expected counts: ∫rate = 40 (early), 200 (late); generous ±
+        assert!((15.0..80.0).contains(&early), "early={early}");
+        assert!((140.0..270.0).contains(&late), "late={late}");
+        assert!(late > early * 2.0, "ramp should accelerate: {early} vs {late}");
+    }
+
+    #[test]
+    fn diurnal_oscillates() {
+        let sc = Scenario::parse(
+            "scenario d\nseed 9\ndevices 16\nphase day duration 8 rate diurnal 60 50 4\n",
+        )
+        .unwrap();
+        let trace = sc.generate(&fleet());
+        // peak half-periods [0,2) and [4,6) vs trough halves [2,4), [6,8)
+        let peak = trace
+            .events
+            .iter()
+            .filter(|e| (e.arrival_s % 4.0) < 2.0)
+            .count() as f64;
+        let trough = trace.events.len() as f64 - peak;
+        assert!(peak > trough * 1.5, "peak={peak} trough={trough}");
+    }
+
+    #[test]
+    fn mix_targets_named_classes() {
+        let sc = Scenario::parse(
+            "scenario m\nseed 3\ndevices 64\n\
+             phase only duration 4 rate 50 mix sensor=1\n",
+        )
+        .unwrap();
+        let trace = sc.generate(&fleet());
+        assert!(!trace.events.is_empty());
+        assert!(trace.events.iter().all(|e| e.class == "sensor"), "mix leaked classes");
+    }
+
+    #[test]
+    fn storm_phase_attributes_propagate() {
+        let sc = Scenario::builtin("storm").unwrap();
+        let trace = sc.generate(&fleet());
+        let calm: Vec<_> =
+            trace.events.iter().filter(|e| e.arrival_s < 1.0).collect();
+        let storm: Vec<_> =
+            trace.events.iter().filter(|e| e.arrival_s >= 1.0).collect();
+        assert!(!calm.is_empty() && !storm.is_empty());
+        assert!(calm.iter().all(|e| e.phase2_uploads == 1 && e.snr_scale == 1.0));
+        assert!(storm.iter().all(|e| e.phase2_uploads == 4 && e.snr_scale == 0.5));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Scenario::parse("").is_err());
+        assert!(Scenario::parse("bogus 1\n").is_err());
+        assert!(Scenario::parse("phase p duration x rate 5\n").is_err());
+        assert!(Scenario::parse("phase p duration 1 rate ramp 5\n").is_err());
+        assert!(Scenario::parse("scenario s\nphase p duration 1 wat 2\n").is_err());
+        assert!(Trace::parse("nope\n").is_err());
+        assert!(Trace::parse("trace v1\n1 2 phone\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let sc = Scenario::parse(
+            "# a comment\n\nscenario c # trailing\nseed 2\ndevices 8\n\
+             phase p duration 2 rate 30\n",
+        )
+        .unwrap();
+        assert_eq!(sc.name, "c");
+        assert_eq!(sc.devices, 8);
+        assert_eq!(sc.phases.len(), 1);
+    }
+}

@@ -86,22 +86,28 @@ pub struct RequestEvent {
 }
 
 /// Generates the fleet and the arrival sequence.
+///
+/// Randomness is split into labeled substreams ([`Rng::from_label`]): class
+/// assignment, arrival times, and per-request draws each consume their own
+/// stream, so changing the fleet composition (or `n_devices`) does not
+/// perturb arrival times, and vice versa.
 pub struct WorkloadGen {
     pub devices: Vec<(DeviceProfile, &'static str)>,
     pub device_budgets: Vec<Vec<f64>>,
-    rng: Rng,
+    arrivals: Rng,
+    requests: Rng,
     cfg: WorkloadConfig,
 }
 
 impl WorkloadGen {
     pub fn new(cfg: WorkloadConfig, classes: &[DeviceClass]) -> WorkloadGen {
         assert!(!classes.is_empty());
-        let mut rng = Rng::new(cfg.seed);
+        let mut class_rng = Rng::from_label(cfg.seed, "workload/classes");
         let total_w: f64 = classes.iter().map(|c| c.weight).sum();
         let mut devices = Vec::with_capacity(cfg.n_devices);
         let mut device_budgets = Vec::with_capacity(cfg.n_devices);
         for _ in 0..cfg.n_devices {
-            let mut pick = rng.uniform() * total_w;
+            let mut pick = class_rng.uniform() * total_w;
             let mut chosen = &classes[0];
             for c in classes {
                 if pick < c.weight {
@@ -113,7 +119,13 @@ impl WorkloadGen {
             devices.push((chosen.profile, chosen.name));
             device_budgets.push(chosen.accuracy_budgets.clone());
         }
-        WorkloadGen { devices, device_budgets, rng, cfg }
+        WorkloadGen {
+            devices,
+            device_budgets,
+            arrivals: Rng::from_label(cfg.seed, "workload/arrivals"),
+            requests: Rng::from_label(cfg.seed, "workload/requests"),
+            cfg,
+        }
     }
 
     /// Generate the full arrival sequence (sorted by time).
@@ -121,13 +133,13 @@ impl WorkloadGen {
         let mut events = Vec::new();
         let mut t = 0.0;
         loop {
-            t += self.rng.exponential(1.0 / self.cfg.arrival_rate);
+            t += self.arrivals.exponential(1.0 / self.cfg.arrival_rate);
             if t >= self.cfg.duration_s {
                 break;
             }
-            let device = self.rng.range_usize(0, self.devices.len());
+            let device = self.requests.range_usize(0, self.devices.len());
             let budgets = &self.device_budgets[device];
-            let accuracy_budget = *self.rng.choose(budgets);
+            let accuracy_budget = *self.requests.choose(budgets);
             events.push(RequestEvent { arrival_s: t, device, accuracy_budget });
         }
         events
@@ -181,6 +193,65 @@ mod tests {
             .map(|e| e.arrival_s)
             .collect();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn arrivals_survive_fleet_changes() {
+        // The labeled-substream split: adding a device class (and growing the
+        // population) must not perturb the arrival-time stream.
+        let cfg = WorkloadConfig::default();
+        let base: Vec<f64> = WorkloadGen::new(cfg.clone(), &DeviceClass::default_fleet())
+            .events()
+            .iter()
+            .map(|e| e.arrival_s)
+            .collect();
+        let mut classes = DeviceClass::default_fleet();
+        classes.push(DeviceClass {
+            name: "glasses",
+            profile: qpart_core::cost::DeviceProfile::paper_default(),
+            weight: 0.15,
+            accuracy_budgets: vec![0.01],
+        });
+        let grown = WorkloadConfig { n_devices: 64, ..cfg };
+        let with_extra: Vec<f64> = WorkloadGen::new(grown, &classes)
+            .events()
+            .iter()
+            .map(|e| e.arrival_s)
+            .collect();
+        assert_eq!(base, with_extra);
+    }
+
+    #[test]
+    fn default_fleet_first_events_pinned() {
+        // Regression pin: the first 16 events of the default fleet. Any
+        // change to stream layout or distribution code shows up here.
+        let mut gen =
+            WorkloadGen::new(WorkloadConfig::default(), &DeviceClass::default_fleet());
+        let got: Vec<String> = gen
+            .events()
+            .iter()
+            .take(16)
+            .map(|e| format!("{:.4}|{}|{}", e.arrival_s, e.device, e.accuracy_budget))
+            .collect();
+        let expected = vec![
+            "0.1002|8|0.02".to_string(),
+            "0.1039|1|0.01".to_string(),
+            "0.1245|8|0.02".to_string(),
+            "0.1265|11|0.01".to_string(),
+            "0.1506|13|0.05".to_string(),
+            "0.2035|13|0.05".to_string(),
+            "0.2485|13|0.05".to_string(),
+            "0.2486|10|0.005".to_string(),
+            "0.3044|13|0.05".to_string(),
+            "0.3485|13|0.05".to_string(),
+            "0.3659|13|0.05".to_string(),
+            "0.3897|10|0.01".to_string(),
+            "0.3911|2|0.01".to_string(),
+            "0.4395|9|0.01".to_string(),
+            "0.5040|11|0.01".to_string(),
+            "0.5096|8|0.05".to_string(),
+        ];
+        assert_eq!(got, expected);
     }
 
     #[test]
