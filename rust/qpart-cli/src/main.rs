@@ -7,6 +7,8 @@
 //!                   [--binary-frames true|false] [--warm-cache] [--host-fallback]
 //!                   [--frontend reactor|threaded] [--max-conns N]
 //!                   [--conn-idle-secs S] [--fair-rate R] [--metrics-listen addr]
+//!                   [--trace-sample P] [--trace-slow-ms MS] [--trace-keep N]
+//!                   [--trace-store N] [--record-trace file]
 //! qpart request     --model mlp6 [--accuracy 0.01] [--n 16] [--addr host:port]
 //!                   [--capacity-bps 2e8] [--clock-hz 2e8] [--artifacts dir] [--binary]
 //! qpart bench-serve [--clients 8] [--requests 32] [--workers 4] [--keys 3]
@@ -16,7 +18,7 @@
 //!                   [--fair-rate R] [--artifacts dir]
 //!                   [--scenario flashcrowd|file] [--time-scale S]
 //!                   [--chaos drop-mid-phase2,garbage-frames,slow-loris,half-open]
-//!                   [--chaos-rate P]
+//!                   [--chaos-rate P] [--trace-out file] [--scrape-check]
 //! qpart sim         [--model mlp6] [--rate 20] [--devices 16] [--duration 10] [--seed 1]
 //! qpart offline     [--model mlp6] [--artifacts dir]
 //! qpart models      [--artifacts dir]
@@ -43,7 +45,7 @@ use qpart::coordinator::client::{paper_request, random_input};
 use qpart::coordinator::testing::{synthetic_upload, BlockingConn};
 use qpart::prelude::*;
 use qpart::proto::messages::{ActivationUpload, HelloRequest, Request, Response};
-use qpart::sim::{Scenario, TraceEvent};
+use qpart::sim::{Scenario, Trace, TraceEvent};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -120,6 +122,21 @@ const USAGE: &str = "usage: qpart <serve|request|bench-serve|sim|offline|models>
                                 (0 = off; default serving.fair_rate = 0)\n\
            [--metrics-listen A] serve a plaintext Prometheus-style scrape of the\n\
                                 stats document on a second listener (default off)\n\
+           [--trace-sample P]   probability an accepted connection is traced\n\
+                                (0 = off, default); traced requests record a\n\
+                                span per pipeline stage, timelines served at\n\
+                                /trace, /trace?id=N and /trace/slow on the\n\
+                                metrics listener\n\
+           [--trace-slow-ms M]  slow-request exemplars: traced timelines\n\
+                                slower than M ms survive store eviction and\n\
+                                are listed worst-first at /trace/slow\n\
+                                (0 = off)\n\
+           [--trace-keep N]     how many slow exemplars to keep (default 8)\n\
+           [--trace-store N]    trace-store capacity in timelines, oldest\n\
+                                evicted first (default 1024)\n\
+           [--record-trace F]   capture live traffic into F in the scenario\n\
+                                engine's 'trace v1' text format, replayable\n\
+                                with bench-serve --scenario F\n\
   request  --model mlp6 --accuracy 0.01 --n 16 --addr 127.0.0.1:7878 [--binary]\n\
   bench-serve  load-test the front-end + dataplane + batched phase-2 execution\n\
            plane (synthetic bundle + host kernels unless --artifacts):\n\
@@ -135,15 +152,23 @@ const USAGE: &str = "usage: qpart <serve|request|bench-serve|sim|offline|models>
            [--sweep workers=1,2,4,8]  run once per value, print a scaling table\n\
            [--csv]                    emit the table as CSV rows (qpart-bench format)\n\
            [--scenario NAME|FILE]     replay a declarative multi-phase scenario\n\
-                                      (builtin: flashcrowd, diurnal, storm; or a\n\
-                                      scenario file) instead of the uniform load;\n\
-                                      reports per-class p50/p99 + Jain fairness\n\
+                                      (builtin: flashcrowd, diurnal, storm; a\n\
+                                      scenario file; or a 'trace v1' capture\n\
+                                      from serve --record-trace) instead of the\n\
+                                      uniform load; reports per-class p50/p99\n\
+                                      + Jain fairness\n\
            [--time-scale S]           multiply scenario arrival times by S\n\
            [--chaos a,b,..]           inject misbehaving peers alongside the\n\
                                       scenario: drop-mid-phase2, garbage-frames,\n\
                                       slow-loris, half-open\n\
            [--chaos-rate P]           per-upload probability of drop-mid-phase2\n\
                                       (default 0.25)\n\
+           [--trace-out F]            trace every request and export the span\n\
+                                      timelines as Chrome trace-event JSON\n\
+                                      (chrome://tracing / Perfetto) to F\n\
+           [--scrape-check]           start a metrics listener and assert that\n\
+                                      /metrics histogram _bucket series parse\n\
+                                      and /trace/slow returns valid JSON\n\
            reports peak open connections + accept-to-first-byte latency (front-end\n\
            scaling), req/s, p50/p99 latency, shed rate, throttled count + Jain\n\
            fairness index, encodes vs requests,\n\
@@ -209,6 +234,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         ),
         fair_rate: args.get_f64("fair-rate", serving.fair_rate)?,
         metrics_listen: if metrics_listen.is_empty() { None } else { Some(metrics_listen) },
+        trace_sample: args.get_f64("trace-sample", 0.0)?,
+        trace_slow_us: (args.get_f64("trace-slow-ms", 0.0)?.max(0.0) * 1000.0) as u64,
+        trace_slow_keep: args.get_usize("trace-keep", 8)?,
+        trace_store: args.get_usize("trace-store", 1024)?,
+        record_trace: args.get("record-trace").map(str::to_string),
         warm_cache: bool_flag(args, "warm-cache", serving.warm_cache)?,
         host_fallback: bool_flag(args, "host-fallback", false)?,
         artifacts_dir: args.get_or("artifacts", &serving.artifacts_dir).to_string(),
@@ -227,10 +257,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         server_cfg.conn_idle,
         server_cfg.fair_rate,
     );
+    let record_path = server_cfg.record_trace.clone();
     let handle = serve(server_cfg)?;
     println!("qpart coordinator listening on {}", handle.addr);
     if let Some(m) = handle.metrics_addr {
         println!("metrics scrape endpoint on http://{m}/metrics");
+        println!("trace timelines on http://{m}/trace (index), /trace?id=N, /trace/slow");
+    }
+    if let Some(path) = record_path {
+        println!("recording live traffic to '{path}' (trace v1, flushed periodically)");
     }
     println!("(ctrl-c to stop)");
     loop {
@@ -532,6 +567,8 @@ fn run_bench_serve(
     let cache_bytes = args.get_usize("cache-bytes", 64 << 20)?;
     let binary = bool_flag(args, "binary-frames", true)?;
     let warm = bool_flag(args, "warm-cache", false)?;
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let scrape_check = bool_flag(args, "scrape-check", false)?;
 
     // the device-side arch spec (for boundary dims of phase-2 uploads)
     let bundle = Bundle::load(artifacts_dir).map_err(|e| e.to_string())?;
@@ -549,6 +586,11 @@ fn run_bench_serve(
         frontend,
         max_conns: args.get_usize("max-conns", 4096)?,
         fair_rate: args.get_f64("fair-rate", 0.0)?,
+        // --trace-out wants every request traced, into a store deep
+        // enough that nothing is evicted before the export
+        trace_sample: if trace_out.is_some() { 1.0 } else { 0.0 },
+        trace_store: if trace_out.is_some() { 65536 } else { 1024 },
+        metrics_listen: if scrape_check { Some("127.0.0.1:0".into()) } else { None },
         warm_cache: warm,
         host_fallback,
         artifacts_dir: artifacts_dir.to_string(),
@@ -591,9 +633,8 @@ fn run_bench_serve(
                     // server allows), evens stay JSON — both paths load
                     let mut bin_session = false;
                     if binary && c % 2 == 1 {
-                        match conn
-                            .call(&Request::Hello(HelloRequest { binary_frames: true }))?
-                        {
+                        let hello = HelloRequest { binary_frames: true, trace: false };
+                        match conn.call(&Request::Hello(hello))? {
                             Response::Hello(h) => bin_session = h.binary_frames,
                             other => return Err(format!("hello: unexpected {other:?}")),
                         }
@@ -805,7 +846,8 @@ fn run_bench_serve(
     if binary {
         let mut json_conn = BlockingConn::connect(&addr)?;
         let mut bin_conn = BlockingConn::connect(&addr)?;
-        match bin_conn.call(&Request::Hello(HelloRequest { binary_frames: true }))? {
+        let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
+        match bin_conn.call(&hello)? {
             Response::Hello(h) if h.binary_frames => {}
             other => return Err(format!("binary negotiation failed: {other:?}")),
         }
@@ -891,8 +933,9 @@ fn run_bench_serve(
             return Err("reactor reply differs from thread-per-connection baseline (JSON)".into());
         }
         if binary {
+            let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
             for conn in [&mut live, &mut base] {
-                match conn.call(&Request::Hello(HelloRequest { binary_frames: true }))? {
+                match conn.call(&hello)? {
                     Response::Hello(h) if h.binary_frames => {}
                     other => return Err(format!("baseline negotiation failed: {other:?}")),
                 }
@@ -954,8 +997,51 @@ fn run_bench_serve(
         final_snap.warmed_total,
         uplink_saved_total,
     );
+    if scrape_check {
+        let maddr = handle.metrics_addr.ok_or("scrape-check: no metrics listener")?;
+        let scrape = http_get(&maddr.to_string(), "/metrics")?;
+        let buckets: Vec<&str> = scrape.lines().filter(|l| l.contains("_bucket{le=")).collect();
+        if buckets.is_empty() {
+            return Err("scrape-check: no histogram _bucket series in /metrics".into());
+        }
+        for line in &buckets {
+            let val = line.rsplit(' ').next().unwrap_or("");
+            val.parse::<u64>()
+                .map_err(|_| format!("scrape-check: unparsable bucket count in '{line}'"))?;
+        }
+        let slow = http_get(&maddr.to_string(), "/trace/slow")?;
+        let v = qpart::core::json::parse(&slow)
+            .map_err(|e| format!("scrape-check: /trace/slow is not JSON: {e}"))?;
+        v.req_arr("slow").map_err(|e| format!("scrape-check: /trace/slow shape: {e}"))?;
+        println!(
+            "scrape-check: {} _bucket series parse as cumulative counts, /trace/slow JSON OK",
+            buckets.len()
+        );
+    }
+    if let Some(path) = &trace_out {
+        let json = handle.trace.chrome_trace_json();
+        std::fs::write(path, &json).map_err(|e| format!("--trace-out {path}: {e}"))?;
+        println!(
+            "trace-out: wrote Chrome trace-event JSON ({} timelines, {} B) to {path}",
+            handle.trace.stored(),
+            json.len()
+        );
+    }
     handle.shutdown();
     Ok(summary.expect("two passes always ran"))
+}
+
+/// One-shot HTTP/1.0 GET against the metrics listener; returns the body.
+fn http_get(addr: &str, path: &str) -> Result<String, String> {
+    let mut s = TcpStream::connect(addr).map_err(|e| format!("GET {path}: {e}"))?;
+    s.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())
+        .map_err(|e| format!("GET {path}: {e}"))?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).map_err(|e| format!("GET {path}: {e}"))?;
+    match buf.split_once("\r\n\r\n") {
+        Some((_, body)) => Ok(body.to_string()),
+        None => Err(format!("GET {path}: malformed HTTP response")),
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1170,15 +1256,26 @@ fn run_bench_scenario(
     synthetic: bool,
 ) -> Result<(), String> {
     let spec = args.get("scenario").expect("dispatch checked --scenario");
+    // --scenario takes a builtin name, a declarative scenario file, or a
+    // `trace v1` capture (e.g. written by `serve --record-trace`):
+    // captures replay verbatim, scenarios generate their trace first
+    let mut capture = None;
     let mut scenario = if Scenario::builtin_names().contains(&spec) {
-        Scenario::builtin(spec).expect("builtin scenario exists")
+        Some(Scenario::builtin(spec).expect("builtin scenario exists"))
     } else {
         let text =
             std::fs::read_to_string(spec).map_err(|e| format!("--scenario {spec}: {e}"))?;
-        Scenario::parse(&text)?
+        if text.starts_with("trace v1") {
+            capture = Some(Trace::parse(&text)?);
+            None
+        } else {
+            Some(Scenario::parse(&text)?)
+        }
     };
-    if args.get("clients").is_some() {
-        scenario.devices = args.get_usize("clients", scenario.devices)?.max(1);
+    if let Some(sc) = &mut scenario {
+        if args.get("clients").is_some() {
+            sc.devices = args.get_usize("clients", sc.devices)?.max(1);
+        }
     }
     let chaos = parse_chaos(args.get_or("chaos", ""))?;
     let time_scale = args.get_f64("time-scale", 1.0)?;
@@ -1207,23 +1304,30 @@ fn run_bench_scenario(
     let arch = bundle.arch(&entry.arch).map_err(|e| e.to_string())?.clone();
     drop(bundle);
 
-    let classes = DeviceClass::default_fleet();
-    let trace = scenario.generate(&classes);
+    let (name, seed, devices, n_phases, horizon_s, trace) = match scenario {
+        Some(sc) => {
+            let trace = sc.generate(&DeviceClass::default_fleet());
+            (sc.name.clone(), sc.seed, sc.devices, sc.phases.len(), sc.total_duration_s(), trace)
+        }
+        None => {
+            let trace = capture.expect("no scenario means a parsed capture");
+            let devices = trace.events.iter().map(|e| e.device + 1).max().unwrap_or(0);
+            let horizon = trace.events.last().map_or(0.0, |e| e.arrival_s);
+            (format!("capture:{spec}"), 1u64, devices, 0usize, horizon, trace)
+        }
+    };
     if trace.events.is_empty() {
-        return Err(format!("scenario '{}' generated no events", scenario.name));
+        return Err(format!("scenario '{name}' generated no events"));
     }
-    let mut per_device: Vec<Vec<TraceEvent>> = vec![Vec::new(); scenario.devices];
+    let mut per_device: Vec<Vec<TraceEvent>> = vec![Vec::new(); devices];
     for e in &trace.events {
         per_device[e.device].push(e.clone());
     }
     println!(
-        "bench-serve scenario '{}': {} phases, {} devices, {} events over {:.2}s \
-         (time-scale {time_scale}), chaos [{}], fair-rate {fair_rate}, frontend {frontend:?}",
-        scenario.name,
-        scenario.phases.len(),
-        scenario.devices,
+        "bench-serve scenario '{name}': {n_phases} phases, {devices} devices, {} events \
+         over {horizon_s:.2}s (time-scale {time_scale}), chaos [{}], fair-rate {fair_rate}, \
+         frontend {frontend:?}",
         trace.events.len(),
-        scenario.total_duration_s(),
         chaos.describe(),
     );
 
@@ -1247,9 +1351,7 @@ fn run_bench_scenario(
     let addr = handle.addr.to_string();
 
     // chaos side-fleets attack while the scenario replays
-    let scaled_run = Duration::from_secs_f64(
-        (scenario.total_duration_s() * time_scale).max(0.0),
-    );
+    let scaled_run = Duration::from_secs_f64((horizon_s * time_scale).max(0.0));
     let patience = conn_idle + scaled_run + Duration::from_secs(20);
     let n_loris = if chaos.slow_loris { 32 } else { 0 };
     let n_half = if chaos.half_open { 16 } else { 0 };
@@ -1260,9 +1362,8 @@ fn run_bench_scenario(
 
     // one replay thread per device with traffic, all released together
     let replay_devices: Vec<usize> =
-        (0..scenario.devices).filter(|&d| !per_device[d].is_empty()).collect();
+        (0..devices).filter(|&d| !per_device[d].is_empty()).collect();
     let barrier = Arc::new(Barrier::new(replay_devices.len()));
-    let seed = scenario.seed;
     let mut joins = Vec::with_capacity(replay_devices.len());
     for dev in replay_devices {
         let events = std::mem::take(&mut per_device[dev]);
@@ -1284,7 +1385,8 @@ fn run_bench_scenario(
                 if !(binary && dev % 2 == 1) {
                     return Ok(false);
                 }
-                match conn.call(&Request::Hello(HelloRequest { binary_frames: true }))? {
+                let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
+                match conn.call(&hello)? {
                     Response::Hello(h) => Ok(h.binary_frames),
                     other => Err(format!("device {dev} hello: unexpected {other:?}")),
                 }
@@ -1445,7 +1547,7 @@ fn run_bench_scenario(
         fleet.absorb(o);
     }
     let mut table = qpart_bench::Table::new(
-        format!("bench-serve scenario {} (model {model})", scenario.name),
+        format!("bench-serve scenario {name} (model {model})"),
         &["class", "devices", "events", "ok", "shed", "throttled", "p50 ms", "p99 ms", "jain"],
     );
     for (name, agg) in &by_class {
@@ -1535,8 +1637,7 @@ fn run_bench_scenario(
         ));
     }
     println!(
-        "scenario '{}' survived: {} ok / {} events, 0 errors, conns open 0",
-        scenario.name,
+        "scenario '{name}' survived: {} ok / {} events, 0 errors, conns open 0",
         fleet.lat_us.len(),
         fleet.events,
     );

@@ -44,6 +44,13 @@
 //!   optionally negotiates binary frames, executes the received quantized
 //!   segment locally through its own PJRT engine, uploads the quantized
 //!   boundary activation.
+//! * [`obs`] — **request-scoped tracing**: per-stage [`obs::Span`]
+//!   timelines (read → admit → queue wait → plan → encode → execute →
+//!   route → flush) collected into per-worker ring buffers and a bounded
+//!   server-wide [`obs::TraceSink`], exposed via `/trace?id=` and
+//!   `/trace/slow` on the metrics listener, slow-request exemplars, and
+//!   Chrome trace-event export; plus the [`obs::TrafficRecorder`] that
+//!   captures live traffic into the scenario engine's `trace v1` format.
 //! * [`metrics`] — per-worker counters + histograms (including
 //!   `queue_wait` and the batching/encode counters), aggregated by a
 //!   [`MetricsHub`] — together with the encoded-reply cache's
@@ -62,6 +69,7 @@ pub mod decision;
 pub mod metrics;
 #[cfg(unix)]
 pub mod net;
+pub mod obs;
 pub mod sched;
 pub mod server;
 pub mod service;
@@ -71,6 +79,7 @@ pub mod testing;
 pub use client::DeviceClient;
 pub use decision::{DecisionCache, DecisionKey, ProfileBucket};
 pub use metrics::{Metrics, MetricsHub, MetricsSnapshot};
+pub use obs::{JobTrace, Stage, TraceSink, TraceStamp, Tracer, TrafficRecorder};
 pub use sched::{BatchPolicy, EncodedReplyCache, Job, ReplyRouter, ReplySink, WireReply};
 pub use server::{serve, Frontend, ServerConfig, ServerHandle};
 pub use service::{Service, ServiceOptions};

@@ -29,14 +29,17 @@
 //! Algorithm-2 memoization counters.
 
 use crate::decision::DecisionCache;
+use crate::obs::TraceSink;
 use crate::sched::EncodedReplyCache;
 use qpart_core::json::Value;
 use qpart_runtime::CompileCache;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Log-spaced latency buckets in microseconds (upper bounds).
-const BUCKETS_US: [u64; 12] =
+/// Log-spaced latency buckets in microseconds (upper bounds). The
+/// Prometheus exposition renders these as cumulative `le` buckets plus a
+/// `+Inf` overflow bucket.
+pub const BUCKETS_US: [u64; 12] =
     [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 1_000_000];
 
 /// A fixed-bucket histogram.
@@ -128,7 +131,10 @@ impl HistogramSummary {
         self.sum_us as f64 / self.count as f64
     }
 
-    /// Approximate quantile from bucket boundaries.
+    /// Approximate quantile from bucket boundaries. Quantiles landing in
+    /// the overflow bucket clamp to the last finite bound rather than
+    /// reporting `inf` — an unplottable, JSON-hostile value for what is
+    /// really just ">1s".
     pub fn quantile_us(&self, q: f64) -> f64 {
         if self.count == 0 {
             return f64::NAN;
@@ -141,7 +147,17 @@ impl HistogramSummary {
                 return BUCKETS_US[i] as f64;
             }
         }
-        f64::INFINITY
+        BUCKETS_US[BUCKETS_US.len() - 1] as f64
+    }
+
+    /// Per-bucket counts (non-cumulative), aligned with [`BUCKETS_US`].
+    pub fn bucket_counts(&self) -> [u64; 12] {
+        self.buckets
+    }
+
+    /// Observations above the last finite bucket bound.
+    pub fn overflow(&self) -> u64 {
+        self.overflow
     }
 
     pub fn to_json(&self) -> Value {
@@ -507,6 +523,7 @@ pub struct MetricsHub {
     segment_cache: Mutex<Option<Arc<EncodedReplyCache>>>,
     compile_cache: Mutex<Option<Arc<CompileCache>>>,
     decision_cache: Mutex<Option<Arc<DecisionCache>>>,
+    trace: Mutex<Option<Arc<TraceSink>>>,
 }
 
 impl MetricsHub {
@@ -560,6 +577,17 @@ impl MetricsHub {
         self.decision_cache.lock().unwrap().clone()
     }
 
+    /// Register the server-wide trace sink so the metrics listener can
+    /// serve `/trace` endpoints and the scrape can expose trace gauges.
+    pub fn register_trace_sink(&self, sink: Arc<TraceSink>) {
+        *self.trace.lock().unwrap() = Some(sink);
+    }
+
+    /// The registered trace sink, if any.
+    pub fn trace_sink(&self) -> Option<Arc<TraceSink>> {
+        self.trace.lock().unwrap().clone()
+    }
+
     pub fn num_workers(&self) -> usize {
         self.workers.lock().unwrap().len()
     }
@@ -597,6 +625,21 @@ impl MetricsHub {
             }
         }
         agg
+    }
+
+    /// Aggregated summary of one named pipeline histogram — `"handle"`,
+    /// `"decide"`, `"quantize"`, `"execute"`, or `"queue_wait"` — for
+    /// tests and tooling that need bucket-level access.
+    pub fn histogram_summary(&self, name: &str) -> Option<HistogramSummary> {
+        let agg = self.aggregate(false);
+        match name {
+            "handle" => Some(agg.handle),
+            "decide" => Some(agg.decide),
+            "quantize" => Some(agg.quantize),
+            "execute" => Some(agg.execute),
+            "queue_wait" => Some(agg.queue_wait),
+            _ => None,
+        }
     }
 
     /// One aggregated snapshot over the front-end and every worker.
@@ -702,55 +745,218 @@ impl MetricsHub {
         v
     }
 
-    /// The plaintext scrape document for the `--metrics-listen` endpoint:
-    /// one `qpart_<name> <value>` line per metric, Prometheus exposition
-    /// style. Non-finite derived values (means before the first sample)
-    /// are omitted rather than printed as `NaN`.
+    /// The plaintext scrape document for the `--metrics-listen` endpoint,
+    /// Prometheus exposition format: `# HELP` / `# TYPE` comments per
+    /// metric, `qpart_<name> <value>` sample lines, and full cumulative
+    /// `le`-labelled `_bucket` series (overflow rendered as `+Inf`) plus
+    /// `_sum` / `_count` for every latency histogram. Non-finite derived
+    /// values (means before the first sample) are omitted rather than
+    /// printed as `NaN`. Slow-request exemplars behind the histograms are
+    /// served at `/trace/slow` on the same listener.
     pub fn render_prometheus(&self) -> String {
-        fn put(out: &mut String, name: &str, v: f64) {
+        fn put(out: &mut String, name: &str, typ: &str, help: &str, v: f64) {
             use std::fmt::Write as _;
             if v.is_finite() {
+                let _ = writeln!(out, "# HELP qpart_{name} {help}");
+                let _ = writeln!(out, "# TYPE qpart_{name} {typ}");
                 let _ = writeln!(out, "qpart_{name} {v}");
             }
         }
-        fn put_hist(out: &mut String, name: &str, count: u64, mean_us: f64) {
-            put(out, &format!("{name}_us_count"), count as f64);
-            let sum = if count == 0 { 0.0 } else { mean_us * count as f64 };
-            put(out, &format!("{name}_us_sum"), sum);
+        fn put_hist(out: &mut String, name: &str, help: &str, h: &HistogramSummary) {
+            use std::fmt::Write as _;
+            let _ = writeln!(out, "# HELP qpart_{name}_us {help}");
+            let _ = writeln!(out, "# TYPE qpart_{name}_us histogram");
+            let mut cum = 0u64;
+            for (i, &ub) in BUCKETS_US.iter().enumerate() {
+                cum += h.bucket_counts()[i];
+                let _ = writeln!(out, "qpart_{name}_us_bucket{{le=\"{ub}\"}} {cum}");
+            }
+            let _ = writeln!(out, "qpart_{name}_us_bucket{{le=\"+Inf\"}} {}", h.count());
+            let _ = writeln!(out, "qpart_{name}_us_sum {}", h.sum_us());
+            let _ = writeln!(out, "qpart_{name}_us_count {}", h.count());
         }
-        let s = self.snapshot();
-        let mut out = String::with_capacity(1536);
-        put(&mut out, "requests_total", s.requests_total as f64);
-        put(&mut out, "errors_total", s.errors_total as f64);
-        put(&mut out, "shed_total", s.shed_total as f64);
-        put(&mut out, "sched_throttled_total", s.sched_throttled_total as f64);
-        put(&mut out, "conns_open", s.conns_open as f64);
-        put(&mut out, "conns_open_peak", s.conns_open_peak as f64);
-        put(&mut out, "conns_accepted_total", s.conns_accepted_total as f64);
-        put(&mut out, "conns_rejected_total", s.conns_rejected_total as f64);
-        put(&mut out, "conns_timed_out", s.conns_timed_out as f64);
-        put(&mut out, "outbox_bytes", s.outbox_bytes as f64);
-        put(&mut out, "outbox_bytes_peak", s.outbox_bytes_peak as f64);
-        put(&mut out, "sessions_opened", s.sessions_opened as f64);
-        put(&mut out, "batches_total", s.batches_total as f64);
-        put(&mut out, "coalesced_total", s.coalesced_total as f64);
-        put(&mut out, "encodes_total", s.encodes_total as f64);
-        put(&mut out, "phase2_execs_total", s.phase2_execs_total as f64);
-        put(&mut out, "phase2_rows_total", s.phase2_rows_total as f64);
-        put(&mut out, "phase2_padded_rows_total", s.phase2_padded_rows_total as f64);
-        put(&mut out, "batch_occupancy_mean", s.batch_occupancy_mean());
-        put(&mut out, "padding_waste", s.padding_waste());
-        put(&mut out, "warmed_total", s.warmed_total as f64);
-        put(&mut out, "segment_cache_hits", s.cache_hits as f64);
-        put(&mut out, "segment_cache_misses", s.cache_misses as f64);
-        put(&mut out, "decision_cache_hits", s.decision_hits as f64);
-        put(&mut out, "decision_cache_misses", s.decision_misses as f64);
-        put(&mut out, "compilations_total", s.compilations_total as f64);
-        put_hist(&mut out, "handle_latency", s.handle_count, s.handle_mean_us);
-        put_hist(&mut out, "decide_latency", s.decide_count, s.decide_mean_us);
-        put_hist(&mut out, "quantize_latency", s.quantize_count, s.quantize_mean_us);
-        put_hist(&mut out, "execute_latency", s.execute_count, s.execute_mean_us);
-        put_hist(&mut out, "queue_wait", s.queue_wait_count, s.queue_wait_mean_us);
+        let agg = self.aggregate(false);
+        let t = &agg.totals;
+        let (cache_hits, cache_misses) = match self.segment_cache() {
+            Some(c) => (c.hits(), c.misses()),
+            None => (0, 0),
+        };
+        let (decision_hits, decision_misses) = match self.decision_cache() {
+            Some(c) => (c.hits(), c.misses()),
+            None => (0, 0),
+        };
+        let compilations_total = self.compile_cache().map(|c| c.compilations()).unwrap_or(0);
+        let mut out = String::with_capacity(8192);
+        let c = "counter";
+        let g = "gauge";
+        put(&mut out, "requests_total", c, "Requests handled", t.requests_total as f64);
+        put(&mut out, "errors_total", c, "Error replies sent", t.errors_total as f64);
+        put(&mut out, "shed_total", c, "Requests shed by admission control", t.shed_total as f64);
+        put(
+            &mut out,
+            "sched_throttled_total",
+            c,
+            "Requests refused by the per-connection fair-queue rate limit",
+            t.sched_throttled_total as f64,
+        );
+        put(&mut out, "conns_open", g, "Live protocol connections", t.conns_open as f64);
+        put(
+            &mut out,
+            "conns_open_peak",
+            g,
+            "High-water mark of open connections",
+            t.conns_open_peak as f64,
+        );
+        put(
+            &mut out,
+            "conns_accepted_total",
+            c,
+            "Protocol connections accepted",
+            t.conns_accepted_total as f64,
+        );
+        put(
+            &mut out,
+            "conns_rejected_total",
+            c,
+            "Connections refused at the max-conns accept gate",
+            t.conns_rejected_total as f64,
+        );
+        put(
+            &mut out,
+            "conns_timed_out",
+            c,
+            "Connections closed by the idle/slow-client timeout",
+            t.conns_timed_out as f64,
+        );
+        put(
+            &mut out,
+            "outbox_bytes",
+            g,
+            "Bytes queued across connection outboxes",
+            t.outbox_bytes as f64,
+        );
+        put(
+            &mut out,
+            "outbox_bytes_peak",
+            g,
+            "High-water mark of queued outbox bytes",
+            t.outbox_bytes_peak as f64,
+        );
+        put(&mut out, "sessions_opened", c, "Two-phase sessions opened", t.sessions_opened as f64);
+        put(
+            &mut out,
+            "sessions_expired",
+            c,
+            "Sessions expired by the TTL sweep",
+            t.sessions_expired as f64,
+        );
+        put(&mut out, "bytes_in", c, "Payload bytes received", t.bytes_in as f64);
+        put(&mut out, "bytes_out", c, "Payload bytes sent", t.bytes_out as f64);
+        put(&mut out, "batches_total", c, "Batches drained by workers", t.batches_total as f64);
+        put(
+            &mut out,
+            "coalesced_total",
+            c,
+            "Requests answered from a batch group beyond its first",
+            t.coalesced_total as f64,
+        );
+        put(&mut out, "encodes_total", c, "Segment encodes performed", t.encodes_total as f64);
+        put(
+            &mut out,
+            "phase2_execs_total",
+            c,
+            "Phase-2 server-segment executions",
+            t.phase2_execs_total as f64,
+        );
+        put(
+            &mut out,
+            "phase2_rows_total",
+            c,
+            "Activation rows executed by phase-2 runs",
+            t.phase2_rows_total as f64,
+        );
+        put(
+            &mut out,
+            "phase2_padded_rows_total",
+            c,
+            "Zero rows padded onto phase-2 executions by the batch ladder",
+            t.phase2_padded_rows_total as f64,
+        );
+        put(
+            &mut out,
+            "batch_occupancy_mean",
+            g,
+            "Mean activation rows per phase-2 execution",
+            t.phase2_rows_total as f64 / t.phase2_execs_total as f64,
+        );
+        put(
+            &mut out,
+            "padding_waste",
+            g,
+            "Fraction of executed phase-2 rows that were ladder padding",
+            t.phase2_padded_rows_total as f64
+                / (t.phase2_rows_total + t.phase2_padded_rows_total) as f64,
+        );
+        put(&mut out, "warmed_total", c, "Reply keys warmed at startup", t.warmed_total as f64);
+        put(&mut out, "segment_cache_hits", c, "Encoded-reply cache hits", cache_hits as f64);
+        put(&mut out, "segment_cache_misses", c, "Encoded-reply cache misses", cache_misses as f64);
+        put(
+            &mut out,
+            "decision_cache_hits",
+            c,
+            "Algorithm-2 decision cache hits",
+            decision_hits as f64,
+        );
+        put(
+            &mut out,
+            "decision_cache_misses",
+            c,
+            "Algorithm-2 decision cache misses",
+            decision_misses as f64,
+        );
+        put(
+            &mut out,
+            "compilations_total",
+            c,
+            "Pool-wide compile-cache builds",
+            compilations_total as f64,
+        );
+        if let Some(sink) = self.trace_sink() {
+            put(
+                &mut out,
+                "traces_stored",
+                g,
+                "Trace timelines held in the bounded trace store",
+                sink.stored() as f64,
+            );
+            put(
+                &mut out,
+                "trace_spans_dropped_total",
+                c,
+                "Spans dropped at full ring buffers or store eviction",
+                sink.spans_dropped() as f64,
+            );
+        }
+        put_hist(
+            &mut out,
+            "handle_latency",
+            "End-to-end request handling time (slow exemplars: /trace/slow)",
+            &agg.handle,
+        );
+        put_hist(&mut out, "decide_latency", "Algorithm 2 decision time", &agg.decide);
+        put_hist(
+            &mut out,
+            "quantize_latency",
+            "Segment quantization + packing time",
+            &agg.quantize,
+        );
+        put_hist(&mut out, "execute_latency", "PJRT execution time", &agg.execute);
+        put_hist(
+            &mut out,
+            "queue_wait",
+            "Enqueue-to-dequeue wait per request (slow exemplars: /trace/slow)",
+            &agg.queue_wait,
+        );
         out
     }
 
@@ -761,15 +967,63 @@ impl MetricsHub {
     pub fn scrape_http_response(&self, open_sessions: usize) -> Vec<u8> {
         let mut body = self.render_prometheus();
         body.push_str(&format!("qpart_open_sessions {open_sessions}\n"));
-        let mut out = Vec::with_capacity(body.len() + 128);
-        out.extend_from_slice(
-            b"HTTP/1.0 200 OK\r\nContent-Type: text/plain; charset=utf-8\r\nConnection: close\r\nContent-Length: ",
-        );
-        out.extend_from_slice(body.len().to_string().as_bytes());
-        out.extend_from_slice(b"\r\n\r\n");
-        out.extend_from_slice(body.as_bytes());
-        out
+        http_frame("200 OK", "text/plain", body.as_bytes())
     }
+
+    /// Route one metrics-listener request to its response: `/trace` (the
+    /// stored-timeline index), `/trace?id=<id>` (one JSON timeline),
+    /// `/trace/slow` (the slow-request exemplars), anything else → the
+    /// Prometheus scrape. Trace paths answer `404` when no [`TraceSink`]
+    /// is registered or the id is unknown, so scrapers can tell "tracing
+    /// off" from "empty".
+    pub fn http_response(&self, path: &str, open_sessions: usize) -> Vec<u8> {
+        let Some(rest) = path.strip_prefix("/trace") else {
+            return self.scrape_http_response(open_sessions);
+        };
+        let Some(sink) = self.trace_sink() else {
+            let body: &[u8] = b"{\"error\":\"tracing disabled\"}";
+            return http_frame("404 Not Found", "application/json", body);
+        };
+        match rest {
+            "" => http_frame("200 OK", "application/json", sink.list_json().as_bytes()),
+            "/slow" => http_frame("200 OK", "application/json", sink.slow_json().as_bytes()),
+            _ => {
+                let id = rest.strip_prefix("?id=").and_then(|q| q.parse::<u64>().ok());
+                match id.and_then(|id| sink.trace_json(id)) {
+                    Some(doc) => http_frame("200 OK", "application/json", doc.as_bytes()),
+                    None => http_frame(
+                        "404 Not Found",
+                        "application/json",
+                        b"{\"error\":\"unknown trace\"}",
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// Minimal HTTP/1.0 framing shared by the scrape and `/trace` endpoints.
+fn http_frame(status: &str, content_type: &str, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body.len() + 128);
+    out.extend_from_slice(b"HTTP/1.0 ");
+    out.extend_from_slice(status.as_bytes());
+    out.extend_from_slice(b"\r\nContent-Type: ");
+    out.extend_from_slice(content_type.as_bytes());
+    out.extend_from_slice(b"; charset=utf-8\r\nConnection: close\r\nContent-Length: ");
+    out.extend_from_slice(body.len().to_string().as_bytes());
+    out.extend_from_slice(b"\r\n\r\n");
+    out.extend_from_slice(body);
+    out
+}
+
+/// Extract the request path from an HTTP request head (`GET /x HTTP/1.0`),
+/// defaulting to `/metrics` when the head is absent or malformed — the
+/// pre-trace scrape behavior, so bare probes keep working.
+pub fn request_path(head: &str) -> &str {
+    head.lines()
+        .next()
+        .and_then(|line| line.split_whitespace().nth(1))
+        .unwrap_or("/metrics")
 }
 
 #[cfg(test)]
@@ -787,7 +1041,8 @@ mod tests {
         // p50 lands in the 250 or 500 bucket
         let p50 = h.quantile_us(0.5);
         assert!(p50 <= 500.0, "{p50}");
-        assert!(h.quantile_us(0.999).is_infinite(), "overflow bucket");
+        // overflow-bucket quantiles clamp to the last finite bound
+        assert_eq!(h.quantile_us(0.999), 1_000_000.0, "overflow bucket");
     }
 
     #[test]
@@ -946,11 +1201,22 @@ mod tests {
         assert!(body.contains("qpart_conns_accepted_total 1\n"), "{body}");
         assert!(body.contains("qpart_handle_latency_us_count 1\n"), "{body}");
         assert!(body.contains("qpart_handle_latency_us_sum 250\n"), "{body}");
+        // every sample line has HELP and TYPE comments
+        assert!(body.contains("# HELP qpart_requests_total "), "{body}");
+        assert!(body.contains("# TYPE qpart_requests_total counter\n"), "{body}");
+        assert!(body.contains("# TYPE qpart_handle_latency_us histogram\n"), "{body}");
         // empty histograms render zero sums; NaN-valued derived metrics
         // (no phase-2 runs yet) are omitted entirely
         assert!(body.contains("qpart_queue_wait_us_sum 0\n"), "{body}");
         assert!(!body.contains("NaN"), "{body}");
         for line in body.lines() {
+            if line.starts_with('#') {
+                assert!(
+                    line.starts_with("# HELP qpart_") || line.starts_with("# TYPE qpart_"),
+                    "{line}"
+                );
+                continue;
+            }
             let mut parts = line.split(' ');
             let name = parts.next().unwrap();
             assert!(name.starts_with("qpart_"), "{line}");
@@ -958,6 +1224,76 @@ mod tests {
             assert!(value.parse::<f64>().is_ok(), "{line}");
             assert!(parts.next().is_none(), "{line}");
         }
+    }
+
+    #[test]
+    fn prometheus_buckets_are_cumulative_with_inf() {
+        let hub = MetricsHub::new();
+        let w = hub.register_worker();
+        for us in [10u64, 60, 300, 2_000_000] {
+            w.handle_latency.observe_us(us);
+        }
+        let body = hub.render_prometheus();
+        // cumulative per-bound counts: ≤50 → 1, ≤100 → 2, ≤250 → 2, ≤500 → 3 …
+        assert!(body.contains("qpart_handle_latency_us_bucket{le=\"50\"} 1\n"), "{body}");
+        assert!(body.contains("qpart_handle_latency_us_bucket{le=\"100\"} 2\n"), "{body}");
+        assert!(body.contains("qpart_handle_latency_us_bucket{le=\"500\"} 3\n"), "{body}");
+        // the 2s observation only lands in +Inf, which equals the count
+        assert!(body.contains("qpart_handle_latency_us_bucket{le=\"1000000\"} 3\n"), "{body}");
+        assert!(body.contains("qpart_handle_latency_us_bucket{le=\"+Inf\"} 4\n"), "{body}");
+        assert!(body.contains("qpart_handle_latency_us_count 4\n"), "{body}");
+        // series is monotonically nondecreasing across the whole ladder
+        let mut last = 0u64;
+        let mut buckets = 0;
+        for line in body.lines() {
+            if let Some(rest) = line.strip_prefix("qpart_handle_latency_us_bucket{le=\"") {
+                let count: u64 = rest.split("} ").nth(1).unwrap().parse().unwrap();
+                assert!(count >= last, "{line}");
+                last = count;
+                buckets += 1;
+            }
+        }
+        assert_eq!(buckets, BUCKETS_US.len() + 1, "12 bounds + +Inf");
+    }
+
+    #[test]
+    fn http_response_routes_trace_endpoints() {
+        let hub = MetricsHub::new();
+        // without a registered sink, /trace is 404 and the default path scrapes
+        let resp = String::from_utf8(hub.http_response("/trace", 0)).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 404 Not Found\r\n"), "{resp}");
+        let resp = String::from_utf8(hub.http_response("/metrics", 3)).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("qpart_open_sessions 3\n"), "{resp}");
+
+        let sink = TraceSink::new(0.0, 0, 4, 64);
+        let trace = sink.grant();
+        let tracer = sink.tracer(0);
+        tracer.span(trace, crate::obs::Stage::Plan, 10, 20);
+        sink.drain();
+        hub.register_trace_sink(Arc::clone(&sink));
+        let resp = String::from_utf8(hub.http_response("/trace", 0)).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("Content-Type: application/json"), "{resp}");
+        assert!(resp.contains("\"traces\":"), "{resp}");
+        let resp =
+            String::from_utf8(hub.http_response(&format!("/trace?id={}", trace.id), 0)).unwrap();
+        assert!(resp.contains("\"plan\""), "{resp}");
+        let resp = String::from_utf8(hub.http_response("/trace?id=999999", 0)).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 404 Not Found\r\n"), "{resp}");
+        let resp = String::from_utf8(hub.http_response("/trace/slow", 0)).unwrap();
+        assert!(resp.contains("\"slow\""), "{resp}");
+        // scrape now carries the trace gauges
+        let body = hub.render_prometheus();
+        assert!(body.contains("qpart_traces_stored 1\n"), "{body}");
+    }
+
+    #[test]
+    fn request_path_parses_http_heads() {
+        assert_eq!(request_path("GET /trace?id=7 HTTP/1.0\r\n\r\n"), "/trace?id=7");
+        assert_eq!(request_path("GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n"), "/metrics");
+        assert_eq!(request_path(""), "/metrics");
+        assert_eq!(request_path("GET\r\n"), "/metrics");
     }
 
     #[test]
@@ -974,7 +1310,8 @@ mod tests {
         merged.merge(&b.summary());
         assert_eq!(merged.count(), 5);
         assert_eq!(merged.sum_us(), 10 + 300 + 700 + 60 + 2_000_000);
-        assert!(merged.quantile_us(0.999).is_infinite(), "overflow carried over");
+        assert_eq!(merged.overflow(), 1, "overflow carried over");
+        assert_eq!(merged.quantile_us(0.999), 1_000_000.0, "clamped, not inf");
     }
 
     #[test]

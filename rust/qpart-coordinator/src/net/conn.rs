@@ -22,6 +22,7 @@
 //!   `closing` marks "flush the outbox, then close" (fatal frame errors,
 //!   metrics scrapes).
 
+use crate::obs::JobTrace;
 use qpart_proto::frame::{split_frame, Frame, FrameError};
 use std::collections::VecDeque;
 use std::io::{self, Read, Write};
@@ -41,8 +42,9 @@ const MAX_FILL_BYTES: usize = 256 * 1024;
 pub enum ConnKind {
     /// A QPART protocol peer: JSON lines + negotiated binary frames.
     Proto,
-    /// A plaintext metrics scrape: the response is queued at accept,
-    /// inbound bytes are discarded, the connection closes once flushed.
+    /// A plaintext metrics scrape: the path-routed response is queued
+    /// once the request line arrives, remaining inbound bytes are
+    /// discarded, the connection closes once flushed.
     Metrics,
 }
 
@@ -130,6 +132,25 @@ pub struct Conn {
     /// leave it unread in the receive queue, and the resulting RST can
     /// destroy the response on non-loopback paths.
     pub saw_input: bool,
+    /// Trace identity for this connection's requests: minted at accept
+    /// when the sampler fires, or granted (echo on the wire) when the
+    /// peer's `hello` asks for tracing. `None` = untraced — every trace
+    /// branch in the reactor is one `Option` check, so the disabled path
+    /// does no extra work and writes byte-identical frames.
+    pub trace: Option<JobTrace>,
+    /// Sink-relative µs of the first inbound byte of the request being
+    /// assembled; taken on the first `fill` after the previous frame
+    /// completed, cleared when the frame dispatches (the read span's
+    /// start). Only maintained while `trace` is set.
+    pub read_mark: Option<u64>,
+    /// Replies pushed into the outbox whose flush span is still open:
+    /// `(trace, pushed_us)`. Drained into `flush` spans once the outbox
+    /// empties (the span covers queue-in-outbox + socket write time).
+    pub pending_flush: Vec<(JobTrace, u64)>,
+    /// Metrics conns only: the path-routed response has been queued.
+    /// The response is deferred until the HTTP request line arrives (or
+    /// the peer closes), so `/trace` endpoints can be routed by path.
+    pub responded: bool,
 }
 
 impl Conn {
@@ -145,6 +166,10 @@ impl Conn {
             closing: false,
             peer_eof: false,
             saw_input: false,
+            trace: None,
+            read_mark: None,
+            pending_flush: Vec::new(),
+            responded: false,
         }
     }
 
@@ -191,6 +216,19 @@ impl Conn {
     /// Whether `rbuf` holds bytes that might form further frames.
     pub fn has_buffered_input(&self) -> bool {
         !self.rbuf.is_empty()
+    }
+
+    /// Bytes of unparsed buffered input (caps request-line buffering on
+    /// metrics conns).
+    pub fn buffered_len(&self) -> usize {
+        self.rbuf.len()
+    }
+
+    /// First complete buffered line, if one has arrived (metrics conns:
+    /// the HTTP request line, parsed for path routing).
+    pub fn head_line(&self) -> Option<String> {
+        let end = self.rbuf.iter().position(|&b| b == b'\n')?;
+        Some(String::from_utf8_lossy(&self.rbuf[..end]).into_owned())
     }
 
     /// Throw away buffered input (metrics scrapes: the request bytes are

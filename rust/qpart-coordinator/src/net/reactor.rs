@@ -32,12 +32,14 @@
 //! unboundedly.
 //!
 //! A second listener socket (`--metrics-listen`) rides the same reactor
-//! as a trivial second [`ConnKind`]: accepted scrape connections get a
-//! plaintext metrics document queued at accept and close once flushed.
+//! as a trivial second [`ConnKind`]: accepted scrape connections wait
+//! for their HTTP request line, get the path-routed response queued
+//! (`/metrics` scrape, `/trace` endpoints), and close once flushed.
 
-use crate::metrics::{Metrics, MetricsHub};
+use crate::metrics::{request_path, Metrics, MetricsHub};
 use crate::net::conn::{Conn, ConnKind};
 use crate::net::sys::{poll_fds, PollFd, Waker, POLLIN, POLLOUT};
+use crate::obs::{JobTrace, Stage, TraceSink, TraceStamp, Tracer, TrafficRecorder, FRONT_WORKER};
 use crate::sched::{FairQueue, Job, ReplyRouter, WireReply};
 use crate::session::SharedSessionTable;
 use qpart_proto::frame::{write_binary_frame, write_frame, Frame};
@@ -92,6 +94,13 @@ pub struct ReactorParams {
     pub sessions: Arc<SharedSessionTable>,
     /// Per-connection fair-queue token buckets (inert when disabled).
     pub fair: Arc<FairQueue>,
+    /// Trace sink: accept sampling, hello-negotiated grants, and the
+    /// front-end spans (read/admit/route/flush). Always present — with
+    /// sampling off and no grants, no span is ever emitted and the
+    /// per-request cost is one `Option` check.
+    pub trace: Arc<TraceSink>,
+    /// Optional live-traffic recorder (`--record-trace`).
+    pub recorder: Option<Arc<TrafficRecorder>>,
     /// Cooperative shutdown flag, checked every tick.
     pub stop: Arc<AtomicBool>,
 }
@@ -116,6 +125,9 @@ pub struct Reactor {
     hub: Arc<MetricsHub>,
     sessions: Arc<SharedSessionTable>,
     fair: Arc<FairQueue>,
+    /// The front-end's span emitter (worker id [`FRONT_WORKER`]).
+    tracer: Tracer,
+    recorder: Option<Arc<TrafficRecorder>>,
     stop: Arc<AtomicBool>,
     slots: Vec<Slot>,
     free: Vec<usize>,
@@ -145,6 +157,8 @@ impl Reactor {
             hub: params.hub,
             sessions: params.sessions,
             fair: params.fair,
+            tracer: params.trace.tracer(FRONT_WORKER),
+            recorder: params.recorder,
             stop: params.stop,
             slots: Vec::new(),
             free: Vec::new(),
@@ -202,8 +216,8 @@ impl Reactor {
             // completions first: routed replies free connections to read
             // their next pipelined request in this same tick
             self.waker.drain();
-            for (token, reply) in self.router.drain() {
-                self.route(token, reply);
+            for (token, reply, stamp) in self.router.drain() {
+                self.route(token, reply, stamp);
             }
             if fds[1].ready() {
                 self.accept_proto();
@@ -245,7 +259,7 @@ impl Reactor {
 
     /// Route one worker completion to its connection's outbox (dropped
     /// if the connection died in the meantime — generation mismatch).
-    fn route(&mut self, token: u64, reply: WireReply) {
+    fn route(&mut self, token: u64, reply: WireReply, stamp: Option<TraceStamp>) {
         let slot = (token >> 32) as usize;
         let gen = token as u32;
         let stale = match self.slots.get(slot) {
@@ -259,6 +273,13 @@ impl Reactor {
             let conn = self.slots[slot].conn.as_mut().expect("checked live above");
             conn.in_flight = conn.in_flight.saturating_sub(1);
             conn.last_activity = Instant::now();
+            if let Some(stamp) = stamp {
+                // route span: worker pushed the reply → serialized into
+                // this connection's outbox
+                let now = self.tracer.now_us();
+                self.tracer.span(stamp.trace, Stage::Route, stamp.pushed_us, now);
+                conn.pending_flush.push((stamp.trace, now));
+            }
             let bytes = reply_bytes(reply, conn.binary);
             conn.outbox.push(bytes);
         }
@@ -297,7 +318,12 @@ impl Reactor {
             Metrics::inc(&self.front.conns_accepted_total);
             let open = Metrics::gauge_inc(&self.front.conns_open);
             Metrics::observe_peak(&self.front.conns_open_peak, open);
-            self.insert(Conn::new(stream, ConnKind::Proto));
+            let mut conn = Conn::new(stream, ConnKind::Proto);
+            // accept-time sampling: a sampled trace is server-side only
+            // (never echoed on the wire), so enabling it cannot change
+            // what any peer observes
+            conn.trace = self.tracer.sink().sample_accept();
+            self.insert(conn);
         }
     }
 
@@ -319,13 +345,13 @@ impl Reactor {
             if stream.set_nonblocking(true).is_err() || self.metrics_open >= METRICS_CONN_CAP {
                 continue;
             }
-            // the response is queued at accept; the conn closes once it
-            // is flushed AND the scraper's request bytes arrived (see
-            // `step` — closing with the request unread would RST)
-            let mut conn = Conn::new(stream, ConnKind::Metrics);
-            conn.outbox.push(self.scrape_response());
+            // the response is deferred until the request line arrives so
+            // `/trace` endpoints can be routed by path (see `step`); the
+            // conn closes once the response is flushed — closing with
+            // request bytes unread would RST it off the wire
+            let conn = Conn::new(stream, ConnKind::Metrics);
             let slot = self.insert(conn);
-            // deliver immediately; most scrapers are one shot
+            // most scrapers send immediately; try to serve in this tick
             self.drive(slot, true);
         }
     }
@@ -367,8 +393,31 @@ impl Reactor {
             return false;
         }
         if conn.kind == ConnKind::Metrics {
-            // scrape input is irrelevant; never let it accumulate
-            conn.discard_input();
+            if !conn.responded {
+                // route by path once the request line is complete; a
+                // peer that closes (or floods) without one gets the
+                // default scrape
+                let path = match conn.head_line() {
+                    Some(line) => Some(request_path(&line).to_owned()),
+                    None if conn.peer_eof || conn.buffered_len() > 4096 => {
+                        Some("/metrics".to_owned())
+                    }
+                    None => None,
+                };
+                if let Some(path) = path {
+                    conn.outbox.push(self.hub.http_response(&path, self.sessions.len()));
+                    conn.responded = true;
+                }
+            }
+            if conn.responded {
+                // remaining scrape input is irrelevant; never accumulate
+                conn.discard_input();
+            }
+        }
+        // the read span opens when the first byte of a request lands in
+        // the buffer (closed when the frame dispatches)
+        if conn.trace.is_some() && conn.read_mark.is_none() && conn.has_buffered_input() {
+            conn.read_mark = Some(self.tracer.now_us());
         }
         while conn.kind == ConnKind::Proto && !conn.closing && conn.in_flight == 0 {
             match conn.next_frame() {
@@ -386,12 +435,23 @@ impl Reactor {
         if conn.flush().is_err() {
             return false;
         }
+        if !conn.pending_flush.is_empty() && conn.outbox.is_empty() {
+            // flush span: reply queued into the outbox → last byte
+            // handed to the socket
+            let now = self.tracer.now_us();
+            for (trace, pushed) in conn.pending_flush.drain(..) {
+                self.tracer.span(trace, Stage::Flush, pushed, now);
+            }
+        }
         if conn.kind == ConnKind::Metrics {
-            // a scrape closes once the response is flushed AND the
-            // request has arrived (or the peer is gone) — closing with
-            // the request still in flight would leave it unread and the
-            // resulting RST could destroy the response on real networks
-            return !(conn.outbox.is_empty() && (conn.saw_input || conn.peer_eof));
+            // a scrape closes once its path-routed response is queued
+            // and flushed AND the request arrived (or the peer is gone)
+            // — closing with request bytes still in flight would leave
+            // them unread and the resulting RST could destroy the
+            // response on real networks
+            return !(conn.responded
+                && conn.outbox.is_empty()
+                && (conn.saw_input || conn.peer_eof));
         }
         if conn.closing && conn.outbox.is_empty() {
             return false;
@@ -411,6 +471,13 @@ impl Reactor {
     /// framing errors) is answered right here; everything else becomes a
     /// routed job for the executor pool.
     fn dispatch(&mut self, conn: &mut Conn, token: u64, frame: Frame) {
+        // read span: first buffered byte of this request → frame parsed
+        let parsed_us = conn.trace.map(|trace| {
+            let end = self.tracer.now_us();
+            let start = conn.read_mark.take().unwrap_or(end);
+            self.tracer.span(trace, Stage::Read, start, end);
+            end
+        });
         // a binary request frame is only valid after a granted hello —
         // the server must not silently accept what it did not grant
         if matches!(frame, Frame::Binary(_)) && !conn.binary {
@@ -434,8 +501,16 @@ impl Reactor {
         if let Request::Hello(h) = &req {
             Metrics::inc(&self.front.requests_total);
             conn.binary = h.binary_frames && self.binary_allowed;
-            conn.outbox
-                .push(response_bytes(&Response::Hello(HelloReply { binary_frames: conn.binary })));
+            if h.trace {
+                // hello-negotiated grant: the id is echoed on the wire
+                // for client-side correlation (supersedes any sampled
+                // trace this connection drew at accept)
+                conn.trace = Some(self.tracer.sink().grant());
+            }
+            conn.outbox.push(response_bytes(&Response::Hello(HelloReply {
+                binary_frames: conn.binary,
+                trace: conn.trace.and_then(JobTrace::wire_id),
+            })));
             return;
         }
         // fair queuing: refuse before the job occupies queue capacity.
@@ -449,8 +524,35 @@ impl Reactor {
             )));
             return;
         }
-        match self.job_tx.try_send(Job::routed(req, token, Arc::clone(&self.router))) {
-            Ok(()) => conn.in_flight += 1,
+        // recorder payload pulled out before the request moves into the
+        // job; only admitted requests are recorded (a shed request never
+        // reached the service, so a replay should not send it either)
+        let rec_infer = match &req {
+            Request::Infer(i) if self.recorder.is_some() => {
+                Some((i.accuracy_budget, i.channel_capacity_bps))
+            }
+            _ => None,
+        };
+        let rec_upload = self.recorder.is_some() && matches!(req, Request::Activation(_));
+        match self
+            .job_tx
+            .try_send(Job::routed(req, token, Arc::clone(&self.router)).with_trace(conn.trace))
+        {
+            Ok(()) => {
+                conn.in_flight += 1;
+                if let Some(rec) = &self.recorder {
+                    if let Some((budget, cap)) = rec_infer {
+                        rec.record_infer(token, budget, cap);
+                    } else if rec_upload {
+                        rec.record_upload(token);
+                    }
+                }
+                if let (Some(trace), Some(start)) = (conn.trace, parsed_us) {
+                    // admit span: frame parsed → job enqueued (fair
+                    // queuing + the queue hand-off)
+                    self.tracer.span(trace, Stage::Admit, start, self.tracer.now_us());
+                }
+            }
             Err(TrySendError::Full(_)) => {
                 Metrics::inc(&self.front.shed_total);
                 conn.outbox.push(response_bytes(&err_resp(
@@ -519,11 +621,6 @@ impl Reactor {
         drop(conn);
     }
 
-    /// The metrics scrape document (shared with the threaded fallback —
-    /// one source of truth for the exposition format).
-    fn scrape_response(&self) -> Vec<u8> {
-        self.hub.scrape_http_response(self.sessions.len())
-    }
 }
 
 fn err_resp(code: &str, message: &str) -> Response {
@@ -546,14 +643,16 @@ pub fn reply_bytes(reply: WireReply, binary: bool) -> Vec<u8> {
     let _ = match reply {
         WireReply::Msg(resp) => write_frame(&mut buf, &resp.to_line()),
         WireReply::Segment(s) => {
+            // the traced splice with `None` is byte-identical to the
+            // untraced stamp (proven by the proto splice tests)
             if binary {
                 write_binary_frame(
                     &mut buf,
-                    &s.body.binary_header(s.session, s.objective),
+                    &s.body.binary_header_traced(s.session, s.objective, s.trace),
                     s.body.blob(),
                 )
             } else {
-                write_frame(&mut buf, &s.body.json_line(s.session, s.objective))
+                write_frame(&mut buf, &s.body.json_line_traced(s.session, s.objective, s.trace))
             }
         }
     };

@@ -1,0 +1,741 @@
+//! Request-scoped tracing: span timelines from accept to reply.
+//!
+//! Dependency-free observability substrate for the coordinator. A
+//! [`TraceId`] is minted at accept (sampled via `--trace-sample`) or
+//! granted when a peer negotiates `trace: true` in its `hello`; every
+//! pipeline stage then emits a [`Span`] — reactor read, FairQueue admit,
+//! queue wait, Algorithm-2 planning, encode/quantize, phase-2 execution,
+//! ReplyRouter completion, outbox flush — into a lock-cheap per-worker
+//! [`SpanRing`]. Rings are drained into a bounded server-wide
+//! [`TraceSink`] store that backs three exposure paths:
+//!
+//! 1. `/trace?id=` and `/trace/slow` on the `--metrics-listen` listener
+//!    (JSON timelines),
+//! 2. slow-request exemplars (`--trace-slow-ms` keeps the N worst full
+//!    timelines, linked from the Prometheus histogram HELP lines),
+//! 3. `bench-serve --trace-out` exporting Chrome trace-event JSON
+//!    (`chrome://tracing` / Perfetto loadable).
+//!
+//! With sampling disabled and no hello-negotiated trace the layer is
+//! inert: no spans are recorded and wire bytes are byte-identical to an
+//! untraced build — the only residual cost is an `Option` check per
+//! connection.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use qpart_core::json::Value;
+
+/// Worker id used for spans emitted by the front-end (reactor or
+/// per-connection threads) rather than an executor worker.
+pub const FRONT_WORKER: u32 = u32::MAX;
+
+/// Pipeline stage a span measures. Stage names are identical across the
+/// reactor and threaded front-ends so span *sets* compare equal between
+/// them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Stage {
+    /// Socket readable → a full frame parsed off the connection buffer.
+    Read,
+    /// FairQueue admission + job enqueue onto the worker channel.
+    Admit,
+    /// Enqueue → worker dequeue (equals the `queue_wait` histogram sample).
+    QueueWait,
+    /// `plan_infer`: Algorithm-2 decision (or DecisionCache hit).
+    Plan,
+    /// Quantize + pack + reply encode (or EncodedReplyCache hit).
+    Encode,
+    /// Phase-2 stack + server-segment execution.
+    Execute,
+    /// Worker reply push → front-end completion routing (ReplyRouter).
+    Route,
+    /// Reply bytes entering the outbox → flushed to the socket.
+    Flush,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Read => "read",
+            Stage::Admit => "admit",
+            Stage::QueueWait => "queue_wait",
+            Stage::Plan => "plan",
+            Stage::Encode => "encode",
+            Stage::Execute => "execute",
+            Stage::Route => "route",
+            Stage::Flush => "flush",
+        }
+    }
+}
+
+/// One timed pipeline stage of one traced request. Timestamps are
+/// microseconds since the owning [`TraceSink`]'s epoch (server start).
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub trace: u64,
+    pub stage: Stage,
+    pub start_us: u64,
+    pub end_us: u64,
+    pub worker: u32,
+    /// Small structured annotations: cache hit/miss, batch occupancy,
+    /// chosen level/partition, row counts.
+    pub notes: Vec<(&'static str, i64)>,
+}
+
+impl Span {
+    fn to_json(&self) -> Value {
+        let mut v = Value::obj([
+            ("stage", self.stage.name().into()),
+            ("start_us", self.start_us.into()),
+            ("end_us", self.end_us.into()),
+            ("worker", i64::from(self.worker as i32).into()),
+        ]);
+        if !self.notes.is_empty() {
+            let notes =
+                self.notes.iter().map(|(k, n)| (k.to_string(), Value::Num(*n as f64))).collect();
+            v.set("notes", Value::Obj(notes));
+        }
+        v
+    }
+}
+
+/// Identity a traced request carries through the pipeline.
+///
+/// `echo` is true only when the peer negotiated `trace: true` in `hello`:
+/// then (and only then) the id is echoed back in `segment`/`result`
+/// replies. Accept-sampled traces record spans without touching wire
+/// bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobTrace {
+    pub id: u64,
+    pub echo: bool,
+}
+
+impl JobTrace {
+    /// The id to stamp into a wire reply: `Some` only for negotiated traces.
+    pub fn wire_id(self) -> Option<u64> {
+        if self.echo {
+            Some(self.id)
+        } else {
+            None
+        }
+    }
+}
+
+/// Rides a completed reply from a worker back to the front-end so the
+/// Route span can measure completion-queue latency.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceStamp {
+    pub trace: JobTrace,
+    /// When the worker pushed the reply (µs since sink epoch).
+    pub pushed_us: u64,
+}
+
+/// Lock-cheap bounded span buffer, one per worker/front-end thread.
+/// Writers take an uncontended mutex (the only other party is the
+/// drain); overflow increments a counter instead of blocking.
+pub struct SpanRing {
+    cap: usize,
+    spans: Mutex<Vec<Span>>,
+    dropped: AtomicU64,
+}
+
+impl SpanRing {
+    fn new(cap: usize) -> Self {
+        SpanRing { cap, spans: Mutex::new(Vec::new()), dropped: AtomicU64::new(0) }
+    }
+
+    pub fn push(&self, span: Span) {
+        let mut g = self.spans.lock().unwrap();
+        if g.len() >= self.cap {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        g.push(span);
+    }
+
+    fn drain(&self) -> Vec<Span> {
+        std::mem::take(&mut *self.spans.lock().unwrap())
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-thread handle for emitting spans: an `Arc`'d ring plus the worker
+/// id stamped into every span.
+#[derive(Clone)]
+pub struct Tracer {
+    sink: Arc<TraceSink>,
+    ring: Arc<SpanRing>,
+    worker: u32,
+}
+
+impl Tracer {
+    pub fn sink(&self) -> &Arc<TraceSink> {
+        &self.sink
+    }
+
+    /// Microseconds since the sink epoch.
+    pub fn now_us(&self) -> u64 {
+        self.sink.now_us()
+    }
+
+    pub fn span(&self, trace: JobTrace, stage: Stage, start_us: u64, end_us: u64) {
+        self.span_with(trace, stage, start_us, end_us, Vec::new());
+    }
+
+    pub fn span_with(
+        &self,
+        trace: JobTrace,
+        stage: Stage,
+        start_us: u64,
+        end_us: u64,
+        notes: Vec<(&'static str, i64)>,
+    ) {
+        self.ring.push(Span {
+            trace: trace.id,
+            stage,
+            start_us,
+            end_us: end_us.max(start_us),
+            worker: self.worker,
+            notes,
+        });
+    }
+}
+
+/// Per-ring capacity: generous enough that a drain cadence of tens of
+/// milliseconds never drops spans under normal load.
+const RING_CAP: usize = 8192;
+
+struct SlowExemplar {
+    total_us: u64,
+    id: u64,
+    spans: Vec<Span>,
+}
+
+#[derive(Default)]
+struct TraceStore {
+    traces: HashMap<u64, Vec<Span>>,
+    /// FIFO eviction order over `traces` keys.
+    order: VecDeque<u64>,
+    /// N worst full timelines, sorted worst-first. Holds its own span
+    /// copies so exemplars survive FIFO eviction from `traces`.
+    slow: Vec<SlowExemplar>,
+    dropped_spans: u64,
+}
+
+/// Server-wide trace collector: mints ids, owns the per-thread rings,
+/// and stores drained spans in a bounded FIFO keyed by trace id.
+pub struct TraceSink {
+    epoch: Instant,
+    next_id: AtomicU64,
+    sample: f64,
+    /// Accept counter driving the deterministic sampler.
+    accepts: AtomicU64,
+    rings: Mutex<Vec<Arc<SpanRing>>>,
+    store: Mutex<TraceStore>,
+    slow_us: u64,
+    slow_keep: usize,
+    store_cap: usize,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceSink")
+            .field("sample", &self.sample)
+            .field("slow_us", &self.slow_us)
+            .field("slow_keep", &self.slow_keep)
+            .field("store_cap", &self.store_cap)
+            .finish_non_exhaustive()
+    }
+}
+
+impl TraceSink {
+    /// `sample` is the accept-sampling rate in [0, 1]; `slow_us = 0`
+    /// disables slow-exemplar capture.
+    pub fn new(sample: f64, slow_us: u64, slow_keep: usize, store_cap: usize) -> Arc<TraceSink> {
+        Arc::new(TraceSink {
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            sample: sample.clamp(0.0, 1.0),
+            accepts: AtomicU64::new(0),
+            rings: Mutex::new(Vec::new()),
+            store: Mutex::new(TraceStore::default()),
+            slow_us,
+            slow_keep: slow_keep.max(1),
+            store_cap: store_cap.max(1),
+        })
+    }
+
+    /// True when accept-sampling can ever fire. Hello-negotiated traces
+    /// work regardless.
+    pub fn sampling(&self) -> bool {
+        self.sample > 0.0
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Microseconds from the sink epoch to `t` (0 if `t` predates it).
+    pub fn offset_us(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Deterministic accept-sampler: connection n is traced iff
+    /// `floor((n+1)·rate) > floor(n·rate)`, so a rate of 0.25 traces
+    /// exactly every 4th accept and 1.0 traces all of them.
+    pub fn sample_accept(&self) -> Option<JobTrace> {
+        if self.sample <= 0.0 {
+            return None;
+        }
+        let n = self.accepts.fetch_add(1, Ordering::Relaxed);
+        let taken = ((n + 1) as f64 * self.sample).floor() > (n as f64 * self.sample).floor();
+        if taken {
+            Some(JobTrace { id: self.mint(), echo: false })
+        } else {
+            None
+        }
+    }
+
+    /// Mint a trace for a peer that negotiated `trace: true` in hello;
+    /// the id is echoed in that connection's replies.
+    pub fn grant(&self) -> JobTrace {
+        JobTrace { id: self.mint(), echo: true }
+    }
+
+    fn mint(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Register a per-thread ring and hand back the emitting handle.
+    pub fn tracer(self: &Arc<Self>, worker: u32) -> Tracer {
+        let ring = Arc::new(SpanRing::new(RING_CAP));
+        self.rings.lock().unwrap().push(Arc::clone(&ring));
+        Tracer { sink: Arc::clone(self), ring, worker }
+    }
+
+    /// Drain every ring into the bounded store and refresh slow
+    /// exemplars for the traces that gained spans.
+    pub fn drain(&self) {
+        let rings: Vec<Arc<SpanRing>> = self.rings.lock().unwrap().clone();
+        let mut fresh: Vec<Span> = Vec::new();
+        for ring in &rings {
+            fresh.append(&mut ring.drain());
+        }
+        if fresh.is_empty() {
+            return;
+        }
+        let mut touched: Vec<u64> = Vec::new();
+        let mut store = self.store.lock().unwrap();
+        for span in fresh {
+            if !touched.contains(&span.trace) {
+                touched.push(span.trace);
+            }
+            match store.traces.get_mut(&span.trace) {
+                Some(spans) => spans.push(span),
+                None => {
+                    store.order.push_back(span.trace);
+                    store.traces.insert(span.trace, vec![span]);
+                }
+            }
+        }
+        while store.order.len() > self.store_cap {
+            if let Some(old) = store.order.pop_front() {
+                if let Some(spans) = store.traces.remove(&old) {
+                    store.dropped_spans += spans.len() as u64;
+                }
+            }
+        }
+        if self.slow_us > 0 {
+            for id in touched {
+                let Some(spans) = store.traces.get(&id) else { continue };
+                let total = timeline_total_us(spans);
+                if total < self.slow_us {
+                    continue;
+                }
+                let spans = spans.clone();
+                match store.slow.iter_mut().find(|e| e.id == id) {
+                    Some(e) => {
+                        e.total_us = total;
+                        e.spans = spans;
+                    }
+                    None => store.slow.push(SlowExemplar { total_us: total, id, spans }),
+                }
+                store.slow.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+                store.slow.truncate(self.slow_keep);
+            }
+        }
+    }
+
+    /// Number of complete timelines currently stored.
+    pub fn stored(&self) -> usize {
+        self.store.lock().unwrap().traces.len()
+    }
+
+    /// Spans lost to ring overflow or store eviction.
+    pub fn spans_dropped(&self) -> u64 {
+        let rings: u64 = self.rings.lock().unwrap().iter().map(|r| r.dropped()).sum();
+        rings + self.store.lock().unwrap().dropped_spans
+    }
+
+    /// JSON timeline for one trace id (drains rings first so the store
+    /// is current). Checks slow exemplars when the FIFO already evicted
+    /// the id. `None` if the id is unknown.
+    pub fn trace_json(&self, id: u64) -> Option<String> {
+        self.drain();
+        let store = self.store.lock().unwrap();
+        let spans = store
+            .traces
+            .get(&id)
+            .or_else(|| store.slow.iter().find(|e| e.id == id).map(|e| &e.spans))?;
+        Some(timeline_json(id, spans).to_string_compact())
+    }
+
+    /// JSON array of the N worst full timelines (worst first).
+    pub fn slow_json(&self) -> String {
+        self.drain();
+        let store = self.store.lock().unwrap();
+        let items =
+            store.slow.iter().map(|e| timeline_json(e.id, &e.spans)).collect::<Vec<Value>>();
+        Value::obj([
+            ("slow_threshold_us", self.slow_us.into()),
+            ("slow", Value::Arr(items)),
+        ])
+        .to_string_compact()
+    }
+
+    /// JSON index of stored trace ids, FIFO order (oldest first).
+    pub fn list_json(&self) -> String {
+        self.drain();
+        let store = self.store.lock().unwrap();
+        Value::obj([
+            ("traces", Value::Arr(store.order.iter().map(|&id| id.into()).collect())),
+            ("dropped_spans", store.dropped_spans.into()),
+        ])
+        .to_string_compact()
+    }
+
+    /// Chrome trace-event JSON (`chrome://tracing` / Perfetto) for every
+    /// stored timeline: one complete ("X") event per span, `tid` = trace
+    /// id so each request renders as its own track.
+    pub fn chrome_trace_json(&self) -> String {
+        self.drain();
+        let store = self.store.lock().unwrap();
+        let mut events: Vec<Value> = Vec::new();
+        for &id in &store.order {
+            let Some(spans) = store.traces.get(&id) else { continue };
+            let mut spans = spans.clone();
+            spans.sort_by_key(|s| (s.start_us, s.end_us));
+            for s in spans {
+                let mut args = vec![("worker".to_string(), Value::Num(s.worker as i32 as f64))];
+                for (k, n) in &s.notes {
+                    args.push((k.to_string(), Value::Num(*n as f64)));
+                }
+                events.push(Value::obj([
+                    ("name", s.stage.name().into()),
+                    ("ph", "X".into()),
+                    ("ts", s.start_us.into()),
+                    ("dur", (s.end_us - s.start_us).into()),
+                    ("pid", 1u64.into()),
+                    ("tid", id.into()),
+                    ("args", Value::Obj(args)),
+                ]));
+            }
+        }
+        Value::obj([
+            ("traceEvents", Value::Arr(events)),
+            ("displayTimeUnit", "ms".into()),
+        ])
+        .to_string_compact()
+    }
+}
+
+fn timeline_total_us(spans: &[Span]) -> u64 {
+    let start = spans.iter().map(|s| s.start_us).min().unwrap_or(0);
+    let end = spans.iter().map(|s| s.end_us).max().unwrap_or(0);
+    end.saturating_sub(start)
+}
+
+fn timeline_json(id: u64, spans: &[Span]) -> Value {
+    let mut spans = spans.to_vec();
+    spans.sort_by_key(|s| (s.start_us, s.end_us));
+    Value::obj([
+        ("trace", id.into()),
+        ("total_us", timeline_total_us(&spans).into()),
+        ("spans", Value::Arr(spans.iter().map(Span::to_json).collect())),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Live-traffic capture into the scenario engine's `trace v1` format.
+// ---------------------------------------------------------------------------
+
+/// Reference channel capacity (bps) the scenario replayer scales by
+/// `snr_scale` — `paper_request`'s default device profile.
+const BASE_CAPACITY_BPS: f64 = 200e6;
+
+#[derive(Clone)]
+struct RecordedEvent {
+    arrival_s: f64,
+    device: usize,
+    accuracy_budget: f64,
+    snr_scale: f64,
+    phase2_uploads: u32,
+}
+
+#[derive(Default)]
+struct RecorderInner {
+    /// Connection key → compact device index.
+    devices: HashMap<u64, usize>,
+    events: Vec<RecordedEvent>,
+    /// Device index → position of its latest event (upload attribution).
+    last_event: HashMap<usize, usize>,
+}
+
+/// Captures live traffic into the `trace v1` text format bench-serve
+/// replays (`--scenario <file>`), so a production session becomes a
+/// regression scenario. Devices are compact indices in connection-arrival
+/// order; the class column is `live`; `snr_scale` is derived from the
+/// request's reported channel capacity relative to the paper-default
+/// profile.
+pub struct TrafficRecorder {
+    epoch: Instant,
+    path: String,
+    inner: Mutex<RecorderInner>,
+}
+
+impl TrafficRecorder {
+    pub fn new(path: &str) -> Arc<TrafficRecorder> {
+        Arc::new(TrafficRecorder {
+            epoch: Instant::now(),
+            path: path.to_string(),
+            inner: Mutex::new(RecorderInner::default()),
+        })
+    }
+
+    /// Record one infer arrival on connection `conn_key`.
+    pub fn record_infer(&self, conn_key: u64, accuracy_budget: f64, channel_capacity_bps: f64) {
+        let arrival_s = self.epoch.elapsed().as_secs_f64();
+        let mut g = self.inner.lock().unwrap();
+        let n = g.devices.len();
+        let device = *g.devices.entry(conn_key).or_insert(n);
+        let snr_scale = if channel_capacity_bps > 0.0 {
+            channel_capacity_bps / BASE_CAPACITY_BPS
+        } else {
+            1.0
+        };
+        let idx = g.events.len();
+        g.events.push(RecordedEvent {
+            arrival_s,
+            device,
+            accuracy_budget,
+            snr_scale,
+            phase2_uploads: 0,
+        });
+        g.last_event.insert(device, idx);
+    }
+
+    /// Attribute a phase-2 activation upload to `conn_key`'s latest event.
+    pub fn record_upload(&self, conn_key: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let Some(&device) = g.devices.get(&conn_key) else { return };
+        let Some(&idx) = g.last_event.get(&device) else { return };
+        if let Some(e) = g.events.get_mut(idx) {
+            e.phase2_uploads += 1;
+        }
+    }
+
+    /// Render the capture as `trace v1` text (stable event order).
+    pub fn to_text(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::from("trace v1\n");
+        for e in &g.events {
+            out.push_str(&format!(
+                "{} {} live {} {} {}\n",
+                e.arrival_s,
+                e.device,
+                e.accuracy_budget,
+                e.snr_scale,
+                // the replayer treats uploads=0 as "no phase 2"; a live
+                // infer with no observed upload records exactly that
+                e.phase2_uploads,
+            ));
+        }
+        out
+    }
+
+    /// Rewrite the capture file with everything recorded so far. Called
+    /// periodically from the GC thread and once at shutdown.
+    pub fn flush(&self) -> std::io::Result<()> {
+        std::fs::write(&self.path, self.to_text())
+    }
+
+    pub fn events(&self) -> usize {
+        self.inner.lock().unwrap().events.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(trace: u64, stage: Stage, start: u64, end: u64) -> Span {
+        Span { trace, stage, start_us: start, end_us: end, worker: 0, notes: Vec::new() }
+    }
+
+    #[test]
+    fn deterministic_sampler_rates() {
+        let sink = TraceSink::new(0.25, 0, 8, 64);
+        let taken = (0..100).filter(|_| sink.sample_accept().is_some()).count();
+        assert_eq!(taken, 25);
+
+        let all = TraceSink::new(1.0, 0, 8, 64);
+        assert!((0..50).all(|_| all.sample_accept().is_some()));
+
+        let none = TraceSink::new(0.0, 0, 8, 64);
+        assert!((0..50).all(|_| none.sample_accept().is_none()));
+        assert!(!none.sampling());
+    }
+
+    #[test]
+    fn minted_ids_are_unique_and_grants_echo() {
+        let sink = TraceSink::new(1.0, 0, 8, 64);
+        let a = sink.sample_accept().unwrap();
+        let b = sink.grant();
+        assert_ne!(a.id, b.id);
+        assert!(!a.echo);
+        assert!(b.echo);
+        assert_eq!(a.wire_id(), None);
+        assert_eq!(b.wire_id(), Some(b.id));
+    }
+
+    #[test]
+    fn drain_collects_across_rings_and_store_evicts_fifo() {
+        let sink = TraceSink::new(1.0, 0, 8, 2);
+        let t0 = sink.tracer(0);
+        let t1 = sink.tracer(1);
+        for id in 1..=3u64 {
+            t0.span(JobTrace { id, echo: false }, Stage::Plan, 10, 20);
+            t1.span(JobTrace { id, echo: false }, Stage::Encode, 20, 30);
+        }
+        sink.drain();
+        assert_eq!(sink.stored(), 2);
+        // trace 1 was evicted (FIFO), 2 and 3 remain
+        assert!(sink.trace_json(1).is_none());
+        assert!(sink.trace_json(2).is_some());
+        assert!(sink.trace_json(3).is_some());
+        assert_eq!(sink.spans_dropped(), 2);
+    }
+
+    #[test]
+    fn timeline_json_is_sorted_and_total_spans_the_envelope() {
+        let sink = TraceSink::new(1.0, 0, 8, 64);
+        let t = sink.tracer(3);
+        t.span_with(JobTrace { id: 9, echo: false }, Stage::Encode, 50, 90, vec![("cache_hit", 1)]);
+        t.span(JobTrace { id: 9, echo: false }, Stage::Read, 10, 20);
+        let json = sink.trace_json(9).unwrap();
+        let v = qpart_core::json::parse(&json).unwrap();
+        assert_eq!(v.req_u64("trace").unwrap(), 9);
+        assert_eq!(v.req_u64("total_us").unwrap(), 80);
+        let spans = v.req_arr("spans").unwrap();
+        assert_eq!(spans[0].req_str("stage").unwrap(), "read");
+        assert_eq!(spans[1].req_str("stage").unwrap(), "encode");
+        assert_eq!(spans[1].get("notes").unwrap().req_u64("cache_hit").unwrap(), 1);
+    }
+
+    #[test]
+    fn slow_store_keeps_exactly_n_worst() {
+        let sink = TraceSink::new(1.0, 100, 2, 64);
+        let t = sink.tracer(0);
+        // totals: 1→150, 2→500, 3→90 (below threshold), 4→300, 5→200
+        for (id, total) in [(1u64, 150u64), (2, 500), (3, 90), (4, 300), (5, 200)] {
+            t.span(JobTrace { id, echo: false }, Stage::Plan, 0, total);
+        }
+        sink.drain();
+        let v = qpart_core::json::parse(&sink.slow_json()).unwrap();
+        let slow = v.req_arr("slow").unwrap();
+        assert_eq!(slow.len(), 2);
+        assert_eq!(slow[0].req_u64("trace").unwrap(), 2);
+        assert_eq!(slow[1].req_u64("trace").unwrap(), 4);
+        // exemplars survive FIFO eviction of the main store
+        for id in 10..200u64 {
+            t.span(JobTrace { id, echo: false }, Stage::Plan, 0, 1);
+        }
+        sink.drain();
+        assert!(sink.trace_json(2).is_some());
+    }
+
+    #[test]
+    fn slow_exemplar_grows_with_late_spans() {
+        let sink = TraceSink::new(1.0, 50, 4, 64);
+        let t = sink.tracer(0);
+        t.span(JobTrace { id: 7, echo: false }, Stage::Plan, 0, 60);
+        sink.drain();
+        t.span(JobTrace { id: 7, echo: false }, Stage::Execute, 60, 400);
+        sink.drain();
+        let v = qpart_core::json::parse(&sink.slow_json()).unwrap();
+        let slow = v.req_arr("slow").unwrap();
+        assert_eq!(slow.len(), 1);
+        assert_eq!(slow[0].req_u64("total_us").unwrap(), 400);
+        assert_eq!(slow[0].req_arr("spans").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn chrome_export_has_complete_events() {
+        let sink = TraceSink::new(1.0, 0, 8, 64);
+        let t = sink.tracer(2);
+        t.span_with(JobTrace { id: 1, echo: false }, Stage::Execute, 5, 25, vec![("rows", 4)]);
+        let json = sink.chrome_trace_json();
+        let v = qpart_core::json::parse(&json).unwrap();
+        let events = v.req_arr("traceEvents").unwrap();
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert_eq!(e.req_str("ph").unwrap(), "X");
+        assert_eq!(e.req_str("name").unwrap(), "execute");
+        assert_eq!(e.req_u64("ts").unwrap(), 5);
+        assert_eq!(e.req_u64("dur").unwrap(), 20);
+        assert_eq!(e.req_u64("tid").unwrap(), 1);
+        assert_eq!(e.get("args").unwrap().req_u64("rows").unwrap(), 4);
+    }
+
+    #[test]
+    fn ring_overflow_drops_and_counts() {
+        let ring = SpanRing::new(2);
+        for i in 0..5 {
+            ring.push(span(1, Stage::Read, i, i + 1));
+        }
+        assert_eq!(ring.dropped(), 3);
+        assert_eq!(ring.drain().len(), 2);
+    }
+
+    #[test]
+    fn recorder_emits_replayable_trace_v1() {
+        let rec = TrafficRecorder::new("/dev/null");
+        rec.record_infer(100, 0.02, 200e6);
+        rec.record_infer(200, 0.05, 100e6);
+        rec.record_upload(100);
+        rec.record_upload(100);
+        rec.record_infer(100, 0.02, 200e6);
+        rec.record_upload(200);
+        let text = rec.to_text();
+        assert!(text.starts_with("trace v1\n"));
+        assert_eq!(rec.events(), 3);
+        let lines: Vec<&str> = text.lines().skip(1).collect();
+        // conn 100 is device 0, conn 200 is device 1; uploads attribute
+        // to the latest event of the right device
+        let cols: Vec<Vec<&str>> =
+            lines.iter().map(|l| l.split_whitespace().collect()).collect();
+        assert_eq!(cols[0][1], "0");
+        assert_eq!(cols[0][5], "2");
+        assert_eq!(cols[1][1], "1");
+        assert_eq!(cols[1][2], "live");
+        assert_eq!(cols[1][4], "0.5");
+        assert_eq!(cols[1][5], "1");
+        assert_eq!(cols[2][5], "0");
+    }
+}

@@ -13,10 +13,16 @@
 //! the connection thread stamps those into the negotiated framing (JSON
 //! line or binary frame) without re-encoding the payload.
 
+use crate::obs::{JobTrace, TraceStamp};
 use qpart_proto::messages::{EncodedSegmentBody, Request, Response};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// A reply paired with its optional trace stamp: the stamp lets the
+/// front-end measure completion-queue latency (the Route span) and
+/// decide whether to echo the trace id on the wire.
+pub type StampedReply = (WireReply, Option<TraceStamp>);
 
 /// One queued request plus its reply path and enqueue timestamp.
 #[derive(Debug)]
@@ -25,20 +31,34 @@ pub struct Job {
     pub reply: ReplySink,
     /// When the front-end enqueued the job (→ `queue_wait`).
     pub enqueued: Instant,
+    /// Trace identity when this request is sampled or hello-negotiated
+    /// (`None` on the untraced fast path).
+    pub trace: Option<JobTrace>,
 }
 
 impl Job {
     /// A job replying over a dedicated channel (thread-per-connection
     /// front-end, in-process callers, tests).
-    pub fn new(req: Request, reply_tx: SyncSender<WireReply>) -> Job {
-        Job { req, reply: ReplySink::Channel(reply_tx), enqueued: Instant::now() }
+    pub fn new(req: Request, reply_tx: SyncSender<StampedReply>) -> Job {
+        Job { req, reply: ReplySink::Channel(reply_tx), enqueued: Instant::now(), trace: None }
     }
 
     /// A job replying through a [`ReplyRouter`] completion queue (the
     /// evented front-end: `token` names the connection the reactor
     /// routes the reply back to).
     pub fn routed(req: Request, token: u64, router: Arc<ReplyRouter>) -> Job {
-        Job { req, reply: ReplySink::Routed { token, router }, enqueued: Instant::now() }
+        Job {
+            req,
+            reply: ReplySink::Routed { token, router },
+            enqueued: Instant::now(),
+            trace: None,
+        }
+    }
+
+    /// Attach a trace identity (builder style).
+    pub fn with_trace(mut self, trace: Option<JobTrace>) -> Job {
+        self.trace = trace;
+        self
     }
 }
 
@@ -53,21 +73,26 @@ impl Job {
 pub enum ReplySink {
     /// Dedicated per-request channel; the receiver blocks until the
     /// reply arrives (connection threads, in-process callers, tests).
-    Channel(SyncSender<WireReply>),
+    Channel(SyncSender<StampedReply>),
     /// Completion-queue routing for the evented front-end.
     Routed { token: u64, router: Arc<ReplyRouter> },
 }
 
 impl ReplySink {
-    /// Deliver the reply. Delivery is best-effort in both flavors: a
-    /// hung-up channel or a since-closed connection drops the reply,
-    /// exactly like a connection thread whose peer vanished.
+    /// Deliver an untraced reply. Delivery is best-effort in both
+    /// flavors: a hung-up channel or a since-closed connection drops the
+    /// reply, exactly like a connection thread whose peer vanished.
     pub fn send(&self, reply: WireReply) {
+        self.send_with(reply, None);
+    }
+
+    /// Deliver the reply with an optional trace stamp.
+    pub fn send_with(&self, reply: WireReply, stamp: Option<TraceStamp>) {
         match self {
             ReplySink::Channel(tx) => {
-                let _ = tx.send(reply);
+                let _ = tx.send((reply, stamp));
             }
-            ReplySink::Routed { token, router } => router.push(*token, reply),
+            ReplySink::Routed { token, router } => router.push(*token, reply, stamp),
         }
     }
 }
@@ -80,7 +105,7 @@ impl ReplySink {
 /// `poll(2)` learns about completions immediately (it must be cheap,
 /// non-blocking, and safe from any worker thread).
 pub struct ReplyRouter {
-    queue: Mutex<Vec<(u64, WireReply)>>,
+    queue: Mutex<Vec<(u64, WireReply, Option<TraceStamp>)>>,
     wake: Box<dyn Fn() + Send + Sync>,
 }
 
@@ -98,13 +123,13 @@ impl ReplyRouter {
 
     /// Queue one finished reply for connection `token` and wake the
     /// reactor.
-    pub fn push(&self, token: u64, reply: WireReply) {
-        self.queue.lock().unwrap().push((token, reply));
+    pub fn push(&self, token: u64, reply: WireReply, stamp: Option<TraceStamp>) {
+        self.queue.lock().unwrap().push((token, reply, stamp));
         (self.wake)();
     }
 
     /// Take every queued completion (reactor thread).
-    pub fn drain(&self) -> Vec<(u64, WireReply)> {
+    pub fn drain(&self) -> Vec<(u64, WireReply, Option<TraceStamp>)> {
         std::mem::take(&mut *self.queue.lock().unwrap())
     }
 }
@@ -122,6 +147,8 @@ pub enum WireReply {
 #[derive(Debug)]
 pub struct SegmentReply {
     pub session: u64,
+    /// Echoed trace id (`Some` only for hello-negotiated traces).
+    pub trace: Option<u64>,
     /// This request's Eq. 17 objective (the only per-request pattern field).
     pub objective: f64,
     pub body: Arc<EncodedSegmentBody>,
@@ -133,7 +160,11 @@ impl WireReply {
     pub fn into_response(self) -> Response {
         match self {
             WireReply::Msg(r) => r,
-            WireReply::Segment(s) => Response::Segment(s.body.to_reply(s.session, s.objective)),
+            WireReply::Segment(s) => {
+                let mut reply = s.body.to_reply(s.session, s.objective);
+                reply.trace = s.trace;
+                Response::Segment(reply)
+            }
         }
     }
 }
@@ -249,14 +280,14 @@ mod tests {
     use qpart_proto::messages::InferRequest;
     use std::sync::mpsc::sync_channel;
 
-    fn job() -> (Job, Receiver<WireReply>) {
+    fn job() -> (Job, Receiver<StampedReply>) {
         let (tx, rx) = sync_channel(1);
         (Job::new(Request::Ping, tx), rx)
     }
 
     /// An infer job (coalescible: same-key requests share one encode, so
     /// it opts a batch into the coalescing window).
-    fn infer_job() -> (Job, Receiver<WireReply>) {
+    fn infer_job() -> (Job, Receiver<StampedReply>) {
         let (tx, rx) = sync_channel(1);
         let req = InferRequest {
             model: "tinymlp".into(),
@@ -349,7 +380,7 @@ mod tests {
 
     /// An activation job (coalescible: uploads row-stack into batched
     /// phase-2 executions, so they opt into the window like infers).
-    fn activation_job() -> (Job, Receiver<WireReply>) {
+    fn activation_job() -> (Job, Receiver<StampedReply>) {
         let (tx, rx) = sync_channel(1);
         let req = qpart_proto::messages::ActivationUpload {
             session: 1,
@@ -417,7 +448,7 @@ mod tests {
         })));
         let sink = ReplySink::Routed { token: 42, router: Arc::clone(&router) };
         sink.send(WireReply::Msg(Response::Pong));
-        router.push(7, WireReply::Msg(Response::Pong));
+        router.push(7, WireReply::Msg(Response::Pong), None);
         assert_eq!(wakes.load(Ordering::SeqCst), 2, "every push wakes the reactor");
         let drained = router.drain();
         assert_eq!(drained.len(), 2);

@@ -38,7 +38,8 @@ pub mod cache;
 pub mod fair;
 
 pub use batch::{
-    drain_batch, BatchPolicy, DrainOutcome, Job, ReplyRouter, ReplySink, SegmentReply, WireReply,
+    drain_batch, BatchPolicy, DrainOutcome, Job, ReplyRouter, ReplySink, SegmentReply,
+    StampedReply, WireReply,
 };
 pub use cache::{EncodedReplyCache, SegmentKey};
 pub use fair::FairQueue;

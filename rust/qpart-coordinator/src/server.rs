@@ -31,9 +31,11 @@
 //! (qpart-sim), so modeled and live serving share one parallelism model.
 
 use crate::decision::DecisionCache;
-use crate::metrics::{Metrics, MetricsHub, MetricsSnapshot};
+use crate::metrics::{request_path, Metrics, MetricsHub, MetricsSnapshot};
+use crate::obs::{JobTrace, Stage, TraceSink, Tracer, TrafficRecorder, FRONT_WORKER};
 use crate::sched::{
-    drain_batch, BatchPolicy, DrainOutcome, EncodedReplyCache, FairQueue, Job, WireReply,
+    drain_batch, BatchPolicy, DrainOutcome, EncodedReplyCache, FairQueue, Job, StampedReply,
+    WireReply,
 };
 use crate::service::{Service, ServiceOptions};
 use crate::session::SharedSessionTable;
@@ -116,6 +118,27 @@ use std::time::Duration;
 ///   scrape inline. Both render through one shared helper
 ///   (`MetricsHub::scrape_http_response`), so the output cannot
 ///   diverge between front-ends.
+/// * `trace_sample` — accept-sampling rate in `[0, 1]` for the tracing
+///   layer ([`crate::obs`]): every sampled connection's requests get a
+///   per-stage span timeline collected into the trace store (served on
+///   the metrics listener as `/trace` / `/trace?id=` / `/trace/slow`).
+///   Sampled traces are server-side only — no wire byte changes — and
+///   `0` (the default) makes the whole layer a single `Option` check
+///   per request. Peers may additionally negotiate `trace: true` in
+///   `hello` to get their trace id echoed in replies; that works
+///   regardless of the sampling rate.
+/// * `trace_slow_us` — slow-request exemplar threshold: traced requests
+///   whose timeline spans at least this long are kept as one of the
+///   `trace_slow_keep` worst full timelines (`/trace/slow`), surviving
+///   FIFO eviction from the main store. Zero disables exemplars.
+/// * `trace_slow_keep` — how many worst timelines `/trace/slow` keeps.
+/// * `trace_store` — bounded trace-store capacity (complete timelines,
+///   FIFO-evicted; evictions are counted in `dropped_spans`).
+/// * `record_trace` — optional path: capture admitted live traffic
+///   (arrival times, device profile scalars, phase-2 uploads) into the
+///   scenario engine's `trace v1` text format, replayable with
+///   `bench-scenario` ([`TrafficRecorder`]). Flushed periodically and
+///   at shutdown.
 /// * `warm_cache` — pre-warm the shared caches at startup: one worker
 ///   encodes the most-likely `(model, level, partition)` reply keys
 ///   (Algorithm 1 enumerates them; Algorithm 2 under the paper-default
@@ -158,6 +181,16 @@ pub struct ServerConfig {
     pub fair_rate: f64,
     /// Optional plaintext metrics-scrape listen address.
     pub metrics_listen: Option<String>,
+    /// Trace accept-sampling rate in `[0, 1]` (0 = sampling off).
+    pub trace_sample: f64,
+    /// Slow-exemplar threshold in µs (0 = no slow capture).
+    pub trace_slow_us: u64,
+    /// How many worst timelines `/trace/slow` retains.
+    pub trace_slow_keep: usize,
+    /// Trace-store capacity in complete timelines (FIFO eviction).
+    pub trace_store: usize,
+    /// Optional `trace v1` live-traffic capture path.
+    pub record_trace: Option<String>,
     /// Pre-warm the encoded-reply and compile caches at startup: one
     /// worker encodes the most-likely reply keys and pre-builds their
     /// phase-2 plans before the server accepts traffic.
@@ -190,6 +223,11 @@ impl Default for ServerConfig {
             conn_idle: Duration::from_secs(600),
             fair_rate: 0.0,
             metrics_listen: None,
+            trace_sample: 0.0,
+            trace_slow_us: 0,
+            trace_slow_keep: 8,
+            trace_store: 1024,
+            record_trace: None,
             warm_cache: false,
             host_fallback: false,
             artifacts_dir: "artifacts".into(),
@@ -227,6 +265,11 @@ pub struct ServerHandle {
     /// The server-wide Algorithm-2 decision cache (observability in
     /// tests/examples).
     pub decision_cache: Arc<DecisionCache>,
+    /// The trace sink: stored timelines, slow exemplars, Chrome trace
+    /// export (`bench-serve --trace-out` reads it through this handle).
+    pub trace: Arc<TraceSink>,
+    /// Live-traffic recorder, when `record_trace` is configured.
+    pub recorder: Option<Arc<TrafficRecorder>>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
     /// Threaded-frontend scrape acceptor (None under the reactor, which
@@ -256,6 +299,12 @@ impl ServerHandle {
         }
         for t in self.worker_threads.drain(..) {
             let _ = t.join();
+        }
+        // workers are parked: collect their final spans and persist any
+        // recorded traffic
+        self.trace.drain();
+        if let Some(rec) = &self.recorder {
+            let _ = rec.flush();
         }
     }
 
@@ -288,6 +337,17 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
     let decision_cache = Arc::new(DecisionCache::new());
     // per-connection fair-queue token buckets (inert when fair_rate == 0)
     let fair = Arc::new(FairQueue::new(cfg.fair_rate));
+    // the trace sink always exists (hello-negotiated grants must work
+    // even with sampling off); disabled tracing costs one Option check
+    // per request and emits no spans
+    let trace = TraceSink::new(
+        cfg.trace_sample,
+        cfg.trace_slow_us,
+        cfg.trace_slow_keep,
+        cfg.trace_store,
+    );
+    hub.register_trace_sink(Arc::clone(&trace));
+    let recorder = cfg.record_trace.as_deref().map(TrafficRecorder::new);
     let stop = Arc::new(AtomicBool::new(false));
 
     // one resident bundle for the whole pool (weights are immutable)
@@ -322,6 +382,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         // one worker warms the shared caches; its peers see the results
         let warm = cfg.warm_cache && w == 0;
         let host_fallback = cfg.host_fallback;
+        let worker_tracer = trace.tracer(w as u32);
         let t = std::thread::Builder::new()
             .name(format!("qpart-worker-{w}"))
             .spawn(move || {
@@ -329,6 +390,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
                     compile_cache: worker_compile,
                     decision_cache: worker_decisions,
                     host_fallback,
+                    tracer: Some(worker_tracer),
                 };
                 let service = Service::with_options(
                     worker_bundle,
@@ -381,12 +443,21 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         }
     }
 
-    // Session GC: expire sessions whose device never uploaded.
-    let gc_thread = if cfg.session_ttl > Duration::ZERO {
+    // Housekeeping: expire sessions whose device never uploaded, drain
+    // worker span rings into the trace store (keeps ring pressure down
+    // between endpoint hits), and persist recorded traffic so a killed
+    // `serve` still leaves a usable capture.
+    let gc_thread = {
         let gc_sessions = Arc::clone(&sessions);
         let gc_stop = Arc::clone(&stop);
+        let gc_trace = Arc::clone(&trace);
+        let gc_recorder = recorder.clone();
         let ttl = cfg.session_ttl;
-        let interval = (ttl / 4).clamp(Duration::from_millis(10), Duration::from_secs(1));
+        let interval = if ttl > Duration::ZERO {
+            (ttl / 4).clamp(Duration::from_millis(10), Duration::from_secs(1))
+        } else {
+            Duration::from_secs(1)
+        };
         Some(
             std::thread::Builder::new()
                 .name("qpart-session-gc".into())
@@ -400,14 +471,18 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
                         slept += tick;
                         if slept >= interval {
                             slept = Duration::ZERO;
-                            gc_sessions.sweep_expired(ttl);
+                            if ttl > Duration::ZERO {
+                                gc_sessions.sweep_expired(ttl);
+                            }
+                            gc_trace.drain();
+                            if let Some(rec) = &gc_recorder {
+                                let _ = rec.flush();
+                            }
                         }
                     }
                 })
                 .map_err(|e| e.to_string())?,
         )
-    } else {
-        None
     };
 
     // Optional plaintext metrics-scrape listener (second socket).
@@ -432,6 +507,8 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         Arc::clone(&hub),
         Arc::clone(&sessions),
         fair,
+        Arc::clone(&trace),
+        recorder.clone(),
         Arc::clone(&stop),
     )?;
 
@@ -443,6 +520,8 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         cache,
         compile_cache,
         decision_cache,
+        trace,
+        recorder,
         stop,
         accept_thread: Some(accept_thread),
         metrics_thread,
@@ -465,6 +544,8 @@ fn spawn_frontend(
     hub: Arc<MetricsHub>,
     sessions: Arc<SharedSessionTable>,
     fair: Arc<FairQueue>,
+    trace: Arc<TraceSink>,
+    recorder: Option<Arc<TrafficRecorder>>,
     stop: Arc<AtomicBool>,
 ) -> Result<FrontendThreads, String> {
     #[cfg(unix)]
@@ -480,6 +561,8 @@ fn spawn_frontend(
                 hub,
                 sessions,
                 fair,
+                trace,
+                recorder,
                 stop,
             })
             .map_err(|e| format!("reactor init: {e}"))?;
@@ -495,6 +578,10 @@ fn spawn_frontend(
     let max_conns = cfg.max_conns.max(1);
     let conn_idle = cfg.conn_idle;
     let accept_stop = Arc::clone(&stop);
+    // one front-end ring shared by every connection thread (SpanRing
+    // pushes are mutex-guarded); spans carry FRONT_WORKER like the
+    // reactor's so the two front-ends are indistinguishable in a trace
+    let front_tracer = trace.tracer(FRONT_WORKER);
     // fair-queue keys for the threaded front-end: a simple accept sequence
     // (the reactor keys buckets by its generation-stamped slot token)
     let conn_seq = Arc::new(std::sync::atomic::AtomicU64::new(0));
@@ -520,9 +607,12 @@ fn spawn_frontend(
                             let _ = stream
                                 .set_read_timeout(Some(Duration::from_millis(500)));
                             let mut sink = [0u8; 2048];
-                            let _ = stream.read(&mut sink);
-                            let resp =
-                                scrape_hub.scrape_http_response(scrape_sessions.len());
+                            let n = stream.read(&mut sink).unwrap_or(0);
+                            // route by path (scrape vs /trace endpoints);
+                            // a peer that sent nothing gets the default
+                            let head = String::from_utf8_lossy(&sink[..n]);
+                            let resp = scrape_hub
+                                .http_response(request_path(&head), scrape_sessions.len());
                             let _ = stream.write_all(&resp);
                             let _ = stream.shutdown(std::net::Shutdown::Write);
                             while matches!(stream.read(&mut sink), Ok(n) if n > 0) {}
@@ -565,6 +655,8 @@ fn spawn_frontend(
                 let metrics = Arc::clone(&accept_metrics);
                 let conn_stop = Arc::clone(&accept_stop);
                 let conn_fair = Arc::clone(&fair);
+                let conn_tracer = front_tracer.clone();
+                let conn_recorder = recorder.clone();
                 let fair_key = conn_seq.fetch_add(1, Ordering::Relaxed);
                 let spawned =
                     std::thread::Builder::new().name("qpart-conn".into()).spawn(move || {
@@ -577,6 +669,8 @@ fn spawn_frontend(
                             conn_idle,
                             Arc::clone(&conn_fair),
                             fair_key,
+                            conn_tracer,
+                            conn_recorder,
                         );
                         conn_fair.forget(fair_key);
                         Metrics::gauge_dec(&metrics.conns_open);
@@ -603,14 +697,16 @@ fn write_reply(
     match reply {
         WireReply::Msg(resp) => write_frame(writer, &resp.to_line()),
         WireReply::Segment(s) => {
+            // the traced splice with `None` is byte-identical to the
+            // untraced stamp (proven by the proto splice tests)
             if binary {
                 write_binary_frame(
                     writer,
-                    &s.body.binary_header(s.session, s.objective),
+                    &s.body.binary_header_traced(s.session, s.objective, s.trace),
                     s.body.blob(),
                 )
             } else {
-                write_frame(writer, &s.body.json_line(s.session, s.objective))
+                write_frame(writer, &s.body.json_line_traced(s.session, s.objective, s.trace))
             }
         }
     }
@@ -626,6 +722,8 @@ fn connection_loop(
     conn_idle: Duration,
     fair: Arc<FairQueue>,
     fair_key: u64,
+    tracer: Tracer,
+    recorder: Option<Arc<TrafficRecorder>>,
 ) {
     // idle/slow-client timeout via the socket read timeout: the blocking
     // twin of the reactor's idle sweep (a request in flight never trips
@@ -641,10 +739,17 @@ fn connection_loop(
     // negotiated per session via `hello`; symmetric: grants binary
     // segment replies downlink AND binary activation uploads uplink
     let mut binary = false;
+    // accept-time sampling, exactly like the reactor's: a sampled trace
+    // is server-side only and changes no wire bytes
+    let mut conn_trace = tracer.sink().sample_accept();
     loop {
         if stop.load(Ordering::SeqCst) {
             break;
         }
+        // the read span of a blocking front-end starts when the thread
+        // parks on the socket — it includes the wait for the request to
+        // arrive (the thread cannot observe first-byte time separately)
+        let t_read = conn_trace.map(|_| tracer.now_us());
         let frame = match read_any_frame(&mut reader) {
             Ok(f) => f,
             Err(FrameError::Closed) => break,
@@ -700,7 +805,16 @@ fn connection_loop(
         if let Request::Hello(h) = &req {
             Metrics::inc(&metrics.requests_total);
             binary = h.binary_frames && binary_allowed;
-            let resp = Response::Hello(HelloReply { binary_frames: binary });
+            if h.trace {
+                // hello-negotiated grant: the id is echoed on the wire
+                // for client-side correlation (supersedes any sampled
+                // trace this connection drew at accept)
+                conn_trace = Some(tracer.sink().grant());
+            }
+            let resp = Response::Hello(HelloReply {
+                binary_frames: binary,
+                trace: conn_trace.and_then(JobTrace::wire_id),
+            });
             if write_frame(&mut writer, &resp.to_line()).is_err() {
                 break;
             }
@@ -718,29 +832,76 @@ fn connection_loop(
             }
             continue;
         }
-        let (reply_tx, reply_rx) = sync_channel::<WireReply>(1);
-        let reply = match job_tx.try_send(Job::new(req, reply_tx)) {
-            Ok(()) => match reply_rx.recv() {
-                Ok(r) => r,
-                Err(_) => WireReply::Msg(Response::Error(ErrorReply {
-                    code: "internal".into(),
-                    message: "inference worker gone".into(),
-                })),
-            },
+        // recorder payload pulled out before the request moves into the
+        // job; only admitted requests are recorded (a shed request never
+        // reached the service, so a replay should not send it either)
+        let rec_infer = match &req {
+            Request::Infer(i) if recorder.is_some() => {
+                Some((i.accuracy_budget, i.channel_capacity_bps))
+            }
+            _ => None,
+        };
+        let rec_upload = recorder.is_some() && matches!(req, Request::Activation(_));
+        let (reply_tx, reply_rx) = sync_channel::<StampedReply>(1);
+        let (reply, stamp) = match job_tx.try_send(Job::new(req, reply_tx).with_trace(conn_trace))
+        {
+            Ok(()) => {
+                if let Some(rec) = &recorder {
+                    if let Some((budget, cap)) = rec_infer {
+                        rec.record_infer(fair_key, budget, cap);
+                    } else if rec_upload {
+                        rec.record_upload(fair_key);
+                    }
+                }
+                if let (Some(trace), Some(start)) = (conn_trace, t_read) {
+                    // read span (wait + frame assembly), then the admit
+                    // span for the queue hand-off — both closing now,
+                    // mirroring the reactor's stages
+                    let now = tracer.now_us();
+                    tracer.span(trace, Stage::Read, start, now);
+                    tracer.span(trace, Stage::Admit, now, now);
+                }
+                match reply_rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => (
+                        WireReply::Msg(Response::Error(ErrorReply {
+                            code: "internal".into(),
+                            message: "inference worker gone".into(),
+                        })),
+                        None,
+                    ),
+                }
+            }
             Err(TrySendError::Full(_)) => {
                 Metrics::inc(&metrics.shed_total);
-                WireReply::Msg(Response::Error(ErrorReply {
-                    code: "overloaded".into(),
-                    message: "admission control: job queue full".into(),
-                }))
+                (
+                    WireReply::Msg(Response::Error(ErrorReply {
+                        code: "overloaded".into(),
+                        message: "admission control: job queue full".into(),
+                    })),
+                    None,
+                )
             }
-            Err(TrySendError::Disconnected(_)) => WireReply::Msg(Response::Error(ErrorReply {
-                code: "shutdown".into(),
-                message: "server stopping".into(),
-            })),
+            Err(TrySendError::Disconnected(_)) => (
+                WireReply::Msg(Response::Error(ErrorReply {
+                    code: "shutdown".into(),
+                    message: "server stopping".into(),
+                })),
+                None,
+            ),
         };
+        let t_route = stamp.map(|s| {
+            // route span: worker pushed the reply → this thread resumed
+            let now = tracer.now_us();
+            tracer.span(s.trace, Stage::Route, s.pushed_us, now);
+            (s.trace, now)
+        });
         if write_reply(&mut writer, reply, binary).is_err() {
             break;
+        }
+        if let Some((trace, start)) = t_route {
+            // flush span: serialization + the blocking socket write
+            tracer.span(trace, Stage::Flush, start, tracer.now_us());
         }
     }
 }

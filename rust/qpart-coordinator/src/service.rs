@@ -24,6 +24,7 @@
 
 use crate::decision::{DecisionCache, DecisionKey, ProfileBucket};
 use crate::metrics::{Metrics, MetricsHub};
+use crate::obs::{JobTrace, Stage, TraceStamp, Tracer};
 use crate::sched::{EncodedReplyCache, Job, ReplySink, SegmentKey, SegmentReply, WireReply};
 use crate::session::{Session, SharedSessionTable};
 use qpart_core::channel::Channel;
@@ -54,6 +55,11 @@ pub struct ServiceOptions {
     /// Execute phase 2 with the pure-Rust host reference kernels instead
     /// of PJRT (tests / bench-serve; linear architectures only).
     pub host_fallback: bool,
+    /// This worker's span emitter (see [`crate::obs`]). `None` for
+    /// standalone services; the server wires one per pool worker. Spans
+    /// are only recorded for jobs that carry a [`JobTrace`], so an idle
+    /// tracer costs one `Option` check per job.
+    pub tracer: Option<Tracer>,
 }
 
 impl Default for ServiceOptions {
@@ -62,6 +68,7 @@ impl Default for ServiceOptions {
             compile_cache: Arc::new(CompileCache::new()),
             decision_cache: Arc::new(DecisionCache::new()),
             host_fallback: false,
+            tracer: None,
         }
     }
 }
@@ -91,6 +98,8 @@ pub struct Service {
     /// Server-wide Algorithm-2 memoization per
     /// (model, level, bucketed profile) — repeat profiles skip planning.
     decision_cache: Arc<DecisionCache>,
+    /// Span emitter for traced jobs (`None` disables span recording).
+    tracer: Option<Tracer>,
 }
 
 impl Service {
@@ -142,7 +151,17 @@ impl Service {
             default_weights: TradeoffWeights::paper_default(),
             reply_cache,
             decision_cache: opts.decision_cache,
+            tracer: opts.tracer,
         })
+    }
+
+    /// A [`TraceStamp`] for a traced job's reply push (the front-end
+    /// turns it into the Route span), `None` when untraced.
+    fn stamp(&self, trace: Option<JobTrace>) -> Option<TraceStamp> {
+        match (&self.tracer, trace) {
+            (Some(t), Some(trace)) => Some(TraceStamp { trace, pushed_us: t.now_us() }),
+            _ => None,
+        }
     }
 
     fn pattern_set(&self, model: &str) -> Option<&PatternSet> {
@@ -162,9 +181,12 @@ impl Service {
             Request::Ping => Response::Pong,
             Request::ListModels => self.list_models(),
             Request::Stats => Response::Stats(self.stats_json()),
-            // framing is a connection-level concern; a hello that reaches
-            // the pool (direct in-process callers) grants nothing
-            Request::Hello(_) => Response::Hello(HelloReply { binary_frames: false }),
+            // framing and tracing are connection-level concerns; a hello
+            // that reaches the pool (direct in-process callers) grants
+            // nothing
+            Request::Hello(_) => {
+                Response::Hello(HelloReply { binary_frames: false, trace: None })
+            }
             Request::Infer(r) => self.handle_infer(&r),
             Request::Activation(a) => self.handle_activation(&a),
             Request::Simulate(s) => self.handle_simulate(&s),
@@ -188,17 +210,24 @@ impl Service {
         }
         Metrics::inc(&self.metrics.batches_total);
         let dequeued = Instant::now();
-        let mut infers: Vec<(InferRequest, ReplySink)> = Vec::new();
-        let mut uploads: Vec<(ActivationUpload, ReplySink)> = Vec::new();
+        let mut infers: Vec<(InferRequest, ReplySink, Option<JobTrace>)> = Vec::new();
+        let mut uploads: Vec<(ActivationUpload, ReplySink, Option<JobTrace>)> = Vec::new();
         for job in jobs {
             let wait = dequeued.saturating_duration_since(job.enqueued);
-            self.metrics.queue_wait.observe_us(wait.as_micros() as u64);
+            let wait_us = wait.as_micros() as u64;
+            self.metrics.queue_wait.observe_us(wait_us);
+            if let (Some(tr), Some(trace)) = (&self.tracer, job.trace) {
+                // span length ≡ the queue_wait histogram sample, exactly
+                let start = tr.sink().offset_us(job.enqueued);
+                tr.span(trace, Stage::QueueWait, start, start + wait_us);
+            }
             match job.req {
-                Request::Infer(r) => infers.push((r, job.reply)),
-                Request::Activation(a) => uploads.push((a, job.reply)),
+                Request::Infer(r) => infers.push((r, job.reply, job.trace)),
+                Request::Activation(a) => uploads.push((a, job.reply, job.trace)),
                 req => {
                     let resp = self.handle(req);
-                    job.reply.send(WireReply::Msg(resp));
+                    let stamp = self.stamp(job.trace);
+                    job.reply.send_with(WireReply::Msg(resp), stamp);
                 }
             }
         }
@@ -207,11 +236,12 @@ impl Service {
     }
 
     /// Plan + group + encode-once + fan out (the coalescing core).
-    fn handle_infer_batch(&mut self, jobs: Vec<(InferRequest, ReplySink)>) {
+    fn handle_infer_batch(&mut self, jobs: Vec<(InferRequest, ReplySink, Option<JobTrace>)>) {
         // one waiting connection within a group
         struct Pending {
             tx: ReplySink,
             objective: f64,
+            trace: Option<JobTrace>,
         }
         // all same-key requests of this batch: one encode, many replies
         struct Group {
@@ -222,14 +252,28 @@ impl Service {
         }
         // plan every request; identical decisions coalesce into one group
         let mut groups: Vec<Group> = Vec::new();
-        for (r, tx) in jobs {
+        for (r, tx, trace) in jobs {
             Metrics::inc(&self.metrics.requests_total);
             let t_req = Instant::now();
             match self.plan_infer(&r) {
-                Ok((arch, decision)) => {
+                Ok((arch, decision, plan_hit)) => {
+                    if let (Some(tr), Some(trace)) = (&self.tracer, trace) {
+                        let start = tr.sink().offset_us(t_req);
+                        tr.span_with(
+                            trace,
+                            Stage::Plan,
+                            start,
+                            tr.now_us(),
+                            vec![
+                                ("cache_hit", i64::from(plan_hit)),
+                                ("level", decision.level_idx as i64),
+                                ("partition", decision.pattern.partition as i64),
+                            ],
+                        );
+                    }
                     let key: SegmentKey =
                         (r.model.clone(), decision.level_idx, decision.pattern.partition);
-                    let pending = Pending { tx, objective: decision.cost.objective };
+                    let pending = Pending { tx, objective: decision.cost.objective, trace };
                     match groups.iter().position(|g| g.key == key) {
                         Some(i) => groups[i].pendings.push(pending),
                         None => groups.push(Group {
@@ -245,7 +289,8 @@ impl Service {
                     self.metrics
                         .handle_latency
                         .observe_us(t_req.elapsed().as_micros() as u64);
-                    tx.send(WireReply::Msg(resp));
+                    let stamp = self.stamp(trace);
+                    tx.send_with(WireReply::Msg(resp), stamp);
                 }
             }
         }
@@ -257,22 +302,42 @@ impl Service {
                 Metrics::add(&self.metrics.coalesced_total, (g.pendings.len() - 1) as u64);
             }
             match self.encoded_for(&g.key, &g.pattern) {
-                Ok(body) => {
+                Ok((body, encode_hit)) => {
                     // one handling-time measurement per group (the encode
                     // dominates): recording elapsed per pending would make
                     // a request's latency reflect its fan-out position
                     let group_us = t_group.elapsed().as_micros() as u64;
+                    let fanout = g.pendings.len() as i64;
                     let boundary = boundary_dims(&g.arch, g.pattern.partition, 1);
                     for p in g.pendings {
                         let session =
                             self.sessions.open(&g.key.0, g.pattern.clone(), boundary.clone());
                         Metrics::inc(&self.metrics.sessions_opened);
                         Metrics::add(&self.metrics.bytes_out, body.wire_bytes());
-                        p.tx.send(WireReply::Segment(SegmentReply {
-                            session,
-                            objective: p.objective,
-                            body: Arc::clone(&body),
-                        }));
+                        if let (Some(tr), Some(trace)) = (&self.tracer, p.trace) {
+                            // every pending shares the group's encode window
+                            let start = tr.sink().offset_us(t_group);
+                            tr.span_with(
+                                trace,
+                                Stage::Encode,
+                                start,
+                                start + group_us,
+                                vec![
+                                    ("cache_hit", i64::from(encode_hit)),
+                                    ("fanout", fanout),
+                                ],
+                            );
+                        }
+                        let stamp = self.stamp(p.trace);
+                        p.tx.send_with(
+                            WireReply::Segment(SegmentReply {
+                                session,
+                                trace: p.trace.and_then(JobTrace::wire_id),
+                                objective: p.objective,
+                                body: Arc::clone(&body),
+                            }),
+                            stamp,
+                        );
                         self.metrics.handle_latency.observe_us(group_us);
                     }
                 }
@@ -281,7 +346,8 @@ impl Service {
                     for p in g.pendings {
                         Metrics::inc(&self.metrics.errors_total);
                         self.metrics.handle_latency.observe_us(group_us);
-                        p.tx.send(WireReply::Msg(resp.clone()));
+                        let stamp = self.stamp(p.trace);
+                        p.tx.send_with(WireReply::Msg(resp.clone()), stamp);
                     }
                 }
             }
@@ -352,8 +418,9 @@ impl Service {
     /// (model, level, profile-bucket) skips planning entirely. On
     /// success, the decided pattern determines the coalescing key; only
     /// the objective value remains per-request (and it is part of the
-    /// memoized decision — a pure function of the same key).
-    fn plan_infer(&self, r: &InferRequest) -> Result<(ModelSpec, Arc<Decision>), Response> {
+    /// memoized decision — a pure function of the same key). The returned
+    /// bool is the decision-cache hit flag (surfaced in Plan spans).
+    fn plan_infer(&self, r: &InferRequest) -> Result<(ModelSpec, Arc<Decision>, bool), Response> {
         let arch = match self.arch_for_model(&r.model) {
             Ok(a) => a.clone(),
             Err(e) => return Err(Self::err("unknown_model", e)),
@@ -378,7 +445,7 @@ impl Service {
         let key: DecisionKey = (r.model.clone(), level_idx, ProfileBucket::of(&params.cost));
         if let Some(d) = self.decision_cache.get(&key) {
             self.metrics.decide_latency.observe_us(t_dec.elapsed().as_micros() as u64);
-            return Ok((arch, d));
+            return Ok((arch, d, true));
         }
         let decision = match serve_request_fast(&arch, set, &params) {
             Ok(d) => Arc::new(d),
@@ -386,7 +453,7 @@ impl Service {
         };
         self.decision_cache.insert(key, Arc::clone(&decision));
         self.metrics.decide_latency.observe_us(t_dec.elapsed().as_micros() as u64);
-        Ok((arch, decision))
+        Ok((arch, decision, false))
     }
 
     /// Fetch the encoded reply body for `key`, or quantize + pack +
@@ -399,9 +466,9 @@ impl Service {
         &mut self,
         key: &SegmentKey,
         pattern: &QuantPattern,
-    ) -> Result<Arc<EncodedSegmentBody>, Response> {
+    ) -> Result<(Arc<EncodedSegmentBody>, bool), Response> {
         if let Some(body) = self.reply_cache.get(key) {
-            return Ok(body);
+            return Ok((body, true));
         }
         let t_q = Instant::now();
         let seg = match self.executor.quantize_segment_packed(&key.0, pattern) {
@@ -437,19 +504,19 @@ impl Service {
         self.reply_cache.insert(key.clone(), Arc::clone(&body));
         Metrics::inc(&self.metrics.encodes_total);
         self.metrics.quantize_latency.observe_us(t_q.elapsed().as_micros() as u64);
-        Ok(body)
+        Ok((body, false))
     }
 
     /// Phase 1, single-request path (in-process callers; pool workers go
     /// through [`Service::handle_batch`]): decide, fetch/encode, open a
     /// session.
     fn handle_infer(&mut self, r: &InferRequest) -> Response {
-        let (arch, decision) = match self.plan_infer(r) {
+        let (arch, decision, _) = match self.plan_infer(r) {
             Ok(x) => x,
             Err(resp) => return resp,
         };
         let key: SegmentKey = (r.model.clone(), decision.level_idx, decision.pattern.partition);
-        let body = match self.encoded_for(&key, &decision.pattern) {
+        let (body, _) = match self.encoded_for(&key, &decision.pattern) {
             Ok(b) => b,
             Err(resp) => return resp,
         };
@@ -506,33 +573,51 @@ impl Service {
         &mut self,
         model: &str,
         partition: usize,
-        rows: Vec<(u64, HostTensor)>,
+        rows: Vec<(u64, HostTensor, Option<JobTrace>)>,
     ) -> Vec<(u64, Response)> {
         let mut out = Vec::with_capacity(rows.len());
         let mut iter = rows.into_iter().peekable();
         while iter.peek().is_some() {
-            let chunk: Vec<(u64, HostTensor)> = iter.by_ref().take(EVAL_BATCH).collect();
-            let sessions: Vec<u64> = chunk.iter().map(|(s, _)| *s).collect();
-            let tensors: Vec<HostTensor> = chunk.into_iter().map(|(_, h)| h).collect();
+            let chunk: Vec<(u64, HostTensor, Option<JobTrace>)> =
+                iter.by_ref().take(EVAL_BATCH).collect();
+            let sessions: Vec<(u64, Option<JobTrace>)> =
+                chunk.iter().map(|(s, _, t)| (*s, *t)).collect();
+            let tensors: Vec<HostTensor> = chunk.into_iter().map(|(_, h, _)| h).collect();
             let t_x = Instant::now();
             let result = self.executor.run_server_segment_rows(model, &tensors, partition);
             let us = t_x.elapsed().as_micros() as u64;
             self.metrics.execute_latency.observe_us(us);
             Metrics::inc(&self.metrics.phase2_execs_total);
             Metrics::add(&self.metrics.phase2_rows_total, sessions.len() as u64);
+            if let Some(tr) = &self.tracer {
+                let start = tr.sink().offset_us(t_x);
+                let rows_note = sessions.len() as i64;
+                for trace in sessions.iter().filter_map(|(_, t)| *t) {
+                    // batch occupancy: how many rows shared this run
+                    tr.span_with(
+                        trace,
+                        Stage::Execute,
+                        start,
+                        start + us,
+                        vec![("rows", rows_note)],
+                    );
+                }
+            }
             match result {
                 Ok(outcome) => {
                     Metrics::add(
                         &self.metrics.phase2_padded_rows_total,
                         outcome.padded_rows as u64,
                     );
-                    for (sid, logits) in sessions.iter().zip(outcome.logits) {
-                        out.push((*sid, Response::Result(result_reply(*sid, &logits, None, us))));
+                    for ((sid, trace), logits) in sessions.iter().zip(outcome.logits) {
+                        let mut reply = result_reply(*sid, &logits, None, us);
+                        reply.trace = trace.and_then(JobTrace::wire_id);
+                        out.push((*sid, Response::Result(reply)));
                     }
                 }
                 Err(e) => {
                     let resp = Self::err("internal", e);
-                    for sid in sessions {
+                    for (sid, _) in sessions {
                         out.push((sid, resp.clone()));
                     }
                 }
@@ -550,8 +635,11 @@ impl Service {
             Ok(x) => x,
             Err(resp) => return resp,
         };
-        let mut replies =
-            self.run_phase2(&session.model, session.pattern.partition, vec![(a.session, h)]);
+        let mut replies = self.run_phase2(
+            &session.model,
+            session.pattern.partition,
+            vec![(a.session, h, None)],
+        );
         match replies.pop() {
             Some((_, resp)) => resp,
             None => Self::err("internal", "phase-2 execution returned nothing"),
@@ -562,11 +650,15 @@ impl Service {
     /// `(model, partition)`, and row-stack each group into
     /// ⌈rows/EVAL_BATCH⌉ server-segment executions — the uplink mirror of
     /// `handle_infer_batch`'s encode-once coalescing.
-    fn handle_activation_batch(&mut self, uploads: Vec<(ActivationUpload, ReplySink)>) {
+    fn handle_activation_batch(
+        &mut self,
+        uploads: Vec<(ActivationUpload, ReplySink, Option<JobTrace>)>,
+    ) {
         struct Pending {
             session: u64,
             tensor: HostTensor,
             tx: ReplySink,
+            trace: Option<JobTrace>,
         }
         struct Group {
             model: String,
@@ -574,12 +666,12 @@ impl Service {
             pendings: Vec<Pending>,
         }
         let mut groups: Vec<Group> = Vec::new();
-        for (a, tx) in uploads {
+        for (a, tx, trace) in uploads {
             Metrics::inc(&self.metrics.requests_total);
             let t_req = Instant::now();
             match self.decode_activation(&a) {
                 Ok((session, tensor)) => {
-                    let pending = Pending { session: a.session, tensor, tx };
+                    let pending = Pending { session: a.session, tensor, tx, trace };
                     let partition = session.pattern.partition;
                     match groups
                         .iter()
@@ -598,7 +690,8 @@ impl Service {
                     self.metrics
                         .handle_latency
                         .observe_us(t_req.elapsed().as_micros() as u64);
-                    tx.send(WireReply::Msg(resp));
+                    let stamp = self.stamp(trace);
+                    tx.send_with(WireReply::Msg(resp), stamp);
                 }
             }
         }
@@ -609,17 +702,18 @@ impl Service {
             let mut txs = Vec::with_capacity(g.pendings.len());
             let mut rows = Vec::with_capacity(g.pendings.len());
             for p in g.pendings {
-                txs.push(p.tx);
-                rows.push((p.session, p.tensor));
+                txs.push((p.tx, p.trace));
+                rows.push((p.session, p.tensor, p.trace));
             }
             let replies = self.run_phase2(&g.model, g.partition, rows);
             let group_us = t_group.elapsed().as_micros() as u64;
-            for (tx, (_, resp)) in txs.iter().zip(replies) {
+            for ((tx, trace), (_, resp)) in txs.iter().zip(replies) {
                 if matches!(resp, Response::Error(_)) {
                     Metrics::inc(&self.metrics.errors_total);
                 }
                 self.metrics.handle_latency.observe_us(group_us);
-                tx.send(WireReply::Msg(resp));
+                let stamp = self.stamp(*trace);
+                tx.send_with(WireReply::Msg(resp), stamp);
             }
         }
     }
@@ -651,6 +745,7 @@ impl Service {
         for (model, level_idx, pattern) in targets {
             let key: SegmentKey = (model.clone(), level_idx, pattern.partition);
             if self.encoded_for(&key, &pattern).is_ok() {
+                // hit flag irrelevant here: a warm re-run is already cached
                 // plan build is what matters offline; executable compiles
                 // are best-effort (absent without `make artifacts`)
                 let _ = self.executor.warm_server_segment(&model, pattern.partition);
@@ -743,6 +838,8 @@ fn result_reply(
         .unwrap_or(-1);
     ResultReply {
         session,
+        // stamped by the caller for hello-negotiated traces
+        trace: None,
         prediction,
         logits: row.iter().map(|&x| x as f64).collect(),
         costs,

@@ -43,7 +43,7 @@ fn batch_of_same_key_requests_encodes_once_and_fans_out() {
     let mut bodies = Vec::new();
     let mut sessions_seen = HashSet::new();
     for rx in reply_rxs {
-        match rx.recv().unwrap() {
+        match rx.recv().unwrap().0 {
             WireReply::Segment(s) => {
                 assert!(sessions_seen.insert(s.session), "sessions must be distinct");
                 bodies.push(s.body);
@@ -67,7 +67,7 @@ fn batch_of_same_key_requests_encodes_once_and_fans_out() {
     // a later batch for the same key is a pure cache hit — still 1 encode
     let (tx, rx) = sync_channel(1);
     svc.handle_batch(vec![Job::new(Request::Infer(paper_request("tinymlp", 0.02)), tx)]);
-    match rx.recv().unwrap() {
+    match rx.recv().unwrap().0 {
         WireReply::Segment(s) => {
             assert!(Arc::ptr_eq(&bodies[0], &s.body), "served from cache")
         }
@@ -164,7 +164,8 @@ fn binary_frames_roundtrip_byte_identical_to_json_control() {
 
     let mut json_conn = BlockingConn::connect(&addr).unwrap();
     let mut bin_conn = BlockingConn::connect(&addr).unwrap();
-    match bin_conn.call(&Request::Hello(HelloRequest { binary_frames: true })).unwrap() {
+    let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
+    match bin_conn.call(&hello).unwrap() {
         Response::Hello(h) => assert!(h.binary_frames, "server must grant binary frames"),
         other => panic!("unexpected {other:?}"),
     }
@@ -193,7 +194,8 @@ fn binary_frames_roundtrip_byte_identical_to_json_control() {
     assert!(matches!(bin_conn.call(&Request::Ping).unwrap(), Response::Pong));
 
     // a hello(false) switches the session back to JSON framing
-    match bin_conn.call(&Request::Hello(HelloRequest { binary_frames: false })).unwrap() {
+    let hello_off = Request::Hello(HelloRequest { binary_frames: false, trace: false });
+    match bin_conn.call(&hello_off).unwrap() {
         Response::Hello(h) => assert!(!h.binary_frames),
         other => panic!("unexpected {other:?}"),
     }
@@ -218,7 +220,8 @@ fn binary_frames_can_be_disabled_server_side() {
     })
     .unwrap();
     let mut conn = BlockingConn::connect(&handle.addr.to_string()).unwrap();
-    match conn.call(&Request::Hello(HelloRequest { binary_frames: true })).unwrap() {
+    let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
+    match conn.call(&hello).unwrap() {
         Response::Hello(h) => assert!(!h.binary_frames, "negotiation refused"),
         other => panic!("unexpected {other:?}"),
     }

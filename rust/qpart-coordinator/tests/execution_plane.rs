@@ -74,7 +74,7 @@ fn batched_uploads_execute_in_eval_batch_chunks() {
     svc.handle_batch(jobs);
 
     for (sid, rx) in rxs {
-        match rx.recv().unwrap() {
+        match rx.recv().unwrap().0 {
             WireReply::Msg(Response::Result(res)) => {
                 assert_eq!(res.session, sid);
                 assert_eq!(res.logits.len(), 10, "tinymlp has 10 classes");
@@ -135,7 +135,7 @@ fn ladder_pads_to_tightest_rung_at_boundary_counts() {
         batched.handle_batch(jobs);
         let batched_logits: Vec<Vec<f64>> = rxs
             .into_iter()
-            .map(|rx| match rx.recv().unwrap() {
+            .map(|rx| match rx.recv().unwrap().0 {
                 WireReply::Msg(Response::Result(res)) => res.logits,
                 other => panic!("n={n}: unexpected {other:?}"),
             })
@@ -265,7 +265,7 @@ fn batched_and_sequential_phase2_agree() {
     batched.handle_batch(jobs);
     let batched_logits: Vec<Vec<f64>> = rxs
         .into_iter()
-        .map(|rx| match rx.recv().unwrap() {
+        .map(|rx| match rx.recv().unwrap().0 {
             WireReply::Msg(Response::Result(res)) => res.logits,
             other => panic!("unexpected {other:?}"),
         })
@@ -309,7 +309,8 @@ fn binary_uplink_negotiated_and_byte_identical_to_json() {
 
     // binary session
     let mut bin_conn = BlockingConn::connect(&addr).unwrap();
-    match bin_conn.call(&Request::Hello(HelloRequest { binary_frames: true })).unwrap() {
+    let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
+    match bin_conn.call(&hello).unwrap() {
         Response::Hello(h) => assert!(h.binary_frames),
         other => panic!("unexpected {other:?}"),
     }

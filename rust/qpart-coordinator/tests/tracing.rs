@@ -1,0 +1,303 @@
+//! Tracing-layer integration tests: a traced two-phase request yields a
+//! complete, monotonic span timeline (queryable through the handle and
+//! the `/trace` HTTP endpoints), the reactor and threaded front-ends
+//! emit the same stage vocabulary, sampling disabled stays inert on the
+//! wire and in the store, and the slow-exemplar store keeps exactly N
+//! worst timelines under live traffic. No PJRT required (synthetic
+//! bundle + host-fallback phase 2).
+
+use qpart_coordinator::client::paper_request;
+use qpart_coordinator::testing::{synthetic_bundle, synthetic_upload, tiny_arch, BlockingConn};
+use qpart_coordinator::{serve, Frontend, ServerConfig, ServerHandle};
+use qpart_core::json::{parse, Value};
+use qpart_proto::messages::{HelloRequest, Request, Response};
+use std::collections::BTreeSet;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// All eight pipeline stages a traced two-phase exchange must cover
+/// (phase 1 contributes plan/encode, phase 2 contributes execute).
+const ALL_STAGES: [&str; 8] =
+    ["read", "admit", "queue_wait", "plan", "encode", "execute", "route", "flush"];
+
+/// Poll `f` until it returns true or `deadline` elapses (late spans —
+/// e.g. the flush span of the reply the client just read — land on the
+/// server's next instruction, not synchronously with the client).
+fn wait_until<F: Fn() -> bool>(deadline: Duration, f: F) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    f()
+}
+
+/// One-shot HTTP/1.0 GET against the metrics listener: (status, body).
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes()).unwrap();
+    let mut raw = String::new();
+    let _ = s.read_to_string(&mut raw); // server closes when flushed
+    let (head, body) = raw.split_once("\r\n\r\n").expect("HTTP header/body split");
+    (head.lines().next().unwrap_or_default().to_string(), body.to_string())
+}
+
+/// Run hello(trace) → infer → activation on one connection and return
+/// the granted trace id, asserting both replies echo it.
+fn traced_two_phase(addr: &str) -> u64 {
+    let mut conn = BlockingConn::connect(addr).unwrap();
+    let hello = Request::Hello(HelloRequest { binary_frames: false, trace: true });
+    let id = match conn.call(&hello).unwrap() {
+        Response::Hello(h) => h.trace.expect("hello grants a trace id"),
+        other => panic!("unexpected {other:?}"),
+    };
+    let reply = match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+        Response::Segment(r) => r,
+        other => panic!("unexpected {other:?}"),
+    };
+    assert_eq!(reply.trace, Some(id), "segment reply echoes the granted id");
+    let upload = synthetic_upload(&reply, &tiny_arch(), 7);
+    match conn.call(&Request::Activation(upload)).unwrap() {
+        Response::Result(r) => assert_eq!(r.trace, Some(id), "result echoes the granted id"),
+        other => panic!("unexpected {other:?}"),
+    }
+    id
+}
+
+/// `(stage, start_us, end_us)` rows of a timeline JSON, in wire order.
+fn timeline_spans(timeline: &Value) -> Vec<(String, u64, u64)> {
+    timeline
+        .req_arr("spans")
+        .unwrap()
+        .iter()
+        .map(|s| {
+            (
+                s.req_str("stage").unwrap().to_string(),
+                s.req_u64("start_us").unwrap(),
+                s.req_u64("end_us").unwrap(),
+            )
+        })
+        .collect()
+}
+
+fn stage_set(spans: &[(String, u64, u64)]) -> BTreeSet<String> {
+    spans.iter().map(|(s, _, _)| s.clone()).collect()
+}
+
+/// True once the trace's timeline covers the full stage vocabulary.
+fn timeline_complete(handle: &ServerHandle, id: u64) -> bool {
+    handle.trace.trace_json(id).is_some_and(|j| {
+        let v = parse(&j).unwrap();
+        stage_set(&timeline_spans(&v)).len() == ALL_STAGES.len()
+    })
+}
+
+#[test]
+fn traced_two_phase_request_covers_every_pipeline_stage() {
+    let dir = synthetic_bundle("obs-stages");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        host_fallback: true,
+        metrics_listen: Some("127.0.0.1:0".into()),
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let id = traced_two_phase(&handle.addr.to_string());
+    assert!(
+        wait_until(Duration::from_secs(5), || timeline_complete(&handle, id)),
+        "timeline never reached all {} stages",
+        ALL_STAGES.len()
+    );
+
+    let v = parse(&handle.trace.trace_json(id).unwrap()).unwrap();
+    assert_eq!(v.req_u64("trace").unwrap(), id);
+    let spans = timeline_spans(&v);
+    let stages = stage_set(&spans);
+    for want in ALL_STAGES {
+        assert!(stages.contains(want), "missing stage {want:?} in {stages:?}");
+    }
+    // monotonic: every span well-formed, the array sorted by start, and
+    // the reported total spanning exactly the envelope
+    let mut prev_start = 0u64;
+    let (mut lo, mut hi) = (u64::MAX, 0u64);
+    for (stage, start, end) in &spans {
+        assert!(end >= start, "{stage}: end {end} < start {start}");
+        assert!(*start >= prev_start, "{stage}: spans not sorted by start");
+        prev_start = *start;
+        lo = lo.min(*start);
+        hi = hi.max(*end);
+    }
+    assert_eq!(v.req_u64("total_us").unwrap(), hi - lo);
+
+    // queue-wait spans are literally the queue_wait histogram samples:
+    // one infer + one activation queued → count 2, sums equal exactly
+    let waits: u64 =
+        spans.iter().filter(|(s, _, _)| s == "queue_wait").map(|(_, a, b)| b - a).sum();
+    let qw = handle.hub.histogram_summary("queue_wait").unwrap();
+    assert_eq!(qw.count(), 2, "one infer + one activation were queued");
+    assert_eq!(qw.sum_us(), waits, "span durations must equal the histogram samples");
+
+    // the same timeline round-trips over HTTP
+    let maddr = handle.metrics_addr.unwrap();
+    let (status, body) = http_get(maddr, &format!("/trace?id={id}"));
+    assert!(status.contains("200"), "{status}");
+    let over_http = parse(&body).unwrap();
+    assert_eq!(over_http.req_u64("trace").unwrap(), id);
+    assert_eq!(stage_set(&timeline_spans(&over_http)), stages);
+
+    // the index lists the id and no span was dropped on the way
+    let (status, body) = http_get(maddr, "/trace");
+    assert!(status.contains("200"), "{status}");
+    let list = parse(&body).unwrap();
+    let listed = list.req_arr("traces").unwrap().iter().any(|t| t.as_i64() == Some(id as i64));
+    assert!(listed, "trace index must contain {id}: {body}");
+    assert_eq!(list.req_u64("dropped_spans").unwrap(), 0);
+
+    // unknown ids are a JSON 404, not an empty 200
+    let (status, body) = http_get(maddr, "/trace?id=999999999");
+    assert!(status.contains("404"), "{status}");
+    assert!(body.contains("unknown trace"), "{body}");
+
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn reactor_and_threaded_frontends_emit_identical_stage_sets() {
+    let dir = synthetic_bundle("obs-parity");
+    let mk = |frontend| {
+        serve(ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            workers: 1,
+            frontend,
+            host_fallback: true,
+            artifacts_dir: dir.to_str().unwrap().to_string(),
+            ..ServerConfig::default()
+        })
+        .unwrap()
+    };
+    let reactor = mk(Frontend::Reactor);
+    let threaded = mk(Frontend::Threaded);
+    let sets: Vec<BTreeSet<String>> = [&reactor, &threaded]
+        .into_iter()
+        .map(|h| {
+            let id = traced_two_phase(&h.addr.to_string());
+            assert!(
+                wait_until(Duration::from_secs(5), || timeline_complete(h, id)),
+                "incomplete timeline"
+            );
+            let v = parse(&h.trace.trace_json(id).unwrap()).unwrap();
+            stage_set(&timeline_spans(&v))
+        })
+        .collect();
+    // durations differ by design (the threaded read span includes the
+    // blocking wait); the observable stage vocabulary must not
+    assert_eq!(sets[0], sets[1]);
+    reactor.shutdown();
+    threaded.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sampling_disabled_is_inert_and_leaves_replies_untouched() {
+    let dir = synthetic_bundle("obs-off");
+    let mk = |frontend| {
+        // trace_sample stays at its default of 0: tracing fully off
+        serve(ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            workers: 1,
+            frontend,
+            host_fallback: true,
+            artifacts_dir: dir.to_str().unwrap().to_string(),
+            ..ServerConfig::default()
+        })
+        .unwrap()
+    };
+    let reactor = mk(Frontend::Reactor);
+    let threaded = mk(Frontend::Threaded);
+    let run = |h: &ServerHandle| {
+        let mut conn = BlockingConn::connect(&h.addr.to_string()).unwrap();
+        // untraced hello: no id granted, negotiation otherwise unchanged
+        let hello = Request::Hello(HelloRequest { binary_frames: false, trace: false });
+        match conn.call(&hello).unwrap() {
+            Response::Hello(rep) => assert_eq!(rep.trace, None),
+            other => panic!("unexpected {other:?}"),
+        }
+        let reply = match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+            Response::Segment(r) => r,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(reply.trace, None, "no trace id leaks into untraced replies");
+        let upload = synthetic_upload(&reply, &tiny_arch(), 11);
+        let result = match conn.call(&Request::Activation(upload)).unwrap() {
+            Response::Result(r) => r,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(result.trace, None);
+        (reply, result)
+    };
+    let (ra, res_a) = run(&reactor);
+    let (rb, res_b) = run(&threaded);
+    // decision, payload, and prediction identical across front-ends
+    assert_eq!(ra.pattern, rb.pattern);
+    assert_eq!(ra.segment, rb.segment);
+    assert_eq!(res_a.prediction, res_b.prediction);
+    assert_eq!(res_a.logits, res_b.logits);
+    for h in [&reactor, &threaded] {
+        h.trace.drain();
+        assert_eq!(h.trace.stored(), 0, "sampling off must record nothing");
+        assert_eq!(h.trace.spans_dropped(), 0);
+    }
+    reactor.shutdown();
+    threaded.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn slow_exemplar_store_keeps_exactly_n_worst_under_live_traffic() {
+    let dir = synthetic_bundle("obs-slow");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        host_fallback: true,
+        metrics_listen: Some("127.0.0.1:0".into()),
+        trace_sample: 1.0,
+        trace_slow_us: 1, // every real request crosses 1µs
+        trace_slow_keep: 2,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    // five accept-sampled requests — nobody negotiated tracing, so the
+    // wire stays untouched while spans are recorded server-side
+    for i in 0..5 {
+        let mut conn = BlockingConn::connect(&handle.addr.to_string()).unwrap();
+        match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+            Response::Segment(r) => assert_eq!(r.trace, None, "request {i}"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    handle.trace.drain();
+    assert!(handle.trace.stored() >= 5, "five sampled timelines stored");
+
+    let maddr = handle.metrics_addr.unwrap();
+    let (status, body) = http_get(maddr, "/trace/slow");
+    assert!(status.contains("200"), "{status}");
+    let v = parse(&body).unwrap();
+    assert_eq!(v.req_u64("slow_threshold_us").unwrap(), 1);
+    let slow = v.req_arr("slow").unwrap();
+    assert_eq!(slow.len(), 2, "keeps exactly N worst, not everything seen");
+    let totals: Vec<u64> = slow.iter().map(|e| e.req_u64("total_us").unwrap()).collect();
+    assert!(totals[0] >= totals[1], "worst first: {totals:?}");
+    for e in slow {
+        assert!(!e.req_arr("spans").unwrap().is_empty(), "exemplars carry full timelines");
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -83,6 +83,33 @@
 //! * Peers that never send `hello` get pure JSON-lines — the
 //!   compatibility fallback.
 //!
+//! ### Trace negotiation
+//!
+//! `hello` also negotiates **request tracing** (span timelines across the
+//! coordinator pipeline, see `qpart-coordinator`'s `obs` module):
+//!
+//! * A device that wants its requests traced sends
+//!   `{"type":"hello","binary_frames":…,"trace":true}`. The `trace`
+//!   field is serialized **only when true** — an untraced hello is
+//!   byte-identical to the pre-trace protocol.
+//! * The server answers with `"trace":<id>` (a positive integer) when it
+//!   grants tracing, and **omits the field** when it does not (tracing
+//!   disabled or unsupported). The granted id names this connection's
+//!   timeline at the metrics listener's `/trace?id=<id>` endpoint.
+//! * On a connection with a granted trace, `segment` and `result`
+//!   replies carry the same id in a `"trace"` field placed immediately
+//!   after `"session"` (both JSON and binary-header forms). Replies on
+//!   untraced connections never carry the field.
+//!
+//! **Compatibility rules:** an absent `trace` field is equivalent to
+//! talking to an old peer — requests without it are never echoed a trace
+//! id, responses without it mean tracing was not granted, and decoders
+//! must treat the field as optional everywhere it may appear (`hello`
+//! both ways, `segment`, `result`). Server-side sampling
+//! (`--trace-sample`) records timelines without echoing ids, so it never
+//! changes wire bytes; only an explicit `hello` grant does, and then only
+//! on that connection.
+//!
 //! ### Transport independence
 //!
 //! Framing and negotiation are defined **per connection over its byte
@@ -117,7 +144,7 @@
 //! | `ping`        | — | liveness probe; answered with `pong` |
 //! | `list_models` | — | enumerate served models; answered with `models` |
 //! | `stats`       | — | metrics snapshot; answered with `stats` |
-//! | `hello`       | `binary_frames` | negotiate framing; answered with `hello` |
+//! | `hello`       | `binary_frames`, optional `trace` | negotiate framing + tracing; answered with `hello` |
 //! | `infer`       | [`messages::InferRequest`] fields | **phase 1**: open a session, answered with `segment` |
 //! | `activation`  | `session`, `bits`, `qmin`, `step`, `dims`, `packed` | **phase 2**: upload the quantized boundary activation (JSON, or a binary request frame after a granted `hello`), answered with `result` |
 //! | `simulate`    | `infer` fields + `input`, `input_dims` | one-shot: the server simulates the device too; answered with `result` |
@@ -145,9 +172,9 @@
 //! | `pong`    | — | answer to `ping` |
 //! | `models`  | `models`: array of `{name, arch, dataset, layers, params, test_accuracy}` | answer to `list_models` |
 //! | `stats`   | `stats`: metrics document (aggregated over the executor pool, with a per-worker `workers` array, queue-wait and batching counters, and the encoded-reply `segment_cache` section) | answer to `stats` |
-//! | `hello`   | `binary_frames` | answer to `hello`: the granted framing |
-//! | `segment` | `session`, `model`, `pattern`, `layers` | **phase-1 answer**: the quantized, bit-packed model segment (JSON or binary frame per negotiation) |
-//! | `result`  | `session`, `prediction`, `logits`, `server_us`, optional `costs` | **phase-2 / simulate answer** |
+//! | `hello`   | `binary_frames`, optional `trace` id | answer to `hello`: the granted framing (and trace id, when granted) |
+//! | `segment` | `session`, optional `trace`, `model`, `pattern`, `layers` | **phase-1 answer**: the quantized, bit-packed model segment (JSON or binary frame per negotiation) |
+//! | `result`  | `session`, optional `trace`, `prediction`, `logits`, `server_us`, optional `costs` | **phase-2 / simulate answer** |
 //! | `error`   | `code`, `message` | any failure |
 //!
 //! In a `segment` response, `pattern` reports the chosen quantization

@@ -43,6 +43,12 @@ pub enum Request {
 pub struct HelloRequest {
     /// Device asks for length-prefixed binary segment frames.
     pub binary_frames: bool,
+    /// Device asks for request tracing on this connection. When granted,
+    /// the server echoes the trace id in `segment`/`result` replies and
+    /// the timeline is queryable at `/trace?id=` on the metrics listener.
+    /// Serialized only when true, so untraced hellos are byte-identical
+    /// to older peers (absent field ≡ old peer).
+    pub trace: bool,
 }
 
 /// Paper Algorithm 2's Require-tuple.
@@ -142,6 +148,11 @@ pub enum Response {
 pub struct HelloReply {
     /// Segment replies on this connection will use binary frames.
     pub binary_frames: bool,
+    /// Granted trace id for this connection (`Some` only when the hello
+    /// asked for tracing and the server supports it). Replies on this
+    /// connection echo the same id in their `trace` field. Absent on the
+    /// wire when not granted, so old peers see unchanged bytes.
+    pub trace: Option<u64>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -190,6 +201,8 @@ pub struct SegmentBlob {
 #[derive(Debug, Clone, PartialEq)]
 pub struct InferReply {
     pub session: u64,
+    /// Echoed trace id (hello-negotiated tracing only; absent otherwise).
+    pub trace: Option<u64>,
     pub model: String,
     pub pattern: PatternInfo,
     pub segment: SegmentBlob,
@@ -199,6 +212,8 @@ pub struct InferReply {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ResultReply {
     pub session: u64,
+    /// Echoed trace id (hello-negotiated tracing only; absent otherwise).
+    pub trace: Option<u64>,
     pub prediction: i32,
     pub logits: Vec<f64>,
     /// Cost breakdown (simulate only): the Eq. 17 terms.
@@ -257,6 +272,11 @@ fn bytes_field(v: &Value, key: &str) -> Result<Vec<u8>> {
     base64::decode(v.req_str(key)?).map_err(|e| Error::schema(key, format!("base64: {e}")))
 }
 
+/// Optional echoed `trace` id (absent field ≡ untraced peer).
+fn opt_trace(v: &Value) -> Option<u64> {
+    v.get("trace").and_then(Value::as_i64).and_then(|x| u64::try_from(x).ok())
+}
+
 // ---------------------------------------------------------------------------
 // Request (de)serialization
 // ---------------------------------------------------------------------------
@@ -267,10 +287,18 @@ impl Request {
             Request::Ping => Value::obj([("type", "ping".into())]),
             Request::ListModels => Value::obj([("type", "list_models".into())]),
             Request::Stats => Value::obj([("type", "stats".into())]),
-            Request::Hello(h) => Value::obj([
-                ("type", "hello".into()),
-                ("binary_frames", h.binary_frames.into()),
-            ]),
+            Request::Hello(h) => {
+                let mut v = Value::obj([
+                    ("type", "hello".into()),
+                    ("binary_frames", h.binary_frames.into()),
+                ]);
+                // only serialized when asked for: untraced hellos stay
+                // byte-identical to pre-trace peers
+                if h.trace {
+                    v.set("trace", true.into());
+                }
+                v
+            }
             Request::Infer(r) => {
                 let mut v = r.to_json();
                 v.set("type", "infer".into());
@@ -302,6 +330,7 @@ impl Request {
             "stats" => Ok(Request::Stats),
             "hello" => Ok(Request::Hello(HelloRequest {
                 binary_frames: v.opt_bool("binary_frames", false),
+                trace: v.opt_bool("trace", false),
             })),
             "infer" => Ok(Request::Infer(InferRequest::from_json(v)?)),
             "activation" => Ok(Request::Activation(ActivationUpload {
@@ -460,12 +489,16 @@ impl InferReply {
     /// Encode as a binary frame: (JSON header, raw blob).
     pub fn to_binary(&self) -> (String, Vec<u8>) {
         let (metas, blob) = layers_binary(&self.segment.layers);
-        let mut v = Value::obj([
-            ("type", "segment".into()),
+        let mut fields = vec![
+            ("type", Value::from("segment")),
             ("session", self.session.into()),
-            ("model", self.model.as_str().into()),
-            ("pattern", self.pattern.to_json()),
-        ]);
+        ];
+        if let Some(t) = self.trace {
+            fields.push(("trace", t.into()));
+        }
+        fields.push(("model", self.model.as_str().into()));
+        fields.push(("pattern", self.pattern.to_json()));
+        let mut v = Value::obj(fields);
         v.set("layers", metas);
         (v.to_string_compact(), blob)
     }
@@ -497,6 +530,7 @@ impl InferReply {
         }
         Ok(InferReply {
             session: v.req_u64("session")?,
+            trace: opt_trace(&v),
             model: v.req_str("model")?.to_string(),
             pattern: PatternInfo::from_json(v.req("pattern")?)?,
             segment: SegmentBlob { layers },
@@ -594,8 +628,16 @@ impl EncodedSegmentBody {
     /// The complete JSON-lines reply for one session (byte-identical to
     /// `Response::Segment(..).to_line()`).
     pub fn json_line(&self, session: u64, objective: f64) -> String {
+        self.json_line_traced(session, objective, None)
+    }
+
+    /// [`Self::json_line`] with an optional echoed trace id spliced in
+    /// right after the session id. `trace: None` is byte-identical to
+    /// `json_line` — untraced connections pay nothing.
+    pub fn json_line_traced(&self, session: u64, objective: f64, trace: Option<u64>) -> String {
         format!(
-            "{{\"type\":\"segment\",\"session\":{session},\"model\":{},\"pattern\":{},\"layers\":{}}}",
+            "{{\"type\":\"segment\",\"session\":{session},{}\"model\":{},\"pattern\":{},\"layers\":{}}}",
+            trace_splice(trace),
             self.model_json,
             self.pattern_json(objective),
             self.layers_json,
@@ -604,8 +646,14 @@ impl EncodedSegmentBody {
 
     /// The binary-frame header for one session (pair with [`Self::blob`]).
     pub fn binary_header(&self, session: u64, objective: f64) -> String {
+        self.binary_header_traced(session, objective, None)
+    }
+
+    /// [`Self::binary_header`] with an optional echoed trace id.
+    pub fn binary_header_traced(&self, session: u64, objective: f64, trace: Option<u64>) -> String {
         format!(
-            "{{\"type\":\"segment\",\"session\":{session},\"model\":{},\"pattern\":{},\"layers\":{}}}",
+            "{{\"type\":\"segment\",\"session\":{session},{}\"model\":{},\"pattern\":{},\"layers\":{}}}",
+            trace_splice(trace),
             self.model_json,
             self.pattern_json(objective),
             self.bin_layers_json,
@@ -618,10 +666,20 @@ impl EncodedSegmentBody {
         pattern.objective = objective;
         InferReply {
             session,
+            trace: None,
             model: self.model.clone(),
             pattern,
             segment: self.segment.clone(),
         }
+    }
+}
+
+/// `"trace":N,` (trailing comma) or empty — the cached-body stampers
+/// splice this between the session id and the model field.
+fn trace_splice(trace: Option<u64>) -> String {
+    match trace {
+        Some(t) => format!("\"trace\":{t},"),
+        None => String::new(),
     }
 }
 
@@ -659,25 +717,44 @@ impl Response {
                 o.set("stats", v.clone());
                 o
             }
-            Response::Hello(h) => Value::obj([
-                ("type", "hello".into()),
-                ("binary_frames", h.binary_frames.into()),
-            ]),
-            Response::Segment(r) => Value::obj([
-                ("type", "segment".into()),
-                ("session", r.session.into()),
-                ("model", r.model.as_str().into()),
-                ("pattern", r.pattern.to_json()),
-                ("layers", layers_json(&r.segment.layers)),
-            ]),
-            Response::Result(r) => {
+            Response::Hello(h) => {
                 let mut v = Value::obj([
-                    ("type", "result".into()),
-                    ("session", r.session.into()),
-                    ("prediction", (r.prediction as i64).into()),
-                    ("logits", Value::num_arr(&r.logits)),
-                    ("server_us", r.server_us.into()),
+                    ("type", "hello".into()),
+                    ("binary_frames", h.binary_frames.into()),
                 ]);
+                if let Some(t) = h.trace {
+                    v.set("trace", t.into());
+                }
+                v
+            }
+            Response::Segment(r) => {
+                let mut fields = vec![
+                    ("type", Value::from("segment")),
+                    ("session", r.session.into()),
+                ];
+                // the trace id sits right after the session id so the
+                // cached-body splice (`json_line_traced`) can reproduce
+                // this serialization byte-for-byte
+                if let Some(t) = r.trace {
+                    fields.push(("trace", t.into()));
+                }
+                fields.push(("model", r.model.as_str().into()));
+                fields.push(("pattern", r.pattern.to_json()));
+                fields.push(("layers", layers_json(&r.segment.layers)));
+                Value::obj(fields)
+            }
+            Response::Result(r) => {
+                let mut fields = vec![
+                    ("type", Value::from("result")),
+                    ("session", r.session.into()),
+                ];
+                if let Some(t) = r.trace {
+                    fields.push(("trace", t.into()));
+                }
+                fields.push(("prediction", (r.prediction as i64).into()));
+                fields.push(("logits", Value::num_arr(&r.logits)));
+                fields.push(("server_us", r.server_us.into()));
+                let mut v = Value::obj(fields);
                 if let Some(c) = &r.costs {
                     v.set("costs", c.clone());
                 }
@@ -711,6 +788,7 @@ impl Response {
             "stats" => Ok(Response::Stats(v.req("stats")?.clone())),
             "hello" => Ok(Response::Hello(HelloReply {
                 binary_frames: v.opt_bool("binary_frames", false),
+                trace: opt_trace(v),
             })),
             "segment" => {
                 let mut layers = Vec::new();
@@ -730,6 +808,7 @@ impl Response {
                 }
                 Ok(Response::Segment(InferReply {
                     session: v.req_u64("session")?,
+                    trace: opt_trace(v),
                     model: v.req_str("model")?.to_string(),
                     pattern: PatternInfo::from_json(v.req("pattern")?)?,
                     segment: SegmentBlob { layers },
@@ -737,6 +816,7 @@ impl Response {
             }
             "result" => Ok(Response::Result(ResultReply {
                 session: v.req_u64("session")?,
+                trace: opt_trace(v),
                 prediction: v.req_f64("prediction")? as i32,
                 logits: v.req_f64_arr("logits")?,
                 costs: v.get("costs").cloned(),
@@ -828,6 +908,7 @@ mod tests {
     fn sample_reply() -> InferReply {
         InferReply {
             session: 7,
+            trace: None,
             model: "mlp6".into(),
             pattern: PatternInfo {
                 partition: 3,
@@ -880,6 +961,7 @@ mod tests {
             .collect();
         InferReply {
             session: rng.below(1 << 40),
+            trace: None,
             model: format!("model-{}", rng.below(100)),
             pattern: PatternInfo {
                 partition: n_layers,
@@ -899,7 +981,8 @@ mod tests {
             Request::Ping,
             Request::ListModels,
             Request::Stats,
-            Request::Hello(HelloRequest { binary_frames: true }),
+            Request::Hello(HelloRequest { binary_frames: true, trace: false }),
+            Request::Hello(HelloRequest { binary_frames: false, trace: true }),
             Request::Infer(infer_req()),
             Request::Activation(ActivationUpload {
                 session: 42,
@@ -926,10 +1009,13 @@ mod tests {
     fn response_roundtrips() {
         for resp in [
             Response::Pong,
-            Response::Hello(HelloReply { binary_frames: false }),
+            Response::Hello(HelloReply { binary_frames: false, trace: None }),
+            Response::Hello(HelloReply { binary_frames: true, trace: Some(42) }),
             Response::Segment(sample_reply()),
+            Response::Segment(InferReply { trace: Some(17), ..sample_reply() }),
             Response::Result(ResultReply {
                 session: 7,
+                trace: None,
                 prediction: 3,
                 logits: vec![0.1, 0.9],
                 costs: Some(Value::obj([("objective", 1.5.into())])),
@@ -1018,6 +1104,61 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
         assert_eq!(body.wire_bytes(), 4, "2 weight + 2 bias bytes");
+    }
+
+    #[test]
+    fn traced_splices_match_full_serialization() {
+        let reply = sample_reply();
+        let body = EncodedSegmentBody::new(
+            &reply.model,
+            reply.pattern.clone(),
+            reply.segment.clone(),
+        );
+        // None is byte-identical to the untraced stampers
+        assert_eq!(
+            body.json_line_traced(7, 0.123, None),
+            body.json_line(7, 0.123),
+        );
+        assert_eq!(
+            body.binary_header_traced(7, 0.123, None),
+            body.binary_header(7, 0.123),
+        );
+        // Some(id) matches the one-shot serialization paths byte-for-byte
+        let traced = InferReply { trace: Some(99), ..reply.clone() };
+        assert_eq!(
+            body.json_line_traced(7, 0.123, Some(99)),
+            Response::Segment(traced.clone()).to_line(),
+        );
+        let (direct_header, direct_blob) = traced.to_binary();
+        assert_eq!(body.binary_header_traced(7, 0.123, Some(99)), direct_header);
+        assert_eq!(body.blob(), &direct_blob[..]);
+        // and the traced line parses back with the id intact
+        match Response::from_line(&body.json_line_traced(7, 0.123, Some(99))).unwrap() {
+            Response::Segment(s) => assert_eq!(s.trace, Some(99)),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_field_compat_with_old_peers() {
+        // an untraced hello serializes exactly as before the field existed
+        let line = Request::Hello(HelloRequest { binary_frames: true, trace: false }).to_line();
+        assert!(!line.contains("trace"));
+        // old-peer bytes (no trace field) parse as trace=false / None
+        match Request::from_line(r#"{"type":"hello","binary_frames":true}"#).unwrap() {
+            Request::Hello(h) => assert!(!h.trace),
+            other => panic!("unexpected {other:?}"),
+        }
+        match Response::from_line(r#"{"type":"hello","binary_frames":true}"#).unwrap() {
+            Response::Hello(h) => assert_eq!(h.trace, None),
+            other => panic!("unexpected {other:?}"),
+        }
+        // ungranted replies never carry the field
+        let line =
+            Response::Hello(HelloReply { binary_frames: true, trace: None }).to_line();
+        assert!(!line.contains("trace"));
+        let line = Response::Segment(sample_reply()).to_line();
+        assert!(!line.contains("\"trace\""));
     }
 
     #[test]
@@ -1139,8 +1280,8 @@ mod tests {
     #[test]
     fn hello_request_over_json_frame() {
         let mut wire = Vec::new();
-        write_frame(&mut wire, &Request::Hello(HelloRequest { binary_frames: true }).to_line())
-            .unwrap();
+        let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
+        write_frame(&mut wire, &hello.to_line()).unwrap();
         let mut r = BufReader::new(&wire[..]);
         match read_any_frame(&mut r).unwrap() {
             Frame::Json(line) => match Request::from_line(&line).unwrap() {

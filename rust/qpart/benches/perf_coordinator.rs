@@ -165,5 +165,42 @@ fn main() {
         format!("{:.0}", s.per_second(1.0)),
     ]);
 
+    // the traced splice with tracing disabled (`trace: None`) is the
+    // serving fast path when --trace-sample is 0: same bytes out, and it
+    // must stay in the untraced stamp's cost envelope
+    let s = quick(|| {
+        black_box(body.json_line_traced(black_box(7), black_box(0.1), black_box(None)));
+    });
+    table.row(vec![
+        "stamp cached reply (traced off)".into(),
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p99_ns),
+        format!("{:.0}", s.per_second(1.0)),
+    ]);
+
     table.print();
+
+    // CI guard: with sampling disabled the traced splice must stay
+    // within 5% of the untraced stamp. Measured back-to-back (best of 3
+    // attempts) so shared-runner noise doesn't fail a healthy build.
+    if std::env::args().any(|a| a == "--check-traced-overhead") {
+        let mut ratio = f64::INFINITY;
+        for _ in 0..3 {
+            let plain = quick(|| {
+                black_box(body.json_line(black_box(7), black_box(0.1)));
+            });
+            let traced = quick(|| {
+                black_box(body.json_line_traced(black_box(7), black_box(0.1), black_box(None)));
+            });
+            ratio = ratio.min(traced.mean_ns / plain.mean_ns);
+            if ratio <= 1.05 {
+                break;
+            }
+        }
+        println!("traced-off overhead: {ratio:.3}x the untraced stamp (limit 1.05x)");
+        if ratio > 1.05 {
+            eprintln!("traced-off stamp regressed more than 5% vs the untraced fast path");
+            std::process::exit(1);
+        }
+    }
 }
