@@ -46,7 +46,7 @@ use qpart::coordinator::testing::{synthetic_upload, BlockingConn};
 use qpart::prelude::*;
 use qpart::proto::messages::{ActivationUpload, HelloRequest, Request, Response};
 use qpart::sim::{Scenario, Trace, TraceEvent};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::{Arc, Barrier};
@@ -146,6 +146,9 @@ const USAGE: &str = "usage: qpart <serve|request|bench-serve|sim|offline|models>
            [--frontend F]             reactor (default) or threaded\n\
            [--min-peak-conns N]       fail unless peak open connections >= N\n\
                                       (the CI fleet-soak assertion)\n\
+           [--expect-zero-copy]       fail unless cache-hit reply bodies went\n\
+                                      out via the zero-copy writev path\n\
+                                      (reactor only; the 'zero-copy MB' column)\n\
            [--fair-rate R]            per-connection token-bucket admission rate\n\
                                       (0 = off); refusals are counted in the\n\
                                       'throttled' column\n\
@@ -386,10 +389,14 @@ struct BenchSummary {
     encode_us: f64,
     exec_us: f64,
     uplink_saved_bytes: u64,
+    /// MB written to sockets straight from shared reply bodies this pass
+    /// (`outbox_zero_copy_bytes_total` delta) — reactor front-end only,
+    /// 0 on the threaded fallback.
+    zero_copy_mb: f64,
 }
 
 impl BenchSummary {
-    fn table_headers() -> [&'static str; 19] {
+    fn table_headers() -> [&'static str; 20] {
         [
             "workers",
             "peak conns",
@@ -410,6 +417,7 @@ impl BenchSummary {
             "p2 rows",
             "p2 padded",
             "uplink saved B",
+            "zero-copy MB",
         ]
     }
 
@@ -434,6 +442,7 @@ impl BenchSummary {
             self.phase2_rows.to_string(),
             self.phase2_padded.to_string(),
             self.uplink_saved_bytes.to_string(),
+            format!("{:.1}", self.zero_copy_mb),
         ]
     }
 }
@@ -633,7 +642,7 @@ fn run_bench_serve(
                     // server allows), evens stay JSON — both paths load
                     let mut bin_session = false;
                     if binary && c % 2 == 1 {
-                        let hello = HelloRequest { binary_frames: true, trace: false };
+                        let hello = HelloRequest { binary_frames: true, ..HelloRequest::default() };
                         match conn.call(&Request::Hello(hello))? {
                             Response::Hello(h) => bin_session = h.binary_frames,
                             other => return Err(format!("hello: unexpected {other:?}")),
@@ -739,6 +748,8 @@ fn run_bench_serve(
         let d_execs = snap.phase2_execs_total - prev.phase2_execs_total;
         let d_rows = snap.phase2_rows_total - prev.phase2_rows_total;
         let d_padded = snap.phase2_padded_rows_total - prev.phase2_padded_rows_total;
+        let d_zero_copy =
+            snap.outbox_zero_copy_bytes_total - prev.outbox_zero_copy_bytes_total;
         let lookups = d_hits + d_misses;
         let hit_rate = if lookups > 0 { 100.0 * d_hits as f64 / lookups as f64 } else { 0.0 };
         // per-pass stage means from the cumulative histogram sums
@@ -784,10 +795,11 @@ fn run_bench_serve(
         );
         println!(
             "        front-end: conns open peak {}, accept→first-byte mean {fb_mean_ms:.2} ms \
-             (p99 {:.2} ms) over {} connects",
+             (p99 {:.2} ms) over {} connects, zero-copy egress {:.1} MB",
             snap.conns_open_peak,
             quantile_us(&first_bytes, 0.99) / 1000.0,
             first_bytes.len(),
+            d_zero_copy as f64 / 1e6,
         );
         println!(
             "        encodes {d_encodes} / {attempts} infer requests, \
@@ -837,6 +849,7 @@ fn run_bench_serve(
             // per-pass, like every other field in the row (the cumulative
             // total is printed in the totals line instead)
             uplink_saved_bytes: pass_saved,
+            zero_copy_mb: d_zero_copy as f64 / 1e6,
         });
         prev = snap;
     }
@@ -846,7 +859,7 @@ fn run_bench_serve(
     if binary {
         let mut json_conn = BlockingConn::connect(&addr)?;
         let mut bin_conn = BlockingConn::connect(&addr)?;
-        let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
+        let hello = Request::Hello(HelloRequest { binary_frames: true, ..HelloRequest::default() });
         match bin_conn.call(&hello)? {
             Response::Hello(h) if h.binary_frames => {}
             other => return Err(format!("binary negotiation failed: {other:?}")),
@@ -933,7 +946,7 @@ fn run_bench_serve(
             return Err("reactor reply differs from thread-per-connection baseline (JSON)".into());
         }
         if binary {
-            let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
+            let hello = Request::Hello(HelloRequest { binary_frames: true, ..HelloRequest::default() });
             for conn in [&mut live, &mut base] {
                 match conn.call(&hello)? {
                     Response::Hello(h) if h.binary_frames => {}
@@ -971,14 +984,31 @@ fn run_bench_serve(
             final_snap.conns_open_peak, min_peak, workers
         ));
     }
+    // zero-copy gate (reactor front-end): segment replies — cache hits
+    // included — must have gone out as shared bodies, not per-connection
+    // copies. The byte-identity checks above prove the shared path emits
+    // the same wire bytes.
+    if bool_flag(args, "expect-zero-copy", false)? {
+        if frontend != Frontend::Reactor {
+            return Err("--expect-zero-copy requires the reactor front-end".into());
+        }
+        if final_snap.outbox_zero_copy_bytes_total == 0 {
+            return Err(
+                "zero-copy egress: outbox_zero_copy_bytes_total is 0 — segment bodies \
+                 were copied into connection buffers"
+                    .into(),
+            );
+        }
+    }
     println!(
         "front-end: conns accepted {}, open peak {}, rejected {}, timed out {}, \
-         outbox bytes peak {}",
+         outbox bytes peak {}, zero-copy egress bytes {}",
         final_snap.conns_accepted_total,
         final_snap.conns_open_peak,
         final_snap.conns_rejected_total,
         final_snap.conns_timed_out,
         final_snap.outbox_bytes_peak,
+        final_snap.outbox_zero_copy_bytes_total,
     );
     println!(
         "totals: requests {}, encodes {}, coalesced {}, cache hits {}, cache misses {}, \
@@ -1143,49 +1173,109 @@ fn spawn_lingerers(addr: &str, n: usize, probe: &'static [u8], patience: Duratio
         .collect()
 }
 
-/// Spawn `n` garbage-frame peers. Each alternates between an oversized
-/// 0xB1 envelope (the server must answer `bad_frame` and close, without
-/// disturbing any other connection) and a truncated envelope followed by
-/// a hang-up (EOF mid-frame; nothing to route). Each handle yields the
-/// number of `bad_frame` replies it observed.
+/// Build one damaged 0xB1 envelope for the garbage-frame fuzzer. Starts
+/// from a well-formed frame (magic, u32 total, u32 header_len, JSON
+/// header, blob) and corrupts it at an offset drawn across the
+/// length-prefix / header / body boundary. Returns the bytes plus whether
+/// the envelope is complete: a complete one must be answered with
+/// `bad_frame` (the peer never sent a hello, so even an undamaged body
+/// is refused at dispatch; length/header damage is refused earlier, at
+/// the framing layer), while a truncated one is hung up mid-frame and
+/// must be a quiet close, never a routed reply.
+fn corrupt_binary_frame(rng: &mut qpart::core::rng::Rng) -> (Vec<u8>, bool) {
+    let header = br#"{"type":"activation","session":1,"blob_len":64}"#;
+    let blob = [0xABu8; 64];
+    let total = (4 + header.len() + blob.len()) as u32;
+    let mut frame = vec![0xB1u8];
+    frame.extend_from_slice(&total.to_le_bytes());
+    frame.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    frame.extend_from_slice(header);
+    frame.extend_from_slice(&blob);
+    let header_at = 9; // magic + total + header_len
+    let blob_at = header_at + header.len();
+    match (rng.uniform() * 6.0) as usize {
+        0 => {
+            // length prefix: total blown far past the 16 MiB frame cap
+            let huge = u32::MAX - (rng.uniform() * 1e6) as u32;
+            frame[1..5].copy_from_slice(&huge.to_le_bytes());
+            (frame, true)
+        }
+        1 => {
+            // length prefix: total too small to hold the header_len field
+            let tiny = (rng.uniform() * 4.0) as u32;
+            frame[1..5].copy_from_slice(&tiny.to_le_bytes());
+            (frame[..5].to_vec(), true)
+        }
+        2 => {
+            // header_len pointing past the end of the payload
+            let past = total - 4 + 1 + (rng.uniform() * 100.0) as u32;
+            frame[5..9].copy_from_slice(&past.to_le_bytes());
+            (frame, true)
+        }
+        3 => {
+            // header bytes: 0xFF is never valid UTF-8, so the JSON header
+            // cannot decode no matter where it lands
+            let at = header_at + (rng.uniform() * header.len() as f64) as usize;
+            frame[at] = 0xFF;
+            (frame, true)
+        }
+        4 => {
+            // body bytes: the envelope stays well-formed, so this must
+            // reach dispatch and be refused there (no hello was sent)
+            let at = blob_at + (rng.uniform() * blob.len() as f64) as usize;
+            frame[at] ^= 0xFF;
+            (frame, true)
+        }
+        _ => {
+            // truncation at a random offset, anywhere from mid-prefix to
+            // one byte short of complete, followed by a hang-up
+            let keep = 1 + (rng.uniform() * (frame.len() - 1) as f64) as usize;
+            frame.truncate(keep);
+            (frame, false)
+        }
+    }
+}
+
+/// Spawn `n` garbage-frame peers fuzzing the 0xB1 framing layer with
+/// [`corrupt_binary_frame`] envelopes. The server must answer every
+/// complete envelope with `bad_frame` — without disturbing any other
+/// connection — and treat a truncated-then-dropped one as a quiet close.
+/// Each handle yields the number of `bad_frame` replies it observed.
 fn spawn_garbage_framers(addr: &str, n: usize, rounds: usize) -> Vec<JoinHandle<u64>> {
     (0..n)
         .map(|i| {
             let addr = addr.to_string();
             std::thread::spawn(move || {
+                let mut rng = qpart::core::rng::Rng::from_label(0xB1, &format!("garbage/{i}"));
                 let mut seen = 0u64;
-                for r in 0..rounds {
+                for _ in 0..rounds {
                     let mut s = match TcpStream::connect(&addr) {
                         Ok(s) => s,
                         Err(_) => break,
                     };
                     let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
-                    if (i + r) % 2 == 0 {
-                        // oversized envelope: total_len far past the frame cap
-                        let mut frame = vec![0xB1u8];
-                        frame.extend_from_slice(&u32::MAX.to_le_bytes());
-                        frame.extend_from_slice(&8u32.to_le_bytes());
-                        if s.write_all(&frame).is_err() {
-                            continue;
+                    let (frame, complete) = corrupt_binary_frame(&mut rng);
+                    if s.write_all(&frame).is_err() {
+                        continue;
+                    }
+                    if !complete {
+                        continue; // hang up mid-frame
+                    }
+                    // read until the reply lands (body-corrupt frames keep
+                    // the connection open, so don't wait for a close)
+                    let mut buf = Vec::new();
+                    let mut tmp = [0u8; 512];
+                    while let Ok(k) = s.read(&mut tmp) {
+                        if k == 0 {
+                            break;
                         }
-                        let mut buf = Vec::new();
-                        let mut tmp = [0u8; 512];
-                        while let Ok(k) = s.read(&mut tmp) {
-                            if k == 0 {
-                                break;
-                            }
-                            buf.extend_from_slice(&tmp[..k]);
+                        buf.extend_from_slice(&tmp[..k]);
+                        if buf.contains(&b'\n') {
+                            break;
                         }
-                        if String::from_utf8_lossy(&buf).contains("bad_frame") {
-                            seen += 1;
-                        }
-                    } else {
-                        // truncated envelope: promise 64 bytes, send 3, hang up
-                        let mut frame = vec![0xB1u8];
-                        frame.extend_from_slice(&64u32.to_le_bytes());
-                        frame.extend_from_slice(&16u32.to_le_bytes());
-                        frame.extend_from_slice(&[1, 2, 3]);
-                        let _ = s.write_all(&frame);
+                    }
+                    if String::from_utf8_lossy(&buf).contains("bad_frame") {
+                        seen += 1;
                     }
                 }
                 seen
@@ -1363,6 +1453,14 @@ fn run_bench_scenario(
     // one replay thread per device with traffic, all released together
     let replay_devices: Vec<usize> =
         (0..devices).filter(|&d| !per_device[d].is_empty()).collect();
+    // class name -> fair-queuing weight, declared to the server in each
+    // device's hello (classes outside the default fleet weigh 1.0)
+    let class_weights: Arc<HashMap<String, f64>> = Arc::new(
+        DeviceClass::default_fleet()
+            .into_iter()
+            .map(|c| (c.name.to_string(), c.weight))
+            .collect(),
+    );
     let barrier = Arc::new(Barrier::new(replay_devices.len()));
     let mut joins = Vec::with_capacity(replay_devices.len());
     for dev in replay_devices {
@@ -1371,6 +1469,7 @@ fn run_bench_scenario(
         let model = model.to_string();
         let arch = arch.clone();
         let barrier = Arc::clone(&barrier);
+        let class_weights = Arc::clone(&class_weights);
         joins.push(std::thread::spawn(move || -> Result<DeviceOutcome, String> {
             let mut out = DeviceOutcome {
                 class: events[0].class.clone(),
@@ -1381,11 +1480,17 @@ fn run_bench_scenario(
                 errors: 0,
                 drops: 0,
             };
+            let weight = class_weights.get(&out.class).copied().unwrap_or(1.0);
             let negotiate = |conn: &mut BlockingConn| -> Result<bool, String> {
-                if !(binary && dev % 2 == 1) {
+                let wants_binary = binary && dev % 2 == 1;
+                if !wants_binary && weight == 1.0 {
                     return Ok(false);
                 }
-                let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
+                let hello = Request::Hello(HelloRequest {
+                    binary_frames: wants_binary,
+                    weight,
+                    ..HelloRequest::default()
+                });
                 match conn.call(&hello)? {
                     Response::Hello(h) => Ok(h.binary_frames),
                     other => Err(format!("device {dev} hello: unexpected {other:?}")),

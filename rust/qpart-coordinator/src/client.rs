@@ -74,7 +74,7 @@ impl DeviceClient {
     /// Ask the server for binary segment frames; returns what was granted
     /// (false when the server has `--binary-frames false`).
     pub fn negotiate_binary(&mut self) -> Result<bool> {
-        match self.call(&Request::Hello(HelloRequest { binary_frames: true, trace: false }))? {
+        match self.call(&Request::Hello(HelloRequest { binary_frames: true, ..HelloRequest::default() }))? {
             Response::Hello(h) => {
                 self.binary_frames = h.binary_frames;
                 Ok(h.binary_frames)

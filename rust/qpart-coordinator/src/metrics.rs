@@ -197,6 +197,10 @@ pub struct Metrics {
     pub outbox_bytes: AtomicU64,
     /// High-water mark of `outbox_bytes`.
     pub outbox_bytes_peak: AtomicU64,
+    /// Bytes written to sockets straight out of shared (`Arc`) reply
+    /// bodies — egress that skipped the per-connection copy entirely
+    /// (counter).
+    pub outbox_zero_copy_bytes_total: AtomicU64,
     pub sessions_opened: AtomicU64,
     pub sessions_expired: AtomicU64,
     pub bytes_out: AtomicU64,
@@ -250,6 +254,7 @@ pub struct MetricsSnapshot {
     pub conns_timed_out: u64,
     pub outbox_bytes: u64,
     pub outbox_bytes_peak: u64,
+    pub outbox_zero_copy_bytes_total: u64,
     pub sessions_opened: u64,
     pub batches_total: u64,
     pub coalesced_total: u64,
@@ -338,6 +343,9 @@ impl Metrics {
             conns_timed_out: self.conns_timed_out.load(Ordering::Relaxed),
             outbox_bytes: self.outbox_bytes.load(Ordering::Relaxed),
             outbox_bytes_peak: self.outbox_bytes_peak.load(Ordering::Relaxed),
+            outbox_zero_copy_bytes_total: self
+                .outbox_zero_copy_bytes_total
+                .load(Ordering::Relaxed),
             sessions_opened: self.sessions_opened.load(Ordering::Relaxed),
             batches_total: self.batches_total.load(Ordering::Relaxed),
             coalesced_total: self.coalesced_total.load(Ordering::Relaxed),
@@ -389,6 +397,10 @@ impl Metrics {
                 "outbox_bytes_peak",
                 self.outbox_bytes_peak.load(Ordering::Relaxed).into(),
             ),
+            (
+                "outbox_zero_copy_bytes_total",
+                self.outbox_zero_copy_bytes_total.load(Ordering::Relaxed).into(),
+            ),
             ("sessions_opened", self.sessions_opened.load(Ordering::Relaxed).into()),
             ("sessions_expired", self.sessions_expired.load(Ordering::Relaxed).into()),
             ("bytes_out", self.bytes_out.load(Ordering::Relaxed).into()),
@@ -431,6 +443,7 @@ struct CounterTotals {
     conns_timed_out: u64,
     outbox_bytes: u64,
     outbox_bytes_peak: u64,
+    outbox_zero_copy_bytes_total: u64,
     sessions_opened: u64,
     sessions_expired: u64,
     bytes_out: u64,
@@ -458,6 +471,7 @@ impl CounterTotals {
             conns_timed_out: m.conns_timed_out.load(Ordering::Relaxed),
             outbox_bytes: m.outbox_bytes.load(Ordering::Relaxed),
             outbox_bytes_peak: m.outbox_bytes_peak.load(Ordering::Relaxed),
+            outbox_zero_copy_bytes_total: m.outbox_zero_copy_bytes_total.load(Ordering::Relaxed),
             sessions_opened: m.sessions_opened.load(Ordering::Relaxed),
             sessions_expired: m.sessions_expired.load(Ordering::Relaxed),
             bytes_out: m.bytes_out.load(Ordering::Relaxed),
@@ -486,6 +500,7 @@ impl CounterTotals {
         self.conns_timed_out += other.conns_timed_out;
         self.outbox_bytes += other.outbox_bytes;
         self.outbox_bytes_peak += other.outbox_bytes_peak;
+        self.outbox_zero_copy_bytes_total += other.outbox_zero_copy_bytes_total;
         self.sessions_opened += other.sessions_opened;
         self.sessions_expired += other.sessions_expired;
         self.bytes_out += other.bytes_out;
@@ -667,6 +682,7 @@ impl MetricsHub {
             conns_timed_out: agg.totals.conns_timed_out,
             outbox_bytes: agg.totals.outbox_bytes,
             outbox_bytes_peak: agg.totals.outbox_bytes_peak,
+            outbox_zero_copy_bytes_total: agg.totals.outbox_zero_copy_bytes_total,
             sessions_opened: agg.totals.sessions_opened,
             batches_total: agg.totals.batches_total,
             coalesced_total: agg.totals.coalesced_total,
@@ -710,6 +726,10 @@ impl MetricsHub {
             ("conns_timed_out", agg.totals.conns_timed_out.into()),
             ("outbox_bytes", agg.totals.outbox_bytes.into()),
             ("outbox_bytes_peak", agg.totals.outbox_bytes_peak.into()),
+            (
+                "outbox_zero_copy_bytes_total",
+                agg.totals.outbox_zero_copy_bytes_total.into(),
+            ),
             ("sessions_opened", agg.totals.sessions_opened.into()),
             ("sessions_expired", agg.totals.sessions_expired.into()),
             ("bytes_out", agg.totals.bytes_out.into()),
@@ -841,6 +861,13 @@ impl MetricsHub {
             g,
             "High-water mark of queued outbox bytes",
             t.outbox_bytes_peak as f64,
+        );
+        put(
+            &mut out,
+            "outbox_zero_copy_bytes_total",
+            c,
+            "Bytes written to sockets straight from shared reply bodies (no per-connection copy)",
+            t.outbox_zero_copy_bytes_total as f64,
         );
         put(&mut out, "sessions_opened", c, "Two-phase sessions opened", t.sessions_opened as f64);
         put(

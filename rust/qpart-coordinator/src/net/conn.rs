@@ -12,21 +12,28 @@
 //!   front-end).
 //! * **outbound** — replies are serialized into the [`Outbox`] (a chunk
 //!   queue with a byte count) and flushed as far as the socket allows;
-//!   leftovers wait for `POLLOUT`. The outbox **is** the backpressure
-//!   signal: a connection with a deep outbox or an in-flight job is not
-//!   polled for reads, so a fast producer/slow consumer peer stalls at
-//!   the TCP layer instead of growing server memory.
+//!   leftovers wait for `POLLOUT`. A chunk is either owned bytes (frame
+//!   heads, small replies) or a shared `Arc<[u8]>` body (cache-hit
+//!   segment payloads queued with zero copies); a multi-chunk flush
+//!   gathers them into one `writev(2)` so the split costs no extra
+//!   syscalls. The outbox **is** the backpressure signal: a connection
+//!   with a deep outbox or an in-flight job is not polled for reads, so
+//!   a fast producer/slow consumer peer stalls at the TCP layer instead
+//!   of growing server memory.
 //! * **lifecycle** — `last_activity` advances on every byte moved in
 //!   either direction; the reactor idle-times-out connections with no
 //!   activity and nothing in flight (slow-loris / half-open peers).
 //!   `closing` marks "flush the outbox, then close" (fatal frame errors,
 //!   metrics scrapes).
 
+use super::sys::{writev_stream, IoVec};
 use crate::obs::JobTrace;
 use qpart_proto::frame::{split_frame, Frame, FrameError};
 use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 use std::net::TcpStream;
+use std::os::unix::io::AsRawFd;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Bytes read from a socket per `read(2)` call.
@@ -48,14 +55,42 @@ pub enum ConnKind {
     Metrics,
 }
 
+/// Iovec entries per `writev(2)` call: far below any IOV_MAX, and a
+/// deeper outbox just writevs again on the same flush.
+const WRITEV_BATCH: usize = 64;
+
+/// One queued egress buffer.
+#[derive(Debug)]
+enum Chunk {
+    /// Bytes this connection owns (frame heads, stamped headers, small
+    /// replies).
+    Owned(Vec<u8>),
+    /// A reference-counted body shared with the encoded-reply cache and
+    /// every other connection currently sending it — queued without
+    /// copying, written to the socket straight from where it lives.
+    Shared(Arc<[u8]>),
+}
+
+impl Chunk {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            Chunk::Owned(v) => v,
+            Chunk::Shared(a) => a,
+        }
+    }
+}
+
 /// Queued outbound bytes with a running total (the backpressure signal
 /// and the `outbox_bytes` gauge source).
 #[derive(Debug, Default)]
 pub struct Outbox {
-    chunks: VecDeque<Vec<u8>>,
+    chunks: VecDeque<Chunk>,
     /// Bytes of the front chunk already written.
     head: usize,
     bytes: usize,
+    /// Bytes written to the socket straight out of [`Chunk::Shared`]
+    /// bodies — egress that never passed through a per-connection copy.
+    zero_copy_bytes: u64,
 }
 
 impl Outbox {
@@ -64,7 +99,16 @@ impl Outbox {
             return;
         }
         self.bytes += chunk.len();
-        self.chunks.push_back(chunk);
+        self.chunks.push_back(Chunk::Owned(chunk));
+    }
+
+    /// Queue a shared body without copying it.
+    pub fn push_shared(&mut self, chunk: Arc<[u8]>) {
+        if chunk.is_empty() {
+            return;
+        }
+        self.bytes += chunk.len();
+        self.chunks.push_back(Chunk::Shared(chunk));
     }
 
     pub fn bytes(&self) -> usize {
@@ -75,29 +119,69 @@ impl Outbox {
         self.chunks.is_empty()
     }
 
+    /// Drain the zero-copy byte count accumulated since the last call
+    /// (the reactor credits it to `outbox_zero_copy_bytes_total`).
+    pub fn take_zero_copy_bytes(&mut self) -> u64 {
+        std::mem::take(&mut self.zero_copy_bytes)
+    }
+
     /// Write as much as the socket accepts; returns bytes written this
-    /// call. `WouldBlock` stops quietly (wait for `POLLOUT`); real I/O
-    /// errors propagate so the caller closes the connection.
+    /// call. A lone chunk goes through a plain `write`; a split reply
+    /// (owned head + shared body) gathers up to [`WRITEV_BATCH`] chunks
+    /// into one `writev(2)`. `WouldBlock` stops quietly (wait for
+    /// `POLLOUT`); real I/O errors propagate so the caller closes the
+    /// connection.
     fn write_to(&mut self, w: &mut TcpStream) -> io::Result<usize> {
         let mut written = 0usize;
-        while let Some(front) = self.chunks.front() {
-            match w.write(&front[self.head..]) {
-                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
-                Ok(n) => {
-                    written += n;
-                    self.bytes -= n;
-                    self.head += n;
-                    if self.head == front.len() {
-                        self.chunks.pop_front();
-                        self.head = 0;
-                    }
+        while !self.chunks.is_empty() {
+            let n = if self.chunks.len() == 1 {
+                let front = self.chunks.front().expect("chunks is non-empty");
+                match w.write(&front.as_slice()[self.head..]) {
+                    Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                    Ok(n) => n,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e),
                 }
-                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
-                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
-                Err(e) => return Err(e),
-            }
+            } else {
+                let mut iovs = [IoVec::new(&[]); WRITEV_BATCH];
+                let mut cnt = 0usize;
+                for chunk in self.chunks.iter().take(WRITEV_BATCH) {
+                    let slice = chunk.as_slice();
+                    iovs[cnt] = IoVec::new(if cnt == 0 { &slice[self.head..] } else { slice });
+                    cnt += 1;
+                }
+                match writev_stream(w.as_raw_fd(), &iovs[..cnt]) {
+                    Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                    Ok(n) => n,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) => return Err(e),
+                }
+            };
+            self.advance(n);
+            written += n;
         }
         Ok(written)
+    }
+
+    /// Account `n` bytes as written: pop spent chunks, credit the bytes
+    /// that came out of shared bodies.
+    fn advance(&mut self, mut n: usize) {
+        self.bytes -= n;
+        while n > 0 {
+            let front = self.chunks.front().expect("advance past end of outbox");
+            let len = front.as_slice().len();
+            let step = n.min(len - self.head);
+            if matches!(front, Chunk::Shared(_)) {
+                self.zero_copy_bytes += step as u64;
+            }
+            self.head += step;
+            n -= step;
+            if self.head == len {
+                self.chunks.pop_front();
+                self.head = 0;
+            }
+        }
     }
 }
 
@@ -279,8 +363,50 @@ mod tests {
         o.push(vec![1, 2, 3]);
         o.push(Vec::new()); // ignored
         o.push(vec![4; 5]);
-        assert_eq!(o.bytes(), 8);
+        let shared: Arc<[u8]> = vec![7u8; 4].into();
+        o.push_shared(Arc::clone(&shared));
+        o.push_shared(Vec::new().into()); // ignored
+        assert_eq!(o.bytes(), 12);
         assert!(!o.is_empty());
+        assert_eq!(o.take_zero_copy_bytes(), 0, "nothing written yet");
+    }
+
+    #[test]
+    fn advance_credits_only_shared_bytes() {
+        let mut o = Outbox::default();
+        o.push(b"head".to_vec());
+        o.push_shared(b"shared-body".to_vec().into());
+        o.push(b"tail".to_vec());
+        // partial write ending mid-shared-chunk
+        o.advance(9); // 4 owned + 5 shared
+        assert_eq!(o.bytes(), 10);
+        assert_eq!(o.take_zero_copy_bytes(), 5);
+        // the rest
+        o.advance(10); // 6 shared + 4 owned
+        assert!(o.is_empty());
+        assert_eq!(o.bytes(), 0);
+        assert_eq!(o.take_zero_copy_bytes(), 6);
+        assert_eq!(o.take_zero_copy_bytes(), 0, "drained");
+    }
+
+    #[test]
+    fn shared_chunks_flush_byte_identical_through_writev() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        server_side.set_nonblocking(true).unwrap();
+        let mut conn = Conn::new(server_side, ConnKind::Proto);
+        let body: Arc<[u8]> = b"SHARED-BODY-BYTES".to_vec().into();
+        conn.outbox.push(b"head:".to_vec());
+        conn.outbox.push_shared(Arc::clone(&body));
+        conn.outbox.push(b":tail\n".to_vec());
+        conn.flush().unwrap();
+        assert!(conn.outbox.is_empty());
+        assert_eq!(conn.outbox.take_zero_copy_bytes(), body.len() as u64);
+        let mut got = vec![0u8; 5 + body.len() + 6];
+        let mut r = client;
+        r.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"head:SHARED-BODY-BYTES:tail\n");
     }
 
     #[test]

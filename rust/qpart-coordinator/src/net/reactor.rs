@@ -37,13 +37,13 @@
 //! (`/metrics` scrape, `/trace` endpoints), and close once flushed.
 
 use crate::metrics::{request_path, Metrics, MetricsHub};
-use crate::net::conn::{Conn, ConnKind};
+use crate::net::conn::{Conn, ConnKind, Outbox};
 use crate::net::sys::{poll_fds, PollFd, Waker, POLLIN, POLLOUT};
 use crate::obs::{JobTrace, Stage, TraceSink, TraceStamp, Tracer, TrafficRecorder, FRONT_WORKER};
 use crate::sched::{FairQueue, Job, ReplyRouter, WireReply};
 use crate::session::SharedSessionTable;
 use qpart_proto::frame::{write_binary_frame, write_frame, Frame};
-use qpart_proto::messages::{ErrorReply, HelloReply, Request, Response};
+use qpart_proto::messages::{ErrorReply, HelloReply, Request, Response, JSON_FRAME_TAIL};
 use std::io::{self, Write};
 use std::net::TcpListener;
 use std::os::unix::io::{AsRawFd, RawFd};
@@ -280,8 +280,7 @@ impl Reactor {
                 self.tracer.span(stamp.trace, Stage::Route, stamp.pushed_us, now);
                 conn.pending_flush.push((stamp.trace, now));
             }
-            let bytes = reply_bytes(reply, conn.binary);
-            conn.outbox.push(bytes);
+            push_reply(&mut conn.outbox, reply, conn.binary);
         }
         // flush now, and parse any next request already buffered
         self.drive(slot, false);
@@ -435,6 +434,10 @@ impl Reactor {
         if conn.flush().is_err() {
             return false;
         }
+        let zero_copy = conn.outbox.take_zero_copy_bytes();
+        if zero_copy > 0 {
+            Metrics::add(&self.front.outbox_zero_copy_bytes_total, zero_copy);
+        }
         if !conn.pending_flush.is_empty() && conn.outbox.is_empty() {
             // flush span: reply queued into the outbox → last byte
             // handed to the socket
@@ -501,6 +504,10 @@ impl Reactor {
         if let Request::Hello(h) = &req {
             Metrics::inc(&self.front.requests_total);
             conn.binary = h.binary_frames && self.binary_allowed;
+            // class-weighted fair queuing: scale this connection's
+            // token-bucket rate by the declared class weight (clamped
+            // inside; no-op while the limiter is disabled)
+            self.fair.set_weight(token, h.weight);
             if h.trace {
                 // hello-negotiated grant: the id is echoed on the wire
                 // for client-side correlation (supersedes any sampled
@@ -635,9 +642,41 @@ fn response_bytes(resp: &Response) -> Vec<u8> {
     buf
 }
 
+/// Queue one worker reply into a connection's outbox in its negotiated
+/// framing, without copying the encoded body: the per-connection frame
+/// head (session/objective/trace stamp) is owned, the multi-megabyte
+/// body rides as an `Arc<[u8]>` shared with the encoded-reply cache and
+/// is written to the socket straight from where it lives
+/// (`outbox_zero_copy_bytes_total`). The queued byte stream is
+/// byte-identical to [`reply_bytes`] — proven by the proto splice tests
+/// and the reactor≡threaded equivalence tests.
+pub fn push_reply(outbox: &mut Outbox, reply: WireReply, binary: bool) {
+    match reply {
+        WireReply::Msg(resp) => outbox.push(response_bytes(&resp)),
+        WireReply::Segment(s) => {
+            if binary {
+                // `None` = frame over `MAX_FRAME_BYTES`: queue nothing,
+                // exactly as `write_binary_frame` refuses the same frame
+                // in the copying path
+                if let Some(head) = s.body.binary_frame_head(s.session, s.objective, s.trace) {
+                    outbox.push(head);
+                    outbox.push_shared(s.body.blob_shared());
+                }
+            } else {
+                outbox.push(s.body.json_frame_head(s.session, s.objective, s.trace));
+                outbox.push_shared(s.body.layers_json_shared());
+                outbox.push(JSON_FRAME_TAIL.to_vec());
+            }
+        }
+    }
+}
+
 /// Serialize one worker reply in the connection's negotiated framing —
 /// the nonblocking twin of the threaded front-end's `write_reply`, and
 /// byte-identical to it: segment replies splice the shared encoded body.
+/// The reactor's egress path is [`push_reply`] (same bytes, zero copies
+/// of the body); this whole-buffer form remains the equivalence oracle
+/// and the capture/recording serializer.
 pub fn reply_bytes(reply: WireReply, binary: bool) -> Vec<u8> {
     let mut buf = Vec::new();
     let _ = match reply {

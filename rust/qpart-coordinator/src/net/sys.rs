@@ -1,6 +1,7 @@
 //! Thin readiness primitives for the reactor: a `poll(2)` wrapper over
-//! raw fds and a self-wake channel, both built on std + one libc symbol
-//! (no mio/libc crates — the workspace stays dependency-free).
+//! raw fds, a vectored `writev(2)` wrapper for gathered egress, and a
+//! self-wake channel, all built on std + two libc symbols (no mio/libc
+//! crates — the workspace stays dependency-free).
 //!
 //! `poll(2)` is the portable-unix readiness syscall: level-triggered, no
 //! registration state in the kernel, one array of `(fd, interest)` per
@@ -72,8 +73,60 @@ pub const POLLERR: i16 = 0x008;
 pub const POLLHUP: i16 = 0x010;
 pub const POLLNVAL: i16 = 0x020;
 
+/// One gather segment of a `writev(2)` call (`struct iovec`): base
+/// pointer first, then length, on every unix libc. Carries the borrow's
+/// lifetime (like `std::io::IoSlice`) so a vector of these cannot
+/// outlive the buffers it points into.
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct IoVec<'a> {
+    base: *const u8,
+    len: usize,
+    _buf: std::marker::PhantomData<&'a [u8]>,
+}
+
+impl<'a> IoVec<'a> {
+    pub fn new(slice: &'a [u8]) -> IoVec<'a> {
+        IoVec { base: slice.as_ptr(), len: slice.len(), _buf: std::marker::PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
 extern "C" {
     fn poll(fds: *mut PollFd, nfds: Nfds, timeout: c_int) -> c_int;
+    fn writev(fd: c_int, iov: *const IoVec<'_>, iovcnt: c_int) -> isize;
+}
+
+/// Gathered write to a stream fd: one syscall for many queued buffers,
+/// so shared reply bodies are handed to the kernel straight from where
+/// they live instead of being copied into a contiguous staging buffer.
+/// Returns the bytes accepted (possibly a short count spanning only part
+/// of the iovec list). `EINTR` retries internally; a nonblocking fd with
+/// a full socket buffer surfaces as `WouldBlock` like `Write::write`.
+pub fn writev_stream(fd: RawFd, iovs: &[IoVec<'_>]) -> io::Result<usize> {
+    if iovs.is_empty() {
+        return Ok(0);
+    }
+    // Portable floor of IOV_MAX (POSIX requires ≥ 16; every modern unix
+    // has 1024). Callers batch well below this; clamp defensively.
+    let cnt = iovs.len().min(1024) as c_int;
+    loop {
+        let rc = unsafe { writev(fd, iovs.as_ptr(), cnt) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
 }
 
 /// Block until at least one fd is ready or `timeout_ms` elapses
@@ -153,6 +206,47 @@ mod tests {
         waker.drain();
         let mut fds = [PollFd::new(waker.fd(), POLLIN)];
         assert_eq!(poll_fds(&mut fds, 10).unwrap(), 0, "drained waker is quiet");
+    }
+
+    #[test]
+    fn writev_gathers_across_buffers() {
+        use std::io::Read;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut client = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let parts: [&[u8]; 4] = [b"alpha ", b"", b"beta ", b"gamma"];
+        let iovs: Vec<IoVec<'_>> = parts.iter().map(|p| IoVec::new(p)).collect();
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        let n = writev_stream(server_side.as_raw_fd(), &iovs).unwrap();
+        assert_eq!(n, total, "small gather lands in one call");
+        drop(server_side);
+        let mut got = Vec::new();
+        client.read_to_end(&mut got).unwrap();
+        assert_eq!(got, b"alpha beta gamma");
+    }
+
+    #[test]
+    fn writev_reports_would_block_on_full_nonblocking_socket() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        server_side.set_nonblocking(true).unwrap();
+        // nobody reads `client`, so the send buffer eventually fills
+        let chunk = vec![0u8; 256 * 1024];
+        let iovs = [IoVec::new(&chunk)];
+        let mut saw_would_block = false;
+        for _ in 0..256 {
+            match writev_stream(server_side.as_raw_fd(), &iovs) {
+                Ok(_) => {}
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    saw_would_block = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert!(saw_would_block, "a full socket buffer must surface as WouldBlock");
+        drop(client);
     }
 
     #[test]

@@ -12,6 +12,14 @@
 //! `rate == 0` disables the limiter entirely (the default), so existing
 //! deployments are unaffected unless `--fair-rate`/`serving.fair_rate` is
 //! set.
+//!
+//! **Class weights**: a key's sustained rate and burst scale by its
+//! device-class weight (`hello.weight`, from `DeviceClass.weight`), so
+//! `--fair-rate` sets the *base* (weight-1.0) rate and a 0.5-weight
+//! watch class accrues tokens half as fast as a 1.0-weight phone class.
+//! Weights are clamped server-side — a client cannot grant itself an
+//! unbounded rate — and default to 1.0, which reproduces the unweighted
+//! behavior exactly.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -21,11 +29,18 @@ use std::time::Instant;
 /// tokens before the steady-state rate applies.
 const BURST_SECS: f64 = 2.0;
 
+/// Clamp bounds for per-key class weights: a device may declare itself
+/// rarer (slower) or hotter than the base rate, within reason.
+const MIN_WEIGHT: f64 = 0.01;
+const MAX_WEIGHT: f64 = 100.0;
+
 /// Token-bucket state for one key.
 #[derive(Debug, Clone, Copy)]
 struct Bucket {
     tokens: f64,
     last_s: f64,
+    /// Class weight scaling this key's rate and burst (1.0 = base).
+    weight: f64,
 }
 
 /// A token-bucket rate limiter keyed by connection/session id.
@@ -57,9 +72,42 @@ impl FairQueue {
         self.rate > 0.0
     }
 
-    /// The configured per-key rate (requests/s); 0 when disabled.
+    /// The configured base (weight-1.0) per-key rate (requests/s); 0 when
+    /// disabled.
     pub fn rate(&self) -> f64 {
         self.rate
+    }
+
+    /// Bucket capacity for a key of the given weight.
+    fn burst_for(&self, weight: f64) -> f64 {
+        (self.rate * weight * BURST_SECS).max(1.0)
+    }
+
+    /// Set `key`'s class weight (from its `hello`): the key's sustained
+    /// rate becomes `rate * weight` and its burst scales to match.
+    /// Non-positive / non-finite weights fall back to 1.0; the rest are
+    /// clamped to `[0.01, 100]` so a client cannot grant itself an
+    /// unbounded rate. No-op while the limiter is disabled.
+    pub fn set_weight(&self, key: u64, weight: f64) {
+        self.set_weight_at(key, weight, self.epoch.elapsed().as_secs_f64());
+    }
+
+    /// Deterministic core of [`Self::set_weight`].
+    pub fn set_weight_at(&self, key: u64, weight: f64, now_s: f64) {
+        if self.rate <= 0.0 {
+            return;
+        }
+        let weight = if weight.is_finite() && weight > 0.0 {
+            weight.clamp(MIN_WEIGHT, MAX_WEIGHT)
+        } else {
+            1.0
+        };
+        let burst = self.burst_for(weight);
+        let mut buckets = self.buckets.lock().unwrap();
+        let b = buckets.entry(key).or_insert(Bucket { tokens: burst, last_s: now_s, weight });
+        b.weight = weight;
+        // a weight drop mid-connection shrinks an over-cap balance too
+        b.tokens = b.tokens.min(burst);
     }
 
     /// Try to admit one request for `key` now.
@@ -74,12 +122,15 @@ impl FairQueue {
             return true;
         }
         let mut buckets = self.buckets.lock().unwrap();
-        let b = buckets.entry(key).or_insert(Bucket { tokens: self.burst, last_s: now_s });
+        let b = buckets
+            .entry(key)
+            .or_insert(Bucket { tokens: self.burst, last_s: now_s, weight: 1.0 });
+        let burst = self.burst_for(b.weight);
         // Only advance the per-key clock forward: crediting a backwards
         // timestamp and then re-crediting the same interval would mint
         // tokens.
         let dt = (now_s - b.last_s).max(0.0);
-        b.tokens = (b.tokens + dt * self.rate).min(self.burst);
+        b.tokens = (b.tokens + dt * self.rate * b.weight).min(burst);
         b.last_s = b.last_s.max(now_s);
         if b.tokens >= 1.0 {
             b.tokens -= 1.0;
@@ -178,6 +229,85 @@ mod tests {
             n += 1;
         }
         assert!(n <= 21, "backwards clock minted tokens: {n}");
+    }
+
+    #[test]
+    fn weights_scale_burst_and_refill() {
+        // base 10 req/s: a 2.0-weight key gets burst 40 and 20 tokens/s,
+        // a 0.5-weight key gets burst 10 and 5 tokens/s
+        let q = FairQueue::new(10.0);
+        q.set_weight_at(1, 2.0, 0.0);
+        q.set_weight_at(2, 0.5, 0.0);
+        let drain = |key| {
+            let mut n = 0;
+            while q.admit_at(key, 0.0) {
+                n += 1;
+            }
+            n
+        };
+        assert_eq!(drain(1), 40, "heavy class bursts 2x the base 20");
+        assert_eq!(drain(2), 10, "light class bursts half the base 20");
+        // one second of refill at the weighted rates
+        let refill = |key| {
+            let mut n = 0;
+            while q.admit_at(key, 1.0) {
+                n += 1;
+            }
+            n
+        };
+        assert_eq!(refill(1), 20);
+        assert_eq!(refill(2), 5);
+    }
+
+    #[test]
+    fn default_weight_matches_unweighted_behavior() {
+        let q = FairQueue::new(10.0);
+        q.set_weight_at(1, 1.0, 0.0);
+        let mut weighted = 0;
+        while q.admit_at(1, 0.0) {
+            weighted += 1;
+        }
+        let mut plain = 0;
+        while q.admit_at(2, 0.0) {
+            plain += 1;
+        }
+        assert_eq!(weighted, plain, "weight 1.0 must change nothing");
+    }
+
+    #[test]
+    fn hostile_weights_are_clamped() {
+        let q = FairQueue::new(10.0);
+        // absurd, zero, and non-finite weights cannot buy unbounded rate
+        q.set_weight_at(1, 1e18, 0.0);
+        let mut n = 0;
+        while q.admit_at(1, 0.0) {
+            n += 1;
+        }
+        assert_eq!(n, 2000, "clamped at rate 10 x MAX_WEIGHT 100 x BURST_SECS 2");
+        for (key, w) in [(2, 0.0), (3, -4.0), (4, f64::NAN), (5, f64::INFINITY)] {
+            q.set_weight_at(key, w, 0.0);
+            let mut n = 0;
+            while q.admit_at(key, 0.0) {
+                n += 1;
+            }
+            assert_eq!(n, 20, "weight {w} must fall back to 1.0");
+        }
+        // a disabled limiter ignores weights entirely
+        let off = FairQueue::new(0.0);
+        off.set_weight_at(9, 3.0, 0.0);
+        assert_eq!(off.tracked(), 0);
+    }
+
+    #[test]
+    fn weight_drop_shrinks_an_over_cap_balance() {
+        let q = FairQueue::new(10.0);
+        q.set_weight_at(1, 2.0, 0.0); // burst 40, full
+        q.set_weight_at(1, 0.5, 0.0); // cap now 10: balance must shrink
+        let mut n = 0;
+        while q.admit_at(1, 0.0) {
+            n += 1;
+        }
+        assert_eq!(n, 10);
     }
 
     #[test]

@@ -105,11 +105,13 @@ use std::time::Duration;
 ///   legitimately go quiet for its whole device-side compute window
 ///   between phase 1 and phase 2, so the connection bound must not be
 ///   tighter than the session bound.
-/// * `fair_rate` — per-connection fair queuing ([`FairQueue`]): sustained
-///   requests/s each connection may enqueue (with a 2-second burst
-///   allowance) before being refused with a `throttled` error
-///   (`sched_throttled_total`). Keeps one hot device from starving the
-///   rest of the fleet. Zero (the default) disables the limiter.
+/// * `fair_rate` — per-connection fair queuing ([`FairQueue`]): the base
+///   sustained requests/s each connection may enqueue (with a 2-second
+///   burst allowance) before being refused with a `throttled` error
+///   (`sched_throttled_total`). A connection's `hello` may declare a
+///   device-class weight that scales its rate and burst (clamped
+///   server-side). Keeps one hot device from starving the rest of the
+///   fleet. Zero (the default) disables the limiter.
 /// * `metrics_listen` — optional second listen address serving a
 ///   plaintext Prometheus-style scrape of the stats document (the
 ///   pull-only wire `stats` request stays; this is for standard
@@ -688,7 +690,10 @@ fn spawn_frontend(
 
 /// Serialize one reply in the connection's negotiated framing. Segment
 /// replies are a splice of the shared encoded body — the payload was
-/// serialized once for the whole batch group / cache lifetime.
+/// serialized once for the whole batch group / cache lifetime. This is
+/// the blocking write-then-advance fallback to the reactor's vectored
+/// zero-copy egress (`net::reactor::push_reply`): same bytes on the
+/// wire, but written through the stream's buffered path.
 fn write_reply(
     writer: &mut TcpStream,
     reply: WireReply,
@@ -805,6 +810,10 @@ fn connection_loop(
         if let Request::Hello(h) = &req {
             Metrics::inc(&metrics.requests_total);
             binary = h.binary_frames && binary_allowed;
+            // class-weighted fair queuing: scale this connection's
+            // token-bucket rate by the declared class weight (clamped
+            // inside; no-op while the limiter is disabled)
+            fair.set_weight(fair_key, h.weight);
             if h.trace {
                 // hello-negotiated grant: the id is echoed on the wire
                 // for client-side correlation (supersedes any sampled

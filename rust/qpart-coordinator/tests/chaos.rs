@@ -7,6 +7,7 @@
 use qpart_coordinator::client::paper_request;
 use qpart_coordinator::testing::{synthetic_bundle, synthetic_upload, tiny_arch, BlockingConn};
 use qpart_coordinator::{serve, ServerConfig};
+use qpart_core::rng::Rng;
 use qpart_proto::frame::{read_frame, write_frame};
 use qpart_proto::messages::{Request, Response};
 use std::io::{BufReader, Read, Write};
@@ -105,6 +106,121 @@ fn garbage_and_truncated_frames_get_bad_frame_without_killing_the_reactor() {
     assert!(
         wait_until(Duration::from_secs(5), || handle.snapshot().conns_open == 0),
         "chaos connections leaked: conns_open = {}",
+        handle.snapshot().conns_open
+    );
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Build one damaged 0xB1 envelope with the corruption offset drawn
+/// across the length-prefix / header / body boundary (the same shapes the
+/// bench-serve chaos fuzzer sends). Returns the bytes plus whether the
+/// envelope is complete: a complete one must be answered with
+/// `bad_frame` (no hello was sent, so even an undamaged body is refused
+/// at dispatch; length/header damage is refused at the framing layer),
+/// while a truncated one is hung up mid-frame and must be a quiet close.
+fn corrupt_binary_frame(rng: &mut Rng) -> (Vec<u8>, bool) {
+    let header = br#"{"type":"activation","session":1,"blob_len":64}"#;
+    let blob = [0xABu8; 64];
+    let total = (4 + header.len() + blob.len()) as u32;
+    let mut frame = vec![0xB1u8];
+    frame.extend_from_slice(&total.to_le_bytes());
+    frame.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    frame.extend_from_slice(header);
+    frame.extend_from_slice(&blob);
+    let header_at = 9; // magic + total + header_len
+    let blob_at = header_at + header.len();
+    match (rng.uniform() * 6.0) as usize {
+        0 => {
+            // length prefix: total blown far past the 16 MiB frame cap
+            let huge = u32::MAX - (rng.uniform() * 1e6) as u32;
+            frame[1..5].copy_from_slice(&huge.to_le_bytes());
+            (frame, true)
+        }
+        1 => {
+            // length prefix: total too small to hold the header_len field
+            let tiny = (rng.uniform() * 4.0) as u32;
+            frame[1..5].copy_from_slice(&tiny.to_le_bytes());
+            (frame[..5].to_vec(), true)
+        }
+        2 => {
+            // header_len pointing past the end of the payload
+            let past = total - 4 + 1 + (rng.uniform() * 100.0) as u32;
+            frame[5..9].copy_from_slice(&past.to_le_bytes());
+            (frame, true)
+        }
+        3 => {
+            // header bytes: 0xFF is never valid UTF-8, so the JSON header
+            // cannot decode no matter where it lands
+            let at = header_at + (rng.uniform() * header.len() as f64) as usize;
+            frame[at] = 0xFF;
+            (frame, true)
+        }
+        4 => {
+            // body bytes: the envelope stays well-formed, so this must
+            // reach dispatch and be refused there (no hello was sent)
+            let at = blob_at + (rng.uniform() * blob.len() as f64) as usize;
+            frame[at] ^= 0xFF;
+            (frame, true)
+        }
+        _ => {
+            // truncation at a random offset, anywhere from mid-prefix to
+            // one byte short of complete, followed by a hang-up
+            let keep = 1 + (rng.uniform() * (frame.len() - 1) as f64) as usize;
+            frame.truncate(keep);
+            (frame, false)
+        }
+    }
+}
+
+#[test]
+fn fuzzed_corruption_across_the_envelope_always_gets_bad_frame() {
+    let dir = synthetic_bundle("chaos-fuzz");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    // a well-behaved connection rides along the whole time
+    let mut live = BlockingConn::connect(&addr).unwrap();
+    assert!(matches!(live.call(&Request::Ping).unwrap(), Response::Pong));
+
+    let mut rng = Rng::from_label(0xB1, "chaos/fuzz");
+    let mut complete_frames = 0u64;
+    for round in 0..60 {
+        let (frame, complete) = corrupt_binary_frame(&mut rng);
+        let s = TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut w = s.try_clone().unwrap();
+        w.write_all(&frame).unwrap();
+        if !complete {
+            // hang up mid-frame: a quiet close, nothing to assert here —
+            // the leak check below catches a stuck connection
+            continue;
+        }
+        complete_frames += 1;
+        let mut reader = BufReader::new(s);
+        let line = read_frame(&mut reader).expect("reply to a complete corrupt frame");
+        match Response::from_line(&line).expect("reply parses") {
+            Response::Error(e) => assert_eq!(e.code, "bad_frame", "round {round}: {}", e.message),
+            other => panic!("round {round}: unexpected {other:?}"),
+        }
+    }
+    assert!(
+        complete_frames >= 20,
+        "rng starved the fuzz of complete envelopes: {complete_frames}/60"
+    );
+
+    // the reactor kept serving throughout, and no fuzz connection leaked
+    assert!(matches!(live.call(&Request::Ping).unwrap(), Response::Pong));
+    drop(live);
+    assert!(
+        wait_until(Duration::from_secs(10), || handle.snapshot().conns_open == 0),
+        "fuzz connections leaked: conns_open = {}",
         handle.snapshot().conns_open
     );
     handle.shutdown();

@@ -164,7 +164,7 @@ fn binary_frames_roundtrip_byte_identical_to_json_control() {
 
     let mut json_conn = BlockingConn::connect(&addr).unwrap();
     let mut bin_conn = BlockingConn::connect(&addr).unwrap();
-    let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
+    let hello = Request::Hello(HelloRequest { binary_frames: true, ..HelloRequest::default() });
     match bin_conn.call(&hello).unwrap() {
         Response::Hello(h) => assert!(h.binary_frames, "server must grant binary frames"),
         other => panic!("unexpected {other:?}"),
@@ -194,7 +194,7 @@ fn binary_frames_roundtrip_byte_identical_to_json_control() {
     assert!(matches!(bin_conn.call(&Request::Ping).unwrap(), Response::Pong));
 
     // a hello(false) switches the session back to JSON framing
-    let hello_off = Request::Hello(HelloRequest { binary_frames: false, trace: false });
+    let hello_off = Request::Hello(HelloRequest::default());
     match bin_conn.call(&hello_off).unwrap() {
         Response::Hello(h) => assert!(!h.binary_frames),
         other => panic!("unexpected {other:?}"),
@@ -220,7 +220,7 @@ fn binary_frames_can_be_disabled_server_side() {
     })
     .unwrap();
     let mut conn = BlockingConn::connect(&handle.addr.to_string()).unwrap();
-    let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
+    let hello = Request::Hello(HelloRequest { binary_frames: true, ..HelloRequest::default() });
     match conn.call(&hello).unwrap() {
         Response::Hello(h) => assert!(!h.binary_frames, "negotiation refused"),
         other => panic!("unexpected {other:?}"),

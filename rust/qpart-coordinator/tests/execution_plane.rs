@@ -309,7 +309,7 @@ fn binary_uplink_negotiated_and_byte_identical_to_json() {
 
     // binary session
     let mut bin_conn = BlockingConn::connect(&addr).unwrap();
-    let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
+    let hello = Request::Hello(HelloRequest { binary_frames: true, ..HelloRequest::default() });
     match bin_conn.call(&hello).unwrap() {
         Response::Hello(h) => assert!(h.binary_frames),
         other => panic!("unexpected {other:?}"),

@@ -5,7 +5,7 @@
 
 use qpart_coordinator::testing::{synthetic_bundle, BlockingConn};
 use qpart_coordinator::{serve, ServerConfig};
-use qpart_proto::messages::{Request, Response};
+use qpart_proto::messages::{HelloRequest, Request, Response};
 use std::time::{Duration, Instant};
 
 #[test]
@@ -94,6 +94,78 @@ fn zero_fair_rate_disables_throttling_entirely() {
         assert!(matches!(conn.call(&Request::Ping).unwrap(), Response::Pong));
     }
     assert_eq!(handle.snapshot().sched_throttled_total, 0);
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn class_weights_scale_per_connection_rates() {
+    let dir = synthetic_bundle("fair-weights");
+    // base 5 req/s: a heavy class (hello weight 2.0) sustains 10/s while a
+    // light class (0.5) sustains 2.5/s — both on the same --fair-rate
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        fair_rate: 5.0,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    let connect = |weight: f64| -> BlockingConn {
+        let mut conn = BlockingConn::connect(&addr).unwrap();
+        let hello = Request::Hello(HelloRequest { weight, ..HelloRequest::default() });
+        match conn.call(&hello).unwrap() {
+            Response::Hello(_) => conn,
+            other => panic!("hello: unexpected {other:?}"),
+        }
+    };
+    // empty a bucket so the next window measures pure weighted refill
+    let drain = |conn: &mut BlockingConn| {
+        let mut streak = 0;
+        for _ in 0..200 {
+            match conn.call(&Request::Ping).unwrap() {
+                Response::Pong => streak = 0,
+                Response::Error(e) if e.code == "throttled" => {
+                    streak += 1;
+                    if streak >= 5 {
+                        return;
+                    }
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        panic!("bucket never drained in 200 requests");
+    };
+    let mut heavy = connect(2.0);
+    let mut light = connect(0.5);
+    drain(&mut heavy);
+    drain(&mut light);
+
+    // one second of refill: heavy accrues ~10 tokens, light ~2.5; the
+    // admitted counts must reflect the 4x class-weight ratio (bounds are
+    // loose because wall time keeps refilling during the hammer)
+    std::thread::sleep(Duration::from_secs(1));
+    let hammer = |conn: &mut BlockingConn| -> u64 {
+        let mut ok = 0u64;
+        for _ in 0..100 {
+            match conn.call(&Request::Ping).unwrap() {
+                Response::Pong => ok += 1,
+                Response::Error(e) if e.code == "throttled" => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        ok
+    };
+    let heavy_ok = hammer(&mut heavy);
+    let light_ok = hammer(&mut light);
+    assert!((6..=25).contains(&heavy_ok), "heavy class: ~10 admits expected, got {heavy_ok}");
+    assert!((1..=7).contains(&light_ok), "light class: ~2-3 admits expected, got {light_ok}");
+    assert!(
+        heavy_ok >= 2 * light_ok,
+        "class weights did not separate rates: heavy {heavy_ok} vs light {light_ok}"
+    );
     handle.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -300,7 +300,7 @@ fn reactor_and_threaded_frontends_serve_identical_replies() {
         let mut a = BlockingConn::connect(&reactor.addr.to_string()).unwrap();
         let mut b = BlockingConn::connect(&threaded.addr.to_string()).unwrap();
         if negotiate {
-            let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
+            let hello = Request::Hello(HelloRequest { binary_frames: true, ..HelloRequest::default() });
             for conn in [&mut a, &mut b] {
                 match conn.call(&hello).unwrap() {
                     Response::Hello(h) => assert!(h.binary_frames),

@@ -50,7 +50,7 @@ fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
 /// the granted trace id, asserting both replies echo it.
 fn traced_two_phase(addr: &str) -> u64 {
     let mut conn = BlockingConn::connect(addr).unwrap();
-    let hello = Request::Hello(HelloRequest { binary_frames: false, trace: true });
+    let hello = Request::Hello(HelloRequest { trace: true, ..HelloRequest::default() });
     let id = match conn.call(&hello).unwrap() {
         Response::Hello(h) => h.trace.expect("hello grants a trace id"),
         other => panic!("unexpected {other:?}"),
@@ -224,7 +224,7 @@ fn sampling_disabled_is_inert_and_leaves_replies_untouched() {
     let run = |h: &ServerHandle| {
         let mut conn = BlockingConn::connect(&h.addr.to_string()).unwrap();
         // untraced hello: no id granted, negotiation otherwise unchanged
-        let hello = Request::Hello(HelloRequest { binary_frames: false, trace: false });
+        let hello = Request::Hello(HelloRequest::default());
         match conn.call(&hello).unwrap() {
             Response::Hello(rep) => assert_eq!(rep.trace, None),
             other => panic!("unexpected {other:?}"),

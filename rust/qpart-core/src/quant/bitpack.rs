@@ -6,22 +6,26 @@
 //! on the serving hot path (every response ships a packed segment) and is
 //! benchmarked by `perf_quant`.
 //!
-//! The hot entry points ([`pack_bits`] / [`unpack_bits`]) process a `u64`
-//! word at a time: codes are validated in one upfront scan, then the inner
-//! loops emit/consume multi-byte chunks through a 64-bit accumulator
-//! instead of dribbling single bytes. The original byte-at-a-time
-//! implementations are kept as [`pack_bits_scalar`] / [`unpack_bits_scalar`]
-//! — the reference the word-wise kernels are property-tested against
-//! byte-for-byte, and the baseline `perf_quant` reports speedups over.
+//! The hot entry points ([`pack_bits`] / [`unpack_bits`]) dispatch once
+//! per process (see [`crate::quant::simd`]) between SIMD kernels and the
+//! word-wise implementations kept here as [`pack_bits_wordwise`] /
+//! [`unpack_bits_wordwise`]: codes are validated in one upfront scan,
+//! then the inner loops emit/consume multi-byte chunks through a 64-bit
+//! accumulator instead of dribbling single bytes. The original
+//! byte-at-a-time implementations are kept as [`pack_bits_scalar`] /
+//! [`unpack_bits_scalar`] — the reference every faster kernel is
+//! property-tested against byte-for-byte, and the baseline `perf_quant`
+//! reports speedups over.
 
 use crate::error::{Error, Result};
+use crate::quant::simd;
 
 /// Bytes needed to pack `n` codes at `bits` bits each.
 pub fn packed_len_bytes(n: usize, bits: u8) -> usize {
     ((n as u64 * bits as u64).div_ceil(8)) as usize
 }
 
-fn check_bits(op: &str, bits: u8) -> Result<()> {
+pub(crate) fn check_bits(op: &str, bits: u8) -> Result<()> {
     if !(1..=24).contains(&bits) {
         return Err(Error::InvalidArg(format!("{op}: bits must be 1..=24, got {bits}")));
     }
@@ -82,10 +86,36 @@ impl<'a> WordPacker<'a> {
 
 /// Pack `codes` (each `< 2^bits`) at `bits` bits per code, LSB-first.
 ///
-/// Word-wise hot path: one upfront validation scan (so the inner loop
-/// carries no per-code branch), then whole `u64` words are flushed to the
-/// output in 8-byte stores. Byte-identical to [`pack_bits_scalar`].
+/// Dispatching entry point: runs the SIMD kernel when the process-wide
+/// [`simd::active`] mode is a vector tier, the word-wise kernel
+/// otherwise. All paths are byte-identical to [`pack_bits_scalar`].
 pub fn pack_bits(codes: &[u32], bits: u8) -> Result<Vec<u8>> {
+    if simd::active().is_simd() {
+        simd::pack_bits_simd(codes, bits)
+    } else {
+        pack_bits_wordwise(codes, bits)
+    }
+}
+
+/// Unpack `n` codes at `bits` bits per code from `buf`.
+///
+/// Dispatching entry point: SIMD when [`simd::active`] is a vector tier,
+/// word-wise otherwise. All paths are code-identical to
+/// [`unpack_bits_scalar`].
+pub fn unpack_bits(buf: &[u8], n: usize, bits: u8) -> Result<Vec<u32>> {
+    if simd::active().is_simd() {
+        simd::unpack_bits_simd(buf, n, bits)
+    } else {
+        unpack_bits_wordwise(buf, n, bits)
+    }
+}
+
+/// Word-wise `pack_bits` (the PR 4 kernel): one upfront validation scan
+/// (so the inner loop carries no per-code branch), then whole `u64` words
+/// are flushed to the output in 8-byte stores. Byte-identical to
+/// [`pack_bits_scalar`]; the oracle the SIMD paths are tested against and
+/// the universal runtime fallback.
+pub fn pack_bits_wordwise(codes: &[u32], bits: u8) -> Result<Vec<u8>> {
     check_bits("pack_bits", bits)?;
     let limit = 1u64 << bits;
     // upfront scan: the emit loop below is branch-light because every
@@ -103,12 +133,11 @@ pub fn pack_bits(codes: &[u32], bits: u8) -> Result<Vec<u8>> {
     Ok(out)
 }
 
-/// Unpack `n` codes at `bits` bits per code from `buf`.
-///
-/// Word-wise hot path: the accumulator refills with up to 7–8 bytes per
-/// `u64` load instead of one byte per iteration. Byte-identical to
-/// [`unpack_bits_scalar`].
-pub fn unpack_bits(buf: &[u8], n: usize, bits: u8) -> Result<Vec<u32>> {
+/// Word-wise `unpack_bits` (the PR 4 kernel): the accumulator refills
+/// with up to 7–8 bytes per `u64` load instead of one byte per iteration.
+/// Code-identical to [`unpack_bits_scalar`]; the oracle the SIMD paths
+/// are tested against and the universal runtime fallback.
+pub fn unpack_bits_wordwise(buf: &[u8], n: usize, bits: u8) -> Result<Vec<u32>> {
     check_bits("unpack_bits", bits)?;
     let need = packed_len_bytes(n, bits);
     if buf.len() < need {
@@ -278,11 +307,11 @@ mod tests {
             let n = rng.range_usize(0, 600);
             let limit = 1u64 << bits;
             let codes: Vec<u32> = (0..n).map(|_| rng.below(limit) as u32).collect();
-            let word = pack_bits(&codes, bits).unwrap();
+            let word = pack_bits_wordwise(&codes, bits).unwrap();
             let scalar = pack_bits_scalar(&codes, bits).unwrap();
             assert_eq!(word, scalar, "bits={bits} n={n}");
             assert_eq!(
-                unpack_bits(&word, n, bits).unwrap(),
+                unpack_bits_wordwise(&word, n, bits).unwrap(),
                 unpack_bits_scalar(&word, n, bits).unwrap(),
                 "bits={bits} n={n}"
             );
@@ -299,10 +328,14 @@ mod tests {
             for n in [0usize, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 21, 22, 63, 64, 65, 127] {
                 let codes: Vec<u32> =
                     (0..n as u64).map(|i| ((i * 2_654_435_761) % limit) as u32).collect();
-                let word = pack_bits(&codes, bits).unwrap();
+                let word = pack_bits_wordwise(&codes, bits).unwrap();
                 let scalar = pack_bits_scalar(&codes, bits).unwrap();
                 assert_eq!(word, scalar, "bits={bits} n={n}");
-                assert_eq!(unpack_bits(&word, n, bits).unwrap(), codes, "bits={bits} n={n}");
+                assert_eq!(
+                    unpack_bits_wordwise(&word, n, bits).unwrap(),
+                    codes,
+                    "bits={bits} n={n}"
+                );
             }
         }
     }

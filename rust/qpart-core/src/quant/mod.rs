@@ -3,20 +3,25 @@
 //! channel model charges for, Eq. 14), and quantization patterns `(b, p)`
 //! (the unit Algorithm 1 produces and Algorithm 2 selects).
 //!
-//! Hot-path entry points: the word-wise [`pack_bits`] / [`unpack_bits`]
-//! and the fused [`quantize_packed`] (no intermediate code vector). The
-//! byte-at-a-time `*_scalar` variants are the property-test oracles and
-//! the `perf_quant` baselines.
+//! Hot-path entry points: [`pack_bits`] / [`unpack_bits`] and the fused
+//! [`quantize_packed`] (no intermediate code vector), each dispatching
+//! once per process between SIMD kernels and the word-wise `*_wordwise`
+//! fallbacks (see [`simd`]). The byte-at-a-time `*_scalar` variants are
+//! the property-test oracles and the `perf_quant` baselines; the
+//! `*_wordwise` variants are the PR 4 kernels the SIMD paths must match
+//! byte-for-byte.
 
 mod bitpack;
 mod pattern;
 mod quantizer;
+pub mod simd;
 
 pub use bitpack::{
-    pack_bits, pack_bits_scalar, packed_len_bytes, unpack_bits, unpack_bits_scalar,
+    pack_bits, pack_bits_scalar, pack_bits_wordwise, packed_len_bytes, unpack_bits,
+    unpack_bits_scalar, unpack_bits_wordwise,
 };
 pub use pattern::{PatternKey, PatternSet, QuantPattern};
 pub use quantizer::{
-    dequantize, quantize, quantize_packed, quantize_packed_with, quantize_with, PackedQuantized,
-    QuantParams, Quantized,
+    dequantize, quantize, quantize_packed, quantize_packed_with, quantize_packed_with_wordwise,
+    quantize_packed_wordwise, quantize_with, PackedQuantized, QuantParams, Quantized,
 };

@@ -13,6 +13,7 @@
 
 use crate::error::{Error, Result};
 use crate::quant::bitpack::{packed_len_bytes, WordPacker};
+use crate::quant::simd;
 
 /// Quantizer parameters: bit-width and range.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -79,7 +80,7 @@ impl Quantized {
 /// (the per-element `is_finite` check halved throughput; see perf_quant).
 /// ±inf surfaces in mn/mx; NaN — which IEEE min/max would silently skip
 /// — is caught by the checksum. Empty input scans to `(0, 0)`.
-fn scan_range(data: &[f32]) -> Result<(f32, f32)> {
+pub(crate) fn scan_range(data: &[f32]) -> Result<(f32, f32)> {
     let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
     let mut checksum = 0.0f32;
     for &x in data {
@@ -160,8 +161,11 @@ impl PackedQuantized {
 /// intermediate `Vec<u32>` — the allocation and the second sweep the
 /// compose-then-pack path pays per layer.
 ///
-/// Bit-identical to `pack_bits(&quantize(data, bits)?.codes, bits)?`
-/// (property-tested); `bits` is capped at 24 by the packer.
+/// Dispatching entry point: runs the SIMD lanes when the process-wide
+/// [`simd::active`] mode is a vector tier (see [`crate::quant::simd`]),
+/// the word-wise kernel otherwise. Bit-identical either way to
+/// `pack_bits(&quantize(data, bits)?.codes, bits)?` (property-tested);
+/// `bits` is capped at 24 by the packer.
 pub fn quantize_packed(data: &[f32], bits: u8) -> Result<PackedQuantized> {
     let (mn, mx) = scan_range(data)?;
     let params = QuantParams::from_range(bits, mn, mx)?;
@@ -169,11 +173,30 @@ pub fn quantize_packed(data: &[f32], bits: u8) -> Result<PackedQuantized> {
 }
 
 /// Fused quantize→pack with explicit parameters (the fused analogue of
-/// [`quantize_with`] ∘ [`crate::quant::pack_bits`]). Codes fit `bits` by
-/// construction (the Eq. 10 clamp), so no validation scan is needed; the
-/// emit loop is the same `WordPacker` accumulator `pack_bits` uses, fed
-/// by the quantizer instead of a code slice.
+/// [`quantize_with`] ∘ [`crate::quant::pack_bits`]). Dispatches like
+/// [`quantize_packed`].
 pub fn quantize_packed_with(data: &[f32], params: QuantParams) -> PackedQuantized {
+    if simd::active().is_simd() {
+        simd::quantize_packed_with_simd(data, params)
+    } else {
+        quantize_packed_with_wordwise(data, params)
+    }
+}
+
+/// Word-wise fused quantize→pack with data-derived range — the PR 4
+/// kernel, kept as the SIMD oracle and runtime fallback.
+pub fn quantize_packed_wordwise(data: &[f32], bits: u8) -> Result<PackedQuantized> {
+    let (mn, mx) = scan_range(data)?;
+    let params = QuantParams::from_range(bits, mn, mx)?;
+    Ok(quantize_packed_with_wordwise(data, params))
+}
+
+/// Word-wise fused quantize→pack with explicit parameters. Codes fit
+/// `bits` by construction (the Eq. 10 clamp), so no validation scan is
+/// needed; the emit loop is the same `WordPacker` accumulator `pack_bits`
+/// uses, fed by the quantizer instead of a code slice. The oracle every
+/// SIMD quantize kernel must match byte-for-byte.
+pub fn quantize_packed_with_wordwise(data: &[f32], params: QuantParams) -> PackedQuantized {
     let step = params.step();
     let inv = 1.0 / step;
     let min = params.min;
@@ -307,6 +330,10 @@ mod tests {
             // and explicit-params fusion agrees too
             let fused_with = quantize_packed_with(&data, q.params);
             assert_eq!(fused_with.packed, composed);
+            // the retained word-wise oracle stays byte-identical regardless
+            // of what the dispatcher selected above
+            let word = quantize_packed_wordwise(&data, bits).unwrap();
+            assert_eq!(word, fused, "bits={bits} len={len}");
         });
     }
 

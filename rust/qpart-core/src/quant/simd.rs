@@ -1,0 +1,604 @@
+//! Runtime-dispatched SIMD kernels for the encode hot path.
+//!
+//! PR 4 took `pack_bits`/`unpack_bits`/`quantize_packed` word-wise; this
+//! module adds the next rung: `core::arch` vector kernels (AVX2 and SSE2 on
+//! x86/x86_64, NEON on aarch64) selected **once per process** by
+//! [`active`] and picked up transparently by the public entry points in
+//! [`crate::quant`]. The word-wise kernels stay exactly where PR 4 left
+//! them — as the property-test oracle every SIMD path must match
+//! **byte-for-byte** for all widths 1..=24, and as the runtime fallback on
+//! hardware without vector units.
+//!
+//! ## Dispatch
+//!
+//! [`active`] caches its answer in a `OnceLock`:
+//!
+//! * `QPART_SIMD=off|scalar|wordwise|0|false` forces the word-wise
+//!   fallback (the forced-scalar CI job runs the whole coordinator suite
+//!   this way);
+//! * `QPART_SIMD=avx2|sse2|neon` requests a specific tier, honored only
+//!   when the CPU supports it (requesting an unsupported tier falls back
+//!   to detection — a mode that cannot execute is never returned);
+//! * unset/anything else: runtime detection
+//!   (`is_x86_feature_detected!("avx2")` → AVX2, else SSE2 on x86;
+//!   NEON is baseline on aarch64).
+//!
+//! ## Byte-identity
+//!
+//! The scalar Eq. 10 kernel is `((x - min) * inv + 0.5) as u32` followed by
+//! `.min(max_code)`; the saturating float→int cast maps NaN→0, negatives→0.
+//! The vector kernels replicate that exactly:
+//!
+//! * the float expression uses separate sub/mul/add (never FMA), so each
+//!   lane computes bit-identical IEEE intermediates;
+//! * `max_ps(t, 0)` returns its **second** operand when `t` is NaN, so
+//!   NaN→0 like the saturating cast, and negatives clamp to 0;
+//! * the top clamp moves into the float domain — `min_ps(t, max_code as
+//!   f32)` — which is exact because `max_code ≤ 2^24 − 1` is representable
+//!   in f32, leaving `cvttps` (truncate toward zero) on an in-range value,
+//!   the same truncation the scalar cast performs. (On aarch64, `FCVTZU`
+//!   is itself a saturating NaN→0 truncation — the instruction Rust's
+//!   `as u32` lowers to — so NEON needs no float-domain clamp at 0.)
+//!
+//! The bit-packing accumulator is inherently serial, so all quantize
+//! kernels stream their vector-computed codes through the *same*
+//! [`WordPacker`] the word-wise path uses: the emitted bytes cannot
+//! diverge. `pack_bits`/`unpack_bits` gain full-vector narrow/widen loops
+//! at the byte-aligned widths (8 and 16 bits) plus a vectorized
+//! validation scan at every width; other widths keep the word-wise emit
+//! loop after the vector scan.
+
+use std::sync::OnceLock;
+
+use crate::error::{Error, Result};
+use crate::quant::bitpack::{
+    check_bits, pack_bits_wordwise, packed_len_bytes, unpack_bits_wordwise, WordPacker,
+};
+use crate::quant::quantizer::{scan_range, PackedQuantized, QuantParams};
+
+/// Which kernel tier the process dispatches to. Decided once by
+/// [`active`]; every tier other than [`SimdMode::Wordwise`] is guaranteed
+/// executable on the running CPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdMode {
+    /// The PR 4 word-wise scalar kernels — oracle and universal fallback.
+    Wordwise,
+    /// 4-lane SSE2 quantize kernel (x86/x86_64 without AVX2).
+    Sse2,
+    /// 8-lane AVX2 quantize kernel + byte-aligned pack/unpack kernels.
+    Avx2,
+    /// 4-lane NEON quantize kernel (aarch64 baseline).
+    Neon,
+}
+
+impl SimdMode {
+    /// Stable lowercase label (used by `perf_quant` rows and bench-serve).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Wordwise => "wordwise",
+            SimdMode::Sse2 => "sse2",
+            SimdMode::Avx2 => "avx2",
+            SimdMode::Neon => "neon",
+        }
+    }
+
+    /// True for every tier that runs vector instructions.
+    pub fn is_simd(self) -> bool {
+        self != SimdMode::Wordwise
+    }
+}
+
+/// Best tier the running CPU supports, ignoring the env override.
+pub fn detected() -> SimdMode {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdMode::Avx2;
+        }
+        if is_x86_feature_detected!("sse2") {
+            return SimdMode::Sse2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return SimdMode::Neon;
+    }
+    #[allow(unreachable_code)]
+    SimdMode::Wordwise
+}
+
+/// Resolve an override string against what the CPU supports. A requested
+/// tier the hardware lacks falls back to detection (never to a mode that
+/// would fault).
+fn parse(raw: Option<&str>, detected: SimdMode) -> SimdMode {
+    let Some(raw) = raw else { return detected };
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "off" | "scalar" | "wordwise" | "0" | "false" => SimdMode::Wordwise,
+        "sse2" if matches!(detected, SimdMode::Sse2 | SimdMode::Avx2) => SimdMode::Sse2,
+        "avx2" if detected == SimdMode::Avx2 => SimdMode::Avx2,
+        "neon" if detected == SimdMode::Neon => SimdMode::Neon,
+        _ => detected,
+    }
+}
+
+/// The tier the public `quant` entry points dispatch to, resolved once per
+/// process from the `QPART_SIMD` env var (see module docs) and CPU
+/// detection.
+pub fn active() -> SimdMode {
+    static MODE: OnceLock<SimdMode> = OnceLock::new();
+    *MODE.get_or_init(|| parse(std::env::var("QPART_SIMD").ok().as_deref(), detected()))
+}
+
+/// SIMD `pack_bits`: vectorized validation scan at every width, vector
+/// narrowing at the byte-aligned widths (8/16), word-wise emit elsewhere.
+/// Byte-identical to [`pack_bits_wordwise`] / `pack_bits_scalar`; always
+/// runs the best *detected* tier regardless of `QPART_SIMD` (it is the
+/// explicit-SIMD surface the property tests and `perf_quant` call).
+pub fn pack_bits_simd(codes: &[u32], bits: u8) -> Result<Vec<u8>> {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    if detected() == SimdMode::Avx2 {
+        check_bits("pack_bits", bits)?;
+        let limit = 1u64 << bits;
+        // SAFETY: AVX2 presence verified by `detected()` above.
+        if let Some(bad) = unsafe { x86::find_oversized_avx2(codes, limit) } {
+            return Err(Error::InvalidArg(format!("code {bad} does not fit in {bits} bits")));
+        }
+        let mut out = vec![0u8; packed_len_bytes(codes.len(), bits)];
+        match bits {
+            // SAFETY: AVX2 verified; codes validated < 2^bits above.
+            8 => unsafe { x86::pack8_avx2(codes, &mut out) },
+            16 => unsafe { x86::pack16_avx2(codes, &mut out) },
+            _ => {
+                let mut packer = WordPacker::new(&mut out);
+                for &c in codes {
+                    packer.push(c, bits as u32);
+                }
+                packer.finish();
+            }
+        }
+        return Ok(out);
+    }
+    pack_bits_wordwise(codes, bits)
+}
+
+/// SIMD `unpack_bits`: vector widening at the byte-aligned widths (8/16),
+/// word-wise refill elsewhere. Code-identical to [`unpack_bits_wordwise`];
+/// always runs the best *detected* tier regardless of `QPART_SIMD`.
+pub fn unpack_bits_simd(buf: &[u8], n: usize, bits: u8) -> Result<Vec<u32>> {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    if detected() == SimdMode::Avx2 && (bits == 8 || bits == 16) {
+        check_bits("unpack_bits", bits)?;
+        let need = packed_len_bytes(n, bits);
+        if buf.len() < need {
+            return Err(Error::InvalidArg(format!(
+                "unpack_bits: buffer has {} bytes, need {need}",
+                buf.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(n);
+        match bits {
+            // SAFETY: AVX2 verified; buffer length validated above.
+            8 => unsafe { x86::unpack8_avx2(buf, n, &mut out) },
+            _ => unsafe { x86::unpack16_avx2(buf, n, &mut out) },
+        }
+        return Ok(out);
+    }
+    unpack_bits_wordwise(buf, n, bits)
+}
+
+/// SIMD fused quantize→pack with explicit parameters: the vector analogue
+/// of `quantize_packed_with_wordwise`, byte-identical to it (the lanes
+/// feed the same [`WordPacker`]). Always runs the best *detected* tier.
+pub fn quantize_packed_with_simd(data: &[f32], params: QuantParams) -> PackedQuantized {
+    let step = params.step();
+    let inv = 1.0 / step;
+    let min = params.min;
+    let max_code = params.levels() - 1;
+    let bits = params.bits as u32;
+    let mut packed = vec![0u8; packed_len_bytes(data.len(), params.bits)];
+    {
+        let mut packer = WordPacker::new(&mut packed);
+        quantize_into(data, min, inv, max_code, bits, &mut packer, detected());
+        packer.finish();
+    }
+    PackedQuantized { params, len: data.len(), packed }
+}
+
+/// SIMD fused quantize→pack with data-derived range (the vector analogue
+/// of `quantize_packed`). Always runs the best *detected* tier.
+pub fn quantize_packed_simd(data: &[f32], bits: u8) -> Result<PackedQuantized> {
+    let (mn, mx) = scan_range(data)?;
+    let params = QuantParams::from_range(bits, mn, mx)?;
+    Ok(quantize_packed_with_simd(data, params))
+}
+
+/// Quantize `data` into `packer` using `mode`'s widest supported kernel.
+/// `mode` must come from [`detected`]/[`active`] so the tier is executable.
+fn quantize_into(
+    data: &[f32],
+    min: f32,
+    inv: f32,
+    max_code: u32,
+    bits: u32,
+    packer: &mut WordPacker,
+    mode: SimdMode,
+) {
+    match mode {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        // SAFETY: tier verified executable by detection (fn contract).
+        SimdMode::Avx2 => unsafe { x86::quantize_pack_avx2(data, min, inv, max_code, bits, packer) },
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        // SAFETY: as above.
+        SimdMode::Sse2 => unsafe { x86::quantize_pack_sse2(data, min, inv, max_code, bits, packer) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdMode::Neon => unsafe { neon::quantize_pack_neon(data, min, inv, max_code, bits, packer) },
+        _ => {
+            for &x in data {
+                let q = (((x - min) * inv + 0.5) as u32).min(max_code);
+                packer.push(q, bits);
+            }
+        }
+    }
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod x86 {
+    #[cfg(target_arch = "x86")]
+    use core::arch::x86::*;
+    #[cfg(target_arch = "x86_64")]
+    use core::arch::x86_64::*;
+
+    use crate::quant::bitpack::WordPacker;
+
+    /// 8 Eq. 10 codes per iteration. sub/mul/add (no FMA) matches the
+    /// scalar intermediates bit-for-bit; `max_ps(t, 0)` yields 0 for NaN
+    /// lanes (maxps returns its second operand on NaN) and clamps
+    /// negatives; `min_ps` against `max_code as f32` is exact because
+    /// `max_code < 2^24`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn quantize_pack_avx2(
+        data: &[f32],
+        min: f32,
+        inv: f32,
+        max_code: u32,
+        bits: u32,
+        packer: &mut WordPacker,
+    ) {
+        let minv = _mm256_set1_ps(min);
+        let invv = _mm256_set1_ps(inv);
+        let half = _mm256_set1_ps(0.5);
+        let zero = _mm256_setzero_ps();
+        let top = _mm256_set1_ps(max_code as f32);
+        let mut codes = [0u32; 8];
+        let mut chunks = data.chunks_exact(8);
+        for c in chunks.by_ref() {
+            let x = _mm256_loadu_ps(c.as_ptr());
+            let t = _mm256_add_ps(_mm256_mul_ps(_mm256_sub_ps(x, minv), invv), half);
+            let t = _mm256_min_ps(_mm256_max_ps(t, zero), top);
+            let q = _mm256_cvttps_epi32(t);
+            _mm256_storeu_si256(codes.as_mut_ptr() as *mut __m256i, q);
+            for &code in &codes {
+                packer.push(code, bits);
+            }
+        }
+        for &x in chunks.remainder() {
+            let q = (((x - min) * inv + 0.5) as u32).min(max_code);
+            packer.push(q, bits);
+        }
+    }
+
+    /// 4-lane SSE2 variant of [`quantize_pack_avx2`] — same byte-identity
+    /// argument, half the width, for pre-AVX2 x86.
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn quantize_pack_sse2(
+        data: &[f32],
+        min: f32,
+        inv: f32,
+        max_code: u32,
+        bits: u32,
+        packer: &mut WordPacker,
+    ) {
+        let minv = _mm_set1_ps(min);
+        let invv = _mm_set1_ps(inv);
+        let half = _mm_set1_ps(0.5);
+        let zero = _mm_setzero_ps();
+        let top = _mm_set1_ps(max_code as f32);
+        let mut codes = [0u32; 4];
+        let mut chunks = data.chunks_exact(4);
+        for c in chunks.by_ref() {
+            let x = _mm_loadu_ps(c.as_ptr());
+            let t = _mm_add_ps(_mm_mul_ps(_mm_sub_ps(x, minv), invv), half);
+            let t = _mm_min_ps(_mm_max_ps(t, zero), top);
+            let q = _mm_cvttps_epi32(t);
+            _mm_storeu_si128(codes.as_mut_ptr() as *mut __m128i, q);
+            for &code in &codes {
+                packer.push(code, bits);
+            }
+        }
+        for &x in chunks.remainder() {
+            let q = (((x - min) * inv + 0.5) as u32).min(max_code);
+            packer.push(q, bits);
+        }
+    }
+
+    /// Vectorized `pack_bits` validation: 8 codes per compare. On a hit,
+    /// rescan the offending block scalar so the reported code is the
+    /// *first* oversized one, exactly like the word-wise/scalar paths.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn find_oversized_avx2(codes: &[u32], limit: u64) -> Option<u32> {
+        let lm1 = (limit - 1) as u32; // limit ≤ 2^24, fits u32
+        let top = _mm256_set1_epi32(lm1 as i32);
+        let mut chunks = codes.chunks_exact(8);
+        for c in chunks.by_ref() {
+            let v = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+            // v ≤ lm1 (unsigned) ⇔ max_epu32(v, lm1) == lm1
+            let ok = _mm256_cmpeq_epi32(_mm256_max_epu32(v, top), top);
+            if _mm256_movemask_epi8(ok) != -1 {
+                return c.iter().find(|&&x| (x as u64) >= limit).copied();
+            }
+        }
+        chunks.remainder().iter().find(|&&x| (x as u64) >= limit).copied()
+    }
+
+    /// bits=8 pack: narrow 32 validated u32 codes → 32 bytes per
+    /// iteration (two packus stages + a lane-fixing permute).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn pack8_avx2(codes: &[u32], out: &mut [u8]) {
+        let mut pos = 0usize;
+        let mut chunks = codes.chunks_exact(32);
+        for c in chunks.by_ref() {
+            let a = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+            let b = _mm256_loadu_si256(c.as_ptr().add(8) as *const __m256i);
+            let cc = _mm256_loadu_si256(c.as_ptr().add(16) as *const __m256i);
+            let d = _mm256_loadu_si256(c.as_ptr().add(24) as *const __m256i);
+            // per-lane u32→u16, then u16→u8 (no saturation: codes < 256)
+            let ab = _mm256_packus_epi32(a, b);
+            let cd = _mm256_packus_epi32(cc, d);
+            let abcd = _mm256_packus_epi16(ab, cd);
+            // dwords now [a0-3 b0-3 c0-3 d0-3 | a4-7 b4-7 c4-7 d4-7]
+            let idx = _mm256_setr_epi32(0, 4, 1, 5, 2, 6, 3, 7);
+            let fixed = _mm256_permutevar8x32_epi32(abcd, idx);
+            _mm256_storeu_si256(out.as_mut_ptr().add(pos) as *mut __m256i, fixed);
+            pos += 32;
+        }
+        for (&code, o) in chunks.remainder().iter().zip(out[pos..].iter_mut()) {
+            *o = code as u8;
+        }
+    }
+
+    /// bits=16 pack: narrow 16 validated u32 codes → 32 LE bytes per
+    /// iteration.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn pack16_avx2(codes: &[u32], out: &mut [u8]) {
+        let mut pos = 0usize;
+        let mut chunks = codes.chunks_exact(16);
+        for c in chunks.by_ref() {
+            let a = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+            let b = _mm256_loadu_si256(c.as_ptr().add(8) as *const __m256i);
+            // per-lane u32→u16 (codes < 2^16, no saturation), then fix the
+            // qword order [a0-3, b0-3, a4-7, b4-7] → [a0-3, a4-7, b0-3, b4-7]
+            let ab = _mm256_packus_epi32(a, b);
+            let fixed = _mm256_permute4x64_epi64::<0b1101_1000>(ab);
+            _mm256_storeu_si256(out.as_mut_ptr().add(pos) as *mut __m256i, fixed);
+            pos += 32;
+        }
+        for (&code, o) in chunks.remainder().iter().zip(out[pos..].chunks_exact_mut(2)) {
+            o.copy_from_slice(&(code as u16).to_le_bytes());
+        }
+    }
+
+    /// bits=8 unpack: widen 8 bytes → 8 u32 per iteration.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn unpack8_avx2(buf: &[u8], n: usize, out: &mut Vec<u32>) {
+        let mut tmp = [0u32; 8];
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v = _mm_loadl_epi64(buf.as_ptr().add(i) as *const __m128i);
+            let w = _mm256_cvtepu8_epi32(v);
+            _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, w);
+            out.extend_from_slice(&tmp);
+            i += 8;
+        }
+        for &b in &buf[i..n] {
+            out.push(b as u32);
+        }
+    }
+
+    /// bits=16 unpack: widen 8 LE u16 → 8 u32 per iteration.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn unpack16_avx2(buf: &[u8], n: usize, out: &mut Vec<u32>) {
+        let mut tmp = [0u32; 8];
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v = _mm_loadu_si128(buf.as_ptr().add(i * 2) as *const __m128i);
+            let w = _mm256_cvtepu16_epi32(v);
+            _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, w);
+            out.extend_from_slice(&tmp);
+            i += 8;
+        }
+        for c in buf[i * 2..n * 2].chunks_exact(2) {
+            out.push(u16::from_le_bytes([c[0], c[1]]) as u32);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    use crate::quant::bitpack::WordPacker;
+
+    /// 4 Eq. 10 codes per iteration. `vcvtq_u32_f32` lowers to FCVTZU —
+    /// the saturating truncate-toward-zero with NaN→0 that Rust's
+    /// `as u32` cast uses on aarch64 — so no float-domain clamp at 0 is
+    /// needed; the top clamp stays in the integer domain like the scalar.
+    pub(super) unsafe fn quantize_pack_neon(
+        data: &[f32],
+        min: f32,
+        inv: f32,
+        max_code: u32,
+        bits: u32,
+        packer: &mut WordPacker,
+    ) {
+        let minv = vdupq_n_f32(min);
+        let invv = vdupq_n_f32(inv);
+        let half = vdupq_n_f32(0.5);
+        let top = vdupq_n_u32(max_code);
+        let mut codes = [0u32; 4];
+        let mut chunks = data.chunks_exact(4);
+        for c in chunks.by_ref() {
+            let x = vld1q_f32(c.as_ptr());
+            let t = vaddq_f32(vmulq_f32(vsubq_f32(x, minv), invv), half);
+            let q = vminq_u32(vcvtq_u32_f32(t), top);
+            vst1q_u32(codes.as_mut_ptr(), q);
+            for &code in &codes {
+                packer.push(code, bits);
+            }
+        }
+        for &x in chunks.remainder() {
+            let q = (((x - min) * inv + 0.5) as u32).min(max_code);
+            packer.push(q, bits);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bitpack::{pack_bits_scalar, unpack_bits_scalar};
+    use crate::quant::quantizer::quantize_packed_with_wordwise;
+    use crate::testing::{check, vec_f32};
+
+    #[test]
+    fn parse_honors_overrides_and_hardware() {
+        let det = SimdMode::Avx2;
+        for off in ["off", "scalar", "wordwise", "0", "false", " OFF "] {
+            assert_eq!(parse(Some(off), det), SimdMode::Wordwise, "{off}");
+        }
+        assert_eq!(parse(Some("avx2"), det), SimdMode::Avx2);
+        assert_eq!(parse(Some("sse2"), det), SimdMode::Sse2);
+        // a tier the CPU lacks falls back to detection, never faults
+        assert_eq!(parse(Some("avx2"), SimdMode::Sse2), SimdMode::Sse2);
+        assert_eq!(parse(Some("neon"), SimdMode::Sse2), SimdMode::Sse2);
+        assert_eq!(parse(Some("garbage"), det), det);
+        assert_eq!(parse(None, det), det);
+    }
+
+    #[test]
+    fn active_is_executable() {
+        // whatever the env says, active() must be runnable here: exercise
+        // the dispatched public entry points end to end
+        let m = active();
+        assert!(!m.name().is_empty());
+        let codes: Vec<u32> = (0..777u32).map(|i| i % 251).collect();
+        let packed = crate::quant::pack_bits(&codes, 8).unwrap();
+        assert_eq!(packed, pack_bits_scalar(&codes, 8).unwrap());
+        assert_eq!(crate::quant::unpack_bits(&packed, codes.len(), 8).unwrap(), codes);
+    }
+
+    #[test]
+    fn prop_simd_pack_unpack_matches_oracles_all_widths() {
+        // SIMD ≡ word-wise ≡ scalar, widths 1..=24, odd/unaligned lengths
+        check("simd pack/unpack ≡ oracles", 160, |rng| {
+            let bits = rng.range_usize(1, 25) as u8;
+            let n = rng.range_usize(0, 700);
+            let limit = 1u64 << bits;
+            let codes: Vec<u32> = (0..n).map(|_| rng.below(limit) as u32).collect();
+            let simd = pack_bits_simd(&codes, bits).unwrap();
+            assert_eq!(simd, pack_bits_scalar(&codes, bits).unwrap(), "bits={bits} n={n}");
+            assert_eq!(simd, pack_bits_wordwise(&codes, bits).unwrap(), "bits={bits} n={n}");
+            let back = unpack_bits_simd(&simd, n, bits).unwrap();
+            assert_eq!(back, codes, "bits={bits} n={n}");
+            assert_eq!(back, unpack_bits_scalar(&simd, n, bits).unwrap());
+        });
+    }
+
+    #[test]
+    fn simd_pack_unpack_dense_sweep_with_unaligned_slices() {
+        // deterministic seams: every width × lengths around the vector
+        // block sizes (8/16/32) and the u64 flush boundary, plus inputs
+        // deliberately offset one element/byte so loadu paths see
+        // unaligned addresses
+        for bits in 1u8..=24 {
+            let limit = 1u64 << bits;
+            let base: Vec<u32> =
+                (0..101u64).map(|i| ((i * 2_654_435_761) % limit) as u32).collect();
+            for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 100] {
+                let codes = &base[1..1 + n]; // misaligned start
+                let simd = pack_bits_simd(codes, bits).unwrap();
+                assert_eq!(simd, pack_bits_scalar(codes, bits).unwrap(), "bits={bits} n={n}");
+                // unpack from a buffer whose start is odd too
+                let mut shifted = vec![0xA5u8];
+                shifted.extend_from_slice(&simd);
+                assert_eq!(
+                    unpack_bits_simd(&shifted[1..], n, bits).unwrap(),
+                    codes,
+                    "bits={bits} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_pack_validates_like_the_oracles() {
+        // first oversized code reported, wherever it sits relative to the
+        // vector blocks
+        for pos in [0usize, 3, 7, 8, 9, 30, 31, 32, 40] {
+            let mut codes = vec![1u32; 41];
+            codes[pos] = 256;
+            let simd = pack_bits_simd(&codes, 8).unwrap_err().to_string();
+            let scalar = pack_bits_scalar(&codes, 8).unwrap_err().to_string();
+            assert_eq!(simd, scalar, "pos={pos}");
+        }
+        assert!(pack_bits_simd(&[0], 0).is_err());
+        assert!(pack_bits_simd(&[0], 25).is_err());
+        assert!(unpack_bits_simd(&[0u8; 2], 3, 8).is_err());
+    }
+
+    #[test]
+    fn prop_simd_quantize_packed_matches_wordwise() {
+        check("simd quantize_packed ≡ wordwise", 120, |rng| {
+            let len = rng.range_usize(0, 500);
+            let lo = rng.range_f64(-50.0, 0.0) as f32;
+            let hi = lo + rng.range_f64(0.001, 100.0) as f32;
+            let data = vec_f32(rng, len, lo, hi);
+            let bits = rng.range_usize(1, 25) as u8;
+            let simd = quantize_packed_simd(&data, bits).unwrap();
+            let word = crate::quant::quantizer::quantize_packed_wordwise(&data, bits).unwrap();
+            assert_eq!(simd, word, "bits={bits} len={len}");
+        });
+    }
+
+    #[test]
+    fn simd_quantize_saturation_matches_scalar_exactly() {
+        // explicit params admit values outside [min, max]: NaN, ±inf, and
+        // huge magnitudes must hit the same saturating-cast clamps as the
+        // scalar kernel, lane-for-lane, at every width
+        let data = [
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            -1e30,
+            1e30,
+            -0.0,
+            0.0,
+            2.5e9, // > i32::MAX but < u32::MAX as f32
+            0.4999,
+            0.5001,
+            -3.7,
+            1.0,
+            7.3,
+            42.0,
+            -42.0,
+            1e-20,
+            123.456,
+        ];
+        for bits in 1u8..=24 {
+            let params = QuantParams::from_range(bits, 0.0, 8.0).unwrap();
+            let simd = quantize_packed_with_simd(&data, params);
+            let word = quantize_packed_with_wordwise(&data, params);
+            assert_eq!(simd, word, "bits={bits}");
+        }
+    }
+}

@@ -228,5 +228,5 @@ pub use frame::{
 };
 pub use messages::{
     ActivationUpload, EncodedSegmentBody, ErrorReply, HelloReply, HelloRequest, InferReply,
-    InferRequest, LayerBlob, PatternInfo, Request, Response, SegmentBlob,
+    InferRequest, LayerBlob, PatternInfo, Request, Response, SegmentBlob, JSON_FRAME_TAIL,
 };

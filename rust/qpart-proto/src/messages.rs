@@ -22,9 +22,10 @@
 //! with the session id and the request's objective value.
 
 use crate::base64;
-use crate::frame::{BinaryFrame, Frame};
+use crate::frame::{BinaryFrame, Frame, BINARY_MAGIC, MAX_FRAME_BYTES};
 use qpart_core::json::{parse, Value};
 use qpart_core::{Error, Result};
+use std::sync::Arc;
 
 /// Requests a client can send.
 #[derive(Debug, Clone, PartialEq)]
@@ -49,6 +50,19 @@ pub struct HelloRequest {
     /// Serialized only when true, so untraced hellos are byte-identical
     /// to older peers (absent field ≡ old peer).
     pub trace: bool,
+    /// Device-class fairness weight (`DeviceClass.weight`): the server
+    /// scales this connection's fair-queuing token-bucket rate by it, so
+    /// a rare class is not crowded out by a hot class of polite devices.
+    /// Clamped server-side; `1.0` means the base `--fair-rate`.
+    /// Serialized only when ≠ 1.0, so default hellos are byte-identical
+    /// to older peers (absent field ≡ old peer).
+    pub weight: f64,
+}
+
+impl Default for HelloRequest {
+    fn default() -> HelloRequest {
+        HelloRequest { binary_frames: false, trace: false, weight: 1.0 }
+    }
 }
 
 /// Paper Algorithm 2's Require-tuple.
@@ -297,6 +311,11 @@ impl Request {
                 if h.trace {
                     v.set("trace", true.into());
                 }
+                // same byte-compat story for the fairness weight: the
+                // default class is indistinguishable from an old peer
+                if h.weight != 1.0 {
+                    v.set("weight", h.weight.into());
+                }
                 v
             }
             Request::Infer(r) => {
@@ -331,6 +350,7 @@ impl Request {
             "hello" => Ok(Request::Hello(HelloRequest {
                 binary_frames: v.opt_bool("binary_frames", false),
                 trace: v.opt_bool("trace", false),
+                weight: v.opt_f64("weight", 1.0),
             })),
             "infer" => Ok(Request::Infer(InferRequest::from_json(v)?)),
             "activation" => Ok(Request::Activation(ActivationUpload {
@@ -554,13 +574,21 @@ pub struct EncodedSegmentBody {
     segment: SegmentBlob,
     /// `model` as a JSON string literal (quoted + escaped).
     model_json: String,
-    /// The `layers` array, JSON/base64 form, serialized compactly.
-    layers_json: String,
+    /// The `layers` array, JSON/base64 form, serialized compactly. Held
+    /// as shared UTF-8 bytes so front-ends can queue it for egress
+    /// without copying the multi-megabyte body per connection.
+    layers_json: Arc<[u8]>,
     /// The `layers` array, binary-header form (blob offsets).
     bin_layers_json: String,
-    /// Raw packed payload bytes the binary header points into.
-    blob: Vec<u8>,
+    /// Raw packed payload bytes the binary header points into. Shared
+    /// for the same zero-copy reason as `layers_json`.
+    blob: Arc<[u8]>,
 }
+
+/// Closing bytes of a JSON-framed segment reply built from splice parts:
+/// `json_frame_head + layers_json_shared + JSON_FRAME_TAIL` (the object's
+/// closing brace plus the JSON-lines newline).
+pub const JSON_FRAME_TAIL: &[u8] = b"}\n";
 
 impl EncodedSegmentBody {
     /// Serialize `segment` once in both wire forms. `pattern.objective` is
@@ -573,9 +601,9 @@ impl EncodedSegmentBody {
             model: model.to_string(),
             pattern: PatternInfo { objective: f64::NAN, ..pattern },
             segment,
-            layers_json: layers,
+            layers_json: layers.into_bytes().into(),
             bin_layers_json: bin_metas.to_string_compact(),
-            blob,
+            blob: blob.into(),
         }
     }
 
@@ -596,6 +624,23 @@ impl EncodedSegmentBody {
     /// Raw blob for [`crate::frame::write_binary_frame`].
     pub fn blob(&self) -> &[u8] {
         &self.blob
+    }
+
+    /// Shared handle on the raw blob: an egress queue can hold this
+    /// instead of copying [`Self::blob`] into its own buffer.
+    pub fn blob_shared(&self) -> Arc<[u8]> {
+        Arc::clone(&self.blob)
+    }
+
+    /// Shared handle on the serialized `layers` JSON (the bulk of a
+    /// JSON-framed segment reply), for the same zero-copy egress path.
+    pub fn layers_json_shared(&self) -> Arc<[u8]> {
+        Arc::clone(&self.layers_json)
+    }
+
+    /// The `layers` JSON as `&str` (it is serialized UTF-8 by construction).
+    fn layers_json_str(&self) -> &str {
+        std::str::from_utf8(&self.layers_json).expect("layers_json is serialized JSON")
     }
 
     /// Packed wire payload size in bytes (weights + biases).
@@ -640,8 +685,22 @@ impl EncodedSegmentBody {
             trace_splice(trace),
             self.model_json,
             self.pattern_json(objective),
-            self.layers_json,
+            self.layers_json_str(),
         )
+    }
+
+    /// The per-connection prefix of a JSON-framed segment reply: the
+    /// concatenation `json_frame_head + layers_json_shared + JSON_FRAME_TAIL`
+    /// is byte-identical to `write_frame(json_line_traced(..))` output, but
+    /// the middle (and by far largest) part is shared, not copied.
+    pub fn json_frame_head(&self, session: u64, objective: f64, trace: Option<u64>) -> Vec<u8> {
+        format!(
+            "{{\"type\":\"segment\",\"session\":{session},{}\"model\":{},\"pattern\":{},\"layers\":",
+            trace_splice(trace),
+            self.model_json,
+            self.pattern_json(objective),
+        )
+        .into_bytes()
     }
 
     /// The binary-frame header for one session (pair with [`Self::blob`]).
@@ -658,6 +717,32 @@ impl EncodedSegmentBody {
             self.pattern_json(objective),
             self.bin_layers_json,
         )
+    }
+
+    /// The per-connection prefix of a binary-framed segment reply: magic
+    /// byte, total/header lengths, and the stamped header. The
+    /// concatenation `binary_frame_head + blob_shared` is byte-identical
+    /// to `write_binary_frame(binary_header_traced(..), blob())` output.
+    /// Returns `None` when the frame would exceed
+    /// [`crate::frame::MAX_FRAME_BYTES`], exactly when `write_binary_frame`
+    /// would refuse with `TooLarge`.
+    pub fn binary_frame_head(
+        &self,
+        session: u64,
+        objective: f64,
+        trace: Option<u64>,
+    ) -> Option<Vec<u8>> {
+        let header = self.binary_header_traced(session, objective, trace);
+        let total = 4 + header.len() + self.blob.len();
+        if total > MAX_FRAME_BYTES {
+            return None;
+        }
+        let mut head = Vec::with_capacity(9 + header.len());
+        head.push(BINARY_MAGIC);
+        head.extend_from_slice(&(total as u32).to_le_bytes());
+        head.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        head.extend_from_slice(header.as_bytes());
+        Some(head)
     }
 
     /// Rebuild the full reply for one session (in-process compat path).
@@ -981,8 +1066,9 @@ mod tests {
             Request::Ping,
             Request::ListModels,
             Request::Stats,
-            Request::Hello(HelloRequest { binary_frames: true, trace: false }),
-            Request::Hello(HelloRequest { binary_frames: false, trace: true }),
+            Request::Hello(HelloRequest { binary_frames: true, ..HelloRequest::default() }),
+            Request::Hello(HelloRequest { trace: true, ..HelloRequest::default() }),
+            Request::Hello(HelloRequest { weight: 0.25, ..HelloRequest::default() }),
             Request::Infer(infer_req()),
             Request::Activation(ActivationUpload {
                 session: 42,
@@ -1142,7 +1228,9 @@ mod tests {
     #[test]
     fn trace_field_compat_with_old_peers() {
         // an untraced hello serializes exactly as before the field existed
-        let line = Request::Hello(HelloRequest { binary_frames: true, trace: false }).to_line();
+        let line =
+            Request::Hello(HelloRequest { binary_frames: true, ..HelloRequest::default() })
+                .to_line();
         assert!(!line.contains("trace"));
         // old-peer bytes (no trace field) parse as trace=false / None
         match Request::from_line(r#"{"type":"hello","binary_frames":true}"#).unwrap() {
@@ -1159,6 +1247,66 @@ mod tests {
         assert!(!line.contains("trace"));
         let line = Response::Segment(sample_reply()).to_line();
         assert!(!line.contains("\"trace\""));
+    }
+
+    #[test]
+    fn weight_field_compat_with_old_peers() {
+        // a default-weight hello serializes exactly as before the field
+        // existed, so old servers never see it
+        let line = Request::Hello(HelloRequest::default()).to_line();
+        assert!(!line.contains("weight"));
+        // old-peer bytes (no weight field) parse as the base class
+        match Request::from_line(r#"{"type":"hello","binary_frames":true}"#).unwrap() {
+            Request::Hello(h) => assert_eq!(h.weight, 1.0),
+            other => panic!("unexpected {other:?}"),
+        }
+        // a non-default weight round-trips
+        let req = Request::Hello(HelloRequest { weight: 0.4, ..HelloRequest::default() });
+        match Request::from_line(&req.to_line()).unwrap() {
+            Request::Hello(h) => assert_eq!(h.weight, 0.4),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn splice_parts_match_whole_frame_writes() {
+        // the zero-copy egress contract: head + shared body (+ tail)
+        // concatenate to exactly the bytes the whole-frame writers emit
+        let mut rng = Rng::new(0x5EC5);
+        for trial in 0..20 {
+            let reply = random_reply(&mut rng, 1 + trial % 4);
+            let body = EncodedSegmentBody::new(
+                &reply.model,
+                reply.pattern.clone(),
+                reply.segment.clone(),
+            );
+            for trace in [None, Some(7u64)] {
+                // JSON framing
+                let mut whole = Vec::new();
+                write_frame(
+                    &mut whole,
+                    &body.json_line_traced(reply.session, 0.25, trace),
+                )
+                .unwrap();
+                let mut parts = body.json_frame_head(reply.session, 0.25, trace);
+                parts.extend_from_slice(&body.layers_json_shared());
+                parts.extend_from_slice(JSON_FRAME_TAIL);
+                assert_eq!(parts, whole, "trial {trial} trace {trace:?} (json)");
+
+                // binary framing
+                let mut whole = Vec::new();
+                write_binary_frame(
+                    &mut whole,
+                    &body.binary_header_traced(reply.session, 0.25, trace),
+                    body.blob(),
+                )
+                .unwrap();
+                let mut parts =
+                    body.binary_frame_head(reply.session, 0.25, trace).unwrap();
+                parts.extend_from_slice(&body.blob_shared());
+                assert_eq!(parts, whole, "trial {trial} trace {trace:?} (binary)");
+            }
+        }
     }
 
     #[test]
@@ -1280,7 +1428,7 @@ mod tests {
     #[test]
     fn hello_request_over_json_frame() {
         let mut wire = Vec::new();
-        let hello = Request::Hello(HelloRequest { binary_frames: true, trace: false });
+        let hello = Request::Hello(HelloRequest { binary_frames: true, ..HelloRequest::default() });
         write_frame(&mut wire, &hello.to_line()).unwrap();
         let mut r = BufReader::new(&wire[..]);
         match read_any_frame(&mut r).unwrap() {

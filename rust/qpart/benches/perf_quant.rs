@@ -4,18 +4,23 @@
 //! the device segment's weights to the pattern's bit-widths and packing
 //! the codes for the wire. Target (DESIGN.md §8): ≥200 MB/s/core.
 //!
-//! Since the hot-path overhaul, pack/unpack run word-wise (u64 chunks)
-//! and the encode path uses the fused quantize→pack kernel; this bench
-//! reports each against the retained byte-at-a-time scalar reference
-//! (`pack_bits_scalar` / `unpack_bits_scalar`) so the speedup is measured
-//! on the same machine, same buffers. Acceptance: word-wise pack/unpack
-//! ≥2× the scalar baseline.
+//! Three kernel tiers are reported against each other on the same
+//! machine, same buffers: the byte-at-a-time scalar reference
+//! (`pack_bits_scalar` / `unpack_bits_scalar`), the PR 4 word-wise (u64
+//! chunk) kernels, and the SIMD tier (`quant::simd`, labelled with the
+//! detected instruction set — avx2/sse2/neon, or wordwise when the CPU
+//! has none). Acceptance: word-wise pack/unpack ≥2× the scalar baseline
+//! ("× scalar" column); on AVX2 hardware the SIMD rows should read
+//! ≥1.5× the word-wise kernels ("× wordwise" column, soft-gated in CI's
+//! perf-smoke job on AVX2 runners only).
 
 mod common;
 
 use common::*;
+use qpart::core::quant::simd::{self, pack_bits_simd, quantize_packed_simd, unpack_bits_simd};
 use qpart::core::quant::{
-    pack_bits, pack_bits_scalar, quantize, quantize_packed, unpack_bits, unpack_bits_scalar,
+    pack_bits, pack_bits_scalar, pack_bits_wordwise, quantize, quantize_packed_wordwise,
+    unpack_bits_scalar, unpack_bits_wordwise,
 };
 use qpart_bench::{black_box, fmt_ns, quick, Table};
 
@@ -27,9 +32,10 @@ fn main() {
     let data: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.61803).sin()).collect();
     let mbytes = (n * 4) as f64 / 1e6;
 
+    let simd_name = simd::detected().name();
     let mut table = Table::new(
         "hot-loop throughput (784×512 f32 weights)",
-        &["op", "bits", "mean", "p99", "MB/s (f32 in)", "× scalar"],
+        &["op", "bits", "mean", "p99", "MB/s (f32 in)", "× scalar", "× wordwise"],
     );
     let no_ratio = || "-".to_string();
     for bits in [4u8, 8, 12] {
@@ -44,6 +50,7 @@ fn main() {
             fmt_ns(s.p99_ns),
             format!("{:.0}", s.per_second(mbytes)),
             no_ratio(),
+            no_ratio(),
         ]);
 
         let q = quantize(&data, bits).unwrap();
@@ -57,17 +64,31 @@ fn main() {
             fmt_ns(scalar_pack.p99_ns),
             format!("{:.0}", scalar_pack.per_second(mbytes)),
             "1.0".into(),
+            no_ratio(),
         ]);
-        let s = quick(|| {
-            black_box(pack_bits(black_box(&q.codes), bits).unwrap());
+        let ww_pack = quick(|| {
+            black_box(pack_bits_wordwise(black_box(&q.codes), bits).unwrap());
         });
         table.row(vec![
             "pack (word-wise)".into(),
+            bits.to_string(),
+            fmt_ns(ww_pack.mean_ns),
+            fmt_ns(ww_pack.p99_ns),
+            format!("{:.0}", ww_pack.per_second(mbytes)),
+            format!("{:.2}", scalar_pack.mean_ns / ww_pack.mean_ns),
+            "1.0".into(),
+        ]);
+        let s = quick(|| {
+            black_box(pack_bits_simd(black_box(&q.codes), bits).unwrap());
+        });
+        table.row(vec![
+            format!("pack (simd {simd_name})"),
             bits.to_string(),
             fmt_ns(s.mean_ns),
             fmt_ns(s.p99_ns),
             format!("{:.0}", s.per_second(mbytes)),
             format!("{:.2}", scalar_pack.mean_ns / s.mean_ns),
+            format!("{:.2}", ww_pack.mean_ns / s.mean_ns),
         ]);
 
         let packed = pack_bits(&q.codes, bits).unwrap();
@@ -81,31 +102,58 @@ fn main() {
             fmt_ns(scalar_unpack.p99_ns),
             format!("{:.0}", scalar_unpack.per_second(mbytes)),
             "1.0".into(),
+            no_ratio(),
         ]);
-        let s = quick(|| {
-            black_box(unpack_bits(black_box(&packed), n, bits).unwrap());
+        let ww_unpack = quick(|| {
+            black_box(unpack_bits_wordwise(black_box(&packed), n, bits).unwrap());
         });
         table.row(vec![
             "unpack (word-wise)".into(),
+            bits.to_string(),
+            fmt_ns(ww_unpack.mean_ns),
+            fmt_ns(ww_unpack.p99_ns),
+            format!("{:.0}", ww_unpack.per_second(mbytes)),
+            format!("{:.2}", scalar_unpack.mean_ns / ww_unpack.mean_ns),
+            "1.0".into(),
+        ]);
+        let s = quick(|| {
+            black_box(unpack_bits_simd(black_box(&packed), n, bits).unwrap());
+        });
+        table.row(vec![
+            format!("unpack (simd {simd_name})"),
             bits.to_string(),
             fmt_ns(s.mean_ns),
             fmt_ns(s.p99_ns),
             format!("{:.0}", s.per_second(mbytes)),
             format!("{:.2}", scalar_unpack.mean_ns / s.mean_ns),
+            format!("{:.2}", ww_unpack.mean_ns / s.mean_ns),
         ]);
 
         // fused quantize→pack vs quantize-then-pack (the encode path);
         // the "× scalar" column compares against quantize + scalar pack
-        let s = quick(|| {
-            black_box(quantize_packed(black_box(&data), bits).unwrap());
+        let ww_fused = quick(|| {
+            black_box(quantize_packed_wordwise(black_box(&data), bits).unwrap());
         });
         table.row(vec![
             "quantize+pack (fused)".into(),
+            bits.to_string(),
+            fmt_ns(ww_fused.mean_ns),
+            fmt_ns(ww_fused.p99_ns),
+            format!("{:.0}", ww_fused.per_second(mbytes)),
+            format!("{:.2}", (quantize_mean + scalar_pack.mean_ns) / ww_fused.mean_ns),
+            "1.0".into(),
+        ]);
+        let s = quick(|| {
+            black_box(quantize_packed_simd(black_box(&data), bits).unwrap());
+        });
+        table.row(vec![
+            format!("quantize+pack (simd {simd_name})"),
             bits.to_string(),
             fmt_ns(s.mean_ns),
             fmt_ns(s.p99_ns),
             format!("{:.0}", s.per_second(mbytes)),
             format!("{:.2}", (quantize_mean + scalar_pack.mean_ns) / s.mean_ns),
+            format!("{:.2}", ww_fused.mean_ns / s.mean_ns),
         ]);
 
         let s = quick(|| {
@@ -117,6 +165,7 @@ fn main() {
             fmt_ns(s.mean_ns),
             fmt_ns(s.p99_ns),
             format!("{:.0}", s.per_second(mbytes)),
+            no_ratio(),
             no_ratio(),
         ]);
     }
