@@ -44,7 +44,7 @@ use args::Args;
 use qpart::coordinator::client::{paper_request, random_input};
 use qpart::coordinator::testing::{synthetic_upload, BlockingConn};
 use qpart::prelude::*;
-use qpart::proto::messages::{ActivationUpload, HelloRequest, Request, Response};
+use qpart::proto::messages::{ActivationUpload, HelloRequest, InferReply, Request, Response};
 use qpart::sim::{Scenario, Trace, TraceEvent};
 use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
@@ -137,6 +137,22 @@ const USAGE: &str = "usage: qpart <serve|request|bench-serve|sim|offline|models>
            [--record-trace F]   capture live traffic into F in the scenario\n\
                                 engine's 'trace v1' text format, replayable\n\
                                 with bench-serve --scenario F\n\
+           [--brownout-ms M]    overload brownout: sustained queue waits above\n\
+                                M ms step a degradation ladder — requests whose\n\
+                                accuracy budget still holds at a coarser\n\
+                                quantization level are planned there (never\n\
+                                past budget), marked 'degraded' in replies\n\
+                                (0 = off, default)\n\
+           [--job-timeout-ms M] soft watchdog: count batches executing longer\n\
+                                than M ms in job_timeouts_total (0 = off)\n\
+           [--drain-timeout-secs S] cap on the graceful drain after SIGTERM/\n\
+                                SIGINT: stop accepting, finish in-flight work,\n\
+                                then exit 0 (default 30)\n\
+           [--fault-inject S]   chaos harness (requires QPART_FAULT_INJECT=1):\n\
+                                worker-panic=P,exec-delay-ms=D,alloc-fail=P\n\
+           [--synthetic]        serve the self-contained synthetic test bundle\n\
+                                (tinymlp, host kernels) from a temp dir — no\n\
+                                artifacts bundle needed\n\
   request  --model mlp6 --accuracy 0.01 --n 16 --addr 127.0.0.1:7878 [--binary]\n\
   bench-serve  load-test the front-end + dataplane + batched phase-2 execution\n\
            plane (synthetic bundle + host kernels unless --artifacts):\n\
@@ -169,6 +185,12 @@ const USAGE: &str = "usage: qpart <serve|request|bench-serve|sim|offline|models>
            [--trace-out F]            trace every request and export the span\n\
                                       timelines as Chrome trace-event JSON\n\
                                       (chrome://tracing / Perfetto) to F\n\
+           [--brownout-ms M]          arm the server's overload brownout for\n\
+                                      the run (see serve --brownout-ms)\n\
+           [--fault-inject S]         arm server-side fault injection for the\n\
+                                      run (requires QPART_FAULT_INJECT=1);\n\
+                                      the report asserts panics were recovered\n\
+                                      (worker restarts > 0, zero misroutes)\n\
            [--scrape-check]           start a metrics listener and assert that\n\
                                       /metrics histogram _bucket series parse\n\
                                       and /trace/slow returns valid JSON\n\
@@ -214,6 +236,15 @@ fn frontend_flag(args: &Args, default: Frontend) -> Result<Frontend, String> {
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
     let serving = cfg.serving().map_err(|e| e.to_string())?;
+    // --synthetic: serve the self-contained test bundle (tinymlp on the
+    // host reference kernels) from a fresh temp dir — no artifacts
+    // needed. CI's SIGTERM drain check leans on this to stand up a real
+    // `serve` process on a bare runner.
+    let synth_dir = if bool_flag(args, "synthetic", false)? {
+        Some(qpart::coordinator::testing::synthetic_bundle("serve"))
+    } else {
+        None
+    };
     let batch_window_ms = args.get_f64("batch-window", serving.batch_window_us as f64 / 1000.0)?;
     let metrics_listen = args
         .get_or("metrics-listen", &serving.metrics_listen)
@@ -243,8 +274,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         trace_store: args.get_usize("trace-store", 1024)?,
         record_trace: args.get("record-trace").map(str::to_string),
         warm_cache: bool_flag(args, "warm-cache", serving.warm_cache)?,
-        host_fallback: bool_flag(args, "host-fallback", false)?,
-        artifacts_dir: args.get_or("artifacts", &serving.artifacts_dir).to_string(),
+        host_fallback: bool_flag(args, "host-fallback", synth_dir.is_some())?,
+        brownout_wait_us: (args.get_f64("brownout-ms", 0.0)?.max(0.0) * 1000.0) as u64,
+        job_timeout: Duration::from_millis(args.get_usize("job-timeout-ms", 0)? as u64),
+        fault_inject: fault_inject_flag(args)?,
+        artifacts_dir: match &synth_dir {
+            Some(d) => d.to_str().unwrap().to_string(),
+            None => args.get_or("artifacts", &serving.artifacts_dir).to_string(),
+        },
     };
     println!(
         "loading bundle from '{}' ({} workers, queue {}, batch window {:?}, cache {} MiB, binary frames {}, warm cache {}, frontend {:?}, max conns {}, conn idle {:?}, fair rate {}) ...",
@@ -270,10 +307,43 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if let Some(path) = record_path {
         println!("recording live traffic to '{path}' (trace v1, flushed periodically)");
     }
-    println!("(ctrl-c to stop)");
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    let drain_timeout =
+        Duration::from_secs(args.get_usize("drain-timeout-secs", 30)? as u64);
+    // SIGTERM/SIGINT flip a flag; the loop below notices within 250 ms
+    // and drains gracefully: stop accepting, finish in-flight work,
+    // flush replies, exit 0
+    qpart::coordinator::net::install_shutdown_handler();
+    println!("(ctrl-c / SIGTERM to drain and stop)");
+    while !qpart::coordinator::net::shutdown_requested() {
+        std::thread::sleep(Duration::from_millis(250));
     }
+    println!(
+        "shutdown requested: draining (refusing new connections, finishing in-flight work, {}s cap) ...",
+        drain_timeout.as_secs()
+    );
+    let clean = handle.drain(drain_timeout);
+    println!("drained {}", if clean { "cleanly" } else { "with the timeout forcing the exit" });
+    if let Some(d) = synth_dir {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+    Ok(())
+}
+
+/// Parse `--fault-inject worker-panic=P,exec-delay-ms=D,alloc-fail=P`.
+/// The spec is compiled in but double-gated: the flag is refused unless
+/// the environment also opts in with `QPART_FAULT_INJECT=1`, so a copied
+/// production command line cannot arm the chaos path by accident.
+fn fault_inject_flag(args: &Args) -> Result<Option<qpart::coordinator::FaultSpec>, String> {
+    let Some(spec) = args.get("fault-inject") else {
+        return Ok(None);
+    };
+    if std::env::var("QPART_FAULT_INJECT").as_deref() != Ok("1") {
+        return Err(
+            "--fault-inject requires QPART_FAULT_INJECT=1 in the environment (chaos harness only)"
+                .into(),
+        );
+    }
+    qpart::coordinator::FaultSpec::parse(spec).map(Some)
 }
 
 fn cmd_request(args: &Args) -> Result<(), String> {
@@ -578,6 +648,12 @@ fn run_bench_serve(
     let warm = bool_flag(args, "warm-cache", false)?;
     let trace_out = args.get("trace-out").map(str::to_string);
     let scrape_check = bool_flag(args, "scrape-check", false)?;
+    let brownout_us = (args.get_f64("brownout-ms", 0.0)?.max(0.0) * 1000.0) as u64;
+    let faults = fault_inject_flag(args)?;
+    // with injected worker panics or allocation failures, `internal`
+    // error replies are the expected recovery signature, not a failure
+    let panics_armed = faults.map_or(false, |f| f.worker_panic > 0.0);
+    let chaos_errors_ok = faults.map_or(false, |f| f.worker_panic > 0.0 || f.alloc_fail > 0.0);
 
     // the device-side arch spec (for boundary dims of phase-2 uploads)
     let bundle = Bundle::load(artifacts_dir).map_err(|e| e.to_string())?;
@@ -602,6 +678,8 @@ fn run_bench_serve(
         metrics_listen: if scrape_check { Some("127.0.0.1:0".into()) } else { None },
         warm_cache: warm,
         host_fallback,
+        brownout_wait_us: brownout_us,
+        fault_inject: faults,
         artifacts_dir: artifacts_dir.to_string(),
         ..Default::default()
     })?;
@@ -611,6 +689,12 @@ fn run_bench_serve(
          requests/client={per_client} keys={keys} batch-window={window_ms}ms \
          phase2={phase2} binary={binary} frontend={frontend:?}"
     );
+    if let Some(f) = &faults {
+        println!(
+            "fault-inject armed: worker-panic={} exec-delay-ms={} alloc-fail={}",
+            f.worker_panic, f.exec_delay_ms, f.alloc_fail
+        );
+    }
 
     let mut prev = handle.snapshot();
     let mut summary = None;
@@ -823,7 +907,7 @@ fn run_bench_serve(
                  (occupancy {occupancy:.2}, ladder padded {d_padded} rows = {waste:.1}% waste)"
             );
         }
-        if errors > 0 {
+        if errors > 0 && !chaos_errors_ok {
             return Err(format!("{errors} requests failed"));
         }
         summary = Some(BenchSummary {
@@ -854,8 +938,40 @@ fn run_bench_serve(
         prev = snap;
     }
 
+    // with brownout armed the storm must have pushed the ladder up AND the
+    // controller must step back to 0 once the load drains — wait for that
+    // here, before the byte-identity checks below (a reply degraded by a
+    // still-hot ladder would differ from the calm control server by design)
+    if brownout_us > 0 {
+        let snap = handle.snapshot();
+        if snap.brownout_enters_total == 0 {
+            return Err(
+                "brownout: armed but never entered under load (raise load or lower --brownout-ms)"
+                    .into(),
+            );
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut level = snap.brownout_level;
+        while level != 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+            level = handle.snapshot().brownout_level;
+        }
+        if level != 0 {
+            return Err(format!(
+                "brownout: level still {level} after load drained — controller never exited"
+            ));
+        }
+        let calm = handle.snapshot();
+        println!(
+            "brownout: entered {}x, exited {}x, {} replies degraded within budget, \
+             level back to 0",
+            calm.brownout_enters_total, calm.brownout_exits_total, calm.degraded_total,
+        );
+    }
+
     // byte-identity check: a binary-frame session against a JSON control,
     // in BOTH directions (segment downlink, activation uplink)
+    let retries = if chaos_errors_ok { 40 } else { 0 };
     if binary {
         let mut json_conn = BlockingConn::connect(&addr)?;
         let mut bin_conn = BlockingConn::connect(&addr)?;
@@ -865,14 +981,8 @@ fn run_bench_serve(
             other => return Err(format!("binary negotiation failed: {other:?}")),
         }
         let req = paper_request(model, 0.02);
-        let a = match json_conn.call(&Request::Infer(req.clone()))? {
-            Response::Segment(r) => r,
-            other => return Err(format!("unexpected response {other:?}")),
-        };
-        let b = match bin_conn.call(&Request::Infer(req))? {
-            Response::Segment(r) => r,
-            other => return Err(format!("unexpected response {other:?}")),
-        };
+        let a = checked_infer(&mut json_conn, &Request::Infer(req.clone()), retries)?;
+        let b = checked_infer(&mut bin_conn, &Request::Infer(req), retries)?;
         if a.segment != b.segment || a.pattern != b.pattern {
             return Err("binary-frame segment differs from JSON control".into());
         }
@@ -934,14 +1044,8 @@ fn run_bench_serve(
         let req = paper_request(model, 0.02);
         let mut live = BlockingConn::connect(&addr)?;
         let mut base = BlockingConn::connect(&control_addr)?;
-        let a = match live.call(&Request::Infer(req.clone()))? {
-            Response::Segment(r) => r,
-            other => return Err(format!("unexpected response {other:?}")),
-        };
-        let b = match base.call(&Request::Infer(req.clone()))? {
-            Response::Segment(r) => r,
-            other => return Err(format!("unexpected response {other:?}")),
-        };
+        let a = checked_infer(&mut live, &Request::Infer(req.clone()), retries)?;
+        let b = checked_infer(&mut base, &Request::Infer(req.clone()), retries)?;
         if a.segment != b.segment || a.pattern != b.pattern {
             return Err("reactor reply differs from thread-per-connection baseline (JSON)".into());
         }
@@ -953,14 +1057,8 @@ fn run_bench_serve(
                     other => return Err(format!("baseline negotiation failed: {other:?}")),
                 }
             }
-            let a = match live.call(&Request::Infer(req.clone()))? {
-                Response::Segment(r) => r,
-                other => return Err(format!("unexpected response {other:?}")),
-            };
-            let b = match base.call(&Request::Infer(req))? {
-                Response::Segment(r) => r,
-                other => return Err(format!("unexpected response {other:?}")),
-            };
+            let a = checked_infer(&mut live, &Request::Infer(req.clone()), retries)?;
+            let b = checked_infer(&mut base, &Request::Infer(req), retries)?;
             if a.segment != b.segment || a.pattern != b.pattern {
                 return Err(
                     "reactor reply differs from thread-per-connection baseline (binary)".into(),
@@ -975,6 +1073,25 @@ fn run_bench_serve(
     }
 
     let final_snap = handle.snapshot();
+    // fault-injection soak gates: injected panics must show up as worker
+    // respawns (the supervisor noticed and replaced every dead thread),
+    // and the server must still be serving — which the byte-identity
+    // checks above already proved by round-tripping fresh requests
+    if panics_armed {
+        if final_snap.worker_restarts_total == 0 {
+            return Err(
+                "fault-inject: worker-panic armed but worker_restarts_total is 0 — \
+                 no panic fired or the supervisor never respawned"
+                    .into(),
+            );
+        }
+        println!(
+            "fault-inject: {} worker restarts after injected panics, {} sessions live, \
+             server still serving",
+            final_snap.worker_restarts_total,
+            handle.sessions.len(),
+        );
+    }
     // fleet-soak gate: accepted connections must scale past the worker
     // count (CI asserts clients ≫ workers landed concurrently)
     let min_peak = args.get_usize("min-peak-conns", 0)?;
@@ -1059,6 +1176,26 @@ fn run_bench_serve(
     }
     handle.shutdown();
     Ok(summary.expect("two passes always ran"))
+}
+
+/// One infer round trip for the post-run identity checks. With fault
+/// injection armed any single call may legitimately come back as an
+/// `internal` error (the worker panicked and was respawned underneath
+/// it), so allow retries — each eventual success doubles as proof the
+/// server still serves after recovering from injected panics.
+fn checked_infer(
+    conn: &mut BlockingConn,
+    req: &Request,
+    retries: usize,
+) -> Result<InferReply, String> {
+    for _ in 0..=retries {
+        match conn.call(req)? {
+            Response::Segment(r) => return Ok(r),
+            Response::Error(e) if e.code == "internal" && retries > 0 => continue,
+            other => return Err(format!("unexpected response {other:?}")),
+        }
+    }
+    Err("infer still failing after fault-injection retries".into())
 }
 
 /// One-shot HTTP/1.0 GET against the metrics listener; returns the body.
@@ -1293,6 +1430,9 @@ struct DeviceOutcome {
     throttled: u64,
     errors: u64,
     drops: u64,
+    /// Dial attempts made by the backoff reconnect loop (first try
+    /// included), across every redial this device performed.
+    reconnects: u64,
 }
 
 /// Per-class aggregate for the scenario report table.
@@ -1302,6 +1442,7 @@ struct ClassAgg {
     events: u64,
     shed: u64,
     throttled: u64,
+    reconnects: u64,
     lat_us: Vec<u64>,
     ok_per_device: Vec<u64>,
 }
@@ -1312,6 +1453,7 @@ impl ClassAgg {
         self.events += o.events;
         self.shed += o.shed;
         self.throttled += o.throttled;
+        self.reconnects += o.reconnects;
         self.lat_us.extend_from_slice(&o.lat_us);
         self.ok_per_device.push(o.lat_us.len() as u64);
     }
@@ -1326,6 +1468,7 @@ impl ClassAgg {
             lat.len().to_string(),
             self.shed.to_string(),
             self.throttled.to_string(),
+            self.reconnects.to_string(),
             format!("{:.2}", quantile_us(&lat, 0.50) / 1000.0),
             format!("{:.2}", quantile_us(&lat, 0.99) / 1000.0),
             format!("{:.3}", jain_index(&self.ok_per_device)),
@@ -1370,6 +1513,10 @@ fn run_bench_scenario(
     let chaos = parse_chaos(args.get_or("chaos", ""))?;
     let time_scale = args.get_f64("time-scale", 1.0)?;
     let chaos_rate = args.get_f64("chaos-rate", 0.25)?;
+    let brownout_us = (args.get_f64("brownout-ms", 0.0)?.max(0.0) * 1000.0) as u64;
+    let faults = fault_inject_flag(args)?;
+    let panics_armed = faults.map_or(false, |f| f.worker_panic > 0.0);
+    let chaos_errors_ok = faults.map_or(false, |f| f.worker_panic > 0.0 || f.alloc_fail > 0.0);
     let phase2 = bool_flag(args, "phase2", synthetic)?;
     let host_fallback = bool_flag(args, "host-fallback", synthetic)?;
     let binary = bool_flag(args, "binary-frames", true)?;
@@ -1435,10 +1582,18 @@ fn run_bench_scenario(
         conn_idle,
         fair_rate,
         host_fallback,
+        brownout_wait_us: brownout_us,
+        fault_inject: faults,
         artifacts_dir: artifacts_dir.to_string(),
         ..Default::default()
     })?;
     let addr = handle.addr.to_string();
+    if let Some(f) = &faults {
+        println!(
+            "fault-inject armed: worker-panic={} exec-delay-ms={} alloc-fail={}",
+            f.worker_panic, f.exec_delay_ms, f.alloc_fail
+        );
+    }
 
     // chaos side-fleets attack while the scenario replays
     let scaled_run = Duration::from_secs_f64((horizon_s * time_scale).max(0.0));
@@ -1471,24 +1626,26 @@ fn run_bench_scenario(
         let barrier = Arc::clone(&barrier);
         let class_weights = Arc::clone(&class_weights);
         joins.push(std::thread::spawn(move || -> Result<DeviceOutcome, String> {
+            let class_name = events[0].class.clone();
             let mut out = DeviceOutcome {
-                class: events[0].class.clone(),
+                class: class_name.clone(),
                 lat_us: Vec::new(),
                 events: 0,
                 shed: 0,
                 throttled: 0,
                 errors: 0,
                 drops: 0,
+                reconnects: 0,
             };
             let weight = class_weights.get(&out.class).copied().unwrap_or(1.0);
+            // every device declares its class in the hello so the server's
+            // per-class shed/throttle/degrade counters attribute correctly
             let negotiate = |conn: &mut BlockingConn| -> Result<bool, String> {
                 let wants_binary = binary && dev % 2 == 1;
-                if !wants_binary && weight == 1.0 {
-                    return Ok(false);
-                }
                 let hello = Request::Hello(HelloRequest {
                     binary_frames: wants_binary,
                     weight,
+                    class: class_name.clone(),
                     ..HelloRequest::default()
                 });
                 match conn.call(&hello)? {
@@ -1497,12 +1654,36 @@ fn run_bench_scenario(
                 }
             };
             // a device silent past --conn-idle-secs is legitimately reaped
-            // by the idle sweep; like a real device it just dials back in
-            let reconnect =
+            // by the idle sweep; like a real device it just dials back in —
+            // with capped exponential backoff (10ms·2ⁿ capped at 250ms,
+            // jittered) rather than hammering an overloaded accept queue
+            let mut reconnect_attempts = 0u64;
+            let mut backoff_rng =
+                qpart::core::rng::Rng::from_label(seed, &format!("backoff/{dev}"));
+            let mut reconnect =
                 |conn: &mut BlockingConn, bin: &mut bool| -> Result<(), String> {
-                    *conn = BlockingConn::connect(&addr)?;
-                    *bin = negotiate(conn)?;
-                    Ok(())
+                    let mut last = String::new();
+                    for attempt in 0u32..8 {
+                        reconnect_attempts += 1;
+                        let dial = BlockingConn::connect(&addr).and_then(|mut c| {
+                            let b = negotiate(&mut c)?;
+                            Ok((c, b))
+                        });
+                        match dial {
+                            Ok((c, b)) => {
+                                *conn = c;
+                                *bin = b;
+                                return Ok(());
+                            }
+                            Err(e) => last = e,
+                        }
+                        let cap_ms = 250u64.min(10u64 << attempt.min(6));
+                        let jitter = backoff_rng.range_f64(0.5, 1.0);
+                        std::thread::sleep(Duration::from_micros(
+                            (cap_ms as f64 * 1000.0 * jitter) as u64,
+                        ));
+                    }
+                    Err(format!("device {dev}: reconnect gave up after 8 attempts: {last}"))
                 };
             let mut conn = BlockingConn::connect(&addr)?;
             let mut bin_session = negotiate(&mut conn)?;
@@ -1631,6 +1812,7 @@ fn run_bench_scenario(
                     out.lat_us.push(t.elapsed().as_micros() as u64);
                 }
             }
+            out.reconnects = reconnect_attempts;
             Ok(out)
         }));
     }
@@ -1653,7 +1835,7 @@ fn run_bench_scenario(
     }
     let mut table = qpart_bench::Table::new(
         format!("bench-serve scenario {name} (model {model})"),
-        &["class", "devices", "events", "ok", "shed", "throttled", "p50 ms", "p99 ms", "jain"],
+        &["class", "devices", "events", "ok", "shed", "throttled", "reconn", "p50 ms", "p99 ms", "jain"],
     );
     for (name, agg) in &by_class {
         table.row(agg.table_row(name));
@@ -1687,9 +1869,51 @@ fn run_bench_scenario(
         println!("chaos: {bad_frame_replies} bad_frame replies to garbage frames");
     }
 
-    // survival invariants — any failure fails the whole bench
-    if errors > 0 {
+    // survival invariants — any failure fails the whole bench. With fault
+    // injection armed, `internal` error replies are the expected recovery
+    // signature of injected panics/alloc failures, not protocol errors.
+    if errors > 0 && !chaos_errors_ok {
         return Err(format!("{errors} requests failed with protocol errors"));
+    }
+    if panics_armed {
+        if final_snap.worker_restarts_total == 0 {
+            return Err(
+                "fault-inject: worker-panic armed but worker_restarts_total is 0 — \
+                 no panic fired or the supervisor never respawned"
+                    .into(),
+            );
+        }
+        println!(
+            "fault-inject: {} worker restarts after injected panics ({errors} requests \
+             answered with error replies), fleet kept serving",
+            final_snap.worker_restarts_total,
+        );
+    }
+    if brownout_us > 0 {
+        if final_snap.brownout_enters_total == 0 {
+            return Err(
+                "brownout: armed but never entered under load (raise load or lower --brownout-ms)"
+                    .into(),
+            );
+        }
+        // the controller must also step back down once the storm is over
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut level = final_snap.brownout_level;
+        while level != 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+            level = handle.snapshot().brownout_level;
+        }
+        if level != 0 {
+            return Err(format!(
+                "brownout: level still {level} after the scenario drained — never exited"
+            ));
+        }
+        let calm = handle.snapshot();
+        println!(
+            "brownout: entered {}x, exited {}x, {} replies degraded within budget, \
+             level back to 0",
+            calm.brownout_enters_total, calm.brownout_exits_total, calm.degraded_total,
+        );
     }
     if reaped_loris < n_loris || reaped_half < n_half {
         return Err(format!(
@@ -1741,8 +1965,11 @@ fn run_bench_scenario(
             final_snap.conns_open_peak, min_peak
         ));
     }
+    let errors_note =
+        if chaos_errors_ok { " (expected under fault injection)" } else { "" };
     println!(
-        "scenario '{name}' survived: {} ok / {} events, 0 errors, conns open 0",
+        "scenario '{name}' survived: {} ok / {} events, {errors} errors{errors_note}, \
+         conns open 0",
         fleet.lat_us.len(),
         fleet.events,
     );

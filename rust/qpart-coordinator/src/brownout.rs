@@ -1,0 +1,329 @@
+//! Overload brownout: a server-wide degradation ladder driven by queue
+//! pressure, plus the accuracy-budget check that makes stepping down the
+//! ladder *safe*.
+//!
+//! QPART's premise is that every request carries an accuracy requirement,
+//! so the right response to overload is not a binary shed but a planned
+//! degradation: serve a coarser quantization level whose Algorithm-1
+//! predicted degradation still fits the request's budget. The controller
+//! here only decides *how hard* the server is being pushed (the brownout
+//! level); [`degrade_level`] decides, per request, whether a coarser table
+//! row actually honours that request's budget — and when it does not, the
+//! request is simply planned at its nominal level (degradation never
+//! trades away the accuracy guarantee).
+//!
+//! Mechanics: workers feed per-job queue-wait samples into an EWMA
+//! ([`BrownoutController::observe_wait_us`]); the housekeeping thread
+//! calls [`BrownoutController::tick`] a few times per second with the
+//! current connection pressure. Hysteresis is asymmetric — a handful of
+//! consecutive hot ticks steps the ladder up, but it takes a sustained
+//! calm stretch to step back down — so the level cannot flap on bursty
+//! arrivals. Transitions are published through the front-end
+//! [`Metrics`]: the `brownout_level` gauge plus `brownout_enters_total` /
+//! `brownout_exits_total` counters (the acceptance check "brownout enters
+//! *and exits*" reads exactly these).
+
+use crate::metrics::Metrics;
+use qpart_core::quant::PatternSet;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// EWMA smoothing factor for queue-wait samples.
+const ALPHA: f64 = 0.05;
+/// Per-tick decay applied to the wait EWMA so a silent (empty) queue
+/// cools down even when no samples arrive.
+const TICK_DECAY: f64 = 0.98;
+/// Consecutive hot ticks before stepping the ladder up.
+const HOT_TICKS_TO_STEP: u32 = 3;
+/// Consecutive calm ticks before stepping the ladder down.
+const CALM_TICKS_TO_STEP: u32 = 20;
+/// Deepest ladder level (0 = nominal service).
+pub const MAX_LEVEL: u32 = 3;
+
+/// Server-wide brownout state machine. Cheap to share: one `Arc` across
+/// the front-end, every worker, and the housekeeping thread; all state is
+/// atomic and `observe_wait_us` is wait-free in the common case.
+#[derive(Debug)]
+pub struct BrownoutController {
+    /// Queue-wait EWMA threshold (µs) above which a tick counts as hot.
+    enter_wait_us: f64,
+    /// Current ladder level, `0..=MAX_LEVEL`.
+    level: AtomicU32,
+    /// Queue-wait EWMA, stored as `f64::to_bits`.
+    ewma_bits: AtomicU64,
+    hot_ticks: AtomicU32,
+    calm_ticks: AtomicU32,
+    /// Front-end metrics carrying the gauge + transition counters.
+    metrics: Arc<Metrics>,
+}
+
+impl BrownoutController {
+    /// A controller that flags hot ticks once the queue-wait EWMA passes
+    /// `enter_wait_us` (or connection pressure nears `max_conns`).
+    /// Returns `None` when `enter_wait_us == 0` — the documented way to
+    /// disable brownout entirely (callers then never degrade).
+    pub fn new(enter_wait_us: u64, metrics: Arc<Metrics>) -> Option<Arc<BrownoutController>> {
+        if enter_wait_us == 0 {
+            return None;
+        }
+        Some(Arc::new(BrownoutController {
+            enter_wait_us: enter_wait_us as f64,
+            level: AtomicU32::new(0),
+            ewma_bits: AtomicU64::new(0f64.to_bits()),
+            hot_ticks: AtomicU32::new(0),
+            calm_ticks: AtomicU32::new(0),
+            metrics,
+        }))
+    }
+
+    /// Current ladder level (0 = nominal).
+    pub fn level(&self) -> u32 {
+        self.level.load(Ordering::Relaxed)
+    }
+
+    /// Current queue-wait EWMA in microseconds.
+    pub fn wait_ewma_us(&self) -> f64 {
+        f64::from_bits(self.ewma_bits.load(Ordering::Relaxed))
+    }
+
+    /// Fold one queue-wait sample (µs) into the EWMA. Called by workers
+    /// for every drained job, so it must not take locks.
+    pub fn observe_wait_us(&self, us: u64) {
+        let mut cur = self.ewma_bits.load(Ordering::Relaxed);
+        loop {
+            let prev = f64::from_bits(cur);
+            let next = prev + ALPHA * (us as f64 - prev);
+            match self.ewma_bits.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// One housekeeping evaluation. `conns_open`/`max_conns` add a second
+    /// pressure signal: ≥ 90% of the accept gate counts as hot even when
+    /// queue waits look fine (the outbox/accept path is saturating).
+    /// Steps the ladder at most one level per call.
+    pub fn tick(&self, conns_open: u64, max_conns: u64) {
+        // Cool the EWMA so pressure decays even with an empty queue.
+        let mut cur = self.ewma_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) * TICK_DECAY).to_bits();
+            match self.ewma_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        let wait = self.wait_ewma_us();
+        let conn_pressure = max_conns > 0 && conns_open.saturating_mul(10) >= max_conns * 9;
+        let hot = wait > self.enter_wait_us || conn_pressure;
+        // Exit threshold sits at half the entry threshold (hysteresis).
+        let calm = wait < self.enter_wait_us * 0.5 && !conn_pressure;
+        if hot {
+            self.calm_ticks.store(0, Ordering::Relaxed);
+            let streak = self.hot_ticks.fetch_add(1, Ordering::Relaxed) + 1;
+            if streak >= HOT_TICKS_TO_STEP {
+                self.hot_ticks.store(0, Ordering::Relaxed);
+                let lvl = self.level.load(Ordering::Relaxed);
+                if lvl < MAX_LEVEL {
+                    self.level.store(lvl + 1, Ordering::Relaxed);
+                    self.metrics.brownout_level.store((lvl + 1) as u64, Ordering::Relaxed);
+                    Metrics::inc(&self.metrics.brownout_enters_total);
+                }
+            }
+        } else if calm {
+            self.hot_ticks.store(0, Ordering::Relaxed);
+            let streak = self.calm_ticks.fetch_add(1, Ordering::Relaxed) + 1;
+            if streak >= CALM_TICKS_TO_STEP {
+                self.calm_ticks.store(0, Ordering::Relaxed);
+                let lvl = self.level.load(Ordering::Relaxed);
+                if lvl > 0 {
+                    self.level.store(lvl - 1, Ordering::Relaxed);
+                    self.metrics.brownout_level.store((lvl - 1) as u64, Ordering::Relaxed);
+                    Metrics::inc(&self.metrics.brownout_exits_total);
+                }
+            }
+        } else {
+            // In the hysteresis band: neither streak advances.
+            self.hot_ticks.store(0, Ordering::Relaxed);
+            self.calm_ticks.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The accuracy-budget gate of the degradation ladder.
+///
+/// Given the request's nominal level index (`PatternSet::select_level` of
+/// its budget) and the brownout depth (`rungs` = levels to try past
+/// nominal), returns the coarsest level index whose *every* pattern's
+/// Algorithm-1 `predicted_degradation` still fits `budget` — "every"
+/// because Algorithm 2 is then free to pick any partition at that level
+/// without re-checking accuracy. When no coarser level fits (the usual
+/// case when the offline solve saturates its target), returns `nominal`
+/// unchanged: brownout never degrades past the budget.
+pub fn degrade_level(set: &PatternSet, nominal: usize, budget: f64, rungs: u32) -> usize {
+    if rungs == 0 || nominal + 1 >= set.levels.len() {
+        return nominal;
+    }
+    let top = (nominal + rungs as usize).min(set.levels.len() - 1);
+    for j in (nominal + 1..=top).rev() {
+        let fits = set.patterns[j]
+            .iter()
+            .all(|p| p.predicted_degradation <= budget + 1e-12);
+        if fits && !set.patterns[j].is_empty() {
+            return j;
+        }
+    }
+    nominal
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use qpart_core::quant::QuantPattern;
+
+    fn pat(level: f64, predicted: f64) -> QuantPattern {
+        QuantPattern {
+            partition: 1,
+            weight_bits: vec![8],
+            activation_bits: 8,
+            accuracy_level: level,
+            predicted_degradation: predicted,
+        }
+    }
+
+    fn table(rows: &[(f64, &[f64])]) -> PatternSet {
+        PatternSet {
+            model: "tinymlp".into(),
+            levels: rows.iter().map(|(l, _)| *l).collect(),
+            patterns: rows
+                .iter()
+                .map(|(l, preds)| preds.iter().map(|&p| pat(*l, p)).collect())
+                .collect(),
+            segment_bits: Vec::new(),
+            payload_bits: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn degrade_picks_coarsest_level_within_budget() {
+        // Levels 0.01 / 0.02 / 0.05, but the solves landed well under
+        // target: the 0.05 row only predicts 0.018 degradation.
+        let set = table(&[
+            (0.01, &[0.004, 0.006][..]),
+            (0.02, &[0.009, 0.011][..]),
+            (0.05, &[0.015, 0.018][..]),
+        ]);
+        // Budget 0.02, nominal level 1: level 2's worst prediction
+        // (0.018) fits, so brownout can jump straight to it.
+        assert_eq!(degrade_level(&set, 1, 0.02, 2), 2);
+        // One rung only: still allowed to take level 2.
+        assert_eq!(degrade_level(&set, 1, 0.02, 1), 2);
+        // Zero rungs (no brownout): nominal.
+        assert_eq!(degrade_level(&set, 1, 0.02, 0), 1);
+    }
+
+    #[test]
+    fn degrade_never_exceeds_budget() {
+        // The coarser row saturates its target: 0.05 predicted, which a
+        // 0.02 budget cannot absorb — stay at nominal.
+        let set = table(&[
+            (0.01, &[0.009][..]),
+            (0.02, &[0.019][..]),
+            (0.05, &[0.049][..]),
+        ]);
+        assert_eq!(degrade_level(&set, 1, 0.02, MAX_LEVEL), 1);
+        // And a partially-infeasible row (one pattern over budget) is
+        // rejected as a whole, since Algorithm 2 may pick any partition.
+        let mixed = table(&[
+            (0.01, &[0.009][..]),
+            (0.02, &[0.012, 0.03][..]),
+        ]);
+        assert_eq!(degrade_level(&mixed, 0, 0.01, MAX_LEVEL), 0);
+        // Nominal at the last level: nowhere coarser to go.
+        assert_eq!(degrade_level(&set, 2, 0.05, MAX_LEVEL), 2);
+    }
+
+    #[test]
+    fn degrade_skips_unfit_rungs_to_find_a_fit() {
+        // Middle rung overshoots, deepest rung fits: the ladder takes
+        // the deepest fitting one, not the first.
+        let set = table(&[
+            (0.005, &[0.004][..]),
+            (0.01, &[0.03][..]), // bad solve, over any small budget
+            (0.02, &[0.0045][..]),
+        ]);
+        assert_eq!(degrade_level(&set, 0, 0.005, 2), 2);
+        // With only one rung of depth the bad row blocks degradation.
+        assert_eq!(degrade_level(&set, 0, 0.005, 1), 0);
+    }
+
+    #[test]
+    fn controller_steps_up_under_load_and_back_down_when_calm() {
+        let metrics = Arc::new(Metrics::default());
+        let ctrl = BrownoutController::new(10_000, Arc::clone(&metrics))
+            .expect("non-zero threshold enables brownout");
+        assert_eq!(ctrl.level(), 0);
+        // Hot: queue waits way above the 10ms threshold.
+        for _ in 0..HOT_TICKS_TO_STEP {
+            for _ in 0..64 {
+                ctrl.observe_wait_us(200_000);
+            }
+            ctrl.tick(0, 64);
+        }
+        assert_eq!(ctrl.level(), 1, "steps after {HOT_TICKS_TO_STEP} hot ticks");
+        // Sustained heat walks the ladder to its cap and no further.
+        for _ in 0..(HOT_TICKS_TO_STEP * (MAX_LEVEL + 2)) {
+            for _ in 0..64 {
+                ctrl.observe_wait_us(200_000);
+            }
+            ctrl.tick(0, 64);
+        }
+        assert_eq!(ctrl.level(), MAX_LEVEL);
+        assert_eq!(
+            metrics.brownout_level.load(Ordering::Relaxed),
+            MAX_LEVEL as u64
+        );
+        // Calm: no new samples, the tick decay drains the EWMA and the
+        // calm streak steps the ladder all the way back to 0.
+        for _ in 0..2_000 {
+            ctrl.tick(0, 64);
+        }
+        assert_eq!(ctrl.level(), 0, "gauge returns to nominal after load drops");
+        assert_eq!(metrics.brownout_level.load(Ordering::Relaxed), 0);
+        let enters = metrics.brownout_enters_total.load(Ordering::Relaxed);
+        let exits = metrics.brownout_exits_total.load(Ordering::Relaxed);
+        assert_eq!(enters, MAX_LEVEL as u64);
+        assert_eq!(exits, enters, "every enter eventually exits");
+    }
+
+    #[test]
+    fn connection_pressure_alone_is_hot() {
+        let metrics = Arc::new(Metrics::default());
+        let ctrl = BrownoutController::new(10_000, Arc::clone(&metrics)).unwrap();
+        for _ in 0..HOT_TICKS_TO_STEP {
+            ctrl.tick(60, 64); // ≥ 90% of the accept gate
+        }
+        assert_eq!(ctrl.level(), 1);
+        // Dropping below the pressure band (and a cold EWMA) is calm.
+        for _ in 0..CALM_TICKS_TO_STEP {
+            ctrl.tick(1, 64);
+        }
+        assert_eq!(ctrl.level(), 0);
+    }
+
+    #[test]
+    fn zero_threshold_disables_brownout() {
+        assert!(BrownoutController::new(0, Arc::new(Metrics::default())).is_none());
+    }
+}

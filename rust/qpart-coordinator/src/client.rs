@@ -184,6 +184,7 @@ pub fn paper_request(model: &str, accuracy_budget: f64) -> InferRequest {
         kappa: 3e-27,
         memory_bits: 256 * 1024 * 1024 * 8,
         weights: None,
+        deadline_ms: None,
     }
 }
 

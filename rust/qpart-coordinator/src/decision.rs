@@ -37,7 +37,20 @@ use qpart_core::optimizer::Decision;
 use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Take the shared lock, recovering from poison: a worker that panicked
+/// while holding the lock (supervised + respawned since PR 9) leaves the
+/// map structurally intact — every mutation below is a single-step
+/// HashMap/VecDeque operation — so serving from it is safe.
+fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Write-lock counterpart of [`read_recover`].
+fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Log-scale bucket of one nonnegative continuous profile field: ≈0.54%
 /// relative resolution (2^(1/128) per step). Exact zero, negatives, and
@@ -158,7 +171,7 @@ impl DecisionCache {
     /// the shared (read) lock: concurrent workers never contend unless
     /// one is inserting.
     pub fn get(&self, key: &DecisionKey) -> Option<Arc<Decision>> {
-        let inner = self.inner.read().unwrap();
+        let inner = read_recover(&self.inner);
         match inner.map.get(key) {
             Some(d) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -174,7 +187,7 @@ impl DecisionCache {
     /// Publish a freshly planned decision (idempotent across racing
     /// workers — last write wins, the decisions are equal).
     pub fn insert(&self, key: DecisionKey, decision: Arc<Decision>) {
-        let mut inner = self.inner.write().unwrap();
+        let mut inner = write_recover(&self.inner);
         if inner.map.insert(key.clone(), decision).is_none() {
             inner.order.push_back(key);
         }
@@ -203,7 +216,7 @@ impl DecisionCache {
 
     /// Resident entries.
     pub fn len(&self) -> usize {
-        self.inner.read().unwrap().map.len()
+        read_recover(&self.inner).map.len()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -40,6 +40,11 @@
 //!   the classic thread-per-connection loop kept as a byte-identical
 //!   baseline. The `workers` knob mirrors the simulator's
 //!   `FleetConfig::server_slots`.
+//! * [`brownout`] — **overload brownout**: a queue-wait-EWMA-driven
+//!   degradation ladder with hysteresis, and the accuracy-budget gate
+//!   ([`brownout::degrade_level`]) that only ever coarsens a request's
+//!   quantization level when the offline table's predicted degradation
+//!   still fits its budget.
 //! * [`client`] — the device side for examples/CLI: sends requests,
 //!   optionally negotiates binary frames, executes the received quantized
 //!   segment locally through its own PJRT engine, uploads the quantized
@@ -64,6 +69,7 @@
 //!
 //! Python never appears anywhere on these paths.
 
+pub mod brownout;
 pub mod client;
 pub mod decision;
 pub mod metrics;
@@ -76,11 +82,12 @@ pub mod service;
 pub mod session;
 pub mod testing;
 
+pub use brownout::{degrade_level, BrownoutController};
 pub use client::DeviceClient;
 pub use decision::{DecisionCache, DecisionKey, ProfileBucket};
 pub use metrics::{Metrics, MetricsHub, MetricsSnapshot};
 pub use obs::{JobTrace, Stage, TraceSink, TraceStamp, Tracer, TrafficRecorder};
 pub use sched::{BatchPolicy, EncodedReplyCache, Job, ReplyRouter, ReplySink, WireReply};
 pub use server::{serve, Frontend, ServerConfig, ServerHandle};
-pub use service::{Service, ServiceOptions};
+pub use service::{FaultSpec, Service, ServiceOptions};
 pub use session::{Session, SessionTable, SharedSessionTable};

@@ -33,6 +33,7 @@ use crate::obs::TraceSink;
 use crate::sched::EncodedReplyCache;
 use qpart_core::json::Value;
 use qpart_runtime::CompileCache;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -179,6 +180,24 @@ pub struct Metrics {
     /// Requests refused by the per-connection fair-queue token bucket
     /// (`--fair-rate`); the client sees a `throttled` error reply.
     pub sched_throttled_total: AtomicU64,
+    /// Requests whose `deadline_ms` elapsed while queued — shed at drain
+    /// time with a `deadline_exceeded` error reply instead of planned.
+    pub deadline_shed_total: AtomicU64,
+    /// Requests served at a coarser-than-nominal accuracy level under
+    /// brownout (always still within the request's accuracy budget).
+    pub degraded_total: AtomicU64,
+    /// Current brownout degradation-ladder level (gauge; 0 = no brownout).
+    pub brownout_level: AtomicU64,
+    /// Brownout entries (level left 0) over the server's lifetime.
+    pub brownout_enters_total: AtomicU64,
+    /// Brownout exits (level returned to 0) over the server's lifetime.
+    pub brownout_exits_total: AtomicU64,
+    /// Workers respawned by the supervisor after a death it could not
+    /// attribute to shutdown (e.g. a panic that escaped the job guard).
+    pub worker_restarts_total: AtomicU64,
+    /// Batch executions that overran the `--job-timeout-ms` soft
+    /// watchdog (flagged once per stuck episode, not per tick).
+    pub job_timeouts_total: AtomicU64,
     /// Live protocol connections (front-end gauge; the reactor makes
     /// this independent of any thread count).
     pub conns_open: AtomicU64,
@@ -247,6 +266,13 @@ pub struct MetricsSnapshot {
     pub errors_total: u64,
     pub shed_total: u64,
     pub sched_throttled_total: u64,
+    pub deadline_shed_total: u64,
+    pub degraded_total: u64,
+    pub brownout_level: u64,
+    pub brownout_enters_total: u64,
+    pub brownout_exits_total: u64,
+    pub worker_restarts_total: u64,
+    pub job_timeouts_total: u64,
     pub conns_open: u64,
     pub conns_open_peak: u64,
     pub conns_accepted_total: u64,
@@ -336,6 +362,13 @@ impl Metrics {
             errors_total: self.errors_total.load(Ordering::Relaxed),
             shed_total: self.shed_total.load(Ordering::Relaxed),
             sched_throttled_total: self.sched_throttled_total.load(Ordering::Relaxed),
+            deadline_shed_total: self.deadline_shed_total.load(Ordering::Relaxed),
+            degraded_total: self.degraded_total.load(Ordering::Relaxed),
+            brownout_level: self.brownout_level.load(Ordering::Relaxed),
+            brownout_enters_total: self.brownout_enters_total.load(Ordering::Relaxed),
+            brownout_exits_total: self.brownout_exits_total.load(Ordering::Relaxed),
+            worker_restarts_total: self.worker_restarts_total.load(Ordering::Relaxed),
+            job_timeouts_total: self.job_timeouts_total.load(Ordering::Relaxed),
             conns_open: self.conns_open.load(Ordering::Relaxed),
             conns_open_peak: self.conns_open_peak.load(Ordering::Relaxed),
             conns_accepted_total: self.conns_accepted_total.load(Ordering::Relaxed),
@@ -380,6 +413,28 @@ impl Metrics {
             (
                 "sched_throttled_total",
                 self.sched_throttled_total.load(Ordering::Relaxed).into(),
+            ),
+            (
+                "deadline_shed_total",
+                self.deadline_shed_total.load(Ordering::Relaxed).into(),
+            ),
+            ("degraded_total", self.degraded_total.load(Ordering::Relaxed).into()),
+            ("brownout_level", self.brownout_level.load(Ordering::Relaxed).into()),
+            (
+                "brownout_enters_total",
+                self.brownout_enters_total.load(Ordering::Relaxed).into(),
+            ),
+            (
+                "brownout_exits_total",
+                self.brownout_exits_total.load(Ordering::Relaxed).into(),
+            ),
+            (
+                "worker_restarts_total",
+                self.worker_restarts_total.load(Ordering::Relaxed).into(),
+            ),
+            (
+                "job_timeouts_total",
+                self.job_timeouts_total.load(Ordering::Relaxed).into(),
             ),
             ("conns_open", self.conns_open.load(Ordering::Relaxed).into()),
             ("conns_open_peak", self.conns_open_peak.load(Ordering::Relaxed).into()),
@@ -436,6 +491,13 @@ struct CounterTotals {
     errors_total: u64,
     shed_total: u64,
     sched_throttled_total: u64,
+    deadline_shed_total: u64,
+    degraded_total: u64,
+    brownout_level: u64,
+    brownout_enters_total: u64,
+    brownout_exits_total: u64,
+    worker_restarts_total: u64,
+    job_timeouts_total: u64,
     conns_open: u64,
     conns_open_peak: u64,
     conns_accepted_total: u64,
@@ -464,6 +526,13 @@ impl CounterTotals {
             errors_total: m.errors_total.load(Ordering::Relaxed),
             shed_total: m.shed_total.load(Ordering::Relaxed),
             sched_throttled_total: m.sched_throttled_total.load(Ordering::Relaxed),
+            deadline_shed_total: m.deadline_shed_total.load(Ordering::Relaxed),
+            degraded_total: m.degraded_total.load(Ordering::Relaxed),
+            brownout_level: m.brownout_level.load(Ordering::Relaxed),
+            brownout_enters_total: m.brownout_enters_total.load(Ordering::Relaxed),
+            brownout_exits_total: m.brownout_exits_total.load(Ordering::Relaxed),
+            worker_restarts_total: m.worker_restarts_total.load(Ordering::Relaxed),
+            job_timeouts_total: m.job_timeouts_total.load(Ordering::Relaxed),
             conns_open: m.conns_open.load(Ordering::Relaxed),
             conns_open_peak: m.conns_open_peak.load(Ordering::Relaxed),
             conns_accepted_total: m.conns_accepted_total.load(Ordering::Relaxed),
@@ -491,6 +560,16 @@ impl CounterTotals {
         self.errors_total += other.errors_total;
         self.shed_total += other.shed_total;
         self.sched_throttled_total += other.sched_throttled_total;
+        self.deadline_shed_total += other.deadline_shed_total;
+        self.degraded_total += other.degraded_total;
+        // brownout/supervision counters live on the front-end's Metrics
+        // only (the controller and supervisor are server-wide), so
+        // summing is the identity for workers
+        self.brownout_level += other.brownout_level;
+        self.brownout_enters_total += other.brownout_enters_total;
+        self.brownout_exits_total += other.brownout_exits_total;
+        self.worker_restarts_total += other.worker_restarts_total;
+        self.job_timeouts_total += other.job_timeouts_total;
         // connection counters live on the front-end's Metrics only, so
         // summing is the identity for workers
         self.conns_open += other.conns_open;
@@ -515,6 +594,72 @@ impl CounterTotals {
     }
 }
 
+/// Per-device-class overload counters. Connections resolve their
+/// hello-declared class label to one of these once (via
+/// [`ClassRegistry::class`]) and jobs carry the `Arc` along, so the hot
+/// path bumps counters without any map lookups.
+#[derive(Debug, Default)]
+pub struct ClassCounts {
+    /// Fair-queue throttles attributed to this class.
+    pub sched_throttled_total: AtomicU64,
+    /// Deadline sheds attributed to this class.
+    pub deadline_shed_total: AtomicU64,
+    /// Brownout degradations attributed to this class.
+    pub degraded_total: AtomicU64,
+}
+
+impl ClassCounts {
+    fn to_json(&self) -> Value {
+        Value::obj([
+            (
+                "sched_throttled_total",
+                self.sched_throttled_total.load(Ordering::Relaxed).into(),
+            ),
+            (
+                "deadline_shed_total",
+                self.deadline_shed_total.load(Ordering::Relaxed).into(),
+            ),
+            ("degraded_total", self.degraded_total.load(Ordering::Relaxed).into()),
+        ])
+    }
+}
+
+/// Registry of per-class counters, keyed by the hello `class` label.
+/// Unlabeled connections are not registered — their events only appear in
+/// the aggregate counters.
+#[derive(Debug, Default)]
+pub struct ClassRegistry {
+    map: Mutex<HashMap<String, Arc<ClassCounts>>>,
+}
+
+impl ClassRegistry {
+    /// The counters for `class`, created on first sight.
+    pub fn class(&self, class: &str) -> Arc<ClassCounts> {
+        let mut map = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        Arc::clone(map.entry(class.to_string()).or_default())
+    }
+
+    /// All registered classes with their counters, sorted by name (for
+    /// deterministic stats documents and scrapes).
+    pub fn entries(&self) -> Vec<(String, Arc<ClassCounts>)> {
+        let map = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        let mut v: Vec<_> = map.iter().map(|(k, c)| (k.clone(), Arc::clone(c))).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+}
+
+/// A class label safe to embed in a Prometheus label value: Prometheus
+/// label escaping is not implemented here, so anything outside
+/// `[A-Za-z0-9_.-]` is replaced with `_` (and the scrape's two-token line
+/// format survives hostile hello strings).
+fn safe_label(class: &str) -> String {
+    class
+        .chars()
+        .map(|ch| if ch.is_ascii_alphanumeric() || "_.-".contains(ch) { ch } else { '_' })
+        .collect()
+}
+
 /// Result of one aggregation walk over the hub (see [`MetricsHub::snapshot`]
 /// and [`MetricsHub::to_json`]).
 struct Aggregate {
@@ -535,6 +680,7 @@ struct Aggregate {
 pub struct MetricsHub {
     front: Arc<Metrics>,
     workers: Mutex<Vec<Arc<Metrics>>>,
+    classes: Arc<ClassRegistry>,
     segment_cache: Mutex<Option<Arc<EncodedReplyCache>>>,
     compile_cache: Mutex<Option<Arc<CompileCache>>>,
     decision_cache: Mutex<Option<Arc<DecisionCache>>>,
@@ -549,6 +695,11 @@ impl MetricsHub {
     /// The connection front-end's metrics (shed / bad-frame counters).
     pub fn front(&self) -> Arc<Metrics> {
         Arc::clone(&self.front)
+    }
+
+    /// The per-device-class counter registry (hello `class` labels).
+    pub fn classes(&self) -> Arc<ClassRegistry> {
+        Arc::clone(&self.classes)
     }
 
     /// Allocate and register a fresh per-worker [`Metrics`].
@@ -675,6 +826,13 @@ impl MetricsHub {
             errors_total: agg.totals.errors_total,
             shed_total: agg.totals.shed_total,
             sched_throttled_total: agg.totals.sched_throttled_total,
+            deadline_shed_total: agg.totals.deadline_shed_total,
+            degraded_total: agg.totals.degraded_total,
+            brownout_level: agg.totals.brownout_level,
+            brownout_enters_total: agg.totals.brownout_enters_total,
+            brownout_exits_total: agg.totals.brownout_exits_total,
+            worker_restarts_total: agg.totals.worker_restarts_total,
+            job_timeouts_total: agg.totals.job_timeouts_total,
             conns_open: agg.totals.conns_open,
             conns_open_peak: agg.totals.conns_open_peak,
             conns_accepted_total: agg.totals.conns_accepted_total,
@@ -719,6 +877,13 @@ impl MetricsHub {
             ("errors_total", agg.totals.errors_total.into()),
             ("shed_total", agg.totals.shed_total.into()),
             ("sched_throttled_total", agg.totals.sched_throttled_total.into()),
+            ("deadline_shed_total", agg.totals.deadline_shed_total.into()),
+            ("degraded_total", agg.totals.degraded_total.into()),
+            ("brownout_level", agg.totals.brownout_level.into()),
+            ("brownout_enters_total", agg.totals.brownout_enters_total.into()),
+            ("brownout_exits_total", agg.totals.brownout_exits_total.into()),
+            ("worker_restarts_total", agg.totals.worker_restarts_total.into()),
+            ("job_timeouts_total", agg.totals.job_timeouts_total.into()),
             ("conns_open", agg.totals.conns_open.into()),
             ("conns_open_peak", agg.totals.conns_open_peak.into()),
             ("conns_accepted_total", agg.totals.conns_accepted_total.into()),
@@ -753,6 +918,13 @@ impl MetricsHub {
             ("queue_wait", agg.queue_wait.to_json()),
             ("workers", Value::Arr(agg.per_worker)),
         ]);
+        let classes = self.classes.entries();
+        if !classes.is_empty() {
+            v.set(
+                "per_class",
+                Value::Obj(classes.into_iter().map(|(name, c)| (name, c.to_json())).collect()),
+            );
+        }
         if let Some(cache) = self.segment_cache() {
             v.set("segment_cache", cache.to_json());
         }
@@ -819,6 +991,85 @@ impl MetricsHub {
             "Requests refused by the per-connection fair-queue rate limit",
             t.sched_throttled_total as f64,
         );
+        put(
+            &mut out,
+            "deadline_shed_total",
+            c,
+            "Requests dropped at drain time because their deadline had already passed",
+            t.deadline_shed_total as f64,
+        );
+        put(
+            &mut out,
+            "degraded_total",
+            c,
+            "Requests served at a brownout-coarsened quantization level (within budget)",
+            t.degraded_total as f64,
+        );
+        put(
+            &mut out,
+            "brownout_level",
+            g,
+            "Current brownout degradation-ladder level (0 = nominal)",
+            t.brownout_level as f64,
+        );
+        put(
+            &mut out,
+            "brownout_enters_total",
+            c,
+            "Brownout ladder step-ups",
+            t.brownout_enters_total as f64,
+        );
+        put(
+            &mut out,
+            "brownout_exits_total",
+            c,
+            "Brownout ladder step-downs",
+            t.brownout_exits_total as f64,
+        );
+        put(
+            &mut out,
+            "worker_restarts_total",
+            c,
+            "Worker threads respawned by the supervisor after a panic",
+            t.worker_restarts_total as f64,
+        );
+        put(
+            &mut out,
+            "job_timeouts_total",
+            c,
+            "Stuck-job episodes flagged by the soft watchdog",
+            t.job_timeouts_total as f64,
+        );
+        {
+            use std::fmt::Write as _;
+            let classes = self.classes.entries();
+            if !classes.is_empty() {
+                for (metric, help, pick) in [
+                    (
+                        "class_sched_throttled_total",
+                        "Fair-queue throttles by device class",
+                        0usize,
+                    ),
+                    ("class_deadline_shed_total", "Deadline sheds by device class", 1),
+                    ("class_degraded_total", "Brownout degradations by device class", 2),
+                ] {
+                    let _ = writeln!(out, "# HELP qpart_{metric} {help}");
+                    let _ = writeln!(out, "# TYPE qpart_{metric} counter");
+                    for (name, counts) in &classes {
+                        let v = match pick {
+                            0 => counts.sched_throttled_total.load(Ordering::Relaxed),
+                            1 => counts.deadline_shed_total.load(Ordering::Relaxed),
+                            _ => counts.degraded_total.load(Ordering::Relaxed),
+                        };
+                        let _ = writeln!(
+                            out,
+                            "qpart_{metric}{{class=\"{}\"}} {v}",
+                            safe_label(name)
+                        );
+                    }
+                }
+            }
+        }
         put(&mut out, "conns_open", g, "Live protocol connections", t.conns_open as f64);
         put(
             &mut out,
@@ -1385,6 +1636,73 @@ mod tests {
         assert!(v.get("handle").is_some());
         assert!(v.get("queue_wait").is_some());
         assert!(v.get("segment_cache").is_none(), "absent until registered");
+    }
+
+    #[test]
+    fn class_registry_breaks_out_overload_counters() {
+        let hub = MetricsHub::new();
+        let reg = hub.classes();
+        let phone = reg.class("phone");
+        let same = reg.class("phone");
+        Metrics::inc(&phone.sched_throttled_total);
+        Metrics::add(&same.degraded_total, 2);
+        Metrics::inc(&reg.class("mcu/low power").deadline_shed_total);
+        // interior mutation through either Arc lands on the same counters
+        let entries = reg.entries();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].0, "mcu/low power", "sorted by class name");
+        assert_eq!(entries[1].1.sched_throttled_total.load(Ordering::Relaxed), 1);
+        assert_eq!(entries[1].1.degraded_total.load(Ordering::Relaxed), 2);
+        let v = hub.to_json();
+        let pc = v.req("per_class").unwrap();
+        assert_eq!(
+            pc.req("phone").unwrap().req_f64("degraded_total").unwrap(),
+            2.0
+        );
+        assert_eq!(
+            pc.req("mcu/low power").unwrap().req_f64("deadline_shed_total").unwrap(),
+            1.0
+        );
+        // the scrape sanitizes hostile label characters and stays two-token
+        let body = hub.render_prometheus();
+        assert!(
+            body.contains("qpart_class_degraded_total{class=\"phone\"} 2\n"),
+            "{body}"
+        );
+        assert!(
+            body.contains("qpart_class_deadline_shed_total{class=\"mcu_low_power\"} 1\n"),
+            "{body}"
+        );
+        for line in body.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split(' ').count(), 2, "bad sample line: {line}");
+        }
+    }
+
+    #[test]
+    fn new_overload_counters_flow_through_hub() {
+        let hub = MetricsHub::new();
+        let front = hub.front();
+        Metrics::inc(&front.deadline_shed_total);
+        Metrics::add(&front.degraded_total, 3);
+        front.brownout_level.store(2, Ordering::Relaxed);
+        Metrics::inc(&front.brownout_enters_total);
+        Metrics::inc(&front.worker_restarts_total);
+        Metrics::inc(&front.job_timeouts_total);
+        let snap = hub.snapshot();
+        assert_eq!(snap.deadline_shed_total, 1);
+        assert_eq!(snap.degraded_total, 3);
+        assert_eq!(snap.brownout_level, 2);
+        assert_eq!(snap.brownout_enters_total, 1);
+        assert_eq!(snap.brownout_exits_total, 0);
+        assert_eq!(snap.worker_restarts_total, 1);
+        assert_eq!(snap.job_timeouts_total, 1);
+        let v = hub.to_json();
+        assert_eq!(v.req_f64("degraded_total").unwrap(), 3.0);
+        assert_eq!(v.req_f64("brownout_level").unwrap(), 2.0);
+        assert!(v.get("per_class").is_none(), "absent until a class registers");
+        let body = hub.render_prometheus();
+        assert!(body.contains("qpart_brownout_level 2\n"), "{body}");
+        assert!(body.contains("qpart_worker_restarts_total 1\n"), "{body}");
     }
 
     #[test]

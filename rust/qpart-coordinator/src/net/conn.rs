@@ -27,6 +27,7 @@
 //!   metrics scrapes).
 
 use super::sys::{writev_stream, IoVec};
+use crate::metrics::ClassCounts;
 use crate::obs::JobTrace;
 use qpart_proto::frame::{split_frame, Frame, FrameError};
 use std::collections::VecDeque;
@@ -235,6 +236,11 @@ pub struct Conn {
     /// The response is deferred until the HTTP request line arrives (or
     /// the peer closes), so `/trace` endpoints can be routed by path.
     pub responded: bool,
+    /// Per-device-class counters resolved once from the `hello`'s
+    /// `class` label (see [`crate::metrics::ClassRegistry`]); `None` for
+    /// unlabeled peers. Jobs submitted by this connection carry a clone,
+    /// so throttle/shed/degrade attribution is a field read per event.
+    pub class: Option<Arc<ClassCounts>>,
 }
 
 impl Conn {
@@ -254,6 +260,7 @@ impl Conn {
             read_mark: None,
             pending_flush: Vec::new(),
             responded: false,
+            class: None,
         }
     }
 

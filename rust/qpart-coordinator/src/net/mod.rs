@@ -34,4 +34,4 @@ pub mod sys;
 
 pub use conn::{Conn, ConnKind};
 pub use reactor::{Reactor, ReactorParams};
-pub use sys::Waker;
+pub use sys::{install_shutdown_handler, request_shutdown, shutdown_requested, Waker};

@@ -103,6 +103,11 @@ pub struct ReactorParams {
     pub recorder: Option<Arc<TrafficRecorder>>,
     /// Cooperative shutdown flag, checked every tick.
     pub stop: Arc<AtomicBool>,
+    /// Graceful-drain flag: while set, new protocol connections are
+    /// refused with a `draining` error and existing connections are
+    /// closed as soon as they go quiescent (nothing in flight, outbox
+    /// flushed, no buffered request bytes). In-flight work completes.
+    pub drain: Arc<AtomicBool>,
 }
 
 struct Slot {
@@ -129,6 +134,7 @@ pub struct Reactor {
     tracer: Tracer,
     recorder: Option<Arc<TrafficRecorder>>,
     stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
     slots: Vec<Slot>,
     free: Vec<usize>,
     /// Live protocol connections (the `max_conns` gate's denominator —
@@ -160,6 +166,7 @@ impl Reactor {
             tracer: params.trace.tracer(FRONT_WORKER),
             recorder: params.recorder,
             stop: params.stop,
+            drain: params.drain,
             slots: Vec::new(),
             free: Vec::new(),
             proto_open: 0,
@@ -254,6 +261,35 @@ impl Reactor {
                 self.drive(slot, pfd.readable());
             }
             self.sweep_idle();
+            if self.drain.load(Ordering::SeqCst) {
+                self.sweep_drained();
+            }
+        }
+    }
+
+    /// Drain mode: close protocol connections that have gone quiescent —
+    /// nothing in flight, outbox flushed, and no buffered request bytes
+    /// waiting to be parsed. A device mid-exchange keeps its connection
+    /// until the reply is flushed; a silent idle device is cut
+    /// immediately so `conns_open` can reach zero.
+    fn sweep_drained(&mut self) {
+        let quiescent: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, s)| {
+                let c = s.conn.as_ref()?;
+                (c.kind == ConnKind::Proto
+                    && c.in_flight == 0
+                    && c.outbox.is_empty()
+                    && !c.has_buffered_input())
+                .then_some(slot)
+            })
+            .collect();
+        for slot in quiescent {
+            if let Some(conn) = self.slots[slot].conn.take() {
+                self.release(slot, conn, false);
+            }
         }
     }
 
@@ -298,6 +334,19 @@ impl Reactor {
             // ~40-200 ms per round trip without this
             let _ = stream.set_nodelay(true);
             if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            if self.drain.load(Ordering::SeqCst) {
+                // graceful drain: tell the device explicitly instead of
+                // letting it negotiate against a server about to exit
+                Metrics::inc(&self.front.conns_rejected_total);
+                let mut refusal = Vec::new();
+                let _ = write_frame(
+                    &mut refusal,
+                    &err_resp("draining", "server draining: not accepting connections").to_line(),
+                );
+                let mut stream = stream;
+                let _ = stream.write_all(&refusal);
                 continue;
             }
             if self.proto_open >= self.max_conns {
@@ -508,6 +557,14 @@ impl Reactor {
             // token-bucket rate by the declared class weight (clamped
             // inside; no-op while the limiter is disabled)
             self.fair.set_weight(token, h.weight);
+            // resolve the class label once: every job this connection
+            // submits carries the counter handle, so per-class
+            // throttle/shed/degrade attribution is lock-free per event
+            conn.class = if h.class.is_empty() {
+                None
+            } else {
+                Some(self.hub.classes().class(&h.class))
+            };
             if h.trace {
                 // hello-negotiated grant: the id is echoed on the wire
                 // for client-side correlation (supersedes any sampled
@@ -525,6 +582,9 @@ impl Reactor {
         // recycled slot starts with a fresh bucket.
         if self.fair.enabled() && !self.fair.try_admit(token) {
             Metrics::inc(&self.front.sched_throttled_total);
+            if let Some(c) = &conn.class {
+                Metrics::inc(&c.sched_throttled_total);
+            }
             conn.outbox.push(response_bytes(&err_resp(
                 "throttled",
                 "fair queuing: per-connection rate exceeded",
@@ -541,10 +601,11 @@ impl Reactor {
             _ => None,
         };
         let rec_upload = self.recorder.is_some() && matches!(req, Request::Activation(_));
-        match self
-            .job_tx
-            .try_send(Job::routed(req, token, Arc::clone(&self.router)).with_trace(conn.trace))
-        {
+        match self.job_tx.try_send(
+            Job::routed(req, token, Arc::clone(&self.router))
+                .with_trace(conn.trace)
+                .with_class(conn.class.clone()),
+        ) {
             Ok(()) => {
                 conn.in_flight += 1;
                 if let Some(rec) = &self.recorder {
@@ -658,12 +719,19 @@ pub fn push_reply(outbox: &mut Outbox, reply: WireReply, binary: bool) {
                 // `None` = frame over `MAX_FRAME_BYTES`: queue nothing,
                 // exactly as `write_binary_frame` refuses the same frame
                 // in the copying path
-                if let Some(head) = s.body.binary_frame_head(s.session, s.objective, s.trace) {
+                if let Some(head) =
+                    s.body.binary_frame_head_stamped(s.session, s.objective, s.trace, s.degraded)
+                {
                     outbox.push(head);
                     outbox.push_shared(s.body.blob_shared());
                 }
             } else {
-                outbox.push(s.body.json_frame_head(s.session, s.objective, s.trace));
+                outbox.push(s.body.json_frame_head_stamped(
+                    s.session,
+                    s.objective,
+                    s.trace,
+                    s.degraded,
+                ));
                 outbox.push_shared(s.body.layers_json_shared());
                 outbox.push(JSON_FRAME_TAIL.to_vec());
             }
@@ -682,16 +750,19 @@ pub fn reply_bytes(reply: WireReply, binary: bool) -> Vec<u8> {
     let _ = match reply {
         WireReply::Msg(resp) => write_frame(&mut buf, &resp.to_line()),
         WireReply::Segment(s) => {
-            // the traced splice with `None` is byte-identical to the
-            // untraced stamp (proven by the proto splice tests)
+            // the stamped splice with `None`/`false` is byte-identical to
+            // the untraced stamp (proven by the proto splice tests)
             if binary {
                 write_binary_frame(
                     &mut buf,
-                    &s.body.binary_header_traced(s.session, s.objective, s.trace),
+                    &s.body.binary_header_stamped(s.session, s.objective, s.trace, s.degraded),
                     s.body.blob(),
                 )
             } else {
-                write_frame(&mut buf, &s.body.json_line_traced(s.session, s.objective, s.trace))
+                write_frame(
+                    &mut buf,
+                    &s.body.json_line_stamped(s.session, s.objective, s.trace, s.degraded),
+                )
             }
         }
     };

@@ -102,6 +102,50 @@ impl<'a> IoVec<'a> {
 extern "C" {
     fn poll(fds: *mut PollFd, nfds: Nfds, timeout: c_int) -> c_int;
     fn writev(fd: c_int, iov: *const IoVec<'_>, iovcnt: c_int) -> isize;
+    fn signal(signum: c_int, handler: usize) -> usize;
+}
+
+/// `SIGINT` / `SIGTERM` numbers — identical on Linux and the BSDs/macOS,
+/// like the poll constants above.
+const SIGINT: c_int = 2;
+const SIGTERM: c_int = 15;
+
+/// Set by the signal handler; read by [`shutdown_requested`].
+static SHUTDOWN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// The actual handler: only an atomic store, the strictest
+/// async-signal-safe discipline — everything else (draining, flushing,
+/// exiting) happens on normal threads that poll [`shutdown_requested`].
+extern "C" fn on_shutdown_signal(_signum: c_int) {
+    SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Install the graceful-drain handler for `SIGTERM` and `SIGINT`. After
+/// this, either signal flips the [`shutdown_requested`] flag instead of
+/// killing the process; callers are expected to poll the flag and drain.
+/// Idempotent. `signal(2)` rather than `sigaction` keeps this to one
+/// universal libc symbol; the handler stays installed across deliveries
+/// on every modern unix (BSD semantics), and even one delivery is all a
+/// drain needs.
+pub fn install_shutdown_handler() {
+    let handler = on_shutdown_signal as extern "C" fn(c_int) as usize;
+    unsafe {
+        signal(SIGTERM, handler);
+        signal(SIGINT, handler);
+    }
+}
+
+/// Whether a shutdown signal has arrived since
+/// [`install_shutdown_handler`]. Test hooks may also set this via
+/// [`request_shutdown`].
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN.load(std::sync::atomic::Ordering::SeqCst)
+}
+
+/// Flip the shutdown flag from code (tests, or an admin path) — exactly
+/// what a delivered `SIGTERM` would do.
+pub fn request_shutdown() {
+    SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
 }
 
 /// Gathered write to a stream fd: one syscall for many queued buffers,

@@ -13,11 +13,23 @@
 //! the connection thread stamps those into the negotiated framing (JSON
 //! line or binary frame) without re-encoding the payload.
 
+use crate::metrics::ClassCounts;
 use crate::obs::{JobTrace, TraceStamp};
 use qpart_proto::messages::{EncodedSegmentBody, Request, Response};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// Take a mutex even if a previous holder panicked: every guarded
+/// structure here (reply queues, the job receiver) is valid after any
+/// partial operation, so recovering the data beats wedging the pool.
+/// Worker panics are caught and converted into error replies by the
+/// supervisor; a poisoned flag must not turn one bad request into a
+/// permanently dead serving path.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// A reply paired with its optional trace stamp: the stamp lets the
 /// front-end measure completion-queue latency (the Route span) and
@@ -34,13 +46,23 @@ pub struct Job {
     /// Trace identity when this request is sampled or hello-negotiated
     /// (`None` on the untraced fast path).
     pub trace: Option<JobTrace>,
+    /// The connection's hello-declared device-class counters (`None` for
+    /// unlabeled peers): deadline sheds and brownout degradations on this
+    /// job are attributed there.
+    pub class: Option<Arc<ClassCounts>>,
 }
 
 impl Job {
     /// A job replying over a dedicated channel (thread-per-connection
     /// front-end, in-process callers, tests).
     pub fn new(req: Request, reply_tx: SyncSender<StampedReply>) -> Job {
-        Job { req, reply: ReplySink::Channel(reply_tx), enqueued: Instant::now(), trace: None }
+        Job {
+            req,
+            reply: ReplySink::channel(reply_tx),
+            enqueued: Instant::now(),
+            trace: None,
+            class: None,
+        }
     }
 
     /// A job replying through a [`ReplyRouter`] completion queue (the
@@ -49,15 +71,22 @@ impl Job {
     pub fn routed(req: Request, token: u64, router: Arc<ReplyRouter>) -> Job {
         Job {
             req,
-            reply: ReplySink::Routed { token, router },
+            reply: ReplySink::routed(token, router),
             enqueued: Instant::now(),
             trace: None,
+            class: None,
         }
     }
 
     /// Attach a trace identity (builder style).
     pub fn with_trace(mut self, trace: Option<JobTrace>) -> Job {
         self.trace = trace;
+        self
+    }
+
+    /// Attach the connection's device-class counters (builder style).
+    pub fn with_class(mut self, class: Option<Arc<ClassCounts>>) -> Job {
+        self.class = class;
         self
     }
 }
@@ -70,7 +99,18 @@ impl Job {
 /// shared completion queue ([`ReplyRouter`]) tagged with the connection
 /// token, and the router's wake hook nudges the reactor out of `poll`.
 #[derive(Clone, Debug)]
-pub enum ReplySink {
+pub struct ReplySink {
+    target: SinkTarget,
+    /// Exactly-once delivery latch. The supervisor replies `internal` to
+    /// every sink of a panicked batch; this flag makes that a no-op for
+    /// jobs the worker had already answered before dying — a double send
+    /// would block a full per-request channel or double-decrement the
+    /// reactor's per-connection `in_flight` accounting.
+    sent: Arc<AtomicBool>,
+}
+
+#[derive(Clone, Debug)]
+enum SinkTarget {
     /// Dedicated per-request channel; the receiver blocks until the
     /// reply arrives (connection threads, in-process callers, tests).
     Channel(SyncSender<StampedReply>),
@@ -79,6 +119,19 @@ pub enum ReplySink {
 }
 
 impl ReplySink {
+    /// A sink delivering over a dedicated channel.
+    pub fn channel(tx: SyncSender<StampedReply>) -> ReplySink {
+        ReplySink { target: SinkTarget::Channel(tx), sent: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// A sink delivering through a [`ReplyRouter`] completion queue.
+    pub fn routed(token: u64, router: Arc<ReplyRouter>) -> ReplySink {
+        ReplySink {
+            target: SinkTarget::Routed { token, router },
+            sent: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
     /// Deliver an untraced reply. Delivery is best-effort in both
     /// flavors: a hung-up channel or a since-closed connection drops the
     /// reply, exactly like a connection thread whose peer vanished.
@@ -86,14 +139,24 @@ impl ReplySink {
         self.send_with(reply, None);
     }
 
-    /// Deliver the reply with an optional trace stamp.
+    /// Deliver the reply with an optional trace stamp. Only the first
+    /// send per sink (across all clones) delivers; later sends are
+    /// silently dropped — see the `sent` latch.
     pub fn send_with(&self, reply: WireReply, stamp: Option<TraceStamp>) {
-        match self {
-            ReplySink::Channel(tx) => {
+        if self.sent.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        match &self.target {
+            SinkTarget::Channel(tx) => {
                 let _ = tx.send((reply, stamp));
             }
-            ReplySink::Routed { token, router } => router.push(*token, reply, stamp),
+            SinkTarget::Routed { token, router } => router.push(*token, reply, stamp),
         }
+    }
+
+    /// Whether some clone of this sink already delivered a reply.
+    pub fn already_sent(&self) -> bool {
+        self.sent.load(Ordering::Acquire)
     }
 }
 
@@ -111,7 +174,7 @@ pub struct ReplyRouter {
 
 impl std::fmt::Debug for ReplyRouter {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let depth = self.queue.lock().map(|q| q.len()).unwrap_or(0);
+        let depth = lock_recover(&self.queue).len();
         f.debug_struct("ReplyRouter").field("queued", &depth).finish()
     }
 }
@@ -124,13 +187,13 @@ impl ReplyRouter {
     /// Queue one finished reply for connection `token` and wake the
     /// reactor.
     pub fn push(&self, token: u64, reply: WireReply, stamp: Option<TraceStamp>) {
-        self.queue.lock().unwrap().push((token, reply, stamp));
+        lock_recover(&self.queue).push((token, reply, stamp));
         (self.wake)();
     }
 
     /// Take every queued completion (reactor thread).
     pub fn drain(&self) -> Vec<(u64, WireReply, Option<TraceStamp>)> {
-        std::mem::take(&mut *self.queue.lock().unwrap())
+        std::mem::take(&mut *lock_recover(&self.queue))
     }
 }
 
@@ -149,6 +212,9 @@ pub struct SegmentReply {
     pub session: u64,
     /// Echoed trace id (`Some` only for hello-negotiated traces).
     pub trace: Option<u64>,
+    /// Brownout marker: this request was planned at a coarser accuracy
+    /// level than its nominal choice (still within its budget).
+    pub degraded: bool,
     /// This request's Eq. 17 objective (the only per-request pattern field).
     pub objective: f64,
     pub body: Arc<EncodedSegmentBody>,
@@ -163,6 +229,7 @@ impl WireReply {
             WireReply::Segment(s) => {
                 let mut reply = s.body.to_reply(s.session, s.objective);
                 reply.trace = s.trace;
+                reply.degraded = s.degraded;
                 Response::Segment(reply)
             }
         }
@@ -230,7 +297,7 @@ pub fn drain_batch(
     let max_batch = policy.max_batch.max(1);
     // phase 1: wait for the first job and sweep the backlog, one lock hold
     let mut batch = {
-        let guard = rx.lock().unwrap();
+        let guard = lock_recover(rx);
         let first = match guard.recv_timeout(idle_timeout) {
             Ok(j) => j,
             Err(RecvTimeoutError::Timeout) => return DrainOutcome::TimedOut,
@@ -258,7 +325,7 @@ pub fn drain_batch(
         }
         let slice = (deadline - now).min(Duration::from_millis(1));
         let got = {
-            let guard = rx.lock().unwrap();
+            let guard = lock_recover(rx);
             let got = guard.recv_timeout(slice);
             if got.is_ok() {
                 top_up(&guard, &mut batch, max_batch.saturating_sub(1));
@@ -299,6 +366,7 @@ mod tests {
             kappa: 3e-27,
             memory_bits: 1 << 31,
             weights: None,
+            deadline_ms: None,
         };
         (Job::new(Request::Infer(req), tx), rx)
     }
@@ -446,7 +514,7 @@ mod tests {
         let router = Arc::new(ReplyRouter::new(Box::new(move || {
             w.fetch_add(1, Ordering::SeqCst);
         })));
-        let sink = ReplySink::Routed { token: 42, router: Arc::clone(&router) };
+        let sink = ReplySink::routed(42, Arc::clone(&router));
         sink.send(WireReply::Msg(Response::Pong));
         router.push(7, WireReply::Msg(Response::Pong), None);
         assert_eq!(wakes.load(Ordering::SeqCst), 2, "every push wakes the reactor");
@@ -455,6 +523,30 @@ mod tests {
         assert_eq!(drained[0].0, 42);
         assert_eq!(drained[1].0, 7);
         assert!(router.drain().is_empty(), "drain takes everything");
+    }
+
+    #[test]
+    fn reply_sink_delivers_exactly_once_across_clones() {
+        // the supervisor's blanket `internal` reply after a worker panic
+        // must not double-deliver to jobs already answered
+        let (tx, rx) = sync_channel::<StampedReply>(1);
+        let sink = ReplySink::channel(tx);
+        let clone = sink.clone();
+        sink.send(WireReply::Msg(Response::Pong));
+        assert!(clone.already_sent());
+        // second send (via the clone) is a no-op: it neither blocks the
+        // full channel nor queues a second reply
+        clone.send(WireReply::Msg(Response::Pong));
+        assert!(rx.try_recv().is_ok());
+        assert!(rx.try_recv().is_err(), "only one reply delivered");
+
+        // routed flavor: one push total
+        let router = Arc::new(ReplyRouter::new(Box::new(|| {})));
+        let sink = ReplySink::routed(9, Arc::clone(&router));
+        let clone = sink.clone();
+        sink.send(WireReply::Msg(Response::Pong));
+        clone.send(WireReply::Msg(Response::Pong));
+        assert_eq!(router.drain().len(), 1);
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! through `MetricsHub` into the `stats` document's `segment_cache`
 //! section.
 
+use super::batch::lock_recover;
 use qpart_core::json::Value;
 use qpart_proto::messages::EncodedSegmentBody;
 use std::collections::HashMap;
@@ -71,7 +72,7 @@ impl EncodedReplyCache {
 
     /// Look up a key, counting the hit/miss and touching LRU recency.
     pub fn get(&self, key: &SegmentKey) -> Option<Arc<EncodedSegmentBody>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         match inner.map.get(key).cloned() {
             Some(body) => {
                 if let Some(pos) = inner.order.iter().position(|k| k == key) {
@@ -93,7 +94,7 @@ impl EncodedReplyCache {
     /// and evict least-recently-used entries past the byte budget. The
     /// entry just inserted is never evicted.
     pub fn insert(&self, key: SegmentKey, body: Arc<EncodedSegmentBody>) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         if let Some(old) = inner.map.remove(&key) {
             inner.bytes = inner.bytes.saturating_sub(old.cost_bytes());
             if let Some(pos) = inner.order.iter().position(|k| k == &key) {
@@ -130,7 +131,7 @@ impl EncodedReplyCache {
 
     /// Resident entries.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        lock_recover(&self.inner).map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -139,7 +140,7 @@ impl EncodedReplyCache {
 
     /// Resident bytes (cost accounting, see `EncodedSegmentBody::cost_bytes`).
     pub fn bytes(&self) -> usize {
-        self.inner.lock().unwrap().bytes
+        lock_recover(&self.inner).bytes
     }
 
     pub fn budget_bytes(&self) -> usize {

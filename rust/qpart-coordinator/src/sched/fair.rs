@@ -21,6 +21,7 @@
 //! unbounded rate — and default to 1.0, which reproduces the unweighted
 //! behavior exactly.
 
+use super::batch::lock_recover;
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -103,7 +104,7 @@ impl FairQueue {
             1.0
         };
         let burst = self.burst_for(weight);
-        let mut buckets = self.buckets.lock().unwrap();
+        let mut buckets = lock_recover(&self.buckets);
         let b = buckets.entry(key).or_insert(Bucket { tokens: burst, last_s: now_s, weight });
         b.weight = weight;
         // a weight drop mid-connection shrinks an over-cap balance too
@@ -121,7 +122,7 @@ impl FairQueue {
         if self.rate <= 0.0 {
             return true;
         }
-        let mut buckets = self.buckets.lock().unwrap();
+        let mut buckets = lock_recover(&self.buckets);
         let b = buckets
             .entry(key)
             .or_insert(Bucket { tokens: self.burst, last_s: now_s, weight: 1.0 });
@@ -143,12 +144,12 @@ impl FairQueue {
     /// Drop per-key state for a closed connection so the map does not grow
     /// with connection churn.
     pub fn forget(&self, key: u64) {
-        self.buckets.lock().unwrap().remove(&key);
+        lock_recover(&self.buckets).remove(&key);
     }
 
     /// Number of tracked keys (for tests/diagnostics).
     pub fn tracked(&self) -> usize {
-        self.buckets.lock().unwrap().len()
+        lock_recover(&self.buckets).len()
     }
 }
 

@@ -30,25 +30,27 @@
 //! `workers` mirrors the simulator's `FleetConfig::server_slots` knob
 //! (qpart-sim), so modeled and live serving share one parallelism model.
 
+use crate::brownout::BrownoutController;
 use crate::decision::DecisionCache;
-use crate::metrics::{request_path, Metrics, MetricsHub, MetricsSnapshot};
+use crate::metrics::{request_path, ClassRegistry, Metrics, MetricsHub, MetricsSnapshot};
 use crate::obs::{JobTrace, Stage, TraceSink, Tracer, TrafficRecorder, FRONT_WORKER};
 use crate::sched::{
-    drain_batch, BatchPolicy, DrainOutcome, EncodedReplyCache, FairQueue, Job, StampedReply,
-    WireReply,
+    drain_batch, BatchPolicy, DrainOutcome, EncodedReplyCache, FairQueue, Job, ReplySink,
+    StampedReply, WireReply,
 };
-use crate::service::{Service, ServiceOptions};
+use crate::service::{FaultSpec, Service, ServiceOptions};
 use crate::session::SharedSessionTable;
 use qpart_proto::frame::{read_any_frame, write_binary_frame, write_frame, Frame, FrameError};
 use qpart_proto::messages::{ErrorReply, HelloReply, Request, Response};
 use qpart_runtime::{Bundle, CompileCache};
 use std::io::{BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Server configuration.
 ///
@@ -200,6 +202,24 @@ pub struct ServerConfig {
     /// Execute phase 2 with the pure-Rust host reference kernels instead
     /// of PJRT (tests / bench-serve; linear architectures only).
     pub host_fallback: bool,
+    /// Brownout entry threshold on the queue-wait EWMA, in µs: sustained
+    /// queue waits above this (or connection-count pressure near
+    /// `max_conns`) step the degradation ladder up, and calm steps it
+    /// back down ([`crate::brownout`]). Degraded requests are planned at
+    /// a coarser accuracy level **only when the Algorithm 1 degradation
+    /// table says their budget still holds**. Zero (the default)
+    /// disables the controller entirely — the plan path is untouched.
+    pub brownout_wait_us: u64,
+    /// Soft per-batch watchdog: a worker that has been executing one
+    /// batch for longer than this is counted in `job_timeouts_total`
+    /// (once per offending batch — the job is not killed; the counter
+    /// is the alarm). Zero (the default) disables the watchdog.
+    pub job_timeout: Duration,
+    /// Compiled-in fault injection for the chaos harness
+    /// ([`FaultSpec`]): worker panics, execution delay, allocation
+    /// failures. `None` (the default) is the production path; the CLI
+    /// additionally refuses to arm it unless `QPART_FAULT_INJECT=1`.
+    pub fault_inject: Option<FaultSpec>,
     /// Artifact bundle directory.
     pub artifacts_dir: String,
 }
@@ -232,6 +252,9 @@ impl Default for ServerConfig {
             record_trace: None,
             warm_cache: false,
             host_fallback: false,
+            brownout_wait_us: 0,
+            job_timeout: Duration::ZERO,
+            fault_inject: None,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -273,12 +296,15 @@ pub struct ServerHandle {
     /// Live-traffic recorder, when `record_trace` is configured.
     pub recorder: Option<Arc<TrafficRecorder>>,
     stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
     /// Threaded-frontend scrape acceptor (None under the reactor, which
     /// carries the scrape listener on its own thread).
     metrics_thread: Option<JoinHandle<()>>,
     gc_thread: Option<JoinHandle<()>>,
-    worker_threads: Vec<JoinHandle<()>>,
+    /// Executor workers, shared with the housekeeping thread's
+    /// supervisor (which joins dead workers and respawns replacements).
+    workers: Arc<Mutex<Vec<WorkerSlot>>>,
 }
 
 impl ServerHandle {
@@ -296,11 +322,18 @@ impl ServerHandle {
         if let Some(t) = self.metrics_thread.take() {
             let _ = t.join();
         }
+        // the supervisor rides the gc thread; join it before draining the
+        // worker slots so nothing respawns behind our back (it also
+        // refuses to respawn once the stop flag is up)
         if let Some(t) = self.gc_thread.take() {
             let _ = t.join();
         }
-        for t in self.worker_threads.drain(..) {
-            let _ = t.join();
+        let slots: Vec<WorkerSlot> = {
+            let mut w = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+            w.drain(..).collect()
+        };
+        for slot in slots {
+            let _ = slot.handle.join();
         }
         // workers are parked: collect their final spans and persist any
         // recorded traffic
@@ -308,6 +341,37 @@ impl ServerHandle {
         if let Some(rec) = &self.recorder {
             let _ = rec.flush();
         }
+    }
+
+    /// Flip the server into drain mode without stopping it: new protocol
+    /// connections are refused with a `draining` error while existing
+    /// connections finish their in-flight work, flush their replies, and
+    /// close. Idempotent.
+    pub fn begin_drain(&self) {
+        self.drain.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether drain mode is active.
+    pub fn draining(&self) -> bool {
+        self.drain.load(Ordering::SeqCst)
+    }
+
+    /// Graceful shutdown: enter drain mode, wait up to `timeout` for
+    /// every protocol connection to finish in flight work and close
+    /// (`conns_open` reaching zero), then stop and join the threads.
+    /// Returns `true` when the fleet drained fully within the bound,
+    /// `false` when the timeout forced the exit.
+    pub fn drain(self, timeout: Duration) -> bool {
+        self.begin_drain();
+        let front = self.hub.front();
+        let deadline = Instant::now() + timeout;
+        let mut clean = front.conns_open.load(Ordering::Relaxed) == 0;
+        while !clean && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+            clean = front.conns_open.load(Ordering::Relaxed) == 0;
+        }
+        self.shutdown();
+        clean
     }
 
     /// One aggregated snapshot across the front-end and all workers.
@@ -365,75 +429,41 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
     let job_rx = Arc::new(Mutex::new(job_rx));
     let policy = BatchPolicy { window: cfg.batch_window, max_batch: cfg.batch_max };
 
+    // Brownout controller: one for the whole server (the EWMA must see
+    // every worker's queue waits); `None` when disabled, and then the
+    // plan path is byte-identical to a build without the feature.
+    let brownout = BrownoutController::new(cfg.brownout_wait_us, hub.front());
+    // Graceful-drain flag, shared by the front-end and the handle.
+    let drain = Arc::new(AtomicBool::new(false));
+
     // Inference workers: each owns a (non-Send) service over the shared
     // bundle. Algorithm 1 initialization happens inside; readiness is
     // reported via a channel so `serve` fails fast if any worker cannot
-    // start.
+    // start. The spawn context is retained by the supervisor (on the
+    // housekeeping thread) so a worker that dies mid-batch — a panic is
+    // caught, answered, and lets the thread exit — is replaced by a
+    // fresh service (`worker_restarts_total`).
+    let ctx = WorkerCtx {
+        hub: Arc::clone(&hub),
+        sessions: Arc::clone(&sessions),
+        cache: Arc::clone(&cache),
+        compile_cache: Arc::clone(&compile_cache),
+        decision_cache: Arc::clone(&decision_cache),
+        bundle: Arc::clone(&bundle),
+        stop: Arc::clone(&stop),
+        job_rx: Arc::clone(&job_rx),
+        policy,
+        host_fallback: cfg.host_fallback,
+        trace: Arc::clone(&trace),
+        brownout: brownout.clone(),
+        faults: cfg.fault_inject,
+        epoch: Instant::now(),
+    };
     let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(workers);
-    let mut worker_threads = Vec::with_capacity(workers);
+    let mut slots = Vec::with_capacity(workers);
     for w in 0..workers {
-        let worker_hub = Arc::clone(&hub);
-        let worker_sessions = Arc::clone(&sessions);
-        let worker_cache = Arc::clone(&cache);
-        let worker_compile = Arc::clone(&compile_cache);
-        let worker_decisions = Arc::clone(&decision_cache);
-        let worker_bundle = Arc::clone(&bundle);
-        let worker_stop = Arc::clone(&stop);
-        let worker_rx = Arc::clone(&job_rx);
-        let ready_tx = ready_tx.clone();
         // one worker warms the shared caches; its peers see the results
-        let warm = cfg.warm_cache && w == 0;
-        let host_fallback = cfg.host_fallback;
-        let worker_tracer = trace.tracer(w as u32);
-        let t = std::thread::Builder::new()
-            .name(format!("qpart-worker-{w}"))
-            .spawn(move || {
-                let opts = ServiceOptions {
-                    compile_cache: worker_compile,
-                    decision_cache: worker_decisions,
-                    host_fallback,
-                    tracer: Some(worker_tracer),
-                };
-                let service = Service::with_options(
-                    worker_bundle,
-                    worker_hub,
-                    worker_sessions,
-                    worker_cache,
-                    opts,
-                )
-                .map_err(|e| e.to_string());
-                let mut service = match service {
-                    Ok(mut s) => {
-                        if warm {
-                            // warm before reporting ready: serve() returns
-                            // with the caches populated, deterministically
-                            s.warm_cache();
-                        }
-                        let _ = ready_tx.send(Ok(()));
-                        s
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("worker {w}: {e}")));
-                        return;
-                    }
-                };
-                // Drop our readiness sender now: if another worker panics
-                // during init (sending nothing), serve()'s readiness loop
-                // must observe disconnection instead of hanging on workers
-                // that hold their clones for the whole job loop.
-                drop(ready_tx);
-                while !worker_stop.load(Ordering::SeqCst) {
-                    // drain_batch locks the receiver only per dequeue, so
-                    // a long coalescing window never serializes the pool
-                    match drain_batch(&worker_rx, &policy, Duration::from_millis(100)) {
-                        DrainOutcome::Batch(batch) => service.handle_batch(batch),
-                        DrainOutcome::TimedOut => continue,
-                        DrainOutcome::Disconnected => break,
-                    }
-                }
-            })
-            .map_err(|e| e.to_string())?;
-        worker_threads.push(t);
+        slots.push(spawn_worker(&ctx, w, cfg.warm_cache && w == 0, Some(ready_tx.clone()))?);
     }
     drop(ready_tx);
 
@@ -444,16 +474,24 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
             Err(_) => return Err("a worker thread died during init".into()),
         }
     }
+    let worker_slots = Arc::new(Mutex::new(slots));
 
     // Housekeeping: expire sessions whose device never uploaded, drain
     // worker span rings into the trace store (keeps ring pressure down
-    // between endpoint hits), and persist recorded traffic so a killed
-    // `serve` still leaves a usable capture.
+    // between endpoint hits), persist recorded traffic so a killed
+    // `serve` still leaves a usable capture — and, every tick, supervise
+    // the executor pool (respawn dead workers, run the soft job
+    // watchdog) and advance the brownout controller's pressure clock.
     let gc_thread = {
         let gc_sessions = Arc::clone(&sessions);
         let gc_stop = Arc::clone(&stop);
         let gc_trace = Arc::clone(&trace);
         let gc_recorder = recorder.clone();
+        let gc_workers = Arc::clone(&worker_slots);
+        let gc_brownout = brownout.clone();
+        let gc_front = hub.front();
+        let job_timeout = cfg.job_timeout;
+        let max_conns = cfg.max_conns.max(1);
         let ttl = cfg.session_ttl;
         let interval = if ttl > Duration::ZERO {
             (ttl / 4).clamp(Duration::from_millis(10), Duration::from_secs(1))
@@ -471,6 +509,14 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
                     while !gc_stop.load(Ordering::SeqCst) {
                         std::thread::sleep(tick);
                         slept += tick;
+                        // pressure clock: the controller's hysteresis
+                        // counts these ticks, so the gc cadence (~10 ms)
+                        // is part of its time constants
+                        if let Some(b) = &gc_brownout {
+                            let open = gc_front.conns_open.load(Ordering::Relaxed) as usize;
+                            b.tick(open, max_conns);
+                        }
+                        supervise_workers(&gc_workers, &ctx, &gc_front, job_timeout);
                         if slept >= interval {
                             slept = Duration::ZERO;
                             if ttl > Duration::ZERO {
@@ -512,6 +558,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         Arc::clone(&trace),
         recorder.clone(),
         Arc::clone(&stop),
+        Arc::clone(&drain),
     )?;
 
     Ok(ServerHandle {
@@ -525,11 +572,195 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         trace,
         recorder,
         stop,
+        drain,
         accept_thread: Some(accept_thread),
         metrics_thread,
         gc_thread,
-        worker_threads,
+        workers: worker_slots,
     })
+}
+
+/// Everything needed to (re)spawn one executor worker. Retained by the
+/// housekeeping thread's supervisor so a dead worker can be replaced by
+/// a fresh service over the same shared state.
+struct WorkerCtx {
+    hub: Arc<MetricsHub>,
+    sessions: Arc<SharedSessionTable>,
+    cache: Arc<EncodedReplyCache>,
+    compile_cache: Arc<CompileCache>,
+    decision_cache: Arc<DecisionCache>,
+    bundle: Arc<Bundle>,
+    stop: Arc<AtomicBool>,
+    job_rx: Arc<Mutex<Receiver<Job>>>,
+    policy: BatchPolicy,
+    host_fallback: bool,
+    trace: Arc<TraceSink>,
+    brownout: Option<Arc<BrownoutController>>,
+    faults: Option<FaultSpec>,
+    /// Time zero for the `busy_since_us` watchdog timestamps.
+    epoch: Instant,
+}
+
+/// Supervisor bookkeeping for one executor worker.
+struct WorkerSlot {
+    /// Worker index — stable across respawns (names the thread and the
+    /// tracer lane).
+    idx: usize,
+    handle: JoinHandle<()>,
+    /// Microseconds since [`WorkerCtx::epoch`] when the worker began its
+    /// current batch; 0 = idle. Written by the worker, read by the soft
+    /// job watchdog.
+    busy_since_us: Arc<AtomicU64>,
+    /// The busy timestamp the watchdog last counted, so one stuck batch
+    /// increments `job_timeouts_total` once, not once per sweep.
+    flagged_busy_us: u64,
+}
+
+/// Spawn worker `idx`. `ready_tx` reports first-spawn init results so
+/// `serve` can fail fast; supervisor respawns pass `None` — a
+/// replacement whose service fails to initialize backs off briefly and
+/// exits, and the supervisor tries again on a later sweep.
+fn spawn_worker(
+    ctx: &WorkerCtx,
+    idx: usize,
+    warm: bool,
+    ready_tx: Option<SyncSender<Result<(), String>>>,
+) -> Result<WorkerSlot, String> {
+    let busy_since_us = Arc::new(AtomicU64::new(0));
+    let busy = Arc::clone(&busy_since_us);
+    let hub = Arc::clone(&ctx.hub);
+    let sessions = Arc::clone(&ctx.sessions);
+    let cache = Arc::clone(&ctx.cache);
+    let compile_cache = Arc::clone(&ctx.compile_cache);
+    let decision_cache = Arc::clone(&ctx.decision_cache);
+    let bundle = Arc::clone(&ctx.bundle);
+    let stop = Arc::clone(&ctx.stop);
+    let job_rx = Arc::clone(&ctx.job_rx);
+    let policy = ctx.policy;
+    let host_fallback = ctx.host_fallback;
+    let tracer = ctx.trace.tracer(idx as u32);
+    let brownout = ctx.brownout.clone();
+    let faults = ctx.faults;
+    let epoch = ctx.epoch;
+    let handle = std::thread::Builder::new()
+        .name(format!("qpart-worker-{idx}"))
+        .spawn(move || {
+            let opts = ServiceOptions {
+                compile_cache,
+                decision_cache,
+                host_fallback,
+                tracer: Some(tracer),
+                brownout,
+                faults,
+            };
+            let service = Service::with_options(bundle, hub, sessions, cache, opts)
+                .map_err(|e| e.to_string());
+            let mut service = match service {
+                Ok(mut s) => {
+                    if warm {
+                        // warm before reporting ready: serve() returns
+                        // with the caches populated, deterministically
+                        s.warm_cache();
+                    }
+                    if let Some(tx) = &ready_tx {
+                        let _ = tx.send(Ok(()));
+                    }
+                    s
+                }
+                Err(e) => {
+                    match &ready_tx {
+                        Some(tx) => {
+                            let _ = tx.send(Err(format!("worker {idx}: {e}")));
+                        }
+                        // respawn path: don't hot-loop the supervisor
+                        // against a persistently failing init
+                        None => std::thread::sleep(Duration::from_millis(100)),
+                    }
+                    return;
+                }
+            };
+            // Drop our readiness sender now: if another worker panics
+            // during init (sending nothing), serve()'s readiness loop
+            // must observe disconnection instead of hanging on workers
+            // that hold their clones for the whole job loop.
+            drop(ready_tx);
+            while !stop.load(Ordering::SeqCst) {
+                // drain_batch locks the receiver only per dequeue, so
+                // a long coalescing window never serializes the pool
+                match drain_batch(&job_rx, &policy, Duration::from_millis(100)) {
+                    DrainOutcome::Batch(batch) => {
+                        // Snapshot the reply sinks before handling: if the
+                        // batch panics, every job the worker had not yet
+                        // answered gets an `internal` error instead of a
+                        // hung connection (the sink's exactly-once latch
+                        // makes already-answered jobs a no-op).
+                        let sinks: Vec<ReplySink> =
+                            batch.iter().map(|j| j.reply.clone()).collect();
+                        busy.store(
+                            (epoch.elapsed().as_micros() as u64).max(1),
+                            Ordering::Relaxed,
+                        );
+                        let outcome =
+                            catch_unwind(AssertUnwindSafe(|| service.handle_batch(batch)));
+                        busy.store(0, Ordering::Relaxed);
+                        if outcome.is_err() {
+                            for sink in sinks {
+                                sink.send(WireReply::Msg(Response::Error(ErrorReply {
+                                    code: "internal".into(),
+                                    message: "inference worker panicked; request abandoned"
+                                        .into(),
+                                })));
+                            }
+                            // the service may hold arbitrary partial
+                            // state after a panic: die and let the
+                            // supervisor respawn a fresh one
+                            return;
+                        }
+                    }
+                    DrainOutcome::TimedOut => continue,
+                    DrainOutcome::Disconnected => break,
+                }
+            }
+        })
+        .map_err(|e| e.to_string())?;
+    Ok(WorkerSlot { idx, handle, busy_since_us, flagged_busy_us: 0 })
+}
+
+/// One supervisor sweep over the executor pool: run the soft job
+/// watchdog (`job_timeouts_total`) and replace dead workers with fresh
+/// ones (`worker_restarts_total`). Respawns stop once the server's stop
+/// flag is up — exiting workers at shutdown are not "dead".
+fn supervise_workers(
+    slots: &Mutex<Vec<WorkerSlot>>,
+    ctx: &WorkerCtx,
+    front: &Metrics,
+    job_timeout: Duration,
+) {
+    let mut slots = slots.lock().unwrap_or_else(|e| e.into_inner());
+    let now_us = ctx.epoch.elapsed().as_micros() as u64;
+    let timeout_us = job_timeout.as_micros() as u64;
+    for slot in slots.iter_mut() {
+        if timeout_us > 0 {
+            let busy = slot.busy_since_us.load(Ordering::Relaxed);
+            if busy != 0
+                && now_us.saturating_sub(busy) > timeout_us
+                && slot.flagged_busy_us != busy
+            {
+                // soft watchdog: the batch is not killed (tearing down a
+                // mid-execution PJRT call is not recoverable); the
+                // counter is the alarm operators page on
+                slot.flagged_busy_us = busy;
+                Metrics::inc(&front.job_timeouts_total);
+            }
+        }
+        if slot.handle.is_finished() && !ctx.stop.load(Ordering::SeqCst) {
+            if let Ok(fresh) = spawn_worker(ctx, slot.idx, false, None) {
+                let dead = std::mem::replace(slot, fresh);
+                let _ = dead.handle.join();
+                Metrics::inc(&front.worker_restarts_total);
+            }
+        }
+    }
 }
 
 /// Spawn the configured front-end; returns the front-end thread and,
@@ -549,6 +780,7 @@ fn spawn_frontend(
     trace: Arc<TraceSink>,
     recorder: Option<Arc<TrafficRecorder>>,
     stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
 ) -> Result<FrontendThreads, String> {
     #[cfg(unix)]
     {
@@ -566,6 +798,7 @@ fn spawn_frontend(
                 trace,
                 recorder,
                 stop,
+                drain,
             })
             .map_err(|e| format!("reactor init: {e}"))?;
             let t = std::thread::Builder::new()
@@ -576,10 +809,12 @@ fn spawn_frontend(
         }
     }
     let accept_metrics = hub.front();
+    let classes = hub.classes();
     let binary_allowed = cfg.binary_frames;
     let max_conns = cfg.max_conns.max(1);
     let conn_idle = cfg.conn_idle;
     let accept_stop = Arc::clone(&stop);
+    let accept_drain = Arc::clone(&drain);
     // one front-end ring shared by every connection thread (SpanRing
     // pushes are mutex-guarded); spans carry FRONT_WORKER like the
     // reactor's so the two front-ends are indistinguishable in a trace
@@ -639,6 +874,17 @@ fn spawn_frontend(
                 // request/response protocol: Nagle + delayed-ACK adds
                 // ~40-200 ms per round trip without this
                 let _ = stream.set_nodelay(true);
+                // graceful drain: refuse explicitly, same as the reactor
+                if accept_drain.load(Ordering::SeqCst) {
+                    Metrics::inc(&accept_metrics.conns_rejected_total);
+                    let resp = Response::Error(ErrorReply {
+                        code: "draining".into(),
+                        message: "server draining: not accepting connections".into(),
+                    });
+                    let mut stream = stream;
+                    let _ = write_frame(&mut stream, &resp.to_line());
+                    continue;
+                }
                 // accept gate: same behavior as the reactor's
                 if accept_metrics.conns_open.load(Ordering::Relaxed) >= max_conns as u64 {
                     Metrics::inc(&accept_metrics.conns_rejected_total);
@@ -655,7 +901,9 @@ fn spawn_frontend(
                 Metrics::observe_peak(&accept_metrics.conns_open_peak, open);
                 let job_tx = job_tx.clone();
                 let metrics = Arc::clone(&accept_metrics);
+                let conn_classes = Arc::clone(&classes);
                 let conn_stop = Arc::clone(&accept_stop);
+                let conn_drain = Arc::clone(&accept_drain);
                 let conn_fair = Arc::clone(&fair);
                 let conn_tracer = front_tracer.clone();
                 let conn_recorder = recorder.clone();
@@ -666,7 +914,9 @@ fn spawn_frontend(
                             stream,
                             job_tx,
                             Arc::clone(&metrics),
+                            conn_classes,
                             conn_stop,
+                            conn_drain,
                             binary_allowed,
                             conn_idle,
                             Arc::clone(&conn_fair),
@@ -702,16 +952,19 @@ fn write_reply(
     match reply {
         WireReply::Msg(resp) => write_frame(writer, &resp.to_line()),
         WireReply::Segment(s) => {
-            // the traced splice with `None` is byte-identical to the
-            // untraced stamp (proven by the proto splice tests)
+            // the stamped splice with `None`/`false` is byte-identical to
+            // the untraced stamp (proven by the proto splice tests)
             if binary {
                 write_binary_frame(
                     writer,
-                    &s.body.binary_header_traced(s.session, s.objective, s.trace),
+                    &s.body.binary_header_stamped(s.session, s.objective, s.trace, s.degraded),
                     s.body.blob(),
                 )
             } else {
-                write_frame(writer, &s.body.json_line_traced(s.session, s.objective, s.trace))
+                write_frame(
+                    writer,
+                    &s.body.json_line_stamped(s.session, s.objective, s.trace, s.degraded),
+                )
             }
         }
     }
@@ -722,7 +975,9 @@ fn connection_loop(
     stream: TcpStream,
     job_tx: SyncSender<Job>,
     metrics: Arc<Metrics>,
+    classes: Arc<ClassRegistry>,
     stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
     binary_allowed: bool,
     conn_idle: Duration,
     fair: Arc<FairQueue>,
@@ -730,12 +985,15 @@ fn connection_loop(
     tracer: Tracer,
     recorder: Option<Arc<TrafficRecorder>>,
 ) {
-    // idle/slow-client timeout via the socket read timeout: the blocking
+    // Idle/slow-client timeout via the socket read timeout: the blocking
     // twin of the reactor's idle sweep (a request in flight never trips
-    // it — this thread is then parked on the reply channel, not reading)
-    if conn_idle > Duration::ZERO {
-        let _ = stream.set_read_timeout(Some(conn_idle));
-    }
+    // it — this thread is then parked on the reply channel, not reading).
+    // The timeout is capped at a short poll tick so a parked thread
+    // notices a drain (or stop) request promptly; a tick that fires
+    // before `conn_idle` has really elapsed just re-reads.
+    let poll_tick = Duration::from_millis(250);
+    let read_timeout = if conn_idle > Duration::ZERO { conn_idle.min(poll_tick) } else { poll_tick };
+    let _ = stream.set_read_timeout(Some(read_timeout));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -744,11 +1002,20 @@ fn connection_loop(
     // negotiated per session via `hello`; symmetric: grants binary
     // segment replies downlink AND binary activation uploads uplink
     let mut binary = false;
+    // per-class counters resolved from the hello's `class` label
+    let mut conn_class = None;
     // accept-time sampling, exactly like the reactor's: a sampled trace
     // is server-side only and changes no wire bytes
     let mut conn_trace = tracer.sink().sample_accept();
+    let mut last_activity = Instant::now();
     loop {
         if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if drain.load(Ordering::SeqCst) {
+            // graceful drain: whatever was in flight has been answered
+            // (the reply write below precedes this check); close now so
+            // `conns_open` can reach zero
             break;
         }
         // the read span of a blocking front-end starts when the thread
@@ -756,7 +1023,10 @@ fn connection_loop(
         // arrive (the thread cannot observe first-byte time separately)
         let t_read = conn_trace.map(|_| tracer.now_us());
         let frame = match read_any_frame(&mut reader) {
-            Ok(f) => f,
+            Ok(f) => {
+                last_activity = Instant::now();
+                f
+            }
             Err(FrameError::Closed) => break,
             Err(FrameError::Io(e))
                 if matches!(
@@ -764,8 +1034,13 @@ fn connection_loop(
                     std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
                 ) =>
             {
-                Metrics::inc(&metrics.conns_timed_out);
-                break;
+                // a poll tick, not necessarily the idle bound: only a
+                // connection quiet for the full `conn_idle` is reaped
+                if conn_idle > Duration::ZERO && last_activity.elapsed() >= conn_idle {
+                    Metrics::inc(&metrics.conns_timed_out);
+                    break;
+                }
+                continue;
             }
             Err(e) => {
                 Metrics::inc(&metrics.errors_total);
@@ -814,6 +1089,11 @@ fn connection_loop(
             // token-bucket rate by the declared class weight (clamped
             // inside; no-op while the limiter is disabled)
             fair.set_weight(fair_key, h.weight);
+            // resolve the class label once: every job this connection
+            // submits carries the counter handle, so per-class
+            // throttle/shed/degrade attribution is lock-free per event
+            conn_class =
+                if h.class.is_empty() { None } else { Some(classes.class(&h.class)) };
             if h.trace {
                 // hello-negotiated grant: the id is echoed on the wire
                 // for client-side correlation (supersedes any sampled
@@ -832,6 +1112,9 @@ fn connection_loop(
         // fair queuing: refuse before the job occupies queue capacity
         if fair.enabled() && !fair.try_admit(fair_key) {
             Metrics::inc(&metrics.sched_throttled_total);
+            if let Some(c) = &conn_class {
+                Metrics::inc(&c.sched_throttled_total);
+            }
             let resp = Response::Error(ErrorReply {
                 code: "throttled".into(),
                 message: "fair queuing: per-connection rate exceeded".into(),
@@ -852,8 +1135,9 @@ fn connection_loop(
         };
         let rec_upload = recorder.is_some() && matches!(req, Request::Activation(_));
         let (reply_tx, reply_rx) = sync_channel::<StampedReply>(1);
-        let (reply, stamp) = match job_tx.try_send(Job::new(req, reply_tx).with_trace(conn_trace))
-        {
+        let (reply, stamp) = match job_tx.try_send(
+            Job::new(req, reply_tx).with_trace(conn_trace).with_class(conn_class.clone()),
+        ) {
             Ok(()) => {
                 if let Some(rec) = &recorder {
                     if let Some((budget, cap)) = rec_infer {

@@ -22,8 +22,9 @@
 //! The single-request path funnels through the same executor entry, so
 //! batched and sequential phase 2 are numerically identical.
 
+use crate::brownout::{degrade_level, BrownoutController};
 use crate::decision::{DecisionCache, DecisionKey, ProfileBucket};
-use crate::metrics::{Metrics, MetricsHub};
+use crate::metrics::{ClassCounts, Metrics, MetricsHub};
 use crate::obs::{JobTrace, Stage, TraceStamp, Tracer};
 use crate::sched::{EncodedReplyCache, Job, ReplySink, SegmentKey, SegmentReply, WireReply};
 use crate::session::{Session, SharedSessionTable};
@@ -38,9 +39,73 @@ use qpart_proto::messages::{
     ActivationUpload, EncodedSegmentBody, ErrorReply, HelloReply, InferRequest, LayerBlob,
     ModelInfo, PatternInfo, Request, Response, ResultReply, SegmentBlob, SimulateRequest,
 };
+use qpart_core::rng::Rng;
 use qpart_runtime::{Bundle, CompileCache, Executor, HostTensor, EVAL_BATCH};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Server-side fault injection (`--fault-inject`, env-gated behind
+/// `QPART_FAULT_INJECT=1` in the CLI): testing-only failure modes
+/// compiled in but default-off, used by the chaos/soak harness to prove
+/// the supervision and brownout machinery. A default (`is_noop`) spec is
+/// exactly the production path — the service drops it at construction.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultSpec {
+    /// Probability (0..=1) that handling an infer request panics the
+    /// worker thread (exercises `catch_unwind` + supervisor respawn).
+    pub worker_panic: f64,
+    /// Artificial delay per drained batch, milliseconds (drives queue
+    /// waits up so brownout demonstrably enters under load).
+    pub exec_delay_ms: u64,
+    /// Probability (0..=1) that an infer request fails with an injected
+    /// `internal` error before planning (exercises soft-failure paths).
+    pub alloc_fail: f64,
+}
+
+impl FaultSpec {
+    /// Parse the CLI form `worker-panic=P,exec-delay-ms=D,alloc-fail=P`
+    /// (any subset of keys, in any order).
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault-inject: `{part}` is not key=value"))?;
+            match key.trim() {
+                "worker-panic" => {
+                    spec.worker_panic = parse_prob(val)?;
+                }
+                "alloc-fail" => {
+                    spec.alloc_fail = parse_prob(val)?;
+                }
+                "exec-delay-ms" => {
+                    spec.exec_delay_ms = val
+                        .trim()
+                        .parse::<u64>()
+                        .map_err(|_| format!("fault-inject: bad delay `{val}`"))?;
+                }
+                other => return Err(format!("fault-inject: unknown key `{other}`")),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Whether this spec injects nothing (the production path).
+    pub fn is_noop(&self) -> bool {
+        *self == FaultSpec::default()
+    }
+}
+
+fn parse_prob(val: &str) -> Result<f64, String> {
+    let p = val
+        .trim()
+        .parse::<f64>()
+        .map_err(|_| format!("fault-inject: bad probability `{val}`"))?;
+    if !(0.0..=1.0).contains(&p) || !p.is_finite() {
+        return Err(format!("fault-inject: probability {p} outside 0..=1"));
+    }
+    Ok(p)
+}
 
 /// Options wiring a worker's service into the pool-shared execution
 /// plane.
@@ -60,6 +125,12 @@ pub struct ServiceOptions {
     /// are only recorded for jobs that carry a [`JobTrace`], so an idle
     /// tracer costs one `Option` check per job.
     pub tracer: Option<Tracer>,
+    /// Server-wide brownout controller (see [`crate::brownout`]). `None`
+    /// disables degradation entirely — the plan path is then untouched.
+    pub brownout: Option<Arc<BrownoutController>>,
+    /// Fault injection for the chaos harness; `None` (or a no-op spec)
+    /// is the production path.
+    pub faults: Option<FaultSpec>,
 }
 
 impl Default for ServiceOptions {
@@ -69,8 +140,19 @@ impl Default for ServiceOptions {
             decision_cache: Arc::new(DecisionCache::new()),
             host_fallback: false,
             tracer: None,
+            brownout: None,
+            faults: None,
         }
     }
+}
+
+/// One phase-1 request drained from the queue, with its reply sink,
+/// trace, and per-class attribution.
+struct InferJob {
+    req: InferRequest,
+    tx: ReplySink,
+    trace: Option<JobTrace>,
+    class: Option<Arc<ClassCounts>>,
 }
 
 /// One executor-pool worker's service (owns the non-`Send` PJRT executor;
@@ -100,6 +182,11 @@ pub struct Service {
     decision_cache: Arc<DecisionCache>,
     /// Span emitter for traced jobs (`None` disables span recording).
     tracer: Option<Tracer>,
+    /// Server-wide brownout controller; `None` disables degradation.
+    brownout: Option<Arc<BrownoutController>>,
+    /// Active fault injection with its own deterministic stream (`None`
+    /// on the production path; a no-op spec is dropped at construction).
+    faults: Option<(FaultSpec, Rng)>,
 }
 
 impl Service {
@@ -152,6 +239,17 @@ impl Service {
             reply_cache,
             decision_cache: opts.decision_cache,
             tracer: opts.tracer,
+            brownout: opts.brownout,
+            faults: opts.faults.filter(|f| !f.is_noop()).map(|f| {
+                // per-instance stream: a respawned worker must NOT replay
+                // the exact fault sequence that killed its predecessor
+                // (a shared label would turn first-draw panics into a
+                // permanent crash loop)
+                use std::sync::atomic::{AtomicU64, Ordering};
+                static FAULT_STREAM_SEQ: AtomicU64 = AtomicU64::new(0);
+                let n = FAULT_STREAM_SEQ.fetch_add(1, Ordering::Relaxed);
+                (f, Rng::from_label(0xFA17_0B5E, &format!("service/fault/{n}")))
+            }),
         })
     }
 
@@ -209,20 +307,60 @@ impl Service {
             return;
         }
         Metrics::inc(&self.metrics.batches_total);
+        if let Some((spec, _)) = &self.faults {
+            if spec.exec_delay_ms > 0 {
+                // injected slowdown: drives queue waits up so the chaos
+                // harness can prove brownout enters under load
+                std::thread::sleep(std::time::Duration::from_millis(spec.exec_delay_ms));
+            }
+        }
         let dequeued = Instant::now();
-        let mut infers: Vec<(InferRequest, ReplySink, Option<JobTrace>)> = Vec::new();
+        let mut infers: Vec<InferJob> = Vec::new();
         let mut uploads: Vec<(ActivationUpload, ReplySink, Option<JobTrace>)> = Vec::new();
         for job in jobs {
             let wait = dequeued.saturating_duration_since(job.enqueued);
             let wait_us = wait.as_micros() as u64;
             self.metrics.queue_wait.observe_us(wait_us);
+            if let Some(b) = &self.brownout {
+                b.observe_wait_us(wait_us);
+            }
             if let (Some(tr), Some(trace)) = (&self.tracer, job.trace) {
                 // span length ≡ the queue_wait histogram sample, exactly
                 let start = tr.sink().offset_us(job.enqueued);
                 tr.span(trace, Stage::QueueWait, start, start + wait_us);
             }
             match job.req {
-                Request::Infer(r) => infers.push((r, job.reply, job.trace)),
+                Request::Infer(r) => {
+                    // deadline-aware admission: a request that already
+                    // overstayed its deadline in the queue is answered
+                    // with a soft error instead of burning plan + encode
+                    // work on a reply the device will discard
+                    if let Some(d) = r.deadline_ms {
+                        if wait_us > d.saturating_mul(1000) {
+                            Metrics::inc(&self.metrics.requests_total);
+                            Metrics::inc(&self.metrics.deadline_shed_total);
+                            Metrics::inc(&self.metrics.errors_total);
+                            if let Some(c) = &job.class {
+                                Metrics::inc(&c.deadline_shed_total);
+                            }
+                            let stamp = self.stamp(job.trace);
+                            job.reply.send_with(
+                                WireReply::Msg(Self::err(
+                                    "deadline_exceeded",
+                                    format!("queued {wait_us}us against a {d}ms deadline"),
+                                )),
+                                stamp,
+                            );
+                            continue;
+                        }
+                    }
+                    infers.push(InferJob {
+                        req: r,
+                        tx: job.reply,
+                        trace: job.trace,
+                        class: job.class,
+                    });
+                }
                 Request::Activation(a) => uploads.push((a, job.reply, job.trace)),
                 req => {
                     let resp = self.handle(req);
@@ -236,12 +374,13 @@ impl Service {
     }
 
     /// Plan + group + encode-once + fan out (the coalescing core).
-    fn handle_infer_batch(&mut self, jobs: Vec<(InferRequest, ReplySink, Option<JobTrace>)>) {
+    fn handle_infer_batch(&mut self, jobs: Vec<InferJob>) {
         // one waiting connection within a group
         struct Pending {
             tx: ReplySink,
             objective: f64,
             trace: Option<JobTrace>,
+            degraded: bool,
         }
         // all same-key requests of this batch: one encode, many replies
         struct Group {
@@ -252,28 +391,53 @@ impl Service {
         }
         // plan every request; identical decisions coalesce into one group
         let mut groups: Vec<Group> = Vec::new();
-        for (r, tx, trace) in jobs {
+        for InferJob { req: r, tx, trace, class } in jobs {
             Metrics::inc(&self.metrics.requests_total);
             let t_req = Instant::now();
+            let mut inject_fail = false;
+            if let Some((spec, rng)) = self.faults.as_mut() {
+                if spec.worker_panic > 0.0 && rng.range_f64(0.0, 1.0) < spec.worker_panic {
+                    // the supervisor's catch_unwind + sink snapshot turn
+                    // this into error replies and a respawned worker
+                    panic!("fault-inject: worker-panic");
+                }
+                inject_fail =
+                    spec.alloc_fail > 0.0 && rng.range_f64(0.0, 1.0) < spec.alloc_fail;
+            }
+            if inject_fail {
+                Metrics::inc(&self.metrics.errors_total);
+                self.metrics.handle_latency.observe_us(t_req.elapsed().as_micros() as u64);
+                let stamp = self.stamp(trace);
+                tx.send_with(
+                    WireReply::Msg(Self::err("internal", "injected allocation failure")),
+                    stamp,
+                );
+                continue;
+            }
             match self.plan_infer(&r) {
-                Ok((arch, decision, plan_hit)) => {
+                Ok((arch, decision, plan_hit, degraded)) => {
+                    if degraded {
+                        Metrics::inc(&self.metrics.degraded_total);
+                        if let Some(c) = &class {
+                            Metrics::inc(&c.degraded_total);
+                        }
+                    }
                     if let (Some(tr), Some(trace)) = (&self.tracer, trace) {
                         let start = tr.sink().offset_us(t_req);
-                        tr.span_with(
-                            trace,
-                            Stage::Plan,
-                            start,
-                            tr.now_us(),
-                            vec![
-                                ("cache_hit", i64::from(plan_hit)),
-                                ("level", decision.level_idx as i64),
-                                ("partition", decision.pattern.partition as i64),
-                            ],
-                        );
+                        let mut notes = vec![
+                            ("cache_hit", i64::from(plan_hit)),
+                            ("level", decision.level_idx as i64),
+                            ("partition", decision.pattern.partition as i64),
+                        ];
+                        if degraded {
+                            notes.push(("degraded", 1));
+                        }
+                        tr.span_with(trace, Stage::Plan, start, tr.now_us(), notes);
                     }
                     let key: SegmentKey =
                         (r.model.clone(), decision.level_idx, decision.pattern.partition);
-                    let pending = Pending { tx, objective: decision.cost.objective, trace };
+                    let pending =
+                        Pending { tx, objective: decision.cost.objective, trace, degraded };
                     match groups.iter().position(|g| g.key == key) {
                         Some(i) => groups[i].pendings.push(pending),
                         None => groups.push(Group {
@@ -333,6 +497,7 @@ impl Service {
                             WireReply::Segment(SegmentReply {
                                 session,
                                 trace: p.trace.and_then(JobTrace::wire_id),
+                                degraded: p.degraded,
                                 objective: p.objective,
                                 body: Arc::clone(&body),
                             }),
@@ -418,9 +583,20 @@ impl Service {
     /// (model, level, profile-bucket) skips planning entirely. On
     /// success, the decided pattern determines the coalescing key; only
     /// the objective value remains per-request (and it is part of the
-    /// memoized decision — a pure function of the same key). The returned
-    /// bool is the decision-cache hit flag (surfaced in Plan spans).
-    fn plan_infer(&self, r: &InferRequest) -> Result<(ModelSpec, Arc<Decision>, bool), Response> {
+    /// memoized decision — a pure function of the same key). The first
+    /// returned bool is the decision-cache hit flag (surfaced in Plan
+    /// spans); the second is the brownout-degradation flag.
+    ///
+    /// **Brownout**: at ladder level `k`, the plan is biased up to `k`
+    /// accuracy levels coarser than the request's nominal selection —
+    /// but only when [`degrade_level`]'s table check proves every
+    /// candidate pattern's predicted degradation still fits the
+    /// request's budget. At level 0 (or with no controller) this is
+    /// byte-for-byte the pre-brownout plan path.
+    fn plan_infer(
+        &self,
+        r: &InferRequest,
+    ) -> Result<(ModelSpec, Arc<Decision>, bool, bool), Response> {
         let arch = match self.arch_for_model(&r.model) {
             Ok(a) => a.clone(),
             Err(e) => return Err(Self::err("unknown_model", e)),
@@ -430,22 +606,32 @@ impl Service {
             None => return Err(Self::err("unknown_model", &r.model)),
         };
         let t_dec = Instant::now();
-        let params = RequestParams {
-            cost: self.cost_model_for(r),
-            accuracy_budget: r.accuracy_budget,
-        };
         // the budget enters Algorithm 2 only through level selection, so
         // the cache keys on the selected level, not the raw budget (on a
         // miss serve_request_fast repeats this O(levels) scan — same
         // single implementation, a handful of float compares)
-        let level_idx = match set.select_level(r.accuracy_budget) {
+        let nominal = match set.select_level(r.accuracy_budget) {
             Ok(i) => i,
             Err(e) => return Err(Self::err("infeasible", e)),
         };
+        let rungs = self.brownout.as_ref().map(|b| b.level()).unwrap_or(0);
+        let level_idx = if rungs > 0 {
+            degrade_level(set, nominal, r.accuracy_budget, rungs)
+        } else {
+            nominal
+        };
+        let degraded = level_idx != nominal;
+        // when degraded, Algorithm 2 plans at the chosen level by
+        // substituting that level's own budget (select_level of which is
+        // exactly level_idx); the cache key shares entries with requests
+        // nominally at that level — the decision is the same pure
+        // function of (model, level, profile)
+        let budget = if degraded { set.levels[level_idx] } else { r.accuracy_budget };
+        let params = RequestParams { cost: self.cost_model_for(r), accuracy_budget: budget };
         let key: DecisionKey = (r.model.clone(), level_idx, ProfileBucket::of(&params.cost));
         if let Some(d) = self.decision_cache.get(&key) {
             self.metrics.decide_latency.observe_us(t_dec.elapsed().as_micros() as u64);
-            return Ok((arch, d, true));
+            return Ok((arch, d, true, degraded));
         }
         let decision = match serve_request_fast(&arch, set, &params) {
             Ok(d) => Arc::new(d),
@@ -453,7 +639,7 @@ impl Service {
         };
         self.decision_cache.insert(key, Arc::clone(&decision));
         self.metrics.decide_latency.observe_us(t_dec.elapsed().as_micros() as u64);
-        Ok((arch, decision, false))
+        Ok((arch, decision, false, degraded))
     }
 
     /// Fetch the encoded reply body for `key`, or quantize + pack +
@@ -511,10 +697,13 @@ impl Service {
     /// through [`Service::handle_batch`]): decide, fetch/encode, open a
     /// session.
     fn handle_infer(&mut self, r: &InferRequest) -> Response {
-        let (arch, decision, _) = match self.plan_infer(r) {
+        let (arch, decision, _, degraded) = match self.plan_infer(r) {
             Ok(x) => x,
             Err(resp) => return resp,
         };
+        if degraded {
+            Metrics::inc(&self.metrics.degraded_total);
+        }
         let key: SegmentKey = (r.model.clone(), decision.level_idx, decision.pattern.partition);
         let (body, _) = match self.encoded_for(&key, &decision.pattern) {
             Ok(b) => b,
@@ -524,7 +713,9 @@ impl Service {
         let session = self.sessions.open(&r.model, decision.pattern.clone(), boundary);
         Metrics::inc(&self.metrics.sessions_opened);
         Metrics::add(&self.metrics.bytes_out, body.wire_bytes());
-        Response::Segment(body.to_reply(session, decision.cost.objective))
+        let mut reply = body.to_reply(session, decision.cost.objective);
+        reply.degraded = degraded;
+        Response::Segment(reply)
     }
 
     /// Decode + validate one upload against its session: consume the

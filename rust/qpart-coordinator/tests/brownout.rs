@@ -1,0 +1,269 @@
+//! Brownout + supervision integration tests: under a storm the ladder
+//! must enter AND exit (the gauge returns to 0), every degraded reply
+//! must still satisfy its request's accuracy budget, and injected worker
+//! panics must become error replies plus respawned workers — never a
+//! wedged server. No PJRT required (synthetic bundle, host fallback).
+
+use qpart_coordinator::brownout::{degrade_level, MAX_LEVEL};
+use qpart_coordinator::client::paper_request;
+use qpart_coordinator::testing::{synthetic_bundle, synthetic_upload, tiny_arch, BlockingConn};
+use qpart_coordinator::{serve, FaultSpec, ServerConfig};
+use qpart_core::accuracy::CalibrationTable;
+use qpart_core::optimizer::{offline_quantize, OfflineConfig};
+use qpart_proto::messages::{Request, Response};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Poll `f` until it returns true or `deadline` elapses.
+fn wait_until<F: Fn() -> bool>(deadline: Duration, f: F) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    f()
+}
+
+#[test]
+fn degraded_levels_from_real_offline_tables_always_fit_the_budget() {
+    // the same tables Algorithm 1 hands the live server: whatever rung
+    // the ladder picks, every pattern at that level must fit the budget
+    let arch = tiny_arch();
+    let levels = [0.0025, 0.005, 0.01, 0.02, 0.05];
+    let calib = CalibrationTable::synthetic(&arch, &levels, 1);
+    let set = offline_quantize(&arch, &calib, OfflineConfig::default()).unwrap();
+    for (nominal, &budget) in set.levels.iter().enumerate() {
+        for rungs in 0..=MAX_LEVEL {
+            let j = degrade_level(&set, nominal, budget, rungs);
+            assert!(j >= nominal, "ladder must never refine below nominal");
+            assert!(j < set.levels.len());
+            assert!(
+                j <= nominal + rungs as usize,
+                "ladder overstepped its depth: {nominal} -> {j} with {rungs} rungs"
+            );
+            if j > nominal {
+                for p in &set.patterns[j] {
+                    assert!(
+                        p.predicted_degradation <= budget + 1e-12,
+                        "degraded level {j} breaks budget {budget}: predicted {}",
+                        p.predicted_degradation
+                    );
+                }
+            }
+        }
+        // zero rungs is the brownout-off fast path: always nominal
+        assert_eq!(degrade_level(&set, nominal, budget, 0), nominal);
+    }
+}
+
+#[test]
+fn brownout_enters_under_storm_exits_after_and_degrades_only_within_budget() {
+    let dir = synthetic_bundle("brownout-storm");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        host_fallback: true,
+        // a 500µs queue-wait threshold the injected 5ms batch delay is
+        // guaranteed to blow through while the flood runs
+        brownout_wait_us: 500,
+        fault_inject: Some(FaultSpec { exec_delay_ms: 5, ..FaultSpec::default() }),
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let budget = 0.02;
+    let floods: Vec<_> = (0..6)
+        .map(|_| {
+            let addr = addr.clone();
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || -> (u64, u64) {
+                let mut conn = BlockingConn::connect(&addr).unwrap();
+                let (mut served, mut degraded) = (0u64, 0u64);
+                while !stop.load(Ordering::Relaxed) {
+                    match conn.call(&Request::Infer(paper_request("tinymlp", budget))) {
+                        Ok(Response::Segment(r)) => {
+                            served += 1;
+                            if r.degraded {
+                                degraded += 1;
+                                // the acceptance invariant: a degraded
+                                // reply still satisfies its budget
+                                assert!(
+                                    r.pattern.predicted_degradation <= budget + 1e-9,
+                                    "degraded reply breaks budget {budget}: predicted {}",
+                                    r.pattern.predicted_degradation
+                                );
+                            }
+                        }
+                        Ok(Response::Error(e)) if e.code == "overloaded" => {}
+                        Ok(other) => panic!("unexpected {other:?}"),
+                        Err(e) => panic!("storm client: {e}"),
+                    }
+                }
+                (served, degraded)
+            })
+        })
+        .collect();
+
+    // the storm must push the ladder up...
+    assert!(
+        wait_until(Duration::from_secs(30), || {
+            handle.snapshot().brownout_enters_total > 0
+        }),
+        "brownout never entered under storm (ewma never crossed 500µs?)"
+    );
+    // ...hold it hot briefly so requests are actually planned at depth...
+    std::thread::sleep(Duration::from_millis(300));
+    stop.store(true, Ordering::Relaxed);
+    let mut served = 0u64;
+    let mut degraded = 0u64;
+    for f in floods {
+        let (s, d) = f.join().expect("storm client panicked");
+        served += s;
+        degraded += d;
+    }
+    assert!(served > 0, "storm served nothing");
+    println!("storm: {served} served, {degraded} degraded (all within budget)");
+
+    // ...and once the flood stops, the controller must step all the way
+    // back down: gauge to 0, with exit transitions recorded
+    assert!(
+        wait_until(Duration::from_secs(30), || handle.snapshot().brownout_level == 0),
+        "brownout gauge stuck at {} after the storm",
+        handle.snapshot().brownout_level
+    );
+    let snap = handle.snapshot();
+    assert!(snap.brownout_enters_total > 0);
+    assert!(snap.brownout_exits_total > 0, "entered but never exited");
+
+    // calm again: a fresh request is served undegraded
+    let mut conn = BlockingConn::connect(&addr).unwrap();
+    match conn.call(&Request::Infer(paper_request("tinymlp", budget))).unwrap() {
+        Response::Segment(r) => assert!(!r.degraded, "calm server still degrading"),
+        other => panic!("unexpected {other:?}"),
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_worker_panics_become_error_replies_and_workers_respawn() {
+    let dir = synthetic_bundle("panic-respawn");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        host_fallback: true,
+        fault_inject: Some(FaultSpec { worker_panic: 0.5, ..FaultSpec::default() }),
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+    let arch = tiny_arch();
+
+    // one synchronous client rides through the worker churn: every call
+    // gets an answer — a segment or a soft `internal` — never a hang or
+    // a dropped connection
+    let mut conn = BlockingConn::connect(&addr).unwrap();
+    let (mut oks, mut internals) = (0u64, 0u64);
+    for i in 0..40 {
+        match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))) {
+            Ok(Response::Segment(r)) => {
+                assert!(r.session > 0);
+                oks += 1;
+                // phase 2 completes on surviving sessions: the panic
+                // never poisons the shared caches or the session table
+                match conn.call(&Request::Activation(synthetic_upload(&r, &arch, i))) {
+                    Ok(Response::Result(_)) => {}
+                    Ok(Response::Error(e)) => {
+                        assert_eq!(e.code, "internal", "{}", e.message);
+                        internals += 1;
+                    }
+                    Ok(other) => panic!("unexpected {other:?}"),
+                    Err(e) => panic!("connection died mid-phase-2: {e}"),
+                }
+            }
+            Ok(Response::Error(e)) => {
+                assert_eq!(e.code, "internal", "{}", e.message);
+                internals += 1;
+            }
+            Ok(other) => panic!("unexpected {other:?}"),
+            Err(e) => panic!("connection died on a panicked worker: {e}"),
+        }
+    }
+    assert!(internals > 0, "worker-panic=0.5 never fired across 40 requests");
+    assert!(oks > 0, "no request survived the worker churn");
+
+    // the supervisor replaced every dead worker
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            handle.snapshot().worker_restarts_total > 0
+        }),
+        "panics fired ({internals} internal replies) but no worker restart was recorded"
+    );
+    println!(
+        "churn: {oks} ok, {internals} internal, {} restarts",
+        handle.snapshot().worker_restarts_total
+    );
+
+    // and the pool still serves after all that
+    match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))) {
+        Ok(Response::Segment(_)) | Ok(Response::Error(_)) => {}
+        Ok(other) => panic!("unexpected {other:?}"),
+        Err(e) => panic!("server wedged after restarts: {e}"),
+    }
+    drop(conn);
+    assert!(
+        wait_until(Duration::from_secs(5), || handle.snapshot().conns_open == 0),
+        "conns_open stuck at {}",
+        handle.snapshot().conns_open
+    );
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn deadline_already_blown_in_queue_is_shed_with_a_soft_error() {
+    let dir = synthetic_bundle("deadline-shed");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        host_fallback: true,
+        // every batch waits 200ms before draining: a 1ms deadline is
+        // deterministically blown in the queue
+        fault_inject: Some(FaultSpec { exec_delay_ms: 200, ..FaultSpec::default() }),
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    // warm the pipeline so the *next* request queues behind a delayed
+    // batch (the injected delay runs before the drain is inspected)
+    let mut conn = BlockingConn::connect(&addr).unwrap();
+    match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+        Response::Segment(_) => {}
+        other => panic!("unexpected {other:?}"),
+    }
+
+    let mut req = paper_request("tinymlp", 0.02);
+    req.deadline_ms = Some(1);
+    match conn.call(&Request::Infer(req)).unwrap() {
+        Response::Error(e) => assert_eq!(e.code, "deadline_exceeded", "{}", e.message),
+        other => panic!("blown deadline not shed: {other:?}"),
+    }
+    assert!(handle.snapshot().deadline_shed_total >= 1);
+
+    // an undeadlined request on the same connection still completes
+    match conn.call(&Request::Infer(paper_request("tinymlp", 0.02))).unwrap() {
+        Response::Segment(r) => assert!(r.session > 0),
+        other => panic!("unexpected {other:?}"),
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

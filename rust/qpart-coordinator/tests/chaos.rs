@@ -300,6 +300,90 @@ fn dropping_mid_phase2_leaves_no_orphaned_session_or_misrouted_reply() {
 }
 
 #[test]
+fn in_session_phase2_blob_fuzz_gets_error_replies_without_leaking_sessions() {
+    let dir = synthetic_bundle("chaos-blob-fuzz");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        host_fallback: true,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+    let arch = tiny_arch();
+    let mut conn = BlockingConn::connect(&addr).unwrap();
+    let infer = |conn: &mut BlockingConn| match conn
+        .call(&Request::Infer(paper_request("tinymlp", 0.02)))
+        .unwrap()
+    {
+        Response::Segment(r) => r,
+        other => panic!("unexpected {other:?}"),
+    };
+
+    // a decodable envelope whose upload targets a session that does not
+    // exist: refused per-request, and the REAL session is untouched
+    let reply = infer(&mut conn);
+    let mut bogus = synthetic_upload(&reply, &arch, 7);
+    bogus.session += 1_000_003;
+    match conn.call(&Request::Activation(bogus)).unwrap() {
+        Response::Error(e) => assert_eq!(e.code, "unknown_session", "{}", e.message),
+        other => panic!("unexpected {other:?}"),
+    }
+    // the untouched session then completes phase 2 normally
+    match conn.call(&Request::Activation(synthetic_upload(&reply, &arch, 7))).unwrap() {
+        Response::Result(_) => {}
+        other => panic!("fuzz poisoned a live session: {other:?}"),
+    }
+
+    // dims that disagree with the session's negotiated boundary: the
+    // upload is refused (consuming its session, by design — a device
+    // that corrupted its uplink re-plans from phase 1)
+    let reply = infer(&mut conn);
+    let mut wrong_dims = synthetic_upload(&reply, &arch, 8);
+    wrong_dims.dims = vec![1, 1_000_000];
+    match conn.call(&Request::Activation(wrong_dims)).unwrap() {
+        Response::Error(e) => assert_eq!(e.code, "bad_activation", "{}", e.message),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // a packed blob truncated below what dims×bits require: refused at
+    // the unpack layer, never executed
+    let reply = infer(&mut conn);
+    let mut short = synthetic_upload(&reply, &arch, 9);
+    let keep = short.packed.len() / 2;
+    short.packed.truncate(keep);
+    match conn.call(&Request::Activation(short)).unwrap() {
+        Response::Error(e) => assert_eq!(e.code, "bad_activation", "{}", e.message),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // the connection survived every refusal, and a fresh two-phase
+    // round trip still works end to end
+    assert!(matches!(conn.call(&Request::Ping).unwrap(), Response::Pong));
+    let reply = infer(&mut conn);
+    match conn.call(&Request::Activation(synthetic_upload(&reply, &arch, 10))).unwrap() {
+        Response::Result(_) => {}
+        other => panic!("server stopped serving after blob fuzz: {other:?}"),
+    }
+
+    // every fuzzed session was consumed or refused — none linger
+    assert!(
+        wait_until(Duration::from_secs(10), || handle.sessions.is_empty()),
+        "blob fuzz leaked sessions: {} live",
+        handle.sessions.len()
+    );
+    drop(conn);
+    assert!(
+        wait_until(Duration::from_secs(5), || handle.snapshot().conns_open == 0),
+        "conns_open stuck at {}",
+        handle.snapshot().conns_open
+    );
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn slow_loris_fleet_is_reaped_while_a_live_client_keeps_being_served() {
     let dir = synthetic_bundle("chaos-loris");
     let handle = serve(ServerConfig {

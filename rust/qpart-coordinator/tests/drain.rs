@@ -1,0 +1,121 @@
+//! Graceful-drain integration tests: once drain begins, in-flight work
+//! finishes and its replies are flushed, new connections are refused with
+//! a `draining` error, and every connection is released — on both the
+//! reactor and the thread-per-connection front-ends. No PJRT required
+//! (synthetic bundle, host-fallback phase 2).
+
+use qpart_coordinator::client::paper_request;
+use qpart_coordinator::testing::{synthetic_bundle, synthetic_upload, tiny_arch};
+use qpart_coordinator::{serve, FaultSpec, Frontend, ServerConfig};
+use qpart_proto::frame::{read_frame, write_frame};
+use qpart_proto::messages::{Request, Response};
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Poll `f` until it returns true or `deadline` elapses.
+fn wait_until<F: Fn() -> bool>(deadline: Duration, f: F) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    f()
+}
+
+/// The shared drain scenario: start a phase-2 round trip, flip the server
+/// into drain mode while the worker is still executing it (an injected
+/// 300ms batch delay guarantees the overlap), and assert the reply still
+/// arrives, new dials are refused with `draining`, and the server reaches
+/// zero open connections within the drain timeout.
+fn drain_finishes_in_flight_and_refuses_new(frontend: Frontend, tag: &str) {
+    let dir = synthetic_bundle(tag);
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        frontend,
+        host_fallback: true,
+        // slow the executor down so drain provably begins with the
+        // upload still in flight
+        fault_inject: Some(FaultSpec { exec_delay_ms: 300, ..FaultSpec::default() }),
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+    let arch = tiny_arch();
+
+    // phase 1 completes before the drain...
+    let raw = TcpStream::connect(&addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut w = raw.try_clone().unwrap();
+    let mut reader = BufReader::new(raw);
+    write_frame(&mut w, &Request::Infer(paper_request("tinymlp", 0.02)).to_line()).unwrap();
+    let reply = match Response::from_line(&read_frame(&mut reader).unwrap()).unwrap() {
+        Response::Segment(r) => r,
+        other => panic!("unexpected {other:?}"),
+    };
+
+    // ...then the phase-2 upload goes out, and drain begins while the
+    // delayed worker is still chewing on it
+    let upload = synthetic_upload(&reply, &arch, 4242);
+    write_frame(&mut w, &Request::Activation(upload).to_line()).unwrap();
+    std::thread::sleep(Duration::from_millis(100)); // front-end has read the frame
+    handle.begin_drain();
+    assert!(handle.draining());
+
+    // a fresh dial is refused with a soft `draining` error, not a hang
+    // or a silent close
+    let refused = TcpStream::connect(&addr).unwrap();
+    refused.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut refused_reader = BufReader::new(refused);
+    match Response::from_line(&read_frame(&mut refused_reader).unwrap()).unwrap() {
+        Response::Error(e) => assert_eq!(e.code, "draining", "{}", e.message),
+        other => panic!("drain refusal expected, got {other:?}"),
+    }
+
+    // the in-flight phase-2 reply is still delivered before the close
+    match Response::from_line(&read_frame(&mut reader).unwrap()).unwrap() {
+        Response::Result(r) => assert!(r.logits.iter().all(|l| l.is_finite())),
+        other => panic!("in-flight reply lost to drain: {other:?}"),
+    }
+
+    // once quiescent, the server hangs up on its own and `drain` reports
+    // a clean exit with zero open connections
+    assert!(
+        wait_until(Duration::from_secs(10), || handle.snapshot().conns_open == 0),
+        "draining server kept {} conns open",
+        handle.snapshot().conns_open
+    );
+    assert!(handle.drain(Duration::from_secs(10)), "drain timed out with conns open");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn reactor_drain_finishes_in_flight_work_and_refuses_new_connections() {
+    drain_finishes_in_flight_and_refuses_new(Frontend::Reactor, "drain-reactor");
+}
+
+#[test]
+fn threaded_drain_finishes_in_flight_work_and_refuses_new_connections() {
+    drain_finishes_in_flight_and_refuses_new(Frontend::Threaded, "drain-threaded");
+}
+
+#[test]
+fn drain_with_no_traffic_exits_immediately_and_clean() {
+    let dir = synthetic_bundle("drain-idle");
+    let handle = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        artifacts_dir: dir.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    assert!(!handle.draining());
+    let t0 = Instant::now();
+    assert!(handle.drain(Duration::from_secs(5)), "idle drain was not clean");
+    assert!(t0.elapsed() < Duration::from_secs(5), "idle drain burned its whole timeout");
+    let _ = std::fs::remove_dir_all(&dir);
+}

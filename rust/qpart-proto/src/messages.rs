@@ -57,11 +57,17 @@ pub struct HelloRequest {
     /// Serialized only when ≠ 1.0, so default hellos are byte-identical
     /// to older peers (absent field ≡ old peer).
     pub weight: f64,
+    /// Device-class label (e.g. `"phone"`, `"sensor"`): purely
+    /// observational — the server breaks its throttle/shed/degrade
+    /// counters out per class so the fleet's view can be cross-checked
+    /// against the clients'. Serialized only when non-empty, so unlabeled
+    /// hellos stay byte-identical to older peers (absent field ≡ old peer).
+    pub class: String,
 }
 
 impl Default for HelloRequest {
     fn default() -> HelloRequest {
-        HelloRequest { binary_frames: false, trace: false, weight: 1.0 }
+        HelloRequest { binary_frames: false, trace: false, weight: 1.0, class: String::new() }
     }
 }
 
@@ -85,6 +91,16 @@ pub struct InferRequest {
     pub memory_bits: u64,
     /// Objective weights ω/τ/η (None → server defaults).
     pub weights: Option<(f64, f64, f64)>,
+    /// Optional soft deadline in milliseconds, measured from server
+    /// receipt of the request. A request still waiting in the scheduler
+    /// queue past its deadline is shed at drain time with a
+    /// `deadline_exceeded` error line instead of being planned — by then
+    /// the device has given up, so serving it only adds queue pressure.
+    ///
+    /// Wire spec: serialized as an integer `deadline_ms` field only when
+    /// present, so deadline-less requests are byte-identical to older
+    /// peers (absent field ≡ old peer, which is never shed).
+    pub deadline_ms: Option<u64>,
 }
 
 /// Quantized boundary activation upload.
@@ -217,6 +233,12 @@ pub struct InferReply {
     pub session: u64,
     /// Echoed trace id (hello-negotiated tracing only; absent otherwise).
     pub trace: Option<u64>,
+    /// Brownout marker: the server planned this request at a coarser
+    /// accuracy level than its nominal Algorithm-2 choice (still within
+    /// the request's accuracy budget — degradation never exceeds it).
+    /// Serialized as `"degraded":true` only when set, so non-degraded
+    /// replies stay byte-identical to older peers.
+    pub degraded: bool,
     pub model: String,
     pub pattern: PatternInfo,
     pub segment: SegmentBlob,
@@ -236,6 +258,17 @@ pub struct ResultReply {
     pub server_us: u64,
 }
 
+/// Soft error line. Notable codes in the overload/failure paths:
+///
+/// - `"deadline_exceeded"` — the request's [`InferRequest::deadline_ms`]
+///   elapsed while it waited in the scheduler queue; it was shed before
+///   planning. Retry with a fresh deadline (ideally after backoff).
+/// - `"draining"` — the server received SIGTERM/SIGINT and refuses new
+///   connections while it finishes in-flight work; reconnect elsewhere.
+/// - `"overloaded"` / `"throttled"` — queue full / fair-queue token
+///   exhausted; back off and retry on the same connection.
+/// - `"internal"` — a worker failed (e.g. panicked) while serving the
+///   request; the connection survives and may retry.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ErrorReply {
     pub code: String,
@@ -316,6 +349,10 @@ impl Request {
                 if h.weight != 1.0 {
                     v.set("weight", h.weight.into());
                 }
+                // and for the observational class label
+                if !h.class.is_empty() {
+                    v.set("class", h.class.as_str().into());
+                }
                 v
             }
             Request::Infer(r) => {
@@ -351,6 +388,7 @@ impl Request {
                 binary_frames: v.opt_bool("binary_frames", false),
                 trace: v.opt_bool("trace", false),
                 weight: v.opt_f64("weight", 1.0),
+                class: v.get("class").and_then(Value::as_str).unwrap_or("").to_string(),
             })),
             "infer" => Ok(Request::Infer(InferRequest::from_json(v)?)),
             "activation" => Ok(Request::Activation(ActivationUpload {
@@ -406,6 +444,11 @@ impl InferRequest {
         if let Some((o, t, e)) = self.weights {
             v.set("weights", Value::num_arr(&[o, t, e]));
         }
+        // only serialized when set: deadline-less requests stay
+        // byte-identical to pre-deadline peers
+        if let Some(d) = self.deadline_ms {
+            v.set("deadline_ms", d.into());
+        }
         v
     }
 
@@ -436,6 +479,10 @@ impl InferRequest {
             kappa: v.opt_f64("kappa", 3e-27),
             memory_bits: v.opt_f64("memory_bits", 2.147_483_648e9) as u64,
             weights,
+            deadline_ms: v
+                .get("deadline_ms")
+                .and_then(Value::as_i64)
+                .and_then(|x| u64::try_from(x).ok()),
         })
     }
 }
@@ -516,6 +563,9 @@ impl InferReply {
         if let Some(t) = self.trace {
             fields.push(("trace", t.into()));
         }
+        if self.degraded {
+            fields.push(("degraded", true.into()));
+        }
         fields.push(("model", self.model.as_str().into()));
         fields.push(("pattern", self.pattern.to_json()));
         let mut v = Value::obj(fields);
@@ -551,6 +601,7 @@ impl InferReply {
         Ok(InferReply {
             session: v.req_u64("session")?,
             trace: opt_trace(&v),
+            degraded: v.opt_bool("degraded", false),
             model: v.req_str("model")?.to_string(),
             pattern: PatternInfo::from_json(v.req("pattern")?)?,
             segment: SegmentBlob { layers },
@@ -680,9 +731,23 @@ impl EncodedSegmentBody {
     /// right after the session id. `trace: None` is byte-identical to
     /// `json_line` — untraced connections pay nothing.
     pub fn json_line_traced(&self, session: u64, objective: f64, trace: Option<u64>) -> String {
+        self.json_line_stamped(session, objective, trace, false)
+    }
+
+    /// [`Self::json_line_traced`] plus the brownout `degraded` marker.
+    /// `degraded: false` is byte-identical to the untraced/unmarked
+    /// stampers — non-degraded replies pay nothing.
+    pub fn json_line_stamped(
+        &self,
+        session: u64,
+        objective: f64,
+        trace: Option<u64>,
+        degraded: bool,
+    ) -> String {
         format!(
-            "{{\"type\":\"segment\",\"session\":{session},{}\"model\":{},\"pattern\":{},\"layers\":{}}}",
+            "{{\"type\":\"segment\",\"session\":{session},{}{}\"model\":{},\"pattern\":{},\"layers\":{}}}",
             trace_splice(trace),
+            degraded_splice(degraded),
             self.model_json,
             self.pattern_json(objective),
             self.layers_json_str(),
@@ -694,9 +759,21 @@ impl EncodedSegmentBody {
     /// is byte-identical to `write_frame(json_line_traced(..))` output, but
     /// the middle (and by far largest) part is shared, not copied.
     pub fn json_frame_head(&self, session: u64, objective: f64, trace: Option<u64>) -> Vec<u8> {
+        self.json_frame_head_stamped(session, objective, trace, false)
+    }
+
+    /// [`Self::json_frame_head`] plus the brownout `degraded` marker.
+    pub fn json_frame_head_stamped(
+        &self,
+        session: u64,
+        objective: f64,
+        trace: Option<u64>,
+        degraded: bool,
+    ) -> Vec<u8> {
         format!(
-            "{{\"type\":\"segment\",\"session\":{session},{}\"model\":{},\"pattern\":{},\"layers\":",
+            "{{\"type\":\"segment\",\"session\":{session},{}{}\"model\":{},\"pattern\":{},\"layers\":",
             trace_splice(trace),
+            degraded_splice(degraded),
             self.model_json,
             self.pattern_json(objective),
         )
@@ -710,9 +787,21 @@ impl EncodedSegmentBody {
 
     /// [`Self::binary_header`] with an optional echoed trace id.
     pub fn binary_header_traced(&self, session: u64, objective: f64, trace: Option<u64>) -> String {
+        self.binary_header_stamped(session, objective, trace, false)
+    }
+
+    /// [`Self::binary_header_traced`] plus the brownout `degraded` marker.
+    pub fn binary_header_stamped(
+        &self,
+        session: u64,
+        objective: f64,
+        trace: Option<u64>,
+        degraded: bool,
+    ) -> String {
         format!(
-            "{{\"type\":\"segment\",\"session\":{session},{}\"model\":{},\"pattern\":{},\"layers\":{}}}",
+            "{{\"type\":\"segment\",\"session\":{session},{}{}\"model\":{},\"pattern\":{},\"layers\":{}}}",
             trace_splice(trace),
+            degraded_splice(degraded),
             self.model_json,
             self.pattern_json(objective),
             self.bin_layers_json,
@@ -732,7 +821,18 @@ impl EncodedSegmentBody {
         objective: f64,
         trace: Option<u64>,
     ) -> Option<Vec<u8>> {
-        let header = self.binary_header_traced(session, objective, trace);
+        self.binary_frame_head_stamped(session, objective, trace, false)
+    }
+
+    /// [`Self::binary_frame_head`] plus the brownout `degraded` marker.
+    pub fn binary_frame_head_stamped(
+        &self,
+        session: u64,
+        objective: f64,
+        trace: Option<u64>,
+        degraded: bool,
+    ) -> Option<Vec<u8>> {
+        let header = self.binary_header_stamped(session, objective, trace, degraded);
         let total = 4 + header.len() + self.blob.len();
         if total > MAX_FRAME_BYTES {
             return None;
@@ -752,6 +852,7 @@ impl EncodedSegmentBody {
         InferReply {
             session,
             trace: None,
+            degraded: false,
             model: self.model.clone(),
             pattern,
             segment: self.segment.clone(),
@@ -765,6 +866,16 @@ fn trace_splice(trace: Option<u64>) -> String {
     match trace {
         Some(t) => format!("\"trace\":{t},"),
         None => String::new(),
+    }
+}
+
+/// `"degraded":true,` (trailing comma) or empty — spliced right after the
+/// trace id, mirroring `Response::Segment`'s field order.
+fn degraded_splice(degraded: bool) -> &'static str {
+    if degraded {
+        "\"degraded\":true,"
+    } else {
+        ""
     }
 }
 
@@ -817,11 +928,15 @@ impl Response {
                     ("type", Value::from("segment")),
                     ("session", r.session.into()),
                 ];
-                // the trace id sits right after the session id so the
-                // cached-body splice (`json_line_traced`) can reproduce
-                // this serialization byte-for-byte
+                // the trace id (and the degraded marker) sit right after
+                // the session id so the cached-body splice
+                // (`json_line_stamped`) can reproduce this serialization
+                // byte-for-byte
                 if let Some(t) = r.trace {
                     fields.push(("trace", t.into()));
+                }
+                if r.degraded {
+                    fields.push(("degraded", true.into()));
                 }
                 fields.push(("model", r.model.as_str().into()));
                 fields.push(("pattern", r.pattern.to_json()));
@@ -894,6 +1009,7 @@ impl Response {
                 Ok(Response::Segment(InferReply {
                     session: v.req_u64("session")?,
                     trace: opt_trace(v),
+                    degraded: v.opt_bool("degraded", false),
                     model: v.req_str("model")?.to_string(),
                     pattern: PatternInfo::from_json(v.req("pattern")?)?,
                     segment: SegmentBlob { layers },
@@ -987,6 +1103,7 @@ mod tests {
             kappa: 3e-27,
             memory_bits: 1 << 31,
             weights: Some((1.0, 1.0, 1.0)),
+            deadline_ms: None,
         }
     }
 
@@ -994,6 +1111,7 @@ mod tests {
         InferReply {
             session: 7,
             trace: None,
+            degraded: false,
             model: "mlp6".into(),
             pattern: PatternInfo {
                 partition: 3,
@@ -1047,6 +1165,7 @@ mod tests {
         InferReply {
             session: rng.below(1 << 40),
             trace: None,
+            degraded: false,
             model: format!("model-{}", rng.below(100)),
             pattern: PatternInfo {
                 partition: n_layers,
@@ -1069,7 +1188,9 @@ mod tests {
             Request::Hello(HelloRequest { binary_frames: true, ..HelloRequest::default() }),
             Request::Hello(HelloRequest { trace: true, ..HelloRequest::default() }),
             Request::Hello(HelloRequest { weight: 0.25, ..HelloRequest::default() }),
+            Request::Hello(HelloRequest { class: "sensor".into(), ..HelloRequest::default() }),
             Request::Infer(infer_req()),
+            Request::Infer(InferRequest { deadline_ms: Some(250), ..infer_req() }),
             Request::Activation(ActivationUpload {
                 session: 42,
                 bits: 6,
@@ -1099,6 +1220,12 @@ mod tests {
             Response::Hello(HelloReply { binary_frames: true, trace: Some(42) }),
             Response::Segment(sample_reply()),
             Response::Segment(InferReply { trace: Some(17), ..sample_reply() }),
+            Response::Segment(InferReply { degraded: true, ..sample_reply() }),
+            Response::Segment(InferReply {
+                trace: Some(3),
+                degraded: true,
+                ..sample_reply()
+            }),
             Response::Result(ResultReply {
                 session: 7,
                 trace: None,
@@ -1265,6 +1392,108 @@ mod tests {
         match Request::from_line(&req.to_line()).unwrap() {
             Request::Hello(h) => assert_eq!(h.weight, 0.4),
             other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_field_compat_with_old_peers() {
+        // a deadline-less infer serializes exactly as before the field
+        // existed, so old servers never see it
+        let line = Request::Infer(infer_req()).to_line();
+        assert!(!line.contains("deadline"));
+        // old-peer bytes (no deadline field) parse as None
+        match Request::from_line(&line).unwrap() {
+            Request::Infer(r) => assert_eq!(r.deadline_ms, None),
+            other => panic!("unexpected {other:?}"),
+        }
+        // a set deadline round-trips
+        let req = Request::Infer(InferRequest { deadline_ms: Some(75), ..infer_req() });
+        match Request::from_line(&req.to_line()).unwrap() {
+            Request::Infer(r) => assert_eq!(r.deadline_ms, Some(75)),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn class_field_compat_with_old_peers() {
+        // an unlabeled hello serializes exactly as before the field existed
+        let line = Request::Hello(HelloRequest::default()).to_line();
+        assert!(!line.contains("class"));
+        match Request::from_line(r#"{"type":"hello","binary_frames":true}"#).unwrap() {
+            Request::Hello(h) => assert!(h.class.is_empty()),
+            other => panic!("unexpected {other:?}"),
+        }
+        let req = Request::Hello(HelloRequest { class: "phone".into(), ..HelloRequest::default() });
+        match Request::from_line(&req.to_line()).unwrap() {
+            Request::Hello(h) => assert_eq!(h.class, "phone"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn degraded_field_compat_with_old_peers() {
+        // non-degraded replies never carry the field — byte-identical to
+        // pre-brownout peers on both framings
+        let line = Response::Segment(sample_reply()).to_line();
+        assert!(!line.contains("degraded"));
+        let (header, _) = sample_reply().to_binary();
+        assert!(!header.contains("degraded"));
+        // a degraded reply round-trips over both framings
+        let marked = InferReply { degraded: true, ..sample_reply() };
+        match Response::from_line(&Response::Segment(marked.clone()).to_line()).unwrap() {
+            Response::Segment(s) => assert!(s.degraded),
+            other => panic!("unexpected {other:?}"),
+        }
+        let (header, blob) = marked.to_binary();
+        assert!(InferReply::from_binary(&header, &blob).unwrap().degraded);
+    }
+
+    #[test]
+    fn degraded_splices_match_full_serialization() {
+        let reply = sample_reply();
+        let body = EncodedSegmentBody::new(
+            &reply.model,
+            reply.pattern.clone(),
+            reply.segment.clone(),
+        );
+        // false is byte-identical to the unmarked stampers
+        assert_eq!(
+            body.json_line_stamped(7, 0.123, None, false),
+            body.json_line(7, 0.123),
+        );
+        assert_eq!(
+            body.binary_header_stamped(7, 0.123, Some(4), false),
+            body.binary_header_traced(7, 0.123, Some(4)),
+        );
+        // true matches the one-shot serialization paths byte-for-byte,
+        // with and without a trace id
+        for trace in [None, Some(99u64)] {
+            let marked = InferReply { trace, degraded: true, ..reply.clone() };
+            assert_eq!(
+                body.json_line_stamped(7, 0.123, trace, true),
+                Response::Segment(marked.clone()).to_line(),
+            );
+            let (direct_header, _) = marked.to_binary();
+            assert_eq!(body.binary_header_stamped(7, 0.123, trace, true), direct_header);
+
+            // frame-head splices concatenate to the whole-frame writes
+            let mut whole = Vec::new();
+            write_frame(&mut whole, &body.json_line_stamped(7, 0.123, trace, true)).unwrap();
+            let mut parts = body.json_frame_head_stamped(7, 0.123, trace, true);
+            parts.extend_from_slice(&body.layers_json_shared());
+            parts.extend_from_slice(JSON_FRAME_TAIL);
+            assert_eq!(parts, whole);
+
+            let mut whole = Vec::new();
+            write_binary_frame(
+                &mut whole,
+                &body.binary_header_stamped(7, 0.123, trace, true),
+                body.blob(),
+            )
+            .unwrap();
+            let mut parts = body.binary_frame_head_stamped(7, 0.123, trace, true).unwrap();
+            parts.extend_from_slice(&body.blob_shared());
+            assert_eq!(parts, whole);
         }
     }
 

@@ -29,7 +29,17 @@ use qpart_core::model::ModelSpec;
 use std::collections::HashMap;
 use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Lock a cache map, recovering from poison. A worker that panics inside
+/// a `get_or_build` closure (supervised + respawned by the coordinator)
+/// poisons the map's mutex *without* corrupting it — the insert only
+/// happens after the build returns `Ok`, so a poisoned map is simply one
+/// that is missing the entry whose build blew up. Serving the pool from
+/// it is safe; refusing to would turn one bad request into a dead server.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Cache key for segment-level state: `(model, partition, fingerprint)`.
 /// Prepared device segments use the pattern's bit fingerprint; phase-2
@@ -128,7 +138,7 @@ where
     K: Eq + Hash + Clone,
     F: FnOnce() -> Result<V>,
 {
-    let mut m = map.lock().unwrap();
+    let mut m = lock_recover(map);
     if let Some(v) = m.get(key) {
         hits.fetch_add(1, Ordering::Relaxed);
         return Ok((Arc::clone(v), false));
@@ -206,7 +216,7 @@ impl CompileCache {
     }
 
     fn note_compiled(&self, key: &CompileKey) {
-        *self.counts.lock().unwrap().entry(key.clone()).or_insert(0) += 1;
+        *lock_recover(&self.counts).entry(key.clone()).or_insert(0) += 1;
     }
 
     /// Cache lookups that found an entry.
@@ -227,33 +237,33 @@ impl CompileCache {
     /// Segment-level builds performed, summed over keys (prepared device
     /// segments + server plans).
     pub fn compilations(&self) -> u64 {
-        self.counts.lock().unwrap().values().sum()
+        lock_recover(&self.counts).values().sum()
     }
 
     /// Per-key build counts (the acceptance check: every value is ≤ 1).
     pub fn compile_counts(&self) -> HashMap<CompileKey, u64> {
-        self.counts.lock().unwrap().clone()
+        lock_recover(&self.counts).clone()
     }
 
     /// The worst per-key build count — 1 (or 0) when the once-per-key
     /// contract holds.
     pub fn max_compiles_per_key(&self) -> u64 {
-        self.counts.lock().unwrap().values().copied().max().unwrap_or(0)
+        lock_recover(&self.counts).values().copied().max().unwrap_or(0)
     }
 
     /// Resident compiled executables.
     pub fn exec_len(&self) -> usize {
-        self.execs.lock().unwrap().len()
+        lock_recover(&self.execs).len()
     }
 
     /// Resident prepared device segments.
     pub fn prepared_len(&self) -> usize {
-        self.prepared.lock().unwrap().len()
+        lock_recover(&self.prepared).len()
     }
 
     /// Resident phase-2 plans.
     pub fn plan_len(&self) -> usize {
-        self.plans.lock().unwrap().len()
+        lock_recover(&self.plans).len()
     }
 
     /// The `compile_cache` section of the coordinator's stats document.
@@ -334,6 +344,22 @@ mod tests {
         assert!(ok.is_ok());
         assert_eq!(cache.misses(), 2, "both lookups missed");
         assert_eq!(cache.hits(), 0);
+    }
+
+    #[test]
+    fn panicked_build_does_not_brick_the_cache() {
+        let cache = Arc::new(CompileCache::new());
+        let c2 = Arc::clone(&cache);
+        let joined = std::thread::spawn(move || {
+            let _ = c2.weights("boom", || panic!("injected build panic"));
+        })
+        .join();
+        assert!(joined.is_err(), "the build panic propagates to its thread");
+        // The panic happened while holding the weights mutex; the cache
+        // must keep serving (poison recovered, failed key stays absent).
+        let ok = cache.weights("m", || Ok(empty_weights()));
+        assert!(ok.is_ok());
+        assert!(cache.weights("boom", || Ok(empty_weights())).is_ok());
     }
 
     #[test]
