@@ -4,7 +4,8 @@
 //! qpart serve       [--config cfg.json] [--set k=v ...] [--listen addr] [--artifacts dir]
 //!                   [--workers N] [--queue N] [--sessions N] [--session-ttl SECS]
 //!                   [--batch-window MS] [--batch-max N] [--cache-bytes N]
-//!                   [--binary-frames true|false] [--warm-cache] [--host-fallback]
+//!                   [--binary-frames true|false] [--warm off|paper|log]
+//!                   [--store-dir dir] [--host-fallback]
 //!                   [--frontend reactor|threaded] [--max-conns N]
 //!                   [--conn-idle-secs S] [--fair-rate R] [--metrics-listen addr]
 //!                   [--trace-sample P] [--trace-slow-ms MS] [--trace-keep N]
@@ -13,7 +14,8 @@
 //!                   [--capacity-bps 2e8] [--clock-hz 2e8] [--artifacts dir] [--binary]
 //! qpart bench-serve [--clients 8] [--requests 32] [--workers 4] [--keys 3]
 //!                   [--batch-window 2] [--cache-bytes N] [--binary-frames true|false]
-//!                   [--phase2 B] [--warm-cache] [--sweep workers=1,2,4,8] [--csv]
+//!                   [--phase2 B] [--warm-cache B] [--store-dir dir]
+//!                   [--sweep workers=1,2,4,8] [--csv]
 //!                   [--frontend reactor|threaded] [--min-peak-conns N]
 //!                   [--fair-rate R] [--artifacts dir]
 //!                   [--scenario flashcrowd|file] [--time-scale S]
@@ -102,8 +104,18 @@ const USAGE: &str = "usage: qpart <serve|request|bench-serve|sim|offline|models>
                                 default 64 MiB)\n\
            [--binary-frames B]  allow binary-frame negotiation, symmetric: segment\n\
                                 replies down, activation uploads up (default true)\n\
-           [--warm-cache B]     pre-encode likely reply keys + pre-build phase-2\n\
-                                plans at startup (default false)\n\
+           [--warm M]           cache pre-warming at startup: 'off' (default),\n\
+                                'paper' (pre-encode likely reply keys +\n\
+                                pre-build phase-2 plans under the paper-default\n\
+                                profile), or 'log' (replay the --store-dir\n\
+                                segment log: the previous process's recorded\n\
+                                working set comes back byte-identical).\n\
+                                --warm-cache B remains as a deprecated alias\n\
+                                for off/paper\n\
+           [--store-dir D]      durable warm state: stage cache inserts into an\n\
+                                append-only CRC-guarded segment log under D\n\
+                                (flushed + compacted by the housekeeping\n\
+                                thread), replayed by --warm log (default off)\n\
            [--host-fallback B]  phase 2 on pure-Rust reference kernels, no PJRT\n\
                                 (linear archs only; default false)\n\
            [--frontend F]       connection handling: 'reactor' (default; one\n\
@@ -159,6 +171,11 @@ const USAGE: &str = "usage: qpart <serve|request|bench-serve|sim|offline|models>
            [--clients N] [--requests N-per-client] [--workers N] [--keys K]\n\
            [--batch-window MS] [--cache-bytes N] [--binary-frames B]\n\
            [--phase2 B] [--warm-cache B] [--host-fallback B]\n\
+           [--store-dir D]            durable-store restart measurement: run the\n\
+                                      load once cold with the segment log at D,\n\
+                                      drain, restart with --warm log, and report\n\
+                                      restart-to-p50-warm time plus first-wave\n\
+                                      hit counts and reply byte-identity\n\
            [--frontend F]             reactor (default) or threaded\n\
            [--min-peak-conns N]       fail unless peak open connections >= N\n\
                                       (the CI fleet-soak assertion)\n\
@@ -223,6 +240,29 @@ fn bool_flag(args: &Args, key: &str, default: bool) -> Result<bool, String> {
     }
 }
 
+/// Resolve the warm mode: `--warm off|paper|log` wins; the deprecated
+/// `--warm-cache B` boolean maps true → paper (warning once); otherwise
+/// the config's `serving.warm` (which applies the same aliasing to the
+/// `serving.warm_cache` key).
+fn warm_flag(args: &Args, cfg_warm: &str) -> Result<WarmMode, String> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if let Some(s) = args.get("warm") {
+        return WarmMode::parse(s);
+    }
+    if args.get("warm-cache").is_some() {
+        let on = bool_flag(args, "warm-cache", false)?;
+        if !WARNED.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "warning: --warm-cache is deprecated; use --warm {}",
+                if on { "paper" } else { "off" }
+            );
+        }
+        return Ok(if on { WarmMode::Paper } else { WarmMode::Off });
+    }
+    WarmMode::parse(cfg_warm)
+}
+
 /// Parse `--frontend reactor|threaded`.
 fn frontend_flag(args: &Args, default: Frontend) -> Result<Frontend, String> {
     match args.get("frontend") {
@@ -273,7 +313,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         trace_slow_keep: args.get_usize("trace-keep", 8)?,
         trace_store: args.get_usize("trace-store", 1024)?,
         record_trace: args.get("record-trace").map(str::to_string),
-        warm_cache: bool_flag(args, "warm-cache", serving.warm_cache)?,
+        warm: warm_flag(args, &serving.warm)?,
+        store_dir: {
+            let dir = args.get_or("store-dir", &serving.store_dir).to_string();
+            if dir.is_empty() { None } else { Some(dir) }
+        },
         host_fallback: bool_flag(args, "host-fallback", synth_dir.is_some())?,
         brownout_wait_us: (args.get_f64("brownout-ms", 0.0)?.max(0.0) * 1000.0) as u64,
         job_timeout: Duration::from_millis(args.get_usize("job-timeout-ms", 0)? as u64),
@@ -284,14 +328,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         },
     };
     println!(
-        "loading bundle from '{}' ({} workers, queue {}, batch window {:?}, cache {} MiB, binary frames {}, warm cache {}, frontend {:?}, max conns {}, conn idle {:?}, fair rate {}) ...",
+        "loading bundle from '{}' ({} workers, queue {}, batch window {:?}, cache {} MiB, binary frames {}, warm {}, store {}, frontend {:?}, max conns {}, conn idle {:?}, fair rate {}) ...",
         server_cfg.artifacts_dir,
         server_cfg.workers,
         server_cfg.queue_capacity,
         server_cfg.batch_window,
         server_cfg.cache_bytes >> 20,
         server_cfg.binary_frames,
-        server_cfg.warm_cache,
+        server_cfg.warm.as_str(),
+        server_cfg.store_dir.as_deref().unwrap_or("off"),
         server_cfg.frontend,
         server_cfg.max_conns,
         server_cfg.conn_idle,
@@ -646,6 +691,7 @@ fn run_bench_serve(
     let cache_bytes = args.get_usize("cache-bytes", 64 << 20)?;
     let binary = bool_flag(args, "binary-frames", true)?;
     let warm = bool_flag(args, "warm-cache", false)?;
+    let store_dir = args.get("store-dir").map(str::to_string);
     let trace_out = args.get("trace-out").map(str::to_string);
     let scrape_check = bool_flag(args, "scrape-check", false)?;
     let brownout_us = (args.get_f64("brownout-ms", 0.0)?.max(0.0) * 1000.0) as u64;
@@ -676,7 +722,8 @@ fn run_bench_serve(
         trace_sample: if trace_out.is_some() { 1.0 } else { 0.0 },
         trace_store: if trace_out.is_some() { 65536 } else { 1024 },
         metrics_listen: if scrape_check { Some("127.0.0.1:0".into()) } else { None },
-        warm_cache: warm,
+        warm: if warm { WarmMode::Paper } else { WarmMode::Off },
+        store_dir: store_dir.clone(),
         host_fallback,
         brownout_wait_us: brownout_us,
         fault_inject: faults,
@@ -1174,7 +1221,93 @@ fn run_bench_serve(
             json.len()
         );
     }
-    handle.shutdown();
+    // durable-store restart measurement: capture a cold control reply per
+    // coalescing class, drain the loaded server (flushing the segment log
+    // on the way down), bring a fresh process-equivalent up with
+    // `--warm log`, and report restart-to-p50-warm — the time from
+    // starting the new server until half the first wave has been served
+    // off the replayed caches, byte-identical and without a single new
+    // encode.
+    if let Some(dir) = &store_dir {
+        let mut control = Vec::with_capacity(keys);
+        {
+            let mut conn = BlockingConn::connect(&addr)?;
+            for k in 0..keys {
+                let mut req = paper_request(model, 0.02);
+                req.channel_capacity_bps = 50e6 * (1 + k) as f64;
+                control.push(checked_infer(&mut conn, &Request::Infer(req), retries)?);
+            }
+        }
+        if !handle.drain(Duration::from_secs(10)) {
+            return Err("store restart: drain timed out before the warm restart".into());
+        }
+        let t_up = Instant::now();
+        let warm_handle = serve(qpart::coordinator::ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            workers,
+            queue_capacity: args.get_usize("queue", 1024)?,
+            batch_window: Duration::from_micros((window_ms * 1000.0).max(0.0) as u64),
+            cache_bytes,
+            binary_frames: binary,
+            frontend,
+            max_conns: args.get_usize("max-conns", 4096)?,
+            warm: WarmMode::Log,
+            store_dir: Some(dir.clone()),
+            host_fallback,
+            artifacts_dir: artifacts_dir.to_string(),
+            ..Default::default()
+        })?;
+        // worker 0 replays before reporting ready, so serve() returned
+        // with the caches already populated — the counter is final here
+        let warmed = warm_handle.snapshot().warmed_total;
+        if warmed == 0 {
+            warm_handle.shutdown();
+            return Err(
+                "store restart: warmed_total still 0 after `--warm log` replay (empty log?)"
+                    .into(),
+            );
+        }
+        let mut conn = BlockingConn::connect(&warm_handle.addr.to_string())?;
+        let mut done_us = Vec::with_capacity(keys);
+        for (k, cold) in control.iter().enumerate() {
+            let mut req = paper_request(model, 0.02);
+            req.channel_capacity_bps = 50e6 * (1 + k) as f64;
+            let reply = checked_infer(&mut conn, &Request::Infer(req), retries)?;
+            done_us.push(t_up.elapsed().as_micros() as u64);
+            if reply.segment != cold.segment || reply.pattern != cold.pattern {
+                warm_handle.shutdown();
+                return Err(format!(
+                    "store restart: warmed reply for class {k} differs from the cold control"
+                ));
+            }
+        }
+        let snap = warm_handle.snapshot();
+        warm_handle.shutdown();
+        if snap.encodes_total != 0 {
+            return Err(format!(
+                "store restart: first wave triggered {} fresh encodes — the replay did \
+                 not warm the reply cache",
+                snap.encodes_total
+            ));
+        }
+        if snap.cache_hits == 0 || snap.decision_hits == 0 {
+            return Err(format!(
+                "store restart: first-wave hit counters are zero (reply {}, decision {})",
+                snap.cache_hits, snap.decision_hits
+            ));
+        }
+        // sequential wave ⇒ completion times are monotone; the p50 element
+        // is when half the wave was warm-served
+        let p50_warm_ms = done_us[(done_us.len() - 1) / 2] as f64 / 1000.0;
+        println!(
+            "store restart: {warmed} entries replayed from {dir}, restart→p50-warm \
+             {p50_warm_ms:.1} ms, first wave {} reply hits / {} decision hits over {keys} \
+             classes, 0 fresh encodes, replies byte-identical to cold control: OK",
+            snap.cache_hits, snap.decision_hits,
+        );
+    } else {
+        handle.shutdown();
+    }
     Ok(summary.expect("two passes always ran"))
 }
 

@@ -31,24 +31,23 @@
 //! re-plan there costs µs, and never caching failures means a transient
 //! mis-profile can't poison the cache for its whole bucket.
 
+use crate::sched::batch::lock_recover;
+use crate::store::{keys, CacheCore, Column, EvictPolicy, StoreTier};
 use qpart_core::cost::CostModel;
 use qpart_core::json::Value;
 use qpart_core::optimizer::Decision;
-use std::collections::HashMap;
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 /// Take the shared lock, recovering from poison: a worker that panicked
 /// while holding the lock (supervised + respawned since PR 9) leaves the
 /// map structurally intact — every mutation below is a single-step
 /// HashMap/VecDeque operation — so serving from it is safe.
-fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+pub(crate) fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
     l.read().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Write-lock counterpart of [`read_recover`].
-fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+pub(crate) fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
     l.write().unwrap_or_else(|e| e.into_inner())
 }
 
@@ -84,6 +83,52 @@ pub struct ProfileBucket {
 }
 
 impl ProfileBucket {
+    /// Fixed-width little-endian encoding for store keys: 13 × 8 bytes in
+    /// declaration order (device, memory_bits, server, channel, weights).
+    pub fn to_bytes(&self) -> [u8; 104] {
+        let mut out = [0u8; 104];
+        let mut at = 0;
+        let mut push = |v: i64| {
+            out[at..at + 8].copy_from_slice(&v.to_le_bytes());
+            at += 8;
+        };
+        for d in self.device {
+            push(d);
+        }
+        push(self.memory_bits as i64);
+        for s in self.server {
+            push(s);
+        }
+        for c in self.channel {
+            push(c);
+        }
+        for w in self.weights {
+            push(w);
+        }
+        out
+    }
+
+    /// Inverse of [`ProfileBucket::to_bytes`]; `None` on a wrong-length
+    /// slice (a foreign or truncated store key).
+    pub fn from_bytes(bytes: &[u8]) -> Option<ProfileBucket> {
+        if bytes.len() != 104 {
+            return None;
+        }
+        let mut at = 0;
+        let mut next = || {
+            let v = i64::from_le_bytes(bytes[at..at + 8].try_into().expect("8-byte chunk"));
+            at += 8;
+            v
+        };
+        Some(ProfileBucket {
+            device: [next(), next(), next()],
+            memory_bits: next() as u64,
+            server: [next(), next(), next(), next()],
+            channel: [next(), next()],
+            weights: [next(), next(), next()],
+        })
+    }
+
     /// Bucket every continuous field of `cost` (see the module docs).
     pub fn of(cost: &CostModel) -> ProfileBucket {
         ProfileBucket {
@@ -117,22 +162,19 @@ pub type DecisionKey = (String, usize, ProfileBucket);
 
 /// Server-wide memoization of Algorithm-2 decisions. Shared across all
 /// pool workers via `Arc`; one entry per `(model, level, profile bucket)`.
+///
+/// Since the store tier landed, this type is a typed **facade** over
+/// [`CacheCore`] with FIFO eviction (the working set is small and stable;
+/// recency tracking would buy nothing — FIFO lookups also stay on the
+/// shared lock, so the plan path never serializes the pool on cache
+/// hits). When a [`StoreTier`] is attached, every insert stages the
+/// bit-exact encoded decision for the segment log and every eviction
+/// stages a delete, so a `--warm log` restart replays the live set.
 pub struct DecisionCache {
     capacity: usize,
-    /// Read-mostly by design (steady-state lookups are hits), so reads
-    /// take a shared lock — the plan path never serializes the pool on
-    /// cache hits.
-    inner: RwLock<Inner>,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
-}
-
-struct Inner {
-    map: HashMap<DecisionKey, Arc<Decision>>,
-    /// Insertion order for FIFO eviction (the working set is small and
-    /// stable; recency tracking would buy nothing).
-    order: VecDeque<DecisionKey>,
+    core: CacheCore<DecisionKey, Arc<Decision>>,
+    /// Durable tier, when serving with `--store-dir`.
+    store: Mutex<Option<Arc<StoreTier>>>,
 }
 
 impl std::fmt::Debug for DecisionCache {
@@ -160,63 +202,67 @@ impl DecisionCache {
     pub fn with_capacity(capacity: usize) -> DecisionCache {
         DecisionCache {
             capacity: capacity.max(1),
-            inner: RwLock::new(Inner { map: HashMap::new(), order: VecDeque::new() }),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
+            core: CacheCore::new(EvictPolicy::FifoCap { capacity: capacity.max(1) }),
+            store: Mutex::new(None),
         }
+    }
+
+    /// Attach the durable tier: subsequent inserts stage their encoded
+    /// decisions for the segment log, evictions stage deletes.
+    pub fn attach_store(&self, tier: Arc<StoreTier>) {
+        *lock_recover(&self.store) = Some(tier);
     }
 
     /// Look up a memoized decision, counting the hit/miss. Lookups take
     /// the shared (read) lock: concurrent workers never contend unless
     /// one is inserting.
     pub fn get(&self, key: &DecisionKey) -> Option<Arc<Decision>> {
-        let inner = read_recover(&self.inner);
-        match inner.map.get(key) {
-            Some(d) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(Arc::clone(d))
-            }
-            None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
-        }
+        self.core.get(key)
     }
 
     /// Publish a freshly planned decision (idempotent across racing
     /// workers — last write wins, the decisions are equal).
     pub fn insert(&self, key: DecisionKey, decision: Arc<Decision>) {
-        let mut inner = write_recover(&self.inner);
-        if inner.map.insert(key.clone(), decision).is_none() {
-            inner.order.push_back(key);
+        self.insert_inner(key, decision, true)
+    }
+
+    /// Insert an entry replayed *from* the log (`--warm log`): identical
+    /// residency semantics, but the decision is not re-staged.
+    pub fn insert_warm(&self, key: DecisionKey, decision: Arc<Decision>) {
+        self.insert_inner(key, decision, false)
+    }
+
+    fn insert_inner(&self, key: DecisionKey, decision: Arc<Decision>, persist: bool) {
+        let store = lock_recover(&self.store).clone();
+        let encoded = keys::encode_decision(&decision);
+        if persist {
+            if let Some(tier) = &store {
+                tier.stage_put(Column::Decision, keys::encode_decision_key(&key), encoded.clone());
+            }
         }
-        while inner.map.len() > self.capacity {
-            match inner.order.pop_front() {
-                Some(victim) => {
-                    inner.map.remove(&victim);
-                    self.evictions.fetch_add(1, Ordering::Relaxed);
-                }
-                None => break,
+        let evicted = self.core.insert(key, decision, encoded.len() as u64);
+        if let Some(tier) = &store {
+            for victim in &evicted {
+                tier.stage_delete(Column::Decision, keys::encode_decision_key(victim));
             }
         }
     }
 
     pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.core.hits()
     }
 
     pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.core.misses()
     }
 
     pub fn evictions(&self) -> u64 {
-        self.evictions.load(Ordering::Relaxed)
+        self.core.evictions()
     }
 
     /// Resident entries.
     pub fn len(&self) -> usize {
-        read_recover(&self.inner).map.len()
+        self.core.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -230,7 +276,13 @@ impl DecisionCache {
         h / (h + m)
     }
 
-    /// The `decision_cache` section of the stats document.
+    /// The unified stats shape (the `caches.decision` section).
+    pub fn stats(&self) -> crate::store::CacheStats {
+        self.core.stats()
+    }
+
+    /// The `decision_cache` section of the stats document (legacy shape,
+    /// kept as an alias for one release).
     pub fn to_json(&self) -> Value {
         Value::obj([
             ("entries", self.len().into()),
@@ -332,6 +384,37 @@ mod tests {
         let mut newest = CostModel::paper_default();
         newest.device.memory_bits = 3;
         assert!(cache.get(&key("m", &newest)).is_some());
+    }
+
+    #[test]
+    fn attached_store_round_trips_decisions_bit_exact() {
+        let dir =
+            std::env::temp_dir().join(format!("qpart-dcache-{}-stage", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let tier = StoreTier::open(&dir).unwrap();
+        let cache = DecisionCache::with_capacity(1);
+        cache.attach_store(Arc::clone(&tier));
+        let cost = CostModel::paper_default();
+        let d = decision();
+        cache.insert(key("m", &cost), Arc::clone(&d));
+        tier.flush();
+        let persisted = tier
+            .get(Column::Decision, &keys::encode_decision_key(&key("m", &cost)))
+            .expect("decision persisted");
+        let replayed = keys::decode_decision(&persisted).expect("persisted decision decodes");
+        assert_eq!(replayed.pattern, d.pattern);
+        assert_eq!(replayed.level_idx, d.level_idx);
+        assert_eq!(replayed.cost.objective.to_bits(), d.cost.objective.to_bits());
+        // capacity-1 cache: the next insert evicts the first, which
+        // stages a delete; warm inserts never stage
+        cache.insert(key("other", &cost), Arc::clone(&d));
+        tier.flush();
+        assert!(tier
+            .get(Column::Decision, &keys::encode_decision_key(&key("m", &cost)))
+            .is_none());
+        cache.insert_warm(key("warm", &cost), d);
+        assert_eq!(tier.staged_len(), 1, "only the warm insert's eviction is staged");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

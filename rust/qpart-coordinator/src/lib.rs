@@ -56,6 +56,12 @@
 //!   `/trace/slow` on the metrics listener, slow-request exemplars, and
 //!   Chrome trace-event export; plus the [`obs::TrafficRecorder`] that
 //!   captures live traffic into the scenario engine's `trace v1` format.
+//! * [`store`] — the **store tier** under the caches: a calimero-style
+//!   `Layer`/`ReadLayer`/`WriteLayer` trait stack with typed keys, the
+//!   one [`store::CacheCore`] eviction engine every cache facade wraps,
+//!   and the append-only CRC-guarded segment log (`--store-dir`) whose
+//!   replay (`--warm log`) brings the decision/reply caches and phase-2
+//!   plans up hot after a restart.
 //! * [`metrics`] — per-worker counters + histograms (including
 //!   `queue_wait` and the batching/encode counters), aggregated by a
 //!   [`MetricsHub`] — together with the encoded-reply cache's
@@ -80,6 +86,7 @@ pub mod sched;
 pub mod server;
 pub mod service;
 pub mod session;
+pub mod store;
 pub mod testing;
 
 pub use brownout::{degrade_level, BrownoutController};
@@ -88,6 +95,7 @@ pub use decision::{DecisionCache, DecisionKey, ProfileBucket};
 pub use metrics::{Metrics, MetricsHub, MetricsSnapshot};
 pub use obs::{JobTrace, Stage, TraceSink, TraceStamp, Tracer, TrafficRecorder};
 pub use sched::{BatchPolicy, EncodedReplyCache, Job, ReplyRouter, ReplySink, WireReply};
-pub use server::{serve, Frontend, ServerConfig, ServerHandle};
+pub use server::{serve, Frontend, ServerConfig, ServerHandle, WarmMode};
 pub use service::{FaultSpec, Service, ServiceOptions};
 pub use session::{Session, SessionTable, SharedSessionTable};
+pub use store::{CacheStats, StoreTier};

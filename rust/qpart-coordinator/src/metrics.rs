@@ -31,6 +31,7 @@
 use crate::decision::DecisionCache;
 use crate::obs::TraceSink;
 use crate::sched::EncodedReplyCache;
+use crate::store::{CacheStats, StoreTier};
 use qpart_core::json::Value;
 use qpart_runtime::CompileCache;
 use std::collections::HashMap;
@@ -615,6 +616,12 @@ impl ClassCounts {
                 "sched_throttled_total",
                 self.sched_throttled_total.load(Ordering::Relaxed).into(),
             ),
+            // alias matching the scrape's `qpart_class_throttled_total`
+            // (the ROADMAP follow-up name; both spellings are served)
+            (
+                "throttled_total",
+                self.sched_throttled_total.load(Ordering::Relaxed).into(),
+            ),
             (
                 "deadline_shed_total",
                 self.deadline_shed_total.load(Ordering::Relaxed).into(),
@@ -684,6 +691,7 @@ pub struct MetricsHub {
     segment_cache: Mutex<Option<Arc<EncodedReplyCache>>>,
     compile_cache: Mutex<Option<Arc<CompileCache>>>,
     decision_cache: Mutex<Option<Arc<DecisionCache>>>,
+    store: Mutex<Option<Arc<StoreTier>>>,
     trace: Mutex<Option<Arc<TraceSink>>>,
 }
 
@@ -741,6 +749,18 @@ impl MetricsHub {
     /// The registered decision cache, if any.
     pub fn decision_cache(&self) -> Option<Arc<DecisionCache>> {
         self.decision_cache.lock().unwrap().clone()
+    }
+
+    /// Register the durable store tier (`--store-dir`) so the stats
+    /// document carries a `store` section and the scrape the
+    /// `qpart_store_*` series.
+    pub fn register_store(&self, tier: Arc<StoreTier>) {
+        *self.store.lock().unwrap() = Some(tier);
+    }
+
+    /// The registered store tier, if any.
+    pub fn store(&self) -> Option<Arc<StoreTier>> {
+        self.store.lock().unwrap().clone()
     }
 
     /// Register the server-wide trace sink so the metrics listener can
@@ -934,7 +954,49 @@ impl MetricsHub {
         if let Some(cache) = self.decision_cache() {
             v.set("decision_cache", cache.to_json());
         }
+        // the unified cache-stats section: one [`CacheStats`] shape per
+        // cache, keyed by the scrape's `cache=` label values (the
+        // per-cache sections above are legacy aliases, kept one release)
+        let caches: Vec<(String, Value)> = self
+            .cache_stats()
+            .into_iter()
+            .map(|(label, stats)| (label.to_string(), stats.to_json()))
+            .collect();
+        if !caches.is_empty() {
+            v.set("caches", Value::Obj(caches));
+        }
+        if let Some(tier) = self.store() {
+            v.set("store", tier.to_json());
+        }
         v
+    }
+
+    /// The unified [`CacheStats`] of every registered cache, labelled as
+    /// the scrape and the stats document's `caches` section key them.
+    /// The compile cache has no byte accounting or eviction (compiled
+    /// artifacts live for the server's lifetime), so those read 0.
+    fn cache_stats(&self) -> Vec<(&'static str, CacheStats)> {
+        let mut out = Vec::new();
+        if let Some(cache) = self.segment_cache() {
+            out.push(("reply", cache.stats()));
+        }
+        if let Some(cache) = self.decision_cache() {
+            out.push(("decision", cache.stats()));
+        }
+        if let Some(cache) = self.compile_cache() {
+            out.push((
+                "compile",
+                CacheStats {
+                    hits: cache.hits(),
+                    misses: cache.misses(),
+                    entries: (cache.exec_len() + cache.prepared_len() + cache.plan_len())
+                        as u64,
+                    bytes: 0,
+                    evictions: 0,
+                },
+            ));
+        }
+        out
     }
 
     /// The plaintext scrape document for the `--metrics-listen` endpoint,
@@ -1049,6 +1111,13 @@ impl MetricsHub {
                         "class_sched_throttled_total",
                         "Fair-queue throttles by device class",
                         0usize,
+                    ),
+                    // the ROADMAP follow-up name (PR 6): same counter,
+                    // both spellings served
+                    (
+                        "class_throttled_total",
+                        "Fair-queue throttles by device class (alias)",
+                        0,
                     ),
                     ("class_deadline_shed_total", "Deadline sheds by device class", 1),
                     ("class_degraded_total", "Brownout degradations by device class", 2),
@@ -1199,6 +1268,82 @@ impl MetricsHub {
             "Pool-wide compile-cache builds",
             compilations_total as f64,
         );
+        {
+            // the unified labelled cache series (one set of names, a
+            // `cache=` label per cache — the per-cache spellings above
+            // are legacy aliases)
+            use std::fmt::Write as _;
+            let caches = self.cache_stats();
+            if !caches.is_empty() {
+                for (metric, typ, help, pick) in [
+                    ("cache_hits_total", c, "Cache hits by cache", 0usize),
+                    ("cache_misses_total", c, "Cache misses by cache", 1),
+                    ("cache_entries", g, "Resident cache entries by cache", 2),
+                    ("cache_bytes", g, "Resident cache bytes by cache", 3),
+                    ("cache_evictions_total", c, "Cache evictions by cache", 4),
+                ] {
+                    let _ = writeln!(out, "# HELP qpart_{metric} {help}");
+                    let _ = writeln!(out, "# TYPE qpart_{metric} {typ}");
+                    for (label, s) in &caches {
+                        let v = match pick {
+                            0 => s.hits,
+                            1 => s.misses,
+                            2 => s.entries,
+                            3 => s.bytes,
+                            _ => s.evictions,
+                        };
+                        let _ = writeln!(out, "qpart_{metric}{{cache=\"{label}\"}} {v}");
+                    }
+                }
+            }
+        }
+        if let Some(tier) = self.store() {
+            let (records, log_bytes, live, corrupt, io_errors, compactions, flushes) =
+                tier.counters();
+            put(
+                &mut out,
+                "store_records_total",
+                c,
+                "Records appended to the segment log",
+                records as f64,
+            );
+            put(&mut out, "store_log_bytes", g, "Segment log size on disk", log_bytes as f64);
+            put(
+                &mut out,
+                "store_live_entries",
+                g,
+                "Live keys in the segment log",
+                live as f64,
+            );
+            put(
+                &mut out,
+                "store_corrupt_records_total",
+                c,
+                "CRC-corrupt records skipped at log replay",
+                corrupt as f64,
+            );
+            put(
+                &mut out,
+                "store_io_errors_total",
+                c,
+                "Segment-log append/encode failures",
+                io_errors as f64,
+            );
+            put(
+                &mut out,
+                "store_compactions_total",
+                c,
+                "Live-key rewrites of the segment log",
+                compactions as f64,
+            );
+            put(
+                &mut out,
+                "store_flushes_total",
+                c,
+                "Staged-op flushes into the segment log",
+                flushes as f64,
+            );
+        }
         if let Some(sink) = self.trace_sink() {
             put(
                 &mut out,
@@ -1435,6 +1580,67 @@ mod tests {
         let section = v.req("compile_cache").unwrap();
         assert_eq!(section.req_f64("compilations").unwrap(), 0.0);
         assert_eq!(section.req_f64("max_compiles_per_key").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn unified_caches_section_and_labelled_scrape() {
+        let hub = MetricsHub::new();
+        assert!(hub.to_json().get("caches").is_none(), "absent until a cache registers");
+        let reply = Arc::new(EncodedReplyCache::new(1 << 20));
+        let decision = Arc::new(DecisionCache::new());
+        hub.register_segment_cache(Arc::clone(&reply));
+        hub.register_decision_cache(Arc::clone(&decision));
+        let _ = reply.get(&("m".to_string(), 0, 1)); // one reply miss
+        let v = hub.to_json();
+        let caches = v.req("caches").unwrap();
+        for label in ["reply", "decision"] {
+            let section = caches.req(label).unwrap();
+            for k in ["hits", "misses", "entries", "bytes", "evictions"] {
+                assert!(section.get(k).is_some(), "{label}.{k}");
+            }
+        }
+        assert_eq!(caches.req("reply").unwrap().req_f64("misses").unwrap(), 1.0);
+        // legacy alias sections still served
+        assert!(v.get("segment_cache").is_some());
+        assert!(v.get("decision_cache").is_some());
+        let body = hub.render_prometheus();
+        assert!(body.contains("qpart_cache_misses_total{cache=\"reply\"} 1\n"), "{body}");
+        assert!(body.contains("qpart_cache_hits_total{cache=\"decision\"} 0\n"), "{body}");
+        assert!(body.contains("qpart_cache_entries{cache=\"reply\"} 0\n"), "{body}");
+    }
+
+    #[test]
+    fn store_section_and_scrape_series() {
+        let dir = std::env::temp_dir()
+            .join(format!("qpart-metrics-{}-store", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let hub = MetricsHub::new();
+        assert!(hub.to_json().get("store").is_none(), "absent until registered");
+        let tier = StoreTier::open(&dir).unwrap();
+        tier.stage_put(crate::store::Column::Plan, b"p".to_vec(), Vec::new());
+        tier.flush();
+        hub.register_store(Arc::clone(&tier));
+        let v = hub.to_json();
+        assert_eq!(v.req("store").unwrap().req_f64("records").unwrap(), 1.0);
+        let body = hub.render_prometheus();
+        assert!(body.contains("qpart_store_records_total 1\n"), "{body}");
+        assert!(body.contains("qpart_store_corrupt_records_total 0\n"), "{body}");
+        assert!(body.contains("qpart_store_live_entries 1\n"), "{body}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn class_throttled_alias_served_in_json_and_scrape() {
+        let hub = MetricsHub::new();
+        let counts = hub.classes().class("sensor");
+        Metrics::inc(&counts.sched_throttled_total);
+        let v = hub.to_json();
+        let class = v.req("per_class").unwrap().req("sensor").unwrap();
+        assert_eq!(class.req_f64("sched_throttled_total").unwrap(), 1.0);
+        assert_eq!(class.req_f64("throttled_total").unwrap(), 1.0, "alias");
+        let body = hub.render_prometheus();
+        assert!(body.contains("qpart_class_sched_throttled_total{class=\"sensor\"} 1\n"));
+        assert!(body.contains("qpart_class_throttled_total{class=\"sensor\"} 1\n"), "{body}");
     }
 
     #[test]

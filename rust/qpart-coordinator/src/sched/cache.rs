@@ -15,37 +15,34 @@
 //! keys). Hit / miss / bytes-saved / eviction counters are surfaced
 //! through `MetricsHub` into the `stats` document's `segment_cache`
 //! section.
+//!
+//! Since the store tier landed, this type is a typed **facade** over
+//! [`CacheCore`]: the eviction engine and counters live there (shared
+//! with the decision cache), and when a [`StoreTier`] is attached every
+//! insert stages the body — plus a phase-2 plan fingerprint — for the
+//! segment log, so a `--warm log` restart replays the live reply set.
 
 use super::batch::lock_recover;
+use crate::store::{keys, CacheCore, CacheStats, Column, EvictPolicy, StoreTier};
 use qpart_core::json::Value;
 use qpart_proto::messages::EncodedSegmentBody;
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Cache key: (model, accuracy-level index, partition point).
 pub type SegmentKey = (String, usize, usize);
 
-struct Inner {
-    map: HashMap<SegmentKey, Arc<EncodedSegmentBody>>,
-    /// LRU order, front = least recently used. Linear touch is fine: the
-    /// working set is patterns × models (tens), not requests.
-    order: Vec<SegmentKey>,
-    bytes: usize,
-}
-
 /// Shared, thread-safe encoded-reply cache (one per server).
 pub struct EncodedReplyCache {
     budget_bytes: usize,
-    inner: Mutex<Inner>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    core: CacheCore<SegmentKey, Arc<EncodedSegmentBody>>,
     /// Serialized-body bytes served from cache instead of re-encoded,
     /// measured as the JSON-form body length per hit. For binary-framed
     /// sessions (which skip the JSON body entirely) this is an upper
     /// bound — see [`EncodedSegmentBody::encoded_len`].
     bytes_saved: AtomicU64,
-    evictions: AtomicU64,
+    /// Durable tier, when serving with `--store-dir`.
+    store: Mutex<Option<Arc<StoreTier>>>,
 }
 
 impl std::fmt::Debug for EncodedReplyCache {
@@ -62,63 +59,68 @@ impl EncodedReplyCache {
     pub fn new(budget_bytes: usize) -> EncodedReplyCache {
         EncodedReplyCache {
             budget_bytes,
-            inner: Mutex::new(Inner { map: HashMap::new(), order: Vec::new(), bytes: 0 }),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            core: CacheCore::new(EvictPolicy::LruBytes { budget: budget_bytes as u64 }),
             bytes_saved: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
+            store: Mutex::new(None),
         }
+    }
+
+    /// Attach the durable tier: subsequent inserts stage their bodies
+    /// (and plan fingerprints) for the segment log, evictions stage
+    /// deletes.
+    pub fn attach_store(&self, tier: Arc<StoreTier>) {
+        *lock_recover(&self.store) = Some(tier);
     }
 
     /// Look up a key, counting the hit/miss and touching LRU recency.
     pub fn get(&self, key: &SegmentKey) -> Option<Arc<EncodedSegmentBody>> {
-        let mut inner = lock_recover(&self.inner);
-        match inner.map.get(key).cloned() {
-            Some(body) => {
-                if let Some(pos) = inner.order.iter().position(|k| k == key) {
-                    let k = inner.order.remove(pos);
-                    inner.order.push(k);
-                }
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                self.bytes_saved.fetch_add(body.encoded_len(), Ordering::Relaxed);
-                Some(body)
-            }
-            None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
+        let got = self.core.get(key);
+        if let Some(body) = &got {
+            self.bytes_saved.fetch_add(body.encoded_len(), Ordering::Relaxed);
         }
+        got
     }
 
     /// Insert (or replace — two workers may race to encode the same key)
     /// and evict least-recently-used entries past the byte budget. The
-    /// entry just inserted is never evicted.
+    /// entry just inserted is never evicted. With a store attached, the
+    /// body and its `(model, partition)` plan fingerprint are staged for
+    /// the log; evicted keys stage deletes (plan fingerprints stay —
+    /// they are tiny and shared across levels).
     pub fn insert(&self, key: SegmentKey, body: Arc<EncodedSegmentBody>) {
-        let mut inner = lock_recover(&self.inner);
-        if let Some(old) = inner.map.remove(&key) {
-            inner.bytes = inner.bytes.saturating_sub(old.cost_bytes());
-            if let Some(pos) = inner.order.iter().position(|k| k == &key) {
-                inner.order.remove(pos);
+        self.insert_inner(key, body, true)
+    }
+
+    /// Insert an entry replayed *from* the log (`--warm log`): identical
+    /// residency semantics, but the body is not re-staged.
+    pub fn insert_warm(&self, key: SegmentKey, body: Arc<EncodedSegmentBody>) {
+        self.insert_inner(key, body, false)
+    }
+
+    fn insert_inner(&self, key: SegmentKey, body: Arc<EncodedSegmentBody>, persist: bool) {
+        let store = lock_recover(&self.store).clone();
+        if persist {
+            if let Some(tier) = &store {
+                let encoded = keys::encode_reply_body(&body);
+                tier.stage_put(Column::Reply, keys::encode_reply_key(&key), encoded);
+                tier.stage_put(Column::Plan, keys::encode_plan_key(&key.0, key.2), Vec::new());
             }
         }
-        inner.bytes += body.cost_bytes();
-        inner.map.insert(key.clone(), body);
-        inner.order.push(key);
-        while inner.bytes > self.budget_bytes && inner.order.len() > 1 {
-            let victim = inner.order.remove(0);
-            if let Some(evicted) = inner.map.remove(&victim) {
-                inner.bytes = inner.bytes.saturating_sub(evicted.cost_bytes());
+        let cost = body.cost_bytes() as u64;
+        let evicted = self.core.insert(key, body, cost);
+        if let Some(tier) = &store {
+            for victim in &evicted {
+                tier.stage_delete(Column::Reply, keys::encode_reply_key(victim));
             }
-            self.evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
 
     pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.core.hits()
     }
 
     pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.core.misses()
     }
 
     pub fn bytes_saved(&self) -> u64 {
@@ -126,21 +128,21 @@ impl EncodedReplyCache {
     }
 
     pub fn evictions(&self) -> u64 {
-        self.evictions.load(Ordering::Relaxed)
+        self.core.evictions()
     }
 
     /// Resident entries.
     pub fn len(&self) -> usize {
-        lock_recover(&self.inner).map.len()
+        self.core.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.core.is_empty()
     }
 
     /// Resident bytes (cost accounting, see `EncodedSegmentBody::cost_bytes`).
     pub fn bytes(&self) -> usize {
-        lock_recover(&self.inner).bytes
+        self.core.bytes() as usize
     }
 
     pub fn budget_bytes(&self) -> usize {
@@ -154,7 +156,13 @@ impl EncodedReplyCache {
         h / (h + m)
     }
 
-    /// The `segment_cache` section of the stats document.
+    /// The unified stats shape (the `caches.reply` section).
+    pub fn stats(&self) -> CacheStats {
+        self.core.stats()
+    }
+
+    /// The `segment_cache` section of the stats document (legacy shape,
+    /// kept as an alias for one release).
     pub fn to_json(&self) -> Value {
         Value::obj([
             ("entries", self.len().into()),
@@ -258,5 +266,33 @@ mod tests {
         c.insert(key(1), body(1000));
         assert_eq!(c.len(), 1);
         assert_eq!(c.bytes(), after_first, "replacement is not additive");
+    }
+
+    #[test]
+    fn attached_store_stages_bodies_plans_and_evict_deletes() {
+        let dir =
+            std::env::temp_dir().join(format!("qpart-rcache-{}-stage", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let tier = StoreTier::open(&dir).unwrap();
+        let one = body(1000).cost_bytes();
+        let c = EncodedReplyCache::new(one + one / 2); // room for one entry
+        c.attach_store(Arc::clone(&tier));
+        c.insert(key(1), body(1000));
+        c.insert(key(2), body(1000)); // evicts key 1
+        tier.flush();
+        assert_eq!(tier.get(Column::Reply, &keys::encode_reply_key(&key(1))), None);
+        let persisted =
+            tier.get(Column::Reply, &keys::encode_reply_key(&key(2))).expect("reply persisted");
+        let replayed = keys::decode_reply_body(&persisted).expect("persisted body decodes");
+        assert_eq!(&*replayed.layers_json_shared(), &*body(1000).layers_json_shared());
+        // both partitions left plan fingerprints (plans are never deleted)
+        assert!(tier.get(Column::Plan, &keys::encode_plan_key("m", 1)).is_some());
+        assert!(tier.get(Column::Plan, &keys::encode_plan_key("m", 2)).is_some());
+        // warm inserts don't re-stage
+        let c2 = EncodedReplyCache::new(1 << 20);
+        c2.attach_store(Arc::clone(&tier));
+        c2.insert_warm(key(3), body(10));
+        assert_eq!(tier.staged_len(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

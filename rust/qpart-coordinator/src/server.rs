@@ -40,6 +40,7 @@ use crate::sched::{
 };
 use crate::service::{FaultSpec, Service, ServiceOptions};
 use crate::session::SharedSessionTable;
+use crate::store::StoreTier;
 use qpart_proto::frame::{read_any_frame, write_binary_frame, write_frame, Frame, FrameError};
 use qpart_proto::messages::{ErrorReply, HelloReply, Request, Response};
 use qpart_runtime::{Bundle, CompileCache};
@@ -143,11 +144,18 @@ use std::time::{Duration, Instant};
 ///   scenario engine's `trace v1` text format, replayable with
 ///   `bench-scenario` ([`TrafficRecorder`]). Flushed periodically and
 ///   at shutdown.
-/// * `warm_cache` — pre-warm the shared caches at startup: one worker
-///   encodes the most-likely `(model, level, partition)` reply keys
-///   (Algorithm 1 enumerates them; Algorithm 2 under the paper-default
-///   profile picks per level) and pre-builds their phase-2 plans, so the
-///   first requests hit warm caches (`warmed_total` in stats).
+/// * `warm` — cache pre-warming at startup ([`WarmMode`]):
+///   [`WarmMode::Paper`] has one worker encode the most-likely
+///   `(model, level, partition)` reply keys (Algorithm 1 enumerates
+///   them; Algorithm 2 under the paper-default profile picks per level)
+///   and pre-build their phase-2 plans; [`WarmMode::Log`] replays the
+///   durable segment log under `store_dir` instead, restoring the
+///   previous process's **recorded** decision/reply working set
+///   byte-identically (`warmed_total` in stats either way).
+/// * `store_dir` — durable warm-state directory: cache inserts are
+///   staged and flushed to an append-only CRC-guarded segment log by the
+///   housekeeping thread (which also compacts it), so a restart with
+///   `warm = WarmMode::Log` comes up hot ([`crate::store`]).
 /// * `host_fallback` — run phase 2 on the pure-Rust reference kernels
 ///   (linear architectures only). For tests and `bench-serve`; a PJRT
 ///   deployment leaves this off.
@@ -195,10 +203,14 @@ pub struct ServerConfig {
     pub trace_store: usize,
     /// Optional `trace v1` live-traffic capture path.
     pub record_trace: Option<String>,
-    /// Pre-warm the encoded-reply and compile caches at startup: one
-    /// worker encodes the most-likely reply keys and pre-builds their
-    /// phase-2 plans before the server accepts traffic.
-    pub warm_cache: bool,
+    /// Cache pre-warming at startup: paper-default profile encoding, or
+    /// replay of the durable segment log (requires `store_dir`). Runs on
+    /// one worker before the server accepts traffic.
+    pub warm: WarmMode,
+    /// Durable warm-state directory (`--store-dir`): stage cache inserts
+    /// into an append-only segment log so the next restart can warm from
+    /// it. `None` (the default) keeps serving fully in-memory.
+    pub store_dir: Option<String>,
     /// Execute phase 2 with the pure-Rust host reference kernels instead
     /// of PJRT (tests / bench-serve; linear architectures only).
     pub host_fallback: bool,
@@ -250,7 +262,8 @@ impl Default for ServerConfig {
             trace_slow_keep: 8,
             trace_store: 1024,
             record_trace: None,
-            warm_cache: false,
+            warm: WarmMode::Off,
+            store_dir: None,
             host_fallback: false,
             brownout_wait_us: 0,
             job_timeout: Duration::ZERO,
@@ -274,6 +287,44 @@ pub enum Frontend {
     Threaded,
 }
 
+/// What populates the shared caches before the server accepts traffic
+/// (`--warm off|paper|log`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WarmMode {
+    /// No pre-warming: caches fill from live traffic.
+    #[default]
+    Off,
+    /// Encode the paper-default profile's most-likely reply keys and
+    /// pre-build their phase-2 plans ([`Service::warm_cache`]) — the
+    /// behavior of the old `--warm-cache` flag.
+    Paper,
+    /// Replay the durable segment log under [`ServerConfig::store_dir`]
+    /// ([`Service::warm_from_store`]): the previous process's recorded
+    /// decision/reply working set comes back byte-identical.
+    Log,
+}
+
+impl WarmMode {
+    /// Parse the CLI/config form.
+    pub fn parse(s: &str) -> Result<WarmMode, String> {
+        match s.trim() {
+            "off" => Ok(WarmMode::Off),
+            "paper" => Ok(WarmMode::Paper),
+            "log" => Ok(WarmMode::Log),
+            other => Err(format!("warm mode `{other}` is not off|paper|log")),
+        }
+    }
+
+    /// The canonical config-file spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WarmMode::Off => "off",
+            WarmMode::Paper => "paper",
+            WarmMode::Log => "log",
+        }
+    }
+}
+
 /// Handle to a running server (for tests/examples).
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
@@ -295,6 +346,9 @@ pub struct ServerHandle {
     pub trace: Arc<TraceSink>,
     /// Live-traffic recorder, when `record_trace` is configured.
     pub recorder: Option<Arc<TrafficRecorder>>,
+    /// The durable store tier, when `store_dir` is configured
+    /// (observability in tests / bench-serve restart measurement).
+    pub store: Option<Arc<StoreTier>>,
     stop: Arc<AtomicBool>,
     drain: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
@@ -335,11 +389,15 @@ impl ServerHandle {
         for slot in slots {
             let _ = slot.handle.join();
         }
-        // workers are parked: collect their final spans and persist any
-        // recorded traffic
+        // workers are parked: collect their final spans, persist any
+        // recorded traffic, and make every staged store op durable so a
+        // `--warm log` restart sees the complete working set
         self.trace.drain();
         if let Some(rec) = &self.recorder {
             let _ = rec.flush();
+        }
+        if let Some(tier) = &self.store {
+            tier.flush();
         }
     }
 
@@ -401,6 +459,22 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
     // one Algorithm-2 decision cache for the whole pool: repeat
     // (model, level, profile) requests skip planning on every worker
     let decision_cache = Arc::new(DecisionCache::new());
+    // durable warm state: open (and replay) the segment log, then attach
+    // it to the cache facades so inserts/evictions stage log records
+    let store = match &cfg.store_dir {
+        Some(dir) => {
+            let tier = StoreTier::open(std::path::Path::new(dir))
+                .map_err(|e| format!("store {dir}: {e}"))?;
+            cache.attach_store(Arc::clone(&tier));
+            decision_cache.attach_store(Arc::clone(&tier));
+            hub.register_store(Arc::clone(&tier));
+            Some(tier)
+        }
+        None => None,
+    };
+    if cfg.warm == WarmMode::Log && store.is_none() {
+        return Err("warm mode `log` requires a store_dir".into());
+    }
     // per-connection fair-queue token buckets (inert when fair_rate == 0)
     let fair = Arc::new(FairQueue::new(cfg.fair_rate));
     // the trace sink always exists (hello-negotiated grants must work
@@ -457,13 +531,15 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         trace: Arc::clone(&trace),
         brownout: brownout.clone(),
         faults: cfg.fault_inject,
+        store: store.clone(),
         epoch: Instant::now(),
     };
     let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(workers);
     let mut slots = Vec::with_capacity(workers);
     for w in 0..workers {
         // one worker warms the shared caches; its peers see the results
-        slots.push(spawn_worker(&ctx, w, cfg.warm_cache && w == 0, Some(ready_tx.clone()))?);
+        let warm = if w == 0 { cfg.warm } else { WarmMode::Off };
+        slots.push(spawn_worker(&ctx, w, warm, Some(ready_tx.clone()))?);
     }
     drop(ready_tx);
 
@@ -489,6 +565,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         let gc_recorder = recorder.clone();
         let gc_workers = Arc::clone(&worker_slots);
         let gc_brownout = brownout.clone();
+        let gc_store = store.clone();
         let gc_front = hub.front();
         let job_timeout = cfg.job_timeout;
         let max_conns = cfg.max_conns.max(1);
@@ -525,6 +602,12 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
                             gc_trace.drain();
                             if let Some(rec) = &gc_recorder {
                                 let _ = rec.flush();
+                            }
+                            // make staged cache mutations durable, and
+                            // rewrite the log when it is mostly dead
+                            if let Some(tier) = &gc_store {
+                                tier.flush();
+                                tier.maybe_compact();
                             }
                         }
                     }
@@ -571,6 +654,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle, String> {
         decision_cache,
         trace,
         recorder,
+        store,
         stop,
         drain,
         accept_thread: Some(accept_thread),
@@ -597,6 +681,8 @@ struct WorkerCtx {
     trace: Arc<TraceSink>,
     brownout: Option<Arc<BrownoutController>>,
     faults: Option<FaultSpec>,
+    /// The durable store tier (`--store-dir`), for log-replay warming.
+    store: Option<Arc<StoreTier>>,
     /// Time zero for the `busy_since_us` watchdog timestamps.
     epoch: Instant,
 }
@@ -623,7 +709,7 @@ struct WorkerSlot {
 fn spawn_worker(
     ctx: &WorkerCtx,
     idx: usize,
-    warm: bool,
+    warm: WarmMode,
     ready_tx: Option<SyncSender<Result<(), String>>>,
 ) -> Result<WorkerSlot, String> {
     let busy_since_us = Arc::new(AtomicU64::new(0));
@@ -641,6 +727,7 @@ fn spawn_worker(
     let tracer = ctx.trace.tracer(idx as u32);
     let brownout = ctx.brownout.clone();
     let faults = ctx.faults;
+    let store = ctx.store.clone();
     let epoch = ctx.epoch;
     let handle = std::thread::Builder::new()
         .name(format!("qpart-worker-{idx}"))
@@ -657,10 +744,18 @@ fn spawn_worker(
                 .map_err(|e| e.to_string());
             let mut service = match service {
                 Ok(mut s) => {
-                    if warm {
-                        // warm before reporting ready: serve() returns
-                        // with the caches populated, deterministically
-                        s.warm_cache();
+                    // warm before reporting ready: serve() returns with
+                    // the caches populated, deterministically
+                    match warm {
+                        WarmMode::Paper => {
+                            s.warm_cache();
+                        }
+                        WarmMode::Log => {
+                            if let Some(tier) = &store {
+                                s.warm_from_store(tier);
+                            }
+                        }
+                        WarmMode::Off => {}
                     }
                     if let Some(tx) = &ready_tx {
                         let _ = tx.send(Ok(()));
@@ -754,7 +849,7 @@ fn supervise_workers(
             }
         }
         if slot.handle.is_finished() && !ctx.stop.load(Ordering::SeqCst) {
-            if let Ok(fresh) = spawn_worker(ctx, slot.idx, false, None) {
+            if let Ok(fresh) = spawn_worker(ctx, slot.idx, WarmMode::Off, None) {
                 let dead = std::mem::replace(slot, fresh);
                 let _ = dead.handle.join();
                 Metrics::inc(&front.worker_restarts_total);

@@ -28,6 +28,7 @@ use crate::metrics::{ClassCounts, Metrics, MetricsHub};
 use crate::obs::{JobTrace, Stage, TraceStamp, Tracer};
 use crate::sched::{EncodedReplyCache, Job, ReplySink, SegmentKey, SegmentReply, WireReply};
 use crate::session::{Session, SharedSessionTable};
+use crate::store::{keys as store_keys, Column, StoreTier};
 use qpart_core::channel::Channel;
 use qpart_core::cost::{CostModel, DeviceProfile, ServerProfile, TradeoffWeights};
 use qpart_core::model::{LayerKind, ModelSpec};
@@ -943,6 +944,50 @@ impl Service {
                 Metrics::inc(&self.metrics.warmed_total);
                 warmed += 1;
             }
+        }
+        warmed
+    }
+
+    /// Replay the durable store (`--warm log`): decode every live
+    /// decision and reply entry back into the shared caches and
+    /// pre-build the phase-2 plans named by the persisted fingerprints.
+    /// Unlike [`Service::warm_cache`] — which warms the *paper-default*
+    /// profile — this restores the **recorded request mix**: whatever
+    /// the previous process actually served, byte-identical (the codecs
+    /// in [`crate::store::keys`] are bit-exact). Entries that fail to
+    /// decode (written by a different build) are skipped, not fatal.
+    /// Returns the number of entries warmed.
+    pub fn warm_from_store(&mut self, tier: &StoreTier) -> usize {
+        let mut warmed = 0usize;
+        for (key, value) in tier.snapshot(Column::Decision) {
+            let (Some(k), Some(d)) =
+                (store_keys::decode_decision_key(&key), store_keys::decode_decision(&value))
+            else {
+                continue;
+            };
+            self.decision_cache.insert_warm(k, Arc::new(d));
+            Metrics::inc(&self.metrics.warmed_total);
+            warmed += 1;
+        }
+        for (key, value) in tier.snapshot(Column::Reply) {
+            let (Some(k), Some(body)) =
+                (store_keys::decode_reply_key(&key), store_keys::decode_reply_body(&value))
+            else {
+                continue;
+            };
+            self.reply_cache.insert_warm(k, Arc::new(body));
+            Metrics::inc(&self.metrics.warmed_total);
+            warmed += 1;
+        }
+        for (key, _) in tier.snapshot(Column::Plan) {
+            let Some((model, partition)) = store_keys::decode_plan_key(&key) else {
+                continue;
+            };
+            // plan build is what matters offline; executable compiles
+            // are best-effort (absent without `make artifacts`)
+            let _ = self.executor.warm_server_segment(&model, partition);
+            Metrics::inc(&self.metrics.warmed_total);
+            warmed += 1;
         }
         warmed
     }

@@ -1,0 +1,259 @@
+//! One eviction engine and one stats shape for every coordinator cache.
+
+use crate::metrics::Metrics;
+use qpart_core::json::Value;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// The unified cache stats shape (ISSUE-10 satellite): every cache —
+/// reply, decision, compile — reports these five numbers, and the
+/// metrics hub emits them as labelled `qpart_cache_*{cache="..."}`
+/// series.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: u64,
+    pub bytes: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// The canonical JSON document for one cache (one shape for all of
+    /// them — the `caches` section of the stats document).
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("hits", self.hits.into()),
+            ("misses", self.misses.into()),
+            ("entries", self.entries.into()),
+            ("bytes", self.bytes.into()),
+            ("evictions", self.evictions.into()),
+        ])
+    }
+}
+
+/// How a [`CacheCore`] bounds itself.
+#[derive(Debug, Clone, Copy)]
+pub enum EvictPolicy {
+    /// Evict least-recently-used entries while the byte total exceeds
+    /// `budget` — but never the sole remaining entry, so one oversized
+    /// value still serves (the reply cache's historical contract).
+    LruBytes { budget: u64 },
+    /// Evict oldest-inserted entries while the entry count exceeds
+    /// `capacity`. Replacing a key keeps its queue position (the
+    /// decision cache's historical contract).
+    FifoCap { capacity: usize },
+}
+
+struct CoreInner<K, V> {
+    /// key → (value, byte cost)
+    map: HashMap<K, (V, u64)>,
+    /// LRU: front = coldest; FIFO: front = oldest-inserted.
+    order: VecDeque<K>,
+    bytes: u64,
+}
+
+/// The one eviction engine under the coordinator's caches. Typed facades
+/// ([`DecisionCache`](crate::decision::DecisionCache),
+/// [`EncodedReplyCache`](crate::sched::EncodedReplyCache)) wrap this with
+/// their historical key/value types; the engine owns ordering, byte
+/// accounting, hit/miss/eviction counters, and the [`CacheStats`] shape.
+pub struct CacheCore<K, V> {
+    policy: EvictPolicy,
+    inner: RwLock<CoreInner<K, V>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<K: Clone + Eq + std::hash::Hash, V: Clone> CacheCore<K, V> {
+    pub fn new(policy: EvictPolicy) -> CacheCore<K, V> {
+        CacheCore {
+            policy,
+            inner: RwLock::new(CoreInner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                bytes: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Look `key` up, counting the hit or miss. Under [`EvictPolicy::LruBytes`]
+    /// a hit also refreshes recency (which needs the write lock); FIFO
+    /// lookups stay on the shared lock.
+    pub fn get(&self, key: &K) -> Option<V> {
+        let touch = matches!(self.policy, EvictPolicy::LruBytes { .. });
+        let found = if touch {
+            let mut inner = crate::decision::write_recover(&self.inner);
+            let found = inner.map.get(key).map(|(v, _)| v.clone());
+            if found.is_some() {
+                if let Some(pos) = inner.order.iter().position(|k| k == key) {
+                    let k = inner.order.remove(pos).expect("position just found");
+                    inner.order.push_back(k);
+                }
+            }
+            found
+        } else {
+            let inner = crate::decision::read_recover(&self.inner);
+            inner.map.get(key).map(|(v, _)| v.clone())
+        };
+        if found.is_some() {
+            Metrics::inc(&self.hits);
+        } else {
+            Metrics::inc(&self.misses);
+        }
+        found
+    }
+
+    /// Whether `key` is resident, without touching recency or counters.
+    pub fn contains(&self, key: &K) -> bool {
+        crate::decision::read_recover(&self.inner).map.contains_key(key)
+    }
+
+    /// Insert or replace `key`, charging `cost` bytes, and return the
+    /// keys evicted to make room (so a store-backed facade can stage the
+    /// matching deletes). Replacing a key updates its byte charge; under
+    /// LRU a replace refreshes recency, under FIFO it keeps the original
+    /// queue position.
+    pub fn insert(&self, key: K, value: V, cost: u64) -> Vec<K> {
+        let mut inner = crate::decision::write_recover(&self.inner);
+        let replaced = inner.map.insert(key.clone(), (value, cost));
+        match replaced {
+            Some((_, old_cost)) => {
+                inner.bytes = inner.bytes.saturating_sub(old_cost) + cost;
+                if matches!(self.policy, EvictPolicy::LruBytes { .. }) {
+                    if let Some(pos) = inner.order.iter().position(|k| *k == key) {
+                        let k = inner.order.remove(pos).expect("position just found");
+                        inner.order.push_back(k);
+                    }
+                }
+            }
+            None => {
+                inner.bytes += cost;
+                inner.order.push_back(key);
+            }
+        }
+        let mut evicted = Vec::new();
+        loop {
+            let over = match self.policy {
+                EvictPolicy::LruBytes { budget } => {
+                    inner.bytes > budget && inner.order.len() > 1
+                }
+                EvictPolicy::FifoCap { capacity } => inner.order.len() > capacity,
+            };
+            if !over {
+                break;
+            }
+            let Some(victim) = inner.order.pop_front() else { break };
+            if let Some((_, victim_cost)) = inner.map.remove(&victim) {
+                inner.bytes = inner.bytes.saturating_sub(victim_cost);
+                Metrics::inc(&self.evictions);
+                evicted.push(victim);
+            }
+        }
+        evicted
+    }
+
+    /// Visit every resident entry (unspecified order).
+    pub fn for_each(&self, f: &mut dyn FnMut(&K, &V)) {
+        let inner = crate::decision::read_recover(&self.inner);
+        for (k, (v, _)) in &inner.map {
+            f(k, v);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        crate::decision::read_recover(&self.inner).map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> u64 {
+        crate::decision::read_recover(&self.inner).bytes
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// The unified stats snapshot.
+    pub fn stats(&self) -> CacheStats {
+        let (entries, bytes) = {
+            let inner = crate::decision::read_recover(&self.inner);
+            (inner.map.len() as u64, inner.bytes)
+        };
+        CacheStats {
+            hits: self.hits(),
+            misses: self.misses(),
+            entries,
+            bytes,
+            evictions: self.evictions(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_evicts_coldest_first_and_never_the_sole_entry() {
+        let core: CacheCore<u32, &'static str> =
+            CacheCore::new(EvictPolicy::LruBytes { budget: 100 });
+        assert!(core.insert(1, "a", 40).is_empty());
+        assert!(core.insert(2, "b", 40).is_empty());
+        // touch 1 so 2 becomes coldest
+        assert_eq!(core.get(&1), Some("a"));
+        let evicted = core.insert(3, "c", 40);
+        assert_eq!(evicted, vec![2]);
+        assert_eq!(core.bytes(), 80);
+        // one oversized value still serves: sole survivor is never evicted
+        let evicted = core.insert(4, "d", 500);
+        assert!(evicted.contains(&1) && evicted.contains(&3));
+        assert_eq!(core.len(), 1);
+        assert_eq!(core.get(&4), Some("d"));
+        assert_eq!(core.stats().evictions, 3);
+    }
+
+    #[test]
+    fn fifo_caps_entries_and_replace_keeps_position() {
+        let core: CacheCore<u32, u32> = CacheCore::new(EvictPolicy::FifoCap { capacity: 2 });
+        core.insert(1, 10, 0);
+        core.insert(2, 20, 0);
+        // replacing 1 must not move it to the back of the FIFO queue
+        core.insert(1, 11, 0);
+        let evicted = core.insert(3, 30, 0);
+        assert_eq!(evicted, vec![1], "oldest-inserted goes first despite the replace");
+        assert_eq!(core.get(&2), Some(20));
+        assert_eq!(core.get(&3), Some(30));
+        assert_eq!(core.get(&1), None);
+        let stats = core.stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (2, 1, 2));
+    }
+
+    #[test]
+    fn replace_updates_byte_charge_without_leaking() {
+        let core: CacheCore<u32, &'static str> =
+            CacheCore::new(EvictPolicy::LruBytes { budget: 1000 });
+        core.insert(1, "a", 100);
+        core.insert(1, "bigger", 300);
+        assert_eq!(core.bytes(), 300);
+        core.insert(1, "small", 10);
+        assert_eq!(core.bytes(), 10);
+        assert_eq!(core.len(), 1);
+    }
+}

@@ -1,0 +1,331 @@
+//! Typed key and value codecs: the boundary between the typed cache
+//! facades above the store and the opaque byte slices below it.
+//!
+//! Every codec here is little-endian, fixed layout, and total on encode;
+//! decoders return `Option` and treat any malformed input as "not ours"
+//! (the caller skips the entry rather than failing replay — a store file
+//! written by a newer build must never wedge an older one).
+//!
+//! Floats are carried as `f64::to_bits` so the round trip is **bit
+//! exact** — byte-identical serving after replay depends on it.
+
+use crate::decision::{DecisionKey, ProfileBucket};
+use crate::sched::SegmentKey;
+use qpart_core::cost::CostBreakdown;
+use qpart_core::optimizer::Decision;
+use qpart_core::quant::QuantPattern;
+use qpart_proto::messages::{EncodedSegmentBody, InferReply};
+
+// -- primitive helpers ------------------------------------------------------
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn push_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    push_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+/// Sequential little-endian reader over an encoded key/value.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.at.checked_add(n)?;
+        let s = self.buf.get(self.at..end)?;
+        self.at = end;
+        Some(s)
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().expect("4-byte slice")))
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|b| b[0])
+    }
+
+    fn f64(&mut self) -> Option<f64> {
+        self.take(8)
+            .map(|b| f64::from_bits(u64::from_le_bytes(b.try_into().expect("8-byte slice"))))
+    }
+
+    fn bytes(&mut self) -> Option<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    fn done(&self) -> bool {
+        self.at == self.buf.len()
+    }
+}
+
+// -- decision column --------------------------------------------------------
+
+/// `DecisionKey{model, level, ProfileBucket}` →
+/// `[model][u32 level][104B bucket]`.
+pub fn encode_decision_key(key: &DecisionKey) -> Vec<u8> {
+    let (model, level, bucket) = key;
+    let mut out = Vec::with_capacity(4 + model.len() + 4 + 104);
+    push_bytes(&mut out, model.as_bytes());
+    push_u32(&mut out, *level as u32);
+    out.extend_from_slice(&bucket.to_bytes());
+    out
+}
+
+pub fn decode_decision_key(buf: &[u8]) -> Option<DecisionKey> {
+    let mut c = Cursor::new(buf);
+    let model = String::from_utf8(c.bytes()?.to_vec()).ok()?;
+    let level = c.u32()? as usize;
+    let bucket = ProfileBucket::from_bytes(c.take(104)?)?;
+    c.done().then_some((model, level, bucket))
+}
+
+/// Bit-exact `Decision` value codec:
+/// `[u32 partition][weight_bits][u8 act_bits][2×f64 pattern floats]`
+/// `[u32 level_idx][7×f64 cost][u32 n][n×f64 objective_by_partition]`.
+pub fn encode_decision(d: &Decision) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32 + d.pattern.weight_bits.len() + 8 * 9);
+    push_u32(&mut out, d.pattern.partition as u32);
+    push_bytes(&mut out, &d.pattern.weight_bits);
+    out.push(d.pattern.activation_bits);
+    push_f64(&mut out, d.pattern.accuracy_level);
+    push_f64(&mut out, d.pattern.predicted_degradation);
+    push_u32(&mut out, d.level_idx as u32);
+    for v in [
+        d.cost.t_local_s,
+        d.cost.t_server_s,
+        d.cost.t_tran_s,
+        d.cost.e_local_j,
+        d.cost.e_tran_j,
+        d.cost.server_cost,
+        d.cost.objective,
+    ] {
+        push_f64(&mut out, v);
+    }
+    push_u32(&mut out, d.objective_by_partition.len() as u32);
+    for v in &d.objective_by_partition {
+        push_f64(&mut out, *v);
+    }
+    out
+}
+
+pub fn decode_decision(buf: &[u8]) -> Option<Decision> {
+    let mut c = Cursor::new(buf);
+    let partition = c.u32()? as usize;
+    let weight_bits = c.bytes()?.to_vec();
+    let activation_bits = c.u8()?;
+    let accuracy_level = c.f64()?;
+    let predicted_degradation = c.f64()?;
+    let level_idx = c.u32()? as usize;
+    let cost = CostBreakdown {
+        t_local_s: c.f64()?,
+        t_server_s: c.f64()?,
+        t_tran_s: c.f64()?,
+        e_local_j: c.f64()?,
+        e_tran_j: c.f64()?,
+        server_cost: c.f64()?,
+        objective: c.f64()?,
+    };
+    let n = c.u32()? as usize;
+    let mut objective_by_partition = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        objective_by_partition.push(c.f64()?);
+    }
+    c.done().then_some(Decision {
+        pattern: QuantPattern {
+            partition,
+            weight_bits,
+            activation_bits,
+            accuracy_level,
+            predicted_degradation,
+        },
+        level_idx,
+        cost,
+        objective_by_partition,
+    })
+}
+
+// -- reply column -----------------------------------------------------------
+
+/// Reply cache key `(model, level, partition)` →
+/// `[model][u32 level][u32 partition]`.
+pub fn encode_reply_key(key: &SegmentKey) -> Vec<u8> {
+    let (model, level, partition) = key;
+    let mut out = Vec::with_capacity(4 + model.len() + 8);
+    push_bytes(&mut out, model.as_bytes());
+    push_u32(&mut out, *level as u32);
+    push_u32(&mut out, *partition as u32);
+    out
+}
+
+pub fn decode_reply_key(buf: &[u8]) -> Option<SegmentKey> {
+    let mut c = Cursor::new(buf);
+    let model = String::from_utf8(c.bytes()?.to_vec()).ok()?;
+    let level = c.u32()? as usize;
+    let partition = c.u32()? as usize;
+    c.done().then_some((model, level, partition))
+}
+
+/// Encoded reply value: the session-independent body in its own binary
+/// wire form — `[header JSON][blob]` from [`InferReply::to_binary`] with
+/// the per-request fields (session, objective) zeroed. Decoding rebuilds
+/// the body through [`EncodedSegmentBody::new`], which re-serializes both
+/// wire forms deterministically — replayed replies are byte-identical to
+/// freshly encoded ones.
+pub fn encode_reply_body(body: &EncodedSegmentBody) -> Vec<u8> {
+    let (header, blob) = body.to_reply(0, 0.0).to_binary();
+    let mut out = Vec::with_capacity(4 + header.len() + blob.len());
+    push_bytes(&mut out, header.as_bytes());
+    out.extend_from_slice(&blob);
+    out
+}
+
+pub fn decode_reply_body(buf: &[u8]) -> Option<EncodedSegmentBody> {
+    let mut c = Cursor::new(buf);
+    let header = std::str::from_utf8(c.bytes()?).ok()?.to_string();
+    let blob = &c.buf[c.at..];
+    let reply = InferReply::from_binary(&header, blob).ok()?;
+    Some(EncodedSegmentBody::new(&reply.model, reply.pattern, reply.segment))
+}
+
+// -- plan column ------------------------------------------------------------
+
+/// A phase-2 plan fingerprint `(model, partition)` — the key is the whole
+/// record (`[model][u32 partition]`, empty value): replay uses it to
+/// pre-build the compile cache's server-segment plans.
+pub fn encode_plan_key(model: &str, partition: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + model.len() + 4);
+    push_bytes(&mut out, model.as_bytes());
+    push_u32(&mut out, partition as u32);
+    out
+}
+
+pub fn decode_plan_key(buf: &[u8]) -> Option<(String, usize)> {
+    let mut c = Cursor::new(buf);
+    let model = String::from_utf8(c.bytes()?.to_vec()).ok()?;
+    let partition = c.u32()? as usize;
+    c.done().then_some((model, partition))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use qpart_core::cost::CostModel;
+
+    fn bucket() -> ProfileBucket {
+        ProfileBucket::of(&CostModel::paper_default())
+    }
+
+    #[test]
+    fn decision_key_roundtrip() {
+        let key: DecisionKey = ("tinymlp".to_string(), 3, bucket());
+        let enc = encode_decision_key(&key);
+        assert_eq!(decode_decision_key(&enc), Some(key));
+        // truncation and trailing garbage both fail closed
+        assert_eq!(decode_decision_key(&enc[..enc.len() - 1]), None);
+        let mut longer = enc.clone();
+        longer.push(0);
+        assert_eq!(decode_decision_key(&longer), None);
+        assert_eq!(decode_decision_key(b""), None);
+    }
+
+    #[test]
+    fn decision_value_roundtrip_is_bit_exact() {
+        let d = Decision {
+            pattern: QuantPattern {
+                partition: 2,
+                weight_bits: vec![4, 8],
+                activation_bits: 6,
+                accuracy_level: 0.01,
+                predicted_degradation: 0.0099999999,
+            },
+            level_idx: 1,
+            cost: CostBreakdown {
+                t_local_s: 1e-3,
+                t_server_s: 2e-4,
+                t_tran_s: 3.5e-3,
+                e_local_j: 0.25,
+                e_tran_j: 0.125,
+                server_cost: 7e-6,
+                objective: 0.0123456789,
+            },
+            objective_by_partition: vec![0.9, f64::INFINITY, 0.0123456789],
+        };
+        let got = decode_decision(&encode_decision(&d)).expect("roundtrip");
+        // bit-exact: compare through to_bits so ±0.0 and NaN patterns count
+        assert_eq!(got.pattern, d.pattern);
+        assert_eq!(got.level_idx, d.level_idx);
+        assert_eq!(got.cost.objective.to_bits(), d.cost.objective.to_bits());
+        assert_eq!(got.cost, d.cost);
+        assert_eq!(got.objective_by_partition, d.objective_by_partition);
+        assert_eq!(decode_decision(b"\x01"), None);
+    }
+
+    #[test]
+    fn reply_key_and_plan_key_roundtrip() {
+        let key: SegmentKey = ("m".to_string(), 0, 5);
+        assert_eq!(decode_reply_key(&encode_reply_key(&key)), Some(key));
+        assert_eq!(decode_reply_key(b"xx"), None);
+        let enc = encode_plan_key("tinymlp", 2);
+        assert_eq!(decode_plan_key(&enc), Some(("tinymlp".to_string(), 2)));
+        assert_eq!(decode_plan_key(&enc[..3]), None);
+    }
+
+    #[test]
+    fn reply_body_roundtrip_is_byte_identical() {
+        use qpart_proto::messages::{LayerBlob, PatternInfo, SegmentBlob};
+        let body = EncodedSegmentBody::new(
+            "tinymlp",
+            PatternInfo {
+                partition: 1,
+                weight_bits: vec![4],
+                activation_bits: 8,
+                accuracy_level: 0.01,
+                predicted_degradation: 0.004,
+                objective: 123.0, // forced to NaN by the body; never persisted
+            },
+            SegmentBlob {
+                layers: vec![LayerBlob {
+                    layer: 1,
+                    bits: 4,
+                    w_dims: vec![2, 3],
+                    w_qmin: -1.5,
+                    w_step: 0.125,
+                    w_packed: vec![0xAB, 0xCD, 0xEF],
+                    b_qmin: 0.0,
+                    b_step: 0.5,
+                    b_len: 3,
+                    b_packed: vec![0x01, 0x02],
+                }],
+            },
+        );
+        let got = decode_reply_body(&encode_reply_body(&body)).expect("roundtrip");
+        // both wire forms and a stamped reply come back byte-identical
+        assert_eq!(&*got.layers_json_shared(), &*body.layers_json_shared());
+        assert_eq!(got.blob(), body.blob());
+        assert_eq!(got.to_reply(7, 1.5), body.to_reply(7, 1.5));
+        // a re-encode of the decoded body is stable, too
+        assert_eq!(encode_reply_body(&got), encode_reply_body(&body));
+        assert!(decode_reply_body(b"\x04\x00\x00\x00junk").is_none());
+    }
+
+    #[test]
+    fn profile_bucket_bytes_roundtrip() {
+        let b = bucket();
+        assert_eq!(ProfileBucket::from_bytes(&b.to_bytes()), Some(b));
+        assert_eq!(ProfileBucket::from_bytes(&[0u8; 103]), None);
+    }
+}

@@ -1,0 +1,436 @@
+//! The durable terminal layer: an append-only segment log of store
+//! records, mirrored in memory.
+
+use super::mem::MemLayer;
+use super::{Column, Layer, ReadLayer, WriteLayer};
+use qpart_proto::frame::{encode_record, split_record, RecordSplit, RECORD_DELETE, RECORD_PUT};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// The log file name inside `--store-dir`.
+pub const LOG_FILE: &str = "store.log";
+
+/// Compaction triggers when the file holds more than this many times the
+/// live entry count in records (i.e. most of the file is dead weight)...
+const COMPACT_RECORD_FACTOR: u64 = 2;
+
+/// ...and is at least this large (tiny logs aren't worth rewriting).
+const COMPACT_MIN_BYTES: u64 = 1 << 20;
+
+/// An append-only log of CRC-guarded store records
+/// ([`qpart_proto::frame::StoreRecord`]) plus an in-memory [`MemLayer`]
+/// mirror of the live state — the durable terminal of the store stack
+/// (`Base = MemLayer`).
+///
+/// * **Reads** answer from the mirror: the disk is never on a serving
+///   path.
+/// * **Writes** append one record, then update the mirror. Writing a
+///   value identical to the live one is a no-op (no record), so periodic
+///   cache flushes don't grow the file.
+/// * **Open** replays the file into the mirror: CRC-corrupt records are
+///   skipped and counted ([`SegmentLog::corrupt_records`]), a torn final
+///   record (crash mid-append) truncates the recovered tail, and a
+///   mangled envelope (bad magic / forged length) stops replay at the
+///   last good record — everything before it survives.
+/// * **Compaction** ([`SegmentLog::compact`]) rewrites exactly the live
+///   key set, sorted, into a fresh file and atomically renames it over
+///   the log.
+///
+/// I/O errors after open are counted ([`SegmentLog::io_errors`]) rather
+/// than propagated: the store is an accelerator for the next restart, and
+/// a full disk must degrade durability, not serving.
+pub struct SegmentLog {
+    path: PathBuf,
+    file: Option<File>,
+    mem: MemLayer,
+    /// Records currently in the file (live + superseded + tombstones).
+    records: u64,
+    /// Bytes currently in the file.
+    total_bytes: u64,
+    corrupt_records: u64,
+    dropped_tail_bytes: u64,
+    io_errors: u64,
+    compactions: u64,
+}
+
+impl SegmentLog {
+    /// Open (creating `dir` if needed) and replay `dir/store.log`.
+    pub fn open(dir: &Path) -> std::io::Result<SegmentLog> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(LOG_FILE);
+        let mut log = SegmentLog {
+            path,
+            file: None,
+            mem: MemLayer::new(),
+            records: 0,
+            total_bytes: 0,
+            corrupt_records: 0,
+            dropped_tail_bytes: 0,
+            io_errors: 0,
+            compactions: 0,
+        };
+        log.replay()?;
+        log.file = Some(OpenOptions::new().create(true).append(true).open(&log.path)?);
+        Ok(log)
+    }
+
+    /// Replay the file into the mirror, truncating any unrecoverable
+    /// tail so the next append starts on a clean record boundary.
+    fn replay(&mut self) -> std::io::Result<()> {
+        let buf = match std::fs::read(&self.path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        let mut at = 0usize;
+        loop {
+            match split_record(&buf[at..]) {
+                Ok(Some((RecordSplit::Record(rec), consumed))) => {
+                    // a CRC-valid record with an unknown column code is
+                    // from a newer build: preserve-by-skip, don't drop it
+                    if let Some(col) = Column::from_code(rec.column) {
+                        match rec.op {
+                            RECORD_PUT => self.mem.put(col, &rec.key, &rec.value),
+                            RECORD_DELETE => self.mem.delete(col, &rec.key),
+                            _ => {}
+                        }
+                    }
+                    self.records += 1;
+                    at += consumed;
+                }
+                Ok(Some((RecordSplit::Corrupt, consumed))) => {
+                    // bit-rot at rest: never replays as state, never
+                    // hides the records after it
+                    self.corrupt_records += 1;
+                    at += consumed;
+                }
+                Ok(None) => {
+                    // torn final append (crash mid-write): drop the tail
+                    break;
+                }
+                Err(_) => {
+                    // mangled envelope — no record boundary to resync on;
+                    // everything from here on is unrecoverable
+                    self.corrupt_records += 1;
+                    break;
+                }
+            }
+        }
+        if at < buf.len() {
+            self.dropped_tail_bytes = (buf.len() - at) as u64;
+            let f = OpenOptions::new().write(true).open(&self.path)?;
+            f.set_len(at as u64)?;
+        }
+        self.total_bytes = at as u64;
+        Ok(())
+    }
+
+    fn append(&mut self, op: u8, col: Column, key: &[u8], value: &[u8]) {
+        let Ok(rec) = encode_record(op, col.code(), key, value) else {
+            // oversized record (a >16 MiB value): skip durability for
+            // this entry rather than poison the file
+            self.io_errors += 1;
+            return;
+        };
+        let Some(file) = self.file.as_mut() else {
+            self.io_errors += 1;
+            return;
+        };
+        match file.write_all(&rec) {
+            Ok(()) => {
+                self.records += 1;
+                self.total_bytes += rec.len() as u64;
+            }
+            Err(_) => self.io_errors += 1,
+        }
+    }
+
+    /// Live entries of `col`, sorted by key (warm replay, compaction).
+    pub fn entries(&self, col: Column) -> Vec<(Vec<u8>, Vec<u8>)> {
+        self.mem.sorted_entries(col)
+    }
+
+    /// Total live entries across all columns.
+    pub fn live_len(&self) -> u64 {
+        Column::ALL.iter().map(|c| self.mem.len(*c) as u64).sum()
+    }
+
+    /// Rewrite exactly the live key set (sorted per column) into a fresh
+    /// file and atomically rename it over the log.
+    pub fn compact(&mut self) -> std::io::Result<()> {
+        let tmp = self.path.with_extension("log.tmp");
+        let mut out = Vec::new();
+        let mut records = 0u64;
+        for col in Column::ALL {
+            for (key, value) in self.mem.sorted_entries(col) {
+                if let Ok(rec) = encode_record(RECORD_PUT, col.code(), &key, &value) {
+                    out.extend_from_slice(&rec);
+                    records += 1;
+                }
+            }
+        }
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&out)?;
+            f.sync_data()?;
+        }
+        std::fs::rename(&tmp, &self.path)?;
+        self.file = Some(OpenOptions::new().append(true).open(&self.path)?);
+        self.records = records;
+        self.total_bytes = out.len() as u64;
+        self.compactions += 1;
+        Ok(())
+    }
+
+    /// Compact when most of the file is superseded records/tombstones
+    /// and it is big enough to matter. Errors count as I/O errors.
+    pub fn maybe_compact(&mut self) -> bool {
+        let live = self.live_len();
+        if self.total_bytes < COMPACT_MIN_BYTES || self.records <= COMPACT_RECORD_FACTOR * live {
+            return false;
+        }
+        match self.compact() {
+            Ok(()) => true,
+            Err(_) => {
+                self.io_errors += 1;
+                false
+            }
+        }
+    }
+
+    /// Push appended records to stable storage.
+    pub fn flush(&mut self) {
+        if let Some(f) = self.file.as_mut() {
+            if f.sync_data().is_err() {
+                self.io_errors += 1;
+            }
+        }
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    pub fn corrupt_records(&self) -> u64 {
+        self.corrupt_records
+    }
+
+    pub fn dropped_tail_bytes(&self) -> u64 {
+        self.dropped_tail_bytes
+    }
+
+    pub fn io_errors(&self) -> u64 {
+        self.io_errors
+    }
+
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+}
+
+impl Layer for SegmentLog {
+    type Base = MemLayer;
+}
+
+impl ReadLayer for SegmentLog {
+    fn has(&self, col: Column, key: &[u8]) -> bool {
+        self.mem.has(col, key)
+    }
+
+    fn get(&self, col: Column, key: &[u8]) -> Option<Vec<u8>> {
+        self.mem.get(col, key)
+    }
+
+    fn for_each(&self, col: Column, f: &mut dyn FnMut(&[u8], &[u8]) -> bool) {
+        self.mem.for_each(col, f)
+    }
+
+    fn len(&self, col: Column) -> usize {
+        self.mem.len(col)
+    }
+}
+
+impl WriteLayer for SegmentLog {
+    fn put(&mut self, col: Column, key: &[u8], value: &[u8]) {
+        if self.mem.get(col, key).as_deref() == Some(value) {
+            return; // identical live value: re-flushing a cache is free
+        }
+        self.append(RECORD_PUT, col, key, value);
+        self.mem.put(col, key, value);
+    }
+
+    fn delete(&mut self, col: Column, key: &[u8]) {
+        if !self.mem.has(col, key) {
+            return;
+        }
+        self.append(RECORD_DELETE, col, key, &[]);
+        self.mem.delete(col, key);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mem::tests::exercise_layer;
+    use super::*;
+
+    /// Fresh per-test store dir under the system temp dir (same pattern
+    /// as `testing::synthetic_bundle`).
+    fn store_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("qpart-store-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn segment_log_satisfies_the_stack_contract() {
+        let dir = store_dir("contract");
+        let mut log = SegmentLog::open(&dir).unwrap();
+        exercise_layer(&mut log);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn state_survives_reopen() {
+        let dir = store_dir("reopen");
+        {
+            let mut log = SegmentLog::open(&dir).unwrap();
+            log.put(Column::Decision, b"d1", b"v1");
+            log.put(Column::Reply, b"r1", b"body");
+            log.put(Column::Decision, b"d1", b"v2"); // supersede
+            log.put(Column::Decision, b"gone", b"x");
+            log.delete(Column::Decision, b"gone");
+            log.flush();
+        }
+        let log = SegmentLog::open(&dir).unwrap();
+        assert_eq!(log.get(Column::Decision, b"d1"), Some(b"v2".to_vec()));
+        assert_eq!(log.get(Column::Reply, b"r1"), Some(b"body".to_vec()));
+        assert!(!log.has(Column::Decision, b"gone"));
+        assert_eq!(log.corrupt_records(), 0);
+        assert_eq!(log.dropped_tail_bytes(), 0);
+        assert_eq!(log.records(), 5, "replay saw every append, live state is the net");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn identical_reput_appends_nothing() {
+        let dir = store_dir("dedup");
+        let mut log = SegmentLog::open(&dir).unwrap();
+        log.put(Column::Plan, b"k", b"v");
+        let after_first = log.total_bytes();
+        log.put(Column::Plan, b"k", b"v");
+        log.delete(Column::Plan, b"absent");
+        assert_eq!(log.total_bytes(), after_first);
+        assert_eq!(log.records(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_and_earlier_records_survive() {
+        let dir = store_dir("torn");
+        {
+            let mut log = SegmentLog::open(&dir).unwrap();
+            log.put(Column::Decision, b"a", b"1");
+            log.put(Column::Decision, b"b", b"2");
+            log.flush();
+        }
+        // simulate a crash mid-append: half a record at the tail
+        let path = dir.join(LOG_FILE);
+        let full = encode_record(RECORD_PUT, Column::Decision.code(), b"c", b"3").unwrap();
+        let clean_len = std::fs::metadata(&path).unwrap().len();
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&full[..full.len() / 2]).unwrap();
+        }
+        let log = SegmentLog::open(&dir).unwrap();
+        assert_eq!(log.get(Column::Decision, b"a"), Some(b"1".to_vec()));
+        assert_eq!(log.get(Column::Decision, b"b"), Some(b"2".to_vec()));
+        assert!(!log.has(Column::Decision, b"c"), "torn record never replays");
+        assert_eq!(log.dropped_tail_bytes(), (full.len() / 2) as u64);
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            clean_len,
+            "file truncated back to the last good boundary"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crc_corruption_is_skipped_and_counted() {
+        let dir = store_dir("crc");
+        {
+            let mut log = SegmentLog::open(&dir).unwrap();
+            log.put(Column::Decision, b"a", b"1");
+            log.put(Column::Decision, b"bad", b"xxxx");
+            log.put(Column::Decision, b"z", b"9");
+            log.flush();
+        }
+        // flip one payload byte inside the middle record
+        let path = dir.join(LOG_FILE);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let first = encode_record(RECORD_PUT, Column::Decision.code(), b"a", b"1").unwrap();
+        let at = first.len() + 20; // inside record 2's key/value region
+        bytes[at] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let log = SegmentLog::open(&dir).unwrap();
+        assert_eq!(log.corrupt_records(), 1);
+        assert!(!log.has(Column::Decision, b"bad"), "corrupt record never replays");
+        assert_eq!(log.get(Column::Decision, b"a"), Some(b"1".to_vec()));
+        assert_eq!(log.get(Column::Decision, b"z"), Some(b"9".to_vec()), "later records survive");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_preserves_exactly_the_live_key_set() {
+        let dir = store_dir("compact");
+        let mut log = SegmentLog::open(&dir).unwrap();
+        for i in 0..50u32 {
+            log.put(Column::Decision, &i.to_le_bytes(), b"old");
+            log.put(Column::Decision, &i.to_le_bytes(), &i.to_le_bytes());
+        }
+        for i in 0..25u32 {
+            log.delete(Column::Decision, &i.to_le_bytes());
+        }
+        log.put(Column::Reply, b"r", b"body");
+        let live_before: Vec<_> =
+            Column::ALL.iter().map(|c| log.entries(*c)).collect();
+        let bytes_before = log.total_bytes();
+        log.compact().unwrap();
+        assert_eq!(log.compactions(), 1);
+        assert!(log.total_bytes() < bytes_before);
+        assert_eq!(log.records(), log.live_len(), "compacted file is all live records");
+        let live_after: Vec<_> = Column::ALL.iter().map(|c| log.entries(*c)).collect();
+        assert_eq!(live_after, live_before);
+        drop(log);
+        // and the compacted file replays to the same state
+        let reopened = SegmentLog::open(&dir).unwrap();
+        let live_reopened: Vec<_> =
+            Column::ALL.iter().map(|c| reopened.entries(*c)).collect();
+        assert_eq!(live_reopened, live_before);
+        assert_eq!(reopened.corrupt_records(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn maybe_compact_waits_for_dead_weight() {
+        let dir = store_dir("maybe");
+        let mut log = SegmentLog::open(&dir).unwrap();
+        log.put(Column::Decision, b"k", b"v");
+        assert!(!log.maybe_compact(), "tiny log never compacts");
+        // grow the file past the floor with superseded versions of one key
+        let big = vec![0xA5u8; 64 * 1024];
+        for i in 0..40u32 {
+            let mut v = big.clone();
+            v[0..4].copy_from_slice(&i.to_le_bytes());
+            log.put(Column::Reply, b"hot", &v);
+        }
+        assert!(log.total_bytes() > COMPACT_MIN_BYTES);
+        assert!(log.maybe_compact(), "mostly-dead file compacts");
+        assert_eq!(log.records(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

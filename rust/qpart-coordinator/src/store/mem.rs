@@ -1,0 +1,128 @@
+//! The in-memory terminal layer of the store stack.
+
+use super::{Column, Identity, Layer, ReadLayer, WriteLayer};
+use std::collections::HashMap;
+
+/// A plain in-memory byte store: one map per [`Column`]. This is the
+/// terminal layer everything else composes over — the segment log keeps
+/// one as its live-state mirror, and tests drive the trait stack against
+/// it directly.
+#[derive(Debug, Default)]
+pub struct MemLayer {
+    cols: [HashMap<Vec<u8>, Vec<u8>>; Column::ALL.len()],
+}
+
+impl MemLayer {
+    pub fn new() -> MemLayer {
+        MemLayer::default()
+    }
+
+    /// Every live `(key, value)` of `col`, sorted by key — the
+    /// deterministic snapshot the log's compaction and warm replay use.
+    pub fn sorted_entries(&self, col: Column) -> Vec<(Vec<u8>, Vec<u8>)> {
+        let mut v: Vec<(Vec<u8>, Vec<u8>)> =
+            self.cols[col.index()].iter().map(|(k, val)| (k.clone(), val.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+}
+
+impl Layer for MemLayer {
+    type Base = Identity;
+}
+
+impl ReadLayer for MemLayer {
+    fn has(&self, col: Column, key: &[u8]) -> bool {
+        self.cols[col.index()].contains_key(key)
+    }
+
+    fn get(&self, col: Column, key: &[u8]) -> Option<Vec<u8>> {
+        self.cols[col.index()].get(key).cloned()
+    }
+
+    fn for_each(&self, col: Column, f: &mut dyn FnMut(&[u8], &[u8]) -> bool) {
+        for (k, v) in &self.cols[col.index()] {
+            if !f(k, v) {
+                return;
+            }
+        }
+    }
+
+    fn len(&self, col: Column) -> usize {
+        self.cols[col.index()].len()
+    }
+}
+
+impl WriteLayer for MemLayer {
+    fn put(&mut self, col: Column, key: &[u8], value: &[u8]) {
+        self.cols[col.index()].insert(key.to_vec(), value.to_vec());
+    }
+
+    fn delete(&mut self, col: Column, key: &[u8]) {
+        self.cols[col.index()].remove(key);
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// Shared property suite: any [`WriteLayer`] must round-trip
+    /// put/get/delete through the trait stack. Reused by the temporal
+    /// overlay's and the segment log's tests so all three layers are
+    /// held to identical semantics.
+    pub fn exercise_layer(layer: &mut dyn WriteLayer) {
+        for col in Column::ALL {
+            assert!(!layer.has(col, b"k"), "{col:?} starts empty");
+            assert_eq!(layer.get(col, b"k"), None);
+        }
+        layer.put(Column::Decision, b"k", b"v1");
+        assert!(layer.has(Column::Decision, b"k"));
+        assert!(!layer.has(Column::Reply, b"k"), "columns are disjoint namespaces");
+        assert_eq!(layer.get(Column::Decision, b"k"), Some(b"v1".to_vec()));
+        // replace
+        layer.put(Column::Decision, b"k", b"v2");
+        assert_eq!(layer.get(Column::Decision, b"k"), Some(b"v2".to_vec()));
+        assert_eq!(layer.len(Column::Decision), 1);
+        // second key + iteration
+        layer.put(Column::Decision, b"k2", b"w");
+        let mut seen = Vec::new();
+        layer.for_each(Column::Decision, &mut |k, v| {
+            seen.push((k.to_vec(), v.to_vec()));
+            true
+        });
+        seen.sort();
+        assert_eq!(seen, vec![(b"k".to_vec(), b"v2".to_vec()), (b"k2".to_vec(), b"w".to_vec())]);
+        // early-stop iteration visits exactly one entry
+        let mut n = 0;
+        layer.for_each(Column::Decision, &mut |_, _| {
+            n += 1;
+            false
+        });
+        assert_eq!(n, 1);
+        // delete (and deleting an absent key is a no-op)
+        layer.delete(Column::Decision, b"k");
+        assert!(!layer.has(Column::Decision, b"k"));
+        layer.delete(Column::Decision, b"missing");
+        assert_eq!(layer.len(Column::Decision), 1);
+        layer.delete(Column::Decision, b"k2");
+        assert!(layer.is_empty(Column::Decision));
+    }
+
+    #[test]
+    fn mem_layer_satisfies_the_stack_contract() {
+        let mut mem = MemLayer::new();
+        exercise_layer(&mut mem);
+    }
+
+    #[test]
+    fn sorted_entries_is_deterministic() {
+        let mut mem = MemLayer::new();
+        mem.put(Column::Reply, b"b", b"2");
+        mem.put(Column::Reply, b"a", b"1");
+        mem.put(Column::Reply, b"c", b"3");
+        let entries = mem.sorted_entries(Column::Reply);
+        let keys: Vec<&[u8]> = entries.iter().map(|(k, _)| k.as_slice()).collect();
+        assert_eq!(keys, vec![b"a".as_slice(), b"b", b"c"]);
+    }
+}

@@ -1,0 +1,222 @@
+//! The store tier: one layered byte-store API under every coordinator
+//! cache, plus the append-only segment log that makes warm state survive
+//! restarts.
+//!
+//! Before this module, the coordinator's three caches — the Algorithm-2
+//! [`DecisionCache`](crate::decision::DecisionCache), the
+//! [`EncodedReplyCache`](crate::sched::EncodedReplyCache), and the
+//! pool-wide compile cache — had three incompatible APIs (different key
+//! types, eviction policies, stats shapes, warm-up paths) and all of them
+//! forgot everything on restart. The store tier unifies them:
+//!
+//! ```text
+//!   DecisionCache        EncodedReplyCache       CompileCache plans
+//!   (typed facade)       (typed facade)          (fingerprints only)
+//!        │                     │                        │
+//!        └────────── CacheCore (one eviction engine, ───┘
+//!        │           one CacheStats shape)        │
+//!        ▼                     ▼                  ▼
+//!   ┌─────────────────── StoreTier ───────────────────┐
+//!   │  staged write-ahead ops → Temporal overlay      │
+//!   │  ──commit──▶ SegmentLog (append-only, CRC'd)    │
+//!   │              │ in-memory MemLayer mirror        │
+//!   │              └ on-disk  store.log  (--store-dir)│
+//!   └──────────────────────────────────────────────────┘
+//! ```
+//!
+//! # The layer trait stack
+//!
+//! The shape follows calimero-core's storage layers: every store is a
+//! [`Layer`] whose associated `Base` names the layer it composes over —
+//! [`Identity`] terminates the stack. Read access is [`ReadLayer`]
+//! (`has`/`get`/`for_each` over `(column, key) → value` byte slices),
+//! write access is [`WriteLayer`] (`put`/`delete`). A
+//! [`Temporal`](temporal::Temporal) is the write-ahead overlay in the
+//! stack: `Temporal<'_, L>` has `Base = L`, buffers puts and tombstones
+//! in memory, answers reads through the overlay first, and `commit()`
+//! applies the net effect to its base in one deterministic sweep. The
+//! in-memory terminal layer is [`MemLayer`] (`Base = Identity`); the
+//! durable terminal layer is [`SegmentLog`] (`Base = MemLayer` — it *is*
+//! a mem layer that also appends every committed mutation to disk).
+//!
+//! Keys are **typed** at the cache facades ([`keys`] has the codecs:
+//! `DecisionKey{model, level, ProfileBucket}`, the reply `SegmentKey`,
+//! and plan fingerprints) and byte slices below the facade line, so the
+//! log, the overlay, and any future replication hook move opaque bytes.
+//!
+//! # Durability model
+//!
+//! The log is append-only: every committed `put`/`delete` becomes one
+//! CRC-guarded record (see [`qpart_proto::frame::StoreRecord`]) behind
+//! the same `0xB1` + little-endian length envelope discipline as the wire
+//! protocol's binary frames. Replay on open:
+//!
+//! * a record whose CRC mismatches but whose envelope is intact is
+//!   **skipped** (counted in `store_corrupt_records_total`) — corruption
+//!   at rest never replays as state and never hides later records;
+//! * a record that runs past end-of-file (a torn final write from a
+//!   crash) marks the recovered tail: the file is truncated there and
+//!   every earlier record survives.
+//!
+//! Background **compaction** rewrites exactly the live key set (last put
+//! wins, tombstones drop) into a fresh file and atomically renames it
+//! over the log, bounding disk growth to the working set.
+//!
+//! There are no external database dependencies — the log is a single
+//! file of wire-format records.
+
+pub mod cache;
+pub mod keys;
+pub mod log;
+pub mod mem;
+pub mod temporal;
+pub mod tier;
+
+pub use cache::{CacheCore, CacheStats, EvictPolicy};
+pub use log::SegmentLog;
+pub use mem::MemLayer;
+pub use temporal::Temporal;
+pub use tier::StoreTier;
+
+/// A typed-key namespace in the store. Each column holds one kind of
+/// entry; the `u8` code is what store records carry on disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Column {
+    /// Memoized Algorithm-2 decisions
+    /// (`DecisionKey{model, level, ProfileBucket}` → encoded `Decision`).
+    Decision,
+    /// Encoded segment replies
+    /// (`(model, level, partition)` → binary reply body).
+    Reply,
+    /// Phase-2 plan fingerprints (`(model, partition)` → empty): replay
+    /// pre-builds the compile cache's server-segment plans.
+    Plan,
+}
+
+impl Column {
+    /// Every column, in stable display order.
+    pub const ALL: [Column; 3] = [Column::Decision, Column::Reply, Column::Plan];
+
+    /// The on-disk column code.
+    pub fn code(self) -> u8 {
+        match self {
+            Column::Decision => 1,
+            Column::Reply => 2,
+            Column::Plan => 3,
+        }
+    }
+
+    /// Decode an on-disk column code.
+    pub fn from_code(code: u8) -> Option<Column> {
+        match code {
+            1 => Some(Column::Decision),
+            2 => Some(Column::Reply),
+            3 => Some(Column::Plan),
+            _ => None,
+        }
+    }
+
+    /// Human-readable column name (stats documents, labels).
+    pub fn label(self) -> &'static str {
+        match self {
+            Column::Decision => "decision",
+            Column::Reply => "reply",
+            Column::Plan => "plan",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Column::Decision => 0,
+            Column::Reply => 1,
+            Column::Plan => 2,
+        }
+    }
+}
+
+/// A member of the layered store stack. `Base` names the layer this one
+/// composes over (calimero-style): an overlay's `Base` is the layer its
+/// commits land on; terminal layers point at [`Identity`]. The
+/// association is compile-time documentation of the stack's shape — it
+/// keeps "who commits into whom" explicit at every level.
+pub trait Layer {
+    /// The layer this one composes over ([`Identity`] when terminal).
+    type Base: Layer;
+}
+
+/// The terminal base of the stack: no layer below. Uninhabited — it only
+/// exists at the type level.
+pub enum Identity {}
+
+impl Layer for Identity {
+    type Base = Identity;
+}
+
+/// Read access to a layer: `(column, key) → value` over byte slices.
+pub trait ReadLayer: Layer {
+    /// Whether `key` is live in `col`.
+    fn has(&self, col: Column, key: &[u8]) -> bool;
+
+    /// The live value of `key` in `col`, if any.
+    fn get(&self, col: Column, key: &[u8]) -> Option<Vec<u8>>;
+
+    /// Visit every live `(key, value)` of `col`. Return `false` from the
+    /// visitor to stop early. Iteration order is unspecified (layers
+    /// that need determinism — the log's compaction — sort internally).
+    fn for_each(&self, col: Column, f: &mut dyn FnMut(&[u8], &[u8]) -> bool);
+
+    /// Live entries in `col`.
+    fn len(&self, col: Column) -> usize {
+        let mut n = 0;
+        self.for_each(col, &mut |_, _| {
+            n += 1;
+            true
+        });
+        n
+    }
+
+    /// Whether `col` holds no live entries.
+    fn is_empty(&self, col: Column) -> bool {
+        self.len(col) == 0
+    }
+}
+
+/// Write access to a layer.
+pub trait WriteLayer: ReadLayer {
+    /// Insert or replace `key` in `col`.
+    fn put(&mut self, col: Column, key: &[u8], value: &[u8]);
+
+    /// Remove `key` from `col` (a no-op when absent).
+    fn delete(&mut self, col: Column, key: &[u8]);
+}
+
+/// Extension adapters every [`WriteLayer`] gets for free.
+pub trait LayerExt: WriteLayer + Sized {
+    /// Open a write-ahead [`Temporal`] overlay over this layer: reads
+    /// see staged state, writes buffer in memory, and
+    /// [`Temporal::commit`] applies the net effect to `self`.
+    fn temporal(&mut self) -> Temporal<'_, Self> {
+        Temporal::new(self)
+    }
+}
+
+impl<L: WriteLayer> LayerExt for L {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_codes_roundtrip_and_are_distinct() {
+        for col in Column::ALL {
+            assert_eq!(Column::from_code(col.code()), Some(col));
+        }
+        assert_eq!(Column::from_code(0), None);
+        assert_eq!(Column::from_code(9), None);
+        let labels: Vec<_> = Column::ALL.iter().map(|c| c.label()).collect();
+        assert_eq!(labels, vec!["decision", "reply", "plan"]);
+    }
+
+    // the trait-stack property tests over every layer implementation
+    // live in `mem`, `temporal`, and `log`
+}

@@ -1,0 +1,169 @@
+//! The write-ahead overlay of the store stack.
+
+use super::{Column, Layer, ReadLayer, WriteLayer};
+use std::collections::HashMap;
+
+/// A write-ahead overlay over any [`WriteLayer`] (calimero's `Temporal`
+/// shape): `Base = L` in the [`Layer`] stack. Writes buffer in memory as
+/// the *net* effect per key — a put shadows earlier puts, a delete
+/// becomes a tombstone — reads answer through the overlay first, and
+/// [`Temporal::commit`] applies the buffered state to the base in one
+/// deterministic (key-sorted) sweep. Dropping an uncommitted overlay
+/// discards it: the base never sees half a batch.
+///
+/// The [`StoreTier`](super::StoreTier) drains its staged cache mutations
+/// through one of these per flush, so a key written five times in one
+/// housekeeping window costs the segment log **one** record.
+pub struct Temporal<'base, L: WriteLayer> {
+    base: &'base mut L,
+    /// Net staged state per column: `Some(value)` = put, `None` =
+    /// tombstone (delete on commit).
+    overlay: [HashMap<Vec<u8>, Option<Vec<u8>>>; Column::ALL.len()],
+}
+
+impl<'base, L: WriteLayer> Temporal<'base, L> {
+    /// Open an empty overlay over `base` (see also
+    /// [`LayerExt::temporal`](super::LayerExt::temporal)).
+    pub fn new(base: &'base mut L) -> Temporal<'base, L> {
+        Temporal { base, overlay: Default::default() }
+    }
+
+    /// Staged (uncommitted) operations across all columns.
+    pub fn staged_len(&self) -> usize {
+        self.overlay.iter().map(HashMap::len).sum()
+    }
+
+    /// Apply the buffered net state to the base, keys sorted per column
+    /// so commit order (and therefore the log's record order) is
+    /// deterministic. Consumes the overlay.
+    pub fn commit(self) {
+        for col in Column::ALL {
+            let mut ops: Vec<(Vec<u8>, Option<Vec<u8>>)> =
+                self.overlay[col.index()].clone().into_iter().collect();
+            ops.sort_by(|a, b| a.0.cmp(&b.0));
+            for (key, op) in ops {
+                match op {
+                    Some(value) => self.base.put(col, &key, &value),
+                    None => self.base.delete(col, &key),
+                }
+            }
+        }
+    }
+}
+
+impl<L: WriteLayer> Layer for Temporal<'_, L> {
+    type Base = L;
+}
+
+impl<L: WriteLayer> ReadLayer for Temporal<'_, L> {
+    fn has(&self, col: Column, key: &[u8]) -> bool {
+        match self.overlay[col.index()].get(key) {
+            Some(Some(_)) => true,
+            Some(None) => false, // staged tombstone shadows the base
+            None => self.base.has(col, key),
+        }
+    }
+
+    fn get(&self, col: Column, key: &[u8]) -> Option<Vec<u8>> {
+        match self.overlay[col.index()].get(key) {
+            Some(Some(v)) => Some(v.clone()),
+            Some(None) => None,
+            None => self.base.get(col, key),
+        }
+    }
+
+    fn for_each(&self, col: Column, f: &mut dyn FnMut(&[u8], &[u8]) -> bool) {
+        let overlay = &self.overlay[col.index()];
+        let mut stop = false;
+        for (k, v) in overlay {
+            if let Some(v) = v {
+                if !f(k, v) {
+                    stop = true;
+                    break;
+                }
+            }
+        }
+        if stop {
+            return;
+        }
+        self.base.for_each(col, &mut |k, v| {
+            if overlay.contains_key(k) {
+                // shadowed: already visited (put) or tombstoned
+                return true;
+            }
+            f(k, v)
+        });
+    }
+}
+
+impl<L: WriteLayer> WriteLayer for Temporal<'_, L> {
+    fn put(&mut self, col: Column, key: &[u8], value: &[u8]) {
+        self.overlay[col.index()].insert(key.to_vec(), Some(value.to_vec()));
+    }
+
+    fn delete(&mut self, col: Column, key: &[u8]) {
+        self.overlay[col.index()].insert(key.to_vec(), None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mem::tests::exercise_layer;
+    use super::super::{LayerExt, MemLayer};
+    use super::*;
+
+    #[test]
+    fn temporal_satisfies_the_stack_contract() {
+        let mut mem = MemLayer::new();
+        let mut t = mem.temporal();
+        exercise_layer(&mut t);
+    }
+
+    #[test]
+    fn overlay_shadows_base_until_commit() {
+        let mut mem = MemLayer::new();
+        mem.put(Column::Decision, b"kept", b"base");
+        mem.put(Column::Decision, b"gone", b"base");
+        let mut t = mem.temporal();
+        t.put(Column::Decision, b"kept", b"staged");
+        t.delete(Column::Decision, b"gone");
+        t.put(Column::Decision, b"new", b"fresh");
+        assert_eq!(t.get(Column::Decision, b"kept"), Some(b"staged".to_vec()));
+        assert_eq!(t.get(Column::Decision, b"gone"), None);
+        assert!(!t.has(Column::Decision, b"gone"));
+        assert_eq!(t.len(Column::Decision), 2, "tombstone excluded, new key included");
+        assert_eq!(t.staged_len(), 3);
+        t.commit();
+        // the base now holds exactly the net state
+        assert_eq!(mem.get(Column::Decision, b"kept"), Some(b"staged".to_vec()));
+        assert_eq!(mem.get(Column::Decision, b"gone"), None);
+        assert_eq!(mem.get(Column::Decision, b"new"), Some(b"fresh".to_vec()));
+    }
+
+    #[test]
+    fn dropping_an_uncommitted_overlay_discards_it() {
+        let mut mem = MemLayer::new();
+        mem.put(Column::Reply, b"k", b"v");
+        {
+            let mut t = mem.temporal();
+            t.delete(Column::Reply, b"k");
+            t.put(Column::Reply, b"other", b"x");
+            // dropped without commit
+        }
+        assert_eq!(mem.get(Column::Reply, b"k"), Some(b"v".to_vec()));
+        assert!(!mem.has(Column::Reply, b"other"));
+    }
+
+    #[test]
+    fn last_staged_write_per_key_wins() {
+        let mut mem = MemLayer::new();
+        let mut t = mem.temporal();
+        t.put(Column::Plan, b"k", b"1");
+        t.put(Column::Plan, b"k", b"2");
+        t.delete(Column::Plan, b"k");
+        t.put(Column::Plan, b"k", b"3");
+        assert_eq!(t.staged_len(), 1, "net effect per key, not an op journal");
+        t.commit();
+        assert_eq!(mem.get(Column::Plan, b"k"), Some(b"3".to_vec()));
+    }
+}

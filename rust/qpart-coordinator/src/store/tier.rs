@@ -1,0 +1,233 @@
+//! The shared store handle: staged write-ahead mutations over the
+//! segment log.
+
+use super::log::SegmentLog;
+use super::{Column, LayerExt, ReadLayer, WriteLayer};
+use crate::metrics::Metrics;
+use crate::sched::batch::lock_recover;
+use qpart_core::json::Value;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One staged mutation: `value: Some` = put, `None` = delete.
+struct StagedOp {
+    col: Column,
+    key: Vec<u8>,
+    value: Option<Vec<u8>>,
+}
+
+/// The process-wide durable store handle, shared by every cache facade
+/// and the housekeeping thread.
+///
+/// Serving paths never touch the disk: a cache insert/evict calls
+/// [`StoreTier::stage_put`]/[`StoreTier::stage_delete`], which pushes one
+/// op onto an in-memory queue under a short lock. The housekeeping thread
+/// periodically calls [`StoreTier::flush`], which drains the queue
+/// through a [`Temporal`](super::Temporal) overlay (collapsing repeated
+/// writes to one record per key) and commits it to the [`SegmentLog`] in
+/// one deterministic sweep, then syncs. [`StoreTier::maybe_compact`]
+/// rides the same cadence.
+pub struct StoreTier {
+    log: Mutex<SegmentLog>,
+    staged: Mutex<Vec<StagedOp>>,
+    flushes: AtomicU64,
+    staged_total: AtomicU64,
+}
+
+impl StoreTier {
+    /// Open (and replay) the segment log under `dir`.
+    pub fn open(dir: &Path) -> std::io::Result<Arc<StoreTier>> {
+        Ok(Arc::new(StoreTier {
+            log: Mutex::new(SegmentLog::open(dir)?),
+            staged: Mutex::new(Vec::new()),
+            flushes: AtomicU64::new(0),
+            staged_total: AtomicU64::new(0),
+        }))
+    }
+
+    /// Stage an insert/replace for the next flush (cheap, lock-bounded).
+    pub fn stage_put(&self, col: Column, key: Vec<u8>, value: Vec<u8>) {
+        lock_recover(&self.staged).push(StagedOp { col, key, value: Some(value) });
+        Metrics::inc(&self.staged_total);
+    }
+
+    /// Stage a delete (an evicted cache entry) for the next flush.
+    pub fn stage_delete(&self, col: Column, key: Vec<u8>) {
+        lock_recover(&self.staged).push(StagedOp { col, key, value: None });
+        Metrics::inc(&self.staged_total);
+    }
+
+    /// Ops staged since the last flush.
+    pub fn staged_len(&self) -> usize {
+        lock_recover(&self.staged).len()
+    }
+
+    /// Drain the staged ops into the log (via a write-ahead overlay, so a
+    /// key staged N times costs one record) and sync. Returns the number
+    /// of ops drained.
+    pub fn flush(&self) -> usize {
+        let ops: Vec<StagedOp> = std::mem::take(&mut *lock_recover(&self.staged));
+        let mut log = lock_recover(&self.log);
+        if !ops.is_empty() {
+            let mut overlay = log.temporal();
+            for op in &ops {
+                match &op.value {
+                    Some(v) => overlay.put(op.col, &op.key, v),
+                    None => overlay.delete(op.col, &op.key),
+                }
+            }
+            overlay.commit();
+        }
+        log.flush();
+        Metrics::inc(&self.flushes);
+        ops.len()
+    }
+
+    /// Compact the log if it is mostly dead weight. Returns whether a
+    /// compaction ran.
+    pub fn maybe_compact(&self) -> bool {
+        lock_recover(&self.log).maybe_compact()
+    }
+
+    /// The live `(key, value)` set of `col`, sorted by key — what warm
+    /// replay iterates. (Does not include unflushed staged ops.)
+    pub fn snapshot(&self, col: Column) -> Vec<(Vec<u8>, Vec<u8>)> {
+        lock_recover(&self.log).entries(col)
+    }
+
+    /// A live value (staged unflushed ops included — tests and the
+    /// replication hook read through this).
+    pub fn get(&self, col: Column, key: &[u8]) -> Option<Vec<u8>> {
+        let staged = lock_recover(&self.staged);
+        for op in staged.iter().rev() {
+            if op.col == col && op.key == key {
+                return op.value.clone();
+            }
+        }
+        drop(staged);
+        lock_recover(&self.log).get(col, key)
+    }
+
+    /// Replayed-but-unreadable records seen at open
+    /// (`store_corrupt_records_total`).
+    pub fn corrupt_records(&self) -> u64 {
+        lock_recover(&self.log).corrupt_records()
+    }
+
+    /// The `store` section of the stats document.
+    pub fn to_json(&self) -> Value {
+        let (records, total_bytes, live, corrupt, dropped_tail, io_errors, compactions) = {
+            let log = lock_recover(&self.log);
+            (
+                log.records(),
+                log.total_bytes(),
+                log.live_len(),
+                log.corrupt_records(),
+                log.dropped_tail_bytes(),
+                log.io_errors(),
+                log.compactions(),
+            )
+        };
+        Value::obj([
+            ("records", records.into()),
+            ("log_bytes", total_bytes.into()),
+            ("live_entries", live.into()),
+            ("corrupt_records", corrupt.into()),
+            ("dropped_tail_bytes", dropped_tail.into()),
+            ("io_errors", io_errors.into()),
+            ("compactions", compactions.into()),
+            ("flushes", self.flushes.load(Ordering::Relaxed).into()),
+            ("staged_ops_total", self.staged_total.load(Ordering::Relaxed).into()),
+            ("staged_pending", (self.staged_len() as u64).into()),
+        ])
+    }
+
+    /// `(records, log_bytes, live_entries, corrupt_records, io_errors,
+    /// compactions, flushes)` for the Prometheus surface.
+    pub fn counters(&self) -> (u64, u64, u64, u64, u64, u64, u64) {
+        let log = lock_recover(&self.log);
+        (
+            log.records(),
+            log.total_bytes(),
+            log.live_len(),
+            log.corrupt_records(),
+            log.io_errors(),
+            log.compactions(),
+            self.flushes.load(Ordering::Relaxed),
+        )
+    }
+}
+
+impl std::fmt::Debug for StoreTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let log = lock_recover(&self.log);
+        f.debug_struct("StoreTier")
+            .field("records", &log.records())
+            .field("log_bytes", &log.total_bytes())
+            .field("staged", &self.staged_len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn store_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("qpart-tier-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn staged_ops_become_durable_on_flush() {
+        let dir = store_dir("flush");
+        {
+            let tier = StoreTier::open(&dir).unwrap();
+            tier.stage_put(Column::Decision, b"k".to_vec(), b"v1".to_vec());
+            tier.stage_put(Column::Decision, b"k".to_vec(), b"v2".to_vec());
+            tier.stage_put(Column::Reply, b"r".to_vec(), b"body".to_vec());
+            tier.stage_delete(Column::Reply, b"r".to_vec());
+            // staged-but-unflushed state reads through
+            assert_eq!(tier.get(Column::Decision, b"k"), Some(b"v2".to_vec()));
+            assert_eq!(tier.get(Column::Reply, b"r"), None);
+            assert_eq!(tier.flush(), 4);
+            assert_eq!(tier.staged_len(), 0);
+        }
+        let tier = StoreTier::open(&dir).unwrap();
+        assert_eq!(tier.get(Column::Decision, b"k"), Some(b"v2".to_vec()));
+        assert_eq!(tier.get(Column::Reply, b"r"), None);
+        // the overlay collapsed k's two puts into one record; r's
+        // put+delete netted to nothing
+        let snap = tier.snapshot(Column::Decision);
+        assert_eq!(snap, vec![(b"k".to_vec(), b"v2".to_vec())]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_document_has_the_store_shape() {
+        let dir = store_dir("stats");
+        let tier = StoreTier::open(&dir).unwrap();
+        tier.stage_put(Column::Plan, b"p".to_vec(), Vec::new());
+        tier.flush();
+        let v = tier.to_json();
+        for k in [
+            "records",
+            "log_bytes",
+            "live_entries",
+            "corrupt_records",
+            "dropped_tail_bytes",
+            "io_errors",
+            "compactions",
+            "flushes",
+            "staged_ops_total",
+            "staged_pending",
+        ] {
+            assert!(v.get(k).is_some(), "{k}");
+        }
+        assert_eq!(v.get("records").and_then(Value::as_i64), Some(1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

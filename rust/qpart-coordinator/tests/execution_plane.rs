@@ -16,7 +16,7 @@ use qpart_coordinator::client::paper_request;
 use qpart_coordinator::sched::{EncodedReplyCache, Job, WireReply};
 use qpart_coordinator::testing::{synthetic_bundle, synthetic_upload, tiny_arch, BlockingConn};
 use qpart_coordinator::{
-    serve, MetricsHub, ServerConfig, Service, ServiceOptions, SharedSessionTable,
+    serve, MetricsHub, ServerConfig, Service, ServiceOptions, SharedSessionTable, WarmMode,
 };
 use qpart_core::channel::Channel;
 use qpart_core::cost::{CostModel, DeviceProfile, ServerProfile, TradeoffWeights};
@@ -444,7 +444,7 @@ fn pool_coalesces_uploads_and_compiles_once_across_workers() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
-/// `--warm-cache`: the server comes up with the likely reply keys
+/// `--warm paper`: the server comes up with the likely reply keys
 /// encoded and phase-2 plans built; the first real request is a cache
 /// hit, not an encode.
 #[test]
@@ -453,7 +453,7 @@ fn warm_cache_preloads_replies_and_plans() {
     let handle = serve(ServerConfig {
         listen: "127.0.0.1:0".into(),
         workers: 2,
-        warm_cache: true,
+        warm: WarmMode::Paper,
         host_fallback: true,
         artifacts_dir: dir.to_str().unwrap().to_string(),
         ..ServerConfig::default()

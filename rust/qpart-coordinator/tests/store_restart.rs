@@ -1,0 +1,162 @@
+//! Durable-store restart tests — no PJRT required (synthetic bundle +
+//! host reference kernels).
+//!
+//! The kill-and-restart contract of the store tier, end to end over TCP:
+//! a server run with `--store-dir` spills its committed cache entries to
+//! the append-only segment log; a fresh server over the same directory
+//! started with `--warm log` replays them and serves its first requests
+//! straight off the replayed caches — hit counters nonzero before any
+//! new encode, replies byte-identical to a cold-start control.
+
+use qpart_coordinator::client::paper_request;
+use qpart_coordinator::testing::{synthetic_bundle, BlockingConn};
+use qpart_coordinator::{serve, ServerConfig, ServerHandle, WarmMode};
+use qpart_proto::messages::{InferReply, Request, Response};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// The channel classes driven before the kill and probed after the
+/// restart (distinct capacities → distinct decision-cache buckets).
+const CLASSES: [f64; 3] = [50e6, 100e6, 200e6];
+
+fn store_server(artifacts: &Path, store_dir: &Path, warm: WarmMode) -> ServerHandle {
+    serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        warm,
+        store_dir: Some(store_dir.to_str().unwrap().to_string()),
+        host_fallback: true,
+        artifacts_dir: artifacts.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .unwrap()
+}
+
+fn infer(conn: &mut BlockingConn, capacity_bps: f64) -> InferReply {
+    let mut req = paper_request("tinymlp", 0.02);
+    req.channel_capacity_bps = capacity_bps;
+    match conn.call(&Request::Infer(req)).unwrap() {
+        Response::Segment(r) => r,
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qpart-sr-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The full cycle: load → drain (flushes the log) → restart with
+/// `--warm log` → first wave is all cache hits, byte-identical replies.
+#[test]
+fn restart_with_warm_log_serves_replayed_entries_byte_identically() {
+    let artifacts = synthetic_bundle("sr-cycle");
+    let store_dir = scratch("cycle");
+
+    // generation 1: drive every class twice (the second round proves the
+    // keys are cacheable at all), remember the reply bytes
+    let first = store_server(&artifacts, &store_dir, WarmMode::Off);
+    let mut conn = BlockingConn::connect(&first.addr.to_string()).unwrap();
+    let control: Vec<InferReply> = CLASSES.iter().map(|&c| infer(&mut conn, c)).collect();
+    for (i, &c) in CLASSES.iter().enumerate() {
+        let again = infer(&mut conn, c);
+        assert_eq!(again.segment, control[i].segment, "class {i}: repeat differs in-process");
+    }
+    drop(conn);
+    let gen1 = first.snapshot();
+    assert!(gen1.encodes_total >= 1, "{gen1:?}");
+    assert!(first.drain(Duration::from_secs(10)), "generation 1 must drain cleanly");
+
+    // generation 2: `--warm log` replays before serve() returns
+    let second = store_server(&artifacts, &store_dir, WarmMode::Log);
+    let warm = second.snapshot();
+    assert!(warm.warmed_total > 0, "replay warmed nothing: {warm:?}");
+    assert_eq!(warm.encodes_total, 0, "replay must not encode");
+    assert!(second.cache.len() >= 1, "encoded replies resident before traffic");
+
+    // first post-restart wave: every class is a hit on both caches, with
+    // zero fresh encodes, and the bytes match generation 1 exactly
+    let mut conn = BlockingConn::connect(&second.addr.to_string()).unwrap();
+    for (i, &c) in CLASSES.iter().enumerate() {
+        let r = infer(&mut conn, c);
+        assert_eq!(r.segment, control[i].segment, "class {i}: replayed bytes differ");
+        assert_eq!(r.pattern, control[i].pattern, "class {i}: replayed decision differs");
+    }
+    drop(conn);
+    let snap = second.snapshot();
+    assert_eq!(snap.encodes_total, 0, "first wave re-encoded: {snap:?}");
+    assert!(snap.cache_hits >= CLASSES.len() as u64, "{snap:?}");
+    assert!(snap.decision_hits >= CLASSES.len() as u64, "{snap:?}");
+    second.shutdown();
+
+    // cold-start control from an empty store: same requests, same bytes —
+    // the replayed replies are what a fresh process would have computed
+    let cold_dir = scratch("cycle-cold");
+    let cold = store_server(&artifacts, &cold_dir, WarmMode::Off);
+    let mut conn = BlockingConn::connect(&cold.addr.to_string()).unwrap();
+    for (i, &c) in CLASSES.iter().enumerate() {
+        let r = infer(&mut conn, c);
+        assert_eq!(r.segment, control[i].segment, "class {i}: cold-start bytes differ");
+    }
+    drop(conn);
+    cold.shutdown();
+
+    let _ = std::fs::remove_dir_all(&artifacts);
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let _ = std::fs::remove_dir_all(&cold_dir);
+}
+
+/// A second kill-and-restart over the same directory keeps compounding:
+/// generation 3 replays what generations 1–2 wrote, and the log survives
+/// a restart that itself added nothing new.
+#[test]
+fn repeated_restarts_keep_replaying_the_same_log() {
+    let artifacts = synthetic_bundle("sr-repeat");
+    let store_dir = scratch("repeat");
+
+    let first = store_server(&artifacts, &store_dir, WarmMode::Off);
+    let mut conn = BlockingConn::connect(&first.addr.to_string()).unwrap();
+    let control = infer(&mut conn, CLASSES[0]);
+    drop(conn);
+    assert!(first.drain(Duration::from_secs(10)));
+
+    let mut expected_warm = None;
+    for generation in 2..=3 {
+        let server = store_server(&artifacts, &store_dir, WarmMode::Log);
+        let warmed = server.snapshot().warmed_total;
+        assert!(warmed > 0, "generation {generation} warmed nothing");
+        // idle generations write nothing, so the replayed count is stable
+        match expected_warm {
+            None => expected_warm = Some(warmed),
+            Some(w) => assert_eq!(warmed, w, "generation {generation} replay count drifted"),
+        }
+        let mut conn = BlockingConn::connect(&server.addr.to_string()).unwrap();
+        let r = infer(&mut conn, CLASSES[0]);
+        assert_eq!(r.segment, control.segment, "generation {generation} bytes differ");
+        drop(conn);
+        assert!(server.drain(Duration::from_secs(10)));
+    }
+
+    let _ = std::fs::remove_dir_all(&artifacts);
+    let _ = std::fs::remove_dir_all(&store_dir);
+}
+
+/// `--warm log` without a `--store-dir` is a configuration error, caught
+/// at startup rather than silently serving cold.
+#[test]
+fn warm_log_without_store_dir_fails_fast() {
+    let artifacts = synthetic_bundle("sr-nolog");
+    let err = serve(ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        warm: WarmMode::Log,
+        host_fallback: true,
+        artifacts_dir: artifacts.to_str().unwrap().to_string(),
+        ..ServerConfig::default()
+    })
+    .err()
+    .expect("warm log with no store must be rejected");
+    assert!(err.contains("store_dir"), "{err}");
+    let _ = std::fs::remove_dir_all(&artifacts);
+}

@@ -74,10 +74,19 @@ pub struct ServingConfig {
     pub fair_rate: f64,
     /// Plaintext metrics-scrape listen address ("" = disabled).
     pub metrics_listen: String,
-    /// Pre-warm the encoded-reply and compile caches at startup
-    /// (`--warm-cache`): encode the most-likely reply keys and pre-build
-    /// their phase-2 plans before serving the first request.
+    /// Deprecated boolean alias for `warm` (one release): `true` means
+    /// `warm = "paper"` when no explicit `warm` key is set.
     pub warm_cache: bool,
+    /// Cache pre-warm mode at startup (`serving.warm`): `"off"`,
+    /// `"paper"` (encode the most-likely reply keys under the
+    /// paper-default profile and pre-build their phase-2 plans — what
+    /// the deprecated `warm_cache` boolean meant), or `"log"` (replay
+    /// the durable segment log under `store_dir`).
+    pub warm: String,
+    /// Durable warm-state directory (`""` = disabled): cache inserts are
+    /// persisted to an append-only segment log so a restart with
+    /// `warm = "log"` comes up hot.
+    pub store_dir: String,
     /// Artifact bundle directory.
     pub artifacts_dir: String,
     /// Default accuracy levels when no calibration file provides them.
@@ -120,6 +129,10 @@ impl Config {
                     ("fair_rate", 0u64.into()),
                     ("metrics_listen", "".into()),
                     ("warm_cache", false.into()),
+                    // NOTE: no "warm" default here — `serving()` derives
+                    // it from the deprecated warm_cache alias when the
+                    // key is absent
+                    ("store_dir", "".into()),
                     ("artifacts_dir", "artifacts".into()),
                     (
                         "accuracy_levels",
@@ -233,6 +246,12 @@ impl Config {
     /// Typed serving view.
     pub fn serving(&self) -> Result<ServingConfig> {
         let srv = self.root.req("serving")?;
+        let warm_cache = srv.opt_bool("warm_cache", false);
+        // an explicit `warm` key wins; otherwise the deprecated
+        // warm_cache boolean maps true → "paper"
+        let warm = srv
+            .opt_str("warm", if warm_cache { "paper" } else { "off" })
+            .to_string();
         Ok(ServingConfig {
             listen: srv.opt_str("listen", "127.0.0.1:7878").to_string(),
             workers: srv.opt_f64("workers", 4.0) as usize,
@@ -245,7 +264,9 @@ impl Config {
             conn_idle_secs: srv.opt_f64("conn_idle_secs", 600.0) as u64,
             fair_rate: srv.opt_f64("fair_rate", 0.0),
             metrics_listen: srv.opt_str("metrics_listen", "").to_string(),
-            warm_cache: srv.opt_bool("warm_cache", false),
+            warm_cache,
+            warm,
+            store_dir: srv.opt_str("store_dir", "").to_string(),
             artifacts_dir: srv.opt_str("artifacts_dir", "artifacts").to_string(),
             accuracy_levels: srv
                 .req_f64_arr("accuracy_levels")
@@ -302,6 +323,8 @@ mod tests {
         assert_eq!(srv.cache_bytes, 64 << 20);
         assert!(srv.binary_frames);
         assert!(!srv.warm_cache, "warming is opt-in");
+        assert_eq!(srv.warm, "off", "warming is opt-in");
+        assert_eq!(srv.store_dir, "", "durable store is opt-in");
         assert_eq!(srv.max_conns, 4096);
         assert_eq!(srv.conn_idle_secs, 600);
         assert_eq!(srv.fair_rate, 0.0, "fair queuing is opt-in");
@@ -322,10 +345,22 @@ mod tests {
         assert!(!srv.binary_frames);
         assert_eq!(srv.session_ttl_secs, 30);
         assert!(srv.warm_cache);
+        assert_eq!(srv.warm, "paper", "warm_cache=true aliases to warm=paper");
         assert_eq!(srv.max_conns, 128);
         assert_eq!(srv.conn_idle_secs, 5);
         assert_eq!(srv.fair_rate, 2.5);
         assert_eq!(srv.metrics_listen, "127.0.0.1:9100");
+    }
+
+    #[test]
+    fn warm_key_wins_over_the_deprecated_alias() {
+        let mut cfg = Config::defaults();
+        cfg.set_override("serving.warm=log").unwrap();
+        cfg.set_override("serving.warm_cache=true").unwrap();
+        cfg.set_override("serving.store_dir=/tmp/qpart-store").unwrap();
+        let srv = cfg.serving().unwrap();
+        assert_eq!(srv.warm, "log", "explicit warm key beats the alias");
+        assert_eq!(srv.store_dir, "/tmp/qpart-store");
     }
 
     #[test]

@@ -198,6 +198,165 @@ pub fn split_frame(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
     Ok(Some((Frame::Binary(BinaryFrame { header, blob }), 5 + total)))
 }
 
+// ---------------------------------------------------------------------------
+// Store records — the append-only segment log's on-disk framing
+// ---------------------------------------------------------------------------
+
+/// CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`) over `data`.
+///
+/// Guards the store's on-disk records: a record whose body no longer
+/// matches its CRC is skipped at replay (counted, never served), while a
+/// record whose **envelope** is torn marks the log's recovered tail. No
+/// external dependency — the 256-entry table is built at compile time.
+pub fn crc32(data: &[u8]) -> u32 {
+    const TABLE: [u32; 256] = {
+        let mut table = [0u32; 256];
+        let mut i = 0;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            table[i] = c;
+            i += 1;
+        }
+        table
+    };
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Op byte of a store `put` record.
+pub const RECORD_PUT: u8 = 1;
+/// Op byte of a store `delete` record (a tombstone: the key's earlier
+/// puts are dead once this record replays).
+pub const RECORD_DELETE: u8 = 2;
+
+/// Fixed bytes of a record after the `total` field: CRC (4) + op (1) +
+/// column (1) + key length (4).
+const RECORD_OVERHEAD: usize = 10;
+
+/// One decoded store record.
+///
+/// On-disk layout reuses the binary-frame envelope discipline (magic +
+/// little-endian length prefix + [`MAX_FRAME_BYTES`] cap), with a CRC so
+/// a half-written or bit-flipped record can never replay as valid state:
+///
+/// ```text
+/// 0xB1                magic byte ([`BINARY_MAGIC`])
+/// u32  total          length of everything that follows
+/// u32  crc            [`crc32`] of everything after this field
+/// u8   op             [`RECORD_PUT`] | [`RECORD_DELETE`]
+/// u8   column         store column code (typed-key namespace)
+/// u32  key_len        key length
+/// key_len bytes       key
+/// rest                value (empty for deletes)
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreRecord {
+    /// [`RECORD_PUT`] or [`RECORD_DELETE`].
+    pub op: u8,
+    /// Column code — the typed-key namespace this record belongs to.
+    pub column: u8,
+    /// Encoded key bytes.
+    pub key: Vec<u8>,
+    /// Encoded value bytes (empty for deletes).
+    pub value: Vec<u8>,
+}
+
+/// Result of splitting one record off a replay buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RecordSplit {
+    /// A structurally valid record whose CRC checked out.
+    Record(StoreRecord),
+    /// The envelope was intact (so the record's extent is known and can
+    /// be skipped) but the CRC did not match — corrupted at rest.
+    Corrupt,
+}
+
+/// Encode one store record (see [`StoreRecord`] for the layout).
+pub fn encode_record(
+    op: u8,
+    column: u8,
+    key: &[u8],
+    value: &[u8],
+) -> Result<Vec<u8>, FrameError> {
+    let total = RECORD_OVERHEAD + key.len() + value.len();
+    if total > MAX_FRAME_BYTES {
+        return Err(FrameError::TooLarge);
+    }
+    let mut out = Vec::with_capacity(5 + total);
+    out.push(BINARY_MAGIC);
+    out.extend_from_slice(&(total as u32).to_le_bytes());
+    let crc_at = out.len();
+    out.extend_from_slice(&[0u8; 4]); // CRC backfilled below
+    out.push(op);
+    out.push(column);
+    out.extend_from_slice(&(key.len() as u32).to_le_bytes());
+    out.extend_from_slice(key);
+    out.extend_from_slice(value);
+    let crc = crc32(&out[crc_at + 4..]);
+    out[crc_at..crc_at + 4].copy_from_slice(&crc.to_le_bytes());
+    Ok(out)
+}
+
+/// Try to split one complete record off the front of `buf`:
+/// `Ok(Some((split, consumed)))` when a whole record (valid or corrupt)
+/// is buffered, `Ok(None)` when the buffer ends mid-record — at end of
+/// file that is the **torn tail**, recovered by truncation. Errors mean
+/// the buffer cannot be a record stream at this offset at all (bad magic
+/// or a forged length): replay must stop there.
+pub fn split_record(buf: &[u8]) -> Result<Option<(RecordSplit, usize)>, FrameError> {
+    let Some(&first) = buf.first() else {
+        return Ok(None);
+    };
+    if first != BINARY_MAGIC {
+        return Err(FrameError::BadBinary(format!("bad record magic 0x{first:02X}")));
+    }
+    if buf.len() < 5 {
+        return Ok(None);
+    }
+    let total = u32::from_le_bytes([buf[1], buf[2], buf[3], buf[4]]) as usize;
+    if total > MAX_FRAME_BYTES {
+        return Err(FrameError::TooLarge);
+    }
+    if total < RECORD_OVERHEAD {
+        return Err(FrameError::BadBinary(format!(
+            "record length {total} < {RECORD_OVERHEAD}"
+        )));
+    }
+    if buf.len() < 5 + total {
+        return Ok(None);
+    }
+    let consumed = 5 + total;
+    let payload = &buf[5..consumed];
+    let crc = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]);
+    let body = &payload[4..];
+    if crc32(body) != crc {
+        return Ok(Some((RecordSplit::Corrupt, consumed)));
+    }
+    let op = body[0];
+    let column = body[1];
+    let key_len = u32::from_le_bytes([body[2], body[3], body[4], body[5]]) as usize;
+    if op != RECORD_PUT && op != RECORD_DELETE {
+        return Err(FrameError::BadBinary(format!("unknown record op {op}")));
+    }
+    if key_len > body.len() - 6 {
+        return Err(FrameError::BadBinary(format!(
+            "record key length {key_len} exceeds body {}",
+            body.len() - 6
+        )));
+    }
+    let key = body[6..6 + key_len].to_vec();
+    let value = body[6 + key_len..].to_vec();
+    Ok(Some((RecordSplit::Record(StoreRecord { op, column, key, value }), consumed)))
+}
+
 /// Read the next frame of either kind, dispatching on the first byte.
 pub fn read_any_frame<R: BufRead>(r: &mut R) -> Result<Frame, FrameError> {
     let first = {
@@ -367,6 +526,98 @@ mod tests {
         assert!(matches!(split_frame(&buf), Err(FrameError::BadBinary(_))));
         // invalid UTF-8 line
         assert!(matches!(split_frame(b"\xff\xfe\n"), Err(FrameError::Utf8)));
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the classic IEEE check value plus degenerate inputs
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    #[test]
+    fn record_roundtrip_stream() {
+        let mut buf = Vec::new();
+        buf.extend(encode_record(RECORD_PUT, 1, b"k1", b"v1").unwrap());
+        buf.extend(encode_record(RECORD_DELETE, 2, b"k2", b"").unwrap());
+        buf.extend(encode_record(RECORD_PUT, 3, b"", b"value-only").unwrap());
+        let mut rest: &[u8] = &buf;
+        let mut got = Vec::new();
+        while let Some((split, n)) = split_record(rest).unwrap() {
+            got.push(split);
+            rest = &rest[n..];
+        }
+        assert!(rest.is_empty());
+        assert_eq!(
+            got,
+            vec![
+                RecordSplit::Record(StoreRecord {
+                    op: RECORD_PUT,
+                    column: 1,
+                    key: b"k1".to_vec(),
+                    value: b"v1".to_vec(),
+                }),
+                RecordSplit::Record(StoreRecord {
+                    op: RECORD_DELETE,
+                    column: 2,
+                    key: b"k2".to_vec(),
+                    value: Vec::new(),
+                }),
+                RecordSplit::Record(StoreRecord {
+                    op: RECORD_PUT,
+                    column: 3,
+                    key: Vec::new(),
+                    value: b"value-only".to_vec(),
+                }),
+            ]
+        );
+    }
+
+    #[test]
+    fn record_torn_tail_is_incomplete_not_error() {
+        let rec = encode_record(RECORD_PUT, 1, b"key", b"value").unwrap();
+        // every strict prefix is "need more bytes" — the replayer treats a
+        // trailing incomplete record as the torn tail and truncates it
+        for cut in 0..rec.len() {
+            assert_eq!(split_record(&rec[..cut]).unwrap(), None, "prefix of {cut} bytes");
+        }
+    }
+
+    #[test]
+    fn record_crc_corruption_is_skippable() {
+        let mut rec = encode_record(RECORD_PUT, 1, b"key", b"value").unwrap();
+        let n = rec.len();
+        *rec.last_mut().unwrap() ^= 0xFF; // flip one value byte
+        let (split, consumed) = split_record(&rec).unwrap().unwrap();
+        assert_eq!(split, RecordSplit::Corrupt);
+        assert_eq!(consumed, n, "corrupt record's extent is still known");
+        // a valid record after the corrupt one still parses
+        rec.extend(encode_record(RECORD_DELETE, 2, b"k", b"").unwrap());
+        let (_, n1) = split_record(&rec).unwrap().unwrap();
+        let (split, _) = split_record(&rec[n1..]).unwrap().unwrap();
+        assert!(matches!(split, RecordSplit::Record(r) if r.op == RECORD_DELETE));
+    }
+
+    #[test]
+    fn record_envelope_violations_are_errors() {
+        // wrong magic: not a record stream at this offset
+        assert!(matches!(split_record(b"xyz"), Err(FrameError::BadBinary(_))));
+        // forged length beyond the cap
+        let mut buf = vec![BINARY_MAGIC];
+        buf.extend_from_slice(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+        assert!(matches!(split_record(&buf), Err(FrameError::TooLarge)));
+        // length too small to hold the record header
+        let mut buf = vec![BINARY_MAGIC];
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 3]);
+        assert!(matches!(split_record(&buf), Err(FrameError::BadBinary(_))));
+        // oversized encode refused up front
+        let big = vec![0u8; MAX_FRAME_BYTES];
+        assert!(matches!(
+            encode_record(RECORD_PUT, 1, b"k", &big),
+            Err(FrameError::TooLarge)
+        ));
     }
 
     #[test]

@@ -34,7 +34,9 @@ pub use qpart_sim as sim;
 
 /// Most-used items in one import.
 pub mod prelude {
-    pub use qpart_coordinator::{serve, DeviceClient, Frontend, Metrics, ServerConfig, Service};
+    pub use qpart_coordinator::{
+        serve, DeviceClient, Frontend, Metrics, ServerConfig, Service, WarmMode,
+    };
     pub use qpart_core::accuracy::CalibrationTable;
     pub use qpart_core::channel::Channel;
     pub use qpart_core::config::Config;

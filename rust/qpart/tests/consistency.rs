@@ -164,7 +164,9 @@ fn server_workers_mirror_sim_server_slots() {
     assert_eq!(serving.batch_window_us, server.batch_window.as_micros() as u64);
     assert_eq!(serving.cache_bytes, server.cache_bytes);
     assert_eq!(serving.binary_frames, server.binary_frames);
-    assert_eq!(serving.warm_cache, server.warm_cache);
+    assert_eq!(serving.warm, server.warm.as_str());
+    // durable store defaults off from both entry points
+    assert_eq!(serving.store_dir.is_empty(), server.store_dir.is_none());
 }
 
 #[test]
